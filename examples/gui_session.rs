@@ -1,0 +1,65 @@
+//! GUI-enabled mode (§3.1.2): SSH into the cluster with `-X`, open a
+//! forwarded X11 display, start Webots with the GUI streaming frames
+//! back to the client.
+//!
+//! ```text
+//! cargo run --release --example gui_session
+//! ```
+
+use webots_hpc::display::{DisplayRegistry, SshSession, X11Forward};
+use webots_hpc::sumo::{duarouter, FlowFile, MergeScenario, NativeIdmStepper, SumoSim};
+use webots_hpc::traci::TraciServer;
+use webots_hpc::webots::nodes::sample_merge_world;
+use webots_hpc::webots::{StopCondition, WebotsSim};
+
+fn main() -> anyhow::Result<()> {
+    let registry = DisplayRegistry::new();
+
+    // the mistake first: ssh WITHOUT -X cannot forward X11 (§4.1.5)
+    let plain = SshSession::connect("mfranchi", "login.palmetto.clemson.edu", false);
+    match X11Forward::open(&plain, &registry) {
+        Err(e) => println!("without -X: {e}"),
+        Ok(_) => unreachable!("plain ssh must not forward X11"),
+    }
+
+    // now properly: ssh -X
+    let session = SshSession::connect("mfranchi", "login.palmetto.clemson.edu", true);
+    let mut forward = X11Forward::open(&session, &registry)?;
+    println!(
+        "ssh -X {}@{}: forwarded display :{}",
+        session.user, session.host, forward.display.number
+    );
+
+    // boot the SUMO back-end + GUI-mode Webots on the forwarded display
+    let port = std::net::TcpListener::bind("127.0.0.1:0")?
+        .local_addr()?
+        .port();
+    let scenario = MergeScenario::default();
+    let routes = duarouter(
+        &scenario.network(),
+        &FlowFile::merge_sample(1200.0, 300.0, 30.0),
+        7,
+    )?;
+    let server = TraciServer::spawn(
+        port,
+        SumoSim::new(scenario, 64, routes, Box::new(NativeIdmStepper::default())),
+    )?;
+
+    let world = sample_merge_world(port);
+    let mut sim = WebotsSim::open(&world)?.with_stop_condition(StopCondition::SimTime(15.0));
+    // GUI mode: every rendered step streams one frame over the forward
+    while sim.step()?.n_active >= 0.0 {
+        forward.stream_frame();
+        if sim.time_s() >= 15.0 {
+            break;
+        }
+    }
+    println!(
+        "simulated {:.1} s in GUI mode, streamed {} frames to the client",
+        sim.time_s(),
+        forward.frames_streamed
+    );
+    sim.close()?;
+    server.join()?;
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Quickstart: run ONE headless Webots-SUMO merge simulation through the
+//! whole pipeline — container env, Xvfb display, TraCI server, Webots
+//! front-end, output dataset — in a few lines.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Uses the native rust physics engine so it works before
+//! `make artifacts`; see `highway_merge` for the AOT/PJRT path.
+
+use webots_hpc::container::{build_webots_hpc_image, BuildHost, ExecEnv};
+use webots_hpc::display::DisplayRegistry;
+use webots_hpc::pipeline::{launch_instance, InstanceConfig, PhysicsEngine};
+use webots_hpc::sumo::{FlowFile, MergeScenario};
+use webots_hpc::webots::nodes::sample_merge_world;
+
+fn main() -> anyhow::Result<()> {
+    // a free port for this demo instance's TraCI server
+    let port = std::net::TcpListener::bind("127.0.0.1:0")?
+        .local_addr()?
+        .port();
+
+    // the .wbt world: WorldInfo + SumoInterface(port) + a CAV robot with
+    // radar/GPS running the merge_assist controller
+    let world = sample_merge_world(port);
+    println!("--- world file (SIM_0.wbt) ---\n{}", world.render());
+
+    let cfg = InstanceConfig {
+        run_id: "quickstart[0]".into(),
+        node: 0,
+        world,
+        flows: FlowFile::merge_sample(1200.0, 300.0, 60.0),
+        scenario: MergeScenario::default(),
+        seed: 42,
+        capacity: 64,
+        horizon_s: 60.0,
+        max_steps: 1_000,
+    };
+
+    // the container image the paper ships: official Webots docker image
+    // + pip + numpy/pandas, converted to a Singularity SIF
+    let sif = build_webots_hpc_image(BuildHost::PersonalComputer)?;
+    println!("container image: {} (from {})", sif.name, sif.built_from);
+
+    let env = ExecEnv::new(sif).bind("/tmp", "/tmp");
+    let displays = DisplayRegistry::new();
+
+    let result = launch_instance(&cfg, &displays, &env, &PhysicsEngine::Native)?;
+    println!(
+        "ran {} steps on display :{} port {}",
+        result.steps, result.display, result.port
+    );
+    println!(
+        "spawned {} vehicles, {} finished, {} merged, {} controller commands",
+        result.dataset.total_spawned,
+        result.dataset.total_flow,
+        result.dataset.total_merged,
+        result.controller_cmds
+    );
+    println!(
+        "output dataset: {} rows (~{} bytes as CSV)",
+        result.dataset.rows.len(),
+        result.dataset.size_bytes()
+    );
+    println!("--- first 5 rows ---");
+    for line in result.dataset.to_csv().lines().take(6) {
+        println!("{line}");
+    }
+    Ok(())
+}

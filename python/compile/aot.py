@@ -1,0 +1,132 @@
+"""AOT lowering: jax → HLO *text* artifacts for the rust PJRT runtime.
+
+Emits one artifact per (function, vehicle-count) bucket:
+
+  artifacts/step_{N}.hlo.txt   — full merge-sim step (model.step)
+  artifacts/idm_{N}.hlo.txt    — bare L1 IDM kernel (rust microbench target)
+  artifacts/radar_{N}.hlo.txt  — bare L1 radar kernel
+  artifacts/manifest.json      — shapes, column layout, road constants
+
+HLO TEXT is the interchange format, NOT serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the `xla` rust crate) rejects (`proto.id() <=
+INT_MAX`).  The text parser reassigns ids and round-trips cleanly.  We
+lower the stablehlo module and convert with ``return_tuple=True``; the
+rust side unwraps with ``to_tuple{k}()``.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.idm_pairwise import idm_accel
+from .kernels.radar import radar_scan
+
+#: vehicle-count buckets lowered ahead of time; the rust runtime picks the
+#: smallest bucket >= the live vehicle count and pads with inactive rows.
+BUCKETS = (16, 64, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_step(n: int) -> str:
+    state = jax.ShapeDtypeStruct((n, 4), jnp.float32)
+    params = jax.ShapeDtypeStruct((n, 6), jnp.float32)
+    return to_hlo_text(jax.jit(model.step).lower(state, params))
+
+
+#: batch width of the vmapped step (the engine service's dynamic
+#: micro-batcher coalesces concurrent instances up to this many).
+BATCH = 8
+
+
+def lower_step_batched(b: int, n: int) -> str:
+    """vmap(step) over a leading instance axis: one PJRT dispatch serves
+    `b` co-located simulation instances (perf pass, EXPERIMENTS.md §Perf).
+    """
+    state = jax.ShapeDtypeStruct((b, n, 4), jnp.float32)
+    params = jax.ShapeDtypeStruct((b, n, 6), jnp.float32)
+    return to_hlo_text(jax.jit(jax.vmap(model.step)).lower(state, params))
+
+
+def lower_idm(n: int) -> str:
+    state = jax.ShapeDtypeStruct((n, 4), jnp.float32)
+    params = jax.ShapeDtypeStruct((n, 6), jnp.float32)
+    fn = lambda s, p: (idm_accel(s, p),)
+    return to_hlo_text(jax.jit(fn).lower(state, params))
+
+
+def lower_radar(n: int) -> str:
+    state = jax.ShapeDtypeStruct((n, 4), jnp.float32)
+    fn = lambda s: (radar_scan(s),)
+    return to_hlo_text(jax.jit(fn).lower(state))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    ap.add_argument("--buckets", type=int, nargs="*", default=list(BUCKETS))
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    manifest: dict = {
+        "format": "hlo-text",
+        "state_columns": ["x", "v", "lane", "active"],
+        "param_columns": ["v0", "T", "a_max", "b", "s0", "length"],
+        "obs_columns": ["n_active", "mean_speed", "flow", "n_merged"],
+        "dt": model.DT,
+        "road_end": model.ROAD_END,
+        "merge_start": model.MERGE_START,
+        "merge_end": model.MERGE_END,
+        "num_main_lanes": model.NUM_MAIN_LANES,
+        "buckets": sorted(args.buckets),
+        "entries": {},
+    }
+
+    manifest["batch"] = BATCH
+    for n in sorted(args.buckets):
+        for name, lower in (("step", lower_step), ("idm", lower_idm), ("radar", lower_radar)):
+            path = out / f"{name}_{n}.hlo.txt"
+            text = lower(n)
+            path.write_text(text)
+            manifest["entries"][f"{name}_{n}"] = {
+                "file": path.name,
+                "n": n,
+                "outputs": 4 if name == "step" else 1,
+            }
+            print(f"wrote {path} ({len(text)} chars)")
+        # the batched step (engine-service micro-batching)
+        path = out / f"stepb_{n}.hlo.txt"
+        text = lower_step_batched(BATCH, n)
+        path.write_text(text)
+        manifest["entries"][f"stepb_{n}"] = {
+            "file": path.name,
+            "n": n,
+            "outputs": 4,
+        }
+        print(f"wrote {path} ({len(text)} chars, batch={BATCH})")
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

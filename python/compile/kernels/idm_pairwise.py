@@ -1,0 +1,115 @@
+"""L1 Pallas kernel: blocked pairwise leader search + IDM acceleration.
+
+This is the compute hot-spot of the highway-merge physics step (the O(N^2)
+neighbour interaction).  The kernel is tiled over the *ego* (i) axis: each
+grid step loads a (BI, 4) block of ego state into VMEM together with the
+full (N, 4)/(N, 6) j-side arrays, builds the (BI, N) masked distance
+matrix, and reduces it to bumper-to-bumper gap, leader speed and IDM
+acceleration — all elementwise/reduce ops (VPU work; no gathers, no
+scatter).  See DESIGN.md §8 for the VMEM/MXU accounting.
+
+The math mirrors ``ref.py`` exactly (same mask-min tie-breaking) so that
+pytest can assert allclose at f32 tolerance.
+
+interpret=True is mandatory on this image: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret mode lowers the kernel to plain HLO that
+any backend (including the rust-side CPU client) executes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import (
+    A_MAX,
+    ACTIVE,
+    B_COMF,
+    FREE_GAP,
+    LANE,
+    LENGTH,
+    MIN_GAP,
+    S0,
+    T_HW,
+    V,
+    V0,
+    X,
+)
+
+#: Ego-axis tile.  128 rows keeps the (BI, N) distance matrix comfortably
+#: inside a TPU core's VMEM for the N we lower (16..512) — see DESIGN.md §8.
+DEFAULT_BLOCK = 128
+
+
+def _idm_kernel(state_blk, state_all, params_blk, params_all, accel_out):
+    """One grid step: egos = rows of ``state_blk``, leaders = all rows."""
+    x_i = state_blk[:, X][:, None]          # (BI, 1)
+    v_i = state_blk[:, V]                   # (BI,)
+    lane_i = state_blk[:, LANE][:, None]
+    active_i = state_blk[:, ACTIVE] > 0.5
+
+    x_j = state_all[:, X][None, :]          # (1, N)
+    v_j = state_all[:, V][None, :]
+    lane_j = state_all[:, LANE][None, :]
+    active_j = state_all[:, ACTIVE][None, :] > 0.5
+    len_j = params_all[:, LENGTH][None, :]
+
+    dx = x_j - x_i                          # (BI, N)
+    valid = (jnp.abs(lane_j - lane_i) < 0.5) & (dx > 1e-6) & active_j
+
+    dist = jnp.where(valid, dx, FREE_GAP)
+    center_gap = jnp.min(dist, axis=1)      # (BI,)
+    has_leader = center_gap < FREE_GAP * 0.5
+
+    is_leader = valid & (dist <= center_gap[:, None])
+    lv = jnp.min(jnp.where(is_leader, v_j, FREE_GAP), axis=1)
+    lv = jnp.where(has_leader, lv, v_i)
+    llen = jnp.min(jnp.where(is_leader, len_j, FREE_GAP), axis=1)
+    llen = jnp.where(has_leader, llen, 0.0)
+
+    gap = jnp.where(has_leader, center_gap - llen, FREE_GAP)
+    s = jnp.maximum(gap, MIN_GAP)
+    dv = v_i - lv
+
+    v0 = jnp.maximum(params_blk[:, V0], 0.1)
+    t_hw = params_blk[:, T_HW]
+    a_max = jnp.maximum(params_blk[:, A_MAX], 1e-3)
+    b = jnp.maximum(params_blk[:, B_COMF], 1e-3)
+    s0 = params_blk[:, S0]
+
+    s_star = jnp.maximum(s0 + v_i * t_hw + v_i * dv / (2.0 * jnp.sqrt(a_max * b)), 0.0)
+    free = 1.0 - (v_i / v0) ** 4
+    interaction = jnp.where(has_leader, (s_star / s) ** 2, 0.0)
+    accel = a_max * (free - interaction)
+    accel_out[...] = jnp.where(active_i, accel, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def idm_accel(state: jnp.ndarray, params: jnp.ndarray, *, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """IDM acceleration via the blocked Pallas kernel.
+
+    ``state`` f32[N, 4], ``params`` f32[N, 6] → f32[N].  N must be a
+    multiple of ``block`` (callers pad with inactive rows; ``model.py``
+    does this automatically).
+    """
+    n = state.shape[0]
+    bi = min(block, n)
+    if n % bi != 0:
+        raise ValueError(f"N={n} not a multiple of block={bi}; pad with inactive rows")
+    grid = (n // bi,)
+    return pl.pallas_call(
+        _idm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, 4), lambda i: (i, 0)),   # ego block
+            pl.BlockSpec((n, 4), lambda i: (0, 0)),    # full j-side state
+            pl.BlockSpec((bi, 6), lambda i: (i, 0)),   # ego params
+            pl.BlockSpec((n, 6), lambda i: (0, 0)),    # full j-side params
+        ],
+        out_specs=pl.BlockSpec((bi,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(state, state, params, params)

@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: forward radar (nearest target ahead, any lane).
+
+Same blocked structure as ``idm_pairwise``: ego-axis tiles against the
+full target set, gather-free mask-min selection, mirroring
+``ref.radar_ref`` exactly.  This is the sensor model Webots vehicles use
+for the CAV merge controller (paper §2.5.3: "Radars ... can all be added
+to Webots vehicles").
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import ACTIVE, FREE_GAP, RADAR_RANGE, V, X
+
+DEFAULT_BLOCK = 128
+
+
+def _radar_kernel(state_blk, state_all, out, *, max_range: float):
+    x_i = state_blk[:, X][:, None]
+    v_i = state_blk[:, V]
+    active_i = state_blk[:, ACTIVE] > 0.5
+
+    x_j = state_all[:, X][None, :]
+    v_j = state_all[:, V][None, :]
+    active_j = state_all[:, ACTIVE][None, :] > 0.5
+
+    dx = x_j - x_i
+    valid = (dx > 1e-6) & (dx <= max_range) & active_j
+    dist = jnp.where(valid, dx, max_range)
+    rng = jnp.min(dist, axis=1)
+    hit = rng < max_range - 1e-6
+
+    is_tgt = valid & (dist <= rng[:, None])
+    tv = jnp.min(jnp.where(is_tgt, v_j, FREE_GAP), axis=1)
+    closing = jnp.where(hit, v_i - tv, 0.0)
+
+    rng = jnp.where(active_i, rng, max_range)
+    closing = jnp.where(active_i, closing, 0.0)
+    out[...] = jnp.stack([rng, closing], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "max_range"))
+def radar_scan(
+    state: jnp.ndarray,
+    *,
+    max_range: float = RADAR_RANGE,
+    block: int = DEFAULT_BLOCK,
+) -> jnp.ndarray:
+    """Radar returns f32[N, 2] = [distance, closing_speed]."""
+    n = state.shape[0]
+    bi = min(block, n)
+    if n % bi != 0:
+        raise ValueError(f"N={n} not a multiple of block={bi}")
+    grid = (n // bi,)
+    kernel = functools.partial(_radar_kernel, max_range=max_range)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, 4), lambda i: (i, 0)),
+            pl.BlockSpec((n, 4), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bi, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 2), jnp.float32),
+        interpret=True,
+    )(state, state)

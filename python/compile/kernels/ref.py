@@ -1,0 +1,123 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness references: slow-but-obvious implementations of
+the pairwise leader search + IDM car-following law (``idm_accel_ref``) and
+the forward-looking radar model (``radar_ref``).  ``python/tests`` asserts
+the Pallas kernels match these to float32 tolerance across
+hypothesis-generated states.
+
+Leader selection is formulated as *mask-min* rather than argmin+gather: we
+take the row-min of the masked distance matrix, then re-mask on equality
+with that min and reduce the leader attribute (speed / length) with a
+second min.  This keeps the math gather-free (TPU/VPU friendly — the
+Pallas kernel uses the identical formulation) and makes tie-breaking
+deterministic in both implementations: among co-located leaders the one
+with the smallest speed/length wins.
+
+State layout (shared with model.py and the rust coordinator — see
+``rust/src/runtime/engine.rs``):
+
+  state  : f32[N, 4]  columns = [x, v, lane, active]
+  params : f32[N, 6]  columns = [v0, T, a_max, b, s0, length]
+
+Inactive rows (active == 0) are ignored both as egos (accel forced to 0)
+and as potential leaders.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Column indices — keep in sync with rust/src/runtime/engine.rs
+X, V, LANE, ACTIVE = 0, 1, 2, 3
+V0, T_HW, A_MAX, B_COMF, S0, LENGTH = 0, 1, 2, 3, 4, 5
+
+#: Distance reported when no leader exists (effectively infinite for IDM).
+FREE_GAP = 1.0e6
+#: Numerical floor on the gap to avoid division blow-ups when bumper-to-bumper.
+MIN_GAP = 0.5
+#: Default forward-radar range [m].
+RADAR_RANGE = 150.0
+
+
+def leader_scan_ref(state: jnp.ndarray, params: jnp.ndarray):
+    """For each vehicle, find the nearest active vehicle *ahead on the same
+    lane*; return ``(gap, leader_speed, has_leader)`` where gap is
+    bumper-to-bumper (leader length subtracted).  No-leader rows get
+    ``FREE_GAP`` and their own speed (dv = 0).
+    """
+    x = state[:, X]
+    v = state[:, V]
+    lane = state[:, LANE]
+
+    dx = x[None, :] - x[:, None]  # dx[i, j] = x_j - x_i
+    same_lane = jnp.abs(lane[None, :] - lane[:, None]) < 0.5
+    ahead = dx > 1e-6
+    valid = same_lane & ahead & (state[:, ACTIVE][None, :] > 0.5)
+
+    dist = jnp.where(valid, dx, FREE_GAP)
+    center_gap = jnp.min(dist, axis=1)
+    has_leader = center_gap < FREE_GAP * 0.5
+
+    # mask-min leader attribute selection (see module docstring)
+    is_leader = valid & (dist <= center_gap[:, None])
+    lv = jnp.min(jnp.where(is_leader, v[None, :], FREE_GAP), axis=1)
+    lv = jnp.where(has_leader, lv, v)
+    llen = jnp.min(jnp.where(is_leader, params[None, :, LENGTH], FREE_GAP), axis=1)
+    llen = jnp.where(has_leader, llen, 0.0)
+
+    gap = jnp.where(has_leader, center_gap - llen, FREE_GAP)
+    return gap, lv, has_leader
+
+
+def idm_accel_ref(state: jnp.ndarray, params: jnp.ndarray) -> jnp.ndarray:
+    """Intelligent Driver Model acceleration for every vehicle.
+
+    a_i = a_max * (1 - (v/v0)^4 - (s*/s)^2)
+    s*  = s0 + v*T + v*dv / (2*sqrt(a_max*b))
+
+    where s is the bumper-to-bumper gap to the same-lane leader.
+    Inactive vehicles get 0.
+    """
+    v = state[:, V]
+    active = state[:, ACTIVE] > 0.5
+
+    gap, lv, has_leader = leader_scan_ref(state, params)
+    s = jnp.maximum(gap, MIN_GAP)
+    dv = v - lv
+
+    v0 = jnp.maximum(params[:, V0], 0.1)
+    t_hw = params[:, T_HW]
+    a_max = jnp.maximum(params[:, A_MAX], 1e-3)
+    b = jnp.maximum(params[:, B_COMF], 1e-3)
+    s0 = params[:, S0]
+
+    s_star = jnp.maximum(s0 + v * t_hw + v * dv / (2.0 * jnp.sqrt(a_max * b)), 0.0)
+    free = 1.0 - (v / v0) ** 4
+    interaction = jnp.where(has_leader, (s_star / s) ** 2, 0.0)
+    accel = a_max * (free - interaction)
+    return jnp.where(active, accel, 0.0)
+
+
+def radar_ref(state: jnp.ndarray, max_range: float = RADAR_RANGE) -> jnp.ndarray:
+    """Forward radar: nearest active vehicle ahead in ANY lane within
+    ``max_range``.  Returns f32[N, 2] = [distance, closing_speed]; when no
+    target is in range, [max_range, 0].  Inactive egos report a clear field.
+    """
+    x = state[:, X]
+    v = state[:, V]
+    active = state[:, ACTIVE] > 0.5
+
+    dx = x[None, :] - x[:, None]
+    valid = (dx > 1e-6) & (dx <= max_range) & active[None, :]
+    dist = jnp.where(valid, dx, max_range)
+    rng = jnp.min(dist, axis=1)
+    hit = rng < max_range - 1e-6
+
+    is_tgt = valid & (dist <= rng[:, None])
+    tv = jnp.min(jnp.where(is_tgt, v[None, :], FREE_GAP), axis=1)
+    closing = jnp.where(hit, v - tv, 0.0)
+
+    rng = jnp.where(active, rng, max_range)
+    closing = jnp.where(active, closing, 0.0)
+    return jnp.stack([rng, closing], axis=1)

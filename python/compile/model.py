@@ -1,0 +1,190 @@
+"""L2: the sample CAV highway-merge simulation step as a JAX compute graph.
+
+This is the physics/behaviour hot path of the paper's "sample Webots-SUMO
+highway merging simulation" (ch. 5).  One call advances the coupled
+traffic state by DT seconds:
+
+  * car-following accelerations via the L1 Pallas kernel
+    (``kernels.idm_pairwise``),
+  * a phantom-wall constraint that forces on-ramp vehicles to stop at the
+    end of the acceleration lane,
+  * MOBIL-style lane changes (mandatory merge for ramp vehicles inside
+    the merge zone, discretionary keep-right/overtake on the mainline),
+  * forward radar returns via the L1 ``kernels.radar`` kernel (the sensor
+    feed the Webots CAV controller consumes),
+  * Euler integration and per-step observables.
+
+The function is lowered ONCE per vehicle-count bucket by ``aot.py`` into
+``artifacts/step_{N}.hlo.txt`` and executed from rust via PJRT — python is
+never on the request path.
+
+Road geometry (constants below, also exported to rust through
+``artifacts/manifest.json``): lane 0 is the on-ramp/acceleration lane,
+lanes 1..NUM_MAIN_LANES are the mainline.  The merge zone is
+[MERGE_START, MERGE_END]; ramp vehicles must be in lane >= 1 by
+MERGE_END or stop.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.idm_pairwise import idm_accel
+from .kernels.radar import radar_scan
+from .kernels.ref import (
+    ACTIVE,
+    B_COMF,
+    FREE_GAP,
+    LANE,
+    LENGTH,
+    MIN_GAP,
+    RADAR_RANGE,
+    S0,
+    T_HW,
+    V,
+    V0,
+    X,
+)
+
+# --- road geometry / integration constants (exported in manifest.json) ---
+DT = 0.1                 #: integration step [s]
+ROAD_END = 1000.0        #: vehicles deactivate past this x [m]
+MERGE_START = 300.0      #: start of the acceleration-lane merge zone [m]
+MERGE_END = 500.0        #: hard end of the on-ramp [m]
+NUM_MAIN_LANES = 2       #: mainline lanes are 1..NUM_MAIN_LANES
+RAMP_LANE = 0.0
+#: MOBIL parameters
+MOBIL_SAFE_DECEL = 4.0   #: follower in target lane may not brake harder [m/s^2]
+MOBIL_THRESHOLD = 0.2    #: discretionary incentive threshold [m/s^2]
+MOBIL_POLITENESS = 0.3
+
+
+def _lane_gap_scan(state, params, target_lane):
+    """Mask-min leader/follower scan against a *hypothetical* target lane.
+
+    Returns (lead_gap, lead_v, lag_gap, lag_v): bumper-to-bumper gaps to
+    the nearest active vehicle ahead/behind on ``target_lane`` (f32[N]).
+    """
+    x = state[:, X]
+    v = state[:, V]
+    lane = state[:, LANE]
+    act = state[:, ACTIVE] > 0.5
+    length = params[:, LENGTH]
+
+    dx = x[None, :] - x[:, None]
+    on_target = jnp.abs(lane[None, :] - target_lane[:, None]) < 0.5
+    valid_ahead = on_target & (dx > 1e-6) & act[None, :]
+    valid_behind = on_target & (dx < -1e-6) & act[None, :]
+
+    dist_a = jnp.where(valid_ahead, dx, FREE_GAP)
+    lead_center = jnp.min(dist_a, axis=1)
+    lead_has = lead_center < FREE_GAP * 0.5
+    is_lead = valid_ahead & (dist_a <= lead_center[:, None])
+    lead_v = jnp.min(jnp.where(is_lead, v[None, :], FREE_GAP), axis=1)
+    lead_v = jnp.where(lead_has, lead_v, v)
+    lead_len = jnp.min(jnp.where(is_lead, length[None, :], FREE_GAP), axis=1)
+    lead_len = jnp.where(lead_has, lead_len, 0.0)
+    lead_gap = jnp.where(lead_has, lead_center - lead_len, FREE_GAP)
+
+    dist_b = jnp.where(valid_behind, -dx, FREE_GAP)
+    lag_center = jnp.min(dist_b, axis=1)
+    lag_has = lag_center < FREE_GAP * 0.5
+    is_lag = valid_behind & (-dx <= lag_center[:, None])
+    lag_v = jnp.min(jnp.where(is_lag, v[None, :], FREE_GAP), axis=1)
+    lag_v = jnp.where(lag_has, lag_v, v)
+    # follower's gap is to OUR tail: subtract ego length
+    lag_gap = jnp.where(lag_has, lag_center - params[:, LENGTH], FREE_GAP)
+
+    return lead_gap, lead_v, lag_gap, lag_v
+
+
+def _idm_for(v, gap, dv, params):
+    """Scalar-wise IDM used for hypothetical-lane incentives (pure jnp)."""
+    s = jnp.maximum(gap, MIN_GAP)
+    v0 = jnp.maximum(params[:, V0], 0.1)
+    a_max = jnp.maximum(params[:, 2], 1e-3)
+    b = jnp.maximum(params[:, B_COMF], 1e-3)
+    s_star = jnp.maximum(params[:, S0] + v * params[:, T_HW] + v * dv / (2.0 * jnp.sqrt(a_max * b)), 0.0)
+    inter = jnp.where(gap < FREE_GAP * 0.5, (s_star / s) ** 2, 0.0)
+    return a_max * (1.0 - (v / v0) ** 4 - inter)
+
+
+def _wall_accel(state, params):
+    """IDM deceleration against the phantom wall at MERGE_END (ramp only)."""
+    x = state[:, X]
+    v = state[:, V]
+    on_ramp = jnp.abs(state[:, LANE] - RAMP_LANE) < 0.5
+    gap = jnp.where(on_ramp, MERGE_END - x, FREE_GAP)
+    gap = jnp.maximum(gap, MIN_GAP * 0.1)
+    return _idm_for(v, gap, v, params)  # wall speed = 0 → dv = v
+
+
+def step(state: jnp.ndarray, params: jnp.ndarray):
+    """Advance the merge simulation by DT.
+
+    Inputs : state f32[N,4], params f32[N,6]  (layout in kernels/ref.py)
+    Outputs: (new_state f32[N,4], accel f32[N], radar f32[N,2], obs f32[4])
+             obs = [n_active, mean_speed, flow (crossed ROAD_END), n_merged]
+    """
+    x = state[:, X]
+    v = state[:, V]
+    lane = state[:, LANE]
+    act = state[:, ACTIVE]
+    active = act > 0.5
+
+    # --- L1 kernels -------------------------------------------------------
+    a_follow = idm_accel(state, params)
+    radar = radar_scan(state)
+
+    # ramp wall constraint
+    a_wall = _wall_accel(state, params)
+    accel = jnp.minimum(a_follow, a_wall)
+
+    # --- MOBIL lane changes ----------------------------------------------
+    on_ramp = jnp.abs(lane - RAMP_LANE) < 0.5
+    in_merge_zone = on_ramp & (x >= MERGE_START) & (x <= MERGE_END)
+    # mandatory target for ramp vehicles is lane 1; mainline considers lane+-1
+    tgt_up = jnp.where(on_ramp, 1.0, jnp.minimum(lane + 1.0, float(NUM_MAIN_LANES)))
+    tgt_down = jnp.where(on_ramp, 1.0, jnp.maximum(lane - 1.0, 1.0))
+
+    def incentive(target_lane):
+        lead_gap, lead_v, lag_gap, lag_v = _lane_gap_scan(state, params, target_lane)
+        a_self_new = _idm_for(v, lead_gap, v - lead_v, params)
+        # follower safety: if it had to follow us, would it brake too hard?
+        a_lag_new = _idm_for(lag_v, lag_gap, lag_v - v, params)
+        safe = (lead_gap > params[:, S0]) & (lag_gap > params[:, S0]) & (a_lag_new > -MOBIL_SAFE_DECEL)
+        return a_self_new, a_lag_new, safe
+
+    a_up, a_lag_up, safe_up = incentive(tgt_up)
+    a_dn, a_lag_dn, safe_dn = incentive(tgt_down)
+
+    # mandatory merge: ramp vehicle inside the zone changes whenever safe
+    do_merge = in_merge_zone & safe_up
+    # discretionary: mainline, incentive beats threshold + politeness term
+    gain_up = a_up - accel - MOBIL_POLITENESS * jnp.maximum(0.0, -a_lag_up)
+    gain_dn = a_dn - accel - MOBIL_POLITENESS * jnp.maximum(0.0, -a_lag_dn)
+    main = ~on_ramp & active
+    disc_up = main & safe_up & (tgt_up > lane + 0.5) & (gain_up > MOBIL_THRESHOLD)
+    disc_dn = main & safe_dn & (tgt_dn_ok := tgt_down < lane - 0.5) & (gain_dn > MOBIL_THRESHOLD) & ~disc_up
+
+    new_lane = jnp.where(do_merge & active, 1.0, lane)
+    new_lane = jnp.where(disc_up, tgt_up, new_lane)
+    new_lane = jnp.where(disc_dn, tgt_down, new_lane)
+
+    # --- integration -------------------------------------------------------
+    new_v = jnp.maximum(v + accel * DT, 0.0)
+    new_v = jnp.where(active, new_v, 0.0)
+    new_x = x + new_v * DT
+    crossed = active & (new_x >= ROAD_END) & (x < ROAD_END)
+    new_act = jnp.where(crossed, 0.0, act)
+    new_x = jnp.where(active, new_x, x)
+
+    new_state = jnp.stack([new_x, new_v, new_lane, new_act], axis=1)
+
+    n_active = jnp.sum(act)
+    mean_v = jnp.sum(v * act) / jnp.maximum(n_active, 1.0)
+    flow = jnp.sum(crossed.astype(jnp.float32))
+    n_merged = jnp.sum((do_merge & active).astype(jnp.float32))
+    obs = jnp.stack([n_active, mean_v, flow, n_merged])
+
+    return new_state, jnp.where(active, accel, 0.0), radar, obs

@@ -1,0 +1,95 @@
+"""AOT path: HLO-text artifacts are well-formed and shape-consistent."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import pytest
+
+from compile import aot, model
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_lower_step_contains_bucket_shape():
+    text = aot.lower_step(16)
+    assert "HloModule" in text
+    assert "f32[16,4]" in text
+    assert "f32[16,6]" in text
+
+
+def test_lower_idm_single_output_tuple():
+    text = aot.lower_idm(16)
+    # return_tuple=True → ROOT is a tuple even for one output
+    assert "f32[16]" in text
+    assert "HloModule" in text
+
+
+def test_lower_radar_output_shape():
+    text = aot.lower_radar(16)
+    assert "f32[16,2]" in text
+
+
+def test_step_is_pure_hlo_no_custom_calls():
+    """interpret=True must lower pallas to plain HLO — a custom-call here
+    would be unloadable by the rust CPU PJRT client."""
+    text = aot.lower_step(16)
+    assert "custom-call" not in text.lower()
+
+
+@pytest.mark.skipif(not (ART / "manifest.json").exists(), reason="run `make artifacts` first")
+def test_manifest_consistent_with_artifacts():
+    manifest = json.loads((ART / "manifest.json").read_text())
+    assert manifest["format"] == "hlo-text"
+    assert manifest["dt"] == model.DT
+    assert manifest["merge_end"] == model.MERGE_END
+    for key, entry in manifest["entries"].items():
+        path = ART / entry["file"]
+        assert path.exists(), f"missing artifact {path}"
+        head = path.read_text()[:200]
+        assert "HloModule" in head
+        name, n = key.rsplit("_", 1)
+        assert entry["n"] == int(n)
+
+
+def test_lower_step_batched_shapes():
+    text = aot.lower_step_batched(aot.BATCH, 16)
+    assert f"f32[{aot.BATCH},16,4]" in text
+    assert f"f32[{aot.BATCH},16,6]" in text
+    assert "custom-call" not in text.lower()
+
+
+def test_batched_step_matches_vmap_of_single():
+    """vmap semantics: batched step == per-world single steps."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from compile import model
+
+    rng = np.random.default_rng(5)
+    b, n = 4, 16
+    states = []
+    params = []
+    for _ in range(b):
+        x = np.sort(rng.uniform(0, 900, n)).astype(np.float32)
+        v = rng.uniform(0, 30, n).astype(np.float32)
+        lane = rng.integers(0, 3, n).astype(np.float32)
+        act = (rng.uniform(size=n) > 0.3).astype(np.float32)
+        states.append(jnp.stack([jnp.asarray(x), jnp.asarray(v), jnp.asarray(lane), jnp.asarray(act)], axis=1))
+        params.append(jnp.tile(jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5]], jnp.float32), (n, 1)))
+    bs = jnp.stack(states)
+    bp = jnp.stack(params)
+    batched = jax.vmap(model.step)(bs, bp)
+    for i in range(b):
+        single = model.step(states[i], params[i])
+        for got, want in zip(batched, single):
+            np.testing.assert_allclose(np.asarray(got[i]), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.skipif(not (ART / "manifest.json").exists(), reason="run `make artifacts` first")
+def test_manifest_buckets_cover_entries():
+    manifest = json.loads((ART / "manifest.json").read_text())
+    ns = {e["n"] for e in manifest["entries"].values()}
+    assert ns == set(manifest["buckets"])

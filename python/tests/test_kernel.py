@@ -1,0 +1,183 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+The CORE correctness signal of the compile path: hypothesis sweeps the
+state space (vehicle counts, lane layouts, activity masks, parameter
+ranges) and asserts the blocked Pallas kernels reproduce the oracle at
+f32 tolerance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels.idm_pairwise import idm_accel
+from compile.kernels.radar import radar_scan
+
+# magnitudes in play reach ~1e5 (bumper-to-bumper IDM decel), so compare
+# with a relative tolerance; 1e-4 is ~500 ulp at f32 — roomy but real.
+RTOL = 1e-4
+ATOL = 1e-4
+
+
+def make_state(rng: np.random.Generator, n: int, lanes: int = 3, p_active: float = 0.8):
+    # positions spaced >= 1e-3 apart so the `dx > 1e-6` ahead-test is stable
+    x = np.sort(rng.uniform(0.0, 950.0, n)).astype(np.float32)
+    x += np.arange(n, dtype=np.float32) * 1e-2
+    v = rng.uniform(0.0, 35.0, n).astype(np.float32)
+    lane = rng.integers(0, lanes, n).astype(np.float32)
+    act = (rng.uniform(size=n) < p_active).astype(np.float32)
+    state = jnp.stack([jnp.asarray(x), jnp.asarray(v), jnp.asarray(lane), jnp.asarray(act)], axis=1)
+    params = jnp.stack(
+        [
+            jnp.asarray(rng.uniform(15.0, 40.0, n).astype(np.float32)),  # v0
+            jnp.asarray(rng.uniform(0.8, 2.5, n).astype(np.float32)),    # T
+            jnp.asarray(rng.uniform(0.8, 3.0, n).astype(np.float32)),    # a_max
+            jnp.asarray(rng.uniform(1.0, 4.0, n).astype(np.float32)),    # b
+            jnp.asarray(rng.uniform(1.0, 4.0, n).astype(np.float32)),    # s0
+            jnp.asarray(rng.uniform(3.5, 12.0, n).astype(np.float32)),   # length
+        ],
+        axis=1,
+    )
+    return state, params
+
+
+# ---------------------------------------------------------------- IDM ----
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 96), lanes=st.integers(1, 4))
+def test_idm_matches_ref_hypothesis(seed, n, lanes):
+    rng = np.random.default_rng(seed)
+    state, params = make_state(rng, n, lanes=lanes)
+    np.testing.assert_allclose(
+        np.asarray(idm_accel(state, params)),
+        np.asarray(ref.idm_accel_ref(state, params)),
+        rtol=RTOL,
+        atol=ATOL,
+    )
+
+
+@pytest.mark.parametrize("n", [16, 64, 128, 256, 384])
+def test_idm_matches_ref_buckets(n):
+    """Every AOT bucket size, including the multi-grid-step 256/384 cases."""
+    rng = np.random.default_rng(n)
+    state, params = make_state(rng, n)
+    np.testing.assert_allclose(
+        np.asarray(idm_accel(state, params)),
+        np.asarray(ref.idm_accel_ref(state, params)),
+        rtol=RTOL,
+        atol=ATOL,
+    )
+
+
+def test_idm_single_vehicle_free_road():
+    """A lone vehicle accelerates by the free-road term only."""
+    state = jnp.array([[100.0, 20.0, 1.0, 1.0]], dtype=jnp.float32)
+    params = jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5]], dtype=jnp.float32)
+    a = float(idm_accel(state, params)[0])
+    expect = 1.5 * (1.0 - (20.0 / 30.0) ** 4)
+    assert a == pytest.approx(expect, rel=1e-5)
+
+
+def test_idm_all_inactive_is_zero():
+    rng = np.random.default_rng(7)
+    state, params = make_state(rng, 32, p_active=0.0)
+    assert np.all(np.asarray(idm_accel(state, params)) == 0.0)
+
+
+def test_idm_inactive_leader_ignored():
+    """An inactive vehicle directly ahead must not slow the follower."""
+    state = jnp.array(
+        [[100.0, 20.0, 1.0, 1.0], [110.0, 0.0, 1.0, 0.0]], dtype=jnp.float32
+    )
+    params = jnp.tile(jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5]], jnp.float32), (2, 1))
+    a = float(idm_accel(state, params)[0])
+    expect = 1.5 * (1.0 - (20.0 / 30.0) ** 4)
+    assert a == pytest.approx(expect, rel=1e-5)
+
+
+def test_idm_bumper_to_bumper_brakes_hard():
+    """Tailgating a stopped leader at < s0 must produce strong braking."""
+    state = jnp.array(
+        [[100.0, 30.0, 1.0, 1.0], [106.0, 0.0, 1.0, 1.0]], dtype=jnp.float32
+    )
+    params = jnp.tile(jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5]], jnp.float32), (2, 1))
+    a = float(idm_accel(state, params)[0])
+    assert a < -10.0
+
+
+def test_idm_other_lane_ignored():
+    """A stopped vehicle in another lane must not affect the ego."""
+    state = jnp.array(
+        [[100.0, 20.0, 1.0, 1.0], [105.0, 0.0, 2.0, 1.0]], dtype=jnp.float32
+    )
+    params = jnp.tile(jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5]], jnp.float32), (2, 1))
+    a = float(idm_accel(state, params)[0])
+    expect = 1.5 * (1.0 - (20.0 / 30.0) ** 4)
+    assert a == pytest.approx(expect, rel=1e-5)
+
+
+def test_idm_rejects_non_divisible_block():
+    state = jnp.zeros((100, 4), jnp.float32)
+    params = jnp.zeros((100, 6), jnp.float32)
+    with pytest.raises(ValueError, match="multiple of block"):
+        idm_accel(state, params, block=64)
+
+
+# -------------------------------------------------------------- radar ----
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 96))
+def test_radar_matches_ref_hypothesis(seed, n):
+    rng = np.random.default_rng(seed)
+    state, _ = make_state(rng, n)
+    np.testing.assert_allclose(
+        np.asarray(radar_scan(state)),
+        np.asarray(ref.radar_ref(state)),
+        rtol=RTOL,
+        atol=ATOL,
+    )
+
+
+@pytest.mark.parametrize("n", [16, 64, 256])
+def test_radar_matches_ref_buckets(n):
+    rng = np.random.default_rng(n + 1)
+    state, _ = make_state(rng, n)
+    np.testing.assert_allclose(
+        np.asarray(radar_scan(state)),
+        np.asarray(ref.radar_ref(state)),
+        rtol=RTOL,
+        atol=ATOL,
+    )
+
+
+def test_radar_no_target_reports_clear():
+    state = jnp.array([[0.0, 25.0, 1.0, 1.0]], dtype=jnp.float32)
+    out = np.asarray(radar_scan(state))
+    assert out[0, 0] == pytest.approx(ref.RADAR_RANGE)
+    assert out[0, 1] == 0.0
+
+
+def test_radar_sees_across_lanes():
+    """Radar (unlike the IDM leader scan) sees targets in any lane."""
+    state = jnp.array(
+        [[100.0, 30.0, 1.0, 1.0], [140.0, 10.0, 2.0, 1.0]], dtype=jnp.float32
+    )
+    out = np.asarray(radar_scan(state))
+    assert out[0, 0] == pytest.approx(40.0)
+    assert out[0, 1] == pytest.approx(20.0)  # closing at 30-10
+
+
+def test_radar_out_of_range_ignored():
+    state = jnp.array(
+        [[0.0, 30.0, 1.0, 1.0], [500.0, 10.0, 1.0, 1.0]], dtype=jnp.float32
+    )
+    out = np.asarray(radar_scan(state))
+    assert out[0, 0] == pytest.approx(ref.RADAR_RANGE)
+    assert out[0, 1] == 0.0

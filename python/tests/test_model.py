@@ -1,0 +1,134 @@
+"""L2 correctness: shapes and physical invariants of the merge-sim step."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from tests.test_kernel import make_state
+
+
+def run_steps(state, params, k):
+    for _ in range(k):
+        state, accel, radar, obs = model.step(state, params)
+    return state, accel, radar, obs
+
+
+def test_step_shapes():
+    rng = np.random.default_rng(1)
+    state, params = make_state(rng, 64)
+    ns, accel, radar, obs = model.step(state, params)
+    assert ns.shape == (64, 4)
+    assert accel.shape == (64,)
+    assert radar.shape == (64, 2)
+    assert obs.shape == (4,)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 64))
+def test_speeds_never_negative(seed, n):
+    rng = np.random.default_rng(seed)
+    state, params = make_state(rng, n)
+    ns, *_ = run_steps(state, params, 5)
+    assert np.all(np.asarray(ns[:, 1]) >= 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 64))
+def test_inactive_rows_frozen(seed, n):
+    """Inactive slots must not move — the rust coordinator reuses them
+    as spawn slots and depends on their state being stable."""
+    rng = np.random.default_rng(seed)
+    state, params = make_state(rng, n, p_active=0.5)
+    inactive = np.asarray(state[:, 3]) < 0.5
+    ns, *_ = model.step(state, params)
+    np.testing.assert_array_equal(
+        np.asarray(ns[inactive, 0]), np.asarray(state[inactive, 0])
+    )
+    assert np.all(np.asarray(ns[inactive, 1]) == 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_active_count_never_increases(seed):
+    """The model only retires vehicles (at ROAD_END); spawning is the
+    coordinator's job."""
+    rng = np.random.default_rng(seed)
+    state, params = make_state(rng, 48)
+    n0 = float(jnp.sum(state[:, 3]))
+    ns, *_ = run_steps(state, params, 10)
+    assert float(jnp.sum(ns[:, 3])) <= n0 + 1e-6
+
+
+def test_vehicle_retires_past_road_end():
+    state = jnp.array([[model.ROAD_END - 0.5, 30.0, 1.0, 1.0]], dtype=jnp.float32)
+    params = jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5]], dtype=jnp.float32)
+    ns, _, _, obs = model.step(state, params)
+    assert float(ns[0, 3]) == 0.0
+    assert float(obs[2]) == 1.0  # flow counter ticked
+
+
+def test_ramp_vehicle_stops_at_wall():
+    """A ramp vehicle that cannot merge must stop before MERGE_END.
+
+    Both mainline lanes are jammed bumper-to-bumper (gap < s0) through the
+    whole merge zone, so the MOBIL safety criterion never admits the
+    merge; the phantom-wall IDM term must bring the ramp vehicle to a
+    stop at the end of the acceleration lane.
+    """
+    jam_x = np.linspace(model.MERGE_START - 30, model.MERGE_END + 30, 52).astype(np.float32)
+    rows = [[model.MERGE_START - 40.0, 25.0, 0.0, 1.0]]  # the ramp vehicle
+    rows += [[x, 0.0, 1.0, 1.0] for x in jam_x]
+    rows += [[x, 0.0, 2.0, 1.0] for x in jam_x]
+    n = len(rows)
+    state = jnp.array(rows, dtype=jnp.float32)
+    params = jnp.tile(jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5]], jnp.float32), (n, 1))
+    for _ in range(400):
+        state, *_ = model.step(state, params)
+    assert float(state[0, 2]) == 0.0, "merge into a solid jam should be unsafe"
+    assert float(state[0, 0]) <= model.MERGE_END + 1.0
+    assert float(state[0, 1]) < 2.0  # effectively stopped at the wall
+
+
+def test_ramp_vehicle_merges_into_empty_mainline():
+    state = jnp.array(
+        [[model.MERGE_START + 10.0, 20.0, 0.0, 1.0]], dtype=jnp.float32
+    )
+    params = jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5]], dtype=jnp.float32)
+    ns, _, _, obs = model.step(state, params)
+    assert float(ns[0, 2]) == 1.0  # merged on the first safe opportunity
+    assert float(obs[3]) == 1.0    # n_merged observable
+
+
+def test_merge_blocked_when_unsafe():
+    """Mainline vehicle right alongside → merge must not happen."""
+    state = jnp.array(
+        [
+            [model.MERGE_START + 10.0, 20.0, 0.0, 1.0],
+            [model.MERGE_START + 10.5, 20.0, 1.0, 1.0],
+        ],
+        dtype=jnp.float32,
+    )
+    params = jnp.tile(jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5]], jnp.float32), (2, 1))
+    ns, *_ = model.step(state, params)
+    assert float(ns[0, 2]) == 0.0
+
+
+def test_obs_active_count():
+    rng = np.random.default_rng(3)
+    state, params = make_state(rng, 32, p_active=0.6)
+    _, _, _, obs = model.step(state, params)
+    assert float(obs[0]) == pytest.approx(float(jnp.sum(state[:, 3])))
+
+
+def test_lane_stays_in_range():
+    rng = np.random.default_rng(11)
+    state, params = make_state(rng, 48)
+    ns, *_ = run_steps(state, params, 20)
+    lanes = np.asarray(ns[:, 2])
+    assert lanes.min() >= 0.0
+    assert lanes.max() <= model.NUM_MAIN_LANES

@@ -1,0 +1,66 @@
+//! Shared micro-benchmark harness for the paper benches.
+//!
+//! The vendored offline crate set has no criterion; this is a small
+//! timing harness with warmup, repeated samples and median/mean/stddev
+//! reporting — enough rigor for the regeneration benches, whose primary
+//! output is the *table content*, not nanosecond precision.
+
+use std::time::{Duration, Instant};
+
+pub struct Sample {
+    pub label: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub median: Duration,
+    pub stddev_ns: f64,
+}
+
+impl Sample {
+    pub fn print(&self) {
+        println!(
+            "bench {:<42} {:>12.3?} median, {:>12.3?} mean ± {:>8.1} µs ({} iters)",
+            self.label,
+            self.median,
+            self.mean,
+            self.stddev_ns / 1000.0,
+            self.iters
+        );
+    }
+}
+
+/// Time `f` with warmup; returns stats over `iters` samples.
+pub fn bench<F: FnMut()>(label: &str, iters: u32, mut f: F) -> Sample {
+    // warmup
+    for _ in 0..iters.div_ceil(5).max(1) {
+        f();
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let median = times[times.len() / 2];
+    let mean_ns = times.iter().map(|d| d.as_nanos() as f64).sum::<f64>() / times.len() as f64;
+    let var = times
+        .iter()
+        .map(|d| (d.as_nanos() as f64 - mean_ns).powi(2))
+        .sum::<f64>()
+        / times.len() as f64;
+    let s = Sample {
+        label: label.to_string(),
+        iters,
+        mean: Duration::from_nanos(mean_ns as u64),
+        median,
+        stddev_ns: var.sqrt(),
+    };
+    s.print();
+    s
+}
+
+/// Throughput helper: ops/second from a sample.
+#[allow(dead_code)]
+pub fn throughput(sample: &Sample, ops_per_iter: f64) -> f64 {
+    ops_per_iter / sample.median.as_secs_f64()
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate paper **§5.2** — instance-distribution quality
+//! (the 48·t law and the perfect 8-per-node packing).
+//!
+//! ```text
+//! cargo bench --bench distribution_5_2
+//! ```
+
+mod common;
+
+use webots_hpc::harness::distribution_5_2;
+
+fn main() {
+    let d = distribution_5_2().expect("distribution report generates");
+    println!("{}", d.render());
+    assert!(d.follows_48t, "48·t law must hold");
+    assert!(d.perfectly_even, "per-node run counts must be even");
+    assert_eq!(d.peak_occupancy, vec![8; 6]);
+
+    common::bench("distribution_5_2::regenerate", 10, || {
+        let _ = distribution_5_2().unwrap();
+    });
+}

@@ -1,0 +1,35 @@
+//! Bench: regenerate paper **Figure 5.2** — parallelization performance,
+//! 6x8 parallel vs 6x1 serial throughput.
+//!
+//! ```text
+//! cargo bench --bench fig_5_2
+//! ```
+
+mod common;
+
+use webots_hpc::pipeline::{run_cluster_campaign, CampaignSpec};
+use webots_hpc::simclock::SimDuration;
+
+fn main() {
+    println!("{}", webots_hpc::harness::fig_5_2().expect("fig 5.2 renders"));
+
+    // throughput ratio across a sweep of campaign lengths — the figure's
+    // claim must be duration-independent
+    for hours in [1u64, 2, 4] {
+        let mut p = CampaignSpec::paper_cluster();
+        p.duration = SimDuration::from_hours(hours);
+        let mut s = CampaignSpec::paper_serial_6x1();
+        s.duration = SimDuration::from_hours(hours);
+        let pt = run_cluster_campaign(&p).unwrap().total_completed();
+        let st = run_cluster_campaign(&s).unwrap().total_completed();
+        println!(
+            "{hours}h: 6x8 = {pt} runs, 6x1 = {st} runs, ratio {:.1}x",
+            pt as f64 / st as f64
+        );
+        assert_eq!(pt, 8 * st, "ratio must equal the slot count");
+    }
+
+    common::bench("fig_5_2::regenerate", 10, || {
+        let _ = webots_hpc::harness::fig_5_2().unwrap();
+    });
+}

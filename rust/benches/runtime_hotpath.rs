@@ -1,0 +1,159 @@
+//! Bench: the physics hot path — AOT JAX/Pallas step via PJRT vs the
+//! native rust stepper, across vehicle-count buckets, plus the bare L1
+//! kernels and the end-to-end coupled instance.
+//!
+//! ```text
+//! make artifacts && cargo bench --bench runtime_hotpath
+//! ```
+//!
+//! This is the §Perf baseline/after harness (EXPERIMENTS.md §Perf).
+
+mod common;
+
+use webots_hpc::runtime::EngineService;
+use webots_hpc::sumo::state::{DriverParams, Traffic};
+use webots_hpc::sumo::{NativeIdmStepper, Stepper};
+use webots_hpc::util::Rng64;
+
+fn traffic(cap: usize, fill: f64, seed: u64) -> Traffic {
+    let mut rng = Rng64::seed_from_u64(seed);
+    let mut t = Traffic::new(cap);
+    let mut x = 0.0f32;
+    for _ in 0..cap {
+        if rng.gen_f64() >= fill {
+            continue;
+        }
+        x += 10.0 + rng.gen_range_f32(0.0, 40.0);
+        t.spawn(
+            x,
+            rng.gen_range_f32(5.0, 30.0),
+            rng.gen_below(3) as f32,
+            DriverParams::default(),
+        );
+    }
+    t
+}
+
+fn main() {
+    let Ok(service) = EngineService::auto() else {
+        println!("artifacts missing; run `make artifacts` first");
+        return;
+    };
+    println!("PJRT platform: {}", service.platform());
+
+    for &bucket in &service.manifest().buckets.clone() {
+        let t = traffic(bucket, 0.7, bucket as u64);
+
+        // full fused step (the production hot path)
+        let s = common::bench(&format!("hlo_step/N={bucket}"), 200, || {
+            let _ = service.step(bucket, &t.state, &t.params).unwrap();
+        });
+        println!(
+            "    -> {:.0} steps/s, {:.1} Mveh-steps/s",
+            common::throughput(&s, 1.0),
+            common::throughput(&s, bucket as f64) / 1e6
+        );
+
+        // bare L1 kernels
+        common::bench(&format!("hlo_idm_kernel/N={bucket}"), 200, || {
+            let _ = service.idm(bucket, &t.state, &t.params).unwrap();
+        });
+        common::bench(&format!("hlo_radar_kernel/N={bucket}"), 200, || {
+            let _ = service.radar(bucket, &t.state).unwrap();
+        });
+
+        // native rust baseline (same physics, no PJRT round trip)
+        let mut nat = NativeIdmStepper::default();
+        common::bench(&format!("native_step/N={bucket}"), 200, || {
+            let mut tt = t.clone();
+            let _ = nat.step(&mut tt);
+        });
+    }
+
+    // the batched-step ceiling: one PJRT dispatch for 8 instances
+    {
+        let bucket = service.manifest().buckets[1];
+        let b = service.manifest().batch;
+        if b >= 2 {
+            let t = traffic(bucket, 0.7, 2);
+            let mut states = Vec::new();
+            let mut params = Vec::new();
+            for _ in 0..b {
+                states.extend_from_slice(&t.state);
+                params.extend_from_slice(&t.params);
+            }
+            let s = common::bench(&format!("hlo_step_batched_b{b}/N={bucket}"), 200, || {
+                let _ = service.step_batched(bucket, &states, &params).unwrap();
+            });
+            println!(
+                "    -> {:.0} amortized steps/s ({} instances per dispatch)",
+                common::throughput(&s, b as f64),
+                b
+            );
+        }
+    }
+
+    // end-to-end coupled instance (webots↔traci↔sumo↔physics): the L3
+    // hot loop the §Perf pass optimizes
+    for (label, engine) in [
+        ("native", webots_hpc::pipeline::PhysicsEngine::Native),
+        ("hlo", webots_hpc::pipeline::PhysicsEngine::Hlo(service.clone())),
+    ] {
+        let env = webots_hpc::container::ExecEnv::new(
+            webots_hpc::container::build_webots_hpc_image(
+                webots_hpc::container::BuildHost::PersonalComputer,
+            )
+            .unwrap(),
+        );
+        let displays = webots_hpc::display::DisplayRegistry::new();
+        let s = common::bench(&format!("coupled_instance_30s/{label}"), 10, || {
+            let port = std::net::TcpListener::bind("127.0.0.1:0")
+                .unwrap()
+                .local_addr()
+                .unwrap()
+                .port();
+            let cfg = webots_hpc::pipeline::InstanceConfig {
+                run_id: "bench".into(),
+                node: 0,
+                world: webots_hpc::webots::nodes::sample_merge_world(port),
+                flows: webots_hpc::sumo::FlowFile::merge_sample(1200.0, 300.0, 30.0),
+                scenario: webots_hpc::sumo::MergeScenario::default(),
+                seed: 1,
+                capacity: 64,
+                horizon_s: 30.0,
+                max_steps: 400,
+            };
+            let _ = webots_hpc::pipeline::launch_instance(&cfg, &displays, &env, &engine)
+                .unwrap();
+        });
+        println!(
+            "    -> {:.0} coupled steps/s",
+            common::throughput(&s, 300.0)
+        );
+    }
+
+    // contention: 8 threads sharing the engine service (one node's
+    // slots), steady state — 10 lock-step rounds per measurement so the
+    // dynamic micro-batcher can coalesce (thread spawn cost amortized)
+    let bucket = service.manifest().buckets[1];
+    let t = traffic(bucket, 0.7, 1);
+    const ROUNDS: u32 = 10;
+    let s = common::bench("hlo_step_8threads_x10/N=64", 30, || {
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let svc = service.clone();
+                let state = t.state.clone();
+                let params = t.params.clone();
+                scope.spawn(move || {
+                    for _ in 0..ROUNDS {
+                        let _ = svc.step(bucket, &state, &params).unwrap();
+                    }
+                });
+            }
+        });
+    });
+    println!(
+        "    -> {:.0} aggregate steps/s across 8 threads",
+        common::throughput(&s, 8.0 * ROUNDS as f64)
+    );
+}

@@ -1,0 +1,36 @@
+//! Bench: regenerate paper **Table 5.1 / Figure 5.1** — sample simulation
+//! throughput, personal computer vs cluster, 12-hour campaign.
+//!
+//! ```text
+//! cargo bench --bench table_5_1
+//! ```
+//!
+//! Asserts the reproduction targets (cluster column exact 48·t, 31×
+//! speedup) and reports how long the full virtual-time replay takes.
+
+mod common;
+
+use webots_hpc::harness::{fig_5_1, table_5_1, PAPER_TABLE_5_1};
+
+fn main() {
+    let t = table_5_1().expect("table 5.1 generates");
+    println!("{}", t.render());
+    println!("{}", fig_5_1().expect("fig 5.1 renders"));
+
+    // reproduction checks (same as the test suite, repeated here so the
+    // bench is self-validating)
+    for (i, &(m, _pc, cl)) in t.rows.iter().enumerate() {
+        assert_eq!(cl, PAPER_TABLE_5_1[i].2, "cluster at {m} min");
+    }
+    assert!((t.speedup - 31.0).abs() < 3.0);
+
+    // cost of regenerating the full 12h campaign in virtual time
+    let s = common::bench("table_5_1::regenerate_12h_campaign", 10, || {
+        let _ = table_5_1().unwrap();
+    });
+    println!(
+        "virtual-time compression: 12h of campaign replayed in {:?} ({:.0}x real time)",
+        s.median,
+        12.0 * 3600.0 / s.median.as_secs_f64()
+    );
+}

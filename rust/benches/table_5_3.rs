@@ -1,0 +1,26 @@
+//! Bench: regenerate paper **Table 5.2 + Table 5.3** — experimental-setup
+//! hardware specs and per-run resource consumption, 6x1 vs 6x8.
+//!
+//! ```text
+//! cargo bench --bench table_5_3
+//! ```
+
+mod common;
+
+use webots_hpc::harness::{table_5_2, table_5_3};
+
+fn main() {
+    println!("{}", table_5_2().render());
+    let t = table_5_3().expect("table 5.3 generates");
+    println!("{}", t.render());
+
+    // shape targets (see EXPERIMENTS.md for the CPU% reporting note)
+    let shorter = 1.0 - t.serial_6x1.mean_walltime_s / t.parallel_6x8.mean_walltime_s;
+    assert!((shorter - 0.335).abs() < 0.07, "walltime advantage {shorter}");
+    assert!(t.serial_6x1.mean_cpu_time_s > t.parallel_6x8.mean_cpu_time_s);
+    assert!((t.serial_6x1.mean_ram_gb - t.parallel_6x8.mean_ram_gb).abs() < 0.3);
+
+    common::bench("table_5_3::regenerate_both_setups", 10, || {
+        let _ = table_5_3().unwrap();
+    });
+}

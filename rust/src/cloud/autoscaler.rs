@@ -1,0 +1,250 @@
+//! The elastic node pool and its autoscaler.
+
+use crate::simclock::{SimDuration, SimInstant};
+
+/// Provider characteristics (an EC2-ish profile).
+#[derive(Debug, Clone, Copy)]
+pub struct CloudProvider {
+    /// Instance boot latency (request → schedulable).
+    pub boot_latency: SimDuration,
+    /// Cap on concurrently provisioned nodes.
+    pub max_nodes: usize,
+    /// Billing rate [$ / node-hour].
+    pub node_hour_usd: f64,
+    /// Scale-down after a node idles this long.
+    pub idle_timeout: SimDuration,
+}
+
+impl Default for CloudProvider {
+    fn default() -> Self {
+        CloudProvider {
+            boot_latency: SimDuration::from_secs(90),
+            max_nodes: 64,
+            node_hour_usd: 4.10, // an r5.24xlarge-ish on-demand rate
+            idle_timeout: SimDuration::from_minutes(5),
+        }
+    }
+}
+
+/// Lifecycle of one elastic node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    /// Requested, still booting until the embedded instant.
+    Booting(SimInstant),
+    /// Schedulable.
+    Ready,
+    /// Terminated (kept for billing).
+    Terminated,
+}
+
+#[derive(Debug, Clone)]
+struct CloudNode {
+    state: NodeState,
+    /// Running instance count.
+    busy: usize,
+    /// Billing accumulator.
+    provisioned_at: SimInstant,
+    terminated_at: Option<SimInstant>,
+    idle_since: Option<SimInstant>,
+}
+
+/// Queue-depth-targeting autoscaler over an elastic pool.
+#[derive(Debug)]
+pub struct AutoScaler {
+    pub provider: CloudProvider,
+    pub slots_per_node: usize,
+    nodes: Vec<CloudNode>,
+}
+
+impl AutoScaler {
+    pub fn new(provider: CloudProvider, slots_per_node: usize) -> Self {
+        AutoScaler {
+            provider,
+            slots_per_node,
+            nodes: Vec::new(),
+        }
+    }
+
+    /// Nodes that can accept work right now.
+    pub fn ready_nodes(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.state == NodeState::Ready)
+            .count()
+    }
+
+    pub fn booting_nodes(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.state, NodeState::Booting(_)))
+            .count()
+    }
+
+    /// Free slots across ready nodes.
+    pub fn free_slots(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.state == NodeState::Ready)
+            .map(|n| self.slots_per_node - n.busy)
+            .sum()
+    }
+
+    /// One control-loop tick: finish boots, scale toward the demand
+    /// target, retire idle nodes.  `demand` = queued + running instances.
+    pub fn tick(&mut self, now: SimInstant, demand: usize) {
+        // boots complete
+        for n in &mut self.nodes {
+            if let NodeState::Booting(ready_at) = n.state {
+                if now >= ready_at {
+                    n.state = NodeState::Ready;
+                    n.idle_since = Some(now);
+                }
+            }
+        }
+        // target: enough nodes for the whole demand
+        let target = demand.div_ceil(self.slots_per_node.max(1));
+        let live = self.ready_nodes() + self.booting_nodes();
+        if target > live {
+            let want = (target - live).min(self.provider.max_nodes.saturating_sub(live));
+            for _ in 0..want {
+                self.nodes.push(CloudNode {
+                    state: NodeState::Booting(now + self.provider.boot_latency),
+                    busy: 0,
+                    provisioned_at: now,
+                    terminated_at: None,
+                    idle_since: None,
+                });
+            }
+        }
+        // retire idle nodes beyond the target
+        if live > target {
+            let mut excess = live - target;
+            for n in &mut self.nodes {
+                if excess == 0 {
+                    break;
+                }
+                if n.state == NodeState::Ready && n.busy == 0 {
+                    if let Some(idle) = n.idle_since {
+                        if now.saturating_sub(idle) >= self.provider.idle_timeout {
+                            n.state = NodeState::Terminated;
+                            n.terminated_at = Some(now);
+                            excess -= 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Claim one slot on a ready node; returns the node index.
+    pub fn claim_slot(&mut self, now: SimInstant) -> Option<usize> {
+        let idx = self
+            .nodes
+            .iter()
+            .position(|n| n.state == NodeState::Ready && n.busy < self.slots_per_node)?;
+        self.nodes[idx].busy += 1;
+        self.nodes[idx].idle_since = None;
+        let _ = now;
+        Some(idx)
+    }
+
+    /// Release a slot claimed earlier.
+    pub fn release_slot(&mut self, idx: usize, now: SimInstant) {
+        let n = &mut self.nodes[idx];
+        n.busy -= 1;
+        if n.busy == 0 {
+            n.idle_since = Some(now);
+        }
+    }
+
+    /// Total billed node-hours up to `now`.
+    pub fn node_hours(&self, now: SimInstant) -> f64 {
+        self.nodes
+            .iter()
+            .map(|n| {
+                let end = n.terminated_at.unwrap_or(now);
+                end.saturating_sub(n.provisioned_at).as_secs_f64() / 3600.0
+            })
+            .sum()
+    }
+
+    pub fn cost_usd(&self, now: SimInstant) -> f64 {
+        self.node_hours(now) * self.provider.node_hour_usd
+    }
+
+    pub fn provisioned_total(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn at(secs: u64) -> SimInstant {
+        SimInstant::ZERO + SimDuration::from_secs(secs)
+    }
+
+    #[test]
+    fn scales_up_to_demand_after_boot_latency() {
+        let mut a = AutoScaler::new(CloudProvider::default(), 8);
+        a.tick(at(0), 48); // 48 instances → 6 nodes
+        assert_eq!(a.booting_nodes(), 6);
+        assert_eq!(a.ready_nodes(), 0);
+        a.tick(at(89), 48);
+        assert_eq!(a.ready_nodes(), 0, "boot latency not elapsed");
+        a.tick(at(90), 48);
+        assert_eq!(a.ready_nodes(), 6);
+        assert_eq!(a.free_slots(), 48);
+    }
+
+    #[test]
+    fn respects_max_nodes() {
+        let mut a = AutoScaler::new(
+            CloudProvider {
+                max_nodes: 4,
+                ..Default::default()
+            },
+            8,
+        );
+        a.tick(at(0), 1000);
+        assert_eq!(a.booting_nodes(), 4);
+    }
+
+    #[test]
+    fn claims_and_releases_slots() {
+        let mut a = AutoScaler::new(CloudProvider::default(), 2);
+        a.tick(at(0), 2);
+        a.tick(at(90), 2);
+        let s1 = a.claim_slot(at(91)).unwrap();
+        let s2 = a.claim_slot(at(91)).unwrap();
+        assert_eq!(s1, s2, "packs one node first");
+        assert!(a.claim_slot(at(91)).is_none(), "node full");
+        a.release_slot(s1, at(100));
+        assert!(a.claim_slot(at(101)).is_some());
+    }
+
+    #[test]
+    fn scales_down_after_idle_timeout() {
+        let mut a = AutoScaler::new(CloudProvider::default(), 8);
+        a.tick(at(0), 8);
+        a.tick(at(90), 8);
+        assert_eq!(a.ready_nodes(), 1);
+        // demand gone; node idles
+        a.tick(at(200), 0);
+        assert_eq!(a.ready_nodes(), 1, "idle timeout not reached");
+        a.tick(at(90 + 301), 0);
+        assert_eq!(a.ready_nodes(), 0, "retired after 5 min idle");
+    }
+
+    #[test]
+    fn billing_accumulates_until_termination() {
+        let mut a = AutoScaler::new(CloudProvider::default(), 8);
+        a.tick(at(0), 8);
+        a.tick(at(90), 8);
+        a.tick(at(3690), 0); // idle long past timeout → terminated
+        let hours = a.node_hours(at(7200));
+        assert!(hours > 0.9 && hours < 1.2, "≈1 node-hour, got {hours}");
+        assert!(a.cost_usd(at(7200)) > 3.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Cloud conversion of the pipeline — the paper's §6.2.3 future work.
+//!
+//! "an implementation on Amazon Web Services (AWS) could easily take
+//! advantage of autoscaling, eliminating the need for static
+//! provisioning of resources through a PBS script."  This module
+//! implements that: an elastic node pool with boot latency and
+//! per-node-hour cost, an autoscaler targeting the queue depth, and an
+//! elastic campaign driver comparable head-to-head with the static PBS
+//! cluster (bench `ablations`/`future_work`).
+
+mod autoscaler;
+mod elastic;
+
+pub use autoscaler::{AutoScaler, CloudProvider, NodeState};
+pub use elastic::{run_elastic_campaign, ElasticReport, ElasticSpec};

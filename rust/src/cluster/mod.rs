@@ -1,0 +1,16 @@
+//! The compute-cluster substrate: nodes, resource accounting, queues.
+//!
+//! The paper runs on Clemson's Palmetto cluster, specifically the 11-node
+//! **DICE Lab queue** of Dell R740s (Table 2.2: 40 cores, 744 GB RAM,
+//! 1.8 TB local scratch, HDR interconnect, 2× V100).  We model the node
+//! inventory and resource bookkeeping faithfully — the throughput and
+//! distribution results of ch. 5 are functions of this inventory plus the
+//! PBS packing policy, not of the silicon.
+
+mod node;
+mod queue;
+mod topology;
+
+pub use node::{Allocation, AllocationId, Node, NodeSpec, ResourceDemand};
+pub use queue::{ClusterQueue, QueueSpec};
+pub use topology::{Cluster, Interconnect};

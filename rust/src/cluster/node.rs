@@ -1,0 +1,261 @@
+//! A single compute node: hardware spec + live allocations.
+
+
+use crate::{Error, Result};
+
+use super::Interconnect;
+
+/// Hardware description of one node (paper Table 2.2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    pub make: String,
+    pub model: String,
+    pub chip: String,
+    pub cores: u32,
+    pub ram_gb: f64,
+    pub local_scratch_gb: f64,
+    pub interconnect: Interconnect,
+    pub gpus: u32,
+    pub gpu_model: String,
+}
+
+impl NodeSpec {
+    /// The DICE-lab Dell R740 of paper Table 2.2 (Phase 18b).
+    pub fn dice_r740() -> Self {
+        NodeSpec {
+            make: "Dell".into(),
+            model: "R740".into(),
+            chip: "Intel Xeon".into(),
+            cores: 40,
+            ram_gb: 744.0,
+            local_scratch_gb: 1843.2, // 1.8 TB
+            interconnect: Interconnect::Hdr,
+            gpus: 2,
+            gpu_model: "Nvidia Tesla V100".into(),
+        }
+    }
+
+    /// The "personal computer of comparable hardware" baseline of §5.1.
+    /// The paper sections each cluster node into 8 slots of 5 cores /
+    /// 93 GB (Table 5.2) and calls that "specifications reminiscent of a
+    /// personal computer"; the PC baseline uses the same slice.
+    pub fn personal_computer() -> Self {
+        NodeSpec {
+            make: "Generic".into(),
+            model: "Desktop".into(),
+            chip: "Intel Core".into(),
+            cores: 5,
+            ram_gb: 93.0,
+            local_scratch_gb: 225.0,
+            interconnect: Interconnect::Ethernet25G,
+            gpus: 0,
+            gpu_model: String::new(),
+        }
+    }
+}
+
+/// What one job chunk asks of a node — the `-l select=...` terms.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResourceDemand {
+    pub ncpus: u32,
+    pub mem_gb: f64,
+    pub scratch_gb: f64,
+    pub ngpus: u32,
+}
+
+impl ResourceDemand {
+    /// The paper's per-instance request (Appendix B / Table 5.2, 6x8
+    /// setup): `ncpus=5:mem=93gb`.
+    pub fn paper_slot() -> Self {
+        ResourceDemand {
+            ncpus: 5,
+            mem_gb: 93.0,
+            scratch_gb: 225.0,
+            ngpus: 0,
+        }
+    }
+
+    /// Whole-node request (Table 5.2, 6x1 setup): 40 cores / 744 GB.
+    pub fn whole_node() -> Self {
+        ResourceDemand {
+            ncpus: 40,
+            mem_gb: 744.0,
+            scratch_gb: 1843.2,
+            ngpus: 0,
+        }
+    }
+}
+
+/// Handle to a live allocation on a node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AllocationId(pub u64);
+
+/// A booked slice of a node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allocation {
+    pub id: AllocationId,
+    pub demand: ResourceDemand,
+}
+
+/// A node with live resource bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub name: String,
+    pub spec: NodeSpec,
+    allocations: Vec<Allocation>,
+    next_alloc: u64,
+}
+
+impl Node {
+    pub fn new(name: impl Into<String>, spec: NodeSpec) -> Self {
+        Node {
+            name: name.into(),
+            spec,
+            allocations: Vec::new(),
+            next_alloc: 0,
+        }
+    }
+
+    pub fn allocations(&self) -> &[Allocation] {
+        &self.allocations
+    }
+
+    pub fn free_cores(&self) -> u32 {
+        self.spec.cores
+            - self
+                .allocations
+                .iter()
+                .map(|a| a.demand.ncpus)
+                .sum::<u32>()
+    }
+
+    pub fn free_ram_gb(&self) -> f64 {
+        self.spec.ram_gb - self.allocations.iter().map(|a| a.demand.mem_gb).sum::<f64>()
+    }
+
+    pub fn free_scratch_gb(&self) -> f64 {
+        self.spec.local_scratch_gb
+            - self
+                .allocations
+                .iter()
+                .map(|a| a.demand.scratch_gb)
+                .sum::<f64>()
+    }
+
+    pub fn free_gpus(&self) -> u32 {
+        self.spec.gpus - self.allocations.iter().map(|a| a.demand.ngpus).sum::<u32>()
+    }
+
+    /// Can this node host `demand` *right now*?
+    pub fn fits(&self, demand: &ResourceDemand) -> bool {
+        self.free_cores() >= demand.ncpus
+            && self.free_ram_gb() >= demand.mem_gb - 1e-9
+            && self.free_scratch_gb() >= demand.scratch_gb - 1e-9
+            && self.free_gpus() >= demand.ngpus
+    }
+
+    /// Book resources; fails (never oversubscribes) when they don't fit.
+    pub fn allocate(&mut self, demand: ResourceDemand) -> Result<AllocationId> {
+        if !self.fits(&demand) {
+            return Err(Error::Unschedulable(format!(
+                "node {} cannot fit ncpus={} mem={}gb (free: {} cores, {:.0} gb)",
+                self.name,
+                demand.ncpus,
+                demand.mem_gb,
+                self.free_cores(),
+                self.free_ram_gb()
+            )));
+        }
+        let id = AllocationId(self.next_alloc);
+        self.next_alloc += 1;
+        self.allocations.push(Allocation { id, demand });
+        Ok(id)
+    }
+
+    /// Release a booking. Idempotent release is an error — the scheduler
+    /// must not double-free.
+    pub fn release(&mut self, id: AllocationId) -> Result<()> {
+        let before = self.allocations.len();
+        self.allocations.retain(|a| a.id != id);
+        if self.allocations.len() == before {
+            return Err(Error::Unschedulable(format!(
+                "release of unknown allocation {id:?} on node {}",
+                self.name
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn num_running(&self) -> usize {
+        self.allocations.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dice_spec_matches_table_2_2() {
+        let s = NodeSpec::dice_r740();
+        assert_eq!(s.cores, 40);
+        assert_eq!(s.ram_gb, 744.0);
+        assert_eq!(s.gpus, 2);
+        assert_eq!(s.interconnect, Interconnect::Hdr);
+    }
+
+    #[test]
+    fn eight_paper_slots_fit_one_dice_node() {
+        // the 6x8 experimental setup: 8 × (5 cores, 93 GB) per node
+        let mut n = Node::new("node1", NodeSpec::dice_r740());
+        for _ in 0..8 {
+            n.allocate(ResourceDemand::paper_slot()).unwrap();
+        }
+        assert_eq!(n.free_cores(), 0);
+        assert!(n.free_ram_gb() < 1.0); // 744 - 8*93 = 0
+        assert!(n.allocate(ResourceDemand::paper_slot()).is_err());
+    }
+
+    #[test]
+    fn whole_node_excludes_everything_else() {
+        let mut n = Node::new("node1", NodeSpec::dice_r740());
+        n.allocate(ResourceDemand::whole_node()).unwrap();
+        assert!(!n.fits(&ResourceDemand::paper_slot()));
+    }
+
+    #[test]
+    fn release_frees_resources() {
+        let mut n = Node::new("node1", NodeSpec::dice_r740());
+        let id = n.allocate(ResourceDemand::whole_node()).unwrap();
+        n.release(id).unwrap();
+        assert_eq!(n.free_cores(), 40);
+        assert!(n.release(id).is_err(), "double free must fail");
+    }
+
+    #[test]
+    fn never_oversubscribes_cores() {
+        let mut n = Node::new("node1", NodeSpec::dice_r740());
+        let d = ResourceDemand {
+            ncpus: 30,
+            mem_gb: 10.0,
+            scratch_gb: 0.0,
+            ngpus: 0,
+        };
+        n.allocate(d).unwrap();
+        assert!(n.allocate(d).is_err());
+    }
+
+    #[test]
+    fn gpu_accounting() {
+        let mut n = Node::new("node1", NodeSpec::dice_r740());
+        let d = ResourceDemand {
+            ncpus: 1,
+            mem_gb: 1.0,
+            scratch_gb: 0.0,
+            ngpus: 2,
+        };
+        n.allocate(d).unwrap();
+        assert_eq!(n.free_gpus(), 0);
+        assert!(!n.fits(&d));
+    }
+}

@@ -1,0 +1,83 @@
+//! Named submission queues (`#PBS -q dicelab`).
+//!
+//! A queue is a policy surface over a subset of the cluster: which nodes
+//! it may use, the walltime cap, and the per-user node limit.  The paper
+//! submits everything to the DICE-lab queue.
+
+
+use crate::{Error, Result};
+
+/// Static queue configuration.
+#[derive(Debug, Clone)]
+pub struct QueueSpec {
+    pub name: String,
+    /// Node indices (into the owning [`super::Cluster`]) this queue may use.
+    pub node_indices: Vec<usize>,
+    /// Hard walltime cap in seconds (requests above this are rejected at
+    /// submission, like PBS's `qsub: Job exceeds queue resource limits`).
+    pub max_walltime_secs: u64,
+    /// Max nodes one job may span.
+    pub max_nodes_per_job: usize,
+}
+
+impl QueueSpec {
+    /// The `dicelab` queue over the first `n` nodes of the cluster.
+    pub fn dicelab(n: usize) -> Self {
+        QueueSpec {
+            name: "dicelab".into(),
+            node_indices: (0..n).collect(),
+            max_walltime_secs: 72 * 3600,
+            max_nodes_per_job: n,
+        }
+    }
+}
+
+/// A queue bound to runtime state (currently just validation; the
+/// scheduler owns the dynamic state).
+#[derive(Debug, Clone)]
+pub struct ClusterQueue {
+    pub spec: QueueSpec,
+}
+
+impl ClusterQueue {
+    pub fn new(spec: QueueSpec) -> Self {
+        ClusterQueue { spec }
+    }
+
+    /// Validate a submission against queue limits.
+    pub fn admit(&self, walltime_secs: u64, nodes: usize) -> Result<()> {
+        if walltime_secs > self.spec.max_walltime_secs {
+            return Err(Error::Unschedulable(format!(
+                "queue {}: walltime {}s exceeds cap {}s",
+                self.spec.name, walltime_secs, self.spec.max_walltime_secs
+            )));
+        }
+        if nodes > self.spec.max_nodes_per_job {
+            return Err(Error::Unschedulable(format!(
+                "queue {}: {} nodes exceeds cap {}",
+                self.spec.name, nodes, self.spec.max_nodes_per_job
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dicelab_covers_requested_nodes() {
+        let q = QueueSpec::dicelab(11);
+        assert_eq!(q.node_indices.len(), 11);
+        assert_eq!(q.name, "dicelab");
+    }
+
+    #[test]
+    fn admit_enforces_walltime_cap() {
+        let q = ClusterQueue::new(QueueSpec::dicelab(6));
+        assert!(q.admit(900, 6).is_ok());
+        assert!(q.admit(100 * 3600, 1).is_err());
+        assert!(q.admit(900, 7).is_err());
+    }
+}

@@ -1,0 +1,171 @@
+//! The cluster: a named collection of nodes plus interconnect metadata.
+
+
+use crate::{Error, Result};
+
+use super::{AllocationId, Node, NodeSpec, ResourceDemand};
+
+/// Interconnect classes present on the DICE queue (Table 2.2 lists
+/// "100g, HDR, 25GE").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Interconnect {
+    /// InfiniBand HDR (200 Gb/s) — what the paper's `-l interconnect=hdr`
+    /// selects.
+    Hdr,
+    /// 100 GbE.
+    Ethernet100G,
+    /// 25 GbE.
+    Ethernet25G,
+}
+
+impl Interconnect {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "hdr" => Ok(Interconnect::Hdr),
+            "100g" | "100ge" => Ok(Interconnect::Ethernet100G),
+            "25g" | "25ge" => Ok(Interconnect::Ethernet25G),
+            other => Err(Error::Config(format!("unknown interconnect '{other}'"))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Interconnect::Hdr => "hdr",
+            Interconnect::Ethernet100G => "100g",
+            Interconnect::Ethernet25G => "25ge",
+        }
+    }
+}
+
+/// The whole machine room.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub name: String,
+    nodes: Vec<Node>,
+}
+
+impl Cluster {
+    pub fn new(name: impl Into<String>) -> Self {
+        Cluster {
+            name: name.into(),
+            nodes: Vec::new(),
+        }
+    }
+
+    /// The Palmetto DICE-lab queue: 11 R740s (paper §2.6).
+    pub fn palmetto_dice() -> Self {
+        Self::uniform("palmetto-dice", 11, NodeSpec::dice_r740())
+    }
+
+    /// `count` identical nodes named `{name}-nodeNN`.
+    pub fn uniform(name: &str, count: usize, spec: NodeSpec) -> Self {
+        let mut c = Cluster::new(name);
+        for i in 0..count {
+            c.add_node(Node::new(format!("{name}-node{i:02}"), spec.clone()));
+        }
+        c
+    }
+
+    pub fn add_node(&mut self, node: Node) {
+        self.nodes.push(node);
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn node(&self, idx: usize) -> &Node {
+        &self.nodes[idx]
+    }
+
+    pub fn node_mut(&mut self, idx: usize) -> &mut Node {
+        &mut self.nodes[idx]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Indices of nodes that can host `demand` right now, restricted to an
+    /// interconnect class when requested (`-l interconnect=hdr`).
+    pub fn candidates(
+        &self,
+        demand: &ResourceDemand,
+        interconnect: Option<Interconnect>,
+    ) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| interconnect.map_or(true, |ic| n.spec.interconnect == ic))
+            .filter(|(_, n)| n.fits(demand))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn allocate_on(&mut self, idx: usize, demand: ResourceDemand) -> Result<AllocationId> {
+        self.nodes[idx].allocate(demand)
+    }
+
+    pub fn release_on(&mut self, idx: usize, id: AllocationId) -> Result<()> {
+        self.nodes[idx].release(id)
+    }
+
+    /// Total free cores across the cluster (capacity signal for benches).
+    pub fn total_free_cores(&self) -> u32 {
+        self.nodes.iter().map(|n| n.free_cores()).sum()
+    }
+
+    /// Per-node running-instance counts — the §5.2 distribution metric.
+    pub fn occupancy(&self) -> Vec<usize> {
+        self.nodes.iter().map(|n| n.num_running()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn palmetto_dice_has_eleven_nodes() {
+        let c = Cluster::palmetto_dice();
+        assert_eq!(c.len(), 11);
+        assert_eq!(c.total_free_cores(), 11 * 40);
+    }
+
+    #[test]
+    fn candidates_respect_interconnect() {
+        let mut c = Cluster::uniform("t", 2, NodeSpec::dice_r740());
+        c.add_node(Node::new("eth", NodeSpec::personal_computer()));
+        let d = ResourceDemand {
+            ncpus: 1,
+            mem_gb: 1.0,
+            scratch_gb: 0.0,
+            ngpus: 0,
+        };
+        assert_eq!(c.candidates(&d, Some(Interconnect::Hdr)).len(), 2);
+        assert_eq!(c.candidates(&d, None).len(), 3);
+    }
+
+    #[test]
+    fn candidates_shrink_as_cluster_fills() {
+        let mut c = Cluster::uniform("t", 2, NodeSpec::dice_r740());
+        let d = ResourceDemand::whole_node();
+        let cands = c.candidates(&d, None);
+        assert_eq!(cands.len(), 2);
+        c.allocate_on(cands[0], d).unwrap();
+        assert_eq!(c.candidates(&d, None).len(), 1);
+    }
+
+    #[test]
+    fn interconnect_parse_roundtrip() {
+        for s in ["hdr", "100g", "25ge"] {
+            let ic = Interconnect::parse(s).unwrap();
+            assert_eq!(Interconnect::parse(ic.as_str()).unwrap(), ic);
+        }
+        assert!(Interconnect::parse("token-ring").is_err());
+    }
+}

@@ -1,0 +1,114 @@
+//! `singularity build`: Docker → SIF conversion.
+//!
+//! The conversion workflow the paper converged on (§4.1.2–4.1.3):
+//! pulling/modifying the Docker image **must** happen on a host with
+//! admin rights (a personal computer); the cluster can only convert and
+//! run.  [`BuildHost`] encodes where an operation is attempted.
+
+use crate::Result;
+#[cfg(test)]
+use crate::Error;
+
+use super::{DockerImage, SifImage};
+
+/// Where a build/modify operation runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BuildHost {
+    /// A machine with admin/root (the paper's "personal computer").
+    PersonalComputer,
+    /// A cluster login/compute node: unprivileged.
+    Cluster,
+}
+
+impl BuildHost {
+    pub fn has_admin(self) -> bool {
+        matches!(self, BuildHost::PersonalComputer)
+    }
+}
+
+/// `singularity build webots_sumo.sif docker://...`.
+///
+/// Conversion itself works on either host (Singularity is designed for
+/// unprivileged HPC use), but *pulling a modified docker image* to the
+/// cluster first requires it to have been pushed from an admin host —
+/// we model that by accepting the [`DockerImage`] by value: whatever
+/// state it carries is what gets frozen.
+pub fn singularity_build(image: &DockerImage, sandbox: bool) -> SifImage {
+    SifImage {
+        name: format!("{}_{}.sif", image.name.replace('/', "_"), image.tag),
+        binaries: image.binaries.clone(),
+        python_packages: image.python_packages.clone(),
+        sandbox,
+        built_from: format!("{}:{}", image.name, image.tag),
+    }
+}
+
+/// The full §4.1 publication loop: (1) pull on admin host, (2) modify,
+/// (3) push, (4) convert on the cluster.  Returns the deployable SIF
+/// loaded with pip + the data-science stack the paper added.
+pub fn build_webots_hpc_image(host: BuildHost) -> Result<SifImage> {
+    let mut docker = DockerImage::official_webots();
+    // steps 1-2 need admin; on the cluster they fail like they did for
+    // the authors.
+    docker.install_pip(host.has_admin())?;
+    for pkg in ["numpy", "pandas"] {
+        docker.pip_install(pkg)?;
+    }
+    // step 4: conversion is fine anywhere.
+    Ok(singularity_build(&docker, false))
+}
+
+/// Modifying an already-converted SIF on the cluster — the dead end the
+/// paper hit before settling on the loop above.
+pub fn modify_sif_on_cluster(sif: &mut SifImage, pkg: &str) -> Result<()> {
+    sif.pip_install(pkg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_on_pc_succeeds_with_full_stack() {
+        let sif = build_webots_hpc_image(BuildHost::PersonalComputer).unwrap();
+        assert!(sif.has_binary("webots"));
+        assert!(sif.has_binary("pip"));
+        assert!(sif.has_python_package("numpy"));
+        assert!(sif.has_python_package("pandas"));
+        assert!(!sif.sandbox);
+        assert_eq!(sif.built_from, "cyberbotics/webots:R2021a");
+    }
+
+    #[test]
+    fn build_on_cluster_fails_at_pip_bootstrap() {
+        // §4.1.4: "we were unsuccessful in running the command in sudo
+        // mode due to permissions limitations"
+        let err = build_webots_hpc_image(BuildHost::Cluster).unwrap_err();
+        assert!(matches!(err, Error::PermissionDenied(_)));
+    }
+
+    #[test]
+    fn converted_sif_is_immutable_on_cluster() {
+        let sif0 = singularity_build(&DockerImage::official_webots(), false);
+        let mut sif = sif0;
+        let err = modify_sif_on_cluster(&mut sif, "numpy").unwrap_err();
+        assert!(matches!(err, Error::ImmutableImage(_)));
+    }
+
+    #[test]
+    fn sandbox_sif_writable_but_pipless() {
+        // the paper's sandbox detour: writable, yet pip is still missing
+        let mut sif = singularity_build(&DockerImage::official_webots(), true);
+        let err = sif.pip_install("numpy").unwrap_err();
+        assert!(matches!(err, Error::MissingInImage(_)));
+    }
+
+    #[test]
+    fn sandbox_of_fixed_image_works() {
+        let mut docker = DockerImage::official_webots();
+        docker.install_pip(true).unwrap();
+        let mut sif = singularity_build(&docker, true);
+        sif.pip_install("numpy").unwrap();
+        assert!(sif.has_python_package("numpy"));
+    }
+}

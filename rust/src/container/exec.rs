@@ -1,0 +1,110 @@
+//! `singularity exec`: running commands inside a container environment.
+//!
+//! Models the `-B $TMPDIR:$TMPDIR` bind-mount plumbing and binary
+//! resolution against the image content.  The launcher
+//! (`pipeline::launcher`) builds an [`ExecEnv`] per simulation instance.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+use super::SifImage;
+
+/// A `-B src:dst` bind mount.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BindMount {
+    pub src: String,
+    pub dst: String,
+}
+
+/// The execution environment of one `singularity exec` invocation.
+#[derive(Debug, Clone)]
+pub struct ExecEnv {
+    pub image: SifImage,
+    pub binds: Vec<BindMount>,
+    pub env: BTreeMap<String, String>,
+}
+
+/// What happened when a command ran.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecOutcome {
+    pub binary: String,
+    pub args: Vec<String>,
+    pub exit_code: i32,
+}
+
+impl ExecEnv {
+    pub fn new(image: SifImage) -> Self {
+        ExecEnv {
+            image,
+            binds: Vec::new(),
+            env: BTreeMap::new(),
+        }
+    }
+
+    pub fn bind(mut self, src: impl Into<String>, dst: impl Into<String>) -> Self {
+        self.binds.push(BindMount {
+            src: src.into(),
+            dst: dst.into(),
+        });
+        self
+    }
+
+    pub fn env_var(mut self, k: impl Into<String>, v: impl Into<String>) -> Self {
+        self.env.insert(k.into(), v.into());
+        self
+    }
+
+    /// Resolve and "run" a binary from the image. Fails with the paper's
+    /// `MissingInImage` error when the tool isn't on the image — the
+    /// runtime analogue of the §4.1.4 missing-pip discovery.
+    pub fn exec(&self, binary: &str, args: &[&str]) -> Result<ExecOutcome> {
+        if !self.image.has_binary(binary) {
+            return Err(Error::MissingInImage(binary.to_string()));
+        }
+        Ok(ExecOutcome {
+            binary: binary.to_string(),
+            args: args.iter().map(|s| s.to_string()).collect(),
+            exit_code: 0,
+        })
+    }
+
+    /// A path is visible inside the container iff some bind covers it
+    /// (host $TMPDIR content is invisible without `-B $TMPDIR:$TMPDIR`).
+    pub fn path_visible(&self, path: &str) -> bool {
+        self.binds.iter().any(|b| path.starts_with(&b.dst))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::{singularity_build, DockerImage};
+
+    fn env() -> ExecEnv {
+        let sif = singularity_build(&DockerImage::official_webots(), false);
+        ExecEnv::new(sif).bind("/tmp/job123", "/tmp/job123")
+    }
+
+    #[test]
+    fn exec_resolves_image_binaries() {
+        let e = env();
+        assert!(e.exec("webots", &["--batch"]).is_ok());
+        assert!(e.exec("duarouter", &[]).is_ok());
+        let err = e.exec("pip", &["install", "numpy"]).unwrap_err();
+        assert!(matches!(err, Error::MissingInImage(_)));
+    }
+
+    #[test]
+    fn tmpdir_visibility_requires_bind() {
+        let e = env();
+        assert!(e.path_visible("/tmp/job123/sim.wbt"));
+        assert!(!e.path_visible("/scratch/other"));
+    }
+
+    #[test]
+    fn env_vars_carry() {
+        let e = env().env_var("DISPLAY", ":99");
+        assert_eq!(e.env.get("DISPLAY").map(String::as_str), Some(":99"));
+    }
+}

@@ -1,0 +1,178 @@
+//! Container image models: mutable Docker images, immutable SIF images.
+
+use std::collections::BTreeSet;
+
+
+use crate::{Error, Result};
+
+/// A Docker image: layered, mutable where you have admin rights.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DockerImage {
+    pub name: String,
+    pub tag: String,
+    /// Binaries/tools present on the image.
+    pub binaries: BTreeSet<String>,
+    /// Installed python packages.
+    pub python_packages: BTreeSet<String>,
+    /// Layer history (audit trail of modifications).
+    pub layers: Vec<String>,
+}
+
+impl DockerImage {
+    /// The official `cyberbotics/webots` image as the paper found it:
+    /// Webots + SUMO + Xvfb present, **pip absent** ("We were surprised
+    /// that pip was not pre-installed on the Webots Docker image",
+    /// §4.1.4).
+    pub fn official_webots() -> Self {
+        DockerImage {
+            name: "cyberbotics/webots".into(),
+            tag: "R2021a".into(),
+            binaries: ["webots", "sumo", "duarouter", "xvfb-run", "python3"]
+                .into_iter()
+                .map(String::from)
+                .collect(),
+            python_packages: BTreeSet::new(),
+            layers: vec!["FROM cyberbotics/webots:R2021a".into()],
+        }
+    }
+
+    pub fn has_binary(&self, name: &str) -> bool {
+        self.binaries.contains(name)
+    }
+
+    pub fn has_python_package(&self, name: &str) -> bool {
+        self.python_packages.contains(name)
+    }
+
+    /// Install pip via the official `get-pip.py` script — only possible on
+    /// a host with admin rights (the paper did this on a personal
+    /// computer, §4.1.4).
+    pub fn install_pip(&mut self, admin: bool) -> Result<()> {
+        if !admin {
+            return Err(Error::PermissionDenied(
+                "python get-pip.py requires admin rights".into(),
+            ));
+        }
+        self.binaries.insert("pip".into());
+        self.layers.push("RUN python3 get-pip.py".into());
+        Ok(())
+    }
+
+    /// `pip install <pkg>` — needs pip on the image.
+    pub fn pip_install(&mut self, pkg: &str) -> Result<()> {
+        if !self.has_binary("pip") {
+            return Err(Error::MissingInImage("pip".into()));
+        }
+        self.python_packages.insert(pkg.to_string());
+        self.layers.push(format!("RUN pip install {pkg}"));
+        Ok(())
+    }
+
+    /// `sudo apt-get install` — requires admin on the executing host.
+    pub fn apt_get_install(&mut self, pkg: &str, admin: bool) -> Result<()> {
+        if !admin {
+            return Err(Error::PermissionDenied(format!(
+                "sudo apt-get install {pkg}"
+            )));
+        }
+        self.binaries.insert(pkg.to_string());
+        self.layers.push(format!("RUN apt-get install -y {pkg}"));
+        Ok(())
+    }
+}
+
+/// Package-manager flavors relevant to §4.1.4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PackageManager {
+    Pip,
+    Apt,
+}
+
+/// A Singularity image (SIF): a frozen snapshot of a Docker image.
+/// Immutable at normal cluster privilege; a `sandbox` build is writable
+/// *where created* but still can't bootstrap missing tooling (§4.1.4).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SifImage {
+    pub name: String,
+    /// Snapshot of the source Docker image content.
+    pub binaries: BTreeSet<String>,
+    pub python_packages: BTreeSet<String>,
+    pub sandbox: bool,
+    /// Provenance: docker image name:tag it was built from.
+    pub built_from: String,
+}
+
+impl SifImage {
+    pub fn has_binary(&self, name: &str) -> bool {
+        self.binaries.contains(name)
+    }
+
+    pub fn has_python_package(&self, name: &str) -> bool {
+        self.python_packages.contains(name)
+    }
+
+    /// Any in-place modification of a non-sandbox SIF fails — the §4.1.3
+    /// problem ("once a Singularity container is on the Palmetto Cluster,
+    /// it is immutable, at least at our access level").
+    pub fn pip_install(&mut self, pkg: &str) -> Result<()> {
+        if !self.sandbox {
+            return Err(Error::ImmutableImage(self.name.clone()));
+        }
+        // sandbox mode: writable, but pip must exist on the image — the
+        // paper's sandbox attempt died exactly here (§4.1.4).
+        if !self.has_binary("pip") {
+            return Err(Error::MissingInImage("pip".into()));
+        }
+        self.python_packages.insert(pkg.to_string());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn official_image_lacks_pip() {
+        let img = DockerImage::official_webots();
+        assert!(img.has_binary("webots"));
+        assert!(img.has_binary("sumo"));
+        assert!(!img.has_binary("pip"));
+    }
+
+    #[test]
+    fn pip_install_without_pip_fails() {
+        let mut img = DockerImage::official_webots();
+        let err = img.pip_install("numpy").unwrap_err();
+        assert!(matches!(err, Error::MissingInImage(_)));
+    }
+
+    #[test]
+    fn install_pip_requires_admin() {
+        let mut img = DockerImage::official_webots();
+        assert!(matches!(
+            img.install_pip(false),
+            Err(Error::PermissionDenied(_))
+        ));
+        img.install_pip(true).unwrap();
+        img.pip_install("numpy").unwrap();
+        img.pip_install("pandas").unwrap();
+        assert!(img.has_python_package("pandas"));
+    }
+
+    #[test]
+    fn apt_needs_admin() {
+        let mut img = DockerImage::official_webots();
+        assert!(img.apt_get_install("python3-pip", false).is_err());
+        assert!(img.apt_get_install("python3-pip", true).is_ok());
+    }
+
+    #[test]
+    fn layers_record_provenance() {
+        let mut img = DockerImage::official_webots();
+        img.install_pip(true).unwrap();
+        img.pip_install("numpy").unwrap();
+        assert_eq!(img.layers.len(), 3);
+        assert!(img.layers[2].contains("numpy"));
+    }
+}

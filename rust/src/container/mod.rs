@@ -1,0 +1,18 @@
+//! The containerization substrate: Docker images, Singularity conversion,
+//! and container execution environments.
+//!
+//! Chapter 4 of the paper is largely a war story about this layer:
+//! converting the official Webots Docker image to Singularity (§4.1.2),
+//! the immutability of SIF images on the cluster (§4.1.3), pip missing
+//! from the official image and `sudo apt-get` being impossible without
+//! admin rights (§4.1.4).  Those failure modes are implemented as real
+//! error paths here and exercised by `rust/tests/challenges.rs` — each
+//! row of Table 4.1 is an executable test.
+
+mod build;
+mod exec;
+mod image;
+
+pub use build::{build_webots_hpc_image, modify_sif_on_cluster, singularity_build, BuildHost};
+pub use exec::{BindMount, ExecEnv, ExecOutcome};
+pub use image::{DockerImage, PackageManager, SifImage};

@@ -1,0 +1,15 @@
+//! The X11/Xvfb substrate: virtual framebuffer allocation and X11
+//! forwarding sessions.
+//!
+//! Headless Webots still needs an X display; the pipeline runs each
+//! instance under `xvfb-run`.  The paper found that running n > 1
+//! instances per node requires the `-a` flag ("instructs xvfb to try to
+//! get a free server number, starting at 99", §3.1.5) — without it every
+//! instance binds display :99 and the second one dies.  That collision
+//! and its fix are real code paths here.
+
+mod x11;
+mod xvfb;
+
+pub use x11::{SshSession, X11Forward};
+pub use xvfb::{DisplayHandle, DisplayRegistry, XvfbRun, DEFAULT_DISPLAY};

@@ -1,0 +1,100 @@
+//! SSH + X11 forwarding: the GUI-enabled path of §3.1.2.
+//!
+//! A user tunnels into the cluster with `ssh -X`, which allocates a
+//! *forwarded* display (conventionally :10 and up, distinct from the
+//! Xvfb range) and streams renderings back to the client.  This is a
+//! thin model — enough for the `gui_session` example and the mode
+//! selection logic in `webots::mode`.
+
+use crate::{Error, Result};
+
+use super::{DisplayHandle, DisplayRegistry};
+
+/// An SSH connection to a login/compute node.
+#[derive(Debug, Clone)]
+pub struct SshSession {
+    pub host: String,
+    pub user: String,
+    /// `-X` / `-Y` requested at connect time.
+    pub x11_forwarding: bool,
+}
+
+impl SshSession {
+    pub fn connect(user: &str, host: &str, x11_forwarding: bool) -> Self {
+        SshSession {
+            host: host.to_string(),
+            user: user.to_string(),
+            x11_forwarding,
+        }
+    }
+}
+
+/// A live forwarded X11 channel over an SSH session.
+#[derive(Debug)]
+pub struct X11Forward {
+    pub session_host: String,
+    pub display: DisplayHandle,
+    /// Frames streamed to the client so far (the model's observable).
+    pub frames_streamed: u64,
+}
+
+impl X11Forward {
+    /// sshd's X11DisplayOffset default: forwarded displays start at :10.
+    pub const FORWARD_BASE: u32 = 10;
+
+    /// Open the forwarded display. Fails when the session was opened
+    /// without `-X` — the first GUI mistake everyone makes (§4.1.5).
+    pub fn open(session: &SshSession, registry: &DisplayRegistry) -> Result<X11Forward> {
+        if !session.x11_forwarding {
+            return Err(Error::Config(
+                "ssh session opened without -X; cannot forward X11 (paper §3.1.2)".into(),
+            ));
+        }
+        let display = registry.bind_auto(Self::FORWARD_BASE)?;
+        Ok(X11Forward {
+            session_host: session.host.clone(),
+            display,
+            frames_streamed: 0,
+        })
+    }
+
+    /// Stream one rendered frame to the client.
+    pub fn stream_frame(&mut self) {
+        self.frames_streamed += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_requires_dash_x() {
+        let reg = DisplayRegistry::new();
+        let plain = SshSession::connect("mfranchi", "login.palmetto", false);
+        assert!(X11Forward::open(&plain, &reg).is_err());
+        let x = SshSession::connect("mfranchi", "login.palmetto", true);
+        let fwd = X11Forward::open(&x, &reg).unwrap();
+        assert_eq!(fwd.display.number, 10);
+    }
+
+    #[test]
+    fn multiple_forwards_get_distinct_displays() {
+        let reg = DisplayRegistry::new();
+        let s = SshSession::connect("a", "h", true);
+        let f1 = X11Forward::open(&s, &reg).unwrap();
+        let f2 = X11Forward::open(&s, &reg).unwrap();
+        assert_ne!(f1.display.number, f2.display.number);
+    }
+
+    #[test]
+    fn frames_accumulate() {
+        let reg = DisplayRegistry::new();
+        let s = SshSession::connect("a", "h", true);
+        let mut f = X11Forward::open(&s, &reg).unwrap();
+        for _ in 0..3 {
+            f.stream_frame();
+        }
+        assert_eq!(f.frames_streamed, 3);
+    }
+}

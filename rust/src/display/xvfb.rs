@@ -1,0 +1,175 @@
+//! Xvfb: X virtual framebuffers, display-number allocation, `xvfb-run -a`.
+
+use std::collections::BTreeSet;
+use std::sync::{Arc, Mutex};
+
+use crate::{Error, Result};
+
+/// `xvfb-run`'s default server number.
+pub const DEFAULT_DISPLAY: u32 = 99;
+
+/// Per-node registry of X display numbers in use.  Shared by every
+/// process on the node (the kernel's abstract-socket namespace, in real
+/// life), hence `Arc<Mutex<..>>`.
+#[derive(Debug, Clone, Default)]
+pub struct DisplayRegistry {
+    taken: Arc<Mutex<BTreeSet<u32>>>,
+}
+
+/// RAII handle to a bound display; frees the number on drop.
+#[derive(Debug)]
+pub struct DisplayHandle {
+    pub number: u32,
+    registry: DisplayRegistry,
+}
+
+impl Drop for DisplayHandle {
+    fn drop(&mut self) {
+        self.registry
+            .taken
+            .lock()
+            .expect("registry poisoned")
+            .remove(&self.number);
+    }
+}
+
+impl DisplayHandle {
+    /// `:99`-style display string for the `DISPLAY` env var.
+    pub fn display_env(&self) -> String {
+        format!(":{}", self.number)
+    }
+}
+
+impl DisplayRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bind a specific display number. Fails when taken — the §3.1.5
+    /// failure mode of running `xvfb-run` *without* `-a` twice.
+    pub fn bind(&self, number: u32) -> Result<DisplayHandle> {
+        let mut taken = self.taken.lock().expect("registry poisoned");
+        if !taken.insert(number) {
+            return Err(Error::DisplayInUse(number));
+        }
+        Ok(DisplayHandle {
+            number,
+            registry: self.clone(),
+        })
+    }
+
+    /// Probe upward from `start` for a free number (`-a` behaviour).
+    pub fn bind_auto(&self, start: u32) -> Result<DisplayHandle> {
+        let mut taken = self.taken.lock().expect("registry poisoned");
+        let mut n = start;
+        while taken.contains(&n) {
+            n += 1;
+        }
+        taken.insert(n);
+        Ok(DisplayHandle {
+            number: n,
+            registry: self.clone(),
+        })
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.taken.lock().expect("registry poisoned").len()
+    }
+}
+
+/// An `xvfb-run [...] <cmd>` invocation.
+#[derive(Debug, Clone)]
+pub struct XvfbRun {
+    /// The `-a` flag: probe for a free server number starting at 99.
+    pub auto_probe: bool,
+    /// Explicit `-n N` server number (defaults to 99).
+    pub server_number: u32,
+}
+
+impl Default for XvfbRun {
+    fn default() -> Self {
+        XvfbRun {
+            auto_probe: false,
+            server_number: DEFAULT_DISPLAY,
+        }
+    }
+}
+
+impl XvfbRun {
+    /// The pipeline's production invocation: `xvfb-run -a` (§3.1.5).
+    pub fn auto() -> Self {
+        XvfbRun {
+            auto_probe: true,
+            server_number: DEFAULT_DISPLAY,
+        }
+    }
+
+    /// Acquire a framebuffer for the wrapped command.
+    pub fn acquire(&self, registry: &DisplayRegistry) -> Result<DisplayHandle> {
+        if self.auto_probe {
+            registry.bind_auto(self.server_number)
+        } else {
+            registry.bind(self.server_number)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn without_dash_a_second_instance_collides() {
+        // Table 4.1 row: "Running Webots in headless mode" + §3.1.5
+        let reg = DisplayRegistry::new();
+        let xvfb = XvfbRun::default();
+        let _first = xvfb.acquire(&reg).unwrap();
+        let err = xvfb.acquire(&reg).unwrap_err();
+        assert!(matches!(err, Error::DisplayInUse(99)));
+    }
+
+    #[test]
+    fn with_dash_a_eight_instances_coexist() {
+        // 8 parallel instances per node (the 6x8 setup)
+        let reg = DisplayRegistry::new();
+        let xvfb = XvfbRun::auto();
+        let handles: Vec<_> = (0..8).map(|_| xvfb.acquire(&reg).unwrap()).collect();
+        let numbers: BTreeSet<u32> = handles.iter().map(|h| h.number).collect();
+        assert_eq!(numbers.len(), 8, "all display numbers distinct");
+        assert_eq!(*numbers.iter().next().unwrap(), 99);
+        assert_eq!(*numbers.iter().last().unwrap(), 106);
+    }
+
+    #[test]
+    fn drop_frees_display() {
+        let reg = DisplayRegistry::new();
+        {
+            let _h = XvfbRun::default().acquire(&reg).unwrap();
+            assert_eq!(reg.in_use(), 1);
+        }
+        assert_eq!(reg.in_use(), 0);
+        // :99 is reusable after release
+        let h = XvfbRun::default().acquire(&reg).unwrap();
+        assert_eq!(h.number, 99);
+    }
+
+    #[test]
+    fn auto_probe_fills_gaps() {
+        let reg = DisplayRegistry::new();
+        let a = reg.bind_auto(99).unwrap();
+        let b = reg.bind_auto(99).unwrap();
+        assert_eq!((a.number, b.number), (99, 100));
+        drop(a);
+        let c = reg.bind_auto(99).unwrap();
+        assert_eq!(c.number, 99, "freed display is reused");
+        drop(b);
+        drop(c);
+    }
+
+    #[test]
+    fn display_env_format() {
+        let reg = DisplayRegistry::new();
+        let h = reg.bind(42).unwrap();
+        assert_eq!(h.display_env(), ":42");
+    }
+}

@@ -1,0 +1,11 @@
+//! The evaluation harness: regenerates every table and figure of the
+//! paper's Chapter 5 (plus Table 4.1's challenge matrix) from the
+//! simulated pipeline.  Shared by `cargo bench` and the
+//! `webots-hpc table ...` CLI.
+
+mod tables;
+
+pub use tables::{
+    distribution_5_2, fig_5_1, fig_5_2, scalability_sweep, table_4_1, table_5_1, table_5_2, table_5_3,
+    DistributionReport, Table51, Table52, Table53, PAPER_TABLE_5_1, PAPER_TABLE_5_3,
+};

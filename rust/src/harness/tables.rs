@@ -1,0 +1,405 @@
+//! Table/figure generators.  Paper targets are embedded next to each
+//! generator so the renders show paper-vs-measured side by side.
+
+use crate::cluster::NodeSpec;
+use crate::metrics::UsageSummary;
+use crate::pipeline::{
+    pc_campaign, run_cluster_campaign, CampaignSpec, ThroughputSample, PAPER_PC_OVERHEAD_S,
+};
+use crate::simclock::SimDuration;
+use crate::Result;
+
+/// Paper Table 5.1 targets (timestamp minutes, PC runs, cluster runs).
+pub const PAPER_TABLE_5_1: [(u64, u64, u64); 7] = [
+    (30, 4, 96),
+    (60, 7, 192),
+    (90, 11, 288),
+    (120, 15, 384),
+    (240, 26, 768),
+    (360, 40, 1152),
+    (720, 74, 2304),
+];
+
+/// Table 5.1 / Fig 5.1: sample simulation throughput, PC vs cluster.
+#[derive(Debug, Clone)]
+pub struct Table51 {
+    pub rows: Vec<(u64, u64, u64)>, // (minutes, pc, cluster)
+    pub speedup: f64,
+}
+
+pub fn table_5_1() -> Result<Table51> {
+    let spec = CampaignSpec::paper_cluster();
+    let cluster = run_cluster_campaign(&spec)?;
+    let pc = pc_campaign(
+        &spec.cost,
+        PAPER_PC_OVERHEAD_S,
+        spec.duration,
+        &spec.sample_minutes,
+    );
+    let rows = cluster
+        .samples
+        .iter()
+        .zip(&pc.samples)
+        .map(|(c, p)| (c.minutes, p.completed, c.completed))
+        .collect::<Vec<_>>();
+    let last = rows.last().expect("samples non-empty");
+    Ok(Table51 {
+        speedup: last.2 as f64 / last.1.max(1) as f64,
+        rows,
+    })
+}
+
+impl Table51 {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str("Table 5.1 — Sample Simulation Throughput: Personal Computer vs. Palmetto Cluster\n");
+        s.push_str("  (paper values in parentheses)\n");
+        s.push_str(&format!(
+            "{:>10} | {:>20} | {:>20}\n",
+            "Timestamp", "Personal Computer", "Palmetto Cluster"
+        ));
+        s.push_str(&"-".repeat(58));
+        s.push('\n');
+        for (i, &(m, pc, cl)) in self.rows.iter().enumerate() {
+            let (pm, ppc, pcl) = PAPER_TABLE_5_1[i];
+            debug_assert_eq!(pm, m);
+            s.push_str(&format!(
+                "{m:>10} | {:>20} | {:>20}\n",
+                format!("{pc} ({ppc})"),
+                format!("{cl} ({pcl})")
+            ));
+        }
+        s.push_str(&format!(
+            "speedup at 720 min: {:.1}x (paper: ~31x)\n",
+            self.speedup
+        ));
+        s
+    }
+}
+
+/// Fig 5.1 is the bar-chart form of Table 5.1 — rendered as ASCII bars.
+pub fn fig_5_1() -> Result<String> {
+    let t = table_5_1()?;
+    let max = t.rows.iter().map(|r| r.2).max().unwrap_or(1).max(1);
+    let mut s = String::from("Figure 5.1 — Sample Simulation Throughput (runs completed)\n");
+    for &(m, pc, cl) in &t.rows {
+        let bar = |v: u64| "#".repeat(((v * 40) / max).max(if v > 0 { 1 } else { 0 }) as usize);
+        s.push_str(&format!("{m:>4} min  PC      |{:<40}| {pc}\n", bar(pc)));
+        s.push_str(&format!("         cluster |{:<40}| {cl}\n", bar(cl)));
+    }
+    Ok(s)
+}
+
+/// Table 5.2: hardware specs of the 6x1 vs 6x8 experimental setups.
+#[derive(Debug, Clone)]
+pub struct Table52 {
+    pub whole_node: NodeSpec,
+    pub slot_cores: u32,
+    pub slot_ram_gb: f64,
+    pub slot_scratch_gb: f64,
+}
+
+pub fn table_5_2() -> Table52 {
+    let n = NodeSpec::dice_r740();
+    Table52 {
+        slot_cores: n.cores / 8,
+        slot_ram_gb: n.ram_gb / 8.0,
+        slot_scratch_gb: n.local_scratch_gb / 8.0,
+        whole_node: n,
+    }
+}
+
+impl Table52 {
+    pub fn render(&self) -> String {
+        let mut s = String::from("Table 5.2 — Hardware Specifications for Each Experimental Setup\n");
+        s.push_str(&format!("{:>15} | {:>10} | {:>10}\n", "Setup", "6x1", "6x8"));
+        s.push_str(&"-".repeat(42));
+        s.push('\n');
+        s.push_str(&format!(
+            "{:>15} | {:>10} | {:>10}\n",
+            "Cores", self.whole_node.cores, self.slot_cores
+        ));
+        s.push_str(&format!(
+            "{:>15} | {:>10} | {:>10}\n",
+            "RAM [GB]", self.whole_node.ram_gb as u64, self.slot_ram_gb.round() as u64
+        ));
+        s.push_str(&format!(
+            "{:>15} | {:>10} | {:>10}\n",
+            "Scratch [GB]",
+            self.whole_node.local_scratch_gb.round() as u64,
+            self.slot_scratch_gb.round() as u64
+        ));
+        s.push_str(&format!(
+            "{:>15} | {:>10} | {:>10}\n",
+            "Interconnect",
+            self.whole_node.interconnect.as_str(),
+            self.whole_node.interconnect.as_str()
+        ));
+        s
+    }
+}
+
+/// Table 5.3: per-run resource consumption, 6x1 vs 6x8.
+#[derive(Debug, Clone)]
+pub struct Table53 {
+    pub serial_6x1: UsageSummary,
+    pub parallel_6x8: UsageSummary,
+}
+
+/// Paper Table 5.3 targets: (walltime, cpu_time, ram, cpu%).
+pub const PAPER_TABLE_5_3: [(f64, f64, f64, f64); 2] = [
+    (163.0, 720.0, 2.2, 215.0), // 6x1
+    (245.0, 690.0, 2.3, 177.0), // 6x8
+];
+
+pub fn table_5_3() -> Result<Table53> {
+    // shorter campaign — usage statistics converge fast
+    let mut parallel = CampaignSpec::paper_cluster();
+    parallel.duration = SimDuration::from_hours(2);
+    let mut serial = CampaignSpec::paper_serial_6x1();
+    serial.duration = SimDuration::from_hours(2);
+    Ok(Table53 {
+        serial_6x1: run_cluster_campaign(&serial)?.usage,
+        parallel_6x8: run_cluster_campaign(&parallel)?.usage,
+    })
+}
+
+impl Table53 {
+    pub fn render(&self) -> String {
+        let mut s =
+            String::from("Table 5.3 — Simulation Resource Consumption Across Two Experimental Setups\n");
+        s.push_str("  (paper values in parentheses; CPU% here = cpu_time/walltime — see EXPERIMENTS.md note)\n");
+        s.push_str(&format!(
+            "{:>16} | {:>20} | {:>20}\n",
+            "Attribute", "6x1 Setup", "6x8 Setup"
+        ));
+        s.push_str(&"-".repeat(62));
+        s.push('\n');
+        let rows = [
+            (
+                "Walltime [s]",
+                self.serial_6x1.mean_walltime_s,
+                PAPER_TABLE_5_3[0].0,
+                self.parallel_6x8.mean_walltime_s,
+                PAPER_TABLE_5_3[1].0,
+            ),
+            (
+                "CPU Time [s]",
+                self.serial_6x1.mean_cpu_time_s,
+                PAPER_TABLE_5_3[0].1,
+                self.parallel_6x8.mean_cpu_time_s,
+                PAPER_TABLE_5_3[1].1,
+            ),
+            (
+                "RAM Used [GB]",
+                self.serial_6x1.mean_ram_gb,
+                PAPER_TABLE_5_3[0].2,
+                self.parallel_6x8.mean_ram_gb,
+                PAPER_TABLE_5_3[1].2,
+            ),
+            (
+                "CPU %",
+                self.serial_6x1.mean_cpu_percent,
+                PAPER_TABLE_5_3[0].3,
+                self.parallel_6x8.mean_cpu_percent,
+                PAPER_TABLE_5_3[1].3,
+            ),
+        ];
+        for (name, a, pa, b, pb) in rows {
+            s.push_str(&format!(
+                "{name:>16} | {:>20} | {:>20}\n",
+                format!("{a:.1} ({pa})"),
+                format!("{b:.1} ({pb})")
+            ));
+        }
+        let shorter = 1.0 - self.serial_6x1.mean_walltime_s / self.parallel_6x8.mean_walltime_s;
+        s.push_str(&format!(
+            "6x1 walltime shorter by {:.1}% (paper: 33.5%)\n",
+            shorter * 100.0
+        ));
+        s
+    }
+}
+
+/// Fig 5.2: parallelization performance across the two setups
+/// (throughput over equal campaign durations).
+pub fn fig_5_2() -> Result<String> {
+    let mut parallel = CampaignSpec::paper_cluster();
+    parallel.duration = SimDuration::from_hours(2);
+    let mut serial = CampaignSpec::paper_serial_6x1();
+    serial.duration = SimDuration::from_hours(2);
+    let p = run_cluster_campaign(&parallel)?;
+    let s = run_cluster_campaign(&serial)?;
+    let pt = p.total_completed();
+    let st = s.total_completed();
+    let max = pt.max(st).max(1);
+    let bar = |v: u64| "#".repeat(((v * 40) / max).max(1) as usize);
+    Ok(format!(
+        "Figure 5.2 — Parallelization Performance (runs completed, 2h virtual campaign)\n\
+         6x8 parallel |{:<40}| {pt}\n\
+         6x1 serial   |{:<40}| {st}\n\
+         ratio: {:.1}x (paper: 'sizably higher throughput' for 6x8, ~8x by slot count)\n",
+        bar(pt),
+        bar(st),
+        pt as f64 / st.max(1) as f64
+    ))
+}
+
+/// §5.2: distribution quality — the 48·t law and per-node evenness.
+#[derive(Debug, Clone)]
+pub struct DistributionReport {
+    pub samples: Vec<ThroughputSample>,
+    pub follows_48t: bool,
+    pub runs_per_node: Vec<u64>,
+    pub peak_occupancy: Vec<usize>,
+    pub perfectly_even: bool,
+}
+
+pub fn distribution_5_2() -> Result<DistributionReport> {
+    let spec = CampaignSpec::paper_cluster();
+    let r = run_cluster_campaign(&spec)?;
+    let follows_48t = r
+        .samples
+        .iter()
+        .all(|s| s.completed == 48 * (s.minutes / 15));
+    Ok(DistributionReport {
+        samples: r.samples.clone(),
+        follows_48t,
+        perfectly_even: r.distribution_even(0.0),
+        runs_per_node: r.runs_per_node,
+        peak_occupancy: r.peak_occupancy,
+    })
+}
+
+impl DistributionReport {
+    pub fn render(&self) -> String {
+        let mut s = String::from("§5.2 — Instance Distribution Quality\n");
+        s.push_str(&format!(
+            "48·t law holds at every sampled timestamp: {}\n",
+            self.follows_48t
+        ));
+        s.push_str(&format!(
+            "completed runs per node: {:?} (perfectly even: {})\n",
+            self.runs_per_node, self.perfectly_even
+        ));
+        s.push_str(&format!(
+            "peak live instances per node: {:?} (paper: 8 on each of 6 nodes, 100% of the time)\n",
+            self.peak_occupancy
+        ));
+        s
+    }
+}
+
+/// §6.2.2 future work: scalability sweep — completed runs vs node count
+/// over a fixed-duration campaign (expect linearity: the paper predicts
+/// "these results should scale with larger amounts of allocated compute
+/// nodes").
+pub fn scalability_sweep(node_counts: &[usize], hours: u64) -> Result<Vec<(usize, u64)>> {
+    let mut rows = Vec::new();
+    for &nodes in node_counts {
+        let mut spec = CampaignSpec::paper_cluster();
+        spec.nodes = nodes;
+        spec.duration = SimDuration::from_hours(hours);
+        rows.push((nodes, run_cluster_campaign(&spec)?.total_completed()));
+    }
+    Ok(rows)
+}
+
+/// Table 4.1: the development-challenge matrix, each row mapped to the
+/// executable test that reproduces it.
+pub fn table_4_1() -> String {
+    let rows = [
+        ("Identifying the best method to run Webots on the cluster", "container::build tests"),
+        ("Converting the official Webots docker image to Singularity", "container::build::build_on_pc_succeeds_with_full_stack"),
+        ("Modifying the Singularity container", "container::build::converted_sif_is_immutable_on_cluster"),
+        ("Installing additional libraries on the Singularity image", "container::build::build_on_cluster_fails_at_pip_bootstrap"),
+        ("Enabling GUI capabilities on the pipeline", "display::x11::forward_requires_dash_x"),
+        ("Running Webots in headless mode", "display::xvfb::without_dash_a_second_instance_collides"),
+        ("Enabling audio output on the cluster", "UNRESOLVED in the paper; out of scope here too"),
+        ("Resolving the duplicate-port issue", "traci::server::duplicate_port_is_a_real_error"),
+        ("Distributing runs across available nodes", "pbs::scheduler::forty_eight_instances_pack_eight_per_node"),
+    ];
+    let mut s = String::from("Table 4.1 — Pipeline Development Challenges (→ reproducing test)\n");
+    for (challenge, test) in rows {
+        s.push_str(&format!("  • {challenge}\n      → {test}\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_5_1_matches_paper_shape() {
+        let t = table_5_1().unwrap();
+        assert_eq!(t.rows.len(), 7);
+        // cluster column exact (48·t), PC column within 15% of paper
+        for (i, &(m, pc, cl)) in t.rows.iter().enumerate() {
+            let (pm, ppc, pcl) = PAPER_TABLE_5_1[i];
+            assert_eq!(m, pm);
+            assert_eq!(cl, pcl, "cluster at {m} min");
+            // The paper's PC pace drifts (491 s/run at t=90 vs 584 s/run
+            // at t=720); our constant-pace model is calibrated on the
+            // total. Accept ±3 runs absolute or 15% relative per row —
+            // the t=720 total is asserted exactly below via the speedup.
+            let abs = (pc as f64 - ppc as f64).abs();
+            assert!(
+                abs <= 3.0 || abs / (ppc as f64) < 0.15,
+                "pc at {m} min: {pc} vs paper {ppc}"
+            );
+        }
+        assert!((t.speedup - 31.0).abs() < 3.0, "speedup {}", t.speedup);
+    }
+
+    #[test]
+    fn table_5_2_matches_paper() {
+        let t = table_5_2();
+        assert_eq!(t.whole_node.cores, 40);
+        assert_eq!(t.slot_cores, 5);
+        assert_eq!(t.slot_ram_gb, 93.0);
+        assert!(t.render().contains("6x8"));
+    }
+
+    #[test]
+    fn table_5_3_shape_holds() {
+        let t = table_5_3().unwrap();
+        // walltime: 6x1 ~33% shorter
+        let shorter = 1.0 - t.serial_6x1.mean_walltime_s / t.parallel_6x8.mean_walltime_s;
+        assert!((shorter - 0.335).abs() < 0.07, "shorter = {shorter}");
+        // cpu time within ~10%, 6x1 higher
+        assert!(t.serial_6x1.mean_cpu_time_s > t.parallel_6x8.mean_cpu_time_s);
+        let excess = t.serial_6x1.mean_cpu_time_s / t.parallel_6x8.mean_cpu_time_s - 1.0;
+        assert!(excess < 0.10, "excess = {excess}");
+        // ram flat
+        assert!((t.serial_6x1.mean_ram_gb - t.parallel_6x8.mean_ram_gb).abs() < 0.3);
+        // cpu% higher with more cores
+        assert!(t.serial_6x1.mean_cpu_percent > t.parallel_6x8.mean_cpu_percent);
+    }
+
+    #[test]
+    fn distribution_report_is_perfect() {
+        let d = distribution_5_2().unwrap();
+        assert!(d.follows_48t);
+        assert!(d.perfectly_even);
+        assert_eq!(d.peak_occupancy, vec![8; 6]);
+    }
+
+    #[test]
+    fn scalability_is_linear() {
+        let rows = scalability_sweep(&[1, 2, 4, 8, 16], 1).unwrap();
+        let per_node = rows[0].1;
+        for &(n, c) in &rows {
+            assert_eq!(c, per_node * n as u64, "at {n} nodes");
+        }
+    }
+
+    #[test]
+    fn renders_do_not_panic() {
+        assert!(table_5_1().unwrap().render().contains("31"));
+        assert!(fig_5_1().unwrap().contains("cluster"));
+        assert!(table_5_3().unwrap().render().contains("CPU"));
+        assert!(fig_5_2().unwrap().contains("6x8"));
+        assert!(table_4_1().contains("duplicate-port"));
+    }
+}

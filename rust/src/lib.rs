@@ -1,0 +1,122 @@
+//! # webots-hpc
+//!
+//! A from-scratch reproduction of **Webots.HPC** (Franchi, Clemson
+//! University, 2021): a parallel robotics-simulation pipeline that runs
+//! thousands of Webots(+SUMO) autonomous-vehicle simulation instances as
+//! PBS job arrays across HPC compute nodes.
+//!
+//! The paper's artifact is a deployment recipe on hardware we do not have
+//! (the Palmetto cluster, a Webots install); this crate therefore builds
+//! **every substrate the pipeline touches** as a faithful simulation (see
+//! `DESIGN.md` §2 for the substitution table):
+//!
+//! * [`cluster`] — the compute cluster (DICE-lab node inventory, resource
+//!   accounting),
+//! * [`pbs`] — the Portable Batch System: job scripts, job arrays,
+//!   first-fit scheduling, walltime enforcement, qstat-style accounting,
+//! * [`container`] — Docker→Singularity image conversion with the paper's
+//!   §4.1 failure modes (immutable SIF, missing pip, no sudo),
+//! * [`display`] — X11/Xvfb virtual framebuffer allocation (`xvfb-run -a`),
+//! * [`sumo`] — a SUMO-like traffic microsimulator (networks, seeded
+//!   `duarouter` demand, IDM/MOBIL baseline stepper),
+//! * [`traci`] — the TraCI control protocol over real TCP sockets (so the
+//!   paper's duplicate-port failure reproduces mechanically),
+//! * [`webots`] — a Webots-like simulator: `.wbt` world parsing, robots,
+//!   controllers, sensors, physics stepping modes,
+//! * [`runtime`] — the PJRT bridge that loads the AOT-compiled JAX/Pallas
+//!   physics (`artifacts/*.hlo.txt`) and executes it on the hot path,
+//! * [`pipeline`] — the paper's contribution: the campaign launcher that
+//!   wires all of the above together (port allocation, world-copy
+//!   propagation, job generation, output collection),
+//! * [`output`] / [`metrics`] — big-data aggregation and per-run resource
+//!   accounting,
+//! * [`harness`] — regenerates every table and figure of the paper's
+//!   ch. 5 evaluation.
+//!
+//! Python/JAX runs only at build time (`make artifacts`); the request path
+//! is pure rust + PJRT.
+
+pub mod cloud;
+pub mod cluster;
+pub mod container;
+pub mod display;
+pub mod harness;
+pub mod metrics;
+pub mod output;
+pub mod pbs;
+pub mod pipeline;
+pub mod runtime;
+pub mod simclock;
+pub mod util;
+pub mod sumo;
+pub mod traci;
+pub mod webots;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error type. Each subsystem contributes a variant; the
+/// variants mirror the *paper's* failure taxonomy (Table 4.1) where one
+/// exists — e.g. [`Error::PortInUse`] is §4.2.1, [`Error::DisplayInUse`]
+/// is §3.1.5, [`Error::ImmutableImage`] is §4.1.3.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// SUMO TraCI server could not bind its TCP port (§4.2.1: "SUMO is
+    /// unable to support more than one TraCI server on the same port").
+    #[error("TraCI port {0} already in use (duplicate-port issue, paper §4.2.1)")]
+    PortInUse(u16),
+
+    /// X display number already taken (fixed by `xvfb-run -a`, §3.1.5).
+    #[error("X display :{0} already in use (run xvfb with auto-probe, paper §3.1.5)")]
+    DisplayInUse(u32),
+
+    /// Singularity images are read-only once built (§4.1.3).
+    #[error("singularity image '{0}' is immutable on the cluster (paper §4.1.3)")]
+    ImmutableImage(String),
+
+    /// Unprivileged cluster users cannot install system packages (§4.1.4).
+    #[error("permission denied: {0} (paper §4.1.4: no sudo on the cluster)")]
+    PermissionDenied(String),
+
+    /// Requested executable/package missing from the image (§4.1.4: pip
+    /// absent from the official Webots docker image).
+    #[error("'{0}' not found in container image (paper §4.1.4)")]
+    MissingInImage(String),
+
+    /// Scheduler could not satisfy a resource request.
+    #[error("unschedulable: {0}")]
+    Unschedulable(String),
+
+    /// Job exceeded its walltime and was killed by PBS.
+    #[error("job {0} killed: walltime exceeded")]
+    WalltimeExceeded(String),
+
+    #[error("no such job: {0}")]
+    NoSuchJob(String),
+
+    #[error("world file error: {0}")]
+    World(String),
+
+    #[error("traci protocol error: {0}")]
+    Protocol(String),
+
+    #[error("runtime (PJRT) error: {0}")]
+    Runtime(String),
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+}
+
+impl Error {
+    /// Convenience constructor used by the xla-crate boundary.
+    pub fn runtime(e: impl std::fmt::Display) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}

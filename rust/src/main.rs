@@ -1,0 +1,372 @@
+//! `webots-hpc` — the pipeline CLI (the leader entrypoint).
+//!
+//! ```text
+//! webots-hpc info                      # artifacts + PJRT platform
+//! webots-hpc table 5.1|5.2|5.3|4.1     # regenerate a paper table
+//! webots-hpc fig 5.1|5.2               # regenerate a paper figure
+//! webots-hpc dist                      # §5.2 distribution report
+//! webots-hpc campaign [--nodes 6] [--slots 8] [--hours 12] [--policy first-fit]
+//! webots-hpc submit <script.pbs> [--nodes 6]
+//! webots-hpc run-local [--instances 8] [--engine hlo|native] [--horizon 30]
+//! ```
+//!
+//! Argument parsing is hand-rolled (the vendored offline crate set has
+//! no clap); see [`Args`].
+
+use anyhow::{anyhow, bail, Result};
+
+use webots_hpc::cluster::ResourceDemand;
+use webots_hpc::harness;
+use webots_hpc::metrics::{CostModel, SimWorkload};
+use webots_hpc::output::CampaignDataset;
+use webots_hpc::pbs::{script::PbsScript, JobId, PackingPolicy, Scheduler, SchedulerConfig};
+use webots_hpc::pipeline::{
+    propagate_copies, run_cluster_campaign, CampaignSpec, InstanceConfig, PhysicsEngine,
+    PortAllocator,
+};
+use webots_hpc::runtime::{Engine, EngineService};
+use webots_hpc::simclock::SimDuration;
+use webots_hpc::sumo::{FlowFile, MergeScenario};
+use webots_hpc::webots::nodes::sample_merge_world;
+
+const USAGE: &str = "usage: webots-hpc <info|table|fig|dist|campaign|submit|run-local> [args]
+  info                         artifacts + PJRT platform
+  table <5.1|5.2|5.3|4.1>      regenerate a paper table
+  fig <5.1|5.2>                regenerate a paper figure
+  dist                         §5.2 distribution report
+  campaign [--nodes N] [--slots S] [--hours H] [--policy first-fit|round-robin]
+  submit <script.pbs> [--nodes N]
+  run-local [--instances N] [--engine hlo|native] [--horizon S]
+            [--capacity C] [--seed K]
+  scale [--max N] [--hours H]        §6.2.2: scalability sweep
+  cloud [--runs N]                   §6.2.3: elastic (autoscaled) campaign
+  config-init [path]                 §6.2.1: write an example campaign config";
+
+/// Tiny flag parser: positional args + `--key value` pairs.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let v = argv
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+                flags.insert(key.to_string(), v.clone());
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("bad value for --{key}: {e}")),
+        }
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let rest = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "info" => info(),
+        "table" => table(rest.positional.first().map(String::as_str).unwrap_or("")),
+        "fig" => fig(rest.positional.first().map(String::as_str).unwrap_or("")),
+        "dist" => {
+            println!("{}", harness::distribution_5_2()?.render());
+            Ok(())
+        }
+        "campaign" => campaign(&rest),
+        "scale" => scale(&rest),
+        "cloud" => cloud(&rest),
+        "config-init" => config_init(&rest),
+        "submit" => submit(&rest),
+        "run-local" => run_local(&rest),
+        "--help" | "-h" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn info() -> Result<()> {
+    match Engine::auto() {
+        Ok(e) => {
+            println!("PJRT platform : {}", e.platform());
+            let m = e.manifest();
+            println!("artifact fmt  : {}", m.format);
+            println!("buckets       : {:?}", m.buckets);
+            println!("dt            : {} s", m.dt);
+            println!(
+                "merge zone    : [{}, {}] m, road end {} m, {} main lanes",
+                m.merge_start, m.merge_end, m.road_end, m.num_main_lanes
+            );
+            println!("entries       : {}", m.entries.len());
+        }
+        Err(e) => println!("runtime unavailable: {e}\nrun `make artifacts` first"),
+    }
+    Ok(())
+}
+
+fn table(id: &str) -> Result<()> {
+    match id {
+        "5.1" => println!("{}", harness::table_5_1()?.render()),
+        "5.2" => println!("{}", harness::table_5_2().render()),
+        "5.3" => println!("{}", harness::table_5_3()?.render()),
+        "4.1" => println!("{}", harness::table_4_1()),
+        other => bail!("unknown table '{other}' (have 5.1, 5.2, 5.3, 4.1)"),
+    }
+    Ok(())
+}
+
+fn fig(id: &str) -> Result<()> {
+    match id {
+        "5.1" => println!("{}", harness::fig_5_1()?),
+        "5.2" => println!("{}", harness::fig_5_2()?),
+        other => bail!("unknown figure '{other}' (have 5.1, 5.2)"),
+    }
+    Ok(())
+}
+
+fn scale(args: &Args) -> Result<()> {
+    let max: usize = args.get("max", 32)?;
+    let hours: u64 = args.get("hours", 1)?;
+    let mut counts = vec![1usize];
+    while *counts.last().expect("non-empty") * 2 <= max {
+        counts.push(counts.last().expect("non-empty") * 2);
+    }
+    println!("scalability sweep ({hours}h virtual campaign per point):");
+    let rows = webots_hpc::harness::scalability_sweep(&counts, hours)?;
+    let max_c = rows.last().map(|r| r.1).unwrap_or(1).max(1);
+    for (n, c) in rows {
+        let bar = "#".repeat(((c * 40) / max_c).max(1) as usize);
+        println!("{n:>4} nodes |{bar:<40}| {c} runs");
+    }
+    println!("(paper §5.1: \"these results should scale with larger amounts of allocated compute nodes\")");
+    Ok(())
+}
+
+fn cloud(args: &Args) -> Result<()> {
+    let runs: u64 = args.get("runs", 2304)?;
+    let mut spec = webots_hpc::cloud::ElasticSpec::paper_equivalent();
+    spec.total_runs = runs;
+    let r = webots_hpc::cloud::run_elastic_campaign(&spec);
+    println!("elastic cloud campaign (paper §6.2.3 future work):");
+    println!("  completed   : {} runs", r.completed);
+    println!("  makespan    : {} (static PBS epoch-locked: 12h for 2304)", r.makespan);
+    println!("  peak nodes  : {}", r.peak_nodes);
+    println!("  node-hours  : {:.1} (static: 6 nodes x 12 h = 72)", r.node_hours);
+    println!("  est. cost   : ${:.2} at ${}/node-hour", r.cost_usd, spec.provider.node_hour_usd);
+    println!("  utilization : {:.0}% (static epoch-locked: ~27%)", 100.0 * r.utilization);
+    Ok(())
+}
+
+fn config_init(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("campaign.conf");
+    std::fs::write(path, webots_hpc::pipeline::CampaignConfig::example())?;
+    println!("wrote {path}; run: webots-hpc campaign --config {path}");
+    Ok(())
+}
+
+fn campaign(args: &Args) -> Result<()> {
+    if let Some(cfg_path) = args.flags.get("config") {
+        let cfg = webots_hpc::pipeline::CampaignConfig::parse(&std::fs::read_to_string(cfg_path)?)?;
+        println!("campaign config '{}':\n{}", cfg.name, cfg.to_pbs_script()?.render());
+        let r = run_cluster_campaign(&cfg.to_spec())?;
+        println!(
+            "completed {} / {} runs ({:.1}%), per-node {:?}",
+            r.stats.completed,
+            r.stats.submitted,
+            100.0 * r.stats.completion_rate(),
+            r.runs_per_node
+        );
+        return Ok(());
+    }
+    let nodes: usize = args.get("nodes", 6)?;
+    let slots: u32 = args.get("slots", 8)?;
+    let hours: u64 = args.get("hours", 12)?;
+    let policy = match args.get_str("policy", "first-fit").as_str() {
+        "first-fit" => PackingPolicy::FirstFit,
+        "round-robin" => PackingPolicy::RoundRobin,
+        other => bail!("unknown policy '{other}'"),
+    };
+    let spec = CampaignSpec {
+        nodes,
+        slots_per_node: slots,
+        chunk: if slots == 1 {
+            ResourceDemand::whole_node()
+        } else {
+            ResourceDemand::paper_slot()
+        },
+        duration: SimDuration::from_hours(hours),
+        policy,
+        ..CampaignSpec::paper_cluster()
+    };
+    let r = run_cluster_campaign(&spec)?;
+    println!("campaign: {nodes} nodes x {slots} slots, {hours}h virtual");
+    println!(
+        "completed {} / {} runs ({:.1}% completion)",
+        r.stats.completed,
+        r.stats.submitted,
+        100.0 * r.stats.completion_rate()
+    );
+    println!("runs per node: {:?}", r.runs_per_node);
+    println!("peak occupancy: {:?}", r.peak_occupancy);
+    println!(
+        "mean per-run: wall {:.0}s cpu {:.0}s ram {:.1}GB cpu% {:.0}",
+        r.usage.mean_walltime_s,
+        r.usage.mean_cpu_time_s,
+        r.usage.mean_ram_gb,
+        r.usage.mean_cpu_percent
+    );
+    for s in &r.samples {
+        println!("  t={:>4} min  completed={}", s.minutes, s.completed);
+    }
+    Ok(())
+}
+
+fn submit(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("submit needs a script path"))?;
+    let nodes: usize = args.get("nodes", 6)?;
+    let text = std::fs::read_to_string(path)?;
+    let script = PbsScript::parse(&text)?;
+    println!(
+        "parsed '{}': queue={} chunk={}c/{}gb walltime={} array={:?}",
+        script.name,
+        script.queue,
+        script.request.chunk.ncpus,
+        script.request.chunk.mem_gb,
+        script.request.walltime,
+        script.array.map(|a| a.to_string())
+    );
+    let cluster = webots_hpc::cluster::Cluster::uniform(
+        "palmetto",
+        nodes,
+        webots_hpc::cluster::NodeSpec::dice_r740(),
+    );
+    let queue =
+        webots_hpc::cluster::ClusterQueue::new(webots_hpc::cluster::QueueSpec::dicelab(nodes));
+    let mut sched = Scheduler::new(cluster, queue, SchedulerConfig::default());
+    let job = script.to_job(JobId(0));
+    let workload = SimWorkload::new(CostModel::paper_merge_sim(), 42);
+    let id = sched.submit(job, Box::new(workload))?;
+    println!("submitted as {id}; occupancy {:?}", sched.occupancy());
+    sched.run_to_completion();
+    println!("{}", sched.qstat().render());
+    println!(
+        "completion rate: {:.1}%",
+        100.0 * sched.stats().completion_rate()
+    );
+    Ok(())
+}
+
+fn run_local(args: &Args) -> Result<()> {
+    let instances: u16 = args.get("instances", 2)?;
+    let engine = args.get_str("engine", "hlo");
+    let horizon: f32 = args.get("horizon", 30.0)?;
+    let capacity: usize = args.get("capacity", 64)?;
+    let seed: u64 = args.get("seed", 2021)?;
+
+    let physics = match engine.as_str() {
+        "native" => PhysicsEngine::Native,
+        "hlo" => PhysicsEngine::Hlo(EngineService::auto()?),
+        other => bail!("unknown engine '{other}' (native|hlo)"),
+    };
+    // pick a free base port so repeated invocations don't collide
+    let base = std::net::TcpListener::bind("127.0.0.1:0")?
+        .local_addr()?
+        .port();
+    let root = sample_merge_world(base);
+    let copies = propagate_copies(&root, instances, &PortAllocator::new(base, 7))?;
+    let configs: Vec<InstanceConfig> = copies
+        .into_iter()
+        .map(|c| InstanceConfig {
+            run_id: format!("local[{}]", c.index),
+            node: 0,
+            world: c.world,
+            flows: FlowFile::merge_sample(1200.0, 300.0, horizon),
+            scenario: MergeScenario::default(),
+            seed: seed + c.index as u64,
+            capacity,
+            horizon_s: horizon,
+            max_steps: (horizon * 10.0) as u64 + 100,
+        })
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let results = webots_hpc::pipeline::launch_node_slots(configs, &physics);
+    let elapsed = t0.elapsed();
+
+    let mut dataset = CampaignDataset::new();
+    let mut failed = 0;
+    for r in results {
+        match r {
+            Ok(ok) => {
+                println!(
+                    "run {:<10} display :{} port {} steps {} flow {} spawned {} ctrl-cmds {}",
+                    ok.dataset.run_id,
+                    ok.display,
+                    ok.port,
+                    ok.steps,
+                    ok.dataset.total_flow,
+                    ok.dataset.total_spawned,
+                    ok.controller_cmds
+                );
+                dataset.add(ok.dataset);
+            }
+            Err(e) => {
+                failed += 1;
+                println!("run FAILED: {e}");
+            }
+        }
+    }
+    println!(
+        "{} runs ok, {} failed, engine={engine}, wall {:.2}s",
+        dataset.num_runs(),
+        failed,
+        elapsed.as_secs_f64()
+    );
+    println!(
+        "aggregate dataset: {} rows, {} bytes, seeds unique: {}",
+        dataset.total_rows(),
+        dataset.total_bytes(),
+        dataset.seeds_unique()
+    );
+    Ok(())
+}

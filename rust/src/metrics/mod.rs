@@ -1,0 +1,16 @@
+//! Resource-consumption modelling and reporting.
+//!
+//! The paper's Table 5.3 compares per-run walltime, CPU time, RAM and
+//! CPU% between the 6x1 (whole-node) and 6x8 (5-core slot) setups.  We
+//! have neither Palmetto nor Webots, so per-run consumption comes from a
+//! calibrated [`CostModel`] (an Amdahl-style split of the simulation's
+//! work between a serial part and a part parallelized over Webots'
+//! physics threads) — the *shape* claims of §5.3 (walltime ~33% shorter
+//! on a whole node, CPU time within ~5%, RAM flat) fall out of the model
+//! rather than being hard-coded.
+
+mod reporter;
+mod usage;
+
+pub use reporter::{UsageReporter, UsageSummary};
+pub use usage::{CostModel, FixedWorkload, ResourceUsage, SimWorkload, WorkloadModel};

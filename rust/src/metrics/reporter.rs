@@ -1,0 +1,80 @@
+//! Aggregation of job records into the per-setup averages of Table 5.3.
+
+use crate::pbs::JobRecord;
+
+/// Averaged resource consumption over a set of runs — one column of the
+/// paper's Table 5.3.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct UsageSummary {
+    pub runs: usize,
+    pub mean_walltime_s: f64,
+    pub mean_cpu_time_s: f64,
+    pub mean_ram_gb: f64,
+    pub mean_cpu_percent: f64,
+}
+
+/// Computes usage summaries from scheduler records.
+pub struct UsageReporter;
+
+impl UsageReporter {
+    pub fn summarize(records: &[JobRecord]) -> UsageSummary {
+        if records.is_empty() {
+            return UsageSummary::default();
+        }
+        let n = records.len() as f64;
+        UsageSummary {
+            runs: records.len(),
+            mean_walltime_s: records
+                .iter()
+                .map(|r| r.usage.walltime.as_secs_f64())
+                .sum::<f64>()
+                / n,
+            mean_cpu_time_s: records.iter().map(|r| r.usage.cpu_time_s).sum::<f64>() / n,
+            mean_ram_gb: records.iter().map(|r| r.usage.max_ram_gb).sum::<f64>() / n,
+            mean_cpu_percent: records.iter().map(|r| r.cpu_percent()).sum::<f64>() / n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::ResourceUsage;
+    use crate::pbs::{JobId, JobState, SubJobId};
+    use crate::simclock::{SimDuration, SimInstant};
+
+    fn rec(wall_s: u64, cpu: f64, ram: f64) -> JobRecord {
+        JobRecord {
+            sub: SubJobId {
+                job: JobId(1),
+                array_index: 0,
+            },
+            node: 0,
+            state: JobState::Completed,
+            queued_at: SimInstant::ZERO,
+            started_at: SimInstant::ZERO,
+            finished_at: SimInstant::ZERO + SimDuration::from_secs(wall_s),
+            usage: ResourceUsage {
+                walltime: SimDuration::from_secs(wall_s),
+                cpu_time_s: cpu,
+                max_ram_gb: ram,
+            },
+        }
+    }
+
+    #[test]
+    fn summary_averages() {
+        let s = UsageReporter::summarize(&[rec(100, 200.0, 2.0), rec(300, 400.0, 3.0)]);
+        assert_eq!(s.runs, 2);
+        assert_eq!(s.mean_walltime_s, 200.0);
+        assert_eq!(s.mean_cpu_time_s, 300.0);
+        assert_eq!(s.mean_ram_gb, 2.5);
+        // mean of per-run percents: (200 + 133.3)/2
+        assert!((s.mean_cpu_percent - (200.0 + 400.0 / 3.0) / 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_records() {
+        assert_eq!(UsageReporter::summarize(&[]).runs, 0);
+    }
+}

@@ -1,0 +1,117 @@
+//! Campaign-level dataset aggregation.
+
+
+use super::dataset::RunDataset;
+use super::stats;
+
+/// The merged output of a whole campaign.
+#[derive(Debug, Clone, Default)]
+pub struct CampaignDataset {
+    pub runs: Vec<RunDataset>,
+}
+
+impl CampaignDataset {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, run: RunDataset) {
+        self.runs.push(run);
+    }
+
+    pub fn merge(&mut self, other: CampaignDataset) {
+        self.runs.extend(other.runs);
+    }
+
+    pub fn num_runs(&self) -> usize {
+        self.runs.len()
+    }
+
+    pub fn total_rows(&self) -> u64 {
+        self.runs.iter().map(|r| r.rows.len() as u64).sum()
+    }
+
+    /// Aggregate dataset size — the §2.10 "big data" observable.
+    pub fn total_bytes(&self) -> u64 {
+        self.runs.iter().map(|r| r.size_bytes()).sum()
+    }
+
+    /// Distribution of per-run throughput (total vehicles that finished).
+    pub fn flow_stats(&self) -> (f64, f64) {
+        let flows: Vec<f64> = self.runs.iter().map(|r| r.total_flow as f64).collect();
+        (stats::mean(&flows), stats::stddev(&flows))
+    }
+
+    /// Per-node run counts — feeds the §5.2 distribution analysis.
+    pub fn runs_per_node(&self, num_nodes: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; num_nodes];
+        for r in &self.runs {
+            if r.node < num_nodes {
+                counts[r.node] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Seeds must be unique across runs — duplicate seeds silently halve
+    /// the dataset's information content (the whole point of §1.2's
+    /// "sources of randomization").
+    pub fn seeds_unique(&self) -> bool {
+        let mut seeds: Vec<u64> = self.runs.iter().map(|r| r.seed).collect();
+        seeds.sort_unstable();
+        seeds.windows(2).all(|w| w[0] != w[1])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sumo::StepObs;
+
+    fn run(id: &str, node: usize, seed: u64, flow: f32) -> RunDataset {
+        let mut d = RunDataset::new(id, node, seed);
+        d.push(
+            0.1,
+            &StepObs {
+                n_active: 1.0,
+                mean_speed: 10.0,
+                flow,
+                n_merged: 0.0,
+            },
+        );
+        d
+    }
+
+    #[test]
+    fn aggregation_counts() {
+        let mut c = CampaignDataset::new();
+        for i in 0..10 {
+            c.add(run(&format!("1[{i}]"), i % 3, i as u64, 2.0));
+        }
+        assert_eq!(c.num_runs(), 10);
+        assert_eq!(c.total_rows(), 10);
+        assert_eq!(c.runs_per_node(3), vec![4, 3, 3]);
+        assert!(c.seeds_unique());
+        let (m, s) = c.flow_stats();
+        assert_eq!(m, 2.0);
+        assert_eq!(s, 0.0);
+    }
+
+    #[test]
+    fn duplicate_seeds_detected() {
+        let mut c = CampaignDataset::new();
+        c.add(run("a", 0, 7, 1.0));
+        c.add(run("b", 0, 7, 1.0));
+        assert!(!c.seeds_unique());
+    }
+
+    #[test]
+    fn merge_concatenates() {
+        let mut a = CampaignDataset::new();
+        a.add(run("a", 0, 1, 1.0));
+        let mut b = CampaignDataset::new();
+        b.add(run("b", 0, 2, 1.0));
+        a.merge(b);
+        assert_eq!(a.num_runs(), 2);
+    }
+}

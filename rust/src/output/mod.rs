@@ -1,0 +1,15 @@
+//! Output datasets and big-data aggregation.
+//!
+//! The pipeline's raison d'être is the "massive output dataset" (§1.2):
+//! every run emits per-step observables; a campaign merges thousands of
+//! runs into one analysis-ready dataset ("a simulation with a 10 MB
+//! output dataset, after being run 100,000 times in sequence, would then
+//! swell to a 1 TB size", §2.10).
+
+mod aggregate;
+mod dataset;
+mod stats;
+
+pub use aggregate::CampaignDataset;
+pub use dataset::{ObsRow, RunDataset};
+pub use stats::{mean, percentile, stddev};

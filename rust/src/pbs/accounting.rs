@@ -1,0 +1,138 @@
+//! Job accounting: per-subjob usage records and qstat-style reports.
+
+use std::collections::HashMap;
+
+use crate::metrics::ResourceUsage;
+use crate::simclock::SimInstant;
+
+use super::{JobState, SubJobId};
+
+/// The terminal record of one subjob — what `qstat -fx` would show.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRecord {
+    pub sub: SubJobId,
+    pub node: usize,
+    pub state: JobState,
+    pub queued_at: SimInstant,
+    pub started_at: SimInstant,
+    pub finished_at: SimInstant,
+    pub usage: ResourceUsage,
+}
+
+impl JobRecord {
+    /// Mean parallelism = cpu_time / walltime, reported as a percentage —
+    /// the "CPU %" row of the paper's Table 5.3.
+    pub fn cpu_percent(&self) -> f64 {
+        let wall = self.usage.walltime.as_secs_f64();
+        if wall <= 0.0 {
+            return 0.0;
+        }
+        100.0 * self.usage.cpu_time_s / wall
+    }
+}
+
+/// A live queue snapshot: counts by state (what `qstat` prints per job).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QstatReport {
+    pub at: SimInstant,
+    pub queued: u64,
+    pub running: u64,
+    pub completed: u64,
+    pub killed: u64,
+    pub failed: u64,
+}
+
+impl QstatReport {
+    pub fn from_states(at: SimInstant, states: &HashMap<SubJobId, JobState>) -> Self {
+        let mut r = QstatReport {
+            at,
+            queued: 0,
+            running: 0,
+            completed: 0,
+            killed: 0,
+            failed: 0,
+        };
+        for s in states.values() {
+            match s {
+                JobState::Queued => r.queued += 1,
+                JobState::Running => r.running += 1,
+                JobState::Completed => r.completed += 1,
+                JobState::KilledWalltime => r.killed += 1,
+                JobState::Failed => r.failed += 1,
+            }
+        }
+        r
+    }
+
+    pub fn total(&self) -> u64 {
+        self.queued + self.running + self.completed + self.killed + self.failed
+    }
+
+    /// Render as the familiar one-line summary.
+    pub fn render(&self) -> String {
+        format!(
+            "[{}] Q:{} R:{} F:{} K:{} E:{} (total {})",
+            self.at,
+            self.queued,
+            self.running,
+            self.completed,
+            self.killed,
+            self.failed,
+            self.total()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pbs::JobId;
+    use crate::simclock::SimDuration;
+
+    #[test]
+    fn cpu_percent_is_mean_parallelism() {
+        let rec = JobRecord {
+            sub: SubJobId {
+                job: JobId(1),
+                array_index: 0,
+            },
+            node: 0,
+            state: JobState::Completed,
+            queued_at: SimInstant::ZERO,
+            started_at: SimInstant::ZERO,
+            finished_at: SimInstant::ZERO + SimDuration::from_secs(100),
+            usage: ResourceUsage {
+                walltime: SimDuration::from_secs(100),
+                cpu_time_s: 215.0,
+                max_ram_gb: 2.2,
+            },
+        };
+        assert!((rec.cpu_percent() - 215.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn qstat_counts_by_state() {
+        let mut states = HashMap::new();
+        for i in 0..3 {
+            states.insert(
+                SubJobId {
+                    job: JobId(1),
+                    array_index: i,
+                },
+                JobState::Running,
+            );
+        }
+        states.insert(
+            SubJobId {
+                job: JobId(1),
+                array_index: 3,
+            },
+            JobState::Completed,
+        );
+        let r = QstatReport::from_states(SimInstant::ZERO, &states);
+        assert_eq!(r.running, 3);
+        assert_eq!(r.completed, 1);
+        assert_eq!(r.total(), 4);
+        assert!(r.render().contains("R:3"));
+    }
+}

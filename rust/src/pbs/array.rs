@@ -1,0 +1,113 @@
+//! PBS job arrays (`#PBS -J first-last`).
+//!
+//! The pipeline's distribution mechanism: one submission fans out into
+//! `last - first + 1` subjobs, each seeing its own `$PBS_ARRAY_INDEX`.
+//! The paper's Appendix-B script uses `-J 1-48` and derives the world-copy
+//! index as `PBS_ARRAY_INDEX % 8`.
+
+
+use crate::{Error, Result};
+
+use super::JobId;
+
+/// Inclusive index range of an array job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArrayRange {
+    pub first: u32,
+    pub last: u32,
+}
+
+impl ArrayRange {
+    pub fn new(first: u32, last: u32) -> Result<Self> {
+        if last < first {
+            return Err(Error::Config(format!(
+                "invalid array range {first}-{last}"
+            )));
+        }
+        Ok(ArrayRange { first, last })
+    }
+
+    pub fn len(&self) -> u32 {
+        self.last - self.first + 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // by construction: last >= first
+    }
+
+    pub fn indices(&self) -> impl Iterator<Item = u32> {
+        self.first..=self.last
+    }
+
+    /// Parse the `-J` argument (`"1-48"`).
+    pub fn parse(s: &str) -> Result<Self> {
+        let (a, b) = s
+            .split_once('-')
+            .ok_or_else(|| Error::Config(format!("malformed -J range '{s}'")))?;
+        let first = a
+            .trim()
+            .parse::<u32>()
+            .map_err(|e| Error::Config(format!("bad array index '{a}': {e}")))?;
+        let last = b
+            .trim()
+            .parse::<u32>()
+            .map_err(|e| Error::Config(format!("bad array index '{b}': {e}")))?;
+        ArrayRange::new(first, last)
+    }
+}
+
+impl std::fmt::Display for ArrayRange {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}-{}", self.first, self.last)
+    }
+}
+
+/// Identifier of one element of an array job (`1234[7].pbs`-style).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SubJobId {
+    pub job: JobId,
+    /// `$PBS_ARRAY_INDEX`; 0 for non-array jobs.
+    pub array_index: u32,
+}
+
+impl std::fmt::Display for SubJobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}[{}]", self.job.0, self.array_index)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_appendix_b_range() {
+        let r = ArrayRange::parse("1-48").unwrap();
+        assert_eq!(r.len(), 48);
+        assert_eq!(r.indices().count(), 48);
+        assert_eq!(r.to_string(), "1-48");
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(ArrayRange::parse("48").is_err());
+        assert!(ArrayRange::parse("8-1").is_err());
+        assert!(ArrayRange::parse("a-b").is_err());
+    }
+
+    #[test]
+    fn singleton_range() {
+        let r = ArrayRange::parse("5-5").unwrap();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.indices().collect::<Vec<_>>(), vec![5]);
+    }
+
+    #[test]
+    fn subjob_display() {
+        let s = SubJobId {
+            job: JobId(12),
+            array_index: 7,
+        };
+        assert_eq!(s.to_string(), "12[7]");
+    }
+}

@@ -1,0 +1,164 @@
+//! Job specifications and lifecycle states.
+
+
+use crate::cluster::{Interconnect, ResourceDemand};
+use crate::simclock::SimDuration;
+
+use super::ArrayRange;
+
+/// PBS job identifier (`1234.pbs02`-style, simplified to a counter).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}.pbs", self.0)
+    }
+}
+
+/// The `-l select=...,walltime=...` line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResourceRequest {
+    /// Number of chunks (`select=1` in the paper's script — each array
+    /// element asks for one chunk).
+    pub select: u32,
+    /// Per-chunk demand.
+    pub chunk: ResourceDemand,
+    /// Required interconnect class, if any.
+    pub interconnect: Option<Interconnect>,
+    /// Walltime limit per (sub)job.
+    pub walltime: SimDuration,
+}
+
+impl ResourceRequest {
+    /// The Appendix-B request: `select=1:ncpus=5:mem=93gb:interconnect=hdr,
+    /// walltime=00:45:00`.
+    pub fn appendix_b() -> Self {
+        ResourceRequest {
+            select: 1,
+            chunk: ResourceDemand::paper_slot(),
+            interconnect: Some(Interconnect::Hdr),
+            walltime: SimDuration::from_minutes(45),
+        }
+    }
+
+    /// The ch.5 experiment variant: 15-minute walltime per job ("the
+    /// pipeline implemented a 15-minute walltime for each triggered job",
+    /// §5.2).
+    pub fn experiment_15min() -> Self {
+        ResourceRequest {
+            walltime: SimDuration::from_minutes(15),
+            ..Self::appendix_b()
+        }
+    }
+
+    /// Whole-node request used by the 6x1 serial setup of §5.3.
+    pub fn whole_node_15min() -> Self {
+        ResourceRequest {
+            select: 1,
+            chunk: ResourceDemand::whole_node(),
+            interconnect: Some(Interconnect::Hdr),
+            walltime: SimDuration::from_minutes(15),
+        }
+    }
+}
+
+/// Lifecycle of a (sub)job, mirroring qstat's Q/R/E/F states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Waiting in the queue.
+    Queued,
+    /// Executing on a node.
+    Running,
+    /// Finished within walltime.
+    Completed,
+    /// Killed by PBS for exceeding walltime.
+    KilledWalltime,
+    /// Failed for another reason (e.g. the §4.2.1 duplicate-port crash).
+    Failed,
+}
+
+impl JobState {
+    pub fn is_terminal(self) -> bool {
+        matches!(
+            self,
+            JobState::Completed | JobState::KilledWalltime | JobState::Failed
+        )
+    }
+
+    /// One-letter qstat code.
+    pub fn code(self) -> char {
+        match self {
+            JobState::Queued => 'Q',
+            JobState::Running => 'R',
+            JobState::Completed => 'F',
+            JobState::KilledWalltime => 'K',
+            JobState::Failed => 'E',
+        }
+    }
+}
+
+/// A submitted job: either a single job or an array parent.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: JobId,
+    pub name: String,
+    pub queue: String,
+    pub request: ResourceRequest,
+    /// `Some` for `#PBS -J first-last` array jobs.
+    pub array: Option<ArrayRange>,
+}
+
+impl Job {
+    pub fn new(id: JobId, name: impl Into<String>, request: ResourceRequest) -> Self {
+        Job {
+            id,
+            name: name.into(),
+            queue: "dicelab".into(),
+            request,
+            array: None,
+        }
+    }
+
+    pub fn with_array(mut self, range: ArrayRange) -> Self {
+        self.array = Some(range);
+        self
+    }
+
+    /// Number of schedulable units this job expands to.
+    pub fn num_subjobs(&self) -> u32 {
+        self.array.map_or(1, |a| a.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn appendix_b_request_matches_paper() {
+        let r = ResourceRequest::appendix_b();
+        assert_eq!(r.chunk.ncpus, 5);
+        assert_eq!(r.chunk.mem_gb, 93.0);
+        assert_eq!(r.walltime.as_minutes(), 45);
+        assert_eq!(r.interconnect, Some(Interconnect::Hdr));
+    }
+
+    #[test]
+    fn array_job_expands() {
+        let j = Job::new(JobId(1), "webots", ResourceRequest::experiment_15min())
+            .with_array(ArrayRange::new(1, 48).unwrap());
+        assert_eq!(j.num_subjobs(), 48);
+        let plain = Job::new(JobId(2), "webots", ResourceRequest::experiment_15min());
+        assert_eq!(plain.num_subjobs(), 1);
+    }
+
+    #[test]
+    fn state_terminality() {
+        assert!(!JobState::Queued.is_terminal());
+        assert!(!JobState::Running.is_terminal());
+        assert!(JobState::Completed.is_terminal());
+        assert!(JobState::KilledWalltime.is_terminal());
+        assert!(JobState::Failed.is_terminal());
+    }
+}

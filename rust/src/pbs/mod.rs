@@ -1,0 +1,25 @@
+//! The Portable Batch System substrate.
+//!
+//! PBS is the job scheduler the paper leans on for distribution ("the PBS
+//! algorithms are likely much more effective than any homegrown algorithm
+//! we could have developed", §4.2.2).  This module implements the slice
+//! of PBS the pipeline exercises:
+//!
+//! * [`script`] — parsing `#PBS` directives out of a job script
+//!   (Appendix B is the canonical input),
+//! * [`job`] — job specs, resource requests (`-l select=...`), states,
+//! * [`array`] — job arrays (`-J 1-48`) and `$PBS_ARRAY_INDEX` expansion,
+//! * [`scheduler`] — a discrete-event scheduler over the virtual clock:
+//!   FIFO + first-fit (or round-robin) node packing, walltime kill,
+//! * [`accounting`] — per-(sub)job usage records, qstat-style reporting.
+
+mod accounting;
+mod array;
+mod job;
+mod scheduler;
+pub mod script;
+
+pub use accounting::{JobRecord, QstatReport};
+pub use array::{ArrayRange, SubJobId};
+pub use job::{Job, JobId, JobState, ResourceRequest};
+pub use scheduler::{PackingPolicy, Scheduler, SchedulerConfig, SchedulerStats};

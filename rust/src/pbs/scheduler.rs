@@ -1,0 +1,521 @@
+//! The discrete-event batch scheduler.
+//!
+//! Implements the slice of PBS behaviour the paper's evaluation measures:
+//! FIFO dispatch with first-fit (or round-robin — an ablation, DESIGN.md
+//! §7) node packing, per-chunk resource booking against the [`Cluster`],
+//! walltime enforcement, and a completion timeline from which the ch. 5
+//! throughput/distribution results are computed.
+//!
+//! Time is virtual ([`SimClock`]): `run_until` replays hours of campaign
+//! in microseconds, deterministically (stable event ordering).
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::cluster::{AllocationId, Cluster, ClusterQueue, NodeSpec, ResourceDemand};
+use crate::metrics::{ResourceUsage, WorkloadModel};
+use crate::simclock::{EventQueue, SimClock, SimDuration, SimInstant};
+use crate::{Error, Result};
+
+use super::{Job, JobId, JobState, SubJobId};
+
+/// Node-packing policy (ablation: DESIGN.md §7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PackingPolicy {
+    /// Scan nodes in index order, place on the first that fits (what PBS
+    /// effectively does for a saturating array of identical chunks).
+    #[default]
+    FirstFit,
+    /// Rotate a cursor across nodes, spreading load breadth-first.
+    RoundRobin,
+}
+
+/// Static scheduler configuration.
+#[derive(Debug, Clone, Default)]
+pub struct SchedulerConfig {
+    pub policy: PackingPolicy,
+    /// When true, a blocked head-of-queue subjob does not stall later
+    /// subjobs that do fit (simple backfill). PBS does this; strict FIFO
+    /// is kept for the ablation bench.
+    pub backfill: bool,
+}
+
+/// Internal: a subjob waiting for resources.
+#[derive(Debug)]
+struct Pending {
+    sub: SubJobId,
+    demand: ResourceDemand,
+    interconnect: Option<crate::cluster::Interconnect>,
+    walltime: SimDuration,
+}
+
+/// Internal: a subjob occupying a node.
+#[derive(Debug)]
+struct Running {
+    node: usize,
+    alloc: AllocationId,
+    started: SimInstant,
+    usage: ResourceUsage,
+    /// Virtual instant the job *would* finish if not killed.
+    finish_at: SimInstant,
+    kill_at: SimInstant,
+}
+
+/// One entry of the completion timeline (drives Table 5.1 / Fig 5.1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Completion {
+    pub sub: SubJobId,
+    pub node: usize,
+    pub at: SimInstant,
+    pub state: JobState,
+}
+
+#[derive(Debug)]
+enum SchedEvent {
+    Finish(SubJobId),
+    WalltimeKill(SubJobId),
+}
+
+/// Aggregate counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SchedulerStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub killed_walltime: u64,
+    pub failed: u64,
+}
+
+impl SchedulerStats {
+    /// The paper's headline reliability claim: "100% simulation completion
+    /// rate after 12 hours of runs".
+    pub fn completion_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            return 1.0;
+        }
+        self.completed as f64 / self.submitted as f64
+    }
+}
+
+/// The scheduler itself. Owns the cluster, the clock, and a per-job
+/// workload model that tells it how long each subjob runs and what it
+/// consumes (the launcher/cost-model plugs in here).
+pub struct Scheduler {
+    clock: SimClock,
+    cluster: Cluster,
+    queue: ClusterQueue,
+    config: SchedulerConfig,
+    pending: VecDeque<Pending>,
+    running: HashMap<SubJobId, Running>,
+    workloads: HashMap<JobId, Box<dyn WorkloadModel>>,
+    jobs: HashMap<JobId, Job>,
+    states: HashMap<SubJobId, JobState>,
+    events: EventQueue<SchedEvent>,
+    completions: Vec<Completion>,
+    records: Vec<super::JobRecord>,
+    stats: SchedulerStats,
+    next_job_id: u64,
+    rr_cursor: usize,
+}
+
+impl Scheduler {
+    pub fn new(cluster: Cluster, queue: ClusterQueue, config: SchedulerConfig) -> Self {
+        Scheduler {
+            clock: SimClock::new(),
+            cluster,
+            queue,
+            config,
+            pending: VecDeque::new(),
+            running: HashMap::new(),
+            workloads: HashMap::new(),
+            jobs: HashMap::new(),
+            states: HashMap::new(),
+            events: EventQueue::new(),
+            completions: Vec::new(),
+            records: Vec::new(),
+            stats: SchedulerStats::default(),
+            next_job_id: 1,
+            rr_cursor: 0,
+        }
+    }
+
+    pub fn now(&self) -> SimInstant {
+        self.clock.now()
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    pub fn stats(&self) -> SchedulerStats {
+        self.stats
+    }
+
+    pub fn completions(&self) -> &[Completion] {
+        &self.completions
+    }
+
+    pub fn records(&self) -> &[super::JobRecord] {
+        &self.records
+    }
+
+    pub fn state_of(&self, sub: SubJobId) -> Option<JobState> {
+        self.states.get(&sub).copied()
+    }
+
+    /// Submit a job with its workload model. Returns the assigned id.
+    pub fn submit(&mut self, mut job: Job, workload: Box<dyn WorkloadModel>) -> Result<JobId> {
+        self.queue
+            .admit(job.request.walltime.as_millis() / 1000, job.request.select as usize)?;
+        let id = JobId(self.next_job_id);
+        self.next_job_id += 1;
+        job.id = id;
+
+        let indices: Vec<u32> = match job.array {
+            Some(a) => a.indices().collect(),
+            None => vec![0],
+        };
+        for ai in indices {
+            let sub = SubJobId {
+                job: id,
+                array_index: ai,
+            };
+            self.pending.push_back(Pending {
+                sub,
+                demand: job.request.chunk,
+                interconnect: job.request.interconnect,
+                walltime: job.request.walltime,
+            });
+            self.states.insert(sub, JobState::Queued);
+            self.stats.submitted += 1;
+        }
+        self.workloads.insert(id, workload);
+        self.jobs.insert(id, job);
+        self.dispatch();
+        Ok(id)
+    }
+
+    /// Try to start pending subjobs. FIFO order; with backfill enabled a
+    /// blocked head does not stall the rest.
+    fn dispatch(&mut self) {
+        let mut i = 0;
+        while i < self.pending.len() {
+            let p = &self.pending[i];
+            let cands = self.cluster.candidates(&p.demand, p.interconnect);
+            if cands.is_empty() {
+                if self.config.backfill {
+                    i += 1;
+                    continue;
+                } else {
+                    break;
+                }
+            }
+            let node = match self.config.policy {
+                PackingPolicy::FirstFit => cands[0],
+                PackingPolicy::RoundRobin => {
+                    // first candidate at or after the cursor, cyclically
+                    let pick = cands
+                        .iter()
+                        .copied()
+                        .find(|&c| c >= self.rr_cursor)
+                        .unwrap_or(cands[0]);
+                    self.rr_cursor = (pick + 1) % self.cluster.len();
+                    pick
+                }
+            };
+            let p = self.pending.remove(i).expect("index in range");
+            self.start(p, node);
+            // restart the scan: resources changed
+            i = 0;
+        }
+    }
+
+    fn start(&mut self, p: Pending, node: usize) {
+        let alloc = self
+            .cluster
+            .allocate_on(node, p.demand)
+            .expect("candidate node must fit");
+        let node_spec: NodeSpec = self.cluster.node(node).spec.clone();
+        let usage = self
+            .workloads
+            .get_mut(&p.sub.job)
+            .expect("workload registered at submit")
+            .usage(p.sub, &node_spec, &p.demand);
+        let now = self.clock.now();
+        let finish_at = now + usage.walltime;
+        let kill_at = now + p.walltime;
+        self.events.push(
+            finish_at.min(kill_at),
+            if finish_at <= kill_at {
+                SchedEvent::Finish(p.sub)
+            } else {
+                SchedEvent::WalltimeKill(p.sub)
+            },
+        );
+        self.states.insert(p.sub, JobState::Running);
+        self.running.insert(
+            p.sub,
+            Running {
+                node,
+                alloc,
+                started: now,
+                usage,
+                finish_at,
+                kill_at,
+            },
+        );
+    }
+
+    /// Advance virtual time to `until`, processing every event on the way.
+    pub fn run_until(&mut self, until: SimInstant) {
+        while let Some(t) = self.events.peek_time() {
+            if t > until {
+                break;
+            }
+            let ev = self.events.pop().expect("peeked");
+            self.clock.advance_to(ev.at);
+            match ev.payload {
+                SchedEvent::Finish(sub) => self.finish(sub, JobState::Completed),
+                SchedEvent::WalltimeKill(sub) => self.finish(sub, JobState::KilledWalltime),
+            }
+            self.dispatch();
+        }
+        self.clock.advance_to(until);
+    }
+
+    /// Run until every submitted subjob reached a terminal state.
+    pub fn run_to_completion(&mut self) {
+        while let Some(t) = self.events.peek_time() {
+            let ev = self.events.pop().expect("peeked");
+            self.clock.advance_to(t);
+            match ev.payload {
+                SchedEvent::Finish(sub) => self.finish(sub, JobState::Completed),
+                SchedEvent::WalltimeKill(sub) => self.finish(sub, JobState::KilledWalltime),
+            }
+            self.dispatch();
+        }
+    }
+
+    fn finish(&mut self, sub: SubJobId, state: JobState) {
+        let r = match self.running.remove(&sub) {
+            Some(r) => r,
+            None => return, // stale event (already finished)
+        };
+        self.cluster
+            .release_on(r.node, r.alloc)
+            .expect("allocation tracked");
+        self.states.insert(sub, state);
+        match state {
+            JobState::Completed => self.stats.completed += 1,
+            JobState::KilledWalltime => self.stats.killed_walltime += 1,
+            JobState::Failed => self.stats.failed += 1,
+            _ => {}
+        }
+        let now = self.clock.now();
+        self.completions.push(Completion {
+            sub,
+            node: r.node,
+            at: now,
+            state,
+        });
+        self.records.push(super::JobRecord {
+            sub,
+            node: r.node,
+            state,
+            queued_at: SimInstant::ZERO, // refined below if needed
+            started_at: r.started,
+            finished_at: now,
+            usage: ResourceUsage {
+                // a killed job burned the full walltime window
+                walltime: now - r.started,
+                ..r.usage
+            },
+        });
+        let _ = (r.finish_at, r.kill_at);
+    }
+
+    /// Cumulative completed-run counts at each sampled timestamp — the
+    /// exact quantity of Table 5.1.
+    pub fn completed_at(&self, t: SimInstant) -> u64 {
+        self.completions
+            .iter()
+            .filter(|c| c.at <= t && c.state == JobState::Completed)
+            .count() as u64
+    }
+
+    /// Per-node running-instance counts right now (§5.2).
+    pub fn occupancy(&self) -> Vec<usize> {
+        self.cluster.occupancy()
+    }
+
+    /// qstat-style snapshot.
+    pub fn qstat(&self) -> super::QstatReport {
+        super::QstatReport::from_states(self.clock.now(), &self.states)
+    }
+
+    /// Error if a job id was never submitted.
+    pub fn job(&self, id: JobId) -> Result<&Job> {
+        self.jobs.get(&id).ok_or_else(|| Error::NoSuchJob(id.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::QueueSpec;
+    use crate::metrics::FixedWorkload;
+    use crate::pbs::{ArrayRange, ResourceRequest};
+
+    fn six_node_sched(config: SchedulerConfig) -> Scheduler {
+        let cluster = Cluster::uniform("t", 6, NodeSpec::dice_r740());
+        let queue = ClusterQueue::new(QueueSpec::dicelab(6));
+        Scheduler::new(cluster, queue, config)
+    }
+
+    fn array_job(n: u32, req: ResourceRequest) -> Job {
+        Job::new(JobId(0), "webots", req).with_array(ArrayRange::new(1, n).unwrap())
+    }
+
+    #[test]
+    fn forty_eight_instances_pack_eight_per_node() {
+        // the paper's exact configuration: 48 instances, 6 nodes, 8 slots
+        let mut s = six_node_sched(SchedulerConfig::default());
+        s.submit(
+            array_job(48, ResourceRequest::experiment_15min()),
+            Box::new(FixedWorkload::minutes(10)),
+        )
+        .unwrap();
+        assert_eq!(s.occupancy(), vec![8, 8, 8, 8, 8, 8]);
+    }
+
+    #[test]
+    fn all_complete_within_walltime() {
+        let mut s = six_node_sched(SchedulerConfig::default());
+        s.submit(
+            array_job(48, ResourceRequest::experiment_15min()),
+            Box::new(FixedWorkload::minutes(10)),
+        )
+        .unwrap();
+        s.run_to_completion();
+        let st = s.stats();
+        assert_eq!(st.completed, 48);
+        assert_eq!(st.completion_rate(), 1.0);
+        assert_eq!(s.occupancy(), vec![0; 6]);
+    }
+
+    #[test]
+    fn walltime_kill_fires() {
+        let mut s = six_node_sched(SchedulerConfig::default());
+        s.submit(
+            array_job(4, ResourceRequest::experiment_15min()),
+            Box::new(FixedWorkload::minutes(20)), // > 15-minute walltime
+        )
+        .unwrap();
+        s.run_to_completion();
+        let st = s.stats();
+        assert_eq!(st.killed_walltime, 4);
+        assert_eq!(st.completed, 0);
+        // killed jobs still release their nodes
+        assert_eq!(s.cluster().total_free_cores(), 6 * 40);
+    }
+
+    #[test]
+    fn excess_instances_queue_then_run() {
+        // 96 instances on 48 slots: second wave starts when first finishes
+        let mut s = six_node_sched(SchedulerConfig::default());
+        s.submit(
+            array_job(96, ResourceRequest::experiment_15min()),
+            Box::new(FixedWorkload::minutes(10)),
+        )
+        .unwrap();
+        assert_eq!(s.occupancy().iter().sum::<usize>(), 48);
+        s.run_until(SimInstant::ZERO + SimDuration::from_minutes(10));
+        // first wave done, second wave started
+        assert_eq!(s.stats().completed, 48);
+        assert_eq!(s.occupancy().iter().sum::<usize>(), 48);
+        s.run_to_completion();
+        assert_eq!(s.stats().completed, 96);
+    }
+
+    #[test]
+    fn round_robin_spreads_breadth_first() {
+        let mut s = six_node_sched(SchedulerConfig {
+            policy: PackingPolicy::RoundRobin,
+            backfill: false,
+        });
+        s.submit(
+            array_job(6, ResourceRequest::experiment_15min()),
+            Box::new(FixedWorkload::minutes(10)),
+        )
+        .unwrap();
+        assert_eq!(s.occupancy(), vec![1, 1, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn first_fit_packs_depth_first() {
+        let mut s = six_node_sched(SchedulerConfig::default());
+        s.submit(
+            array_job(6, ResourceRequest::experiment_15min()),
+            Box::new(FixedWorkload::minutes(10)),
+        )
+        .unwrap();
+        assert_eq!(s.occupancy(), vec![6, 0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn backfill_lets_small_jobs_jump_blocked_head() {
+        let cluster = Cluster::uniform("t", 1, NodeSpec::dice_r740());
+        let queue = ClusterQueue::new(QueueSpec::dicelab(1));
+        let mut s = Scheduler::new(
+            cluster,
+            queue,
+            SchedulerConfig {
+                policy: PackingPolicy::FirstFit,
+                backfill: true,
+            },
+        );
+        // whole-node job occupies the node...
+        s.submit(
+            Job::new(JobId(0), "big", ResourceRequest::whole_node_15min()),
+            Box::new(FixedWorkload::minutes(10)),
+        )
+        .unwrap();
+        // ...a second whole-node job blocks at the head...
+        s.submit(
+            Job::new(JobId(0), "big2", ResourceRequest::whole_node_15min()),
+            Box::new(FixedWorkload::minutes(10)),
+        )
+        .unwrap();
+        // ...but nothing fits alongside, so occupancy is 1 either way; now
+        // when the first finishes, the queue drains in order.
+        s.run_to_completion();
+        assert_eq!(s.stats().completed, 2);
+    }
+
+    #[test]
+    fn timeline_counts_match_table_5_1_shape() {
+        // 15-min walltime epochs of 48 → completed(t) == 48 * floor(t/15m)
+        // when the per-run time equals the walltime budget's epoch.
+        let mut s = six_node_sched(SchedulerConfig::default());
+        for _ in 0..4 {
+            s.submit(
+                array_job(48, ResourceRequest::experiment_15min()),
+                Box::new(FixedWorkload::minutes(15)),
+            )
+            .unwrap();
+        }
+        s.run_to_completion();
+        for (minutes, want) in [(15u64, 48u64), (30, 96), (45, 144), (60, 192)] {
+            let t = SimInstant::ZERO + SimDuration::from_minutes(minutes);
+            assert_eq!(s.completed_at(t), want, "at {minutes} min");
+        }
+    }
+
+    #[test]
+    fn queue_cap_rejects_oversized_walltime() {
+        let mut s = six_node_sched(SchedulerConfig::default());
+        let mut req = ResourceRequest::experiment_15min();
+        req.walltime = SimDuration::from_hours(100);
+        assert!(s
+            .submit(array_job(1, req), Box::new(FixedWorkload::minutes(1)))
+            .is_err());
+    }
+}

@@ -1,0 +1,276 @@
+//! `#PBS` job-script parsing.
+//!
+//! The user-facing artifact of the whole pipeline is a shell script with
+//! `#PBS` directives (Appendix B).  This parser understands the subset the
+//! pipeline uses — `-N`, `-l select=...:...,walltime=HH:MM:SS`, `-J`,
+//! `-q` — plus the body commands, and turns it into a [`Job`] spec.
+
+use crate::cluster::{Interconnect, ResourceDemand};
+use crate::simclock::SimDuration;
+use crate::{Error, Result};
+
+use super::{ArrayRange, Job, JobId, ResourceRequest};
+
+/// Parsed form of a PBS job script.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PbsScript {
+    pub name: String,
+    pub queue: String,
+    pub request: ResourceRequest,
+    pub array: Option<ArrayRange>,
+    /// Non-directive body lines (the singularity/xvfb commands).
+    pub body: Vec<String>,
+}
+
+impl PbsScript {
+    /// Parse script text. Unknown directives are rejected loudly — silent
+    /// misconfiguration is how walltime kills eat a 12-hour campaign.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut name = "STDIN".to_string();
+        let mut queue = "default".to_string();
+        let mut request: Option<ResourceRequest> = None;
+        let mut array = None;
+        let mut body = Vec::new();
+
+        for raw in text.lines() {
+            let line = raw.trim();
+            if line.is_empty() || line == "#!/bin/bash" || line == "#!/bin/sh" {
+                continue;
+            }
+            if let Some(directive) = line.strip_prefix("#PBS") {
+                let directive = directive.trim();
+                let (flag, rest) = directive
+                    .split_once(|c: char| c.is_whitespace())
+                    .map(|(f, r)| (f, r.trim()))
+                    .unwrap_or((directive, ""));
+                match flag {
+                    "-N" => name = rest.to_string(),
+                    "-q" => queue = rest.to_string(),
+                    "-J" => array = Some(ArrayRange::parse(rest)?),
+                    "-l" => request = Some(parse_resource_list(rest)?),
+                    other => {
+                        return Err(Error::Config(format!(
+                            "unsupported #PBS directive '{other}'"
+                        )))
+                    }
+                }
+            } else if !line.starts_with('#') {
+                body.push(line.to_string());
+            }
+        }
+
+        let request = request
+            .ok_or_else(|| Error::Config("script missing '#PBS -l' resource line".into()))?;
+        Ok(PbsScript {
+            name,
+            queue,
+            request,
+            array,
+            body,
+        })
+    }
+
+    /// Turn the parsed script into a submittable [`Job`].
+    pub fn to_job(&self, id: JobId) -> Job {
+        let mut j = Job::new(id, self.name.clone(), self.request.clone());
+        j.queue = self.queue.clone();
+        if let Some(a) = self.array {
+            j = j.with_array(a);
+        }
+        j
+    }
+
+    /// Render back to script text (used by the pipeline's script
+    /// generator; `parse(render(s)) == s` up to comments).
+    pub fn render(&self) -> String {
+        let mut out = String::from("#!/bin/bash\n");
+        out.push_str(&format!("#PBS -N {}\n", self.name));
+        let chunk = &self.request.chunk;
+        let mut l = format!(
+            "#PBS -l select={}:ncpus={}:mem={}gb",
+            self.request.select, chunk.ncpus, chunk.mem_gb as u64
+        );
+        if let Some(ic) = self.request.interconnect {
+            l.push_str(&format!(":interconnect={}", ic.as_str()));
+        }
+        let secs = self.request.walltime.as_millis() / 1000;
+        l.push_str(&format!(
+            ",walltime={:02}:{:02}:{:02}\n",
+            secs / 3600,
+            (secs / 60) % 60,
+            secs % 60
+        ));
+        out.push_str(&l);
+        if let Some(a) = self.array {
+            out.push_str(&format!("#PBS -J {a}\n"));
+        }
+        out.push_str(&format!("#PBS -q {}\n", self.queue));
+        for b in &self.body {
+            out.push_str(b);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Parse `select=1:ncpus=5:mem=93gb:interconnect=hdr,walltime=00:45:00`.
+fn parse_resource_list(s: &str) -> Result<ResourceRequest> {
+    let mut select = 1u32;
+    let mut ncpus = 1u32;
+    let mut mem_gb = 1.0f64;
+    let mut interconnect = None;
+    let mut walltime = None;
+
+    for part in s.split(',') {
+        let part = part.trim();
+        if let Some(w) = part.strip_prefix("walltime=") {
+            walltime = Some(parse_walltime(w)?);
+            continue;
+        }
+        // a select chain: select=1:ncpus=5:mem=93gb:interconnect=hdr
+        for term in part.split(':') {
+            let (k, v) = term
+                .split_once('=')
+                .ok_or_else(|| Error::Config(format!("malformed -l term '{term}'")))?;
+            match k.trim() {
+                "select" => {
+                    select = v
+                        .parse()
+                        .map_err(|e| Error::Config(format!("bad select '{v}': {e}")))?
+                }
+                "ncpus" => {
+                    ncpus = v
+                        .parse()
+                        .map_err(|e| Error::Config(format!("bad ncpus '{v}': {e}")))?
+                }
+                "mem" => mem_gb = parse_mem_gb(v)?,
+                "interconnect" => interconnect = Some(Interconnect::parse(v)?),
+                other => {
+                    return Err(Error::Config(format!("unsupported -l key '{other}'")));
+                }
+            }
+        }
+    }
+
+    let walltime =
+        walltime.ok_or_else(|| Error::Config("resource list missing walltime".into()))?;
+    Ok(ResourceRequest {
+        select,
+        chunk: ResourceDemand {
+            ncpus,
+            mem_gb,
+            scratch_gb: 0.0,
+            ngpus: 0,
+        },
+        interconnect,
+        walltime,
+    })
+}
+
+/// `93gb`, `512mb`.
+fn parse_mem_gb(v: &str) -> Result<f64> {
+    let v = v.to_ascii_lowercase();
+    if let Some(n) = v.strip_suffix("gb") {
+        n.parse::<f64>()
+            .map_err(|e| Error::Config(format!("bad mem '{v}': {e}")))
+    } else if let Some(n) = v.strip_suffix("mb") {
+        Ok(n.parse::<f64>()
+            .map_err(|e| Error::Config(format!("bad mem '{v}': {e}")))?
+            / 1024.0)
+    } else {
+        Err(Error::Config(format!("mem '{v}' needs gb/mb suffix")))
+    }
+}
+
+/// `HH:MM:SS`.
+fn parse_walltime(v: &str) -> Result<SimDuration> {
+    let parts: Vec<&str> = v.split(':').collect();
+    if parts.len() != 3 {
+        return Err(Error::Config(format!("walltime '{v}' not HH:MM:SS")));
+    }
+    let nums: Vec<u64> = parts
+        .iter()
+        .map(|p| {
+            p.parse::<u64>()
+                .map_err(|e| Error::Config(format!("walltime '{v}': {e}")))
+        })
+        .collect::<Result<_>>()?;
+    Ok(SimDuration::from_secs(
+        nums[0] * 3600 + nums[1] * 60 + nums[2],
+    ))
+}
+
+/// The paper's Appendix-B script, reproduced as the canonical test input
+/// and the template the pipeline's generator specializes.
+pub fn appendix_b_script() -> String {
+    r#"#!/bin/bash
+#PBS -N webots
+#PBS -l select=1:ncpus=5:mem=93gb:interconnect=hdr,walltime=00:45:00
+#PBS -J 1-48
+#PBS -q dicelab
+echo Generating new random routes...
+singularity exec -B $TMPDIR:$TMPDIR webots_sumo.sif duarouter --route-files SIM_$(($PBS_ARRAY_INDEX % 8))_net/sumo.flow.xml --net-file SIM_$(($PBS_ARRAY_INDEX % 8))_net/sumo.net.xml --output-file SIM_$(($PBS_ARRAY_INDEX % 8))_net/sumo.rou.xml --randomize-flows true --seed $RANDOM
+echo Starting Webots on `hostname`
+singularity exec -B $TMPDIR:$TMPDIR webots_sumo.sif xvfb-run -a webots --stdout --stderr --batch --mode=realtime SIM_$(($PBS_ARRAY_INDEX % 8)).wbt
+"#
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_appendix_b() {
+        let s = PbsScript::parse(&appendix_b_script()).unwrap();
+        assert_eq!(s.name, "webots");
+        assert_eq!(s.queue, "dicelab");
+        assert_eq!(s.request.chunk.ncpus, 5);
+        assert_eq!(s.request.chunk.mem_gb, 93.0);
+        assert_eq!(s.request.interconnect, Some(Interconnect::Hdr));
+        assert_eq!(s.request.walltime.as_minutes(), 45);
+        assert_eq!(s.array.unwrap().len(), 48);
+        assert_eq!(s.body.len(), 4); // 2 echos + 2 singularity execs
+    }
+
+    #[test]
+    fn render_parse_roundtrip() {
+        let s = PbsScript::parse(&appendix_b_script()).unwrap();
+        let s2 = PbsScript::parse(&s.render()).unwrap();
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn missing_resource_line_rejected() {
+        let err = PbsScript::parse("#!/bin/bash\n#PBS -N x\necho hi\n").unwrap_err();
+        assert!(err.to_string().contains("-l"));
+    }
+
+    #[test]
+    fn rejects_unknown_directive() {
+        assert!(PbsScript::parse("#PBS -Z whatever\n").is_err());
+    }
+
+    #[test]
+    fn walltime_formats() {
+        assert_eq!(parse_walltime("00:15:00").unwrap().as_minutes(), 15);
+        assert_eq!(parse_walltime("12:00:00").unwrap().as_minutes(), 720);
+        assert!(parse_walltime("15:00").is_err());
+        assert!(parse_walltime("aa:bb:cc").is_err());
+    }
+
+    #[test]
+    fn mem_suffixes() {
+        assert_eq!(parse_mem_gb("93gb").unwrap(), 93.0);
+        assert_eq!(parse_mem_gb("512mb").unwrap(), 0.5);
+        assert!(parse_mem_gb("93").is_err());
+    }
+
+    #[test]
+    fn to_job_carries_array() {
+        let s = PbsScript::parse(&appendix_b_script()).unwrap();
+        let j = s.to_job(JobId(9));
+        assert_eq!(j.num_subjobs(), 48);
+        assert_eq!(j.queue, "dicelab");
+    }
+}

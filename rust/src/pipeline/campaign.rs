@@ -1,0 +1,305 @@
+//! Campaign driver: the ch. 5 experiments as discrete-event runs.
+//!
+//! A *campaign* is a long sequence of simulation runs.  The cluster form
+//! submits one PBS array per walltime epoch (the paper's "each job
+//! contains 48 instances" with a 15-minute walltime, §5.2); the
+//! personal-computer baseline runs instances back-to-back on a single
+//! machine with manual-triggering overhead between runs.
+
+use crate::cluster::{Cluster, ClusterQueue, NodeSpec, QueueSpec, ResourceDemand};
+use crate::metrics::{CostModel, SimWorkload, UsageReporter, UsageSummary};
+use crate::pbs::{
+    ArrayRange, Job, JobId, PackingPolicy, ResourceRequest, Scheduler, SchedulerConfig,
+    SchedulerStats,
+};
+use crate::simclock::{SimDuration, SimInstant};
+use crate::Result;
+
+/// A throughput sample: cumulative completed runs at a timestamp — one
+/// row-cell of Table 5.1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ThroughputSample {
+    pub minutes: u64,
+    pub completed: u64,
+}
+
+/// Campaign configuration.
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    /// Compute nodes allocated.
+    pub nodes: usize,
+    /// Parallel instances per node (8 in the paper's 6x8 setup).
+    pub slots_per_node: u32,
+    /// Per-instance resource chunk.
+    pub chunk: ResourceDemand,
+    /// Per-job walltime (also the epoch length).
+    pub walltime: SimDuration,
+    /// Total campaign duration.
+    pub duration: SimDuration,
+    /// Cost model of one run.
+    pub cost: CostModel,
+    /// Workload seed.
+    pub seed: u64,
+    /// Packing policy (ablation).
+    pub policy: PackingPolicy,
+    /// Timestamps (minutes) at which to sample throughput.
+    pub sample_minutes: Vec<u64>,
+}
+
+impl CampaignSpec {
+    /// The paper's cluster experiment: 6 nodes × 8 slots, 15-minute
+    /// epochs, 12 hours (§5.1).
+    pub fn paper_cluster() -> Self {
+        CampaignSpec {
+            nodes: 6,
+            slots_per_node: 8,
+            chunk: ResourceDemand::paper_slot(),
+            walltime: SimDuration::from_minutes(15),
+            duration: SimDuration::from_hours(12),
+            cost: CostModel::paper_merge_sim(),
+            seed: 2021,
+            policy: PackingPolicy::FirstFit,
+            sample_minutes: vec![30, 60, 90, 120, 240, 360, 720],
+        }
+    }
+
+    /// The 6x1 serial configuration of §5.3.
+    pub fn paper_serial_6x1() -> Self {
+        CampaignSpec {
+            slots_per_node: 1,
+            chunk: ResourceDemand::whole_node(),
+            ..Self::paper_cluster()
+        }
+    }
+
+    pub fn instances_per_epoch(&self) -> u32 {
+        self.nodes as u32 * self.slots_per_node
+    }
+
+    pub fn epochs(&self) -> u64 {
+        self.duration.as_millis() / self.walltime.as_millis()
+    }
+}
+
+/// What a campaign produced.
+#[derive(Debug, Clone)]
+pub struct CampaignResult {
+    pub samples: Vec<ThroughputSample>,
+    pub stats: SchedulerStats,
+    pub usage: UsageSummary,
+    /// Per-node completed-run counts (distribution quality, §5.2).
+    pub runs_per_node: Vec<u64>,
+    /// Max per-node live occupancy observed right after each submission.
+    pub peak_occupancy: Vec<usize>,
+}
+
+impl CampaignResult {
+    /// Completed runs at the final sample (the Table 5.1 bottom row).
+    pub fn total_completed(&self) -> u64 {
+        self.stats.completed
+    }
+
+    /// §5.2's distribution-evenness check: all nodes within `tol` of the
+    /// mean run count.
+    pub fn distribution_even(&self, tol: f64) -> bool {
+        if self.runs_per_node.is_empty() {
+            return true;
+        }
+        let mean = self.runs_per_node.iter().sum::<u64>() as f64
+            / self.runs_per_node.len() as f64;
+        self.runs_per_node
+            .iter()
+            .all(|&c| (c as f64 - mean).abs() <= tol * mean.max(1.0))
+    }
+}
+
+/// Run the epoch-locked cluster campaign.
+pub fn run_cluster_campaign(spec: &CampaignSpec) -> Result<CampaignResult> {
+    let cluster = Cluster::uniform("campaign", spec.nodes, NodeSpec::dice_r740());
+    let queue = ClusterQueue::new(QueueSpec::dicelab(spec.nodes));
+    let mut sched = Scheduler::new(
+        cluster,
+        queue,
+        SchedulerConfig {
+            policy: spec.policy,
+            backfill: true,
+        },
+    );
+
+    let request = ResourceRequest {
+        select: 1,
+        chunk: spec.chunk,
+        interconnect: None,
+        walltime: spec.walltime,
+    };
+
+    let mut peak_occupancy = vec![0usize; spec.nodes];
+    for epoch in 0..spec.epochs() {
+        let at = SimInstant::ZERO + SimDuration(epoch * spec.walltime.as_millis());
+        sched.run_until(at);
+        let job = Job::new(JobId(0), format!("webots-e{epoch}"), request.clone())
+            .with_array(ArrayRange::new(1, spec.instances_per_epoch())?);
+        let workload = SimWorkload::new(spec.cost, spec.seed.wrapping_add(epoch));
+        sched.submit(job, Box::new(workload))?;
+        for (i, &o) in sched.occupancy().iter().enumerate() {
+            peak_occupancy[i] = peak_occupancy[i].max(o);
+        }
+    }
+    let end = SimInstant::ZERO + spec.duration;
+    sched.run_until(end);
+
+    let samples = spec
+        .sample_minutes
+        .iter()
+        .map(|&m| ThroughputSample {
+            minutes: m,
+            completed: sched.completed_at(SimInstant::ZERO + SimDuration::from_minutes(m)),
+        })
+        .collect();
+
+    let mut runs_per_node = vec![0u64; spec.nodes];
+    for c in sched.completions() {
+        if c.state == crate::pbs::JobState::Completed {
+            runs_per_node[c.node] += 1;
+        }
+    }
+
+    Ok(CampaignResult {
+        samples,
+        stats: sched.stats(),
+        usage: UsageReporter::summarize(sched.records()),
+        runs_per_node,
+        peak_occupancy,
+    })
+}
+
+/// The personal-computer baseline of §5.1: one machine, strictly
+/// sequential runs, plus per-run manual-triggering overhead.
+///
+/// Calibration note (documented in EXPERIMENTS.md): the paper's PC
+/// column averages ~9.7 min/run while its own Table 5.3 measures the
+/// simulation at ~4 min on identical hardware; the difference is the
+/// un-pipelined overhead of one-off, manually-triggered runs (session
+/// setup, route regeneration, result collection).  We model that as a
+/// fixed `manual_overhead_s` per run.
+pub fn pc_campaign(
+    cost: &CostModel,
+    manual_overhead_s: f64,
+    duration: SimDuration,
+    sample_minutes: &[u64],
+) -> CampaignResult {
+    let pc = NodeSpec::personal_computer();
+    let per_run_s = cost.walltime_s(pc.cores) + manual_overhead_s;
+    let total_s = duration.as_secs_f64();
+    let completed = (total_s / per_run_s).floor() as u64;
+
+    let samples = sample_minutes
+        .iter()
+        .map(|&m| ThroughputSample {
+            minutes: m,
+            completed: ((m * 60) as f64 / per_run_s).floor() as u64,
+        })
+        .collect();
+
+    let usage = UsageSummary {
+        runs: completed as usize,
+        mean_walltime_s: cost.walltime_s(pc.cores),
+        mean_cpu_time_s: cost.cpu_time_s(pc.cores),
+        mean_ram_gb: cost.ram_gb,
+        mean_cpu_percent: 100.0 * cost.cpu_time_s(pc.cores) / cost.walltime_s(pc.cores),
+    };
+
+    CampaignResult {
+        samples,
+        stats: SchedulerStats {
+            submitted: completed,
+            completed,
+            killed_walltime: 0,
+            failed: 0,
+        },
+        usage,
+        runs_per_node: vec![completed],
+        peak_occupancy: vec![1],
+    }
+}
+
+/// The paper's observed PC pace: ~74 runs in 720 minutes → ≈583 s/run;
+/// the cost model gives ≈245 s of compute, so the calibrated overhead is
+/// the remainder.
+pub const PAPER_PC_OVERHEAD_S: f64 = 338.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_campaign_matches_table_5_1() {
+        let result = run_cluster_campaign(&CampaignSpec::paper_cluster()).unwrap();
+        // 48 instances per 15-min epoch → 48·t completed datasets
+        for s in &result.samples {
+            let t = s.minutes / 15;
+            assert_eq!(s.completed, 48 * t, "at {} min", s.minutes);
+        }
+        assert_eq!(result.total_completed(), 2304);
+        // the paper's headline: 100% completion
+        assert_eq!(result.stats.completion_rate(), 1.0);
+    }
+
+    #[test]
+    fn distribution_is_perfectly_even() {
+        let result = run_cluster_campaign(&CampaignSpec::paper_cluster()).unwrap();
+        assert_eq!(result.runs_per_node, vec![384; 6]);
+        assert!(result.distribution_even(0.0));
+        assert_eq!(result.peak_occupancy, vec![8; 6]);
+    }
+
+    #[test]
+    fn pc_baseline_matches_paper_pace() {
+        let r = pc_campaign(
+            &CostModel::paper_merge_sim(),
+            PAPER_PC_OVERHEAD_S,
+            SimDuration::from_hours(12),
+            &[30, 60, 90, 120, 240, 360, 720],
+        );
+        // paper: 74 runs after 720 min — accept ±10%
+        let total = r.total_completed() as f64;
+        assert!((total - 74.0).abs() / 74.0 < 0.10, "total = {total}");
+    }
+
+    #[test]
+    fn speedup_is_about_31x() {
+        let cluster = run_cluster_campaign(&CampaignSpec::paper_cluster()).unwrap();
+        let pc = pc_campaign(
+            &CostModel::paper_merge_sim(),
+            PAPER_PC_OVERHEAD_S,
+            SimDuration::from_hours(12),
+            &[720],
+        );
+        let speedup = cluster.total_completed() as f64 / pc.total_completed() as f64;
+        assert!(
+            (speedup - 31.0).abs() < 3.0,
+            "speedup = {speedup} (paper: ~31x)"
+        );
+    }
+
+    #[test]
+    fn serial_6x1_campaign_runs() {
+        let mut spec = CampaignSpec::paper_serial_6x1();
+        spec.duration = SimDuration::from_hours(1);
+        let r = run_cluster_campaign(&spec).unwrap();
+        assert_eq!(r.peak_occupancy, vec![1; 6]);
+        // 6 instances per epoch, 4 epochs
+        assert_eq!(r.total_completed(), 24);
+    }
+
+    #[test]
+    fn scaling_doubles_with_nodes() {
+        // §5.1's scaling prediction: 12 nodes → ~2x the runs
+        let mut spec = CampaignSpec::paper_cluster();
+        spec.duration = SimDuration::from_hours(2);
+        let six = run_cluster_campaign(&spec).unwrap();
+        spec.nodes = 12;
+        let twelve = run_cluster_campaign(&spec).unwrap();
+        assert_eq!(twelve.total_completed(), 2 * six.total_completed());
+    }
+}

@@ -1,0 +1,222 @@
+//! Campaign configuration files — the paper's §6.2.1 future work.
+//!
+//! "Several parameters, like the name of the job, the number of
+//! instances, the job queue, and the hardware requirements of the PBS
+//! script could be inputted into a user interface, rather than the
+//! current process of manually editing the script."  This is that
+//! interface: a `key = value` config file that generates both the
+//! [`CampaignSpec`] and the PBS script, so users never hand-edit either.
+
+use crate::cluster::ResourceDemand;
+use crate::pbs::script::PbsScript;
+use crate::pbs::{ArrayRange, PackingPolicy, ResourceRequest};
+use crate::simclock::SimDuration;
+use crate::{Error, Result};
+
+use super::campaign::CampaignSpec;
+
+/// User-facing campaign parameters (see [`CampaignConfig::example`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignConfig {
+    pub name: String,
+    pub queue: String,
+    pub nodes: usize,
+    pub slots_per_node: u32,
+    pub ncpus_per_slot: u32,
+    pub mem_gb_per_slot: f64,
+    pub walltime_min: u64,
+    pub duration_hours: u64,
+    pub seed: u64,
+    pub policy: PackingPolicy,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        CampaignConfig {
+            name: "webots".into(),
+            queue: "dicelab".into(),
+            nodes: 6,
+            slots_per_node: 8,
+            ncpus_per_slot: 5,
+            mem_gb_per_slot: 93.0,
+            walltime_min: 15,
+            duration_hours: 12,
+            seed: 2021,
+            policy: PackingPolicy::FirstFit,
+        }
+    }
+}
+
+impl CampaignConfig {
+    /// An annotated example config (what `webots-hpc config-init` writes).
+    pub fn example() -> String {
+        r#"# Webots.HPC campaign configuration
+# (generates the PBS script AND the campaign spec — paper §6.2.1)
+name = webots
+queue = dicelab
+nodes = 6
+slots_per_node = 8
+ncpus_per_slot = 5
+mem_gb_per_slot = 93
+walltime_min = 15
+duration_hours = 12
+seed = 2021
+policy = first-fit
+"#
+        .to_string()
+    }
+
+    /// Parse `key = value` text (comments with `#`).
+    pub fn parse(text: &str) -> Result<CampaignConfig> {
+        let mut cfg = CampaignConfig::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| Error::Config(format!("line {}: expected key = value", lineno + 1)))?;
+            let (k, v) = (k.trim(), v.trim());
+            let bad = |e: &dyn std::fmt::Display| {
+                Error::Config(format!("line {}: bad {k}: {e}", lineno + 1))
+            };
+            match k {
+                "name" => cfg.name = v.to_string(),
+                "queue" => cfg.queue = v.to_string(),
+                "nodes" => cfg.nodes = v.parse().map_err(|e| bad(&e))?,
+                "slots_per_node" => cfg.slots_per_node = v.parse().map_err(|e| bad(&e))?,
+                "ncpus_per_slot" => cfg.ncpus_per_slot = v.parse().map_err(|e| bad(&e))?,
+                "mem_gb_per_slot" => cfg.mem_gb_per_slot = v.parse().map_err(|e| bad(&e))?,
+                "walltime_min" => cfg.walltime_min = v.parse().map_err(|e| bad(&e))?,
+                "duration_hours" => cfg.duration_hours = v.parse().map_err(|e| bad(&e))?,
+                "seed" => cfg.seed = v.parse().map_err(|e| bad(&e))?,
+                "policy" => {
+                    cfg.policy = match v {
+                        "first-fit" => PackingPolicy::FirstFit,
+                        "round-robin" => PackingPolicy::RoundRobin,
+                        other => return Err(Error::Config(format!("unknown policy '{other}'"))),
+                    }
+                }
+                other => return Err(Error::Config(format!("unknown config key '{other}'"))),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes == 0 || self.slots_per_node == 0 {
+            return Err(Error::Config("nodes and slots_per_node must be > 0".into()));
+        }
+        if self.ncpus_per_slot * self.slots_per_node > 40 {
+            return Err(Error::Config(format!(
+                "{} slots x {} cpus oversubscribes a 40-core node",
+                self.slots_per_node, self.ncpus_per_slot
+            )));
+        }
+        Ok(())
+    }
+
+    /// Derive the campaign spec the scheduler consumes.
+    pub fn to_spec(&self) -> CampaignSpec {
+        CampaignSpec {
+            nodes: self.nodes,
+            slots_per_node: self.slots_per_node,
+            chunk: ResourceDemand {
+                ncpus: self.ncpus_per_slot,
+                mem_gb: self.mem_gb_per_slot,
+                scratch_gb: 0.0,
+                ngpus: 0,
+            },
+            walltime: SimDuration::from_minutes(self.walltime_min),
+            duration: SimDuration::from_hours(self.duration_hours),
+            policy: self.policy,
+            seed: self.seed,
+            ..CampaignSpec::paper_cluster()
+        }
+    }
+
+    /// Derive the PBS script (the artifact users used to hand-edit).
+    pub fn to_pbs_script(&self) -> Result<PbsScript> {
+        let array = ArrayRange::new(1, self.nodes as u32 * self.slots_per_node)?;
+        Ok(PbsScript {
+            name: self.name.clone(),
+            queue: self.queue.clone(),
+            request: ResourceRequest {
+                select: 1,
+                chunk: ResourceDemand {
+                    ncpus: self.ncpus_per_slot,
+                    mem_gb: self.mem_gb_per_slot,
+                    scratch_gb: 0.0,
+                    ngpus: 0,
+                },
+                interconnect: None,
+                walltime: SimDuration::from_minutes(self.walltime_min),
+            },
+            array: Some(array),
+            body: vec![
+                "echo Generating new random routes...".into(),
+                format!(
+                    "singularity exec -B $TMPDIR:$TMPDIR webots_sumo.sif duarouter --route-files SIM_$(($PBS_ARRAY_INDEX % {s}))_net/sumo.flow.xml --net-file SIM_$(($PBS_ARRAY_INDEX % {s}))_net/sumo.net.xml --output-file SIM_$(($PBS_ARRAY_INDEX % {s}))_net/sumo.rou.xml --randomize-flows true --seed $RANDOM",
+                    s = self.slots_per_node
+                ),
+                "echo Starting Webots on `hostname`".into(),
+                format!(
+                    "singularity exec -B $TMPDIR:$TMPDIR webots_sumo.sif xvfb-run -a webots --stdout --stderr --batch --mode=realtime SIM_$(($PBS_ARRAY_INDEX % {})).wbt",
+                    self.slots_per_node
+                ),
+            ],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::run_cluster_campaign;
+
+    #[test]
+    fn example_parses_to_paper_defaults() {
+        let cfg = CampaignConfig::parse(&CampaignConfig::example()).unwrap();
+        assert_eq!(cfg, CampaignConfig::default());
+    }
+
+    #[test]
+    fn spec_and_script_agree() {
+        let cfg = CampaignConfig::default();
+        let spec = cfg.to_spec();
+        let script = cfg.to_pbs_script().unwrap();
+        assert_eq!(spec.instances_per_epoch(), script.array.unwrap().len());
+        assert_eq!(
+            spec.walltime.as_minutes() * 60,
+            script.request.walltime.as_millis() / 1000
+        );
+        // the generated script parses back
+        let reparsed = PbsScript::parse(&script.render()).unwrap();
+        assert_eq!(reparsed.request.chunk.ncpus, 5);
+    }
+
+    #[test]
+    fn config_driven_campaign_runs() {
+        let mut cfg = CampaignConfig::default();
+        cfg.duration_hours = 1;
+        let r = run_cluster_campaign(&cfg.to_spec()).unwrap();
+        assert_eq!(r.total_completed(), 4 * 48);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(CampaignConfig::parse("nodes = zero").is_err());
+        assert!(CampaignConfig::parse("warp = 9").is_err());
+        assert!(CampaignConfig::parse("nodes 6").is_err());
+        // oversubscription guard
+        assert!(CampaignConfig::parse("slots_per_node = 16\nncpus_per_slot = 5").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let cfg = CampaignConfig::parse("# hi\n\nnodes = 3 # trailing\n").unwrap();
+        assert_eq!(cfg.nodes, 3);
+    }
+}

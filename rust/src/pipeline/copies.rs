@@ -1,0 +1,134 @@
+//! World-copy propagation.
+//!
+//! §3.1.5: to run n > 1 SUMO-coupled instances per node, the pipeline
+//! needs "n copies of the simulation on the local filesystem ...
+//! identical except for one deviation: each copy must have a unique
+//! value for the port option on the Webots SUMO Interface node".  The
+//! paper did this by hand and suggested scripting it; this module is
+//! that script.
+
+use std::path::Path;
+
+use crate::sumo::network::Network;
+use crate::sumo::xmlio;
+use crate::sumo::FlowFile;
+use crate::webots::World;
+use crate::{Error, Result};
+
+use super::ports::PortAllocator;
+
+/// One propagated simulation copy: world + SUMO config set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimCopy {
+    /// Copy index (the `SIM_$(($PBS_ARRAY_INDEX % 8))` number).
+    pub index: u16,
+    pub port: u16,
+    pub world: World,
+}
+
+/// Clone the root world n times, rewriting each copy's SumoInterface
+/// port per the allocator.  Fails when the root world has no
+/// SumoInterface node (non-SUMO worlds don't need copies — §3.1.5 says
+/// plain-Webots parallelism only needs `xvfb-run -a`).
+pub fn propagate_copies(root: &World, n: u16, ports: &PortAllocator) -> Result<Vec<SimCopy>> {
+    if root.find("SumoInterface").is_none() {
+        return Err(Error::World(
+            "world has no SumoInterface node; copies are only needed for SUMO-coupled sims"
+                .into(),
+        ));
+    }
+    let plan = ports.plan(n)?;
+    let mut out = Vec::with_capacity(n as usize);
+    for (i, &port) in plan.iter().enumerate() {
+        let mut w = root.clone();
+        w.find_mut("SumoInterface")
+            .expect("checked above")
+            .set_field("port", port.to_string());
+        out.push(SimCopy {
+            index: i as u16,
+            port,
+            world: w,
+        });
+    }
+    Ok(out)
+}
+
+/// Materialize the copy tree on disk the way the PBS script expects it:
+///
+/// ```text
+/// dir/SIM_0.wbt  dir/SIM_0_net/sumo.net.xml  dir/SIM_0_net/sumo.flow.xml
+/// dir/SIM_1.wbt  ...
+/// ```
+pub fn write_copy_tree(
+    dir: &Path,
+    copies: &[SimCopy],
+    net: &Network,
+    flows: &FlowFile,
+) -> Result<()> {
+    for c in copies {
+        c.world.save(&dir.join(format!("SIM_{}.wbt", c.index)))?;
+        let net_dir = dir.join(format!("SIM_{}_net", c.index));
+        std::fs::create_dir_all(&net_dir)?;
+        xmlio::save(&net_dir.join("sumo.net.xml"), &xmlio::write_net_xml(net))?;
+        xmlio::save(&net_dir.join("sumo.flow.xml"), &xmlio::write_flow_xml(flows))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sumo::MergeScenario;
+    use crate::webots::nodes::sample_merge_world;
+
+    #[test]
+    fn copies_get_unique_ports() {
+        let root = sample_merge_world(8873);
+        let copies = propagate_copies(&root, 8, &PortAllocator::default()).unwrap();
+        assert_eq!(copies.len(), 8);
+        let mut ports: Vec<u16> = copies.iter().map(|c| c.port).collect();
+        assert_eq!(ports[0], 8873);
+        ports.dedup();
+        assert_eq!(ports.len(), 8, "all ports unique");
+        // worlds differ ONLY in the port field
+        for c in &copies {
+            let mut w = c.world.clone();
+            w.find_mut("SumoInterface").unwrap().set_field("port", "8873");
+            assert_eq!(w, root);
+        }
+    }
+
+    #[test]
+    fn non_sumo_world_rejected() {
+        let mut w = World::new();
+        w.nodes.push(
+            crate::webots::nodes::WorldInfo {
+                basic_time_step_ms: 100,
+                optimal_thread_count: 1,
+            }
+            .to_node(),
+        );
+        assert!(propagate_copies(&w, 2, &PortAllocator::default()).is_err());
+    }
+
+    #[test]
+    fn copy_tree_layout_matches_pbs_script() {
+        let dir = crate::util::TempDir::new("webots-hpc-copies").unwrap();
+        let root = sample_merge_world(8873);
+        let copies = propagate_copies(&root, 3, &PortAllocator::default()).unwrap();
+        let scenario = MergeScenario::default();
+        let flows = FlowFile::merge_sample(1200.0, 300.0, 300.0);
+        write_copy_tree(dir.path(), &copies, &scenario.network(), &flows).unwrap();
+        for i in 0..3 {
+            assert!(dir.path().join(format!("SIM_{i}.wbt")).exists());
+            assert!(dir.path().join(format!("SIM_{i}_net/sumo.net.xml")).exists());
+            assert!(dir.path().join(format!("SIM_{i}_net/sumo.flow.xml")).exists());
+        }
+        // reload a copy and check its port survived the disk trip
+        let w = World::load(&dir.path().join("SIM_2.wbt")).unwrap();
+        assert_eq!(
+            w.find("SumoInterface").unwrap().field_u32("port"),
+            Some(8887)
+        );
+    }
+}

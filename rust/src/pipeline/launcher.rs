@@ -1,0 +1,237 @@
+//! The instance launcher: physics-fidelity simulation runs.
+//!
+//! This is the body of the PBS job script, as rust: for each instance,
+//! (1) regenerate randomized routes (`duarouter ... --seed $RANDOM`),
+//! (2) acquire an Xvfb display (`xvfb-run -a`), (3) boot the SUMO
+//! back-end's TraCI server on the copy's unique port, (4) open the
+//! Webots front-end, (5) run to the stop condition, (6) emit the output
+//! dataset.  `launch_node_slots` runs n instances concurrently on real
+//! threads + sockets — one simulated compute node's worth of parallelism.
+
+use crate::container::{BuildHost, ExecEnv};
+use crate::display::DisplayRegistry;
+use crate::output::RunDataset;
+use crate::runtime::{EngineService, HloStepper};
+use crate::sumo::{duarouter, FlowFile, MergeScenario, NativeIdmStepper, SumoSim};
+use crate::traci::TraciServer;
+use crate::webots::{StopCondition, WebotsSim, World};
+use crate::{Error, Result};
+
+/// Which physics engine an instance runs.
+#[derive(Debug, Clone)]
+pub enum PhysicsEngine {
+    /// Pure-rust IDM/MOBIL baseline.
+    Native,
+    /// The AOT JAX/Pallas artifact via PJRT (production path).
+    Hlo(EngineService),
+}
+
+/// Everything one instance needs.
+#[derive(Debug, Clone)]
+pub struct InstanceConfig {
+    pub run_id: String,
+    pub node: usize,
+    /// The world copy (carries the unique TraCI port).
+    pub world: World,
+    /// Demand definition (routes are regenerated per run from the seed).
+    pub flows: FlowFile,
+    pub scenario: MergeScenario,
+    /// duarouter seed (`$RANDOM` in the paper's script).
+    pub seed: u64,
+    /// Traffic slot capacity (must equal an AOT bucket for Hlo physics).
+    pub capacity: usize,
+    /// Simulated horizon before the stop condition fires [s].
+    pub horizon_s: f32,
+    /// Max steps — the in-process walltime guard.
+    pub max_steps: u64,
+}
+
+/// What one instance produced.
+#[derive(Debug)]
+pub struct InstanceResult {
+    pub dataset: RunDataset,
+    pub display: u32,
+    pub port: u16,
+    pub steps: u64,
+    pub controller_cmds: u64,
+}
+
+/// Run one instance end to end on the calling thread.
+pub fn launch_instance(
+    cfg: &InstanceConfig,
+    displays: &DisplayRegistry,
+    env: &ExecEnv,
+    physics: &PhysicsEngine,
+) -> Result<InstanceResult> {
+    // container sanity: the tools the script invokes must exist
+    env.exec("duarouter", &[])?;
+    env.exec("xvfb-run", &["-a"])?;
+    env.exec("webots", &["--batch"])?;
+
+    // (1) randomized routes
+    let net = cfg.scenario.network();
+    let routes = duarouter(&net, &cfg.flows, cfg.seed)?;
+
+    // (2) headless display — MUST auto-probe for parallel instances
+    let display = crate::webots::SimMode::headless(displays, true)?;
+
+    // (3) SUMO back-end on the copy's unique port
+    let port = cfg
+        .world
+        .find("SumoInterface")
+        .ok_or_else(|| Error::World("instance world missing SumoInterface".into()))?
+        .field_u32("port")
+        .ok_or_else(|| Error::World("SumoInterface missing port".into()))? as u16;
+    let stepper: Box<dyn crate::sumo::Stepper> = match physics {
+        PhysicsEngine::Native => Box::new(NativeIdmStepper {
+            scenario: cfg.scenario,
+            ..NativeIdmStepper::default()
+        }),
+        PhysicsEngine::Hlo(service) => Box::new(HloStepper::new(service.clone(), cfg.capacity)?),
+    };
+    let sim = SumoSim::new(cfg.scenario, cfg.capacity, routes, stepper);
+    let server = TraciServer::spawn(port, sim)?;
+
+    // (4) Webots front-end
+    let mut webots = WebotsSim::open(&cfg.world)?
+        .with_stop_condition(StopCondition::SimTime(cfg.horizon_s));
+
+    // (5) run — TraCI-batched between controller sampling points (§Perf)
+    let _end = webots.run(cfg.max_steps)?;
+    let mut dataset = RunDataset::new(cfg.run_id.clone(), cfg.node, cfg.seed);
+    let dt = webots.world_info.basic_time_step_ms as f32 / 1000.0;
+    let history = webots.history.clone();
+    for (i, obs) in history.iter().enumerate() {
+        dataset.push((i + 1) as f32 * dt, obs);
+    }
+    let steps = webots.steps();
+    // authoritative totals from the back-end before shutdown
+    let (_, _, spawned) = webots.totals()?;
+    dataset.total_spawned = spawned;
+    let controller_cmds = webots.controller_cmds();
+    let display_no = display.display_number();
+    webots.close()?;
+    server.join()?;
+
+    Ok(InstanceResult {
+        dataset,
+        display: display_no,
+        port,
+        steps,
+        controller_cmds,
+    })
+}
+
+/// Run `copies.len()` instances concurrently — one node's slots.  Real
+/// threads, real sockets, shared display registry: the full §3.1.5
+/// parallel configuration.
+pub fn launch_node_slots(
+    configs: Vec<InstanceConfig>,
+    physics: &PhysicsEngine,
+) -> Vec<Result<InstanceResult>> {
+    let displays = DisplayRegistry::new();
+    let sif = crate::container::build_webots_hpc_image(BuildHost::PersonalComputer)
+        .expect("image build on admin host succeeds");
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = configs
+            .iter()
+            .map(|cfg| {
+                let displays = displays.clone();
+                let env = ExecEnv::new(sif.clone()).bind("/tmp", "/tmp");
+                let physics = physics.clone();
+                scope.spawn(move || launch_instance(cfg, &displays, &env, &physics))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("no panic")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{propagate_copies, PortAllocator};
+    use crate::webots::nodes::sample_merge_world;
+    use std::net::TcpListener;
+
+    fn free_base_port() -> u16 {
+        TcpListener::bind("127.0.0.1:0")
+            .unwrap()
+            .local_addr()
+            .unwrap()
+            .port()
+    }
+
+    fn config(run_id: &str, world: World, seed: u64) -> InstanceConfig {
+        InstanceConfig {
+            run_id: run_id.into(),
+            node: 0,
+            world,
+            flows: FlowFile::merge_sample(1200.0, 300.0, 30.0),
+            scenario: MergeScenario::default(),
+            seed,
+            capacity: 64,
+            horizon_s: 20.0,
+            max_steps: 1000,
+        }
+    }
+
+    #[test]
+    fn single_instance_native_end_to_end() {
+        let world = sample_merge_world(free_base_port());
+        let displays = DisplayRegistry::new();
+        let env = ExecEnv::new(
+            crate::container::build_webots_hpc_image(BuildHost::PersonalComputer).unwrap(),
+        );
+        let r = launch_instance(&config("t[1]", world, 7), &displays, &env, &PhysicsEngine::Native)
+            .unwrap();
+        assert!(r.steps >= 199, "ran the horizon: {}", r.steps);
+        assert!(!r.dataset.rows.is_empty());
+        assert!(r.dataset.total_spawned > 0);
+        assert_eq!(r.display, 99);
+    }
+
+    #[test]
+    fn eight_parallel_slots_one_node() {
+        // the 6x8 setup's per-node parallelism, for real: 8 threads, 8
+        // ports, 8 displays
+        let base = free_base_port();
+        let root = sample_merge_world(base);
+        let copies = propagate_copies(&root, 8, &PortAllocator::new(base, 7)).unwrap();
+        let configs: Vec<InstanceConfig> = copies
+            .into_iter()
+            .map(|c| {
+                let mut cfg = config(&format!("t[{}]", c.index), c.world, c.index as u64 + 1);
+                cfg.horizon_s = 5.0;
+                cfg
+            })
+            .collect();
+        let results = launch_node_slots(configs, &PhysicsEngine::Native);
+        assert_eq!(results.len(), 8);
+        let ok: Vec<_> = results.into_iter().map(|r| r.unwrap()).collect();
+        // unique displays and ports across the node
+        let mut displays: Vec<u32> = ok.iter().map(|r| r.display).collect();
+        displays.sort_unstable();
+        displays.dedup();
+        assert_eq!(displays.len(), 8);
+        let mut ports: Vec<u16> = ok.iter().map(|r| r.port).collect();
+        ports.sort_unstable();
+        ports.dedup();
+        assert_eq!(ports.len(), 8);
+        // every run produced data with its own seed
+        assert!(ok.iter().all(|r| !r.dataset.rows.is_empty()));
+    }
+
+    #[test]
+    fn duplicate_ports_fail_one_instance() {
+        // two copies with the SAME port — the §4.2.1 misconfiguration
+        let base = free_base_port();
+        let root = sample_merge_world(base);
+        let configs = vec![
+            config("a", root.clone(), 1),
+            config("b", root.clone(), 2),
+        ];
+        let results = launch_node_slots(configs, &PhysicsEngine::Native);
+        let failures = results.iter().filter(|r| r.is_err()).count();
+        assert_eq!(failures, 1, "exactly one of the two instances crashes");
+    }
+}

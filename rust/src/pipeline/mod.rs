@@ -1,0 +1,35 @@
+//! The Webots.HPC pipeline — the paper's contribution.
+//!
+//! Everything below wires the substrates into the four §3.1
+//! functionalities: GUI runs, headless runs, SUMO-coupled runs, and
+//! n-instance × m-node parallel campaigns.
+//!
+//! * [`ports`] — per-copy TraCI port allocation (base 8873, step 7),
+//! * [`copies`] — world-copy propagation with unique ports (the §3.1.5
+//!   "menial step", automated as the paper suggests),
+//! * [`walltime`] — choosing the per-job walltime from the cost model
+//!   ("this walltime is specific to the simulation ... and will thus
+//!   need to be determined prior to running a large sequence", §5.2),
+//! * [`launcher`] — running real instances: container exec → xvfb-run
+//!   → webots → TraCI, with physics on the PJRT artifact or the native
+//!   stepper,
+//! * [`campaign`] — the discrete-event campaign driver that reproduces
+//!   the ch. 5 experiments (epoch-locked PBS arrays vs a sequential
+//!   personal computer).
+
+pub mod campaign;
+pub mod config;
+pub mod copies;
+pub mod launcher;
+pub mod ports;
+pub mod walltime;
+
+pub use campaign::{
+    pc_campaign, run_cluster_campaign, CampaignResult, CampaignSpec, ThroughputSample,
+    PAPER_PC_OVERHEAD_S,
+};
+pub use config::CampaignConfig;
+pub use copies::{propagate_copies, write_copy_tree, SimCopy};
+pub use launcher::{launch_instance, launch_node_slots, InstanceConfig, InstanceResult, PhysicsEngine};
+pub use ports::PortAllocator;
+pub use walltime::{pick_walltime, WalltimePolicy};

@@ -1,0 +1,85 @@
+//! TraCI port allocation across parallel simulation copies.
+//!
+//! §4.2.1: "We tended to increment the default port value of 8873 by 7
+//! for each successive parallel simulation and ran into no further
+//! issues on this front."  Any positive step works (the ablation bench
+//! compares 1 vs 7 vs 0 — step 0 reproduces the crash); the allocator
+//! also guards the u16 range.
+
+use crate::traci::{DEFAULT_PORT, PORT_STEP};
+use crate::{Error, Result};
+
+/// Deterministic port plan: `port(i) = base + step * i`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PortAllocator {
+    pub base: u16,
+    pub step: u16,
+}
+
+impl Default for PortAllocator {
+    fn default() -> Self {
+        PortAllocator {
+            base: DEFAULT_PORT,
+            step: PORT_STEP,
+        }
+    }
+}
+
+impl PortAllocator {
+    pub fn new(base: u16, step: u16) -> Self {
+        PortAllocator { base, step }
+    }
+
+    /// Port of copy `i`.
+    pub fn port(&self, i: u16) -> Result<u16> {
+        self.base
+            .checked_add(self.step.checked_mul(i).ok_or_else(|| {
+                Error::Config(format!("port step {} * {i} overflows u16", self.step))
+            })?)
+            .ok_or_else(|| Error::Config(format!("port {} + {}*{i} overflows u16", self.base, self.step)))
+    }
+
+    /// The whole plan for `n` copies, validated collision-free.
+    pub fn plan(&self, n: u16) -> Result<Vec<u16>> {
+        let ports: Vec<u16> = (0..n).map(|i| self.port(i)).collect::<Result<_>>()?;
+        let mut sorted = ports.clone();
+        sorted.sort_unstable();
+        if sorted.windows(2).any(|w| w[0] == w[1]) {
+            // only reachable with step == 0 — the paper's crash
+            return Err(Error::PortInUse(sorted[0]));
+        }
+        Ok(ports)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_plan_8873_step_7() {
+        let a = PortAllocator::default();
+        let plan = a.plan(8).unwrap();
+        assert_eq!(plan, vec![8873, 8880, 8887, 8894, 8901, 8908, 8915, 8922]);
+    }
+
+    #[test]
+    fn step_zero_reproduces_duplicate_port() {
+        let a = PortAllocator::new(8873, 0);
+        let err = a.plan(2).unwrap_err();
+        assert!(matches!(err, Error::PortInUse(8873)));
+    }
+
+    #[test]
+    fn step_one_works_too() {
+        let a = PortAllocator::new(9000, 1);
+        assert_eq!(a.plan(3).unwrap(), vec![9000, 9001, 9002]);
+    }
+
+    #[test]
+    fn overflow_guarded() {
+        let a = PortAllocator::new(65000, 1000);
+        assert!(a.port(1).is_err());
+        assert!(a.plan(2).is_err());
+    }
+}

@@ -1,0 +1,81 @@
+//! Walltime selection.
+//!
+//! §5.2: "the pipeline implemented a 15-minute walltime for each
+//! triggered job ... This walltime is specific to the simulation running
+//! on the pipeline and will thus need to be determined prior to running
+//! a large sequence."  We determine it from the cost model plus a safety
+//! margin, rounded up to the scheduler's granularity.
+
+use crate::metrics::CostModel;
+use crate::simclock::SimDuration;
+
+/// How much headroom to leave over the expected run time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WalltimePolicy {
+    /// Multiplier on the expected walltime (jitter + cold caches).
+    pub safety_factor: f64,
+    /// Round up to a multiple of this many minutes (PBS convention).
+    pub granularity_min: u64,
+}
+
+impl Default for WalltimePolicy {
+    fn default() -> Self {
+        WalltimePolicy {
+            safety_factor: 2.0,
+            granularity_min: 15,
+        }
+    }
+}
+
+/// Pick the per-job walltime for a run on `cores` cores.
+pub fn pick_walltime(cost: &CostModel, cores: u32, policy: &WalltimePolicy) -> SimDuration {
+    let expected_s = cost.walltime_s(cores) * policy.safety_factor;
+    let gran_s = (policy.granularity_min * 60) as f64;
+    let rounded = (expected_s / gran_s).ceil() * gran_s;
+    SimDuration::from_secs_f64(rounded.max(gran_s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_slot_gets_15_minutes() {
+        // expected ≈ 245 s; ×2 safety ≈ 490 s → rounds to 900 s = 15 min,
+        // exactly the paper's experimental walltime.
+        let w = pick_walltime(
+            &CostModel::paper_merge_sim(),
+            5,
+            &WalltimePolicy::default(),
+        );
+        assert_eq!(w.as_minutes(), 15);
+    }
+
+    #[test]
+    fn whole_node_also_15_minutes() {
+        let w = pick_walltime(
+            &CostModel::paper_merge_sim(),
+            40,
+            &WalltimePolicy::default(),
+        );
+        assert_eq!(w.as_minutes(), 15);
+    }
+
+    #[test]
+    fn long_sims_round_up() {
+        let mut cost = CostModel::paper_merge_sim();
+        cost.serial_s = 1000.0;
+        let w = pick_walltime(&cost, 5, &WalltimePolicy::default());
+        assert_eq!(w.as_millis() % (15 * 60 * 1000), 0);
+        assert!(w.as_minutes() >= 30);
+    }
+
+    #[test]
+    fn minimum_one_granule() {
+        let mut cost = CostModel::paper_merge_sim();
+        cost.serial_s = 0.1;
+        cost.parallel_core_s = 0.1;
+        let w = pick_walltime(&cost, 40, &WalltimePolicy::default());
+        assert_eq!(w.as_minutes(), 15);
+    }
+}

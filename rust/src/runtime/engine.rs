@@ -1,0 +1,223 @@
+//! The PJRT engine: compile HLO-text artifacts, execute them on the hot
+//! path, and adapt the step artifact to the [`Stepper`] trait.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use crate::sumo::state::{PARAM_COLS, STATE_COLS};
+use crate::{Error, Result};
+
+use super::manifest::Manifest;
+use super::pool::ExecutablePool;
+
+/// The outputs of one AOT step execution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepOutputs {
+    /// f32[N*4] — next state rows.
+    pub state: Vec<f32>,
+    /// f32[N] — accelerations.
+    pub accel: Vec<f32>,
+    /// f32[N*2] — radar returns.
+    pub radar: Vec<f32>,
+    /// f32[4] — [n_active, mean_speed, flow, n_merged].
+    pub obs: Vec<f32>,
+}
+
+/// The engine: a PJRT CPU client + the artifact manifest + a pool of
+/// compiled executables (one per artifact, compiled lazily, shared).
+pub struct Engine {
+    client: Rc<xla::PjRtClient>,
+    manifest: Manifest,
+    dir: PathBuf,
+    pool: ExecutablePool,
+}
+
+impl Engine {
+    /// Construct from an artifacts directory (see
+    /// [`super::find_artifacts_dir`]).
+    pub fn new(dir: PathBuf) -> Result<Engine> {
+        let manifest = Manifest::load(&dir)?;
+        manifest.validate_against_default_scenario()?;
+        let client = xla::PjRtClient::cpu().map_err(Error::runtime)?;
+        Ok(Engine {
+            client: Rc::new(client),
+            manifest,
+            dir,
+            pool: ExecutablePool::new(),
+        })
+    }
+
+    /// Convenience: locate artifacts automatically.
+    pub fn auto() -> Result<Engine> {
+        let dir = super::find_artifacts_dir()
+            .ok_or_else(|| Error::Artifact("artifacts/ not found; run `make artifacts`".into()))?;
+        Engine::new(dir)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from the pool) the artifact `name_{bucket}`.
+    fn executable(&self, name: &str, bucket: usize) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let entry = self.manifest.entry(name, bucket)?;
+        let path = self.dir.join(&entry.file);
+        self.pool.get_or_compile(&format!("{name}_{bucket}"), || {
+            let proto = xla::HloModuleProto::from_text_file(&path).map_err(Error::runtime)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            self.client.compile(&comp).map_err(Error::runtime)
+        })
+    }
+
+    fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        debug_assert_eq!(data.len(), rows * cols);
+        xla::Literal::vec1(data)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(Error::runtime)
+    }
+
+    /// Execute one full merge-sim step at `bucket` capacity.
+    pub fn step(&self, bucket: usize, state: &[f32], params: &[f32]) -> Result<StepOutputs> {
+        if state.len() != bucket * STATE_COLS || params.len() != bucket * PARAM_COLS {
+            return Err(Error::Runtime(format!(
+                "shape mismatch: state {} params {} for bucket {bucket}",
+                state.len(),
+                params.len()
+            )));
+        }
+        let exe = self.executable("step", bucket)?;
+        let s = Self::literal_2d(state, bucket, STATE_COLS)?;
+        let p = Self::literal_2d(params, bucket, PARAM_COLS)?;
+        let result = exe.execute::<xla::Literal>(&[s, p]).map_err(Error::runtime)?[0][0]
+            .to_literal_sync()
+            .map_err(Error::runtime)?;
+        let (st, ac, ra, ob) = result.to_tuple4().map_err(Error::runtime)?;
+        Ok(StepOutputs {
+            state: st.to_vec::<f32>().map_err(Error::runtime)?,
+            accel: ac.to_vec::<f32>().map_err(Error::runtime)?,
+            radar: ra.to_vec::<f32>().map_err(Error::runtime)?,
+            obs: ob.to_vec::<f32>().map_err(Error::runtime)?,
+        })
+    }
+
+    /// Execute one merge-sim step for `batch` co-located instances at
+    /// once via the vmapped `stepb` artifact — the dynamic micro-batcher
+    /// of the engine service (EXPERIMENTS.md §Perf).  `states` is the
+    /// concatenation of `batch` state arrays (must fill the artifact's
+    /// full batch width; pad unused lanes with zeros = inactive worlds).
+    pub fn step_batched(
+        &self,
+        bucket: usize,
+        states: &[f32],
+        params: &[f32],
+    ) -> Result<Vec<StepOutputs>> {
+        let b = self.manifest.batch;
+        if b < 2 {
+            return Err(Error::Artifact(
+                "manifest has no batched step artifact; re-run `make artifacts`".into(),
+            ));
+        }
+        if states.len() != b * bucket * STATE_COLS || params.len() != b * bucket * PARAM_COLS {
+            return Err(Error::Runtime(format!(
+                "batched shape mismatch: states {} params {} for batch {b} x bucket {bucket}",
+                states.len(),
+                params.len()
+            )));
+        }
+        let exe = self.executable("stepb", bucket)?;
+        let s = xla::Literal::vec1(states)
+            .reshape(&[b as i64, bucket as i64, STATE_COLS as i64])
+            .map_err(Error::runtime)?;
+        let p = xla::Literal::vec1(params)
+            .reshape(&[b as i64, bucket as i64, PARAM_COLS as i64])
+            .map_err(Error::runtime)?;
+        let result = exe.execute::<xla::Literal>(&[s, p]).map_err(Error::runtime)?[0][0]
+            .to_literal_sync()
+            .map_err(Error::runtime)?;
+        let (st, ac, ra, ob) = result.to_tuple4().map_err(Error::runtime)?;
+        let st = st.to_vec::<f32>().map_err(Error::runtime)?;
+        let ac = ac.to_vec::<f32>().map_err(Error::runtime)?;
+        let ra = ra.to_vec::<f32>().map_err(Error::runtime)?;
+        let ob = ob.to_vec::<f32>().map_err(Error::runtime)?;
+        Ok((0..b)
+            .map(|i| StepOutputs {
+                state: st[i * bucket * STATE_COLS..(i + 1) * bucket * STATE_COLS].to_vec(),
+                accel: ac[i * bucket..(i + 1) * bucket].to_vec(),
+                radar: ra[i * bucket * 2..(i + 1) * bucket * 2].to_vec(),
+                obs: ob[i * 4..(i + 1) * 4].to_vec(),
+            })
+            .collect())
+    }
+
+    /// Execute the bare IDM kernel (microbench + cross-validation).
+    pub fn idm(&self, bucket: usize, state: &[f32], params: &[f32]) -> Result<Vec<f32>> {
+        let exe = self.executable("idm", bucket)?;
+        let s = Self::literal_2d(state, bucket, STATE_COLS)?;
+        let p = Self::literal_2d(params, bucket, PARAM_COLS)?;
+        let result = exe.execute::<xla::Literal>(&[s, p]).map_err(Error::runtime)?[0][0]
+            .to_literal_sync()
+            .map_err(Error::runtime)?;
+        let out = result.to_tuple1().map_err(Error::runtime)?;
+        out.to_vec::<f32>().map_err(Error::runtime)
+    }
+
+    /// Execute the bare radar kernel.
+    pub fn radar(&self, bucket: usize, state: &[f32]) -> Result<Vec<f32>> {
+        let exe = self.executable("radar", bucket)?;
+        let s = Self::literal_2d(state, bucket, STATE_COLS)?;
+        let result = exe.execute::<xla::Literal>(&[s]).map_err(Error::runtime)?[0][0]
+            .to_literal_sync()
+            .map_err(Error::runtime)?;
+        let out = result.to_tuple1().map_err(Error::runtime)?;
+        out.to_vec::<f32>().map_err(Error::runtime)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sumo::state::{DriverParams, Traffic};
+
+    fn engine() -> Option<Engine> {
+        match Engine::auto() {
+            Ok(e) => Some(e),
+            Err(e) => {
+                eprintln!("skipping PJRT test: {e}");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn engine_boots_cpu_client() {
+        let Some(e) = engine() else { return };
+        assert_eq!(e.platform().to_lowercase(), "cpu");
+    }
+
+    #[test]
+    fn step_executes_and_preserves_shapes() {
+        let Some(e) = engine() else { return };
+        let bucket = e.manifest().buckets[0];
+        let mut t = Traffic::new(bucket);
+        t.spawn(100.0, 20.0, 1.0, DriverParams::default());
+        t.spawn(150.0, 10.0, 1.0, DriverParams::default());
+        let out = e.step(bucket, &t.state, &t.params).unwrap();
+        assert_eq!(out.state.len(), bucket * 4);
+        assert_eq!(out.accel.len(), bucket);
+        assert_eq!(out.radar.len(), bucket * 2);
+        assert_eq!(out.obs.len(), 4);
+        assert_eq!(out.obs[0], 2.0); // n_active
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let Some(e) = engine() else { return };
+        let bucket = e.manifest().buckets[0];
+        assert!(e.step(bucket, &[0.0; 4], &[0.0; 6]).is_err());
+    }
+}

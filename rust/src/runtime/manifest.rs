@@ -1,0 +1,209 @@
+//! `artifacts/manifest.json`: the contract between the compile path and
+//! the runtime (shapes, buckets, road constants).  Parsed with the
+//! dependency-free [`crate::util::Json`] parser.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::sumo::MergeScenario;
+use crate::util::Json;
+use crate::{Error, Result};
+
+/// One lowered artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub file: String,
+    /// Vehicle-count bucket.
+    pub n: usize,
+    /// Number of tuple outputs.
+    pub outputs: usize,
+}
+
+/// The whole manifest (see `python/compile/aot.py`).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: String,
+    pub state_columns: Vec<String>,
+    pub param_columns: Vec<String>,
+    pub obs_columns: Vec<String>,
+    pub dt: f32,
+    pub road_end: f32,
+    pub merge_start: f32,
+    pub merge_end: f32,
+    pub num_main_lanes: u32,
+    pub buckets: Vec<usize>,
+    /// Batch width of the vmapped `stepb_*` artifacts (1 = not lowered).
+    pub batch: usize,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+fn str_vec(j: &Json) -> Result<Vec<String>> {
+    j.as_arr()?
+        .iter()
+        .map(|v| v.as_str().map(String::from))
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let format = j.get("format")?.as_str()?.to_string();
+        if format != "hlo-text" {
+            return Err(Error::Artifact(format!(
+                "unsupported artifact format '{format}'"
+            )));
+        }
+        let mut entries = BTreeMap::new();
+        for (key, e) in j.get("entries")?.as_obj()? {
+            entries.insert(
+                key.clone(),
+                ArtifactEntry {
+                    file: e.get("file")?.as_str()?.to_string(),
+                    n: e.get("n")?.as_usize()?,
+                    outputs: e.get("outputs")?.as_usize()?,
+                },
+            );
+        }
+        Ok(Manifest {
+            format,
+            state_columns: str_vec(j.get("state_columns")?)?,
+            param_columns: str_vec(j.get("param_columns")?)?,
+            obs_columns: str_vec(j.get("obs_columns")?)?,
+            dt: j.get("dt")?.as_f64()? as f32,
+            road_end: j.get("road_end")?.as_f64()? as f32,
+            merge_start: j.get("merge_start")?.as_f64()? as f32,
+            merge_end: j.get("merge_end")?.as_f64()? as f32,
+            num_main_lanes: j.get("num_main_lanes")?.as_usize()? as u32,
+            batch: j.get("batch").and_then(|v| v.as_usize()).unwrap_or(1),
+            buckets: j
+                .get("buckets")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?,
+            entries,
+        })
+    }
+
+    /// Smallest bucket that can hold `n` live vehicles.
+    pub fn bucket_for(&self, n: usize) -> Result<usize> {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .ok_or_else(|| {
+                Error::Artifact(format!(
+                    "no bucket >= {n} (available: {:?})",
+                    self.buckets
+                ))
+            })
+    }
+
+    pub fn entry(&self, name: &str, bucket: usize) -> Result<&ArtifactEntry> {
+        let key = format!("{name}_{bucket}");
+        self.entries
+            .get(&key)
+            .ok_or_else(|| Error::Artifact(format!("no artifact entry '{key}'")))
+    }
+
+    /// The scenario constants the artifact was lowered with — must agree
+    /// with the rust-side [`MergeScenario`].
+    pub fn scenario(&self) -> MergeScenario {
+        MergeScenario {
+            road_end_m: self.road_end,
+            merge_start_m: self.merge_start,
+            merge_end_m: self.merge_end,
+            num_main_lanes: self.num_main_lanes,
+            dt_s: self.dt,
+        }
+    }
+
+    /// Assert the compile-path constants match the rust defaults; a
+    /// drifted constant silently corrupts every experiment, so this is
+    /// checked at engine construction.
+    pub fn validate_against_default_scenario(&self) -> Result<()> {
+        let a = self.scenario();
+        let b = MergeScenario::default();
+        if a != b {
+            return Err(Error::Artifact(format!(
+                "artifact scenario {a:?} != rust default {b:?}; re-run `make artifacts`"
+            )));
+        }
+        if self.state_columns != ["x", "v", "lane", "active"] {
+            return Err(Error::Artifact(format!(
+                "unexpected state layout {:?}",
+                self.state_columns
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::find_artifacts_dir;
+
+    fn manifest() -> Option<Manifest> {
+        find_artifacts_dir().map(|d| Manifest::load(&d).expect("manifest parses"))
+    }
+
+    #[test]
+    fn loads_and_validates() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        m.validate_against_default_scenario().unwrap();
+        assert!(!m.buckets.is_empty());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(m) = manifest() else { return };
+        assert_eq!(m.bucket_for(1).unwrap(), m.buckets[0]);
+        let largest = *m.buckets.last().unwrap();
+        assert_eq!(m.bucket_for(largest).unwrap(), largest);
+        assert!(m.bucket_for(largest + 1).is_err());
+    }
+
+    #[test]
+    fn entries_exist_for_every_bucket() {
+        let Some(m) = manifest() else { return };
+        for &b in &m.buckets {
+            for name in ["step", "idm", "radar"] {
+                let e = m.entry(name, b).unwrap();
+                assert_eq!(e.n, b);
+            }
+        }
+        assert!(m.entry("step", 9999).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_wrong_format() {
+        let text = r#"{"format": "proto", "entries": {}}"#;
+        assert!(Manifest::parse(text).is_err());
+    }
+
+    #[test]
+    fn parse_synthetic_manifest() {
+        let text = r#"{
+          "format": "hlo-text",
+          "state_columns": ["x", "v", "lane", "active"],
+          "param_columns": ["v0", "T", "a_max", "b", "s0", "length"],
+          "obs_columns": ["n_active", "mean_speed", "flow", "n_merged"],
+          "dt": 0.1, "road_end": 1000.0, "merge_start": 300.0,
+          "merge_end": 500.0, "num_main_lanes": 2,
+          "buckets": [16],
+          "entries": {"step_16": {"file": "step_16.hlo.txt", "n": 16, "outputs": 4}}
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        m.validate_against_default_scenario().unwrap();
+        assert_eq!(m.entry("step", 16).unwrap().outputs, 4);
+    }
+}

@@ -1,0 +1,47 @@
+//! The PJRT runtime: loads the AOT-compiled JAX/Pallas physics and runs
+//! it from the rust hot path.
+//!
+//! Build-time python (`make artifacts`) lowers the merge-sim step, the
+//! bare IDM kernel and the radar kernel to HLO **text** per vehicle-count
+//! bucket; this module compiles them on the PJRT CPU client and exposes
+//! them behind the [`crate::sumo::Stepper`] trait so a simulation can
+//! swap between the native-rust baseline and the AOT artifact.
+//!
+//! HLO text (not serialized proto) is the interchange format: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see `python/compile/aot.py`).
+
+mod engine;
+mod manifest;
+mod pool;
+mod service;
+
+pub use engine::{Engine, StepOutputs};
+pub use manifest::{ArtifactEntry, Manifest};
+pub use pool::ExecutablePool;
+pub use service::{EngineService, HloStepper};
+
+/// Default artifacts directory relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory from the current working directory or
+/// the `WEBOTS_HPC_ARTIFACTS` env override (tests and examples run from
+/// various depths inside the workspace).
+pub fn find_artifacts_dir() -> Option<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("WEBOTS_HPC_ARTIFACTS") {
+        let p = std::path::PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join(ARTIFACTS_DIR);
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}

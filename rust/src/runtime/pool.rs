@@ -1,0 +1,73 @@
+//! A shared pool of compiled PJRT executables.
+//!
+//! Compiling an HLO module costs tens of milliseconds; the campaign
+//! launcher runs hundreds of instances of the *same* model, so compiled
+//! executables are cached by artifact key and shared via `Arc`.  The
+//! pool is a perf ablation (`DESIGN.md` §7): `rust/benches/ablations.rs`
+//! measures per-instance compile vs pooled.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::Result;
+
+/// Key → compiled executable cache.
+pub struct ExecutablePool {
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    hits: Mutex<u64>,
+    misses: Mutex<u64>,
+}
+
+impl Default for ExecutablePool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ExecutablePool {
+    pub fn new() -> Self {
+        ExecutablePool {
+            cache: Mutex::new(HashMap::new()),
+            hits: Mutex::new(0),
+            misses: Mutex::new(0),
+        }
+    }
+
+    /// Fetch the executable for `key`, compiling with `compile` on miss.
+    ///
+    /// The compile runs *outside* the cache lock (compilation is slow and
+    /// other keys shouldn't stall); a racing double-compile of the same
+    /// key is benign — last writer wins, both results are valid.
+    pub fn get_or_compile<F>(&self, key: &str, compile: F) -> Result<Arc<xla::PjRtLoadedExecutable>>
+    where
+        F: FnOnce() -> Result<xla::PjRtLoadedExecutable>,
+    {
+        if let Some(exe) = self.cache.lock().expect("pool poisoned").get(key) {
+            *self.hits.lock().expect("pool poisoned") += 1;
+            return Ok(exe.clone());
+        }
+        *self.misses.lock().expect("pool poisoned") += 1;
+        let exe = Arc::new(compile()?);
+        self.cache
+            .lock()
+            .expect("pool poisoned")
+            .insert(key.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// (hits, misses) — observability for the perf pass.
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            *self.hits.lock().expect("pool poisoned"),
+            *self.misses.lock().expect("pool poisoned"),
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.cache.lock().expect("pool poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}

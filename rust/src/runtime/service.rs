@@ -1,0 +1,424 @@
+//! The engine service: one PJRT context per node process, shared by all
+//! simulation instances over a request channel.
+//!
+//! The `xla` crate's PJRT handles are not `Send` (internally `Rc` + raw
+//! pointers), but the launcher runs 8 instances on 8 threads.  Rather
+//! than paying a full client + compile per instance (measured in the
+//! `ablations` bench), a single service thread owns the [`Engine`] and
+//! instances talk to it over channels — the same shape as a per-node
+//! accelerator context shared by co-located workers in a real serving
+//! stack.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+
+use crate::sumo::state::Traffic;
+use crate::sumo::{StepObs, Stepper};
+use crate::{Error, Result};
+
+use super::engine::{Engine, StepOutputs};
+use super::manifest::Manifest;
+
+enum Request {
+    Step {
+        bucket: usize,
+        state: Vec<f32>,
+        params: Vec<f32>,
+        reply: Sender<Result<StepOutputs>>,
+    },
+    Idm {
+        bucket: usize,
+        state: Vec<f32>,
+        params: Vec<f32>,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+    Radar {
+        bucket: usize,
+        state: Vec<f32>,
+        reply: Sender<Result<Vec<f32>>>,
+    },
+    StepBatched {
+        bucket: usize,
+        states: Vec<f32>,
+        params: Vec<f32>,
+        reply: Sender<Result<Vec<StepOutputs>>>,
+    },
+    Shutdown,
+}
+
+/// Serve one Step request, dynamically micro-batching with any other
+/// same-bucket Step requests already waiting on the channel (the §Perf
+/// optimization: one PJRT dispatch amortized over up to `manifest.batch`
+/// co-located instances).  Solo requests take the unbatched path with no
+/// added latency — coalescing only ever drains requests that are already
+/// queued.
+#[allow(clippy::too_many_arguments)]
+fn serve_step(
+    engine: &Engine,
+    rx: &std::sync::mpsc::Receiver<Request>,
+    backlog: &mut std::collections::VecDeque<Request>,
+    bucket: usize,
+    state: Vec<f32>,
+    params: Vec<f32>,
+    reply: Sender<Result<StepOutputs>>,
+) {
+    let bmax = engine.manifest().batch;
+    let mut batch: Vec<(Vec<f32>, Vec<f32>, Sender<Result<StepOutputs>>)> =
+        vec![(state, params, reply)];
+    if bmax >= 2 {
+        // drain whatever is already queued; stash non-matching requests
+        let mut waited = false;
+        while batch.len() < bmax {
+            match rx.try_recv() {
+                Ok(Request::Step {
+                    bucket: b2,
+                    state,
+                    params,
+                    reply,
+                }) if b2 == bucket => batch.push((state, params, reply)),
+                Ok(other) => {
+                    backlog.push_back(other);
+                    // keep draining: later Steps may still match
+                    if backlog.len() > 64 {
+                        break;
+                    }
+                }
+                Err(_) => {
+                    // once a batch has formed, peers are likely mid-send:
+                    // wait one short straggler window (lock-step workers
+                    // re-issue immediately after their replies), then stop
+                    if waited || batch.len() < 2 {
+                        break;
+                    }
+                    waited = true;
+                    match rx.recv_timeout(std::time::Duration::from_micros(60)) {
+                        Ok(Request::Step {
+                            bucket: b2,
+                            state,
+                            params,
+                            reply,
+                        }) if b2 == bucket => batch.push((state, params, reply)),
+                        Ok(other) => backlog.push_back(other),
+                        Err(_) => break,
+                    }
+                }
+            }
+        }
+    }
+
+    if batch.len() < 2 {
+        let (state, params, reply) = batch.pop().expect("one request");
+        let _ = reply.send(engine.step(bucket, &state, &params));
+        return;
+    }
+
+    // pad to the artifact's batch width with zeroed (inactive) worlds
+    let n_live = batch.len();
+    let scols = crate::sumo::state::STATE_COLS;
+    let pcols = crate::sumo::state::PARAM_COLS;
+    let mut states = vec![0.0f32; bmax * bucket * scols];
+    let mut params_all = vec![0.0f32; bmax * bucket * pcols];
+    for (i, (s, p, _)) in batch.iter().enumerate() {
+        states[i * bucket * scols..(i + 1) * bucket * scols].copy_from_slice(s);
+        params_all[i * bucket * pcols..(i + 1) * bucket * pcols].copy_from_slice(p);
+    }
+    match engine.step_batched(bucket, &states, &params_all) {
+        Ok(outs) => {
+            debug_assert_eq!(outs.len(), bmax);
+            debug_assert!(outs.len() >= n_live);
+            for ((_, _, reply), out) in batch.into_iter().zip(outs.into_iter()) {
+                let _ = reply.send(Ok(out));
+            }
+        }
+        Err(e) => {
+            // batched path failed (e.g. old artifacts): fall back to
+            // serial execution so callers still get answers
+            let msg = e.to_string();
+            for (s, p, reply) in batch {
+                let r = engine
+                    .step(bucket, &s, &p)
+                    .map_err(|e2| crate::Error::Runtime(format!("{msg}; serial fallback: {e2}")));
+                let _ = reply.send(r);
+            }
+        }
+    }
+}
+
+/// A cloneable, `Send` handle to the engine thread.
+#[derive(Debug, Clone)]
+pub struct EngineService {
+    tx: Sender<Request>,
+    manifest: Manifest,
+    platform: String,
+}
+
+impl EngineService {
+    /// Boot the engine on a dedicated thread from an artifacts dir.
+    pub fn spawn(dir: PathBuf) -> Result<EngineService> {
+        let (tx, rx) = channel::<Request>();
+        let (boot_tx, boot_rx) = channel::<Result<(Manifest, String)>>();
+        std::thread::spawn(move || {
+            let engine = match Engine::new(dir) {
+                Ok(e) => {
+                    let _ = boot_tx.send(Ok((e.manifest().clone(), e.platform())));
+                    e
+                }
+                Err(err) => {
+                    let _ = boot_tx.send(Err(err));
+                    return;
+                }
+            };
+            // requests drained ahead of their turn while coalescing a batch
+            let mut backlog: std::collections::VecDeque<Request> = Default::default();
+            loop {
+                let req = match backlog.pop_front() {
+                    Some(r) => r,
+                    None => match rx.recv() {
+                        Ok(r) => r,
+                        Err(_) => break,
+                    },
+                };
+                match req {
+                    Request::Step {
+                        bucket,
+                        state,
+                        params,
+                        reply,
+                    } => {
+                        serve_step(&engine, &rx, &mut backlog, bucket, state, params, reply);
+                    }
+                    Request::Idm {
+                        bucket,
+                        state,
+                        params,
+                        reply,
+                    } => {
+                        let _ = reply.send(engine.idm(bucket, &state, &params));
+                    }
+                    Request::Radar {
+                        bucket,
+                        state,
+                        reply,
+                    } => {
+                        let _ = reply.send(engine.radar(bucket, &state));
+                    }
+                    Request::StepBatched {
+                        bucket,
+                        states,
+                        params,
+                        reply,
+                    } => {
+                        let _ = reply.send(engine.step_batched(bucket, &states, &params));
+                    }
+                    Request::Shutdown => break,
+                }
+            }
+        });
+        let (manifest, platform) = boot_rx
+            .recv()
+            .map_err(|_| Error::Runtime("engine thread died during boot".into()))??;
+        Ok(EngineService {
+            tx,
+            manifest,
+            platform,
+        })
+    }
+
+    /// Boot from the auto-located artifacts directory.
+    pub fn auto() -> Result<EngineService> {
+        let dir = super::find_artifacts_dir()
+            .ok_or_else(|| Error::Artifact("artifacts/ not found; run `make artifacts`".into()))?;
+        Self::spawn(dir)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    pub fn step(&self, bucket: usize, state: &[f32], params: &[f32]) -> Result<StepOutputs> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Step {
+                bucket,
+                state: state.to_vec(),
+                params: params.to_vec(),
+                reply,
+            })
+            .map_err(|_| Error::Runtime("engine thread gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("engine thread dropped reply".into()))?
+    }
+
+    pub fn idm(&self, bucket: usize, state: &[f32], params: &[f32]) -> Result<Vec<f32>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Idm {
+                bucket,
+                state: state.to_vec(),
+                params: params.to_vec(),
+                reply,
+            })
+            .map_err(|_| Error::Runtime("engine thread gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("engine thread dropped reply".into()))?
+    }
+
+    pub fn radar(&self, bucket: usize, state: &[f32]) -> Result<Vec<f32>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Radar {
+                bucket,
+                state: state.to_vec(),
+                reply,
+            })
+            .map_err(|_| Error::Runtime("engine thread gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("engine thread dropped reply".into()))?
+    }
+
+    /// Explicit full-width batched step (benches; the normal path is the
+    /// dynamic micro-batcher inside [`serve_step`]).  `states`/`params`
+    /// must cover the manifest's full batch width.
+    pub fn step_batched(
+        &self,
+        bucket: usize,
+        states: &[f32],
+        params: &[f32],
+    ) -> Result<Vec<StepOutputs>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::StepBatched {
+                bucket,
+                states: states.to_vec(),
+                params: params.to_vec(),
+                reply,
+            })
+            .map_err(|_| Error::Runtime("engine thread gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("engine thread dropped reply".into()))?
+    }
+
+    /// Ask the engine thread to exit (also happens when the last handle
+    /// drops its sender).
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Request::Shutdown);
+    }
+}
+
+/// [`Stepper`] over the AOT step artifact via the engine service: the
+/// production physics engine.  Traffic capacity must equal a lowered
+/// bucket.
+pub struct HloStepper {
+    service: EngineService,
+    bucket: usize,
+    pub last_obs: StepObs,
+}
+
+impl HloStepper {
+    pub fn new(service: EngineService, capacity: usize) -> Result<HloStepper> {
+        let bucket = service.manifest().bucket_for(capacity)?;
+        if bucket != capacity {
+            return Err(Error::Artifact(format!(
+                "traffic capacity {capacity} must equal a lowered bucket (have {:?})",
+                service.manifest().buckets
+            )));
+        }
+        Ok(HloStepper {
+            service,
+            bucket,
+            last_obs: StepObs::default(),
+        })
+    }
+}
+
+impl Stepper for HloStepper {
+    fn step(&mut self, traffic: &mut Traffic) -> StepObs {
+        // An execution error after successful compile means a corrupted
+        // artifact — surface loudly.
+        let out = self
+            .service
+            .step(self.bucket, &traffic.state, &traffic.params)
+            .expect("AOT step execution failed");
+        traffic.state.copy_from_slice(&out.state);
+        let obs = StepObs {
+            n_active: out.obs[0],
+            mean_speed: out.obs[1],
+            flow: out.obs[2],
+            n_merged: out.obs[3],
+        };
+        self.last_obs = obs;
+        obs
+    }
+
+    fn name(&self) -> &'static str {
+        "hlo-pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sumo::state::DriverParams;
+
+    fn service() -> Option<EngineService> {
+        match EngineService::auto() {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("skipping PJRT service test: {e}");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn service_boots_and_steps() {
+        let Some(s) = service() else { return };
+        assert_eq!(s.platform().to_lowercase(), "cpu");
+        let bucket = s.manifest().buckets[0];
+        let mut t = Traffic::new(bucket);
+        t.spawn(100.0, 20.0, 1.0, DriverParams::default());
+        let out = s.step(bucket, &t.state, &t.params).unwrap();
+        assert_eq!(out.obs[0], 1.0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn hlo_stepper_advances_traffic() {
+        let Some(s) = service() else { return };
+        let bucket = s.manifest().buckets[0];
+        let mut stepper = HloStepper::new(s, bucket).unwrap();
+        let mut t = Traffic::new(bucket);
+        t.spawn(100.0, 20.0, 1.0, DriverParams::default());
+        let x0 = t.x(0);
+        let obs = stepper.step(&mut t);
+        assert!(t.x(0) > x0, "vehicle moved");
+        assert_eq!(obs.n_active, 1.0);
+    }
+
+    #[test]
+    fn capacity_must_match_bucket() {
+        let Some(s) = service() else { return };
+        assert!(HloStepper::new(s, 7).is_err());
+    }
+
+    #[test]
+    fn service_usable_from_many_threads() {
+        let Some(s) = service() else { return };
+        let bucket = s.manifest().buckets[0];
+        std::thread::scope(|scope| {
+            for k in 0..4 {
+                let s = s.clone();
+                scope.spawn(move || {
+                    let mut t = Traffic::new(bucket);
+                    t.spawn(10.0 * k as f32, 20.0, 1.0, DriverParams::default());
+                    let out = s.step(bucket, &t.state, &t.params).unwrap();
+                    assert_eq!(out.obs[0], 1.0);
+                });
+            }
+        });
+    }
+}

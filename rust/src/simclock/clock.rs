@@ -1,0 +1,176 @@
+//! Virtual instants and durations with millisecond resolution.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in virtual time (milliseconds since campaign start).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimInstant(pub u64);
+
+/// A span of virtual time (milliseconds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimDuration(pub u64);
+
+impl SimInstant {
+    pub const ZERO: SimInstant = SimInstant(0);
+
+    pub fn as_millis(self) -> u64 {
+        self.0
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1000.0
+    }
+
+    /// Minutes since campaign start, rounded down — the unit of the
+    /// paper's Table 5.1 "Timestamp" column.
+    pub fn as_minutes(self) -> u64 {
+        self.0 / 60_000
+    }
+
+    pub fn saturating_sub(self, other: SimInstant) -> SimDuration {
+        SimDuration(self.0.saturating_sub(other.0))
+    }
+}
+
+impl SimDuration {
+    pub const ZERO: SimDuration = SimDuration(0);
+
+    pub fn from_secs(s: u64) -> Self {
+        SimDuration(s * 1000)
+    }
+
+    pub fn from_secs_f64(s: f64) -> Self {
+        SimDuration((s * 1000.0).round().max(0.0) as u64)
+    }
+
+    pub fn from_minutes(m: u64) -> Self {
+        SimDuration(m * 60_000)
+    }
+
+    pub fn from_hours(h: u64) -> Self {
+        SimDuration(h * 3_600_000)
+    }
+
+    pub fn as_millis(self) -> u64 {
+        self.0
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1000.0
+    }
+
+    pub fn as_minutes(self) -> u64 {
+        self.0 / 60_000
+    }
+}
+
+impl Add<SimDuration> for SimInstant {
+    type Output = SimInstant;
+    fn add(self, d: SimDuration) -> SimInstant {
+        SimInstant(self.0 + d.0)
+    }
+}
+
+impl AddAssign<SimDuration> for SimInstant {
+    fn add_assign(&mut self, d: SimDuration) {
+        self.0 += d.0;
+    }
+}
+
+impl Sub<SimInstant> for SimInstant {
+    type Output = SimDuration;
+    fn sub(self, other: SimInstant) -> SimDuration {
+        SimDuration(self.0 - other.0)
+    }
+}
+
+impl Add for SimDuration {
+    type Output = SimDuration;
+    fn add(self, other: SimDuration) -> SimDuration {
+        SimDuration(self.0 + other.0)
+    }
+}
+
+impl fmt::Display for SimInstant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = self.0 / 1000;
+        write!(f, "{:02}:{:02}:{:02}", s / 3600, (s / 60) % 60, s % 60)
+    }
+}
+
+impl fmt::Display for SimDuration {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.1}s", self.as_secs_f64())
+    }
+}
+
+/// The virtual clock itself: monotone, explicitly advanced by the
+/// discrete-event loop.  Never reads the OS clock.
+#[derive(Debug, Clone, Default)]
+pub struct SimClock {
+    now: SimInstant,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn now(&self) -> SimInstant {
+        self.now
+    }
+
+    /// Advance to `t`. Panics on time travel — the event loop must pop
+    /// events in order.
+    pub fn advance_to(&mut self, t: SimInstant) {
+        assert!(t >= self.now, "clock went backwards: {t:?} < {:?}", self.now);
+        self.now = t;
+    }
+
+    pub fn advance_by(&mut self, d: SimDuration) {
+        self.now += d;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instant_arithmetic() {
+        let t = SimInstant::ZERO + SimDuration::from_secs(90);
+        assert_eq!(t.as_millis(), 90_000);
+        assert_eq!(t.as_minutes(), 1);
+        assert_eq!((t - SimInstant(30_000)).as_secs_f64(), 60.0);
+    }
+
+    #[test]
+    fn duration_constructors_agree() {
+        assert_eq!(SimDuration::from_minutes(15), SimDuration::from_secs(900));
+        assert_eq!(SimDuration::from_hours(12), SimDuration::from_minutes(720));
+        assert_eq!(SimDuration::from_secs_f64(1.5).as_millis(), 1500);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut c = SimClock::new();
+        c.advance_by(SimDuration::from_secs(5));
+        c.advance_to(SimInstant(10_000));
+        assert_eq!(c.now(), SimInstant(10_000));
+    }
+
+    #[test]
+    #[should_panic(expected = "clock went backwards")]
+    fn clock_rejects_time_travel() {
+        let mut c = SimClock::new();
+        c.advance_to(SimInstant(10_000));
+        c.advance_to(SimInstant(5_000));
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(SimInstant(3_661_000).to_string(), "01:01:01");
+        assert_eq!(SimDuration::from_secs(90).to_string(), "90.0s");
+    }
+}

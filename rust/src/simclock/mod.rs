@@ -1,0 +1,15 @@
+//! Discrete-event virtual clock.
+//!
+//! The paper's headline experiment is a **12-hour wall-clock** campaign
+//! (Table 5.1 / Fig 5.1).  Reproducing it in real time is pointless — every
+//! reported number is a *ratio* against elapsed time (31× throughput,
+//! 48·t output datasets) — so the scheduler and launcher run against this
+//! virtual clock and the benches replay the full 12 hours in milliseconds.
+//! `DESIGN.md` §7 lists the clock as an ablation candidate;
+//! `rust/benches/ablations.rs` compares virtual vs scaled-real-time runs.
+
+mod clock;
+mod events;
+
+pub use clock::{SimClock, SimDuration, SimInstant};
+pub use events::{Event, EventQueue};

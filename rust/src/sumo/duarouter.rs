@@ -1,0 +1,155 @@
+//! `duarouter`: seeded, randomized demand → concrete departures.
+//!
+//! The Appendix-B script regenerates routes before every run:
+//!
+//! ```text
+//! duarouter --route-files sumo.flow.xml --net-file sumo.net.xml \
+//!           --output-file sumo.rou.xml --randomize-flows true --seed $RANDOM
+//! ```
+//!
+//! This is where the paper's "sources of randomization into each
+//! simulation run" come from: each run draws fresh exponential headways
+//! and jittered driver parameters from its seed, so a thousand runs give
+//! a thousand distinct trajectories.
+
+use crate::util::Rng64;
+use crate::Result;
+
+use super::flow::{FlowFile, VehicleType};
+use super::network::Network;
+use super::state::DriverParams;
+
+/// One scheduled departure (a `<vehicle>` element of `sumo.rou.xml`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Departure {
+    pub id: String,
+    pub time_s: f32,
+    pub route: Vec<String>,
+    pub lane: u32,
+    pub pos_m: f32,
+    pub speed: f32,
+    pub params: DriverParams,
+    pub vtype: VehicleType,
+}
+
+/// The generated `sumo.rou.xml` content.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct RouteFile {
+    pub seed: u64,
+    pub departures: Vec<Departure>,
+}
+
+/// Randomize flows into concrete departures. Deterministic per seed.
+pub fn duarouter(net: &Network, flows: &FlowFile, seed: u64) -> Result<RouteFile> {
+    let mut rng = Rng64::seed_from_u64(seed);
+    let mut departures = Vec::new();
+
+    for flow in &flows.flows {
+        net.validate_route(&flow.route)?;
+        if flow.vehs_per_hour <= 0.0 {
+            continue;
+        }
+        let mean_gap_s = 3600.0 / flow.vehs_per_hour;
+        let mut t = flow.begin_s;
+        let mut k = 0u32;
+        loop {
+            // exponential headway (randomize-flows true)
+            let u: f32 = rng.gen_range_f32(1e-6, 1.0);
+            t += -mean_gap_s * u.ln();
+            if t >= flow.end_s {
+                break;
+            }
+            let base = flow.vtype.params();
+            // per-driver heterogeneity: ±10% on desired speed & headway
+            let jig = |v: f32, r: &mut Rng64| v * (0.9 + 0.2 * r.gen_f32());
+            let params = DriverParams {
+                v0: jig(base.v0, &mut rng),
+                t_headway: jig(base.t_headway, &mut rng),
+                ..base
+            };
+            departures.push(Departure {
+                id: format!("{}.{}", flow.id, k),
+                time_s: t,
+                route: flow.route.clone(),
+                lane: flow.depart_lane,
+                pos_m: flow.depart_pos,
+                speed: flow.depart_speed,
+                params,
+                vtype: flow.vtype,
+            });
+            k += 1;
+        }
+    }
+
+    departures.sort_by(|a, b| a.time_s.total_cmp(&b.time_s));
+    Ok(RouteFile { seed, departures })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sumo::network::MergeScenario;
+
+    fn setup() -> (Network, FlowFile) {
+        (
+            MergeScenario::default().network(),
+            FlowFile::merge_sample(1200.0, 300.0, 600.0),
+        )
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (net, flows) = setup();
+        let a = duarouter(&net, &flows, 42).unwrap();
+        let b = duarouter(&net, &flows, 42).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        // the whole point of the per-run $RANDOM seed
+        let (net, flows) = setup();
+        let a = duarouter(&net, &flows, 1).unwrap();
+        let b = duarouter(&net, &flows, 2).unwrap();
+        assert_ne!(a.departures, b.departures);
+    }
+
+    #[test]
+    fn rate_roughly_matches_demand() {
+        let (net, flows) = setup();
+        let r = duarouter(&net, &flows, 7).unwrap();
+        let expect = flows.total_expected_vehicles();
+        let got = r.departures.len() as f32;
+        assert!(
+            (got - expect).abs() < expect * 0.35,
+            "got {got}, expected ~{expect}"
+        );
+    }
+
+    #[test]
+    fn departures_sorted_by_time() {
+        let (net, flows) = setup();
+        let r = duarouter(&net, &flows, 9).unwrap();
+        assert!(r
+            .departures
+            .windows(2)
+            .all(|w| w[0].time_s <= w[1].time_s));
+    }
+
+    #[test]
+    fn invalid_route_rejected() {
+        let (net, mut flows) = setup();
+        flows.flows[0].route = vec!["nonexistent".into()];
+        assert!(duarouter(&net, &flows, 1).is_err());
+    }
+
+    #[test]
+    fn driver_params_are_heterogeneous() {
+        let (net, flows) = setup();
+        let r = duarouter(&net, &flows, 11).unwrap();
+        let v0s: Vec<f32> = r.departures.iter().map(|d| d.params.v0).collect();
+        let min = v0s.iter().cloned().fold(f32::INFINITY, f32::min);
+        let max = v0s.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert!(max - min > 1.0, "v0 spread {min}..{max}");
+    }
+}

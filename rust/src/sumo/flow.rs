@@ -1,0 +1,133 @@
+//! Demand definitions: the `sumo.flow.xml` side.
+
+
+use super::state::DriverParams;
+
+/// Vehicle type: parameter template + CAV flag.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum VehicleType {
+    /// Human-driven passenger car (IDM defaults).
+    Human,
+    /// Connected autonomous vehicle (tighter headway profile).
+    Cav,
+}
+
+impl VehicleType {
+    pub fn params(&self) -> DriverParams {
+        match self {
+            VehicleType::Human => DriverParams::default(),
+            VehicleType::Cav => DriverParams::cav(),
+        }
+    }
+}
+
+/// One `<flow>` element: a stream of departures on a route.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlowDef {
+    pub id: String,
+    /// Route as edge ids (validated against the net).
+    pub route: Vec<String>,
+    /// Demand rate [vehicles/hour].
+    pub vehs_per_hour: f32,
+    /// Initial speed at insertion [m/s].
+    pub depart_speed: f32,
+    /// Lane at insertion (the merge scenario: 0 = ramp, 1.. = mainline).
+    pub depart_lane: u32,
+    /// Insertion position [m].
+    pub depart_pos: f32,
+    pub vtype: VehicleType,
+    /// Flow window [s].
+    pub begin_s: f32,
+    pub end_s: f32,
+}
+
+/// The full `sumo.flow.xml` content.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FlowFile {
+    pub flows: Vec<FlowDef>,
+}
+
+impl FlowFile {
+    /// The sample merge workload: mainline traffic on both lanes plus a
+    /// CAV-bearing ramp flow.
+    pub fn merge_sample(mainline_vph: f32, ramp_vph: f32, horizon_s: f32) -> Self {
+        let main_route = vec![
+            "main_in".to_string(),
+            "merge_zone".to_string(),
+            "main_out".to_string(),
+        ];
+        let ramp_route = vec![
+            "ramp".to_string(),
+            "merge_zone".to_string(),
+            "main_out".to_string(),
+        ];
+        FlowFile {
+            flows: vec![
+                FlowDef {
+                    id: "main_l1".into(),
+                    route: main_route.clone(),
+                    vehs_per_hour: mainline_vph / 2.0,
+                    depart_speed: 25.0,
+                    depart_lane: 1,
+                    depart_pos: 0.0,
+                    vtype: VehicleType::Human,
+                    begin_s: 0.0,
+                    end_s: horizon_s,
+                },
+                FlowDef {
+                    id: "main_l2".into(),
+                    route: main_route,
+                    vehs_per_hour: mainline_vph / 2.0,
+                    depart_speed: 25.0,
+                    depart_lane: 2,
+                    depart_pos: 0.0,
+                    vtype: VehicleType::Human,
+                    begin_s: 0.0,
+                    end_s: horizon_s,
+                },
+                FlowDef {
+                    id: "ramp_cav".into(),
+                    route: ramp_route,
+                    vehs_per_hour: ramp_vph,
+                    depart_speed: 15.0,
+                    depart_lane: 0,
+                    depart_pos: 50.0,
+                    vtype: VehicleType::Cav,
+                    begin_s: 0.0,
+                    end_s: horizon_s,
+                },
+            ],
+        }
+    }
+
+    pub fn total_expected_vehicles(&self) -> f32 {
+        self.flows
+            .iter()
+            .map(|f| f.vehs_per_hour * (f.end_s - f.begin_s) / 3600.0)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_sample_has_three_flows() {
+        let f = FlowFile::merge_sample(1200.0, 300.0, 300.0);
+        assert_eq!(f.flows.len(), 3);
+        assert_eq!(f.flows[2].vtype, VehicleType::Cav);
+        assert_eq!(f.flows[2].depart_lane, 0);
+    }
+
+    #[test]
+    fn expected_vehicle_count() {
+        let f = FlowFile::merge_sample(1200.0, 300.0, 3600.0);
+        assert!((f.total_expected_vehicles() - 1500.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn vehicle_types_have_distinct_params() {
+        assert!(VehicleType::Cav.params().t_headway < VehicleType::Human.params().t_headway);
+    }
+}

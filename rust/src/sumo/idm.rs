@@ -1,0 +1,268 @@
+//! Pure-rust IDM car-following — the native baseline stepper.
+//!
+//! A line-for-line port of `python/compile/model.py` (same mask-min
+//! leader selection, same constants), used (a) as the baseline
+//! comparator the HLO path is validated against
+//! (`rust/tests/runtime_numerics.rs`), and (b) as the physics engine for
+//! runs that don't need PJRT.  All math in f32 to mirror the artifact.
+
+use super::mobil::{self, MobilParams};
+use super::network::MergeScenario;
+use super::simulation::{StepObs, Stepper};
+use super::state::{Traffic, P_AMAX, P_B, P_LEN, P_S0, P_T, P_V0};
+
+/// "Infinite" gap sentinel — matches `ref.FREE_GAP`.
+pub const FREE_GAP: f32 = 1.0e6;
+/// Gap floor — matches `ref.MIN_GAP`.
+pub const MIN_GAP: f32 = 0.5;
+
+/// Leader scan result for one ego.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Leader {
+    /// Bumper-to-bumper gap (FREE_GAP when none).
+    pub gap: f32,
+    /// Leader speed (own speed when none).
+    pub v: f32,
+    pub exists: bool,
+}
+
+/// Nearest active vehicle ahead on the same lane, mask-min tie-breaking
+/// (smallest speed/length among co-located leaders) — mirrors
+/// `ref.leader_scan_ref`.
+pub fn leader_scan(t: &Traffic, i: usize) -> Leader {
+    let xi = t.x(i);
+    let li = t.lane(i);
+    let mut center = FREE_GAP;
+    for j in 0..t.capacity() {
+        if !t.is_active(j) {
+            continue;
+        }
+        let dx = t.x(j) - xi;
+        if dx > 1e-6 && (t.lane(j) - li).abs() < 0.5 && dx < center {
+            center = dx;
+        }
+    }
+    if center >= FREE_GAP * 0.5 {
+        return Leader {
+            gap: FREE_GAP,
+            v: t.v(i),
+            exists: false,
+        };
+    }
+    // mask-min attribute selection among exact ties
+    let mut lv = FREE_GAP;
+    let mut llen = FREE_GAP;
+    for j in 0..t.capacity() {
+        if !t.is_active(j) {
+            continue;
+        }
+        let dx = t.x(j) - xi;
+        if dx > 1e-6 && (t.lane(j) - li).abs() < 0.5 && dx <= center {
+            lv = lv.min(t.v(j));
+            llen = llen.min(t.param(j, P_LEN));
+        }
+    }
+    Leader {
+        gap: center - llen,
+        v: lv,
+        exists: true,
+    }
+}
+
+/// The IDM law — mirrors `ref.idm_accel_ref` for one vehicle.
+pub fn idm_law(v: f32, gap: f32, dv: f32, has_leader: bool, p: &[f32; 6]) -> f32 {
+    let s = gap.max(MIN_GAP);
+    let v0 = p[P_V0].max(0.1);
+    let a_max = p[P_AMAX].max(1e-3);
+    let b = p[P_B].max(1e-3);
+    let s_star = (p[P_S0] + v * p[P_T] + v * dv / (2.0 * (a_max * b).sqrt())).max(0.0);
+    let free = 1.0 - (v / v0).powi(4);
+    let interaction = if has_leader { (s_star / s).powi(2) } else { 0.0 };
+    a_max * (free - interaction)
+}
+
+fn params_row(t: &Traffic, i: usize) -> [f32; 6] {
+    [
+        t.param(i, P_V0),
+        t.param(i, P_T),
+        t.param(i, P_AMAX),
+        t.param(i, P_B),
+        t.param(i, P_S0),
+        t.param(i, P_LEN),
+    ]
+}
+
+/// Car-following acceleration for every vehicle (inactive → 0).
+pub fn idm_accel_all(t: &Traffic) -> Vec<f32> {
+    (0..t.capacity())
+        .map(|i| {
+            if !t.is_active(i) {
+                return 0.0;
+            }
+            let l = leader_scan(t, i);
+            let p = params_row(t, i);
+            idm_law(t.v(i), l.gap, t.v(i) - l.v, l.exists, &p)
+        })
+        .collect()
+}
+
+/// Phantom-wall deceleration for ramp vehicles approaching MERGE_END —
+/// mirrors `model._wall_accel`.
+pub fn wall_accel(t: &Traffic, i: usize, scenario: &MergeScenario) -> f32 {
+    let on_ramp = (t.lane(i) - MergeScenario::RAMP_LANE).abs() < 0.5;
+    let gap = if on_ramp {
+        (scenario.merge_end_m - t.x(i)).max(MIN_GAP * 0.1)
+    } else {
+        FREE_GAP
+    };
+    let p = params_row(t, i);
+    let v = t.v(i);
+    // wall speed = 0 → dv = v; `model._idm_for` treats any gap < FREE/2
+    // as an interaction
+    let has = gap < FREE_GAP * 0.5;
+    idm_law(v, gap, v, has, &p)
+}
+
+/// The native stepper: full merge-sim step (IDM + wall + MOBIL +
+/// integration), mirroring `model.step`.
+#[derive(Debug, Clone)]
+pub struct NativeIdmStepper {
+    pub scenario: MergeScenario,
+    pub mobil: MobilParams,
+}
+
+impl Default for NativeIdmStepper {
+    fn default() -> Self {
+        NativeIdmStepper {
+            scenario: MergeScenario::default(),
+            mobil: MobilParams::default(),
+        }
+    }
+}
+
+impl Stepper for NativeIdmStepper {
+    fn step(&mut self, t: &mut Traffic) -> StepObs {
+        let n = t.capacity();
+        let dt = self.scenario.dt_s;
+
+        // accelerations
+        let a_follow = idm_accel_all(t);
+        let accel: Vec<f32> = (0..n)
+            .map(|i| {
+                if !t.is_active(i) {
+                    return 0.0;
+                }
+                a_follow[i].min(wall_accel(t, i, &self.scenario))
+            })
+            .collect();
+
+        // lane decisions (computed against the pre-step state, like the
+        // vectorized model)
+        let decisions = mobil::decide_all(t, &accel, &self.scenario, &self.mobil);
+
+        // integrate
+        let mut flow = 0.0f32;
+        let mut n_merged = 0.0f32;
+        let n_active_before = t.active_count() as f32;
+        let mean_v_before = t.mean_speed();
+
+        for i in 0..n {
+            if !t.is_active(i) {
+                // mirror the vectorized model exactly: inactive rows hold
+                // position but their speed is forced to zero
+                let (x, lane) = (t.x(i), t.lane(i));
+                t.set_state_row(i, x, 0.0, lane, false);
+                continue;
+            }
+            let new_lane = decisions[i].unwrap_or(t.lane(i));
+            if decisions[i].is_some() && (t.lane(i) - MergeScenario::RAMP_LANE).abs() < 0.5 {
+                n_merged += 1.0;
+            }
+            let new_v = (t.v(i) + accel[i] * dt).max(0.0);
+            let x_old = t.x(i);
+            let new_x = x_old + new_v * dt;
+            let crossed = new_x >= self.scenario.road_end_m && x_old < self.scenario.road_end_m;
+            if crossed {
+                flow += 1.0;
+            }
+            t.set_state_row(i, new_x, new_v, new_lane, !crossed);
+        }
+
+        StepObs {
+            n_active: n_active_before,
+            mean_speed: mean_v_before,
+            flow,
+            n_merged,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sumo::state::DriverParams;
+
+    fn traffic(rows: &[(f32, f32, f32)]) -> Traffic {
+        let mut t = Traffic::new(rows.len());
+        for &(x, v, lane) in rows {
+            t.spawn(x, v, lane, DriverParams::default());
+        }
+        t
+    }
+
+    #[test]
+    fn lone_vehicle_free_accelerates() {
+        let t = traffic(&[(100.0, 20.0, 1.0)]);
+        let a = idm_accel_all(&t);
+        let expect = 1.5 * (1.0 - (20.0f32 / 30.0).powi(4));
+        assert!((a[0] - expect).abs() < 1e-5);
+    }
+
+    #[test]
+    fn leader_scan_finds_nearest_same_lane() {
+        let t = traffic(&[(100.0, 20.0, 1.0), (150.0, 10.0, 1.0), (120.0, 5.0, 2.0)]);
+        let l = leader_scan(&t, 0);
+        assert!(l.exists);
+        assert!((l.gap - (50.0 - 4.5)).abs() < 1e-4);
+        assert_eq!(l.v, 10.0);
+    }
+
+    #[test]
+    fn tailgater_brakes() {
+        let t = traffic(&[(100.0, 30.0, 1.0), (106.0, 0.0, 1.0)]);
+        let a = idm_accel_all(&t);
+        assert!(a[0] < -10.0);
+    }
+
+    #[test]
+    fn wall_stops_ramp_vehicle() {
+        let scenario = MergeScenario::default();
+        let mut t = Traffic::new(1);
+        t.spawn(450.0, 20.0, 0.0, DriverParams::default());
+        let a = wall_accel(&t, 0, &scenario);
+        assert!(a < -1.0, "approaching wall at 20 m/s from 50 m: {a}");
+        // mainline vehicle sees no wall
+        let mut t2 = Traffic::new(1);
+        t2.spawn(450.0, 20.0, 1.0, DriverParams::default());
+        assert!(wall_accel(&t2, 0, &scenario) > 0.0);
+    }
+
+    #[test]
+    fn step_retires_at_road_end() {
+        let mut s = NativeIdmStepper::default();
+        let mut t = traffic(&[(999.5, 30.0, 1.0)]);
+        let obs = s.step(&mut t);
+        assert_eq!(obs.flow, 1.0);
+        assert!(!t.is_active(0));
+    }
+
+    #[test]
+    fn step_speed_never_negative() {
+        let mut s = NativeIdmStepper::default();
+        let mut t = traffic(&[(100.0, 0.5, 1.0), (103.0, 0.0, 1.0)]);
+        for _ in 0..50 {
+            s.step(&mut t);
+        }
+        assert!(t.v(0) >= 0.0);
+    }
+}

@@ -1,0 +1,232 @@
+//! MOBIL-style lane-change decisions — mirrors the lane-change block of
+//! `python/compile/model.py` (mandatory merge for ramp vehicles inside
+//! the merge zone, discretionary changes on the mainline).
+
+use super::idm::{idm_law, FREE_GAP};
+use super::network::MergeScenario;
+use super::state::{Traffic, P_LEN, P_S0};
+
+/// MOBIL tuning — constants shared with `model.py`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MobilParams {
+    /// Max deceleration imposed on the new follower [m/s²].
+    pub safe_decel: f32,
+    /// Discretionary incentive threshold [m/s²].
+    pub threshold: f32,
+    /// Politeness factor.
+    pub politeness: f32,
+}
+
+impl Default for MobilParams {
+    fn default() -> Self {
+        MobilParams {
+            safe_decel: 4.0,
+            threshold: 0.2,
+            politeness: 0.3,
+        }
+    }
+}
+
+/// Lead/lag situation in a hypothetical target lane.
+#[derive(Debug, Clone, Copy)]
+pub struct LaneGaps {
+    pub lead_gap: f32,
+    pub lead_v: f32,
+    pub lag_gap: f32,
+    pub lag_v: f32,
+}
+
+/// Mirror of `model._lane_gap_scan` for one ego and target lane.
+pub fn lane_gap_scan(t: &Traffic, i: usize, target_lane: f32) -> LaneGaps {
+    let xi = t.x(i);
+    let mut lead_center = FREE_GAP;
+    let mut lag_center = FREE_GAP;
+    for j in 0..t.capacity() {
+        if !t.is_active(j) || (t.lane(j) - target_lane).abs() >= 0.5 {
+            continue;
+        }
+        let dx = t.x(j) - xi;
+        if dx > 1e-6 {
+            lead_center = lead_center.min(dx);
+        } else if dx < -1e-6 {
+            lag_center = lag_center.min(-dx);
+        }
+    }
+    // mask-min attribute selection (tie-break identical to the model)
+    let (mut lead_v, mut lead_len, mut lag_v) = (FREE_GAP, FREE_GAP, FREE_GAP);
+    for j in 0..t.capacity() {
+        if !t.is_active(j) || (t.lane(j) - target_lane).abs() >= 0.5 {
+            continue;
+        }
+        let dx = t.x(j) - xi;
+        if dx > 1e-6 && dx <= lead_center {
+            lead_v = lead_v.min(t.v(j));
+            lead_len = lead_len.min(t.param(j, P_LEN));
+        } else if dx < -1e-6 && -dx <= lag_center {
+            lag_v = lag_v.min(t.v(j));
+        }
+    }
+    let lead_has = lead_center < FREE_GAP * 0.5;
+    let lag_has = lag_center < FREE_GAP * 0.5;
+    LaneGaps {
+        lead_gap: if lead_has {
+            lead_center - lead_len
+        } else {
+            FREE_GAP
+        },
+        lead_v: if lead_has { lead_v } else { t.v(i) },
+        lag_gap: if lag_has {
+            lag_center - t.param(i, P_LEN)
+        } else {
+            FREE_GAP
+        },
+        lag_v: if lag_has { lag_v } else { t.v(i) },
+    }
+}
+
+struct Incentive {
+    a_self_new: f32,
+    a_lag_new: f32,
+    safe: bool,
+}
+
+fn incentive(t: &Traffic, i: usize, target_lane: f32, m: &MobilParams) -> Incentive {
+    let g = lane_gap_scan(t, i, target_lane);
+    let p = [
+        t.param(i, 0),
+        t.param(i, 1),
+        t.param(i, 2),
+        t.param(i, 3),
+        t.param(i, 4),
+        t.param(i, 5),
+    ];
+    let v = t.v(i);
+    let a_self_new = idm_law(v, g.lead_gap, v - g.lead_v, g.lead_gap < FREE_GAP * 0.5, &p);
+    // the follower's hypothetical accel if it had to follow us (the model
+    // evaluates it with the *ego's* params row — mirror that exactly)
+    let a_lag_new = idm_law(
+        g.lag_v,
+        g.lag_gap,
+        g.lag_v - v,
+        g.lag_gap < FREE_GAP * 0.5,
+        &p,
+    );
+    let s0 = t.param(i, P_S0);
+    let safe = g.lead_gap > s0 && g.lag_gap > s0 && a_lag_new > -m.safe_decel;
+    Incentive {
+        a_self_new,
+        a_lag_new,
+        safe,
+    }
+}
+
+/// Decide lane changes for every vehicle against the pre-step state.
+/// Returns `Some(new_lane)` for changers, `None` otherwise.
+pub fn decide_all(
+    t: &Traffic,
+    accel: &[f32],
+    scenario: &MergeScenario,
+    m: &MobilParams,
+) -> Vec<Option<f32>> {
+    let max_lane = scenario.num_main_lanes as f32;
+    (0..t.capacity())
+        .map(|i| {
+            if !t.is_active(i) {
+                return None;
+            }
+            let lane = t.lane(i);
+            let x = t.x(i);
+            let on_ramp = (lane - MergeScenario::RAMP_LANE).abs() < 0.5;
+
+            if on_ramp {
+                // mandatory merge inside the zone, whenever safe
+                let in_zone = x >= scenario.merge_start_m && x <= scenario.merge_end_m;
+                if in_zone && incentive(t, i, 1.0, m).safe {
+                    return Some(1.0);
+                }
+                return None;
+            }
+
+            // discretionary: up first, then down (model's priority)
+            let tgt_up = (lane + 1.0).min(max_lane);
+            let tgt_down = (lane - 1.0).max(1.0);
+            if tgt_up > lane + 0.5 {
+                let inc = incentive(t, i, tgt_up, m);
+                let gain = inc.a_self_new - accel[i] - m.politeness * (-inc.a_lag_new).max(0.0);
+                if inc.safe && gain > m.threshold {
+                    return Some(tgt_up);
+                }
+            }
+            if tgt_down < lane - 0.5 {
+                let inc = incentive(t, i, tgt_down, m);
+                let gain = inc.a_self_new - accel[i] - m.politeness * (-inc.a_lag_new).max(0.0);
+                if inc.safe && gain > m.threshold {
+                    return Some(tgt_down);
+                }
+            }
+            None
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sumo::idm::idm_accel_all;
+    use crate::sumo::state::DriverParams;
+
+    fn traffic(rows: &[(f32, f32, f32)]) -> Traffic {
+        let mut t = Traffic::new(rows.len());
+        for &(x, v, lane) in rows {
+            t.spawn(x, v, lane, DriverParams::default());
+        }
+        t
+    }
+
+    fn decide(t: &Traffic) -> Vec<Option<f32>> {
+        let accel = idm_accel_all(t);
+        decide_all(t, &accel, &MergeScenario::default(), &MobilParams::default())
+    }
+
+    #[test]
+    fn ramp_vehicle_merges_into_empty_mainline() {
+        let t = traffic(&[(350.0, 20.0, 0.0)]);
+        assert_eq!(decide(&t)[0], Some(1.0));
+    }
+
+    #[test]
+    fn ramp_vehicle_waits_outside_zone() {
+        let t = traffic(&[(100.0, 20.0, 0.0)]);
+        assert_eq!(decide(&t)[0], None);
+    }
+
+    #[test]
+    fn merge_blocked_by_alongside_vehicle() {
+        let t = traffic(&[(350.0, 20.0, 0.0), (350.4, 20.0, 1.0)]);
+        assert_eq!(decide(&t)[0], None);
+    }
+
+    #[test]
+    fn overtake_slow_leader() {
+        // ego stuck behind a crawler in lane 1, lane 2 empty → move up
+        let t = traffic(&[(100.0, 25.0, 1.0), (112.0, 2.0, 1.0)]);
+        assert_eq!(decide(&t)[0], Some(2.0));
+    }
+
+    #[test]
+    fn no_change_without_incentive() {
+        // free road: staying put is fine
+        let t = traffic(&[(100.0, 25.0, 1.0)]);
+        assert_eq!(decide(&t)[0], None);
+    }
+
+    #[test]
+    fn lane_gap_scan_sees_lead_and_lag() {
+        let t = traffic(&[(100.0, 20.0, 0.0), (120.0, 15.0, 1.0), (80.0, 10.0, 1.0)]);
+        let g = lane_gap_scan(&t, 0, 1.0);
+        assert!((g.lead_gap - (20.0 - 4.5)).abs() < 1e-4);
+        assert_eq!(g.lead_v, 15.0);
+        assert!((g.lag_gap - (20.0 - 4.5)).abs() < 1e-4);
+        assert_eq!(g.lag_v, 10.0);
+    }
+}

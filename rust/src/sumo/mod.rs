@@ -1,0 +1,36 @@
+//! The SUMO substrate: a traffic microsimulator with SUMO's moving parts.
+//!
+//! SUMO is the simulation *back-end* of the paper's pipeline ("think of
+//! Webots as a puppet and SUMO as the puppeteer", §2.5.3).  We implement
+//! the slice the pipeline exercises:
+//!
+//! * [`network`] — road networks (the `sumo.net.xml` side): edges, lanes,
+//!   and the highway-merge geometry of the sample simulation,
+//! * [`xmlio`] — reading/writing the sumo-like config files
+//!   (`sumo.net.xml`, `sumo.flow.xml`, `sumo.rou.xml`),
+//! * [`flow`]/[`duarouter`] — demand: flow definitions and the seeded
+//!   randomized route/departure generation the paper invokes per run
+//!   (`duarouter --randomize-flows true --seed $RANDOM`),
+//! * [`state`] — the flat vehicle-state arrays shared with the AOT HLO
+//!   physics (layout fixed by `python/compile/kernels/ref.py`),
+//! * [`idm`]/[`mobil`] — a pure-rust IDM + MOBIL reference stepper: the
+//!   baseline comparator for the HLO path and the engine for runs that
+//!   don't need PJRT,
+//! * [`simulation`] — the microsim loop: spawning from demand, stepping,
+//!   observables; serves TraCI queries.
+
+pub mod duarouter;
+pub mod flow;
+pub mod idm;
+pub mod mobil;
+pub mod network;
+pub mod simulation;
+pub mod state;
+pub mod xmlio;
+
+pub use duarouter::{duarouter, Departure, RouteFile};
+pub use flow::{FlowDef, FlowFile, VehicleType};
+pub use idm::NativeIdmStepper;
+pub use network::{Edge, MergeScenario, Network};
+pub use simulation::{StepObs, Stepper, SumoSim};
+pub use state::{Traffic, ACTIVE, LANE, PARAM_COLS, STATE_COLS, V, X};

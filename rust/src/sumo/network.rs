@@ -1,0 +1,167 @@
+//! Road networks: the `sumo.net.xml` side of the config tuple.
+//!
+//! The geometry the AOT physics bakes in (merge zone, road end, lane
+//! count) lives in [`MergeScenario`]; the general [`Network`] model
+//! supports arbitrary edge graphs for non-merge worlds.
+
+
+use crate::{Error, Result};
+
+/// One directed road edge.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Edge {
+    pub id: String,
+    pub from: String,
+    pub to: String,
+    pub length_m: f32,
+    pub num_lanes: u32,
+    pub speed_limit: f32,
+}
+
+/// A road network (nodes are implicit in edge endpoints).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Network {
+    pub edges: Vec<Edge>,
+}
+
+impl Network {
+    pub fn edge(&self, id: &str) -> Result<&Edge> {
+        self.edges
+            .iter()
+            .find(|e| e.id == id)
+            .ok_or_else(|| Error::Config(format!("no such edge '{id}'")))
+    }
+
+    pub fn total_length_m(&self) -> f32 {
+        self.edges.iter().map(|e| e.length_m).sum()
+    }
+
+    /// Validate referential integrity of a route (edge ids exist and are
+    /// head-to-tail connected).
+    pub fn validate_route(&self, edge_ids: &[String]) -> Result<()> {
+        if edge_ids.is_empty() {
+            return Err(Error::Config("empty route".into()));
+        }
+        for pair in edge_ids.windows(2) {
+            let a = self.edge(&pair[0])?;
+            let b = self.edge(&pair[1])?;
+            if a.to != b.from {
+                return Err(Error::Config(format!(
+                    "route discontinuity: {} ends at '{}' but {} starts at '{}'",
+                    a.id, a.to, b.id, b.from
+                )));
+            }
+        }
+        self.edge(edge_ids.last().expect("non-empty"))?;
+        Ok(())
+    }
+}
+
+/// The sample highway-merge scenario of ch. 5: a 2-lane mainline with an
+/// on-ramp acceleration lane.  Constants MUST match `python/compile/
+/// model.py` (asserted against `artifacts/manifest.json` by the runtime
+/// tests).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MergeScenario {
+    pub road_end_m: f32,
+    pub merge_start_m: f32,
+    pub merge_end_m: f32,
+    pub num_main_lanes: u32,
+    pub dt_s: f32,
+}
+
+impl Default for MergeScenario {
+    fn default() -> Self {
+        MergeScenario {
+            road_end_m: 1000.0,
+            merge_start_m: 300.0,
+            merge_end_m: 500.0,
+            num_main_lanes: 2,
+            dt_s: 0.1,
+        }
+    }
+}
+
+impl MergeScenario {
+    /// Lane index of the on-ramp/acceleration lane.
+    pub const RAMP_LANE: f32 = 0.0;
+
+    /// Build the network graph form (for xml round-trips and TraCI).
+    pub fn network(&self) -> Network {
+        Network {
+            edges: vec![
+                Edge {
+                    id: "main_in".into(),
+                    from: "west".into(),
+                    to: "merge_a".into(),
+                    length_m: self.merge_start_m,
+                    num_lanes: self.num_main_lanes,
+                    speed_limit: 30.0,
+                },
+                Edge {
+                    id: "merge_zone".into(),
+                    from: "merge_a".into(),
+                    to: "merge_b".into(),
+                    length_m: self.merge_end_m - self.merge_start_m,
+                    num_lanes: self.num_main_lanes + 1, // + acceleration lane
+                    speed_limit: 30.0,
+                },
+                Edge {
+                    id: "main_out".into(),
+                    from: "merge_b".into(),
+                    to: "east".into(),
+                    length_m: self.road_end_m - self.merge_end_m,
+                    num_lanes: self.num_main_lanes,
+                    speed_limit: 30.0,
+                },
+                Edge {
+                    id: "ramp".into(),
+                    from: "ramp_start".into(),
+                    to: "merge_a".into(),
+                    length_m: self.merge_start_m,
+                    num_lanes: 1,
+                    speed_limit: 20.0,
+                },
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_network_geometry() {
+        let s = MergeScenario::default();
+        let n = s.network();
+        assert_eq!(n.edges.len(), 4);
+        assert_eq!(n.edge("merge_zone").unwrap().num_lanes, 3);
+        assert_eq!(n.total_length_m(), 1000.0 + 300.0);
+    }
+
+    #[test]
+    fn route_validation() {
+        let n = MergeScenario::default().network();
+        let ok = ["main_in", "merge_zone", "main_out"].map(String::from);
+        n.validate_route(&ok).unwrap();
+        let ramp = ["ramp", "merge_zone", "main_out"].map(String::from);
+        n.validate_route(&ramp).unwrap();
+        let bad = ["main_in", "main_out"].map(String::from);
+        assert!(n.validate_route(&bad).is_err());
+        assert!(n.validate_route(&["nope".to_string()]).is_err());
+        assert!(n.validate_route(&[]).is_err());
+    }
+
+    #[test]
+    fn constants_match_model_py() {
+        // duplicated from python/compile/model.py; the runtime test
+        // cross-checks against artifacts/manifest.json too.
+        let s = MergeScenario::default();
+        assert_eq!(s.road_end_m, 1000.0);
+        assert_eq!(s.merge_start_m, 300.0);
+        assert_eq!(s.merge_end_m, 500.0);
+        assert_eq!(s.num_main_lanes, 2);
+        assert!((s.dt_s - 0.1).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,218 @@
+//! Flat vehicle-state arrays — the ABI shared with the AOT physics.
+//!
+//! Layout is fixed by `python/compile/kernels/ref.py` and recorded in
+//! `artifacts/manifest.json`:
+//!
+//! ```text
+//! state  f32[N, 4]: [x, v, lane, active]
+//! params f32[N, 6]: [v0, T, a_max, b, s0, length]
+//! ```
+//!
+//! `N` is a *bucket capacity*, not the live vehicle count: inactive rows
+//! (active == 0) are spawn slots the coordinator writes into.
+
+pub const STATE_COLS: usize = 4;
+pub const PARAM_COLS: usize = 6;
+
+// state columns
+pub const X: usize = 0;
+pub const V: usize = 1;
+pub const LANE: usize = 2;
+pub const ACTIVE: usize = 3;
+
+// param columns
+pub const P_V0: usize = 0;
+pub const P_T: usize = 1;
+pub const P_AMAX: usize = 2;
+pub const P_B: usize = 3;
+pub const P_S0: usize = 4;
+pub const P_LEN: usize = 5;
+
+/// Per-vehicle driver/vehicle parameters (one `params` row).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriverParams {
+    pub v0: f32,
+    pub t_headway: f32,
+    pub a_max: f32,
+    pub b_comf: f32,
+    pub s0: f32,
+    pub length: f32,
+}
+
+impl Default for DriverParams {
+    fn default() -> Self {
+        // standard IDM passenger-car calibration
+        DriverParams {
+            v0: 30.0,
+            t_headway: 1.5,
+            a_max: 1.5,
+            b_comf: 2.0,
+            s0: 2.0,
+            length: 4.5,
+        }
+    }
+}
+
+impl DriverParams {
+    /// A connected-autonomous-vehicle profile: tighter headway, smoother
+    /// accelerations (the CAV of the Phase-II merge scenario).
+    pub fn cav() -> Self {
+        DriverParams {
+            v0: 30.0,
+            t_headway: 0.9,
+            a_max: 1.8,
+            b_comf: 2.5,
+            s0: 1.5,
+            length: 4.5,
+        }
+    }
+}
+
+/// The traffic state: `cap` slots of state+params, flat row-major f32 —
+/// exactly what the PJRT executable consumes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Traffic {
+    cap: usize,
+    pub state: Vec<f32>,
+    pub params: Vec<f32>,
+}
+
+impl Traffic {
+    pub fn new(cap: usize) -> Self {
+        Traffic {
+            cap,
+            state: vec![0.0; cap * STATE_COLS],
+            params: vec![0.0; cap * PARAM_COLS],
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    #[inline]
+    pub fn x(&self, i: usize) -> f32 {
+        self.state[i * STATE_COLS + X]
+    }
+
+    #[inline]
+    pub fn v(&self, i: usize) -> f32 {
+        self.state[i * STATE_COLS + V]
+    }
+
+    #[inline]
+    pub fn lane(&self, i: usize) -> f32 {
+        self.state[i * STATE_COLS + LANE]
+    }
+
+    #[inline]
+    pub fn is_active(&self, i: usize) -> bool {
+        self.state[i * STATE_COLS + ACTIVE] > 0.5
+    }
+
+    #[inline]
+    pub fn param(&self, i: usize, col: usize) -> f32 {
+        self.params[i * PARAM_COLS + col]
+    }
+
+    pub fn set_state_row(&mut self, i: usize, x: f32, v: f32, lane: f32, active: bool) {
+        let o = i * STATE_COLS;
+        self.state[o + X] = x;
+        self.state[o + V] = v;
+        self.state[o + LANE] = lane;
+        self.state[o + ACTIVE] = if active { 1.0 } else { 0.0 };
+    }
+
+    pub fn set_params_row(&mut self, i: usize, p: DriverParams) {
+        let o = i * PARAM_COLS;
+        self.params[o + P_V0] = p.v0;
+        self.params[o + P_T] = p.t_headway;
+        self.params[o + P_AMAX] = p.a_max;
+        self.params[o + P_B] = p.b_comf;
+        self.params[o + P_S0] = p.s0;
+        self.params[o + P_LEN] = p.length;
+    }
+
+    /// First inactive slot, if any — where the next departure spawns.
+    pub fn free_slot(&self) -> Option<usize> {
+        (0..self.cap).find(|&i| !self.is_active(i))
+    }
+
+    pub fn active_count(&self) -> usize {
+        (0..self.cap).filter(|&i| self.is_active(i)).count()
+    }
+
+    /// Spawn a vehicle into a free slot; `None` when the bucket is full
+    /// (the demand generator backs off — matching SUMO's insertion queue).
+    pub fn spawn(&mut self, x: f32, v: f32, lane: f32, p: DriverParams) -> Option<usize> {
+        let slot = self.free_slot()?;
+        self.set_state_row(slot, x, v, lane, true);
+        self.set_params_row(slot, p);
+        Some(slot)
+    }
+
+    pub fn deactivate(&mut self, i: usize) {
+        self.state[i * STATE_COLS + ACTIVE] = 0.0;
+    }
+
+    /// Mean speed over active vehicles (0 when empty).
+    pub fn mean_speed(&self) -> f32 {
+        let mut sum = 0.0f32;
+        let mut n = 0u32;
+        for i in 0..self.cap {
+            if self.is_active(i) {
+                sum += self.v(i);
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spawn_fills_slots_in_order() {
+        let mut t = Traffic::new(3);
+        assert_eq!(t.spawn(0.0, 10.0, 1.0, DriverParams::default()), Some(0));
+        assert_eq!(t.spawn(5.0, 10.0, 1.0, DriverParams::default()), Some(1));
+        assert_eq!(t.spawn(9.0, 10.0, 2.0, DriverParams::default()), Some(2));
+        assert_eq!(t.spawn(9.0, 10.0, 2.0, DriverParams::default()), None);
+        assert_eq!(t.active_count(), 3);
+    }
+
+    #[test]
+    fn deactivated_slot_is_reused() {
+        let mut t = Traffic::new(2);
+        t.spawn(0.0, 10.0, 1.0, DriverParams::default());
+        t.spawn(5.0, 10.0, 1.0, DriverParams::default());
+        t.deactivate(0);
+        assert_eq!(t.free_slot(), Some(0));
+        assert_eq!(t.spawn(1.0, 2.0, 0.0, DriverParams::cav()), Some(0));
+        assert_eq!(t.lane(0), 0.0);
+    }
+
+    #[test]
+    fn rows_are_flat_and_contiguous() {
+        let mut t = Traffic::new(2);
+        t.set_state_row(1, 7.0, 8.0, 2.0, true);
+        assert_eq!(&t.state[4..8], &[7.0, 8.0, 2.0, 1.0]);
+        assert_eq!(t.state.len(), 8);
+        assert_eq!(t.params.len(), 12);
+    }
+
+    #[test]
+    fn mean_speed_ignores_inactive() {
+        let mut t = Traffic::new(3);
+        t.spawn(0.0, 10.0, 1.0, DriverParams::default());
+        t.spawn(5.0, 20.0, 1.0, DriverParams::default());
+        t.deactivate(1);
+        assert_eq!(t.mean_speed(), 10.0);
+    }
+}

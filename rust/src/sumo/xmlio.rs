@@ -1,0 +1,163 @@
+//! Reading/writing the sumo-like configuration files.
+//!
+//! The pipeline shuttles three files per simulation copy (§3.1.4):
+//! `sumo.net.xml` (network), `sumo.flow.xml` (demand) and `sumo.rou.xml`
+//! (generated routes).  We serialize a faithful XML-ish subset — enough
+//! for the world-copy propagation and the preprocessing step the paper
+//! performs "prior to executing the singularity exec command".
+
+use std::path::Path;
+
+use crate::{Error, Result};
+
+use super::flow::{FlowDef, FlowFile, VehicleType};
+use super::network::{Edge, Network};
+
+/// Serialize the network to `sumo.net.xml`-style text.
+pub fn write_net_xml(net: &Network) -> String {
+    let mut s = String::from("<net>\n");
+    for e in &net.edges {
+        s.push_str(&format!(
+            "  <edge id=\"{}\" from=\"{}\" to=\"{}\" length=\"{}\" numLanes=\"{}\" speed=\"{}\"/>\n",
+            e.id, e.from, e.to, e.length_m, e.num_lanes, e.speed_limit
+        ));
+    }
+    s.push_str("</net>\n");
+    s
+}
+
+/// Parse `sumo.net.xml`-style text.
+pub fn read_net_xml(text: &str) -> Result<Network> {
+    let mut edges = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if !line.starts_with("<edge ") {
+            continue;
+        }
+        edges.push(Edge {
+            id: attr(line, "id")?,
+            from: attr(line, "from")?,
+            to: attr(line, "to")?,
+            length_m: attr(line, "length")?.parse().map_err(bad("length"))?,
+            num_lanes: attr(line, "numLanes")?.parse().map_err(bad("numLanes"))?,
+            speed_limit: attr(line, "speed")?.parse().map_err(bad("speed"))?,
+        });
+    }
+    if edges.is_empty() {
+        return Err(Error::Config("net.xml contains no edges".into()));
+    }
+    Ok(Network { edges })
+}
+
+/// Serialize demand to `sumo.flow.xml`-style text.
+pub fn write_flow_xml(flows: &FlowFile) -> String {
+    let mut s = String::from("<routes>\n");
+    for f in &flows.flows {
+        s.push_str(&format!(
+            "  <flow id=\"{}\" route=\"{}\" vehsPerHour=\"{}\" departSpeed=\"{}\" departLane=\"{}\" departPos=\"{}\" type=\"{}\" begin=\"{}\" end=\"{}\"/>\n",
+            f.id,
+            f.route.join(" "),
+            f.vehs_per_hour,
+            f.depart_speed,
+            f.depart_lane,
+            f.depart_pos,
+            match f.vtype { VehicleType::Human => "human", VehicleType::Cav => "cav" },
+            f.begin_s,
+            f.end_s,
+        ));
+    }
+    s.push_str("</routes>\n");
+    s
+}
+
+/// Parse `sumo.flow.xml`-style text.
+pub fn read_flow_xml(text: &str) -> Result<FlowFile> {
+    let mut flows = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if !line.starts_with("<flow ") {
+            continue;
+        }
+        flows.push(FlowDef {
+            id: attr(line, "id")?,
+            route: attr(line, "route")?
+                .split_whitespace()
+                .map(String::from)
+                .collect(),
+            vehs_per_hour: attr(line, "vehsPerHour")?.parse().map_err(bad("vehsPerHour"))?,
+            depart_speed: attr(line, "departSpeed")?.parse().map_err(bad("departSpeed"))?,
+            depart_lane: attr(line, "departLane")?.parse().map_err(bad("departLane"))?,
+            depart_pos: attr(line, "departPos")?.parse().map_err(bad("departPos"))?,
+            vtype: match attr(line, "type")?.as_str() {
+                "cav" => VehicleType::Cav,
+                _ => VehicleType::Human,
+            },
+            begin_s: attr(line, "begin")?.parse().map_err(bad("begin"))?,
+            end_s: attr(line, "end")?.parse().map_err(bad("end"))?,
+        });
+    }
+    Ok(FlowFile { flows })
+}
+
+pub fn save(path: &Path, text: &str) -> Result<()> {
+    std::fs::write(path, text)?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<String> {
+    Ok(std::fs::read_to_string(path)?)
+}
+
+fn attr(line: &str, name: &str) -> Result<String> {
+    let pat = format!("{name}=\"");
+    let start = line
+        .find(&pat)
+        .ok_or_else(|| Error::Config(format!("missing attribute '{name}' in: {line}")))?
+        + pat.len();
+    let end = line[start..]
+        .find('"')
+        .ok_or_else(|| Error::Config(format!("unterminated attribute '{name}'")))?;
+    Ok(line[start..start + end].to_string())
+}
+
+fn bad<E: std::fmt::Display>(name: &'static str) -> impl Fn(E) -> Error {
+    move |e| Error::Config(format!("bad {name}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sumo::network::MergeScenario;
+
+    #[test]
+    fn net_xml_roundtrip() {
+        let net = MergeScenario::default().network();
+        let xml = write_net_xml(&net);
+        let back = read_net_xml(&xml).unwrap();
+        assert_eq!(net, back);
+    }
+
+    #[test]
+    fn flow_xml_roundtrip() {
+        let flows = FlowFile::merge_sample(1200.0, 300.0, 600.0);
+        let xml = write_flow_xml(&flows);
+        let back = read_flow_xml(&xml).unwrap();
+        assert_eq!(flows, back);
+    }
+
+    #[test]
+    fn missing_attribute_rejected() {
+        assert!(read_net_xml("<net>\n<edge id=\"a\"/>\n</net>").is_err());
+        assert!(read_net_xml("<net></net>").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = crate::util::TempDir::new("webots-hpc-xmlio").unwrap();
+        let p = dir.path().join("sumo.net.xml");
+        let net = MergeScenario::default().network();
+        save(&p, &write_net_xml(&net)).unwrap();
+        let back = read_net_xml(&load(&p).unwrap()).unwrap();
+        assert_eq!(net, back);
+    }
+}

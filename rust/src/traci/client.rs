@@ -1,0 +1,109 @@
+//! The TraCI client: Webots' side of the socket (the SUMO Interface
+//! node connects through this).
+
+use std::io::Write;
+use std::net::TcpStream;
+
+use crate::{Error, Result};
+
+use super::protocol::{read_frame, Command, Response};
+
+/// A connected TraCI client.
+pub struct TraciClient {
+    stream: TcpStream,
+}
+
+impl TraciClient {
+    pub fn connect(port: u16) -> Result<TraciClient> {
+        let stream = TcpStream::connect(("127.0.0.1", port))?;
+        stream.set_nodelay(true)?;
+        Ok(TraciClient { stream })
+    }
+
+    fn call(&mut self, cmd: Command) -> Result<Response> {
+        self.stream.write_all(&cmd.encode())?;
+        let body = read_frame(&mut self.stream)?;
+        let resp = Response::decode(&body)?;
+        if let Response::Err(msg) = &resp {
+            return Err(Error::Protocol(format!("server error: {msg}")));
+        }
+        Ok(resp)
+    }
+
+    pub fn get_version(&mut self) -> Result<(u32, u32)> {
+        match self.call(Command::GetVersion)? {
+            Response::Version { major, minor } => Ok((major, minor)),
+            other => Err(unexpected("Version", &other)),
+        }
+    }
+
+    /// Advance the back-end one DT; returns the per-step observables
+    /// `(n_active, mean_speed, flow, n_merged)`.
+    pub fn sim_step(&mut self) -> Result<(f32, f32, f32, f32)> {
+        match self.call(Command::SimStep)? {
+            Response::Stepped {
+                n_active,
+                mean_speed,
+                flow,
+                n_merged,
+            } => Ok((n_active, mean_speed, flow, n_merged)),
+            other => Err(unexpected("Stepped", &other)),
+        }
+    }
+
+    /// Advance `n` DTs in one round trip; returns per-step observables.
+    pub fn sim_step_n(&mut self, n: u32) -> Result<Vec<(f32, f32, f32, f32)>> {
+        match self.call(Command::SimStepN { n })? {
+            Response::SteppedN(flat) => Ok(flat
+                .chunks_exact(4)
+                .map(|c| (c[0], c[1], c[2], c[3]))
+                .collect()),
+            other => Err(unexpected("SteppedN", &other)),
+        }
+    }
+
+    pub fn get_vehicle_count(&mut self) -> Result<u32> {
+        match self.call(Command::GetVehicleCount)? {
+            Response::VehicleCount(n) => Ok(n),
+            other => Err(unexpected("VehicleCount", &other)),
+        }
+    }
+
+    /// Flat state rows (slots × [x, v, lane, active]).
+    pub fn get_state(&mut self) -> Result<Vec<f32>> {
+        match self.call(Command::GetState)? {
+            Response::State(rows) => Ok(rows),
+            other => Err(unexpected("State", &other)),
+        }
+    }
+
+    pub fn set_speed(&mut self, slot: u32, speed: f32) -> Result<()> {
+        match self.call(Command::SetSpeed { slot, speed })? {
+            Response::Ok => Ok(()),
+            other => Err(unexpected("Ok", &other)),
+        }
+    }
+
+    /// `(total_flow, total_merged, total_spawned)`.
+    pub fn get_totals(&mut self) -> Result<(f32, f32, u64)> {
+        match self.call(Command::GetTotals)? {
+            Response::Totals {
+                flow,
+                merged,
+                spawned,
+            } => Ok((flow, merged, spawned)),
+            other => Err(unexpected("Totals", &other)),
+        }
+    }
+
+    pub fn close(&mut self) -> Result<()> {
+        match self.call(Command::Close)? {
+            Response::Closing => Ok(()),
+            other => Err(unexpected("Closing", &other)),
+        }
+    }
+}
+
+fn unexpected(want: &str, got: &Response) -> Error {
+    Error::Protocol(format!("expected {want}, got {got:?}"))
+}

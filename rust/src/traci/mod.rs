@@ -1,0 +1,20 @@
+//! TraCI — the Traffic Control Interface.
+//!
+//! SUMO's "remote control" protocol (§2.5.2): the Webots SUMO Interface
+//! node connects to a per-simulation TraCI server over TCP and drives the
+//! traffic back-end step by step.  We implement a compact binary protocol
+//! over **real sockets** — which is exactly why the paper's duplicate-port
+//! crash (§4.2.1) reproduces here as a genuine `AddrInUse`: two servers
+//! on one port is a kernel-level impossibility, not a simulated rule.
+//!
+//! * [`protocol`] — message framing and command encoding,
+//! * [`server`] — the SUMO-side listener (one per simulation instance),
+//! * [`client`] — the Webots-side connector.
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+pub use client::TraciClient;
+pub use protocol::{Command, Response, DEFAULT_PORT, PORT_STEP};
+pub use server::TraciServer;

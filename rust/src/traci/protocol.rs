@@ -1,0 +1,362 @@
+//! TraCI wire protocol: length-prefixed binary frames.
+//!
+//! Frame layout (simplified from SUMO's): `u32 len | u8 cmd | payload`.
+//! All integers little-endian; vehicle state payloads are the flat f32
+//! rows of [`crate::sumo::Traffic`].
+
+use crate::{Error, Result};
+
+/// SUMO's default TraCI port; the paper's world files shipped with 8873
+/// and the pipeline "tended to increment the default port value of 8873
+/// by 7 for each successive parallel simulation" (§4.2.1).
+pub const DEFAULT_PORT: u16 = 8873;
+/// The paper's increment between parallel copies.
+pub const PORT_STEP: u16 = 7;
+
+/// Client → server commands.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Command {
+    /// Protocol handshake.
+    GetVersion,
+    /// Advance the simulation one DT.
+    SimStep,
+    /// Advance the simulation `n` DTs in one round trip (§Perf: batches
+    /// socket round-trips between controller sampling points).
+    SimStepN { n: u32 },
+    /// Number of active vehicles.
+    GetVehicleCount,
+    /// Full state snapshot (x, v, lane, active per slot).
+    GetState,
+    /// Override a vehicle's speed (the CAV controller's actuation path).
+    SetSpeed { slot: u32, speed: f32 },
+    /// Cumulative totals (flow, merged, spawned).
+    GetTotals,
+    /// Orderly shutdown.
+    Close,
+}
+
+impl Command {
+    pub fn opcode(&self) -> u8 {
+        match self {
+            Command::GetVersion => 0x00,
+            Command::SimStep => 0x02,
+            Command::SimStepN { .. } => 0x03,
+            Command::GetVehicleCount => 0x10,
+            Command::GetState => 0x11,
+            Command::SetSpeed { .. } => 0x31,
+            Command::GetTotals => 0x12,
+            Command::Close => 0x7f,
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut payload = vec![self.opcode()];
+        match self {
+            Command::SetSpeed { slot, speed } => {
+                payload.extend_from_slice(&slot.to_le_bytes());
+                payload.extend_from_slice(&speed.to_le_bytes());
+            }
+            Command::SimStepN { n } => payload.extend_from_slice(&n.to_le_bytes()),
+            _ => {}
+        }
+        frame(payload)
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Command> {
+        let (op, rest) = buf
+            .split_first()
+            .ok_or_else(|| Error::Protocol("empty command frame".into()))?;
+        Ok(match op {
+            0x00 => Command::GetVersion,
+            0x02 => Command::SimStep,
+            0x03 => {
+                if rest.len() != 4 {
+                    return Err(Error::Protocol(format!(
+                        "SimStepN payload {} bytes, want 4",
+                        rest.len()
+                    )));
+                }
+                Command::SimStepN {
+                    n: u32::from_le_bytes(rest[0..4].try_into().expect("len checked")),
+                }
+            }
+            0x10 => Command::GetVehicleCount,
+            0x11 => Command::GetState,
+            0x31 => {
+                if rest.len() != 8 {
+                    return Err(Error::Protocol(format!(
+                        "SetSpeed payload {} bytes, want 8",
+                        rest.len()
+                    )));
+                }
+                Command::SetSpeed {
+                    slot: u32::from_le_bytes(rest[0..4].try_into().expect("len checked")),
+                    speed: f32::from_le_bytes(rest[4..8].try_into().expect("len checked")),
+                }
+            }
+            0x12 => Command::GetTotals,
+            0x7f => Command::Close,
+            other => return Err(Error::Protocol(format!("unknown opcode {other:#x}"))),
+        })
+    }
+}
+
+/// Server → client responses.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Version { major: u32, minor: u32 },
+    /// Step acknowledged; per-step observables.
+    Stepped { n_active: f32, mean_speed: f32, flow: f32, n_merged: f32 },
+    /// N steps acknowledged; per-step observables, flat
+    /// [n_active, mean_speed, flow, n_merged] × n.
+    SteppedN(Vec<f32>),
+    VehicleCount(u32),
+    /// Flat state rows (len = slots * 4).
+    State(Vec<f32>),
+    Ok,
+    Totals { flow: f32, merged: f32, spawned: u64 },
+    Closing,
+    Err(String),
+}
+
+impl Response {
+    pub fn opcode(&self) -> u8 {
+        match self {
+            Response::Version { .. } => 0x80,
+            Response::Stepped { .. } => 0x82,
+            Response::SteppedN(_) => 0x83,
+            Response::VehicleCount(_) => 0x90,
+            Response::State(_) => 0x91,
+            Response::Ok => 0xa0,
+            Response::Totals { .. } => 0x92,
+            Response::Closing => 0xff,
+            Response::Err(_) => 0xee,
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = vec![self.opcode()];
+        match self {
+            Response::Version { major, minor } => {
+                p.extend_from_slice(&major.to_le_bytes());
+                p.extend_from_slice(&minor.to_le_bytes());
+            }
+            Response::Stepped {
+                n_active,
+                mean_speed,
+                flow,
+                n_merged,
+            } => {
+                for v in [n_active, mean_speed, flow, n_merged] {
+                    p.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Response::SteppedN(obs) => {
+                p.extend_from_slice(&((obs.len() / 4) as u32).to_le_bytes());
+                for v in obs {
+                    p.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Response::VehicleCount(n) => p.extend_from_slice(&n.to_le_bytes()),
+            Response::State(rows) => {
+                p.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+                for v in rows {
+                    p.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Response::Ok | Response::Closing => {}
+            Response::Totals {
+                flow,
+                merged,
+                spawned,
+            } => {
+                p.extend_from_slice(&flow.to_le_bytes());
+                p.extend_from_slice(&merged.to_le_bytes());
+                p.extend_from_slice(&spawned.to_le_bytes());
+            }
+            Response::Err(msg) => {
+                let b = msg.as_bytes();
+                p.extend_from_slice(&(b.len() as u32).to_le_bytes());
+                p.extend_from_slice(b);
+            }
+        }
+        frame(p)
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Response> {
+        let (op, r) = buf
+            .split_first()
+            .ok_or_else(|| Error::Protocol("empty response frame".into()))?;
+        let need = |n: usize| -> Result<()> {
+            if r.len() < n {
+                Err(Error::Protocol(format!(
+                    "short response: {} bytes, need {n}",
+                    r.len()
+                )))
+            } else {
+                Ok(())
+            }
+        };
+        Ok(match op {
+            0x80 => {
+                need(8)?;
+                Response::Version {
+                    major: u32::from_le_bytes(r[0..4].try_into().expect("len checked")),
+                    minor: u32::from_le_bytes(r[4..8].try_into().expect("len checked")),
+                }
+            }
+            0x82 => {
+                need(16)?;
+                let f = |o: usize| f32::from_le_bytes(r[o..o + 4].try_into().expect("len checked"));
+                Response::Stepped {
+                    n_active: f(0),
+                    mean_speed: f(4),
+                    flow: f(8),
+                    n_merged: f(12),
+                }
+            }
+            0x83 => {
+                need(4)?;
+                let n = u32::from_le_bytes(r[0..4].try_into().expect("len checked")) as usize;
+                need(4 + n * 16)?;
+                let obs = (0..n * 4)
+                    .map(|i| {
+                        f32::from_le_bytes(
+                            r[4 + i * 4..8 + i * 4].try_into().expect("len checked"),
+                        )
+                    })
+                    .collect();
+                Response::SteppedN(obs)
+            }
+            0x90 => {
+                need(4)?;
+                Response::VehicleCount(u32::from_le_bytes(r[0..4].try_into().expect("len checked")))
+            }
+            0x91 => {
+                need(4)?;
+                let n = u32::from_le_bytes(r[0..4].try_into().expect("len checked")) as usize;
+                need(4 + n * 4)?;
+                let rows = (0..n)
+                    .map(|i| {
+                        f32::from_le_bytes(
+                            r[4 + i * 4..8 + i * 4].try_into().expect("len checked"),
+                        )
+                    })
+                    .collect();
+                Response::State(rows)
+            }
+            0xa0 => Response::Ok,
+            0x92 => {
+                need(16)?;
+                Response::Totals {
+                    flow: f32::from_le_bytes(r[0..4].try_into().expect("len checked")),
+                    merged: f32::from_le_bytes(r[4..8].try_into().expect("len checked")),
+                    spawned: u64::from_le_bytes(r[8..16].try_into().expect("len checked")),
+                }
+            }
+            0xff => Response::Closing,
+            0xee => {
+                need(4)?;
+                let n = u32::from_le_bytes(r[0..4].try_into().expect("len checked")) as usize;
+                need(4 + n)?;
+                Response::Err(String::from_utf8_lossy(&r[4..4 + n]).into_owned())
+            }
+            other => return Err(Error::Protocol(format!("unknown response opcode {other:#x}"))),
+        })
+    }
+}
+
+/// Prefix a payload with its u32 length.
+fn frame(payload: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend(payload);
+    out
+}
+
+/// Read one `u32 len | payload` frame from a stream.
+pub fn read_frame<R: std::io::Read>(r: &mut R) -> Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len > 64 * 1024 * 1024 {
+        return Err(Error::Protocol(format!("frame too large: {len}")));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_cmd(c: Command) {
+        let enc = c.encode();
+        let body = &enc[4..];
+        assert_eq!(Command::decode(body).unwrap(), c);
+        // frame length prefix correct
+        assert_eq!(u32::from_le_bytes(enc[0..4].try_into().unwrap()) as usize, body.len());
+    }
+
+    #[test]
+    fn command_roundtrips() {
+        roundtrip_cmd(Command::GetVersion);
+        roundtrip_cmd(Command::SimStep);
+        roundtrip_cmd(Command::SimStepN { n: 5 });
+        roundtrip_cmd(Command::GetVehicleCount);
+        roundtrip_cmd(Command::GetState);
+        roundtrip_cmd(Command::SetSpeed { slot: 7, speed: 13.5 });
+        roundtrip_cmd(Command::GetTotals);
+        roundtrip_cmd(Command::Close);
+    }
+
+    fn roundtrip_resp(r: Response) {
+        let enc = r.encode();
+        assert_eq!(Response::decode(&enc[4..]).unwrap(), r);
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        roundtrip_resp(Response::Version { major: 1, minor: 0 });
+        roundtrip_resp(Response::Stepped {
+            n_active: 12.0,
+            mean_speed: 21.5,
+            flow: 1.0,
+            n_merged: 0.0,
+        });
+        roundtrip_resp(Response::SteppedN(vec![1.0; 8]));
+        roundtrip_resp(Response::VehicleCount(48));
+        roundtrip_resp(Response::State(vec![1.0, 2.0, 3.0, 1.0]));
+        roundtrip_resp(Response::Ok);
+        roundtrip_resp(Response::Totals {
+            flow: 40.0,
+            merged: 8.0,
+            spawned: 52,
+        });
+        roundtrip_resp(Response::Closing);
+        roundtrip_resp(Response::Err("boom".into()));
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Command::decode(&[]).is_err());
+        assert!(Command::decode(&[0x55]).is_err());
+        assert!(Command::decode(&[0x31, 1, 2]).is_err()); // short SetSpeed
+        assert!(Response::decode(&[0x91, 10, 0, 0, 0]).is_err()); // short state
+    }
+
+    #[test]
+    fn read_frame_from_stream() {
+        let enc = Command::SimStep.encode();
+        let mut cur = std::io::Cursor::new(enc);
+        let body = read_frame(&mut cur).unwrap();
+        assert_eq!(Command::decode(&body).unwrap(), Command::SimStep);
+    }
+
+    #[test]
+    fn paper_port_arithmetic() {
+        assert_eq!(DEFAULT_PORT, 8873);
+        assert_eq!(DEFAULT_PORT + 3 * PORT_STEP, 8894);
+    }
+}

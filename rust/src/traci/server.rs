@@ -1,0 +1,203 @@
+//! The TraCI server: SUMO's side of the socket.
+//!
+//! One server per simulation instance, bound to the instance's unique
+//! port.  Binding an already-used port returns [`crate::Error::PortInUse`]
+//! — the paper's §4.2.1 crash, straight from the kernel.
+//!
+//! The server runs the [`SumoSim`] loop on a std thread (blocking I/O is
+//! fine: one client per server, tiny frames).
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::thread::JoinHandle;
+
+use crate::sumo::SumoSim;
+use crate::{Error, Result};
+
+use super::protocol::{read_frame, Command, Response};
+
+/// A bound, running TraCI server.
+#[derive(Debug)]
+pub struct TraciServer {
+    pub port: u16,
+    handle: Option<JoinHandle<Result<()>>>,
+}
+
+impl TraciServer {
+    /// Bind `127.0.0.1:port` and serve `sim` until the client closes.
+    ///
+    /// The bind happens *synchronously* so the duplicate-port failure
+    /// surfaces at spawn time, exactly like SUMO aborting at startup.
+    pub fn spawn(port: u16, sim: SumoSim) -> Result<TraciServer> {
+        let listener = TcpListener::bind(("127.0.0.1", port)).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::AddrInUse {
+                Error::PortInUse(port)
+            } else {
+                Error::Io(e)
+            }
+        })?;
+        let handle = std::thread::spawn(move || serve(listener, sim));
+        Ok(TraciServer {
+            port,
+            handle: Some(handle),
+        })
+    }
+
+    /// Wait for the serving thread to finish (client sent Close).
+    pub fn join(mut self) -> Result<()> {
+        match self.handle.take() {
+            Some(h) => h
+                .join()
+                .map_err(|_| Error::Protocol("traci server thread panicked".into()))?,
+            None => Ok(()),
+        }
+    }
+}
+
+fn serve(listener: TcpListener, mut sim: SumoSim) -> Result<()> {
+    let (stream, _) = listener.accept()?;
+    handle_client(stream, &mut sim)
+}
+
+fn handle_client(mut stream: TcpStream, sim: &mut SumoSim) -> Result<()> {
+    stream.set_nodelay(true)?;
+    loop {
+        let body = read_frame(&mut stream)?;
+        let cmd = match Command::decode(&body) {
+            Ok(c) => c,
+            Err(e) => {
+                stream.write_all(&Response::Err(e.to_string()).encode())?;
+                continue;
+            }
+        };
+        let resp = match cmd {
+            Command::GetVersion => Response::Version { major: 1, minor: 0 },
+            Command::SimStep => {
+                let o = sim.step();
+                Response::Stepped {
+                    n_active: o.n_active,
+                    mean_speed: o.mean_speed,
+                    flow: o.flow,
+                    n_merged: o.n_merged,
+                }
+            }
+            Command::SimStepN { n } => {
+                let n = n.min(10_000); // sanity cap
+                let mut obs = Vec::with_capacity(n as usize * 4);
+                for _ in 0..n {
+                    let o = sim.step();
+                    obs.extend_from_slice(&[o.n_active, o.mean_speed, o.flow, o.n_merged]);
+                }
+                Response::SteppedN(obs)
+            }
+            Command::GetVehicleCount => {
+                Response::VehicleCount(sim.traffic.active_count() as u32)
+            }
+            Command::GetState => Response::State(sim.traffic.state.clone()),
+            Command::SetSpeed { slot, speed } => {
+                let i = slot as usize;
+                if i < sim.traffic.capacity() && sim.traffic.is_active(i) {
+                    let (x, lane) = (sim.traffic.x(i), sim.traffic.lane(i));
+                    sim.traffic.set_state_row(i, x, speed.max(0.0), lane, true);
+                    Response::Ok
+                } else {
+                    Response::Err(format!("no active vehicle in slot {slot}"))
+                }
+            }
+            Command::GetTotals => Response::Totals {
+                flow: sim.total_flow,
+                merged: sim.total_merged,
+                spawned: sim.total_spawned,
+            },
+            Command::Close => {
+                stream.write_all(&Response::Closing.encode())?;
+                return Ok(());
+            }
+        };
+        stream.write_all(&resp.encode())?;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sumo::{duarouter, FlowFile, MergeScenario, NativeIdmStepper, SumoSim};
+    use crate::traci::TraciClient;
+
+    fn test_sim() -> SumoSim {
+        let scenario = MergeScenario::default();
+        let net = scenario.network();
+        let flows = FlowFile::merge_sample(1200.0, 300.0, 60.0);
+        let routes = duarouter(&net, &flows, 1).unwrap();
+        SumoSim::new(scenario, 64, routes, Box::new(NativeIdmStepper::default()))
+    }
+
+    /// Ephemeral test port (kernel-assigned to avoid collisions between
+    /// parallel test binaries).
+    fn free_port() -> u16 {
+        TcpListener::bind("127.0.0.1:0")
+            .unwrap()
+            .local_addr()
+            .unwrap()
+            .port()
+    }
+
+    #[test]
+    fn duplicate_port_is_a_real_error() {
+        // §4.2.1, mechanically: second bind on one port fails
+        let port = free_port();
+        let s1 = TraciServer::spawn(port, test_sim()).unwrap();
+        let err = TraciServer::spawn(port, test_sim()).unwrap_err();
+        assert!(matches!(err, Error::PortInUse(p) if p == port));
+        // clean shutdown of the survivor
+        let mut c = TraciClient::connect(port).unwrap();
+        c.close().unwrap();
+        s1.join().unwrap();
+    }
+
+    #[test]
+    fn full_session_roundtrip() {
+        let port = free_port();
+        let server = TraciServer::spawn(port, test_sim()).unwrap();
+        let mut c = TraciClient::connect(port).unwrap();
+
+        let (maj, _min) = c.get_version().unwrap();
+        assert_eq!(maj, 1);
+
+        // drive 100 steps; traffic must appear
+        for _ in 0..100 {
+            c.sim_step().unwrap();
+        }
+        assert!(c.get_vehicle_count().unwrap() > 0);
+
+        let state = c.get_state().unwrap();
+        assert_eq!(state.len(), 64 * 4);
+
+        let totals = c.get_totals().unwrap();
+        assert!(totals.2 > 0, "spawned someone");
+
+        c.close().unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn set_speed_actuates() {
+        let port = free_port();
+        let server = TraciServer::spawn(port, test_sim()).unwrap();
+        let mut c = TraciClient::connect(port).unwrap();
+        for _ in 0..100 {
+            c.sim_step().unwrap();
+        }
+        // find an active slot from the snapshot
+        let state = c.get_state().unwrap();
+        let slot = (0..64).find(|i| state[i * 4 + 3] > 0.5).expect("some active");
+        c.set_speed(slot as u32, 3.25).unwrap();
+        let state2 = c.get_state().unwrap();
+        assert_eq!(state2[slot * 4 + 1], 3.25);
+        // inactive slot errors
+        let free = (0..64).find(|i| state[i * 4 + 3] < 0.5).expect("some free");
+        assert!(c.set_speed(free as u32, 1.0).is_err());
+        c.close().unwrap();
+        server.join().unwrap();
+    }
+}

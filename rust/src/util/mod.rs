@@ -1,0 +1,15 @@
+//! Dependency-free utilities: a deterministic PRNG, a minimal JSON
+//! parser, and a test tempdir helper.
+//!
+//! This repo builds fully offline against a vendored crate set that has
+//! no `rand`/`serde_json`/`tempfile`; these small, tested replacements
+//! cover the three needs (seeded randomization for duarouter/workloads,
+//! the artifact manifest, and filesystem tests).
+
+pub mod json;
+pub mod rng;
+pub mod tmp;
+
+pub use json::Json;
+pub use rng::Rng64;
+pub use tmp::TempDir;

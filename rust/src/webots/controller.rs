@@ -1,0 +1,320 @@
+//! Robot controllers.
+//!
+//! "Controllers are scripts ... that determine a node's functionality"
+//! (§2.5.1).  Ours are rust trait objects resolved by name from the
+//! world file's `controller "..."` field; the sample simulation's
+//! `merge_assist` CAV controller implements a radar-based gap-management
+//! policy for the on-ramp.
+
+use crate::sumo::state::{ACTIVE, LANE, STATE_COLS, V, X};
+use crate::{Error, Result};
+
+use super::sensors::{radar_from_rows, RadarReading};
+
+/// What a controller sees each sampling period.
+#[derive(Debug, Clone)]
+pub struct ControllerObs {
+    pub time_s: f32,
+    /// Full state snapshot (supervisor-grade access, like a Webots
+    /// Supervisor controller).
+    pub state_rows: Vec<f32>,
+}
+
+impl ControllerObs {
+    pub fn num_slots(&self) -> usize {
+        self.state_rows.len() / STATE_COLS
+    }
+
+    pub fn is_active(&self, slot: usize) -> bool {
+        self.state_rows[slot * STATE_COLS + ACTIVE] > 0.5
+    }
+
+    pub fn x(&self, slot: usize) -> f32 {
+        self.state_rows[slot * STATE_COLS + X]
+    }
+
+    pub fn v(&self, slot: usize) -> f32 {
+        self.state_rows[slot * STATE_COLS + V]
+    }
+
+    pub fn lane(&self, slot: usize) -> f32 {
+        self.state_rows[slot * STATE_COLS + LANE]
+    }
+
+    pub fn radar(&self, slot: usize, max_range: f32) -> RadarReading {
+        radar_from_rows(&self.state_rows, slot, max_range)
+    }
+}
+
+/// Actuation commands a controller may emit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ControllerCmd {
+    /// Override a vehicle's speed (sent to SUMO via TraCI SetSpeed).
+    SetSpeed { slot: u32, speed: f32 },
+}
+
+/// The controller interface: called every sampling period.
+pub trait Controller: Send {
+    fn name(&self) -> &str;
+    fn step(&mut self, obs: &ControllerObs) -> Vec<ControllerCmd>;
+}
+
+/// The CAV merge-assist controller of the sample simulation.
+///
+/// Policy: find ramp-lane vehicles (lane 0); for each, use forward radar
+/// to manage the approach — close up at `approach_speed` when the radar
+/// is clear, back off proportionally to closing speed when a conflict
+/// looms.  This is deliberately simple: the paper's point is the
+/// *pipeline*, the controller just has to exercise sensors + TraCI
+/// actuation end to end.
+#[derive(Debug, Clone)]
+pub struct MergeAssistController {
+    pub radar_range: f32,
+    pub approach_speed: f32,
+    pub min_speed: f32,
+    /// Gap [m] under which we start yielding.
+    pub caution_gap: f32,
+    commands_issued: u64,
+}
+
+impl Default for MergeAssistController {
+    fn default() -> Self {
+        MergeAssistController {
+            radar_range: 150.0,
+            approach_speed: 22.0,
+            min_speed: 5.0,
+            caution_gap: 30.0,
+            commands_issued: 0,
+        }
+    }
+}
+
+impl MergeAssistController {
+    pub fn commands_issued(&self) -> u64 {
+        self.commands_issued
+    }
+}
+
+impl Controller for MergeAssistController {
+    fn name(&self) -> &str {
+        "merge_assist"
+    }
+
+    fn step(&mut self, obs: &ControllerObs) -> Vec<ControllerCmd> {
+        let mut cmds = Vec::new();
+        for slot in 0..obs.num_slots() {
+            if !obs.is_active(slot) || obs.lane(slot) != 0.0 {
+                continue;
+            }
+            let r = obs.radar(slot, self.radar_range);
+            let target = if r.distance >= self.caution_gap {
+                self.approach_speed
+            } else {
+                // yield proportionally to how compressed the gap is
+                let f = (r.distance / self.caution_gap).clamp(0.0, 1.0);
+                (self.approach_speed * f).max(self.min_speed)
+            };
+            if (target - obs.v(slot)).abs() > 0.5 {
+                cmds.push(ControllerCmd::SetSpeed {
+                    slot: slot as u32,
+                    speed: target,
+                });
+            }
+        }
+        self.commands_issued += cmds.len() as u64;
+        cmds
+    }
+}
+
+/// A CACC platooning controller — the second workload class the paper's
+/// related work motivates (Karoui et al., "Performance Evaluation of
+/// Vehicular Platoons using Webots" [13]).  Vehicles on the platoon lane
+/// hold a constant distance-gap to their predecessor using the forward
+/// radar: classic cooperative adaptive cruise control
+///   v_cmd = v_ego + k_gap·(gap − target) − k_closing·closing_speed.
+/// The leader (clear radar) cruises at `cruise_speed`.
+#[derive(Debug, Clone)]
+pub struct PlatoonController {
+    pub platoon_lane: f32,
+    pub radar_range: f32,
+    pub cruise_speed: f32,
+    pub target_gap: f32,
+    pub k_gap: f32,
+    pub k_closing: f32,
+    commands_issued: u64,
+}
+
+impl Default for PlatoonController {
+    fn default() -> Self {
+        PlatoonController {
+            platoon_lane: 1.0,
+            radar_range: 150.0,
+            cruise_speed: 25.0,
+            target_gap: 12.0,
+            k_gap: 0.4,
+            k_closing: 0.8,
+            commands_issued: 0,
+        }
+    }
+}
+
+impl PlatoonController {
+    pub fn commands_issued(&self) -> u64 {
+        self.commands_issued
+    }
+}
+
+impl Controller for PlatoonController {
+    fn name(&self) -> &str {
+        "platoon"
+    }
+
+    fn step(&mut self, obs: &ControllerObs) -> Vec<ControllerCmd> {
+        let mut cmds = Vec::new();
+        for slot in 0..obs.num_slots() {
+            if !obs.is_active(slot) || obs.lane(slot) != self.platoon_lane {
+                continue;
+            }
+            let r = obs.radar(slot, self.radar_range);
+            let target = if r.distance >= self.radar_range - 1e-3 {
+                // platoon leader: cruise
+                self.cruise_speed
+            } else {
+                let v = obs.v(slot);
+                (v + self.k_gap * (r.distance - self.target_gap)
+                    - self.k_closing * r.closing_speed)
+                    .clamp(0.0, self.cruise_speed * 1.2)
+            };
+            if (target - obs.v(slot)).abs() > 0.25 {
+                cmds.push(ControllerCmd::SetSpeed {
+                    slot: slot as u32,
+                    speed: target,
+                });
+            }
+        }
+        self.commands_issued += cmds.len() as u64;
+        cmds
+    }
+}
+
+/// A controller that does nothing (`controller "void"` in Webots).
+#[derive(Debug, Default, Clone)]
+pub struct VoidController;
+
+impl Controller for VoidController {
+    fn name(&self) -> &str {
+        "void"
+    }
+
+    fn step(&mut self, _obs: &ControllerObs) -> Vec<ControllerCmd> {
+        Vec::new()
+    }
+}
+
+/// Resolve a controller by its world-file name.
+pub fn controller_by_name(name: &str) -> Result<Box<dyn Controller>> {
+    match name {
+        "merge_assist" => Ok(Box::new(MergeAssistController::default())),
+        "platoon" => Ok(Box::new(PlatoonController::default())),
+        "void" => Ok(Box::new(VoidController)),
+        other => Err(Error::World(format!("unknown controller '{other}'"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(items: &[(f32, f32, f32, f32)]) -> ControllerObs {
+        ControllerObs {
+            time_s: 0.0,
+            state_rows: items.iter().flat_map(|&(x, v, l, a)| [x, v, l, a]).collect(),
+        }
+    }
+
+    #[test]
+    fn clear_radar_commands_approach_speed() {
+        let mut c = MergeAssistController::default();
+        let cmds = c.step(&obs(&[(100.0, 10.0, 0.0, 1.0)]));
+        assert_eq!(
+            cmds,
+            vec![ControllerCmd::SetSpeed { slot: 0, speed: 22.0 }]
+        );
+    }
+
+    #[test]
+    fn close_target_commands_yield() {
+        let mut c = MergeAssistController::default();
+        // target 15 m ahead → half of caution_gap → half approach speed
+        let cmds = c.step(&obs(&[(100.0, 20.0, 0.0, 1.0), (115.0, 5.0, 0.0, 1.0)]));
+        match cmds[0] {
+            ControllerCmd::SetSpeed { slot: 0, speed } => {
+                assert!((speed - 11.0).abs() < 0.5, "speed {speed}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mainline_vehicles_untouched() {
+        let mut c = MergeAssistController::default();
+        assert!(c.step(&obs(&[(100.0, 10.0, 1.0, 1.0)])).is_empty());
+    }
+
+    #[test]
+    fn no_command_when_already_at_target() {
+        let mut c = MergeAssistController::default();
+        assert!(c.step(&obs(&[(100.0, 22.0, 0.0, 1.0)])).is_empty());
+    }
+
+    #[test]
+    fn registry_resolves() {
+        assert!(controller_by_name("merge_assist").is_ok());
+        assert!(controller_by_name("platoon").is_ok());
+        assert!(controller_by_name("void").is_ok());
+        assert!(controller_by_name("skynet").is_err());
+    }
+
+    #[test]
+    fn platoon_leader_cruises() {
+        let mut c = PlatoonController::default();
+        let cmds = c.step(&obs(&[(100.0, 10.0, 1.0, 1.0)]));
+        assert_eq!(
+            cmds,
+            vec![ControllerCmd::SetSpeed { slot: 0, speed: 25.0 }]
+        );
+    }
+
+    #[test]
+    fn platoon_follower_regulates_gap() {
+        let mut c = PlatoonController::default();
+        // follower 20 m behind a same-speed leader: gap > target → close up
+        let cmds = c.step(&obs(&[(100.0, 20.0, 1.0, 1.0), (120.0, 20.0, 1.0, 1.0)]));
+        let follower_cmd = cmds
+            .iter()
+            .find(|c| matches!(c, ControllerCmd::SetSpeed { slot: 0, .. }))
+            .expect("follower commanded");
+        match follower_cmd {
+            ControllerCmd::SetSpeed { speed, .. } => {
+                assert!(*speed > 20.0, "closes a too-wide gap: {speed}");
+            }
+        }
+        // too-tight gap → back off
+        let cmds = c.step(&obs(&[(100.0, 20.0, 1.0, 1.0), (105.0, 20.0, 1.0, 1.0)]));
+        match cmds
+            .iter()
+            .find(|c| matches!(c, ControllerCmd::SetSpeed { slot: 0, .. }))
+            .expect("follower commanded")
+        {
+            ControllerCmd::SetSpeed { speed, .. } => {
+                assert!(*speed < 20.0, "opens a too-tight gap: {speed}");
+            }
+        }
+    }
+
+    #[test]
+    fn platoon_ignores_other_lanes() {
+        let mut c = PlatoonController::default();
+        assert!(c.step(&obs(&[(100.0, 10.0, 2.0, 1.0)])).is_empty());
+    }
+}

@@ -1,0 +1,38 @@
+//! The Webots substrate: worlds, robots, controllers, sensors, stepping.
+//!
+//! Webots is the *front-end* of the paper's simulation pair — it owns the
+//! scene tree, the robot controllers and the sensor suite, while SUMO
+//! puppeteers the traffic through the SUMO Interface node (§2.5.3).  We
+//! implement the pieces the pipeline exercises:
+//!
+//! * [`world`] — `.wbt` world files: a human-readable tree format the
+//!   pipeline's copy-propagation rewrites (the paper edits the SUMO
+//!   Interface port in each copy with a text editor, §3.1.5),
+//! * [`nodes`] — typed views of the standard nodes (WorldInfo with the
+//!   'Optimal Thread Count' knob, SumoInterface with the port and
+//!   sampling period, Robot, sensors),
+//! * [`controller`] — the controller interface and the CAV merge-assist
+//!   controller of the sample simulation,
+//! * [`sensors`] — radar/GPS/distance readings derived from the traffic
+//!   state (mirroring the AOT radar kernel),
+//! * [`physics`] — the simulation loop: drives the SUMO back-end over
+//!   TraCI, runs controllers at their sampling period, actuates,
+//! * [`mode`] — GUI vs headless, realtime vs fast,
+//! * [`supervisor`] — stop conditions ("users must build in a stop
+//!   condition ... or else the Webots instance will run indefinitely",
+//!   §3.1.3).
+
+pub mod controller;
+pub mod mode;
+pub mod nodes;
+pub mod physics;
+pub mod sensors;
+pub mod supervisor;
+pub mod world;
+
+pub use controller::{Controller, ControllerCmd, ControllerObs, MergeAssistController};
+pub use mode::{RunSpeed, SimMode};
+pub use nodes::{RobotNode, SensorSpec, SumoInterface, WorldInfo};
+pub use physics::WebotsSim;
+pub use supervisor::{StopCondition, Supervisor};
+pub use world::{Node, World};

@@ -1,0 +1,92 @@
+//! Simulation modes: GUI vs headless, realtime vs fast.
+//!
+//! The pipeline's four functionalities (§3.1) are combinations of these:
+//! GUI over SSH-X11, headless under Xvfb, one-off or batched.  The
+//! paper's batch command runs `webots --batch --mode=realtime` under
+//! `xvfb-run -a`.
+
+use crate::display::{DisplayHandle, DisplayRegistry, XvfbRun};
+use crate::Result;
+
+/// Where renderings go.
+#[derive(Debug)]
+pub enum SimMode {
+    /// GUI streamed over a forwarded X11 display (`ssh -X`).
+    Gui { display: DisplayHandle },
+    /// Headless under an Xvfb framebuffer.
+    Headless { display: DisplayHandle },
+}
+
+impl SimMode {
+    /// Acquire a headless framebuffer the way the pipeline does:
+    /// `xvfb-run`, with or without `-a`.
+    pub fn headless(registry: &DisplayRegistry, auto_probe: bool) -> Result<SimMode> {
+        let xvfb = if auto_probe {
+            XvfbRun::auto()
+        } else {
+            XvfbRun::default()
+        };
+        Ok(SimMode::Headless {
+            display: xvfb.acquire(registry)?,
+        })
+    }
+
+    pub fn display_number(&self) -> u32 {
+        match self {
+            SimMode::Gui { display } | SimMode::Headless { display } => display.number,
+        }
+    }
+
+    pub fn is_headless(&self) -> bool {
+        matches!(self, SimMode::Headless { .. })
+    }
+}
+
+/// Pacing: `--mode=realtime` paces to the wall clock; `fast` runs as
+/// fast as the hardware allows.  On the virtual clock, realtime maps
+/// virtual DT to wall DT when demanded (demo/GUI), fast never sleeps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RunSpeed {
+    Realtime,
+    #[default]
+    Fast,
+}
+
+impl RunSpeed {
+    pub fn parse(s: &str) -> Option<RunSpeed> {
+        match s {
+            "realtime" => Some(RunSpeed::Realtime),
+            "fast" => Some(RunSpeed::Fast),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headless_acquires_display() {
+        let reg = DisplayRegistry::new();
+        let m = SimMode::headless(&reg, true).unwrap();
+        assert!(m.is_headless());
+        assert_eq!(m.display_number(), 99);
+    }
+
+    #[test]
+    fn parallel_headless_needs_auto_probe() {
+        let reg = DisplayRegistry::new();
+        let _m1 = SimMode::headless(&reg, false).unwrap();
+        assert!(SimMode::headless(&reg, false).is_err());
+        let m3 = SimMode::headless(&reg, true).unwrap();
+        assert_eq!(m3.display_number(), 100);
+    }
+
+    #[test]
+    fn run_speed_parse() {
+        assert_eq!(RunSpeed::parse("realtime"), Some(RunSpeed::Realtime));
+        assert_eq!(RunSpeed::parse("fast"), Some(RunSpeed::Fast));
+        assert_eq!(RunSpeed::parse("warp9"), None);
+    }
+}

@@ -1,0 +1,226 @@
+//! Typed views over the scene-tree nodes the pipeline touches.
+
+use crate::{Error, Result};
+
+use super::world::{Node, World};
+
+/// `WorldInfo`: global simulation parameters.  The paper's §5.3 walks
+/// through the two threading knobs: the program-level 'Number of
+/// Threads' preference and this node's 'Optimal Thread Count' field
+/// ("roughly half the value of 'Number of Threads'").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorldInfo {
+    pub basic_time_step_ms: u32,
+    pub optimal_thread_count: u32,
+}
+
+impl WorldInfo {
+    pub fn from_node(n: &Node) -> Result<WorldInfo> {
+        Ok(WorldInfo {
+            basic_time_step_ms: n
+                .field_u32("basicTimeStep")
+                .ok_or_else(|| Error::World("WorldInfo missing basicTimeStep".into()))?,
+            optimal_thread_count: n.field_u32("optimalThreadCount").unwrap_or(1),
+        })
+    }
+
+    pub fn to_node(&self) -> Node {
+        Node::new("WorldInfo")
+            .with_field("basicTimeStep", self.basic_time_step_ms.to_string())
+            .with_field("optimalThreadCount", self.optimal_thread_count.to_string())
+    }
+
+    /// The documented guidance: optimal ≈ half the program-level thread
+    /// preference (§5.3).
+    pub fn recommended(number_of_threads: u32) -> WorldInfo {
+        WorldInfo {
+            basic_time_step_ms: 100,
+            optimal_thread_count: (number_of_threads / 2).max(1),
+        }
+    }
+}
+
+/// The `SumoInterface` node: the Webots↔SUMO bridge.  "opposite of
+/// sensors, the sampling period of the SUMO Interface must be specified
+/// in the Webots user interface" (§2.5.3) — i.e. it lives in the world
+/// file, which is why the copy-propagation step must edit it there.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SumoInterface {
+    pub port: u16,
+    pub sampling_period_ms: u32,
+}
+
+impl SumoInterface {
+    pub fn from_node(n: &Node) -> Result<SumoInterface> {
+        Ok(SumoInterface {
+            port: n
+                .field_u32("port")
+                .ok_or_else(|| Error::World("SumoInterface missing port".into()))?
+                as u16,
+            sampling_period_ms: n.field_u32("samplingPeriod").unwrap_or(200),
+        })
+    }
+
+    pub fn to_node(&self) -> Node {
+        Node::new("SumoInterface")
+            .with_field("port", self.port.to_string())
+            .with_field("samplingPeriod", self.sampling_period_ms.to_string())
+    }
+}
+
+/// Sensor declarations under a Robot node (§2.5.3 lists the suite).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SensorSpec {
+    Radar { max_range: f32 },
+    Gps,
+    DistanceSensor { range: f32 },
+    Compass,
+}
+
+impl SensorSpec {
+    pub fn from_node(n: &Node) -> Option<SensorSpec> {
+        match n.node_type.as_str() {
+            "Radar" => Some(SensorSpec::Radar {
+                max_range: n.field_f32("maxRange").unwrap_or(150.0),
+            }),
+            "Gps" => Some(SensorSpec::Gps),
+            "DistanceSensor" => Some(SensorSpec::DistanceSensor {
+                range: n.field_f32("range").unwrap_or(10.0),
+            }),
+            "Compass" => Some(SensorSpec::Compass),
+            _ => None,
+        }
+    }
+
+    pub fn to_node(&self) -> Node {
+        match self {
+            SensorSpec::Radar { max_range } => {
+                Node::new("Radar").with_field("maxRange", max_range.to_string())
+            }
+            SensorSpec::Gps => Node::new("Gps").with_field("accuracy", "0"),
+            SensorSpec::DistanceSensor { range } => {
+                Node::new("DistanceSensor").with_field("range", range.to_string())
+            }
+            SensorSpec::Compass => Node::new("Compass").with_field("resolution", "0.01"),
+        }
+    }
+}
+
+/// A `Robot` node: name, controller binding, sensor suite.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RobotNode {
+    pub name: String,
+    pub controller: String,
+    pub sensors: Vec<SensorSpec>,
+}
+
+impl RobotNode {
+    pub fn from_node(n: &Node) -> Result<RobotNode> {
+        let unquote = |s: &str| s.trim_matches('"').to_string();
+        Ok(RobotNode {
+            name: unquote(
+                n.field("name")
+                    .ok_or_else(|| Error::World("Robot missing name".into()))?,
+            ),
+            controller: unquote(n.field("controller").unwrap_or("\"void\"")),
+            sensors: n.children.iter().filter_map(SensorSpec::from_node).collect(),
+        })
+    }
+
+    pub fn to_node(&self) -> Node {
+        let mut n = Node::new("Robot")
+            .with_field("name", format!("\"{}\"", self.name))
+            .with_field("controller", format!("\"{}\"", self.controller));
+        for s in &self.sensors {
+            n = n.with_child(s.to_node());
+        }
+        n
+    }
+}
+
+/// The sample merge world of ch. 5: WorldInfo + Viewpoint + SumoInterface
+/// + the CAV robot with its sensor suite.
+pub fn sample_merge_world(port: u16) -> World {
+    let mut w = World::new();
+    w.nodes.push(
+        WorldInfo {
+            basic_time_step_ms: 100,
+            optimal_thread_count: 10,
+        }
+        .to_node(),
+    );
+    w.nodes
+        .push(Node::new("Viewpoint").with_field("position", "0 50 100"));
+    w.nodes.push(
+        SumoInterface {
+            port,
+            sampling_period_ms: 200,
+        }
+        .to_node(),
+    );
+    w.nodes.push(
+        RobotNode {
+            name: "cav_0".into(),
+            controller: "merge_assist".into(),
+            sensors: vec![
+                SensorSpec::Radar { max_range: 150.0 },
+                SensorSpec::Gps,
+                SensorSpec::DistanceSensor { range: 20.0 },
+            ],
+        }
+        .to_node(),
+    );
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_info_roundtrip() {
+        let wi = WorldInfo {
+            basic_time_step_ms: 100,
+            optimal_thread_count: 10,
+        };
+        assert_eq!(WorldInfo::from_node(&wi.to_node()).unwrap(), wi);
+    }
+
+    #[test]
+    fn recommended_thread_count_halves() {
+        assert_eq!(WorldInfo::recommended(20).optimal_thread_count, 10);
+        assert_eq!(WorldInfo::recommended(1).optimal_thread_count, 1);
+    }
+
+    #[test]
+    fn sumo_interface_roundtrip() {
+        let si = SumoInterface {
+            port: 8894,
+            sampling_period_ms: 200,
+        };
+        assert_eq!(SumoInterface::from_node(&si.to_node()).unwrap(), si);
+    }
+
+    #[test]
+    fn robot_roundtrip_with_sensors() {
+        let r = RobotNode {
+            name: "cav_0".into(),
+            controller: "merge_assist".into(),
+            sensors: vec![SensorSpec::Radar { max_range: 150.0 }, SensorSpec::Gps],
+        };
+        let back = RobotNode::from_node(&r.to_node()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn sample_world_is_complete() {
+        let w = sample_merge_world(8873);
+        let si = SumoInterface::from_node(w.find("SumoInterface").unwrap()).unwrap();
+        assert_eq!(si.port, 8873);
+        let robots = w.find_all("Robot");
+        assert_eq!(robots.len(), 1);
+        let r = RobotNode::from_node(robots[0]).unwrap();
+        assert_eq!(r.controller, "merge_assist");
+        assert_eq!(r.sensors.len(), 3);
+    }
+}

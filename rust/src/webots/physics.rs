@@ -1,0 +1,361 @@
+//! The Webots simulation loop: TraCI-coupled stepping with controllers.
+//!
+//! Per §2.5.3: Webots is the front-end; SUMO drives the traffic through
+//! the SUMO Interface.  [`WebotsSim`] owns the world, connects a TraCI
+//! client to the instance's SUMO back-end, steps it at `basicTimeStep`,
+//! runs robot controllers at the interface's sampling period, and pushes
+//! their actuation back through TraCI.
+
+use crate::sumo::StepObs;
+use crate::traci::TraciClient;
+use crate::{Error, Result};
+
+use super::controller::{controller_by_name, Controller, ControllerCmd, ControllerObs};
+use super::nodes::{RobotNode, SumoInterface, WorldInfo};
+use super::supervisor::{StopCondition, Supervisor};
+use super::world::World;
+
+/// A running Webots instance (front-end side).
+pub struct WebotsSim {
+    pub world_info: WorldInfo,
+    pub sumo_interface: SumoInterface,
+    traci: TraciClient,
+    controllers: Vec<Box<dyn Controller>>,
+    supervisor: Supervisor,
+    time_s: f32,
+    steps: u64,
+    controller_cmds: u64,
+    /// Per-step observables as reported by the back-end.
+    pub history: Vec<StepObs>,
+}
+
+/// Why the run ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunEnd {
+    /// Stop condition met — a completed run.
+    Stopped,
+    /// Step budget exhausted before the stop condition (the caller's
+    /// walltime guard).
+    BudgetExhausted,
+}
+
+impl WebotsSim {
+    /// Open the world and connect to its SUMO back-end.  The TraCI port
+    /// comes from the world's SumoInterface node — exactly the field the
+    /// copy-propagation step rewrites per instance.
+    pub fn open(world: &World) -> Result<WebotsSim> {
+        let wi_node = world
+            .find("WorldInfo")
+            .ok_or_else(|| Error::World("world missing WorldInfo".into()))?;
+        let world_info = WorldInfo::from_node(wi_node)?;
+        let si_node = world
+            .find("SumoInterface")
+            .ok_or_else(|| Error::World("world missing SumoInterface".into()))?;
+        let sumo_interface = SumoInterface::from_node(si_node)?;
+
+        let traci = TraciClient::connect(sumo_interface.port)?;
+
+        let mut controllers: Vec<Box<dyn Controller>> = Vec::new();
+        for rn in world.find_all("Robot") {
+            let robot = RobotNode::from_node(rn)?;
+            controllers.push(controller_by_name(&robot.controller)?);
+        }
+
+        Ok(WebotsSim {
+            world_info,
+            sumo_interface,
+            traci,
+            controllers,
+            supervisor: Supervisor::new(StopCondition::None),
+            time_s: 0.0,
+            steps: 0,
+            controller_cmds: 0,
+            history: Vec::new(),
+        })
+    }
+
+    pub fn with_stop_condition(mut self, c: StopCondition) -> Self {
+        self.supervisor = Supervisor::new(c);
+        self
+    }
+
+    pub fn time_s(&self) -> f32 {
+        self.time_s
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    pub fn controller_cmds(&self) -> u64 {
+        self.controller_cmds
+    }
+
+    /// One basicTimeStep: advance SUMO, then (at the sampling period)
+    /// run controllers and actuate.
+    pub fn step(&mut self) -> Result<StepObs> {
+        let (n_active, mean_speed, flow, n_merged) = self.traci.sim_step()?;
+        let obs = StepObs {
+            n_active,
+            mean_speed,
+            flow,
+            n_merged,
+        };
+        self.history.push(obs);
+        self.time_s += self.world_info.basic_time_step_ms as f32 / 1000.0;
+        self.steps += 1;
+
+        let sample_every =
+            (self.sumo_interface.sampling_period_ms / self.world_info.basic_time_step_ms).max(1);
+        if self.steps % sample_every as u64 == 0 && !self.controllers.is_empty() {
+            let state_rows = self.traci.get_state()?;
+            let cobs = ControllerObs {
+                time_s: self.time_s,
+                state_rows,
+            };
+            let mut cmds: Vec<ControllerCmd> = Vec::new();
+            for c in &mut self.controllers {
+                cmds.extend(c.step(&cobs));
+            }
+            for cmd in cmds {
+                match cmd {
+                    ControllerCmd::SetSpeed { slot, speed } => {
+                        self.traci.set_speed(slot, speed)?;
+                        self.controller_cmds += 1;
+                    }
+                }
+            }
+        }
+        Ok(obs)
+    }
+
+    /// `sample_every` basicTimeSteps per controller sampling period.
+    fn sample_every(&self) -> u64 {
+        (self.sumo_interface.sampling_period_ms / self.world_info.basic_time_step_ms).max(1) as u64
+    }
+
+    /// Advance `k` basicTimeSteps in ONE TraCI round trip (§Perf: the
+    /// batched replacement for `k` × [`Self::step`]).  Controllers are
+    /// NOT run inside the batch — callers batch at most up to the next
+    /// sampling boundary (see [`Self::run`]).
+    pub fn step_n(&mut self, k: u64) -> Result<Vec<StepObs>> {
+        let obs = self.traci.sim_step_n(k as u32)?;
+        let mut out = Vec::with_capacity(obs.len());
+        for (n_active, mean_speed, flow, n_merged) in obs {
+            let o = StepObs {
+                n_active,
+                mean_speed,
+                flow,
+                n_merged,
+            };
+            self.history.push(o);
+            out.push(o);
+        }
+        self.time_s += k as f32 * self.world_info.basic_time_step_ms as f32 / 1000.0;
+        self.steps += k;
+        Ok(out)
+    }
+
+    /// Run controllers once against the current back-end state (the body
+    /// of the sampling-period branch of [`Self::step`]).
+    fn run_controllers(&mut self) -> Result<()> {
+        if self.controllers.is_empty() {
+            return Ok(());
+        }
+        let state_rows = self.traci.get_state()?;
+        let cobs = ControllerObs {
+            time_s: self.time_s,
+            state_rows,
+        };
+        let mut cmds: Vec<ControllerCmd> = Vec::new();
+        for c in &mut self.controllers {
+            cmds.extend(c.step(&cobs));
+        }
+        for cmd in cmds {
+            match cmd {
+                ControllerCmd::SetSpeed { slot, speed } => {
+                    self.traci.set_speed(slot, speed)?;
+                    self.controller_cmds += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Run until the stop condition fires or `max_steps` elapse.
+    ///
+    /// Steps are batched over TraCI between controller sampling points
+    /// (`SimStepN`), cutting socket round trips by the sampling factor —
+    /// semantics identical to a [`Self::step`] loop (verified by
+    /// `batched_run_equals_stepwise` below).
+    pub fn run(&mut self, max_steps: u64) -> Result<RunEnd> {
+        let mut total_flow = 0.0f32;
+        let sample_every = self.sample_every();
+        let mut remaining = max_steps;
+        while remaining > 0 {
+            // batch to the next sampling boundary
+            let into_period = self.steps % sample_every;
+            let k = (sample_every - into_period).min(remaining);
+            let burst = self.step_n(k)?;
+            remaining -= k;
+            let mut stopped = false;
+            for o in &burst {
+                total_flow += o.flow;
+                let drained = o.n_active == 0.0 && self.time_s > 1.0;
+                if self.supervisor.should_stop(self.time_s, drained, total_flow) {
+                    stopped = true;
+                }
+            }
+            if self.steps % sample_every == 0 {
+                self.run_controllers()?;
+            }
+            if stopped {
+                return Ok(RunEnd::Stopped);
+            }
+        }
+        Ok(RunEnd::BudgetExhausted)
+    }
+
+    /// Back-end totals `(flow, merged, spawned)` over this run so far.
+    pub fn totals(&mut self) -> Result<(f32, f32, u64)> {
+        self.traci.get_totals()
+    }
+
+    /// Full state snapshot from the back-end (supervisor access).
+    pub fn state_snapshot(&mut self) -> Result<Vec<f32>> {
+        self.traci.get_state()
+    }
+
+    /// Orderly shutdown of the back-end.
+    pub fn close(mut self) -> Result<()> {
+        self.traci.close()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sumo::{duarouter, FlowFile, MergeScenario, NativeIdmStepper, SumoSim};
+    use crate::traci::TraciServer;
+    use crate::webots::nodes::sample_merge_world;
+    use std::net::TcpListener;
+
+    fn free_port() -> u16 {
+        TcpListener::bind("127.0.0.1:0")
+            .unwrap()
+            .local_addr()
+            .unwrap()
+            .port()
+    }
+
+    fn backend(port: u16, horizon: f32, seed: u64) -> TraciServer {
+        let scenario = MergeScenario::default();
+        let net = scenario.network();
+        let flows = FlowFile::merge_sample(1200.0, 300.0, horizon);
+        let routes = duarouter(&net, &flows, seed).unwrap();
+        let sim = SumoSim::new(scenario, 64, routes, Box::new(NativeIdmStepper::default()));
+        TraciServer::spawn(port, sim).unwrap()
+    }
+
+    #[test]
+    fn coupled_run_stops_on_sim_time() {
+        let port = free_port();
+        let server = backend(port, 60.0, 1);
+        let world = sample_merge_world(port);
+        // patch the world's port to the ephemeral test port
+        let mut sim = WebotsSim::open(&world)
+            .unwrap()
+            .with_stop_condition(StopCondition::SimTime(30.0));
+        let end = sim.run(10_000).unwrap();
+        assert_eq!(end, RunEnd::Stopped);
+        assert!((sim.time_s() - 30.0).abs() < 0.2);
+        sim.close().unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn controllers_actuate_over_traci() {
+        let port = free_port();
+        let server = backend(port, 120.0, 2);
+        let world = sample_merge_world(port);
+        let mut sim = WebotsSim::open(&world)
+            .unwrap()
+            .with_stop_condition(StopCondition::SimTime(60.0));
+        sim.run(10_000).unwrap();
+        assert!(
+            sim.controller_cmds() > 0,
+            "merge_assist must have issued SetSpeed commands"
+        );
+        sim.close().unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn missing_backend_fails_to_open() {
+        let world = sample_merge_world(free_port());
+        assert!(WebotsSim::open(&world).is_err());
+    }
+
+    #[test]
+    fn batched_run_equals_stepwise() {
+        // same seed, same horizon: run() (SimStepN bursts) must produce
+        // the identical observable history as a step() loop
+        let run_history = {
+            let port = free_port();
+            let server = backend(port, 30.0, 7);
+            let world = sample_merge_world(port);
+            let mut sim = WebotsSim::open(&world)
+                .unwrap()
+                .with_stop_condition(StopCondition::SimTime(20.0));
+            sim.run(10_000).unwrap();
+            let h = sim.history.clone();
+            sim.close().unwrap();
+            server.join().unwrap();
+            h
+        };
+        let step_history = {
+            let port = free_port();
+            let server = backend(port, 30.0, 7);
+            let world = sample_merge_world(port);
+            let mut sim = WebotsSim::open(&world).unwrap();
+            for _ in 0..run_history.len() {
+                sim.step().unwrap();
+            }
+            let h = sim.history.clone();
+            sim.close().unwrap();
+            server.join().unwrap();
+            h
+        };
+        assert_eq!(run_history.len(), step_history.len());
+        assert_eq!(run_history, step_history);
+    }
+
+    #[test]
+    fn step_n_advances_time_and_history() {
+        let port = free_port();
+        let server = backend(port, 30.0, 8);
+        let world = sample_merge_world(port);
+        let mut sim = WebotsSim::open(&world).unwrap();
+        let burst = sim.step_n(5).unwrap();
+        assert_eq!(burst.len(), 5);
+        assert_eq!(sim.steps(), 5);
+        assert!((sim.time_s() - 0.5).abs() < 1e-5);
+        sim.close().unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn history_accumulates() {
+        let port = free_port();
+        let server = backend(port, 30.0, 3);
+        let world = sample_merge_world(port);
+        let mut sim = WebotsSim::open(&world)
+            .unwrap()
+            .with_stop_condition(StopCondition::SimTime(10.0));
+        sim.run(10_000).unwrap();
+        assert_eq!(sim.history.len() as u64, sim.steps());
+        assert!(sim.steps() >= 100);
+        sim.close().unwrap();
+        server.join().unwrap();
+    }
+}

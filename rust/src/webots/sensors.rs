@@ -1,0 +1,135 @@
+//! Sensor models: readings derived from the traffic state.
+//!
+//! The radar math mirrors `python/compile/kernels/radar.py` exactly (the
+//! AOT path computes the same quantity inside the fused step; this native
+//! version serves controllers when the state arrives over TraCI).
+
+use crate::sumo::state::{Traffic, ACTIVE, LANE, STATE_COLS, V, X};
+
+/// A forward-radar return.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RadarReading {
+    /// Distance to nearest target ahead (== max_range when clear).
+    pub distance: f32,
+    /// Ego speed minus target speed (0 when clear).
+    pub closing_speed: f32,
+}
+
+/// GPS fix.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpsReading {
+    pub x: f32,
+    pub lane: f32,
+    pub speed: f32,
+}
+
+/// Forward radar over a raw state snapshot (flat rows, as delivered by
+/// TraCI `GetState`). Mirrors `radar_ref`.
+pub fn radar_from_rows(rows: &[f32], ego: usize, max_range: f32) -> RadarReading {
+    let n = rows.len() / STATE_COLS;
+    let at = |i: usize, c: usize| rows[i * STATE_COLS + c];
+    if at(ego, ACTIVE) < 0.5 {
+        return RadarReading {
+            distance: max_range,
+            closing_speed: 0.0,
+        };
+    }
+    let xi = at(ego, X);
+    let mut rng = max_range;
+    for j in 0..n {
+        if at(j, ACTIVE) < 0.5 {
+            continue;
+        }
+        let dx = at(j, X) - xi;
+        if dx > 1e-6 && dx <= max_range && dx < rng {
+            rng = dx;
+        }
+    }
+    if rng >= max_range - 1e-6 {
+        return RadarReading {
+            distance: max_range,
+            closing_speed: 0.0,
+        };
+    }
+    // mask-min tie-break on target speed, mirroring the kernel
+    let mut tv = f32::INFINITY;
+    for j in 0..n {
+        if at(j, ACTIVE) < 0.5 {
+            continue;
+        }
+        let dx = at(j, X) - xi;
+        if dx > 1e-6 && dx <= rng {
+            tv = tv.min(at(j, V));
+        }
+    }
+    RadarReading {
+        distance: rng,
+        closing_speed: at(ego, V) - tv,
+    }
+}
+
+/// GPS over a snapshot.
+pub fn gps_from_rows(rows: &[f32], ego: usize) -> GpsReading {
+    GpsReading {
+        x: rows[ego * STATE_COLS + X],
+        lane: rows[ego * STATE_COLS + LANE],
+        speed: rows[ego * STATE_COLS + V],
+    }
+}
+
+/// Convenience over a [`Traffic`] (native path).
+pub fn radar(t: &Traffic, ego: usize, max_range: f32) -> RadarReading {
+    radar_from_rows(&t.state, ego, max_range)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sumo::state::DriverParams;
+
+    fn rows(items: &[(f32, f32, f32, f32)]) -> Vec<f32> {
+        items.iter().flat_map(|&(x, v, l, a)| [x, v, l, a]).collect()
+    }
+
+    #[test]
+    fn radar_sees_nearest_any_lane() {
+        let r = rows(&[
+            (100.0, 30.0, 1.0, 1.0),
+            (140.0, 10.0, 2.0, 1.0),
+            (160.0, 5.0, 1.0, 1.0),
+        ]);
+        let hit = radar_from_rows(&r, 0, 150.0);
+        assert_eq!(hit.distance, 40.0);
+        assert_eq!(hit.closing_speed, 20.0);
+    }
+
+    #[test]
+    fn radar_clear_when_out_of_range() {
+        let r = rows(&[(0.0, 30.0, 1.0, 1.0), (500.0, 0.0, 1.0, 1.0)]);
+        let hit = radar_from_rows(&r, 0, 150.0);
+        assert_eq!(hit.distance, 150.0);
+        assert_eq!(hit.closing_speed, 0.0);
+    }
+
+    #[test]
+    fn radar_ignores_inactive() {
+        let r = rows(&[(0.0, 30.0, 1.0, 1.0), (50.0, 0.0, 1.0, 0.0)]);
+        assert_eq!(radar_from_rows(&r, 0, 150.0).distance, 150.0);
+    }
+
+    #[test]
+    fn radar_matches_native_traffic_path() {
+        let mut t = Traffic::new(3);
+        t.spawn(100.0, 30.0, 1.0, DriverParams::default());
+        t.spawn(140.0, 10.0, 2.0, DriverParams::default());
+        t.spawn(160.0, 5.0, 1.0, DriverParams::default());
+        assert_eq!(radar(&t, 0, 150.0), radar_from_rows(&t.state, 0, 150.0));
+    }
+
+    #[test]
+    fn gps_reads_position() {
+        let r = rows(&[(123.0, 17.0, 2.0, 1.0)]);
+        let g = gps_from_rows(&r, 0);
+        assert_eq!((g.x, g.lane, g.speed), (123.0, 2.0, 17.0));
+    }
+}

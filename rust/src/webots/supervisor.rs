@@ -1,0 +1,73 @@
+//! Stop conditions and run supervision.
+//!
+//! "When starting a simulation in headless mode ... users must build in a
+//! stop condition for their simulation, or else the Webots instance will
+//! run indefinitely" (§3.1.3).  [`StopCondition`] is that build-in; the
+//! [`Supervisor`] evaluates it each step.
+
+/// When to end a batch simulation run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StopCondition {
+    /// Stop after this much simulated time [s].
+    SimTime(f32),
+    /// Stop once every scheduled vehicle has been inserted and retired.
+    Drained,
+    /// Stop when `count` vehicles have crossed the road end.
+    FlowCount(u32),
+    /// No stop condition: the §3.1.3 footgun, runs until walltime kill.
+    None,
+}
+
+/// Evaluates the stop condition against live simulation signals.
+#[derive(Debug, Clone, Copy)]
+pub struct Supervisor {
+    pub condition: StopCondition,
+}
+
+impl Supervisor {
+    pub fn new(condition: StopCondition) -> Self {
+        Supervisor { condition }
+    }
+
+    /// Should the run stop now?
+    pub fn should_stop(&self, time_s: f32, drained: bool, total_flow: f32) -> bool {
+        match self.condition {
+            StopCondition::SimTime(t) => time_s >= t,
+            StopCondition::Drained => drained,
+            StopCondition::FlowCount(n) => total_flow >= n as f32,
+            StopCondition::None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_time_stop() {
+        let s = Supervisor::new(StopCondition::SimTime(300.0));
+        assert!(!s.should_stop(299.9, false, 0.0));
+        assert!(s.should_stop(300.0, false, 0.0));
+    }
+
+    #[test]
+    fn drained_stop() {
+        let s = Supervisor::new(StopCondition::Drained);
+        assert!(!s.should_stop(10.0, false, 0.0));
+        assert!(s.should_stop(10.0, true, 0.0));
+    }
+
+    #[test]
+    fn flow_count_stop() {
+        let s = Supervisor::new(StopCondition::FlowCount(10));
+        assert!(!s.should_stop(0.0, false, 9.0));
+        assert!(s.should_stop(0.0, false, 10.0));
+    }
+
+    #[test]
+    fn none_never_stops() {
+        let s = Supervisor::new(StopCondition::None);
+        assert!(!s.should_stop(1e9, true, 1e9));
+    }
+}

@@ -1,0 +1,369 @@
+//! `.wbt` world files: parse, query, edit, render.
+//!
+//! Webots worlds are "human-readable with any of your favorite text
+//! editors, so a script could easily be created to propagate n copies of
+//! the simulation and then update them to have unique values for the
+//! SUMO Interface port" (§3.1.5) — that script is
+//! `pipeline::copies`, and this module is its editor.
+//!
+//! Grammar (a faithful subset of VRML/wbt):
+//!
+//! ```text
+//! #VRML_SIM R2021a utf8
+//! NodeType {
+//!   fieldName value tokens ...
+//!   ChildNodeType {
+//!     ...
+//!   }
+//! }
+//! ```
+
+use crate::{Error, Result};
+
+/// A node in the scene tree.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub node_type: String,
+    /// Scalar fields in declaration order.
+    pub fields: Vec<(String, String)>,
+    pub children: Vec<Node>,
+}
+
+impl Node {
+    pub fn new(node_type: impl Into<String>) -> Self {
+        Node {
+            node_type: node_type.into(),
+            fields: Vec::new(),
+            children: Vec::new(),
+        }
+    }
+
+    pub fn with_field(mut self, k: impl Into<String>, v: impl Into<String>) -> Self {
+        self.fields.push((k.into(), v.into()));
+        self
+    }
+
+    pub fn with_child(mut self, c: Node) -> Self {
+        self.children.push(c);
+        self
+    }
+
+    pub fn field(&self, name: &str) -> Option<&str> {
+        self.fields
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn field_f32(&self, name: &str) -> Option<f32> {
+        self.field(name)?.parse().ok()
+    }
+
+    pub fn field_u32(&self, name: &str) -> Option<u32> {
+        self.field(name)?.parse().ok()
+    }
+
+    pub fn set_field(&mut self, name: &str, value: impl Into<String>) {
+        let value = value.into();
+        for (k, v) in &mut self.fields {
+            if k == name {
+                *v = value;
+                return;
+            }
+        }
+        self.fields.push((name.to_string(), value));
+    }
+}
+
+/// A parsed world: header + top-level nodes ("Robot nodes should always
+/// be under the root node", §2.5.1 — top level IS the root's child list).
+#[derive(Debug, Clone, PartialEq)]
+pub struct World {
+    pub header: String,
+    pub nodes: Vec<Node>,
+}
+
+impl World {
+    pub const HEADER: &'static str = "#VRML_SIM R2021a utf8";
+
+    pub fn new() -> Self {
+        World {
+            header: Self::HEADER.to_string(),
+            nodes: Vec::new(),
+        }
+    }
+
+    /// First node of a given type anywhere in the tree (depth-first).
+    pub fn find(&self, node_type: &str) -> Option<&Node> {
+        fn walk<'a>(nodes: &'a [Node], t: &str) -> Option<&'a Node> {
+            for n in nodes {
+                if n.node_type == t {
+                    return Some(n);
+                }
+                if let Some(hit) = walk(&n.children, t) {
+                    return Some(hit);
+                }
+            }
+            None
+        }
+        walk(&self.nodes, node_type)
+    }
+
+    pub fn find_mut(&mut self, node_type: &str) -> Option<&mut Node> {
+        fn walk<'a>(nodes: &'a mut [Node], t: &str) -> Option<&'a mut Node> {
+            for n in nodes {
+                if n.node_type == t {
+                    return Some(n);
+                }
+                if let Some(hit) = walk(&mut n.children, t) {
+                    return Some(hit);
+                }
+            }
+            None
+        }
+        walk(&mut self.nodes, node_type)
+    }
+
+    /// All nodes of a type (e.g. every `Robot`).
+    pub fn find_all(&self, node_type: &str) -> Vec<&Node> {
+        let mut out = Vec::new();
+        fn walk<'a>(nodes: &'a [Node], t: &str, out: &mut Vec<&'a Node>) {
+            for n in nodes {
+                if n.node_type == t {
+                    out.push(n);
+                }
+                walk(&n.children, t, out);
+            }
+        }
+        walk(&self.nodes, node_type, &mut out);
+        out
+    }
+
+    /// Parse `.wbt` text.
+    pub fn parse(text: &str) -> Result<World> {
+        let mut lines = text.lines().peekable();
+        let header = match lines.peek() {
+            Some(l) if l.starts_with("#VRML_SIM") => lines.next().expect("peeked").to_string(),
+            _ => return Err(Error::World("missing #VRML_SIM header".into())),
+        };
+        let mut tokens: Vec<String> = Vec::new();
+        for line in lines {
+            let line = line.split('#').next().unwrap_or("");
+            for tok in line.split_whitespace() {
+                tokens.push(tok.to_string());
+            }
+        }
+        let mut pos = 0usize;
+        let mut nodes = Vec::new();
+        while pos < tokens.len() {
+            let (node, next) = parse_node(&tokens, pos)?;
+            nodes.push(node);
+            pos = next;
+        }
+        Ok(World { header, nodes })
+    }
+
+    /// Render back to `.wbt` text. `parse(render(w)) == w`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.header);
+        out.push('\n');
+        for n in &self.nodes {
+            render_node(n, 0, &mut out);
+        }
+        out
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.render())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<World> {
+        World::parse(&std::fs::read_to_string(path)?)
+    }
+}
+
+impl Default for World {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Recursive-descent node parse: `Type { field... child... }`.
+fn parse_node(tokens: &[String], mut pos: usize) -> Result<(Node, usize)> {
+    let node_type = tokens
+        .get(pos)
+        .ok_or_else(|| Error::World("expected node type".into()))?
+        .clone();
+    if !node_type
+        .chars()
+        .next()
+        .map(|c| c.is_ascii_uppercase())
+        .unwrap_or(false)
+    {
+        return Err(Error::World(format!(
+            "node type must be capitalized: '{node_type}'"
+        )));
+    }
+    pos += 1;
+    if tokens.get(pos).map(String::as_str) != Some("{") {
+        return Err(Error::World(format!("expected '{{' after {node_type}")));
+    }
+    pos += 1;
+
+    let mut node = Node::new(node_type);
+    while pos < tokens.len() {
+        let tok = &tokens[pos];
+        if tok == "}" {
+            return Ok((node, pos + 1));
+        }
+        let is_child = tok
+            .chars()
+            .next()
+            .map(|c| c.is_ascii_uppercase())
+            .unwrap_or(false)
+            && tokens.get(pos + 1).map(String::as_str) == Some("{");
+        if is_child {
+            let (child, next) = parse_node(tokens, pos)?;
+            node.children.push(child);
+            pos = next;
+        } else {
+            // field: name + value tokens until the next field name,
+            // child, or '}'. Values: quoted strings stay one token per
+            // whitespace-split word; rejoin them.
+            let name = tok.clone();
+            pos += 1;
+            let mut value_parts: Vec<String> = Vec::new();
+            while pos < tokens.len() {
+                let t = &tokens[pos];
+                if t == "}" {
+                    break;
+                }
+                let next_is_open = tokens.get(pos + 1).map(String::as_str) == Some("{");
+                let starts_upper = t
+                    .chars()
+                    .next()
+                    .map(|c| c.is_ascii_uppercase())
+                    .unwrap_or(false);
+                if starts_upper && next_is_open {
+                    break;
+                }
+                // lowercase bare token after at least one value token ⇒
+                // next field name
+                let starts_lower = t
+                    .chars()
+                    .next()
+                    .map(|c| c.is_ascii_lowercase())
+                    .unwrap_or(false);
+                if !value_parts.is_empty() && starts_lower && !t.starts_with('"') {
+                    // heuristic: numbers/quoted continue a value; a bare
+                    // identifier starts the next field
+                    if t.parse::<f64>().is_err() && *t != "TRUE" && *t != "FALSE" {
+                        break;
+                    }
+                }
+                value_parts.push(t.clone());
+                pos += 1;
+            }
+            if value_parts.is_empty() {
+                return Err(Error::World(format!("field '{name}' has no value")));
+            }
+            node.fields.push((name, value_parts.join(" ")));
+        }
+    }
+    Err(Error::World(format!(
+        "unterminated node '{}'",
+        node.node_type
+    )))
+}
+
+fn render_node(n: &Node, depth: usize, out: &mut String) {
+    let pad = "  ".repeat(depth);
+    out.push_str(&format!("{pad}{} {{\n", n.node_type));
+    for (k, v) in &n.fields {
+        out.push_str(&format!("{pad}  {k} {v}\n"));
+    }
+    for c in &n.children {
+        render_node(c, depth + 1, out);
+    }
+    out.push_str(&format!("{pad}}}\n"));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::webots::nodes::sample_merge_world;
+
+    #[test]
+    fn parse_render_roundtrip() {
+        let w = sample_merge_world(8873);
+        let text = w.render();
+        let back = World::parse(&text).unwrap();
+        assert_eq!(w, back);
+    }
+
+    #[test]
+    fn find_nested_nodes() {
+        let w = sample_merge_world(8873);
+        assert!(w.find("WorldInfo").is_some());
+        assert!(w.find("SumoInterface").is_some());
+        assert!(w.find("Radar").is_some(), "radar nested under Robot");
+        assert!(w.find("FluxCapacitor").is_none());
+    }
+
+    #[test]
+    fn set_field_edits_port() {
+        let mut w = sample_merge_world(8873);
+        w.find_mut("SumoInterface")
+            .unwrap()
+            .set_field("port", "8880");
+        assert_eq!(w.find("SumoInterface").unwrap().field_u32("port"), Some(8880));
+    }
+
+    #[test]
+    fn parse_rejects_headerless() {
+        assert!(World::parse("WorldInfo { }").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_unterminated() {
+        let t = "#VRML_SIM R2021a utf8\nWorldInfo {\n  basicTimeStep 100\n";
+        assert!(World::parse(t).is_err());
+    }
+
+    #[test]
+    fn quoted_string_fields_survive() {
+        let t = "#VRML_SIM R2021a utf8\nRobot {\n  name \"cav 0\"\n  controller \"merge_assist\"\n}\n";
+        let w = World::parse(t).unwrap();
+        let r = w.find("Robot").unwrap();
+        assert_eq!(r.field("name"), Some("\"cav 0\""));
+        assert_eq!(r.field("controller"), Some("\"merge_assist\""));
+    }
+
+    #[test]
+    fn multi_token_vector_fields() {
+        let t = "#VRML_SIM R2021a utf8\nViewpoint {\n  position 0 50 100\n}\n";
+        let w = World::parse(t).unwrap();
+        assert_eq!(w.find("Viewpoint").unwrap().field("position"), Some("0 50 100"));
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let t = "#VRML_SIM R2021a utf8\nWorldInfo {\n  basicTimeStep 100 # ms\n}\n";
+        let w = World::parse(t).unwrap();
+        assert_eq!(
+            w.find("WorldInfo").unwrap().field_u32("basicTimeStep"),
+            Some(100)
+        );
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = crate::util::TempDir::new("webots-hpc-world").unwrap();
+        let p = dir.path().join("sim.wbt");
+        let w = sample_merge_world(8894);
+        w.save(&p).unwrap();
+        assert_eq!(World::load(&p).unwrap(), w);
+    }
+}

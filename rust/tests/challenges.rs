@@ -1,0 +1,144 @@
+//! Table 4.1 as executable tests: every development challenge the paper
+//! hit is reproduced mechanically, then its published solution is shown
+//! to work.
+
+use webots_hpc::container::{
+    build_webots_hpc_image, modify_sif_on_cluster, singularity_build, BuildHost, DockerImage,
+    ExecEnv,
+};
+use webots_hpc::display::{DisplayRegistry, SshSession, X11Forward, XvfbRun};
+use webots_hpc::pipeline::{propagate_copies, PortAllocator};
+use webots_hpc::sumo::{duarouter, FlowFile, MergeScenario, NativeIdmStepper, SumoSim};
+use webots_hpc::traci::TraciServer;
+use webots_hpc::webots::nodes::sample_merge_world;
+use webots_hpc::Error;
+
+fn free_port() -> u16 {
+    std::net::TcpListener::bind("127.0.0.1:0")
+        .unwrap()
+        .local_addr()
+        .unwrap()
+        .port()
+}
+
+fn test_sim(seed: u64) -> SumoSim {
+    let scenario = MergeScenario::default();
+    let routes = duarouter(
+        &scenario.network(),
+        &FlowFile::merge_sample(1200.0, 300.0, 30.0),
+        seed,
+    )
+    .unwrap();
+    SumoSim::new(scenario, 64, routes, Box::new(NativeIdmStepper::default()))
+}
+
+/// Row 2-4: docker→singularity conversion; SIF immutability; the
+/// missing-pip dead end; the working publication loop.
+#[test]
+fn challenge_container_conversion_loop() {
+    // the dead end: modify on the cluster
+    let mut sif = singularity_build(&DockerImage::official_webots(), false);
+    assert!(matches!(
+        modify_sif_on_cluster(&mut sif, "numpy"),
+        Err(Error::ImmutableImage(_))
+    ));
+    // the dead end: bootstrap pip on the cluster
+    assert!(matches!(
+        build_webots_hpc_image(BuildHost::Cluster),
+        Err(Error::PermissionDenied(_))
+    ));
+    // the published solution: admin host, then convert
+    let sif = build_webots_hpc_image(BuildHost::PersonalComputer).unwrap();
+    assert!(sif.has_python_package("numpy"));
+    assert!(sif.has_python_package("pandas"));
+}
+
+/// Row 5: GUI needs ssh -X.
+#[test]
+fn challenge_gui_needs_x11_forwarding() {
+    let reg = DisplayRegistry::new();
+    let no_x = SshSession::connect("user", "host", false);
+    assert!(X11Forward::open(&no_x, &reg).is_err());
+    let with_x = SshSession::connect("user", "host", true);
+    assert!(X11Forward::open(&with_x, &reg).is_ok());
+}
+
+/// Row 6: headless mode under Xvfb; `-a` required for n > 1.
+#[test]
+fn challenge_headless_xvfb_dash_a() {
+    let reg = DisplayRegistry::new();
+    let fixed = XvfbRun::default();
+    let _one = fixed.acquire(&reg).unwrap();
+    assert!(matches!(
+        fixed.acquire(&reg),
+        Err(Error::DisplayInUse(99))
+    ));
+    // the fix
+    let auto = XvfbRun::auto();
+    let two = auto.acquire(&reg).unwrap();
+    assert_eq!(two.number, 100);
+}
+
+/// Row 8: the duplicate-port issue, on real sockets, and the paper's fix
+/// (base 8873, step 7) making 8 parallel servers coexist.
+#[test]
+fn challenge_duplicate_port_and_fix() {
+    // the crash
+    let port = free_port();
+    let s1 = TraciServer::spawn(port, test_sim(1)).unwrap();
+    assert!(matches!(
+        TraciServer::spawn(port, test_sim(2)),
+        Err(Error::PortInUse(p)) if p == port
+    ));
+    let mut c = webots_hpc::traci::TraciClient::connect(port).unwrap();
+    c.close().unwrap();
+    s1.join().unwrap();
+
+    // the fix: 8 distinct ports via the world-copy propagation
+    let base = free_port();
+    let root = sample_merge_world(base);
+    let copies = propagate_copies(&root, 8, &PortAllocator::new(base, 7)).unwrap();
+    let servers: Vec<TraciServer> = copies
+        .iter()
+        .map(|c| TraciServer::spawn(c.port, test_sim(c.index as u64)).unwrap())
+        .collect();
+    for (i, s) in servers.into_iter().enumerate() {
+        let mut c = webots_hpc::traci::TraciClient::connect(base + 7 * i as u16).unwrap();
+        c.sim_step().unwrap();
+        c.close().unwrap();
+        s.join().unwrap();
+    }
+}
+
+/// Row 9: distribution across nodes — PBS packs 48 instances 8-per-node.
+#[test]
+fn challenge_distribution_across_nodes() {
+    use webots_hpc::cluster::{Cluster, ClusterQueue, NodeSpec, QueueSpec};
+    use webots_hpc::metrics::FixedWorkload;
+    use webots_hpc::pbs::{ArrayRange, Job, JobId, ResourceRequest, Scheduler, SchedulerConfig};
+
+    let cluster = Cluster::uniform("t", 6, NodeSpec::dice_r740());
+    let queue = ClusterQueue::new(QueueSpec::dicelab(6));
+    let mut s = Scheduler::new(cluster, queue, SchedulerConfig::default());
+    s.submit(
+        Job::new(JobId(0), "webots", ResourceRequest::experiment_15min())
+            .with_array(ArrayRange::new(1, 48).unwrap()),
+        Box::new(FixedWorkload::minutes(10)),
+    )
+    .unwrap();
+    assert_eq!(s.occupancy(), vec![8; 6]);
+}
+
+/// Row 1 epilogue: the chosen method actually runs a simulation inside
+/// the container env (binary resolution through the SIF).
+#[test]
+fn challenge_best_method_runs_webots() {
+    let sif = build_webots_hpc_image(BuildHost::PersonalComputer).unwrap();
+    let env = ExecEnv::new(sif).bind("/tmp/job", "/tmp/job");
+    env.exec("webots", &["--batch", "--mode=realtime", "SIM_0.wbt"])
+        .unwrap();
+    env.exec("duarouter", &["--randomize-flows", "true"]).unwrap();
+    env.exec("xvfb-run", &["-a", "webots"]).unwrap();
+    // audio (row 7) stays unresolved, as in the paper: no audio binary
+    assert!(env.exec("pulseaudio", &[]).is_err());
+}

@@ -1,0 +1,187 @@
+//! Cross-module integration tests: the full pipeline composed end to
+//! end, from PBS script text to aggregated output datasets.
+
+use webots_hpc::cluster::{Cluster, ClusterQueue, NodeSpec, QueueSpec};
+use webots_hpc::container::{build_webots_hpc_image, BuildHost, ExecEnv};
+use webots_hpc::display::DisplayRegistry;
+use webots_hpc::metrics::{CostModel, SimWorkload};
+use webots_hpc::output::CampaignDataset;
+use webots_hpc::pbs::script::{appendix_b_script, PbsScript};
+use webots_hpc::pbs::{JobId, JobState, Scheduler, SchedulerConfig};
+use webots_hpc::pipeline::{
+    launch_instance, launch_node_slots, pick_walltime, propagate_copies, run_cluster_campaign,
+    CampaignSpec, InstanceConfig, PhysicsEngine, PortAllocator, WalltimePolicy,
+};
+use webots_hpc::simclock::SimDuration;
+use webots_hpc::sumo::{FlowFile, MergeScenario};
+use webots_hpc::webots::nodes::sample_merge_world;
+
+fn free_port() -> u16 {
+    std::net::TcpListener::bind("127.0.0.1:0")
+        .unwrap()
+        .local_addr()
+        .unwrap()
+        .port()
+}
+
+/// The paper's headline reliability claim, at full scale: a 12-hour
+/// virtual campaign completes 2304/2304 runs.
+#[test]
+fn campaign_completion_100_percent() {
+    let r = run_cluster_campaign(&CampaignSpec::paper_cluster()).unwrap();
+    assert_eq!(r.stats.submitted, 2304);
+    assert_eq!(r.stats.completed, 2304);
+    assert_eq!(r.stats.killed_walltime, 0);
+    assert_eq!(r.stats.completion_rate(), 1.0);
+}
+
+/// Appendix-B script → parse → submit → schedule → account: the
+/// user-visible flow of the whole pipeline.
+#[test]
+fn appendix_b_script_schedules_8_per_node() {
+    let script = PbsScript::parse(&appendix_b_script()).unwrap();
+    let cluster = Cluster::uniform("palmetto", 6, NodeSpec::dice_r740());
+    let queue = ClusterQueue::new(QueueSpec::dicelab(6));
+    let mut sched = Scheduler::new(cluster, queue, SchedulerConfig::default());
+    let job = script.to_job(JobId(0));
+    sched
+        .submit(
+            job,
+            Box::new(SimWorkload::new(CostModel::paper_merge_sim(), 7)),
+        )
+        .unwrap();
+    assert_eq!(sched.occupancy(), vec![8; 6]);
+    sched.run_to_completion();
+    assert_eq!(sched.stats().completed, 48);
+    // every record must hold plausible usage numbers
+    for rec in sched.records() {
+        assert!(rec.state == JobState::Completed);
+        assert!(rec.usage.walltime.as_secs_f64() > 100.0);
+        assert!(rec.usage.max_ram_gb > 1.0);
+    }
+}
+
+/// The walltime the policy picks for the paper's slot is exactly the
+/// paper's experimental walltime, and the cost-model run fits inside it.
+#[test]
+fn picked_walltime_admits_the_run() {
+    let cost = CostModel::paper_merge_sim();
+    let w = pick_walltime(&cost, 5, &WalltimePolicy::default());
+    assert_eq!(w.as_minutes(), 15);
+    assert!(cost.walltime_s(5) < w.as_secs_f64());
+}
+
+/// Physics-fidelity instance through the container + display + TraCI +
+/// Webots stack, native engine.
+#[test]
+fn single_instance_end_to_end_native() {
+    let world = sample_merge_world(free_port());
+    let env = ExecEnv::new(build_webots_hpc_image(BuildHost::PersonalComputer).unwrap())
+        .bind("/tmp", "/tmp");
+    let displays = DisplayRegistry::new();
+    let cfg = InstanceConfig {
+        run_id: "it[0]".into(),
+        node: 0,
+        world,
+        flows: FlowFile::merge_sample(1200.0, 300.0, 20.0),
+        scenario: MergeScenario::default(),
+        seed: 3,
+        capacity: 64,
+        horizon_s: 20.0,
+        max_steps: 500,
+    };
+    let r = launch_instance(&cfg, &displays, &env, &PhysicsEngine::Native).unwrap();
+    assert_eq!(r.steps, 200);
+    assert!(r.dataset.total_spawned > 0);
+}
+
+/// Same thing on the AOT JAX/Pallas artifact (skipped when artifacts are
+/// missing), with several instances in parallel sharing one PJRT
+/// engine service.
+#[test]
+fn parallel_instances_end_to_end_hlo() {
+    let service = match webots_hpc::runtime::EngineService::auto() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return;
+        }
+    };
+    let base = free_port();
+    let root = sample_merge_world(base);
+    let copies = propagate_copies(&root, 4, &PortAllocator::new(base, 7)).unwrap();
+    let configs: Vec<InstanceConfig> = copies
+        .into_iter()
+        .map(|c| InstanceConfig {
+            run_id: format!("it[{}]", c.index),
+            node: 0,
+            world: c.world,
+            flows: FlowFile::merge_sample(1200.0, 300.0, 10.0),
+            scenario: MergeScenario::default(),
+            seed: 100 + c.index as u64,
+            capacity: 64,
+            horizon_s: 10.0,
+            max_steps: 300,
+        })
+        .collect();
+    let results = launch_node_slots(configs, &PhysicsEngine::Hlo(service));
+    let mut ds = CampaignDataset::new();
+    for r in results {
+        ds.add(r.unwrap().dataset);
+    }
+    assert_eq!(ds.num_runs(), 4);
+    assert!(ds.seeds_unique());
+    assert!(ds.total_rows() >= 4 * 100);
+}
+
+/// §5.1's scaling claim: doubling nodes doubles completed runs.
+#[test]
+fn throughput_scales_linearly_with_nodes() {
+    let mut spec = CampaignSpec::paper_cluster();
+    spec.duration = SimDuration::from_hours(3);
+    let six = run_cluster_campaign(&spec).unwrap().total_completed();
+    spec.nodes = 12;
+    let twelve = run_cluster_campaign(&spec).unwrap().total_completed();
+    assert_eq!(twelve, 2 * six);
+}
+
+/// Campaign submission honors queue caps end to end.
+#[test]
+fn queue_walltime_cap_rejects_bad_campaign() {
+    let mut spec = CampaignSpec::paper_cluster();
+    spec.walltime = SimDuration::from_hours(100);
+    spec.duration = SimDuration::from_hours(200);
+    assert!(run_cluster_campaign(&spec).is_err());
+}
+
+/// The world-copy tree written to disk round-trips through the pipeline:
+/// copies load back with their unique ports and boot real instances.
+#[test]
+fn copy_tree_boots_from_disk() {
+    let tmp = webots_hpc::util::TempDir::new("it-copytree").unwrap();
+    let base = free_port();
+    let root = sample_merge_world(base);
+    let copies = propagate_copies(&root, 2, &PortAllocator::new(base, 7)).unwrap();
+    let scenario = MergeScenario::default();
+    let flows = FlowFile::merge_sample(1200.0, 300.0, 10.0);
+    webots_hpc::pipeline::write_copy_tree(tmp.path(), &copies, &scenario.network(), &flows)
+        .unwrap();
+
+    // reload copy 1 from disk and run it
+    let world = webots_hpc::webots::World::load(&tmp.path().join("SIM_1.wbt")).unwrap();
+    let env = ExecEnv::new(build_webots_hpc_image(BuildHost::PersonalComputer).unwrap());
+    let displays = DisplayRegistry::new();
+    let cfg = InstanceConfig {
+        run_id: "disk[1]".into(),
+        node: 0,
+        world,
+        flows,
+        scenario,
+        seed: 5,
+        capacity: 64,
+        horizon_s: 5.0,
+        max_steps: 100,
+    };
+    let r = launch_instance(&cfg, &displays, &env, &PhysicsEngine::Native).unwrap();
+    assert_eq!(r.port, base + 7, "copy 1 runs on base+7");
+}

@@ -1,0 +1,235 @@
+//! Cross-language numerics: the AOT JAX/Pallas artifact executed via
+//! PJRT must agree with the pure-rust port of the same model (which in
+//! turn mirrors `python/compile/kernels/ref.py`, the pytest oracle).
+//!
+//! This closes the validation triangle:
+//!   pallas kernel ≈ jnp ref  (pytest, python/tests)
+//!   jnp model     ≈ rust native (THIS file, via the lowered HLO)
+//! so rust-native ≈ pallas transitively.
+//!
+//! All tests no-op with a note when `make artifacts` hasn't run.
+
+use webots_hpc::runtime::EngineService;
+use webots_hpc::sumo::idm::idm_accel_all;
+use webots_hpc::sumo::state::{DriverParams, Traffic};
+use webots_hpc::sumo::{NativeIdmStepper, Stepper};
+use webots_hpc::util::Rng64;
+
+fn service() -> Option<EngineService> {
+    match EngineService::auto() {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping runtime numerics: {e}");
+            None
+        }
+    }
+}
+
+/// Random-but-plausible traffic in a bucket.
+fn random_traffic(rng: &mut Rng64, cap: usize, fill: f64) -> Traffic {
+    let mut t = Traffic::new(cap);
+    let mut x = 0.0f32;
+    for i in 0..cap {
+        if rng.gen_f64() >= fill {
+            continue;
+        }
+        x += 8.0 + rng.gen_range_f32(0.0, 60.0);
+        let lane = rng.gen_below(3) as f32;
+        let v = rng.gen_range_f32(0.0, 32.0);
+        let params = DriverParams {
+            v0: rng.gen_range_f32(20.0, 38.0),
+            t_headway: rng.gen_range_f32(0.9, 2.2),
+            a_max: rng.gen_range_f32(1.0, 2.5),
+            b_comf: rng.gen_range_f32(1.5, 3.5),
+            s0: rng.gen_range_f32(1.5, 3.0),
+            length: rng.gen_range_f32(4.0, 9.0),
+        };
+        let _ = i;
+        t.spawn(x, v, lane, params);
+    }
+    t
+}
+
+/// The bare IDM kernel (pallas, interpret-lowered) vs the rust port:
+/// accelerations agree to f32 tolerance across random states.
+#[test]
+fn idm_kernel_matches_native_rust() {
+    let Some(s) = service() else { return };
+    let bucket = s.manifest().buckets[0];
+    for seed in 0..25u64 {
+        let mut rng = Rng64::seed_from_u64(seed);
+        let t = random_traffic(&mut rng, bucket, 0.7);
+        let hlo = s.idm(bucket, &t.state, &t.params).unwrap();
+        let native = idm_accel_all(&t);
+        for i in 0..bucket {
+            let (a, b) = (hlo[i], native[i]);
+            let tol = 1e-3_f32.max(a.abs() * 1e-4);
+            assert!(
+                (a - b).abs() <= tol,
+                "seed {seed} slot {i}: hlo {a} vs native {b}"
+            );
+        }
+    }
+}
+
+/// The radar kernel vs the rust sensor model.
+#[test]
+fn radar_kernel_matches_native_rust() {
+    let Some(s) = service() else { return };
+    let bucket = s.manifest().buckets[0];
+    for seed in 0..25u64 {
+        let mut rng = Rng64::seed_from_u64(seed ^ 0x5EED);
+        let t = random_traffic(&mut rng, bucket, 0.7);
+        let hlo = s.radar(bucket, &t.state).unwrap();
+        for i in 0..bucket {
+            let native = webots_hpc::webots::sensors::radar(&t, i, 150.0);
+            assert!(
+                (hlo[i * 2] - native.distance).abs() < 1e-3,
+                "seed {seed} slot {i}: range {} vs {}",
+                hlo[i * 2],
+                native.distance
+            );
+            assert!(
+                (hlo[i * 2 + 1] - native.closing_speed).abs() < 1e-3,
+                "seed {seed} slot {i}: closing {} vs {}",
+                hlo[i * 2 + 1],
+                native.closing_speed
+            );
+        }
+    }
+}
+
+/// Full step: HLO stepper vs native stepper over a multi-step rollout.
+/// Trajectories track within tolerance (divergence grows with steps —
+/// both integrate the same f32 math in different op orders).
+#[test]
+fn full_step_trajectories_track() {
+    let Some(s) = service() else { return };
+    let bucket = s.manifest().buckets[0];
+    for seed in 0..10u64 {
+        let mut rng = Rng64::seed_from_u64(seed ^ 0xD1CE);
+        let t0 = random_traffic(&mut rng, bucket, 0.6);
+        let mut t_hlo = t0.clone();
+        let mut t_nat = t0.clone();
+        let mut hlo = webots_hpc::runtime::HloStepper::new(s.clone(), bucket).unwrap();
+        let mut nat = NativeIdmStepper::default();
+        for step in 0..20 {
+            let o1 = hlo.step(&mut t_hlo);
+            let o2 = nat.step(&mut t_nat);
+            assert_eq!(
+                o1.n_active, o2.n_active,
+                "seed {seed} step {step}: active count diverged"
+            );
+            for i in 0..bucket {
+                assert!(
+                    (t_hlo.x(i) - t_nat.x(i)).abs() < 0.5,
+                    "seed {seed} step {step} slot {i}: x {} vs {}",
+                    t_hlo.x(i),
+                    t_nat.x(i)
+                );
+                assert!(
+                    (t_hlo.v(i) - t_nat.v(i)).abs() < 0.5,
+                    "seed {seed} step {step} slot {i}: v {} vs {}",
+                    t_hlo.v(i),
+                    t_nat.v(i)
+                );
+                assert_eq!(
+                    t_hlo.lane(i),
+                    t_nat.lane(i),
+                    "seed {seed} step {step} slot {i}: lane diverged"
+                );
+            }
+        }
+    }
+}
+
+/// Obs semantics agree: n_active from the artifact equals the rust count.
+#[test]
+fn obs_active_count_agrees() {
+    let Some(s) = service() else { return };
+    let bucket = s.manifest().buckets[0];
+    let mut rng = Rng64::seed_from_u64(99);
+    let t = random_traffic(&mut rng, bucket, 0.5);
+    let out = s.step(bucket, &t.state, &t.params).unwrap();
+    assert_eq!(out.obs[0] as usize, t.active_count());
+}
+
+/// Manifest constants match the rust scenario (guards silent drift
+/// between model.py and MergeScenario).
+#[test]
+fn manifest_constants_match_rust() {
+    let Some(s) = service() else { return };
+    s.manifest().validate_against_default_scenario().unwrap();
+}
+
+/// The vmapped batched step must be bit-equivalent to per-instance
+/// single steps (the §Perf micro-batcher's correctness contract).
+#[test]
+fn batched_step_equals_singles() {
+    let Some(s) = service() else { return };
+    let bucket = s.manifest().buckets[0];
+    let b = s.manifest().batch;
+    if b < 2 {
+        eprintln!("no batched artifact; skipping");
+        return;
+    }
+    let mut rng = Rng64::seed_from_u64(0xBA7C);
+    let worlds: Vec<Traffic> = (0..b)
+        .map(|i| random_traffic(&mut rng, bucket, 0.3 + 0.08 * i as f64))
+        .collect();
+    let mut states = Vec::new();
+    let mut params = Vec::new();
+    for w in &worlds {
+        states.extend_from_slice(&w.state);
+        params.extend_from_slice(&w.params);
+    }
+    let batched = s.step_batched(bucket, &states, &params).unwrap();
+    assert_eq!(batched.len(), b);
+    for (i, w) in worlds.iter().enumerate() {
+        let single = s.step(bucket, &w.state, &w.params).unwrap();
+        for (a, c) in single.state.iter().zip(batched[i].state.iter()) {
+            assert!((a - c).abs() < 1e-4, "world {i}: state {a} vs {c}");
+        }
+        for (a, c) in single.obs.iter().zip(batched[i].obs.iter()) {
+            assert!((a - c).abs() < 1e-4, "world {i}: obs {a} vs {c}");
+        }
+    }
+}
+
+/// The micro-batcher under concurrency: 8 threads stepping DIFFERENT
+/// worlds must each get their own world's result (no cross-instance
+/// contamination when requests coalesce).
+#[test]
+fn concurrent_micro_batching_keeps_worlds_separate() {
+    let Some(s) = service() else { return };
+    let bucket = s.manifest().buckets[0];
+    let mut rng = Rng64::seed_from_u64(0xC0DE);
+    let worlds: Vec<Traffic> = (0..8)
+        .map(|_| random_traffic(&mut rng, bucket, 0.5))
+        .collect();
+    // reference: serial singles
+    let expect: Vec<_> = worlds
+        .iter()
+        .map(|w| s.step(bucket, &w.state, &w.params).unwrap())
+        .collect();
+    for _ in 0..5 {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = worlds
+                .iter()
+                .zip(expect.iter())
+                .map(|(w, e)| {
+                    let svc = s.clone();
+                    scope.spawn(move || {
+                        let out = svc.step(bucket, &w.state, &w.params).unwrap();
+                        for (a, c) in out.state.iter().zip(e.state.iter()) {
+                            assert!((a - c).abs() < 1e-4, "contaminated batch result");
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+    }
+}
