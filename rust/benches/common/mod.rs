@@ -4,6 +4,11 @@
 //! timing harness with warmup, repeated samples and median/mean/stddev
 //! reporting — enough rigor for the regeneration benches, whose primary
 //! output is the *table content*, not nanosecond precision.
+//!
+//! Benches that feed the perf trajectory additionally record their
+//! samples through a [`Recorder`], which appends a machine-readable run
+//! to `BENCH_<bench>.json` at the repo root (EXPERIMENTS.md §Perf) so
+//! numbers are comparable across PRs.
 
 use std::time::{Duration, Instant};
 
@@ -63,4 +68,133 @@ pub fn bench<F: FnMut()>(label: &str, iters: u32, mut f: F) -> Sample {
 #[allow(dead_code)]
 pub fn throughput(sample: &Sample, ops_per_iter: f64) -> f64 {
     ops_per_iter / sample.median.as_secs_f64()
+}
+
+/// Collects samples and appends them as one labelled run to
+/// `BENCH_<bench>.json` (see EXPERIMENTS.md §Perf for the schema and
+/// methodology).  Existing runs in the file are preserved, so the file
+/// accumulates the perf trajectory across PRs.
+///
+/// The run label comes from `WEBOTS_HPC_BENCH_LABEL` (default "run");
+/// the output directory from `WEBOTS_HPC_BENCH_DIR` (default: the
+/// enclosing repo root, found by walking up to `ROADMAP.md`/`.git`).
+#[allow(dead_code)]
+pub struct Recorder {
+    bench: String,
+    rows: Vec<webots_hpc::util::Json>,
+}
+
+#[allow(dead_code)]
+impl Recorder {
+    pub fn new(bench: &str) -> Recorder {
+        Recorder {
+            bench: bench.to_string(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Record a sample; `ops_per_iter` scales the derived steps/s (1.0
+    /// for plain per-iteration benches).
+    pub fn record(&mut self, s: &Sample, ops_per_iter: f64) {
+        use webots_hpc::util::Json;
+        let mut row = std::collections::BTreeMap::new();
+        row.insert("name".to_string(), Json::Str(s.label.clone()));
+        row.insert(
+            "ns_per_iter".to_string(),
+            Json::Num(s.median.as_nanos() as f64),
+        );
+        row.insert(
+            "mean_ns".to_string(),
+            Json::Num(s.mean.as_nanos() as f64),
+        );
+        row.insert("stddev_ns".to_string(), Json::Num(s.stddev_ns));
+        row.insert("iters".to_string(), Json::Num(s.iters as f64));
+        row.insert(
+            "steps_per_s".to_string(),
+            Json::Num(throughput(s, ops_per_iter)),
+        );
+        self.rows.push(Json::Obj(row));
+    }
+
+    /// Convenience: time `f` via [`bench`] and record the sample.
+    pub fn bench<F: FnMut()>(
+        &mut self,
+        label: &str,
+        iters: u32,
+        ops_per_iter: f64,
+        f: F,
+    ) -> Sample {
+        let s = bench(label, iters, f);
+        self.record(&s, ops_per_iter);
+        s
+    }
+
+    fn out_path(&self) -> std::path::PathBuf {
+        let file = format!("BENCH_{}.json", self.bench);
+        if let Ok(dir) = std::env::var("WEBOTS_HPC_BENCH_DIR") {
+            return std::path::PathBuf::from(dir).join(file);
+        }
+        let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+        loop {
+            if dir.join("ROADMAP.md").exists() || dir.join(".git").exists() {
+                return dir.join(file);
+            }
+            if !dir.pop() {
+                return std::path::PathBuf::from(file);
+            }
+        }
+    }
+
+    /// Append this run to the trajectory file; returns the path written.
+    ///
+    /// The existing document is preserved wholesale (its `notes` and any
+    /// other keys survive; only `runs` gains an entry).  A file that
+    /// exists but doesn't parse is **never overwritten** — losing the
+    /// cross-PR trajectory is worse than failing the append.
+    pub fn write(&self) -> std::io::Result<std::path::PathBuf> {
+        use std::collections::BTreeMap;
+        use webots_hpc::util::Json;
+        let path = self.out_path();
+        let mut top: BTreeMap<String, Json> = match std::fs::read_to_string(&path) {
+            Ok(text) => match Json::parse(&text) {
+                Ok(Json::Obj(m)) => m,
+                _ => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        format!(
+                            "refusing to overwrite unparseable {} — fix or move it first",
+                            path.display()
+                        ),
+                    ));
+                }
+            },
+            Err(_) => BTreeMap::new(), // absent: start a fresh document
+        };
+        let mut runs = match top.remove("runs") {
+            Some(Json::Arr(a)) => a,
+            _ => Vec::new(),
+        };
+        let label =
+            std::env::var("WEBOTS_HPC_BENCH_LABEL").unwrap_or_else(|_| "run".to_string());
+        let unix_time = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let mut run = BTreeMap::new();
+        run.insert("label".to_string(), Json::Str(label));
+        run.insert("unix_time".to_string(), Json::Num(unix_time as f64));
+        run.insert("source".to_string(), Json::Str("cargo-bench".to_string()));
+        run.insert("results".to_string(), Json::Arr(self.rows.clone()));
+        runs.push(Json::Obj(run));
+        top.insert("bench".to_string(), Json::Str(self.bench.clone()));
+        top.entry("schema".to_string()).or_insert(Json::Num(1.0));
+        top.insert("runs".to_string(), Json::Arr(runs));
+        // crash-safe append: stage next to the target, then rename over
+        // it, so an interrupted bench never truncates the trajectory
+        let staged = path.with_extension("json.tmp");
+        std::fs::write(&staged, Json::Obj(top).to_pretty_string() + "\n")?;
+        std::fs::rename(&staged, &path)?;
+        println!("bench results appended to {}", path.display());
+        Ok(path)
+    }
 }

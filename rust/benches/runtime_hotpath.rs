@@ -7,12 +7,20 @@
 //! ```
 //!
 //! This is the §Perf baseline/after harness (EXPERIMENTS.md §Perf).
+//! Results are appended to `BENCH_runtime_hotpath.json` at the repo
+//! root; set `WEBOTS_HPC_BENCH_LABEL` to tag the run (e.g. "pre-PR1").
+//!
+//! Paired entries worth watching:
+//!   * `native_step_reference/N=*` vs `native_step/N=*` — O(N²)
+//!     reference scans vs the sorted-sweep index (PR 1 tentpole).
+//!   * `hlo_step_8threads_x10/N=*` (persistent sessions) vs
+//!     `hlo_step_8threads_x10_oneshot/N=*` (per-call channels+copies).
 
 mod common;
 
 use webots_hpc::runtime::EngineService;
 use webots_hpc::sumo::state::{DriverParams, Traffic};
-use webots_hpc::sumo::{NativeIdmStepper, Stepper};
+use webots_hpc::sumo::{NativeIdmStepper, ReferenceIdmStepper, Stepper};
 use webots_hpc::util::Rng64;
 
 fn traffic(cap: usize, fill: f64, seed: u64) -> Traffic {
@@ -35,8 +43,17 @@ fn traffic(cap: usize, fill: f64, seed: u64) -> Traffic {
 }
 
 fn main() {
+    let mut rec = common::Recorder::new("runtime_hotpath");
     let Ok(service) = EngineService::auto() else {
         println!("artifacts missing; run `make artifacts` first");
+        // the native steppers need no artifacts — still record them
+        for bucket in [16usize, 64, 256] {
+            let t = traffic(bucket, 0.7, bucket as u64);
+            bench_native(&mut rec, bucket, &t);
+        }
+        if let Err(e) = rec.write() {
+            eprintln!("WARNING: bench results were NOT recorded: {e}");
+        }
         return;
     };
     println!("PJRT platform: {}", service.platform());
@@ -45,7 +62,7 @@ fn main() {
         let t = traffic(bucket, 0.7, bucket as u64);
 
         // full fused step (the production hot path)
-        let s = common::bench(&format!("hlo_step/N={bucket}"), 200, || {
+        let s = rec.bench(&format!("hlo_step/N={bucket}"), 200, 1.0, || {
             let _ = service.step(bucket, &t.state, &t.params).unwrap();
         });
         println!(
@@ -54,20 +71,22 @@ fn main() {
             common::throughput(&s, bucket as f64) / 1e6
         );
 
+        // the same fused step through a persistent session (buffer and
+        // channel reuse — the §Perf "after" path)
+        let mut sess = service.session(bucket).unwrap();
+        rec.bench(&format!("hlo_step_session/N={bucket}"), 200, 1.0, || {
+            let _ = sess.step(&t.state, &t.params).unwrap();
+        });
+
         // bare L1 kernels
-        common::bench(&format!("hlo_idm_kernel/N={bucket}"), 200, || {
+        rec.bench(&format!("hlo_idm_kernel/N={bucket}"), 200, 1.0, || {
             let _ = service.idm(bucket, &t.state, &t.params).unwrap();
         });
-        common::bench(&format!("hlo_radar_kernel/N={bucket}"), 200, || {
+        rec.bench(&format!("hlo_radar_kernel/N={bucket}"), 200, 1.0, || {
             let _ = service.radar(bucket, &t.state).unwrap();
         });
 
-        // native rust baseline (same physics, no PJRT round trip)
-        let mut nat = NativeIdmStepper::default();
-        common::bench(&format!("native_step/N={bucket}"), 200, || {
-            let mut tt = t.clone();
-            let _ = nat.step(&mut tt);
-        });
+        bench_native(&mut rec, bucket, &t);
     }
 
     // the batched-step ceiling: one PJRT dispatch for 8 instances
@@ -82,9 +101,14 @@ fn main() {
                 states.extend_from_slice(&t.state);
                 params.extend_from_slice(&t.params);
             }
-            let s = common::bench(&format!("hlo_step_batched_b{b}/N={bucket}"), 200, || {
-                let _ = service.step_batched(bucket, &states, &params).unwrap();
-            });
+            let s = rec.bench(
+                &format!("hlo_step_batched_b{b}/N={bucket}"),
+                200,
+                b as f64,
+                || {
+                    let _ = service.step_batched(bucket, &states, &params).unwrap();
+                },
+            );
             println!(
                 "    -> {:.0} amortized steps/s ({} instances per dispatch)",
                 common::throughput(&s, b as f64),
@@ -106,7 +130,7 @@ fn main() {
             .unwrap(),
         );
         let displays = webots_hpc::display::DisplayRegistry::new();
-        let s = common::bench(&format!("coupled_instance_30s/{label}"), 10, || {
+        let s = rec.bench(&format!("coupled_instance_30s/{label}"), 10, 300.0, || {
             let port = std::net::TcpListener::bind("127.0.0.1:0")
                 .unwrap()
                 .local_addr()
@@ -138,22 +162,80 @@ fn main() {
     let bucket = service.manifest().buckets[1];
     let t = traffic(bucket, 0.7, 1);
     const ROUNDS: u32 = 10;
-    let s = common::bench("hlo_step_8threads_x10/N=64", 30, || {
-        std::thread::scope(|scope| {
-            for _ in 0..8 {
-                let svc = service.clone();
-                let state = t.state.clone();
-                let params = t.params.clone();
-                scope.spawn(move || {
-                    for _ in 0..ROUNDS {
-                        let _ = svc.step(bucket, &state, &params).unwrap();
-                    }
-                });
-            }
-        });
-    });
+
+    // persistent sessions (the production path: no per-call channels or
+    // input copies into fresh Vecs)
+    let mut sessions: Vec<_> = (0..8)
+        .map(|_| service.session(bucket).unwrap())
+        .collect();
+    let s = rec.bench(
+        &format!("hlo_step_8threads_x10/N={bucket}"),
+        30,
+        8.0 * ROUNDS as f64,
+        || {
+            std::thread::scope(|scope| {
+                for sess in sessions.iter_mut() {
+                    let state = &t.state;
+                    let params = &t.params;
+                    scope.spawn(move || {
+                        for _ in 0..ROUNDS {
+                            let _ = sess.step(state, params).unwrap();
+                        }
+                    });
+                }
+            });
+        },
+    );
     println!(
-        "    -> {:.0} aggregate steps/s across 8 threads",
+        "    -> {:.0} aggregate steps/s across 8 threads (sessions)",
         common::throughput(&s, 8.0 * ROUNDS as f64)
     );
+
+    // one-shot API baseline (fresh channel + to_vec per call)
+    let s = rec.bench(
+        &format!("hlo_step_8threads_x10_oneshot/N={bucket}"),
+        30,
+        8.0 * ROUNDS as f64,
+        || {
+            std::thread::scope(|scope| {
+                for _ in 0..8 {
+                    let svc = service.clone();
+                    let state = &t.state;
+                    let params = &t.params;
+                    scope.spawn(move || {
+                        for _ in 0..ROUNDS {
+                            let _ = svc.step(bucket, state, params).unwrap();
+                        }
+                    });
+                }
+            });
+        },
+    );
+    println!(
+        "    -> {:.0} aggregate steps/s across 8 threads (one-shot)",
+        common::throughput(&s, 8.0 * ROUNDS as f64)
+    );
+
+    if let Err(e) = rec.write() {
+        eprintln!("WARNING: bench results were NOT recorded: {e}");
+    }
+}
+
+/// Native steppers at `bucket`: sorted-sweep production stepper vs the
+/// O(N²) reference oracle (the PR 1 before/after pair).
+fn bench_native(rec: &mut common::Recorder, bucket: usize, t: &Traffic) {
+    let mut nat = NativeIdmStepper::default();
+    let s = rec.bench(&format!("native_step/N={bucket}"), 200, 1.0, || {
+        let mut tt = t.clone();
+        let _ = nat.step(&mut tt);
+    });
+    println!(
+        "    -> {:.0} native steps/s (sorted sweep)",
+        common::throughput(&s, 1.0)
+    );
+    let mut reference = ReferenceIdmStepper::default();
+    rec.bench(&format!("native_step_reference/N={bucket}"), 200, 1.0, || {
+        let mut tt = t.clone();
+        let _ = reference.step(&mut tt);
+    });
 }

@@ -100,8 +100,9 @@ pub fn launch_instance(
     let _end = webots.run(cfg.max_steps)?;
     let mut dataset = RunDataset::new(cfg.run_id.clone(), cfg.node, cfg.seed);
     let dt = webots.world_info.basic_time_step_ms as f32 / 1000.0;
-    let history = webots.history.clone();
-    for (i, obs) in history.iter().enumerate() {
+    // iterate the history in place — cloning it doubled the per-run
+    // memory traffic for long horizons
+    for (i, obs) in webots.history.iter().enumerate() {
         dataset.push((i + 1) as f32 * dt, obs);
     }
     let steps = webots.steps();
@@ -133,13 +134,16 @@ pub fn launch_node_slots(
     let sif = crate::container::build_webots_hpc_image(BuildHost::PersonalComputer)
         .expect("image build on admin host succeeds");
     std::thread::scope(|scope| {
+        let displays = &displays;
         let handles: Vec<_> = configs
             .iter()
             .map(|cfg| {
-                let displays = displays.clone();
+                // scoped threads borrow the (Arc-backed) registry
+                // directly; the engine handle clone is one channel-sender
+                // clone (Sender is not Sync on older toolchains)
                 let env = ExecEnv::new(sif.clone()).bind("/tmp", "/tmp");
                 let physics = physics.clone();
-                scope.spawn(move || launch_instance(cfg, &displays, &env, &physics))
+                scope.spawn(move || launch_instance(cfg, displays, &env, &physics))
             })
             .collect();
         handles.into_iter().map(|h| h.join().expect("no panic")).collect()

@@ -1,5 +1,15 @@
 //! The PJRT engine: compile HLO-text artifacts, execute them on the hot
 //! path, and adapt the step artifact to the [`Stepper`] trait.
+//!
+//! [`Stepper`]: crate::sumo::Stepper
+//!
+//! The `*_into` variants are the hot-path entry points: they fill a
+//! caller-owned [`StepOutputs`] instead of minting a fresh one per call.
+//! [`Engine::step_batched_into`] refills right-sized per-lane buffers in
+//! place (zero allocation in steady state); [`Engine::step_into`] swaps
+//! in the PJRT result vectors, whose allocation at the FFI boundary
+//! (`Literal` staging / `to_vec`) the vendored `xla` crate does not let
+//! us avoid (EXPERIMENTS.md §Perf).
 
 use std::path::PathBuf;
 use std::rc::Rc;
@@ -12,7 +22,7 @@ use super::manifest::Manifest;
 use super::pool::ExecutablePool;
 
 /// The outputs of one AOT step execution.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Default)]
 pub struct StepOutputs {
     /// f32[N*4] — next state rows.
     pub state: Vec<f32>,
@@ -22,6 +32,14 @@ pub struct StepOutputs {
     pub radar: Vec<f32>,
     /// f32[4] — [n_active, mean_speed, flow, n_merged].
     pub obs: Vec<f32>,
+}
+
+/// Clear-and-refill `dst` from `src` — no reallocation once `dst` has
+/// grown to the bucket's size.
+#[inline]
+fn fill(dst: &mut Vec<f32>, src: &[f32]) {
+    dst.clear();
+    dst.extend_from_slice(src);
 }
 
 /// The engine: a PJRT CPU client + the artifact manifest + a pool of
@@ -64,10 +82,16 @@ impl Engine {
     }
 
     /// Compile (or fetch from the pool) the artifact `name_{bucket}`.
-    fn executable(&self, name: &str, bucket: usize) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        let entry = self.manifest.entry(name, bucket)?;
-        let path = self.dir.join(&entry.file);
-        self.pool.get_or_compile(&format!("{name}_{bucket}"), || {
+    /// Steady state is a read-lock + `Arc` clone — no string keys, no
+    /// manifest lookup.
+    fn executable(
+        &self,
+        name: &'static str,
+        bucket: usize,
+    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        self.pool.get_or_compile((name, bucket), || {
+            let entry = self.manifest.entry(name, bucket)?;
+            let path = self.dir.join(&entry.file);
             let proto = xla::HloModuleProto::from_text_file(&path).map_err(Error::runtime)?;
             let comp = xla::XlaComputation::from_proto(&proto);
             self.client.compile(&comp).map_err(Error::runtime)
@@ -83,6 +107,24 @@ impl Engine {
 
     /// Execute one full merge-sim step at `bucket` capacity.
     pub fn step(&self, bucket: usize, state: &[f32], params: &[f32]) -> Result<StepOutputs> {
+        let mut out = StepOutputs::default();
+        self.step_into(bucket, state, params, &mut out)?;
+        Ok(out)
+    }
+
+    /// Execute one full merge-sim step at `bucket` capacity into the
+    /// caller's `StepOutputs` (the engine-service hot path).  The output
+    /// `Vec`s are replaced by the PJRT result vectors (an FFI-boundary
+    /// allocation the vendored `xla` crate can't avoid); the batched
+    /// variant [`Engine::step_batched_into`] additionally refills
+    /// per-lane buffers in place.
+    pub fn step_into(
+        &self,
+        bucket: usize,
+        state: &[f32],
+        params: &[f32],
+        out: &mut StepOutputs,
+    ) -> Result<()> {
         if state.len() != bucket * STATE_COLS || params.len() != bucket * PARAM_COLS {
             return Err(Error::Runtime(format!(
                 "shape mismatch: state {} params {} for bucket {bucket}",
@@ -97,12 +139,14 @@ impl Engine {
             .to_literal_sync()
             .map_err(Error::runtime)?;
         let (st, ac, ra, ob) = result.to_tuple4().map_err(Error::runtime)?;
-        Ok(StepOutputs {
-            state: st.to_vec::<f32>().map_err(Error::runtime)?,
-            accel: ac.to_vec::<f32>().map_err(Error::runtime)?,
-            radar: ra.to_vec::<f32>().map_err(Error::runtime)?,
-            obs: ob.to_vec::<f32>().map_err(Error::runtime)?,
-        })
+        // the xla API only hands data out as fresh Vecs (`to_vec`), so the
+        // cheapest correct move is to *swap them in*, not copy them over:
+        // one FFI alloc per output either way, zero extra memcpys
+        out.state = st.to_vec::<f32>().map_err(Error::runtime)?;
+        out.accel = ac.to_vec::<f32>().map_err(Error::runtime)?;
+        out.radar = ra.to_vec::<f32>().map_err(Error::runtime)?;
+        out.obs = ob.to_vec::<f32>().map_err(Error::runtime)?;
+        Ok(())
     }
 
     /// Execute one merge-sim step for `batch` co-located instances at
@@ -116,6 +160,21 @@ impl Engine {
         states: &[f32],
         params: &[f32],
     ) -> Result<Vec<StepOutputs>> {
+        let mut outs = Vec::new();
+        self.step_batched_into(bucket, states, params, &mut outs)?;
+        Ok(outs)
+    }
+
+    /// Batched step into a reused output vector: `outs` is resized to
+    /// the artifact's batch width and each lane's buffers are refilled
+    /// in place — no fresh `Vec`s per lane in steady state.
+    pub fn step_batched_into(
+        &self,
+        bucket: usize,
+        states: &[f32],
+        params: &[f32],
+        outs: &mut Vec<StepOutputs>,
+    ) -> Result<()> {
         let b = self.manifest.batch;
         if b < 2 {
             return Err(Error::Artifact(
@@ -144,14 +203,14 @@ impl Engine {
         let ac = ac.to_vec::<f32>().map_err(Error::runtime)?;
         let ra = ra.to_vec::<f32>().map_err(Error::runtime)?;
         let ob = ob.to_vec::<f32>().map_err(Error::runtime)?;
-        Ok((0..b)
-            .map(|i| StepOutputs {
-                state: st[i * bucket * STATE_COLS..(i + 1) * bucket * STATE_COLS].to_vec(),
-                accel: ac[i * bucket..(i + 1) * bucket].to_vec(),
-                radar: ra[i * bucket * 2..(i + 1) * bucket * 2].to_vec(),
-                obs: ob[i * 4..(i + 1) * 4].to_vec(),
-            })
-            .collect())
+        outs.resize_with(b, StepOutputs::default);
+        for (i, o) in outs.iter_mut().enumerate() {
+            fill(&mut o.state, &st[i * bucket * STATE_COLS..(i + 1) * bucket * STATE_COLS]);
+            fill(&mut o.accel, &ac[i * bucket..(i + 1) * bucket]);
+            fill(&mut o.radar, &ra[i * bucket * 2..(i + 1) * bucket * 2]);
+            fill(&mut o.obs, &ob[i * 4..(i + 1) * 4]);
+        }
+        Ok(())
     }
 
     /// Execute the bare IDM kernel (microbench + cross-validation).
@@ -212,6 +271,51 @@ mod tests {
         assert_eq!(out.radar.len(), bucket * 2);
         assert_eq!(out.obs.len(), 4);
         assert_eq!(out.obs[0], 2.0); // n_active
+    }
+
+    #[test]
+    fn step_into_repeats_cleanly() {
+        let Some(e) = engine() else { return };
+        let bucket = e.manifest().buckets[0];
+        let mut t = Traffic::new(bucket);
+        t.spawn(100.0, 20.0, 1.0, DriverParams::default());
+        let mut out = StepOutputs::default();
+        e.step_into(bucket, &t.state, &t.params, &mut out).unwrap();
+        let first = out.clone();
+        // repeat into the same StepOutputs: identical results, no stale
+        // data surviving from the previous call
+        e.step_into(bucket, &t.state, &t.params, &mut out).unwrap();
+        assert_eq!(out, first);
+        assert_eq!(e.step(bucket, &t.state, &t.params).unwrap(), first);
+    }
+
+    #[test]
+    fn step_batched_into_reuses_lane_buffers() {
+        let Some(e) = engine() else { return };
+        let b = e.manifest().batch;
+        if b < 2 {
+            eprintln!("no batched artifact; skipping");
+            return;
+        }
+        let bucket = e.manifest().buckets[0];
+        let mut t = Traffic::new(bucket);
+        t.spawn(100.0, 20.0, 1.0, DriverParams::default());
+        let mut states = Vec::new();
+        let mut params = Vec::new();
+        for _ in 0..b {
+            states.extend_from_slice(&t.state);
+            params.extend_from_slice(&t.params);
+        }
+        let mut outs = Vec::new();
+        e.step_batched_into(bucket, &states, &params, &mut outs).unwrap();
+        let first = outs.clone();
+        let ptrs: Vec<*const f32> = outs.iter().map(|o| o.state.as_ptr()).collect();
+        // second dispatch refills the same per-lane buffers in place
+        e.step_batched_into(bucket, &states, &params, &mut outs).unwrap();
+        assert_eq!(outs, first);
+        for (o, p) in outs.iter().zip(ptrs) {
+            assert_eq!(o.state.as_ptr(), p, "lane buffer reallocated");
+        }
     }
 
     #[test]

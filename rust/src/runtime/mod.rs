@@ -18,8 +18,8 @@ mod service;
 
 pub use engine::{Engine, StepOutputs};
 pub use manifest::{ArtifactEntry, Manifest};
-pub use pool::ExecutablePool;
-pub use service::{EngineService, HloStepper};
+pub use pool::{ExecutablePool, PoolKey};
+pub use service::{EngineService, EngineSession, HloStepper};
 
 /// Default artifacts directory relative to the repo root.
 pub const ARTIFACTS_DIR: &str = "artifacts";

@@ -5,17 +5,27 @@
 //! executables are cached by artifact key and shared via `Arc`.  The
 //! pool is a perf ablation (`DESIGN.md` §7): `rust/benches/ablations.rs`
 //! measures per-instance compile vs pooled.
+//!
+//! The lookup sits on the per-step hot path (every `Engine::step_into`
+//! fetches its executable), so the steady state is kept allocation- and
+//! contention-free: keys are `(&'static str, bucket)` pairs (no
+//! `format!` per call), the cache is behind a read-mostly `RwLock`, and
+//! the hit/miss counters are relaxed atomics instead of mutexes.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 
 use crate::Result;
 
+/// Cache key: artifact kernel name + vehicle-count bucket.
+pub type PoolKey = (&'static str, usize);
+
 /// Key → compiled executable cache.
 pub struct ExecutablePool {
-    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
-    hits: Mutex<u64>,
-    misses: Mutex<u64>,
+    cache: RwLock<HashMap<PoolKey, Arc<xla::PjRtLoadedExecutable>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
 }
 
 impl Default for ExecutablePool {
@@ -27,44 +37,48 @@ impl Default for ExecutablePool {
 impl ExecutablePool {
     pub fn new() -> Self {
         ExecutablePool {
-            cache: Mutex::new(HashMap::new()),
-            hits: Mutex::new(0),
-            misses: Mutex::new(0),
+            cache: RwLock::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
         }
     }
 
     /// Fetch the executable for `key`, compiling with `compile` on miss.
     ///
-    /// The compile runs *outside* the cache lock (compilation is slow and
+    /// The compile runs *outside* any lock (compilation is slow and
     /// other keys shouldn't stall); a racing double-compile of the same
     /// key is benign — last writer wins, both results are valid.
-    pub fn get_or_compile<F>(&self, key: &str, compile: F) -> Result<Arc<xla::PjRtLoadedExecutable>>
+    pub fn get_or_compile<F>(
+        &self,
+        key: PoolKey,
+        compile: F,
+    ) -> Result<Arc<xla::PjRtLoadedExecutable>>
     where
         F: FnOnce() -> Result<xla::PjRtLoadedExecutable>,
     {
-        if let Some(exe) = self.cache.lock().expect("pool poisoned").get(key) {
-            *self.hits.lock().expect("pool poisoned") += 1;
+        if let Some(exe) = self.cache.read().expect("pool poisoned").get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(exe.clone());
         }
-        *self.misses.lock().expect("pool poisoned") += 1;
+        self.misses.fetch_add(1, Ordering::Relaxed);
         let exe = Arc::new(compile()?);
         self.cache
-            .lock()
+            .write()
             .expect("pool poisoned")
-            .insert(key.to_string(), exe.clone());
+            .insert(key, exe.clone());
         Ok(exe)
     }
 
     /// (hits, misses) — observability for the perf pass.
     pub fn stats(&self) -> (u64, u64) {
         (
-            *self.hits.lock().expect("pool poisoned"),
-            *self.misses.lock().expect("pool poisoned"),
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
         )
     }
 
     pub fn len(&self) -> usize {
-        self.cache.lock().expect("pool poisoned").len()
+        self.cache.read().expect("pool poisoned").len()
     }
 
     pub fn is_empty(&self) -> bool {

@@ -8,24 +8,65 @@
 //! instances talk to it over channels — the same shape as a per-node
 //! accelerator context shared by co-located workers in a real serving
 //! stack.
+//!
+//! Two request paths exist (EXPERIMENTS.md §Perf):
+//!
+//! * [`EngineService::step`] — the simple one-shot API: a fresh reply
+//!   channel and input copies per call.  Kept for tests/benches and as
+//!   the "before" baseline.
+//! * [`EngineSession`] — the production hot path: a persistent
+//!   per-instance handle with one long-lived reply channel and pooled
+//!   request/output buffers that round-trip through the engine thread,
+//!   so steady-state stepping performs **no per-call channel creation
+//!   and no input `to_vec()`** — inputs are `copy_from_slice`-class
+//!   copies into reused storage (outputs: see
+//!   [`super::engine::Engine::step_into`] for the FFI-boundary caveat).
+//!
+//! Both paths coalesce in the same dynamic micro-batcher, whose padding
+//! scratch (`states`/`params_all`/`outs`) is owned by the engine thread
+//! and reused across dispatches.
 
+use std::collections::VecDeque;
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Duration;
 
-use crate::sumo::state::Traffic;
+use crate::sumo::state::{Traffic, PARAM_COLS, STATE_COLS};
 use crate::sumo::{StepObs, Stepper};
 use crate::{Error, Result};
 
 use super::engine::{Engine, StepOutputs};
 use super::manifest::Manifest;
 
+/// Where a step reply goes: a per-call channel (one-shot API) or a
+/// session's persistent channel (buffers travel back with the reply).
+enum StepReply {
+    Oneshot(Sender<Result<StepOutputs>>),
+    Session(Sender<SessionReply>),
+}
+
+/// One step request — input buffers and the output buffers to fill.
+/// Session requests lend their buffers to the engine thread; the reply
+/// returns them for reuse.
+struct StepReq {
+    bucket: usize,
+    state: Vec<f32>,
+    params: Vec<f32>,
+    out: StepOutputs,
+    reply: StepReply,
+}
+
+/// Reply on a session's persistent channel: the round-tripped buffers
+/// (inputs back for reuse, outputs filled) plus the execution status.
+struct SessionReply {
+    state: Vec<f32>,
+    params: Vec<f32>,
+    out: StepOutputs,
+    result: Result<()>,
+}
+
 enum Request {
-    Step {
-        bucket: usize,
-        state: Vec<f32>,
-        params: Vec<f32>,
-        reply: Sender<Result<StepOutputs>>,
-    },
+    Step(StepReq),
     Idm {
         bucket: usize,
         state: Vec<f32>,
@@ -46,36 +87,78 @@ enum Request {
     Shutdown,
 }
 
+/// Engine-thread scratch for the micro-batcher, reused across
+/// dispatches: the coalesced request list, the zero-padded input
+/// staging buffers, and the per-lane output buffers.
+#[derive(Default)]
+struct BatchScratch {
+    batch: Vec<StepReq>,
+    states: Vec<f32>,
+    params: Vec<f32>,
+    outs: Vec<StepOutputs>,
+}
+
+/// Send the finished request back to its caller, routing buffers to the
+/// right reply flavor.
+fn finish(req: StepReq, result: Result<()>) {
+    let StepReq {
+        state,
+        params,
+        out,
+        reply,
+        ..
+    } = req;
+    match reply {
+        StepReply::Oneshot(tx) => {
+            let _ = tx.send(result.map(|()| out));
+        }
+        StepReply::Session(tx) => {
+            let _ = tx.send(SessionReply {
+                state,
+                params,
+                out,
+                result,
+            });
+        }
+    }
+}
+
 /// Serve one Step request, dynamically micro-batching with any other
 /// same-bucket Step requests already waiting on the channel (the §Perf
 /// optimization: one PJRT dispatch amortized over up to `manifest.batch`
 /// co-located instances).  Solo requests take the unbatched path with no
 /// added latency — coalescing only ever drains requests that are already
 /// queued.
-#[allow(clippy::too_many_arguments)]
 fn serve_step(
     engine: &Engine,
-    rx: &std::sync::mpsc::Receiver<Request>,
-    backlog: &mut std::collections::VecDeque<Request>,
-    bucket: usize,
-    state: Vec<f32>,
-    params: Vec<f32>,
-    reply: Sender<Result<StepOutputs>>,
+    rx: &Receiver<Request>,
+    backlog: &mut VecDeque<Request>,
+    scratch: &mut BatchScratch,
+    first: StepReq,
 ) {
+    let bucket = first.bucket;
     let bmax = engine.manifest().batch;
-    let mut batch: Vec<(Vec<f32>, Vec<f32>, Sender<Result<StepOutputs>>)> =
-        vec![(state, params, reply)];
-    if bmax >= 2 {
+    let scols = STATE_COLS;
+    let pcols = PARAM_COLS;
+    // malformed shapes can't be padded into a batch; they take the solo
+    // path below, where `step_into` rejects them with a proper error
+    let well_formed =
+        first.state.len() == bucket * scols && first.params.len() == bucket * pcols;
+    scratch.batch.clear();
+    scratch.batch.push(first);
+
+    if bmax >= 2 && well_formed {
         // drain whatever is already queued; stash non-matching requests
         let mut waited = false;
-        while batch.len() < bmax {
+        while scratch.batch.len() < bmax {
             match rx.try_recv() {
-                Ok(Request::Step {
-                    bucket: b2,
-                    state,
-                    params,
-                    reply,
-                }) if b2 == bucket => batch.push((state, params, reply)),
+                Ok(Request::Step(r))
+                    if r.bucket == bucket
+                        && r.state.len() == bucket * scols
+                        && r.params.len() == bucket * pcols =>
+                {
+                    scratch.batch.push(r)
+                }
                 Ok(other) => {
                     backlog.push_back(other);
                     // keep draining: later Steps may still match
@@ -87,17 +170,18 @@ fn serve_step(
                     // once a batch has formed, peers are likely mid-send:
                     // wait one short straggler window (lock-step workers
                     // re-issue immediately after their replies), then stop
-                    if waited || batch.len() < 2 {
+                    if waited || scratch.batch.len() < 2 {
                         break;
                     }
                     waited = true;
-                    match rx.recv_timeout(std::time::Duration::from_micros(60)) {
-                        Ok(Request::Step {
-                            bucket: b2,
-                            state,
-                            params,
-                            reply,
-                        }) if b2 == bucket => batch.push((state, params, reply)),
+                    match rx.recv_timeout(Duration::from_micros(60)) {
+                        Ok(Request::Step(r))
+                            if r.bucket == bucket
+                                && r.state.len() == bucket * scols
+                                && r.params.len() == bucket * pcols =>
+                        {
+                            scratch.batch.push(r)
+                        }
                         Ok(other) => backlog.push_back(other),
                         Err(_) => break,
                     }
@@ -106,39 +190,44 @@ fn serve_step(
         }
     }
 
-    if batch.len() < 2 {
-        let (state, params, reply) = batch.pop().expect("one request");
-        let _ = reply.send(engine.step(bucket, &state, &params));
+    if scratch.batch.len() < 2 {
+        let mut req = scratch.batch.pop().expect("one request");
+        let result = engine.step_into(bucket, &req.state, &req.params, &mut req.out);
+        finish(req, result);
         return;
     }
 
-    // pad to the artifact's batch width with zeroed (inactive) worlds
-    let n_live = batch.len();
-    let scols = crate::sumo::state::STATE_COLS;
-    let pcols = crate::sumo::state::PARAM_COLS;
-    let mut states = vec![0.0f32; bmax * bucket * scols];
-    let mut params_all = vec![0.0f32; bmax * bucket * pcols];
-    for (i, (s, p, _)) in batch.iter().enumerate() {
-        states[i * bucket * scols..(i + 1) * bucket * scols].copy_from_slice(s);
-        params_all[i * bucket * pcols..(i + 1) * bucket * pcols].copy_from_slice(p);
+    // pad to the artifact's batch width with zeroed (inactive) worlds,
+    // reusing the thread-owned staging buffers
+    let n_live = scratch.batch.len();
+    scratch.states.clear();
+    scratch.states.resize(bmax * bucket * scols, 0.0);
+    scratch.params.clear();
+    scratch.params.resize(bmax * bucket * pcols, 0.0);
+    for (i, r) in scratch.batch.iter().enumerate() {
+        scratch.states[i * bucket * scols..(i + 1) * bucket * scols].copy_from_slice(&r.state);
+        scratch.params[i * bucket * pcols..(i + 1) * bucket * pcols].copy_from_slice(&r.params);
     }
-    match engine.step_batched(bucket, &states, &params_all) {
-        Ok(outs) => {
-            debug_assert_eq!(outs.len(), bmax);
-            debug_assert!(outs.len() >= n_live);
-            for ((_, _, reply), out) in batch.into_iter().zip(outs.into_iter()) {
-                let _ = reply.send(Ok(out));
+    match engine.step_batched_into(bucket, &scratch.states, &scratch.params, &mut scratch.outs) {
+        Ok(()) => {
+            debug_assert_eq!(scratch.outs.len(), bmax);
+            debug_assert!(scratch.outs.len() >= n_live);
+            for (i, mut req) in scratch.batch.drain(..).enumerate() {
+                // hand the filled lane to the caller and keep its old
+                // buffers as next dispatch's scratch (both right-sized)
+                std::mem::swap(&mut req.out, &mut scratch.outs[i]);
+                finish(req, Ok(()));
             }
         }
         Err(e) => {
             // batched path failed (e.g. old artifacts): fall back to
             // serial execution so callers still get answers
             let msg = e.to_string();
-            for (s, p, reply) in batch {
-                let r = engine
-                    .step(bucket, &s, &p)
-                    .map_err(|e2| crate::Error::Runtime(format!("{msg}; serial fallback: {e2}")));
-                let _ = reply.send(r);
+            for mut req in scratch.batch.drain(..) {
+                let result = engine
+                    .step_into(bucket, &req.state, &req.params, &mut req.out)
+                    .map_err(|e2| Error::Runtime(format!("{msg}; serial fallback: {e2}")));
+                finish(req, result);
             }
         }
     }
@@ -169,7 +258,8 @@ impl EngineService {
                 }
             };
             // requests drained ahead of their turn while coalescing a batch
-            let mut backlog: std::collections::VecDeque<Request> = Default::default();
+            let mut backlog: VecDeque<Request> = VecDeque::new();
+            let mut scratch = BatchScratch::default();
             loop {
                 let req = match backlog.pop_front() {
                     Some(r) => r,
@@ -179,13 +269,8 @@ impl EngineService {
                     },
                 };
                 match req {
-                    Request::Step {
-                        bucket,
-                        state,
-                        params,
-                        reply,
-                    } => {
-                        serve_step(&engine, &rx, &mut backlog, bucket, state, params, reply);
+                    Request::Step(r) => {
+                        serve_step(&engine, &rx, &mut backlog, &mut scratch, r);
                     }
                     Request::Idm {
                         bucket,
@@ -239,15 +324,40 @@ impl EngineService {
         &self.platform
     }
 
+    /// Open a persistent stepping session at `bucket` capacity — the
+    /// allocation-free hot path.  One session per simulation instance;
+    /// sessions from many threads still coalesce in the micro-batcher.
+    pub fn session(&self, bucket: usize) -> Result<EngineSession> {
+        if !self.manifest.buckets.contains(&bucket) {
+            return Err(Error::Artifact(format!(
+                "no lowered bucket {bucket} (have {:?})",
+                self.manifest.buckets
+            )));
+        }
+        let (reply_tx, reply_rx) = channel();
+        Ok(EngineSession {
+            tx: self.tx.clone(),
+            bucket,
+            reply_tx,
+            reply_rx,
+            state_buf: Vec::with_capacity(bucket * STATE_COLS),
+            params_buf: Vec::with_capacity(bucket * PARAM_COLS),
+            out: StepOutputs::default(),
+        })
+    }
+
+    /// One-shot step: fresh reply channel + input copies per call.
+    /// Prefer [`EngineService::session`] on the hot path.
     pub fn step(&self, bucket: usize, state: &[f32], params: &[f32]) -> Result<StepOutputs> {
         let (reply, rx) = channel();
         self.tx
-            .send(Request::Step {
+            .send(Request::Step(StepReq {
                 bucket,
                 state: state.to_vec(),
                 params: params.to_vec(),
-                reply,
-            })
+                out: StepOutputs::default(),
+                reply: StepReply::Oneshot(reply),
+            }))
             .map_err(|_| Error::Runtime("engine thread gone".into()))?;
         rx.recv()
             .map_err(|_| Error::Runtime("engine thread dropped reply".into()))?
@@ -309,12 +419,72 @@ impl EngineService {
     }
 }
 
-/// [`Stepper`] over the AOT step artifact via the engine service: the
-/// production physics engine.  Traffic capacity must equal a lowered
-/// bucket.
-pub struct HloStepper {
-    service: EngineService,
+/// A persistent per-instance stepping handle (EXPERIMENTS.md §Perf).
+///
+/// Steady-state [`EngineSession::step`] performs **zero allocations on
+/// the caller side**: the input scratch and the reply channel are
+/// created once at [`EngineService::session`] time, and all buffers
+/// round-trip between this handle and the engine thread (on coalesced
+/// dispatches the output lanes are refilled scratch; on solo dispatches
+/// the engine swaps in the PJRT result vectors).
+pub struct EngineSession {
+    tx: Sender<Request>,
     bucket: usize,
+    reply_tx: Sender<SessionReply>,
+    reply_rx: Receiver<SessionReply>,
+    state_buf: Vec<f32>,
+    params_buf: Vec<f32>,
+    out: StepOutputs,
+}
+
+impl EngineSession {
+    pub fn bucket(&self) -> usize {
+        self.bucket
+    }
+
+    /// Execute one step.  Copies `state`/`params` into the session's
+    /// pooled buffers (no `to_vec`), sends them to the engine thread,
+    /// and blocks on the session's persistent reply channel.  The
+    /// returned reference is valid until the next `step` call.
+    pub fn step(&mut self, state: &[f32], params: &[f32]) -> Result<&StepOutputs> {
+        let mut sbuf = std::mem::take(&mut self.state_buf);
+        let mut pbuf = std::mem::take(&mut self.params_buf);
+        let out = std::mem::take(&mut self.out);
+        sbuf.clear();
+        sbuf.extend_from_slice(state);
+        pbuf.clear();
+        pbuf.extend_from_slice(params);
+        self.tx
+            .send(Request::Step(StepReq {
+                bucket: self.bucket,
+                state: sbuf,
+                params: pbuf,
+                out,
+                reply: StepReply::Session(self.reply_tx.clone()),
+            }))
+            .map_err(|_| Error::Runtime("engine thread gone".into()))?;
+        let reply = self
+            .reply_rx
+            .recv()
+            .map_err(|_| Error::Runtime("engine thread dropped reply".into()))?;
+        self.state_buf = reply.state;
+        self.params_buf = reply.params;
+        self.out = reply.out;
+        reply.result?;
+        Ok(&self.out)
+    }
+
+    /// The outputs of the most recent successful [`EngineSession::step`].
+    pub fn last(&self) -> &StepOutputs {
+        &self.out
+    }
+}
+
+/// [`Stepper`] over the AOT step artifact via a persistent
+/// [`EngineSession`]: the production physics engine.  Traffic capacity
+/// must equal a lowered bucket.
+pub struct HloStepper {
+    session: EngineSession,
     pub last_obs: StepObs,
 }
 
@@ -328,8 +498,7 @@ impl HloStepper {
             )));
         }
         Ok(HloStepper {
-            service,
-            bucket,
+            session: service.session(bucket)?,
             last_obs: StepObs::default(),
         })
     }
@@ -340,8 +509,8 @@ impl Stepper for HloStepper {
         // An execution error after successful compile means a corrupted
         // artifact — surface loudly.
         let out = self
-            .service
-            .step(self.bucket, &traffic.state, &traffic.params)
+            .session
+            .step(&traffic.state, &traffic.params)
             .expect("AOT step execution failed");
         traffic.state.copy_from_slice(&out.state);
         let obs = StepObs {
@@ -387,6 +556,42 @@ mod tests {
     }
 
     #[test]
+    fn session_matches_oneshot_across_repeats() {
+        let Some(s) = service() else { return };
+        let bucket = s.manifest().buckets[0];
+        let mut t = Traffic::new(bucket);
+        t.spawn(100.0, 20.0, 1.0, DriverParams::default());
+        t.spawn(160.0, 15.0, 1.0, DriverParams::default());
+        let expect = s.step(bucket, &t.state, &t.params).unwrap();
+        let mut sess = s.session(bucket).unwrap();
+        // steady state: the round-tripped buffers keep producing the
+        // same numbers (no stale data, no cross-call leakage)
+        for _ in 0..3 {
+            let out = sess.step(&t.state, &t.params).unwrap();
+            assert_eq!(*out, expect);
+        }
+        assert_eq!(*sess.last(), expect);
+    }
+
+    #[test]
+    fn session_rejects_unknown_bucket() {
+        let Some(s) = service() else { return };
+        assert!(s.session(7).is_err());
+    }
+
+    #[test]
+    fn session_surfaces_shape_errors_and_recovers() {
+        let Some(s) = service() else { return };
+        let bucket = s.manifest().buckets[0];
+        let mut sess = s.session(bucket).unwrap();
+        assert!(sess.step(&[0.0; 4], &[0.0; 6]).is_err());
+        // the session stays usable after an error
+        let mut t = Traffic::new(bucket);
+        t.spawn(50.0, 10.0, 1.0, DriverParams::default());
+        assert!(sess.step(&t.state, &t.params).is_ok());
+    }
+
+    #[test]
     fn hlo_stepper_advances_traffic() {
         let Some(s) = service() else { return };
         let bucket = s.manifest().buckets[0];
@@ -417,6 +622,154 @@ mod tests {
                     t.spawn(10.0 * k as f32, 20.0, 1.0, DriverParams::default());
                     let out = s.step(bucket, &t.state, &t.params).unwrap();
                     assert_eq!(out.obs[0], 1.0);
+                });
+            }
+        });
+    }
+
+    /// Non-Step requests drained into the backlog while a batch
+    /// coalesces must still be served (in issue order per caller) after
+    /// the coalesced dispatch — a lost or reordered backlog entry shows
+    /// up here as a wrong reply or a hang.
+    #[test]
+    fn backlog_requests_survive_coalescing_and_serve_in_order() {
+        let Some(s) = service() else { return };
+        let bucket = s.manifest().buckets[0];
+        let mut t = Traffic::new(bucket);
+        t.spawn(80.0, 18.0, 1.0, DriverParams::default());
+        t.spawn(140.0, 9.0, 1.0, DriverParams::default());
+        // solo references, computed before any contention
+        let step_ref = s.step(bucket, &t.state, &t.params).unwrap();
+        let idm_ref = s.idm(bucket, &t.state, &t.params).unwrap();
+        let radar_ref = s.radar(bucket, &t.state).unwrap();
+        std::thread::scope(|scope| {
+            for k in 0..8 {
+                let svc = s.clone();
+                let (t, step_ref, idm_ref, radar_ref) = (&t, &step_ref, &idm_ref, &radar_ref);
+                scope.spawn(move || {
+                    for round in 0..10 {
+                        // steppers coalesce; idm/radar requests land in
+                        // the backlog mid-coalesce on the engine thread
+                        let out = svc.step(bucket, &t.state, &t.params).unwrap();
+                        assert_eq!(&out, step_ref, "thread {k} round {round}: step");
+                        if k % 2 == 0 {
+                            let idm = svc.idm(bucket, &t.state, &t.params).unwrap();
+                            assert_eq!(&idm, idm_ref, "thread {k} round {round}: idm");
+                        } else {
+                            let radar = svc.radar(bucket, &t.state).unwrap();
+                            assert_eq!(&radar, radar_ref, "thread {k} round {round}: radar");
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    /// With a manifest that advertises a batch width but ships no
+    /// `stepb` artifact (the "old artifacts" situation), the coalesced
+    /// dispatch must fall back to serial execution and still hand every
+    /// caller its own correct result.
+    #[test]
+    fn serial_fallback_when_batched_artifact_missing() {
+        use crate::util::{Json, TempDir};
+        let Some(dir) = super::super::find_artifacts_dir() else {
+            eprintln!("skipping serial-fallback test: no artifacts");
+            return;
+        };
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let mut j = Json::parse(&text).unwrap();
+        let Json::Obj(top) = &mut j else {
+            panic!("manifest is not an object")
+        };
+        // claim a batch width the (filtered) artifacts can't honor
+        top.insert("batch".into(), Json::Num(8.0));
+        let mut kept_files = Vec::new();
+        if let Some(Json::Obj(entries)) = top.get_mut("entries") {
+            let stepb_keys: Vec<String> = entries
+                .keys()
+                .filter(|k| k.starts_with("stepb"))
+                .cloned()
+                .collect();
+            for k in stepb_keys {
+                entries.remove(&k);
+            }
+            for e in entries.values() {
+                kept_files.push(e.get("file").unwrap().as_str().unwrap().to_string());
+            }
+        }
+        let tmp = TempDir::new("webots-hpc-fallback-artifacts").unwrap();
+        std::fs::write(tmp.path().join("manifest.json"), j.to_pretty_string()).unwrap();
+        for f in &kept_files {
+            std::fs::copy(dir.join(f), tmp.path().join(f)).unwrap();
+        }
+
+        let s = EngineService::spawn(tmp.path().to_path_buf()).unwrap();
+        assert!(s.manifest().batch >= 2, "test premise: batching enabled");
+        let bucket = s.manifest().buckets[0];
+        // the batched artifact really is gone
+        let b = s.manifest().batch;
+        let states = vec![0.0f32; b * bucket * STATE_COLS];
+        let params = vec![0.0f32; b * bucket * PARAM_COLS];
+        assert!(s.step_batched(bucket, &states, &params).is_err());
+
+        // distinct worlds + solo references
+        let worlds: Vec<Traffic> = (0..8)
+            .map(|k| {
+                let mut t = Traffic::new(bucket);
+                t.spawn(15.0 + 25.0 * k as f32, 3.0 + 2.0 * k as f32, 1.0, DriverParams::default());
+                t
+            })
+            .collect();
+        let expect: Vec<StepOutputs> = worlds
+            .iter()
+            .map(|w| s.step(bucket, &w.state, &w.params).unwrap())
+            .collect();
+        // concurrent sessions force coalescing; every dispatch must
+        // fall back serially and stay world-correct
+        for _ in 0..3 {
+            std::thread::scope(|scope| {
+                for (w, e) in worlds.iter().zip(expect.iter()) {
+                    let svc = s.clone();
+                    scope.spawn(move || {
+                        let mut sess = svc.session(bucket).unwrap();
+                        for _ in 0..5 {
+                            let out = sess.step(&w.state, &w.params).unwrap();
+                            assert_eq!(out, e, "serial fallback contaminated a world");
+                        }
+                    });
+                }
+            });
+        }
+        s.shutdown();
+    }
+
+    #[test]
+    fn sessions_coalesce_without_contamination() {
+        // 8 threads with persistent sessions stepping DIFFERENT worlds:
+        // every thread must get its own world's result even when the
+        // micro-batcher coalesces the requests.
+        let Some(s) = service() else { return };
+        let bucket = s.manifest().buckets[0];
+        let worlds: Vec<Traffic> = (0..8)
+            .map(|k| {
+                let mut t = Traffic::new(bucket);
+                t.spawn(20.0 + 30.0 * k as f32, 5.0 + k as f32, 1.0, DriverParams::default());
+                t
+            })
+            .collect();
+        let expect: Vec<StepOutputs> = worlds
+            .iter()
+            .map(|w| s.step(bucket, &w.state, &w.params).unwrap())
+            .collect();
+        std::thread::scope(|scope| {
+            for (w, e) in worlds.iter().zip(expect.iter()) {
+                let svc = s.clone();
+                scope.spawn(move || {
+                    let mut sess = svc.session(bucket).unwrap();
+                    for _ in 0..10 {
+                        let out = sess.step(&w.state, &w.params).unwrap();
+                        assert_eq!(out, e, "session got another world's result");
+                    }
                 });
             }
         });

@@ -5,11 +5,23 @@
 //! comparator the HLO path is validated against
 //! (`rust/tests/runtime_numerics.rs`), and (b) as the physics engine for
 //! runs that don't need PJRT.  All math in f32 to mirror the artifact.
+//!
+//! Two steppers share the same integration and law:
+//!
+//! * [`NativeIdmStepper`] — the production stepper: neighbor queries go
+//!   through the per-step sorted-sweep index ([`super::sweep::LaneIndex`],
+//!   O(N log N) per step) and all per-step buffers live in reusable
+//!   scratch, so steady-state stepping performs **zero heap
+//!   allocations** (EXPERIMENTS.md §Perf).
+//! * [`ReferenceIdmStepper`] — the O(N²) reference scans, kept as the
+//!   bit-exactness oracle (`rust/tests/sweep_props.rs`) and the §Perf
+//!   "before" baseline in `cargo bench --bench runtime_hotpath`.
 
 use super::mobil::{self, MobilParams};
 use super::network::MergeScenario;
 use super::simulation::{StepObs, Stepper};
 use super::state::{Traffic, P_AMAX, P_B, P_LEN, P_S0, P_T, P_V0};
+use super::sweep::LaneIndex;
 
 /// "Infinite" gap sentinel — matches `ref.FREE_GAP`.
 pub const FREE_GAP: f32 = 1.0e6;
@@ -29,6 +41,9 @@ pub struct Leader {
 /// Nearest active vehicle ahead on the same lane, mask-min tie-breaking
 /// (smallest speed/length among co-located leaders) — mirrors
 /// `ref.leader_scan_ref`.
+///
+/// This is the O(N) reference scan; the production stepper answers the
+/// same query through [`LaneIndex::leader`], bit-exactly.
 pub fn leader_scan(t: &Traffic, i: usize) -> Leader {
     let xi = t.x(i);
     let li = t.lane(i);
@@ -92,7 +107,9 @@ fn params_row(t: &Traffic, i: usize) -> [f32; 6] {
     ]
 }
 
-/// Car-following acceleration for every vehicle (inactive → 0).
+/// Car-following acceleration for every vehicle (inactive → 0), via the
+/// O(N²) reference scan.  Allocates; test/oracle use only — the hot path
+/// is [`idm_accel_all_into`].
 pub fn idm_accel_all(t: &Traffic) -> Vec<f32> {
     (0..t.capacity())
         .map(|i| {
@@ -104,6 +121,22 @@ pub fn idm_accel_all(t: &Traffic) -> Vec<f32> {
             idm_law(t.v(i), l.gap, t.v(i) - l.v, l.exists, &p)
         })
         .collect()
+}
+
+/// Car-following acceleration for every vehicle via the sorted-sweep
+/// index, written into a reused buffer.  Bit-exact with
+/// [`idm_accel_all`]; `index` must have been rebuilt from `t`.
+pub fn idm_accel_all_into(t: &Traffic, index: &LaneIndex, out: &mut Vec<f32>) {
+    out.clear();
+    for i in 0..t.capacity() {
+        if !t.is_active(i) {
+            out.push(0.0);
+            continue;
+        }
+        let l = index.leader(t, i);
+        let p = params_row(t, i);
+        out.push(idm_law(t.v(i), l.gap, t.v(i) - l.v, l.exists, &p));
+    }
 }
 
 /// Phantom-wall deceleration for ramp vehicles approaching MERGE_END —
@@ -123,12 +156,72 @@ pub fn wall_accel(t: &Traffic, i: usize, scenario: &MergeScenario) -> f32 {
     idm_law(v, gap, v, has, &p)
 }
 
+/// Shared semi-implicit Euler integration + observables — the back half
+/// of `model.step`, common to both steppers so bit-exactness of the
+/// neighbor scans implies bit-exactness of whole trajectories.
+fn integrate(
+    t: &mut Traffic,
+    accel: &[f32],
+    decisions: &[Option<f32>],
+    scenario: &MergeScenario,
+) -> StepObs {
+    let n = t.capacity();
+    let dt = scenario.dt_s;
+    let mut flow = 0.0f32;
+    let mut n_merged = 0.0f32;
+    let (n_active, mean_v_before) = t.census();
+    let n_active_before = n_active as f32;
+
+    for i in 0..n {
+        if !t.is_active(i) {
+            // mirror the vectorized model exactly: inactive rows hold
+            // position but their speed is forced to zero
+            let (x, lane) = (t.x(i), t.lane(i));
+            t.set_state_row(i, x, 0.0, lane, false);
+            continue;
+        }
+        let new_lane = decisions[i].unwrap_or(t.lane(i));
+        if decisions[i].is_some() && (t.lane(i) - MergeScenario::RAMP_LANE).abs() < 0.5 {
+            n_merged += 1.0;
+        }
+        let new_v = (t.v(i) + accel[i] * dt).max(0.0);
+        let x_old = t.x(i);
+        let new_x = x_old + new_v * dt;
+        let crossed = new_x >= scenario.road_end_m && x_old < scenario.road_end_m;
+        if crossed {
+            flow += 1.0;
+        }
+        t.set_state_row(i, new_x, new_v, new_lane, !crossed);
+    }
+
+    StepObs {
+        n_active: n_active_before,
+        mean_speed: mean_v_before,
+        flow,
+        n_merged,
+    }
+}
+
+/// Reusable per-step buffers for [`NativeIdmStepper`] — kept across
+/// steps so steady-state stepping allocates nothing.
+#[derive(Debug, Clone, Default)]
+pub struct StepScratch {
+    index: LaneIndex,
+    accel: Vec<f32>,
+    decisions: Vec<Option<f32>>,
+}
+
 /// The native stepper: full merge-sim step (IDM + wall + MOBIL +
-/// integration), mirroring `model.step`.
+/// integration), mirroring `model.step`, with O(N log N) sorted-sweep
+/// neighbor queries and zero steady-state allocation.
 #[derive(Debug, Clone)]
 pub struct NativeIdmStepper {
     pub scenario: MergeScenario,
     pub mobil: MobilParams,
+    /// Reused per-step buffers (an implementation detail; public only so
+    /// struct-literal construction with `..Default::default()` keeps
+    /// working for callers).
+    pub scratch: StepScratch,
 }
 
 impl Default for NativeIdmStepper {
@@ -136,16 +229,74 @@ impl Default for NativeIdmStepper {
         NativeIdmStepper {
             scenario: MergeScenario::default(),
             mobil: MobilParams::default(),
+            scratch: StepScratch::default(),
+        }
+    }
+}
+
+impl NativeIdmStepper {
+    pub fn new(scenario: MergeScenario, mobil: MobilParams) -> Self {
+        NativeIdmStepper {
+            scenario,
+            mobil,
+            scratch: StepScratch::default(),
         }
     }
 }
 
 impl Stepper for NativeIdmStepper {
     fn step(&mut self, t: &mut Traffic) -> StepObs {
-        let n = t.capacity();
-        let dt = self.scenario.dt_s;
+        let scratch = &mut self.scratch;
+        scratch.index.rebuild(t);
 
-        // accelerations
+        // accelerations: car-following (sorted sweep) min phantom wall
+        idm_accel_all_into(t, &scratch.index, &mut scratch.accel);
+        for i in 0..t.capacity() {
+            if t.is_active(i) {
+                scratch.accel[i] = scratch.accel[i].min(wall_accel(t, i, &self.scenario));
+            }
+        }
+
+        // lane decisions (computed against the pre-step state, like the
+        // vectorized model)
+        mobil::decide_all_into(
+            t,
+            &scratch.accel,
+            &self.scenario,
+            &self.mobil,
+            &scratch.index,
+            &mut scratch.decisions,
+        );
+
+        integrate(t, &scratch.accel, &scratch.decisions, &self.scenario)
+    }
+
+    fn name(&self) -> &'static str {
+        "native-sweep"
+    }
+}
+
+/// The O(N²) reference stepper — identical physics through the reference
+/// scans.  The bit-exactness oracle for [`NativeIdmStepper`] and the
+/// §Perf "before" baseline; not for production stepping.
+#[derive(Debug, Clone)]
+pub struct ReferenceIdmStepper {
+    pub scenario: MergeScenario,
+    pub mobil: MobilParams,
+}
+
+impl Default for ReferenceIdmStepper {
+    fn default() -> Self {
+        ReferenceIdmStepper {
+            scenario: MergeScenario::default(),
+            mobil: MobilParams::default(),
+        }
+    }
+}
+
+impl Stepper for ReferenceIdmStepper {
+    fn step(&mut self, t: &mut Traffic) -> StepObs {
+        let n = t.capacity();
         let a_follow = idm_accel_all(t);
         let accel: Vec<f32> = (0..n)
             .map(|i| {
@@ -155,45 +306,12 @@ impl Stepper for NativeIdmStepper {
                 a_follow[i].min(wall_accel(t, i, &self.scenario))
             })
             .collect();
-
-        // lane decisions (computed against the pre-step state, like the
-        // vectorized model)
         let decisions = mobil::decide_all(t, &accel, &self.scenario, &self.mobil);
+        integrate(t, &accel, &decisions, &self.scenario)
+    }
 
-        // integrate
-        let mut flow = 0.0f32;
-        let mut n_merged = 0.0f32;
-        let n_active_before = t.active_count() as f32;
-        let mean_v_before = t.mean_speed();
-
-        for i in 0..n {
-            if !t.is_active(i) {
-                // mirror the vectorized model exactly: inactive rows hold
-                // position but their speed is forced to zero
-                let (x, lane) = (t.x(i), t.lane(i));
-                t.set_state_row(i, x, 0.0, lane, false);
-                continue;
-            }
-            let new_lane = decisions[i].unwrap_or(t.lane(i));
-            if decisions[i].is_some() && (t.lane(i) - MergeScenario::RAMP_LANE).abs() < 0.5 {
-                n_merged += 1.0;
-            }
-            let new_v = (t.v(i) + accel[i] * dt).max(0.0);
-            let x_old = t.x(i);
-            let new_x = x_old + new_v * dt;
-            let crossed = new_x >= self.scenario.road_end_m && x_old < self.scenario.road_end_m;
-            if crossed {
-                flow += 1.0;
-            }
-            t.set_state_row(i, new_x, new_v, new_lane, !crossed);
-        }
-
-        StepObs {
-            n_active: n_active_before,
-            mean_speed: mean_v_before,
-            flow,
-            n_merged,
-        }
+    fn name(&self) -> &'static str {
+        "native-reference"
     }
 }
 
@@ -235,6 +353,21 @@ mod tests {
     }
 
     #[test]
+    fn sweep_accel_matches_reference() {
+        let t = traffic(&[
+            (100.0, 30.0, 1.0),
+            (106.0, 0.0, 1.0),
+            (106.0, 5.0, 1.0),
+            (90.0, 12.0, 2.0),
+        ]);
+        let mut index = LaneIndex::new();
+        index.rebuild(&t);
+        let mut fast = Vec::new();
+        idm_accel_all_into(&t, &index, &mut fast);
+        assert_eq!(fast, idm_accel_all(&t));
+    }
+
+    #[test]
     fn wall_stops_ramp_vehicle() {
         let scenario = MergeScenario::default();
         let mut t = Traffic::new(1);
@@ -264,5 +397,25 @@ mod tests {
             s.step(&mut t);
         }
         assert!(t.v(0) >= 0.0);
+    }
+
+    #[test]
+    fn native_and_reference_steppers_agree_exactly() {
+        let mut fast = NativeIdmStepper::default();
+        let mut oracle = ReferenceIdmStepper::default();
+        let mut ta = traffic(&[
+            (100.0, 20.0, 1.0),
+            (130.0, 10.0, 1.0),
+            (350.0, 22.0, 0.0),
+            (355.0, 21.0, 1.0),
+            (90.0, 25.0, 2.0),
+        ]);
+        let mut tb = ta.clone();
+        for step in 0..200 {
+            let oa = fast.step(&mut ta);
+            let ob = oracle.step(&mut tb);
+            assert_eq!(oa, ob, "obs diverged at step {step}");
+            assert_eq!(ta, tb, "state diverged at step {step}");
+        }
     }
 }

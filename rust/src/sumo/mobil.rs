@@ -5,6 +5,7 @@
 use super::idm::{idm_law, FREE_GAP};
 use super::network::MergeScenario;
 use super::state::{Traffic, P_LEN, P_S0};
+use super::sweep::LaneIndex;
 
 /// MOBIL tuning — constants shared with `model.py`.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -90,8 +91,10 @@ struct Incentive {
     safe: bool,
 }
 
-fn incentive(t: &Traffic, i: usize, target_lane: f32, m: &MobilParams) -> Incentive {
-    let g = lane_gap_scan(t, i, target_lane);
+/// Incentive math over precomputed lane gaps — shared by the reference
+/// scan path and the sorted-sweep path so both are bit-identical by
+/// construction.
+fn incentive_from_gaps(t: &Traffic, i: usize, g: LaneGaps, m: &MobilParams) -> Incentive {
     let p = [
         t.param(i, 0),
         t.param(i, 1),
@@ -120,53 +123,99 @@ fn incentive(t: &Traffic, i: usize, target_lane: f32, m: &MobilParams) -> Incent
     }
 }
 
-/// Decide lane changes for every vehicle against the pre-step state.
-/// Returns `Some(new_lane)` for changers, `None` otherwise.
+/// One vehicle's lane decision against the pre-step state, generic over
+/// the gap provider (reference scan or sorted-sweep index).
+fn decide_one<G>(
+    t: &Traffic,
+    i: usize,
+    accel_i: f32,
+    scenario: &MergeScenario,
+    m: &MobilParams,
+    gaps: &G,
+) -> Option<f32>
+where
+    G: Fn(&Traffic, usize, f32) -> LaneGaps,
+{
+    let max_lane = scenario.num_main_lanes as f32;
+    let lane = t.lane(i);
+    let x = t.x(i);
+    let on_ramp = (lane - MergeScenario::RAMP_LANE).abs() < 0.5;
+
+    if on_ramp {
+        // mandatory merge inside the zone, whenever safe
+        let in_zone = x >= scenario.merge_start_m && x <= scenario.merge_end_m;
+        if in_zone && incentive_from_gaps(t, i, gaps(t, i, 1.0), m).safe {
+            return Some(1.0);
+        }
+        return None;
+    }
+
+    // discretionary: up first, then down (model's priority)
+    let tgt_up = (lane + 1.0).min(max_lane);
+    let tgt_down = (lane - 1.0).max(1.0);
+    if tgt_up > lane + 0.5 {
+        let inc = incentive_from_gaps(t, i, gaps(t, i, tgt_up), m);
+        let gain = inc.a_self_new - accel_i - m.politeness * (-inc.a_lag_new).max(0.0);
+        if inc.safe && gain > m.threshold {
+            return Some(tgt_up);
+        }
+    }
+    if tgt_down < lane - 0.5 {
+        let inc = incentive_from_gaps(t, i, gaps(t, i, tgt_down), m);
+        let gain = inc.a_self_new - accel_i - m.politeness * (-inc.a_lag_new).max(0.0);
+        if inc.safe && gain > m.threshold {
+            return Some(tgt_down);
+        }
+    }
+    None
+}
+
+/// Decide lane changes for every vehicle against the pre-step state via
+/// the O(N) reference scans.  Returns `Some(new_lane)` for changers,
+/// `None` otherwise.  Allocates; oracle/test use — the hot path is
+/// [`decide_all_into`].
 pub fn decide_all(
     t: &Traffic,
     accel: &[f32],
     scenario: &MergeScenario,
     m: &MobilParams,
 ) -> Vec<Option<f32>> {
-    let max_lane = scenario.num_main_lanes as f32;
     (0..t.capacity())
         .map(|i| {
             if !t.is_active(i) {
                 return None;
             }
-            let lane = t.lane(i);
-            let x = t.x(i);
-            let on_ramp = (lane - MergeScenario::RAMP_LANE).abs() < 0.5;
-
-            if on_ramp {
-                // mandatory merge inside the zone, whenever safe
-                let in_zone = x >= scenario.merge_start_m && x <= scenario.merge_end_m;
-                if in_zone && incentive(t, i, 1.0, m).safe {
-                    return Some(1.0);
-                }
-                return None;
-            }
-
-            // discretionary: up first, then down (model's priority)
-            let tgt_up = (lane + 1.0).min(max_lane);
-            let tgt_down = (lane - 1.0).max(1.0);
-            if tgt_up > lane + 0.5 {
-                let inc = incentive(t, i, tgt_up, m);
-                let gain = inc.a_self_new - accel[i] - m.politeness * (-inc.a_lag_new).max(0.0);
-                if inc.safe && gain > m.threshold {
-                    return Some(tgt_up);
-                }
-            }
-            if tgt_down < lane - 0.5 {
-                let inc = incentive(t, i, tgt_down, m);
-                let gain = inc.a_self_new - accel[i] - m.politeness * (-inc.a_lag_new).max(0.0);
-                if inc.safe && gain > m.threshold {
-                    return Some(tgt_down);
-                }
-            }
-            None
+            decide_one(t, i, accel[i], scenario, m, &lane_gap_scan)
         })
         .collect()
+}
+
+/// Decide lane changes via the sorted-sweep index, written into a reused
+/// buffer.  Bit-exact with [`decide_all`]; `index` must have been
+/// rebuilt from `t`.
+pub fn decide_all_into(
+    t: &Traffic,
+    accel: &[f32],
+    scenario: &MergeScenario,
+    m: &MobilParams,
+    index: &LaneIndex,
+    out: &mut Vec<Option<f32>>,
+) {
+    out.clear();
+    for i in 0..t.capacity() {
+        if !t.is_active(i) {
+            out.push(None);
+            continue;
+        }
+        out.push(decide_one(
+            t,
+            i,
+            accel[i],
+            scenario,
+            m,
+            &|t: &Traffic, i: usize, lane: f32| index.lane_gaps(t, i, lane),
+        ));
+    }
 }
 
 #[cfg(test)]
@@ -218,6 +267,24 @@ mod tests {
         // free road: staying put is fine
         let t = traffic(&[(100.0, 25.0, 1.0)]);
         assert_eq!(decide(&t)[0], None);
+    }
+
+    #[test]
+    fn sweep_decisions_match_reference() {
+        let t = traffic(&[
+            (100.0, 25.0, 1.0),
+            (112.0, 2.0, 1.0),
+            (350.0, 20.0, 0.0),
+            (350.4, 20.0, 1.0),
+            (80.0, 30.0, 2.0),
+        ]);
+        let accel = idm_accel_all(&t);
+        let (scenario, m) = (MergeScenario::default(), MobilParams::default());
+        let mut idx = LaneIndex::new();
+        idx.rebuild(&t);
+        let mut fast = Vec::new();
+        decide_all_into(&t, &accel, &scenario, &m, &idx, &mut fast);
+        assert_eq!(fast, decide_all(&t, &accel, &scenario, &m));
     }
 
     #[test]

@@ -13,9 +13,12 @@
 //!   (`duarouter --randomize-flows true --seed $RANDOM`),
 //! * [`state`] — the flat vehicle-state arrays shared with the AOT HLO
 //!   physics (layout fixed by `python/compile/kernels/ref.py`),
-//! * [`idm`]/[`mobil`] — a pure-rust IDM + MOBIL reference stepper: the
-//!   baseline comparator for the HLO path and the engine for runs that
-//!   don't need PJRT,
+//! * [`idm`]/[`mobil`] — a pure-rust IDM + MOBIL stepper: the baseline
+//!   comparator for the HLO path and the engine for runs that don't
+//!   need PJRT,
+//! * [`sweep`] — the sorted-sweep neighbor index that makes the native
+//!   step O(N log N) and allocation-free (bit-exact with the reference
+//!   scans),
 //! * [`simulation`] — the microsim loop: spawning from demand, stepping,
 //!   observables; serves TraCI queries.
 
@@ -26,11 +29,13 @@ pub mod mobil;
 pub mod network;
 pub mod simulation;
 pub mod state;
+pub mod sweep;
 pub mod xmlio;
 
 pub use duarouter::{duarouter, Departure, RouteFile};
 pub use flow::{FlowDef, FlowFile, VehicleType};
-pub use idm::NativeIdmStepper;
+pub use idm::{NativeIdmStepper, ReferenceIdmStepper};
+pub use sweep::LaneIndex;
 pub use network::{Edge, MergeScenario, Network};
 pub use simulation::{StepObs, Stepper, SumoSim};
 pub use state::{Traffic, ACTIVE, LANE, PARAM_COLS, STATE_COLS, V, X};

@@ -98,16 +98,19 @@ impl SumoSim {
 
     /// Advance one DT: insert due departures, then step physics.
     pub fn step(&mut self) -> StepObs {
-        // retry earlier blocked insertions first
-        let mut still_blocked = Vec::new();
-        for dep in std::mem::take(&mut self.insertion_queue) {
+        // retry earlier blocked insertions first, compacting the queue
+        // in place (keeps order, allocates nothing on the per-step path)
+        let mut kept = 0;
+        for k in 0..self.insertion_queue.len() {
+            let dep = self.insertion_queue[k];
             if self.try_insert(dep) {
                 self.total_spawned += 1;
             } else {
-                still_blocked.push(dep);
+                self.insertion_queue[kept] = dep;
+                kept += 1;
             }
         }
-        self.insertion_queue = still_blocked;
+        self.insertion_queue.truncate(kept);
 
         // newly due departures
         while self.next_departure < self.routes.departures.len()

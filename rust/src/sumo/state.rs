@@ -157,6 +157,14 @@ impl Traffic {
 
     /// Mean speed over active vehicles (0 when empty).
     pub fn mean_speed(&self) -> f32 {
+        self.census().1
+    }
+
+    /// `(active_count, mean_speed)` in a single pass over the slots —
+    /// the per-step observables, fused so the stepper doesn't scan the
+    /// state twice.  Identical accumulation order to [`Self::mean_speed`]
+    /// (bit-exact).
+    pub fn census(&self) -> (usize, f32) {
         let mut sum = 0.0f32;
         let mut n = 0u32;
         for i in 0..self.cap {
@@ -165,11 +173,8 @@ impl Traffic {
                 n += 1;
             }
         }
-        if n == 0 {
-            0.0
-        } else {
-            sum / n as f32
-        }
+        let mean = if n == 0 { 0.0 } else { sum / n as f32 };
+        (n as usize, mean)
     }
 }
 

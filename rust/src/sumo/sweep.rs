@@ -1,0 +1,259 @@
+//! Sorted-sweep neighbor index — the O(N log N) replacement for the
+//! O(N²)-per-step reference scans (`idm::leader_scan`,
+//! `mobil::lane_gap_scan`).
+//!
+//! Once per step the active slots are bucketed by lane and sorted by
+//! position (`rebuild`); every subsequent neighbor query is a partition
+//! point into the ego's (or target) lane's sorted run plus a walk over
+//! the contiguous equal-`dx` tie run, which reproduces the reference
+//! mask-min tie-breaking **bit-exactly** (asserted by
+//! `rust/tests/sweep_props.rs` and pre-validated by
+//! `scripts/validate_sweep.py`).
+//!
+//! Why exact: f32 subtraction `x_j - x_i` is monotone non-decreasing in
+//! `x_j` for fixed `x_i`, so within a lane sorted by `x` the predicate
+//! `dx > 1e-6` is a prefix/suffix property and the set `dx == min dx`
+//! (the reference's `dx <= center` mask under `dx >= center` from
+//! sortedness) is a contiguous run.
+//!
+//! The index buffers are owned scratch, reused across steps with no
+//! steady-state allocation (`rebuild` only clears and refills).
+//!
+//! Invariant: lane values must be integral (they are everywhere in the
+//! simulation — spawns use `lane as f32`, MOBIL emits `lane ± 1.0`);
+//! `rebuild` debug-asserts it.  Under that invariant, grouping by
+//! `lane.round()` is exactly the reference's `|lane_j - lane_i| < 0.5`
+//! same-lane test.
+
+use super::idm::{Leader, FREE_GAP};
+use super::mobil::LaneGaps;
+use super::state::{Traffic, P_LEN};
+
+/// Co-location epsilon — matches the reference scans' `1e-6`.
+const EPS: f32 = 1e-6;
+
+#[derive(Debug, Clone, Default)]
+struct LaneGroup {
+    key: i32,
+    /// `(x, slot)` for every active vehicle on this lane, sorted by `x`.
+    slots: Vec<(f32, u32)>,
+}
+
+/// The per-step sorted position index (one sorted run per lane).
+#[derive(Debug, Clone, Default)]
+pub struct LaneIndex {
+    groups: Vec<LaneGroup>,
+}
+
+impl LaneIndex {
+    pub fn new() -> LaneIndex {
+        LaneIndex::default()
+    }
+
+    /// Re-bucket and re-sort the active slots.  Reuses all buffers; the
+    /// only allocation ever is growth on first use / first sight of a
+    /// new lane.
+    pub fn rebuild(&mut self, t: &Traffic) {
+        for g in &mut self.groups {
+            g.slots.clear();
+        }
+        for i in 0..t.capacity() {
+            if !t.is_active(i) {
+                continue;
+            }
+            let lane = t.lane(i);
+            debug_assert!(
+                lane == lane.round(),
+                "sorted sweep requires integral lane values, got {lane}"
+            );
+            let key = lane.round() as i32;
+            let gi = match self.groups.iter().position(|g| g.key == key) {
+                Some(gi) => gi,
+                None => {
+                    self.groups.push(LaneGroup {
+                        key,
+                        slots: Vec::new(),
+                    });
+                    self.groups.len() - 1
+                }
+            };
+            self.groups[gi].slots.push((t.x(i), i as u32));
+        }
+        for g in &mut self.groups {
+            g.slots.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+        }
+    }
+
+    fn group(&self, target_lane: f32) -> Option<&LaneGroup> {
+        let key = target_lane.round() as i32;
+        self.groups.iter().find(|g| g.key == key)
+    }
+
+    /// Nearest-ahead scan on `target_lane` from position `xi`:
+    /// `(center, v, len)` where `center` is the minimal `dx > EPS`
+    /// (`FREE_GAP` when none) and `v`/`len` are the mask-min speed and
+    /// length over the exact `dx == center` tie run.
+    fn scan_ahead(&self, t: &Traffic, target_lane: f32, xi: f32) -> (f32, f32, f32) {
+        let Some(g) = self.group(target_lane) else {
+            return (FREE_GAP, FREE_GAP, FREE_GAP);
+        };
+        let s = &g.slots;
+        let start = s.partition_point(|&(x, _)| x - xi <= EPS);
+        if start == s.len() {
+            return (FREE_GAP, FREE_GAP, FREE_GAP);
+        }
+        let center = s[start].0 - xi;
+        let mut lv = FREE_GAP;
+        let mut llen = FREE_GAP;
+        for &(x, slot) in &s[start..] {
+            if x - xi > center {
+                break;
+            }
+            lv = lv.min(t.v(slot as usize));
+            llen = llen.min(t.param(slot as usize, P_LEN));
+        }
+        (center, lv, llen)
+    }
+
+    /// Nearest-behind scan on `target_lane` from position `xi`:
+    /// `(lag_center, v)` where `lag_center` is the minimal `-dx` over
+    /// `dx < -EPS` (`FREE_GAP` when none) and `v` is the mask-min speed
+    /// over the exact tie run.
+    fn scan_behind(&self, t: &Traffic, target_lane: f32, xi: f32) -> (f32, f32) {
+        let Some(g) = self.group(target_lane) else {
+            return (FREE_GAP, FREE_GAP);
+        };
+        let s = &g.slots;
+        let end = s.partition_point(|&(x, _)| x - xi < -EPS);
+        if end == 0 {
+            return (FREE_GAP, FREE_GAP);
+        }
+        let dx_last = s[end - 1].0 - xi;
+        let lag_center = -dx_last;
+        let mut lag_v = FREE_GAP;
+        for &(x, slot) in s[..end].iter().rev() {
+            if x - xi != dx_last {
+                break;
+            }
+            lag_v = lag_v.min(t.v(slot as usize));
+        }
+        (lag_center, lag_v)
+    }
+
+    /// Drop-in for [`super::idm::leader_scan`] — identical result, bit
+    /// for bit.  `i` must be an active slot of the `t` this index was
+    /// rebuilt from.
+    pub fn leader(&self, t: &Traffic, i: usize) -> Leader {
+        let xi = t.x(i);
+        let (center, lv, llen) = self.scan_ahead(t, t.lane(i), xi);
+        if center >= FREE_GAP * 0.5 {
+            return Leader {
+                gap: FREE_GAP,
+                v: t.v(i),
+                exists: false,
+            };
+        }
+        Leader {
+            gap: center - llen,
+            v: lv,
+            exists: true,
+        }
+    }
+
+    /// Drop-in for [`super::mobil::lane_gap_scan`] — identical result,
+    /// bit for bit.
+    pub fn lane_gaps(&self, t: &Traffic, i: usize, target_lane: f32) -> LaneGaps {
+        let xi = t.x(i);
+        let (lead_center, lead_v, lead_len) = self.scan_ahead(t, target_lane, xi);
+        let (lag_center, lag_v) = self.scan_behind(t, target_lane, xi);
+        let lead_has = lead_center < FREE_GAP * 0.5;
+        let lag_has = lag_center < FREE_GAP * 0.5;
+        LaneGaps {
+            lead_gap: if lead_has {
+                lead_center - lead_len
+            } else {
+                FREE_GAP
+            },
+            lead_v: if lead_has { lead_v } else { t.v(i) },
+            lag_gap: if lag_has {
+                lag_center - t.param(i, P_LEN)
+            } else {
+                FREE_GAP
+            },
+            lag_v: if lag_has { lag_v } else { t.v(i) },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sumo::idm::leader_scan;
+    use crate::sumo::mobil::lane_gap_scan;
+    use crate::sumo::state::DriverParams;
+
+    fn traffic(rows: &[(f32, f32, f32)]) -> Traffic {
+        let mut t = Traffic::new(rows.len());
+        for &(x, v, lane) in rows {
+            t.spawn(x, v, lane, DriverParams::default());
+        }
+        t
+    }
+
+    #[test]
+    fn matches_reference_on_small_scene() {
+        let t = traffic(&[
+            (100.0, 20.0, 1.0),
+            (150.0, 10.0, 1.0),
+            (120.0, 5.0, 2.0),
+            (80.0, 12.0, 1.0),
+        ]);
+        let mut idx = LaneIndex::new();
+        idx.rebuild(&t);
+        for i in 0..t.capacity() {
+            assert_eq!(idx.leader(&t, i), leader_scan(&t, i), "slot {i}");
+            for target in [0.0f32, 1.0, 2.0] {
+                let a = idx.lane_gaps(&t, i, target);
+                let b = lane_gap_scan(&t, i, target);
+                assert_eq!(
+                    (a.lead_gap, a.lead_v, a.lag_gap, a.lag_v),
+                    (b.lead_gap, b.lead_v, b.lag_gap, b.lag_v),
+                    "slot {i} target {target}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn colocated_ties_use_mask_min() {
+        // two leaders at the same x: mask-min picks the smaller speed
+        let t = traffic(&[(100.0, 20.0, 1.0), (150.0, 18.0, 1.0), (150.0, 3.0, 1.0)]);
+        let mut idx = LaneIndex::new();
+        idx.rebuild(&t);
+        let l = idx.leader(&t, 0);
+        assert_eq!(l, leader_scan(&t, 0));
+        assert_eq!(l.v, 3.0);
+    }
+
+    #[test]
+    fn empty_lane_has_no_neighbors() {
+        let t = traffic(&[(100.0, 20.0, 1.0)]);
+        let mut idx = LaneIndex::new();
+        idx.rebuild(&t);
+        let g = idx.lane_gaps(&t, 0, 2.0);
+        assert_eq!(g.lead_gap, FREE_GAP);
+        assert_eq!(g.lag_gap, FREE_GAP);
+        assert!(!idx.leader(&t, 0).exists);
+    }
+
+    #[test]
+    fn rebuild_reuses_buffers_across_steps() {
+        let mut t = traffic(&[(100.0, 20.0, 1.0), (150.0, 10.0, 1.0)]);
+        let mut idx = LaneIndex::new();
+        idx.rebuild(&t);
+        assert!(idx.leader(&t, 0).exists);
+        t.deactivate(1);
+        idx.rebuild(&t);
+        assert!(!idx.leader(&t, 0).exists);
+    }
+}

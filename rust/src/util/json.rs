@@ -1,7 +1,9 @@
-//! A minimal JSON parser — just enough for `artifacts/manifest.json`.
+//! A minimal JSON parser + writer — just enough for
+//! `artifacts/manifest.json` and the bench-result trajectory files
+//! (`BENCH_*.json`).
 //!
 //! Supports objects, arrays, strings (with standard escapes), numbers,
-//! booleans and null.  No serialization beyond what the CLI needs.
+//! booleans and null.
 
 use std::collections::BTreeMap;
 
@@ -76,6 +78,95 @@ impl Json {
             other => Err(Error::Config(format!("expected object, got {other:?}"))),
         }
     }
+
+    /// Serialize with 2-space indentation (round-trips through
+    /// [`Json::parse`]).
+    pub fn to_pretty_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0);
+        s
+    }
+
+    fn write(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    // integers print without a trailing ".0" (matches
+                    // what the python side writes into manifests)
+                    if n.fract() == 0.0 && n.abs() < 1e15 {
+                        out.push_str(&format!("{}", *n as i64));
+                    } else {
+                        out.push_str(&format!("{n}"));
+                    }
+                } else {
+                    out.push_str("null"); // JSON has no Inf/NaN
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(a) => {
+                if a.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    push_indent(out, indent + 1);
+                    v.write(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                if m.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    push_indent(out, indent + 1);
+                    write_escaped(out, k);
+                    out.push_str(": ");
+                    v.write(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn push_indent(out: &mut String, levels: usize) {
+    for _ in 0..levels {
+        out.push_str("  ");
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -313,6 +404,21 @@ mod tests {
         assert!(Json::parse("{\"a\" 1}").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("tru").is_err());
+    }
+
+    #[test]
+    fn pretty_round_trips() {
+        let text = r#"{
+          "bench": "runtime_hotpath",
+          "runs": [{"label": "pre", "results": [{"name": "a/b=1", "ns": 1250.5}]}],
+          "n": 3, "neg": -1.5, "esc": "a\"b\nc", "flag": true, "none": null,
+          "empty_arr": [], "empty_obj": {}
+        }"#;
+        let j = Json::parse(text).unwrap();
+        let pretty = j.to_pretty_string();
+        assert_eq!(Json::parse(&pretty).unwrap(), j);
+        // integers stay integers
+        assert!(pretty.contains("\"n\": 3"), "{pretty}");
     }
 
     #[test]

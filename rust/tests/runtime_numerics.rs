@@ -143,6 +143,27 @@ fn full_step_trajectories_track() {
     }
 }
 
+/// The persistent-session hot path is numerically identical to the
+/// one-shot service API over a rollout (buffer reuse must not leak
+/// state between steps).
+#[test]
+fn session_rollout_matches_oneshot_rollout() {
+    let Some(s) = service() else { return };
+    let bucket = s.manifest().buckets[0];
+    let mut rng = Rng64::seed_from_u64(0x5E55);
+    let t0 = random_traffic(&mut rng, bucket, 0.6);
+    let mut sess = s.session(bucket).unwrap();
+    let mut state_sess = t0.state.clone();
+    let mut state_solo = t0.state.clone();
+    for step in 0..15 {
+        let out = sess.step(&state_sess, &t0.params).unwrap();
+        let solo = s.step(bucket, &state_solo, &t0.params).unwrap();
+        assert_eq!(*out, solo, "session diverged from one-shot at step {step}");
+        state_sess.copy_from_slice(&out.state);
+        state_solo.copy_from_slice(&solo.state);
+    }
+}
+
 /// Obs semantics agree: n_active from the artifact equals the rust count.
 #[test]
 fn obs_active_count_agrees() {

@@ -1,0 +1,165 @@
+//! Property tests: the sorted-sweep neighbor index is **bit-exact**
+//! with the O(N²) reference scans across randomized traffic — varying
+//! fill, exact co-located ties (the mask-min tie-break case), and
+//! multiple lanes, at N=64 and N=256 (PR 1 acceptance).
+//!
+//! These tests need no artifacts; they pin the native stepper's
+//! numerics so the HLO cross-validation in `runtime_numerics.rs` keeps
+//! a trustworthy baseline.
+
+use webots_hpc::sumo::idm::{idm_accel_all, idm_accel_all_into, leader_scan, wall_accel};
+use webots_hpc::sumo::mobil::{decide_all, decide_all_into, lane_gap_scan, MobilParams};
+use webots_hpc::sumo::state::{DriverParams, Traffic};
+use webots_hpc::sumo::{
+    LaneIndex, MergeScenario, NativeIdmStepper, ReferenceIdmStepper, Stepper,
+};
+use webots_hpc::util::Rng64;
+
+/// Random traffic with deliberate pathologies: partial fill, exact
+/// co-located x ties (same and different lanes), heterogeneous params.
+fn random_traffic(rng: &mut Rng64, cap: usize, fill: f64) -> Traffic {
+    let mut t = Traffic::new(cap);
+    let mut x = 0.0f32;
+    for _ in 0..cap {
+        if rng.gen_f64() >= fill {
+            continue;
+        }
+        x += 0.5 + rng.gen_range_f32(0.0, 40.0);
+        let lane = rng.gen_below(3) as f32;
+        let v = rng.gen_range_f32(0.0, 32.0);
+        let params = DriverParams {
+            v0: rng.gen_range_f32(20.0, 38.0),
+            t_headway: rng.gen_range_f32(0.9, 2.2),
+            a_max: rng.gen_range_f32(1.0, 2.5),
+            b_comf: rng.gen_range_f32(1.5, 3.5),
+            s0: rng.gen_range_f32(1.5, 3.0),
+            length: rng.gen_range_f32(4.0, 9.0),
+        };
+        t.spawn(x, v, lane, params);
+    }
+    // exact co-located ties: teleport ~15% of actives onto an earlier
+    // active's x (sometimes also its lane) — the mask-min tie-break case
+    for i in 1..cap {
+        if !t.is_active(i) || rng.gen_f64() >= 0.15 {
+            continue;
+        }
+        let j = (rng.gen_below(i as u64)) as usize;
+        if !t.is_active(j) {
+            continue;
+        }
+        let lane = if rng.gen_f64() < 0.5 { t.lane(j) } else { t.lane(i) };
+        t.set_state_row(i, t.x(j), t.v(i), lane, true);
+    }
+    t
+}
+
+#[test]
+fn sweep_scans_bit_exact_with_reference() {
+    for &cap in &[64usize, 256] {
+        for &fill in &[0.2f64, 0.7, 1.0] {
+            for seed in 0..12u64 {
+                let mut rng = Rng64::seed_from_u64(seed * 7919 + cap as u64);
+                let t = random_traffic(&mut rng, cap, fill);
+                let mut idx = LaneIndex::new();
+                idx.rebuild(&t);
+                for i in 0..cap {
+                    if !t.is_active(i) {
+                        continue;
+                    }
+                    let a = idx.leader(&t, i);
+                    let b = leader_scan(&t, i);
+                    assert_eq!(
+                        (a.gap.to_bits(), a.v.to_bits(), a.exists),
+                        (b.gap.to_bits(), b.v.to_bits(), b.exists),
+                        "leader N={cap} fill={fill} seed={seed} slot={i}: {a:?} vs {b:?}"
+                    );
+                    for target in [0.0f32, 1.0, 2.0] {
+                        let g = idx.lane_gaps(&t, i, target);
+                        let r = lane_gap_scan(&t, i, target);
+                        assert_eq!(
+                            (
+                                g.lead_gap.to_bits(),
+                                g.lead_v.to_bits(),
+                                g.lag_gap.to_bits(),
+                                g.lag_v.to_bits()
+                            ),
+                            (
+                                r.lead_gap.to_bits(),
+                                r.lead_v.to_bits(),
+                                r.lag_gap.to_bits(),
+                                r.lag_v.to_bits()
+                            ),
+                            "gaps N={cap} fill={fill} seed={seed} slot={i} target={target}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sweep_accel_and_decisions_bit_exact() {
+    let scenario = MergeScenario::default();
+    let mobil = MobilParams::default();
+    for &cap in &[64usize, 256] {
+        for seed in 0..10u64 {
+            let mut rng = Rng64::seed_from_u64(seed ^ 0xACCE1);
+            let t = random_traffic(&mut rng, cap, 0.7);
+            let mut idx = LaneIndex::new();
+            idx.rebuild(&t);
+
+            let reference = idm_accel_all(&t);
+            let mut fast = Vec::new();
+            idm_accel_all_into(&t, &idx, &mut fast);
+            for i in 0..cap {
+                assert_eq!(
+                    fast[i].to_bits(),
+                    reference[i].to_bits(),
+                    "accel N={cap} seed={seed} slot={i}"
+                );
+            }
+
+            // decisions use the wall-combined accel, like the stepper
+            let combined: Vec<f32> = (0..cap)
+                .map(|i| {
+                    if t.is_active(i) {
+                        reference[i].min(wall_accel(&t, i, &scenario))
+                    } else {
+                        0.0
+                    }
+                })
+                .collect();
+            let ref_dec = decide_all(&t, &combined, &scenario, &mobil);
+            let mut fast_dec = Vec::new();
+            decide_all_into(&t, &combined, &scenario, &mobil, &idx, &mut fast_dec);
+            assert_eq!(fast_dec, ref_dec, "decisions N={cap} seed={seed}");
+        }
+    }
+}
+
+/// Whole rollouts: stepping the same world with the production stepper
+/// and the reference oracle yields *identical* f32 state and observables
+/// at every step (reused scratch does not drift).
+#[test]
+fn sweep_stepper_rollouts_bit_exact() {
+    for &cap in &[64usize, 256] {
+        for seed in 0..6u64 {
+            let mut rng = Rng64::seed_from_u64(seed.wrapping_mul(0x9E3779B9) + cap as u64);
+            let t0 = random_traffic(&mut rng, cap, 0.6);
+            let mut ta = t0.clone();
+            let mut tb = t0;
+            let mut fast = NativeIdmStepper::default();
+            let mut oracle = ReferenceIdmStepper::default();
+            for step in 0..60 {
+                let oa = fast.step(&mut ta);
+                let ob = oracle.step(&mut tb);
+                assert_eq!(oa, ob, "obs N={cap} seed={seed} step={step}");
+                assert_eq!(
+                    ta, tb,
+                    "state diverged N={cap} seed={seed} step={step}"
+                );
+            }
+        }
+    }
+}

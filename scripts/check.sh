@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Pre-PR gate (EXPERIMENTS.md, ROADMAP.md): formatting, lints, and the
+# tier-1 build/test command.  Run from anywhere inside the repo.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo fmt --check =="
+cargo fmt --all -- --check
+
+echo "== cargo clippy -D warnings =="
+cargo clippy --all-targets -- -D warnings
+
+echo "== tier-1: cargo build --release && cargo test -q =="
+cargo build --release
+cargo test -q
+
+echo "check.sh: all gates passed"

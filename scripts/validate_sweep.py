@@ -1,0 +1,266 @@
+#!/usr/bin/env python3
+"""Pre-flight oracle for the rust sorted-sweep neighbor index (PR 1).
+
+Mirrors, in numpy float32, both neighbor-scan algorithms used by the
+native stepper:
+
+  * the O(N^2) reference scans (``leader_scan`` / ``lane_gap_scan`` in
+    ``rust/src/sumo/{idm,mobil}.rs``, themselves line-for-line ports of
+    ``python/compile/kernels/ref.py``), and
+  * the O(N log N) sorted-sweep versions (``rust/src/sumo/sweep.rs``):
+    sort active slots by x once per lane per step, then find neighbors
+    by partition point and resolve mask-min ties over the contiguous
+    equal-dx run.
+
+and asserts they are *bit-exact* (same gap, same mask-min tie-broken
+speed/length selection, same exists flags) across randomized traffic:
+varying fill, exact co-located ties, multiple lanes, N in {64, 256}.
+
+It also times the two accel passes to estimate the algorithmic speedup
+recorded in ``BENCH_runtime_hotpath.json`` (clearly labelled as a
+python-mirror estimate there; re-measure with
+``cargo bench --bench runtime_hotpath`` on a machine with the rust
+toolchain).
+
+Run: ``python3 scripts/validate_sweep.py``
+"""
+
+import time
+
+import numpy as np
+
+F = np.float32
+FREE_GAP = F(1.0e6)
+EPS = F(1e-6)
+
+
+# ---------------------------------------------------------------- reference
+def leader_scan_ref(x, v, lane, act, plen, i):
+    """Port of rust `leader_scan` (O(N) per ego)."""
+    xi = x[i]
+    li = lane[i]
+    center = FREE_GAP
+    n = len(x)
+    for j in range(n):
+        if not act[j]:
+            continue
+        dx = F(x[j] - xi)
+        if dx > EPS and abs(F(lane[j] - li)) < F(0.5) and dx < center:
+            center = dx
+    if center >= FREE_GAP * F(0.5):
+        return FREE_GAP, v[i], False
+    lv = FREE_GAP
+    llen = FREE_GAP
+    for j in range(n):
+        if not act[j]:
+            continue
+        dx = F(x[j] - xi)
+        if dx > EPS and abs(F(lane[j] - li)) < F(0.5) and dx <= center:
+            lv = min(lv, v[j])
+            llen = min(llen, plen[j])
+    return F(center - llen), lv, True
+
+
+def lane_gap_scan_ref(x, v, lane, act, plen, i, target):
+    """Port of rust `lane_gap_scan` (O(N) per ego/target)."""
+    xi = x[i]
+    n = len(x)
+    lead_center = FREE_GAP
+    lag_center = FREE_GAP
+    for j in range(n):
+        if not act[j] or abs(F(lane[j] - target)) >= F(0.5):
+            continue
+        dx = F(x[j] - xi)
+        if dx > EPS:
+            lead_center = min(lead_center, dx)
+        elif dx < -EPS:
+            lag_center = min(lag_center, F(-dx))
+    lead_v = FREE_GAP
+    lead_len = FREE_GAP
+    lag_v = FREE_GAP
+    for j in range(n):
+        if not act[j] or abs(F(lane[j] - target)) >= F(0.5):
+            continue
+        dx = F(x[j] - xi)
+        if dx > EPS and dx <= lead_center:
+            lead_v = min(lead_v, v[j])
+            lead_len = min(lead_len, plen[j])
+        elif dx < -EPS and F(-dx) <= lag_center:
+            lag_v = min(lag_v, v[j])
+    lead_has = lead_center < FREE_GAP * F(0.5)
+    lag_has = lag_center < FREE_GAP * F(0.5)
+    return (
+        F(lead_center - lead_len) if lead_has else FREE_GAP,
+        lead_v if lead_has else v[i],
+        F(lag_center - plen[i]) if lag_has else FREE_GAP,
+        lag_v if lag_has else v[i],
+    )
+
+
+# ------------------------------------------------------------- sorted sweep
+class LaneIndex:
+    """Port of rust `sweep::LaneIndex`."""
+
+    def __init__(self, x, v, lane, act, plen):
+        self.x, self.v, self.plen = x, v, plen
+        self.groups = {}  # lane key -> list[(x, slot)] sorted by x
+        for i in range(len(x)):
+            if not act[i]:
+                continue
+            key = int(round(float(lane[i])))
+            self.groups.setdefault(key, []).append((x[i], i))
+        for g in self.groups.values():
+            g.sort(key=lambda e: float(e[0]))
+
+    def _group(self, target):
+        return self.groups.get(int(round(float(target))), [])
+
+    def scan_ahead(self, target, xi):
+        """(center, mask-min v, mask-min len) among dx > EPS; FREE if none."""
+        s = self._group(target)
+        # partition point: first index with x - xi > EPS
+        lo, hi = 0, len(s)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if F(s[mid][0] - xi) <= EPS:
+                lo = mid + 1
+            else:
+                hi = mid
+        if lo == len(s):
+            return FREE_GAP, FREE_GAP, FREE_GAP
+        center = F(s[lo][0] - xi)
+        lv = FREE_GAP
+        llen = FREE_GAP
+        for k in range(lo, len(s)):
+            if F(s[k][0] - xi) > center:
+                break
+            j = s[k][1]
+            lv = min(lv, self.v[j])
+            llen = min(llen, self.plen[j])
+        return center, lv, llen
+
+    def scan_behind(self, target, xi):
+        """(lag center, mask-min v) among dx < -EPS; FREE if none."""
+        s = self._group(target)
+        lo, hi = 0, len(s)
+        while lo < hi:  # first index with x - xi >= -EPS
+            mid = (lo + hi) // 2
+            if F(s[mid][0] - xi) < -EPS:
+                lo = mid + 1
+            else:
+                hi = mid
+        if lo == 0:
+            return FREE_GAP, FREE_GAP
+        dx_last = F(s[lo - 1][0] - xi)
+        lag_center = F(-dx_last)
+        lag_v = FREE_GAP
+        for k in range(lo - 1, -1, -1):
+            if F(s[k][0] - xi) != dx_last:
+                break
+            lag_v = min(lag_v, self.v[s[k][1]])
+        return lag_center, lag_v
+
+    def leader(self, lane, i):
+        xi = self.x[i]
+        center, lv, llen = self.scan_ahead(lane[i], xi)
+        if center >= FREE_GAP * F(0.5):
+            return FREE_GAP, self.v[i], False
+        return F(center - llen), lv, True
+
+    def lane_gaps(self, i, target):
+        xi = self.x[i]
+        lead_center, lead_v, lead_len = self.scan_ahead(target, xi)
+        lag_center, lag_v = self.scan_behind(target, xi)
+        lead_has = lead_center < FREE_GAP * F(0.5)
+        lag_has = lag_center < FREE_GAP * F(0.5)
+        return (
+            F(lead_center - lead_len) if lead_has else FREE_GAP,
+            lead_v if lead_has else self.v[i],
+            F(lag_center - self.plen[i]) if lag_has else FREE_GAP,
+            lag_v if lag_has else self.v[i],
+        )
+
+
+# ------------------------------------------------------------------ driver
+def random_traffic(rng, n, fill, n_lanes=3, tie_frac=0.15):
+    x = np.zeros(n, dtype=F)
+    v = rng.uniform(0.0, 32.0, n).astype(F)
+    lane = rng.integers(0, n_lanes, n).astype(F)
+    act = rng.uniform(0.0, 1.0, n) < fill
+    plen = rng.uniform(4.0, 9.0, n).astype(F)
+    pos = F(0.0)
+    for i in range(n):
+        pos = F(pos + F(rng.uniform(0.5, 40.0)))
+        x[i] = pos
+    # exact co-located ties (the mask-min tie-break case): copy x (and
+    # sometimes lane) from a random earlier vehicle
+    for i in range(1, n):
+        if rng.uniform() < tie_frac:
+            j = int(rng.integers(0, i))
+            x[i] = x[j]
+            if rng.uniform() < 0.5:
+                lane[i] = lane[j]
+    return x, v, lane, act, plen
+
+
+def check(seed, n, fill):
+    rng = np.random.default_rng(seed)
+    x, v, lane, act, plen = random_traffic(rng, n, fill)
+    idx = LaneIndex(x, v, lane, act, plen)
+    lanes = sorted({int(round(float(l))) for l in lane} | {1})
+    for i in range(n):
+        if not act[i]:
+            continue
+        ref = leader_scan_ref(x, v, lane, act, plen, i)
+        got = idx.leader(lane, i)
+        assert ref == got, f"leader mismatch seed={seed} i={i}: {ref} vs {got}"
+        for target in lanes:
+            t = F(target)
+            ref_g = lane_gap_scan_ref(x, v, lane, act, plen, i, t)
+            got_g = idx.lane_gaps(i, t)
+            assert ref_g == got_g, (
+                f"lane_gaps mismatch seed={seed} i={i} target={target}: "
+                f"{ref_g} vs {got_g}"
+            )
+
+
+def bench(n, fill, reps):
+    rng = np.random.default_rng(12345)
+    x, v, lane, act, plen = random_traffic(rng, n, fill, tie_frac=0.0)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for i in range(n):
+            if act[i]:
+                leader_scan_ref(x, v, lane, act, plen, i)
+    t_ref = (time.perf_counter() - t0) / reps
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        idx = LaneIndex(x, v, lane, act, plen)
+        for i in range(n):
+            if act[i]:
+                idx.leader(lane, i)
+    t_sweep = (time.perf_counter() - t0) / reps
+    print(
+        f"  N={n:4d} fill={fill}: reference {t_ref * 1e3:8.2f} ms/step-scan, "
+        f"sweep {t_sweep * 1e3:8.2f} ms/step-scan  ->  {t_ref / t_sweep:5.1f}x"
+    )
+    return t_ref / t_sweep
+
+
+def main():
+    cases = 0
+    for n in (64, 256):
+        for fill in (0.2, 0.7, 1.0):
+            for seed in range(12):
+                check(seed * 7919 + n, n, fill)
+                cases += 1
+    print(f"bit-exactness: OK ({cases} randomized cases, N in {{64,256}}, "
+          "ties + multi-lane)")
+    print("algorithmic speedup of the leader pass (python mirror, "
+          "indicative only):")
+    bench(64, 0.7, 30)
+    bench(256, 0.7, 8)
+
+
+if __name__ == "__main__":
+    main()
