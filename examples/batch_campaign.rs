@@ -79,6 +79,7 @@ fn main() -> anyhow::Result<()> {
                     capacity: 64,
                     horizon_s: HORIZON_S,
                     max_steps: 2_000,
+                    scenario_run: None,
                 })
                 .collect();
             submitted += configs.len() as u64;

@@ -36,6 +36,7 @@ fn main() -> anyhow::Result<()> {
         capacity: 64,
         horizon_s: 60.0,
         max_steps: 1_000,
+        scenario_run: None,
     };
 
     // the container image the paper ships: official Webots docker image

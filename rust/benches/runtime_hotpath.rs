@@ -146,6 +146,7 @@ fn main() {
                 capacity: 64,
                 horizon_s: 30.0,
                 max_steps: 400,
+                scenario_run: None,
             };
             let _ = webots_hpc::pipeline::launch_instance(&cfg, &displays, &env, &engine)
                 .unwrap();

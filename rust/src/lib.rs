@@ -28,6 +28,9 @@
 //! * [`pipeline`] — the paper's contribution: the campaign launcher that
 //!   wires all of the above together (port allocation, world-copy
 //!   propagation, job generation, output collection),
+//! * [`scenario`] — parametric scenario spaces, seeded samplers and the
+//!   campaign-wide scenario matrix: the "many scenarios" axis on top of
+//!   the paper's "many seeds" randomization,
 //! * [`output`] / [`metrics`] — big-data aggregation and per-run resource
 //!   accounting,
 //! * [`harness`] — regenerates every table and figure of the paper's
@@ -46,6 +49,7 @@ pub mod output;
 pub mod pbs;
 pub mod pipeline;
 pub mod runtime;
+pub mod scenario;
 pub mod simclock;
 pub mod util;
 pub mod sumo;

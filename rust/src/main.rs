@@ -40,7 +40,9 @@ const USAGE: &str = "usage: webots-hpc <info|table|fig|dist|campaign|submit|run-
             [--capacity C] [--seed K]
   scale [--max N] [--hours H]        §6.2.2: scalability sweep
   cloud [--runs N]                   §6.2.3: elastic (autoscaled) campaign
-  config-init [path]                 §6.2.1: write an example campaign config";
+  config-init [path]                 §6.2.1: write an example campaign config
+  scenarios [--families a,b] [--samples N] [--sampler grid|uniform|lhs]
+            [--seed K] [--out file]  scenario-matrix manifest (the dataset codebook)";
 
 /// Tiny flag parser: positional args + `--key value` pairs.
 struct Args {
@@ -108,6 +110,7 @@ fn main() -> Result<()> {
         "scale" => scale(&rest),
         "cloud" => cloud(&rest),
         "config-init" => config_init(&rest),
+        "scenarios" => scenarios(&rest),
         "submit" => submit(&rest),
         "run-local" => run_local(&rest),
         "--help" | "-h" | "help" => {
@@ -201,11 +204,42 @@ fn config_init(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn scenarios(args: &Args) -> Result<()> {
+    use webots_hpc::scenario::{scenarios_manifest, FamilyRegistry, SamplerKind, ScenarioMatrix};
+    let registry = FamilyRegistry::builtin();
+    let families: Vec<String> = match args.flags.get("families") {
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+        None => registry.ids(),
+    };
+    let samples: usize = args.get("samples", 16)?;
+    let seed: u64 = args.get("seed", 2021)?;
+    let kind = SamplerKind::parse(&args.get_str("sampler", "lhs"), samples)?;
+    let matrix = ScenarioMatrix::new(families, kind, samples, seed);
+    let manifest = scenarios_manifest(&registry, &matrix)?;
+    let text = manifest.to_pretty_string();
+    match args.flags.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text)?;
+            println!(
+                "wrote {path}: {} families x {samples} points ({} runs per full pass)",
+                matrix.families.len(),
+                matrix.total_points()
+            );
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
 fn campaign(args: &Args) -> Result<()> {
     if let Some(cfg_path) = args.flags.get("config") {
         let cfg = webots_hpc::pipeline::CampaignConfig::parse(&std::fs::read_to_string(cfg_path)?)?;
         println!("campaign config '{}':\n{}", cfg.name, cfg.to_pbs_script()?.render());
-        let r = run_cluster_campaign(&cfg.to_spec())?;
+        let r = run_cluster_campaign(&cfg.to_spec()?)?;
         println!(
             "completed {} / {} runs ({:.1}%), per-node {:?}",
             r.stats.completed,
@@ -326,6 +360,7 @@ fn run_local(args: &Args) -> Result<()> {
             capacity,
             horizon_s: horizon,
             max_steps: (horizon * 10.0) as u64 + 100,
+            scenario_run: None,
         })
         .collect();
 

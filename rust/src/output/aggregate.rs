@@ -61,6 +61,73 @@ impl CampaignDataset {
         seeds.sort_unstable();
         seeds.windows(2).all(|w| w[0] != w[1])
     }
+
+    /// Per-scenario run counts (scenario-matrix campaigns; untagged
+    /// runs group under `"-"`).  Sorted by scenario id.
+    pub fn runs_per_scenario(&self) -> Vec<(String, usize)> {
+        let mut counts = std::collections::BTreeMap::new();
+        for r in &self.runs {
+            let key = r
+                .scenario
+                .as_ref()
+                .map(|t| t.id.as_str().to_string())
+                .unwrap_or_else(|| "-".to_string());
+            *counts.entry(key).or_insert(0usize) += 1;
+        }
+        counts.into_iter().collect()
+    }
+
+    /// Sorted union of scenario parameter names across runs — the
+    /// parameter columns of [`Self::to_ml_csv`].
+    pub fn param_columns(&self) -> Vec<String> {
+        let mut names = std::collections::BTreeSet::new();
+        for r in &self.runs {
+            if let Some(tag) = &r.scenario {
+                for (name, _) in &tag.params {
+                    names.insert(name.clone());
+                }
+            }
+        }
+        names.into_iter().collect()
+    }
+
+    /// The ML-ready long-form export: one CSV row per logged step, each
+    /// carrying its run provenance (qualified run id, scenario id,
+    /// sample index, node, seed) **and the generating parameter
+    /// vector** — the §1 promise ("aggregated output datasets ... for
+    /// ML applications") made self-describing.  Parameter cells are
+    /// empty for runs whose scenario lacks that axis (and for untagged
+    /// runs); the scenarios manifest is the matching codebook.
+    pub fn to_ml_csv(&self) -> String {
+        let params = self.param_columns();
+        let mut s = String::from("run_id,scenario,sample_index,node,seed,time_s,n_active,mean_speed,flow,n_merged");
+        for p in &params {
+            s.push(',');
+            s.push_str(p);
+        }
+        s.push('\n');
+        for r in &self.runs {
+            let (scenario, sample): (String, String) = match &r.scenario {
+                Some(t) => (t.id.as_str().to_string(), t.sample_index.to_string()),
+                None => (String::new(), String::new()),
+            };
+            let mut cells = String::new();
+            for p in &params {
+                cells.push(',');
+                if let Some(v) = r.param(p) {
+                    cells.push_str(&v.render());
+                }
+            }
+            for row in &r.rows {
+                s.push_str(&format!(
+                    "{},{scenario},{sample},{},{},{:.1},{},{:.3},{},{}{cells}\n",
+                    r.run_id, r.node, r.seed, row.time_s, row.n_active, row.mean_speed,
+                    row.flow, row.n_merged
+                ));
+            }
+        }
+        s
+    }
 }
 
 #[cfg(test)]
@@ -103,6 +170,42 @@ mod tests {
         c.add(run("a", 0, 7, 1.0));
         c.add(run("b", 0, 7, 1.0));
         assert!(!c.seeds_unique());
+    }
+
+    #[test]
+    fn ml_csv_carries_scenario_params() {
+        use crate::scenario::{AxisValue, ScenarioId, ScenarioTag};
+        let mut c = CampaignDataset::new();
+        c.add(run("e0[0]", 0, 1, 2.0)); // untagged
+        let mut tagged = run("e0[1]", 1, 2, 3.0);
+        tagged = tagged.with_scenario(ScenarioTag {
+            id: ScenarioId::new("ring-shockwave"),
+            sample_index: 5,
+            params: vec![
+                ("circumference_m".into(), AxisValue::Num(800.0)),
+                ("lanes".into(), AxisValue::Int(2)),
+            ],
+        });
+        c.add(tagged);
+
+        assert_eq!(c.param_columns(), vec!["circumference_m", "lanes"]);
+        assert_eq!(
+            c.runs_per_scenario(),
+            vec![("-".to_string(), 1), ("ring-shockwave".to_string(), 1)]
+        );
+
+        let csv = c.to_ml_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(
+            lines[0],
+            "run_id,scenario,sample_index,node,seed,time_s,n_active,mean_speed,flow,n_merged,circumference_m,lanes"
+        );
+        // untagged run: empty scenario + param cells
+        assert!(lines[1].starts_with("e0[0],,,0,1,"));
+        assert!(lines[1].ends_with(",,"));
+        // tagged run: qualified id + params
+        assert!(lines[2].starts_with("e0[1]@ring-shockwave#5,ring-shockwave,5,1,2,"));
+        assert!(lines[2].ends_with(",800,2"));
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Per-run output datasets.
 
 
+use crate::scenario::{AxisValue, ScenarioTag};
 use crate::sumo::StepObs;
 
 /// One logged step (a row of the run's CSV).
@@ -28,12 +29,18 @@ impl ObsRow {
 /// The output dataset of one simulation run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunDataset {
-    /// `{job}[{array_index}]`-style identifier.
+    /// `{job}[{array_index}]`-style identifier; scenario-matrix runs
+    /// append `@{scenario}#{sample_index}` (see [`Self::with_scenario`])
+    /// so aggregated rows from different scenario points stay
+    /// distinguishable.
     pub run_id: String,
     /// Node the run executed on.
     pub node: usize,
     /// duarouter seed — the run's source of randomization.
     pub seed: u64,
+    /// Scenario provenance: which point of which family generated this
+    /// run (None for classic fixed-scenario runs).
+    pub scenario: Option<ScenarioTag>,
     pub rows: Vec<ObsRow>,
     /// Totals for quick aggregation.
     pub total_flow: f32,
@@ -47,11 +54,25 @@ impl RunDataset {
             run_id: run_id.into(),
             node,
             seed,
+            scenario: None,
             rows: Vec::new(),
             total_flow: 0.0,
             total_merged: 0.0,
             total_spawned: 0,
         }
+    }
+
+    /// Attach scenario provenance, qualifying the run id with the
+    /// scenario id + sample index (`{job}[{i}]@{scenario}#{sample}`).
+    pub fn with_scenario(mut self, tag: ScenarioTag) -> Self {
+        self.run_id = format!("{}@{}#{}", self.run_id, tag.id, tag.sample_index);
+        self.scenario = Some(tag);
+        self
+    }
+
+    /// A generating parameter of this run, when scenario-tagged.
+    pub fn param(&self, name: &str) -> Option<&AxisValue> {
+        self.scenario.as_ref().and_then(|t| t.param(name))
     }
 
     pub fn push(&mut self, time_s: f32, obs: &StepObs) {
@@ -159,5 +180,28 @@ mod tests {
     fn bad_csv_rejected() {
         assert!(RunDataset::from_csv("x", 0, 0, "h\n1,2\n").is_err());
         assert!(RunDataset::from_csv("x", 0, 0, "h\na,b,c,d,e\n").is_err());
+    }
+
+    #[test]
+    fn scenario_tag_qualifies_run_id() {
+        use crate::scenario::{AxisValue, ScenarioId, ScenarioTag};
+        let tag = ScenarioTag {
+            id: ScenarioId::new("lane-drop"),
+            sample_index: 7,
+            params: vec![("demand_vph".into(), AxisValue::Num(1800.0))],
+        };
+        let d = RunDataset::new("e0[3]", 1, 42).with_scenario(tag.clone());
+        assert_eq!(d.run_id, "e0[3]@lane-drop#7");
+        assert_eq!(d.scenario, Some(tag));
+        assert_eq!(d.param("demand_vph"), Some(&AxisValue::Num(1800.0)));
+        assert_eq!(d.param("absent"), None);
+        // same job form, different point → distinguishable ids
+        let tag2 = ScenarioTag {
+            id: ScenarioId::new("lane-drop"),
+            sample_index: 8,
+            params: vec![],
+        };
+        let d2 = RunDataset::new("e0[3]", 1, 43).with_scenario(tag2);
+        assert_ne!(d.run_id, d2.run_id);
     }
 }

@@ -12,6 +12,7 @@ use crate::pbs::{
     ArrayRange, Job, JobId, PackingPolicy, ResourceRequest, Scheduler, SchedulerConfig,
     SchedulerStats,
 };
+use crate::scenario::{RunAssignment, ScenarioMatrix};
 use crate::simclock::{SimDuration, SimInstant};
 use crate::Result;
 
@@ -44,6 +45,10 @@ pub struct CampaignSpec {
     pub policy: PackingPolicy,
     /// Timestamps (minutes) at which to sample throughput.
     pub sample_minutes: Vec<u64>,
+    /// Scenario-matrix mode: fan sampled scenario points across the
+    /// campaign's nodes × slots (None = the classic single-scenario
+    /// campaign, where every run is the same world under a fresh seed).
+    pub matrix: Option<ScenarioMatrix>,
 }
 
 impl CampaignSpec {
@@ -60,6 +65,7 @@ impl CampaignSpec {
             seed: 2021,
             policy: PackingPolicy::FirstFit,
             sample_minutes: vec![30, 60, 90, 120, 240, 360, 720],
+            matrix: None,
         }
     }
 
@@ -78,6 +84,27 @@ impl CampaignSpec {
 
     pub fn epochs(&self) -> u64 {
         self.duration.as_millis() / self.walltime.as_millis()
+    }
+
+    /// Switch the campaign into scenario-matrix mode.
+    pub fn with_matrix(mut self, matrix: ScenarioMatrix) -> Self {
+        self.matrix = Some(matrix);
+        self
+    }
+
+    /// Total runs the campaign will launch over its lifetime.
+    pub fn total_runs(&self) -> u64 {
+        self.epochs() * self.instances_per_epoch() as u64
+    }
+
+    /// Scenario-matrix mode's per-slot fan-out: the assignment slot
+    /// `array_index` of epoch `epoch` materializes.  Pure — a node
+    /// needs only the campaign constants and its own coordinates, no
+    /// coordination (mirrors the per-run `--seed $RANDOM` mechanism).
+    pub fn scenario_assignment(&self, epoch: u64, array_index: u32) -> Option<RunAssignment> {
+        self.matrix.as_ref().map(|m| {
+            m.assignment(epoch * self.instances_per_epoch() as u64 + array_index as u64)
+        })
     }
 }
 
@@ -290,6 +317,53 @@ mod tests {
         assert_eq!(r.peak_occupancy, vec![1; 6]);
         // 6 instances per epoch, 4 epochs
         assert_eq!(r.total_completed(), 24);
+    }
+
+    #[test]
+    fn scenario_matrix_fans_evenly_without_coordination() {
+        use crate::scenario::{SamplerKind, ScenarioMatrix};
+        let spec = CampaignSpec::paper_cluster().with_matrix(ScenarioMatrix::new(
+            vec![
+                "highway-merge".into(),
+                "lane-drop".into(),
+                "ramp-weave".into(),
+                "ring-shockwave".into(),
+            ],
+            SamplerKind::Lhs { strata: 16 },
+            16,
+            2021,
+        ));
+        // one epoch = 48 instances → 12 per family, round-robin
+        let mut per_family = std::collections::BTreeMap::new();
+        for slot in 0..spec.instances_per_epoch() {
+            let a = spec.scenario_assignment(0, slot).unwrap();
+            *per_family.entry(a.family).or_insert(0u32) += 1;
+        }
+        assert_eq!(per_family.len(), 4);
+        assert!(per_family.values().all(|&c| c == 12));
+
+        // pure: any node recomputes its own assignment identically
+        assert_eq!(
+            spec.scenario_assignment(3, 17),
+            spec.scenario_assignment(3, 17)
+        );
+        // every run of the full 12-hour campaign gets a unique seed
+        let mut seeds: Vec<u64> = (0..spec.epochs())
+            .flat_map(|e| {
+                (0..spec.instances_per_epoch())
+                    .map(move |s| (e, s))
+            })
+            .map(|(e, s)| spec.scenario_assignment(e, s).unwrap().run_seed)
+            .collect();
+        assert_eq!(seeds.len() as u64, spec.total_runs());
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len() as u64, spec.total_runs());
+
+        // classic campaigns stay matrix-free
+        assert!(CampaignSpec::paper_cluster()
+            .scenario_assignment(0, 0)
+            .is_none());
     }
 
     #[test]

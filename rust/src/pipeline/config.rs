@@ -10,6 +10,7 @@
 use crate::cluster::ResourceDemand;
 use crate::pbs::script::PbsScript;
 use crate::pbs::{ArrayRange, PackingPolicy, ResourceRequest};
+use crate::scenario::{FamilyRegistry, SamplerKind, ScenarioMatrix};
 use crate::simclock::SimDuration;
 use crate::{Error, Result};
 
@@ -28,6 +29,13 @@ pub struct CampaignConfig {
     pub duration_hours: u64,
     pub seed: u64,
     pub policy: PackingPolicy,
+    /// Scenario-matrix mode: family ids to sweep (empty = classic
+    /// single-scenario campaign).
+    pub scenarios: Vec<String>,
+    /// Sampled points per family.
+    pub scenario_samples: usize,
+    /// Sampler name: `grid[:k]`, `uniform`, or `lhs[:n]`.
+    pub sampler: String,
 }
 
 impl Default for CampaignConfig {
@@ -43,6 +51,9 @@ impl Default for CampaignConfig {
             duration_hours: 12,
             seed: 2021,
             policy: PackingPolicy::FirstFit,
+            scenarios: Vec::new(),
+            scenario_samples: 16,
+            sampler: "lhs".into(),
         }
     }
 }
@@ -62,6 +73,13 @@ walltime_min = 15
 duration_hours = 12
 seed = 2021
 policy = first-fit
+
+# scenario-matrix mode — uncomment to sweep a scenario space across
+# the array instead of re-running one world (see EXPERIMENTS.md
+# §Scenario sweeps):
+# scenarios = highway-merge,lane-drop,ramp-weave,ring-shockwave
+# sampler = lhs
+# scenario_samples = 16
 "#
         .to_string()
     }
@@ -91,6 +109,15 @@ policy = first-fit
                 "walltime_min" => cfg.walltime_min = v.parse().map_err(|e| bad(&e))?,
                 "duration_hours" => cfg.duration_hours = v.parse().map_err(|e| bad(&e))?,
                 "seed" => cfg.seed = v.parse().map_err(|e| bad(&e))?,
+                "scenarios" => {
+                    cfg.scenarios = v
+                        .split(',')
+                        .map(|s| s.trim().to_string())
+                        .filter(|s| !s.is_empty())
+                        .collect()
+                }
+                "scenario_samples" => cfg.scenario_samples = v.parse().map_err(|e| bad(&e))?,
+                "sampler" => cfg.sampler = v.to_string(),
                 "policy" => {
                     cfg.policy = match v {
                         "first-fit" => PackingPolicy::FirstFit,
@@ -115,12 +142,64 @@ policy = first-fit
                 self.slots_per_node, self.ncpus_per_slot
             )));
         }
+        if !self.scenarios.is_empty() {
+            let registry = FamilyRegistry::builtin();
+            for id in &self.scenarios {
+                registry.get(id)?;
+            }
+            if self.scenario_samples == 0 {
+                return Err(Error::Config("scenario_samples must be > 0".into()));
+            }
+            let kind = self.sampler_kind()?;
+            // a grid sweep that enumerates fewer points than the lattice
+            // silently pins the trailing axes at their low endpoints —
+            // refuse the misconfiguration instead
+            if let SamplerKind::Grid { points_per_axis } = kind {
+                for id in &self.scenarios {
+                    let space = registry.get(id)?.space();
+                    let lattice =
+                        crate::scenario::GridSampler { points_per_axis }.total_points(&space);
+                    if (self.scenario_samples as u64) < lattice {
+                        return Err(Error::Config(format!(
+                            "grid sweep of '{id}' has {lattice} lattice points but \
+                             scenario_samples = {}; raise scenario_samples or shrink \
+                             the grid (sampler = grid:<k>)",
+                            self.scenario_samples
+                        )));
+                    }
+                }
+            }
+        }
         Ok(())
     }
 
-    /// Derive the campaign spec the scheduler consumes.
-    pub fn to_spec(&self) -> CampaignSpec {
-        CampaignSpec {
+    /// The parsed sampler selector (`lhs` defaults its strata to
+    /// `scenario_samples`).
+    pub fn sampler_kind(&self) -> Result<SamplerKind> {
+        SamplerKind::parse(&self.sampler, self.scenario_samples)
+    }
+
+    /// The scenario matrix this config describes, if any.
+    pub fn to_matrix(&self) -> Result<Option<ScenarioMatrix>> {
+        if self.scenarios.is_empty() {
+            return Ok(None);
+        }
+        Ok(Some(ScenarioMatrix::new(
+            self.scenarios.clone(),
+            self.sampler_kind()?,
+            self.scenario_samples,
+            self.seed,
+        )))
+    }
+
+    /// Derive the campaign spec the scheduler consumes.  Errors when
+    /// the scenario-matrix keys are inconsistent (programmatic configs
+    /// that skipped [`Self::validate`]) — a campaign must never
+    /// silently degrade from a scenario sweep to the classic
+    /// single-scenario mode.
+    pub fn to_spec(&self) -> Result<CampaignSpec> {
+        Ok(CampaignSpec {
+            matrix: self.to_matrix()?,
             nodes: self.nodes,
             slots_per_node: self.slots_per_node,
             chunk: ResourceDemand {
@@ -134,7 +213,7 @@ policy = first-fit
             policy: self.policy,
             seed: self.seed,
             ..CampaignSpec::paper_cluster()
-        }
+        })
     }
 
     /// Derive the PBS script (the artifact users used to hand-edit).
@@ -185,7 +264,7 @@ mod tests {
     #[test]
     fn spec_and_script_agree() {
         let cfg = CampaignConfig::default();
-        let spec = cfg.to_spec();
+        let spec = cfg.to_spec().unwrap();
         let script = cfg.to_pbs_script().unwrap();
         assert_eq!(spec.instances_per_epoch(), script.array.unwrap().len());
         assert_eq!(
@@ -201,7 +280,7 @@ mod tests {
     fn config_driven_campaign_runs() {
         let mut cfg = CampaignConfig::default();
         cfg.duration_hours = 1;
-        let r = run_cluster_campaign(&cfg.to_spec()).unwrap();
+        let r = run_cluster_campaign(&cfg.to_spec().unwrap()).unwrap();
         assert_eq!(r.total_completed(), 4 * 48);
     }
 
@@ -212,6 +291,44 @@ mod tests {
         assert!(CampaignConfig::parse("nodes 6").is_err());
         // oversubscription guard
         assert!(CampaignConfig::parse("slots_per_node = 16\nncpus_per_slot = 5").is_err());
+    }
+
+    #[test]
+    fn scenario_matrix_config_roundtrip() {
+        let cfg = CampaignConfig::parse(
+            "scenarios = lane-drop, ring-shockwave\nsampler = lhs\nscenario_samples = 8\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.scenarios, vec!["lane-drop", "ring-shockwave"]);
+        let m = cfg.to_matrix().unwrap().unwrap();
+        assert_eq!(m.samples_per_family, 8);
+        assert_eq!(m.total_points(), 16);
+        let spec = cfg.to_spec().unwrap();
+        assert!(spec.scenario_assignment(0, 0).is_some());
+        // classic configs stay matrix-free
+        assert!(CampaignConfig::default().to_matrix().unwrap().is_none());
+        assert!(CampaignConfig::default().to_spec().unwrap().matrix.is_none());
+    }
+
+    #[test]
+    fn unknown_scenario_family_rejected() {
+        assert!(CampaignConfig::parse("scenarios = warp-drive").is_err());
+        assert!(CampaignConfig::parse("scenarios = lane-drop\nsampler = sobol").is_err());
+        assert!(
+            CampaignConfig::parse("scenarios = lane-drop\nscenario_samples = 0").is_err()
+        );
+    }
+
+    #[test]
+    fn under_covering_grid_rejected() {
+        // lane-drop's grid:2 lattice is 2^7 = 128 points; 16 samples
+        // would silently pin the trailing axes at their low endpoints
+        assert!(CampaignConfig::parse("scenarios = lane-drop\nsampler = grid:2").is_err());
+        let ok = CampaignConfig::parse(
+            "scenarios = lane-drop\nsampler = grid:2\nscenario_samples = 128",
+        )
+        .unwrap();
+        assert_eq!(ok.to_matrix().unwrap().unwrap().total_points(), 128);
     }
 
     #[test]

@@ -12,6 +12,7 @@ use crate::container::{BuildHost, ExecEnv};
 use crate::display::DisplayRegistry;
 use crate::output::RunDataset;
 use crate::runtime::{EngineService, HloStepper};
+use crate::scenario::{PlannedRun, ScenarioRun};
 use crate::sumo::{duarouter, FlowFile, MergeScenario, NativeIdmStepper, SumoSim};
 use crate::traci::TraciServer;
 use crate::webots::{StopCondition, WebotsSim, World};
@@ -44,6 +45,38 @@ pub struct InstanceConfig {
     pub horizon_s: f32,
     /// Max steps — the in-process walltime guard.
     pub max_steps: u64,
+    /// Scenario-matrix provenance + compiled network (None = the
+    /// classic fixed merge world, whose network derives from
+    /// `scenario`).
+    pub scenario_run: Option<ScenarioRun>,
+}
+
+impl InstanceConfig {
+    /// Stand up an instance from a materialized scenario-matrix run:
+    /// the compiled geometry/flows/network, the assignment's duarouter
+    /// seed, and the provenance tag the dataset will carry.
+    pub fn from_planned(
+        run_id: impl Into<String>,
+        node: usize,
+        world: World,
+        planned: &PlannedRun,
+    ) -> InstanceConfig {
+        let horizon_s = planned.config.horizon_s;
+        // walltime guard sized from the scenario's own DT (plus slack)
+        let dt = planned.config.geometry.dt_s.max(1e-3);
+        InstanceConfig {
+            run_id: run_id.into(),
+            node,
+            world,
+            flows: planned.config.flows.clone(),
+            scenario: planned.config.geometry,
+            seed: planned.assignment.run_seed,
+            capacity: planned.config.capacity,
+            horizon_s,
+            max_steps: (horizon_s / dt).ceil() as u64 + 100,
+            scenario_run: Some(ScenarioRun::from(&planned.config)),
+        }
+    }
 }
 
 /// What one instance produced.
@@ -68,8 +101,12 @@ pub fn launch_instance(
     env.exec("xvfb-run", &["-a"])?;
     env.exec("webots", &["--batch"])?;
 
-    // (1) randomized routes
-    let net = cfg.scenario.network();
+    // (1) randomized routes — against the compiled scenario network
+    // when this is a scenario-matrix run
+    let net = match &cfg.scenario_run {
+        Some(sr) => sr.network.clone(),
+        None => cfg.scenario.network(),
+    };
     let routes = duarouter(&net, &cfg.flows, cfg.seed)?;
 
     // (2) headless display — MUST auto-probe for parallel instances
@@ -87,7 +124,18 @@ pub fn launch_instance(
             scenario: cfg.scenario,
             ..NativeIdmStepper::default()
         }),
-        PhysicsEngine::Hlo(service) => Box::new(HloStepper::new(service.clone(), cfg.capacity)?),
+        PhysicsEngine::Hlo(service) => {
+            // the AOT artifact bakes the default merge constants in —
+            // refuse geometries it was not compiled for
+            if cfg.scenario != MergeScenario::default() {
+                return Err(Error::Config(
+                    "AOT physics is compiled for the default merge geometry; \
+                     scenario-matrix runs need PhysicsEngine::Native"
+                        .into(),
+                ));
+            }
+            Box::new(HloStepper::new(service.clone(), cfg.capacity)?)
+        }
     };
     let sim = SumoSim::new(cfg.scenario, cfg.capacity, routes, stepper);
     let server = TraciServer::spawn(port, sim)?;
@@ -99,6 +147,10 @@ pub fn launch_instance(
     // (5) run — TraCI-batched between controller sampling points (§Perf)
     let _end = webots.run(cfg.max_steps)?;
     let mut dataset = RunDataset::new(cfg.run_id.clone(), cfg.node, cfg.seed);
+    if let Some(sr) = &cfg.scenario_run {
+        // provenance: qualified run id + the generating parameter vector
+        dataset = dataset.with_scenario(sr.tag.clone());
+    }
     let dt = webots.world_info.basic_time_step_ms as f32 / 1000.0;
     // iterate the history in place — cloning it doubled the per-run
     // memory traffic for long horizons
@@ -176,6 +228,7 @@ mod tests {
             capacity: 64,
             horizon_s: 20.0,
             max_steps: 1000,
+            scenario_run: None,
         }
     }
 
@@ -223,6 +276,39 @@ mod tests {
         assert_eq!(ports.len(), 8);
         // every run produced data with its own seed
         assert!(ok.iter().all(|r| !r.dataset.rows.is_empty()));
+    }
+
+    #[test]
+    fn scenario_matrix_instance_end_to_end() {
+        use crate::scenario::{FamilyRegistry, SamplerKind, ScenarioMatrix};
+        let matrix = ScenarioMatrix::new(
+            vec!["lane-drop".into()],
+            SamplerKind::Lhs { strata: 4 },
+            4,
+            77,
+        );
+        let planned = matrix.materialize(&FamilyRegistry::builtin(), 2).unwrap();
+        let world = sample_merge_world(free_base_port());
+        let mut cfg = InstanceConfig::from_planned("e0[2]", 1, world, &planned);
+        cfg.horizon_s = 20.0;
+        cfg.max_steps = 400;
+
+        let displays = DisplayRegistry::new();
+        let env = ExecEnv::new(
+            crate::container::build_webots_hpc_image(BuildHost::PersonalComputer).unwrap(),
+        );
+        let r = launch_instance(&cfg, &displays, &env, &PhysicsEngine::Native).unwrap();
+        // the dataset is self-describing: qualified id + parameter vector
+        let ds = &r.dataset;
+        assert_eq!(
+            ds.run_id,
+            format!("e0[2]@lane-drop#{}", planned.assignment.sample_index)
+        );
+        let tag = ds.scenario.as_ref().expect("scenario provenance");
+        assert_eq!(tag.id.as_str(), "lane-drop");
+        assert!(ds.param("demand_vph").is_some());
+        assert!(!ds.rows.is_empty());
+        assert!(ds.total_spawned > 0, "lane-drop traffic spawned");
     }
 
     #[test]

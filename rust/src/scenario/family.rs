@@ -1,0 +1,846 @@
+//! Scenario families: compiling sampled points into runnable configs.
+//!
+//! A [`ScenarioFamily`] owns a [`ScenarioSpace`] (what varies) and a
+//! `compile` step mapping any [`ScenarioPoint`] to a [`ScenarioConfig`]
+//! — the existing `(Network, Vec<FlowDef>, DriverParams)` config tuple
+//! plus the stepper geometry, so the compiled scenario runs unchanged
+//! through `SumoSim` with either `NativeIdmStepper` or
+//! `ReferenceIdmStepper`.
+//!
+//! Four families ship in [`FamilyRegistry::builtin`]:
+//!
+//! * `highway-merge` — the paper's ch. 5 on-ramp merge, parametrized,
+//! * `lane-drop` — a bottleneck where lane 0 ends at a taper; its
+//!   traffic must merge out before the drop (the merge-zone machinery
+//!   reused: mandatory lane change inside the taper, phantom wall at
+//!   the drop point),
+//! * `ramp-weave` — on-ramp plus downstream off-ramp around a shared
+//!   auxiliary lane; the off-ramp edge carries routing/validation while
+//!   retirement stays at the road end (documented approximation),
+//! * `ring-shockwave` — stop-and-go waves: a dense departure burst on a
+//!   closed ring (unrolled over a fixed lap count for the linear
+//!   stepper), low desired speeds, wide headway heterogeneity.
+//!
+//! Speed-limit axes reach the dynamics through per-flow `v0_scale`
+//! (desired speed = scale × the vtype's calibration); headway
+//! perturbation axes through `t_scale` — see `sumo::FlowDef`.
+
+use crate::sumo::state::DriverParams;
+use crate::sumo::{Edge, FlowDef, FlowFile, MergeScenario, Network, VehicleType};
+use crate::{Error, Result};
+
+use super::sampler::Sampler;
+use super::space::{Axis, ScenarioId, ScenarioPoint, ScenarioSpace, ScenarioTag};
+
+/// A compiled, runnable scenario: the config tuple the pipeline already
+/// consumes, plus provenance and sizing hints.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioConfig {
+    /// Which point generated this config (lands in `RunDataset`).
+    pub tag: ScenarioTag,
+    /// Stepper constants (road end, merge/mandatory-zone window, lane
+    /// count, DT) — consumed by `NativeIdmStepper`/`ReferenceIdmStepper`.
+    pub geometry: MergeScenario,
+    /// The `sumo.net.xml` side.
+    pub network: Network,
+    /// The `sumo.flow.xml` side (routes validated against `network`).
+    pub flows: FlowFile,
+    /// The perturbed human driver baseline this point encodes (the
+    /// per-flow scales carry it into `duarouter`).
+    pub driver: DriverParams,
+    /// Suggested traffic slot capacity (next AOT-style bucket above the
+    /// expected vehicle count).
+    pub capacity: usize,
+    /// Suggested simulated horizon [s].
+    pub horizon_s: f32,
+}
+
+/// What the launcher threads through an instance beyond the classic
+/// fields: provenance for the dataset and the compiled network for
+/// route generation.
+#[derive(Debug, Clone)]
+pub struct ScenarioRun {
+    pub tag: ScenarioTag,
+    pub network: Network,
+}
+
+impl From<&ScenarioConfig> for ScenarioRun {
+    fn from(c: &ScenarioConfig) -> Self {
+        ScenarioRun {
+            tag: c.tag.clone(),
+            network: c.network.clone(),
+        }
+    }
+}
+
+/// A parametric scenario family: a space plus its compiler.
+pub trait ScenarioFamily: Send + Sync {
+    fn id(&self) -> ScenarioId;
+
+    /// The family's parameter axes.
+    fn space(&self) -> ScenarioSpace;
+
+    /// Compile one sampled point into a runnable config.  Pure; must
+    /// succeed anywhere inside the space (extremes included —
+    /// `rust/tests/scenario_families.rs` holds it to that).
+    fn compile(&self, point: &ScenarioPoint) -> Result<ScenarioConfig>;
+}
+
+/// Registry of known families — the lookup the campaign matrix and the
+/// CLI resolve `ScenarioId`s through.
+pub struct FamilyRegistry {
+    families: Vec<Box<dyn ScenarioFamily>>,
+}
+
+impl Default for FamilyRegistry {
+    fn default() -> Self {
+        FamilyRegistry::new()
+    }
+}
+
+impl FamilyRegistry {
+    /// An empty registry (register your own families).
+    pub fn new() -> Self {
+        FamilyRegistry {
+            families: Vec::new(),
+        }
+    }
+
+    /// The four built-in families.
+    pub fn builtin() -> Self {
+        let mut r = FamilyRegistry::new();
+        r.register(Box::new(HighwayMergeFamily));
+        r.register(Box::new(LaneDropFamily));
+        r.register(Box::new(RampWeaveFamily));
+        r.register(Box::new(RingShockwaveFamily));
+        r
+    }
+
+    pub fn register(&mut self, family: Box<dyn ScenarioFamily>) {
+        self.families.push(family);
+    }
+
+    pub fn ids(&self) -> Vec<String> {
+        self.families.iter().map(|f| f.id().0).collect()
+    }
+
+    pub fn get(&self, id: &str) -> Result<&dyn ScenarioFamily> {
+        self.families
+            .iter()
+            .map(|f| f.as_ref())
+            .find(|f| f.id().as_str() == id)
+            .ok_or_else(|| {
+                Error::Config(format!(
+                    "unknown scenario family '{id}' (known: {})",
+                    self.ids().join(", ")
+                ))
+            })
+    }
+
+    /// Sample + compile in one step: the `(family, seed, index) →
+    /// runnable config` pure function PBS array nodes call.
+    pub fn materialize(
+        &self,
+        family: &str,
+        sampler: &dyn Sampler,
+        seed: u64,
+        index: u64,
+    ) -> Result<(ScenarioPoint, ScenarioConfig)> {
+        let fam = self.get(family)?;
+        let point = sampler.sample(&fam.space(), seed, index);
+        let config = fam.compile(&point)?;
+        Ok((point, config))
+    }
+}
+
+/// Demand/placement parameters of one flow to split by CAV penetration.
+struct FlowSpec<'a> {
+    id: &'a str,
+    route: &'a [String],
+    vph: f32,
+    depart_speed: f32,
+    depart_lane: u32,
+    depart_pos: f32,
+}
+
+/// Split `spec` into a human and a CAV flow by penetration, applying
+/// the scenario-level driver scales; near-zero flows are dropped.
+fn push_split(
+    out: &mut Vec<FlowDef>,
+    spec: FlowSpec<'_>,
+    cav_penetration: f32,
+    window: (f32, f32),
+    scales: (f32, f32),
+) {
+    let (v0_scale, t_scale) = scales;
+    let parts = [
+        (VehicleType::Human, 1.0 - cav_penetration, ""),
+        (VehicleType::Cav, cav_penetration, "_cav"),
+    ];
+    for (vtype, share, suffix) in parts {
+        let vph = spec.vph * share;
+        if vph < 1e-3 {
+            continue;
+        }
+        out.push(FlowDef {
+            id: format!("{}{suffix}", spec.id),
+            route: spec.route.to_vec(),
+            vehs_per_hour: vph,
+            depart_speed: spec.depart_speed,
+            depart_lane: spec.depart_lane,
+            depart_pos: spec.depart_pos,
+            vtype,
+            begin_s: window.0,
+            end_s: window.1,
+            v0_scale,
+            t_scale,
+        });
+    }
+}
+
+/// Next AOT-style bucket above the expected vehicle count (with slack
+/// for arrival bursts).
+fn bucket_capacity(expected_vehicles: f32) -> usize {
+    let need = expected_vehicles * 1.3 + 8.0;
+    for b in [16usize, 64, 256, 1024] {
+        if need <= b as f32 {
+            return b;
+        }
+    }
+    1024
+}
+
+/// The perturbed human driver baseline a point encodes.
+fn perturbed_driver(v0_scale: f32, t_scale: f32) -> DriverParams {
+    let base = DriverParams::default();
+    DriverParams {
+        v0: base.v0 * v0_scale,
+        t_headway: base.t_headway * t_scale,
+        ..base
+    }
+}
+
+fn route(ids: &[&str]) -> Vec<String> {
+    ids.iter().map(|s| s.to_string()).collect()
+}
+
+// ---------------------------------------------------------------------
+// highway-merge
+// ---------------------------------------------------------------------
+
+/// The paper's ch. 5 on-ramp merge, parametrized.
+pub struct HighwayMergeFamily;
+
+impl ScenarioFamily for HighwayMergeFamily {
+    fn id(&self) -> ScenarioId {
+        ScenarioId::new("highway-merge")
+    }
+
+    fn space(&self) -> ScenarioSpace {
+        ScenarioSpace::new(
+            "highway-merge",
+            vec![
+                Axis::continuous("demand_vph", 600.0, 2400.0),
+                Axis::continuous("ramp_vph", 120.0, 600.0),
+                Axis::continuous("cav_penetration", 0.0, 1.0),
+                Axis::integer("main_lanes", 1, 3),
+                Axis::continuous("speed_limit", 25.0, 35.0),
+                Axis::continuous("merge_len_m", 150.0, 300.0),
+                Axis::continuous("t_scale", 0.85, 1.15),
+            ],
+        )
+    }
+
+    fn compile(&self, point: &ScenarioPoint) -> Result<ScenarioConfig> {
+        let space = self.space();
+        let demand = point.num(&space, "demand_vph")? as f32;
+        let ramp_vph = point.num(&space, "ramp_vph")? as f32;
+        let p_cav = point.num(&space, "cav_penetration")? as f32;
+        let lanes = point.int(&space, "main_lanes")? as u32;
+        let speed = point.num(&space, "speed_limit")? as f32;
+        let merge_len = point.num(&space, "merge_len_m")? as f32;
+        let t_scale = point.num(&space, "t_scale")? as f32;
+        let v0_scale = speed / DriverParams::default().v0;
+
+        let geometry = MergeScenario {
+            road_end_m: 1000.0,
+            merge_start_m: 300.0,
+            merge_end_m: 300.0 + merge_len,
+            num_main_lanes: lanes,
+            dt_s: 0.1,
+        };
+        let network = geometry.network_with_speeds(speed, speed * 0.7);
+        let horizon_s = 120.0;
+
+        let main_route = route(&["main_in", "merge_zone", "main_out"]);
+        let ramp_route = route(&["ramp", "merge_zone", "main_out"]);
+        let mut flows = Vec::new();
+        for lane in 1..=lanes {
+            push_split(
+                &mut flows,
+                FlowSpec {
+                    id: &format!("main_l{lane}"),
+                    route: &main_route,
+                    vph: demand / lanes as f32,
+                    depart_speed: speed * 0.8,
+                    depart_lane: lane,
+                    depart_pos: 0.0,
+                },
+                p_cav,
+                (0.0, horizon_s),
+                (v0_scale, t_scale),
+            );
+        }
+        push_split(
+            &mut flows,
+            FlowSpec {
+                id: "ramp",
+                route: &ramp_route,
+                vph: ramp_vph,
+                depart_speed: 15.0,
+                depart_lane: 0,
+                depart_pos: 50.0,
+            },
+            p_cav,
+            (0.0, horizon_s),
+            (v0_scale, t_scale),
+        );
+
+        let flows = FlowFile { flows };
+        flows.validate(&network)?;
+        let capacity = bucket_capacity(flows.total_expected_vehicles());
+        Ok(ScenarioConfig {
+            tag: point.provenance(&space),
+            geometry,
+            network,
+            flows,
+            driver: perturbed_driver(v0_scale, t_scale),
+            capacity,
+            horizon_s,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// lane-drop
+// ---------------------------------------------------------------------
+
+/// A lane-drop bottleneck: lane 0 ends at `drop_pos_m`; its traffic
+/// must merge out inside the taper (mandatory-merge zone), with the
+/// phantom wall standing in for the physical end of the lane.
+pub struct LaneDropFamily;
+
+impl ScenarioFamily for LaneDropFamily {
+    fn id(&self) -> ScenarioId {
+        ScenarioId::new("lane-drop")
+    }
+
+    fn space(&self) -> ScenarioSpace {
+        ScenarioSpace::new(
+            "lane-drop",
+            vec![
+                Axis::continuous("demand_vph", 800.0, 3000.0),
+                Axis::integer("upstream_lanes", 2, 4),
+                Axis::continuous("drop_pos_m", 400.0, 700.0),
+                Axis::continuous("taper_len_m", 100.0, 250.0),
+                Axis::continuous("cav_penetration", 0.0, 1.0),
+                Axis::continuous("speed_limit", 25.0, 33.0),
+                Axis::continuous("t_scale", 0.85, 1.15),
+            ],
+        )
+    }
+
+    fn compile(&self, point: &ScenarioPoint) -> Result<ScenarioConfig> {
+        let space = self.space();
+        let demand = point.num(&space, "demand_vph")? as f32;
+        let upstream = point.int(&space, "upstream_lanes")? as u32;
+        let drop_pos = point.num(&space, "drop_pos_m")? as f32;
+        let taper = point.num(&space, "taper_len_m")? as f32;
+        let p_cav = point.num(&space, "cav_penetration")? as f32;
+        let speed = point.num(&space, "speed_limit")? as f32;
+        let t_scale = point.num(&space, "t_scale")? as f32;
+        let v0_scale = speed / DriverParams::default().v0;
+
+        let geometry = MergeScenario {
+            road_end_m: drop_pos + 300.0,
+            merge_start_m: drop_pos - taper,
+            merge_end_m: drop_pos,
+            num_main_lanes: upstream - 1,
+            dt_s: 0.1,
+        };
+        let network = Network {
+            edges: vec![
+                Edge {
+                    id: "approach".into(),
+                    from: "west".into(),
+                    to: "taper_a".into(),
+                    length_m: geometry.merge_start_m,
+                    num_lanes: upstream,
+                    speed_limit: speed,
+                },
+                Edge {
+                    id: "taper".into(),
+                    from: "taper_a".into(),
+                    to: "taper_b".into(),
+                    length_m: taper,
+                    num_lanes: upstream,
+                    speed_limit: speed,
+                },
+                Edge {
+                    id: "downstream".into(),
+                    from: "taper_b".into(),
+                    to: "east".into(),
+                    length_m: 300.0,
+                    num_lanes: upstream - 1,
+                    speed_limit: speed,
+                },
+            ],
+        };
+        let horizon_s = 120.0;
+        let full_route = route(&["approach", "taper", "downstream"]);
+
+        let mut flows = Vec::new();
+        let per_lane = demand / upstream as f32;
+        // lane 0 is the dropping lane — its flow is what the bottleneck
+        // squeezes out
+        push_split(
+            &mut flows,
+            FlowSpec {
+                id: "drop_lane",
+                route: &full_route,
+                vph: per_lane,
+                depart_speed: speed * 0.8,
+                depart_lane: 0,
+                depart_pos: 0.0,
+            },
+            p_cav,
+            (0.0, horizon_s),
+            (v0_scale, t_scale),
+        );
+        for lane in 1..upstream {
+            push_split(
+                &mut flows,
+                FlowSpec {
+                    id: &format!("main_l{lane}"),
+                    route: &full_route,
+                    vph: per_lane,
+                    depart_speed: speed * 0.8,
+                    depart_lane: lane,
+                    depart_pos: 0.0,
+                },
+                p_cav,
+                (0.0, horizon_s),
+                (v0_scale, t_scale),
+            );
+        }
+
+        let flows = FlowFile { flows };
+        flows.validate(&network)?;
+        let capacity = bucket_capacity(flows.total_expected_vehicles());
+        Ok(ScenarioConfig {
+            tag: point.provenance(&space),
+            geometry,
+            network,
+            flows,
+            driver: perturbed_driver(v0_scale, t_scale),
+            capacity,
+            horizon_s,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// ramp-weave
+// ---------------------------------------------------------------------
+
+/// On-ramp + downstream off-ramp around a shared auxiliary lane.  The
+/// on-ramp stream enters on the auxiliary lane and must merge before
+/// the weave ends; the off-ramp edge exists in the network graph (and
+/// is route-validated) while the stepper retires all traffic at the
+/// road end — the documented linear-dynamics approximation.
+pub struct RampWeaveFamily;
+
+impl ScenarioFamily for RampWeaveFamily {
+    fn id(&self) -> ScenarioId {
+        ScenarioId::new("ramp-weave")
+    }
+
+    fn space(&self) -> ScenarioSpace {
+        ScenarioSpace::new(
+            "ramp-weave",
+            vec![
+                Axis::continuous("main_vph", 800.0, 2400.0),
+                Axis::continuous("on_vph", 150.0, 600.0),
+                Axis::continuous("off_share", 0.0, 0.3),
+                Axis::integer("main_lanes", 2, 3),
+                Axis::continuous("weave_len_m", 150.0, 350.0),
+                Axis::continuous("cav_penetration", 0.0, 1.0),
+                Axis::continuous("speed_limit", 25.0, 35.0),
+                Axis::continuous("t_scale", 0.85, 1.15),
+            ],
+        )
+    }
+
+    fn compile(&self, point: &ScenarioPoint) -> Result<ScenarioConfig> {
+        let space = self.space();
+        let main_vph = point.num(&space, "main_vph")? as f32;
+        let on_vph = point.num(&space, "on_vph")? as f32;
+        let off_share = point.num(&space, "off_share")? as f32;
+        let lanes = point.int(&space, "main_lanes")? as u32;
+        let weave_len = point.num(&space, "weave_len_m")? as f32;
+        let p_cav = point.num(&space, "cav_penetration")? as f32;
+        let speed = point.num(&space, "speed_limit")? as f32;
+        let t_scale = point.num(&space, "t_scale")? as f32;
+        let v0_scale = speed / DriverParams::default().v0;
+
+        let geometry = MergeScenario {
+            road_end_m: 1000.0,
+            merge_start_m: 300.0,
+            merge_end_m: 300.0 + weave_len,
+            num_main_lanes: lanes,
+            dt_s: 0.1,
+        };
+        let network = Network {
+            edges: vec![
+                Edge {
+                    id: "main_in".into(),
+                    from: "west".into(),
+                    to: "weave_a".into(),
+                    length_m: 300.0,
+                    num_lanes: lanes,
+                    speed_limit: speed,
+                },
+                Edge {
+                    id: "weave".into(),
+                    from: "weave_a".into(),
+                    to: "weave_b".into(),
+                    length_m: weave_len,
+                    num_lanes: lanes + 1, // + auxiliary lane
+                    speed_limit: speed,
+                },
+                Edge {
+                    id: "main_out".into(),
+                    from: "weave_b".into(),
+                    to: "east".into(),
+                    length_m: 1000.0 - (300.0 + weave_len),
+                    num_lanes: lanes,
+                    speed_limit: speed,
+                },
+                Edge {
+                    id: "on_ramp".into(),
+                    from: "on_start".into(),
+                    to: "weave_a".into(),
+                    length_m: 300.0,
+                    num_lanes: 1,
+                    speed_limit: speed * 0.7,
+                },
+                Edge {
+                    id: "off_ramp".into(),
+                    from: "weave_b".into(),
+                    to: "off_end".into(),
+                    length_m: 150.0,
+                    num_lanes: 1,
+                    speed_limit: speed * 0.7,
+                },
+            ],
+        };
+        let horizon_s = 120.0;
+        let through_route = route(&["main_in", "weave", "main_out"]);
+        let on_route = route(&["on_ramp", "weave", "main_out"]);
+        let off_route = route(&["main_in", "weave", "off_ramp"]);
+
+        let mut flows = Vec::new();
+        let through_vph = main_vph * (1.0 - off_share);
+        for lane in 1..=lanes {
+            push_split(
+                &mut flows,
+                FlowSpec {
+                    id: &format!("through_l{lane}"),
+                    route: &through_route,
+                    vph: through_vph / lanes as f32,
+                    depart_speed: speed * 0.8,
+                    depart_lane: lane,
+                    depart_pos: 0.0,
+                },
+                p_cav,
+                (0.0, horizon_s),
+                (v0_scale, t_scale),
+            );
+        }
+        // exiting traffic rides lane 1 toward the off-ramp
+        push_split(
+            &mut flows,
+            FlowSpec {
+                id: "off",
+                route: &off_route,
+                vph: main_vph * off_share,
+                depart_speed: speed * 0.8,
+                depart_lane: 1,
+                depart_pos: 0.0,
+            },
+            p_cav,
+            (0.0, horizon_s),
+            (v0_scale, t_scale),
+        );
+        push_split(
+            &mut flows,
+            FlowSpec {
+                id: "on",
+                route: &on_route,
+                vph: on_vph,
+                depart_speed: 15.0,
+                depart_lane: 0,
+                depart_pos: 50.0,
+            },
+            p_cav,
+            (0.0, horizon_s),
+            (v0_scale, t_scale),
+        );
+
+        let flows = FlowFile { flows };
+        flows.validate(&network)?;
+        let capacity = bucket_capacity(flows.total_expected_vehicles());
+        Ok(ScenarioConfig {
+            tag: point.provenance(&space),
+            geometry,
+            network,
+            flows,
+            driver: perturbed_driver(v0_scale, t_scale),
+            capacity,
+            horizon_s,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// ring-shockwave
+// ---------------------------------------------------------------------
+
+/// Stop-and-go shockwaves: a dense departure burst on a closed ring
+/// (modeled as the ring unrolled over [`RingShockwaveFamily::LAPS`]
+/// laps, since the steppers integrate a linear road), low desired
+/// speeds and wide headway heterogeneity — the classic instability
+/// setup.  No lane 0 is used, so the merge wall is inert.
+pub struct RingShockwaveFamily;
+
+impl RingShockwaveFamily {
+    /// Laps the ring is unrolled over.
+    pub const LAPS: f32 = 3.0;
+    /// Departure burst window [s] that packs the ring.
+    pub const BURST_S: f32 = 30.0;
+}
+
+impl ScenarioFamily for RingShockwaveFamily {
+    fn id(&self) -> ScenarioId {
+        ScenarioId::new("ring-shockwave")
+    }
+
+    fn space(&self) -> ScenarioSpace {
+        ScenarioSpace::new(
+            "ring-shockwave",
+            vec![
+                Axis::continuous("circumference_m", 400.0, 1200.0),
+                Axis::integer("lanes", 1, 2),
+                Axis::continuous("density_veh_km", 20.0, 60.0),
+                Axis::continuous("speed_limit", 18.0, 30.0),
+                Axis::continuous("cav_penetration", 0.0, 1.0),
+                Axis::continuous("t_scale", 0.9, 1.3),
+            ],
+        )
+    }
+
+    fn compile(&self, point: &ScenarioPoint) -> Result<ScenarioConfig> {
+        let space = self.space();
+        let circ = point.num(&space, "circumference_m")? as f32;
+        let lanes = point.int(&space, "lanes")? as u32;
+        let density = point.num(&space, "density_veh_km")? as f32;
+        let speed = point.num(&space, "speed_limit")? as f32;
+        let p_cav = point.num(&space, "cav_penetration")? as f32;
+        let t_scale = point.num(&space, "t_scale")? as f32;
+        let v0_scale = speed / DriverParams::default().v0;
+
+        let geometry = MergeScenario {
+            road_end_m: circ * Self::LAPS,
+            // no mandatory-merge zone and no lane 0 → the wall is inert
+            merge_start_m: 0.0,
+            merge_end_m: 0.0,
+            num_main_lanes: lanes,
+            dt_s: 0.1,
+        };
+        let arc = circ / 4.0;
+        let network = Network {
+            edges: vec![
+                Edge {
+                    id: "ring_n".into(),
+                    from: "n0".into(),
+                    to: "n1".into(),
+                    length_m: arc,
+                    num_lanes: lanes,
+                    speed_limit: speed,
+                },
+                Edge {
+                    id: "ring_e".into(),
+                    from: "n1".into(),
+                    to: "n2".into(),
+                    length_m: arc,
+                    num_lanes: lanes,
+                    speed_limit: speed,
+                },
+                Edge {
+                    id: "ring_s".into(),
+                    from: "n2".into(),
+                    to: "n3".into(),
+                    length_m: arc,
+                    num_lanes: lanes,
+                    speed_limit: speed,
+                },
+                Edge {
+                    id: "ring_w".into(),
+                    from: "n3".into(),
+                    to: "n0".into(), // closes the loop
+                    length_m: arc,
+                    num_lanes: lanes,
+                    speed_limit: speed,
+                },
+            ],
+        };
+        let horizon_s = 180.0;
+        let lap_route = route(&["ring_n", "ring_e", "ring_s", "ring_w"]);
+
+        // pack `density × circ` vehicles per lane inside the burst window
+        let veh_per_lane = density * circ / 1000.0;
+        let burst_vph = veh_per_lane * 3600.0 / Self::BURST_S;
+        let mut flows = Vec::new();
+        for lane in 1..=lanes {
+            push_split(
+                &mut flows,
+                FlowSpec {
+                    id: &format!("ring_l{lane}"),
+                    route: &lap_route,
+                    vph: burst_vph,
+                    depart_speed: 5.0,
+                    depart_lane: lane,
+                    depart_pos: 0.0,
+                },
+                p_cav,
+                (0.0, Self::BURST_S),
+                (v0_scale, t_scale),
+            );
+        }
+
+        let flows = FlowFile { flows };
+        flows.validate(&network)?;
+        let capacity = bucket_capacity(flows.total_expected_vehicles());
+        Ok(ScenarioConfig {
+            tag: point.provenance(&space),
+            geometry,
+            network,
+            flows,
+            driver: perturbed_driver(v0_scale, t_scale),
+            capacity,
+            horizon_s,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::sampler::UniformSampler;
+
+    #[test]
+    fn registry_resolves_builtins() {
+        let r = FamilyRegistry::builtin();
+        assert_eq!(
+            r.ids(),
+            vec!["highway-merge", "lane-drop", "ramp-weave", "ring-shockwave"]
+        );
+        assert!(r.get("lane-drop").is_ok());
+        assert!(r.get("nope").is_err());
+    }
+
+    #[test]
+    fn materialize_is_deterministic() {
+        let r = FamilyRegistry::builtin();
+        let s = UniformSampler;
+        let (p1, c1) = r.materialize("ring-shockwave", &s, 11, 3).unwrap();
+        let (p2, c2) = r.materialize("ring-shockwave", &s, 11, 3).unwrap();
+        assert_eq!(p1, p2);
+        assert_eq!(c1, c2);
+        let (p3, _) = r.materialize("ring-shockwave", &s, 12, 3).unwrap();
+        assert_ne!(p1.values, p3.values);
+    }
+
+    #[test]
+    fn compiled_config_is_internally_consistent() {
+        let r = FamilyRegistry::builtin();
+        for id in r.ids() {
+            let (point, cfg) = r.materialize(&id, &UniformSampler, 5, 0).unwrap();
+            assert_eq!(cfg.tag.id.as_str(), id);
+            assert_eq!(cfg.tag.sample_index, point.index);
+            assert!(cfg.geometry.num_main_lanes >= 1, "{id}");
+            assert!(cfg.capacity >= 16, "{id}");
+            assert!(cfg.horizon_s > 0.0, "{id}");
+            assert!(cfg.flows.total_expected_vehicles() > 0.0, "{id}");
+            cfg.flows.validate(&cfg.network).unwrap();
+            // cfg.driver is the summary form of the per-flow scales:
+            // every human flow's base params must equal it exactly
+            for flow in &cfg.flows.flows {
+                if flow.vtype == VehicleType::Human {
+                    assert_eq!(flow.base_params(), cfg.driver, "{id}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cav_penetration_splits_flows() {
+        let mut out = Vec::new();
+        let r = route(&["a"]);
+        push_split(
+            &mut out,
+            FlowSpec {
+                id: "f",
+                route: &r,
+                vph: 1000.0,
+                depart_speed: 20.0,
+                depart_lane: 1,
+                depart_pos: 0.0,
+            },
+            0.25,
+            (0.0, 60.0),
+            (1.0, 1.0),
+        );
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].vtype, VehicleType::Human);
+        assert!((out[0].vehs_per_hour - 750.0).abs() < 1e-3);
+        assert_eq!(out[1].vtype, VehicleType::Cav);
+        assert!((out[1].vehs_per_hour - 250.0).abs() < 1e-3);
+        // pure extremes collapse to one flow
+        let mut lone = Vec::new();
+        push_split(
+            &mut lone,
+            FlowSpec {
+                id: "f",
+                route: &r,
+                vph: 1000.0,
+                depart_speed: 20.0,
+                depart_lane: 1,
+                depart_pos: 0.0,
+            },
+            0.0,
+            (0.0, 60.0),
+            (1.0, 1.0),
+        );
+        assert_eq!(lone.len(), 1);
+        assert_eq!(lone[0].vtype, VehicleType::Human);
+    }
+
+    #[test]
+    fn bucket_capacity_steps() {
+        assert_eq!(bucket_capacity(0.0), 16);
+        assert_eq!(bucket_capacity(40.0), 64);
+        assert_eq!(bucket_capacity(150.0), 256);
+        assert_eq!(bucket_capacity(5000.0), 1024);
+    }
+}

@@ -1,0 +1,138 @@
+//! The `scenarios` manifest: a machine-readable (`util::Json`)
+//! description of a campaign's scenario matrix — families, axes,
+//! sampler, and every sampled point with its parameter vector.
+//!
+//! The manifest is the dataset's codebook: dropped next to the
+//! aggregated output, it lets downstream ML consumers decode the
+//! parameter columns of every row without the generating binary
+//! (`CampaignDataset::to_ml_csv` writes the rows; this writes the
+//! schema).  Round-trips through [`Json::parse`].
+
+use crate::util::Json;
+use crate::Result;
+
+use super::family::FamilyRegistry;
+use super::matrix::ScenarioMatrix;
+use super::space::{Axis, AxisKind, AxisValue};
+
+fn axis_value_json(v: &AxisValue) -> Json {
+    match v {
+        AxisValue::Num(n) => Json::num(*n),
+        AxisValue::Int(i) => Json::num(*i as f64),
+        AxisValue::Tag(t) => Json::str(t.clone()),
+    }
+}
+
+fn axis_json(axis: &Axis) -> Json {
+    match &axis.kind {
+        AxisKind::Continuous { lo, hi } => Json::obj(vec![
+            ("name", Json::str(axis.name.clone())),
+            ("kind", Json::str("continuous")),
+            ("lo", Json::num(*lo)),
+            ("hi", Json::num(*hi)),
+        ]),
+        AxisKind::Integer { lo, hi } => Json::obj(vec![
+            ("name", Json::str(axis.name.clone())),
+            ("kind", Json::str("integer")),
+            ("lo", Json::num(*lo as f64)),
+            ("hi", Json::num(*hi as f64)),
+        ]),
+        AxisKind::Choice { options } => Json::obj(vec![
+            ("name", Json::str(axis.name.clone())),
+            ("kind", Json::str("choice")),
+            (
+                "options",
+                Json::arr(options.iter().map(|o| Json::str(o.clone())).collect()),
+            ),
+        ]),
+    }
+}
+
+/// Build the scenarios manifest for `matrix`, enumerating every
+/// `(family, sample index)` cell with the exact parameter vector the
+/// samplers reproduce on the nodes.
+pub fn scenarios_manifest(registry: &FamilyRegistry, matrix: &ScenarioMatrix) -> Result<Json> {
+    let mut families = Vec::new();
+    for id in &matrix.families {
+        let family = registry.get(id)?;
+        let space = family.space();
+        let axes: Vec<Json> = space.axes.iter().map(axis_json).collect();
+        let mut points = Vec::new();
+        for index in 0..matrix.samples_per_family as u64 {
+            let point = matrix.sampler.sample(&space, matrix.seed, index);
+            let params: Vec<(String, Json)> = space
+                .axes
+                .iter()
+                .zip(point.values.iter())
+                .map(|(a, v)| (a.name.clone(), axis_value_json(v)))
+                .collect();
+            points.push(Json::obj(vec![
+                ("index", Json::num(index as f64)),
+                ("params", Json::obj(params)),
+            ]));
+        }
+        families.push(Json::obj(vec![
+            ("id", Json::str(id.clone())),
+            ("axes", Json::arr(axes)),
+            ("points", Json::arr(points)),
+        ]));
+    }
+    Ok(Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("seed", Json::num(matrix.seed as f64)),
+        ("sampler", Json::str(matrix.sampler.name())),
+        (
+            "samples_per_family",
+            Json::num(matrix.samples_per_family as f64),
+        ),
+        ("families", Json::arr(families)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::sampler::SamplerKind;
+
+    fn matrix() -> ScenarioMatrix {
+        ScenarioMatrix::new(
+            vec!["lane-drop".into(), "ring-shockwave".into()],
+            SamplerKind::Lhs { strata: 3 },
+            3,
+            7,
+        )
+    }
+
+    #[test]
+    fn manifest_round_trips_and_describes_points() {
+        let m = matrix();
+        let j = scenarios_manifest(&FamilyRegistry::builtin(), &m).unwrap();
+        let text = j.to_pretty_string();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+
+        assert_eq!(j.get("sampler").unwrap().as_str().unwrap(), "latin-hypercube");
+        let fams = j.get("families").unwrap().as_arr().unwrap();
+        assert_eq!(fams.len(), 2);
+        let points = fams[0].get("points").unwrap().as_arr().unwrap();
+        assert_eq!(points.len(), 3);
+        // manifest params match what the node-side sampler reproduces
+        let registry = FamilyRegistry::builtin();
+        let space = registry.get("lane-drop").unwrap().space();
+        let p1 = m.sampler.sample(&space, m.seed, 1);
+        let demand = points[1]
+            .get("params")
+            .unwrap()
+            .get("demand_vph")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert_eq!(demand, p1.num(&space, "demand_vph").unwrap());
+    }
+
+    #[test]
+    fn unknown_family_fails() {
+        let mut m = matrix();
+        m.families.push("warp".into());
+        assert!(scenarios_manifest(&FamilyRegistry::builtin(), &m).is_err());
+    }
+}

@@ -1,0 +1,181 @@
+//! The scenario matrix: fanning sampled points across a campaign's
+//! nodes × slots.
+//!
+//! A [`ScenarioMatrix`] turns "one experiment, many seeds" into "a
+//! scenario space, many points": given only the campaign seed and a
+//! global run index (epoch × instances-per-epoch + array index), any
+//! node computes its own `(family, sample index, run seed)` assignment
+//! — [`ScenarioMatrix::assignment`] is pure, so a PBS array needs no
+//! coordination, exactly like the per-run `duarouter --seed $RANDOM` it
+//! generalizes.
+//!
+//! Fan-out order is family-major round-robin: consecutive run indices
+//! cycle through the families, then advance the sample index, so every
+//! epoch of a campaign spreads evenly over the matrix.  Campaigns
+//! longer than `families × samples_per_family` wrap around the same
+//! points with fresh (still unique) per-run duarouter seeds — more
+//! trajectories per point, the paper's §1.2 randomization axis on top
+//! of the scenario axis.
+
+use crate::Result;
+
+use super::family::FamilyRegistry;
+use super::sampler::SamplerKind;
+use super::space::ScenarioPoint;
+use super::ScenarioConfig;
+
+/// Odd multiplier making `run_index → run_seed` injective.
+const SEED_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// A campaign-wide scenario sweep: which families, how they are
+/// sampled, and how many points per family.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioMatrix {
+    /// Family ids, resolved through a [`FamilyRegistry`].
+    pub families: Vec<String>,
+    pub sampler: SamplerKind,
+    pub samples_per_family: usize,
+    /// Matrix seed: drives the samplers and derives per-run seeds.
+    pub seed: u64,
+}
+
+/// One run's slice of the matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunAssignment {
+    pub family: String,
+    /// Sample index into the family's space.
+    pub sample_index: u64,
+    /// Per-run duarouter seed — unique per run index even when the
+    /// matrix wraps.
+    pub run_seed: u64,
+}
+
+/// A fully materialized run: assignment + sampled point + compiled
+/// config, ready to become an `InstanceConfig`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlannedRun {
+    pub assignment: RunAssignment,
+    pub point: ScenarioPoint,
+    pub config: ScenarioConfig,
+}
+
+impl ScenarioMatrix {
+    pub fn new(
+        families: Vec<String>,
+        sampler: SamplerKind,
+        samples_per_family: usize,
+        seed: u64,
+    ) -> Self {
+        debug_assert!(!families.is_empty(), "scenario matrix needs >= 1 family");
+        ScenarioMatrix {
+            families,
+            sampler,
+            samples_per_family: samples_per_family.max(1),
+            seed,
+        }
+    }
+
+    /// Distinct (family, sample) cells in the matrix.
+    pub fn total_points(&self) -> u64 {
+        self.families.len() as u64 * self.samples_per_family.max(1) as u64
+    }
+
+    /// Pure: global run index → this run's matrix cell + seed.  Any
+    /// node evaluates it locally from campaign constants.
+    ///
+    /// Panics on an empty `families` list (checked in [`Self::new`],
+    /// but `families` is a public field).
+    pub fn assignment(&self, run_index: u64) -> RunAssignment {
+        assert!(
+            !self.families.is_empty(),
+            "scenario matrix has no families to assign from"
+        );
+        let nf = self.families.len() as u64;
+        let family = self.families[(run_index % nf) as usize].clone();
+        let sample_index = (run_index / nf) % self.samples_per_family.max(1) as u64;
+        RunAssignment {
+            family,
+            sample_index,
+            run_seed: self.seed ^ run_index.wrapping_mul(SEED_MIX),
+        }
+    }
+
+    /// Assignment + sample + compile in one call — what a node runs to
+    /// stand up its instance.
+    pub fn materialize(&self, registry: &FamilyRegistry, run_index: u64) -> Result<PlannedRun> {
+        let assignment = self.assignment(run_index);
+        let family = registry.get(&assignment.family)?;
+        let point = self
+            .sampler
+            .sample(&family.space(), self.seed, assignment.sample_index);
+        let config = family.compile(&point)?;
+        Ok(PlannedRun {
+            assignment,
+            point,
+            config,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn matrix() -> ScenarioMatrix {
+        ScenarioMatrix::new(
+            vec![
+                "highway-merge".into(),
+                "lane-drop".into(),
+                "ring-shockwave".into(),
+            ],
+            SamplerKind::Lhs { strata: 4 },
+            4,
+            2021,
+        )
+    }
+
+    #[test]
+    fn round_robin_over_families() {
+        let m = matrix();
+        assert_eq!(m.total_points(), 12);
+        assert_eq!(m.assignment(0).family, "highway-merge");
+        assert_eq!(m.assignment(1).family, "lane-drop");
+        assert_eq!(m.assignment(2).family, "ring-shockwave");
+        assert_eq!(m.assignment(3).family, "highway-merge");
+        assert_eq!(m.assignment(0).sample_index, 0);
+        assert_eq!(m.assignment(3).sample_index, 1);
+        // wraps back onto the first cell with a fresh seed
+        let a0 = m.assignment(0);
+        let a12 = m.assignment(12);
+        assert_eq!(a12.family, a0.family);
+        assert_eq!(a12.sample_index, a0.sample_index);
+        assert_ne!(a12.run_seed, a0.run_seed);
+    }
+
+    #[test]
+    fn run_seeds_are_unique() {
+        let m = matrix();
+        let mut seeds: Vec<u64> = (0..2304).map(|i| m.assignment(i).run_seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 2304);
+    }
+
+    #[test]
+    fn materialize_is_pure() {
+        let m = matrix();
+        let r = FamilyRegistry::builtin();
+        let a = m.materialize(&r, 7).unwrap();
+        let b = m.materialize(&r, 7).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.point.index, a.assignment.sample_index);
+        assert_eq!(a.config.tag.id.as_str(), a.assignment.family);
+    }
+
+    #[test]
+    fn unknown_family_is_rejected() {
+        let mut m = matrix();
+        m.families = vec!["warp-drive".into()];
+        assert!(m.materialize(&FamilyRegistry::builtin(), 0).is_err());
+    }
+}

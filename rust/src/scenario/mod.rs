@@ -1,0 +1,41 @@
+//! Scenario generation: parametric scenario spaces, seeded samplers,
+//! and campaign-wide sweeps.
+//!
+//! The paper's pipeline produces "aggregated output datasets from
+//! thousands of simulation runs" (§1, §5) — but its thousand runs all
+//! explore the *same* highway-merge world under different duarouter
+//! seeds.  This subsystem adds the missing axis: scenario diversity.
+//!
+//! * [`space`] — [`ScenarioSpace`]: named parameter axes (demand, CAV
+//!   penetration, geometry, lane count, speed limit, driver-parameter
+//!   perturbations) with ranges/choices, and the sampled
+//!   [`ScenarioPoint`]s that index into them,
+//! * [`sampler`] — deterministic seeded samplers behind the [`Sampler`]
+//!   trait (grid, uniform-random, Latin-hypercube); `(space, seed,
+//!   index) → point` is a **pure function**, so every node of a PBS
+//!   array materializes its own point with no coordination,
+//! * [`family`] — the [`ScenarioFamily`] registry compiling points into
+//!   the existing `(Network, Vec<FlowDef>, DriverParams)` config tuple;
+//!   four built-ins: `highway-merge`, `lane-drop`, `ramp-weave`,
+//!   `ring-shockwave`,
+//! * [`matrix`] — [`ScenarioMatrix`]: fanning `families ×
+//!   samples_per_family` points across a campaign's nodes × slots
+//!   (`CampaignSpec::scenario_assignment`),
+//! * [`manifest`] — the `scenarios` manifest (`util::Json`): the
+//!   dataset's codebook, pairing `CampaignDataset::to_ml_csv`'s
+//!   parameter columns with their generating axes.
+
+pub mod family;
+pub mod manifest;
+pub mod matrix;
+pub mod sampler;
+pub mod space;
+
+pub use family::{
+    FamilyRegistry, HighwayMergeFamily, LaneDropFamily, RampWeaveFamily, RingShockwaveFamily,
+    ScenarioConfig, ScenarioFamily, ScenarioRun,
+};
+pub use manifest::scenarios_manifest;
+pub use matrix::{PlannedRun, RunAssignment, ScenarioMatrix};
+pub use sampler::{GridSampler, LatinHypercubeSampler, Sampler, SamplerKind, UniformSampler};
+pub use space::{Axis, AxisKind, AxisValue, ScenarioId, ScenarioPoint, ScenarioSpace, ScenarioTag};

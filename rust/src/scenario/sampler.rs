@@ -1,0 +1,332 @@
+//! Deterministic seeded samplers over a [`ScenarioSpace`].
+//!
+//! The contract every implementation honors: **`(space, seed, index) →
+//! point` is a pure function.**  No sampler keeps state between calls,
+//! so a PBS array job can hand each node nothing but the campaign seed
+//! and its own array index and every node materializes exactly the
+//! point the plan assigned it — no rendezvous, no shared files
+//! (property-tested in `rust/tests/scenario_props.rs`).
+//!
+//! Three samplers ship:
+//!
+//! * [`GridSampler`] — a full-factorial lattice in mixed-radix index
+//!   order (first axis varies fastest); exhaustive but exponential in
+//!   the axis count,
+//! * [`UniformSampler`] — independent uniform draws per axis from a
+//!   per-`(index, axis)` substream,
+//! * [`LatinHypercubeSampler`] — `n` stratified samples per axis with a
+//!   seeded per-axis permutation: across indices `0..n` every stratum
+//!   of every continuous axis is covered exactly once.
+
+use crate::util::Rng64;
+
+use super::space::{ScenarioPoint, ScenarioSpace};
+
+/// Derive an independent RNG stream for lane `(a, b)` of `seed` — pure.
+/// SplitMix64's output mix decorrelates the neighboring lane seeds.
+fn stream(seed: u64, a: u64, b: u64) -> Rng64 {
+    Rng64::seed_from_u64(
+        seed ^ a.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ b.wrapping_mul(0xC2B2_AE3D_27D4_EB4F),
+    )
+}
+
+/// A deterministic seeded sampler: `(space, seed, index) → point`,
+/// pure per the module contract.
+pub trait Sampler: Send + Sync {
+    fn sample(&self, space: &ScenarioSpace, seed: u64, index: u64) -> ScenarioPoint;
+
+    /// Sampler label for manifests/logs.
+    fn name(&self) -> &'static str;
+}
+
+/// Full-factorial lattice.  `points_per_axis` positions on continuous
+/// axes (endpoints inclusive); integer axes enumerate their range (or
+/// `points_per_axis` evenly spaced values when the range is larger);
+/// choice axes enumerate their options.  The index walks the lattice in
+/// mixed radix, first axis fastest, wrapping modulo the lattice size.
+/// Ignores `seed` (a grid is already fully determined).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GridSampler {
+    pub points_per_axis: usize,
+}
+
+impl GridSampler {
+    /// Lattice size for `space`.
+    pub fn total_points(&self, space: &ScenarioSpace) -> u64 {
+        space
+            .axes
+            .iter()
+            .map(|a| a.grid_cardinality(self.points_per_axis) as u64)
+            .product::<u64>()
+            .max(1)
+    }
+}
+
+impl Sampler for GridSampler {
+    fn sample(&self, space: &ScenarioSpace, seed: u64, index: u64) -> ScenarioPoint {
+        let mut rem = index % self.total_points(space);
+        let values = space
+            .axes
+            .iter()
+            .map(|ax| {
+                let m = ax.grid_cardinality(self.points_per_axis) as u64;
+                let k = rem % m;
+                rem /= m;
+                ax.grid_value(k as usize, m as usize)
+            })
+            .collect();
+        ScenarioPoint {
+            family: space.family.clone(),
+            index,
+            seed,
+            values,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "grid"
+    }
+}
+
+/// Independent uniform draws, one substream per `(index, axis)` so the
+/// sampled value of an axis does not shift when other axes are added.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct UniformSampler;
+
+impl Sampler for UniformSampler {
+    fn sample(&self, space: &ScenarioSpace, seed: u64, index: u64) -> ScenarioPoint {
+        let values = space
+            .axes
+            .iter()
+            .enumerate()
+            .map(|(ai, ax)| {
+                let mut rng = stream(seed, index, ai as u64);
+                ax.value_at(rng.gen_f64())
+            })
+            .collect();
+        ScenarioPoint {
+            family: space.family.clone(),
+            index,
+            seed,
+            values,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+}
+
+/// Latin-hypercube sampling with `strata` samples per axis.
+///
+/// Per axis, a seeded Fisher–Yates permutation of the strata assigns
+/// index `i` (taken modulo `strata`) its stratum; the point jitters
+/// uniformly inside it.  Every node recomputes the (deterministic)
+/// permutation locally — O(strata) work, no coordination.  Indices
+/// beyond `strata` revisit strata with fresh per-index jitter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LatinHypercubeSampler {
+    pub strata: usize,
+}
+
+/// Salt distinguishing the permutation stream from the jitter streams.
+const LHS_PERM_SALT: u64 = 0x5CE2_AA2D_0000_0001;
+
+impl LatinHypercubeSampler {
+    /// The stratum axis `axis` assigns to sample `i` — i.e. `perm[i]`
+    /// of the seeded per-axis permutation.
+    fn stratum_of(&self, seed: u64, axis: u64, i: u64) -> u64 {
+        let n = self.strata.max(1) as u64;
+        let mut perm: Vec<u64> = (0..n).collect();
+        let mut rng = stream(seed, LHS_PERM_SALT, axis);
+        for j in (1..n as usize).rev() {
+            let k = rng.gen_below(j as u64 + 1) as usize;
+            perm.swap(j, k);
+        }
+        perm[(i % n) as usize]
+    }
+}
+
+impl Sampler for LatinHypercubeSampler {
+    fn sample(&self, space: &ScenarioSpace, seed: u64, index: u64) -> ScenarioPoint {
+        let n = self.strata.max(1) as u64;
+        let values = space
+            .axes
+            .iter()
+            .enumerate()
+            .map(|(ai, ax)| {
+                let stratum = self.stratum_of(seed, ai as u64, index);
+                let mut rng = stream(seed, index.wrapping_add(1), ai as u64);
+                let u = (stratum as f64 + rng.gen_f64()) / n as f64;
+                ax.value_at(u)
+            })
+            .collect();
+        ScenarioPoint {
+            family: space.family.clone(),
+            index,
+            seed,
+            values,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "latin-hypercube"
+    }
+}
+
+/// Plain-data sampler selector — what campaign configs and the
+/// scenarios manifest store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SamplerKind {
+    Grid { points_per_axis: usize },
+    Uniform,
+    Lhs { strata: usize },
+}
+
+impl SamplerKind {
+    /// Parse `grid`, `grid:<k>`, `uniform`, `lhs`, or `lhs:<n>`.
+    /// `default_strata` fills in the per-axis/strata count when the
+    /// suffix is omitted (campaign configs pass samples-per-family).
+    pub fn parse(text: &str, default_strata: usize) -> crate::Result<SamplerKind> {
+        let (head, arg) = match text.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (text, None),
+        };
+        let parsed_arg = match arg {
+            Some(a) => Some(a.parse::<usize>().map_err(|e| {
+                crate::Error::Config(format!("bad sampler arg '{a}': {e}"))
+            })?),
+            None => None,
+        };
+        match head {
+            "grid" => Ok(SamplerKind::Grid {
+                points_per_axis: parsed_arg.unwrap_or(3).max(1),
+            }),
+            "uniform" => Ok(SamplerKind::Uniform),
+            "lhs" | "latin-hypercube" => Ok(SamplerKind::Lhs {
+                strata: parsed_arg.unwrap_or(default_strata).max(1),
+            }),
+            other => Err(crate::Error::Config(format!(
+                "unknown sampler '{other}' (grid|uniform|lhs)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerKind::Grid { .. } => "grid",
+            SamplerKind::Uniform => "uniform",
+            SamplerKind::Lhs { .. } => "latin-hypercube",
+        }
+    }
+
+    /// Sample without boxing — dispatches to the matching sampler.
+    pub fn sample(&self, space: &ScenarioSpace, seed: u64, index: u64) -> ScenarioPoint {
+        match self {
+            SamplerKind::Grid { points_per_axis } => GridSampler {
+                points_per_axis: *points_per_axis,
+            }
+            .sample(space, seed, index),
+            SamplerKind::Uniform => UniformSampler.sample(space, seed, index),
+            SamplerKind::Lhs { strata } => LatinHypercubeSampler { strata: *strata }
+                .sample(space, seed, index),
+        }
+    }
+
+    /// Boxed form for callers that need a trait object.
+    pub fn build(&self) -> Box<dyn Sampler> {
+        match self {
+            SamplerKind::Grid { points_per_axis } => Box::new(GridSampler {
+                points_per_axis: *points_per_axis,
+            }),
+            SamplerKind::Uniform => Box::new(UniformSampler),
+            SamplerKind::Lhs { strata } => {
+                Box::new(LatinHypercubeSampler { strata: *strata })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::space::{Axis, AxisValue};
+
+    fn space() -> ScenarioSpace {
+        ScenarioSpace::new(
+            "s",
+            vec![
+                Axis::continuous("a", 0.0, 1.0),
+                Axis::integer("b", 10, 12),
+                Axis::choice("c", &["x", "y"]),
+            ],
+        )
+    }
+
+    #[test]
+    fn grid_walks_the_lattice() {
+        let s = space();
+        let g = GridSampler { points_per_axis: 2 };
+        assert_eq!(g.total_points(&s), 2 * 3 * 2);
+        // first axis varies fastest
+        let p0 = g.sample(&s, 0, 0);
+        let p1 = g.sample(&s, 0, 1);
+        assert_eq!(p0.values[0], AxisValue::Num(0.0));
+        assert_eq!(p1.values[0], AxisValue::Num(1.0));
+        assert_eq!(p0.values[1], p1.values[1]);
+        // wraps modulo the lattice
+        assert_eq!(g.sample(&s, 0, 12).values, p0.values);
+    }
+
+    #[test]
+    fn uniform_is_pure_and_in_bounds() {
+        let s = space();
+        let u = UniformSampler;
+        for i in 0..32 {
+            let p = u.sample(&s, 42, i);
+            assert_eq!(p, u.sample(&s, 42, i));
+            match &p.values[0] {
+                AxisValue::Num(v) => assert!((0.0..1.0).contains(v)),
+                other => panic!("{other:?}"),
+            }
+            match &p.values[1] {
+                AxisValue::Int(v) => assert!((10..=12).contains(v)),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn lhs_strata_cover_exactly_once() {
+        let s = space();
+        let n = 16;
+        let l = LatinHypercubeSampler { strata: n };
+        let mut strata: Vec<u64> = (0..n as u64)
+            .map(|i| {
+                let p = l.sample(&s, 7, i);
+                match p.values[0] {
+                    AxisValue::Num(v) => (v * n as f64) as u64,
+                    _ => unreachable!(),
+                }
+            })
+            .collect();
+        strata.sort_unstable();
+        assert_eq!(strata, (0..n as u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn kind_parses_and_dispatches() {
+        let s = space();
+        assert_eq!(
+            SamplerKind::parse("grid:4", 8).unwrap(),
+            SamplerKind::Grid { points_per_axis: 4 }
+        );
+        assert_eq!(SamplerKind::parse("lhs", 8).unwrap(), SamplerKind::Lhs { strata: 8 });
+        assert_eq!(SamplerKind::parse("uniform", 8).unwrap(), SamplerKind::Uniform);
+        assert!(SamplerKind::parse("sobol", 8).is_err());
+        assert!(SamplerKind::parse("lhs:x", 8).is_err());
+        let k = SamplerKind::Lhs { strata: 4 };
+        assert_eq!(k.sample(&s, 1, 2), k.build().sample(&s, 1, 2));
+    }
+}

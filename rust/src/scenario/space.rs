@@ -1,0 +1,367 @@
+//! Parametric scenario spaces: named parameter axes with ranges or
+//! choices, and the sampled points that index into them.
+//!
+//! A [`ScenarioSpace`] is the declarative description of *what can
+//! vary* in a scenario family (demand, CAV penetration, geometry, lane
+//! count, speed limit, driver-parameter perturbations).  A
+//! [`ScenarioPoint`] is one concrete assignment of every axis, produced
+//! by a seeded [`super::Sampler`]; `(space, seed, index) → point` is a
+//! pure function, so any node of a PBS array materializes its own point
+//! without coordination (the §3.1.5 principle applied to scenario
+//! diversity instead of demand randomization).
+
+use crate::{Error, Result};
+
+/// Identifier of a scenario family.  Stable across runs — it lands in
+/// `RunDataset` provenance and the scenarios manifest, so aggregated
+/// rows stay attributable to their generating scenario.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ScenarioId(pub String);
+
+impl ScenarioId {
+    pub fn new(s: impl Into<String>) -> Self {
+        ScenarioId(s.into())
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+impl std::fmt::Display for ScenarioId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// The shape of one parameter axis.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AxisKind {
+    /// Real-valued range `[lo, hi]` (both ends reachable by the grid
+    /// sampler; random samplers draw from `[lo, hi)`).
+    Continuous { lo: f64, hi: f64 },
+    /// Integer range `lo..=hi`.
+    Integer { lo: i64, hi: i64 },
+    /// Categorical choice among named options.
+    Choice { options: Vec<String> },
+}
+
+/// One named parameter axis of a scenario space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Axis {
+    pub name: String,
+    pub kind: AxisKind,
+}
+
+impl Axis {
+    pub fn continuous(name: impl Into<String>, lo: f64, hi: f64) -> Axis {
+        Axis {
+            name: name.into(),
+            kind: AxisKind::Continuous { lo, hi },
+        }
+    }
+
+    pub fn integer(name: impl Into<String>, lo: i64, hi: i64) -> Axis {
+        Axis {
+            name: name.into(),
+            kind: AxisKind::Integer { lo, hi },
+        }
+    }
+
+    pub fn choice(name: impl Into<String>, options: &[&str]) -> Axis {
+        Axis {
+            name: name.into(),
+            kind: AxisKind::Choice {
+                options: options.iter().map(|s| s.to_string()).collect(),
+            },
+        }
+    }
+
+    /// Map a unit sample `u ∈ [0, 1)` onto this axis.
+    pub fn value_at(&self, u: f64) -> AxisValue {
+        match &self.kind {
+            AxisKind::Continuous { lo, hi } => AxisValue::Num(lo + (hi - lo) * u),
+            AxisKind::Integer { lo, hi } => {
+                let count = (hi - lo + 1).max(1);
+                let off = ((count as f64 * u) as i64).clamp(0, count - 1);
+                AxisValue::Int(lo + off)
+            }
+            AxisKind::Choice { options } => {
+                let k = ((options.len() as f64 * u) as usize).min(options.len() - 1);
+                AxisValue::Tag(options[k].clone())
+            }
+        }
+    }
+
+    /// How many distinct grid positions this axis contributes when the
+    /// grid sampler places `per_axis` points on continuous axes.
+    pub fn grid_cardinality(&self, per_axis: usize) -> usize {
+        let per_axis = per_axis.max(1);
+        match &self.kind {
+            AxisKind::Continuous { .. } => per_axis,
+            AxisKind::Integer { lo, hi } => ((hi - lo + 1).max(1) as usize).min(per_axis),
+            AxisKind::Choice { options } => options.len().max(1),
+        }
+    }
+
+    /// The `k`-th of `m` grid positions on this axis (endpoints
+    /// inclusive on continuous axes; `m == 1` takes the midpoint).
+    pub fn grid_value(&self, k: usize, m: usize) -> AxisValue {
+        let m = m.max(1);
+        match &self.kind {
+            AxisKind::Continuous { lo, hi } => {
+                if m == 1 {
+                    AxisValue::Num((lo + hi) / 2.0)
+                } else {
+                    AxisValue::Num(lo + (hi - lo) * k as f64 / (m - 1) as f64)
+                }
+            }
+            AxisKind::Integer { lo, hi } => {
+                let count = (hi - lo + 1).max(1);
+                if m == 1 {
+                    AxisValue::Int(lo + (count - 1) / 2)
+                } else {
+                    let off = ((k as f64 * (count - 1) as f64 / (m - 1) as f64).round() as i64)
+                        .clamp(0, count - 1);
+                    AxisValue::Int(lo + off)
+                }
+            }
+            AxisKind::Choice { options } => AxisValue::Tag(options[k.min(options.len() - 1)].clone()),
+        }
+    }
+}
+
+/// One sampled axis value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AxisValue {
+    Num(f64),
+    Int(i64),
+    Tag(String),
+}
+
+impl AxisValue {
+    /// Numeric view (integers widen; tags have none).
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            AxisValue::Num(v) => Ok(*v),
+            AxisValue::Int(v) => Ok(*v as f64),
+            AxisValue::Tag(t) => Err(Error::Config(format!(
+                "axis value '{t}' is categorical, not numeric"
+            ))),
+        }
+    }
+
+    /// Compact cell rendering for CSV/manifest output.
+    pub fn render(&self) -> String {
+        match self {
+            AxisValue::Num(v) => {
+                let s = format!("{v:.6}");
+                let s = s.trim_end_matches('0').trim_end_matches('.');
+                if s.is_empty() || s == "-" {
+                    "0".to_string()
+                } else {
+                    s.to_string()
+                }
+            }
+            AxisValue::Int(v) => format!("{v}"),
+            AxisValue::Tag(t) => t.clone(),
+        }
+    }
+}
+
+/// A scenario space: the parameter axes of one family.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpace {
+    pub family: ScenarioId,
+    pub axes: Vec<Axis>,
+}
+
+impl ScenarioSpace {
+    pub fn new(family: impl Into<String>, axes: Vec<Axis>) -> Self {
+        ScenarioSpace {
+            family: ScenarioId::new(family),
+            axes,
+        }
+    }
+
+    pub fn axis_index(&self, name: &str) -> Result<usize> {
+        self.axes
+            .iter()
+            .position(|a| a.name == name)
+            .ok_or_else(|| {
+                Error::Config(format!(
+                    "scenario space '{}' has no axis '{name}'",
+                    self.family
+                ))
+            })
+    }
+
+    pub fn axis(&self, name: &str) -> Result<&Axis> {
+        Ok(&self.axes[self.axis_index(name)?])
+    }
+}
+
+/// One sampled point of a scenario space: a full assignment of every
+/// axis, plus the `(seed, index)` coordinates that reproduce it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioPoint {
+    pub family: ScenarioId,
+    /// Sample index within the space (the point's coordinate).
+    pub index: u64,
+    /// Sampler seed the point was drawn with.
+    pub seed: u64,
+    /// One value per space axis, in axis order.
+    pub values: Vec<AxisValue>,
+}
+
+impl ScenarioPoint {
+    pub fn value(&self, space: &ScenarioSpace, name: &str) -> Result<&AxisValue> {
+        let i = space.axis_index(name)?;
+        self.values.get(i).ok_or_else(|| {
+            Error::Config(format!(
+                "scenario point for '{}' has {} values but axis '{name}' is #{i}",
+                self.family,
+                self.values.len()
+            ))
+        })
+    }
+
+    /// Numeric axis accessor (continuous or integer axes).
+    pub fn num(&self, space: &ScenarioSpace, name: &str) -> Result<f64> {
+        self.value(space, name)?.as_f64()
+    }
+
+    /// Integer axis accessor.
+    pub fn int(&self, space: &ScenarioSpace, name: &str) -> Result<i64> {
+        match self.value(space, name)? {
+            AxisValue::Int(v) => Ok(*v),
+            AxisValue::Num(v) => Ok(v.round() as i64),
+            AxisValue::Tag(t) => Err(Error::Config(format!(
+                "axis '{name}' holds tag '{t}', not an integer"
+            ))),
+        }
+    }
+
+    /// Categorical axis accessor.
+    pub fn tag(&self, space: &ScenarioSpace, name: &str) -> Result<&str> {
+        match self.value(space, name)? {
+            AxisValue::Tag(t) => Ok(t),
+            other => Err(Error::Config(format!(
+                "axis '{name}' holds {other:?}, not a choice"
+            ))),
+        }
+    }
+
+    /// Dataset provenance for this point: `(axis name, value)` pairs in
+    /// axis order — what `RunDataset` carries so every aggregated row
+    /// knows its generating parameters.
+    pub fn provenance(&self, space: &ScenarioSpace) -> ScenarioTag {
+        ScenarioTag {
+            id: self.family.clone(),
+            sample_index: self.index,
+            params: space
+                .axes
+                .iter()
+                .zip(self.values.iter())
+                .map(|(a, v)| (a.name.clone(), v.clone()))
+                .collect(),
+        }
+    }
+}
+
+/// Run provenance: which scenario point generated a run.  Attached to
+/// `output::RunDataset` so the emitted dataset is self-describing
+/// (ML-ready rows carry the parameters that generated them).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioTag {
+    pub id: ScenarioId,
+    pub sample_index: u64,
+    /// `(axis name, sampled value)` — the generating parameter vector.
+    pub params: Vec<(String, AxisValue)>,
+}
+
+impl ScenarioTag {
+    pub fn param(&self, name: &str) -> Option<&AxisValue> {
+        self.params
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space() -> ScenarioSpace {
+        ScenarioSpace::new(
+            "test",
+            vec![
+                Axis::continuous("demand", 600.0, 2400.0),
+                Axis::integer("lanes", 1, 3),
+                Axis::choice("profile", &["calm", "aggressive"]),
+            ],
+        )
+    }
+
+    #[test]
+    fn value_at_respects_bounds() {
+        let s = space();
+        match s.axes[0].value_at(0.0) {
+            AxisValue::Num(v) => assert_eq!(v, 600.0),
+            other => panic!("{other:?}"),
+        }
+        match s.axes[0].value_at(0.999_999) {
+            AxisValue::Num(v) => assert!(v < 2400.0),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.axes[1].value_at(0.0), AxisValue::Int(1));
+        assert_eq!(s.axes[1].value_at(0.999), AxisValue::Int(3));
+        assert_eq!(s.axes[2].value_at(0.6), AxisValue::Tag("aggressive".into()));
+    }
+
+    #[test]
+    fn grid_values_hit_endpoints() {
+        let s = space();
+        assert_eq!(s.axes[0].grid_value(0, 3), AxisValue::Num(600.0));
+        assert_eq!(s.axes[0].grid_value(2, 3), AxisValue::Num(2400.0));
+        assert_eq!(s.axes[0].grid_value(0, 1), AxisValue::Num(1500.0));
+        assert_eq!(s.axes[1].grid_cardinality(5), 3);
+        assert_eq!(s.axes[1].grid_value(0, 3), AxisValue::Int(1));
+        assert_eq!(s.axes[1].grid_value(2, 3), AxisValue::Int(3));
+        assert_eq!(s.axes[2].grid_cardinality(9), 2);
+    }
+
+    #[test]
+    fn point_accessors() {
+        let s = space();
+        let p = ScenarioPoint {
+            family: s.family.clone(),
+            index: 4,
+            seed: 9,
+            values: vec![
+                AxisValue::Num(1200.0),
+                AxisValue::Int(2),
+                AxisValue::Tag("calm".into()),
+            ],
+        };
+        assert_eq!(p.num(&s, "demand").unwrap(), 1200.0);
+        assert_eq!(p.int(&s, "lanes").unwrap(), 2);
+        assert_eq!(p.tag(&s, "profile").unwrap(), "calm");
+        assert!(p.num(&s, "profile").is_err());
+        assert!(p.value(&s, "nope").is_err());
+        let tag = p.provenance(&s);
+        assert_eq!(tag.sample_index, 4);
+        assert_eq!(tag.param("lanes"), Some(&AxisValue::Int(2)));
+        assert_eq!(tag.param("absent"), None);
+    }
+
+    #[test]
+    fn render_is_compact() {
+        assert_eq!(AxisValue::Num(1200.0).render(), "1200");
+        assert_eq!(AxisValue::Num(0.25).render(), "0.25");
+        assert_eq!(AxisValue::Num(0.0).render(), "0");
+        assert_eq!(AxisValue::Int(-3).render(), "-3");
+        assert_eq!(AxisValue::Tag("calm".into()).render(), "calm");
+    }
+}

@@ -59,8 +59,9 @@ pub fn duarouter(net: &Network, flows: &FlowFile, seed: u64) -> Result<RouteFile
             if t >= flow.end_s {
                 break;
             }
-            let base = flow.vtype.params();
-            // per-driver heterogeneity: ±10% on desired speed & headway
+            // scenario-level perturbation (flow scales) under per-driver
+            // heterogeneity: ±10% on desired speed & headway
+            let base = flow.base_params();
             let jig = |v: f32, r: &mut Rng64| v * (0.9 + 0.2 * r.gen_f32());
             let params = DriverParams {
                 v0: jig(base.v0, &mut rng),
@@ -141,6 +142,17 @@ mod tests {
         let (net, mut flows) = setup();
         flows.flows[0].route = vec!["nonexistent".into()];
         assert!(duarouter(&net, &flows, 1).is_err());
+    }
+
+    #[test]
+    fn flow_scales_shift_departure_params() {
+        let (net, mut flows) = setup();
+        for f in &mut flows.flows {
+            f.v0_scale = 0.5;
+        }
+        let r = duarouter(&net, &flows, 3).unwrap();
+        // jitter is ±10%, so every halved v0 stays well below stock
+        assert!(r.departures.iter().all(|d| d.params.v0 < 30.0 * 0.5 * 1.11));
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Demand definitions: the `sumo.flow.xml` side.
 
 
+use super::network::Network;
 use super::state::DriverParams;
+use crate::Result;
 
 /// Vehicle type: parameter template + CAV flag.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -39,6 +41,26 @@ pub struct FlowDef {
     /// Flow window [s].
     pub begin_s: f32,
     pub end_s: f32,
+    /// Scenario-level desired-speed multiplier applied on the vtype's
+    /// calibration before per-driver jitter (1.0 = unperturbed) — how a
+    /// scenario point's speed-limit axis reaches the IDM dynamics.
+    pub v0_scale: f32,
+    /// Scenario-level headway multiplier, same mechanism (the IDM/MOBIL
+    /// driver-param perturbation axis).
+    pub t_scale: f32,
+}
+
+impl FlowDef {
+    /// The per-flow driver baseline: the vtype template with the
+    /// scenario scales applied.  `duarouter` jitters per driver on top.
+    pub fn base_params(&self) -> DriverParams {
+        let b = self.vtype.params();
+        DriverParams {
+            v0: b.v0 * self.v0_scale,
+            t_headway: b.t_headway * self.t_scale,
+            ..b
+        }
+    }
 }
 
 /// The full `sumo.flow.xml` content.
@@ -73,6 +95,8 @@ impl FlowFile {
                     vtype: VehicleType::Human,
                     begin_s: 0.0,
                     end_s: horizon_s,
+                    v0_scale: 1.0,
+                    t_scale: 1.0,
                 },
                 FlowDef {
                     id: "main_l2".into(),
@@ -84,6 +108,8 @@ impl FlowFile {
                     vtype: VehicleType::Human,
                     begin_s: 0.0,
                     end_s: horizon_s,
+                    v0_scale: 1.0,
+                    t_scale: 1.0,
                 },
                 FlowDef {
                     id: "ramp_cav".into(),
@@ -95,6 +121,8 @@ impl FlowFile {
                     vtype: VehicleType::Cav,
                     begin_s: 0.0,
                     end_s: horizon_s,
+                    v0_scale: 1.0,
+                    t_scale: 1.0,
                 },
             ],
         }
@@ -105,6 +133,35 @@ impl FlowFile {
             .iter()
             .map(|f| f.vehs_per_hour * (f.end_s - f.begin_s) / 3600.0)
             .sum()
+    }
+
+    /// Validate every flow against the network: routes must exist and
+    /// connect, rates must be finite and non-negative, windows must be
+    /// non-empty, scales must be positive.  The scenario compiler runs
+    /// this on every generated config.
+    pub fn validate(&self, net: &Network) -> Result<()> {
+        for f in &self.flows {
+            net.validate_route(&f.route)?;
+            if !f.vehs_per_hour.is_finite() || f.vehs_per_hour < 0.0 {
+                return Err(crate::Error::Config(format!(
+                    "flow '{}': bad rate {} vph",
+                    f.id, f.vehs_per_hour
+                )));
+            }
+            if f.end_s <= f.begin_s {
+                return Err(crate::Error::Config(format!(
+                    "flow '{}': empty window [{}, {}]",
+                    f.id, f.begin_s, f.end_s
+                )));
+            }
+            if f.v0_scale <= 0.0 || f.t_scale <= 0.0 {
+                return Err(crate::Error::Config(format!(
+                    "flow '{}': non-positive driver scale",
+                    f.id
+                )));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -129,5 +186,40 @@ mod tests {
     #[test]
     fn vehicle_types_have_distinct_params() {
         assert!(VehicleType::Cav.params().t_headway < VehicleType::Human.params().t_headway);
+    }
+
+    #[test]
+    fn scales_perturb_base_params() {
+        let mut f = FlowFile::merge_sample(1200.0, 300.0, 60.0).flows[0].clone();
+        assert_eq!(f.base_params(), f.vtype.params());
+        f.v0_scale = 0.9;
+        f.t_scale = 1.2;
+        let p = f.base_params();
+        assert!((p.v0 - 27.0).abs() < 1e-4);
+        assert!((p.t_headway - 1.8).abs() < 1e-4);
+        assert_eq!(p.a_max, f.vtype.params().a_max);
+    }
+
+    #[test]
+    fn validate_catches_bad_flows() {
+        let net = crate::sumo::MergeScenario::default().network();
+        let good = FlowFile::merge_sample(1200.0, 300.0, 60.0);
+        good.validate(&net).unwrap();
+
+        let mut bad_route = good.clone();
+        bad_route.flows[0].route = vec!["nope".into()];
+        assert!(bad_route.validate(&net).is_err());
+
+        let mut bad_rate = good.clone();
+        bad_rate.flows[0].vehs_per_hour = -5.0;
+        assert!(bad_rate.validate(&net).is_err());
+
+        let mut bad_window = good.clone();
+        bad_window.flows[0].end_s = bad_window.flows[0].begin_s;
+        assert!(bad_window.validate(&net).is_err());
+
+        let mut bad_scale = good;
+        bad_scale.flows[0].t_scale = 0.0;
+        assert!(bad_scale.validate(&net).is_err());
     }
 }

@@ -38,4 +38,4 @@ pub use idm::{NativeIdmStepper, ReferenceIdmStepper};
 pub use sweep::LaneIndex;
 pub use network::{Edge, MergeScenario, Network};
 pub use simulation::{StepObs, Stepper, SumoSim};
-pub use state::{Traffic, ACTIVE, LANE, PARAM_COLS, STATE_COLS, V, X};
+pub use state::{DriverParams, Traffic, ACTIVE, LANE, PARAM_COLS, STATE_COLS, V, X};

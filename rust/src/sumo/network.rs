@@ -88,6 +88,12 @@ impl MergeScenario {
 
     /// Build the network graph form (for xml round-trips and TraCI).
     pub fn network(&self) -> Network {
+        self.network_with_speeds(30.0, 20.0)
+    }
+
+    /// The merge network with explicit mainline/ramp speed limits — the
+    /// parametric form the scenario subsystem compiles against.
+    pub fn network_with_speeds(&self, main_speed: f32, ramp_speed: f32) -> Network {
         Network {
             edges: vec![
                 Edge {
@@ -96,7 +102,7 @@ impl MergeScenario {
                     to: "merge_a".into(),
                     length_m: self.merge_start_m,
                     num_lanes: self.num_main_lanes,
-                    speed_limit: 30.0,
+                    speed_limit: main_speed,
                 },
                 Edge {
                     id: "merge_zone".into(),
@@ -104,7 +110,7 @@ impl MergeScenario {
                     to: "merge_b".into(),
                     length_m: self.merge_end_m - self.merge_start_m,
                     num_lanes: self.num_main_lanes + 1, // + acceleration lane
-                    speed_limit: 30.0,
+                    speed_limit: main_speed,
                 },
                 Edge {
                     id: "main_out".into(),
@@ -112,7 +118,7 @@ impl MergeScenario {
                     to: "east".into(),
                     length_m: self.road_end_m - self.merge_end_m,
                     num_lanes: self.num_main_lanes,
-                    speed_limit: 30.0,
+                    speed_limit: main_speed,
                 },
                 Edge {
                     id: "ramp".into(),
@@ -120,7 +126,7 @@ impl MergeScenario {
                     to: "merge_a".into(),
                     length_m: self.merge_start_m,
                     num_lanes: 1,
-                    speed_limit: 20.0,
+                    speed_limit: ramp_speed,
                 },
             ],
         }
@@ -138,6 +144,18 @@ mod tests {
         assert_eq!(n.edges.len(), 4);
         assert_eq!(n.edge("merge_zone").unwrap().num_lanes, 3);
         assert_eq!(n.total_length_m(), 1000.0 + 300.0);
+    }
+
+    #[test]
+    fn speeds_are_parametric() {
+        let n = MergeScenario::default().network_with_speeds(33.0, 21.0);
+        assert_eq!(n.edge("main_in").unwrap().speed_limit, 33.0);
+        assert_eq!(n.edge("ramp").unwrap().speed_limit, 21.0);
+        // the default form is the (30, 20) instance
+        assert_eq!(
+            MergeScenario::default().network(),
+            MergeScenario::default().network_with_speeds(30.0, 20.0)
+        );
     }
 
     #[test]

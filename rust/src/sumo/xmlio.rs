@@ -54,7 +54,7 @@ pub fn write_flow_xml(flows: &FlowFile) -> String {
     let mut s = String::from("<routes>\n");
     for f in &flows.flows {
         s.push_str(&format!(
-            "  <flow id=\"{}\" route=\"{}\" vehsPerHour=\"{}\" departSpeed=\"{}\" departLane=\"{}\" departPos=\"{}\" type=\"{}\" begin=\"{}\" end=\"{}\"/>\n",
+            "  <flow id=\"{}\" route=\"{}\" vehsPerHour=\"{}\" departSpeed=\"{}\" departLane=\"{}\" departPos=\"{}\" type=\"{}\" begin=\"{}\" end=\"{}\" v0Scale=\"{}\" tScale=\"{}\"/>\n",
             f.id,
             f.route.join(" "),
             f.vehs_per_hour,
@@ -64,6 +64,8 @@ pub fn write_flow_xml(flows: &FlowFile) -> String {
             match f.vtype { VehicleType::Human => "human", VehicleType::Cav => "cav" },
             f.begin_s,
             f.end_s,
+            f.v0_scale,
+            f.t_scale,
         ));
     }
     s.push_str("</routes>\n");
@@ -94,6 +96,9 @@ pub fn read_flow_xml(text: &str) -> Result<FlowFile> {
             },
             begin_s: attr(line, "begin")?.parse().map_err(bad("begin"))?,
             end_s: attr(line, "end")?.parse().map_err(bad("end"))?,
+            // scenario driver scales; absent in pre-scenario files → 1.0
+            v0_scale: attr_or(line, "v0Scale", "1").parse().map_err(bad("v0Scale"))?,
+            t_scale: attr_or(line, "tScale", "1").parse().map_err(bad("tScale"))?,
         });
     }
     Ok(FlowFile { flows })
@@ -120,6 +125,10 @@ fn attr(line: &str, name: &str) -> Result<String> {
     Ok(line[start..start + end].to_string())
 }
 
+fn attr_or(line: &str, name: &str, default: &str) -> String {
+    attr(line, name).unwrap_or_else(|_| default.to_string())
+}
+
 fn bad<E: std::fmt::Display>(name: &'static str) -> impl Fn(E) -> Error {
     move |e| Error::Config(format!("bad {name}: {e}"))
 }
@@ -143,6 +152,20 @@ mod tests {
         let xml = write_flow_xml(&flows);
         let back = read_flow_xml(&xml).unwrap();
         assert_eq!(flows, back);
+    }
+
+    #[test]
+    fn scaled_flow_roundtrip_and_legacy_default() {
+        let mut flows = FlowFile::merge_sample(1200.0, 300.0, 600.0);
+        flows.flows[0].v0_scale = 0.9;
+        flows.flows[0].t_scale = 1.15;
+        let back = read_flow_xml(&write_flow_xml(&flows)).unwrap();
+        assert_eq!(flows, back);
+        // pre-scenario flow files without the scale attrs parse as 1.0
+        let legacy = "<routes>\n<flow id=\"a\" route=\"ramp\" vehsPerHour=\"100\" departSpeed=\"10\" departLane=\"0\" departPos=\"0\" type=\"human\" begin=\"0\" end=\"60\"/>\n</routes>\n";
+        let f = read_flow_xml(legacy).unwrap();
+        assert_eq!(f.flows[0].v0_scale, 1.0);
+        assert_eq!(f.flows[0].t_scale, 1.0);
     }
 
     #[test]

@@ -21,6 +21,27 @@ pub enum Json {
 }
 
 impl Json {
+    /// Builder convenience: a string value.
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// Builder convenience: a number value.
+    pub fn num(n: f64) -> Json {
+        Json::Num(n)
+    }
+
+    /// Builder convenience: an array value.
+    pub fn arr(items: Vec<Json>) -> Json {
+        Json::Arr(items)
+    }
+
+    /// Builder convenience: an object from `(key, value)` pairs (later
+    /// duplicates win, matching [`Json::parse`]).
+    pub fn obj<K: Into<String>>(pairs: Vec<(K, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
+
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser {
             bytes: text.as_bytes(),
@@ -419,6 +440,19 @@ mod tests {
         assert_eq!(Json::parse(&pretty).unwrap(), j);
         // integers stay integers
         assert!(pretty.contains("\"n\": 3"), "{pretty}");
+    }
+
+    #[test]
+    fn builders_compose() {
+        let j = Json::obj(vec![
+            ("name", Json::str("merge")),
+            ("n", Json::num(3.0)),
+            ("axes", Json::arr(vec![Json::str("demand"), Json::num(0.5)])),
+        ]);
+        let text = j.to_pretty_string();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "merge");
+        assert_eq!(j.get("axes").unwrap().as_arr().unwrap().len(), 2);
     }
 
     #[test]

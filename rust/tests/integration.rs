@@ -89,6 +89,7 @@ fn single_instance_end_to_end_native() {
         capacity: 64,
         horizon_s: 20.0,
         max_steps: 500,
+        scenario_run: None,
     };
     let r = launch_instance(&cfg, &displays, &env, &PhysicsEngine::Native).unwrap();
     assert_eq!(r.steps, 200);
@@ -122,6 +123,7 @@ fn parallel_instances_end_to_end_hlo() {
             capacity: 64,
             horizon_s: 10.0,
             max_steps: 300,
+            scenario_run: None,
         })
         .collect();
     let results = launch_node_slots(configs, &PhysicsEngine::Hlo(service));
@@ -181,6 +183,7 @@ fn copy_tree_boots_from_disk() {
         capacity: 64,
         horizon_s: 5.0,
         max_steps: 100,
+        scenario_run: None,
     };
     let r = launch_instance(&cfg, &displays, &env, &PhysicsEngine::Native).unwrap();
     assert_eq!(r.port, base + 7, "copy 1 runs on base+7");

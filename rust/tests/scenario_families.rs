@@ -1,0 +1,181 @@
+//! Generated-config coverage for the scenario families (ISSUE 2
+//! satellite): every shipped family must compile at its parameter
+//! extremes into configs whose networks/flows survive the xmlio
+//! round-trip and `validate_route`, be runnable end to end, and — on a
+//! non-merge family — step bit-identically through the sweep-based
+//! `NativeIdmStepper` and the O(N²) `ReferenceIdmStepper`.
+
+use webots_hpc::scenario::{
+    AxisKind, AxisValue, FamilyRegistry, ScenarioPoint, UniformSampler,
+};
+use webots_hpc::sumo::mobil::MobilParams;
+use webots_hpc::sumo::{duarouter, xmlio, NativeIdmStepper, ReferenceIdmStepper, SumoSim};
+
+/// The all-lo / all-hi corner points of a family's space.
+fn extreme_points(registry: &FamilyRegistry, id: &str) -> Vec<ScenarioPoint> {
+    let space = registry.get(id).unwrap().space();
+    [false, true]
+        .into_iter()
+        .map(|hi| ScenarioPoint {
+            family: space.family.clone(),
+            index: hi as u64,
+            seed: 0,
+            values: space
+                .axes
+                .iter()
+                .map(|a| match &a.kind {
+                    AxisKind::Continuous { lo, hi: h } => {
+                        AxisValue::Num(if hi { *h } else { *lo })
+                    }
+                    AxisKind::Integer { lo, hi: h } => AxisValue::Int(if hi { *h } else { *lo }),
+                    AxisKind::Choice { options } => {
+                        let pick = if hi { options.last() } else { options.first() };
+                        AxisValue::Tag(pick.unwrap().clone())
+                    }
+                })
+                .collect(),
+        })
+        .collect()
+}
+
+#[test]
+fn every_family_compiles_and_roundtrips_at_extremes() {
+    let registry = FamilyRegistry::builtin();
+    for id in registry.ids() {
+        let family = registry.get(&id).unwrap();
+        for point in extreme_points(&registry, &id) {
+            let cfg = family
+                .compile(&point)
+                .unwrap_or_else(|e| panic!("{id} extreme #{}: {e}", point.index));
+
+            // routes exist and connect on the compiled network
+            cfg.flows.validate(&cfg.network).unwrap();
+            for flow in &cfg.flows.flows {
+                cfg.network.validate_route(&flow.route).unwrap();
+            }
+
+            // xmlio round-trips (the world-copy propagation path)
+            let net_back = xmlio::read_net_xml(&xmlio::write_net_xml(&cfg.network)).unwrap();
+            assert_eq!(cfg.network, net_back, "{id} net.xml");
+            let flows_back = xmlio::read_flow_xml(&xmlio::write_flow_xml(&cfg.flows)).unwrap();
+            assert_eq!(cfg.flows, flows_back, "{id} flow.xml");
+
+            // duarouter accepts the compiled tuple
+            let routes = duarouter(&cfg.network, &cfg.flows, 1).unwrap();
+            assert!(
+                !routes.departures.is_empty(),
+                "{id} extreme #{} schedules departures",
+                point.index
+            );
+
+            // geometry stays inside the stepper's assumptions
+            assert!(cfg.geometry.num_main_lanes >= 1, "{id}");
+            assert!(cfg.geometry.road_end_m > 0.0, "{id}");
+            assert!(cfg.geometry.merge_end_m >= cfg.geometry.merge_start_m, "{id}");
+            assert!(cfg.capacity >= 16, "{id}");
+        }
+    }
+}
+
+#[test]
+fn lane_drop_reference_and_native_steppers_agree_exactly() {
+    // reference-vs-native agreement on a non-merge family: identical
+    // observables AND identical state arrays, step by step
+    let registry = FamilyRegistry::builtin();
+    let (_, cfg) = registry
+        .materialize("lane-drop", &UniformSampler, 11, 0)
+        .unwrap();
+    let routes = duarouter(&cfg.network, &cfg.flows, 9).unwrap();
+
+    let mut native = SumoSim::new(
+        cfg.geometry,
+        cfg.capacity,
+        routes.clone(),
+        Box::new(NativeIdmStepper::new(cfg.geometry, MobilParams::default())),
+    );
+    let mut reference = SumoSim::new(
+        cfg.geometry,
+        cfg.capacity,
+        routes,
+        Box::new(ReferenceIdmStepper {
+            scenario: cfg.geometry,
+            mobil: MobilParams::default(),
+        }),
+    );
+
+    for step in 0..600 {
+        let a = native.step();
+        let b = reference.step();
+        assert_eq!(a, b, "observables diverged at step {step}");
+        assert_eq!(native.traffic, reference.traffic, "state diverged at step {step}");
+    }
+    assert!(native.total_spawned > 0, "lane-drop demand spawned");
+}
+
+#[test]
+fn lane_drop_bottleneck_forces_merges() {
+    // vehicles on the dropping lane must merge out inside the taper —
+    // the n_merged observable counts exactly those lane-0 escapes
+    let registry = FamilyRegistry::builtin();
+    let (_, cfg) = registry
+        .materialize("lane-drop", &UniformSampler, 21, 1)
+        .unwrap();
+    let routes = duarouter(&cfg.network, &cfg.flows, 4).unwrap();
+    let mut sim = SumoSim::new(
+        cfg.geometry,
+        cfg.capacity,
+        routes,
+        Box::new(NativeIdmStepper::new(cfg.geometry, MobilParams::default())),
+    );
+    sim.run(cfg.horizon_s).unwrap();
+    assert!(sim.total_spawned > 0);
+    assert!(sim.total_merged > 0.0, "drop-lane traffic merged out");
+}
+
+#[test]
+fn ring_shockwave_runs_and_circulates() {
+    let registry = FamilyRegistry::builtin();
+    let (_, cfg) = registry
+        .materialize("ring-shockwave", &UniformSampler, 5, 2)
+        .unwrap();
+    let routes = duarouter(&cfg.network, &cfg.flows, 2).unwrap();
+    let mut sim = SumoSim::new(
+        cfg.geometry,
+        cfg.capacity,
+        routes,
+        Box::new(NativeIdmStepper::new(cfg.geometry, MobilParams::default())),
+    );
+    let obs = sim.run(cfg.horizon_s).unwrap();
+    assert!(sim.total_spawned > 5, "burst packs the ring");
+    // traffic stays on the road well past the burst window (the
+    // unrolled ring is laps long)
+    let active_late = obs[obs.len() / 4].n_active;
+    assert!(active_late > 0.0, "platoon still circulating at quarter-horizon");
+    // no vehicle ever uses lane 0 (the ring has no ramp lane)
+    let t = &sim.traffic;
+    for i in 0..t.capacity() {
+        if t.is_active(i) {
+            assert!(t.lane(i) >= 0.5, "vehicle {i} on the unused ramp lane");
+        }
+    }
+}
+
+#[test]
+fn ramp_weave_on_traffic_merges_before_weave_end() {
+    let registry = FamilyRegistry::builtin();
+    let (_, cfg) = registry
+        .materialize("ramp-weave", &UniformSampler, 8, 3)
+        .unwrap();
+    let routes = duarouter(&cfg.network, &cfg.flows, 6).unwrap();
+    let mut sim = SumoSim::new(
+        cfg.geometry,
+        cfg.capacity,
+        routes,
+        Box::new(NativeIdmStepper::new(cfg.geometry, MobilParams::default())),
+    );
+    sim.run(cfg.horizon_s).unwrap();
+    assert!(sim.total_spawned > 0);
+    assert!(sim.total_merged > 0.0, "auxiliary-lane traffic merged");
+    // the off-ramp edge is part of the compiled graph
+    assert!(cfg.network.edge("off_ramp").is_ok());
+}

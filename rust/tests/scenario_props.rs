@@ -1,0 +1,207 @@
+//! Property tests for the scenario samplers (ISSUE 2 satellite):
+//! `(space, seed, index) → point` must be pure and reproducible across
+//! calls, sampler instances, and evaluation order — that is the whole
+//! coordination-free contract a PBS array node relies on — and the
+//! Latin-hypercube sampler must cover every stratum of every continuous
+//! axis exactly once.
+
+use webots_hpc::scenario::{
+    Axis, AxisKind, AxisValue, FamilyRegistry, GridSampler, LatinHypercubeSampler, Sampler,
+    SamplerKind, ScenarioSpace, UniformSampler,
+};
+
+/// A synthetic space exercising all three axis kinds.
+fn mixed_space() -> ScenarioSpace {
+    ScenarioSpace::new(
+        "mixed",
+        vec![
+            Axis::continuous("demand", 600.0, 2400.0),
+            Axis::continuous("penetration", 0.0, 1.0),
+            Axis::integer("lanes", 1, 4),
+            Axis::choice("profile", &["calm", "normal", "aggressive"]),
+        ],
+    )
+}
+
+fn samplers() -> Vec<Box<dyn Sampler>> {
+    vec![
+        Box::new(GridSampler { points_per_axis: 4 }),
+        Box::new(UniformSampler),
+        Box::new(LatinHypercubeSampler { strata: 16 }),
+    ]
+}
+
+#[test]
+fn identical_coordinates_reproduce_identical_points() {
+    let space = mixed_space();
+    for sampler in samplers() {
+        for seed in [0u64, 7, 2021, u64::MAX] {
+            for index in [0u64, 1, 5, 15, 1000] {
+                let a = sampler.sample(&space, seed, index);
+                let b = sampler.sample(&space, seed, index);
+                assert_eq!(a, b, "{} must be pure", sampler.name());
+                assert_eq!(a.family.as_str(), "mixed");
+                assert_eq!(a.index, index);
+                assert_eq!(a.seed, seed);
+            }
+        }
+    }
+}
+
+#[test]
+fn reproducible_across_fresh_instances_and_order() {
+    let space = mixed_space();
+    // a "node" that only materializes index 13 must see exactly what a
+    // node enumerating 0..16 sees at 13 — no hidden sampler state
+    let full: Vec<_> = (0..16)
+        .map(|i| LatinHypercubeSampler { strata: 16 }.sample(&space, 42, i))
+        .collect();
+    let lone = LatinHypercubeSampler { strata: 16 }.sample(&space, 42, 13);
+    assert_eq!(full[13], lone);
+
+    let u_full: Vec<_> = (0..16).map(|i| UniformSampler.sample(&space, 42, i)).collect();
+    assert_eq!(u_full[13], UniformSampler.sample(&space, 42, 13));
+}
+
+#[test]
+fn builtin_family_spaces_sample_cleanly() {
+    let registry = FamilyRegistry::builtin();
+    for id in registry.ids() {
+        let space = registry.get(&id).unwrap().space();
+        for sampler in samplers() {
+            for index in 0..8 {
+                let p = sampler.sample(&space, 3, index);
+                assert_eq!(p.values.len(), space.axes.len(), "{id}/{}", sampler.name());
+                // every value lies inside its axis
+                for (axis, value) in space.axes.iter().zip(p.values.iter()) {
+                    match (&axis.kind, value) {
+                        (AxisKind::Continuous { lo, hi }, AxisValue::Num(v)) => {
+                            assert!(*v >= *lo && *v <= *hi, "{id}.{}={v}", axis.name)
+                        }
+                        (AxisKind::Integer { lo, hi }, AxisValue::Int(v)) => {
+                            assert!(v >= lo && v <= hi, "{id}.{}={v}", axis.name)
+                        }
+                        (AxisKind::Choice { options }, AxisValue::Tag(t)) => {
+                            assert!(options.contains(t), "{id}.{}={t}", axis.name)
+                        }
+                        (kind, value) => {
+                            panic!("{id}.{}: kind {kind:?} produced {value:?}", axis.name)
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn lhs_covers_every_stratum_exactly_once() {
+    let space = mixed_space();
+    for n in [4usize, 16, 48] {
+        let sampler = LatinHypercubeSampler { strata: n };
+        for seed in [1u64, 9, 31337] {
+            // for every continuous axis: recover each sample's stratum
+            // and require a perfect 0..n permutation
+            for (ai, axis) in space.axes.iter().enumerate() {
+                let AxisKind::Continuous { lo, hi } = axis.kind else {
+                    continue;
+                };
+                let mut strata: Vec<usize> = (0..n as u64)
+                    .map(|i| {
+                        let p = sampler.sample(&space, seed, i);
+                        match p.values[ai] {
+                            AxisValue::Num(v) => ((v - lo) / (hi - lo) * n as f64) as usize,
+                            ref other => panic!("{other:?}"),
+                        }
+                    })
+                    .collect();
+                strata.sort_unstable();
+                assert_eq!(
+                    strata,
+                    (0..n).collect::<Vec<_>>(),
+                    "axis '{}' n={n} seed={seed}",
+                    axis.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn lhs_axes_use_distinct_permutations() {
+    // the per-axis permutations must not be the same permutation —
+    // otherwise the sweep degenerates to a diagonal
+    let space = mixed_space();
+    let n = 16usize;
+    let sampler = LatinHypercubeSampler { strata: n };
+    let strata_of = |ai: usize| -> Vec<usize> {
+        (0..n as u64)
+            .map(|i| match sampler.sample(&space, 5, i).values[ai] {
+                AxisValue::Num(v) => {
+                    let (lo, hi) = match space.axes[ai].kind {
+                        AxisKind::Continuous { lo, hi } => (lo, hi),
+                        _ => unreachable!(),
+                    };
+                    ((v - lo) / (hi - lo) * n as f64) as usize
+                }
+                ref other => panic!("{other:?}"),
+            })
+            .collect()
+    };
+    assert_ne!(strata_of(0), strata_of(1));
+}
+
+#[test]
+fn different_seeds_and_indices_vary_the_points() {
+    let space = mixed_space();
+    for sampler in [
+        Box::new(UniformSampler) as Box<dyn Sampler>,
+        Box::new(LatinHypercubeSampler { strata: 32 }),
+    ] {
+        let a = sampler.sample(&space, 1, 0);
+        let b = sampler.sample(&space, 2, 0);
+        assert_ne!(a.values, b.values, "{} seed sensitivity", sampler.name());
+        let c = sampler.sample(&space, 1, 1);
+        assert_ne!(a.values, c.values, "{} index sensitivity", sampler.name());
+    }
+}
+
+#[test]
+fn grid_enumerates_the_full_lattice_then_wraps() {
+    let space = ScenarioSpace::new(
+        "g",
+        vec![
+            Axis::continuous("x", 0.0, 1.0),
+            Axis::integer("k", 0, 2),
+            Axis::choice("c", &["a", "b"]),
+        ],
+    );
+    let g = GridSampler { points_per_axis: 3 };
+    let total = g.total_points(&space);
+    assert_eq!(total, 3 * 3 * 2);
+    let mut seen = std::collections::BTreeSet::new();
+    for i in 0..total {
+        let p = g.sample(&space, 0, i);
+        let key: Vec<String> = p.values.iter().map(|v| v.render()).collect();
+        assert!(seen.insert(key.join("|")), "lattice point {i} repeated");
+    }
+    assert_eq!(seen.len() as u64, total);
+    assert_eq!(g.sample(&space, 0, total).values, g.sample(&space, 0, 0).values);
+}
+
+#[test]
+fn sampler_kind_matches_concrete_samplers() {
+    let space = mixed_space();
+    assert_eq!(
+        SamplerKind::Lhs { strata: 8 }.sample(&space, 4, 2),
+        LatinHypercubeSampler { strata: 8 }.sample(&space, 4, 2)
+    );
+    assert_eq!(
+        SamplerKind::Uniform.sample(&space, 4, 2),
+        UniformSampler.sample(&space, 4, 2)
+    );
+    assert_eq!(
+        SamplerKind::Grid { points_per_axis: 5 }.sample(&space, 4, 2),
+        GridSampler { points_per_axis: 5 }.sample(&space, 4, 2)
+    );
+}
