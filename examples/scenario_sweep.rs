@@ -9,15 +9,19 @@
 //! bottleneck, on/off-ramp weave, ring shockwave), Latin-hypercube
 //! sampled, each point materialized **coordination-free** from `(seed,
 //! run index)` and launched through the real instance path (container
-//! env → Xvfb display → TraCI server → Webots front-end, native
-//! physics).  The aggregated dataset is ML-ready: every row carries its
-//! generating `ScenarioId` + parameter vector, and the `scenarios`
-//! manifest (util::Json) is the matching codebook.
+//! env → Xvfb display → TraCI server → Webots front-end).  Physics runs
+//! on the geometry-generic AOT/PJRT fast path when `make artifacts` has
+//! been run (the schema-2 executables take each family's geometry as a
+//! runtime operand), falling back to the native stepper otherwise.  The
+//! aggregated dataset is ML-ready: every row carries its generating
+//! `ScenarioId` + parameter vector, and the `scenarios` manifest
+//! (util::Json) is the matching codebook.
 
 use webots_hpc::container::{build_webots_hpc_image, BuildHost, ExecEnv};
 use webots_hpc::display::DisplayRegistry;
 use webots_hpc::output::CampaignDataset;
 use webots_hpc::pipeline::{launch_instance, InstanceConfig, PhysicsEngine};
+use webots_hpc::runtime::EngineService;
 use webots_hpc::scenario::{
     scenarios_manifest, FamilyRegistry, SamplerKind, ScenarioMatrix,
 };
@@ -53,6 +57,14 @@ fn main() -> anyhow::Result<()> {
     let displays = DisplayRegistry::new();
     let mut dataset = CampaignDataset::new();
 
+    // the geometry-generic artifacts serve every family from one pooled
+    // executable per bucket; without artifacts the sweep stays native
+    let service = EngineService::auto().ok();
+    match &service {
+        Some(s) => println!("physics: AOT/PJRT ({} platform)\n", s.platform()),
+        None => println!("physics: native stepper (run `make artifacts` for PJRT)\n"),
+    }
+
     for run_index in 0..matrix.total_points() {
         // each "array node" derives its own point from (seed, index)
         let planned = matrix.materialize(&registry, run_index)?;
@@ -69,7 +81,14 @@ fn main() -> anyhow::Result<()> {
         cfg.horizon_s = cfg.horizon_s.min(HORIZON_CAP_S);
         cfg.max_steps = (cfg.horizon_s * 10.0) as u64 + 100;
 
-        let result = launch_instance(&cfg, &displays, &env, &PhysicsEngine::Native)?;
+        // a point sized past the largest lowered bucket stays native
+        let physics = match &service {
+            Some(s) if s.manifest().buckets.contains(&cfg.capacity) => {
+                PhysicsEngine::Hlo(s.clone())
+            }
+            _ => PhysicsEngine::Native,
+        };
+        let result = launch_instance(&cfg, &displays, &env, &physics)?;
         println!(
             "{:<34} {:>4} rows  {:>3} spawned  {:>5.1} flow  params: {}",
             result.dataset.run_id,
@@ -111,6 +130,13 @@ fn main() -> anyhow::Result<()> {
     println!("\n--- scenarios manifest (first 24 lines) ---");
     for line in text.lines().take(24) {
         println!("{line}");
+    }
+    if let Some(s) = &service {
+        // pooled-executable observability: misses stay bounded by the
+        // number of (kernel, bucket) pairs even across mixed families
+        if let Ok(usage) = s.pool_usage() {
+            println!("\n{}", usage.render());
+        }
     }
     println!("\nscenario sweep complete: {} runs aggregated", dataset.num_runs());
     Ok(())

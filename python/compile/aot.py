@@ -2,10 +2,12 @@
 
 Emits one artifact per (function, vehicle-count) bucket:
 
-  artifacts/step_{N}.hlo.txt   — full merge-sim step (model.step)
+  artifacts/step_{N}.hlo.txt   — full sim step (model.step_geom,
+                                 geometry-generic: scenario constants are
+                                 an f32[5] runtime operand, schema 2)
   artifacts/idm_{N}.hlo.txt    — bare L1 IDM kernel (rust microbench target)
   artifacts/radar_{N}.hlo.txt  — bare L1 radar kernel
-  artifacts/manifest.json      — shapes, column layout, road constants
+  artifacts/manifest.json      — shapes, column layout, geometry layout
 
 HLO TEXT is the interchange format, NOT serialized HloModuleProto: jax
 >= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
@@ -45,10 +47,18 @@ def to_hlo_text(lowered) -> str:
     return comp.as_hlo_text()
 
 
+#: geometry-operand width (see model.GEOM_COLUMNS).
+GEOM = len(model.GEOM_COLUMNS)
+
+
 def lower_step(n: int) -> str:
+    """The geometry-generic step: state/params plus the f32[GEOM]
+    geometry operand — one executable per bucket serves every scenario
+    family (no per-geometry recompile)."""
     state = jax.ShapeDtypeStruct((n, 4), jnp.float32)
     params = jax.ShapeDtypeStruct((n, 6), jnp.float32)
-    return to_hlo_text(jax.jit(model.step).lower(state, params))
+    geom = jax.ShapeDtypeStruct((GEOM,), jnp.float32)
+    return to_hlo_text(jax.jit(model.step_geom).lower(state, params, geom))
 
 
 #: batch width of the vmapped step (the engine service's dynamic
@@ -57,12 +67,16 @@ BATCH = 8
 
 
 def lower_step_batched(b: int, n: int) -> str:
-    """vmap(step) over a leading instance axis: one PJRT dispatch serves
-    `b` co-located simulation instances (perf pass, EXPERIMENTS.md §Perf).
+    """vmap(step_geom) over a leading instance axis: one PJRT dispatch
+    serves `b` co-located simulation instances (perf pass, EXPERIMENTS.md
+    §Perf).  The geometry rows are batched too (f32[b, GEOM]), so
+    co-located instances running *different* scenario families still
+    coalesce into a single dispatch.
     """
     state = jax.ShapeDtypeStruct((b, n, 4), jnp.float32)
     params = jax.ShapeDtypeStruct((b, n, 6), jnp.float32)
-    return to_hlo_text(jax.jit(jax.vmap(model.step)).lower(state, params))
+    geom = jax.ShapeDtypeStruct((b, GEOM), jnp.float32)
+    return to_hlo_text(jax.jit(jax.vmap(model.step_geom)).lower(state, params, geom))
 
 
 def lower_idm(n: int) -> str:
@@ -89,9 +103,16 @@ def main() -> None:
 
     manifest: dict = {
         "format": "hlo-text",
+        # schema 2: step/stepb artifacts take the geometry operand; the
+        # rust runtime (runtime/manifest.rs) refuses older artifacts.
+        "schema": 2,
         "state_columns": ["x", "v", "lane", "active"],
         "param_columns": ["v0", "T", "a_max", "b", "s0", "length"],
         "obs_columns": ["n_active", "mean_speed", "flow", "n_merged"],
+        "geometry_columns": list(model.GEOM_COLUMNS),
+        # default-geometry constants, kept as the model.py ↔ rust
+        # MergeScenario drift check (the artifacts themselves are
+        # geometry-generic)
         "dt": model.DT,
         "road_end": model.ROAD_END,
         "merge_start": model.MERGE_START,
@@ -102,6 +123,7 @@ def main() -> None:
     }
 
     manifest["batch"] = BATCH
+    operands = {"step": 3, "stepb": 3, "idm": 2, "radar": 1}
     for n in sorted(args.buckets):
         for name, lower in (("step", lower_step), ("idm", lower_idm), ("radar", lower_radar)):
             path = out / f"{name}_{n}.hlo.txt"
@@ -111,6 +133,7 @@ def main() -> None:
                 "file": path.name,
                 "n": n,
                 "outputs": 4 if name == "step" else 1,
+                "operands": operands[name],
             }
             print(f"wrote {path} ({len(text)} chars)")
         # the batched step (engine-service micro-batching)
@@ -121,6 +144,7 @@ def main() -> None:
             "file": path.name,
             "n": n,
             "outputs": 4,
+            "operands": operands["stepb"],
         }
         print(f"wrote {path} ({len(text)} chars, batch={BATCH})")
 

@@ -18,11 +18,20 @@ The function is lowered ONCE per vehicle-count bucket by ``aot.py`` into
 ``artifacts/step_{N}.hlo.txt`` and executed from rust via PJRT — python is
 never on the request path.
 
-Road geometry (constants below, also exported to rust through
-``artifacts/manifest.json``): lane 0 is the on-ramp/acceleration lane,
-lanes 1..NUM_MAIN_LANES are the mainline.  The merge zone is
-[MERGE_START, MERGE_END]; ramp vehicles must be in lane >= 1 by
-MERGE_END or stop.
+Road geometry: lane 0 is the on-ramp/acceleration lane, lanes
+1..num_main_lanes are the mainline.  The merge zone is [merge_start,
+merge_end]; ramp vehicles must be in lane >= 1 by merge_end or stop.
+
+Geometry is a **runtime operand**, not a compile-time constant
+(``step_geom``): the scenario constants arrive as an f32[5] vector
+(layout ``GEOM_COLUMNS``, exported to rust through
+``artifacts/manifest.json`` as ``geometry_columns``), so ONE compiled
+executable per vehicle-count bucket serves every scenario family —
+highway-merge, lane-drop, ramp-weave, ring-shockwave — with no
+per-geometry recompile.  ``step`` keeps the classic constant-geometry
+signature as a thin wrapper over ``step_geom`` (the python tests' and
+the vmapped batched artifact's reference semantics are unchanged for
+the default geometry).
 """
 
 from __future__ import annotations
@@ -46,13 +55,28 @@ from .kernels.ref import (
     X,
 )
 
-# --- road geometry / integration constants (exported in manifest.json) ---
+# --- default road geometry / integration constants (recorded in
+# manifest.json as the drift-check reference; the lowered artifacts take
+# the live values as the geometry operand) ---
 DT = 0.1                 #: integration step [s]
 ROAD_END = 1000.0        #: vehicles deactivate past this x [m]
 MERGE_START = 300.0      #: start of the acceleration-lane merge zone [m]
 MERGE_END = 500.0        #: hard end of the on-ramp [m]
 NUM_MAIN_LANES = 2       #: mainline lanes are 1..NUM_MAIN_LANES
 RAMP_LANE = 0.0
+
+#: geometry-operand layout — keep in sync with `rust/src/sumo/state.rs`
+#: (GEOM_COLS/G_*) and `artifacts/manifest.json` "geometry_columns".
+GEOM_COLUMNS = ["road_end", "merge_start", "merge_end", "num_main_lanes", "dt"]
+G_ROAD_END, G_MERGE_START, G_MERGE_END, G_NUM_MAIN_LANES, G_DT = range(5)
+
+
+def default_geometry() -> jnp.ndarray:
+    """The classic ch. 5 merge geometry as an operand row (f32[5])."""
+    return jnp.array(
+        [ROAD_END, MERGE_START, MERGE_END, float(NUM_MAIN_LANES), DT],
+        dtype=jnp.float32,
+    )
 #: MOBIL parameters
 MOBIL_SAFE_DECEL = 4.0   #: follower in target lane may not brake harder [m/s^2]
 MOBIL_THRESHOLD = 0.2    #: discretionary incentive threshold [m/s^2]
@@ -109,23 +133,31 @@ def _idm_for(v, gap, dv, params):
     return a_max * (1.0 - (v / v0) ** 4 - inter)
 
 
-def _wall_accel(state, params):
-    """IDM deceleration against the phantom wall at MERGE_END (ramp only)."""
+def _wall_accel(state, params, merge_end):
+    """IDM deceleration against the phantom wall at ``merge_end`` (ramp only)."""
     x = state[:, X]
     v = state[:, V]
     on_ramp = jnp.abs(state[:, LANE] - RAMP_LANE) < 0.5
-    gap = jnp.where(on_ramp, MERGE_END - x, FREE_GAP)
+    gap = jnp.where(on_ramp, merge_end - x, FREE_GAP)
     gap = jnp.maximum(gap, MIN_GAP * 0.1)
     return _idm_for(v, gap, v, params)  # wall speed = 0 → dv = v
 
 
-def step(state: jnp.ndarray, params: jnp.ndarray):
-    """Advance the merge simulation by DT.
+def step_geom(state: jnp.ndarray, params: jnp.ndarray, geom: jnp.ndarray):
+    """Advance the simulation by one step under a runtime geometry.
 
     Inputs : state f32[N,4], params f32[N,6]  (layout in kernels/ref.py)
+             geom  f32[5]  = [road_end, merge_start, merge_end,
+                              num_main_lanes, dt]  (GEOM_COLUMNS)
     Outputs: (new_state f32[N,4], accel f32[N], radar f32[N,2], obs f32[4])
-             obs = [n_active, mean_speed, flow (crossed ROAD_END), n_merged]
+             obs = [n_active, mean_speed, flow (crossed road_end), n_merged]
     """
+    road_end = geom[G_ROAD_END]
+    merge_start = geom[G_MERGE_START]
+    merge_end = geom[G_MERGE_END]
+    num_main_lanes = geom[G_NUM_MAIN_LANES]
+    dt = geom[G_DT]
+
     x = state[:, X]
     v = state[:, V]
     lane = state[:, LANE]
@@ -137,14 +169,14 @@ def step(state: jnp.ndarray, params: jnp.ndarray):
     radar = radar_scan(state)
 
     # ramp wall constraint
-    a_wall = _wall_accel(state, params)
+    a_wall = _wall_accel(state, params, merge_end)
     accel = jnp.minimum(a_follow, a_wall)
 
     # --- MOBIL lane changes ----------------------------------------------
     on_ramp = jnp.abs(lane - RAMP_LANE) < 0.5
-    in_merge_zone = on_ramp & (x >= MERGE_START) & (x <= MERGE_END)
+    in_merge_zone = on_ramp & (x >= merge_start) & (x <= merge_end)
     # mandatory target for ramp vehicles is lane 1; mainline considers lane+-1
-    tgt_up = jnp.where(on_ramp, 1.0, jnp.minimum(lane + 1.0, float(NUM_MAIN_LANES)))
+    tgt_up = jnp.where(on_ramp, 1.0, jnp.minimum(lane + 1.0, num_main_lanes))
     tgt_down = jnp.where(on_ramp, 1.0, jnp.maximum(lane - 1.0, 1.0))
 
     def incentive(target_lane):
@@ -172,10 +204,10 @@ def step(state: jnp.ndarray, params: jnp.ndarray):
     new_lane = jnp.where(disc_dn, tgt_down, new_lane)
 
     # --- integration -------------------------------------------------------
-    new_v = jnp.maximum(v + accel * DT, 0.0)
+    new_v = jnp.maximum(v + accel * dt, 0.0)
     new_v = jnp.where(active, new_v, 0.0)
-    new_x = x + new_v * DT
-    crossed = active & (new_x >= ROAD_END) & (x < ROAD_END)
+    new_x = x + new_v * dt
+    crossed = active & (new_x >= road_end) & (x < road_end)
     new_act = jnp.where(crossed, 0.0, act)
     new_x = jnp.where(active, new_x, x)
 
@@ -188,3 +220,9 @@ def step(state: jnp.ndarray, params: jnp.ndarray):
     obs = jnp.stack([n_active, mean_v, flow, n_merged])
 
     return new_state, jnp.where(active, accel, 0.0), radar, obs
+
+
+def step(state: jnp.ndarray, params: jnp.ndarray):
+    """Advance the merge simulation by DT under the default geometry
+    (the classic fixed-world signature; see ``step_geom``)."""
+    return step_geom(state, params, default_geometry())

@@ -17,6 +17,9 @@ def test_lower_step_contains_bucket_shape():
     assert "HloModule" in text
     assert "f32[16,4]" in text
     assert "f32[16,6]" in text
+    # the geometry operand (schema 2): scenario constants arrive at
+    # runtime instead of being baked in
+    assert f"f32[{aot.GEOM}]" in text
 
 
 def test_lower_idm_single_output_tuple():
@@ -42,6 +45,8 @@ def test_step_is_pure_hlo_no_custom_calls():
 def test_manifest_consistent_with_artifacts():
     manifest = json.loads((ART / "manifest.json").read_text())
     assert manifest["format"] == "hlo-text"
+    assert manifest["schema"] == 2
+    assert manifest["geometry_columns"] == model.GEOM_COLUMNS
     assert manifest["dt"] == model.DT
     assert manifest["merge_end"] == model.MERGE_END
     for key, entry in manifest["entries"].items():
@@ -57,6 +62,8 @@ def test_lower_step_batched_shapes():
     text = aot.lower_step_batched(aot.BATCH, 16)
     assert f"f32[{aot.BATCH},16,4]" in text
     assert f"f32[{aot.BATCH},16,6]" in text
+    # per-lane geometry rows: mixed-family batches coalesce
+    assert f"f32[{aot.BATCH},{aot.GEOM}]" in text
     assert "custom-call" not in text.lower()
 
 

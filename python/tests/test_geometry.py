@@ -1,0 +1,159 @@
+"""Geometry-operand semantics: ``model.step_geom`` must honour the
+runtime geometry vector exactly where the old constant-geometry ``step``
+honoured the module constants.
+
+These tests are hypothesis-free on purpose: they are the pre-flight
+oracle for the rust-side scenario-family agreement tests
+(`rust/tests/scenario_families.rs`) and run on containers without the
+full property-testing stack.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def make_state(rng: np.random.Generator, n: int, lanes: int = 3, p_active: float = 0.8):
+    """Random-but-plausible traffic (the test_kernel generator, inlined
+    so this file stays importable without hypothesis)."""
+    x = np.sort(rng.uniform(0.0, 950.0, n)).astype(np.float32)
+    x += np.arange(n, dtype=np.float32) * 1e-2
+    v = rng.uniform(0.0, 32.0, n).astype(np.float32)
+    lane = rng.integers(0, lanes, n).astype(np.float32)
+    act = (rng.uniform(size=n) < p_active).astype(np.float32)
+    state = jnp.stack(
+        [jnp.asarray(x), jnp.asarray(v), jnp.asarray(lane), jnp.asarray(act)], axis=1
+    )
+    params = jnp.stack(
+        [
+            jnp.asarray(rng.uniform(20.0, 38.0, n).astype(np.float32)),
+            jnp.asarray(rng.uniform(0.9, 2.2, n).astype(np.float32)),
+            jnp.asarray(rng.uniform(1.0, 2.5, n).astype(np.float32)),
+            jnp.asarray(rng.uniform(1.5, 3.5, n).astype(np.float32)),
+            jnp.asarray(rng.uniform(1.5, 3.0, n).astype(np.float32)),
+            jnp.asarray(rng.uniform(4.0, 9.0, n).astype(np.float32)),
+        ],
+        axis=1,
+    )
+    return state, params
+
+
+def geom(road_end, merge_start, merge_end, lanes, dt):
+    return jnp.array(
+        [road_end, merge_start, merge_end, float(lanes), dt], dtype=jnp.float32
+    )
+
+
+def test_default_geometry_matches_step_wrapper():
+    """step() is a thin wrapper: bit-identical to step_geom(default)."""
+    rng = np.random.default_rng(7)
+    state, params = make_state(rng, 48)
+    a = model.step(state, params)
+    b = model.step_geom(state, params, model.default_geometry())
+    for got, want in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_retirement_follows_operand_road_end():
+    """A vehicle short of the default ROAD_END retires when the operand
+    road_end is pulled in front of it (the lane-drop/ring case)."""
+    state = jnp.array([[390.0, 30.0, 1.0, 1.0]], dtype=jnp.float32)
+    params = jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5]], dtype=jnp.float32)
+    # default geometry: 390 m is mid-road, vehicle stays active
+    ns, _, _, obs = model.step_geom(state, params, model.default_geometry())
+    assert float(ns[0, 3]) == 1.0
+    assert float(obs[2]) == 0.0
+    # lane-drop-style geometry with road_end just ahead: it retires
+    ns, _, _, obs = model.step_geom(state, params, geom(392.0, 100.0, 200.0, 2, 0.1))
+    assert float(ns[0, 3]) == 0.0
+    assert float(obs[2]) == 1.0
+
+
+def test_wall_and_merge_zone_follow_operands():
+    """The phantom wall and the mandatory-merge window move with the
+    merge_start/merge_end operands."""
+    params = jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5]], dtype=jnp.float32)
+    # ramp vehicle at x=150: outside the default zone (no merge), but
+    # inside a shifted [100, 200] zone (merges into the empty mainline)
+    state = jnp.array([[150.0, 20.0, 0.0, 1.0]], dtype=jnp.float32)
+    ns, *_ = model.step_geom(state, params, model.default_geometry())
+    assert float(ns[0, 2]) == 0.0
+    ns, _, _, obs = model.step_geom(state, params, geom(1000.0, 100.0, 200.0, 2, 0.1))
+    assert float(ns[0, 2]) == 1.0
+    assert float(obs[3]) == 1.0
+    # the wall follows merge_end: approaching a wall at 200 m from 150 m
+    # at speed brakes hard; the default wall at 500 m does not
+    state = jnp.array([[150.0, 30.0, 0.0, 1.0]], dtype=jnp.float32)
+    # jammed mainline so the merge is unsafe either way
+    jam = jnp.array(
+        [[x, 0.0, 1.0, 1.0] for x in np.linspace(90.0, 260.0, 40)], dtype=jnp.float32
+    )
+    state = jnp.concatenate([state, jam])
+    params = jnp.tile(params, (state.shape[0], 1))
+    _, accel_near, _, _ = model.step_geom(state, params, geom(1000.0, 100.0, 200.0, 2, 0.1))
+    _, accel_far, _, _ = model.step_geom(state, params, model.default_geometry())
+    assert float(accel_near[0]) < float(accel_far[0]) - 1.0
+
+
+def test_extra_mainline_lane_opens_with_operand():
+    """num_main_lanes as an operand: a vehicle stuck behind a crawler in
+    lane 2 may overtake into lane 3 only when the geometry says there is
+    a lane 3 (the highway-merge main_lanes axis)."""
+    # crawlers block lanes 1 and 2, so the only escape is upward
+    state = jnp.array(
+        [
+            [100.0, 25.0, 2.0, 1.0],
+            [112.0, 1.0, 2.0, 1.0],
+            [112.0, 1.0, 1.0, 1.0],
+        ],
+        dtype=jnp.float32,
+    )
+    params = jnp.tile(
+        jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5]], jnp.float32), (3, 1)
+    )
+    ns, *_ = model.step_geom(state, params, geom(1000.0, 300.0, 500.0, 2, 0.1))
+    assert float(ns[0, 2]) == 2.0  # no lane 3 in a 2-lane world
+    ns, *_ = model.step_geom(state, params, geom(1000.0, 300.0, 500.0, 3, 0.1))
+    assert float(ns[0, 2]) == 3.0  # 3-lane world: overtake up
+
+
+def test_dt_operand_scales_integration():
+    state = jnp.array([[100.0, 20.0, 1.0, 1.0]], dtype=jnp.float32)
+    params = jnp.array([[20.0, 1.5, 1.5, 2.0, 2.0, 4.5]], dtype=jnp.float32)
+    # v == v0 → zero accel → displacement is v * dt exactly
+    ns1, *_ = model.step_geom(state, params, geom(1000.0, 300.0, 500.0, 2, 0.1))
+    ns2, *_ = model.step_geom(state, params, geom(1000.0, 300.0, 500.0, 2, 0.2))
+    d1 = float(ns1[0, 0]) - 100.0
+    d2 = float(ns2[0, 0]) - 100.0
+    assert abs(d1 - 2.0) < 1e-4
+    assert abs(d2 - 4.0) < 1e-4
+
+
+def test_batched_mixed_geometry_matches_singles():
+    """vmap over geometry rows: a mixed-family batch must equal per-world
+    single steps — the micro-batcher's coalescing contract."""
+    import jax
+
+    rng = np.random.default_rng(17)
+    geoms = [
+        model.default_geometry(),                 # highway-merge default
+        geom(700.0, 300.0, 400.0, 3, 0.1),        # lane-drop-ish
+        geom(1000.0, 300.0, 650.0, 2, 0.1),       # ramp-weave-ish
+        geom(1800.0, 0.0, 0.0, 1, 0.1),           # ring-shockwave-ish
+    ]
+    states, params = [], []
+    for _ in geoms:
+        s, p = make_state(rng, 16)
+        states.append(s)
+        params.append(p)
+    bs, bp, bg = jnp.stack(states), jnp.stack(params), jnp.stack(geoms)
+    batched = jax.vmap(model.step_geom)(bs, bp, bg)
+    for i, g in enumerate(geoms):
+        single = model.step_geom(states[i], params[i], g)
+        for got, want in zip(batched, single):
+            np.testing.assert_allclose(
+                np.asarray(got[i]), np.asarray(want), rtol=1e-5, atol=1e-5
+            )

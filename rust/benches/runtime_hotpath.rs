@@ -15,10 +15,18 @@
 //!     reference scans vs the sorted-sweep index (PR 1 tentpole).
 //!   * `hlo_step_8threads_x10/N=*` (persistent sessions) vs
 //!     `hlo_step_8threads_x10_oneshot/N=*` (per-call channels+copies).
+//!   * `native_step_scenario/<family>/N=*` vs
+//!     `hlo_step_scenario/<family>/N=*` — non-default scenario
+//!     geometries on the pooled PJRT fast path (PR 3 tentpole: before
+//!     the geometry operand, every scenario-matrix run was native-only).
+//!   * `hlo_step_mixed_families_8threads_x10/N=*` — four different
+//!     geometries coalescing into single batched dispatches.
 
 mod common;
 
 use webots_hpc::runtime::EngineService;
+use webots_hpc::scenario::{FamilyRegistry, UniformSampler};
+use webots_hpc::sumo::mobil::MobilParams;
 use webots_hpc::sumo::state::{DriverParams, Traffic};
 use webots_hpc::sumo::{NativeIdmStepper, ReferenceIdmStepper, Stepper};
 use webots_hpc::util::Rng64;
@@ -115,6 +123,100 @@ fn main() {
                 b
             );
         }
+    }
+
+    // non-default scenario geometries on the pooled fast path (PR 3):
+    // the SAME compiled (step, bucket) executable serves every family —
+    // before the geometry operand these runs were native-only
+    let registry = FamilyRegistry::builtin();
+    for family in ["lane-drop", "ring-shockwave"] {
+        let (_, cfg) = registry
+            .materialize(family, &UniformSampler, 3, 0)
+            .expect("builtin family compiles");
+        if !service.manifest().buckets.contains(&cfg.capacity) {
+            println!(
+                "note: {family} point needs capacity {} (lowered: {:?}); bench skipped",
+                cfg.capacity,
+                service.manifest().buckets
+            );
+            continue;
+        }
+        let bucket = cfg.capacity;
+        let t = traffic(bucket, 0.7, 0xFA0 + bucket as u64);
+        let mut sess = service
+            .session_for(bucket, cfg.geometry.geometry_vec())
+            .unwrap();
+        let s = rec.bench(
+            &format!("hlo_step_scenario/{family}/N={bucket}"),
+            200,
+            1.0,
+            || {
+                let _ = sess.step(&t.state, &t.params).unwrap();
+            },
+        );
+        println!(
+            "    -> {:.0} steps/s on the {family} geometry (pooled executable)",
+            common::throughput(&s, 1.0)
+        );
+        let mut nat = NativeIdmStepper::new(cfg.geometry, MobilParams::default());
+        rec.bench(
+            &format!("native_step_scenario/{family}/N={bucket}"),
+            200,
+            1.0,
+            || {
+                let mut tt = t.clone();
+                let _ = nat.step(&mut tt);
+            },
+        );
+    }
+
+    // mixed-family coalescing: 8 threads, 2 sessions per family, four
+    // DIFFERENT geometry rows per batched dispatch
+    {
+        // single-bucket artifact sets (e.g. `--buckets 16`) fall back to
+        // the only bucket instead of panicking on buckets[1]
+        let buckets = &service.manifest().buckets;
+        let bucket = buckets.get(1).copied().unwrap_or(buckets[0]);
+        let t = traffic(bucket, 0.7, 7);
+        let geoms: Vec<_> = registry
+            .ids()
+            .iter()
+            .enumerate()
+            .map(|(k, id)| {
+                registry
+                    .materialize(id, &UniformSampler, 5, k as u64)
+                    .expect("builtin family compiles")
+                    .1
+                    .geometry
+                    .geometry_vec()
+            })
+            .collect();
+        let mut sessions: Vec<_> = (0..8)
+            .map(|k| service.session_for(bucket, geoms[k % geoms.len()]).unwrap())
+            .collect();
+        const ROUNDS: u32 = 10;
+        let s = rec.bench(
+            &format!("hlo_step_mixed_families_8threads_x10/N={bucket}"),
+            30,
+            8.0 * ROUNDS as f64,
+            || {
+                std::thread::scope(|scope| {
+                    for sess in sessions.iter_mut() {
+                        let state = &t.state;
+                        let params = &t.params;
+                        scope.spawn(move || {
+                            for _ in 0..ROUNDS {
+                                let _ = sess.step(state, params).unwrap();
+                            }
+                        });
+                    }
+                });
+            },
+        );
+        println!(
+            "    -> {:.0} aggregate steps/s across 8 threads, 4 geometries coalescing",
+            common::throughput(&s, 8.0 * ROUNDS as f64)
+        );
     }
 
     // end-to-end coupled instance (webots↔traci↔sumo↔physics): the L3
@@ -216,6 +318,12 @@ fn main() {
         "    -> {:.0} aggregate steps/s across 8 threads (one-shot)",
         common::throughput(&s, 8.0 * ROUNDS as f64)
     );
+
+    // compile-amortization observability: the whole harness (all
+    // geometries included) should have compiled once per (kernel, bucket)
+    if let Ok(usage) = service.pool_usage() {
+        println!("{}", usage.render());
+    }
 
     if let Err(e) = rec.write() {
         eprintln!("WARNING: bench results were NOT recorded: {e}");

@@ -342,6 +342,11 @@ fn run_local(args: &Args) -> Result<()> {
         "hlo" => PhysicsEngine::Hlo(EngineService::auto()?),
         other => bail!("unknown engine '{other}' (native|hlo)"),
     };
+    // keep a handle for the post-campaign pool-observability summary
+    let service = match &physics {
+        PhysicsEngine::Hlo(s) => Some(s.clone()),
+        PhysicsEngine::Native => None,
+    };
     // pick a free base port so repeated invocations don't collide
     let base = std::net::TcpListener::bind("127.0.0.1:0")?
         .local_addr()?
@@ -403,5 +408,13 @@ fn run_local(args: &Args) -> Result<()> {
         dataset.total_bytes(),
         dataset.seeds_unique()
     );
+    if let Some(s) = service {
+        // compile-amortization observability: hundreds of instances
+        // should miss once per (kernel, bucket) and hit ever after
+        match s.pool_usage() {
+            Ok(usage) => println!("{}", usage.render()),
+            Err(e) => println!("engine pool stats unavailable: {e}"),
+        }
+    }
     Ok(())
 }

@@ -12,5 +12,5 @@
 mod reporter;
 mod usage;
 
-pub use reporter::{UsageReporter, UsageSummary};
+pub use reporter::{PoolUsage, UsageReporter, UsageSummary};
 pub use usage::{CostModel, FixedWorkload, ResourceUsage, SimWorkload, WorkloadModel};

@@ -1,6 +1,47 @@
-//! Aggregation of job records into the per-setup averages of Table 5.3.
+//! Aggregation of job records into the per-setup averages of Table 5.3,
+//! plus runtime-engine observability ([`PoolUsage`]).
 
 use crate::pbs::JobRecord;
+
+/// Executable-pool hit/miss counters surfaced from the PJRT engine
+/// (`runtime::ExecutablePool::stats`) — the compile-amortization
+/// observable of the pooled fast path.  A healthy campaign compiles
+/// each (kernel, bucket) pair once and then hits for every step; a
+/// growing miss count means the pool key space is fragmenting (or the
+/// pool was bypassed).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PoolUsage {
+    /// Steady-state cache hits (read-lock + `Arc` clone).
+    pub hits: u64,
+    /// Compilations (tens of milliseconds each).
+    pub misses: u64,
+    /// Distinct executables resident in the pool.
+    pub compiled: usize,
+}
+
+impl PoolUsage {
+    /// Fraction of lookups served from the pool (1.0 when there were no
+    /// lookups at all — an idle pool is not a cold pool).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            1.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// One-line campaign-summary form.
+    pub fn render(&self) -> String {
+        format!(
+            "engine pool: {} hits / {} misses ({:.1}% hit rate), {} executables resident",
+            self.hits,
+            self.misses,
+            100.0 * self.hit_rate(),
+            self.compiled
+        )
+    }
+}
 
 /// Averaged resource consumption over a set of runs — one column of the
 /// paper's Table 5.3.
@@ -76,5 +117,21 @@ mod tests {
     #[test]
     fn empty_records() {
         assert_eq!(UsageReporter::summarize(&[]).runs, 0);
+    }
+
+    #[test]
+    fn pool_usage_hit_rate_and_render() {
+        let idle = PoolUsage::default();
+        assert_eq!(idle.hit_rate(), 1.0);
+        let p = PoolUsage {
+            hits: 99,
+            misses: 1,
+            compiled: 1,
+        };
+        assert!((p.hit_rate() - 0.99).abs() < 1e-12);
+        let line = p.render();
+        assert!(line.contains("99 hits"), "{line}");
+        assert!(line.contains("99.0% hit rate"), "{line}");
+        assert!(line.contains("1 executables resident"), "{line}");
     }
 }

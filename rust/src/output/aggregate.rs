@@ -91,27 +91,36 @@ impl CampaignDataset {
         names.into_iter().collect()
     }
 
-    /// The ML-ready long-form export: one CSV row per logged step, each
-    /// carrying its run provenance (qualified run id, scenario id,
-    /// sample index, node, seed) **and the generating parameter
-    /// vector** — the §1 promise ("aggregated output datasets ... for
-    /// ML applications") made self-describing.  Parameter cells are
-    /// empty for runs whose scenario lacks that axis (and for untagged
-    /// runs); the scenarios manifest is the matching codebook.
-    pub fn to_ml_csv(&self) -> String {
+    /// Stream the ML-ready long-form export into `w`: one CSV row per
+    /// logged step, each carrying its run provenance (qualified run id,
+    /// scenario id, sample index, node, seed) **and the generating
+    /// parameter vector** — the §1 promise ("aggregated output datasets
+    /// ... for ML applications") made self-describing.  Parameter cells
+    /// are empty for runs whose scenario lacks that axis (and for
+    /// untagged runs); the scenarios manifest is the matching codebook.
+    ///
+    /// Streaming on purpose: a 12-hour campaign logs millions of rows,
+    /// and materializing them as one giant `String` doubled the peak
+    /// memory of the export.  Per-run constants (provenance prefix and
+    /// parameter cells) are rendered once per run, not once per row, and
+    /// the sink is wrapped in a [`std::io::BufWriter`] so a raw `File`
+    /// doesn't pay one syscall per row.
+    pub fn write_ml_csv<W: std::io::Write>(&self, w: &mut W) -> std::io::Result<()> {
+        let mut w = std::io::BufWriter::new(w);
+        let w = &mut w;
         let params = self.param_columns();
-        let mut s = String::from("run_id,scenario,sample_index,node,seed,time_s,n_active,mean_speed,flow,n_merged");
+        write!(w, "run_id,scenario,sample_index,node,seed,time_s,n_active,mean_speed,flow,n_merged")?;
         for p in &params {
-            s.push(',');
-            s.push_str(p);
+            write!(w, ",{p}")?;
         }
-        s.push('\n');
+        writeln!(w)?;
+        let mut cells = String::new();
         for r in &self.runs {
             let (scenario, sample): (String, String) = match &r.scenario {
                 Some(t) => (t.id.as_str().to_string(), t.sample_index.to_string()),
                 None => (String::new(), String::new()),
             };
-            let mut cells = String::new();
+            cells.clear();
             for p in &params {
                 cells.push(',');
                 if let Some(v) = r.param(p) {
@@ -119,14 +128,26 @@ impl CampaignDataset {
                 }
             }
             for row in &r.rows {
-                s.push_str(&format!(
-                    "{},{scenario},{sample},{},{},{:.1},{},{:.3},{},{}{cells}\n",
+                writeln!(
+                    w,
+                    "{},{scenario},{sample},{},{},{:.1},{},{:.3},{},{}{cells}",
                     r.run_id, r.node, r.seed, row.time_s, row.n_active, row.mean_speed,
                     row.flow, row.n_merged
-                ));
+                )?;
             }
         }
-        s
+        // surface flush errors here — BufWriter's Drop swallows them
+        w.flush()
+    }
+
+    /// The export as one in-memory `String` — a thin wrapper over
+    /// [`Self::write_ml_csv`] for small datasets and tests; campaign
+    /// exports should stream to a file/socket instead.
+    pub fn to_ml_csv(&self) -> String {
+        let mut buf = Vec::new();
+        self.write_ml_csv(&mut buf)
+            .expect("writing to a Vec cannot fail");
+        String::from_utf8(buf).expect("CSV output is UTF-8 by construction")
     }
 }
 
@@ -206,6 +227,40 @@ mod tests {
         // tagged run: qualified id + params
         assert!(lines[2].starts_with("e0[1]@ring-shockwave#5,ring-shockwave,5,1,2,"));
         assert!(lines[2].ends_with(",800,2"));
+    }
+
+    #[test]
+    fn streaming_csv_matches_string_form() {
+        use crate::scenario::{AxisValue, ScenarioId, ScenarioTag};
+        let mut c = CampaignDataset::new();
+        c.add(run("s[0]", 0, 3, 1.0));
+        c.add(run("s[1]", 1, 4, 2.0).with_scenario(ScenarioTag {
+            id: ScenarioId::new("lane-drop"),
+            sample_index: 2,
+            params: vec![("drop_pos_m".into(), AxisValue::Num(550.0))],
+        }));
+        let mut streamed = Vec::new();
+        c.write_ml_csv(&mut streamed).unwrap();
+        assert_eq!(String::from_utf8(streamed).unwrap(), c.to_ml_csv());
+    }
+
+    #[test]
+    fn streaming_csv_propagates_io_errors() {
+        /// A sink that rejects every write — the campaign-export failure
+        /// mode (disk full mid-stream) must surface, not panic, even
+        /// when the internal BufWriter defers the failure to flush time.
+        struct FullSink;
+        impl std::io::Write for FullSink {
+            fn write(&mut self, _buf: &[u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::other("sink full"))
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut c = CampaignDataset::new();
+        c.add(run("a", 0, 1, 1.0));
+        assert!(c.write_ml_csv(&mut FullSink).is_err());
     }
 
     #[test]

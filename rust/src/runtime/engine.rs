@@ -15,7 +15,7 @@ use std::path::PathBuf;
 use std::rc::Rc;
 use std::sync::Arc;
 
-use crate::sumo::state::{PARAM_COLS, STATE_COLS};
+use crate::sumo::state::{GeometryVec, GEOM_COLS, PARAM_COLS, STATE_COLS};
 use crate::{Error, Result};
 
 use super::manifest::Manifest;
@@ -57,6 +57,10 @@ impl Engine {
     pub fn new(dir: PathBuf) -> Result<Engine> {
         let manifest = Manifest::load(&dir)?;
         manifest.validate_against_default_scenario()?;
+        // geometry is a runtime operand (schema 2): one executable per
+        // (kernel, bucket) serves every scenario family, so the engine
+        // refuses legacy constant-geometry artifacts outright
+        manifest.validate_geometry_layout()?;
         let client = xla::PjRtClient::cpu().map_err(Error::runtime)?;
         Ok(Engine {
             client: Rc::new(client),
@@ -79,6 +83,18 @@ impl Engine {
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
+    }
+
+    /// Executable-pool hit/miss observability (the compile-amortization
+    /// counters nothing read before the PR 3 pass; surfaced in the
+    /// campaign summary via `EngineService::pool_usage`).
+    pub fn pool_usage(&self) -> crate::metrics::PoolUsage {
+        let (hits, misses) = self.pool.stats();
+        crate::metrics::PoolUsage {
+            hits,
+            misses,
+            compiled: self.pool.len(),
+        }
     }
 
     /// Compile (or fetch from the pool) the artifact `name_{bucket}`.
@@ -105,24 +121,32 @@ impl Engine {
             .map_err(Error::runtime)
     }
 
-    /// Execute one full merge-sim step at `bucket` capacity.
-    pub fn step(&self, bucket: usize, state: &[f32], params: &[f32]) -> Result<StepOutputs> {
+    /// Execute one full sim step at `bucket` capacity under `geom`.
+    pub fn step(
+        &self,
+        bucket: usize,
+        state: &[f32],
+        params: &[f32],
+        geom: &GeometryVec,
+    ) -> Result<StepOutputs> {
         let mut out = StepOutputs::default();
-        self.step_into(bucket, state, params, &mut out)?;
+        self.step_into(bucket, state, params, geom, &mut out)?;
         Ok(out)
     }
 
-    /// Execute one full merge-sim step at `bucket` capacity into the
-    /// caller's `StepOutputs` (the engine-service hot path).  The output
-    /// `Vec`s are replaced by the PJRT result vectors (an FFI-boundary
-    /// allocation the vendored `xla` crate can't avoid); the batched
-    /// variant [`Engine::step_batched_into`] additionally refills
-    /// per-lane buffers in place.
+    /// Execute one full sim step at `bucket` capacity into the caller's
+    /// `StepOutputs` (the engine-service hot path).  `geom` is the
+    /// scenario geometry operand — the same pooled executable serves any
+    /// geometry.  The output `Vec`s are replaced by the PJRT result
+    /// vectors (an FFI-boundary allocation the vendored `xla` crate
+    /// can't avoid); the batched variant [`Engine::step_batched_into`]
+    /// additionally refills per-lane buffers in place.
     pub fn step_into(
         &self,
         bucket: usize,
         state: &[f32],
         params: &[f32],
+        geom: &GeometryVec,
         out: &mut StepOutputs,
     ) -> Result<()> {
         if state.len() != bucket * STATE_COLS || params.len() != bucket * PARAM_COLS {
@@ -135,7 +159,8 @@ impl Engine {
         let exe = self.executable("step", bucket)?;
         let s = Self::literal_2d(state, bucket, STATE_COLS)?;
         let p = Self::literal_2d(params, bucket, PARAM_COLS)?;
-        let result = exe.execute::<xla::Literal>(&[s, p]).map_err(Error::runtime)?[0][0]
+        let g = xla::Literal::vec1(geom.as_slice());
+        let result = exe.execute::<xla::Literal>(&[s, p, g]).map_err(Error::runtime)?[0][0]
             .to_literal_sync()
             .map_err(Error::runtime)?;
         let (st, ac, ra, ob) = result.to_tuple4().map_err(Error::runtime)?;
@@ -149,19 +174,23 @@ impl Engine {
         Ok(())
     }
 
-    /// Execute one merge-sim step for `batch` co-located instances at
-    /// once via the vmapped `stepb` artifact — the dynamic micro-batcher
-    /// of the engine service (EXPERIMENTS.md §Perf).  `states` is the
-    /// concatenation of `batch` state arrays (must fill the artifact's
-    /// full batch width; pad unused lanes with zeros = inactive worlds).
+    /// Execute one sim step for `batch` co-located instances at once via
+    /// the vmapped `stepb` artifact — the dynamic micro-batcher of the
+    /// engine service (EXPERIMENTS.md §Perf).  `states` is the
+    /// concatenation of `batch` state arrays and `geoms` the
+    /// concatenation of their per-lane geometry rows (instances running
+    /// *different* scenario families coalesce into this one dispatch).
+    /// All must fill the artifact's full batch width; pad unused lanes
+    /// with zeros = inactive worlds.
     pub fn step_batched(
         &self,
         bucket: usize,
         states: &[f32],
         params: &[f32],
+        geoms: &[f32],
     ) -> Result<Vec<StepOutputs>> {
         let mut outs = Vec::new();
-        self.step_batched_into(bucket, states, params, &mut outs)?;
+        self.step_batched_into(bucket, states, params, geoms, &mut outs)?;
         Ok(outs)
     }
 
@@ -173,6 +202,7 @@ impl Engine {
         bucket: usize,
         states: &[f32],
         params: &[f32],
+        geoms: &[f32],
         outs: &mut Vec<StepOutputs>,
     ) -> Result<()> {
         let b = self.manifest.batch;
@@ -181,11 +211,15 @@ impl Engine {
                 "manifest has no batched step artifact; re-run `make artifacts`".into(),
             ));
         }
-        if states.len() != b * bucket * STATE_COLS || params.len() != b * bucket * PARAM_COLS {
+        if states.len() != b * bucket * STATE_COLS
+            || params.len() != b * bucket * PARAM_COLS
+            || geoms.len() != b * GEOM_COLS
+        {
             return Err(Error::Runtime(format!(
-                "batched shape mismatch: states {} params {} for batch {b} x bucket {bucket}",
+                "batched shape mismatch: states {} params {} geoms {} for batch {b} x bucket {bucket}",
                 states.len(),
-                params.len()
+                params.len(),
+                geoms.len()
             )));
         }
         let exe = self.executable("stepb", bucket)?;
@@ -195,7 +229,10 @@ impl Engine {
         let p = xla::Literal::vec1(params)
             .reshape(&[b as i64, bucket as i64, PARAM_COLS as i64])
             .map_err(Error::runtime)?;
-        let result = exe.execute::<xla::Literal>(&[s, p]).map_err(Error::runtime)?[0][0]
+        let g = xla::Literal::vec1(geoms)
+            .reshape(&[b as i64, GEOM_COLS as i64])
+            .map_err(Error::runtime)?;
+        let result = exe.execute::<xla::Literal>(&[s, p, g]).map_err(Error::runtime)?[0][0]
             .to_literal_sync()
             .map_err(Error::runtime)?;
         let (st, ac, ra, ob) = result.to_tuple4().map_err(Error::runtime)?;
@@ -258,6 +295,10 @@ mod tests {
         assert_eq!(e.platform().to_lowercase(), "cpu");
     }
 
+    fn default_geom() -> GeometryVec {
+        GeometryVec::default()
+    }
+
     #[test]
     fn step_executes_and_preserves_shapes() {
         let Some(e) = engine() else { return };
@@ -265,7 +306,7 @@ mod tests {
         let mut t = Traffic::new(bucket);
         t.spawn(100.0, 20.0, 1.0, DriverParams::default());
         t.spawn(150.0, 10.0, 1.0, DriverParams::default());
-        let out = e.step(bucket, &t.state, &t.params).unwrap();
+        let out = e.step(bucket, &t.state, &t.params, &default_geom()).unwrap();
         assert_eq!(out.state.len(), bucket * 4);
         assert_eq!(out.accel.len(), bucket);
         assert_eq!(out.radar.len(), bucket * 2);
@@ -279,14 +320,34 @@ mod tests {
         let bucket = e.manifest().buckets[0];
         let mut t = Traffic::new(bucket);
         t.spawn(100.0, 20.0, 1.0, DriverParams::default());
+        let g = default_geom();
         let mut out = StepOutputs::default();
-        e.step_into(bucket, &t.state, &t.params, &mut out).unwrap();
+        e.step_into(bucket, &t.state, &t.params, &g, &mut out).unwrap();
         let first = out.clone();
         // repeat into the same StepOutputs: identical results, no stale
         // data surviving from the previous call
-        e.step_into(bucket, &t.state, &t.params, &mut out).unwrap();
+        e.step_into(bucket, &t.state, &t.params, &g, &mut out).unwrap();
         assert_eq!(out, first);
-        assert_eq!(e.step(bucket, &t.state, &t.params).unwrap(), first);
+        assert_eq!(e.step(bucket, &t.state, &t.params, &g).unwrap(), first);
+    }
+
+    #[test]
+    fn geometry_operand_is_live() {
+        // the executable honours the geometry operand: pulling road_end
+        // in front of the vehicle retires it (no recompile involved)
+        let Some(e) = engine() else { return };
+        let bucket = e.manifest().buckets[0];
+        let mut t = Traffic::new(bucket);
+        t.spawn(390.0, 30.0, 1.0, DriverParams::default());
+        let far = e.step(bucket, &t.state, &t.params, &default_geom()).unwrap();
+        assert_eq!(far.obs[0], 1.0);
+        assert_eq!(far.obs[2], 0.0, "default road end is 1000 m away");
+        let near = crate::sumo::MergeScenario {
+            road_end_m: 392.0,
+            ..crate::sumo::MergeScenario::default()
+        };
+        let out = e.step(bucket, &t.state, &t.params, &near.geometry_vec()).unwrap();
+        assert_eq!(out.obs[2], 1.0, "operand road end just ahead: flow ticks");
     }
 
     #[test]
@@ -300,18 +361,21 @@ mod tests {
         let bucket = e.manifest().buckets[0];
         let mut t = Traffic::new(bucket);
         t.spawn(100.0, 20.0, 1.0, DriverParams::default());
+        let g = default_geom();
         let mut states = Vec::new();
         let mut params = Vec::new();
+        let mut geoms = Vec::new();
         for _ in 0..b {
             states.extend_from_slice(&t.state);
             params.extend_from_slice(&t.params);
+            geoms.extend_from_slice(g.as_slice());
         }
         let mut outs = Vec::new();
-        e.step_batched_into(bucket, &states, &params, &mut outs).unwrap();
+        e.step_batched_into(bucket, &states, &params, &geoms, &mut outs).unwrap();
         let first = outs.clone();
         let ptrs: Vec<*const f32> = outs.iter().map(|o| o.state.as_ptr()).collect();
         // second dispatch refills the same per-lane buffers in place
-        e.step_batched_into(bucket, &states, &params, &mut outs).unwrap();
+        e.step_batched_into(bucket, &states, &params, &geoms, &mut outs).unwrap();
         assert_eq!(outs, first);
         for (o, p) in outs.iter().zip(ptrs) {
             assert_eq!(o.state.as_ptr(), p, "lane buffer reallocated");
@@ -322,6 +386,6 @@ mod tests {
     fn shape_mismatch_rejected() {
         let Some(e) = engine() else { return };
         let bucket = e.manifest().buckets[0];
-        assert!(e.step(bucket, &[0.0; 4], &[0.0; 6]).is_err());
+        assert!(e.step(bucket, &[0.0; 4], &[0.0; 6], &default_geom()).is_err());
     }
 }

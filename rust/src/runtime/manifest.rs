@@ -9,6 +9,12 @@ use crate::sumo::MergeScenario;
 use crate::util::Json;
 use crate::{Error, Result};
 
+/// The geometry-operand layout the rust side is compiled against —
+/// must equal the manifest's `geometry_columns` (and
+/// `python/compile/model.py` `GEOM_COLUMNS`; see `sumo::state::G_*`).
+pub const GEOMETRY_COLUMNS: [&str; crate::sumo::state::GEOM_COLS] =
+    ["road_end", "merge_start", "merge_end", "num_main_lanes", "dt"];
+
 /// One lowered artifact.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactEntry {
@@ -17,15 +23,22 @@ pub struct ArtifactEntry {
     pub n: usize,
     /// Number of tuple outputs.
     pub outputs: usize,
+    /// Number of input operands (0 = not recorded, schema-1 manifests).
+    pub operands: usize,
 }
 
 /// The whole manifest (see `python/compile/aot.py`).
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub format: String,
+    /// Artifact schema version: 1 = constant-geometry artifacts (legacy),
+    /// 2 = geometry-generic (step/stepb take the f32[GEOM_COLS] operand).
+    pub schema: u32,
     pub state_columns: Vec<String>,
     pub param_columns: Vec<String>,
     pub obs_columns: Vec<String>,
+    /// Operand layout of the geometry vector (schema >= 2).
+    pub geometry_columns: Vec<String>,
     pub dt: f32,
     pub road_end: f32,
     pub merge_start: f32,
@@ -66,14 +79,20 @@ impl Manifest {
                     file: e.get("file")?.as_str()?.to_string(),
                     n: e.get("n")?.as_usize()?,
                     outputs: e.get("outputs")?.as_usize()?,
+                    operands: e.get("operands").and_then(|v| v.as_usize()).unwrap_or(0),
                 },
             );
         }
         Ok(Manifest {
             format,
+            schema: j.get("schema").and_then(|v| v.as_usize()).unwrap_or(1) as u32,
             state_columns: str_vec(j.get("state_columns")?)?,
             param_columns: str_vec(j.get("param_columns")?)?,
             obs_columns: str_vec(j.get("obs_columns")?)?,
+            geometry_columns: match j.get("geometry_columns") {
+                Ok(v) => str_vec(v)?,
+                Err(_) => Vec::new(),
+            },
             dt: j.get("dt")?.as_f64()? as f32,
             road_end: j.get("road_end")?.as_f64()? as f32,
             merge_start: j.get("merge_start")?.as_f64()? as f32,
@@ -123,9 +142,17 @@ impl Manifest {
         }
     }
 
+    /// Do the step artifacts take the runtime geometry operand?
+    pub fn geometry_generic(&self) -> bool {
+        self.schema >= 2
+    }
+
     /// Assert the compile-path constants match the rust defaults; a
     /// drifted constant silently corrupts every experiment, so this is
-    /// checked at engine construction.
+    /// checked at engine construction.  (With schema 2 the constants are
+    /// only the *recorded defaults* — geometry is a runtime operand —
+    /// but drift between `model.py` and [`MergeScenario::default`] still
+    /// flags a compile path that was edited without the rust side.)
     pub fn validate_against_default_scenario(&self) -> Result<()> {
         let a = self.scenario();
         let b = MergeScenario::default();
@@ -139,6 +166,44 @@ impl Manifest {
                 "unexpected state layout {:?}",
                 self.state_columns
             )));
+        }
+        Ok(())
+    }
+
+    /// Assert the geometry-operand contract of schema-2 artifacts: the
+    /// operand layout matches [`GEOMETRY_COLUMNS`] and every step/stepb
+    /// entry records the three-operand signature.  Schema-1 manifests
+    /// are rejected outright — the runtime no longer carries a
+    /// constant-geometry code path (`Engine::new` enforces this).
+    pub fn validate_geometry_layout(&self) -> Result<()> {
+        if !self.geometry_generic() {
+            return Err(Error::Artifact(format!(
+                "artifacts are schema {} (constant geometry); the runtime needs \
+                 geometry-generic schema 2 artifacts — re-run `make artifacts`",
+                self.schema
+            )));
+        }
+        if self.geometry_columns != GEOMETRY_COLUMNS {
+            return Err(Error::Artifact(format!(
+                "geometry operand layout {:?} != expected {:?}; re-run `make artifacts`",
+                self.geometry_columns, GEOMETRY_COLUMNS
+            )));
+        }
+        for (key, e) in &self.entries {
+            let expect = match key.split('_').next().unwrap_or("") {
+                "step" | "stepb" => 3,
+                "idm" => 2,
+                "radar" => 1,
+                _ => continue,
+            };
+            // operands == 0 means "not recorded": tolerated for the bare
+            // kernels, never for the geometry-carrying step artifacts
+            if e.operands != expect && !(e.operands == 0 && expect < 3) {
+                return Err(Error::Artifact(format!(
+                    "artifact entry '{key}' records {} operands, expected {expect}",
+                    e.operands
+                )));
+            }
         }
         Ok(())
     }
@@ -160,6 +225,8 @@ mod tests {
             return;
         };
         m.validate_against_default_scenario().unwrap();
+        m.validate_geometry_layout().unwrap();
+        assert!(m.geometry_generic());
         assert!(!m.buckets.is_empty());
     }
 
@@ -194,6 +261,29 @@ mod tests {
     fn parse_synthetic_manifest() {
         let text = r#"{
           "format": "hlo-text",
+          "schema": 2,
+          "state_columns": ["x", "v", "lane", "active"],
+          "param_columns": ["v0", "T", "a_max", "b", "s0", "length"],
+          "obs_columns": ["n_active", "mean_speed", "flow", "n_merged"],
+          "geometry_columns": ["road_end", "merge_start", "merge_end", "num_main_lanes", "dt"],
+          "dt": 0.1, "road_end": 1000.0, "merge_start": 300.0,
+          "merge_end": 500.0, "num_main_lanes": 2,
+          "buckets": [16],
+          "entries": {"step_16": {"file": "step_16.hlo.txt", "n": 16, "outputs": 4, "operands": 3}}
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        m.validate_against_default_scenario().unwrap();
+        m.validate_geometry_layout().unwrap();
+        assert_eq!(m.entry("step", 16).unwrap().outputs, 4);
+        assert_eq!(m.entry("step", 16).unwrap().operands, 3);
+    }
+
+    #[test]
+    fn legacy_schema_rejected_by_geometry_check() {
+        // a schema-1 manifest (no schema/geometry_columns keys) parses —
+        // but the runtime must refuse to execute it
+        let text = r#"{
+          "format": "hlo-text",
           "state_columns": ["x", "v", "lane", "active"],
           "param_columns": ["v0", "T", "a_max", "b", "s0", "length"],
           "obs_columns": ["n_active", "mean_speed", "flow", "n_merged"],
@@ -203,7 +293,36 @@ mod tests {
           "entries": {"step_16": {"file": "step_16.hlo.txt", "n": 16, "outputs": 4}}
         }"#;
         let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.schema, 1);
+        assert!(!m.geometry_generic());
         m.validate_against_default_scenario().unwrap();
-        assert_eq!(m.entry("step", 16).unwrap().outputs, 4);
+        let err = m.validate_geometry_layout().unwrap_err().to_string();
+        assert!(err.contains("schema 1"), "{err}");
+    }
+
+    #[test]
+    fn wrong_geometry_layout_rejected() {
+        let text = r#"{
+          "format": "hlo-text",
+          "schema": 2,
+          "state_columns": ["x", "v", "lane", "active"],
+          "param_columns": ["v0", "T", "a_max", "b", "s0", "length"],
+          "obs_columns": ["n_active", "mean_speed", "flow", "n_merged"],
+          "geometry_columns": ["dt", "road_end"],
+          "dt": 0.1, "road_end": 1000.0, "merge_start": 300.0,
+          "merge_end": 500.0, "num_main_lanes": 2,
+          "buckets": [16],
+          "entries": {"step_16": {"file": "step_16.hlo.txt", "n": 16, "outputs": 4, "operands": 3}}
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        assert!(m.validate_geometry_layout().is_err());
+        // ...and so is a step entry missing its geometry operand
+        let text = text.replace(
+            r#""geometry_columns": ["dt", "road_end"]"#,
+            r#""geometry_columns": ["road_end", "merge_start", "merge_end", "num_main_lanes", "dt"]"#,
+        );
+        let text = text.replace(r#""operands": 3"#, r#""operands": 2"#);
+        let m = Manifest::parse(&text).unwrap();
+        assert!(m.validate_geometry_layout().is_err());
     }
 }

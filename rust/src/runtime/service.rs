@@ -23,16 +23,21 @@
 //!   [`super::engine::Engine::step_into`] for the FFI-boundary caveat).
 //!
 //! Both paths coalesce in the same dynamic micro-batcher, whose padding
-//! scratch (`states`/`params_all`/`outs`) is owned by the engine thread
-//! and reused across dispatches.
+//! scratch (`states`/`params`/`geoms`/`outs`) is owned by the engine
+//! thread and reused across dispatches.  Since schema 2 the scenario
+//! geometry is a per-request operand row ([`GeometryVec`]) rather than
+//! a compile-time constant, so instances running *different* scenario
+//! families share the pooled executables AND coalesce into the same
+//! batched dispatches.
 
 use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Duration;
 
-use crate::sumo::state::{Traffic, PARAM_COLS, STATE_COLS};
-use crate::sumo::{StepObs, Stepper};
+use crate::metrics::PoolUsage;
+use crate::sumo::state::{GeometryVec, Traffic, GEOM_COLS, PARAM_COLS, STATE_COLS};
+use crate::sumo::{MergeScenario, StepObs, Stepper};
 use crate::{Error, Result};
 
 use super::engine::{Engine, StepOutputs};
@@ -45,13 +50,18 @@ enum StepReply {
     Session(Sender<SessionReply>),
 }
 
-/// One step request — input buffers and the output buffers to fill.
-/// Session requests lend their buffers to the engine thread; the reply
-/// returns them for reuse.
+/// One step request — input buffers, the scenario geometry row, and the
+/// output buffers to fill.  Session requests lend their buffers to the
+/// engine thread; the reply returns them for reuse.  The geometry is a
+/// `Copy` row (no allocation), travelling per-request exactly like the
+/// per-lane `DriverParams` rows do — which is what lets co-located
+/// instances running *different* scenario families coalesce into one
+/// batched dispatch.
 struct StepReq {
     bucket: usize,
     state: Vec<f32>,
     params: Vec<f32>,
+    geom: GeometryVec,
     out: StepOutputs,
     reply: StepReply,
 }
@@ -82,7 +92,11 @@ enum Request {
         bucket: usize,
         states: Vec<f32>,
         params: Vec<f32>,
+        geoms: Vec<f32>,
         reply: Sender<Result<Vec<StepOutputs>>>,
+    },
+    PoolUsage {
+        reply: Sender<PoolUsage>,
     },
     Shutdown,
 }
@@ -95,6 +109,7 @@ struct BatchScratch {
     batch: Vec<StepReq>,
     states: Vec<f32>,
     params: Vec<f32>,
+    geoms: Vec<f32>,
     outs: Vec<StepOutputs>,
 }
 
@@ -106,7 +121,7 @@ fn finish(req: StepReq, result: Result<()>) {
         params,
         out,
         reply,
-        ..
+        .. // bucket + the Copy geometry row need no return trip
     } = req;
     match reply {
         StepReply::Oneshot(tx) => {
@@ -126,8 +141,11 @@ fn finish(req: StepReq, result: Result<()>) {
 /// Serve one Step request, dynamically micro-batching with any other
 /// same-bucket Step requests already waiting on the channel (the §Perf
 /// optimization: one PJRT dispatch amortized over up to `manifest.batch`
-/// co-located instances).  Solo requests take the unbatched path with no
-/// added latency — coalescing only ever drains requests that are already
+/// co-located instances).  Geometry deliberately does NOT gate
+/// coalescing: rows travel per-lane through the vmapped artifact, so a
+/// node running a mixed-family scenario matrix still fills whole
+/// batches.  Solo requests take the unbatched path with no added
+/// latency — coalescing only ever drains requests that are already
 /// queued.
 fn serve_step(
     engine: &Engine,
@@ -192,23 +210,33 @@ fn serve_step(
 
     if scratch.batch.len() < 2 {
         let mut req = scratch.batch.pop().expect("one request");
-        let result = engine.step_into(bucket, &req.state, &req.params, &mut req.out);
+        let result = engine.step_into(bucket, &req.state, &req.params, &req.geom, &mut req.out);
         finish(req, result);
         return;
     }
 
     // pad to the artifact's batch width with zeroed (inactive) worlds,
-    // reusing the thread-owned staging buffers
+    // reusing the thread-owned staging buffers; each live lane carries
+    // its own geometry row (mixed-family batches are one dispatch)
     let n_live = scratch.batch.len();
     scratch.states.clear();
     scratch.states.resize(bmax * bucket * scols, 0.0);
     scratch.params.clear();
     scratch.params.resize(bmax * bucket * pcols, 0.0);
+    scratch.geoms.clear();
+    scratch.geoms.resize(bmax * GEOM_COLS, 0.0);
     for (i, r) in scratch.batch.iter().enumerate() {
         scratch.states[i * bucket * scols..(i + 1) * bucket * scols].copy_from_slice(&r.state);
         scratch.params[i * bucket * pcols..(i + 1) * bucket * pcols].copy_from_slice(&r.params);
+        scratch.geoms[i * GEOM_COLS..(i + 1) * GEOM_COLS].copy_from_slice(r.geom.as_slice());
     }
-    match engine.step_batched_into(bucket, &scratch.states, &scratch.params, &mut scratch.outs) {
+    match engine.step_batched_into(
+        bucket,
+        &scratch.states,
+        &scratch.params,
+        &scratch.geoms,
+        &mut scratch.outs,
+    ) {
         Ok(()) => {
             debug_assert_eq!(scratch.outs.len(), bmax);
             debug_assert!(scratch.outs.len() >= n_live);
@@ -225,7 +253,7 @@ fn serve_step(
             let msg = e.to_string();
             for mut req in scratch.batch.drain(..) {
                 let result = engine
-                    .step_into(bucket, &req.state, &req.params, &mut req.out)
+                    .step_into(bucket, &req.state, &req.params, &req.geom, &mut req.out)
                     .map_err(|e2| Error::Runtime(format!("{msg}; serial fallback: {e2}")));
                 finish(req, result);
             }
@@ -291,9 +319,13 @@ impl EngineService {
                         bucket,
                         states,
                         params,
+                        geoms,
                         reply,
                     } => {
-                        let _ = reply.send(engine.step_batched(bucket, &states, &params));
+                        let _ = reply.send(engine.step_batched(bucket, &states, &params, &geoms));
+                    }
+                    Request::PoolUsage { reply } => {
+                        let _ = reply.send(engine.pool_usage());
                     }
                     Request::Shutdown => break,
                 }
@@ -324,10 +356,17 @@ impl EngineService {
         &self.platform
     }
 
-    /// Open a persistent stepping session at `bucket` capacity — the
-    /// allocation-free hot path.  One session per simulation instance;
-    /// sessions from many threads still coalesce in the micro-batcher.
+    /// Open a persistent stepping session at `bucket` capacity under the
+    /// default merge geometry.  See [`EngineService::session_for`].
     pub fn session(&self, bucket: usize) -> Result<EngineSession> {
+        self.session_for(bucket, GeometryVec::default())
+    }
+
+    /// Open a persistent stepping session at `bucket` capacity for a
+    /// specific scenario geometry — the allocation-free hot path.  One
+    /// session per simulation instance; sessions from many threads (and
+    /// *different geometries*) still coalesce in the micro-batcher.
+    pub fn session_for(&self, bucket: usize, geom: GeometryVec) -> Result<EngineSession> {
         if !self.manifest.buckets.contains(&bucket) {
             return Err(Error::Artifact(format!(
                 "no lowered bucket {bucket} (have {:?})",
@@ -338,6 +377,7 @@ impl EngineService {
         Ok(EngineSession {
             tx: self.tx.clone(),
             bucket,
+            geom,
             reply_tx,
             reply_rx,
             state_buf: Vec::with_capacity(bucket * STATE_COLS),
@@ -346,15 +386,29 @@ impl EngineService {
         })
     }
 
-    /// One-shot step: fresh reply channel + input copies per call.
-    /// Prefer [`EngineService::session`] on the hot path.
+    /// One-shot step under the default merge geometry.  Prefer
+    /// [`EngineService::session_for`] on the hot path.
     pub fn step(&self, bucket: usize, state: &[f32], params: &[f32]) -> Result<StepOutputs> {
+        self.step_geom(bucket, state, params, GeometryVec::default())
+    }
+
+    /// One-shot step under an explicit scenario geometry: fresh reply
+    /// channel + input copies per call (tests/benches; the production
+    /// path is a persistent session).
+    pub fn step_geom(
+        &self,
+        bucket: usize,
+        state: &[f32],
+        params: &[f32],
+        geom: GeometryVec,
+    ) -> Result<StepOutputs> {
         let (reply, rx) = channel();
         self.tx
             .send(Request::Step(StepReq {
                 bucket,
                 state: state.to_vec(),
                 params: params.to_vec(),
+                geom,
                 out: StepOutputs::default(),
                 reply: StepReply::Oneshot(reply),
             }))
@@ -390,14 +444,33 @@ impl EngineService {
             .map_err(|_| Error::Runtime("engine thread dropped reply".into()))?
     }
 
-    /// Explicit full-width batched step (benches; the normal path is the
-    /// dynamic micro-batcher inside [`serve_step`]).  `states`/`params`
-    /// must cover the manifest's full batch width.
+    /// Explicit full-width batched step under the default geometry for
+    /// every lane (benches; the normal path is the dynamic micro-batcher
+    /// inside [`serve_step`]).  `states`/`params` must cover the
+    /// manifest's full batch width.
     pub fn step_batched(
         &self,
         bucket: usize,
         states: &[f32],
         params: &[f32],
+    ) -> Result<Vec<StepOutputs>> {
+        let b = self.manifest.batch.max(1);
+        let mut geoms = Vec::with_capacity(b * GEOM_COLS);
+        for _ in 0..b {
+            geoms.extend_from_slice(GeometryVec::default().as_slice());
+        }
+        self.step_batched_geom(bucket, states, params, &geoms)
+    }
+
+    /// Explicit full-width batched step with per-lane geometry rows
+    /// (`geoms` is `batch × GEOM_COLS` — one row per lane, so a single
+    /// dispatch can carry a mixed-family batch).
+    pub fn step_batched_geom(
+        &self,
+        bucket: usize,
+        states: &[f32],
+        params: &[f32],
+        geoms: &[f32],
     ) -> Result<Vec<StepOutputs>> {
         let (reply, rx) = channel();
         self.tx
@@ -405,11 +478,23 @@ impl EngineService {
                 bucket,
                 states: states.to_vec(),
                 params: params.to_vec(),
+                geoms: geoms.to_vec(),
                 reply,
             })
             .map_err(|_| Error::Runtime("engine thread gone".into()))?;
         rx.recv()
             .map_err(|_| Error::Runtime("engine thread dropped reply".into()))?
+    }
+
+    /// Executable-pool hit/miss counters from the engine thread — the
+    /// campaign-summary observability of the pooled fast path.
+    pub fn pool_usage(&self) -> Result<PoolUsage> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::PoolUsage { reply })
+            .map_err(|_| Error::Runtime("engine thread gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("engine thread dropped reply".into()))
     }
 
     /// Ask the engine thread to exit (also happens when the last handle
@@ -430,6 +515,9 @@ impl EngineService {
 pub struct EngineSession {
     tx: Sender<Request>,
     bucket: usize,
+    /// The session's scenario geometry row, sent with every request (a
+    /// `Copy`, so the hot path stays allocation-free).
+    geom: GeometryVec,
     reply_tx: Sender<SessionReply>,
     reply_rx: Receiver<SessionReply>,
     state_buf: Vec<f32>,
@@ -440,6 +528,10 @@ pub struct EngineSession {
 impl EngineSession {
     pub fn bucket(&self) -> usize {
         self.bucket
+    }
+
+    pub fn geometry(&self) -> GeometryVec {
+        self.geom
     }
 
     /// Execute one step.  Copies `state`/`params` into the session's
@@ -459,6 +551,7 @@ impl EngineSession {
                 bucket: self.bucket,
                 state: sbuf,
                 params: pbuf,
+                geom: self.geom,
                 out,
                 reply: StepReply::Session(self.reply_tx.clone()),
             }))
@@ -481,15 +574,29 @@ impl EngineSession {
 }
 
 /// [`Stepper`] over the AOT step artifact via a persistent
-/// [`EngineSession`]: the production physics engine.  Traffic capacity
-/// must equal a lowered bucket.
+/// [`EngineSession`]: the production physics engine for ANY scenario
+/// geometry (the executable takes the geometry as a runtime operand).
+/// Traffic capacity must equal a lowered bucket.
 pub struct HloStepper {
     session: EngineSession,
     pub last_obs: StepObs,
 }
 
 impl HloStepper {
+    /// A stepper for the classic default merge geometry.
     pub fn new(service: EngineService, capacity: usize) -> Result<HloStepper> {
+        Self::for_scenario(service, capacity, &MergeScenario::default())
+    }
+
+    /// A stepper for an arbitrary scenario geometry — what the launcher
+    /// uses for scenario-matrix runs (lane-drop, ramp-weave,
+    /// ring-shockwave, parametrized merges) on the pooled PJRT fast
+    /// path, with no per-geometry recompile.
+    pub fn for_scenario(
+        service: EngineService,
+        capacity: usize,
+        scenario: &MergeScenario,
+    ) -> Result<HloStepper> {
         let bucket = service.manifest().bucket_for(capacity)?;
         if bucket != capacity {
             return Err(Error::Artifact(format!(
@@ -498,7 +605,7 @@ impl HloStepper {
             )));
         }
         Ok(HloStepper {
-            session: service.session(bucket)?,
+            session: service.session_for(bucket, scenario.geometry_vec())?,
             last_obs: StepObs::default(),
         })
     }
@@ -577,6 +684,65 @@ mod tests {
     fn session_rejects_unknown_bucket() {
         let Some(s) = service() else { return };
         assert!(s.session(7).is_err());
+        assert!(s.session_for(7, GeometryVec::default()).is_err());
+    }
+
+    #[test]
+    fn session_geometry_is_honoured() {
+        // two sessions at the SAME bucket (same pooled executable),
+        // different geometry rows: the road end moves per session
+        let Some(s) = service() else { return };
+        let bucket = s.manifest().buckets[0];
+        let mut t = Traffic::new(bucket);
+        t.spawn(390.0, 30.0, 1.0, DriverParams::default());
+        let mut default_sess = s.session(bucket).unwrap();
+        let near = MergeScenario {
+            road_end_m: 392.0,
+            ..MergeScenario::default()
+        };
+        let mut near_sess = s.session_for(bucket, near.geometry_vec()).unwrap();
+        let far = default_sess.step(&t.state, &t.params).unwrap();
+        assert_eq!(far.obs[2], 0.0, "default road end: no flow yet");
+        let out = near_sess.step(&t.state, &t.params).unwrap();
+        assert_eq!(out.obs[2], 1.0, "session geometry retires the vehicle");
+        assert_eq!(near_sess.geometry(), near.geometry_vec());
+    }
+
+    #[test]
+    fn pool_usage_surfaces_hits_and_misses() {
+        let Some(s) = service() else { return };
+        let bucket = s.manifest().buckets[0];
+        let mut t = Traffic::new(bucket);
+        t.spawn(100.0, 20.0, 1.0, DriverParams::default());
+        for _ in 0..3 {
+            let _ = s.step(bucket, &t.state, &t.params).unwrap();
+        }
+        let usage = s.pool_usage().unwrap();
+        // one compile for (step, bucket), then steady-state hits — the
+        // pooled fast path's whole point, now observable
+        assert!(usage.misses >= 1, "{usage:?}");
+        assert!(usage.hits >= 2, "{usage:?}");
+        assert!(usage.compiled >= 1, "{usage:?}");
+        assert!(usage.hit_rate() > 0.0);
+        // a different geometry at the same bucket must NOT compile a new
+        // executable (geometry is an operand, not a pool key)
+        let ring = MergeScenario {
+            road_end_m: 1800.0,
+            merge_start_m: 0.0,
+            merge_end_m: 0.0,
+            num_main_lanes: 1,
+            ..MergeScenario::default()
+        };
+        let before = s.pool_usage().unwrap().compiled;
+        let _ = s
+            .step_geom(bucket, &t.state, &t.params, ring.geometry_vec())
+            .unwrap();
+        let after = s.pool_usage().unwrap();
+        assert_eq!(
+            after.compiled, before,
+            "geometry change must not grow the pool: {after:?}"
+        );
+        s.shutdown();
     }
 
     #[test]

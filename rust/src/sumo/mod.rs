@@ -38,4 +38,6 @@ pub use idm::{NativeIdmStepper, ReferenceIdmStepper};
 pub use sweep::LaneIndex;
 pub use network::{Edge, MergeScenario, Network};
 pub use simulation::{StepObs, Stepper, SumoSim};
-pub use state::{DriverParams, Traffic, ACTIVE, LANE, PARAM_COLS, STATE_COLS, V, X};
+pub use state::{
+    DriverParams, GeometryVec, Traffic, ACTIVE, GEOM_COLS, LANE, PARAM_COLS, STATE_COLS, V, X,
+};

@@ -86,6 +86,19 @@ impl MergeScenario {
     /// Lane index of the on-ramp/acceleration lane.
     pub const RAMP_LANE: f32 = 0.0;
 
+    /// This geometry as the f32 operand row the geometry-generic AOT
+    /// artifacts consume (layout: `sumo::state::G_*`, recorded as
+    /// `geometry_columns` in `artifacts/manifest.json`).
+    pub fn geometry_vec(&self) -> super::state::GeometryVec {
+        super::state::GeometryVec([
+            self.road_end_m,
+            self.merge_start_m,
+            self.merge_end_m,
+            self.num_main_lanes as f32,
+            self.dt_s,
+        ])
+    }
+
     /// Build the network graph form (for xml round-trips and TraCI).
     pub fn network(&self) -> Network {
         self.network_with_speeds(30.0, 20.0)
@@ -169,6 +182,29 @@ mod tests {
         assert!(n.validate_route(&bad).is_err());
         assert!(n.validate_route(&["nope".to_string()]).is_err());
         assert!(n.validate_route(&[]).is_err());
+    }
+
+    #[test]
+    fn geometry_vec_layout_matches_manifest_columns() {
+        use crate::sumo::state::{G_DT, G_MERGE_END, G_MERGE_START, G_NUM_MAIN_LANES, G_ROAD_END};
+        let s = MergeScenario {
+            road_end_m: 700.0,
+            merge_start_m: 150.0,
+            merge_end_m: 400.0,
+            num_main_lanes: 3,
+            dt_s: 0.05,
+        };
+        let g = s.geometry_vec();
+        assert_eq!(g.0[G_ROAD_END], 700.0);
+        assert_eq!(g.0[G_MERGE_START], 150.0);
+        assert_eq!(g.0[G_MERGE_END], 400.0);
+        assert_eq!(g.0[G_NUM_MAIN_LANES], 3.0);
+        assert_eq!(g.0[G_DT], 0.05);
+        // the Default geometry row is the default scenario's
+        assert_eq!(
+            crate::sumo::state::GeometryVec::default(),
+            MergeScenario::default().geometry_vec()
+        );
     }
 
     #[test]

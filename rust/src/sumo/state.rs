@@ -6,13 +6,17 @@
 //! ```text
 //! state  f32[N, 4]: [x, v, lane, active]
 //! params f32[N, 6]: [v0, T, a_max, b, s0, length]
+//! geom   f32[5]   : [road_end, merge_start, merge_end, num_main_lanes, dt]
 //! ```
 //!
 //! `N` is a *bucket capacity*, not the live vehicle count: inactive rows
-//! (active == 0) are spawn slots the coordinator writes into.
+//! (active == 0) are spawn slots the coordinator writes into.  The
+//! geometry row is the schema-2 runtime operand that makes the AOT
+//! artifacts scenario-generic (`python/compile/model.py GEOM_COLUMNS`).
 
 pub const STATE_COLS: usize = 4;
 pub const PARAM_COLS: usize = 6;
+pub const GEOM_COLS: usize = 5;
 
 // state columns
 pub const X: usize = 0;
@@ -27,6 +31,37 @@ pub const P_AMAX: usize = 2;
 pub const P_B: usize = 3;
 pub const P_S0: usize = 4;
 pub const P_LEN: usize = 5;
+
+// geometry columns (manifest `geometry_columns`)
+pub const G_ROAD_END: usize = 0;
+pub const G_MERGE_START: usize = 1;
+pub const G_MERGE_END: usize = 2;
+pub const G_NUM_MAIN_LANES: usize = 3;
+pub const G_DT: usize = 4;
+
+/// One scenario geometry as the f32 operand row the geometry-generic
+/// AOT artifacts consume — derived from a
+/// [`MergeScenario`](super::network::MergeScenario) via
+/// `MergeScenario::geometry_vec`.  `Copy` on purpose: geometry rows
+/// travel per-request through the engine service exactly like
+/// [`DriverParams`] rows travel per-lane, without touching the
+/// allocation-free hot path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GeometryVec(pub [f32; GEOM_COLS]);
+
+impl GeometryVec {
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.0
+    }
+}
+
+impl Default for GeometryVec {
+    /// The default merge scenario's geometry row.
+    fn default() -> Self {
+        super::network::MergeScenario::default().geometry_vec()
+    }
+}
 
 /// Per-vehicle driver/vehicle parameters (one `params` row).
 #[derive(Debug, Clone, Copy, PartialEq)]

@@ -13,6 +13,17 @@ cargo clippy --all-targets -- -D warnings
 echo "== cargo build --examples =="
 cargo build --examples
 
+echo "== cargo bench --bench runtime_hotpath --no-run =="
+# bench code must keep compiling even on machines that never run it
+cargo bench --bench runtime_hotpath --no-run
+
+echo "== manifest schema (geometry operand layout) =="
+if command -v python3 >/dev/null 2>&1; then
+  python3 scripts/check_manifest.py
+else
+  echo "WARNING: python3 not found — manifest-schema gate SKIPPED on this machine"
+fi
+
 echo "== tier-1: cargo build --release && cargo test -q =="
 cargo build --release
 cargo test -q

@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""Manifest-schema gate: geometry-generic artifacts must carry the
+operand layout the rust runtime expects.
+
+The contract lives in three places that can silently drift apart:
+
+  * ``python/compile/model.py`` — ``GEOM_COLUMNS`` (what the lowered
+    executables actually consume),
+  * ``artifacts/manifest.json`` — ``geometry_columns`` + per-entry
+    ``operands`` (what the compile path recorded),
+  * ``rust/src/runtime/manifest.rs`` — ``GEOMETRY_COLUMNS`` (what the
+    runtime feeds the executables).
+
+This script pins all three to the layout below and fails loudly on any
+mismatch.  With no ``artifacts/`` directory it still checks the two
+source-side layouts (so the gate is meaningful on build machines that
+haven't lowered artifacts).  Run from anywhere inside the repo; wired
+into ``scripts/check.sh``.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import sys
+
+#: the rust-side ABI (sumo/state.rs G_* order) — the single source of
+#: truth this gate pins everything else to.
+EXPECTED_GEOMETRY_COLUMNS = ["road_end", "merge_start", "merge_end", "num_main_lanes", "dt"]
+EXPECTED_SCHEMA = 2
+#: operand counts per artifact kind (step/stepb carry the geometry).
+EXPECTED_OPERANDS = {"step": 3, "stepb": 3, "idm": 2, "radar": 1}
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def fail(msg: str) -> None:
+    print(f"check_manifest: FAIL: {msg}")
+    sys.exit(1)
+
+
+def check_model_py() -> None:
+    """model.GEOM_COLUMNS must match, parsed textually so this gate needs
+    no jax import."""
+    text = (REPO / "python" / "compile" / "model.py").read_text()
+    m = re.search(r"GEOM_COLUMNS\s*=\s*\[([^\]]*)\]", text)
+    if not m:
+        fail("python/compile/model.py defines no GEOM_COLUMNS")
+    cols = re.findall(r'"([^"]+)"', m.group(1))
+    if cols != EXPECTED_GEOMETRY_COLUMNS:
+        fail(f"model.py GEOM_COLUMNS {cols} != {EXPECTED_GEOMETRY_COLUMNS}")
+
+
+def check_manifest_rs() -> None:
+    text = (REPO / "rust" / "src" / "runtime" / "manifest.rs").read_text()
+    m = re.search(r"GEOMETRY_COLUMNS[^=]*=\s*\[([^\]]*)\]", text)
+    if not m:
+        fail("rust/src/runtime/manifest.rs defines no GEOMETRY_COLUMNS")
+    cols = re.findall(r'"([^"]+)"', m.group(1))
+    if cols != EXPECTED_GEOMETRY_COLUMNS:
+        fail(f"manifest.rs GEOMETRY_COLUMNS {cols} != {EXPECTED_GEOMETRY_COLUMNS}")
+
+
+def check_artifacts() -> bool:
+    """Validate artifacts/manifest.json when present.  Returns whether a
+    manifest was found."""
+    path = REPO / "artifacts" / "manifest.json"
+    if not path.exists():
+        return False
+    manifest = json.loads(path.read_text())
+    if manifest.get("format") != "hlo-text":
+        fail(f"unexpected artifact format {manifest.get('format')!r}")
+    if manifest.get("schema") != EXPECTED_SCHEMA:
+        fail(
+            f"artifacts are schema {manifest.get('schema')!r}, need {EXPECTED_SCHEMA} "
+            "(geometry-generic); re-run `make artifacts`"
+        )
+    if manifest.get("geometry_columns") != EXPECTED_GEOMETRY_COLUMNS:
+        fail(
+            f"manifest geometry_columns {manifest.get('geometry_columns')} "
+            f"!= {EXPECTED_GEOMETRY_COLUMNS}"
+        )
+    buckets = set(manifest.get("buckets", []))
+    seen_ns = set()
+    for key, entry in manifest.get("entries", {}).items():
+        kind, _, n = key.rpartition("_")
+        if kind not in EXPECTED_OPERANDS:
+            continue
+        if entry.get("operands") != EXPECTED_OPERANDS[kind]:
+            fail(
+                f"entry '{key}' records {entry.get('operands')!r} operands, "
+                f"expected {EXPECTED_OPERANDS[kind]}"
+            )
+        if entry.get("n") != int(n):
+            fail(f"entry '{key}' bucket field {entry.get('n')} != key suffix {n}")
+        seen_ns.add(entry["n"])
+        if not (REPO / "artifacts" / entry["file"]).exists():
+            fail(f"entry '{key}' points at missing file {entry['file']}")
+    if seen_ns != buckets:
+        fail(f"entries cover buckets {sorted(seen_ns)} but manifest lists {sorted(buckets)}")
+    return True
+
+
+def main() -> None:
+    check_model_py()
+    check_manifest_rs()
+    had_artifacts = check_artifacts()
+    where = "model.py + manifest.rs + artifacts/manifest.json" if had_artifacts else (
+        "model.py + manifest.rs (no artifacts/ lowered here)"
+    )
+    print(f"check_manifest: OK ({where})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,8 @@
 #!/usr/bin/env python3
-"""Pre-flight oracle for the rust sorted-sweep neighbor index (PR 1).
+"""Pre-flight oracle for the rust native-stepper hot path.
 
-Mirrors, in numpy float32, both neighbor-scan algorithms used by the
-native stepper:
+PR 1 section — sorted-sweep neighbor index.  Mirrors, in numpy float32,
+both neighbor-scan algorithms used by the native stepper:
 
   * the O(N^2) reference scans (``leader_scan`` / ``lane_gap_scan`` in
     ``rust/src/sumo/{idm,mobil}.rs``, themselves line-for-line ports of
@@ -16,15 +16,28 @@ and asserts they are *bit-exact* (same gap, same mask-min tie-broken
 speed/length selection, same exists flags) across randomized traffic:
 varying fill, exact co-located ties, multiple lanes, N in {64, 256}.
 
-It also times the two accel passes to estimate the algorithmic speedup
-recorded in ``BENCH_runtime_hotpath.json`` (clearly labelled as a
-python-mirror estimate there; re-measure with
-``cargo bench --bench runtime_hotpath`` on a machine with the rust
-toolchain).
+PR 3 section — geometry-operand kernel.  Mirrors the FULL sim step
+(IDM + phantom wall + MOBIL + integration) as a scalar float32 port of
+``rust/src/sumo/{idm,mobil}.rs`` parameterized by the geometry vector,
+and (when jax is importable) rolls it against the *actual*
+geometry-operand kernel ``compile.model.step_geom`` on four family-like
+geometries at their axis extremes — the pre-flight for
+``rust/tests/scenario_families.rs::all_families_native_vs_hlo_track_at_extremes``.
+It also times the scalar mirror vs the jitted kernel (solo and with a
+mixed-geometry vmapped batch) on a non-default geometry.
 
-Run: ``python3 scripts/validate_sweep.py``
+Both timing sections estimate the speedups recorded in
+``BENCH_runtime_hotpath.json`` (clearly labelled as python-mirror
+estimates there; re-measure with ``cargo bench --bench runtime_hotpath``
+on a machine with the rust toolchain).  ``--append-bench`` appends the
+PR 3 measurements to that file.
+
+Run: ``python3 scripts/validate_sweep.py [--append-bench]``
 """
 
+import argparse
+import json
+import pathlib
 import time
 
 import numpy as np
@@ -247,7 +260,315 @@ def bench(n, fill, reps):
     return t_ref / t_sweep
 
 
+# =====================================================================
+# PR 3: the geometry-operand step — scalar float32 mirror of the native
+# stepper (rust/src/sumo/{idm,mobil}.rs) under a runtime geometry
+# =====================================================================
+
+MIN_GAP = F(0.5)
+SAFE_DECEL = F(4.0)
+THRESHOLD = F(0.2)
+POLITENESS = F(0.3)
+RAMP_LANE = F(0.0)
+
+#: family-like geometries at their axis extremes, as
+#: (road_end, merge_start, merge_end, num_main_lanes, dt) — the same
+#: corners rust/tests/scenario_families.rs drives (family.rs spaces).
+FAMILY_GEOMETRIES = {
+    "highway-merge-lo": (1000.0, 300.0, 450.0, 1, 0.1),
+    "highway-merge-hi": (1000.0, 300.0, 600.0, 3, 0.1),
+    "lane-drop-lo": (700.0, 300.0, 400.0, 1, 0.1),
+    "lane-drop-hi": (1000.0, 450.0, 700.0, 3, 0.1),
+    "ramp-weave-lo": (1000.0, 300.0, 450.0, 2, 0.1),
+    "ramp-weave-hi": (1000.0, 300.0, 650.0, 3, 0.1),
+    "ring-shockwave-lo": (1200.0, 0.0, 0.0, 1, 0.1),
+    "ring-shockwave-hi": (3600.0, 0.0, 0.0, 2, 0.1),
+}
+
+
+def idm_law(v, gap, dv, has, p):
+    """Port of rust ``idm_law`` (p = one params row, float32)."""
+    s = max(gap, MIN_GAP)
+    v0 = max(p[0], F(0.1))
+    a_max = max(p[2], F(1e-3))
+    b = max(p[3], F(1e-3))
+    s_star = max(F(p[4] + v * p[1] + v * dv / F(2.0 * np.sqrt(F(a_max * b)))), F(0.0))
+    free = F(1.0 - F(v / v0) ** 4)
+    inter = F(s_star / s) ** 2 if has else F(0.0)
+    return F(a_max * F(free - inter))
+
+
+def wall_accel(x, v, lane, p, merge_end):
+    """Port of rust ``wall_accel`` under an operand merge_end."""
+    if abs(F(lane - RAMP_LANE)) < F(0.5):
+        gap = max(F(merge_end - x), F(MIN_GAP * F(0.1)))
+    else:
+        gap = FREE_GAP
+    return idm_law(v, gap, v, gap < FREE_GAP * F(0.5), p)
+
+
+def step_native_mirror(x, v, lane, act, params, geometry):
+    """One full step of the native stepper mirror (scalar float32) under
+    ``geometry``; mutates the arrays in place like the rust stepper."""
+    road_end, merge_start, merge_end, n_lanes, dt = geometry
+    road_end, merge_start, merge_end = F(road_end), F(merge_start), F(merge_end)
+    max_lane = F(float(n_lanes))
+    dt = F(dt)
+    n = len(x)
+    plen = params[:, 5]
+
+    accel = np.zeros(n, dtype=F)
+    for i in range(n):
+        if not act[i]:
+            continue
+        gap, lv, has = leader_scan_ref(x, v, lane, act, plen, i)
+        p = tuple(params[i])
+        a = idm_law(v[i], gap, F(v[i] - lv), has, p)
+        accel[i] = min(a, wall_accel(x[i], v[i], lane[i], p, merge_end))
+
+    def incentive(i, target):
+        lead_gap, lead_v, lag_gap, lag_v = lane_gap_scan_ref(
+            x, v, lane, act, plen, i, F(target)
+        )
+        p = tuple(params[i])
+        a_self = idm_law(v[i], lead_gap, F(v[i] - lead_v), lead_gap < FREE_GAP * F(0.5), p)
+        a_lag = idm_law(lag_v, lag_gap, F(lag_v - v[i]), lag_gap < FREE_GAP * F(0.5), p)
+        s0 = params[i, 4]
+        safe = lead_gap > s0 and lag_gap > s0 and a_lag > -SAFE_DECEL
+        return a_self, a_lag, safe
+
+    decisions = [None] * n
+    for i in range(n):
+        if not act[i]:
+            continue
+        if abs(F(lane[i] - RAMP_LANE)) < F(0.5):
+            if merge_start <= x[i] <= merge_end and incentive(i, 1.0)[2]:
+                decisions[i] = F(1.0)
+            continue
+        tgt_up = min(F(lane[i] + F(1.0)), max_lane)
+        tgt_dn = max(F(lane[i] - F(1.0)), F(1.0))
+        if tgt_up > lane[i] + F(0.5):
+            a_self, a_lag, safe = incentive(i, tgt_up)
+            gain = F(a_self - accel[i] - POLITENESS * max(F(-a_lag), F(0.0)))
+            if safe and gain > THRESHOLD:
+                decisions[i] = tgt_up
+                continue
+        if tgt_dn < lane[i] - F(0.5):
+            a_self, a_lag, safe = incentive(i, tgt_dn)
+            gain = F(a_self - accel[i] - POLITENESS * max(F(-a_lag), F(0.0)))
+            if safe and gain > THRESHOLD:
+                decisions[i] = tgt_dn
+
+    for i in range(n):
+        if not act[i]:
+            v[i] = F(0.0)
+            continue
+        if decisions[i] is not None:
+            lane[i] = decisions[i]
+        new_v = max(F(v[i] + accel[i] * dt), F(0.0))
+        new_x = F(x[i] + new_v * dt)
+        if new_x >= road_end and x[i] < road_end:
+            act[i] = False
+        x[i], v[i] = new_x, new_v
+
+
+def geometry_traffic(rng, n, geometry, with_ramp):
+    """Random traffic scaled to the geometry's road (float32)."""
+    road_end, _, _, n_lanes, _ = geometry
+    x = np.sort(rng.uniform(0.0, road_end * 0.9, n)).astype(F)
+    x += np.arange(n, dtype=F) * F(0.01)  # keep the dx > eps test stable
+    v = rng.uniform(0.0, 30.0, n).astype(F)
+    lo_lane = 0 if with_ramp else 1
+    lane = rng.integers(lo_lane, n_lanes + 1, n).astype(F)
+    act = rng.uniform(0.0, 1.0, n) < 0.7
+    params = np.stack(
+        [
+            rng.uniform(20.0, 38.0, n),
+            rng.uniform(0.9, 2.2, n),
+            rng.uniform(1.0, 2.5, n),
+            rng.uniform(1.5, 3.5, n),
+            rng.uniform(1.5, 3.0, n),
+            rng.uniform(4.0, 9.0, n),
+        ],
+        axis=1,
+    ).astype(F)
+    return x, v, lane, act, params
+
+
+def check_geometry_kernel(jnp, model, name, geometry, seed, steps=20):
+    """Roll the jax geometry-operand kernel against the scalar mirror —
+    the tolerance discipline of rust/tests/runtime_numerics.rs (both
+    sides integrate the same f32 math in different op orders)."""
+    rng = np.random.default_rng(seed)
+    n = 64
+    with_ramp = geometry[2] > 0.0  # families with a merge zone use lane 0
+    x, v, lane, act, params = geometry_traffic(rng, n, geometry, with_ramp)
+    geom_row = jnp.asarray(np.array(geometry, dtype=F))
+    state_j = jnp.stack(
+        [
+            jnp.asarray(x.copy()),
+            jnp.asarray(v.copy()),
+            jnp.asarray(lane.copy()),
+            jnp.asarray(act.astype(F)),
+        ],
+        axis=1,
+    )
+    params_j = jnp.asarray(params)
+    for step in range(steps):
+        state_j, _, _, _ = model.step_geom(state_j, params_j, geom_row)
+        step_native_mirror(x, v, lane, act, params, geometry)
+        sj = np.asarray(state_j)
+        active_mismatch = int(np.sum((sj[:, 3] > 0.5) != act))
+        assert active_mismatch <= 1, (
+            f"{name} step {step}: {active_mismatch} active-flag mismatches"
+        )
+        both = (sj[:, 3] > 0.5) & act
+        dx = np.abs(sj[both, 0] - x[both])
+        dv = np.abs(sj[both, 1] - v[both])
+        assert dx.size == 0 or dx.max() < 0.5, f"{name} step {step}: max |dx| {dx.max()}"
+        assert dv.size == 0 or dv.max() < 0.5, f"{name} step {step}: max |dv| {dv.max()}"
+
+
+def bench_geometry_kernel(jnp, jax, model):
+    """Time the scalar native mirror vs the jitted geometry-operand
+    kernel on the lane-drop-hi geometry, plus a mixed-geometry vmapped
+    batch — the python-mirror estimates for BENCH_runtime_hotpath.json.
+    Returns {bench_name: (ns_per_iter, iters, steps_per_s)}."""
+    results = {}
+    geometry = FAMILY_GEOMETRIES["lane-drop-hi"]
+    step_jit = jax.jit(model.step_geom)
+    for n, reps in ((64, 30), (256, 8)):
+        rng = np.random.default_rng(99)
+        x, v, lane, act, params = geometry_traffic(rng, n, geometry, True)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            xx, vv, ll, aa = x.copy(), v.copy(), lane.copy(), act.copy()
+            step_native_mirror(xx, vv, ll, aa, params, geometry)
+        t_native = (time.perf_counter() - t0) / reps
+
+        state = jnp.stack(
+            [jnp.asarray(x), jnp.asarray(v), jnp.asarray(lane), jnp.asarray(act.astype(F))],
+            axis=1,
+        )
+        pj = jnp.asarray(params)
+        g = jnp.asarray(np.array(geometry, dtype=F))
+        step_jit(state, pj, g)[0].block_until_ready()  # compile once (pooled)
+        jit_reps = reps * 20
+        t0 = time.perf_counter()
+        for _ in range(jit_reps):
+            step_jit(state, pj, g)[0].block_until_ready()
+        t_hlo = (time.perf_counter() - t0) / jit_reps
+        results[f"mirror_native_step_geom/lane-drop/N={n}"] = (t_native, reps)
+        results[f"mirror_hlo_step_geom/lane-drop/N={n}"] = (t_hlo, jit_reps)
+        print(
+            f"  N={n:4d} lane-drop-hi: native mirror {t_native * 1e3:8.2f} ms/step, "
+            f"geometry-operand kernel {t_hlo * 1e3:8.3f} ms/step  ->  "
+            f"{t_native / t_hlo:6.1f}x"
+        )
+
+    # mixed-family batched dispatch: 8 lanes, 4 distinct geometry rows
+    b, n = 8, 64
+    stepb_jit = jax.jit(jax.vmap(model.step_geom))
+    picks = ["highway-merge-hi", "lane-drop-hi", "ramp-weave-hi", "ring-shockwave-hi"]
+    rng = np.random.default_rng(7)
+    states, geoms = [], []
+    params_all = []
+    for k in range(b):
+        geometry = FAMILY_GEOMETRIES[picks[k % len(picks)]]
+        x, v, lane, act, params = geometry_traffic(rng, n, geometry, True)
+        states.append(np.stack([x, v, lane, act.astype(F)], axis=1))
+        params_all.append(params)
+        geoms.append(np.array(geometry, dtype=F))
+    bs = jnp.asarray(np.stack(states))
+    bp = jnp.asarray(np.stack(params_all))
+    bg = jnp.asarray(np.stack(geoms))
+    stepb_jit(bs, bp, bg)[0].block_until_ready()
+    reps = 200
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        stepb_jit(bs, bp, bg)[0].block_until_ready()
+    t_batched = (time.perf_counter() - t0) / reps
+    results[f"mirror_hlo_step_geom_batched_mixed/B={b}/N={n}"] = (t_batched / b, reps)
+    print(
+        f"  B={b} N={n} mixed-family batch: {t_batched * 1e3:8.3f} ms/dispatch "
+        f"({t_batched / b * 1e3:.3f} ms amortized per instance)"
+    )
+    return results
+
+
+def append_bench(results):
+    """Append the PR 3 python-mirror measurements to
+    BENCH_runtime_hotpath.json (never deleting existing runs)."""
+    path = pathlib.Path(__file__).resolve().parents[1] / "BENCH_runtime_hotpath.json"
+    doc = json.loads(path.read_text())
+    pre = {k: v for k, v in results.items() if k.startswith("mirror_native")}
+    post = {k: v for k, v in results.items() if not k.startswith("mirror_native")}
+    for label, rows in (
+        (
+            "pre-PR3-python-mirror (scalar native full step, non-default "
+            "lane-drop geometry, float32)",
+            pre,
+        ),
+        (
+            "post-PR3-python-mirror (jax geometry-operand step_geom kernel, "
+            "CPU jit stand-in for the pooled PJRT executable; solo + "
+            "mixed-family batched)",
+            post,
+        ),
+    ):
+        doc["runs"].append(
+            {
+                "label": label,
+                "unix_time": int(time.time()),
+                "source": "scripts/validate_sweep.py",
+                "results": [
+                    {
+                        "name": name,
+                        "ns_per_iter": int(sec * 1e9),
+                        "iters": iters,
+                        "steps_per_s": round(1.0 / sec, 1),
+                    }
+                    for name, (sec, iters) in sorted(rows.items())
+                ],
+            }
+        )
+    path.write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"appended pre/post-PR3 python-mirror runs to {path}")
+
+
+def geometry_section(do_append):
+    try:
+        import sys
+
+        sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "python"))
+        import jax
+        import jax.numpy as jnp
+
+        from compile import model
+    except ImportError as e:
+        print(f"geometry-operand section skipped (no jax here: {e})")
+        return
+    for i, (name, geometry) in enumerate(FAMILY_GEOMETRIES.items()):
+        check_geometry_kernel(jnp, model, name, geometry, seed=1000 + i)
+    print(
+        f"geometry-operand agreement: OK ({len(FAMILY_GEOMETRIES)} family extremes, "
+        "20-step rollouts, jax kernel vs scalar native mirror)"
+    )
+    print("geometry-operand step timing (python mirror, indicative only):")
+    results = bench_geometry_kernel(jnp, jax, model)
+    if do_append:
+        append_bench(results)
+
+
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--append-bench",
+        action="store_true",
+        help="append the PR 3 measurements to BENCH_runtime_hotpath.json",
+    )
+    args = ap.parse_args()
+
     cases = 0
     for n in (64, 256):
         for fill in (0.2, 0.7, 1.0):
@@ -260,6 +581,7 @@ def main():
           "indicative only):")
     bench(64, 0.7, 30)
     bench(256, 0.7, 8)
+    geometry_section(args.append_bench)
 
 
 if __name__ == "__main__":
