@@ -32,7 +32,16 @@ const SAMPLES_PER_FAMILY: usize = 4;
 const HORIZON_CAP_S: f32 = 40.0;
 
 fn main() -> anyhow::Result<()> {
-    let registry = FamilyRegistry::builtin();
+    // the geometry-generic, destination-aware artifacts serve every
+    // family from one pooled executable per bucket; without artifacts
+    // the sweep stays native
+    let service = EngineService::auto().ok();
+    // suggest capacities from the actually-lowered bucket ladder so
+    // every point rides PJRT — zero native fallbacks
+    let registry = match &service {
+        Some(s) => FamilyRegistry::builtin().with_buckets(&s.manifest().buckets),
+        None => FamilyRegistry::builtin(),
+    };
     let matrix = ScenarioMatrix::new(
         vec![
             "lane-drop".into(),
@@ -57,9 +66,6 @@ fn main() -> anyhow::Result<()> {
     let displays = DisplayRegistry::new();
     let mut dataset = CampaignDataset::new();
 
-    // the geometry-generic artifacts serve every family from one pooled
-    // executable per bucket; without artifacts the sweep stays native
-    let service = EngineService::auto().ok();
     match &service {
         Some(s) => println!("physics: AOT/PJRT ({} platform)\n", s.platform()),
         None => println!("physics: native stepper (run `make artifacts` for PJRT)\n"),
@@ -81,12 +87,19 @@ fn main() -> anyhow::Result<()> {
         cfg.horizon_s = cfg.horizon_s.min(HORIZON_CAP_S);
         cfg.max_steps = (cfg.horizon_s * 10.0) as u64 + 100;
 
-        // a point sized past the largest lowered bucket stays native
+        // the registry suggests from the lowered ladder, so with
+        // artifacts present every point rides PJRT
         let physics = match &service {
-            Some(s) if s.manifest().buckets.contains(&cfg.capacity) => {
+            Some(s) => {
+                assert!(
+                    s.manifest().buckets.contains(&cfg.capacity),
+                    "capacity {} not lowered (buckets {:?})",
+                    cfg.capacity,
+                    s.manifest().buckets
+                );
                 PhysicsEngine::Hlo(s.clone())
             }
-            _ => PhysicsEngine::Native,
+            None => PhysicsEngine::Native,
         };
         let result = launch_instance(&cfg, &displays, &env, &physics)?;
         println!(

@@ -4,7 +4,9 @@ Emits one artifact per (function, vehicle-count) bucket:
 
   artifacts/step_{N}.hlo.txt   — full sim step (model.step_geom,
                                  geometry-generic: scenario constants are
-                                 an f32[5] runtime operand, schema 2)
+                                 an f32[5] runtime operand; destination-
+                                 aware: params carry [exit_pos,
+                                 exit_flag] columns — schema 3)
   artifacts/idm_{N}.hlo.txt    — bare L1 IDM kernel (rust microbench target)
   artifacts/radar_{N}.hlo.txt  — bare L1 radar kernel
   artifacts/manifest.json      — shapes, column layout, geometry layout
@@ -35,7 +37,10 @@ from .kernels.radar import radar_scan
 
 #: vehicle-count buckets lowered ahead of time; the rust runtime picks the
 #: smallest bucket >= the live vehicle count and pads with inactive rows.
-BUCKETS = (16, 64, 256)
+#: 1024 covers the largest capacity any scenario family suggests
+#: (`rust/src/scenario/family.rs` DEFAULT_BUCKET_LADDER), so no scenario
+#: point ever falls back to the native stepper.
+BUCKETS = (16, 64, 256, 1024)
 
 
 def to_hlo_text(lowered) -> str:
@@ -49,14 +54,17 @@ def to_hlo_text(lowered) -> str:
 
 #: geometry-operand width (see model.GEOM_COLUMNS).
 GEOM = len(model.GEOM_COLUMNS)
+#: params-row width (schema 3: 6 driver columns + [exit_pos, exit_flag]).
+PARAMS = len(model.PARAM_COLUMNS)
 
 
 def lower_step(n: int) -> str:
-    """The geometry-generic step: state/params plus the f32[GEOM]
-    geometry operand — one executable per bucket serves every scenario
-    family (no per-geometry recompile)."""
+    """The geometry-generic, destination-aware step: state/params plus
+    the f32[GEOM] geometry operand — one executable per bucket serves
+    every scenario family AND every per-vehicle route (no per-geometry,
+    no per-route recompile)."""
     state = jax.ShapeDtypeStruct((n, 4), jnp.float32)
-    params = jax.ShapeDtypeStruct((n, 6), jnp.float32)
+    params = jax.ShapeDtypeStruct((n, PARAMS), jnp.float32)
     geom = jax.ShapeDtypeStruct((GEOM,), jnp.float32)
     return to_hlo_text(jax.jit(model.step_geom).lower(state, params, geom))
 
@@ -74,14 +82,14 @@ def lower_step_batched(b: int, n: int) -> str:
     coalesce into a single dispatch.
     """
     state = jax.ShapeDtypeStruct((b, n, 4), jnp.float32)
-    params = jax.ShapeDtypeStruct((b, n, 6), jnp.float32)
+    params = jax.ShapeDtypeStruct((b, n, PARAMS), jnp.float32)
     geom = jax.ShapeDtypeStruct((b, GEOM), jnp.float32)
     return to_hlo_text(jax.jit(jax.vmap(model.step_geom)).lower(state, params, geom))
 
 
 def lower_idm(n: int) -> str:
     state = jax.ShapeDtypeStruct((n, 4), jnp.float32)
-    params = jax.ShapeDtypeStruct((n, 6), jnp.float32)
+    params = jax.ShapeDtypeStruct((n, PARAMS), jnp.float32)
     fn = lambda s, p: (idm_accel(s, p),)
     return to_hlo_text(jax.jit(fn).lower(state, params))
 
@@ -103,12 +111,14 @@ def main() -> None:
 
     manifest: dict = {
         "format": "hlo-text",
-        # schema 2: step/stepb artifacts take the geometry operand; the
-        # rust runtime (runtime/manifest.rs) refuses older artifacts.
-        "schema": 2,
+        # schema 3: step/stepb artifacts take the geometry operand AND
+        # the widened destination-aware params row ([exit_pos,
+        # exit_flag] columns, obs gains n_exited); the rust runtime
+        # (runtime/manifest.rs) refuses older artifacts.
+        "schema": 3,
         "state_columns": ["x", "v", "lane", "active"],
-        "param_columns": ["v0", "T", "a_max", "b", "s0", "length"],
-        "obs_columns": ["n_active", "mean_speed", "flow", "n_merged"],
+        "param_columns": list(model.PARAM_COLUMNS),
+        "obs_columns": list(model.OBS_COLUMNS),
         "geometry_columns": list(model.GEOM_COLUMNS),
         # default-geometry constants, kept as the model.py ↔ rust
         # MergeScenario drift check (the artifacts themselves are

@@ -91,11 +91,16 @@ def _idm_kernel(state_blk, state_all, params_blk, params_all, accel_out):
 def idm_accel(state: jnp.ndarray, params: jnp.ndarray, *, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
     """IDM acceleration via the blocked Pallas kernel.
 
-    ``state`` f32[N, 4], ``params`` f32[N, 6] → f32[N].  N must be a
+    ``state`` f32[N, 4], ``params`` f32[N, P] → f32[N] (P >= 6; the
+    schema-3 ABI ships P = 8 but the kernel reads the 6 driver columns
+    only, so the destination columns are sliced off *before* the
+    pallas_call and never streamed into the blocks).  N must be a
     multiple of ``block`` (callers pad with inactive rows; ``model.py``
     does this automatically).
     """
+    params = params[:, : LENGTH + 1]
     n = state.shape[0]
+    p = params.shape[1]
     bi = min(block, n)
     if n % bi != 0:
         raise ValueError(f"N={n} not a multiple of block={bi}; pad with inactive rows")
@@ -106,8 +111,8 @@ def idm_accel(state: jnp.ndarray, params: jnp.ndarray, *, block: int = DEFAULT_B
         in_specs=[
             pl.BlockSpec((bi, 4), lambda i: (i, 0)),   # ego block
             pl.BlockSpec((n, 4), lambda i: (0, 0)),    # full j-side state
-            pl.BlockSpec((bi, 6), lambda i: (i, 0)),   # ego params
-            pl.BlockSpec((n, 6), lambda i: (0, 0)),    # full j-side params
+            pl.BlockSpec((bi, p), lambda i: (i, 0)),   # ego params
+            pl.BlockSpec((n, p), lambda i: (0, 0)),    # full j-side params
         ],
         out_specs=pl.BlockSpec((bi,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),

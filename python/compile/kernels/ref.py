@@ -18,7 +18,14 @@ State layout (shared with model.py and the rust coordinator — see
 ``rust/src/runtime/engine.rs``):
 
   state  : f32[N, 4]  columns = [x, v, lane, active]
-  params : f32[N, 6]  columns = [v0, T, a_max, b, s0, length]
+  params : f32[N, 8]  columns = [v0, T, a_max, b, s0, length,
+                                 exit_pos, exit_flag]
+
+The last two params columns are the schema-3 destination intent: a
+vehicle with ``exit_flag`` set retires when it crosses its own
+``exit_pos`` on lane <= 1 (the off-ramp gore) instead of riding to the
+road end.  The L1 kernels never read them — only ``model.step_geom``'s
+lane-change and integration blocks do.
 
 Inactive rows (active == 0) are ignored both as egos (accel forced to 0)
 and as potential leaders.
@@ -30,7 +37,7 @@ import jax.numpy as jnp
 
 # Column indices — keep in sync with rust/src/runtime/engine.rs
 X, V, LANE, ACTIVE = 0, 1, 2, 3
-V0, T_HW, A_MAX, B_COMF, S0, LENGTH = 0, 1, 2, 3, 4, 5
+V0, T_HW, A_MAX, B_COMF, S0, LENGTH, EXIT_POS, EXIT_FLAG = 0, 1, 2, 3, 4, 5, 6, 7
 
 #: Distance reported when no leader exists (effectively infinite for IDM).
 FREE_GAP = 1.0e6

@@ -32,6 +32,12 @@ per-geometry recompile.  ``step`` keeps the classic constant-geometry
 signature as a thin wrapper over ``step_geom`` (the python tests' and
 the vmapped batched artifact's reference semantics are unchanged for
 the default geometry).
+
+Destination intent is per-vehicle, not per-scenario (schema 3): the
+params row carries ``[exit_pos, exit_flag]`` columns (``PARAM_COLUMNS``)
+compiled from each flow's route, so the same executable retires
+off-ramp traffic at its own gore while through traffic rides to
+``road_end`` — no per-route Python on the request path.
 """
 
 from __future__ import annotations
@@ -43,6 +49,8 @@ from .kernels.radar import radar_scan
 from .kernels.ref import (
     ACTIVE,
     B_COMF,
+    EXIT_FLAG,
+    EXIT_POS,
     FREE_GAP,
     LANE,
     LENGTH,
@@ -69,6 +77,17 @@ RAMP_LANE = 0.0
 #: (GEOM_COLS/G_*) and `artifacts/manifest.json` "geometry_columns".
 GEOM_COLUMNS = ["road_end", "merge_start", "merge_end", "num_main_lanes", "dt"]
 G_ROAD_END, G_MERGE_START, G_MERGE_END, G_NUM_MAIN_LANES, G_DT = range(5)
+
+#: schema-3 params-row layout — keep in sync with `rust/src/sumo/state.rs`
+#: (PARAM_COLS/P_*) and `artifacts/manifest.json` "param_columns".  The
+#: two destination columns make the compiled kernel route-aware: a
+#: vehicle with ``exit_flag`` set retires when it crosses its own
+#: ``exit_pos`` on lane <= 1 (the off-ramp gore) instead of at road_end.
+PARAM_COLUMNS = ["v0", "T", "a_max", "b", "s0", "length", "exit_pos", "exit_flag"]
+
+#: per-step observables — obs[4] counts off-ramp exits separately from
+#: road-end flow so off-ramp completions are visible in aggregates.
+OBS_COLUMNS = ["n_active", "mean_speed", "flow", "n_merged", "n_exited"]
 
 
 def default_geometry() -> jnp.ndarray:
@@ -134,10 +153,14 @@ def _idm_for(v, gap, dv, params):
 
 
 def _wall_accel(state, params, merge_end):
-    """IDM deceleration against the phantom wall at ``merge_end`` (ramp only)."""
+    """IDM deceleration against the phantom wall at ``merge_end`` (ramp
+    only).  Exit-flagged vehicles see no wall: their road continues
+    through the off-ramp gore at ``exit_pos``, so the lane does not end
+    for them."""
     x = state[:, X]
     v = state[:, V]
-    on_ramp = jnp.abs(state[:, LANE] - RAMP_LANE) < 0.5
+    has_exit = params[:, EXIT_FLAG] > 0.5
+    on_ramp = (jnp.abs(state[:, LANE] - RAMP_LANE) < 0.5) & ~has_exit
     gap = jnp.where(on_ramp, merge_end - x, FREE_GAP)
     gap = jnp.maximum(gap, MIN_GAP * 0.1)
     return _idm_for(v, gap, v, params)  # wall speed = 0 → dv = v
@@ -146,11 +169,19 @@ def _wall_accel(state, params, merge_end):
 def step_geom(state: jnp.ndarray, params: jnp.ndarray, geom: jnp.ndarray):
     """Advance the simulation by one step under a runtime geometry.
 
-    Inputs : state f32[N,4], params f32[N,6]  (layout in kernels/ref.py)
+    Inputs : state f32[N,4], params f32[N,8]  (layout in kernels/ref.py;
+             params[:, 6:8] = [exit_pos, exit_flag] destination intent)
              geom  f32[5]  = [road_end, merge_start, merge_end,
                               num_main_lanes, dt]  (GEOM_COLUMNS)
-    Outputs: (new_state f32[N,4], accel f32[N], radar f32[N,2], obs f32[4])
-             obs = [n_active, mean_speed, flow (crossed road_end), n_merged]
+    Outputs: (new_state f32[N,4], accel f32[N], radar f32[N,2], obs f32[5])
+             obs = [n_active, mean_speed, flow (crossed road_end),
+                    n_merged, n_exited (crossed own exit_pos)]
+
+    Destination dynamics (schema 3): a vehicle with exit_flag set works
+    toward lane 1 (mandatory down-bias overriding discretionary gain,
+    never changing up) and retires when it crosses its own exit_pos
+    while on lane <= 1 — the off-ramp gore.  Everyone else retires at
+    road_end as before.
     """
     road_end = geom[G_ROAD_END]
     merge_start = geom[G_MERGE_START]
@@ -196,19 +227,32 @@ def step_geom(state: jnp.ndarray, params: jnp.ndarray, geom: jnp.ndarray):
     gain_up = a_up - accel - MOBIL_POLITENESS * jnp.maximum(0.0, -a_lag_up)
     gain_dn = a_dn - accel - MOBIL_POLITENESS * jnp.maximum(0.0, -a_lag_dn)
     main = ~on_ramp & active
-    disc_up = main & safe_up & (tgt_up > lane + 0.5) & (gain_up > MOBIL_THRESHOLD)
-    disc_dn = main & safe_dn & (tgt_dn_ok := tgt_down < lane - 0.5) & (gain_dn > MOBIL_THRESHOLD) & ~disc_up
+    has_exit = params[:, EXIT_FLAG] > 0.5
+    disc_up = main & ~has_exit & safe_up & (tgt_up > lane + 0.5) & (gain_up > MOBIL_THRESHOLD)
+    # mandatory exit-intent bias: an exit-flagged mainline vehicle works
+    # toward lane 1 whenever safe, overriding the discretionary gain
+    exit_dn = main & has_exit & (tgt_down < lane - 0.5) & safe_dn
+    disc_dn = main & ~has_exit & safe_dn & (tgt_down < lane - 0.5) & (gain_dn > MOBIL_THRESHOLD) & ~disc_up
 
     new_lane = jnp.where(do_merge & active, 1.0, lane)
     new_lane = jnp.where(disc_up, tgt_up, new_lane)
-    new_lane = jnp.where(disc_dn, tgt_down, new_lane)
+    new_lane = jnp.where(disc_dn | exit_dn, tgt_down, new_lane)
 
     # --- integration -------------------------------------------------------
     new_v = jnp.maximum(v + accel * dt, 0.0)
     new_v = jnp.where(active, new_v, 0.0)
     new_x = x + new_v * dt
     crossed = active & (new_x >= road_end) & (x < road_end)
-    new_act = jnp.where(crossed, 0.0, act)
+    exit_pos = params[:, EXIT_POS]
+    exited = (
+        active
+        & has_exit
+        & (new_lane < 1.5)
+        & (new_x >= exit_pos)
+        & (x < exit_pos)
+        & ~crossed
+    )
+    new_act = jnp.where(crossed | exited, 0.0, act)
     new_x = jnp.where(active, new_x, x)
 
     new_state = jnp.stack([new_x, new_v, new_lane, new_act], axis=1)
@@ -217,7 +261,8 @@ def step_geom(state: jnp.ndarray, params: jnp.ndarray, geom: jnp.ndarray):
     mean_v = jnp.sum(v * act) / jnp.maximum(n_active, 1.0)
     flow = jnp.sum(crossed.astype(jnp.float32))
     n_merged = jnp.sum((do_merge & active).astype(jnp.float32))
-    obs = jnp.stack([n_active, mean_v, flow, n_merged])
+    n_exited = jnp.sum(exited.astype(jnp.float32))
+    obs = jnp.stack([n_active, mean_v, flow, n_merged, n_exited])
 
     return new_state, jnp.where(active, accel, 0.0), radar, obs
 

@@ -16,7 +16,8 @@ def test_lower_step_contains_bucket_shape():
     text = aot.lower_step(16)
     assert "HloModule" in text
     assert "f32[16,4]" in text
-    assert "f32[16,6]" in text
+    # schema 3: the widened destination-aware params row
+    assert "f32[16,8]" in text
     # the geometry operand (schema 2): scenario constants arrive at
     # runtime instead of being baked in
     assert f"f32[{aot.GEOM}]" in text
@@ -61,7 +62,7 @@ def test_manifest_consistent_with_artifacts():
 def test_lower_step_batched_shapes():
     text = aot.lower_step_batched(aot.BATCH, 16)
     assert f"f32[{aot.BATCH},16,4]" in text
-    assert f"f32[{aot.BATCH},16,6]" in text
+    assert f"f32[{aot.BATCH},16,8]" in text
     # per-lane geometry rows: mixed-family batches coalesce
     assert f"f32[{aot.BATCH},{aot.GEOM}]" in text
     assert "custom-call" not in text.lower()
@@ -85,7 +86,7 @@ def test_batched_step_matches_vmap_of_single():
         lane = rng.integers(0, 3, n).astype(np.float32)
         act = (rng.uniform(size=n) > 0.3).astype(np.float32)
         states.append(jnp.stack([jnp.asarray(x), jnp.asarray(v), jnp.asarray(lane), jnp.asarray(act)], axis=1))
-        params.append(jnp.tile(jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5]], jnp.float32), (n, 1)))
+        params.append(jnp.tile(jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5, 0.0, 0.0]], jnp.float32), (n, 1)))
     bs = jnp.stack(states)
     bp = jnp.stack(params)
     batched = jax.vmap(model.step)(bs, bp)

@@ -35,6 +35,8 @@ def make_state(rng: np.random.Generator, n: int, lanes: int = 3, p_active: float
             jnp.asarray(rng.uniform(1.5, 3.5, n).astype(np.float32)),
             jnp.asarray(rng.uniform(1.5, 3.0, n).astype(np.float32)),
             jnp.asarray(rng.uniform(4.0, 9.0, n).astype(np.float32)),
+            jnp.asarray(np.zeros(n, dtype=np.float32)),  # exit_pos
+            jnp.asarray(np.zeros(n, dtype=np.float32)),  # exit_flag
         ],
         axis=1,
     )
@@ -61,7 +63,7 @@ def test_retirement_follows_operand_road_end():
     """A vehicle short of the default ROAD_END retires when the operand
     road_end is pulled in front of it (the lane-drop/ring case)."""
     state = jnp.array([[390.0, 30.0, 1.0, 1.0]], dtype=jnp.float32)
-    params = jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5]], dtype=jnp.float32)
+    params = jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5, 0.0, 0.0]], dtype=jnp.float32)
     # default geometry: 390 m is mid-road, vehicle stays active
     ns, _, _, obs = model.step_geom(state, params, model.default_geometry())
     assert float(ns[0, 3]) == 1.0
@@ -75,7 +77,7 @@ def test_retirement_follows_operand_road_end():
 def test_wall_and_merge_zone_follow_operands():
     """The phantom wall and the mandatory-merge window move with the
     merge_start/merge_end operands."""
-    params = jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5]], dtype=jnp.float32)
+    params = jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5, 0.0, 0.0]], dtype=jnp.float32)
     # ramp vehicle at x=150: outside the default zone (no merge), but
     # inside a shifted [100, 200] zone (merges into the empty mainline)
     state = jnp.array([[150.0, 20.0, 0.0, 1.0]], dtype=jnp.float32)
@@ -112,7 +114,7 @@ def test_extra_mainline_lane_opens_with_operand():
         dtype=jnp.float32,
     )
     params = jnp.tile(
-        jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5]], jnp.float32), (3, 1)
+        jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5, 0.0, 0.0]], jnp.float32), (3, 1)
     )
     ns, *_ = model.step_geom(state, params, geom(1000.0, 300.0, 500.0, 2, 0.1))
     assert float(ns[0, 2]) == 2.0  # no lane 3 in a 2-lane world
@@ -122,7 +124,7 @@ def test_extra_mainline_lane_opens_with_operand():
 
 def test_dt_operand_scales_integration():
     state = jnp.array([[100.0, 20.0, 1.0, 1.0]], dtype=jnp.float32)
-    params = jnp.array([[20.0, 1.5, 1.5, 2.0, 2.0, 4.5]], dtype=jnp.float32)
+    params = jnp.array([[20.0, 1.5, 1.5, 2.0, 2.0, 4.5, 0.0, 0.0]], dtype=jnp.float32)
     # v == v0 → zero accel → displacement is v * dt exactly
     ns1, *_ = model.step_geom(state, params, geom(1000.0, 300.0, 500.0, 2, 0.1))
     ns2, *_ = model.step_geom(state, params, geom(1000.0, 300.0, 500.0, 2, 0.2))

@@ -5,11 +5,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from compile import model
-from tests.test_kernel import make_state
+from tests.test_kernel import given, make_state, settings, st
 
 
 def run_steps(state, params, k):
@@ -25,7 +23,7 @@ def test_step_shapes():
     assert ns.shape == (64, 4)
     assert accel.shape == (64,)
     assert radar.shape == (64, 2)
-    assert obs.shape == (4,)
+    assert obs.shape == (5,)
 
 
 @settings(max_examples=25, deadline=None)
@@ -66,7 +64,7 @@ def test_active_count_never_increases(seed):
 
 def test_vehicle_retires_past_road_end():
     state = jnp.array([[model.ROAD_END - 0.5, 30.0, 1.0, 1.0]], dtype=jnp.float32)
-    params = jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5]], dtype=jnp.float32)
+    params = jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5, 0.0, 0.0]], dtype=jnp.float32)
     ns, _, _, obs = model.step(state, params)
     assert float(ns[0, 3]) == 0.0
     assert float(obs[2]) == 1.0  # flow counter ticked
@@ -86,7 +84,7 @@ def test_ramp_vehicle_stops_at_wall():
     rows += [[x, 0.0, 2.0, 1.0] for x in jam_x]
     n = len(rows)
     state = jnp.array(rows, dtype=jnp.float32)
-    params = jnp.tile(jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5]], jnp.float32), (n, 1))
+    params = jnp.tile(jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5, 0.0, 0.0]], jnp.float32), (n, 1))
     for _ in range(400):
         state, *_ = model.step(state, params)
     assert float(state[0, 2]) == 0.0, "merge into a solid jam should be unsafe"
@@ -98,7 +96,7 @@ def test_ramp_vehicle_merges_into_empty_mainline():
     state = jnp.array(
         [[model.MERGE_START + 10.0, 20.0, 0.0, 1.0]], dtype=jnp.float32
     )
-    params = jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5]], dtype=jnp.float32)
+    params = jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5, 0.0, 0.0]], dtype=jnp.float32)
     ns, _, _, obs = model.step(state, params)
     assert float(ns[0, 2]) == 1.0  # merged on the first safe opportunity
     assert float(obs[3]) == 1.0    # n_merged observable
@@ -113,7 +111,7 @@ def test_merge_blocked_when_unsafe():
         ],
         dtype=jnp.float32,
     )
-    params = jnp.tile(jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5]], jnp.float32), (2, 1))
+    params = jnp.tile(jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5, 0.0, 0.0]], jnp.float32), (2, 1))
     ns, *_ = model.step(state, params)
     assert float(ns[0, 2]) == 0.0
 
@@ -132,3 +130,90 @@ def test_lane_stays_in_range():
     lanes = np.asarray(ns[:, 2])
     assert lanes.min() >= 0.0
     assert lanes.max() <= model.NUM_MAIN_LANES
+
+
+# ------------------------------------------------------- exit dynamics ----
+
+
+def exit_params(exit_pos, flag=1.0):
+    return jnp.array(
+        [[30.0, 1.5, 1.5, 2.0, 2.0, 4.5, exit_pos, flag]], dtype=jnp.float32
+    )
+
+
+def test_exit_flagged_vehicle_retires_at_exit_pos():
+    """A flagged vehicle on lane 1 retires crossing its own exit_pos —
+    well short of ROAD_END — and ticks n_exited, not flow."""
+    state = jnp.array([[499.5, 30.0, 1.0, 1.0]], dtype=jnp.float32)
+    ns, _, _, obs = model.step(state, exit_params(500.0))
+    assert float(ns[0, 3]) == 0.0
+    assert float(obs[2]) == 0.0  # flow did NOT tick
+    assert float(obs[4]) == 1.0  # n_exited did
+
+
+def test_unflagged_vehicle_ignores_exit_pos():
+    state = jnp.array([[499.5, 30.0, 1.0, 1.0]], dtype=jnp.float32)
+    ns, _, _, obs = model.step(state, exit_params(500.0, flag=0.0))
+    assert float(ns[0, 3]) == 1.0
+    assert float(obs[4]) == 0.0
+
+
+def test_exit_requires_gore_lane():
+    """Crossing exit_pos while pinned on lane 2 (a blocker alongside on
+    lane 1 makes the down-change unsafe) is a missed exit: the vehicle
+    stays active and will retire at ROAD_END like through traffic."""
+    state = jnp.array(
+        [[499.5, 30.0, 2.0, 1.0], [499.3, 30.0, 1.0, 1.0]], dtype=jnp.float32
+    )
+    params = jnp.concatenate([exit_params(500.0), exit_params(0.0, flag=0.0)])
+    ns, _, _, obs = model.step(state, params)
+    assert float(ns[0, 2]) == 2.0  # pinned: no lane change
+    assert float(ns[0, 3]) == 1.0
+    assert float(obs[4]) == 0.0
+
+
+def test_exit_intent_biases_toward_lane_1():
+    """A flagged vehicle on lane 2 changes down to lane 1 with NO
+    discretionary gain (empty road: gain is ~0, below the threshold) —
+    the mandatory exit bias at work; unflagged stays put."""
+    state = jnp.array([[100.0, 25.0, 2.0, 1.0]], dtype=jnp.float32)
+    ns, *_ = model.step(state, exit_params(900.0))
+    assert float(ns[0, 2]) == 1.0
+    ns, *_ = model.step(state, exit_params(900.0, flag=0.0))
+    assert float(ns[0, 2]) == 2.0
+
+
+def test_exit_flagged_never_changes_up():
+    """Even stuck behind a crawler, a flagged vehicle must not overtake
+    away from its exit (the unflagged control does)."""
+    state = jnp.array(
+        [[100.0, 25.0, 1.0, 1.0], [112.0, 2.0, 1.0, 1.0]], dtype=jnp.float32
+    )
+    params = jnp.concatenate([exit_params(900.0), exit_params(0.0, flag=0.0)])
+    ns, *_ = model.step(state, params)
+    assert float(ns[0, 2]) == 1.0
+    params = jnp.concatenate(
+        [exit_params(0.0, flag=0.0), exit_params(0.0, flag=0.0)]
+    )
+    ns, *_ = model.step(state, params)
+    assert float(ns[0, 2]) == 2.0
+
+
+def test_exit_flagged_ramp_vehicle_sees_no_wall():
+    """The phantom wall at MERGE_END must not stop a lane-0 vehicle whose
+    road continues through the gore (exit_flag set)."""
+    state = jnp.array([[model.MERGE_END - 10.0, 20.0, 0.0, 1.0]], dtype=jnp.float32)
+    # jam lane 1 through the zone so it cannot merge away
+    jam = jnp.array(
+        [[x, 0.0, 1.0, 1.0] for x in np.linspace(440.0, 520.0, 20)],
+        dtype=jnp.float32,
+    )
+    state = jnp.concatenate([state, jam])
+    flagged = jnp.concatenate(
+        [exit_params(model.MERGE_END)] + [exit_params(0.0, flag=0.0)] * 20
+    )
+    plain = jnp.concatenate([exit_params(0.0, flag=0.0)] * 21)
+    _, accel_flagged, _, _ = model.step(state, flagged)
+    _, accel_plain, _, _ = model.step(state, plain)
+    assert float(accel_plain[0]) < -1.0  # wall brakes the unflagged vehicle
+    assert float(accel_flagged[0]) > float(accel_plain[0]) + 1.0

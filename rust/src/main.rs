@@ -206,6 +206,10 @@ fn config_init(args: &Args) -> Result<()> {
 
 fn scenarios(args: &Args) -> Result<()> {
     use webots_hpc::scenario::{scenarios_manifest, FamilyRegistry, SamplerKind, ScenarioMatrix};
+    // the scenarios codebook carries spaces/points, never capacities —
+    // bucket-ladder enforcement happens node-side, where
+    // `ScenarioMatrix::materialize` rebuckets against the loaded
+    // artifact manifest (see FamilyRegistry::with_buckets)
     let registry = FamilyRegistry::builtin();
     let families: Vec<String> = match args.flags.get("families") {
         Some(list) => list

@@ -109,7 +109,10 @@ impl CampaignDataset {
         let mut w = std::io::BufWriter::new(w);
         let w = &mut w;
         let params = self.param_columns();
-        write!(w, "run_id,scenario,sample_index,node,seed,time_s,n_active,mean_speed,flow,n_merged")?;
+        write!(
+            w,
+            "run_id,scenario,sample_index,node,seed,time_s,n_active,mean_speed,flow,n_merged,n_exited"
+        )?;
         for p in &params {
             write!(w, ",{p}")?;
         }
@@ -130,9 +133,9 @@ impl CampaignDataset {
             for row in &r.rows {
                 writeln!(
                     w,
-                    "{},{scenario},{sample},{},{},{:.1},{},{:.3},{},{}{cells}",
+                    "{},{scenario},{sample},{},{},{:.1},{},{:.3},{},{},{}{cells}",
                     r.run_id, r.node, r.seed, row.time_s, row.n_active, row.mean_speed,
-                    row.flow, row.n_merged
+                    row.flow, row.n_merged, row.n_exited
                 )?;
             }
         }
@@ -165,6 +168,7 @@ mod tests {
                 mean_speed: 10.0,
                 flow,
                 n_merged: 0.0,
+                n_exited: 0.0,
             },
         );
         d
@@ -219,7 +223,7 @@ mod tests {
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(
             lines[0],
-            "run_id,scenario,sample_index,node,seed,time_s,n_active,mean_speed,flow,n_merged,circumference_m,lanes"
+            "run_id,scenario,sample_index,node,seed,time_s,n_active,mean_speed,flow,n_merged,n_exited,circumference_m,lanes"
         );
         // untagged run: empty scenario + param cells
         assert!(lines[1].starts_with("e0[0],,,0,1,"));

@@ -12,6 +12,10 @@ pub struct ObsRow {
     pub mean_speed: f32,
     pub flow: f32,
     pub n_merged: f32,
+    /// Off-ramp completions this step (exit-flagged vehicles crossing
+    /// their own exit_pos) — throughput that `flow` deliberately does
+    /// not count.
+    pub n_exited: f32,
 }
 
 impl ObsRow {
@@ -22,6 +26,7 @@ impl ObsRow {
             mean_speed: o.mean_speed,
             flow: o.flow,
             n_merged: o.n_merged,
+            n_exited: o.n_exited,
         }
     }
 }
@@ -45,6 +50,9 @@ pub struct RunDataset {
     /// Totals for quick aggregation.
     pub total_flow: f32,
     pub total_merged: f32,
+    /// Off-ramp completions — the ramp-weave throughput that
+    /// `total_flow` alone under-reports.
+    pub total_exited: f32,
     pub total_spawned: u64,
 }
 
@@ -58,6 +66,7 @@ impl RunDataset {
             rows: Vec::new(),
             total_flow: 0.0,
             total_merged: 0.0,
+            total_exited: 0.0,
             total_spawned: 0,
         }
     }
@@ -79,6 +88,7 @@ impl RunDataset {
         self.rows.push(ObsRow::from_obs(time_s, obs));
         self.total_flow += obs.flow;
         self.total_merged += obs.n_merged;
+        self.total_exited += obs.n_exited;
     }
 
     /// On-disk size estimate [bytes] (CSV encoding).
@@ -89,11 +99,11 @@ impl RunDataset {
 
     /// Render as CSV.
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("time_s,n_active,mean_speed,flow,n_merged\n");
+        let mut s = String::from("time_s,n_active,mean_speed,flow,n_merged,n_exited\n");
         for r in &self.rows {
             s.push_str(&format!(
-                "{:.1},{},{:.3},{},{}\n",
-                r.time_s, r.n_active, r.mean_speed, r.flow, r.n_merged
+                "{:.1},{},{:.3},{},{},{}\n",
+                r.time_s, r.n_active, r.mean_speed, r.flow, r.n_merged, r.n_exited
             ));
         }
         s
@@ -113,9 +123,9 @@ impl RunDataset {
                         .map_err(|e| crate::Error::Config(format!("bad csv field '{v}': {e}")))
                 })
                 .collect::<crate::Result<_>>()?;
-            if f.len() != 5 {
+            if f.len() != 6 {
                 return Err(crate::Error::Config(format!(
-                    "csv row {i} has {} fields, want 5",
+                    "csv row {i} has {} fields, want 6",
                     f.len()
                 )));
             }
@@ -126,6 +136,7 @@ impl RunDataset {
                     mean_speed: f[2],
                     flow: f[3],
                     n_merged: f[4],
+                    n_exited: f[5],
                 },
             );
         }
@@ -147,6 +158,7 @@ mod tests {
                     mean_speed: 20.0,
                     flow: if i == 9 { 1.0 } else { 0.0 },
                     n_merged: 0.0,
+                    n_exited: if i == 4 { 1.0 } else { 0.0 },
                 },
             );
         }
@@ -157,6 +169,7 @@ mod tests {
     fn totals_accumulate() {
         let d = sample();
         assert_eq!(d.total_flow, 1.0);
+        assert_eq!(d.total_exited, 1.0);
         assert_eq!(d.rows.len(), 10);
     }
 
@@ -167,6 +180,7 @@ mod tests {
         let back = RunDataset::from_csv("1[3]", 2, 42, &csv).unwrap();
         assert_eq!(back.rows.len(), d.rows.len());
         assert_eq!(back.total_flow, d.total_flow);
+        assert_eq!(back.total_exited, d.total_exited);
     }
 
     #[test]
@@ -179,7 +193,9 @@ mod tests {
     #[test]
     fn bad_csv_rejected() {
         assert!(RunDataset::from_csv("x", 0, 0, "h\n1,2\n").is_err());
-        assert!(RunDataset::from_csv("x", 0, 0, "h\na,b,c,d,e\n").is_err());
+        assert!(RunDataset::from_csv("x", 0, 0, "h\na,b,c,d,e,f\n").is_err());
+        // pre-schema-3 five-field rows are refused, not misparsed
+        assert!(RunDataset::from_csv("x", 0, 0, "h\n1,2,3,4,5\n").is_err());
     }
 
     #[test]

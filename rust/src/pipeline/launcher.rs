@@ -102,7 +102,11 @@ pub fn launch_instance(
     env.exec("webots", &["--batch"])?;
 
     // (1) randomized routes — against the compiled scenario network
-    // when this is a scenario-matrix run
+    // when this is a scenario-matrix run.  Destination intent is
+    // validated against THIS instance's road here (not only in the
+    // family compilers) so XML-loaded or hand-built flows can't smuggle
+    // in a gore at/past the road end that would silently never fire.
+    cfg.flows.validate_exits(cfg.scenario.road_end_m)?;
     let net = match &cfg.scenario_run {
         Some(sr) => sr.network.clone(),
         None => cfg.scenario.network(),
@@ -157,7 +161,7 @@ pub fn launch_instance(
     }
     let steps = webots.steps();
     // authoritative totals from the back-end before shutdown
-    let (_, _, spawned) = webots.totals()?;
+    let (_, _, _, spawned) = webots.totals()?;
     dataset.total_spawned = spawned;
     let controller_cmds = webots.controller_cmds();
     let display_no = display.display_number();
@@ -325,7 +329,9 @@ mod tests {
                 return;
             }
         };
-        let registry = FamilyRegistry::builtin();
+        // capacities come from the manifest's own lowered ladder, so
+        // every materialized point must ride the PJRT path
+        let registry = FamilyRegistry::builtin().with_buckets(&service.manifest().buckets);
         let matrix = ScenarioMatrix::new(
             vec![
                 "highway-merge".into(),
@@ -345,21 +351,16 @@ mod tests {
         for run_index in 0..4u64 {
             let planned = matrix.materialize(&registry, run_index).unwrap();
             let family = planned.assignment.family.clone();
-            if !service
-                .manifest()
-                .buckets
-                .contains(&planned.config.capacity)
-            {
-                // a point sized past the largest lowered bucket cannot
-                // ride PJRT; pick capacity is a property of the sample,
-                // not of the geometry-generic artifacts
-                eprintln!(
-                    "note: {family} point needs capacity {} (lowered: {:?}); skipped",
-                    planned.config.capacity,
-                    service.manifest().buckets
-                );
-                continue;
-            }
+            assert!(
+                service
+                    .manifest()
+                    .buckets
+                    .contains(&planned.config.capacity),
+                "{family}: suggested capacity {} has no lowered bucket ({:?}) — \
+                 the ladder-from-manifest wiring regressed",
+                planned.config.capacity,
+                service.manifest().buckets
+            );
             let world = sample_merge_world(free_base_port());
             let mut cfg =
                 InstanceConfig::from_planned(format!("hlo[{run_index}]"), 0, world, &planned);

@@ -15,7 +15,7 @@ use std::path::PathBuf;
 use std::rc::Rc;
 use std::sync::Arc;
 
-use crate::sumo::state::{GeometryVec, GEOM_COLS, PARAM_COLS, STATE_COLS};
+use crate::sumo::state::{GeometryVec, GEOM_COLS, OBS_COLS, PARAM_COLS, STATE_COLS};
 use crate::{Error, Result};
 
 use super::manifest::Manifest;
@@ -30,7 +30,7 @@ pub struct StepOutputs {
     pub accel: Vec<f32>,
     /// f32[N*2] — radar returns.
     pub radar: Vec<f32>,
-    /// f32[4] — [n_active, mean_speed, flow, n_merged].
+    /// f32[OBS_COLS] — [n_active, mean_speed, flow, n_merged, n_exited].
     pub obs: Vec<f32>,
 }
 
@@ -57,10 +57,14 @@ impl Engine {
     pub fn new(dir: PathBuf) -> Result<Engine> {
         let manifest = Manifest::load(&dir)?;
         manifest.validate_against_default_scenario()?;
-        // geometry is a runtime operand (schema 2): one executable per
-        // (kernel, bucket) serves every scenario family, so the engine
-        // refuses legacy constant-geometry artifacts outright
+        // geometry is a runtime operand and destination intent rides the
+        // params row (schema 3): one executable per (kernel, bucket)
+        // serves every scenario family and every per-vehicle route, so
+        // the engine refuses legacy schema-1/2 artifacts outright —
+        // per-column validated, since a drifted column silently
+        // scrambles every run
         manifest.validate_geometry_layout()?;
+        manifest.validate_param_layout()?;
         let client = xla::PjRtClient::cpu().map_err(Error::runtime)?;
         Ok(Engine {
             client: Rc::new(client),
@@ -245,7 +249,7 @@ impl Engine {
             fill(&mut o.state, &st[i * bucket * STATE_COLS..(i + 1) * bucket * STATE_COLS]);
             fill(&mut o.accel, &ac[i * bucket..(i + 1) * bucket]);
             fill(&mut o.radar, &ra[i * bucket * 2..(i + 1) * bucket * 2]);
-            fill(&mut o.obs, &ob[i * 4..(i + 1) * 4]);
+            fill(&mut o.obs, &ob[i * OBS_COLS..(i + 1) * OBS_COLS]);
         }
         Ok(())
     }
@@ -310,8 +314,29 @@ mod tests {
         assert_eq!(out.state.len(), bucket * 4);
         assert_eq!(out.accel.len(), bucket);
         assert_eq!(out.radar.len(), bucket * 2);
-        assert_eq!(out.obs.len(), 4);
+        assert_eq!(out.obs.len(), OBS_COLS);
         assert_eq!(out.obs[0], 2.0); // n_active
+    }
+
+    #[test]
+    fn exit_columns_are_live_in_the_artifact() {
+        // the schema-3 executable honours per-vehicle destination
+        // intent: same state, flagged params retire at the gore
+        let Some(e) = engine() else { return };
+        let bucket = e.manifest().buckets[0];
+        let g = default_geom();
+        let mut through = Traffic::new(bucket);
+        through.spawn(449.5, 30.0, 1.0, DriverParams::default());
+        let out = e.step(bucket, &through.state, &through.params, &g).unwrap();
+        assert_eq!(out.obs[4], 0.0, "through vehicle does not exit");
+        assert_eq!(out.obs[2], 0.0);
+        let mut exiting = Traffic::new(bucket);
+        exiting.spawn(449.5, 30.0, 1.0, DriverParams::default().with_exit(450.0));
+        assert_eq!(exiting.state, through.state, "same state, different params");
+        let out = e.step(bucket, &exiting.state, &exiting.params, &g).unwrap();
+        assert_eq!(out.obs[4], 1.0, "exit_pos crossing ticks n_exited");
+        assert_eq!(out.obs[2], 0.0, "flow does not double-count the exit");
+        assert_eq!(out.obs[0], 1.0);
     }
 
     #[test]

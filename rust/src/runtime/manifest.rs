@@ -15,6 +15,18 @@ use crate::{Error, Result};
 pub const GEOMETRY_COLUMNS: [&str; crate::sumo::state::GEOM_COLS] =
     ["road_end", "merge_start", "merge_end", "num_main_lanes", "dt"];
 
+/// The schema-3 params-row layout (`model.py PARAM_COLUMNS`; see
+/// `sumo::state::P_*`): six driver columns plus the per-vehicle
+/// destination intent the destination-aware artifacts consume.
+pub const PARAM_COLUMNS: [&str; crate::sumo::state::PARAM_COLS] = [
+    "v0", "T", "a_max", "b", "s0", "length", "exit_pos", "exit_flag",
+];
+
+/// The schema-3 observables layout (`model.py OBS_COLUMNS`): off-ramp
+/// exits are counted separately from road-end flow.
+pub const OBS_COLUMNS: [&str; crate::sumo::state::OBS_COLS] =
+    ["n_active", "mean_speed", "flow", "n_merged", "n_exited"];
+
 /// One lowered artifact.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactEntry {
@@ -32,7 +44,10 @@ pub struct ArtifactEntry {
 pub struct Manifest {
     pub format: String,
     /// Artifact schema version: 1 = constant-geometry artifacts (legacy),
-    /// 2 = geometry-generic (step/stepb take the f32[GEOM_COLS] operand).
+    /// 2 = geometry-generic (step/stepb take the f32[GEOM_COLS] operand),
+    /// 3 = destination-aware (params carry the `[exit_pos, exit_flag]`
+    /// columns, obs gains `n_exited`).  The runtime executes schema 3
+    /// only.
     pub schema: u32,
     pub state_columns: Vec<String>,
     pub param_columns: Vec<String>,
@@ -147,6 +162,12 @@ impl Manifest {
         self.schema >= 2
     }
 
+    /// Do the artifacts consume the destination-aware params row
+    /// (`[exit_pos, exit_flag]` columns, `n_exited` observable)?
+    pub fn destination_aware(&self) -> bool {
+        self.schema >= 3
+    }
+
     /// Assert the compile-path constants match the rust defaults; a
     /// drifted constant silently corrupts every experiment, so this is
     /// checked at engine construction.  (With schema 2 the constants are
@@ -170,17 +191,23 @@ impl Manifest {
         Ok(())
     }
 
-    /// Assert the geometry-operand contract of schema-2 artifacts: the
-    /// operand layout matches [`GEOMETRY_COLUMNS`] and every step/stepb
-    /// entry records the three-operand signature.  Schema-1 manifests
-    /// are rejected outright — the runtime no longer carries a
-    /// constant-geometry code path (`Engine::new` enforces this).
+    /// Assert the operand contract of schema-3 artifacts: the geometry
+    /// layout matches [`GEOMETRY_COLUMNS`] and every step/stepb entry
+    /// records the three-operand signature.  Schema-1 *and* schema-2
+    /// manifests are rejected outright — the runtime no longer carries a
+    /// constant-geometry or destination-blind code path (`Engine::new`
+    /// enforces this together with [`Self::validate_param_layout`]).
     pub fn validate_geometry_layout(&self) -> Result<()> {
-        if !self.geometry_generic() {
+        if !self.destination_aware() {
             return Err(Error::Artifact(format!(
-                "artifacts are schema {} (constant geometry); the runtime needs \
-                 geometry-generic schema 2 artifacts — re-run `make artifacts`",
-                self.schema
+                "artifacts are schema {} ({}); the runtime needs \
+                 destination-aware schema 3 artifacts — re-run `make artifacts`",
+                self.schema,
+                if self.geometry_generic() {
+                    "destination-blind params row"
+                } else {
+                    "constant geometry"
+                }
             )));
         }
         if self.geometry_columns != GEOMETRY_COLUMNS {
@@ -207,6 +234,28 @@ impl Manifest {
         }
         Ok(())
     }
+
+    /// Per-column validation of the schema-3 params/obs layouts: the
+    /// manifest must record exactly [`PARAM_COLUMNS`] and
+    /// [`OBS_COLUMNS`] — a drifted or reordered column silently
+    /// scrambles every vehicle's calibration (or its destination), so
+    /// this is checked at engine construction alongside
+    /// [`Self::validate_geometry_layout`].
+    pub fn validate_param_layout(&self) -> Result<()> {
+        if self.param_columns != PARAM_COLUMNS {
+            return Err(Error::Artifact(format!(
+                "params-row layout {:?} != expected {:?}; re-run `make artifacts`",
+                self.param_columns, PARAM_COLUMNS
+            )));
+        }
+        if self.obs_columns != OBS_COLUMNS {
+            return Err(Error::Artifact(format!(
+                "obs layout {:?} != expected {:?}; re-run `make artifacts`",
+                self.obs_columns, OBS_COLUMNS
+            )));
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -226,7 +275,9 @@ mod tests {
         };
         m.validate_against_default_scenario().unwrap();
         m.validate_geometry_layout().unwrap();
+        m.validate_param_layout().unwrap();
         assert!(m.geometry_generic());
+        assert!(m.destination_aware());
         assert!(!m.buckets.is_empty());
     }
 
@@ -257,25 +308,65 @@ mod tests {
         assert!(Manifest::parse(text).is_err());
     }
 
-    #[test]
-    fn parse_synthetic_manifest() {
-        let text = r#"{
+    /// A minimal valid schema-3 manifest for the synthetic tests.
+    fn synthetic_schema3() -> String {
+        r#"{
           "format": "hlo-text",
-          "schema": 2,
+          "schema": 3,
           "state_columns": ["x", "v", "lane", "active"],
-          "param_columns": ["v0", "T", "a_max", "b", "s0", "length"],
-          "obs_columns": ["n_active", "mean_speed", "flow", "n_merged"],
+          "param_columns": ["v0", "T", "a_max", "b", "s0", "length", "exit_pos", "exit_flag"],
+          "obs_columns": ["n_active", "mean_speed", "flow", "n_merged", "n_exited"],
           "geometry_columns": ["road_end", "merge_start", "merge_end", "num_main_lanes", "dt"],
           "dt": 0.1, "road_end": 1000.0, "merge_start": 300.0,
           "merge_end": 500.0, "num_main_lanes": 2,
           "buckets": [16],
           "entries": {"step_16": {"file": "step_16.hlo.txt", "n": 16, "outputs": 4, "operands": 3}}
-        }"#;
-        let m = Manifest::parse(text).unwrap();
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parse_synthetic_manifest() {
+        let m = Manifest::parse(&synthetic_schema3()).unwrap();
         m.validate_against_default_scenario().unwrap();
         m.validate_geometry_layout().unwrap();
+        m.validate_param_layout().unwrap();
+        assert!(m.destination_aware());
         assert_eq!(m.entry("step", 16).unwrap().outputs, 4);
         assert_eq!(m.entry("step", 16).unwrap().operands, 3);
+    }
+
+    #[test]
+    fn schema2_rejected_like_schema1() {
+        // destination-blind schema-2 artifacts (6 param columns) parse
+        // but must be refused at Engine::new, exactly like schema 1
+        let text = synthetic_schema3()
+            .replace(r#""schema": 3"#, r#""schema": 2"#)
+            .replace(r#", "exit_pos", "exit_flag""#, "")
+            .replace(r#", "n_exited""#, "");
+        let m = Manifest::parse(&text).unwrap();
+        assert!(m.geometry_generic());
+        assert!(!m.destination_aware());
+        let err = m.validate_geometry_layout().unwrap_err().to_string();
+        assert!(err.contains("schema 2"), "{err}");
+        assert!(m.validate_param_layout().is_err());
+    }
+
+    #[test]
+    fn drifted_param_or_obs_columns_rejected() {
+        // a reordered params column scrambles every calibration row
+        let text = synthetic_schema3().replace(
+            r#""exit_pos", "exit_flag""#,
+            r#""exit_flag", "exit_pos""#,
+        );
+        let m = Manifest::parse(&text).unwrap();
+        let err = m.validate_param_layout().unwrap_err().to_string();
+        assert!(err.contains("params-row layout"), "{err}");
+        // ...and so is a missing n_exited observable
+        let text = synthetic_schema3().replace(r#", "n_exited""#, "");
+        let m = Manifest::parse(&text).unwrap();
+        let err = m.validate_param_layout().unwrap_err().to_string();
+        assert!(err.contains("obs layout"), "{err}");
     }
 
     #[test]
@@ -302,26 +393,14 @@ mod tests {
 
     #[test]
     fn wrong_geometry_layout_rejected() {
-        let text = r#"{
-          "format": "hlo-text",
-          "schema": 2,
-          "state_columns": ["x", "v", "lane", "active"],
-          "param_columns": ["v0", "T", "a_max", "b", "s0", "length"],
-          "obs_columns": ["n_active", "mean_speed", "flow", "n_merged"],
-          "geometry_columns": ["dt", "road_end"],
-          "dt": 0.1, "road_end": 1000.0, "merge_start": 300.0,
-          "merge_end": 500.0, "num_main_lanes": 2,
-          "buckets": [16],
-          "entries": {"step_16": {"file": "step_16.hlo.txt", "n": 16, "outputs": 4, "operands": 3}}
-        }"#;
-        let m = Manifest::parse(text).unwrap();
+        let text = synthetic_schema3().replace(
+            r#""geometry_columns": ["road_end", "merge_start", "merge_end", "num_main_lanes", "dt"]"#,
+            r#""geometry_columns": ["dt", "road_end"]"#,
+        );
+        let m = Manifest::parse(&text).unwrap();
         assert!(m.validate_geometry_layout().is_err());
         // ...and so is a step entry missing its geometry operand
-        let text = text.replace(
-            r#""geometry_columns": ["dt", "road_end"]"#,
-            r#""geometry_columns": ["road_end", "merge_start", "merge_end", "num_main_lanes", "dt"]"#,
-        );
-        let text = text.replace(r#""operands": 3"#, r#""operands": 2"#);
+        let text = synthetic_schema3().replace(r#""operands": 3"#, r#""operands": 2"#);
         let m = Manifest::parse(&text).unwrap();
         assert!(m.validate_geometry_layout().is_err());
     }

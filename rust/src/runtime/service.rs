@@ -625,6 +625,7 @@ impl Stepper for HloStepper {
             mean_speed: out.obs[1],
             flow: out.obs[2],
             n_merged: out.obs[3],
+            n_exited: out.obs[4],
         };
         self.last_obs = obs;
         obs

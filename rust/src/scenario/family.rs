@@ -15,15 +15,19 @@
 //!   reused: mandatory lane change inside the taper, phantom wall at
 //!   the drop point),
 //! * `ramp-weave` — on-ramp plus downstream off-ramp around a shared
-//!   auxiliary lane; the off-ramp edge carries routing/validation while
-//!   retirement stays at the road end (documented approximation),
+//!   auxiliary lane; off-route flows carry schema-3 destination intent
+//!   (`FlowDef::exit_pos_m` = the gore), so exiting traffic actually
+//!   leaves at the off-ramp instead of riding to the road end,
 //! * `ring-shockwave` — stop-and-go waves: a dense departure burst on a
-//!   closed ring (unrolled over a fixed lap count for the linear
-//!   stepper), low desired speeds, wide headway heterogeneity.
+//!   closed ring (unrolled over enough laps that density is conserved
+//!   for the whole horizon), low desired speeds, wide headway
+//!   heterogeneity.
 //!
 //! Speed-limit axes reach the dynamics through per-flow `v0_scale`
 //! (desired speed = scale × the vtype's calibration); headway
-//! perturbation axes through `t_scale` — see `sumo::FlowDef`.
+//! perturbation axes through `t_scale` — see `sumo::FlowDef`.  Route
+//! destinations reach them through `exit_pos_m` → the params rows'
+//! `[exit_pos, exit_flag]` columns.
 
 use crate::sumo::state::DriverParams;
 use crate::sumo::{Edge, FlowDef, FlowFile, MergeScenario, Network, VehicleType};
@@ -49,7 +53,12 @@ pub struct ScenarioConfig {
     /// per-flow scales carry it into `duarouter`).
     pub driver: DriverParams,
     /// Suggested traffic slot capacity (next AOT-style bucket above the
-    /// expected vehicle count).
+    /// expected vehicle count).  A bare `ScenarioFamily::compile` fills
+    /// this from [`DEFAULT_BUCKET_LADDER`] (clamped — compile is
+    /// infallible across the space by contract); registry
+    /// materialization re-derives it against the real lowered ladder
+    /// and REFUSES overflowing points ([`FamilyRegistry::rebucket`] is
+    /// the enforcement point).
     pub capacity: usize,
     /// Suggested simulated horizon [s].
     pub horizon_s: f32,
@@ -87,9 +96,15 @@ pub trait ScenarioFamily: Send + Sync {
 }
 
 /// Registry of known families — the lookup the campaign matrix and the
-/// CLI resolve `ScenarioId`s through.
+/// CLI resolve `ScenarioId`s through.  It also owns the bucket ladder
+/// capacities are suggested from: [`DEFAULT_BUCKET_LADDER`] out of the
+/// box, or the *actually lowered* buckets of a loaded artifact manifest
+/// via [`FamilyRegistry::with_buckets`], so every materialized point
+/// rides the PJRT path.
 pub struct FamilyRegistry {
     families: Vec<Box<dyn ScenarioFamily>>,
+    /// Sorted capacity ladder; never empty.
+    buckets: Vec<usize>,
 }
 
 impl Default for FamilyRegistry {
@@ -103,6 +118,7 @@ impl FamilyRegistry {
     pub fn new() -> Self {
         FamilyRegistry {
             families: Vec::new(),
+            buckets: DEFAULT_BUCKET_LADDER.to_vec(),
         }
     }
 
@@ -114,6 +130,48 @@ impl FamilyRegistry {
         r.register(Box::new(RampWeaveFamily));
         r.register(Box::new(RingShockwaveFamily));
         r
+    }
+
+    /// Suggest capacities from this bucket ladder instead of the
+    /// hard-coded default — pass the loaded manifest's `buckets` so a
+    /// family-suggested capacity is always a lowered PJRT executable.
+    /// Empty ladders are ignored.
+    pub fn with_buckets(mut self, buckets: &[usize]) -> Self {
+        if !buckets.is_empty() {
+            self.buckets = buckets.to_vec();
+            self.buckets.sort_unstable();
+            self.buckets.dedup();
+        }
+        self
+    }
+
+    /// The capacity ladder this registry suggests from.
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    /// Re-derive a compiled config's suggested capacity against this
+    /// registry's ladder (families compile with the default ladder).
+    /// A point whose expected demand overflows even the largest bucket
+    /// is REFUSED rather than clamped: a silently truncated bucket
+    /// queues spawns forever and corrupts the run's flow/exit metrics,
+    /// and a stderr warning is invisible to a PBS array — better to
+    /// fail the run loudly and keep the dataset trustworthy.
+    pub fn rebucket(&self, config: &mut ScenarioConfig) -> Result<()> {
+        let expected = config.flows.total_expected_vehicles();
+        let largest = *self.buckets.last().expect("ladder never empty");
+        if bucket_need(expected) > largest as f32 {
+            return Err(Error::Config(format!(
+                "scenario '{}' #{} expects ~{expected:.0} vehicles (needs \
+                 ~{:.0} slots) but the largest lowered bucket is {largest}; \
+                 lower a bigger bucket or shrink the point",
+                config.tag.id,
+                config.tag.sample_index,
+                bucket_need(expected),
+            )));
+        }
+        config.capacity = bucket_capacity_in(expected, &self.buckets);
+        Ok(())
     }
 
     pub fn register(&mut self, family: Box<dyn ScenarioFamily>) {
@@ -138,7 +196,8 @@ impl FamilyRegistry {
     }
 
     /// Sample + compile in one step: the `(family, seed, index) →
-    /// runnable config` pure function PBS array nodes call.
+    /// runnable config` pure function PBS array nodes call.  The
+    /// suggested capacity comes from this registry's bucket ladder.
     pub fn materialize(
         &self,
         family: &str,
@@ -148,7 +207,8 @@ impl FamilyRegistry {
     ) -> Result<(ScenarioPoint, ScenarioConfig)> {
         let fam = self.get(family)?;
         let point = sampler.sample(&fam.space(), seed, index);
-        let config = fam.compile(&point)?;
+        let mut config = fam.compile(&point)?;
+        self.rebucket(&mut config)?;
         Ok((point, config))
     }
 }
@@ -161,6 +221,9 @@ struct FlowSpec<'a> {
     depart_speed: f32,
     depart_lane: u32,
     depart_pos: f32,
+    /// Destination intent compiled from the route: `Some(gore_x)` for
+    /// off-ramp routes, `None` for through/on routes (exit at road end).
+    exit_pos: Option<f32>,
 }
 
 /// Split `spec` into a human and a CAV flow by penetration, applying
@@ -194,20 +257,43 @@ fn push_split(
             end_s: window.1,
             v0_scale,
             t_scale,
+            exit_pos_m: spec.exit_pos,
         });
     }
 }
 
-/// Next AOT-style bucket above the expected vehicle count (with slack
-/// for arrival bursts).
+/// The AOT bucket ladder assumed when no artifact manifest is loaded —
+/// MUST mirror `python/compile/aot.py BUCKETS` (pinned by
+/// `scripts/check_manifest.py`), so a family-suggested capacity always
+/// has a PJRT executable.
+pub const DEFAULT_BUCKET_LADDER: [usize; 4] = [16, 64, 256, 1024];
+
+/// Slot demand a bucket must hold for `expected_vehicles`: the expected
+/// count with slack for arrival bursts — the single formula both the
+/// ladder walk and the clamp warning in [`FamilyRegistry::rebucket`]
+/// decide from.
+fn bucket_need(expected_vehicles: f32) -> f32 {
+    expected_vehicles * 1.3 + 8.0
+}
+
+/// Next bucket in `ladder` above the expected vehicle count; clamps to
+/// the largest lowered bucket.
+fn bucket_capacity_in(expected_vehicles: f32, ladder: &[usize]) -> usize {
+    let need = bucket_need(expected_vehicles);
+    ladder
+        .iter()
+        .copied()
+        .find(|&b| need <= b as f32)
+        .unwrap_or_else(|| ladder.last().copied().unwrap_or(16))
+}
+
+/// [`bucket_capacity_in`] over the default ladder — what a bare
+/// `ScenarioFamily::compile` (no registry context) suggests.  This path
+/// clamps (compile is infallible by contract); the refuse-on-overflow
+/// policy lives in [`FamilyRegistry::rebucket`], which registry/matrix
+/// materialization always runs.
 fn bucket_capacity(expected_vehicles: f32) -> usize {
-    let need = expected_vehicles * 1.3 + 8.0;
-    for b in [16usize, 64, 256, 1024] {
-        if need <= b as f32 {
-            return b;
-        }
-    }
-    1024
+    bucket_capacity_in(expected_vehicles, &DEFAULT_BUCKET_LADDER)
 }
 
 /// The perturbed human driver baseline a point encodes.
@@ -285,6 +371,7 @@ impl ScenarioFamily for HighwayMergeFamily {
                     depart_speed: speed * 0.8,
                     depart_lane: lane,
                     depart_pos: 0.0,
+                    exit_pos: None,
                 },
                 p_cav,
                 (0.0, horizon_s),
@@ -300,6 +387,7 @@ impl ScenarioFamily for HighwayMergeFamily {
                 depart_speed: 15.0,
                 depart_lane: 0,
                 depart_pos: 50.0,
+                exit_pos: None,
             },
             p_cav,
             (0.0, horizon_s),
@@ -308,6 +396,7 @@ impl ScenarioFamily for HighwayMergeFamily {
 
         let flows = FlowFile { flows };
         flows.validate(&network)?;
+        flows.validate_exits(geometry.road_end_m)?;
         let capacity = bucket_capacity(flows.total_expected_vehicles());
         Ok(ScenarioConfig {
             tag: point.provenance(&space),
@@ -412,6 +501,7 @@ impl ScenarioFamily for LaneDropFamily {
                 depart_speed: speed * 0.8,
                 depart_lane: 0,
                 depart_pos: 0.0,
+                exit_pos: None,
             },
             p_cav,
             (0.0, horizon_s),
@@ -427,6 +517,7 @@ impl ScenarioFamily for LaneDropFamily {
                     depart_speed: speed * 0.8,
                     depart_lane: lane,
                     depart_pos: 0.0,
+                    exit_pos: None,
                 },
                 p_cav,
                 (0.0, horizon_s),
@@ -436,6 +527,7 @@ impl ScenarioFamily for LaneDropFamily {
 
         let flows = FlowFile { flows };
         flows.validate(&network)?;
+        flows.validate_exits(geometry.road_end_m)?;
         let capacity = bucket_capacity(flows.total_expected_vehicles());
         Ok(ScenarioConfig {
             tag: point.provenance(&space),
@@ -455,9 +547,10 @@ impl ScenarioFamily for LaneDropFamily {
 
 /// On-ramp + downstream off-ramp around a shared auxiliary lane.  The
 /// on-ramp stream enters on the auxiliary lane and must merge before
-/// the weave ends; the off-ramp edge exists in the network graph (and
-/// is route-validated) while the stepper retires all traffic at the
-/// road end — the documented linear-dynamics approximation.
+/// the weave ends; the off-ramp stream carries schema-3 destination
+/// intent (`exit_pos` = the gore at the weave end), so the steppers
+/// bias it toward lane 1 and retire it at the off-ramp — through/on
+/// traffic still retires at the road end.
 pub struct RampWeaveFamily;
 
 impl ScenarioFamily for RampWeaveFamily {
@@ -561,13 +654,17 @@ impl ScenarioFamily for RampWeaveFamily {
                     depart_speed: speed * 0.8,
                     depart_lane: lane,
                     depart_pos: 0.0,
+                    exit_pos: None,
                 },
                 p_cav,
                 (0.0, horizon_s),
                 (v0_scale, t_scale),
             );
         }
-        // exiting traffic rides lane 1 toward the off-ramp
+        // exiting traffic rides lane 1 toward the off-ramp and leaves
+        // at the gore (the weave end), compiled into the schema-3
+        // destination columns — no longer the "retire at road end"
+        // approximation
         push_split(
             &mut flows,
             FlowSpec {
@@ -577,6 +674,7 @@ impl ScenarioFamily for RampWeaveFamily {
                 depart_speed: speed * 0.8,
                 depart_lane: 1,
                 depart_pos: 0.0,
+                exit_pos: Some(geometry.merge_end_m),
             },
             p_cav,
             (0.0, horizon_s),
@@ -591,6 +689,7 @@ impl ScenarioFamily for RampWeaveFamily {
                 depart_speed: 15.0,
                 depart_lane: 0,
                 depart_pos: 50.0,
+                exit_pos: None,
             },
             p_cav,
             (0.0, horizon_s),
@@ -599,6 +698,7 @@ impl ScenarioFamily for RampWeaveFamily {
 
         let flows = FlowFile { flows };
         flows.validate(&network)?;
+        flows.validate_exits(geometry.road_end_m)?;
         let capacity = bucket_capacity(flows.total_expected_vehicles());
         Ok(ScenarioConfig {
             tag: point.provenance(&space),
@@ -617,17 +717,29 @@ impl ScenarioFamily for RampWeaveFamily {
 // ---------------------------------------------------------------------
 
 /// Stop-and-go shockwaves: a dense departure burst on a closed ring
-/// (modeled as the ring unrolled over [`RingShockwaveFamily::LAPS`]
-/// laps, since the steppers integrate a linear road), low desired
-/// speeds and wide headway heterogeneity — the classic instability
-/// setup.  No lane 0 is used, so the merge wall is inert.
+/// (modeled as the ring unrolled over enough laps that **no vehicle
+/// reaches the road end inside the horizon** — see
+/// [`RingShockwaveFamily::laps_for`] — since the steppers integrate a
+/// linear road), low desired speeds and wide headway heterogeneity —
+/// the classic instability setup.  No lane 0 is used, so the merge wall
+/// is inert.
 pub struct RingShockwaveFamily;
 
 impl RingShockwaveFamily {
-    /// Laps the ring is unrolled over.
-    pub const LAPS: f32 = 3.0;
     /// Departure burst window [s] that packs the ring.
     pub const BURST_S: f32 = 30.0;
+    /// Simulated horizon [s].
+    pub const HORIZON_S: f32 = 180.0;
+
+    /// Laps the ring is unrolled over: enough road that a vehicle at
+    /// the desired speed (plus the duarouter's +10% jitter headroom)
+    /// cannot reach `road_end` within the horizon, so the platoon
+    /// density is conserved for the whole run instead of draining
+    /// mid-horizon.  Floor of 3 keeps short/slow configs multi-lap.
+    pub fn laps_for(circumference_m: f32, speed_limit: f32, horizon_s: f32) -> f32 {
+        let reach = horizon_s * speed_limit * 1.2;
+        (reach / circumference_m).ceil().max(3.0)
+    }
 }
 
 impl ScenarioFamily for RingShockwaveFamily {
@@ -659,8 +771,9 @@ impl ScenarioFamily for RingShockwaveFamily {
         let t_scale = point.num(&space, "t_scale")? as f32;
         let v0_scale = speed / DriverParams::default().v0;
 
+        let horizon_s = Self::HORIZON_S;
         let geometry = MergeScenario {
-            road_end_m: circ * Self::LAPS,
+            road_end_m: circ * Self::laps_for(circ, speed, horizon_s),
             // no mandatory-merge zone and no lane 0 → the wall is inert
             merge_start_m: 0.0,
             merge_end_m: 0.0,
@@ -704,7 +817,6 @@ impl ScenarioFamily for RingShockwaveFamily {
                 },
             ],
         };
-        let horizon_s = 180.0;
         let lap_route = route(&["ring_n", "ring_e", "ring_s", "ring_w"]);
 
         // pack `density × circ` vehicles per lane inside the burst window
@@ -721,6 +833,7 @@ impl ScenarioFamily for RingShockwaveFamily {
                     depart_speed: 5.0,
                     depart_lane: lane,
                     depart_pos: 0.0,
+                    exit_pos: None,
                 },
                 p_cav,
                 (0.0, Self::BURST_S),
@@ -730,6 +843,7 @@ impl ScenarioFamily for RingShockwaveFamily {
 
         let flows = FlowFile { flows };
         flows.validate(&network)?;
+        flows.validate_exits(geometry.road_end_m)?;
         let capacity = bucket_capacity(flows.total_expected_vehicles());
         Ok(ScenarioConfig {
             tag: point.provenance(&space),
@@ -784,12 +898,60 @@ mod tests {
             assert!(cfg.flows.total_expected_vehicles() > 0.0, "{id}");
             cfg.flows.validate(&cfg.network).unwrap();
             // cfg.driver is the summary form of the per-flow scales:
-            // every human flow's base params must equal it exactly
+            // every human flow's base params must equal it exactly —
+            // modulo the per-flow destination columns, which are route
+            // intent rather than driver calibration
             for flow in &cfg.flows.flows {
                 if flow.vtype == VehicleType::Human {
-                    assert_eq!(flow.base_params(), cfg.driver, "{id}");
+                    let behavioral = DriverParams {
+                        exit_pos: 0.0,
+                        exit_flag: 0.0,
+                        ..flow.base_params()
+                    };
+                    assert_eq!(behavioral, cfg.driver, "{id}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn ramp_weave_off_flows_exit_at_the_gore() {
+        let r = FamilyRegistry::builtin();
+        let (_, cfg) = r.materialize("ramp-weave", &UniformSampler, 5, 0).unwrap();
+        let off: Vec<_> = cfg
+            .flows
+            .flows
+            .iter()
+            .filter(|f| f.id.starts_with("off"))
+            .collect();
+        assert!(!off.is_empty(), "off_share > 0 at this point");
+        for f in &off {
+            assert_eq!(f.exit_pos_m, Some(cfg.geometry.merge_end_m), "{}", f.id);
+            assert!(f.base_params().exits());
+        }
+        // through/on routes ride to the road end
+        for f in cfg.flows.flows.iter().filter(|f| !f.id.starts_with("off")) {
+            assert_eq!(f.exit_pos_m, None, "{}", f.id);
+        }
+    }
+
+    #[test]
+    fn ring_road_end_outruns_the_horizon() {
+        // density conservation: no vehicle can reach road_end within the
+        // horizon even at desired speed + jitter headroom
+        let r = FamilyRegistry::builtin();
+        for idx in 0..6u64 {
+            let (point, cfg) = r
+                .materialize("ring-shockwave", &UniformSampler, 9, idx)
+                .unwrap();
+            let space = r.get("ring-shockwave").unwrap().space();
+            let speed = point.num(&space, "speed_limit").unwrap() as f32;
+            assert!(
+                cfg.geometry.road_end_m > cfg.horizon_s * speed * 1.1,
+                "idx {idx}: road_end {} vs reach {}",
+                cfg.geometry.road_end_m,
+                cfg.horizon_s * speed * 1.1
+            );
         }
     }
 
@@ -806,6 +968,7 @@ mod tests {
                 depart_speed: 20.0,
                 depart_lane: 1,
                 depart_pos: 0.0,
+                exit_pos: None,
             },
             0.25,
             (0.0, 60.0),
@@ -827,6 +990,7 @@ mod tests {
                 depart_speed: 20.0,
                 depart_lane: 1,
                 depart_pos: 0.0,
+                exit_pos: None,
             },
             0.0,
             (0.0, 60.0),
@@ -842,5 +1006,42 @@ mod tests {
         assert_eq!(bucket_capacity(40.0), 64);
         assert_eq!(bucket_capacity(150.0), 256);
         assert_eq!(bucket_capacity(5000.0), 1024);
+    }
+
+    #[test]
+    fn registry_ladder_drives_suggested_capacity() {
+        let (_, cfg) = FamilyRegistry::builtin()
+            .materialize("lane-drop", &UniformSampler, 11, 0)
+            .unwrap();
+        let expected = cfg.flows.total_expected_vehicles();
+        // lane-drop demand floor is 800 vph over 120 s (~27 vehicles),
+        // so even the lightest point overflows a [16]-only ladder
+        assert!(expected > 10.0, "test premise: a non-trivial point");
+
+        // a manifest that only lowered a too-small ladder must REFUSE
+        // the point (a clamped bucket silently corrupts the run), not
+        // quietly cap it
+        let small = FamilyRegistry::builtin().with_buckets(&[16]);
+        assert_eq!(small.buckets(), &[16]);
+        let err = small
+            .materialize("lane-drop", &UniformSampler, 11, 0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("largest lowered bucket"), "{err}");
+
+        // a ladder with headroom picks the matching bucket
+        let wide = FamilyRegistry::builtin().with_buckets(&[1024, 16, 256, 64]);
+        let (_, cfg2) = wide
+            .materialize("lane-drop", &UniformSampler, 11, 0)
+            .unwrap();
+        assert_eq!(cfg2.capacity, cfg.capacity);
+
+        // the default ladder mirrors aot.py BUCKETS
+        assert_eq!(FamilyRegistry::builtin().buckets(), &DEFAULT_BUCKET_LADDER);
+        // empty ladders are ignored, not adopted
+        assert_eq!(
+            FamilyRegistry::builtin().with_buckets(&[]).buckets(),
+            &DEFAULT_BUCKET_LADDER
+        );
     }
 }

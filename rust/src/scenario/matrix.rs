@@ -101,14 +101,17 @@ impl ScenarioMatrix {
     }
 
     /// Assignment + sample + compile in one call — what a node runs to
-    /// stand up its instance.
+    /// stand up its instance.  The suggested capacity comes from the
+    /// registry's bucket ladder (the loaded manifest's buckets when the
+    /// caller built the registry with `with_buckets`).
     pub fn materialize(&self, registry: &FamilyRegistry, run_index: u64) -> Result<PlannedRun> {
         let assignment = self.assignment(run_index);
         let family = registry.get(&assignment.family)?;
         let point = self
             .sampler
             .sample(&family.space(), self.seed, assignment.sample_index);
-        let config = family.compile(&point)?;
+        let mut config = family.compile(&point)?;
+        registry.rebucket(&mut config)?;
         Ok(PlannedRun {
             assignment,
             point,

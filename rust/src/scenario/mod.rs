@@ -33,7 +33,7 @@ pub mod space;
 
 pub use family::{
     FamilyRegistry, HighwayMergeFamily, LaneDropFamily, RampWeaveFamily, RingShockwaveFamily,
-    ScenarioConfig, ScenarioFamily, ScenarioRun,
+    ScenarioConfig, ScenarioFamily, ScenarioRun, DEFAULT_BUCKET_LADDER,
 };
 pub use manifest::scenarios_manifest;
 pub use matrix::{PlannedRun, RunAssignment, ScenarioMatrix};

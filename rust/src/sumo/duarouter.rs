@@ -156,6 +156,28 @@ mod tests {
     }
 
     #[test]
+    fn exit_intent_survives_routing_jitter() {
+        let (net, mut flows) = setup();
+        flows.flows[0].exit_pos_m = Some(500.0);
+        let r = duarouter(&net, &flows, 3).unwrap();
+        let exiting: Vec<_> = r
+            .departures
+            .iter()
+            .filter(|d| d.id.starts_with("main_l1"))
+            .collect();
+        assert!(!exiting.is_empty());
+        // per-driver jitter touches v0/T, never the destination columns
+        assert!(exiting
+            .iter()
+            .all(|d| d.params.exits() && d.params.exit_pos == 500.0));
+        assert!(r
+            .departures
+            .iter()
+            .filter(|d| d.id.starts_with("ramp"))
+            .all(|d| !d.params.exits()));
+    }
+
+    #[test]
     fn driver_params_are_heterogeneous() {
         let (net, flows) = setup();
         let r = duarouter(&net, &flows, 11).unwrap();

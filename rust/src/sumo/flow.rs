@@ -48,16 +48,24 @@ pub struct FlowDef {
     /// Scenario-level headway multiplier, same mechanism (the IDM/MOBIL
     /// driver-param perturbation axis).
     pub t_scale: f32,
+    /// Destination intent (schema 3): `Some(gore_x)` routes this flow's
+    /// vehicles off at the off-ramp gore — compiled into the params
+    /// rows' `[exit_pos, exit_flag]` columns; `None` = ride to road end.
+    pub exit_pos_m: Option<f32>,
 }
 
 impl FlowDef {
     /// The per-flow driver baseline: the vtype template with the
-    /// scenario scales applied.  `duarouter` jitters per driver on top.
+    /// scenario scales applied, carrying the flow's destination intent.
+    /// `duarouter` jitters per driver on top (never touching the exit
+    /// columns).
     pub fn base_params(&self) -> DriverParams {
         let b = self.vtype.params();
         DriverParams {
             v0: b.v0 * self.v0_scale,
             t_headway: b.t_headway * self.t_scale,
+            exit_pos: self.exit_pos_m.unwrap_or(0.0),
+            exit_flag: if self.exit_pos_m.is_some() { 1.0 } else { 0.0 },
             ..b
         }
     }
@@ -97,6 +105,7 @@ impl FlowFile {
                     end_s: horizon_s,
                     v0_scale: 1.0,
                     t_scale: 1.0,
+                    exit_pos_m: None,
                 },
                 FlowDef {
                     id: "main_l2".into(),
@@ -110,6 +119,7 @@ impl FlowFile {
                     end_s: horizon_s,
                     v0_scale: 1.0,
                     t_scale: 1.0,
+                    exit_pos_m: None,
                 },
                 FlowDef {
                     id: "ramp_cav".into(),
@@ -123,6 +133,7 @@ impl FlowFile {
                     end_s: horizon_s,
                     v0_scale: 1.0,
                     t_scale: 1.0,
+                    exit_pos_m: None,
                 },
             ],
         }
@@ -159,6 +170,34 @@ impl FlowFile {
                     "flow '{}': non-positive driver scale",
                     f.id
                 )));
+            }
+            if let Some(gore) = f.exit_pos_m {
+                if !gore.is_finite() || gore <= 0.0 {
+                    return Err(crate::Error::Config(format!(
+                        "flow '{}': bad exit position {gore} m",
+                        f.id
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate destination intent against the stepper's road: an exit
+    /// position at or beyond `road_end_m` can never be crossed before
+    /// road-end retirement wins, silently degenerating into the
+    /// "exiting traffic rides to the road end" mislabeling — refuse it.
+    /// Scenario compilers run this alongside [`Self::validate`].
+    pub fn validate_exits(&self, road_end_m: f32) -> Result<()> {
+        for f in &self.flows {
+            if let Some(gore) = f.exit_pos_m {
+                if gore >= road_end_m {
+                    return Err(crate::Error::Config(format!(
+                        "flow '{}': exit position {gore} m is not before the \
+                         road end at {road_end_m} m — exits would never fire",
+                        f.id
+                    )));
+                }
             }
         }
         Ok(())
@@ -201,6 +240,19 @@ mod tests {
     }
 
     #[test]
+    fn exit_intent_reaches_base_params() {
+        let mut f = FlowFile::merge_sample(1200.0, 300.0, 60.0).flows[0].clone();
+        assert_eq!(f.base_params().exit_flag, 0.0);
+        f.exit_pos_m = Some(650.0);
+        let p = f.base_params();
+        assert_eq!(p.exit_pos, 650.0);
+        assert_eq!(p.exit_flag, 1.0);
+        assert!(p.exits());
+        // the driver calibration itself is untouched by the intent
+        assert_eq!(p.a_max, f.vtype.params().a_max);
+    }
+
+    #[test]
     fn validate_catches_bad_flows() {
         let net = crate::sumo::MergeScenario::default().network();
         let good = FlowFile::merge_sample(1200.0, 300.0, 60.0);
@@ -217,6 +269,18 @@ mod tests {
         let mut bad_window = good.clone();
         bad_window.flows[0].end_s = bad_window.flows[0].begin_s;
         assert!(bad_window.validate(&net).is_err());
+
+        let mut bad_exit = good.clone();
+        bad_exit.flows[0].exit_pos_m = Some(-1.0);
+        assert!(bad_exit.validate(&net).is_err());
+
+        let mut dead_exit = good.clone();
+        dead_exit.flows[0].exit_pos_m = Some(650.0);
+        dead_exit.validate(&net).unwrap();
+        dead_exit.validate_exits(1000.0).unwrap();
+        // a gore at/past the road end can never fire
+        assert!(dead_exit.validate_exits(650.0).is_err());
+        assert!(dead_exit.validate_exits(600.0).is_err());
 
         let mut bad_scale = good;
         bad_scale.flows[0].t_scale = 0.0;

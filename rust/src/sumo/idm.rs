@@ -20,7 +20,9 @@
 use super::mobil::{self, MobilParams};
 use super::network::MergeScenario;
 use super::simulation::{StepObs, Stepper};
-use super::state::{Traffic, P_AMAX, P_B, P_LEN, P_S0, P_T, P_V0};
+use super::state::{
+    Traffic, PARAM_COLS, P_AMAX, P_B, P_EXIT_FLAG, P_EXIT_POS, P_LEN, P_S0, P_T, P_V0,
+};
 use super::sweep::LaneIndex;
 
 /// "Infinite" gap sentinel — matches `ref.FREE_GAP`.
@@ -85,7 +87,7 @@ pub fn leader_scan(t: &Traffic, i: usize) -> Leader {
 }
 
 /// The IDM law — mirrors `ref.idm_accel_ref` for one vehicle.
-pub fn idm_law(v: f32, gap: f32, dv: f32, has_leader: bool, p: &[f32; 6]) -> f32 {
+pub fn idm_law(v: f32, gap: f32, dv: f32, has_leader: bool, p: &[f32; PARAM_COLS]) -> f32 {
     let s = gap.max(MIN_GAP);
     let v0 = p[P_V0].max(0.1);
     let a_max = p[P_AMAX].max(1e-3);
@@ -96,7 +98,9 @@ pub fn idm_law(v: f32, gap: f32, dv: f32, has_leader: bool, p: &[f32; 6]) -> f32
     a_max * (free - interaction)
 }
 
-fn params_row(t: &Traffic, i: usize) -> [f32; 6] {
+/// One vehicle's full params row (driver calibration + exit intent),
+/// shared with `mobil.rs` so both read the identical layout.
+pub(crate) fn params_row(t: &Traffic, i: usize) -> [f32; PARAM_COLS] {
     [
         t.param(i, P_V0),
         t.param(i, P_T),
@@ -104,6 +108,8 @@ fn params_row(t: &Traffic, i: usize) -> [f32; 6] {
         t.param(i, P_B),
         t.param(i, P_S0),
         t.param(i, P_LEN),
+        t.param(i, P_EXIT_POS),
+        t.param(i, P_EXIT_FLAG),
     ]
 }
 
@@ -140,9 +146,11 @@ pub fn idm_accel_all_into(t: &Traffic, index: &LaneIndex, out: &mut Vec<f32>) {
 }
 
 /// Phantom-wall deceleration for ramp vehicles approaching MERGE_END —
-/// mirrors `model._wall_accel`.
+/// mirrors `model._wall_accel`.  Exit-flagged vehicles see no wall:
+/// their road continues through the off-ramp gore at `exit_pos`.
 pub fn wall_accel(t: &Traffic, i: usize, scenario: &MergeScenario) -> f32 {
-    let on_ramp = (t.lane(i) - MergeScenario::RAMP_LANE).abs() < 0.5;
+    let on_ramp = (t.lane(i) - MergeScenario::RAMP_LANE).abs() < 0.5
+        && t.param(i, P_EXIT_FLAG) <= 0.5;
     let gap = if on_ramp {
         (scenario.merge_end_m - t.x(i)).max(MIN_GAP * 0.1)
     } else {
@@ -169,6 +177,7 @@ fn integrate(
     let dt = scenario.dt_s;
     let mut flow = 0.0f32;
     let mut n_merged = 0.0f32;
+    let mut n_exited = 0.0f32;
     let (n_active, mean_v_before) = t.census();
     let n_active_before = n_active as f32;
 
@@ -188,10 +197,21 @@ fn integrate(
         let x_old = t.x(i);
         let new_x = x_old + new_v * dt;
         let crossed = new_x >= scenario.road_end_m && x_old < scenario.road_end_m;
+        // destination retirement: an exit-flagged vehicle leaves when it
+        // crosses its own exit_pos on lane <= 1 (the off-ramp gore) —
+        // evaluated against the post-decision lane, like the model
+        let exited = !crossed
+            && t.param(i, P_EXIT_FLAG) > 0.5
+            && new_lane < 1.5
+            && new_x >= t.param(i, P_EXIT_POS)
+            && x_old < t.param(i, P_EXIT_POS);
         if crossed {
             flow += 1.0;
         }
-        t.set_state_row(i, new_x, new_v, new_lane, !crossed);
+        if exited {
+            n_exited += 1.0;
+        }
+        t.set_state_row(i, new_x, new_v, new_lane, !(crossed || exited));
     }
 
     StepObs {
@@ -199,6 +219,7 @@ fn integrate(
         mean_speed: mean_v_before,
         flow,
         n_merged,
+        n_exited,
     }
 }
 
@@ -387,6 +408,36 @@ mod tests {
         let obs = s.step(&mut t);
         assert_eq!(obs.flow, 1.0);
         assert!(!t.is_active(0));
+    }
+
+    #[test]
+    fn step_retires_at_exit_pos_and_counts_exits_not_flow() {
+        let mut s = NativeIdmStepper::default();
+        let mut t = Traffic::new(1);
+        t.spawn(449.5, 30.0, 1.0, DriverParams::default().with_exit(450.0));
+        let obs = s.step(&mut t);
+        assert_eq!(obs.flow, 0.0);
+        assert_eq!(obs.n_exited, 1.0);
+        assert!(!t.is_active(0));
+    }
+
+    #[test]
+    fn unflagged_vehicle_ignores_exit_pos() {
+        let mut s = NativeIdmStepper::default();
+        let mut t = Traffic::new(1);
+        t.spawn(449.5, 30.0, 1.0, DriverParams::default());
+        let obs = s.step(&mut t);
+        assert_eq!(obs.n_exited, 0.0);
+        assert!(t.is_active(0));
+    }
+
+    #[test]
+    fn exit_flagged_ramp_vehicle_sees_no_wall() {
+        let scenario = MergeScenario::default();
+        let mut t = Traffic::new(1);
+        t.spawn(450.0, 20.0, 0.0, DriverParams::default().with_exit(500.0));
+        // the lane does not end for a vehicle bound for the gore
+        assert!(wall_accel(&t, 0, &scenario) > 0.0);
     }
 
     #[test]

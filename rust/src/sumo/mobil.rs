@@ -1,10 +1,13 @@
 //! MOBIL-style lane-change decisions — mirrors the lane-change block of
 //! `python/compile/model.py` (mandatory merge for ramp vehicles inside
-//! the merge zone, discretionary changes on the mainline).
+//! the merge zone, discretionary changes on the mainline, and the
+//! schema-3 mandatory exit-intent bias: an exit-flagged vehicle works
+//! toward lane 1 whenever safe, overriding discretionary gain and never
+//! changing up).
 
-use super::idm::{idm_law, FREE_GAP};
+use super::idm::{idm_law, params_row, FREE_GAP};
 use super::network::MergeScenario;
-use super::state::{Traffic, P_LEN, P_S0};
+use super::state::{Traffic, P_EXIT_FLAG, P_LEN, P_S0};
 use super::sweep::LaneIndex;
 
 /// MOBIL tuning — constants shared with `model.py`.
@@ -95,14 +98,7 @@ struct Incentive {
 /// scan path and the sorted-sweep path so both are bit-identical by
 /// construction.
 fn incentive_from_gaps(t: &Traffic, i: usize, g: LaneGaps, m: &MobilParams) -> Incentive {
-    let p = [
-        t.param(i, 0),
-        t.param(i, 1),
-        t.param(i, 2),
-        t.param(i, 3),
-        t.param(i, 4),
-        t.param(i, 5),
-    ];
+    let p = params_row(t, i);
     let v = t.v(i);
     let a_self_new = idm_law(v, g.lead_gap, v - g.lead_v, g.lead_gap < FREE_GAP * 0.5, &p);
     // the follower's hypothetical accel if it had to follow us (the model
@@ -150,9 +146,19 @@ where
         return None;
     }
 
+    // mandatory exit-intent bias (schema 3): an exit-flagged mainline
+    // vehicle works toward lane 1 whenever safe — no gain requirement,
+    // and never a discretionary move away from its exit
+    let tgt_down = (lane - 1.0).max(1.0);
+    if t.param(i, P_EXIT_FLAG) > 0.5 {
+        if tgt_down < lane - 0.5 && incentive_from_gaps(t, i, gaps(t, i, tgt_down), m).safe {
+            return Some(tgt_down);
+        }
+        return None;
+    }
+
     // discretionary: up first, then down (model's priority)
     let tgt_up = (lane + 1.0).min(max_lane);
-    let tgt_down = (lane - 1.0).max(1.0);
     if tgt_up > lane + 0.5 {
         let inc = incentive_from_gaps(t, i, gaps(t, i, tgt_up), m);
         let gain = inc.a_self_new - accel_i - m.politeness * (-inc.a_lag_new).max(0.0);
@@ -266,6 +272,36 @@ mod tests {
     fn no_change_without_incentive() {
         // free road: staying put is fine
         let t = traffic(&[(100.0, 25.0, 1.0)]);
+        assert_eq!(decide(&t)[0], None);
+    }
+
+    #[test]
+    fn exit_intent_biases_down_without_gain() {
+        // empty road: no discretionary gain anywhere, yet the flagged
+        // vehicle on lane 2 must still work toward lane 1
+        let mut t = Traffic::new(1);
+        t.spawn(100.0, 25.0, 2.0, DriverParams::default().with_exit(900.0));
+        assert_eq!(decide(&t)[0], Some(1.0));
+    }
+
+    #[test]
+    fn exit_intent_never_changes_up() {
+        // stuck behind a crawler: an unflagged vehicle overtakes, the
+        // flagged one stays in the gore-adjacent lane
+        let mut t = Traffic::new(2);
+        t.spawn(100.0, 25.0, 1.0, DriverParams::default().with_exit(900.0));
+        t.spawn(112.0, 2.0, 1.0, DriverParams::default());
+        assert_eq!(decide(&t)[0], None);
+        let plain = traffic(&[(100.0, 25.0, 1.0), (112.0, 2.0, 1.0)]);
+        assert_eq!(decide(&plain)[0], Some(2.0));
+    }
+
+    #[test]
+    fn exit_bias_respects_safety() {
+        // a blocker alongside on lane 1 makes the down-change unsafe
+        let mut t = Traffic::new(2);
+        t.spawn(100.0, 25.0, 2.0, DriverParams::default().with_exit(900.0));
+        t.spawn(100.4, 25.0, 1.0, DriverParams::default());
         assert_eq!(decide(&t)[0], None);
     }
 

@@ -8,13 +8,17 @@ use super::network::MergeScenario;
 use super::state::{DriverParams, Traffic};
 
 /// Per-step observables — mirrors the `obs` output of the AOT step
-/// (`[n_active, mean_speed, flow, n_merged]`).
+/// (`[n_active, mean_speed, flow, n_merged, n_exited]`).  `flow` counts
+/// road-end completions only; `n_exited` counts off-ramp completions
+/// (vehicles crossing their own `exit_pos`), so ramp-weave throughput
+/// is not under-reported in aggregates.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct StepObs {
     pub n_active: f32,
     pub mean_speed: f32,
     pub flow: f32,
     pub n_merged: f32,
+    pub n_exited: f32,
 }
 
 /// A physics engine advancing the traffic state by one DT.
@@ -44,6 +48,9 @@ pub struct SumoSim {
     /// Totals since start.
     pub total_flow: f32,
     pub total_merged: f32,
+    /// Off-ramp completions (exit-flagged vehicles that crossed their
+    /// own `exit_pos`) — throughput invisible to `total_flow`.
+    pub total_exited: f32,
     pub total_spawned: u64,
 }
 
@@ -65,6 +72,7 @@ impl SumoSim {
             step_count: 0,
             total_flow: 0.0,
             total_merged: 0.0,
+            total_exited: 0.0,
             total_spawned: 0,
         }
     }
@@ -128,6 +136,7 @@ impl SumoSim {
         let obs = self.stepper.step(&mut self.traffic);
         self.total_flow += obs.flow;
         self.total_merged += obs.n_merged;
+        self.total_exited += obs.n_exited;
         self.time_s += self.scenario.dt_s;
         self.step_count += 1;
         obs

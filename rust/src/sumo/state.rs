@@ -5,18 +5,26 @@
 //!
 //! ```text
 //! state  f32[N, 4]: [x, v, lane, active]
-//! params f32[N, 6]: [v0, T, a_max, b, s0, length]
+//! params f32[N, 8]: [v0, T, a_max, b, s0, length, exit_pos, exit_flag]
 //! geom   f32[5]   : [road_end, merge_start, merge_end, num_main_lanes, dt]
+//! obs    f32[5]   : [n_active, mean_speed, flow, n_merged, n_exited]
 //! ```
 //!
 //! `N` is a *bucket capacity*, not the live vehicle count: inactive rows
 //! (active == 0) are spawn slots the coordinator writes into.  The
 //! geometry row is the schema-2 runtime operand that makes the AOT
-//! artifacts scenario-generic (`python/compile/model.py GEOM_COLUMNS`).
+//! artifacts scenario-generic (`python/compile/model.py GEOM_COLUMNS`);
+//! the `[exit_pos, exit_flag]` params columns are the schema-3
+//! destination intent (`model.py PARAM_COLUMNS`) that makes them
+//! route-aware: a flagged vehicle retires when it crosses its own
+//! `exit_pos` on lane <= 1 (the off-ramp gore) instead of riding to
+//! `road_end`, and `obs[4]` counts those exits separately from the
+//! road-end `flow`.
 
 pub const STATE_COLS: usize = 4;
-pub const PARAM_COLS: usize = 6;
+pub const PARAM_COLS: usize = 8;
 pub const GEOM_COLS: usize = 5;
+pub const OBS_COLS: usize = 5;
 
 // state columns
 pub const X: usize = 0;
@@ -31,6 +39,8 @@ pub const P_AMAX: usize = 2;
 pub const P_B: usize = 3;
 pub const P_S0: usize = 4;
 pub const P_LEN: usize = 5;
+pub const P_EXIT_POS: usize = 6;
+pub const P_EXIT_FLAG: usize = 7;
 
 // geometry columns (manifest `geometry_columns`)
 pub const G_ROAD_END: usize = 0;
@@ -63,7 +73,11 @@ impl Default for GeometryVec {
     }
 }
 
-/// Per-vehicle driver/vehicle parameters (one `params` row).
+/// Per-vehicle driver/vehicle parameters plus destination intent (one
+/// `params` row).  `exit_pos`/`exit_flag` are the schema-3 route
+/// columns: a vehicle with `exit_flag > 0.5` retires when it crosses
+/// `exit_pos` on lane <= 1 (the off-ramp gore) — both steppers and the
+/// AOT kernel read them straight off this row.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DriverParams {
     pub v0: f32,
@@ -72,11 +86,15 @@ pub struct DriverParams {
     pub b_comf: f32,
     pub s0: f32,
     pub length: f32,
+    /// Off-ramp gore position [m]; meaningful only when `exit_flag` set.
+    pub exit_pos: f32,
+    /// 1.0 = this vehicle leaves at `exit_pos`, 0.0 = rides to road end.
+    pub exit_flag: f32,
 }
 
 impl Default for DriverParams {
     fn default() -> Self {
-        // standard IDM passenger-car calibration
+        // standard IDM passenger-car calibration; no exit intent
         DriverParams {
             v0: 30.0,
             t_headway: 1.5,
@@ -84,6 +102,8 @@ impl Default for DriverParams {
             b_comf: 2.0,
             s0: 2.0,
             length: 4.5,
+            exit_pos: 0.0,
+            exit_flag: 0.0,
         }
     }
 }
@@ -99,7 +119,22 @@ impl DriverParams {
             b_comf: 2.5,
             s0: 1.5,
             length: 4.5,
+            ..DriverParams::default()
         }
+    }
+
+    /// This profile, destined for the off-ramp gore at `exit_pos`.
+    pub fn with_exit(self, exit_pos: f32) -> Self {
+        DriverParams {
+            exit_pos,
+            exit_flag: 1.0,
+            ..self
+        }
+    }
+
+    /// Does this row carry exit intent?
+    pub fn exits(&self) -> bool {
+        self.exit_flag > 0.5
     }
 }
 
@@ -166,6 +201,8 @@ impl Traffic {
         self.params[o + P_B] = p.b_comf;
         self.params[o + P_S0] = p.s0;
         self.params[o + P_LEN] = p.length;
+        self.params[o + P_EXIT_POS] = p.exit_pos;
+        self.params[o + P_EXIT_FLAG] = p.exit_flag;
     }
 
     /// First inactive slot, if any — where the next departure spawns.
@@ -244,7 +281,22 @@ mod tests {
         t.set_state_row(1, 7.0, 8.0, 2.0, true);
         assert_eq!(&t.state[4..8], &[7.0, 8.0, 2.0, 1.0]);
         assert_eq!(t.state.len(), 8);
-        assert_eq!(t.params.len(), 12);
+        assert_eq!(t.params.len(), 2 * PARAM_COLS);
+    }
+
+    #[test]
+    fn exit_columns_round_trip_through_the_row() {
+        let mut t = Traffic::new(2);
+        t.spawn(0.0, 10.0, 1.0, DriverParams::default().with_exit(450.0));
+        assert_eq!(t.param(0, P_EXIT_POS), 450.0);
+        assert_eq!(t.param(0, P_EXIT_FLAG), 1.0);
+        // a through vehicle reusing the slot clears the stale intent
+        t.deactivate(0);
+        t.spawn(5.0, 10.0, 1.0, DriverParams::default());
+        assert_eq!(t.param(0, P_EXIT_POS), 0.0);
+        assert_eq!(t.param(0, P_EXIT_FLAG), 0.0);
+        assert!(!DriverParams::default().exits());
+        assert!(DriverParams::cav().with_exit(1.0).exits());
     }
 
     #[test]

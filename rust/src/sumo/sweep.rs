@@ -19,6 +19,13 @@
 //! The index buffers are owned scratch, reused across steps with no
 //! steady-state allocation (`rebuild` only clears and refills).
 //!
+//! The schema-3 destination columns (`exit_pos`/`exit_flag`) ride the
+//! params row and never influence neighbor *queries* — only the MOBIL
+//! decision and retirement layers read them — so the index needs no
+//! route awareness and stays bit-exact with the reference scans for
+//! flagged and unflagged traffic alike (`tests/sweep_props.rs` mixes
+//! both).
+//!
 //! Invariant: lane values must be integral (they are everywhere in the
 //! simulation — spawns use `lane as f32`, MOBIL emits `lane ± 1.0`);
 //! `rebuild` debug-asserts it.  Under that invariant, grouping by

@@ -53,8 +53,14 @@ pub fn read_net_xml(text: &str) -> Result<Network> {
 pub fn write_flow_xml(flows: &FlowFile) -> String {
     let mut s = String::from("<routes>\n");
     for f in &flows.flows {
+        // destination intent rides the flow element only when present,
+        // so pre-schema-3 consumers keep parsing unrouted files
+        let exit = match f.exit_pos_m {
+            Some(gore) => format!(" exitPos=\"{gore}\""),
+            None => String::new(),
+        };
         s.push_str(&format!(
-            "  <flow id=\"{}\" route=\"{}\" vehsPerHour=\"{}\" departSpeed=\"{}\" departLane=\"{}\" departPos=\"{}\" type=\"{}\" begin=\"{}\" end=\"{}\" v0Scale=\"{}\" tScale=\"{}\"/>\n",
+            "  <flow id=\"{}\" route=\"{}\" vehsPerHour=\"{}\" departSpeed=\"{}\" departLane=\"{}\" departPos=\"{}\" type=\"{}\" begin=\"{}\" end=\"{}\" v0Scale=\"{}\" tScale=\"{}\"{exit}/>\n",
             f.id,
             f.route.join(" "),
             f.vehs_per_hour,
@@ -99,6 +105,11 @@ pub fn read_flow_xml(text: &str) -> Result<FlowFile> {
             // scenario driver scales; absent in pre-scenario files → 1.0
             v0_scale: attr_or(line, "v0Scale", "1").parse().map_err(bad("v0Scale"))?,
             t_scale: attr_or(line, "tScale", "1").parse().map_err(bad("tScale"))?,
+            // destination intent; absent (pre-schema-3 files) → through
+            exit_pos_m: match attr(line, "exitPos") {
+                Ok(v) => Some(v.parse().map_err(bad("exitPos"))?),
+                Err(_) => None,
+            },
         });
     }
     Ok(FlowFile { flows })
@@ -159,13 +170,16 @@ mod tests {
         let mut flows = FlowFile::merge_sample(1200.0, 300.0, 600.0);
         flows.flows[0].v0_scale = 0.9;
         flows.flows[0].t_scale = 1.15;
+        flows.flows[1].exit_pos_m = Some(612.5);
         let back = read_flow_xml(&write_flow_xml(&flows)).unwrap();
         assert_eq!(flows, back);
-        // pre-scenario flow files without the scale attrs parse as 1.0
+        // pre-scenario flow files without the scale attrs parse as 1.0,
+        // and pre-schema-3 files without exitPos parse as through
         let legacy = "<routes>\n<flow id=\"a\" route=\"ramp\" vehsPerHour=\"100\" departSpeed=\"10\" departLane=\"0\" departPos=\"0\" type=\"human\" begin=\"0\" end=\"60\"/>\n</routes>\n";
         let f = read_flow_xml(legacy).unwrap();
         assert_eq!(f.flows[0].v0_scale, 1.0);
         assert_eq!(f.flows[0].t_scale, 1.0);
+        assert_eq!(f.flows[0].exit_pos_m, None);
     }
 
     #[test]

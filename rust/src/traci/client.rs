@@ -14,10 +14,15 @@ pub struct TraciClient {
 }
 
 impl TraciClient {
+    /// Connect and handshake: a version-skewed peer is refused here, at
+    /// every consumer, because it would silently *misparse* the wire
+    /// frames rather than error (see [`Self::check_version`]).
     pub fn connect(port: u16) -> Result<TraciClient> {
         let stream = TcpStream::connect(("127.0.0.1", port))?;
         stream.set_nodelay(true)?;
-        Ok(TraciClient { stream })
+        let mut client = TraciClient { stream };
+        client.check_version()?;
+        Ok(client)
     }
 
     fn call(&mut self, cmd: Command) -> Result<Response> {
@@ -37,26 +42,43 @@ impl TraciClient {
         }
     }
 
+    /// Handshake: refuse a version-skewed peer.  The schema-3 wire
+    /// widening (protocol 1.1: 5-f32 obs stride, `exited` totals) would
+    /// be silently *misparsed* by an older/newer peer, so skew must
+    /// fail loudly here instead of scrambling every observable.
+    pub fn check_version(&mut self) -> Result<()> {
+        use super::protocol::{PROTOCOL_MAJOR, PROTOCOL_MINOR};
+        let (major, minor) = self.get_version()?;
+        if (major, minor) != (PROTOCOL_MAJOR, PROTOCOL_MINOR) {
+            return Err(Error::Protocol(format!(
+                "TraCI version skew: server speaks {major}.{minor}, client \
+                 speaks {PROTOCOL_MAJOR}.{PROTOCOL_MINOR} (schema-3 obs stride)"
+            )));
+        }
+        Ok(())
+    }
+
     /// Advance the back-end one DT; returns the per-step observables
-    /// `(n_active, mean_speed, flow, n_merged)`.
-    pub fn sim_step(&mut self) -> Result<(f32, f32, f32, f32)> {
+    /// `(n_active, mean_speed, flow, n_merged, n_exited)`.
+    pub fn sim_step(&mut self) -> Result<(f32, f32, f32, f32, f32)> {
         match self.call(Command::SimStep)? {
             Response::Stepped {
                 n_active,
                 mean_speed,
                 flow,
                 n_merged,
-            } => Ok((n_active, mean_speed, flow, n_merged)),
+                n_exited,
+            } => Ok((n_active, mean_speed, flow, n_merged, n_exited)),
             other => Err(unexpected("Stepped", &other)),
         }
     }
 
     /// Advance `n` DTs in one round trip; returns per-step observables.
-    pub fn sim_step_n(&mut self, n: u32) -> Result<Vec<(f32, f32, f32, f32)>> {
+    pub fn sim_step_n(&mut self, n: u32) -> Result<Vec<(f32, f32, f32, f32, f32)>> {
         match self.call(Command::SimStepN { n })? {
             Response::SteppedN(flat) => Ok(flat
-                .chunks_exact(4)
-                .map(|c| (c[0], c[1], c[2], c[3]))
+                .chunks_exact(super::protocol::OBS_STRIDE)
+                .map(|c| (c[0], c[1], c[2], c[3], c[4]))
                 .collect()),
             other => Err(unexpected("SteppedN", &other)),
         }
@@ -84,14 +106,15 @@ impl TraciClient {
         }
     }
 
-    /// `(total_flow, total_merged, total_spawned)`.
-    pub fn get_totals(&mut self) -> Result<(f32, f32, u64)> {
+    /// `(total_flow, total_merged, total_exited, total_spawned)`.
+    pub fn get_totals(&mut self) -> Result<(f32, f32, f32, u64)> {
         match self.call(Command::GetTotals)? {
             Response::Totals {
                 flow,
                 merged,
+                exited,
                 spawned,
-            } => Ok((flow, merged, spawned)),
+            } => Ok((flow, merged, exited, spawned)),
             other => Err(unexpected("Totals", &other)),
         }
     }

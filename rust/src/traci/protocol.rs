@@ -13,6 +13,18 @@ pub const DEFAULT_PORT: u16 = 8873;
 /// The paper's increment between parallel copies.
 pub const PORT_STEP: u16 = 7;
 
+/// f32s per step in `Stepped`/`SteppedN` frames — the [`crate::sumo::StepObs`]
+/// field count ([n_active, mean_speed, flow, n_merged, n_exited]).
+pub const OBS_STRIDE: usize = 5;
+
+/// Protocol version, negotiated via `GetVersion`.  Minor 1 = the
+/// schema-3 wire widening (5-f32 obs stride in `Stepped`/`SteppedN`,
+/// `exited` in `Totals`): a version-skewed peer would *misparse* those
+/// payloads rather than error, so [`super::TraciClient::check_version`]
+/// fails the handshake loudly instead.
+pub const PROTOCOL_MAJOR: u32 = 1;
+pub const PROTOCOL_MINOR: u32 = 1;
+
 /// Client → server commands.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Command {
@@ -106,15 +118,26 @@ impl Command {
 pub enum Response {
     Version { major: u32, minor: u32 },
     /// Step acknowledged; per-step observables.
-    Stepped { n_active: f32, mean_speed: f32, flow: f32, n_merged: f32 },
+    Stepped {
+        n_active: f32,
+        mean_speed: f32,
+        flow: f32,
+        n_merged: f32,
+        n_exited: f32,
+    },
     /// N steps acknowledged; per-step observables, flat
-    /// [n_active, mean_speed, flow, n_merged] × n.
+    /// [n_active, mean_speed, flow, n_merged, n_exited] × n.
     SteppedN(Vec<f32>),
     VehicleCount(u32),
     /// Flat state rows (len = slots * 4).
     State(Vec<f32>),
     Ok,
-    Totals { flow: f32, merged: f32, spawned: u64 },
+    Totals {
+        flow: f32,
+        merged: f32,
+        exited: f32,
+        spawned: u64,
+    },
     Closing,
     Err(String),
 }
@@ -146,13 +169,14 @@ impl Response {
                 mean_speed,
                 flow,
                 n_merged,
+                n_exited,
             } => {
-                for v in [n_active, mean_speed, flow, n_merged] {
+                for v in [n_active, mean_speed, flow, n_merged, n_exited] {
                     p.extend_from_slice(&v.to_le_bytes());
                 }
             }
             Response::SteppedN(obs) => {
-                p.extend_from_slice(&((obs.len() / 4) as u32).to_le_bytes());
+                p.extend_from_slice(&((obs.len() / OBS_STRIDE) as u32).to_le_bytes());
                 for v in obs {
                     p.extend_from_slice(&v.to_le_bytes());
                 }
@@ -168,10 +192,12 @@ impl Response {
             Response::Totals {
                 flow,
                 merged,
+                exited,
                 spawned,
             } => {
                 p.extend_from_slice(&flow.to_le_bytes());
                 p.extend_from_slice(&merged.to_le_bytes());
+                p.extend_from_slice(&exited.to_le_bytes());
                 p.extend_from_slice(&spawned.to_le_bytes());
             }
             Response::Err(msg) => {
@@ -206,20 +232,21 @@ impl Response {
                 }
             }
             0x82 => {
-                need(16)?;
+                need(OBS_STRIDE * 4)?;
                 let f = |o: usize| f32::from_le_bytes(r[o..o + 4].try_into().expect("len checked"));
                 Response::Stepped {
                     n_active: f(0),
                     mean_speed: f(4),
                     flow: f(8),
                     n_merged: f(12),
+                    n_exited: f(16),
                 }
             }
             0x83 => {
                 need(4)?;
                 let n = u32::from_le_bytes(r[0..4].try_into().expect("len checked")) as usize;
-                need(4 + n * 16)?;
-                let obs = (0..n * 4)
+                need(4 + n * OBS_STRIDE * 4)?;
+                let obs = (0..n * OBS_STRIDE)
                     .map(|i| {
                         f32::from_le_bytes(
                             r[4 + i * 4..8 + i * 4].try_into().expect("len checked"),
@@ -247,11 +274,12 @@ impl Response {
             }
             0xa0 => Response::Ok,
             0x92 => {
-                need(16)?;
+                need(20)?;
                 Response::Totals {
                     flow: f32::from_le_bytes(r[0..4].try_into().expect("len checked")),
                     merged: f32::from_le_bytes(r[4..8].try_into().expect("len checked")),
-                    spawned: u64::from_le_bytes(r[8..16].try_into().expect("len checked")),
+                    exited: f32::from_le_bytes(r[8..12].try_into().expect("len checked")),
+                    spawned: u64::from_le_bytes(r[12..20].try_into().expect("len checked")),
                 }
             }
             0xff => Response::Closing,
@@ -324,14 +352,16 @@ mod tests {
             mean_speed: 21.5,
             flow: 1.0,
             n_merged: 0.0,
+            n_exited: 2.0,
         });
-        roundtrip_resp(Response::SteppedN(vec![1.0; 8]));
+        roundtrip_resp(Response::SteppedN(vec![1.0; 2 * OBS_STRIDE]));
         roundtrip_resp(Response::VehicleCount(48));
         roundtrip_resp(Response::State(vec![1.0, 2.0, 3.0, 1.0]));
         roundtrip_resp(Response::Ok);
         roundtrip_resp(Response::Totals {
             flow: 40.0,
             merged: 8.0,
+            exited: 5.0,
             spawned: 52,
         });
         roundtrip_resp(Response::Closing);

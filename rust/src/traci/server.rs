@@ -71,7 +71,10 @@ fn handle_client(mut stream: TcpStream, sim: &mut SumoSim) -> Result<()> {
             }
         };
         let resp = match cmd {
-            Command::GetVersion => Response::Version { major: 1, minor: 0 },
+            Command::GetVersion => Response::Version {
+                major: super::protocol::PROTOCOL_MAJOR,
+                minor: super::protocol::PROTOCOL_MINOR,
+            },
             Command::SimStep => {
                 let o = sim.step();
                 Response::Stepped {
@@ -79,14 +82,21 @@ fn handle_client(mut stream: TcpStream, sim: &mut SumoSim) -> Result<()> {
                     mean_speed: o.mean_speed,
                     flow: o.flow,
                     n_merged: o.n_merged,
+                    n_exited: o.n_exited,
                 }
             }
             Command::SimStepN { n } => {
                 let n = n.min(10_000); // sanity cap
-                let mut obs = Vec::with_capacity(n as usize * 4);
+                let mut obs = Vec::with_capacity(n as usize * super::protocol::OBS_STRIDE);
                 for _ in 0..n {
                     let o = sim.step();
-                    obs.extend_from_slice(&[o.n_active, o.mean_speed, o.flow, o.n_merged]);
+                    obs.extend_from_slice(&[
+                        o.n_active,
+                        o.mean_speed,
+                        o.flow,
+                        o.n_merged,
+                        o.n_exited,
+                    ]);
                 }
                 Response::SteppedN(obs)
             }
@@ -107,6 +117,7 @@ fn handle_client(mut stream: TcpStream, sim: &mut SumoSim) -> Result<()> {
             Command::GetTotals => Response::Totals {
                 flow: sim.total_flow,
                 merged: sim.total_merged,
+                exited: sim.total_exited,
                 spawned: sim.total_spawned,
             },
             Command::Close => {
@@ -161,8 +172,15 @@ mod tests {
         let server = TraciServer::spawn(port, test_sim()).unwrap();
         let mut c = TraciClient::connect(port).unwrap();
 
-        let (maj, _min) = c.get_version().unwrap();
-        assert_eq!(maj, 1);
+        let (maj, min) = c.get_version().unwrap();
+        assert_eq!(
+            (maj, min),
+            (
+                super::super::protocol::PROTOCOL_MAJOR,
+                super::super::protocol::PROTOCOL_MINOR
+            )
+        );
+        c.check_version().unwrap();
 
         // drive 100 steps; traffic must appear
         for _ in 0..100 {
@@ -174,7 +192,7 @@ mod tests {
         assert_eq!(state.len(), 64 * 4);
 
         let totals = c.get_totals().unwrap();
-        assert!(totals.2 > 0, "spawned someone");
+        assert!(totals.3 > 0, "spawned someone");
 
         c.close().unwrap();
         server.join().unwrap();

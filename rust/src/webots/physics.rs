@@ -53,6 +53,8 @@ impl WebotsSim {
             .ok_or_else(|| Error::World("world missing SumoInterface".into()))?;
         let sumo_interface = SumoInterface::from_node(si_node)?;
 
+        // connect() handshakes: a version-skewed back-end is refused
+        // before any observable frame could be misparsed
         let traci = TraciClient::connect(sumo_interface.port)?;
 
         let mut controllers: Vec<Box<dyn Controller>> = Vec::new();
@@ -94,12 +96,13 @@ impl WebotsSim {
     /// One basicTimeStep: advance SUMO, then (at the sampling period)
     /// run controllers and actuate.
     pub fn step(&mut self) -> Result<StepObs> {
-        let (n_active, mean_speed, flow, n_merged) = self.traci.sim_step()?;
+        let (n_active, mean_speed, flow, n_merged, n_exited) = self.traci.sim_step()?;
         let obs = StepObs {
             n_active,
             mean_speed,
             flow,
             n_merged,
+            n_exited,
         };
         self.history.push(obs);
         self.time_s += self.world_info.basic_time_step_ms as f32 / 1000.0;
@@ -141,12 +144,13 @@ impl WebotsSim {
     pub fn step_n(&mut self, k: u64) -> Result<Vec<StepObs>> {
         let obs = self.traci.sim_step_n(k as u32)?;
         let mut out = Vec::with_capacity(obs.len());
-        for (n_active, mean_speed, flow, n_merged) in obs {
+        for (n_active, mean_speed, flow, n_merged, n_exited) in obs {
             let o = StepObs {
                 n_active,
                 mean_speed,
                 flow,
                 n_merged,
+                n_exited,
             };
             self.history.push(o);
             out.push(o);
@@ -216,8 +220,9 @@ impl WebotsSim {
         Ok(RunEnd::BudgetExhausted)
     }
 
-    /// Back-end totals `(flow, merged, spawned)` over this run so far.
-    pub fn totals(&mut self) -> Result<(f32, f32, u64)> {
+    /// Back-end totals `(flow, merged, exited, spawned)` over this run
+    /// so far.
+    pub fn totals(&mut self) -> Result<(f32, f32, f32, u64)> {
         self.traci.get_totals()
     }
 

@@ -43,6 +43,10 @@ fn random_traffic(rng: &mut Rng64, cap: usize, fill: f64) -> Traffic {
             b_comf: rng.gen_range_f32(1.5, 3.5),
             s0: rng.gen_range_f32(1.5, 3.0),
             length: rng.gen_range_f32(4.0, 9.0),
+            // no exit intent: these rollouts exercise the geometry
+            // operand; the destination columns get their own coverage in
+            // scenario_families.rs and the engine exit-column test
+            ..DriverParams::default()
         };
         let _ = i;
         t.spawn(x, v, lane, params);

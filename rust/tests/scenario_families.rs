@@ -221,6 +221,16 @@ fn all_families_native_vs_hlo_track_at_extremes() {
                 "{id} extreme #{}: warmup produced traffic",
                 point.index
             );
+            // the ramp-weave hi extreme (off_share = 0.3) must carry live
+            // exit intent into the agreement rollout, so the schema-3
+            // columns are exercised on the HLO path too
+            if id == "ramp-weave" && point.index == 1 {
+                use webots_hpc::sumo::state::P_EXIT_FLAG;
+                let flagged = (0..cfg.capacity)
+                    .filter(|&i| t0.is_active(i) && t0.param(i, P_EXIT_FLAG) > 0.5)
+                    .count();
+                assert!(flagged > 0, "warmup spawned exit-flagged traffic");
+            }
 
             let mut t_nat = t0.clone();
             let mut t_hlo = t0.clone();
@@ -328,6 +338,172 @@ fn mixed_family_sessions_coalesce_without_geometry_contamination() {
         });
     }
     s.shutdown();
+}
+
+/// A ramp-weave point with pinned axis values (everything else a
+/// mid-range default) — the fixed-seed ISSUE 4 acceptance scenario.
+fn ramp_weave_point(registry: &FamilyRegistry, off_share: f64) -> ScenarioPoint {
+    let space = registry.get("ramp-weave").unwrap().space();
+    let values = space
+        .axes
+        .iter()
+        .map(|a| match a.name.as_str() {
+            "main_vph" => AxisValue::Num(1600.0),
+            "on_vph" => AxisValue::Num(300.0),
+            "off_share" => AxisValue::Num(off_share),
+            "main_lanes" => AxisValue::Int(2),
+            "weave_len_m" => AxisValue::Num(250.0),
+            "cav_penetration" => AxisValue::Num(0.0),
+            "speed_limit" => AxisValue::Num(30.0),
+            "t_scale" => AxisValue::Num(1.0),
+            other => panic!("unexpected ramp-weave axis '{other}'"),
+        })
+        .collect();
+    ScenarioPoint {
+        family: space.family.clone(),
+        index: 0,
+        seed: 0,
+        values,
+    }
+}
+
+/// ISSUE 4 acceptance: at `off_share = 0.25`, >= 80% of the off-flow
+/// demand retires via the off-ramp gore (exits *before* the road end),
+/// and at `off_share = 0` nothing exits.  Fixed seed; native sweep
+/// stepper; run long enough past the demand window to drain.
+#[test]
+fn ramp_weave_off_traffic_actually_exits() {
+    let registry = FamilyRegistry::builtin();
+    let family = registry.get("ramp-weave").unwrap();
+
+    let cfg = family.compile(&ramp_weave_point(&registry, 0.25)).unwrap();
+    let routes = duarouter(&cfg.network, &cfg.flows, 17).unwrap();
+    let n_off = routes
+        .departures
+        .iter()
+        .filter(|d| d.id.starts_with("off"))
+        .count();
+    assert!(n_off > 10, "off demand scheduled: {n_off}");
+    // every off departure carries the compiled destination
+    assert!(routes
+        .departures
+        .iter()
+        .filter(|d| d.id.starts_with("off"))
+        .all(|d| d.params.exits() && d.params.exit_pos == cfg.geometry.merge_end_m));
+
+    let mut sim = SumoSim::new(
+        cfg.geometry,
+        cfg.capacity,
+        routes,
+        Box::new(NativeIdmStepper::new(cfg.geometry, MobilParams::default())),
+    );
+    // demand window is 120 s; give stragglers time to clear the road
+    sim.run(cfg.horizon_s + 120.0).unwrap();
+    assert!(sim.total_spawned > 0);
+    let exited = sim.total_exited as usize;
+    assert!(
+        exited as f32 >= 0.8 * n_off as f32,
+        "only {exited} of {n_off} off-flow vehicles exited via the off-ramp"
+    );
+    assert!(
+        exited <= n_off,
+        "{exited} exits but only {n_off} off-flow vehicles"
+    );
+    assert!(sim.total_flow > 0.0, "through traffic still flows");
+
+    // off_share = 0: the exit machinery stays perfectly silent
+    let cfg0 = family.compile(&ramp_weave_point(&registry, 0.0)).unwrap();
+    let routes0 = duarouter(&cfg0.network, &cfg0.flows, 17).unwrap();
+    assert!(routes0.departures.iter().all(|d| !d.params.exits()));
+    let mut sim0 = SumoSim::new(
+        cfg0.geometry,
+        cfg0.capacity,
+        routes0,
+        Box::new(NativeIdmStepper::new(cfg0.geometry, MobilParams::default())),
+    );
+    sim0.run(cfg0.horizon_s + 120.0).unwrap();
+    assert_eq!(sim0.total_exited, 0.0);
+    assert!(sim0.total_flow > 0.0);
+}
+
+/// Exit dynamics are part of the bit-exactness contract: the sweep
+/// stepper and the O(N²) reference agree *exactly* on a ramp-weave
+/// rollout with live exit traffic (observables incl. n_exited, state).
+#[test]
+fn ramp_weave_reference_and_native_steppers_agree_exactly_with_exits() {
+    let registry = FamilyRegistry::builtin();
+    let cfg = registry
+        .get("ramp-weave")
+        .unwrap()
+        .compile(&ramp_weave_point(&registry, 0.25))
+        .unwrap();
+    let routes = duarouter(&cfg.network, &cfg.flows, 29).unwrap();
+
+    let mut native = SumoSim::new(
+        cfg.geometry,
+        cfg.capacity,
+        routes.clone(),
+        Box::new(NativeIdmStepper::new(cfg.geometry, MobilParams::default())),
+    );
+    let mut reference = SumoSim::new(
+        cfg.geometry,
+        cfg.capacity,
+        routes,
+        Box::new(ReferenceIdmStepper {
+            scenario: cfg.geometry,
+            mobil: MobilParams::default(),
+        }),
+    );
+    for step in 0..600 {
+        let a = native.step();
+        let b = reference.step();
+        assert_eq!(a, b, "observables diverged at step {step}");
+        assert_eq!(native.traffic, reference.traffic, "state diverged at step {step}");
+    }
+    assert!(native.total_exited > 0.0, "exits occurred inside the window");
+}
+
+/// ISSUE 4 satellite: ring-shockwave conserves density — the unrolled
+/// road now outruns the horizon, so the platoon packed by the burst is
+/// still fully on the road at the end of the run (nobody retires at
+/// road_end mid-horizon and kills the shockwave).
+#[test]
+fn ring_shockwave_conserves_density_after_burst() {
+    use webots_hpc::scenario::RingShockwaveFamily;
+    let registry = FamilyRegistry::builtin();
+    let (_, cfg) = registry
+        .materialize("ring-shockwave", &UniformSampler, 5, 2)
+        .unwrap();
+    let routes = duarouter(&cfg.network, &cfg.flows, 2).unwrap();
+    let mut sim = SumoSim::new(
+        cfg.geometry,
+        cfg.capacity,
+        routes,
+        Box::new(NativeIdmStepper::new(cfg.geometry, MobilParams::default())),
+    );
+    let obs = sim.run(cfg.horizon_s).unwrap();
+    assert!(sim.total_spawned > 5, "burst packs the ring");
+    // nothing ever retires inside the horizon...
+    assert_eq!(sim.total_flow, 0.0, "a vehicle drained at road_end");
+    assert_eq!(sim.total_exited, 0.0);
+    // ...so once the burst window (+ insertion-queue slack) has passed,
+    // the active count never decreases again
+    let burst_steps =
+        ((RingShockwaveFamily::BURST_S * 2.0) / cfg.geometry.dt_s.max(1e-6)) as usize;
+    let after_burst = &obs[burst_steps.min(obs.len() - 1)..];
+    let mut prev = 0.0f32;
+    for (k, o) in after_burst.iter().enumerate() {
+        assert!(
+            o.n_active >= prev,
+            "active count dropped after the burst (step {k}: {} < {prev})",
+            o.n_active
+        );
+        prev = o.n_active;
+    }
+    assert!(
+        obs.last().unwrap().n_active as u64 == sim.total_spawned,
+        "everyone spawned is still circulating at the horizon"
+    );
 }
 
 #[test]

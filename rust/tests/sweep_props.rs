@@ -27,6 +27,9 @@ fn random_traffic(rng: &mut Rng64, cap: usize, fill: f64) -> Traffic {
         x += 0.5 + rng.gen_range_f32(0.0, 40.0);
         let lane = rng.gen_below(3) as f32;
         let v = rng.gen_range_f32(0.0, 32.0);
+        // ~20% of vehicles carry schema-3 exit intent so the exit-bias
+        // branch and exit retirement ride every property sweep
+        let exits = rng.gen_f64() < 0.2;
         let params = DriverParams {
             v0: rng.gen_range_f32(20.0, 38.0),
             t_headway: rng.gen_range_f32(0.9, 2.2),
@@ -34,6 +37,12 @@ fn random_traffic(rng: &mut Rng64, cap: usize, fill: f64) -> Traffic {
             b_comf: rng.gen_range_f32(1.5, 3.5),
             s0: rng.gen_range_f32(1.5, 3.0),
             length: rng.gen_range_f32(4.0, 9.0),
+            exit_pos: if exits {
+                rng.gen_range_f32(100.0, 900.0)
+            } else {
+                0.0
+            },
+            exit_flag: if exits { 1.0 } else { 0.0 },
         };
         t.spawn(x, v, lane, params);
     }

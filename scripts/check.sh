@@ -17,7 +17,7 @@ echo "== cargo bench --bench runtime_hotpath --no-run =="
 # bench code must keep compiling even on machines that never run it
 cargo bench --bench runtime_hotpath --no-run
 
-echo "== manifest schema (geometry operand layout) =="
+echo "== manifest schema (schema-3 geometry + param-column layout) =="
 if command -v python3 >/dev/null 2>&1; then
   python3 scripts/check_manifest.py
 else

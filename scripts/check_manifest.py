@@ -1,21 +1,25 @@
 #!/usr/bin/env python3
-"""Manifest-schema gate: geometry-generic artifacts must carry the
-operand layout the rust runtime expects.
+"""Manifest-schema gate: geometry-generic, destination-aware artifacts
+must carry the operand AND column layouts the rust runtime expects.
 
 The contract lives in three places that can silently drift apart:
 
-  * ``python/compile/model.py`` — ``GEOM_COLUMNS`` (what the lowered
-    executables actually consume),
-  * ``artifacts/manifest.json`` — ``geometry_columns`` + per-entry
+  * ``python/compile/model.py`` — ``GEOM_COLUMNS`` / ``PARAM_COLUMNS``
+    / ``OBS_COLUMNS`` (what the lowered executables actually consume),
+  * ``artifacts/manifest.json`` — the recorded layouts + per-entry
     ``operands`` (what the compile path recorded),
-  * ``rust/src/runtime/manifest.rs`` — ``GEOMETRY_COLUMNS`` (what the
-    runtime feeds the executables).
+  * ``rust/src/runtime/manifest.rs`` — ``GEOMETRY_COLUMNS`` /
+    ``PARAM_COLUMNS`` / ``OBS_COLUMNS`` (what the runtime feeds the
+    executables and how it reads them back).
 
-This script pins all three to the layout below and fails loudly on any
-mismatch.  With no ``artifacts/`` directory it still checks the two
-source-side layouts (so the gate is meaningful on build machines that
-haven't lowered artifacts).  Run from anywhere inside the repo; wired
-into ``scripts/check.sh``.
+Schema 3 adds the per-vehicle destination columns (``exit_pos``,
+``exit_flag``) and the ``n_exited`` observable; the gate pins the
+per-column layout on all three sides plus the bucket ladder
+(``aot.py BUCKETS`` vs ``family.rs DEFAULT_BUCKET_LADDER``), and fails
+loudly on any mismatch.  With no ``artifacts/`` directory it still
+checks the source-side layouts (so the gate is meaningful on build
+machines that haven't lowered artifacts).  Run from anywhere inside the
+repo; wired into ``scripts/check.sh``.
 """
 
 from __future__ import annotations
@@ -25,10 +29,15 @@ import pathlib
 import re
 import sys
 
-#: the rust-side ABI (sumo/state.rs G_* order) — the single source of
-#: truth this gate pins everything else to.
+#: the rust-side ABI (sumo/state.rs G_*/P_* order) — the single source
+#: of truth this gate pins everything else to.
 EXPECTED_GEOMETRY_COLUMNS = ["road_end", "merge_start", "merge_end", "num_main_lanes", "dt"]
-EXPECTED_SCHEMA = 2
+EXPECTED_PARAM_COLUMNS = ["v0", "T", "a_max", "b", "s0", "length", "exit_pos", "exit_flag"]
+EXPECTED_OBS_COLUMNS = ["n_active", "mean_speed", "flow", "n_merged", "n_exited"]
+EXPECTED_SCHEMA = 3
+#: the lowered bucket ladder (aot.py BUCKETS) — family.rs suggests
+#: capacities from the same ladder so no point falls back to native.
+EXPECTED_BUCKETS = [16, 64, 256, 1024]
 #: operand counts per artifact kind (step/stepb carry the geometry).
 EXPECTED_OPERANDS = {"step": 3, "stepb": 3, "idm": 2, "radar": 1}
 
@@ -40,26 +49,59 @@ def fail(msg: str) -> None:
     sys.exit(1)
 
 
-def check_model_py() -> None:
-    """model.GEOM_COLUMNS must match, parsed textually so this gate needs
-    no jax import."""
-    text = (REPO / "python" / "compile" / "model.py").read_text()
-    m = re.search(r"GEOM_COLUMNS\s*=\s*\[([^\]]*)\]", text)
+def pinned_list(text: str, name: str, where: str, quote: str = '"') -> list:
+    """Extract `NAME = [ ... ]` string entries, textually (no imports)."""
+    m = re.search(rf"{name}[^=\n]*=\s*\[([^\]]*)\]", text)
     if not m:
-        fail("python/compile/model.py defines no GEOM_COLUMNS")
-    cols = re.findall(r'"([^"]+)"', m.group(1))
-    if cols != EXPECTED_GEOMETRY_COLUMNS:
-        fail(f"model.py GEOM_COLUMNS {cols} != {EXPECTED_GEOMETRY_COLUMNS}")
+        fail(f"{where} defines no {name}")
+    return re.findall(rf'{quote}([^{quote}]+){quote}', m.group(1))
+
+
+def check_model_py() -> None:
+    """model.py column layouts must match, parsed textually so this gate
+    needs no jax import."""
+    text = (REPO / "python" / "compile" / "model.py").read_text()
+    for name, want in (
+        ("GEOM_COLUMNS", EXPECTED_GEOMETRY_COLUMNS),
+        ("PARAM_COLUMNS", EXPECTED_PARAM_COLUMNS),
+        ("OBS_COLUMNS", EXPECTED_OBS_COLUMNS),
+    ):
+        cols = pinned_list(text, name, "python/compile/model.py")
+        if cols != want:
+            fail(f"model.py {name} {cols} != {want}")
+
+
+def check_aot_py() -> None:
+    """aot.py BUCKETS must match the ladder family.rs suggests from."""
+    text = (REPO / "python" / "compile" / "aot.py").read_text()
+    m = re.search(r"^BUCKETS\s*=\s*\(([^)]*)\)", text, re.M)
+    if not m:
+        fail("python/compile/aot.py defines no BUCKETS")
+    buckets = [int(v) for v in re.findall(r"\d+", m.group(1))]
+    if buckets != EXPECTED_BUCKETS:
+        fail(f"aot.py BUCKETS {buckets} != {EXPECTED_BUCKETS}")
+
+
+def check_family_rs() -> None:
+    text = (REPO / "rust" / "src" / "scenario" / "family.rs").read_text()
+    m = re.search(r"DEFAULT_BUCKET_LADDER[^=]*=\s*\[([^\]]*)\]", text)
+    if not m:
+        fail("rust/src/scenario/family.rs defines no DEFAULT_BUCKET_LADDER")
+    ladder = [int(v) for v in re.findall(r"\d+", m.group(1))]
+    if ladder != EXPECTED_BUCKETS:
+        fail(f"family.rs DEFAULT_BUCKET_LADDER {ladder} != {EXPECTED_BUCKETS}")
 
 
 def check_manifest_rs() -> None:
     text = (REPO / "rust" / "src" / "runtime" / "manifest.rs").read_text()
-    m = re.search(r"GEOMETRY_COLUMNS[^=]*=\s*\[([^\]]*)\]", text)
-    if not m:
-        fail("rust/src/runtime/manifest.rs defines no GEOMETRY_COLUMNS")
-    cols = re.findall(r'"([^"]+)"', m.group(1))
-    if cols != EXPECTED_GEOMETRY_COLUMNS:
-        fail(f"manifest.rs GEOMETRY_COLUMNS {cols} != {EXPECTED_GEOMETRY_COLUMNS}")
+    for name, want in (
+        ("GEOMETRY_COLUMNS", EXPECTED_GEOMETRY_COLUMNS),
+        ("PARAM_COLUMNS", EXPECTED_PARAM_COLUMNS),
+        ("OBS_COLUMNS", EXPECTED_OBS_COLUMNS),
+    ):
+        cols = pinned_list(text, name, "rust/src/runtime/manifest.rs")
+        if cols != want:
+            fail(f"manifest.rs {name} {cols} != {want}")
 
 
 def check_artifacts() -> bool:
@@ -80,6 +122,22 @@ def check_artifacts() -> bool:
         fail(
             f"manifest geometry_columns {manifest.get('geometry_columns')} "
             f"!= {EXPECTED_GEOMETRY_COLUMNS}"
+        )
+    if manifest.get("param_columns") != EXPECTED_PARAM_COLUMNS:
+        fail(
+            f"manifest param_columns {manifest.get('param_columns')} "
+            f"!= {EXPECTED_PARAM_COLUMNS} (schema-3 destination columns)"
+        )
+    if manifest.get("obs_columns") != EXPECTED_OBS_COLUMNS:
+        fail(
+            f"manifest obs_columns {manifest.get('obs_columns')} "
+            f"!= {EXPECTED_OBS_COLUMNS}"
+        )
+    if sorted(manifest.get("buckets", [])) != EXPECTED_BUCKETS:
+        fail(
+            f"manifest buckets {manifest.get('buckets')} != {EXPECTED_BUCKETS} "
+            "(stale/partial lowering breaks the zero-native-fallback ladder); "
+            "re-run `make artifacts`"
         )
     buckets = set(manifest.get("buckets", []))
     seen_ns = set()
@@ -104,12 +162,16 @@ def check_artifacts() -> bool:
 
 def main() -> None:
     check_model_py()
+    check_aot_py()
+    check_family_rs()
     check_manifest_rs()
     had_artifacts = check_artifacts()
-    where = "model.py + manifest.rs + artifacts/manifest.json" if had_artifacts else (
-        "model.py + manifest.rs (no artifacts/ lowered here)"
+    where = (
+        "model.py + aot.py + family.rs + manifest.rs + artifacts/manifest.json"
+        if had_artifacts
+        else "model.py + aot.py + family.rs + manifest.rs (no artifacts/ lowered here)"
     )
-    print(f"check_manifest: OK ({where})")
+    print(f"check_manifest: OK (schema {EXPECTED_SCHEMA}; {where})")
 
 
 if __name__ == "__main__":

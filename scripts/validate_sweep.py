@@ -26,11 +26,19 @@ geometries at their axis extremes — the pre-flight for
 It also times the scalar mirror vs the jitted kernel (solo and with a
 mixed-geometry vmapped batch) on a non-default geometry.
 
+PR 4 section — schema-3 destination dynamics.  The mirror (and the
+params rows) carry the ``[exit_pos, exit_flag]`` columns: exit-flagged
+vehicles see no phantom wall, bias mandatorily toward lane 1, and
+retire crossing their own exit_pos on lane <= 1.  Every family geometry
+is re-rolled with ~50% exit-flagged traffic against the jax kernel —
+the pre-flight for
+``rust/tests/scenario_families.rs::ramp_weave_off_traffic_actually_exits``.
+
 Both timing sections estimate the speedups recorded in
 ``BENCH_runtime_hotpath.json`` (clearly labelled as python-mirror
 estimates there; re-measure with ``cargo bench --bench runtime_hotpath``
 on a machine with the rust toolchain).  ``--append-bench`` appends the
-PR 3 measurements to that file.
+PR 4 measurements to that file.
 
 Run: ``python3 scripts/validate_sweep.py [--append-bench]``
 """
@@ -299,8 +307,10 @@ def idm_law(v, gap, dv, has, p):
 
 
 def wall_accel(x, v, lane, p, merge_end):
-    """Port of rust ``wall_accel`` under an operand merge_end."""
-    if abs(F(lane - RAMP_LANE)) < F(0.5):
+    """Port of rust ``wall_accel`` under an operand merge_end.  Exit-
+    flagged vehicles (p[7] > 0.5) see no wall — their road continues
+    through the off-ramp gore."""
+    if abs(F(lane - RAMP_LANE)) < F(0.5) and p[7] <= F(0.5):
         gap = max(F(merge_end - x), F(MIN_GAP * F(0.1)))
     else:
         gap = FREE_GAP
@@ -345,8 +355,14 @@ def step_native_mirror(x, v, lane, act, params, geometry):
             if merge_start <= x[i] <= merge_end and incentive(i, 1.0)[2]:
                 decisions[i] = F(1.0)
             continue
-        tgt_up = min(F(lane[i] + F(1.0)), max_lane)
         tgt_dn = max(F(lane[i] - F(1.0)), F(1.0))
+        if params[i, 7] > F(0.5):
+            # mandatory exit-intent bias: toward lane 1 whenever safe,
+            # never a discretionary move away from the exit
+            if tgt_dn < lane[i] - F(0.5) and incentive(i, tgt_dn)[2]:
+                decisions[i] = tgt_dn
+            continue
+        tgt_up = min(F(lane[i] + F(1.0)), max_lane)
         if tgt_up > lane[i] + F(0.5):
             a_self, a_lag, safe = incentive(i, tgt_up)
             gain = F(a_self - accel[i] - POLITENESS * max(F(-a_lag), F(0.0)))
@@ -359,6 +375,7 @@ def step_native_mirror(x, v, lane, act, params, geometry):
             if safe and gain > THRESHOLD:
                 decisions[i] = tgt_dn
 
+    n_exited = 0
     for i in range(n):
         if not act[i]:
             v[i] = F(0.0)
@@ -367,20 +384,40 @@ def step_native_mirror(x, v, lane, act, params, geometry):
             lane[i] = decisions[i]
         new_v = max(F(v[i] + accel[i] * dt), F(0.0))
         new_x = F(x[i] + new_v * dt)
-        if new_x >= road_end and x[i] < road_end:
+        crossed = new_x >= road_end and x[i] < road_end
+        exited = (
+            not crossed
+            and params[i, 7] > F(0.5)
+            and lane[i] < F(1.5)
+            and new_x >= params[i, 6]
+            and x[i] < params[i, 6]
+        )
+        if crossed or exited:
             act[i] = False
+        if exited:
+            n_exited += 1
         x[i], v[i] = new_x, new_v
+    return n_exited
 
 
-def geometry_traffic(rng, n, geometry, with_ramp):
-    """Random traffic scaled to the geometry's road (float32)."""
-    road_end, _, _, n_lanes, _ = geometry
-    x = np.sort(rng.uniform(0.0, road_end * 0.9, n)).astype(F)
+def geometry_traffic(rng, n, geometry, with_ramp, exit_frac=0.0, near_gore=False):
+    """Random traffic scaled to the geometry's road (float32).  With
+    ``exit_frac`` > 0, that share of vehicles carries schema-3 exit
+    intent (exit at the merge-zone gore, or mid-road when the geometry
+    has no zone); ``near_gore`` clusters the spawn span just upstream of
+    the gore so short rollouts actually produce exit crossings."""
+    road_end, _, merge_end, n_lanes, _ = geometry
+    gore = merge_end if merge_end > 0.0 else road_end * 0.6
+    if near_gore:
+        x = np.sort(rng.uniform(max(0.0, gore - 400.0), gore * 1.02, n)).astype(F)
+    else:
+        x = np.sort(rng.uniform(0.0, road_end * 0.9, n)).astype(F)
     x += np.arange(n, dtype=F) * F(0.01)  # keep the dx > eps test stable
     v = rng.uniform(0.0, 30.0, n).astype(F)
     lo_lane = 0 if with_ramp else 1
     lane = rng.integers(lo_lane, n_lanes + 1, n).astype(F)
     act = rng.uniform(0.0, 1.0, n) < 0.7
+    flagged = rng.uniform(0.0, 1.0, n) < exit_frac
     params = np.stack(
         [
             rng.uniform(20.0, 38.0, n),
@@ -389,20 +426,27 @@ def geometry_traffic(rng, n, geometry, with_ramp):
             rng.uniform(1.5, 3.5, n),
             rng.uniform(1.5, 3.0, n),
             rng.uniform(4.0, 9.0, n),
+            np.where(flagged, gore, 0.0),
+            flagged.astype(F),
         ],
         axis=1,
     ).astype(F)
     return x, v, lane, act, params
 
 
-def check_geometry_kernel(jnp, model, name, geometry, seed, steps=20):
+def check_geometry_kernel(
+    jnp, model, name, geometry, seed, steps=20, exit_frac=0.0, near_gore=False
+):
     """Roll the jax geometry-operand kernel against the scalar mirror —
     the tolerance discipline of rust/tests/runtime_numerics.rs (both
-    sides integrate the same f32 math in different op orders)."""
+    sides integrate the same f32 math in different op orders).  Returns
+    the mirror's total exit count over the rollout."""
     rng = np.random.default_rng(seed)
     n = 64
     with_ramp = geometry[2] > 0.0  # families with a merge zone use lane 0
-    x, v, lane, act, params = geometry_traffic(rng, n, geometry, with_ramp)
+    x, v, lane, act, params = geometry_traffic(
+        rng, n, geometry, with_ramp, exit_frac, near_gore
+    )
     geom_row = jnp.asarray(np.array(geometry, dtype=F))
     state_j = jnp.stack(
         [
@@ -414,12 +458,17 @@ def check_geometry_kernel(jnp, model, name, geometry, seed, steps=20):
         axis=1,
     )
     params_j = jnp.asarray(params)
+    # exit-flagged rollouts retire on a lane-change boundary too, so they
+    # get one extra step of allowed retirement skew; the exit-free
+    # baseline keeps the original strict bound
+    mismatch_tol = 2 if exit_frac > 0.0 else 1
+    exits = 0
     for step in range(steps):
         state_j, _, _, _ = model.step_geom(state_j, params_j, geom_row)
-        step_native_mirror(x, v, lane, act, params, geometry)
+        exits += step_native_mirror(x, v, lane, act, params, geometry)
         sj = np.asarray(state_j)
         active_mismatch = int(np.sum((sj[:, 3] > 0.5) != act))
-        assert active_mismatch <= 1, (
+        assert active_mismatch <= mismatch_tol, (
             f"{name} step {step}: {active_mismatch} active-flag mismatches"
         )
         both = (sj[:, 3] > 0.5) & act
@@ -427,6 +476,7 @@ def check_geometry_kernel(jnp, model, name, geometry, seed, steps=20):
         dv = np.abs(sj[both, 1] - v[both])
         assert dx.size == 0 or dx.max() < 0.5, f"{name} step {step}: max |dx| {dx.max()}"
         assert dv.size == 0 or dv.max() < 0.5, f"{name} step {step}: max |dv| {dv.max()}"
+    return exits
 
 
 def bench_geometry_kernel(jnp, jax, model):
@@ -439,7 +489,9 @@ def bench_geometry_kernel(jnp, jax, model):
     step_jit = jax.jit(model.step_geom)
     for n, reps in ((64, 30), (256, 8)):
         rng = np.random.default_rng(99)
-        x, v, lane, act, params = geometry_traffic(rng, n, geometry, True)
+        # a quarter of the traffic is exit-flagged so the schema-3
+        # destination branch is part of what both sides pay for
+        x, v, lane, act, params = geometry_traffic(rng, n, geometry, True, exit_frac=0.25)
         t0 = time.perf_counter()
         for _ in range(reps):
             xx, vv, ll, aa = x.copy(), v.copy(), lane.copy(), act.copy()
@@ -475,7 +527,7 @@ def bench_geometry_kernel(jnp, jax, model):
     params_all = []
     for k in range(b):
         geometry = FAMILY_GEOMETRIES[picks[k % len(picks)]]
-        x, v, lane, act, params = geometry_traffic(rng, n, geometry, True)
+        x, v, lane, act, params = geometry_traffic(rng, n, geometry, True, exit_frac=0.25)
         states.append(np.stack([x, v, lane, act.astype(F)], axis=1))
         params_all.append(params)
         geoms.append(np.array(geometry, dtype=F))
@@ -497,7 +549,7 @@ def bench_geometry_kernel(jnp, jax, model):
 
 
 def append_bench(results):
-    """Append the PR 3 python-mirror measurements to
+    """Append the PR 4 python-mirror measurements to
     BENCH_runtime_hotpath.json (never deleting existing runs)."""
     path = pathlib.Path(__file__).resolve().parents[1] / "BENCH_runtime_hotpath.json"
     doc = json.loads(path.read_text())
@@ -505,14 +557,14 @@ def append_bench(results):
     post = {k: v for k, v in results.items() if not k.startswith("mirror_native")}
     for label, rows in (
         (
-            "pre-PR3-python-mirror (scalar native full step, non-default "
-            "lane-drop geometry, float32)",
+            "pre-PR4-python-mirror (scalar native full step, schema-3 "
+            "destination-aware, 25% exit-flagged, lane-drop geometry, float32)",
             pre,
         ),
         (
-            "post-PR3-python-mirror (jax geometry-operand step_geom kernel, "
-            "CPU jit stand-in for the pooled PJRT executable; solo + "
-            "mixed-family batched)",
+            "post-PR4-python-mirror (jax schema-3 destination-aware step_geom "
+            "kernel, CPU jit stand-in for the pooled PJRT executable; solo + "
+            "mixed-family batched, 25% exit-flagged)",
             post,
         ),
     ):
@@ -533,7 +585,7 @@ def append_bench(results):
             }
         )
     path.write_text(json.dumps(doc, indent=2) + "\n")
-    print(f"appended pre/post-PR3 python-mirror runs to {path}")
+    print(f"appended pre/post-PR4 python-mirror runs to {path}")
 
 
 def geometry_section(do_append):
@@ -553,6 +605,19 @@ def geometry_section(do_append):
     print(
         f"geometry-operand agreement: OK ({len(FAMILY_GEOMETRIES)} family extremes, "
         "20-step rollouts, jax kernel vs scalar native mirror)"
+    )
+    # PR 4: the same extremes with ~30% exit-flagged traffic — the
+    # destination columns must agree too, and exits must actually occur
+    total_exits = 0
+    for i, (name, geometry) in enumerate(FAMILY_GEOMETRIES.items()):
+        total_exits += check_geometry_kernel(
+            jnp, model, name, geometry, seed=4000 + i, steps=60, exit_frac=0.5,
+            near_gore=True,
+        )
+    assert total_exits >= 10, f"exit-flagged sweeps produced too few exits: {total_exits}"
+    print(
+        f"destination-dynamics agreement: OK (same extremes, 50% exit-flagged, "
+        f"60-step rollouts, {total_exits} off-ramp exits mirrored)"
     )
     print("geometry-operand step timing (python mirror, indicative only):")
     results = bench_geometry_kernel(jnp, jax, model)
