@@ -40,10 +40,12 @@ fn main() -> anyhow::Result<()> {
         &FlowFile::merge_sample(1200.0, 300.0, 30.0),
         7,
     )?;
-    let server = TraciServer::spawn(
-        port,
-        SumoSim::new(scenario, 64, routes, Box::new(NativeIdmStepper::default())),
-    )?;
+    // TraCI-attached live-GUI run: force K=1 chunks so every rendered
+    // frame gets a fresh back-end step — a fused 32-step chunk would
+    // starve the stream between dispatches
+    let mut sumo = SumoSim::new(scenario, 64, routes, Box::new(NativeIdmStepper::default()));
+    sumo.set_chunk_limit(1);
+    let server = TraciServer::spawn(port, sumo)?;
 
     let world = sample_merge_world(port);
     let mut sim = WebotsSim::open(&world)?.with_stop_condition(StopCondition::SimTime(15.0));

@@ -13,7 +13,7 @@
 
 use webots_hpc::output::{mean, stddev, CampaignDataset};
 use webots_hpc::pipeline::{
-    launch_node_slots, propagate_copies, InstanceConfig, PhysicsEngine, PortAllocator,
+    launch_node_slots, propagate_copies, ChunkSteps, InstanceConfig, PhysicsEngine, PortAllocator,
 };
 use webots_hpc::runtime::EngineService;
 use webots_hpc::sumo::{FlowFile, MergeScenario};
@@ -62,6 +62,7 @@ fn main() -> anyhow::Result<()> {
                 horizon_s: HORIZON_S,
                 max_steps: 2_000,
                 scenario_run: None,
+                chunk_steps: ChunkSteps::Auto,
             })
             .collect();
 

@@ -11,7 +11,7 @@
 
 use webots_hpc::container::{build_webots_hpc_image, BuildHost, ExecEnv};
 use webots_hpc::display::DisplayRegistry;
-use webots_hpc::pipeline::{launch_instance, InstanceConfig, PhysicsEngine};
+use webots_hpc::pipeline::{launch_instance, ChunkSteps, InstanceConfig, PhysicsEngine};
 use webots_hpc::sumo::{FlowFile, MergeScenario};
 use webots_hpc::webots::nodes::sample_merge_world;
 
@@ -37,6 +37,7 @@ fn main() -> anyhow::Result<()> {
         horizon_s: 60.0,
         max_steps: 1_000,
         scenario_run: None,
+        chunk_steps: ChunkSteps::Auto,
     };
 
     // the container image the paper ships: official Webots docker image

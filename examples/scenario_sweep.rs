@@ -25,6 +25,7 @@ use webots_hpc::runtime::EngineService;
 use webots_hpc::scenario::{
     scenarios_manifest, FamilyRegistry, SamplerKind, ScenarioMatrix,
 };
+use webots_hpc::sumo::steps_for;
 use webots_hpc::webots::nodes::sample_merge_world;
 
 const SAMPLES_PER_FAMILY: usize = 4;
@@ -85,7 +86,7 @@ fn main() -> anyhow::Result<()> {
             &planned,
         );
         cfg.horizon_s = cfg.horizon_s.min(HORIZON_CAP_S);
-        cfg.max_steps = (cfg.horizon_s * 10.0) as u64 + 100;
+        cfg.max_steps = steps_for(cfg.horizon_s, cfg.scenario.dt_s) + 100;
 
         // the registry suggests from the lowered ladder, so with
         // artifacts present every point rides PJRT

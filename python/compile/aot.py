@@ -7,9 +7,18 @@ Emits one artifact per (function, vehicle-count) bucket:
                                  an f32[5] runtime operand; destination-
                                  aware: params carry [exit_pos,
                                  exit_flag] columns — schema 3)
+  artifacts/rollout{K}_{N}.hlo.txt
+                               — fused K-step rollout (model.rollout_geom,
+                                 lax.scan over step_geom; one dispatch
+                                 per K physics steps — schema 4), one per
+                                 K in the ROLLOUT_STEPS ladder
+  artifacts/rolloutb{K}_{N}.hlo.txt
+                               — vmapped rollout (BATCH co-located
+                                 instances × K fused steps per dispatch)
   artifacts/idm_{N}.hlo.txt    — bare L1 IDM kernel (rust microbench target)
   artifacts/radar_{N}.hlo.txt  — bare L1 radar kernel
-  artifacts/manifest.json      — shapes, column layout, geometry layout
+  artifacts/manifest.json      — shapes, column layout, geometry layout,
+                                 rollout entry points + K ladder
 
 HLO TEXT is the interchange format, NOT serialized HloModuleProto: jax
 >= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
@@ -41,6 +50,15 @@ from .kernels.radar import radar_scan
 #: (`rust/src/scenario/family.rs` DEFAULT_BUCKET_LADDER), so no scenario
 #: point ever falls back to the native stepper.
 BUCKETS = (16, 64, 256, 1024)
+
+#: the fused-rollout K ladder lowered per bucket (schema 4).  The rust
+#: chunk scheduler (`rust/src/sumo/simulation.rs`) computes the fusible
+#: run length until the next due departure and clamps it to this ladder,
+#: so the ladder must include 1 (the degenerate chunk) and is kept
+#: short: each K costs one more executable per bucket (solo + batched).
+#: Pinned against `rust/src/runtime/manifest.rs ROLLOUT_LADDER` by
+#: `scripts/check_manifest.py`.
+ROLLOUT_STEPS = (1, 8, 32)
 
 
 def to_hlo_text(lowered) -> str:
@@ -87,6 +105,32 @@ def lower_step_batched(b: int, n: int) -> str:
     return to_hlo_text(jax.jit(jax.vmap(model.step_geom)).lower(state, params, geom))
 
 
+def lower_rollout(n: int, k: int) -> str:
+    """The fused K-step rollout: lax.scan over the destination-aware,
+    geometry-generic step — one PJRT dispatch advances the world by K
+    steps and returns (final_state, obs_trace f32[K, OBS]).  Bit-exact
+    with K sequential `step_geom` dispatches (the scan carry IS the
+    state, so exit retirement and n_exited happen inside the loop)."""
+    state = jax.ShapeDtypeStruct((n, 4), jnp.float32)
+    params = jax.ShapeDtypeStruct((n, PARAMS), jnp.float32)
+    geom = jax.ShapeDtypeStruct((GEOM,), jnp.float32)
+    fn = lambda s, p, g: model.rollout_geom(s, p, g, k)
+    return to_hlo_text(jax.jit(fn).lower(state, params, geom))
+
+
+def lower_rollout_batched(b: int, n: int, k: int) -> str:
+    """vmap(rollout_geom) over a leading instance axis: one dispatch
+    advances `b` co-located instances by K fused steps each — the
+    micro-batcher coalesces same-K rollout requests into this entry
+    exactly like single steps coalesce into `stepb` (geometry rows are
+    batched, so mixed-family chunks share the dispatch too)."""
+    state = jax.ShapeDtypeStruct((b, n, 4), jnp.float32)
+    params = jax.ShapeDtypeStruct((b, n, PARAMS), jnp.float32)
+    geom = jax.ShapeDtypeStruct((b, GEOM), jnp.float32)
+    fn = jax.vmap(lambda s, p, g: model.rollout_geom(s, p, g, k))
+    return to_hlo_text(jax.jit(fn).lower(state, params, geom))
+
+
 def lower_idm(n: int) -> str:
     state = jax.ShapeDtypeStruct((n, 4), jnp.float32)
     params = jax.ShapeDtypeStruct((n, PARAMS), jnp.float32)
@@ -111,11 +155,13 @@ def main() -> None:
 
     manifest: dict = {
         "format": "hlo-text",
-        # schema 3: step/stepb artifacts take the geometry operand AND
-        # the widened destination-aware params row ([exit_pos,
-        # exit_flag] columns, obs gains n_exited); the rust runtime
-        # (runtime/manifest.rs) refuses older artifacts.
-        "schema": 3,
+        # schema 4: everything schema 3 had (geometry operand,
+        # destination-aware params row, n_exited observable) PLUS the
+        # fused K-step rollout entry points (`rollout{K}_{N}` /
+        # `rolloutb{K}_{N}`, K in ROLLOUT_STEPS).  The rust runtime
+        # still executes the single-step entries of schema-3 artifacts;
+        # rollouts are gated on schema >= 4 (runtime/manifest.rs).
+        "schema": 4,
         "state_columns": ["x", "v", "lane", "active"],
         "param_columns": list(model.PARAM_COLUMNS),
         "obs_columns": list(model.OBS_COLUMNS),
@@ -133,7 +179,11 @@ def main() -> None:
     }
 
     manifest["batch"] = BATCH
-    operands = {"step": 3, "stepb": 3, "idm": 2, "radar": 1}
+    # the fused-rollout contract (schema 4): the K ladder plus the entry
+    # name stems the runtime resolves `{stem}{K}_{N}` keys against
+    manifest["rollout_steps"] = list(ROLLOUT_STEPS)
+    manifest["rollout_entry_points"] = ["rollout", "rolloutb"]
+    operands = {"step": 3, "stepb": 3, "rollout": 3, "rolloutb": 3, "idm": 2, "radar": 1}
     for n in sorted(args.buckets):
         for name, lower in (("step", lower_step), ("idm", lower_idm), ("radar", lower_radar)):
             path = out / f"{name}_{n}.hlo.txt"
@@ -157,6 +207,24 @@ def main() -> None:
             "operands": operands["stepb"],
         }
         print(f"wrote {path} ({len(text)} chars, batch={BATCH})")
+        # the fused K-step rollouts (solo + micro-batched), one pair per
+        # ladder K: what lets the runtime amortize one dispatch over a
+        # whole physics chunk
+        for k in ROLLOUT_STEPS:
+            for stem, text in (
+                ("rollout", lower_rollout(n, k)),
+                ("rolloutb", lower_rollout_batched(BATCH, n, k)),
+            ):
+                path = out / f"{stem}{k}_{n}.hlo.txt"
+                path.write_text(text)
+                manifest["entries"][f"{stem}{k}_{n}"] = {
+                    "file": path.name,
+                    "n": n,
+                    "k": k,
+                    "outputs": 2,
+                    "operands": operands[stem],
+                }
+                print(f"wrote {path} ({len(text)} chars, k={k})")
 
     (out / "manifest.json").write_text(json.dumps(manifest, indent=2))
     print(f"wrote {out / 'manifest.json'}")

@@ -38,10 +38,18 @@ params row carries ``[exit_pos, exit_flag]`` columns (``PARAM_COLUMNS``)
 compiled from each flow's route, so the same executable retires
 off-ramp traffic at its own gore while through traffic rides to
 ``road_end`` — no per-route Python on the request path.
+
+Rollouts are fused on-device (schema 4): ``rollout_geom`` wraps
+``step_geom`` in a ``lax.scan`` over K steps, so one PJRT dispatch
+amortizes over an entire K-step chunk instead of paying a host round
+trip per step — bit-exact with K sequential steps, per-step observables
+preserved as an f32[K, OBS_COLS] trace (``aot.py ROLLOUT_STEPS`` is the
+lowered K ladder).
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from .kernels.idm_pairwise import idm_accel
@@ -271,3 +279,38 @@ def step(state: jnp.ndarray, params: jnp.ndarray):
     """Advance the merge simulation by DT under the default geometry
     (the classic fixed-world signature; see ``step_geom``)."""
     return step_geom(state, params, default_geometry())
+
+
+def rollout_geom(state: jnp.ndarray, params: jnp.ndarray, geom: jnp.ndarray, k: int):
+    """Advance the simulation by ``k`` fused steps in ONE executable.
+
+    Wraps ``step_geom`` in a ``lax.scan`` so an entire K-step rollout
+    runs on-device: the state is the scan carry (exit retirement and the
+    per-step observables — ``n_exited`` included — happen *inside* the
+    loop, exactly as in ``k`` sequential ``step_geom`` calls), and the
+    only host traffic is one dispatch and one reply.  ``params`` and
+    ``geom`` are loop invariants: per-vehicle destination intent and the
+    scenario geometry ride along unchanged, so one lowered rollout per
+    (bucket, K) serves every scenario family and route mix.
+
+    Inputs : state f32[N,4], params f32[N,PARAMS], geom f32[GEOM], k >= 1
+    Outputs: (final_state f32[N,4], obs_trace f32[k, OBS_COLS])
+
+    The per-step ``accel``/``radar`` outputs of ``step_geom`` are
+    dropped from the scan outputs on purpose — the runtime's chunked
+    stepper consumes only state + observables, and XLA dead-code
+    eliminates the radar scan from the loop body entirely.
+
+    Bit-exactness with ``k`` sequential ``step_geom`` calls is part of
+    the ABI (the rust chunk scheduler splices fused chunks into
+    step-by-step histories); it is asserted by
+    ``tests/test_model.py::test_rollout_matches_sequential_steps`` and
+    pre-verified against live artifacts by ``scripts/validate_sweep.py``.
+    """
+
+    def body(carry, _):
+        new_state, _accel, _radar, obs = step_geom(carry, params, geom)
+        return new_state, obs
+
+    final_state, obs_trace = jax.lax.scan(body, state, None, length=k)
+    return final_state, obs_trace

@@ -46,10 +46,14 @@ def test_step_is_pure_hlo_no_custom_calls():
 def test_manifest_consistent_with_artifacts():
     manifest = json.loads((ART / "manifest.json").read_text())
     assert manifest["format"] == "hlo-text"
-    assert manifest["schema"] == 2
+    assert manifest["schema"] == 4
     assert manifest["geometry_columns"] == model.GEOM_COLUMNS
+    assert manifest["param_columns"] == model.PARAM_COLUMNS
+    assert manifest["obs_columns"] == model.OBS_COLUMNS
     assert manifest["dt"] == model.DT
     assert manifest["merge_end"] == model.MERGE_END
+    assert manifest["rollout_steps"] == list(aot.ROLLOUT_STEPS)
+    assert manifest["rollout_entry_points"] == ["rollout", "rolloutb"]
     for key, entry in manifest["entries"].items():
         path = ART / entry["file"]
         assert path.exists(), f"missing artifact {path}"
@@ -57,6 +61,11 @@ def test_manifest_consistent_with_artifacts():
         assert "HloModule" in head
         name, n = key.rsplit("_", 1)
         assert entry["n"] == int(n)
+        if name.startswith("rollout"):
+            stem = "rolloutb" if name.startswith("rolloutb") else "rollout"
+            assert entry["k"] == int(name[len(stem):])
+            assert entry["outputs"] == 2
+            assert entry["operands"] == 3
 
 
 def test_lower_step_batched_shapes():
@@ -101,3 +110,67 @@ def test_manifest_buckets_cover_entries():
     manifest = json.loads((ART / "manifest.json").read_text())
     ns = {e["n"] for e in manifest["entries"].values()}
     assert ns == set(manifest["buckets"])
+
+
+def test_lower_rollout_shapes():
+    """The fused rollout returns (final_state, obs_trace) only — the
+    per-step accel/radar are dropped so XLA can DCE the radar scan out
+    of the loop body."""
+    k, n = 8, 16
+    text = aot.lower_rollout(n, k)
+    assert "HloModule" in text
+    assert f"f32[{n},4]" in text
+    assert f"f32[{n},8]" in text
+    assert f"f32[{aot.GEOM}]" in text
+    # the stacked per-step observables
+    assert f"f32[{k},{len(model.OBS_COLUMNS)}]" in text
+    assert "custom-call" not in text.lower()
+
+
+def test_lower_rollout_batched_shapes():
+    k, n, b = 8, 16, aot.BATCH
+    text = aot.lower_rollout_batched(b, n, k)
+    assert f"f32[{b},{n},4]" in text
+    assert f"f32[{b},{aot.GEOM}]" in text
+    assert f"f32[{b},{k},{len(model.OBS_COLUMNS)}]" in text
+    assert "custom-call" not in text.lower()
+
+
+def test_batched_rollout_matches_vmap_of_single():
+    """vmap semantics over the fused rollout: each lane's chunk equals
+    its own solo rollout (what lets the micro-batcher coalesce same-K
+    chunks without contaminating worlds).  Same tolerance discipline as
+    `test_batched_step_matches_vmap_of_single`: the batched lowering may
+    fuse differently from the solo one, so this is allclose, not
+    bit-equal — bit-exactness is claimed fused-vs-sequential (see
+    test_model.py), not batched-vs-solo."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    rng = np.random.default_rng(17)
+    b, n, k = 4, 16, 8
+    states, params = [], []
+    for _ in range(b):
+        x = np.sort(rng.uniform(0, 900, n)).astype(np.float32)
+        v = rng.uniform(0, 30, n).astype(np.float32)
+        lane = rng.integers(0, 3, n).astype(np.float32)
+        act = (rng.uniform(size=n) > 0.3).astype(np.float32)
+        states.append(jnp.stack([jnp.asarray(x), jnp.asarray(v), jnp.asarray(lane), jnp.asarray(act)], axis=1))
+        params.append(jnp.tile(jnp.array([[30.0, 1.5, 1.5, 2.0, 2.0, 4.5, 0.0, 0.0]], jnp.float32), (n, 1)))
+    bs = jnp.stack(states)
+    bp = jnp.stack(params)
+    bg = jnp.stack([model.default_geometry()] * b)
+    # compare the lowered executables (what PJRT dispatches), not the
+    # eager op-by-op path — same discipline as the rust coalescing tests
+    batched = jax.jit(jax.vmap(lambda s, p, g: model.rollout_geom(s, p, g, k)))
+    solo = jax.jit(lambda s, p, g: model.rollout_geom(s, p, g, k))
+    fin_b, trace_b = batched(bs, bp, bg)
+    for i in range(b):
+        fin, trace = solo(states[i], params[i], model.default_geometry())
+        np.testing.assert_allclose(
+            np.asarray(fin_b[i]), np.asarray(fin), rtol=1e-5, atol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(trace_b[i]), np.asarray(trace), rtol=1e-5, atol=1e-5
+        )

@@ -199,6 +199,79 @@ def test_exit_flagged_never_changes_up():
     assert float(ns[0, 2]) == 2.0
 
 
+# ------------------------------------------------------ fused rollouts ----
+
+
+def test_rollout_matches_sequential_steps():
+    """The tentpole ABI guarantee: a fused K-step rollout is BIT-EXACT
+    with K sequential step_geom calls — final state equal, and the obs
+    trace row i equal to sequential step i's obs.  Exit-flagged traffic
+    is included so exit retirement (and n_exited) is exercised *inside*
+    the scan carry, mid-chunk.
+
+    Both sides are jit-compiled: the guarantee is about the lowered
+    executables the rust runtime dispatches (the eager op-by-op path
+    rounds differently and is not part of the ABI)."""
+    import jax
+
+    rng = np.random.default_rng(2024)
+    n, k = 48, 32
+    state, params = make_state(rng, n)
+    # flag a third of the fleet, each for a gore a few car-lengths ahead
+    # of its own spawn position, so exits land mid-chunk at varying steps
+    # rather than at chunk boundaries
+    params = np.asarray(params).copy()
+    flagged = rng.uniform(size=n) < 0.35
+    gore = np.asarray(state[:, 0]) + rng.uniform(5.0, 60.0, n).astype(np.float32)
+    params[:, 6] = np.where(flagged, gore, 0.0)
+    params[:, 7] = flagged.astype(np.float32)
+    params = jnp.asarray(params)
+    geom = model.default_geometry()
+
+    step_jit = jax.jit(model.step_geom)
+    roll_jit = jax.jit(model.rollout_geom, static_argnums=3)
+    seq_state = state
+    seq_obs = []
+    for _ in range(k):
+        seq_state, _, _, obs = step_jit(seq_state, params, geom)
+        seq_obs.append(np.asarray(obs))
+    fin, trace = roll_jit(state, params, geom, k)
+    np.testing.assert_array_equal(np.asarray(fin), np.asarray(seq_state))
+    np.testing.assert_array_equal(np.asarray(trace), np.stack(seq_obs))
+    # several exits really happened mid-chunk (the interesting case)
+    exits_per_step = np.stack(seq_obs)[:, 4]
+    assert float(exits_per_step.sum()) >= 3.0, "too few exits mid-chunk"
+    assert float(exits_per_step[1:-1].sum()) > 0.0, "exits only at chunk edges"
+
+
+def test_rollout_k1_matches_single_step():
+    """K=1 (the ladder's degenerate rung) is exactly one step."""
+    import jax
+
+    rng = np.random.default_rng(7)
+    state, params = make_state(rng, 16)
+    geom = model.default_geometry()
+    ns, _, _, obs = jax.jit(model.step_geom)(state, params, geom)
+    fin, trace = jax.jit(model.rollout_geom, static_argnums=3)(state, params, geom, 1)
+    assert trace.shape == (1, len(model.OBS_COLUMNS))
+    np.testing.assert_array_equal(np.asarray(fin), np.asarray(ns))
+    np.testing.assert_array_equal(np.asarray(trace[0]), np.asarray(obs))
+
+
+def test_rollout_obs_trace_shape_and_totals():
+    """Per-step observables survive fusion: the trace has one row per
+    step and its flow/exit columns sum to the sequential totals."""
+    rng = np.random.default_rng(5)
+    n, k = 32, 8
+    state, params = make_state(rng, n)
+    geom = model.default_geometry()
+    fin, trace = model.rollout_geom(state, params, geom, k)
+    assert trace.shape == (k, len(model.OBS_COLUMNS))
+    retired = float(jnp.sum(state[:, 3])) - float(jnp.sum(fin[:, 3]))
+    trace = np.asarray(trace)
+    assert float(trace[:, 2].sum() + trace[:, 4].sum()) == pytest.approx(retired)
+
+
 def test_exit_flagged_ramp_vehicle_sees_no_wall():
     """The phantom wall at MERGE_END must not stop a lane-0 vehicle whose
     road continues through the gore (exit_flag set)."""

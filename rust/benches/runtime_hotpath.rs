@@ -21,9 +21,13 @@
 //!     the geometry operand, every scenario-matrix run was native-only).
 //!   * `hlo_step_mixed_families_8threads_x10/N=*` — four different
 //!     geometries coalescing into single batched dispatches.
+//!   * `hlo_rollout/K=1/N=*` vs `hlo_rollout/K={8,32}/N=*` — fused
+//!     K-step rollout executables (PR 5 tentpole): one PJRT dispatch
+//!     amortized over K physics steps instead of one dispatch per step.
 
 mod common;
 
+use webots_hpc::pipeline::ChunkSteps;
 use webots_hpc::runtime::EngineService;
 use webots_hpc::scenario::{FamilyRegistry, UniformSampler};
 use webots_hpc::sumo::mobil::MobilParams;
@@ -123,6 +127,46 @@ fn main() {
                 b
             );
         }
+    }
+
+    // fused K-step rollouts (PR 5): the SAME physics, K steps per PJRT
+    // dispatch — the K=1 case pays the full per-dispatch overhead
+    // (channel hop, literal staging, reply) per physics step; K=8/32
+    // amortize it.  N=256 is the acceptance case; smaller buckets show
+    // the overhead-bound regime where fusion pays hardest.
+    if service.manifest().rollouts_available() {
+        let ladder = service.manifest().rollout_steps.clone();
+        for &bucket in &service.manifest().buckets.clone() {
+            if bucket > 256 {
+                println!("note: rollout bench capped at N=256 (skipping N={bucket})");
+                continue;
+            }
+            let t = traffic(bucket, 0.7, 0x5CA1E + bucket as u64);
+            let mut sess = service.session(bucket).unwrap();
+            let mut per_k = Vec::new();
+            for &k in &ladder {
+                let iters = (400 / k as u32).clamp(20, 200);
+                let s = rec.bench(
+                    &format!("hlo_rollout/K={k}/N={bucket}"),
+                    iters,
+                    k as f64,
+                    || {
+                        let _ = sess.step_many(&t.state, &t.params, k).unwrap();
+                    },
+                );
+                let sps = common::throughput(&s, k as f64);
+                println!("    -> {sps:.0} fused steps/s at K={k}");
+                per_k.push((k, sps));
+            }
+            if let (Some((_, k1)), Some((kmax, kbest))) = (per_k.first(), per_k.last()) {
+                println!(
+                    "    -> K={kmax} amortization: {:.2}x over K=1 at N={bucket}",
+                    kbest / k1
+                );
+            }
+        }
+    } else {
+        println!("note: artifacts predate schema 4 — rollout benches skipped");
     }
 
     // non-default scenario geometries on the pooled fast path (PR 3):
@@ -249,6 +293,7 @@ fn main() {
                 horizon_s: 30.0,
                 max_steps: 400,
                 scenario_run: None,
+                chunk_steps: ChunkSteps::Auto,
             };
             let _ = webots_hpc::pipeline::launch_instance(&cfg, &displays, &env, &engine)
                 .unwrap();

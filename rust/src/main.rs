@@ -7,7 +7,7 @@
 //! webots-hpc dist                      # §5.2 distribution report
 //! webots-hpc campaign [--nodes 6] [--slots 8] [--hours 12] [--policy first-fit]
 //! webots-hpc submit <script.pbs> [--nodes 6]
-//! webots-hpc run-local [--instances 8] [--engine hlo|native] [--horizon 30]
+//! webots-hpc run-local [--instances 8] [--engine hlo|native] [--horizon 30] [--chunk auto|K]
 //! ```
 //!
 //! Argument parsing is hand-rolled (the vendored offline crate set has
@@ -20,6 +20,7 @@ use webots_hpc::harness;
 use webots_hpc::metrics::{CostModel, SimWorkload};
 use webots_hpc::output::CampaignDataset;
 use webots_hpc::pbs::{script::PbsScript, JobId, PackingPolicy, Scheduler, SchedulerConfig};
+use webots_hpc::pipeline::ChunkSteps;
 use webots_hpc::pipeline::{
     propagate_copies, run_cluster_campaign, CampaignSpec, InstanceConfig, PhysicsEngine,
     PortAllocator,
@@ -37,7 +38,7 @@ const USAGE: &str = "usage: webots-hpc <info|table|fig|dist|campaign|submit|run-
   campaign [--nodes N] [--slots S] [--hours H] [--policy first-fit|round-robin]
   submit <script.pbs> [--nodes N]
   run-local [--instances N] [--engine hlo|native] [--horizon S]
-            [--capacity C] [--seed K]
+            [--capacity C] [--seed K] [--chunk auto|K]
   scale [--max N] [--hours H]        §6.2.2: scalability sweep
   cloud [--runs N]                   §6.2.3: elastic (autoscaled) campaign
   config-init [path]                 §6.2.1: write an example campaign config
@@ -340,6 +341,9 @@ fn run_local(args: &Args) -> Result<()> {
     let horizon: f32 = args.get("horizon", 30.0)?;
     let capacity: usize = args.get("capacity", 64)?;
     let seed: u64 = args.get("seed", 2021)?;
+    // fused-chunk policy (auto | K); explicit K is validated against
+    // the manifest's rollout ladder inside launch_instance
+    let chunk = ChunkSteps::parse(&args.get_str("chunk", "auto"))?;
 
     let physics = match engine.as_str() {
         "native" => PhysicsEngine::Native,
@@ -368,8 +372,9 @@ fn run_local(args: &Args) -> Result<()> {
             seed: seed + c.index as u64,
             capacity,
             horizon_s: horizon,
-            max_steps: (horizon * 10.0) as u64 + 100,
+            max_steps: webots_hpc::sumo::steps_for(horizon, MergeScenario::default().dt_s) + 100,
             scenario_run: None,
+            chunk_steps: chunk,
         })
         .collect();
 

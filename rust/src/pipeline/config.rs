@@ -16,6 +16,50 @@ use crate::{Error, Result};
 
 use super::campaign::CampaignSpec;
 
+/// Fused-chunk policy for an instance's physics stepping (the
+/// `chunk_steps` campaign key): how many physics steps the `SumoSim`
+/// chunk scheduler may hand the stepper as ONE dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ChunkSteps {
+    /// Use the artifact manifest's whole rollout K ladder (the
+    /// default — the scheduler picks the largest fusible rung).
+    #[default]
+    Auto,
+    /// Clamp fused chunks to exactly K steps.  K must be 1 or a lowered
+    /// ladder rung — validated against the live manifest at launch
+    /// ([`super::launch_instance`]), not at parse time, because the
+    /// ladder is the artifact's to declare.  K = 1 is what
+    /// TraCI-attached live-GUI runs force so frame streaming never
+    /// starves behind a 32-step chunk.
+    Fixed(u32),
+}
+
+impl ChunkSteps {
+    /// Parse the config value: `auto` or an explicit step count.
+    pub fn parse(v: &str) -> Result<ChunkSteps> {
+        if v.eq_ignore_ascii_case("auto") {
+            return Ok(ChunkSteps::Auto);
+        }
+        let k: u32 = v
+            .parse()
+            .map_err(|e| Error::Config(format!("bad chunk_steps '{v}': {e}")))?;
+        if k == 0 {
+            return Err(Error::Config(
+                "chunk_steps must be 'auto' or a step count >= 1".into(),
+            ));
+        }
+        Ok(ChunkSteps::Fixed(k))
+    }
+
+    /// The chunk cap this policy imposes on a simulation.
+    pub fn limit(&self) -> usize {
+        match self {
+            ChunkSteps::Auto => usize::MAX,
+            ChunkSteps::Fixed(k) => *k as usize,
+        }
+    }
+}
+
 /// User-facing campaign parameters (see [`CampaignConfig::example`]).
 #[derive(Debug, Clone, PartialEq)]
 pub struct CampaignConfig {
@@ -36,6 +80,13 @@ pub struct CampaignConfig {
     pub scenario_samples: usize,
     /// Sampler name: `grid[:k]`, `uniform`, or `lhs[:n]`.
     pub sampler: String,
+    /// Fused-chunk policy (`auto` | explicit K, validated against the
+    /// manifest's rollout ladder at launch).  Consumed by the real
+    /// instance launchers — thread it into each instance with
+    /// [`super::InstanceConfig::with_chunk_steps`] (the CLI's
+    /// `run-local --chunk` does; the simulated PBS campaign launches
+    /// no real instances, so there it only documents intent).
+    pub chunk_steps: ChunkSteps,
 }
 
 impl Default for CampaignConfig {
@@ -54,6 +105,7 @@ impl Default for CampaignConfig {
             scenarios: Vec::new(),
             scenario_samples: 16,
             sampler: "lhs".into(),
+            chunk_steps: ChunkSteps::Auto,
         }
     }
 }
@@ -73,6 +125,12 @@ walltime_min = 15
 duration_hours = 12
 seed = 2021
 policy = first-fit
+
+# fused physics chunks: how many steps one PJRT dispatch may advance a
+# run (auto = the artifact manifest's whole rollout K ladder; an
+# explicit K is validated against that ladder at launch; live-GUI runs
+# force 1 regardless so frame streaming never starves)
+chunk_steps = auto
 
 # scenario-matrix mode — uncomment to sweep a scenario space across
 # the array instead of re-running one world (see EXPERIMENTS.md
@@ -118,6 +176,7 @@ policy = first-fit
                 }
                 "scenario_samples" => cfg.scenario_samples = v.parse().map_err(|e| bad(&e))?,
                 "sampler" => cfg.sampler = v.to_string(),
+                "chunk_steps" => cfg.chunk_steps = ChunkSteps::parse(v)?,
                 "policy" => {
                     cfg.policy = match v {
                         "first-fit" => PackingPolicy::FirstFit,
@@ -329,6 +388,21 @@ mod tests {
         )
         .unwrap();
         assert_eq!(ok.to_matrix().unwrap().unwrap().total_points(), 128);
+    }
+
+    #[test]
+    fn chunk_steps_key_roundtrip() {
+        let cfg = CampaignConfig::parse("chunk_steps = auto").unwrap();
+        assert_eq!(cfg.chunk_steps, ChunkSteps::Auto);
+        assert_eq!(cfg.chunk_steps.limit(), usize::MAX);
+        let cfg = CampaignConfig::parse("chunk_steps = 8").unwrap();
+        assert_eq!(cfg.chunk_steps, ChunkSteps::Fixed(8));
+        assert_eq!(cfg.chunk_steps.limit(), 8);
+        // K=0 and junk are parse errors; ladder membership is a LAUNCH
+        // check (the manifest owns the ladder), not a parse check
+        assert!(CampaignConfig::parse("chunk_steps = 0").is_err());
+        assert!(CampaignConfig::parse("chunk_steps = fast").is_err());
+        assert_eq!(CampaignConfig::default().chunk_steps, ChunkSteps::Auto);
     }
 
     #[test]

@@ -11,9 +11,10 @@
 use crate::container::{BuildHost, ExecEnv};
 use crate::display::DisplayRegistry;
 use crate::output::RunDataset;
+use crate::pipeline::ChunkSteps;
 use crate::runtime::{EngineService, HloStepper};
 use crate::scenario::{PlannedRun, ScenarioRun};
-use crate::sumo::{duarouter, FlowFile, MergeScenario, NativeIdmStepper, SumoSim};
+use crate::sumo::{duarouter, steps_for, FlowFile, MergeScenario, NativeIdmStepper, SumoSim};
 use crate::traci::TraciServer;
 use crate::webots::{StopCondition, WebotsSim, World};
 use crate::{Error, Result};
@@ -49,6 +50,14 @@ pub struct InstanceConfig {
     /// classic fixed merge world, whose network derives from
     /// `scenario`).
     pub scenario_run: Option<ScenarioRun>,
+    /// Fused-chunk policy (`CampaignConfig::chunk_steps`): `Auto` rides
+    /// the manifest's whole rollout ladder; `Fixed(k)` is validated
+    /// against that ladder at launch.  Live-GUI runs force K=1 at the
+    /// `SimMode` site instead — see `examples/gui_session.rs`.  The
+    /// native engine has no rollout ladder (it fuses nothing), so the
+    /// policy is deliberately inert there — any `Fixed(k)` just
+    /// single-steps, with nothing to validate against.
+    pub chunk_steps: ChunkSteps,
 }
 
 impl InstanceConfig {
@@ -62,8 +71,6 @@ impl InstanceConfig {
         planned: &PlannedRun,
     ) -> InstanceConfig {
         let horizon_s = planned.config.horizon_s;
-        // walltime guard sized from the scenario's own DT (plus slack)
-        let dt = planned.config.geometry.dt_s.max(1e-3);
         InstanceConfig {
             run_id: run_id.into(),
             node,
@@ -73,9 +80,19 @@ impl InstanceConfig {
             seed: planned.assignment.run_seed,
             capacity: planned.config.capacity,
             horizon_s,
-            max_steps: (horizon_s / dt).ceil() as u64 + 100,
+            // walltime guard: the SAME step derivation the runtime uses
+            // (steps_for), plus slack — planner and sim can't drift
+            max_steps: steps_for(horizon_s, planned.config.geometry.dt_s) + 100,
             scenario_run: Some(ScenarioRun::from(&planned.config)),
+            chunk_steps: ChunkSteps::Auto,
         }
+    }
+
+    /// Override the fused-chunk policy (threads the campaign config's
+    /// `chunk_steps` key through to this instance).
+    pub fn with_chunk_steps(mut self, chunk_steps: ChunkSteps) -> Self {
+        self.chunk_steps = chunk_steps;
+        self
     }
 }
 
@@ -132,14 +149,27 @@ pub fn launch_instance(
             // geometry is a runtime operand of the schema-2 artifacts:
             // the same pooled executable serves every scenario family,
             // so scenario-matrix runs ride the PJRT fast path too
-            Box::new(HloStepper::for_scenario(
-                service.clone(),
-                cfg.capacity,
-                &cfg.scenario,
-            )?)
+            let stepper = HloStepper::for_scenario(service.clone(), cfg.capacity, &cfg.scenario)?;
+            // an explicit chunk_steps must name a lowered ladder rung —
+            // a K nothing was compiled for would silently single-step
+            // every chunk, which is exactly the misconfiguration the
+            // launch check exists to catch
+            if let ChunkSteps::Fixed(k) = cfg.chunk_steps {
+                let k = k as usize;
+                let ladder = &service.manifest().rollout_steps;
+                if k != 1 && !ladder.contains(&k) {
+                    return Err(Error::Config(format!(
+                        "chunk_steps = {k} is not a lowered rollout rung \
+                         (manifest ladder: {ladder:?}); use 'auto', 1, or a \
+                         ladder K — or re-run `make artifacts`"
+                    )));
+                }
+            }
+            Box::new(stepper)
         }
     };
-    let sim = SumoSim::new(cfg.scenario, cfg.capacity, routes, stepper);
+    let mut sim = SumoSim::new(cfg.scenario, cfg.capacity, routes, stepper);
+    sim.set_chunk_limit(cfg.chunk_steps.limit());
     let server = TraciServer::spawn(port, sim)?;
 
     // (4) Webots front-end
@@ -231,6 +261,7 @@ mod tests {
             horizon_s: 20.0,
             max_steps: 1000,
             scenario_run: None,
+            chunk_steps: ChunkSteps::Auto,
         }
     }
 
@@ -382,6 +413,53 @@ mod tests {
         // the pooled executables were shared across the families
         let usage = service.pool_usage().unwrap();
         assert!(usage.hits > 0, "pooled dispatches occurred: {usage:?}");
+        service.shutdown();
+    }
+
+    /// `chunk_steps` is validated against the live manifest's rollout
+    /// ladder at launch: a K nothing was lowered for must fail loudly
+    /// (it would silently single-step every chunk), while `auto`, K=1
+    /// and real ladder rungs run end to end.
+    #[test]
+    fn chunk_steps_validated_against_manifest_ladder() {
+        use crate::runtime::EngineService;
+        let service = match EngineService::auto() {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("skipping chunk-steps launch test: {e}");
+                return;
+            }
+        };
+        let displays = DisplayRegistry::new();
+        let env = ExecEnv::new(
+            crate::container::build_webots_hpc_image(BuildHost::PersonalComputer).unwrap(),
+        );
+        let physics = PhysicsEngine::Hlo(service.clone());
+        let mk = |chunk: ChunkSteps, seed: u64| {
+            let mut cfg = config("chunk", sample_merge_world(free_base_port()), seed);
+            cfg.horizon_s = 5.0;
+            cfg.with_chunk_steps(chunk)
+        };
+        // a rung nothing was compiled for (ladder Ks are powers the aot
+        // path lowers; 7 never is)
+        let err = launch_instance(&mk(ChunkSteps::Fixed(7), 1), &displays, &env, &physics)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("chunk_steps"), "{err}");
+        // auto, forced step-by-step, and a real rung all complete
+        let mut ok_chunks = vec![ChunkSteps::Auto, ChunkSteps::Fixed(1)];
+        if let Some(&k) = service.manifest().rollout_steps.last() {
+            ok_chunks.push(ChunkSteps::Fixed(k as u32));
+        }
+        for (i, chunk) in ok_chunks.into_iter().enumerate() {
+            let r = launch_instance(&mk(chunk, 40 + i as u64), &displays, &env, &physics).unwrap();
+            assert!(!r.dataset.rows.is_empty());
+        }
+        // same seed policy per launch — identical runs must produce the
+        // identical history regardless of chunk policy
+        let a = launch_instance(&mk(ChunkSteps::Auto, 7), &displays, &env, &physics).unwrap();
+        let b = launch_instance(&mk(ChunkSteps::Fixed(1), 7), &displays, &env, &physics).unwrap();
+        assert_eq!(a.dataset.rows, b.dataset.rows, "chunking changed the physics");
         service.shutdown();
     }
 

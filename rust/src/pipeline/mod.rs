@@ -28,7 +28,7 @@ pub use campaign::{
     pc_campaign, run_cluster_campaign, CampaignResult, CampaignSpec, ThroughputSample,
     PAPER_PC_OVERHEAD_S,
 };
-pub use config::CampaignConfig;
+pub use config::{CampaignConfig, ChunkSteps};
 pub use copies::{propagate_copies, write_copy_tree, SimCopy};
 pub use launcher::{launch_instance, launch_node_slots, InstanceConfig, InstanceResult, PhysicsEngine};
 pub use ports::PortAllocator;

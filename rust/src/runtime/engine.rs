@@ -34,6 +34,34 @@ pub struct StepOutputs {
     pub obs: Vec<f32>,
 }
 
+/// The outputs of one fused K-step rollout execution (schema 4): the
+/// final state plus the per-step observable trace.  The per-step
+/// accel/radar outputs are not part of the rollout ABI — the chunked
+/// stepper consumes only state + obs, and dropping them lets XLA
+/// dead-code eliminate the radar scan from the loop body.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct RolloutOutputs {
+    /// f32[N*4] — state rows after the K-th step.
+    pub state: Vec<f32>,
+    /// f32[K*OBS_COLS] — row i is step i's `[n_active, mean_speed,
+    /// flow, n_merged, n_exited]`, bit-identical to K sequential steps.
+    pub obs: Vec<f32>,
+}
+
+impl RolloutOutputs {
+    /// Step i's observable row.
+    #[inline]
+    pub fn obs_row(&self, i: usize) -> &[f32] {
+        &self.obs[i * OBS_COLS..(i + 1) * OBS_COLS]
+    }
+
+    /// How many fused steps this trace covers.
+    #[inline]
+    pub fn steps(&self) -> usize {
+        self.obs.len() / OBS_COLS
+    }
+}
+
 /// Clear-and-refill `dst` from `src` — no reallocation once `dst` has
 /// grown to the bucket's size.
 #[inline]
@@ -65,6 +93,9 @@ impl Engine {
         // scrambles every run
         manifest.validate_geometry_layout()?;
         manifest.validate_param_layout()?;
+        // schema 4: fused-rollout entry points, validated when present
+        // (schema-3 artifacts still load — single steps only)
+        manifest.validate_rollout_layout()?;
         let client = xla::PjRtClient::cpu().map_err(Error::runtime)?;
         Ok(Engine {
             client: Rc::new(client),
@@ -109,13 +140,42 @@ impl Engine {
         name: &'static str,
         bucket: usize,
     ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        self.pool.get_or_compile((name, bucket), || {
+        self.pool.get_or_compile((name, bucket, 0), || {
             let entry = self.manifest.entry(name, bucket)?;
-            let path = self.dir.join(&entry.file);
-            let proto = xla::HloModuleProto::from_text_file(&path).map_err(Error::runtime)?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            self.client.compile(&comp).map_err(Error::runtime)
+            self.compile_entry_file(entry)
         })
+    }
+
+    /// Compile (or fetch) the fused-rollout artifact `{stem}{k}_{bucket}`
+    /// (schema 4).  The K-ladder rung is part of the pool key, so every
+    /// (stem, bucket, K) triple compiles exactly once per process.
+    fn rollout_executable(
+        &self,
+        stem: &'static str,
+        bucket: usize,
+        k: usize,
+    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        self.pool.get_or_compile((stem, bucket, k), || {
+            if !self.manifest.rollouts_available() {
+                return Err(Error::Artifact(format!(
+                    "artifacts are schema {} with no rollout entry points; \
+                     fused rollouts need schema 4 — re-run `make artifacts`",
+                    self.manifest.schema
+                )));
+            }
+            let entry = self.manifest.rollout_entry(stem, k, bucket)?;
+            self.compile_entry_file(entry)
+        })
+    }
+
+    fn compile_entry_file(
+        &self,
+        entry: &super::manifest::ArtifactEntry,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(Error::runtime)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(Error::runtime)
     }
 
     fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
@@ -250,6 +310,115 @@ impl Engine {
             fill(&mut o.accel, &ac[i * bucket..(i + 1) * bucket]);
             fill(&mut o.radar, &ra[i * bucket * 2..(i + 1) * bucket * 2]);
             fill(&mut o.obs, &ob[i * OBS_COLS..(i + 1) * OBS_COLS]);
+        }
+        Ok(())
+    }
+
+    /// Execute one fused K-step rollout at `bucket` capacity under
+    /// `geom` (schema 4): one PJRT dispatch advances the world by `k`
+    /// steps and returns the final state plus the per-step obs trace —
+    /// bit-identical to `k` sequential [`Engine::step_into`] calls, with
+    /// none of their per-step host round-trips.  `k` must be a rung of
+    /// the manifest's rollout ladder.
+    pub fn rollout(
+        &self,
+        bucket: usize,
+        k: usize,
+        state: &[f32],
+        params: &[f32],
+        geom: &GeometryVec,
+    ) -> Result<RolloutOutputs> {
+        let mut out = RolloutOutputs::default();
+        self.rollout_into(bucket, k, state, params, geom, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Engine::rollout`] into a caller-owned [`RolloutOutputs`] — the
+    /// chunked hot path (same FFI-boundary caveat as
+    /// [`Engine::step_into`]: the two result vectors are swapped in).
+    pub fn rollout_into(
+        &self,
+        bucket: usize,
+        k: usize,
+        state: &[f32],
+        params: &[f32],
+        geom: &GeometryVec,
+        out: &mut RolloutOutputs,
+    ) -> Result<()> {
+        if state.len() != bucket * STATE_COLS || params.len() != bucket * PARAM_COLS {
+            return Err(Error::Runtime(format!(
+                "shape mismatch: state {} params {} for bucket {bucket}",
+                state.len(),
+                params.len()
+            )));
+        }
+        let exe = self.rollout_executable("rollout", bucket, k)?;
+        let s = Self::literal_2d(state, bucket, STATE_COLS)?;
+        let p = Self::literal_2d(params, bucket, PARAM_COLS)?;
+        let g = xla::Literal::vec1(geom.as_slice());
+        let result = exe.execute::<xla::Literal>(&[s, p, g]).map_err(Error::runtime)?[0][0]
+            .to_literal_sync()
+            .map_err(Error::runtime)?;
+        let (st, ob) = result.to_tuple2().map_err(Error::runtime)?;
+        out.state = st.to_vec::<f32>().map_err(Error::runtime)?;
+        out.obs = ob.to_vec::<f32>().map_err(Error::runtime)?;
+        debug_assert_eq!(out.obs.len(), k * OBS_COLS);
+        Ok(())
+    }
+
+    /// Batched fused rollout: one PJRT dispatch advances `batch`
+    /// co-located instances by `k` steps each via the vmapped
+    /// `rolloutb{k}` artifact — the micro-batcher's coalesced chunk
+    /// dispatch.  Inputs are concatenations over the full batch width
+    /// (pad unused lanes with zeros = inactive worlds); `outs` lanes are
+    /// refilled in place like [`Engine::step_batched_into`].
+    pub fn rollout_batched_into(
+        &self,
+        bucket: usize,
+        k: usize,
+        states: &[f32],
+        params: &[f32],
+        geoms: &[f32],
+        outs: &mut Vec<RolloutOutputs>,
+    ) -> Result<()> {
+        let b = self.manifest.batch;
+        if b < 2 {
+            return Err(Error::Artifact(
+                "manifest has no batched rollout artifact; re-run `make artifacts`".into(),
+            ));
+        }
+        if states.len() != b * bucket * STATE_COLS
+            || params.len() != b * bucket * PARAM_COLS
+            || geoms.len() != b * GEOM_COLS
+        {
+            return Err(Error::Runtime(format!(
+                "batched shape mismatch: states {} params {} geoms {} for batch {b} x bucket {bucket}",
+                states.len(),
+                params.len(),
+                geoms.len()
+            )));
+        }
+        let exe = self.rollout_executable("rolloutb", bucket, k)?;
+        let s = xla::Literal::vec1(states)
+            .reshape(&[b as i64, bucket as i64, STATE_COLS as i64])
+            .map_err(Error::runtime)?;
+        let p = xla::Literal::vec1(params)
+            .reshape(&[b as i64, bucket as i64, PARAM_COLS as i64])
+            .map_err(Error::runtime)?;
+        let g = xla::Literal::vec1(geoms)
+            .reshape(&[b as i64, GEOM_COLS as i64])
+            .map_err(Error::runtime)?;
+        let result = exe.execute::<xla::Literal>(&[s, p, g]).map_err(Error::runtime)?[0][0]
+            .to_literal_sync()
+            .map_err(Error::runtime)?;
+        let (st, ob) = result.to_tuple2().map_err(Error::runtime)?;
+        let st = st.to_vec::<f32>().map_err(Error::runtime)?;
+        let ob = ob.to_vec::<f32>().map_err(Error::runtime)?;
+        debug_assert_eq!(ob.len(), b * k * OBS_COLS);
+        outs.resize_with(b, RolloutOutputs::default);
+        for (i, o) in outs.iter_mut().enumerate() {
+            fill(&mut o.state, &st[i * bucket * STATE_COLS..(i + 1) * bucket * STATE_COLS]);
+            fill(&mut o.obs, &ob[i * k * OBS_COLS..(i + 1) * k * OBS_COLS]);
         }
         Ok(())
     }
@@ -412,5 +581,116 @@ mod tests {
         let Some(e) = engine() else { return };
         let bucket = e.manifest().buckets[0];
         assert!(e.step(bucket, &[0.0; 4], &[0.0; 6], &default_geom()).is_err());
+        assert!(e.rollout(bucket, 1, &[0.0; 4], &[0.0; 6], &default_geom()).is_err());
+    }
+
+    /// The tentpole ABI guarantee at the engine level: one fused K-step
+    /// dispatch == K sequential step dispatches, bit for bit — state and
+    /// the whole per-step obs trace, exits included (an exit-flagged
+    /// vehicle retires mid-chunk inside the scan carry).
+    #[test]
+    fn rollout_bit_exact_with_sequential_steps() {
+        let Some(e) = engine() else { return };
+        if !e.manifest().rollouts_available() {
+            eprintln!("skipping: artifacts predate schema 4");
+            return;
+        }
+        let bucket = e.manifest().buckets[0];
+        let g = default_geom();
+        let mut t = Traffic::new(bucket);
+        t.spawn(100.0, 20.0, 1.0, DriverParams::default());
+        t.spawn(160.0, 25.0, 2.0, DriverParams::cav());
+        // gore ~3 steps ahead: this one retires mid-chunk
+        t.spawn(440.0, 30.0, 1.0, DriverParams::default().with_exit(450.0));
+        for &k in &e.manifest().rollout_steps.clone() {
+            let mut seq_state = t.state.clone();
+            let mut seq_obs = Vec::new();
+            let mut step_out = StepOutputs::default();
+            for _ in 0..k {
+                e.step_into(bucket, &seq_state, &t.params, &g, &mut step_out).unwrap();
+                seq_state.copy_from_slice(&step_out.state);
+                seq_obs.extend_from_slice(&step_out.obs);
+            }
+            let out = e.rollout(bucket, k, &t.state, &t.params, &g).unwrap();
+            assert_eq!(out.steps(), k);
+            assert_eq!(out.state, seq_state, "K={k}: final state diverged");
+            assert_eq!(out.obs, seq_obs, "K={k}: obs trace diverged");
+        }
+        // the chunk really contained the exit
+        let out = e.rollout(bucket, 8, &t.state, &t.params, &g).unwrap();
+        let exits: f32 = (0..8).map(|i| out.obs_row(i)[4]).sum();
+        assert_eq!(exits, 1.0, "exit must retire inside the fused chunk");
+    }
+
+    #[test]
+    fn rollout_into_reuses_buffers_and_rejects_unknown_k() {
+        let Some(e) = engine() else { return };
+        if !e.manifest().rollouts_available() {
+            return;
+        }
+        let bucket = e.manifest().buckets[0];
+        let g = default_geom();
+        let mut t = Traffic::new(bucket);
+        t.spawn(100.0, 20.0, 1.0, DriverParams::default());
+        let mut out = RolloutOutputs::default();
+        e.rollout_into(bucket, 8, &t.state, &t.params, &g, &mut out).unwrap();
+        let first = out.clone();
+        e.rollout_into(bucket, 8, &t.state, &t.params, &g, &mut out).unwrap();
+        assert_eq!(out, first);
+        // a K that was never lowered is a loud artifact error
+        assert!(e.rollout(bucket, 7, &t.state, &t.params, &g).is_err());
+    }
+
+    #[test]
+    fn rollout_batched_lanes_match_solo_rollouts() {
+        let Some(e) = engine() else { return };
+        if !e.manifest().rollouts_available() {
+            return;
+        }
+        let b = e.manifest().batch;
+        if b < 2 {
+            eprintln!("no batched rollout artifact; skipping");
+            return;
+        }
+        let bucket = e.manifest().buckets[0];
+        let g = default_geom();
+        let k = *e.manifest().rollout_steps.last().unwrap();
+        let worlds: Vec<Traffic> = (0..b)
+            .map(|i| {
+                let mut t = Traffic::new(bucket);
+                t.spawn(30.0 + 40.0 * i as f32, 8.0 + 2.0 * i as f32, 1.0, DriverParams::default());
+                t
+            })
+            .collect();
+        let mut states = Vec::new();
+        let mut params = Vec::new();
+        let mut geoms = Vec::new();
+        for w in &worlds {
+            states.extend_from_slice(&w.state);
+            params.extend_from_slice(&w.params);
+            geoms.extend_from_slice(g.as_slice());
+        }
+        let mut outs = Vec::new();
+        e.rollout_batched_into(bucket, k, &states, &params, &geoms, &mut outs).unwrap();
+        assert_eq!(outs.len(), b);
+        // the vmapped lowering may fuse differently from the solo one,
+        // so batched-vs-solo is tolerance-checked (bit-exactness is
+        // claimed fused-vs-sequential, not batched-vs-solo — same
+        // discipline as python/tests/test_aot.py)
+        let close = |a: &[f32], b: &[f32]| {
+            a.len() == b.len()
+                && a.iter().zip(b).all(|(x, y)| (x - y).abs() <= 1e-4)
+        };
+        for (i, (w, lane)) in worlds.iter().zip(&outs).enumerate() {
+            let solo = e.rollout(bucket, k, &w.state, &w.params, &g).unwrap();
+            assert!(close(&lane.state, &solo.state), "lane {i} state diverged");
+            assert!(close(&lane.obs, &solo.obs), "lane {i} obs diverged");
+        }
+        // lane buffers are reused across dispatches
+        let ptrs: Vec<*const f32> = outs.iter().map(|o| o.state.as_ptr()).collect();
+        e.rollout_batched_into(bucket, k, &states, &params, &geoms, &mut outs).unwrap();
+        for (o, p) in outs.iter().zip(ptrs) {
+            assert_eq!(o.state.as_ptr(), p, "lane buffer reallocated");
+        }
     }
 }

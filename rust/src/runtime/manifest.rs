@@ -27,6 +27,18 @@ pub const PARAM_COLUMNS: [&str; crate::sumo::state::PARAM_COLS] = [
 pub const OBS_COLUMNS: [&str; crate::sumo::state::OBS_COLS] =
     ["n_active", "mean_speed", "flow", "n_merged", "n_exited"];
 
+/// The fused-rollout K ladder the compile path lowers per bucket
+/// (`aot.py ROLLOUT_STEPS`) — the expected default for schema-4
+/// artifacts, pinned across model.py/aot.py/artifacts by
+/// `scripts/check_manifest.py`.  The runtime itself is data-driven
+/// ([`Manifest::rollout_steps`] is what gets executed); this constant
+/// only documents and gates the shipped ladder.
+pub const ROLLOUT_LADDER: [usize; 3] = [1, 8, 32];
+
+/// Entry-name stems of the schema-4 rollout artifacts: `rollout{K}_{N}`
+/// (solo) and `rolloutb{K}_{N}` (micro-batched).
+pub const ROLLOUT_ENTRY_POINTS: [&str; 2] = ["rollout", "rolloutb"];
+
 /// One lowered artifact.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactEntry {
@@ -37,6 +49,9 @@ pub struct ArtifactEntry {
     pub outputs: usize,
     /// Number of input operands (0 = not recorded, schema-1 manifests).
     pub operands: usize,
+    /// Fused steps per dispatch (rollout entries, schema 4); 0 for
+    /// single-step artifacts.
+    pub k: usize,
 }
 
 /// The whole manifest (see `python/compile/aot.py`).
@@ -46,8 +61,11 @@ pub struct Manifest {
     /// Artifact schema version: 1 = constant-geometry artifacts (legacy),
     /// 2 = geometry-generic (step/stepb take the f32[GEOM_COLS] operand),
     /// 3 = destination-aware (params carry the `[exit_pos, exit_flag]`
-    /// columns, obs gains `n_exited`).  The runtime executes schema 3
-    /// only.
+    /// columns, obs gains `n_exited`), 4 = fused rollouts (adds the
+    /// `rollout{K}_{N}`/`rolloutb{K}_{N}` entry points over a K ladder).
+    /// The runtime executes single-step entries on schema >= 3; the
+    /// rollout fast path is gated on schema >= 4
+    /// ([`Manifest::rollouts_available`]).
     pub schema: u32,
     pub state_columns: Vec<String>,
     pub param_columns: Vec<String>,
@@ -62,6 +80,12 @@ pub struct Manifest {
     pub buckets: Vec<usize>,
     /// Batch width of the vmapped `stepb_*` artifacts (1 = not lowered).
     pub batch: usize,
+    /// The fused-rollout K ladder (schema 4; empty = no rollouts
+    /// lowered).  Sorted ascending, mirrored from `aot.py ROLLOUT_STEPS`.
+    pub rollout_steps: Vec<usize>,
+    /// Entry-name stems of the rollout artifacts (schema 4; normally
+    /// [`ROLLOUT_ENTRY_POINTS`]).
+    pub rollout_entry_points: Vec<String>,
     pub entries: BTreeMap<String, ArtifactEntry>,
 }
 
@@ -95,6 +119,7 @@ impl Manifest {
                     n: e.get("n")?.as_usize()?,
                     outputs: e.get("outputs")?.as_usize()?,
                     operands: e.get("operands").and_then(|v| v.as_usize()).unwrap_or(0),
+                    k: e.get("k").and_then(|v| v.as_usize()).unwrap_or(0),
                 },
             );
         }
@@ -114,6 +139,18 @@ impl Manifest {
             merge_end: j.get("merge_end")?.as_f64()? as f32,
             num_main_lanes: j.get("num_main_lanes")?.as_usize()? as u32,
             batch: j.get("batch").and_then(|v| v.as_usize()).unwrap_or(1),
+            rollout_steps: match j.get("rollout_steps") {
+                Ok(v) => v
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_usize())
+                    .collect::<Result<_>>()?,
+                Err(_) => Vec::new(),
+            },
+            rollout_entry_points: match j.get("rollout_entry_points") {
+                Ok(v) => str_vec(v)?,
+                Err(_) => Vec::new(),
+            },
             buckets: j
                 .get("buckets")?
                 .as_arr()?
@@ -145,6 +182,15 @@ impl Manifest {
             .ok_or_else(|| Error::Artifact(format!("no artifact entry '{key}'")))
     }
 
+    /// The fused-rollout entry `{stem}{k}_{bucket}` (schema 4), e.g.
+    /// `rollout32_256` or `rolloutb8_64`.
+    pub fn rollout_entry(&self, stem: &str, k: usize, bucket: usize) -> Result<&ArtifactEntry> {
+        let key = format!("{stem}{k}_{bucket}");
+        self.entries
+            .get(&key)
+            .ok_or_else(|| Error::Artifact(format!("no artifact entry '{key}'")))
+    }
+
     /// The scenario constants the artifact was lowered with — must agree
     /// with the rust-side [`MergeScenario`].
     pub fn scenario(&self) -> MergeScenario {
@@ -166,6 +212,14 @@ impl Manifest {
     /// (`[exit_pos, exit_flag]` columns, `n_exited` observable)?
     pub fn destination_aware(&self) -> bool {
         self.schema >= 3
+    }
+
+    /// Do the artifacts ship fused K-step rollout entry points?  Schema
+    /// <= 3 artifacts still load and serve single steps; the chunked
+    /// fast path simply stays off ([`crate::runtime::HloStepper`] falls
+    /// back to a `[1]` ladder).
+    pub fn rollouts_available(&self) -> bool {
+        self.schema >= 4 && !self.rollout_steps.is_empty()
     }
 
     /// Assert the compile-path constants match the rust defaults; a
@@ -235,6 +289,60 @@ impl Manifest {
         Ok(())
     }
 
+    /// Operand/shape contract of the schema-4 rollout entry points: the
+    /// K ladder must be sorted, start at 1 (the chunk scheduler's
+    /// degenerate rung), and every (stem, K, bucket) triple must be
+    /// lowered with the three-operand, two-output signature and a
+    /// matching per-entry `k`.  A no-op for schema <= 3 manifests (no
+    /// rollouts to validate — single-step execution stays available).
+    pub fn validate_rollout_layout(&self) -> Result<()> {
+        if !self.rollouts_available() {
+            return Ok(());
+        }
+        let mut sorted = self.rollout_steps.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted != self.rollout_steps || self.rollout_steps.first() != Some(&1) {
+            return Err(Error::Artifact(format!(
+                "rollout K ladder {:?} must be strictly ascending and start \
+                 at 1; re-run `make artifacts`",
+                self.rollout_steps
+            )));
+        }
+        if !self.rollout_entry_points.iter().any(|s| s == "rollout") {
+            return Err(Error::Artifact(format!(
+                "schema-4 manifest lists no 'rollout' entry point \
+                 (rollout_entry_points = {:?}); re-run `make artifacts`",
+                self.rollout_entry_points
+            )));
+        }
+        for stem in &self.rollout_entry_points {
+            if !ROLLOUT_ENTRY_POINTS.contains(&stem.as_str()) {
+                return Err(Error::Artifact(format!(
+                    "unknown rollout entry point '{stem}' (expected {ROLLOUT_ENTRY_POINTS:?})"
+                )));
+            }
+            // the batched stem is only a contract when batching is on
+            if *stem == "rolloutb" && self.batch < 2 {
+                continue;
+            }
+            for &k in &self.rollout_steps {
+                for &b in &self.buckets {
+                    let e = self.rollout_entry(stem, k, b)?;
+                    if e.operands != 3 || e.outputs != 2 || e.k != k || e.n != b {
+                        return Err(Error::Artifact(format!(
+                            "rollout entry '{stem}{k}_{b}' records operands={} \
+                             outputs={} k={} n={}, expected 3/2/{k}/{b}; \
+                             re-run `make artifacts`",
+                            e.operands, e.outputs, e.k, e.n
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Per-column validation of the schema-3 params/obs layouts: the
     /// manifest must record exactly [`PARAM_COLUMNS`] and
     /// [`OBS_COLUMNS`] — a drifted or reordered column silently
@@ -276,9 +384,28 @@ mod tests {
         m.validate_against_default_scenario().unwrap();
         m.validate_geometry_layout().unwrap();
         m.validate_param_layout().unwrap();
+        m.validate_rollout_layout().unwrap();
         assert!(m.geometry_generic());
         assert!(m.destination_aware());
+        assert!(m.rollouts_available());
+        assert_eq!(m.rollout_steps, ROLLOUT_LADDER);
         assert!(!m.buckets.is_empty());
+    }
+
+    #[test]
+    fn rollout_entries_exist_for_every_ladder_rung() {
+        let Some(m) = manifest() else { return };
+        for &b in &m.buckets {
+            for &k in &m.rollout_steps {
+                let e = m.rollout_entry("rollout", k, b).unwrap();
+                assert_eq!((e.n, e.k, e.outputs, e.operands), (b, k, 2, 3));
+                if m.batch >= 2 {
+                    let eb = m.rollout_entry("rolloutb", k, b).unwrap();
+                    assert_eq!((eb.n, eb.k), (b, k));
+                }
+            }
+        }
+        assert!(m.rollout_entry("rollout", 7, m.buckets[0]).is_err());
     }
 
     #[test]
@@ -325,6 +452,27 @@ mod tests {
         .to_string()
     }
 
+    /// A minimal valid schema-4 manifest: schema 3 plus a [1, 8] rollout
+    /// ladder (solo entries only; batch 1 keeps `rolloutb` optional).
+    fn synthetic_schema4() -> String {
+        synthetic_schema3()
+            .replace(r#""schema": 3"#, r#""schema": 4"#)
+            .replace(
+                r#""buckets": [16],"#,
+                r#""buckets": [16],
+          "rollout_steps": [1, 8],
+          "rollout_entry_points": ["rollout"],"#,
+            )
+            .replace(
+                r#""entries": {"step_16": {"file": "step_16.hlo.txt", "n": 16, "outputs": 4, "operands": 3}}"#,
+                r#""entries": {
+            "step_16": {"file": "step_16.hlo.txt", "n": 16, "outputs": 4, "operands": 3},
+            "rollout1_16": {"file": "rollout1_16.hlo.txt", "n": 16, "k": 1, "outputs": 2, "operands": 3},
+            "rollout8_16": {"file": "rollout8_16.hlo.txt", "n": 16, "k": 8, "outputs": 2, "operands": 3}
+          }"#,
+            )
+    }
+
     #[test]
     fn parse_synthetic_manifest() {
         let m = Manifest::parse(&synthetic_schema3()).unwrap();
@@ -334,6 +482,62 @@ mod tests {
         assert!(m.destination_aware());
         assert_eq!(m.entry("step", 16).unwrap().outputs, 4);
         assert_eq!(m.entry("step", 16).unwrap().operands, 3);
+    }
+
+    #[test]
+    fn schema3_loads_without_rollouts() {
+        // schema-3 artifacts still serve single steps; the rollout fast
+        // path is simply unavailable
+        let m = Manifest::parse(&synthetic_schema3()).unwrap();
+        assert!(!m.rollouts_available());
+        m.validate_rollout_layout().unwrap();
+        assert!(m.rollout_entry("rollout", 8, 16).is_err());
+    }
+
+    #[test]
+    fn parse_synthetic_schema4_manifest() {
+        let m = Manifest::parse(&synthetic_schema4()).unwrap();
+        m.validate_against_default_scenario().unwrap();
+        m.validate_geometry_layout().unwrap();
+        m.validate_param_layout().unwrap();
+        m.validate_rollout_layout().unwrap();
+        assert!(m.rollouts_available());
+        assert_eq!(m.rollout_steps, [1, 8]);
+        let e = m.rollout_entry("rollout", 8, 16).unwrap();
+        assert_eq!((e.k, e.outputs, e.operands), (8, 2, 3));
+    }
+
+    #[test]
+    fn malformed_rollout_layouts_rejected() {
+        // a ladder that does not start at 1 starves the chunk scheduler
+        // of its degenerate rung
+        let text = synthetic_schema4().replace(
+            r#""rollout_steps": [1, 8]"#,
+            r#""rollout_steps": [8, 1]"#,
+        );
+        let m = Manifest::parse(&text).unwrap();
+        assert!(m.validate_rollout_layout().is_err());
+        // a missing ladder rung entry
+        let text = synthetic_schema4().replace(
+            r#""rollout_steps": [1, 8]"#,
+            r#""rollout_steps": [1, 8, 32]"#,
+        );
+        let m = Manifest::parse(&text).unwrap();
+        assert!(m.validate_rollout_layout().is_err());
+        // a rollout entry with the wrong fused-step count
+        let text = synthetic_schema4().replace(
+            r#""rollout8_16": {"file": "rollout8_16.hlo.txt", "n": 16, "k": 8, "outputs": 2, "operands": 3}"#,
+            r#""rollout8_16": {"file": "rollout8_16.hlo.txt", "n": 16, "k": 4, "outputs": 2, "operands": 3}"#,
+        );
+        let m = Manifest::parse(&text).unwrap();
+        assert!(m.validate_rollout_layout().is_err());
+        // a schema-4 manifest that forgot its entry points entirely
+        let text = synthetic_schema4().replace(
+            r#""rollout_entry_points": ["rollout"]"#,
+            r#""rollout_entry_points": []"#,
+        );
+        let m = Manifest::parse(&text).unwrap();
+        assert!(m.validate_rollout_layout().is_err());
     }
 
     #[test]

@@ -16,7 +16,7 @@ mod manifest;
 mod pool;
 mod service;
 
-pub use engine::{Engine, StepOutputs};
+pub use engine::{Engine, RolloutOutputs, StepOutputs};
 pub use manifest::{ArtifactEntry, Manifest};
 pub use pool::{ExecutablePool, PoolKey};
 pub use service::{EngineService, EngineSession, HloStepper};

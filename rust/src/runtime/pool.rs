@@ -18,8 +18,11 @@ use std::sync::{Arc, RwLock};
 
 use crate::Result;
 
-/// Cache key: artifact kernel name + vehicle-count bucket.
-pub type PoolKey = (&'static str, usize);
+/// Cache key: artifact kernel name + vehicle-count bucket + fused-step
+/// count (0 for the single-step entries; the K-ladder rung for schema-4
+/// rollout executables).  Still fully static — no `format!` on the
+/// per-dispatch lookup path.
+pub type PoolKey = (&'static str, usize, usize);
 
 /// Key → compiled executable cache.
 pub struct ExecutablePool {

@@ -40,13 +40,19 @@ use crate::sumo::state::{GeometryVec, Traffic, GEOM_COLS, PARAM_COLS, STATE_COLS
 use crate::sumo::{MergeScenario, StepObs, Stepper};
 use crate::{Error, Result};
 
-use super::engine::{Engine, StepOutputs};
+use super::engine::{Engine, RolloutOutputs, StepOutputs};
 use super::manifest::Manifest;
 
 /// Where a step reply goes: a per-call channel (one-shot API) or a
 /// session's persistent channel (buffers travel back with the reply).
 enum StepReply {
     Oneshot(Sender<Result<StepOutputs>>),
+    Session(Sender<SessionReply>),
+}
+
+/// Where a fused-rollout reply goes (mirrors [`StepReply`]).
+enum RolloutReply {
+    Oneshot(Sender<Result<RolloutOutputs>>),
     Session(Sender<SessionReply>),
 }
 
@@ -66,17 +72,41 @@ struct StepReq {
     reply: StepReply,
 }
 
+/// One fused-rollout request (schema 4): like [`StepReq`] plus the
+/// K-ladder rung.  Same-`(bucket, k)` rollouts coalesce into one
+/// batched `rolloutb{k}` dispatch; everything else falls back to the
+/// solo (or, on artifact errors, the per-request serial) path.
+struct RolloutReq {
+    bucket: usize,
+    /// Fused steps per dispatch — must be a manifest ladder rung.
+    k: usize,
+    state: Vec<f32>,
+    params: Vec<f32>,
+    geom: GeometryVec,
+    out: RolloutOutputs,
+    reply: RolloutReply,
+}
+
+/// What a session reply carries back besides the input buffers: the
+/// single-step outputs or a fused chunk's outputs, depending on which
+/// request the session issued.
+enum SessionPayload {
+    Step(StepOutputs),
+    Rollout(RolloutOutputs),
+}
+
 /// Reply on a session's persistent channel: the round-tripped buffers
 /// (inputs back for reuse, outputs filled) plus the execution status.
 struct SessionReply {
     state: Vec<f32>,
     params: Vec<f32>,
-    out: StepOutputs,
+    payload: SessionPayload,
     result: Result<()>,
 }
 
 enum Request {
     Step(StepReq),
+    Rollout(RolloutReq),
     Idm {
         bucket: usize,
         state: Vec<f32>,
@@ -102,15 +132,18 @@ enum Request {
 }
 
 /// Engine-thread scratch for the micro-batcher, reused across
-/// dispatches: the coalesced request list, the zero-padded input
-/// staging buffers, and the per-lane output buffers.
+/// dispatches: the coalesced request lists (single-step and rollout),
+/// the zero-padded input staging buffers (shared — only one dispatch is
+/// in flight at a time), and the per-lane output buffers.
 #[derive(Default)]
 struct BatchScratch {
     batch: Vec<StepReq>,
+    rollouts: Vec<RolloutReq>,
     states: Vec<f32>,
     params: Vec<f32>,
     geoms: Vec<f32>,
     outs: Vec<StepOutputs>,
+    routs: Vec<RolloutOutputs>,
 }
 
 /// Send the finished request back to its caller, routing buffers to the
@@ -131,7 +164,31 @@ fn finish(req: StepReq, result: Result<()>) {
             let _ = tx.send(SessionReply {
                 state,
                 params,
-                out,
+                payload: SessionPayload::Step(out),
+                result,
+            });
+        }
+    }
+}
+
+/// [`finish`] for fused-rollout requests.
+fn finish_rollout(req: RolloutReq, result: Result<()>) {
+    let RolloutReq {
+        state,
+        params,
+        out,
+        reply,
+        ..
+    } = req;
+    match reply {
+        RolloutReply::Oneshot(tx) => {
+            let _ = tx.send(result.map(|()| out));
+        }
+        RolloutReply::Session(tx) => {
+            let _ = tx.send(SessionReply {
+                state,
+                params,
+                payload: SessionPayload::Rollout(out),
                 result,
             });
         }
@@ -261,6 +318,126 @@ fn serve_step(
     }
 }
 
+/// Serve one fused-rollout request, dynamically micro-batching with any
+/// other waiting rollout of the SAME `(bucket, k)` into one
+/// `rolloutb{k}` dispatch (the chunked analogue of [`serve_step`]): up
+/// to `manifest.batch` co-located instances × `k` fused steps ride a
+/// single PJRT dispatch.  Requests with a different K (or bucket) stay
+/// in the backlog and form their own batches — the chunk scheduler
+/// aligns lock-step workers on the same ladder rung, so same-K batches
+/// are the common case.  Artifact errors on the batched path fall back
+/// to per-request solo rollouts, exactly like the single-step path.
+fn serve_rollout(
+    engine: &Engine,
+    rx: &Receiver<Request>,
+    backlog: &mut VecDeque<Request>,
+    scratch: &mut BatchScratch,
+    first: RolloutReq,
+) {
+    let (bucket, k) = (first.bucket, first.k);
+    let bmax = engine.manifest().batch;
+    let scols = STATE_COLS;
+    let pcols = PARAM_COLS;
+    let well_formed =
+        first.state.len() == bucket * scols && first.params.len() == bucket * pcols;
+    scratch.rollouts.clear();
+    scratch.rollouts.push(first);
+
+    if bmax >= 2 && well_formed {
+        let mut waited = false;
+        while scratch.rollouts.len() < bmax {
+            match rx.try_recv() {
+                Ok(Request::Rollout(r))
+                    if r.bucket == bucket
+                        && r.k == k
+                        && r.state.len() == bucket * scols
+                        && r.params.len() == bucket * pcols =>
+                {
+                    scratch.rollouts.push(r)
+                }
+                Ok(other) => {
+                    backlog.push_back(other);
+                    if backlog.len() > 64 {
+                        break;
+                    }
+                }
+                Err(_) => {
+                    // same short straggler window as the single-step
+                    // batcher: once a batch has formed, lock-step peers
+                    // are likely mid-send of the same ladder rung
+                    if waited || scratch.rollouts.len() < 2 {
+                        break;
+                    }
+                    waited = true;
+                    match rx.recv_timeout(Duration::from_micros(60)) {
+                        Ok(Request::Rollout(r))
+                            if r.bucket == bucket
+                                && r.k == k
+                                && r.state.len() == bucket * scols
+                                && r.params.len() == bucket * pcols =>
+                        {
+                            scratch.rollouts.push(r)
+                        }
+                        Ok(other) => backlog.push_back(other),
+                        Err(_) => break,
+                    }
+                }
+            }
+        }
+    }
+
+    if scratch.rollouts.len() < 2 {
+        let mut req = scratch.rollouts.pop().expect("one request");
+        let result =
+            engine.rollout_into(bucket, k, &req.state, &req.params, &req.geom, &mut req.out);
+        finish_rollout(req, result);
+        return;
+    }
+
+    // pad to the artifact's batch width with zeroed (inactive) worlds —
+    // same shared staging scratch as the single-step batcher
+    let n_live = scratch.rollouts.len();
+    scratch.states.clear();
+    scratch.states.resize(bmax * bucket * scols, 0.0);
+    scratch.params.clear();
+    scratch.params.resize(bmax * bucket * pcols, 0.0);
+    scratch.geoms.clear();
+    scratch.geoms.resize(bmax * GEOM_COLS, 0.0);
+    for (i, r) in scratch.rollouts.iter().enumerate() {
+        scratch.states[i * bucket * scols..(i + 1) * bucket * scols].copy_from_slice(&r.state);
+        scratch.params[i * bucket * pcols..(i + 1) * bucket * pcols].copy_from_slice(&r.params);
+        scratch.geoms[i * GEOM_COLS..(i + 1) * GEOM_COLS].copy_from_slice(r.geom.as_slice());
+    }
+    match engine.rollout_batched_into(
+        bucket,
+        k,
+        &scratch.states,
+        &scratch.params,
+        &scratch.geoms,
+        &mut scratch.routs,
+    ) {
+        Ok(()) => {
+            debug_assert_eq!(scratch.routs.len(), bmax);
+            debug_assert!(scratch.routs.len() >= n_live);
+            for (i, mut req) in scratch.rollouts.drain(..).enumerate() {
+                std::mem::swap(&mut req.out, &mut scratch.routs[i]);
+                finish_rollout(req, Ok(()));
+            }
+        }
+        Err(e) => {
+            // batched rollout unavailable (e.g. solo-only artifacts):
+            // serve each caller with its own solo rollout
+            let msg = e.to_string();
+            for mut req in scratch.rollouts.drain(..) {
+                let result = engine
+                    .rollout_into(bucket, k, &req.state, &req.params, &req.geom, &mut req.out)
+                    .map_err(|e2| Error::Runtime(format!("{msg}; serial fallback: {e2}")));
+                finish_rollout(req, result);
+            }
+        }
+    }
+}
+
 /// A cloneable, `Send` handle to the engine thread.
 #[derive(Debug, Clone)]
 pub struct EngineService {
@@ -299,6 +476,9 @@ impl EngineService {
                 match req {
                     Request::Step(r) => {
                         serve_step(&engine, &rx, &mut backlog, &mut scratch, r);
+                    }
+                    Request::Rollout(r) => {
+                        serve_rollout(&engine, &rx, &mut backlog, &mut scratch, r);
                     }
                     Request::Idm {
                         bucket,
@@ -383,6 +563,7 @@ impl EngineService {
             state_buf: Vec::with_capacity(bucket * STATE_COLS),
             params_buf: Vec::with_capacity(bucket * PARAM_COLS),
             out: StepOutputs::default(),
+            rollout_out: RolloutOutputs::default(),
         })
     }
 
@@ -411,6 +592,34 @@ impl EngineService {
                 geom,
                 out: StepOutputs::default(),
                 reply: StepReply::Oneshot(reply),
+            }))
+            .map_err(|_| Error::Runtime("engine thread gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("engine thread dropped reply".into()))?
+    }
+
+    /// One-shot fused K-step rollout under an explicit scenario
+    /// geometry (tests/benches; the production path is
+    /// [`EngineSession::step_many`]).  `k` must be a rung of the
+    /// manifest's rollout ladder ([`Manifest::rollout_steps`]).
+    pub fn rollout_geom(
+        &self,
+        bucket: usize,
+        k: usize,
+        state: &[f32],
+        params: &[f32],
+        geom: GeometryVec,
+    ) -> Result<RolloutOutputs> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Rollout(RolloutReq {
+                bucket,
+                k,
+                state: state.to_vec(),
+                params: params.to_vec(),
+                geom,
+                out: RolloutOutputs::default(),
+                reply: RolloutReply::Oneshot(reply),
             }))
             .map_err(|_| Error::Runtime("engine thread gone".into()))?;
         rx.recv()
@@ -523,6 +732,9 @@ pub struct EngineSession {
     state_buf: Vec<f32>,
     params_buf: Vec<f32>,
     out: StepOutputs,
+    /// Pooled fused-chunk outputs (round-trips through
+    /// [`EngineSession::step_many`] like `out` does through `step`).
+    rollout_out: RolloutOutputs,
 }
 
 impl EngineSession {
@@ -562,9 +774,60 @@ impl EngineSession {
             .map_err(|_| Error::Runtime("engine thread dropped reply".into()))?;
         self.state_buf = reply.state;
         self.params_buf = reply.params;
-        self.out = reply.out;
+        match reply.payload {
+            SessionPayload::Step(out) => self.out = out,
+            // unreachable: one request in flight per session, and Step
+            // requests reply with Step payloads
+            SessionPayload::Rollout(r) => self.rollout_out = r,
+        }
         reply.result?;
         Ok(&self.out)
+    }
+
+    /// Execute one fused K-step chunk (schema 4): the engine advances
+    /// the world by `k` physics steps in ONE dispatch and returns the
+    /// final state plus the per-step obs trace — bit-identical to `k`
+    /// [`EngineSession::step`] calls, minus `k - 1` host round-trips.
+    /// Buffer discipline is identical to `step` (zero steady-state
+    /// allocations on the caller side); the returned reference is valid
+    /// until the next `step`/`step_many` call.  `k` must be a rung of
+    /// the manifest's rollout ladder.
+    pub fn step_many(
+        &mut self,
+        state: &[f32],
+        params: &[f32],
+        k: usize,
+    ) -> Result<&RolloutOutputs> {
+        let mut sbuf = std::mem::take(&mut self.state_buf);
+        let mut pbuf = std::mem::take(&mut self.params_buf);
+        let out = std::mem::take(&mut self.rollout_out);
+        sbuf.clear();
+        sbuf.extend_from_slice(state);
+        pbuf.clear();
+        pbuf.extend_from_slice(params);
+        self.tx
+            .send(Request::Rollout(RolloutReq {
+                bucket: self.bucket,
+                k,
+                state: sbuf,
+                params: pbuf,
+                geom: self.geom,
+                out,
+                reply: RolloutReply::Session(self.reply_tx.clone()),
+            }))
+            .map_err(|_| Error::Runtime("engine thread gone".into()))?;
+        let reply = self
+            .reply_rx
+            .recv()
+            .map_err(|_| Error::Runtime("engine thread dropped reply".into()))?;
+        self.state_buf = reply.state;
+        self.params_buf = reply.params;
+        match reply.payload {
+            SessionPayload::Rollout(r) => self.rollout_out = r,
+            SessionPayload::Step(out) => self.out = out,
+        }
+        reply.result?;
+        Ok(&self.rollout_out)
     }
 
     /// The outputs of the most recent successful [`EngineSession::step`].
@@ -577,8 +840,18 @@ impl EngineSession {
 /// [`EngineSession`]: the production physics engine for ANY scenario
 /// geometry (the executable takes the geometry as a runtime operand).
 /// Traffic capacity must equal a lowered bucket.
+///
+/// With schema-4 artifacts the stepper also advertises the manifest's
+/// fused-rollout K ladder through [`Stepper::chunk_ladder`], and
+/// [`Stepper::step_many`] executes a whole chunk in ONE dispatch — the
+/// `SumoSim` chunk scheduler is what decides how far ahead it may fuse.
 pub struct HloStepper {
     session: EngineSession,
+    /// Fusible chunk sizes, descending, always ending in 1 — the
+    /// manifest's rollout ladder (`[1]` for schema-3 artifacts).  The
+    /// chunk CAP is not stored here: `SumoSim::chunk_limit` is the
+    /// single enforcement point for `chunk_steps`/live-GUI limits.
+    ladder: Vec<usize>,
     pub last_obs: StepObs,
 }
 
@@ -604,8 +877,18 @@ impl HloStepper {
                 service.manifest().buckets
             )));
         }
+        let mut ladder: Vec<usize> = if service.manifest().rollouts_available() {
+            service.manifest().rollout_steps.clone()
+        } else {
+            vec![1]
+        };
+        ladder.sort_unstable_by(|a, b| b.cmp(a));
+        if ladder.last() != Some(&1) {
+            ladder.push(1);
+        }
         Ok(HloStepper {
             session: service.session_for(bucket, scenario.geometry_vec())?,
+            ladder,
             last_obs: StepObs::default(),
         })
     }
@@ -629,6 +912,37 @@ impl Stepper for HloStepper {
         };
         self.last_obs = obs;
         obs
+    }
+
+    fn chunk_ladder(&self) -> &[usize] {
+        &self.ladder
+    }
+
+    fn step_many(&mut self, traffic: &mut Traffic, k: usize, out: &mut Vec<StepObs>) {
+        if k <= 1 {
+            out.push(self.step(traffic));
+            return;
+        }
+        // one dispatch for the whole chunk: K steps of physics, one
+        // host round-trip (bit-identical to K step() calls — asserted
+        // by rust/tests/runtime_numerics.rs against live artifacts)
+        let rollout = self
+            .session
+            .step_many(&traffic.state, &traffic.params, k)
+            .expect("AOT rollout execution failed");
+        traffic.state.copy_from_slice(&rollout.state);
+        debug_assert_eq!(rollout.steps(), k);
+        for i in 0..k {
+            let row = rollout.obs_row(i);
+            out.push(StepObs {
+                n_active: row[0],
+                mean_speed: row[1],
+                flow: row[2],
+                n_merged: row[3],
+                n_exited: row[4],
+            });
+        }
+        self.last_obs = *out.last().expect("k >= 1 rows");
     }
 
     fn name(&self) -> &'static str {
@@ -902,6 +1216,122 @@ mod tests {
                         for _ in 0..5 {
                             let out = sess.step(&w.state, &w.params).unwrap();
                             assert_eq!(out, e, "serial fallback contaminated a world");
+                        }
+                    });
+                }
+            });
+        }
+        s.shutdown();
+    }
+
+    #[test]
+    fn session_step_many_matches_sequential_steps() {
+        // the chunked hot path through the full service stack: one
+        // fused dispatch == K session steps, bit for bit
+        let Some(s) = service() else { return };
+        if !s.manifest().rollouts_available() {
+            eprintln!("skipping: artifacts predate schema 4");
+            return;
+        }
+        let bucket = s.manifest().buckets[0];
+        let mut t = Traffic::new(bucket);
+        t.spawn(100.0, 20.0, 1.0, DriverParams::default());
+        t.spawn(430.0, 28.0, 1.0, DriverParams::default().with_exit(450.0));
+        for &k in &s.manifest().rollout_steps.clone() {
+            let mut seq_sess = s.session(bucket).unwrap();
+            let mut state = t.state.clone();
+            let mut seq_obs = Vec::new();
+            for _ in 0..k {
+                let out = seq_sess.step(&state, &t.params).unwrap();
+                state.copy_from_slice(&out.state);
+                seq_obs.extend_from_slice(&out.obs);
+            }
+            let mut sess = s.session(bucket).unwrap();
+            let out = sess.step_many(&t.state, &t.params, k).unwrap();
+            assert_eq!(out.state, state, "K={k}");
+            assert_eq!(out.obs, seq_obs, "K={k}");
+        }
+        s.shutdown();
+    }
+
+    #[test]
+    fn session_interleaves_steps_and_chunks() {
+        // a session may alternate between single steps and fused chunks
+        // on the same pooled buffers without cross-talk
+        let Some(s) = service() else { return };
+        if !s.manifest().rollouts_available() {
+            return;
+        }
+        let bucket = s.manifest().buckets[0];
+        let k = *s.manifest().rollout_steps.last().unwrap();
+        let mut t = Traffic::new(bucket);
+        t.spawn(50.0, 15.0, 1.0, DriverParams::default());
+        let step_ref = s.step(bucket, &t.state, &t.params).unwrap();
+        let roll_ref = s
+            .rollout_geom(bucket, k, &t.state, &t.params, GeometryVec::default())
+            .unwrap();
+        let mut sess = s.session(bucket).unwrap();
+        for _ in 0..3 {
+            assert_eq!(*sess.step(&t.state, &t.params).unwrap(), step_ref);
+            assert_eq!(*sess.step_many(&t.state, &t.params, k).unwrap(), roll_ref);
+        }
+        // an unlowered K errors but leaves the session usable
+        assert!(sess.step_many(&t.state, &t.params, 7).is_err());
+        assert_eq!(*sess.step(&t.state, &t.params).unwrap(), step_ref);
+        s.shutdown();
+    }
+
+    /// Mixed-K contention: sessions issuing different ladder rungs (and
+    /// plain steps) concurrently.  Same-K requests may coalesce into
+    /// batched rollout dispatches; different-K requests must form their
+    /// own batches via the backlog — and every caller must still get
+    /// its own world's exact result.
+    #[test]
+    fn mixed_k_rollouts_coalesce_without_contamination() {
+        let Some(s) = service() else { return };
+        if !s.manifest().rollouts_available() {
+            return;
+        }
+        let bucket = s.manifest().buckets[0];
+        let ladder = s.manifest().rollout_steps.clone();
+        let worlds: Vec<Traffic> = (0..8)
+            .map(|i| {
+                let mut t = Traffic::new(bucket);
+                t.spawn(20.0 + 30.0 * i as f32, 5.0 + i as f32, 1.0, DriverParams::default());
+                t
+            })
+            .collect();
+        // solo references per (world, k), computed without contention
+        let refs: Vec<(usize, crate::runtime::RolloutOutputs)> = worlds
+            .iter()
+            .enumerate()
+            .map(|(i, w)| {
+                let k = ladder[i % ladder.len()];
+                (
+                    k,
+                    s.rollout_geom(bucket, k, &w.state, &w.params, GeometryVec::default())
+                        .unwrap(),
+                )
+            })
+            .collect();
+        // coalesced chunks ride the vmapped `rolloutb` executable, whose
+        // lowering may round differently from the solo references — so
+        // "no contamination" is |d| <= 1e-3, which cross-world traffic
+        // (worlds are tens of metres apart) would violate by orders of
+        // magnitude
+        fn close(a: &[f32], b: &[f32]) -> bool {
+            a.len() == b.len() && a.iter().zip(b).all(|(x, y)| (x - y).abs() <= 1e-3)
+        }
+        for _ in 0..3 {
+            std::thread::scope(|scope| {
+                for (w, (k, expect)) in worlds.iter().zip(refs.iter()) {
+                    let svc = s.clone();
+                    scope.spawn(move || {
+                        let mut sess = svc.session(bucket).unwrap();
+                        for _ in 0..5 {
+                            let out = sess.step_many(&w.state, &w.params, *k).unwrap();
+                            assert!(close(&out.state, &expect.state), "K={k}: wrong world");
+                            assert!(close(&out.obs, &expect.obs), "K={k}: wrong obs");
                         }
                     });
                 }

@@ -20,7 +20,10 @@
 //!   step O(N log N) and allocation-free (bit-exact with the reference
 //!   scans),
 //! * [`simulation`] — the microsim loop: spawning from demand, stepping,
-//!   observables; serves TraCI queries.
+//!   observables; serves TraCI queries.  Chunk-scheduled: departure-free
+//!   runs of steps are handed to the stepper as ONE fused chunk
+//!   (`Stepper::step_many`), which the HLO stepper executes as a single
+//!   PJRT rollout dispatch.
 
 pub mod duarouter;
 pub mod flow;
@@ -37,7 +40,7 @@ pub use flow::{FlowDef, FlowFile, VehicleType};
 pub use idm::{NativeIdmStepper, ReferenceIdmStepper};
 pub use sweep::LaneIndex;
 pub use network::{Edge, MergeScenario, Network};
-pub use simulation::{StepObs, Stepper, SumoSim};
+pub use simulation::{steps_for, StepObs, Stepper, SumoSim};
 pub use state::{
     DriverParams, GeometryVec, Traffic, ACTIVE, GEOM_COLS, LANE, PARAM_COLS, STATE_COLS, V, X,
 };

@@ -21,11 +21,41 @@ pub struct StepObs {
     pub n_exited: f32,
 }
 
+/// The number of DT steps covering `horizon_s` — THE step-count
+/// derivation, shared by every site that turns a horizon into steps
+/// (`SumoSim::run`, the launcher's walltime guard, CLI/example step
+/// budgets).  Each site used to round independently (`round` here,
+/// `ceil` there, `* 10.0` hardcoded elsewhere), which could drift by a
+/// step between planner and runtime; one helper means one rounding.
+pub fn steps_for(horizon_s: f32, dt_s: f32) -> u64 {
+    (horizon_s / dt_s.max(1e-6)).round().max(0.0) as u64
+}
+
 /// A physics engine advancing the traffic state by one DT.
 /// Implementations: [`super::NativeIdmStepper`] (pure rust) and
 /// `runtime::HloStepper` (the AOT JAX/Pallas artifact via PJRT).
 pub trait Stepper: Send {
     fn step(&mut self, traffic: &mut Traffic) -> StepObs;
+
+    /// The fused-chunk sizes this stepper can execute in ONE dispatch,
+    /// descending and always ending in 1.  The default — no fusion —
+    /// suits steppers with no per-step dispatch overhead (the native
+    /// ones); `HloStepper` advertises the artifact manifest's rollout
+    /// K ladder so the [`SumoSim`] chunk scheduler can amortize one
+    /// PJRT dispatch over a whole run of departure-free steps.
+    fn chunk_ladder(&self) -> &[usize] {
+        &[1]
+    }
+
+    /// Advance `k` steps (a ladder rung), appending one [`StepObs`] per
+    /// step — required to be bit-identical to `k` [`Stepper::step`]
+    /// calls.  The default executes them sequentially; fused
+    /// implementations override with a single dispatch.
+    fn step_many(&mut self, traffic: &mut Traffic, k: usize, out: &mut Vec<StepObs>) {
+        for _ in 0..k {
+            out.push(self.step(traffic));
+        }
+    }
 
     /// Engine label for logs/benches.
     fn name(&self) -> &'static str {
@@ -43,6 +73,10 @@ pub struct SumoSim {
     /// Departures that found no free slot and wait for one (SUMO's
     /// insertion queue).
     insertion_queue: Vec<usize>,
+    /// Cap on the fused-chunk size the scheduler may hand the stepper
+    /// (`usize::MAX` = whatever the stepper's ladder allows; 1 =
+    /// step-by-step, e.g. TraCI-attached live-GUI runs).
+    chunk_limit: usize,
     time_s: f32,
     step_count: u64,
     /// Totals since start.
@@ -68,6 +102,7 @@ impl SumoSim {
             routes,
             next_departure: 0,
             insertion_queue: Vec::new(),
+            chunk_limit: usize::MAX,
             time_s: 0.0,
             step_count: 0,
             total_flow: 0.0,
@@ -104,8 +139,22 @@ impl SumoSim {
             .is_some()
     }
 
-    /// Advance one DT: insert due departures, then step physics.
-    pub fn step(&mut self) -> StepObs {
+    /// Cap fused chunks at `k` physics steps per dispatch (validated
+    /// against the stepper's ladder by the launcher; 1 = step-by-step,
+    /// what TraCI-attached live-GUI runs force so frame streaming never
+    /// starves behind a 32-step chunk).
+    pub fn set_chunk_limit(&mut self, k: usize) {
+        self.chunk_limit = k.max(1);
+    }
+
+    pub fn chunk_limit(&self) -> usize {
+        self.chunk_limit
+    }
+
+    /// The insertion phase of one step: retry queued departures, then
+    /// insert newly due ones (shared by [`Self::step`] and the chunk
+    /// scheduler — a fused chunk runs it once, for its first step).
+    fn insert_due(&mut self) {
         // retry earlier blocked insertions first, compacting the queue
         // in place (keeps order, allocates nothing on the per-step path)
         let mut kept = 0;
@@ -132,23 +181,100 @@ impl SumoSim {
                 self.insertion_queue.push(idx);
             }
         }
+    }
 
-        let obs = self.stepper.step(&mut self.traffic);
+    /// Per-step bookkeeping after the physics (totals, clock, counter).
+    fn account(&mut self, obs: StepObs) {
         self.total_flow += obs.flow;
         self.total_merged += obs.n_merged;
         self.total_exited += obs.n_exited;
         self.time_s += self.scenario.dt_s;
         self.step_count += 1;
+    }
+
+    /// Advance one DT: insert due departures, then step physics.
+    pub fn step(&mut self) -> StepObs {
+        self.insert_due();
+        let obs = self.stepper.step(&mut self.traffic);
+        self.account(obs);
         obs
     }
 
-    /// Run until `horizon_s` sim-seconds, collecting per-step observables.
-    pub fn run(&mut self, horizon_s: f32) -> Result<Vec<StepObs>> {
-        let steps = (horizon_s / self.scenario.dt_s).round() as u64;
-        let mut out = Vec::with_capacity(steps as usize);
-        for _ in 0..steps {
-            out.push(self.step());
+    /// How many steps (<= `cap`) may run as ONE fused chunk from here:
+    /// the run length until the next step whose insertion phase has
+    /// work to do.  A fused chunk replays steps `1..k` without their
+    /// insertion phases, so it is bit-identical to sequential stepping
+    /// exactly when those phases would have been no-ops — i.e. the
+    /// insertion queue is empty (queued departures retry every step)
+    /// and no scheduled departure comes due inside the chunk.  The
+    /// prospective step times replicate the f32 `time_s += dt`
+    /// accumulation, so the due-time comparison is the very one
+    /// sequential stepping would make.
+    fn fusible_steps(&self, cap: usize) -> usize {
+        if cap <= 1 || !self.insertion_queue.is_empty() {
+            return 1;
         }
+        let Some(dep) = self.routes.departures.get(self.next_departure) else {
+            return cap; // demand exhausted: free run to the cap
+        };
+        let mut t = self.time_s;
+        let mut k = 1;
+        while k < cap {
+            t += self.scenario.dt_s; // start time of step k, as accumulated
+            if dep.time_s <= t {
+                break;
+            }
+            k += 1;
+        }
+        k
+    }
+
+    /// Advance `n` steps, appending per-step observables to `out` —
+    /// the chunked replacement for `n` × [`Self::step`] (bit-identical
+    /// history; asserted by `chunked_run_equals_stepwise` below).
+    ///
+    /// Each iteration runs the pending insertion phase, computes the
+    /// departure-free run length, clamps it to the stepper's fused-chunk
+    /// ladder (largest rung first) and the sim's [`Self::chunk_limit`],
+    /// and hands the stepper the whole chunk at once.  With the HLO
+    /// stepper that is ONE PJRT dispatch per chunk instead of one per
+    /// step — the last per-step host synchronization on the hot loop.
+    pub fn step_many(&mut self, n: u64, out: &mut Vec<StepObs>) {
+        let mut remaining = n;
+        while remaining > 0 {
+            self.insert_due();
+            let cap = self
+                .chunk_limit
+                .min(usize::try_from(remaining).unwrap_or(usize::MAX));
+            let fusible = self.fusible_steps(cap);
+            let k = self
+                .stepper
+                .chunk_ladder()
+                .iter()
+                .copied()
+                .find(|&k| k <= fusible)
+                .unwrap_or(1)
+                .max(1);
+            let start = out.len();
+            if k <= 1 {
+                out.push(self.stepper.step(&mut self.traffic));
+            } else {
+                self.stepper.step_many(&mut self.traffic, k, out);
+            }
+            let produced = out.len() - start;
+            for &obs in &out[start..] {
+                self.account(obs);
+            }
+            remaining -= produced as u64;
+        }
+    }
+
+    /// Run until `horizon_s` sim-seconds, collecting per-step
+    /// observables (chunk-scheduled; see [`Self::step_many`]).
+    pub fn run(&mut self, horizon_s: f32) -> Result<Vec<StepObs>> {
+        let steps = steps_for(horizon_s, self.scenario.dt_s);
+        let mut out = Vec::with_capacity(steps as usize);
+        self.step_many(steps, &mut out);
         Ok(out)
     }
 
@@ -240,5 +366,158 @@ mod tests {
         s.step();
         assert!((s.time_s() - 0.1).abs() < 1e-6);
         assert_eq!(s.step_count(), 1);
+    }
+
+    #[test]
+    fn steps_for_is_the_single_rounding() {
+        assert_eq!(steps_for(200.0, 0.1), 2000);
+        assert_eq!(steps_for(30.0, 0.1), 300);
+        // the drift case: 0.3 / 0.1 in f32 is 2.9999998 — round, don't
+        // truncate, so planner and runtime agree on 3
+        assert_eq!(steps_for(0.3, 0.1), 3);
+        assert_eq!(steps_for(0.0, 0.1), 0);
+        // degenerate dt is clamped rather than dividing by zero
+        assert!(steps_for(1.0, 0.0) > 0);
+    }
+
+    /// A native stepper that ADVERTISES a fused-chunk ladder but
+    /// executes chunks with the trait's default sequential loop — which
+    /// is exactly the bit-exactness contract `Stepper::step_many`
+    /// demands of real fused implementations.  Driving `SumoSim`
+    /// through it exercises every chunk-scheduler path (run-length
+    /// computation, ladder clamping, queue/departure barriers) with no
+    /// artifacts needed.
+    struct LadderedNative {
+        inner: NativeIdmStepper,
+        ladder: Vec<usize>,
+    }
+
+    impl Stepper for LadderedNative {
+        fn step(&mut self, traffic: &mut Traffic) -> StepObs {
+            self.inner.step(traffic)
+        }
+
+        fn chunk_ladder(&self) -> &[usize] {
+            &self.ladder
+        }
+
+        fn name(&self) -> &'static str {
+            "laddered-native"
+        }
+    }
+
+    fn laddered_sim(horizon: f32, seed: u64, ladder: Vec<usize>) -> SumoSim {
+        let scenario = MergeScenario::default();
+        let net = scenario.network();
+        let flows = FlowFile::merge_sample(1200.0, 300.0, horizon);
+        let routes = duarouter(&net, &flows, seed).unwrap();
+        SumoSim::new(
+            scenario,
+            64,
+            routes,
+            Box::new(LadderedNative {
+                inner: NativeIdmStepper::default(),
+                ladder,
+            }),
+        )
+    }
+
+    /// THE chunk-scheduler guarantee: a chunked run produces the
+    /// bit-identical per-step history, totals, clock and final traffic
+    /// state as step-by-step execution — departures, queued insertions
+    /// and retirements included.
+    #[test]
+    fn chunked_run_equals_stepwise() {
+        for seed in [3u64, 9, 27] {
+            let mut chunked = laddered_sim(120.0, seed, vec![32, 8, 1]);
+            let mut stepwise = laddered_sim(120.0, seed, vec![1]);
+            let h_chunked = chunked.run(200.0).unwrap();
+            let mut h_stepwise = Vec::new();
+            for _ in 0..steps_for(200.0, 0.1) {
+                h_stepwise.push(stepwise.step());
+            }
+            assert_eq!(h_chunked, h_stepwise, "seed {seed}: histories diverged");
+            assert_eq!(chunked.traffic, stepwise.traffic, "seed {seed}");
+            assert_eq!(chunked.total_flow, stepwise.total_flow);
+            assert_eq!(chunked.total_merged, stepwise.total_merged);
+            assert_eq!(chunked.total_exited, stepwise.total_exited);
+            assert_eq!(chunked.total_spawned, stepwise.total_spawned);
+            assert_eq!(chunked.step_count(), stepwise.step_count());
+            assert_eq!(chunked.time_s().to_bits(), stepwise.time_s().to_bits());
+        }
+    }
+
+    /// Saturated demand keeps the insertion queue busy — every step's
+    /// insertion phase has work, so chunks must degenerate to K=1 and
+    /// still match stepwise execution exactly.
+    #[test]
+    fn chunked_respects_insertion_queue_barrier() {
+        let scenario = MergeScenario::default();
+        let net = scenario.network();
+        let flows = FlowFile::merge_sample(36000.0, 0.0, 10.0);
+        let mk = |ladder: Vec<usize>| {
+            SumoSim::new(
+                scenario,
+                256,
+                duarouter(&net, &flows, 5).unwrap(),
+                Box::new(LadderedNative {
+                    inner: NativeIdmStepper::default(),
+                    ladder,
+                }),
+            )
+        };
+        let mut chunked = mk(vec![32, 8, 1]);
+        let mut stepwise = mk(vec![1]);
+        let mut h_chunked = Vec::new();
+        chunked.step_many(150, &mut h_chunked);
+        let h_stepwise: Vec<StepObs> = (0..150).map(|_| stepwise.step()).collect();
+        assert_eq!(h_chunked, h_stepwise);
+        assert_eq!(chunked.traffic, stepwise.traffic);
+        assert_eq!(chunked.total_spawned, stepwise.total_spawned);
+    }
+
+    #[test]
+    fn chunk_limit_forces_step_by_step() {
+        let mut s = laddered_sim(60.0, 4, vec![32, 8, 1]);
+        s.set_chunk_limit(1);
+        assert_eq!(s.chunk_limit(), 1);
+        // with the limit at 1 the fusible window is never consulted;
+        // semantics must still match an unlimited chunked run exactly
+        let mut unlimited = laddered_sim(60.0, 4, vec![32, 8, 1]);
+        let a = s.run(100.0).unwrap();
+        let b = unlimited.run(100.0).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(s.traffic, unlimited.traffic);
+    }
+
+    #[test]
+    fn fusible_window_stops_at_next_departure() {
+        // a single sparse flow: after the first step the next scheduled
+        // departure bounds the fusible window at exactly the number of
+        // accumulated-dt steps until it comes due
+        let scenario = MergeScenario::default();
+        let net = scenario.network();
+        let mut flows = FlowFile::merge_sample(1200.0, 0.0, 1.0);
+        flows.flows.truncate(1);
+        let routes = duarouter(&net, &flows, 1).unwrap();
+        let mut s = SumoSim::new(scenario, 64, routes, Box::new(NativeIdmStepper::default()));
+        // skip any t=0 departures so the queue is empty
+        s.step();
+        if let Some(next) = s.routes.departures.get(s.next_departure) {
+            let window = s.fusible_steps(1000);
+            let dt = s.scenario.dt_s;
+            // replay the accumulation the scheduler does
+            let mut t = s.time_s();
+            let mut k = 1;
+            while k < 1000 {
+                t += dt;
+                if next.time_s <= t {
+                    break;
+                }
+                k += 1;
+            }
+            assert_eq!(window, k);
+            assert!(window < 1000, "a pending departure must bound the window");
+        }
     }
 }

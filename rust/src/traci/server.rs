@@ -87,9 +87,13 @@ fn handle_client(mut stream: TcpStream, sim: &mut SumoSim) -> Result<()> {
             }
             Command::SimStepN { n } => {
                 let n = n.min(10_000); // sanity cap
-                let mut obs = Vec::with_capacity(n as usize * super::protocol::OBS_STRIDE);
-                for _ in 0..n {
-                    let o = sim.step();
+                // chunk-scheduled: departure-free runs inside the burst
+                // become single fused dispatches on the HLO stepper,
+                // with the per-step obs trace preserved for the frame
+                let mut burst = Vec::with_capacity(n as usize);
+                sim.step_many(n as u64, &mut burst);
+                let mut obs = Vec::with_capacity(burst.len() * super::protocol::OBS_STRIDE);
+                for o in &burst {
                     obs.extend_from_slice(&[
                         o.n_active,
                         o.mean_speed,

@@ -10,7 +10,7 @@ use webots_hpc::pbs::script::{appendix_b_script, PbsScript};
 use webots_hpc::pbs::{JobId, JobState, Scheduler, SchedulerConfig};
 use webots_hpc::pipeline::{
     launch_instance, launch_node_slots, pick_walltime, propagate_copies, run_cluster_campaign,
-    CampaignSpec, InstanceConfig, PhysicsEngine, PortAllocator, WalltimePolicy,
+    CampaignSpec, ChunkSteps, InstanceConfig, PhysicsEngine, PortAllocator, WalltimePolicy,
 };
 use webots_hpc::simclock::SimDuration;
 use webots_hpc::sumo::{FlowFile, MergeScenario};
@@ -90,6 +90,7 @@ fn single_instance_end_to_end_native() {
         horizon_s: 20.0,
         max_steps: 500,
         scenario_run: None,
+        chunk_steps: ChunkSteps::Auto,
     };
     let r = launch_instance(&cfg, &displays, &env, &PhysicsEngine::Native).unwrap();
     assert_eq!(r.steps, 200);
@@ -124,6 +125,7 @@ fn parallel_instances_end_to_end_hlo() {
             horizon_s: 10.0,
             max_steps: 300,
             scenario_run: None,
+            chunk_steps: ChunkSteps::Auto,
         })
         .collect();
     let results = launch_node_slots(configs, &PhysicsEngine::Hlo(service));
@@ -184,6 +186,7 @@ fn copy_tree_boots_from_disk() {
         horizon_s: 5.0,
         max_steps: 100,
         scenario_run: None,
+        chunk_steps: ChunkSteps::Auto,
     };
     let r = launch_instance(&cfg, &displays, &env, &PhysicsEngine::Native).unwrap();
     assert_eq!(r.port, base + 7, "copy 1 runs on base+7");

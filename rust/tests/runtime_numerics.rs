@@ -258,3 +258,107 @@ fn concurrent_micro_batching_keeps_worlds_separate() {
         });
     }
 }
+
+/// The PR 5 acceptance contract: a fused K-step rollout executable is
+/// BIT-EXACT with K sequential step dispatches — final state and the
+/// whole per-step obs trace — on every ladder rung, over all four
+/// scenario-family geometries at fixed seeds, with exit-flagged traffic
+/// so retirement happens inside the scan carry.  (Batched/coalesced
+/// rollouts are tolerance-checked elsewhere; THIS claim is exact.)
+#[test]
+fn rollout_bit_exact_with_sequential_all_families() {
+    use webots_hpc::scenario::{FamilyRegistry, UniformSampler};
+
+    let Some(s) = service() else { return };
+    if !s.manifest().rollouts_available() {
+        eprintln!("skipping: artifacts predate schema 4 (no rollout entries)");
+        return;
+    }
+    let ladder = s.manifest().rollout_steps.clone();
+    let registry = FamilyRegistry::builtin().with_buckets(&s.manifest().buckets);
+    for (fi, family) in ["highway-merge", "lane-drop", "ramp-weave", "ring-shockwave"]
+        .iter()
+        .enumerate()
+    {
+        let (_, cfg) = registry
+            .materialize(family, &UniformSampler, 2, 0xF00D + fi as u64)
+            .expect("builtin family compiles");
+        let bucket = cfg.capacity;
+        if !s.manifest().buckets.contains(&bucket) {
+            eprintln!("note: {family} capacity {bucket} not lowered; skipping");
+            continue;
+        }
+        let geom = cfg.geometry.geometry_vec();
+        let mut rng = Rng64::seed_from_u64(0x2021 + fi as u64);
+        let mut t = random_traffic(&mut rng, bucket, 0.6);
+        // flag part of the fleet for a gore inside the road so exits
+        // retire mid-chunk (schema-3 destination dynamics in the carry)
+        let gore = cfg.geometry.road_end_m * 0.5;
+        for i in 0..bucket {
+            if t.is_active(i) && rng.gen_f64() < 0.3 {
+                let (x, v, lane) = (t.x(i), t.v(i), t.lane(i));
+                t.set_state_row(i, x, v, lane, true);
+                t.set_params_row(i, DriverParams::default().with_exit(gore));
+            }
+        }
+        for &k in &ladder {
+            // sequential reference: K solo dispatches of the step entry
+            let mut state = t.state.clone();
+            let mut seq_obs: Vec<f32> = Vec::new();
+            for _ in 0..k {
+                let out = s.step_geom(bucket, &state, &t.params, geom).unwrap();
+                state.copy_from_slice(&out.state);
+                seq_obs.extend_from_slice(&out.obs);
+            }
+            // one fused dispatch of the rollout entry
+            let roll = s.rollout_geom(bucket, k, &t.state, &t.params, geom).unwrap();
+            assert_eq!(
+                roll.state, state,
+                "{family} K={k}: fused final state != sequential"
+            );
+            assert_eq!(
+                roll.obs, seq_obs,
+                "{family} K={k}: fused obs trace != sequential"
+            );
+        }
+    }
+}
+
+/// End-to-end chunk scheduling on the HLO stepper: a chunk-scheduled
+/// `SumoSim::run` over a real demand schedule produces the identical
+/// per-step history and totals as step-by-step execution — departures,
+/// queued insertions, exits and all.
+#[test]
+fn chunked_hlo_sim_equals_stepwise_hlo_sim() {
+    use webots_hpc::runtime::HloStepper;
+    use webots_hpc::sumo::{duarouter, steps_for, FlowFile, MergeScenario, SumoSim};
+
+    let Some(s) = service() else { return };
+    if !s.manifest().rollouts_available() {
+        eprintln!("skipping: artifacts predate schema 4");
+        return;
+    }
+    let bucket = s.manifest().buckets[1];
+    let scenario = MergeScenario::default();
+    let net = scenario.network();
+    let flows = FlowFile::merge_sample(1200.0, 300.0, 40.0);
+    let mk = |svc: &EngineService, chunk_limit: usize| {
+        let routes = duarouter(&net, &flows, 11).unwrap();
+        let stepper = HloStepper::new(svc.clone(), bucket).unwrap();
+        let mut sim = SumoSim::new(scenario, bucket, routes, Box::new(stepper));
+        sim.set_chunk_limit(chunk_limit);
+        sim
+    };
+    let mut chunked = mk(&s, usize::MAX);
+    let mut stepwise = mk(&s, 1);
+    let h_chunked = chunked.run(60.0).unwrap();
+    let mut h_stepwise = Vec::new();
+    for _ in 0..steps_for(60.0, scenario.dt_s) {
+        h_stepwise.push(stepwise.step());
+    }
+    assert_eq!(h_chunked, h_stepwise, "chunked history diverged");
+    assert_eq!(chunked.traffic, stepwise.traffic);
+    assert_eq!(chunked.total_flow, stepwise.total_flow);
+    assert_eq!(chunked.total_exited, stepwise.total_exited);
+    assert_eq!(chunked.total_spawned, stepwise.total_spawned);
+}

@@ -13,10 +13,13 @@ The contract lives in three places that can silently drift apart:
     executables and how it reads them back).
 
 Schema 3 adds the per-vehicle destination columns (``exit_pos``,
-``exit_flag``) and the ``n_exited`` observable; the gate pins the
-per-column layout on all three sides plus the bucket ladder
-(``aot.py BUCKETS`` vs ``family.rs DEFAULT_BUCKET_LADDER``), and fails
-loudly on any mismatch.  With no ``artifacts/`` directory it still
+``exit_flag``) and the ``n_exited`` observable; schema 4 adds the fused
+K-step rollout entry points (``rollout{K}_{N}`` / ``rolloutb{K}_{N}``
+over the ``ROLLOUT_STEPS`` K ladder).  The gate pins the per-column
+layout on all three sides, the bucket ladder (``aot.py BUCKETS`` vs
+``family.rs DEFAULT_BUCKET_LADDER``), and the rollout K ladder
+(``aot.py ROLLOUT_STEPS`` vs ``manifest.rs ROLLOUT_LADDER`` vs the
+lowered artifacts), and fails loudly on any mismatch.  With no ``artifacts/`` directory it still
 checks the source-side layouts (so the gate is meaningful on build
 machines that haven't lowered artifacts).  Run from anywhere inside the
 repo; wired into ``scripts/check.sh``.
@@ -34,12 +37,17 @@ import sys
 EXPECTED_GEOMETRY_COLUMNS = ["road_end", "merge_start", "merge_end", "num_main_lanes", "dt"]
 EXPECTED_PARAM_COLUMNS = ["v0", "T", "a_max", "b", "s0", "length", "exit_pos", "exit_flag"]
 EXPECTED_OBS_COLUMNS = ["n_active", "mean_speed", "flow", "n_merged", "n_exited"]
-EXPECTED_SCHEMA = 3
+EXPECTED_SCHEMA = 4
 #: the lowered bucket ladder (aot.py BUCKETS) — family.rs suggests
 #: capacities from the same ladder so no point falls back to native.
 EXPECTED_BUCKETS = [16, 64, 256, 1024]
-#: operand counts per artifact kind (step/stepb carry the geometry).
-EXPECTED_OPERANDS = {"step": 3, "stepb": 3, "idm": 2, "radar": 1}
+#: the fused-rollout K ladder (aot.py ROLLOUT_STEPS == manifest.rs
+#: ROLLOUT_LADDER) and the entry-name stems the runtime resolves.
+EXPECTED_ROLLOUT_STEPS = [1, 8, 32]
+EXPECTED_ROLLOUT_ENTRY_POINTS = ["rollout", "rolloutb"]
+#: operand counts per artifact kind (step/stepb/rollout* carry the
+#: geometry operand).
+EXPECTED_OPERANDS = {"step": 3, "stepb": 3, "rollout": 3, "rolloutb": 3, "idm": 2, "radar": 1}
 
 REPO = pathlib.Path(__file__).resolve().parents[1]
 
@@ -72,7 +80,8 @@ def check_model_py() -> None:
 
 
 def check_aot_py() -> None:
-    """aot.py BUCKETS must match the ladder family.rs suggests from."""
+    """aot.py BUCKETS must match the ladder family.rs suggests from,
+    and ROLLOUT_STEPS the K ladder manifest.rs/the runtime expect."""
     text = (REPO / "python" / "compile" / "aot.py").read_text()
     m = re.search(r"^BUCKETS\s*=\s*\(([^)]*)\)", text, re.M)
     if not m:
@@ -80,6 +89,12 @@ def check_aot_py() -> None:
     buckets = [int(v) for v in re.findall(r"\d+", m.group(1))]
     if buckets != EXPECTED_BUCKETS:
         fail(f"aot.py BUCKETS {buckets} != {EXPECTED_BUCKETS}")
+    m = re.search(r"^ROLLOUT_STEPS\s*=\s*\(([^)]*)\)", text, re.M)
+    if not m:
+        fail("python/compile/aot.py defines no ROLLOUT_STEPS")
+    steps = [int(v) for v in re.findall(r"\d+", m.group(1))]
+    if steps != EXPECTED_ROLLOUT_STEPS:
+        fail(f"aot.py ROLLOUT_STEPS {steps} != {EXPECTED_ROLLOUT_STEPS}")
 
 
 def check_family_rs() -> None:
@@ -98,10 +113,17 @@ def check_manifest_rs() -> None:
         ("GEOMETRY_COLUMNS", EXPECTED_GEOMETRY_COLUMNS),
         ("PARAM_COLUMNS", EXPECTED_PARAM_COLUMNS),
         ("OBS_COLUMNS", EXPECTED_OBS_COLUMNS),
+        ("ROLLOUT_ENTRY_POINTS", EXPECTED_ROLLOUT_ENTRY_POINTS),
     ):
         cols = pinned_list(text, name, "rust/src/runtime/manifest.rs")
         if cols != want:
             fail(f"manifest.rs {name} {cols} != {want}")
+    m = re.search(r"ROLLOUT_LADDER[^=]*=\s*\[([^\]]*)\]", text)
+    if not m:
+        fail("rust/src/runtime/manifest.rs defines no ROLLOUT_LADDER")
+    ladder = [int(v) for v in re.findall(r"\d+", m.group(1))]
+    if ladder != EXPECTED_ROLLOUT_STEPS:
+        fail(f"manifest.rs ROLLOUT_LADDER {ladder} != {EXPECTED_ROLLOUT_STEPS}")
 
 
 def check_artifacts() -> bool:
@@ -139,10 +161,29 @@ def check_artifacts() -> bool:
             "(stale/partial lowering breaks the zero-native-fallback ladder); "
             "re-run `make artifacts`"
         )
+    if manifest.get("rollout_steps") != EXPECTED_ROLLOUT_STEPS:
+        fail(
+            f"manifest rollout_steps {manifest.get('rollout_steps')} "
+            f"!= {EXPECTED_ROLLOUT_STEPS}; re-run `make artifacts`"
+        )
+    if manifest.get("rollout_entry_points") != EXPECTED_ROLLOUT_ENTRY_POINTS:
+        fail(
+            f"manifest rollout_entry_points {manifest.get('rollout_entry_points')} "
+            f"!= {EXPECTED_ROLLOUT_ENTRY_POINTS}"
+        )
     buckets = set(manifest.get("buckets", []))
     seen_ns = set()
+    seen_rollouts = set()
     for key, entry in manifest.get("entries", {}).items():
         kind, _, n = key.rpartition("_")
+        k = None
+        # longest stem first so 'rolloutb8' doesn't parse as 'rollout'+'b8'
+        if kind.startswith("rolloutb"):
+            stem, k = "rolloutb", int(kind[len("rolloutb"):])
+            kind = "rolloutb"
+        elif kind.startswith("rollout"):
+            stem, k = "rollout", int(kind[len("rollout"):])
+            kind = "rollout"
         if kind not in EXPECTED_OPERANDS:
             continue
         if entry.get("operands") != EXPECTED_OPERANDS[kind]:
@@ -152,11 +193,28 @@ def check_artifacts() -> bool:
             )
         if entry.get("n") != int(n):
             fail(f"entry '{key}' bucket field {entry.get('n')} != key suffix {n}")
+        if k is not None:
+            if k not in EXPECTED_ROLLOUT_STEPS:
+                fail(f"entry '{key}' uses K={k} outside the ladder {EXPECTED_ROLLOUT_STEPS}")
+            if entry.get("k") != k:
+                fail(f"entry '{key}' k field {entry.get('k')} != key K {k}")
+            if entry.get("outputs") != 2:
+                fail(f"rollout entry '{key}' must have 2 outputs (state, obs trace)")
+            seen_rollouts.add((stem, k, entry["n"]))
         seen_ns.add(entry["n"])
         if not (REPO / "artifacts" / entry["file"]).exists():
             fail(f"entry '{key}' points at missing file {entry['file']}")
     if seen_ns != buckets:
         fail(f"entries cover buckets {sorted(seen_ns)} but manifest lists {sorted(buckets)}")
+    want_rollouts = {
+        (stem, k, n)
+        for stem in EXPECTED_ROLLOUT_ENTRY_POINTS
+        for k in EXPECTED_ROLLOUT_STEPS
+        for n in EXPECTED_BUCKETS
+    }
+    if seen_rollouts != want_rollouts:
+        missing = sorted(want_rollouts - seen_rollouts)
+        fail(f"rollout entries missing for {missing}; re-run `make artifacts`")
     return True
 
 

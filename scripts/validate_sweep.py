@@ -34,11 +34,22 @@ is re-rolled with ~50% exit-flagged traffic against the jax kernel —
 the pre-flight for
 ``rust/tests/scenario_families.rs::ramp_weave_off_traffic_actually_exits``.
 
+PR 5 section — fused K-step rollouts.  ``model.rollout_geom`` (one
+``lax.scan``-fused executable per ladder K) must be **bit-exact** with K
+sequential ``step_geom`` dispatches — final state AND the whole
+per-step obs trace, exits retiring mid-chunk inside the scan carry —
+across every family geometry at its extremes.  This is the pre-flight
+for ``rust/tests/runtime_numerics.rs::
+rollout_bit_exact_with_sequential_all_families``.
+
 Both timing sections estimate the speedups recorded in
 ``BENCH_runtime_hotpath.json`` (clearly labelled as python-mirror
 estimates there; re-measure with ``cargo bench --bench runtime_hotpath``
 on a machine with the rust toolchain).  ``--append-bench`` appends the
-PR 4 measurements to that file.
+PR 5 rollout-mirror measurements (one jitted dispatch per step at K=1
+vs one fused dispatch per K steps — the paired ``hlo_rollout/K=*``
+rust bench cases) to that file; ``--append-bench-pr4`` re-appends the
+older PR 4 step-kernel measurements.
 
 Run: ``python3 scripts/validate_sweep.py [--append-bench]``
 """
@@ -548,6 +559,166 @@ def bench_geometry_kernel(jnp, jax, model):
     return results
 
 
+# =====================================================================
+# PR 5: fused K-step rollouts — bit-exactness oracle + dispatch-
+# amortization mirror for the `hlo_rollout/K=*` rust bench cases
+# =====================================================================
+
+#: the lowered K ladder (aot.py ROLLOUT_STEPS; pinned by
+#: scripts/check_manifest.py).
+ROLLOUT_STEPS = (1, 8, 32)
+
+
+def check_rollout_bit_exact(jax, jnp, model, name, geometry, seed, k=32, exit_frac=0.35):
+    """Fused ``rollout_geom`` vs K sequential ``step_geom`` calls — both
+    jit-compiled (the lowered executables are the ABI, not the eager
+    path) and required to agree BIT-exactly: final state and the whole
+    per-step obs trace.  Exit-flagged traffic spawns near the gore so
+    retirements land mid-chunk, inside the scan carry.  Returns the
+    rollout's total exit count."""
+    rng = np.random.default_rng(seed)
+    n = 64
+    with_ramp = geometry[2] > 0.0
+    x, v, lane, act, params = geometry_traffic(
+        rng, n, geometry, with_ramp, exit_frac, near_gore=True
+    )
+    state = jnp.stack(
+        [jnp.asarray(x), jnp.asarray(v), jnp.asarray(lane), jnp.asarray(act.astype(F))],
+        axis=1,
+    )
+    pj = jnp.asarray(params)
+    geom_row = jnp.asarray(np.array(geometry, dtype=F))
+    step_jit = jax.jit(model.step_geom)
+    roll_jit = jax.jit(model.rollout_geom, static_argnums=3)
+
+    seq_state = state
+    seq_obs = []
+    for _ in range(k):
+        seq_state, _, _, obs = step_jit(seq_state, pj, geom_row)
+        seq_obs.append(np.asarray(obs))
+    seq_obs = np.stack(seq_obs)
+    fin, trace = roll_jit(state, pj, geom_row, k)
+    assert np.array_equal(np.asarray(fin), np.asarray(seq_state)), (
+        f"{name}: fused K={k} final state != {k} sequential steps"
+    )
+    assert np.array_equal(np.asarray(trace), seq_obs), (
+        f"{name}: fused K={k} obs trace != sequential"
+    )
+    return int(seq_obs[:, 4].sum())
+
+
+def bench_rollout_kernel(jax, jnp, model):
+    """Time the fused rollout at each ladder K on the lane-drop-hi
+    geometry — the python-mirror stand-in for the rust
+    `hlo_rollout/K={1,8,32}/N=*` bench cases.  K=1 is one jitted
+    dispatch per physics step (the pre-PR5 hot path, dispatch overhead
+    included); K=8/32 amortize that overhead over the fused chunk.
+    Returns {bench_name: (sec_per_dispatch, iters, steps_per_s)}."""
+    results = {}
+    geometry = FAMILY_GEOMETRIES["lane-drop-hi"]
+    for n in (16, 64, 256):
+        rng = np.random.default_rng(123)
+        x, v, lane, act, params = geometry_traffic(rng, n, geometry, True, exit_frac=0.25)
+        state = jnp.stack(
+            [jnp.asarray(x), jnp.asarray(v), jnp.asarray(lane), jnp.asarray(act.astype(F))],
+            axis=1,
+        )
+        pj = jnp.asarray(params)
+        g = jnp.asarray(np.array(geometry, dtype=F))
+        line = [f"  N={n:4d}:"]
+        per_k = {}
+        for k in ROLLOUT_STEPS:
+            fn = jax.jit(lambda s, p, gg, kk=k: model.rollout_geom(s, p, gg, kk))
+            fn(state, pj, g)[0].block_until_ready()
+            reps = max(8, 400 // k)
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                fn(state, pj, g)[0].block_until_ready()
+            sec = (time.perf_counter() - t0) / reps
+            sps = k / sec
+            per_k[k] = sps
+            results[f"mirror_hlo_rollout/K={k}/N={n}"] = (sec, reps, sps)
+            line.append(f"K={k} {sps:8.0f} steps/s")
+        k_lo, k_hi = ROLLOUT_STEPS[0], ROLLOUT_STEPS[-1]
+        line.append(f"-> K={k_hi} {per_k[k_hi] / per_k[k_lo]:5.2f}x over K={k_lo}")
+        print(" ".join(line))
+    return results
+
+
+def append_bench_pr5(results):
+    """Append the PR 5 rollout-mirror runs to BENCH_runtime_hotpath.json
+    (never deleting existing runs): pre = one dispatch per step (K=1),
+    post = fused K-step dispatches."""
+    path = pathlib.Path(__file__).resolve().parents[1] / "BENCH_runtime_hotpath.json"
+    doc = json.loads(path.read_text())
+    pre = {k: v for k, v in results.items() if "/K=1/" in k}
+    post = {k: v for k, v in results.items() if "/K=1/" not in k}
+    for label, rows in (
+        (
+            "pre-PR5-python-mirror (jax schema-4 kernel, ONE jitted dispatch per "
+            "physics step — the per-step host round-trip the fused rollouts "
+            "remove; 25% exit-flagged, lane-drop geometry, float32)",
+            pre,
+        ),
+        (
+            "post-PR5-python-mirror (jax fused lax.scan rollout executables, one "
+            "dispatch per K-step chunk, same traffic — bit-exact with the "
+            "sequential path, dispatch overhead amortized K-fold)",
+            post,
+        ),
+    ):
+        doc["runs"].append(
+            {
+                "label": label,
+                "unix_time": int(time.time()),
+                "source": "scripts/validate_sweep.py",
+                "results": [
+                    {
+                        "name": name,
+                        "ns_per_iter": int(sec * 1e9),
+                        "iters": iters,
+                        "steps_per_s": round(sps, 1),
+                    }
+                    for name, (sec, iters, sps) in sorted(rows.items())
+                ],
+            }
+        )
+    path.write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"appended pre/post-PR5 python-mirror runs to {path}")
+
+
+def rollout_section(do_append):
+    try:
+        import sys
+
+        sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "python"))
+        import jax
+        import jax.numpy as jnp
+
+        from compile import model
+    except ImportError as e:
+        print(f"rollout section skipped (no jax here: {e})")
+        return
+    total_exits = 0
+    for i, (name, geometry) in enumerate(FAMILY_GEOMETRIES.items()):
+        total_exits += check_rollout_bit_exact(
+            jax, jnp, model, name, geometry, seed=7000 + i
+        )
+    # the windows are one K=32 chunk each (vs the PR 4 section's 60-step
+    # rollouts), so a handful of mid-chunk exits across the extremes is
+    # the expected yield — zero would mean the destination dynamics never
+    # exercised the scan carry
+    assert total_exits >= 3, f"rollout sweeps produced too few exits: {total_exits}"
+    print(
+        f"fused-rollout bit-exactness: OK ({len(FAMILY_GEOMETRIES)} family extremes, "
+        f"K=32 fused vs 32 sequential jitted steps, {total_exits} exits mid-chunk)"
+    )
+    print("fused-rollout dispatch amortization (python mirror, indicative only):")
+    results = bench_rollout_kernel(jax, jnp, model)
+    if do_append:
+        append_bench_pr5(results)
+
+
 def append_bench(results):
     """Append the PR 4 python-mirror measurements to
     BENCH_runtime_hotpath.json (never deleting existing runs)."""
@@ -630,7 +801,12 @@ def main():
     ap.add_argument(
         "--append-bench",
         action="store_true",
-        help="append the PR 3 measurements to BENCH_runtime_hotpath.json",
+        help="append the PR 5 rollout-mirror runs to BENCH_runtime_hotpath.json",
+    )
+    ap.add_argument(
+        "--append-bench-pr4",
+        action="store_true",
+        help="re-append the PR 4 step-kernel measurements (older mode)",
     )
     args = ap.parse_args()
 
@@ -646,7 +822,8 @@ def main():
           "indicative only):")
     bench(64, 0.7, 30)
     bench(256, 0.7, 8)
-    geometry_section(args.append_bench)
+    geometry_section(args.append_bench_pr4)
+    rollout_section(args.append_bench)
 
 
 if __name__ == "__main__":
