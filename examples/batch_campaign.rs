@@ -81,6 +81,8 @@ fn main() -> anyhow::Result<()> {
                     max_steps: 2_000,
                     scenario_run: None,
                     chunk_steps: ChunkSteps::Auto,
+                    faults: None,
+                    watchdog: Default::default(),
                 })
                 .collect();
             submitted += configs.len() as u64;

@@ -38,6 +38,8 @@ fn main() -> anyhow::Result<()> {
         max_steps: 1_000,
         scenario_run: None,
         chunk_steps: ChunkSteps::Auto,
+        faults: None,
+        watchdog: Default::default(),
     };
 
     // the container image the paper ships: official Webots docker image

@@ -1,0 +1,102 @@
+//! SUPERVISED CAMPAIGN DEMO — the robustness story, end to end.
+//!
+//! Runs a small campaign (2 nodes × 4 slots × 2 epochs = 16 runs)
+//! through the full supervision stack while a seeded fault plan injects
+//! transient failures at ~15% per site per attempt: duarouter exits,
+//! display/port races, and mid-run panics.  The supervisor contains
+//! every one (catch_unwind, taxonomy, bounded retry with seeded
+//! backoff), the crash-safe ledger records every transition, and the
+//! final accounting shows the retry bill behind the 100% completion
+//! rate — the §5.1 claim, demonstrated rather than asserted.
+//!
+//! Re-running with the same `--ledger` directory resumes: completed
+//! runs are skipped, the aggregate is rebuilt identically.
+//!
+//! ```text
+//! cargo run --release --example supervised_campaign
+//! ```
+
+use webots_hpc::pipeline::{
+    run_supervised_campaign, FaultPlan, PhysicsEngine, RetryPolicy, SupervisedCampaignSpec,
+    SupervisorSpec,
+};
+use webots_hpc::util::TempDir;
+use webots_hpc::webots::WatchdogSpec;
+
+fn main() -> webots_hpc::Result<()> {
+    let ledger_dir = TempDir::new("supervised-campaign")?;
+    let spec = SupervisedCampaignSpec {
+        name: "demo".into(),
+        nodes: 2,
+        slots_per_node: 4,
+        epochs: 2,
+        horizon_s: 10.0,
+        capacity: 64,
+        seed: 2021,
+        matrix: None,
+        supervisor: SupervisorSpec {
+            retry: RetryPolicy {
+                max_attempts: 8,
+                base_ms: 10,
+                cap_ms: 200,
+            },
+            watchdog: WatchdogSpec::default(),
+            degrade: true,
+            fault_plan: Some(FaultPlan::transient_only(99, 0.15)),
+        },
+        ledger_dir: ledger_dir.path().to_path_buf(),
+        stop_after_runs: None,
+    };
+
+    println!(
+        "supervised campaign: {} nodes x {} slots x {} epochs = {} runs",
+        spec.nodes,
+        spec.slots_per_node,
+        spec.epochs,
+        spec.total_runs()
+    );
+    println!("fault plan: seed 99, 15% transient faults per site per attempt\n");
+
+    let outcome = run_supervised_campaign(&spec, &PhysicsEngine::Native)?;
+
+    for report in &outcome.reports {
+        if report.failures.is_empty() {
+            continue;
+        }
+        println!("run {} took {} attempts:", report.run_id, report.attempts);
+        for f in &report.failures {
+            println!(
+                "  attempt {}: [{}] {} (backoff {}ms)",
+                f.attempt,
+                f.class.name(),
+                f.error,
+                f.backoff_ms
+            );
+        }
+    }
+
+    let stats = outcome
+        .result
+        .robustness
+        .expect("supervised campaigns always report robustness accounting");
+    println!("\naccounting:");
+    println!("  runs            : {}", stats.runs);
+    println!("  completed       : {}", stats.completed);
+    println!("  failed          : {}", stats.failed);
+    println!("  attempts        : {}", stats.attempts);
+    println!("  retries         : {}", stats.retries);
+    println!("  degraded        : {}", stats.degraded);
+    println!("  walltime kills  : {}", stats.killed_walltime);
+    println!("  stall kills     : {}", stats.killed_stall);
+    println!(
+        "  completion rate : {:.1}% (paper §5.1: \"100% simulation completion rate\")",
+        100.0 * stats.completion_rate()
+    );
+    println!(
+        "\naggregate: {} runs, {} rows, run_ids unique: {}",
+        outcome.dataset.num_runs(),
+        outcome.dataset.total_rows(),
+        outcome.dataset.run_ids_unique()
+    );
+    Ok(())
+}

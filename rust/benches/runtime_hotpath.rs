@@ -294,6 +294,8 @@ fn main() {
                 max_steps: 400,
                 scenario_run: None,
                 chunk_steps: ChunkSteps::Auto,
+                faults: None,
+                watchdog: Default::default(),
             };
             let _ = webots_hpc::pipeline::launch_instance(&cfg, &displays, &env, &engine)
                 .unwrap();

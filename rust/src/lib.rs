@@ -95,6 +95,22 @@ pub enum Error {
     #[error("job {0} killed: walltime exceeded")]
     WalltimeExceeded(String),
 
+    /// Route regeneration exited nonzero (`duarouter --seed $RANDOM`
+    /// flaking mid-campaign — a transient the supervisor retries).
+    #[error("duarouter failed: {0}")]
+    DuarouterFailed(String),
+
+    /// The run's stall watchdog fired: no step progress within the
+    /// configured window (payload = steps completed before the stall).
+    #[error("run stalled after {0} steps (stall watchdog)")]
+    Stalled(u64),
+
+    /// A contained panic from a launch thread (`catch_unwind` in the
+    /// run supervisor — a crash becomes a per-slot error instead of a
+    /// node-wide abort).
+    #[error("instance panicked: {0}")]
+    Panic(String),
+
     #[error("no such job: {0}")]
     NoSuchJob(String),
 

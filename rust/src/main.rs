@@ -8,6 +8,7 @@
 //! webots-hpc campaign [--nodes 6] [--slots 8] [--hours 12] [--policy first-fit]
 //! webots-hpc submit <script.pbs> [--nodes 6]
 //! webots-hpc run-local [--instances 8] [--engine hlo|native] [--horizon 30] [--chunk auto|K]
+//! webots-hpc supervise [--nodes 2] [--slots 4] [--fault-rate 0.15] [--ledger DIR]
 //! ```
 //!
 //! Argument parsing is hand-rolled (the vendored offline crate set has
@@ -30,7 +31,7 @@ use webots_hpc::simclock::SimDuration;
 use webots_hpc::sumo::{FlowFile, MergeScenario};
 use webots_hpc::webots::nodes::sample_merge_world;
 
-const USAGE: &str = "usage: webots-hpc <info|table|fig|dist|campaign|submit|run-local> [args]
+const USAGE: &str = "usage: webots-hpc <info|table|fig|dist|campaign|submit|run-local|supervise> [args]
   info                         artifacts + PJRT platform
   table <5.1|5.2|5.3|4.1>      regenerate a paper table
   fig <5.1|5.2>                regenerate a paper figure
@@ -43,7 +44,12 @@ const USAGE: &str = "usage: webots-hpc <info|table|fig|dist|campaign|submit|run-
   cloud [--runs N]                   §6.2.3: elastic (autoscaled) campaign
   config-init [path]                 §6.2.1: write an example campaign config
   scenarios [--families a,b] [--samples N] [--sampler grid|uniform|lhs]
-            [--seed K] [--out file]  scenario-matrix manifest (the dataset codebook)";
+            [--seed K] [--out file]  scenario-matrix manifest (the dataset codebook)
+  supervise [--nodes N] [--slots S] [--epochs E] [--engine native|hlo]
+            [--horizon S] [--seed K] [--retries R] [--walltime SECS]
+            [--ledger DIR] [--fault-rate P] [--fault-seed K] [--config path]
+            supervised campaign: crash-safe ledger + retry/backoff +
+            watchdogs (reuse --ledger to resume a killed campaign)";
 
 /// Tiny flag parser: positional args + `--key value` pairs.
 struct Args {
@@ -114,6 +120,7 @@ fn main() -> Result<()> {
         "scenarios" => scenarios(&rest),
         "submit" => submit(&rest),
         "run-local" => run_local(&rest),
+        "supervise" => supervise(&rest),
         "--help" | "-h" | "help" => {
             println!("{USAGE}");
             Ok(())
@@ -335,6 +342,120 @@ fn submit(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn supervise(args: &Args) -> Result<()> {
+    use webots_hpc::pipeline::{
+        run_supervised_campaign, FaultPlan, RetryPolicy, SupervisedCampaignSpec, SupervisorSpec,
+    };
+    use webots_hpc::webots::WatchdogSpec;
+
+    // --config supplies name + supervision policy (retry/backoff/
+    // watchdog keys); flags fill the campaign shape and can inject
+    // faults for a soak
+    let (name, mut supervisor) = match args.flags.get("config") {
+        Some(path) => {
+            let cfg =
+                webots_hpc::pipeline::CampaignConfig::parse(&std::fs::read_to_string(path)?)?;
+            (cfg.name.clone(), cfg.to_supervisor_spec())
+        }
+        None => {
+            let retries: u32 = args.get("retries", 3)?;
+            let walltime_s: u64 = args.get("walltime", 0)?;
+            (
+                "supervised".to_string(),
+                SupervisorSpec {
+                    retry: RetryPolicy {
+                        max_attempts: retries + 1,
+                        ..RetryPolicy::default()
+                    },
+                    watchdog: WatchdogSpec {
+                        walltime: (walltime_s > 0)
+                            .then(|| std::time::Duration::from_secs(walltime_s)),
+                        stall_window: None,
+                    },
+                    degrade: true,
+                    fault_plan: None,
+                },
+            )
+        }
+    };
+    let fault_rate: f64 = args.get("fault-rate", 0.0)?;
+    if fault_rate > 0.0 {
+        let fault_seed: u64 = args.get("fault-seed", 99)?;
+        supervisor.fault_plan = Some(FaultPlan::transient_only(fault_seed, fault_rate));
+    }
+
+    let spec = SupervisedCampaignSpec {
+        name,
+        nodes: args.get("nodes", 2)?,
+        slots_per_node: args.get("slots", 4)?,
+        epochs: args.get("epochs", 1)?,
+        horizon_s: args.get("horizon", 10.0)?,
+        capacity: args.get("capacity", 64)?,
+        seed: args.get("seed", 2021)?,
+        matrix: None,
+        supervisor,
+        ledger_dir: args.get_str("ledger", "supervised-ledger").into(),
+        stop_after_runs: None,
+    };
+    let engine = args.get_str("engine", "native");
+    let physics = match engine.as_str() {
+        "native" => PhysicsEngine::Native,
+        "hlo" => PhysicsEngine::Hlo(EngineService::auto()?),
+        other => bail!("unknown engine '{other}' (native|hlo)"),
+    };
+
+    println!(
+        "supervised campaign '{}': {} nodes x {} slots x {} epochs = {} runs, engine={engine}",
+        spec.name,
+        spec.nodes,
+        spec.slots_per_node,
+        spec.epochs,
+        spec.total_runs()
+    );
+    println!("ledger: {} (reuse to resume)", spec.ledger_dir.display());
+    if let Some(plan) = &spec.supervisor.fault_plan {
+        println!(
+            "fault injection: seed {}, {:.0}% per transient site per attempt",
+            plan.seed,
+            100.0 * plan.rate(webots_hpc::pipeline::FaultSite::Duarouter)
+        );
+    }
+
+    let outcome = run_supervised_campaign(&spec, &physics)?;
+    for report in outcome.reports.iter().filter(|r| !r.failures.is_empty()) {
+        println!("run {} took {} attempts:", report.run_id, report.attempts);
+        for f in &report.failures {
+            println!(
+                "  attempt {}: [{}] {} (backoff {}ms)",
+                f.attempt,
+                f.class.name(),
+                f.error,
+                f.backoff_ms
+            );
+        }
+    }
+    let stats = outcome
+        .result
+        .robustness
+        .ok_or_else(|| anyhow!("supervised campaign reported no robustness accounting"))?;
+    println!(
+        "runs {} | completed {} | failed {} | attempts {} | retries {} | degraded {}",
+        stats.runs, stats.completed, stats.failed, stats.attempts, stats.retries, stats.degraded
+    );
+    println!(
+        "kills: walltime {} stall {} | resumed skips {}",
+        stats.killed_walltime, stats.killed_stall, stats.resumed_skips
+    );
+    println!(
+        "completion rate: {:.1}% | aggregate: {} runs, {} rows, run_ids unique: {}",
+        100.0 * stats.completion_rate(),
+        outcome.dataset.num_runs(),
+        outcome.dataset.total_rows(),
+        outcome.dataset.run_ids_unique()
+    );
+    Ok(())
+}
+
 fn run_local(args: &Args) -> Result<()> {
     let instances: u16 = args.get("instances", 2)?;
     let engine = args.get_str("engine", "hlo");
@@ -375,6 +496,8 @@ fn run_local(args: &Args) -> Result<()> {
             max_steps: webots_hpc::sumo::steps_for(horizon, MergeScenario::default().dt_s) + 100,
             scenario_run: None,
             chunk_steps: chunk,
+            faults: None,
+            watchdog: Default::default(),
         })
         .collect();
 

@@ -62,6 +62,15 @@ impl CampaignDataset {
         seeds.windows(2).all(|w| w[0] != w[1])
     }
 
+    /// Qualified run ids must be unique — the ledger-resume idempotence
+    /// invariant: a retried or resumed run must *replace* its slot's
+    /// output, never add a second copy of it.
+    pub fn run_ids_unique(&self) -> bool {
+        let mut ids: Vec<&str> = self.runs.iter().map(|r| r.run_id.as_str()).collect();
+        ids.sort_unstable();
+        ids.windows(2).all(|w| w[0] != w[1])
+    }
+
     /// Per-scenario run counts (scenario-matrix campaigns; untagged
     /// runs group under `"-"`).  Sorted by scenario id.
     pub fn runs_per_scenario(&self) -> Vec<(String, usize)> {
@@ -111,7 +120,7 @@ impl CampaignDataset {
         let params = self.param_columns();
         write!(
             w,
-            "run_id,scenario,sample_index,node,seed,time_s,n_active,mean_speed,flow,n_merged,n_exited"
+            "run_id,scenario,sample_index,node,seed,degraded,time_s,n_active,mean_speed,flow,n_merged,n_exited"
         )?;
         for p in &params {
             write!(w, ",{p}")?;
@@ -130,10 +139,11 @@ impl CampaignDataset {
                     cells.push_str(&v.render());
                 }
             }
+            let degraded = r.degraded as u8;
             for row in &r.rows {
                 writeln!(
                     w,
-                    "{},{scenario},{sample},{},{},{:.1},{},{:.3},{},{},{}{cells}",
+                    "{},{scenario},{sample},{},{},{degraded},{:.1},{},{:.3},{},{},{}{cells}",
                     r.run_id, r.node, r.seed, row.time_s, row.n_active, row.mean_speed,
                     row.flow, row.n_merged, row.n_exited
                 )?;
@@ -223,14 +233,34 @@ mod tests {
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(
             lines[0],
-            "run_id,scenario,sample_index,node,seed,time_s,n_active,mean_speed,flow,n_merged,n_exited,circumference_m,lanes"
+            "run_id,scenario,sample_index,node,seed,degraded,time_s,n_active,mean_speed,flow,n_merged,n_exited,circumference_m,lanes"
         );
         // untagged run: empty scenario + param cells
-        assert!(lines[1].starts_with("e0[0],,,0,1,"));
+        assert!(lines[1].starts_with("e0[0],,,0,1,0,"));
         assert!(lines[1].ends_with(",,"));
         // tagged run: qualified id + params
-        assert!(lines[2].starts_with("e0[1]@ring-shockwave#5,ring-shockwave,5,1,2,"));
+        assert!(lines[2].starts_with("e0[1]@ring-shockwave#5,ring-shockwave,5,1,2,0,"));
         assert!(lines[2].ends_with(",800,2"));
+    }
+
+    #[test]
+    fn degraded_flag_lands_in_every_row() {
+        let mut c = CampaignDataset::new();
+        let mut d = run("g[0]", 0, 9, 1.0);
+        d.degraded = true;
+        c.add(d);
+        let csv = c.to_ml_csv();
+        assert!(csv.lines().nth(1).unwrap().starts_with("g[0],,,0,9,1,"));
+    }
+
+    #[test]
+    fn duplicate_run_ids_detected() {
+        let mut c = CampaignDataset::new();
+        c.add(run("e0[0]", 0, 1, 1.0));
+        c.add(run("e0[1]", 0, 2, 1.0));
+        assert!(c.run_ids_unique());
+        c.add(run("e0[0]", 0, 3, 1.0));
+        assert!(!c.run_ids_unique());
     }
 
     #[test]

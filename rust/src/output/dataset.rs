@@ -46,6 +46,10 @@ pub struct RunDataset {
     /// Scenario provenance: which point of which family generated this
     /// run (None for classic fixed-scenario runs).
     pub scenario: Option<ScenarioTag>,
+    /// Supervision provenance: true when the run completed on the
+    /// native-stepper fallback after its HLO engine failed (graceful
+    /// degradation) — ML consumers can filter or stratify on it.
+    pub degraded: bool,
     pub rows: Vec<ObsRow>,
     /// Totals for quick aggregation.
     pub total_flow: f32,
@@ -63,6 +67,7 @@ impl RunDataset {
             node,
             seed,
             scenario: None,
+            degraded: false,
             rows: Vec::new(),
             total_flow: 0.0,
             total_merged: 0.0,

@@ -118,6 +118,10 @@ pub struct CampaignResult {
     pub runs_per_node: Vec<u64>,
     /// Max per-node live occupancy observed right after each submission.
     pub peak_occupancy: Vec<usize>,
+    /// Supervision accounting (attempts, retries, kills, degradations)
+    /// — populated by `run_supervised_campaign`; None for the
+    /// discrete-event drivers, which model no faults.
+    pub robustness: Option<super::RobustnessStats>,
 }
 
 impl CampaignResult {
@@ -197,6 +201,7 @@ pub fn run_cluster_campaign(spec: &CampaignSpec) -> Result<CampaignResult> {
         usage: UsageReporter::summarize(sched.records()),
         runs_per_node,
         peak_occupancy,
+        robustness: None,
     })
 }
 
@@ -247,6 +252,7 @@ pub fn pc_campaign(
         usage,
         runs_per_node: vec![completed],
         peak_occupancy: vec![1],
+        robustness: None,
     }
 }
 
@@ -256,6 +262,7 @@ pub fn pc_campaign(
 pub const PAPER_PC_OVERHEAD_S: f64 = 338.0;
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -87,6 +87,18 @@ pub struct CampaignConfig {
     /// `run-local --chunk` does; the simulated PBS campaign launches
     /// no real instances, so there it only documents intent).
     pub chunk_steps: ChunkSteps,
+    /// Retries per run beyond the first attempt (transient failures
+    /// only — permanent errors never retry).
+    pub max_retries: u32,
+    /// Backoff before the first retry [ms]; doubles per retry.
+    pub backoff_base_ms: u64,
+    /// Backoff ceiling [ms].
+    pub backoff_cap_ms: u64,
+    /// Stall watchdog: max wall time one TraCI burst may take [ms]
+    /// (0 = disabled).
+    pub stall_window_ms: u64,
+    /// Per-instance walltime deadline [s] (0 = disabled).
+    pub instance_walltime_s: u64,
 }
 
 impl Default for CampaignConfig {
@@ -106,6 +118,11 @@ impl Default for CampaignConfig {
             scenario_samples: 16,
             sampler: "lhs".into(),
             chunk_steps: ChunkSteps::Auto,
+            max_retries: 3,
+            backoff_base_ms: 250,
+            backoff_cap_ms: 5000,
+            stall_window_ms: 0,
+            instance_walltime_s: 0,
         }
     }
 }
@@ -131,6 +148,16 @@ policy = first-fit
 # explicit K is validated against that ladder at launch; live-GUI runs
 # force 1 regardless so frame streaming never starves)
 chunk_steps = auto
+
+# run supervision (see EXPERIMENTS.md §Robustness): transient failures
+# retry under exponential backoff with seeded jitter; permanent
+# (config/manifest) errors never retry.  Watchdogs are opt-in: 0
+# disables (the step budget stays the only guard)
+max_retries = 3
+backoff_base_ms = 250
+backoff_cap_ms = 5000
+stall_window_ms = 0
+instance_walltime_s = 0
 
 # scenario-matrix mode — uncomment to sweep a scenario space across
 # the array instead of re-running one world (see EXPERIMENTS.md
@@ -177,6 +204,13 @@ chunk_steps = auto
                 "scenario_samples" => cfg.scenario_samples = v.parse().map_err(|e| bad(&e))?,
                 "sampler" => cfg.sampler = v.to_string(),
                 "chunk_steps" => cfg.chunk_steps = ChunkSteps::parse(v)?,
+                "max_retries" => cfg.max_retries = v.parse().map_err(|e| bad(&e))?,
+                "backoff_base_ms" => cfg.backoff_base_ms = v.parse().map_err(|e| bad(&e))?,
+                "backoff_cap_ms" => cfg.backoff_cap_ms = v.parse().map_err(|e| bad(&e))?,
+                "stall_window_ms" => cfg.stall_window_ms = v.parse().map_err(|e| bad(&e))?,
+                "instance_walltime_s" => {
+                    cfg.instance_walltime_s = v.parse().map_err(|e| bad(&e))?
+                }
                 "policy" => {
                     cfg.policy = match v {
                         "first-fit" => PackingPolicy::FirstFit,
@@ -236,6 +270,27 @@ chunk_steps = auto
     /// `scenario_samples`).
     pub fn sampler_kind(&self) -> Result<SamplerKind> {
         SamplerKind::parse(&self.sampler, self.scenario_samples)
+    }
+
+    /// The supervision policy these keys describe (fault plan stays
+    /// None — injection is a test seam, never config-reachable).
+    pub fn to_supervisor_spec(&self) -> super::SupervisorSpec {
+        use std::time::Duration;
+        super::SupervisorSpec {
+            retry: super::RetryPolicy {
+                max_attempts: self.max_retries + 1,
+                base_ms: self.backoff_base_ms,
+                cap_ms: self.backoff_cap_ms,
+            },
+            watchdog: crate::webots::WatchdogSpec {
+                walltime: (self.instance_walltime_s > 0)
+                    .then(|| Duration::from_secs(self.instance_walltime_s)),
+                stall_window: (self.stall_window_ms > 0)
+                    .then(|| Duration::from_millis(self.stall_window_ms)),
+            },
+            degrade: true,
+            fault_plan: None,
+        }
     }
 
     /// The scenario matrix this config describes, if any.
@@ -310,6 +365,7 @@ chunk_steps = auto
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::pipeline::run_cluster_campaign;
@@ -403,6 +459,28 @@ mod tests {
         assert!(CampaignConfig::parse("chunk_steps = 0").is_err());
         assert!(CampaignConfig::parse("chunk_steps = fast").is_err());
         assert_eq!(CampaignConfig::default().chunk_steps, ChunkSteps::Auto);
+    }
+
+    #[test]
+    fn supervision_keys_roundtrip() {
+        use std::time::Duration;
+        let cfg = CampaignConfig::parse(
+            "max_retries = 5\nbackoff_base_ms = 10\nbackoff_cap_ms = 100\n\
+             stall_window_ms = 250\ninstance_walltime_s = 600\n",
+        )
+        .unwrap();
+        let spec = cfg.to_supervisor_spec();
+        assert_eq!(spec.retry.max_attempts, 6, "retries + the first attempt");
+        assert_eq!(spec.retry.base_ms, 10);
+        assert_eq!(spec.retry.cap_ms, 100);
+        assert_eq!(spec.watchdog.stall_window, Some(Duration::from_millis(250)));
+        assert_eq!(spec.watchdog.walltime, Some(Duration::from_secs(600)));
+        assert!(spec.degrade);
+        assert!(spec.fault_plan.is_none(), "injection is never config-reachable");
+        // defaults: watchdogs disabled
+        let spec = CampaignConfig::default().to_supervisor_spec();
+        assert_eq!(spec.retry.max_attempts, 4);
+        assert_eq!(spec.watchdog, crate::webots::WatchdogSpec::default());
     }
 
     #[test]

@@ -42,7 +42,9 @@ pub fn propagate_copies(root: &World, n: u16, ports: &PortAllocator) -> Result<V
     for (i, &port) in plan.iter().enumerate() {
         let mut w = root.clone();
         w.find_mut("SumoInterface")
-            .expect("checked above")
+            .ok_or_else(|| {
+                Error::World("SumoInterface vanished between find and find_mut".into())
+            })?
             .set_field("port", port.to_string());
         out.push(SimCopy {
             index: i as u16,
@@ -76,6 +78,7 @@ pub fn write_copy_tree(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::sumo::MergeScenario;

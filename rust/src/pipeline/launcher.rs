@@ -11,12 +11,14 @@
 use crate::container::{BuildHost, ExecEnv};
 use crate::display::DisplayRegistry;
 use crate::output::RunDataset;
+use crate::pipeline::faults::{FaultInjection, FaultSite};
+use crate::pipeline::supervisor::panic_msg;
 use crate::pipeline::ChunkSteps;
 use crate::runtime::{EngineService, HloStepper};
 use crate::scenario::{PlannedRun, ScenarioRun};
 use crate::sumo::{duarouter, steps_for, FlowFile, MergeScenario, NativeIdmStepper, SumoSim};
 use crate::traci::TraciServer;
-use crate::webots::{StopCondition, WebotsSim, World};
+use crate::webots::{InstanceWatchdog, StopCondition, WatchdogSpec, WebotsSim, World};
 use crate::{Error, Result};
 
 /// Which physics engine an instance runs.
@@ -58,6 +60,12 @@ pub struct InstanceConfig {
     /// policy is deliberately inert there — any `Fixed(k)` just
     /// single-steps, with nothing to validate against.
     pub chunk_steps: ChunkSteps,
+    /// Seeded fault schedule bound to one attempt (the supervisor's
+    /// test seam; None in production launches).
+    pub faults: Option<FaultInjection>,
+    /// Per-instance walltime deadline + stall window (default: both
+    /// disabled).
+    pub watchdog: WatchdogSpec,
 }
 
 impl InstanceConfig {
@@ -85,6 +93,8 @@ impl InstanceConfig {
             max_steps: steps_for(horizon_s, planned.config.geometry.dt_s) + 100,
             scenario_run: Some(ScenarioRun::from(&planned.config)),
             chunk_steps: ChunkSteps::Auto,
+            faults: None,
+            watchdog: WatchdogSpec::default(),
         }
     }
 
@@ -93,6 +103,11 @@ impl InstanceConfig {
     pub fn with_chunk_steps(mut self, chunk_steps: ChunkSteps) -> Self {
         self.chunk_steps = chunk_steps;
         self
+    }
+
+    /// Does the bound fault schedule fire at `site` for this instance?
+    fn fault(&self, site: FaultSite) -> bool {
+        self.faults.as_ref().is_some_and(|f| f.fires(site, self.seed))
     }
 }
 
@@ -113,6 +128,10 @@ pub fn launch_instance(
     env: &ExecEnv,
     physics: &PhysicsEngine,
 ) -> Result<InstanceResult> {
+    // watchdog clock starts at launch: setup phases (duarouter, display
+    // acquisition) count against the walltime deadline too
+    let watchdog = InstanceWatchdog::new(cfg.run_id.clone(), cfg.watchdog);
+
     // container sanity: the tools the script invokes must exist
     env.exec("duarouter", &[])?;
     env.exec("xvfb-run", &["-a"])?;
@@ -128,9 +147,18 @@ pub fn launch_instance(
         Some(sr) => sr.network.clone(),
         None => cfg.scenario.network(),
     };
+    if cfg.fault(FaultSite::Duarouter) {
+        return Err(Error::DuarouterFailed(format!(
+            "injected: exit 1 (seed {})",
+            cfg.seed
+        )));
+    }
     let routes = duarouter(&net, &cfg.flows, cfg.seed)?;
 
     // (2) headless display — MUST auto-probe for parallel instances
+    if cfg.fault(FaultSite::Display) {
+        return Err(Error::DisplayInUse(99));
+    }
     let display = crate::webots::SimMode::headless(displays, true)?;
 
     // (3) SUMO back-end on the copy's unique port
@@ -146,6 +174,11 @@ pub fn launch_instance(
             ..NativeIdmStepper::default()
         }),
         PhysicsEngine::Hlo(service) => {
+            if cfg.fault(FaultSite::PjrtDispatch) {
+                return Err(Error::Runtime(
+                    "injected: PJRT dispatch failure".into(),
+                ));
+            }
             // geometry is a runtime operand of the schema-2 artifacts:
             // the same pooled executable serves every scenario family,
             // so scenario-matrix runs ride the PJRT fast path too
@@ -168,13 +201,35 @@ pub fn launch_instance(
             Box::new(stepper)
         }
     };
+    // stall injection wraps the stepper so the wedge happens inside a
+    // TraCI burst — exactly where the stall watchdog looks
+    let stepper = match (&cfg.faults, cfg.fault(FaultSite::Stall)) {
+        (Some(f), true) => f.plan.stall_wrap(stepper),
+        _ => stepper,
+    };
     let mut sim = SumoSim::new(cfg.scenario, cfg.capacity, routes, stepper);
     sim.set_chunk_limit(cfg.chunk_steps.limit());
+    if cfg.fault(FaultSite::TraciAccept) {
+        return Err(Error::PortInUse(port));
+    }
     let server = TraciServer::spawn(port, sim)?;
 
+    // setup is done — a deadline blown during it surfaces here, before
+    // the front-end opens (display + server drop guards clean up)
+    watchdog.check_deadline()?;
+
     // (4) Webots front-end
+    // the run loop inherits the SAME clock: the deadline covers the
+    // instance end to end, not just the stepped portion
     let mut webots = WebotsSim::open(&cfg.world)?
-        .with_stop_condition(StopCondition::SimTime(cfg.horizon_s));
+        .with_stop_condition(StopCondition::SimTime(cfg.horizon_s))
+        .with_watchdog(watchdog);
+
+    if cfg.fault(FaultSite::InRunPanic) {
+        // mid-run crash with the display lease and server thread live —
+        // the exact state the drop guards + catch_unwind must clean up
+        panic!("injected: in-run panic ({})", cfg.run_id);
+    }
 
     // (5) run — TraCI-batched between controller sampling points (§Perf)
     let _end = webots.run(cfg.max_steps)?;
@@ -215,8 +270,18 @@ pub fn launch_node_slots(
     physics: &PhysicsEngine,
 ) -> Vec<Result<InstanceResult>> {
     let displays = DisplayRegistry::new();
-    let sif = crate::container::build_webots_hpc_image(BuildHost::PersonalComputer)
-        .expect("image build on admin host succeeds");
+    let sif = match crate::container::build_webots_hpc_image(BuildHost::PersonalComputer) {
+        Ok(sif) => sif,
+        Err(e) => {
+            // no image, no launches: every slot fails with the same
+            // (non-Clone) cause instead of panicking the whole node
+            let msg = format!("image build failed: {e}");
+            return configs
+                .iter()
+                .map(|_| Err(Error::Config(msg.clone())))
+                .collect();
+        }
+    };
     std::thread::scope(|scope| {
         let displays = &displays;
         let handles: Vec<_> = configs
@@ -230,11 +295,20 @@ pub fn launch_node_slots(
                 scope.spawn(move || launch_instance(cfg, displays, &env, &physics))
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("no panic")).collect()
+        // a panicked slot is ONE failed result, not a node-wide abort:
+        // sibling handles still join and return their own outcomes
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                Err(payload) => Err(Error::Panic(panic_msg(payload))),
+            })
+            .collect()
     })
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::pipeline::{propagate_copies, PortAllocator};
@@ -262,6 +336,8 @@ mod tests {
             max_steps: 1000,
             scenario_run: None,
             chunk_steps: ChunkSteps::Auto,
+            faults: None,
+            watchdog: WatchdogSpec::default(),
         }
     }
 

@@ -1,0 +1,400 @@
+//! Crash-safe campaign ledger: the pipeline's source of truth for which
+//! runs are done.
+//!
+//! §5.1's "100% completion" is only checkable if completion is *recorded
+//! somewhere that survives the recorder*.  The ledger is an append-only
+//! JSONL file — one compact [`crate::util::Json`] object per line, one
+//! line per state transition — fsynced after every append, so a
+//! `qdel`-ed job, an OOM kill or a node reboot loses at most the line
+//! being written.  On reopen the ledger replays the file; a torn final
+//! line (the crash's half-written record) is dropped, every earlier
+//! transition is intact, and the supervised campaign re-materializes
+//! only the runs without a `completed` record.
+//!
+//! Transitions per `(epoch, slot)` run:
+//! `pending` (absent) → `running {attempt}` → `completed {attempts,
+//! degraded}` | `failed {attempts, class, error}`.  A `running` record
+//! with no terminal record marks the run the crash interrupted — it is
+//! re-run on resume (re-running a half-finished instance is safe: result
+//! CSVs are written atomically before `completed` is appended, and
+//! run_ids are deterministic so the rewrite is byte-identical).
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+
+use crate::util::Json;
+use crate::{Error, Result};
+
+/// Replayed state of one run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LedgerState {
+    /// A `running` record with no terminal record — in flight when the
+    /// process died; must be re-run.
+    Running { attempt: u32 },
+    /// Terminal success.
+    Completed { attempts: u32, degraded: bool },
+    /// Terminal failure (permanent error or retry budget exhausted).
+    Failed {
+        attempts: u32,
+        class: String,
+        error: String,
+    },
+}
+
+/// One replayed run entry: where it sits in the campaign grid plus its
+/// latest state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LedgerEntry {
+    pub epoch: u32,
+    pub slot: u32,
+    pub state: LedgerState,
+}
+
+/// Append-only JSONL ledger for one campaign.
+#[derive(Debug)]
+pub struct CampaignLedger {
+    path: PathBuf,
+    file: File,
+    entries: BTreeMap<String, LedgerEntry>,
+}
+
+impl CampaignLedger {
+    /// Open (creating if absent) and replay the ledger at `path`.
+    ///
+    /// Replay is tolerant of exactly one torn line — the *final* one, a
+    /// crash mid-append.  A malformed line followed by more records
+    /// means the file was corrupted some other way, and the ledger
+    /// refuses to guess.
+    pub fn open(path: impl Into<PathBuf>) -> Result<CampaignLedger> {
+        let path = path.into();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut entries = BTreeMap::new();
+        if path.exists() {
+            let reader = BufReader::new(File::open(&path)?);
+            let lines: Vec<String> = reader.lines().collect::<std::io::Result<_>>()?;
+            for (i, line) in lines.iter().enumerate() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match Json::parse(line).and_then(|j| replay_record(&j)) {
+                    Ok((run_id, entry)) => {
+                        entries.insert(run_id, entry);
+                    }
+                    Err(e) if i + 1 == lines.len() => {
+                        // torn final line: the crash this ledger exists
+                        // to survive — drop it, the run re-runs
+                        let _ = e;
+                    }
+                    Err(e) => {
+                        return Err(Error::Artifact(format!(
+                            "ledger {} corrupt at line {}: {e}",
+                            path.display(),
+                            i + 1
+                        )));
+                    }
+                }
+            }
+        }
+        let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        Ok(CampaignLedger {
+            path,
+            file,
+            entries,
+        })
+    }
+
+    /// The ledger file location (for operator messages).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Latest replayed state for `run_id` (`None` = pending, never
+    /// attempted).
+    pub fn state(&self, run_id: &str) -> Option<&LedgerEntry> {
+        self.entries.get(run_id)
+    }
+
+    /// Has `run_id` a terminal `completed` record?  The resume
+    /// predicate: completed runs are skipped, everything else
+    /// re-materializes.
+    pub fn is_completed(&self, run_id: &str) -> bool {
+        matches!(
+            self.entries.get(run_id),
+            Some(LedgerEntry {
+                state: LedgerState::Completed { .. },
+                ..
+            })
+        )
+    }
+
+    /// Completed runs in `(epoch, slot)` order — the resume-side view
+    /// used to rebuild the aggregate dataset.
+    pub fn completed(&self) -> Vec<(String, LedgerEntry)> {
+        let mut done: Vec<(String, LedgerEntry)> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| matches!(e.state, LedgerState::Completed { .. }))
+            .map(|(k, e)| (k.clone(), e.clone()))
+            .collect();
+        done.sort_by_key(|(_, e)| (e.epoch, e.slot));
+        done
+    }
+
+    /// Record `run_id` entering attempt `attempt`.
+    pub fn mark_running(
+        &mut self,
+        run_id: &str,
+        epoch: u32,
+        slot: u32,
+        attempt: u32,
+    ) -> Result<()> {
+        let record = base_record(run_id, epoch, slot, "running")
+            .with("attempt", Json::num(attempt as f64));
+        self.append(
+            run_id,
+            LedgerEntry {
+                epoch,
+                slot,
+                state: LedgerState::Running { attempt },
+            },
+            record,
+        )
+    }
+
+    /// Record terminal success after `attempts` launch attempts.
+    pub fn mark_completed(
+        &mut self,
+        run_id: &str,
+        epoch: u32,
+        slot: u32,
+        attempts: u32,
+        degraded: bool,
+    ) -> Result<()> {
+        let record = base_record(run_id, epoch, slot, "completed")
+            .with("attempts", Json::num(attempts as f64))
+            .with("degraded", Json::Bool(degraded));
+        self.append(
+            run_id,
+            LedgerEntry {
+                epoch,
+                slot,
+                state: LedgerState::Completed { attempts, degraded },
+            },
+            record,
+        )
+    }
+
+    /// Record terminal failure with its error class and message.
+    pub fn mark_failed(
+        &mut self,
+        run_id: &str,
+        epoch: u32,
+        slot: u32,
+        attempts: u32,
+        class: &str,
+        error: &str,
+    ) -> Result<()> {
+        let record = base_record(run_id, epoch, slot, "failed")
+            .with("attempts", Json::num(attempts as f64))
+            .with("class", Json::str(class))
+            .with("error", Json::str(error));
+        self.append(
+            run_id,
+            LedgerEntry {
+                epoch,
+                slot,
+                state: LedgerState::Failed {
+                    attempts,
+                    class: class.to_string(),
+                    error: error.to_string(),
+                },
+            },
+            record,
+        )
+    }
+
+    fn append(&mut self, run_id: &str, entry: LedgerEntry, record: Json) -> Result<()> {
+        let mut line = record.to_compact_string();
+        line.push('\n');
+        self.file.write_all(line.as_bytes())?;
+        self.file.flush()?;
+        // durability is the whole point: one fsync per transition
+        self.file.sync_data()?;
+        self.entries.insert(run_id.to_string(), entry);
+        Ok(())
+    }
+}
+
+/// Builder sugar for the record objects.
+trait WithField {
+    fn with(self, key: &str, value: Json) -> Json;
+}
+
+impl WithField for Json {
+    fn with(self, key: &str, value: Json) -> Json {
+        match self {
+            Json::Obj(mut m) => {
+                m.insert(key.to_string(), value);
+                Json::Obj(m)
+            }
+            other => other,
+        }
+    }
+}
+
+fn base_record(run_id: &str, epoch: u32, slot: u32, state: &str) -> Json {
+    Json::obj(vec![
+        ("run_id", Json::str(run_id)),
+        ("epoch", Json::num(epoch as f64)),
+        ("slot", Json::num(slot as f64)),
+        ("state", Json::str(state)),
+    ])
+}
+
+fn replay_record(j: &Json) -> Result<(String, LedgerEntry)> {
+    let run_id = j.get("run_id")?.as_str()?.to_string();
+    let epoch = j.get("epoch")?.as_f64()? as u32;
+    let slot = j.get("slot")?.as_f64()? as u32;
+    let state = match j.get("state")?.as_str()? {
+        "running" => LedgerState::Running {
+            attempt: j.get("attempt")?.as_f64()? as u32,
+        },
+        "completed" => LedgerState::Completed {
+            attempts: j.get("attempts")?.as_f64()? as u32,
+            degraded: matches!(j.get("degraded")?, Json::Bool(true)),
+        },
+        "failed" => LedgerState::Failed {
+            attempts: j.get("attempts")?.as_f64()? as u32,
+            class: j.get("class")?.as_str()?.to_string(),
+            error: j.get("error")?.as_str()?.to_string(),
+        },
+        other => {
+            return Err(Error::Artifact(format!("unknown ledger state {other:?}")));
+        }
+    };
+    Ok((run_id, LedgerEntry { epoch, slot, state }))
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("webots_hpc_ledger_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{name}_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        path
+    }
+
+    #[test]
+    fn transitions_replay_across_reopen() {
+        let path = tmp("replay");
+        {
+            let mut l = CampaignLedger::open(&path).unwrap();
+            l.mark_running("a-e0[0]", 0, 0, 0).unwrap();
+            l.mark_completed("a-e0[0]", 0, 0, 1, false).unwrap();
+            l.mark_running("a-e0[1]", 0, 1, 0).unwrap();
+            l.mark_running("a-e0[1]", 0, 1, 1).unwrap();
+            l.mark_failed("a-e0[1]", 0, 1, 2, "permanent", "bad config")
+                .unwrap();
+            l.mark_running("a-e1[0]", 1, 0, 0).unwrap();
+            // a-e1[0] left running: the crash-interrupted run
+        }
+        let l = CampaignLedger::open(&path).unwrap();
+        assert!(l.is_completed("a-e0[0]"));
+        assert!(!l.is_completed("a-e0[1]"));
+        assert!(!l.is_completed("a-e1[0]"));
+        assert_eq!(
+            l.state("a-e0[0]").unwrap().state,
+            LedgerState::Completed {
+                attempts: 1,
+                degraded: false
+            }
+        );
+        assert_eq!(
+            l.state("a-e0[1]").unwrap().state,
+            LedgerState::Failed {
+                attempts: 2,
+                class: "permanent".into(),
+                error: "bad config".into()
+            }
+        );
+        assert_eq!(
+            l.state("a-e1[0]").unwrap().state,
+            LedgerState::Running { attempt: 0 }
+        );
+        assert_eq!(l.completed().len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_final_line_is_dropped_not_fatal() {
+        let path = tmp("torn");
+        {
+            let mut l = CampaignLedger::open(&path).unwrap();
+            l.mark_running("r-e0[0]", 0, 0, 0).unwrap();
+            l.mark_completed("r-e0[0]", 0, 0, 1, true).unwrap();
+        }
+        // simulate a crash mid-append: half a record, no newline
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"{\"run_id\":\"r-e0[1]\",\"ep").unwrap();
+        }
+        let l = CampaignLedger::open(&path).unwrap();
+        assert!(l.is_completed("r-e0[0]"));
+        assert_eq!(
+            l.state("r-e0[0]").unwrap().state,
+            LedgerState::Completed {
+                attempts: 1,
+                degraded: true
+            }
+        );
+        assert!(l.state("r-e0[1]").is_none(), "torn record must vanish");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corruption_before_the_end_is_fatal() {
+        let path = tmp("corrupt");
+        std::fs::write(
+            &path,
+            "not json at all\n{\"run_id\":\"x\",\"epoch\":0,\"slot\":0,\"state\":\"running\",\"attempt\":0}\n",
+        )
+        .unwrap();
+        assert!(CampaignLedger::open(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn latest_transition_wins() {
+        let path = tmp("latest");
+        let mut l = CampaignLedger::open(&path).unwrap();
+        l.mark_running("w-e0[0]", 0, 0, 0).unwrap();
+        assert!(!l.is_completed("w-e0[0]"));
+        l.mark_completed("w-e0[0]", 0, 0, 3, false).unwrap();
+        assert!(l.is_completed("w-e0[0]"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn completed_sorted_by_epoch_then_slot() {
+        let path = tmp("sorted");
+        let mut l = CampaignLedger::open(&path).unwrap();
+        l.mark_completed("c-e1[0]", 1, 0, 1, false).unwrap();
+        l.mark_completed("c-e0[2]", 0, 2, 1, false).unwrap();
+        l.mark_completed("c-e0[1]", 0, 1, 1, false).unwrap();
+        let order: Vec<(u32, u32)> = l
+            .completed()
+            .iter()
+            .map(|(_, e)| (e.epoch, e.slot))
+            .collect();
+        assert_eq!(order, vec![(0, 1), (0, 2), (1, 0)]);
+        let _ = std::fs::remove_file(&path);
+    }
+}

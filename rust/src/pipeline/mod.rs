@@ -15,13 +15,29 @@
 //!   stepper,
 //! * [`campaign`] — the discrete-event campaign driver that reproduces
 //!   the ch. 5 experiments (epoch-locked PBS arrays vs a sequential
-//!   personal computer).
+//!   personal computer),
+//! * [`supervisor`] — per-run supervision: panic containment, error
+//!   taxonomy, bounded retry with seeded backoff, watchdog kills,
+//!   HLO→native degradation, and the ledger-driven campaign driver that
+//!   backs §5.1's completion-rate claim,
+//! * [`ledger`] — the crash-safe append-only JSONL campaign ledger
+//!   (resume = replay + skip completed),
+//! * [`faults`] — deterministic fault injection at the pipeline's real
+//!   failure sites (the harness that *proves* the claim).
+
+// This module is the unattended-campaign control plane: a stray panic
+// here is a node-wide abort at 3am.  Recoverable failures must flow
+// through Result — unwrap/expect are denied outside tests.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod campaign;
 pub mod config;
 pub mod copies;
+pub mod faults;
 pub mod launcher;
+pub mod ledger;
 pub mod ports;
+pub mod supervisor;
 pub mod walltime;
 
 pub use campaign::{
@@ -30,6 +46,14 @@ pub use campaign::{
 };
 pub use config::{CampaignConfig, ChunkSteps};
 pub use copies::{propagate_copies, write_copy_tree, SimCopy};
-pub use launcher::{launch_instance, launch_node_slots, InstanceConfig, InstanceResult, PhysicsEngine};
+pub use faults::{FaultInjection, FaultPlan, FaultSite};
+pub use launcher::{
+    launch_instance, launch_node_slots, InstanceConfig, InstanceResult, PhysicsEngine,
+};
+pub use ledger::{CampaignLedger, LedgerEntry, LedgerState};
 pub use ports::PortAllocator;
+pub use supervisor::{
+    classify, run_supervised_campaign, supervise_instance, AttemptRecord, ErrorClass, RetryPolicy,
+    RobustnessStats, RunReport, SupervisedCampaignSpec, SupervisedOutcome, SupervisorSpec,
+};
 pub use walltime::{pick_walltime, WalltimePolicy};

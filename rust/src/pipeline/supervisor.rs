@@ -1,0 +1,688 @@
+//! The run supervisor: what actually earns §5.1's "100% simulation
+//! completion rate".
+//!
+//! The paper's campaigns run unattended for 12 hours; the pipeline's
+//! real failure modes over that window (duarouter flaking under
+//! `--seed $RANDOM`, display/port contention between slots, a wedged
+//! back-end, a crashed instance) must become *retries*, not holes in
+//! the dataset.  [`supervise_instance`] wraps the launcher with:
+//!
+//! * **panic containment** — `catch_unwind` turns a crashed launch into
+//!   [`crate::Error::Panic`], a per-run error instead of a node abort,
+//! * **an error taxonomy** — [`classify`] splits errors into transient
+//!   (retryable), permanent (config/schema mistakes: retrying burns
+//!   walltime reproducing the same failure) and engine (the HLO
+//!   runtime),
+//! * **bounded retry** with exponential backoff and deterministic
+//!   seeded jitter ([`RetryPolicy`]),
+//! * **watchdogs** — the per-instance walltime deadline and stall
+//!   window of [`crate::webots::WatchdogSpec`], with kills counted,
+//! * **graceful degradation** — an engine failure on `PhysicsEngine::
+//!   Hlo` relaunches on the native stepper, flagging the dataset
+//!   `degraded` so the fallback is visible in the aggregate.
+//!
+//! [`run_supervised_campaign`] drives a whole campaign through the
+//! supervisor against the crash-safe [`super::CampaignLedger`]: every
+//! run's terminal state is fsynced before the campaign moves on, per-run
+//! CSVs are written atomically *before* the `completed` record, and the
+//! final aggregate is assembled from the ledger + disk — so a killed
+//! campaign resumes with zero duplicate run_ids and a byte-identical
+//! aggregate export.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::container::{build_webots_hpc_image, BuildHost, ExecEnv};
+use crate::display::DisplayRegistry;
+use crate::metrics::UsageSummary;
+use crate::output::{CampaignDataset, RunDataset};
+use crate::pbs::SchedulerStats;
+use crate::pipeline::faults::{FaultInjection, FaultPlan};
+use crate::pipeline::ledger::{CampaignLedger, LedgerState};
+use crate::pipeline::{
+    launch_instance, CampaignResult, InstanceConfig, InstanceResult, PhysicsEngine,
+};
+use crate::scenario::{FamilyRegistry, ScenarioMatrix, ScenarioRun};
+use crate::sumo::{steps_for, FlowFile, MergeScenario};
+use crate::util::Rng64;
+use crate::webots::nodes::sample_merge_world;
+use crate::webots::WatchdogSpec;
+use crate::{Error, Result};
+
+/// The retry taxonomy: what kind of failure is this?
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorClass {
+    /// Environmental flake (port/display contention, duarouter exit,
+    /// socket drop, stall/walltime kill, contained panic) — retrying
+    /// under backoff is exactly right.
+    Transient,
+    /// A config/manifest/world mistake: every retry reproduces it.
+    /// Never retried — fail fast and say why.
+    Permanent,
+    /// The HLO engine failed — retryable, but first eligible for the
+    /// native-stepper degradation path.
+    Engine,
+}
+
+impl ErrorClass {
+    /// Ledger spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorClass::Transient => "transient",
+            ErrorClass::Permanent => "permanent",
+            ErrorClass::Engine => "engine",
+        }
+    }
+}
+
+/// Classify a launch error for the retry decision.
+pub fn classify(e: &Error) -> ErrorClass {
+    match e {
+        // the engine service failing is its own class: the degradation
+        // path answers it before retry does
+        Error::Runtime(_) => ErrorClass::Engine,
+        // deterministic mistakes: the same inputs fail the same way
+        Error::Config(_)
+        | Error::World(_)
+        | Error::Artifact(_)
+        | Error::MissingInImage(_)
+        | Error::ImmutableImage(_)
+        | Error::PermissionDenied(_)
+        | Error::Unschedulable(_)
+        | Error::NoSuchJob(_) => ErrorClass::Permanent,
+        // everything environmental: port/display races, duarouter,
+        // socket I/O and protocol drops, watchdog kills, panics
+        _ => ErrorClass::Transient,
+    }
+}
+
+/// Bounded exponential backoff with deterministic seeded jitter.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total launch attempts per run (first try included).
+    pub max_attempts: u32,
+    /// Backoff before attempt 2 [ms]; doubles per further attempt.
+    pub base_ms: u64,
+    /// Backoff ceiling [ms].
+    pub cap_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base_ms: 250,
+            cap_ms: 5000,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff to sleep before launch attempt `attempt` (1-based: the
+    /// retry after the first failure is attempt 1's backoff).  The
+    /// jitter factor in [0.5, 1.5) is drawn from a seeded generator —
+    /// contending slots with different run seeds decorrelate, and the
+    /// exact sequence reproduces in a resumed or re-run campaign.
+    pub fn backoff_ms(&self, run_seed: u64, attempt: u32) -> u64 {
+        let exp = attempt.saturating_sub(1).min(32);
+        let nominal = self
+            .cap_ms
+            .min(self.base_ms.saturating_mul(1u64 << exp));
+        let mut rng = Rng64::seed_from_u64(
+            run_seed ^ (attempt as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let jitter = 0.5 + rng.gen_f64();
+        (nominal as f64 * jitter) as u64
+    }
+}
+
+/// Full supervision policy for one campaign.
+#[derive(Debug, Clone, Default)]
+pub struct SupervisorSpec {
+    pub retry: RetryPolicy,
+    pub watchdog: WatchdogSpec,
+    /// Fall back to the native stepper when the HLO engine fails
+    /// (instead of retrying the failing engine).
+    pub degrade: bool,
+    /// Test seam: injected fault schedule (None in production).
+    pub fault_plan: Option<FaultPlan>,
+}
+
+/// One failed launch attempt, for the report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AttemptRecord {
+    /// 0-based attempt index that failed.
+    pub attempt: u32,
+    pub class: ErrorClass,
+    pub error: String,
+    /// Backoff slept after this failure [ms] (0 = terminal or
+    /// degradation relaunch).
+    pub backoff_ms: u64,
+}
+
+/// What supervising one run produced.
+#[derive(Debug)]
+pub struct RunReport {
+    pub run_id: String,
+    /// Launch attempts made (≥ 1).
+    pub attempts: u32,
+    /// Every failed attempt, in order.
+    pub failures: Vec<AttemptRecord>,
+    /// Completed on the native fallback after an engine failure.
+    pub degraded: bool,
+    /// Attempts killed by the walltime deadline.
+    pub killed_walltime: u32,
+    /// Attempts killed by the stall watchdog.
+    pub killed_stall: u32,
+    pub outcome: Result<InstanceResult>,
+}
+
+/// Human-readable panic payload (shared with the launcher's per-slot
+/// containment).
+pub(crate) fn panic_msg(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn contain<F>(f: F) -> Result<InstanceResult>
+where
+    F: FnOnce() -> Result<InstanceResult>,
+{
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(payload) => Err(Error::Panic(panic_msg(payload))),
+    }
+}
+
+/// Run one instance under full supervision: containment, taxonomy,
+/// bounded retry, watchdogs, degradation.  Never panics; the terminal
+/// state is always a [`RunReport`].
+pub fn supervise_instance(
+    cfg: &InstanceConfig,
+    displays: &DisplayRegistry,
+    env: &ExecEnv,
+    physics: &PhysicsEngine,
+    spec: &SupervisorSpec,
+) -> RunReport {
+    let mut physics = physics.clone();
+    let mut attempt: u32 = 0;
+    let mut failures: Vec<AttemptRecord> = Vec::new();
+    let mut degraded = false;
+    let mut killed_walltime = 0u32;
+    let mut killed_stall = 0u32;
+
+    loop {
+        let mut attempt_cfg = cfg.clone();
+        attempt_cfg.watchdog = spec.watchdog;
+        if let Some(plan) = &spec.fault_plan {
+            attempt_cfg.faults = Some(FaultInjection {
+                plan: plan.clone(),
+                attempt,
+            });
+        }
+        match contain(|| launch_instance(&attempt_cfg, displays, env, &physics)) {
+            Ok(mut r) => {
+                r.dataset.degraded = degraded;
+                return RunReport {
+                    run_id: cfg.run_id.clone(),
+                    attempts: attempt + 1,
+                    failures,
+                    degraded,
+                    killed_walltime,
+                    killed_stall,
+                    outcome: Ok(r),
+                };
+            }
+            Err(e) => {
+                match &e {
+                    Error::WalltimeExceeded(_) => killed_walltime += 1,
+                    Error::Stalled(_) => killed_stall += 1,
+                    _ => {}
+                }
+                let class = classify(&e);
+                // degradation: an engine failure on the HLO path
+                // relaunches immediately on the native stepper — no
+                // backoff, the engine is not coming back by waiting
+                if class == ErrorClass::Engine
+                    && spec.degrade
+                    && matches!(physics, PhysicsEngine::Hlo(_))
+                {
+                    failures.push(AttemptRecord {
+                        attempt,
+                        class,
+                        error: e.to_string(),
+                        backoff_ms: 0,
+                    });
+                    physics = PhysicsEngine::Native;
+                    degraded = true;
+                    attempt += 1;
+                    if attempt >= spec.retry.max_attempts {
+                        return RunReport {
+                            run_id: cfg.run_id.clone(),
+                            attempts: attempt,
+                            failures,
+                            degraded,
+                            killed_walltime,
+                            killed_stall,
+                            outcome: Err(e),
+                        };
+                    }
+                    continue;
+                }
+                let terminal =
+                    class == ErrorClass::Permanent || attempt + 1 >= spec.retry.max_attempts;
+                let backoff_ms = if terminal {
+                    0
+                } else {
+                    spec.retry.backoff_ms(cfg.seed, attempt + 1)
+                };
+                failures.push(AttemptRecord {
+                    attempt,
+                    class,
+                    error: e.to_string(),
+                    backoff_ms,
+                });
+                attempt += 1;
+                if terminal {
+                    return RunReport {
+                        run_id: cfg.run_id.clone(),
+                        attempts: attempt,
+                        failures,
+                        degraded,
+                        killed_walltime,
+                        killed_stall,
+                        outcome: Err(e),
+                    };
+                }
+                std::thread::sleep(Duration::from_millis(backoff_ms));
+            }
+        }
+    }
+}
+
+/// Campaign-level supervision accounting — the evidence behind a
+/// completion-rate claim (retries and kills are *visible*, not folded
+/// into a smooth 100%).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RobustnessStats {
+    /// Runs the campaign covered (completed + failed + resumed skips).
+    pub runs: u64,
+    /// Runs with a terminal `completed` state.
+    pub completed: u64,
+    /// Runs that failed terminally (permanent error or retry budget).
+    pub failed: u64,
+    /// Total launch attempts across all runs.
+    pub attempts: u64,
+    /// Attempts beyond each run's first (the retry bill).
+    pub retries: u64,
+    /// Runs that completed on the native fallback.
+    pub degraded: u64,
+    /// Attempts killed by the walltime deadline.
+    pub killed_walltime: u64,
+    /// Attempts killed by the stall watchdog.
+    pub killed_stall: u64,
+    /// Runs skipped on resume because the ledger already has them.
+    pub resumed_skips: u64,
+}
+
+impl RobustnessStats {
+    /// completed / runs (1.0 for the empty campaign).
+    pub fn completion_rate(&self) -> f64 {
+        if self.runs == 0 {
+            return 1.0;
+        }
+        self.completed as f64 / self.runs as f64
+    }
+}
+
+/// A campaign driven through the supervisor + ledger.
+#[derive(Debug, Clone)]
+pub struct SupervisedCampaignSpec {
+    /// Campaign name — the run-id prefix (`{name}-e{epoch}[{slot}]`).
+    pub name: String,
+    pub nodes: usize,
+    pub slots_per_node: u32,
+    pub epochs: u64,
+    /// Per-run simulated horizon [s] (scenario-matrix runs are clamped
+    /// to it).
+    pub horizon_s: f32,
+    /// Traffic capacity for classic (non-matrix) runs.
+    pub capacity: usize,
+    /// Base seed; classic run seeds are `seed + run_index`.
+    pub seed: u64,
+    /// Scenario-matrix mode (None = classic fixed merge world).
+    pub matrix: Option<ScenarioMatrix>,
+    pub supervisor: SupervisorSpec,
+    /// Ledger + per-run CSV directory; reusing it resumes the campaign.
+    pub ledger_dir: PathBuf,
+    /// Test seam: abandon the campaign after launching this many runs
+    /// this session (simulates a mid-campaign kill; resumed-skipped
+    /// runs don't count as launches).
+    pub stop_after_runs: Option<u64>,
+}
+
+impl SupervisedCampaignSpec {
+    pub fn total_runs(&self) -> u64 {
+        self.epochs * self.nodes as u64 * self.slots_per_node as u64
+    }
+}
+
+/// What a supervised campaign produced.
+#[derive(Debug)]
+pub struct SupervisedOutcome {
+    pub result: CampaignResult,
+    /// Aggregate dataset, assembled from the ledger + on-disk CSVs —
+    /// deterministic across kill/resume.
+    pub dataset: CampaignDataset,
+    /// Per-run supervision reports for runs launched *this session*.
+    pub reports: Vec<RunReport>,
+    /// True when `stop_after_runs` abandoned the campaign mid-flight.
+    pub interrupted: bool,
+}
+
+/// The coordinates of run `idx` in the campaign grid.
+fn grid(spec: &SupervisedCampaignSpec, idx: u64) -> (u32, u32, usize) {
+    let per_epoch = spec.nodes as u64 * spec.slots_per_node as u64;
+    let epoch = (idx / per_epoch) as u32;
+    let slot = (idx % per_epoch) as u32;
+    let node = (slot / spec.slots_per_node) as usize;
+    (epoch, slot, node)
+}
+
+/// An ephemeral free TCP port for one run's TraCI server.
+fn free_port() -> Result<u16> {
+    let listener = std::net::TcpListener::bind(("127.0.0.1", 0))?;
+    Ok(listener.local_addr()?.port())
+}
+
+/// Run a campaign end to end under supervision, resuming from whatever
+/// the ledger in `spec.ledger_dir` already holds.
+pub fn run_supervised_campaign(
+    spec: &SupervisedCampaignSpec,
+    physics: &PhysicsEngine,
+) -> Result<SupervisedOutcome> {
+    let mut ledger = CampaignLedger::open(spec.ledger_dir.join("ledger.jsonl"))?;
+    let runs_dir = spec.ledger_dir.join("runs");
+    std::fs::create_dir_all(&runs_dir)?;
+
+    let displays = DisplayRegistry::new();
+    let sif = build_webots_hpc_image(BuildHost::PersonalComputer)?;
+    let env = ExecEnv::new(sif).bind("/tmp", "/tmp");
+    let registry = FamilyRegistry::builtin();
+
+    let total = spec.total_runs();
+    let mut stats = RobustnessStats::default();
+    let mut reports: Vec<RunReport> = Vec::new();
+    let mut walltimes_s: Vec<f64> = Vec::new();
+    let mut interrupted = false;
+    let mut launched = 0u64;
+
+    for idx in 0..total {
+        let (epoch, slot, node) = grid(spec, idx);
+        let base_id = format!("{}-e{epoch}[{slot}]", spec.name);
+        let planned = match &spec.matrix {
+            Some(m) => Some(m.materialize(&registry, idx)?),
+            None => None,
+        };
+        let run_id = match &planned {
+            Some(p) => {
+                let tag = &p.config.tag;
+                format!("{base_id}@{}#{}", tag.id, tag.sample_index)
+            }
+            None => base_id.clone(),
+        };
+
+        if ledger.is_completed(&run_id) {
+            stats.runs += 1;
+            stats.completed += 1;
+            stats.resumed_skips += 1;
+            continue;
+        }
+        if let Some(stop) = spec.stop_after_runs {
+            if launched >= stop {
+                interrupted = true;
+                break;
+            }
+        }
+
+        let world = sample_merge_world(free_port()?);
+        let cfg = match &planned {
+            Some(p) => {
+                let mut cfg = InstanceConfig::from_planned(&base_id, node, world, p);
+                cfg.horizon_s = cfg.horizon_s.min(spec.horizon_s);
+                cfg
+            }
+            None => {
+                let scenario = MergeScenario::default();
+                InstanceConfig {
+                    run_id: base_id.clone(),
+                    node,
+                    world,
+                    flows: FlowFile::merge_sample(1200.0, 300.0, spec.horizon_s),
+                    scenario,
+                    seed: spec.seed + idx,
+                    capacity: spec.capacity,
+                    horizon_s: spec.horizon_s,
+                    max_steps: steps_for(spec.horizon_s, scenario.dt_s) + 100,
+                    scenario_run: None,
+                    chunk_steps: crate::pipeline::ChunkSteps::Auto,
+                    faults: None,
+                    watchdog: WatchdogSpec::default(),
+                }
+            }
+        };
+
+        ledger.mark_running(&run_id, epoch, slot, 0)?;
+        let t0 = Instant::now();
+        let report = supervise_instance(&cfg, &displays, &env, physics, &spec.supervisor);
+        launched += 1;
+        stats.runs += 1;
+        stats.attempts += report.attempts as u64;
+        stats.retries += report.attempts.saturating_sub(1) as u64;
+        stats.killed_walltime += report.killed_walltime as u64;
+        stats.killed_stall += report.killed_stall as u64;
+        match &report.outcome {
+            Ok(r) => {
+                // atomic publish: CSV lands fully (or not at all) BEFORE
+                // the completed record — a crash between the two re-runs
+                // the instance, never trusts a torn file
+                let final_path = runs_dir.join(format!("e{epoch}_s{slot}.csv"));
+                let tmp_path = runs_dir.join(format!("e{epoch}_s{slot}.csv.tmp"));
+                std::fs::write(&tmp_path, r.dataset.to_csv())?;
+                std::fs::rename(&tmp_path, &final_path)?;
+                ledger.mark_completed(&run_id, epoch, slot, report.attempts, report.degraded)?;
+                stats.completed += 1;
+                if report.degraded {
+                    stats.degraded += 1;
+                }
+                walltimes_s.push(t0.elapsed().as_secs_f64());
+            }
+            Err(e) => {
+                ledger.mark_failed(
+                    &run_id,
+                    epoch,
+                    slot,
+                    report.attempts,
+                    classify(e).name(),
+                    &e.to_string(),
+                )?;
+                stats.failed += 1;
+            }
+        }
+        reports.push(report);
+    }
+
+    // assemble the aggregate purely from ledger + disk, in grid order —
+    // the SAME construction whether this session ran every instance or
+    // resumed a killed campaign, so the export is deterministic
+    let mut dataset = CampaignDataset::new();
+    for idx in 0..total {
+        let (epoch, slot, node) = grid(spec, idx);
+        let base_id = format!("{}-e{epoch}[{slot}]", spec.name);
+        let planned = match &spec.matrix {
+            Some(m) => Some(m.materialize(&registry, idx)?),
+            None => None,
+        };
+        let run_id = match &planned {
+            Some(p) => format!("{base_id}@{}#{}", p.config.tag.id, p.config.tag.sample_index),
+            None => base_id.clone(),
+        };
+        let Some(entry) = ledger.state(&run_id) else {
+            continue;
+        };
+        let LedgerState::Completed { degraded, .. } = entry.state else {
+            continue;
+        };
+        let seed = match &planned {
+            Some(p) => p.assignment.run_seed,
+            None => spec.seed + idx,
+        };
+        let csv = std::fs::read_to_string(runs_dir.join(format!("e{epoch}_s{slot}.csv")))?;
+        let mut ds = RunDataset::from_csv(&base_id, node, seed, &csv)?;
+        if let Some(p) = &planned {
+            ds = ds.with_scenario(ScenarioRun::from(&p.config).tag);
+        }
+        ds.degraded = degraded;
+        dataset.add(ds);
+    }
+
+    let mean = |v: &[f64]| {
+        if v.is_empty() {
+            0.0
+        } else {
+            v.iter().sum::<f64>() / v.len() as f64
+        }
+    };
+    let result = CampaignResult {
+        samples: Vec::new(),
+        stats: SchedulerStats {
+            submitted: stats.runs,
+            completed: stats.completed,
+            killed_walltime: stats.killed_walltime,
+            failed: stats.failed,
+        },
+        usage: UsageSummary {
+            runs: walltimes_s.len(),
+            mean_walltime_s: mean(&walltimes_s),
+            // the sequential driver has no cgroup accounting; walltime
+            // is the honest stand-in (single-threaded instances)
+            mean_cpu_time_s: mean(&walltimes_s),
+            mean_ram_gb: 0.0,
+            mean_cpu_percent: 100.0,
+        },
+        runs_per_node: dataset
+            .runs_per_node(spec.nodes)
+            .into_iter()
+            .map(|c| c as u64)
+            .collect(),
+        peak_occupancy: vec![1; spec.nodes],
+        robustness: Some(stats),
+    };
+
+    Ok(SupervisedOutcome {
+        result,
+        dataset,
+        reports,
+        interrupted,
+    })
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn taxonomy_pins_the_retry_decision() {
+        assert_eq!(classify(&Error::PortInUse(8873)), ErrorClass::Transient);
+        assert_eq!(classify(&Error::DisplayInUse(99)), ErrorClass::Transient);
+        assert_eq!(
+            classify(&Error::DuarouterFailed("exit 1".into())),
+            ErrorClass::Transient
+        );
+        assert_eq!(classify(&Error::Stalled(42)), ErrorClass::Transient);
+        assert_eq!(
+            classify(&Error::WalltimeExceeded("r".into())),
+            ErrorClass::Transient
+        );
+        assert_eq!(classify(&Error::Panic("boom".into())), ErrorClass::Transient);
+        assert_eq!(
+            classify(&Error::Protocol("socket dropped".into())),
+            ErrorClass::Transient
+        );
+        assert_eq!(
+            classify(&Error::Io(std::io::Error::other("reset"))),
+            ErrorClass::Transient
+        );
+        assert_eq!(classify(&Error::Config("bad".into())), ErrorClass::Permanent);
+        assert_eq!(classify(&Error::World("bad".into())), ErrorClass::Permanent);
+        assert_eq!(
+            classify(&Error::Artifact("schema".into())),
+            ErrorClass::Permanent
+        );
+        assert_eq!(classify(&Error::Runtime("pjrt".into())), ErrorClass::Engine);
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_within_cap() {
+        let p = RetryPolicy {
+            max_attempts: 8,
+            base_ms: 100,
+            cap_ms: 1000,
+        };
+        for attempt in 1..8u32 {
+            let nominal = 1000u64.min(100u64 << (attempt - 1));
+            let b = p.backoff_ms(7, attempt);
+            let lo = nominal / 2;
+            let hi = nominal + nominal / 2;
+            assert!(
+                (lo..=hi).contains(&b),
+                "attempt {attempt}: {b} outside [{lo}, {hi}]"
+            );
+        }
+        // deterministic: same (seed, attempt) → same backoff
+        assert_eq!(p.backoff_ms(7, 3), p.backoff_ms(7, 3));
+        // decorrelated: different seeds jitter differently somewhere
+        assert!((1..8).any(|a| p.backoff_ms(7, a) != p.backoff_ms(8, a)));
+    }
+
+    #[test]
+    fn robustness_stats_completion_rate() {
+        let mut s = RobustnessStats::default();
+        assert_eq!(s.completion_rate(), 1.0);
+        s.runs = 10;
+        s.completed = 10;
+        assert_eq!(s.completion_rate(), 1.0);
+        s.completed = 9;
+        s.failed = 1;
+        assert!((s.completion_rate() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grid_coordinates_cover_the_campaign() {
+        let spec = SupervisedCampaignSpec {
+            name: "g".into(),
+            nodes: 3,
+            slots_per_node: 2,
+            epochs: 2,
+            horizon_s: 5.0,
+            capacity: 64,
+            seed: 1,
+            matrix: None,
+            supervisor: SupervisorSpec::default(),
+            ledger_dir: std::env::temp_dir(),
+            stop_after_runs: None,
+        };
+        assert_eq!(spec.total_runs(), 12);
+        assert_eq!(grid(&spec, 0), (0, 0, 0));
+        assert_eq!(grid(&spec, 5), (0, 5, 2));
+        assert_eq!(grid(&spec, 6), (1, 0, 0));
+        assert_eq!(grid(&spec, 11), (1, 5, 2));
+    }
+}

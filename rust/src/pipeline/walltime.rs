@@ -36,6 +36,7 @@ pub fn pick_walltime(cost: &CostModel, cores: u32, policy: &WalltimePolicy) -> S
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

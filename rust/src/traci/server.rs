@@ -54,6 +54,30 @@ impl TraciServer {
     }
 }
 
+/// Drop guard: a server the launcher never [`TraciServer::join`]ed (an
+/// early-error path between spawn and the front-end handshake, or an
+/// unwinding panic) must not leak its serving thread.  The thread is
+/// either blocked in `accept()` — no client ever connected — or already
+/// winding down after its client vanished; a one-shot connection
+/// carrying `Close` unblocks the former, and joining reaps the thread
+/// so the port and stack are released before the error propagates.
+impl Drop for TraciServer {
+    fn drop(&mut self) {
+        let Some(handle) = self.handle.take() else {
+            return;
+        };
+        let nudge = TcpStream::connect(("127.0.0.1", self.port)).ok();
+        if let Some(mut s) = nudge.as_ref() {
+            // best-effort: the thread may already be past accept()
+            let _ = s.write_all(&Command::Close.encode());
+        }
+        let _ = handle.join();
+        // `nudge` stays open until after the join so the server's reply
+        // write cannot race a closed socket
+        drop(nudge);
+    }
+}
+
 fn serve(listener: TcpListener, mut sim: SumoSim) -> Result<()> {
     let (stream, _) = listener.accept()?;
     handle_client(stream, &mut sim)
@@ -168,6 +192,21 @@ mod tests {
         let mut c = TraciClient::connect(port).unwrap();
         c.close().unwrap();
         s1.join().unwrap();
+    }
+
+    #[test]
+    fn dropped_unjoined_server_releases_port_and_thread() {
+        // the early-error launcher path: spawned, but the front-end
+        // never connected and nobody called join()
+        let port = free_port();
+        {
+            let _server = TraciServer::spawn(port, test_sim()).unwrap();
+        }
+        // the drop guard reaped the serving thread → port re-bindable
+        assert!(
+            TcpListener::bind(("127.0.0.1", port)).is_ok(),
+            "port must be released by the drop guard"
+        );
     }
 
     #[test]

@@ -108,6 +108,43 @@ impl Json {
         s
     }
 
+    /// Serialize on one line, no whitespace — the JSONL form the
+    /// campaign ledger appends (one record per line; round-trips
+    /// through [`Json::parse`]).
+    pub fn to_compact_string(&self) -> String {
+        let mut s = String::new();
+        self.write_compact(&mut s);
+        s
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+            scalar => scalar.write(out, 0),
+        }
+    }
+
     fn write(&self, out: &mut String, indent: usize) {
         match self {
             Json::Null => out.push_str("null"),
@@ -385,6 +422,24 @@ fn utf8_len(first: u8) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn compact_form_is_one_line_and_round_trips() {
+        let j = Json::obj(vec![
+            ("run_id", Json::str("soak-e0[3]")),
+            ("state", Json::str("completed")),
+            ("attempts", Json::num(2.0)),
+            ("degraded", Json::Bool(false)),
+            ("extra", Json::arr(vec![Json::Null, Json::num(1.5)])),
+        ]);
+        let line = j.to_compact_string();
+        assert!(!line.contains('\n'), "JSONL record must be one line: {line}");
+        assert_eq!(Json::parse(&line).unwrap(), j);
+        assert_eq!(
+            line,
+            r#"{"attempts":2,"degraded":false,"extra":[null,1.5],"run_id":"soak-e0[3]","state":"completed"}"#
+        );
+    }
 
     #[test]
     fn parses_manifest_shaped_json() {

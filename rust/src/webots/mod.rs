@@ -34,5 +34,5 @@ pub use controller::{Controller, ControllerCmd, ControllerObs, MergeAssistContro
 pub use mode::{RunSpeed, SimMode};
 pub use nodes::{RobotNode, SensorSpec, SumoInterface, WorldInfo};
 pub use physics::WebotsSim;
-pub use supervisor::{StopCondition, Supervisor};
+pub use supervisor::{InstanceWatchdog, StopCondition, Supervisor, WatchdogSpec};
 pub use world::{Node, World};

@@ -12,7 +12,7 @@ use crate::{Error, Result};
 
 use super::controller::{controller_by_name, Controller, ControllerCmd, ControllerObs};
 use super::nodes::{RobotNode, SumoInterface, WorldInfo};
-use super::supervisor::{StopCondition, Supervisor};
+use super::supervisor::{InstanceWatchdog, StopCondition, Supervisor};
 use super::world::World;
 
 /// A running Webots instance (front-end side).
@@ -22,6 +22,8 @@ pub struct WebotsSim {
     traci: TraciClient,
     controllers: Vec<Box<dyn Controller>>,
     supervisor: Supervisor,
+    /// Wall-clock limits ([`InstanceWatchdog`]); None = unguarded.
+    watchdog: Option<InstanceWatchdog>,
     time_s: f32,
     steps: u64,
     controller_cmds: u64,
@@ -69,6 +71,7 @@ impl WebotsSim {
             traci,
             controllers,
             supervisor: Supervisor::new(StopCondition::None),
+            watchdog: None,
             time_s: 0.0,
             steps: 0,
             controller_cmds: 0,
@@ -78,6 +81,15 @@ impl WebotsSim {
 
     pub fn with_stop_condition(mut self, c: StopCondition) -> Self {
         self.supervisor = Supervisor::new(c);
+        self
+    }
+
+    /// Attach a wall-clock watchdog (walltime deadline + stall window),
+    /// consulted around each burst of [`Self::run`].  The caller starts
+    /// the watchdog's clock, so launch-time setup (duarouter, display
+    /// acquisition) counts against the same deadline.
+    pub fn with_watchdog(mut self, w: InstanceWatchdog) -> Self {
+        self.watchdog = Some(w);
         self
     }
 
@@ -197,10 +209,17 @@ impl WebotsSim {
         let sample_every = self.sample_every();
         let mut remaining = max_steps;
         while remaining > 0 {
+            if let Some(w) = &self.watchdog {
+                w.check_deadline()?;
+            }
             // batch to the next sampling boundary
             let into_period = self.steps % sample_every;
             let k = (sample_every - into_period).min(remaining);
+            let burst_start = self.watchdog.is_some().then(std::time::Instant::now);
             let burst = self.step_n(k)?;
+            if let (Some(w), Some(t0)) = (&self.watchdog, burst_start) {
+                w.check_burst(self.steps, t0.elapsed())?;
+            }
             remaining -= k;
             let mut stopped = false;
             for o in &burst {

@@ -4,6 +4,15 @@
 //! stop condition for their simulation, or else the Webots instance will
 //! run indefinitely" (§3.1.3).  [`StopCondition`] is that build-in; the
 //! [`Supervisor`] evaluates it each step.
+//!
+//! [`InstanceWatchdog`] is the wall-clock counterpart: a per-instance
+//! walltime deadline plus a stall window, checked around each TraCI
+//! burst of [`super::WebotsSim::run`] so a wedged back-end kills ONE
+//! run instead of eating the node's whole PBS walltime.
+
+use std::time::{Duration, Instant};
+
+use crate::{Error, Result};
 
 /// When to end a batch simulation run.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -40,6 +49,67 @@ impl Supervisor {
     }
 }
 
+/// Wall-clock limits for one instance (both disabled by default: the
+/// step budget of [`super::WebotsSim::run`] stays the only guard).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WatchdogSpec {
+    /// Hard deadline for the whole instance (route generation through
+    /// shutdown); exceeding it yields [`Error::WalltimeExceeded`].
+    pub walltime: Option<Duration>,
+    /// Max wall time ONE TraCI burst may take.  A healthy burst is a
+    /// handful of milliseconds of physics; a burst that blows this
+    /// window means the back-end stalled mid-run
+    /// ([`Error::Stalled`]).
+    pub stall_window: Option<Duration>,
+}
+
+/// Self-checking watchdog: created when the instance launches, consulted
+/// around every burst.  No monitor thread — the checks ride the run loop
+/// itself, so an in-process stall is detected as soon as the burst
+/// returns (a worker that never returns at all is the coordinator
+/// fabric's to kill; see ROADMAP).
+#[derive(Debug)]
+pub struct InstanceWatchdog {
+    label: String,
+    spec: WatchdogSpec,
+    started: Instant,
+}
+
+impl InstanceWatchdog {
+    /// Start the clock.  `label` names the run in the
+    /// [`Error::WalltimeExceeded`] payload.
+    pub fn new(label: impl Into<String>, spec: WatchdogSpec) -> Self {
+        InstanceWatchdog {
+            label: label.into(),
+            spec,
+            started: Instant::now(),
+        }
+    }
+
+    /// Walltime deadline — checked before each burst (and usable right
+    /// after launch-time setup phases like duarouter).
+    pub fn check_deadline(&self) -> Result<()> {
+        if let Some(limit) = self.spec.walltime {
+            if self.started.elapsed() > limit {
+                return Err(Error::WalltimeExceeded(self.label.clone()));
+            }
+        }
+        Ok(())
+    }
+
+    /// Stall window — checked after each burst with the burst's wall
+    /// time and the cumulative step count (the [`Error::Stalled`]
+    /// payload).
+    pub fn check_burst(&self, steps: u64, burst_elapsed: Duration) -> Result<()> {
+        if let Some(window) = self.spec.stall_window {
+            if burst_elapsed > window {
+                return Err(Error::Stalled(steps));
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -69,5 +139,44 @@ mod tests {
     fn none_never_stops() {
         let s = Supervisor::new(StopCondition::None);
         assert!(!s.should_stop(1e9, true, 1e9));
+    }
+
+    #[test]
+    fn default_watchdog_is_inert() {
+        let w = InstanceWatchdog::new("r", WatchdogSpec::default());
+        assert!(w.check_deadline().is_ok());
+        assert!(w.check_burst(1_000_000, Duration::from_secs(3600)).is_ok());
+    }
+
+    #[test]
+    fn walltime_deadline_fires() {
+        let w = InstanceWatchdog::new(
+            "run-x",
+            WatchdogSpec {
+                walltime: Some(Duration::ZERO),
+                stall_window: None,
+            },
+        );
+        std::thread::sleep(Duration::from_millis(2));
+        match w.check_deadline() {
+            Err(Error::WalltimeExceeded(label)) => assert_eq!(label, "run-x"),
+            other => panic!("expected walltime kill, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stall_window_fires_on_slow_burst() {
+        let w = InstanceWatchdog::new(
+            "r",
+            WatchdogSpec {
+                walltime: None,
+                stall_window: Some(Duration::from_millis(50)),
+            },
+        );
+        assert!(w.check_burst(10, Duration::from_millis(5)).is_ok());
+        match w.check_burst(42, Duration::from_millis(120)) {
+            Err(Error::Stalled(steps)) => assert_eq!(steps, 42),
+            other => panic!("expected stall kill, got {other:?}"),
+        }
     }
 }

@@ -91,6 +91,8 @@ fn single_instance_end_to_end_native() {
         max_steps: 500,
         scenario_run: None,
         chunk_steps: ChunkSteps::Auto,
+        faults: None,
+        watchdog: Default::default(),
     };
     let r = launch_instance(&cfg, &displays, &env, &PhysicsEngine::Native).unwrap();
     assert_eq!(r.steps, 200);
@@ -126,6 +128,8 @@ fn parallel_instances_end_to_end_hlo() {
             max_steps: 300,
             scenario_run: None,
             chunk_steps: ChunkSteps::Auto,
+            faults: None,
+            watchdog: Default::default(),
         })
         .collect();
     let results = launch_node_slots(configs, &PhysicsEngine::Hlo(service));
@@ -187,6 +191,8 @@ fn copy_tree_boots_from_disk() {
         max_steps: 100,
         scenario_run: None,
         chunk_steps: ChunkSteps::Auto,
+        faults: None,
+        watchdog: Default::default(),
     };
     let r = launch_instance(&cfg, &displays, &env, &PhysicsEngine::Native).unwrap();
     assert_eq!(r.port, base + 7, "copy 1 runs on base+7");

@@ -10,6 +10,12 @@ cargo fmt --all -- --check
 echo "== cargo clippy -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
+echo "== control-plane lint gate (no unwrap/expect in pipeline/) =="
+# the deny attribute is what clippy enforces; make sure nobody quietly
+# removes it from the unattended-campaign control plane
+grep -q 'deny(clippy::unwrap_used, clippy::expect_used)' rust/src/pipeline/mod.rs \
+  || { echo "FAIL: pipeline/mod.rs lost its unwrap/expect deny gate"; exit 1; }
+
 echo "== cargo build --examples =="
 cargo build --examples
 
@@ -27,5 +33,10 @@ fi
 echo "== tier-1: cargo build --release && cargo test -q =="
 cargo build --release
 cargo test -q
+
+echo "== robustness: fault-injection soak (32 runs) =="
+# the §5.1 completion-rate claim under ≥10% injected transient faults;
+# the schedule is seeded, so this size is exactly reproducible
+WEBOTS_HPC_SOAK_RUNS=32 cargo test -q --release --test robustness
 
 echo "check.sh: all gates passed"
