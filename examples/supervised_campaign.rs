@@ -45,6 +45,7 @@ fn main() -> webots_hpc::Result<()> {
             fault_plan: Some(FaultPlan::transient_only(99, 0.15)),
         },
         ledger_dir: ledger_dir.path().to_path_buf(),
+        retry_failed: false,
         stop_after_runs: None,
     };
 

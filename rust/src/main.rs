@@ -48,8 +48,10 @@ const USAGE: &str = "usage: webots-hpc <info|table|fig|dist|campaign|submit|run-
   supervise [--nodes N] [--slots S] [--epochs E] [--engine native|hlo]
             [--horizon S] [--seed K] [--retries R] [--walltime SECS]
             [--ledger DIR] [--fault-rate P] [--fault-seed K] [--config path]
+            [--retry-failed true]
             supervised campaign: crash-safe ledger + retry/backoff +
-            watchdogs (reuse --ledger to resume a killed campaign)";
+            watchdogs (reuse --ledger to resume a killed campaign;
+            permanent failures stay settled unless --retry-failed true)";
 
 /// Tiny flag parser: positional args + `--key value` pairs.
 struct Args {
@@ -395,6 +397,7 @@ fn supervise(args: &Args) -> Result<()> {
         matrix: None,
         supervisor,
         ledger_dir: args.get_str("ledger", "supervised-ledger").into(),
+        retry_failed: args.get("retry-failed", false)?,
         stop_after_runs: None,
     };
     let engine = args.get_str("engine", "native");

@@ -21,7 +21,7 @@
 
 use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};
-use std::io::{BufRead, BufReader, Write};
+use std::io::Write;
 use std::path::{Path, PathBuf};
 
 use crate::util::Json;
@@ -58,36 +58,59 @@ pub struct CampaignLedger {
     path: PathBuf,
     file: File,
     entries: BTreeMap<String, LedgerEntry>,
+    header: Option<Json>,
+}
+
+/// One replayed ledger line: the campaign header or a run transition.
+enum Replayed {
+    Header(Json),
+    Entry(String, LedgerEntry),
 }
 
 impl CampaignLedger {
     /// Open (creating if absent) and replay the ledger at `path`.
     ///
     /// Replay is tolerant of exactly one torn line — the *final* one, a
-    /// crash mid-append.  A malformed line followed by more records
-    /// means the file was corrupted some other way, and the ledger
-    /// refuses to guess.
+    /// crash mid-append.  The torn fragment is truncated off the file
+    /// before the ledger reopens for append: leaving it in place would
+    /// glue the resumed session's first record onto the fragment,
+    /// producing a merged garbage line that is no longer final once
+    /// more records follow — and every later `open` would then refuse
+    /// the whole ledger as corrupt.  A malformed line followed by more
+    /// records means the file was corrupted some other way, and the
+    /// ledger refuses to guess.
     pub fn open(path: impl Into<PathBuf>) -> Result<CampaignLedger> {
         let path = path.into();
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
         let mut entries = BTreeMap::new();
+        let mut header: Option<Json> = None;
+        let mut torn_at: Option<u64> = None;
         if path.exists() {
-            let reader = BufReader::new(File::open(&path)?);
-            let lines: Vec<String> = reader.lines().collect::<std::io::Result<_>>()?;
-            for (i, line) in lines.iter().enumerate() {
+            let content = std::fs::read_to_string(&path)?;
+            let raw_lines: Vec<&str> = content.split_inclusive('\n').collect();
+            let mut offset: u64 = 0;
+            for (i, raw) in raw_lines.iter().enumerate() {
+                let line_start = offset;
+                offset += raw.len() as u64;
+                let line = raw.trim_end_matches('\n');
                 if line.trim().is_empty() {
                     continue;
                 }
-                match Json::parse(line).and_then(|j| replay_record(&j)) {
-                    Ok((run_id, entry)) => {
+                match Json::parse(line).and_then(replay_line) {
+                    Ok(Replayed::Header(h)) => {
+                        header = Some(h);
+                    }
+                    Ok(Replayed::Entry(run_id, entry)) => {
                         entries.insert(run_id, entry);
                     }
-                    Err(e) if i + 1 == lines.len() => {
+                    Err(e) if i + 1 == raw_lines.len() => {
                         // torn final line: the crash this ledger exists
-                        // to survive — drop it, the run re-runs
+                        // to survive — drop it (the run re-runs) and
+                        // remember where it starts, for truncation
                         let _ = e;
+                        torn_at = Some(line_start);
                     }
                     Err(e) => {
                         return Err(Error::Artifact(format!(
@@ -100,16 +123,65 @@ impl CampaignLedger {
             }
         }
         let file = OpenOptions::new().create(true).append(true).open(&path)?;
+        if let Some(len) = torn_at {
+            // cut the fragment off so the next append starts a clean
+            // line (O_APPEND writes land at the new, truncated EOF)
+            file.set_len(len)?;
+            file.sync_data()?;
+        }
         Ok(CampaignLedger {
             path,
             file,
             entries,
+            header,
         })
     }
 
     /// The ledger file location (for operator messages).
     pub fn path(&self) -> &Path {
         &self.path
+    }
+
+    /// The replayed campaign header, if one was written.
+    pub fn header(&self) -> Option<&Json> {
+        self.header.as_ref()
+    }
+
+    /// Bind this ledger to a campaign shape.
+    ///
+    /// The first open writes `fingerprint` (tagged `"state":
+    /// "campaign"`) as the ledger's header record; every later open
+    /// must present the identical fingerprint or the ledger refuses to
+    /// resume.  Without this guard, resuming a ledger dir under a
+    /// changed spec would reuse matching run_ids/CSV paths while
+    /// recomputing seeds and `(epoch, slot)` coordinates under the new
+    /// grid — silently mislabeling the rebuilt aggregate.
+    pub fn ensure_header(&mut self, fingerprint: &Json) -> Result<()> {
+        let record = fingerprint.clone().with("state", Json::str("campaign"));
+        match &self.header {
+            Some(existing) => {
+                if existing.to_compact_string() != record.to_compact_string() {
+                    return Err(Error::Artifact(format!(
+                        "ledger {} belongs to a different campaign shape:\n  \
+                         recorded:  {}\n  requested: {}\n\
+                         use a fresh ledger dir for a changed campaign",
+                        self.path.display(),
+                        existing.to_compact_string(),
+                        record.to_compact_string()
+                    )));
+                }
+                Ok(())
+            }
+            None => {
+                let mut line = record.to_compact_string();
+                line.push('\n');
+                self.file.write_all(line.as_bytes())?;
+                self.file.flush()?;
+                self.file.sync_data()?;
+                self.header = Some(record);
+                Ok(())
+            }
+        }
     }
 
     /// Latest replayed state for `run_id` (`None` = pending, never
@@ -255,6 +327,14 @@ fn base_record(run_id: &str, epoch: u32, slot: u32, state: &str) -> Json {
     ])
 }
 
+fn replay_line(j: Json) -> Result<Replayed> {
+    if matches!(j.get("state").and_then(Json::as_str), Ok("campaign")) {
+        return Ok(Replayed::Header(j));
+    }
+    let (run_id, entry) = replay_record(&j)?;
+    Ok(Replayed::Entry(run_id, entry))
+}
+
 fn replay_record(j: &Json) -> Result<(String, LedgerEntry)> {
     let run_id = j.get("run_id")?.as_str()?.to_string();
     let epoch = j.get("epoch")?.as_f64()? as u32;
@@ -356,6 +436,68 @@ mod tests {
             }
         );
         assert!(l.state("r-e0[1]").is_none(), "torn record must vanish");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_tail_then_resume_then_reopen_keeps_every_record() {
+        let path = tmp("torn_resume");
+        {
+            let mut l = CampaignLedger::open(&path).unwrap();
+            l.mark_running("t-e0[0]", 0, 0, 0).unwrap();
+            l.mark_completed("t-e0[0]", 0, 0, 1, false).unwrap();
+        }
+        // crash mid-append: half a record, no newline
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"{\"run_id\":\"t-e0[1]\",\"ep").unwrap();
+        }
+        // resumed session: the torn fragment must be truncated, so
+        // these appends start clean lines instead of gluing onto it
+        {
+            let mut l = CampaignLedger::open(&path).unwrap();
+            l.mark_running("t-e0[1]", 0, 1, 0).unwrap();
+            l.mark_completed("t-e0[1]", 0, 1, 1, false).unwrap();
+        }
+        // a third open must replay every record — before truncation,
+        // the glued garbage line sat mid-file and poisoned the ledger
+        let l = CampaignLedger::open(&path).unwrap();
+        assert!(l.is_completed("t-e0[0]"));
+        assert!(l.is_completed("t-e0[1]"));
+        assert_eq!(l.completed().len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn header_binds_the_ledger_to_one_campaign_shape() {
+        let path = tmp("header");
+        let shape = |nodes: f64| {
+            Json::obj(vec![
+                ("name", Json::str("camp")),
+                ("nodes", Json::num(nodes)),
+                ("seed", Json::str("2021")),
+            ])
+        };
+        {
+            let mut l = CampaignLedger::open(&path).unwrap();
+            assert!(l.header().is_none());
+            l.ensure_header(&shape(2.0)).unwrap();
+            l.mark_completed("camp-e0[0]", 0, 0, 1, false).unwrap();
+        }
+        // same shape: resumes, entries intact
+        {
+            let mut l = CampaignLedger::open(&path).unwrap();
+            assert!(l.header().is_some());
+            l.ensure_header(&shape(2.0)).unwrap();
+            assert!(l.is_completed("camp-e0[0]"));
+        }
+        // changed shape: refused, nothing silently relabeled
+        let mut l = CampaignLedger::open(&path).unwrap();
+        let err = l.ensure_header(&shape(3.0)).unwrap_err();
+        assert!(
+            err.to_string().contains("different campaign shape"),
+            "{err}"
+        );
         let _ = std::fs::remove_file(&path);
     }
 

@@ -45,7 +45,7 @@ use crate::pipeline::{
 };
 use crate::scenario::{FamilyRegistry, ScenarioMatrix, ScenarioRun};
 use crate::sumo::{steps_for, FlowFile, MergeScenario};
-use crate::util::Rng64;
+use crate::util::{Json, Rng64};
 use crate::webots::nodes::sample_merge_world;
 use crate::webots::WatchdogSpec;
 use crate::{Error, Result};
@@ -361,6 +361,12 @@ pub struct SupervisedCampaignSpec {
     pub supervisor: SupervisorSpec,
     /// Ledger + per-run CSV directory; reusing it resumes the campaign.
     pub ledger_dir: PathBuf,
+    /// On resume, re-run runs whose latest ledger state is a permanent
+    /// failure.  Default off: a permanent error (bad config/manifest)
+    /// reproduces identically on every attempt, so re-running it each
+    /// session just burns walltime — opt in only after fixing the
+    /// inputs.
+    pub retry_failed: bool,
     /// Test seam: abandon the campaign after launching this many runs
     /// this session (simulates a mid-campaign kill; resumed-skipped
     /// runs don't count as launches).
@@ -396,9 +402,48 @@ fn grid(spec: &SupervisedCampaignSpec, idx: u64) -> (u32, u32, usize) {
 }
 
 /// An ephemeral free TCP port for one run's TraCI server.
+///
+/// Known race: the listener is dropped before the TraCI server rebinds
+/// the port, so another process can grab it in between.  The loss is a
+/// `PortInUse`, classified transient — the retry redraws a fresh port,
+/// which is how the window is absorbed rather than eliminated.
 fn free_port() -> Result<u16> {
     let listener = std::net::TcpListener::bind(("127.0.0.1", 0))?;
     Ok(listener.local_addr()?.port())
+}
+
+/// FNV-1a over the matrix's debug form — a stable spelling of the
+/// sweep for the ledger header.
+fn matrix_fingerprint(matrix: &Option<ScenarioMatrix>) -> String {
+    match matrix {
+        None => "none".to_string(),
+        Some(m) => {
+            let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+            for b in format!("{m:?}").bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+            format!("{h:016x}")
+        }
+    }
+}
+
+/// The campaign-shape fingerprint bound into the ledger header: every
+/// field that determines run_ids, seeds, CSV paths, or run content.
+/// Resuming a ledger dir under a different shape is refused instead of
+/// silently mislabeling the rebuilt aggregate.
+fn campaign_fingerprint(spec: &SupervisedCampaignSpec) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&spec.name)),
+        ("nodes", Json::num(spec.nodes as f64)),
+        ("slots_per_node", Json::num(spec.slots_per_node as f64)),
+        ("epochs", Json::num(spec.epochs as f64)),
+        ("horizon_s", Json::num(spec.horizon_s as f64)),
+        ("capacity", Json::num(spec.capacity as f64)),
+        // string: u64 seeds don't fit f64 losslessly
+        ("seed", Json::str(spec.seed.to_string())),
+        ("matrix", Json::str(matrix_fingerprint(&spec.matrix))),
+    ])
 }
 
 /// Run a campaign end to end under supervision, resuming from whatever
@@ -408,6 +453,7 @@ pub fn run_supervised_campaign(
     physics: &PhysicsEngine,
 ) -> Result<SupervisedOutcome> {
     let mut ledger = CampaignLedger::open(spec.ledger_dir.join("ledger.jsonl"))?;
+    ledger.ensure_header(&campaign_fingerprint(spec))?;
     let runs_dir = spec.ledger_dir.join("runs");
     std::fs::create_dir_all(&runs_dir)?;
 
@@ -438,10 +484,26 @@ pub fn run_supervised_campaign(
             None => base_id.clone(),
         };
 
-        if ledger.is_completed(&run_id) {
+        // resume predicate: completed runs are settled; so are
+        // permanent failures (unless retry_failed) — a config error
+        // reproduces identically, re-running it burns walltime
+        let settled = match ledger.state(&run_id).map(|e| &e.state) {
+            Some(LedgerState::Completed { .. }) => Some(true),
+            Some(LedgerState::Failed { class, .. })
+                if class.as_str() == ErrorClass::Permanent.name() && !spec.retry_failed =>
+            {
+                Some(false)
+            }
+            _ => None,
+        };
+        if let Some(completed) = settled {
             stats.runs += 1;
-            stats.completed += 1;
             stats.resumed_skips += 1;
+            if completed {
+                stats.completed += 1;
+            } else {
+                stats.failed += 1;
+            }
             continue;
         }
         if let Some(stop) = spec.stop_after_runs {
@@ -677,6 +739,7 @@ mod tests {
             matrix: None,
             supervisor: SupervisorSpec::default(),
             ledger_dir: std::env::temp_dir(),
+            retry_failed: false,
             stop_after_runs: None,
         };
         assert_eq!(spec.total_runs(), 12);

@@ -68,6 +68,7 @@ fn soak_spec(name: &str, runs: u64, ledger_dir: std::path::PathBuf) -> Supervise
             fault_plan: Some(FaultPlan::transient_only(PLAN_SEED, FAULT_RATE)),
         },
         ledger_dir,
+        retry_failed: false,
         stop_after_runs: None,
     }
 }
@@ -172,6 +173,100 @@ fn killed_campaign_resumes_to_identical_aggregate() {
         control.dataset.to_ml_csv(),
         "kill/resume changed the aggregate dataset"
     );
+}
+
+/// A crash can tear the ledger's final line mid-append; the resumed
+/// session must truncate the fragment before appending, or its first
+/// record glues onto the fragment and the *next* resume finds a
+/// mid-file garbage line and refuses the whole ledger.
+#[test]
+fn torn_ledger_tail_survives_resume_and_a_second_resume() {
+    use std::io::Write;
+    let runs = 4u64;
+    let dir = TempDir::new("webots-hpc-torn").unwrap();
+    let mut spec = soak_spec("torn", runs, dir.path().to_path_buf());
+    spec.supervisor.fault_plan = None;
+
+    // session 1: killed after 2 launches, then the crash tears the tail
+    spec.stop_after_runs = Some(2);
+    run_supervised_campaign(&spec, &PhysicsEngine::Native).unwrap();
+    let ledger_path = dir.path().join("ledger.jsonl");
+    {
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&ledger_path)
+            .unwrap();
+        f.write_all(b"{\"run_id\":\"torn-e0[2]\",\"ep").unwrap();
+    }
+
+    // session 2: resumes past the torn tail and finishes the campaign
+    spec.stop_after_runs = None;
+    let resumed = run_supervised_campaign(&spec, &PhysicsEngine::Native).unwrap();
+    let s = resumed.result.robustness.unwrap();
+    assert_eq!(s.completed, runs);
+    assert_eq!(s.resumed_skips, 2);
+
+    // session 3: the ledger must still replay cleanly end to end
+    let done = run_supervised_campaign(&spec, &PhysicsEngine::Native).unwrap();
+    let s = done.result.robustness.unwrap();
+    assert_eq!(s.completed, runs);
+    assert_eq!(s.resumed_skips, runs, "every run settled, none re-ran");
+    assert!(done.dataset.run_ids_unique());
+}
+
+/// Resuming a ledger dir under a different campaign shape must be
+/// refused, not silently relabel seeds and grid coordinates in the
+/// rebuilt aggregate.
+#[test]
+fn resume_refuses_a_changed_campaign_shape() {
+    let dir = TempDir::new("webots-hpc-shape").unwrap();
+    let mut spec = soak_spec("shape", 4, dir.path().to_path_buf());
+    spec.supervisor.fault_plan = None;
+    spec.stop_after_runs = Some(2);
+    run_supervised_campaign(&spec, &PhysicsEngine::Native).unwrap();
+
+    spec.seed += 1; // same dir, different seed grid
+    let err = run_supervised_campaign(&spec, &PhysicsEngine::Native).unwrap_err();
+    assert!(
+        err.to_string().contains("different campaign shape"),
+        "{err}"
+    );
+}
+
+/// A run whose latest ledger state is a permanent failure stays
+/// settled on resume — re-running a config error reproduces it
+/// identically — unless `retry_failed` opts in after fixing the
+/// inputs.
+#[test]
+fn permanent_failures_stay_settled_on_resume() {
+    let runs = 2u64;
+    let dir = TempDir::new("webots-hpc-perm").unwrap();
+    let mut spec = soak_spec("perm", runs, dir.path().to_path_buf());
+    spec.supervisor.fault_plan = None;
+
+    // a prior session recorded slot 0 as permanently failed
+    {
+        let mut ledger =
+            webots_hpc::pipeline::CampaignLedger::open(dir.path().join("ledger.jsonl")).unwrap();
+        ledger
+            .mark_failed("perm-e0[0]", 0, 0, 1, "permanent", "bad config")
+            .unwrap();
+    }
+
+    let outcome = run_supervised_campaign(&spec, &PhysicsEngine::Native).unwrap();
+    let s = outcome.result.robustness.unwrap();
+    assert_eq!(s.runs, runs);
+    assert_eq!(s.failed, 1, "the permanent failure stays failed");
+    assert_eq!(s.completed, 1);
+    assert_eq!(s.resumed_skips, 1);
+    assert_eq!(outcome.reports.len(), 1, "only slot 1 launched");
+
+    // opting in re-runs it; with the config "fixed" it completes
+    spec.retry_failed = true;
+    let outcome = run_supervised_campaign(&spec, &PhysicsEngine::Native).unwrap();
+    let s = outcome.result.robustness.unwrap();
+    assert_eq!(s.completed, runs);
+    assert_eq!(s.failed, 0);
 }
 
 /// Regression for the node-wide abort: one slot panicking mid-run must
