@@ -169,6 +169,51 @@ fn main() {
         println!("note: artifacts predate schema 4 — rollout benches skipped");
     }
 
+    // telemetry overhead on the fused-rollout hot path (ISSUE 7
+    // acceptance: ≤2%).  Events fire at dispatch granularity only —
+    // the enabled run pays one histogram record plus one guarded emit
+    // per K-step dispatch, never anything per physics step.
+    if service.manifest().rollouts_available() {
+        let buckets = &service.manifest().buckets;
+        let bucket = buckets
+            .iter()
+            .copied()
+            .filter(|&b| b <= 256)
+            .max()
+            .unwrap_or(buckets[0]);
+        let k = service
+            .manifest()
+            .rollout_steps
+            .last()
+            .copied()
+            .unwrap_or(1);
+        let t = traffic(bucket, 0.7, 0x7E1E);
+        let mut sess = service.session(bucket).unwrap();
+        let iters = (400 / k as u32).clamp(20, 200);
+        let off = rec.bench(
+            &format!("hlo_rollout_telemetry_off/K={k}/N={bucket}"),
+            iters,
+            k as f64,
+            || {
+                let _ = sess.step_many(&t.state, &t.params, k).unwrap();
+            },
+        );
+        let sink: std::sync::Arc<dyn webots_hpc::telemetry::EventSink> =
+            webots_hpc::telemetry::MemorySink::new();
+        webots_hpc::telemetry::install(sink.clone());
+        let on = rec.bench(
+            &format!("hlo_rollout_telemetry_on/K={k}/N={bucket}"),
+            iters,
+            k as f64,
+            || {
+                let _ = sess.step_many(&t.state, &t.params, k).unwrap();
+            },
+        );
+        webots_hpc::telemetry::uninstall(&sink);
+        let overhead = (on.median.as_secs_f64() / off.median.as_secs_f64() - 1.0) * 100.0;
+        println!("    -> telemetry overhead on hlo_rollout: {overhead:+.2}% (budget 2%)");
+    }
+
     // non-default scenario geometries on the pooled fast path (PR 3):
     // the SAME compiled (step, bucket) executable serves every family —
     // before the geometry operand these runs were native-only

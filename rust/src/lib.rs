@@ -33,6 +33,8 @@
 //!   the paper's "many seeds" randomization,
 //! * [`output`] / [`metrics`] — big-data aggregation and per-run resource
 //!   accounting,
+//! * [`telemetry`] — always-on observability: lock-free metrics, the
+//!   structured run-lifecycle event stream, and Chrome-trace export,
 //! * [`harness`] — regenerates every table and figure of the paper's
 //!   ch. 5 evaluation.
 //!
@@ -51,6 +53,7 @@ pub mod pipeline;
 pub mod runtime;
 pub mod scenario;
 pub mod simclock;
+pub mod telemetry;
 pub mod util;
 pub mod sumo;
 pub mod traci;

@@ -9,6 +9,7 @@
 //! webots-hpc submit <script.pbs> [--nodes 6]
 //! webots-hpc run-local [--instances 8] [--engine hlo|native] [--horizon 30] [--chunk auto|K]
 //! webots-hpc supervise [--nodes 2] [--slots 4] [--fault-rate 0.15] [--ledger DIR]
+//! webots-hpc report <events.jsonl>    # summarize a telemetry stream
 //! ```
 //!
 //! Argument parsing is hand-rolled (the vendored offline crate set has
@@ -29,9 +30,10 @@ use webots_hpc::pipeline::{
 use webots_hpc::runtime::{Engine, EngineService};
 use webots_hpc::simclock::SimDuration;
 use webots_hpc::sumo::{FlowFile, MergeScenario};
+use webots_hpc::telemetry;
 use webots_hpc::webots::nodes::sample_merge_world;
 
-const USAGE: &str = "usage: webots-hpc <info|table|fig|dist|campaign|submit|run-local|supervise> [args]
+const USAGE: &str = "usage: webots-hpc <info|table|fig|dist|campaign|submit|run-local|supervise|report> [args]
   info                         artifacts + PJRT platform
   table <5.1|5.2|5.3|4.1>      regenerate a paper table
   fig <5.1|5.2>                regenerate a paper figure
@@ -39,7 +41,7 @@ const USAGE: &str = "usage: webots-hpc <info|table|fig|dist|campaign|submit|run-
   campaign [--nodes N] [--slots S] [--hours H] [--policy first-fit|round-robin]
   submit <script.pbs> [--nodes N]
   run-local [--instances N] [--engine hlo|native] [--horizon S]
-            [--capacity C] [--seed K] [--chunk auto|K]
+            [--capacity C] [--seed K] [--chunk auto|K] [--trace-out file.json]
   scale [--max N] [--hours H]        §6.2.2: scalability sweep
   cloud [--runs N]                   §6.2.3: elastic (autoscaled) campaign
   config-init [path]                 §6.2.1: write an example campaign config
@@ -48,10 +50,14 @@ const USAGE: &str = "usage: webots-hpc <info|table|fig|dist|campaign|submit|run-
   supervise [--nodes N] [--slots S] [--epochs E] [--engine native|hlo]
             [--horizon S] [--seed K] [--retries R] [--walltime SECS]
             [--ledger DIR] [--fault-rate P] [--fault-seed K] [--config path]
-            [--retry-failed true]
+            [--retry-failed true] [--trace-out file.json]
             supervised campaign: crash-safe ledger + retry/backoff +
             watchdogs (reuse --ledger to resume a killed campaign;
-            permanent failures stay settled unless --retry-failed true)";
+            permanent failures stay settled unless --retry-failed true).
+            Telemetry always streams to <ledger>/events.jsonl;
+            --trace-out additionally exports a Chrome/Perfetto trace
+  report <events.jsonl>        summarize a telemetry event stream:
+            completion, retry taxonomy, dispatch latency, lane occupancy";
 
 /// Tiny flag parser: positional args + `--key value` pairs.
 struct Args {
@@ -123,6 +129,7 @@ fn main() -> Result<()> {
         "submit" => submit(&rest),
         "run-local" => run_local(&rest),
         "supervise" => supervise(&rest),
+        "report" => report(&rest),
         "--help" | "-h" | "help" => {
             println!("{USAGE}");
             Ok(())
@@ -407,6 +414,13 @@ fn supervise(args: &Args) -> Result<()> {
         other => bail!("unknown engine '{other}' (native|hlo)"),
     };
 
+    // the event stream rides next to the ledger — same append-only,
+    // torn-tail-tolerant discipline, so a resumed campaign extends it
+    let events_path = spec.ledger_dir.join("events.jsonl");
+    let sink: std::sync::Arc<dyn telemetry::EventSink> =
+        std::sync::Arc::new(telemetry::JsonlSink::append(&events_path)?);
+    telemetry::install(sink.clone());
+
     println!(
         "supervised campaign '{}': {} nodes x {} slots x {} epochs = {} runs, engine={engine}",
         spec.name,
@@ -424,7 +438,9 @@ fn supervise(args: &Args) -> Result<()> {
         );
     }
 
-    let outcome = run_supervised_campaign(&spec, &physics)?;
+    let outcome = run_supervised_campaign(&spec, &physics);
+    telemetry::uninstall(&sink);
+    let outcome = outcome?;
     for report in outcome.reports.iter().filter(|r| !r.failures.is_empty()) {
         println!("run {} took {} attempts:", report.run_id, report.attempts);
         for f in &report.failures {
@@ -446,9 +462,19 @@ fn supervise(args: &Args) -> Result<()> {
         stats.runs, stats.completed, stats.failed, stats.attempts, stats.retries, stats.degraded
     );
     println!(
+        "attempt timeline: {} extra attempts over {} runs | backoff slept {} ms | {} degraded finishes",
+        stats.retries, stats.runs, stats.backoff_ms_total, stats.degraded
+    );
+    println!(
         "kills: walltime {} stall {} | resumed skips {}",
         stats.killed_walltime, stats.killed_stall, stats.resumed_skips
     );
+    if let PhysicsEngine::Hlo(service) = &physics {
+        match service.pool_usage() {
+            Ok(usage) => println!("{}", usage.render()),
+            Err(e) => println!("engine pool stats unavailable: {e}"),
+        }
+    }
     println!(
         "completion rate: {:.1}% | aggregate: {} runs, {} rows, run_ids unique: {}",
         100.0 * stats.completion_rate(),
@@ -456,6 +482,32 @@ fn supervise(args: &Args) -> Result<()> {
         outcome.dataset.total_rows(),
         outcome.dataset.run_ids_unique()
     );
+    println!("telemetry: {}", events_path.display());
+    if let Some(trace_path) = args.flags.get("trace-out") {
+        let events = telemetry::read_events(&events_path)?;
+        let trace = telemetry::to_chrome_trace(&events);
+        std::fs::write(trace_path, trace.to_pretty_string())?;
+        println!(
+            "trace: {trace_path} ({} events; open in chrome://tracing or Perfetto)",
+            events.len()
+        );
+    }
+    Ok(())
+}
+
+/// `webots-hpc report <events.jsonl>` — fold a telemetry event stream
+/// back into the §5.1/§5.3 operational facts.
+fn report(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("report needs an events.jsonl path"))?;
+    let events = telemetry::read_events(path)?;
+    if events.is_empty() {
+        println!("{path}: no events");
+        return Ok(());
+    }
+    print!("{}", telemetry::summarize(&events).render());
     Ok(())
 }
 
@@ -504,9 +556,33 @@ fn run_local(args: &Args) -> Result<()> {
         })
         .collect();
 
+    // --trace-out: stream events to a sibling .jsonl, convert at exit
+    let trace = match args.flags.get("trace-out") {
+        Some(out) => {
+            let events_path = std::path::Path::new(out).with_extension("jsonl");
+            let sink: std::sync::Arc<dyn telemetry::EventSink> =
+                std::sync::Arc::new(telemetry::JsonlSink::append(&events_path)?);
+            telemetry::install(sink.clone());
+            Some((out.clone(), events_path, sink))
+        }
+        None => None,
+    };
+
     let t0 = std::time::Instant::now();
     let results = webots_hpc::pipeline::launch_node_slots(configs, &physics);
     let elapsed = t0.elapsed();
+
+    if let Some((out, events_path, sink)) = trace {
+        telemetry::uninstall(&sink);
+        let events = telemetry::read_events(&events_path)?;
+        let chrome = telemetry::to_chrome_trace(&events);
+        std::fs::write(&out, chrome.to_pretty_string())?;
+        println!(
+            "trace: {out} ({} events; stream at {})",
+            events.len(),
+            events_path.display()
+        );
+    }
 
     let mut dataset = CampaignDataset::new();
     let mut failed = 0;

@@ -17,6 +17,7 @@ use crate::pipeline::ChunkSteps;
 use crate::runtime::{EngineService, HloStepper};
 use crate::scenario::{PlannedRun, ScenarioRun};
 use crate::sumo::{duarouter, steps_for, FlowFile, MergeScenario, NativeIdmStepper, SumoSim};
+use crate::telemetry::{self, EventKind};
 use crate::traci::TraciServer;
 use crate::webots::{InstanceWatchdog, StopCondition, WatchdogSpec, WebotsSim, World};
 use crate::{Error, Result};
@@ -286,13 +287,32 @@ pub fn launch_node_slots(
         let displays = &displays;
         let handles: Vec<_> = configs
             .iter()
-            .map(|cfg| {
+            .enumerate()
+            .map(|(slot, cfg)| {
                 // scoped threads borrow the (Arc-backed) registry
                 // directly; the engine handle clone is one channel-sender
                 // clone (Sender is not Sync on older toolchains)
                 let env = ExecEnv::new(sif.clone()).bind("/tmp", "/tmp");
                 let physics = physics.clone();
-                scope.spawn(move || launch_instance(cfg, displays, &env, &physics))
+                scope.spawn(move || {
+                    if telemetry::enabled() {
+                        telemetry::emit(EventKind::SlotBegin {
+                            node: cfg.node as u64,
+                            slot: slot as u64,
+                            run_id: cfg.run_id.clone(),
+                        });
+                    }
+                    let r = launch_instance(cfg, displays, &env, &physics);
+                    if telemetry::enabled() {
+                        telemetry::emit(EventKind::SlotEnd {
+                            node: cfg.node as u64,
+                            slot: slot as u64,
+                            run_id: cfg.run_id.clone(),
+                            ok: r.is_ok(),
+                        });
+                    }
+                    r
+                })
             })
             .collect();
         // a panicked slot is ONE failed result, not a node-wide abort:

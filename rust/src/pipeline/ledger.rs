@@ -24,6 +24,7 @@ use std::fs::{File, OpenOptions};
 use std::io::Write;
 use std::path::{Path, PathBuf};
 
+use crate::telemetry::{self, EventKind};
 use crate::util::Json;
 use crate::{Error, Result};
 
@@ -296,6 +297,19 @@ impl CampaignLedger {
         self.file.flush()?;
         // durability is the whole point: one fsync per transition
         self.file.sync_data()?;
+        // mirror the durable transition into the event stream — the e2e
+        // contract is events ⊇ ledger, so emit only after the fsync
+        if telemetry::enabled() {
+            let state = match &entry.state {
+                LedgerState::Running { .. } => "running",
+                LedgerState::Completed { .. } => "completed",
+                LedgerState::Failed { .. } => "failed",
+            };
+            telemetry::emit(EventKind::LedgerTransition {
+                run_id: run_id.to_string(),
+                state: state.to_string(),
+            });
+        }
         self.entries.insert(run_id.to_string(), entry);
         Ok(())
     }

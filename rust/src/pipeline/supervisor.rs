@@ -45,6 +45,7 @@ use crate::pipeline::{
 };
 use crate::scenario::{FamilyRegistry, ScenarioMatrix, ScenarioRun};
 use crate::sumo::{steps_for, FlowFile, MergeScenario};
+use crate::telemetry::{self, EventKind};
 use crate::util::{Json, Rng64};
 use crate::webots::nodes::sample_merge_world;
 use crate::webots::WatchdogSpec;
@@ -190,6 +191,14 @@ pub(crate) fn panic_msg(payload: Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
+/// Event-stream spelling of the physics engine an attempt runs on.
+fn engine_name(physics: &PhysicsEngine) -> &'static str {
+    match physics {
+        PhysicsEngine::Native => "native",
+        PhysicsEngine::Hlo(_) => "hlo",
+    }
+}
+
 fn contain<F>(f: F) -> Result<InstanceResult>
 where
     F: FnOnce() -> Result<InstanceResult>,
@@ -226,7 +235,22 @@ pub fn supervise_instance(
                 attempt,
             });
         }
-        match contain(|| launch_instance(&attempt_cfg, displays, env, &physics)) {
+        if telemetry::enabled() {
+            telemetry::emit(EventKind::AttemptBegin {
+                run_id: cfg.run_id.clone(),
+                attempt: attempt as u64,
+                engine: engine_name(&physics).to_string(),
+            });
+        }
+        let outcome = contain(|| launch_instance(&attempt_cfg, displays, env, &physics));
+        if telemetry::enabled() {
+            telemetry::emit(EventKind::AttemptEnd {
+                run_id: cfg.run_id.clone(),
+                attempt: attempt as u64,
+                ok: outcome.is_ok(),
+            });
+        }
+        match outcome {
             Ok(mut r) => {
                 r.dataset.degraded = degraded;
                 return RunReport {
@@ -253,6 +277,13 @@ pub fn supervise_instance(
                     && spec.degrade
                     && matches!(physics, PhysicsEngine::Hlo(_))
                 {
+                    if telemetry::enabled() {
+                        telemetry::emit(EventKind::Degraded {
+                            run_id: cfg.run_id.clone(),
+                            attempt: attempt as u64,
+                            error: e.to_string(),
+                        });
+                    }
                     failures.push(AttemptRecord {
                         attempt,
                         class,
@@ -282,6 +313,15 @@ pub fn supervise_instance(
                 } else {
                     spec.retry.backoff_ms(cfg.seed, attempt + 1)
                 };
+                if !terminal && telemetry::enabled() {
+                    telemetry::emit(EventKind::Retry {
+                        run_id: cfg.run_id.clone(),
+                        attempt: attempt as u64,
+                        class: class.name().to_string(),
+                        error: e.to_string(),
+                        backoff_ms,
+                    });
+                }
                 failures.push(AttemptRecord {
                     attempt,
                     class,
@@ -321,6 +361,9 @@ pub struct RobustnessStats {
     pub attempts: u64,
     /// Attempts beyond each run's first (the retry bill).
     pub retries: u64,
+    /// Total wall time slept in retry backoff across all runs [ms] —
+    /// the campaign's waiting bill, next to the retry count it paid for.
+    pub backoff_ms_total: u64,
     /// Runs that completed on the native fallback.
     pub degraded: u64,
     /// Attempts killed by the walltime deadline.
@@ -463,6 +506,15 @@ pub fn run_supervised_campaign(
     let registry = FamilyRegistry::builtin();
 
     let total = spec.total_runs();
+    if telemetry::enabled() {
+        telemetry::emit(EventKind::CampaignBegin {
+            name: spec.name.clone(),
+            nodes: spec.nodes as u64,
+            slots_per_node: spec.slots_per_node as u64,
+            epochs: spec.epochs,
+            runs: total,
+        });
+    }
     let mut stats = RobustnessStats::default();
     let mut reports: Vec<RunReport> = Vec::new();
     let mut walltimes_s: Vec<f64> = Vec::new();
@@ -541,12 +593,46 @@ pub fn run_supervised_campaign(
         };
 
         ledger.mark_running(&run_id, epoch, slot, 0)?;
+        if telemetry::enabled() {
+            telemetry::emit(EventKind::RunBegin {
+                run_id: run_id.clone(),
+                epoch: epoch as u64,
+                slot: slot as u64,
+                node: node as u64,
+            });
+        }
+        // pool counters before the run — the per-run delta is what the
+        // event stream reports (the campaign-end totals hide which runs
+        // actually paid a compile)
+        let pool_before = match physics {
+            PhysicsEngine::Hlo(service) => service.pool_usage().ok(),
+            PhysicsEngine::Native => None,
+        };
         let t0 = Instant::now();
         let report = supervise_instance(&cfg, &displays, &env, physics, &spec.supervisor);
+        if telemetry::enabled() {
+            if let (Some(before), PhysicsEngine::Hlo(service)) = (pool_before, physics) {
+                if let Ok(after) = service.pool_usage() {
+                    telemetry::emit(EventKind::PoolDelta {
+                        run_id: run_id.clone(),
+                        hits: after.hits.saturating_sub(before.hits),
+                        misses: after.misses.saturating_sub(before.misses),
+                        compiled: after.compiled as u64,
+                    });
+                }
+            }
+            telemetry::emit(EventKind::RunEnd {
+                run_id: run_id.clone(),
+                ok: report.outcome.is_ok(),
+                attempts: report.attempts as u64,
+                degraded: report.degraded,
+            });
+        }
         launched += 1;
         stats.runs += 1;
         stats.attempts += report.attempts as u64;
         stats.retries += report.attempts.saturating_sub(1) as u64;
+        stats.backoff_ms_total += report.failures.iter().map(|f| f.backoff_ms).sum::<u64>();
         stats.killed_walltime += report.killed_walltime as u64;
         stats.killed_stall += report.killed_stall as u64;
         match &report.outcome {
@@ -578,6 +664,15 @@ pub fn run_supervised_campaign(
             }
         }
         reports.push(report);
+    }
+
+    if telemetry::enabled() {
+        telemetry::emit(EventKind::CampaignEnd {
+            name: spec.name.clone(),
+            completed: stats.completed,
+            failed: stats.failed,
+        });
+        telemetry::flush_all();
     }
 
     // assemble the aggregate purely from ledger + disk, in grid order —

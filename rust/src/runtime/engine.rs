@@ -11,11 +11,15 @@
 //! (`Literal` staging / `to_vec`) the vendored `xla` crate does not let
 //! us avoid (EXPERIMENTS.md §Perf).
 
+use std::cell::RefCell;
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::rc::Rc;
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::sumo::state::{GeometryVec, GEOM_COLS, OBS_COLS, PARAM_COLS, STATE_COLS};
+use crate::telemetry::{self, metrics, metrics::Histogram, EventKind};
 use crate::{Error, Result};
 
 use super::manifest::Manifest;
@@ -70,6 +74,73 @@ fn fill(dst: &mut Vec<f32>, src: &[f32]) {
     dst.extend_from_slice(src);
 }
 
+/// Cached handles into the global telemetry registry for the dispatch
+/// latency series (`engine.dispatch.step.latency_us`,
+/// `engine.dispatch.rollout_k{K}.latency_us`) — fetched once per
+/// engine, so the registry lock never sits on the dispatch path.  The
+/// engine lives on one thread (`Rc` client), so a `RefCell` map covers
+/// the per-K rollout handles.
+struct DispatchMetrics {
+    step_latency_us: Arc<Histogram>,
+    rollout_latency_us: RefCell<HashMap<usize, Arc<Histogram>>>,
+}
+
+impl DispatchMetrics {
+    fn new() -> DispatchMetrics {
+        DispatchMetrics {
+            step_latency_us: metrics::histogram("engine.dispatch.step.latency_us"),
+            rollout_latency_us: RefCell::new(HashMap::new()),
+        }
+    }
+
+    fn rollout(&self, k: usize) -> Arc<Histogram> {
+        self.rollout_latency_us
+            .borrow_mut()
+            .entry(k)
+            .or_insert_with(|| {
+                metrics::histogram(&format!("engine.dispatch.rollout_k{k}.latency_us"))
+            })
+            .clone()
+    }
+}
+
+/// Time one PJRT dispatch into `hist` and, when a telemetry sink is
+/// installed, bracket it with `DispatchBegin`/`DispatchEnd` events.
+/// Instrumentation stops at dispatch granularity — a fused K-step
+/// rollout is ONE sample here, never K (the ≤ 2% hot-path bar).
+fn timed<T>(
+    hist: &Histogram,
+    kind: &'static str,
+    bucket: usize,
+    k: usize,
+    batch: usize,
+    f: impl FnOnce() -> Result<T>,
+) -> Result<T> {
+    let emitting = telemetry::enabled();
+    if emitting {
+        telemetry::emit(EventKind::DispatchBegin {
+            kind: kind.into(),
+            bucket: bucket as u64,
+            k: k as u64,
+            batch: batch as u64,
+        });
+    }
+    let t0 = Instant::now();
+    let result = f();
+    let dur_us = t0.elapsed().as_micros() as u64;
+    hist.record(dur_us);
+    if emitting {
+        telemetry::emit(EventKind::DispatchEnd {
+            kind: kind.into(),
+            bucket: bucket as u64,
+            k: k as u64,
+            batch: batch as u64,
+            dur_us,
+        });
+    }
+    result
+}
+
 /// The engine: a PJRT CPU client + the artifact manifest + a pool of
 /// compiled executables (one per artifact, compiled lazily, shared).
 pub struct Engine {
@@ -77,6 +148,7 @@ pub struct Engine {
     manifest: Manifest,
     dir: PathBuf,
     pool: ExecutablePool,
+    dispatch: DispatchMetrics,
 }
 
 impl Engine {
@@ -102,6 +174,7 @@ impl Engine {
             manifest,
             dir,
             pool: ExecutablePool::new(),
+            dispatch: DispatchMetrics::new(),
         })
     }
 
@@ -220,6 +293,19 @@ impl Engine {
                 params.len()
             )));
         }
+        timed(&self.dispatch.step_latency_us, "step", bucket, 0, 1, || {
+            self.step_dispatch(bucket, state, params, geom, out)
+        })
+    }
+
+    fn step_dispatch(
+        &self,
+        bucket: usize,
+        state: &[f32],
+        params: &[f32],
+        geom: &GeometryVec,
+        out: &mut StepOutputs,
+    ) -> Result<()> {
         let exe = self.executable("step", bucket)?;
         let s = Self::literal_2d(state, bucket, STATE_COLS)?;
         let p = Self::literal_2d(params, bucket, PARAM_COLS)?;
@@ -286,6 +372,20 @@ impl Engine {
                 geoms.len()
             )));
         }
+        timed(&self.dispatch.step_latency_us, "step", bucket, 0, b, || {
+            self.step_batched_dispatch(bucket, states, params, geoms, outs)
+        })
+    }
+
+    fn step_batched_dispatch(
+        &self,
+        bucket: usize,
+        states: &[f32],
+        params: &[f32],
+        geoms: &[f32],
+        outs: &mut Vec<StepOutputs>,
+    ) -> Result<()> {
+        let b = self.manifest.batch;
         let exe = self.executable("stepb", bucket)?;
         let s = xla::Literal::vec1(states)
             .reshape(&[b as i64, bucket as i64, STATE_COLS as i64])
@@ -352,6 +452,21 @@ impl Engine {
                 params.len()
             )));
         }
+        let hist = self.dispatch.rollout(k);
+        timed(&hist, "rollout", bucket, k, 1, || {
+            self.rollout_dispatch(bucket, k, state, params, geom, out)
+        })
+    }
+
+    fn rollout_dispatch(
+        &self,
+        bucket: usize,
+        k: usize,
+        state: &[f32],
+        params: &[f32],
+        geom: &GeometryVec,
+        out: &mut RolloutOutputs,
+    ) -> Result<()> {
         let exe = self.rollout_executable("rollout", bucket, k)?;
         let s = Self::literal_2d(state, bucket, STATE_COLS)?;
         let p = Self::literal_2d(params, bucket, PARAM_COLS)?;
@@ -398,6 +513,22 @@ impl Engine {
                 geoms.len()
             )));
         }
+        let hist = self.dispatch.rollout(k);
+        timed(&hist, "rollout", bucket, k, b, || {
+            self.rollout_batched_dispatch(bucket, k, states, params, geoms, outs)
+        })
+    }
+
+    fn rollout_batched_dispatch(
+        &self,
+        bucket: usize,
+        k: usize,
+        states: &[f32],
+        params: &[f32],
+        geoms: &[f32],
+        outs: &mut Vec<RolloutOutputs>,
+    ) -> Result<()> {
+        let b = self.manifest.batch;
         let exe = self.rollout_executable("rolloutb", bucket, k)?;
         let s = xla::Literal::vec1(states)
             .reshape(&[b as i64, bucket as i64, STATE_COLS as i64])

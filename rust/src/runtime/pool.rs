@@ -16,6 +16,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
+use crate::telemetry::metrics::{counter, Counter};
 use crate::Result;
 
 /// Cache key: artifact kernel name + vehicle-count bucket + fused-step
@@ -29,6 +30,13 @@ pub struct ExecutablePool {
     cache: RwLock<HashMap<PoolKey, Arc<xla::PjRtLoadedExecutable>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    // the same counts folded into the process-global telemetry registry
+    // (`engine.pool.*`) — the per-engine atomics stay authoritative for
+    // `stats()`, the registry aggregates across engines; handles are
+    // fetched once here so the registry lock never sits on the lookup
+    // path
+    global_hits: Arc<Counter>,
+    global_misses: Arc<Counter>,
 }
 
 impl Default for ExecutablePool {
@@ -43,6 +51,8 @@ impl ExecutablePool {
             cache: RwLock::new(HashMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            global_hits: counter("engine.pool.hits"),
+            global_misses: counter("engine.pool.misses"),
         }
     }
 
@@ -61,9 +71,11 @@ impl ExecutablePool {
     {
         if let Some(exe) = self.cache.read().expect("pool poisoned").get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
+            self.global_hits.inc();
             return Ok(exe.clone());
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
+        self.global_misses.inc();
         let exe = Arc::new(compile()?);
         self.cache
             .write()

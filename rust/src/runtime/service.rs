@@ -33,11 +33,13 @@
 use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::metrics::PoolUsage;
 use crate::sumo::state::{GeometryVec, Traffic, GEOM_COLS, PARAM_COLS, STATE_COLS};
 use crate::sumo::{MergeScenario, StepObs, Stepper};
+use crate::telemetry::{self, metrics, EventKind};
 use crate::{Error, Result};
 
 use super::engine::{Engine, RolloutOutputs, StepOutputs};
@@ -70,6 +72,9 @@ struct StepReq {
     geom: GeometryVec,
     out: StepOutputs,
     reply: StepReply,
+    /// When the caller sent the request — dispatch time minus this is
+    /// the lane's queue wait (`service.lane.queue_wait_us`).
+    enqueued: Instant,
 }
 
 /// One fused-rollout request (schema 4): like [`StepReq`] plus the
@@ -85,6 +90,8 @@ struct RolloutReq {
     geom: GeometryVec,
     out: RolloutOutputs,
     reply: RolloutReply,
+    /// See [`StepReq::enqueued`].
+    enqueued: Instant,
 }
 
 /// What a session reply carries back besides the input buffers: the
@@ -129,6 +136,75 @@ enum Request {
         reply: Sender<PoolUsage>,
     },
     Shutdown,
+}
+
+/// Cached handles into the global telemetry registry for the
+/// micro-batcher's lane series — the exact metrics the ROADMAP's
+/// deadline-aware scheduler will be judged on.  Fetched once per
+/// engine thread; recording is relaxed atomics only.
+struct LaneMetrics {
+    queue_wait_us: Arc<crate::telemetry::Histogram>,
+    batch_size: Arc<crate::telemetry::Histogram>,
+    coalesced: Arc<crate::telemetry::Counter>,
+    serial_fallbacks: Arc<crate::telemetry::Counter>,
+    backlog_depth: Arc<crate::telemetry::Gauge>,
+}
+
+impl LaneMetrics {
+    fn new() -> LaneMetrics {
+        LaneMetrics {
+            queue_wait_us: metrics::histogram("service.lane.queue_wait_us"),
+            batch_size: metrics::histogram("service.lane.batch_size"),
+            coalesced: metrics::counter("service.lane.coalesced"),
+            serial_fallbacks: metrics::counter("service.lane.serial_fallback"),
+            backlog_depth: metrics::gauge("service.lane.backlog_depth"),
+        }
+    }
+
+    /// Record queue waits + batch size for one formed dispatch, and
+    /// emit a `Coalesced` event when the batcher actually merged
+    /// requests.  `kind`/`k` name the dispatch family.
+    fn dispatch_formed(
+        &self,
+        kind: &'static str,
+        bucket: usize,
+        k: usize,
+        enqueued: impl ExactSizeIterator<Item = Instant>,
+    ) {
+        let now = Instant::now();
+        let batch = enqueued.len();
+        for t in enqueued {
+            self.queue_wait_us
+                .record(now.saturating_duration_since(t).as_micros() as u64);
+        }
+        self.batch_size.record(batch as u64);
+        if batch >= 2 {
+            self.coalesced.inc();
+            if telemetry::enabled() {
+                telemetry::emit(EventKind::Coalesced {
+                    kind: kind.into(),
+                    bucket: bucket as u64,
+                    k: k as u64,
+                    batch: batch as u64,
+                });
+            }
+        }
+    }
+
+    /// Record one batched-path failure that fell back to per-request
+    /// serial execution.
+    fn fallback(&self, kind: &'static str, bucket: usize, k: usize, batch: usize, error: &str) {
+        self.serial_fallbacks.inc();
+        if telemetry::enabled() {
+            telemetry::emit(EventKind::SerialFallback {
+                kind: kind.into(),
+                bucket: bucket as u64,
+                k: k as u64,
+                batch: batch as u64,
+                error: error.into(),
+            });
+        }
+    }
 }
 
 /// Engine-thread scratch for the micro-batcher, reused across
@@ -209,6 +285,7 @@ fn serve_step(
     rx: &Receiver<Request>,
     backlog: &mut VecDeque<Request>,
     scratch: &mut BatchScratch,
+    lane: &LaneMetrics,
     first: StepReq,
 ) {
     let bucket = first.bucket;
@@ -265,6 +342,8 @@ fn serve_step(
         }
     }
 
+    lane.dispatch_formed("step", bucket, 0, scratch.batch.iter().map(|r| r.enqueued));
+
     if scratch.batch.len() < 2 {
         let mut req = scratch.batch.pop().expect("one request");
         let result = engine.step_into(bucket, &req.state, &req.params, &req.geom, &mut req.out);
@@ -308,6 +387,7 @@ fn serve_step(
             // batched path failed (e.g. old artifacts): fall back to
             // serial execution so callers still get answers
             let msg = e.to_string();
+            lane.fallback("step", bucket, 0, n_live, &msg);
             for mut req in scratch.batch.drain(..) {
                 let result = engine
                     .step_into(bucket, &req.state, &req.params, &req.geom, &mut req.out)
@@ -332,6 +412,7 @@ fn serve_rollout(
     rx: &Receiver<Request>,
     backlog: &mut VecDeque<Request>,
     scratch: &mut BatchScratch,
+    lane: &LaneMetrics,
     first: RolloutReq,
 ) {
     let (bucket, k) = (first.bucket, first.k);
@@ -386,6 +467,8 @@ fn serve_rollout(
         }
     }
 
+    lane.dispatch_formed("rollout", bucket, k, scratch.rollouts.iter().map(|r| r.enqueued));
+
     if scratch.rollouts.len() < 2 {
         let mut req = scratch.rollouts.pop().expect("one request");
         let result =
@@ -428,6 +511,7 @@ fn serve_rollout(
             // batched rollout unavailable (e.g. solo-only artifacts):
             // serve each caller with its own solo rollout
             let msg = e.to_string();
+            lane.fallback("rollout", bucket, k, n_live, &msg);
             for mut req in scratch.rollouts.drain(..) {
                 let result = engine
                     .rollout_into(bucket, k, &req.state, &req.params, &req.geom, &mut req.out)
@@ -465,7 +549,9 @@ impl EngineService {
             // requests drained ahead of their turn while coalescing a batch
             let mut backlog: VecDeque<Request> = VecDeque::new();
             let mut scratch = BatchScratch::default();
+            let lane = LaneMetrics::new();
             loop {
+                lane.backlog_depth.set(backlog.len() as i64);
                 let req = match backlog.pop_front() {
                     Some(r) => r,
                     None => match rx.recv() {
@@ -475,10 +561,10 @@ impl EngineService {
                 };
                 match req {
                     Request::Step(r) => {
-                        serve_step(&engine, &rx, &mut backlog, &mut scratch, r);
+                        serve_step(&engine, &rx, &mut backlog, &mut scratch, &lane, r);
                     }
                     Request::Rollout(r) => {
-                        serve_rollout(&engine, &rx, &mut backlog, &mut scratch, r);
+                        serve_rollout(&engine, &rx, &mut backlog, &mut scratch, &lane, r);
                     }
                     Request::Idm {
                         bucket,
@@ -592,6 +678,7 @@ impl EngineService {
                 geom,
                 out: StepOutputs::default(),
                 reply: StepReply::Oneshot(reply),
+                enqueued: Instant::now(),
             }))
             .map_err(|_| Error::Runtime("engine thread gone".into()))?;
         rx.recv()
@@ -620,6 +707,7 @@ impl EngineService {
                 geom,
                 out: RolloutOutputs::default(),
                 reply: RolloutReply::Oneshot(reply),
+                enqueued: Instant::now(),
             }))
             .map_err(|_| Error::Runtime("engine thread gone".into()))?;
         rx.recv()
@@ -766,6 +854,7 @@ impl EngineSession {
                 geom: self.geom,
                 out,
                 reply: StepReply::Session(self.reply_tx.clone()),
+                enqueued: Instant::now(),
             }))
             .map_err(|_| Error::Runtime("engine thread gone".into()))?;
         let reply = self
@@ -814,6 +903,7 @@ impl EngineSession {
                 geom: self.geom,
                 out,
                 reply: RolloutReply::Session(self.reply_tx.clone()),
+                enqueued: Instant::now(),
             }))
             .map_err(|_| Error::Runtime("engine thread gone".into()))?;
         let reply = self

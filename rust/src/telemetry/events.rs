@@ -1,0 +1,598 @@
+//! The structured run-lifecycle event model.
+//!
+//! One [`Event`] per interesting transition, stamped with a monotonic
+//! microsecond timestamp ([`crate::telemetry::now_us`]) and serialized
+//! as one compact JSON object per line — the same JSONL discipline as
+//! the campaign ledger, so the stream survives torn tails and replays
+//! deterministically.  Events are emitted at *dispatch* granularity,
+//! never inside the per-step inner loop (the ≤ 2% hot-path overhead
+//! bar of ISSUE 7).
+
+use crate::util::Json;
+use crate::{Error, Result};
+
+/// A timestamped telemetry event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    /// Microseconds since the process telemetry epoch (monotonic).
+    pub t_us: u64,
+    pub kind: EventKind,
+}
+
+/// Everything the pipeline reports about itself.
+///
+/// Naming: `*Begin`/`*End` pairs become Chrome-trace spans; the rest
+/// become instant markers.  `DispatchEnd` carries its own `dur_us` so
+/// consumers never need to pair it with the matching `DispatchBegin`
+/// (the engine thread is serial, but the stream may be truncated).
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    CampaignBegin {
+        name: String,
+        nodes: u64,
+        slots_per_node: u64,
+        epochs: u64,
+        runs: u64,
+    },
+    CampaignEnd {
+        name: String,
+        completed: u64,
+        failed: u64,
+    },
+    RunBegin {
+        run_id: String,
+        epoch: u64,
+        slot: u64,
+        node: u64,
+    },
+    RunEnd {
+        run_id: String,
+        ok: bool,
+        attempts: u64,
+        degraded: bool,
+    },
+    AttemptBegin {
+        run_id: String,
+        attempt: u64,
+        engine: String,
+    },
+    AttemptEnd {
+        run_id: String,
+        attempt: u64,
+        ok: bool,
+    },
+    Retry {
+        run_id: String,
+        attempt: u64,
+        class: String,
+        error: String,
+        backoff_ms: u64,
+    },
+    Degraded {
+        run_id: String,
+        attempt: u64,
+        error: String,
+    },
+    WatchdogFire {
+        run_id: String,
+        kind: String,
+        detail: String,
+    },
+    LedgerTransition {
+        run_id: String,
+        state: String,
+    },
+    SlotBegin {
+        node: u64,
+        slot: u64,
+        run_id: String,
+    },
+    SlotEnd {
+        node: u64,
+        slot: u64,
+        run_id: String,
+        ok: bool,
+    },
+    DispatchBegin {
+        kind: String,
+        bucket: u64,
+        k: u64,
+        batch: u64,
+    },
+    DispatchEnd {
+        kind: String,
+        bucket: u64,
+        k: u64,
+        batch: u64,
+        dur_us: u64,
+    },
+    Coalesced {
+        kind: String,
+        bucket: u64,
+        k: u64,
+        batch: u64,
+    },
+    SerialFallback {
+        kind: String,
+        bucket: u64,
+        k: u64,
+        batch: u64,
+        error: String,
+    },
+    PoolDelta {
+        run_id: String,
+        hits: u64,
+        misses: u64,
+        compiled: u64,
+    },
+}
+
+impl EventKind {
+    /// The `"ev"` tag this kind serializes under.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            EventKind::CampaignBegin { .. } => "campaign_begin",
+            EventKind::CampaignEnd { .. } => "campaign_end",
+            EventKind::RunBegin { .. } => "run_begin",
+            EventKind::RunEnd { .. } => "run_end",
+            EventKind::AttemptBegin { .. } => "attempt_begin",
+            EventKind::AttemptEnd { .. } => "attempt_end",
+            EventKind::Retry { .. } => "retry",
+            EventKind::Degraded { .. } => "degraded",
+            EventKind::WatchdogFire { .. } => "watchdog_fire",
+            EventKind::LedgerTransition { .. } => "ledger_transition",
+            EventKind::SlotBegin { .. } => "slot_begin",
+            EventKind::SlotEnd { .. } => "slot_end",
+            EventKind::DispatchBegin { .. } => "dispatch_begin",
+            EventKind::DispatchEnd { .. } => "dispatch_end",
+            EventKind::Coalesced { .. } => "coalesced",
+            EventKind::SerialFallback { .. } => "serial_fallback",
+            EventKind::PoolDelta { .. } => "pool_delta",
+        }
+    }
+}
+
+fn num(n: u64) -> Json {
+    Json::num(n as f64)
+}
+
+impl Event {
+    /// One compact JSON object: `{"ev": <tag>, "t_us": N, ...fields}`.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("t_us", num(self.t_us)),
+            ("ev", Json::str(self.kind.tag())),
+        ];
+        match &self.kind {
+            EventKind::CampaignBegin {
+                name,
+                nodes,
+                slots_per_node,
+                epochs,
+                runs,
+            } => {
+                pairs.push(("name", Json::str(name.clone())));
+                pairs.push(("nodes", num(*nodes)));
+                pairs.push(("slots_per_node", num(*slots_per_node)));
+                pairs.push(("epochs", num(*epochs)));
+                pairs.push(("runs", num(*runs)));
+            }
+            EventKind::CampaignEnd {
+                name,
+                completed,
+                failed,
+            } => {
+                pairs.push(("name", Json::str(name.clone())));
+                pairs.push(("completed", num(*completed)));
+                pairs.push(("failed", num(*failed)));
+            }
+            EventKind::RunBegin {
+                run_id,
+                epoch,
+                slot,
+                node,
+            } => {
+                pairs.push(("run_id", Json::str(run_id.clone())));
+                pairs.push(("epoch", num(*epoch)));
+                pairs.push(("slot", num(*slot)));
+                pairs.push(("node", num(*node)));
+            }
+            EventKind::RunEnd {
+                run_id,
+                ok,
+                attempts,
+                degraded,
+            } => {
+                pairs.push(("run_id", Json::str(run_id.clone())));
+                pairs.push(("ok", Json::Bool(*ok)));
+                pairs.push(("attempts", num(*attempts)));
+                pairs.push(("degraded", Json::Bool(*degraded)));
+            }
+            EventKind::AttemptBegin {
+                run_id,
+                attempt,
+                engine,
+            } => {
+                pairs.push(("run_id", Json::str(run_id.clone())));
+                pairs.push(("attempt", num(*attempt)));
+                pairs.push(("engine", Json::str(engine.clone())));
+            }
+            EventKind::AttemptEnd {
+                run_id,
+                attempt,
+                ok,
+            } => {
+                pairs.push(("run_id", Json::str(run_id.clone())));
+                pairs.push(("attempt", num(*attempt)));
+                pairs.push(("ok", Json::Bool(*ok)));
+            }
+            EventKind::Retry {
+                run_id,
+                attempt,
+                class,
+                error,
+                backoff_ms,
+            } => {
+                pairs.push(("run_id", Json::str(run_id.clone())));
+                pairs.push(("attempt", num(*attempt)));
+                pairs.push(("class", Json::str(class.clone())));
+                pairs.push(("error", Json::str(error.clone())));
+                pairs.push(("backoff_ms", num(*backoff_ms)));
+            }
+            EventKind::Degraded {
+                run_id,
+                attempt,
+                error,
+            } => {
+                pairs.push(("run_id", Json::str(run_id.clone())));
+                pairs.push(("attempt", num(*attempt)));
+                pairs.push(("error", Json::str(error.clone())));
+            }
+            EventKind::WatchdogFire {
+                run_id,
+                kind,
+                detail,
+            } => {
+                pairs.push(("run_id", Json::str(run_id.clone())));
+                pairs.push(("kind", Json::str(kind.clone())));
+                pairs.push(("detail", Json::str(detail.clone())));
+            }
+            EventKind::LedgerTransition { run_id, state } => {
+                pairs.push(("run_id", Json::str(run_id.clone())));
+                pairs.push(("state", Json::str(state.clone())));
+            }
+            EventKind::SlotBegin { node, slot, run_id } => {
+                pairs.push(("node", num(*node)));
+                pairs.push(("slot", num(*slot)));
+                pairs.push(("run_id", Json::str(run_id.clone())));
+            }
+            EventKind::SlotEnd {
+                node,
+                slot,
+                run_id,
+                ok,
+            } => {
+                pairs.push(("node", num(*node)));
+                pairs.push(("slot", num(*slot)));
+                pairs.push(("run_id", Json::str(run_id.clone())));
+                pairs.push(("ok", Json::Bool(*ok)));
+            }
+            EventKind::DispatchBegin {
+                kind,
+                bucket,
+                k,
+                batch,
+            } => {
+                pairs.push(("kind", Json::str(kind.clone())));
+                pairs.push(("bucket", num(*bucket)));
+                pairs.push(("k", num(*k)));
+                pairs.push(("batch", num(*batch)));
+            }
+            EventKind::DispatchEnd {
+                kind,
+                bucket,
+                k,
+                batch,
+                dur_us,
+            } => {
+                pairs.push(("kind", Json::str(kind.clone())));
+                pairs.push(("bucket", num(*bucket)));
+                pairs.push(("k", num(*k)));
+                pairs.push(("batch", num(*batch)));
+                pairs.push(("dur_us", num(*dur_us)));
+            }
+            EventKind::Coalesced {
+                kind,
+                bucket,
+                k,
+                batch,
+            } => {
+                pairs.push(("kind", Json::str(kind.clone())));
+                pairs.push(("bucket", num(*bucket)));
+                pairs.push(("k", num(*k)));
+                pairs.push(("batch", num(*batch)));
+            }
+            EventKind::SerialFallback {
+                kind,
+                bucket,
+                k,
+                batch,
+                error,
+            } => {
+                pairs.push(("kind", Json::str(kind.clone())));
+                pairs.push(("bucket", num(*bucket)));
+                pairs.push(("k", num(*k)));
+                pairs.push(("batch", num(*batch)));
+                pairs.push(("error", Json::str(error.clone())));
+            }
+            EventKind::PoolDelta {
+                run_id,
+                hits,
+                misses,
+                compiled,
+            } => {
+                pairs.push(("run_id", Json::str(run_id.clone())));
+                pairs.push(("hits", num(*hits)));
+                pairs.push(("misses", num(*misses)));
+                pairs.push(("compiled", num(*compiled)));
+            }
+        }
+        Json::obj(pairs)
+    }
+
+    /// Inverse of [`Event::to_json`] — rejects unknown tags and missing
+    /// fields (a mid-file garbage line must fail loudly; only the final
+    /// torn line is forgiven, by [`crate::telemetry::read_events`]).
+    pub fn from_json(j: &Json) -> Result<Event> {
+        let t_us = get_u64(j, "t_us")?;
+        let tag = j.get("ev")?.as_str()?.to_string();
+        let kind = match tag.as_str() {
+            "campaign_begin" => EventKind::CampaignBegin {
+                name: get_str(j, "name")?,
+                nodes: get_u64(j, "nodes")?,
+                slots_per_node: get_u64(j, "slots_per_node")?,
+                epochs: get_u64(j, "epochs")?,
+                runs: get_u64(j, "runs")?,
+            },
+            "campaign_end" => EventKind::CampaignEnd {
+                name: get_str(j, "name")?,
+                completed: get_u64(j, "completed")?,
+                failed: get_u64(j, "failed")?,
+            },
+            "run_begin" => EventKind::RunBegin {
+                run_id: get_str(j, "run_id")?,
+                epoch: get_u64(j, "epoch")?,
+                slot: get_u64(j, "slot")?,
+                node: get_u64(j, "node")?,
+            },
+            "run_end" => EventKind::RunEnd {
+                run_id: get_str(j, "run_id")?,
+                ok: get_bool(j, "ok")?,
+                attempts: get_u64(j, "attempts")?,
+                degraded: get_bool(j, "degraded")?,
+            },
+            "attempt_begin" => EventKind::AttemptBegin {
+                run_id: get_str(j, "run_id")?,
+                attempt: get_u64(j, "attempt")?,
+                engine: get_str(j, "engine")?,
+            },
+            "attempt_end" => EventKind::AttemptEnd {
+                run_id: get_str(j, "run_id")?,
+                attempt: get_u64(j, "attempt")?,
+                ok: get_bool(j, "ok")?,
+            },
+            "retry" => EventKind::Retry {
+                run_id: get_str(j, "run_id")?,
+                attempt: get_u64(j, "attempt")?,
+                class: get_str(j, "class")?,
+                error: get_str(j, "error")?,
+                backoff_ms: get_u64(j, "backoff_ms")?,
+            },
+            "degraded" => EventKind::Degraded {
+                run_id: get_str(j, "run_id")?,
+                attempt: get_u64(j, "attempt")?,
+                error: get_str(j, "error")?,
+            },
+            "watchdog_fire" => EventKind::WatchdogFire {
+                run_id: get_str(j, "run_id")?,
+                kind: get_str(j, "kind")?,
+                detail: get_str(j, "detail")?,
+            },
+            "ledger_transition" => EventKind::LedgerTransition {
+                run_id: get_str(j, "run_id")?,
+                state: get_str(j, "state")?,
+            },
+            "slot_begin" => EventKind::SlotBegin {
+                node: get_u64(j, "node")?,
+                slot: get_u64(j, "slot")?,
+                run_id: get_str(j, "run_id")?,
+            },
+            "slot_end" => EventKind::SlotEnd {
+                node: get_u64(j, "node")?,
+                slot: get_u64(j, "slot")?,
+                run_id: get_str(j, "run_id")?,
+                ok: get_bool(j, "ok")?,
+            },
+            "dispatch_begin" => EventKind::DispatchBegin {
+                kind: get_str(j, "kind")?,
+                bucket: get_u64(j, "bucket")?,
+                k: get_u64(j, "k")?,
+                batch: get_u64(j, "batch")?,
+            },
+            "dispatch_end" => EventKind::DispatchEnd {
+                kind: get_str(j, "kind")?,
+                bucket: get_u64(j, "bucket")?,
+                k: get_u64(j, "k")?,
+                batch: get_u64(j, "batch")?,
+                dur_us: get_u64(j, "dur_us")?,
+            },
+            "coalesced" => EventKind::Coalesced {
+                kind: get_str(j, "kind")?,
+                bucket: get_u64(j, "bucket")?,
+                k: get_u64(j, "k")?,
+                batch: get_u64(j, "batch")?,
+            },
+            "serial_fallback" => EventKind::SerialFallback {
+                kind: get_str(j, "kind")?,
+                bucket: get_u64(j, "bucket")?,
+                k: get_u64(j, "k")?,
+                batch: get_u64(j, "batch")?,
+                error: get_str(j, "error")?,
+            },
+            "pool_delta" => EventKind::PoolDelta {
+                run_id: get_str(j, "run_id")?,
+                hits: get_u64(j, "hits")?,
+                misses: get_u64(j, "misses")?,
+                compiled: get_u64(j, "compiled")?,
+            },
+            other => {
+                return Err(Error::Config(format!("unknown telemetry event '{other}'")));
+            }
+        };
+        Ok(Event { t_us, kind })
+    }
+}
+
+fn get_str(j: &Json, key: &str) -> Result<String> {
+    Ok(j.get(key)?.as_str()?.to_string())
+}
+
+fn get_u64(j: &Json, key: &str) -> Result<u64> {
+    Ok(j.get(key)?.as_f64()? as u64)
+}
+
+fn get_bool(j: &Json, key: &str) -> Result<bool> {
+    match j.get(key)? {
+        Json::Bool(b) => Ok(*b),
+        other => Err(Error::Config(format!(
+            "expected bool for '{key}', got {other:?}"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(kind: EventKind) {
+        let ev = Event { t_us: 42, kind };
+        let j = ev.to_json();
+        let line = j.to_compact_string();
+        assert!(!line.contains('\n'), "one line per event: {line}");
+        let back = Event::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, ev);
+    }
+
+    #[test]
+    fn every_event_kind_round_trips() {
+        round_trip(EventKind::CampaignBegin {
+            name: "soak".into(),
+            nodes: 2,
+            slots_per_node: 4,
+            epochs: 1,
+            runs: 8,
+        });
+        round_trip(EventKind::CampaignEnd {
+            name: "soak".into(),
+            completed: 8,
+            failed: 0,
+        });
+        round_trip(EventKind::RunBegin {
+            run_id: "soak-e0[3]".into(),
+            epoch: 0,
+            slot: 3,
+            node: 0,
+        });
+        round_trip(EventKind::RunEnd {
+            run_id: "soak-e0[3]".into(),
+            ok: true,
+            attempts: 2,
+            degraded: false,
+        });
+        round_trip(EventKind::AttemptBegin {
+            run_id: "soak-e0[3]".into(),
+            attempt: 1,
+            engine: "hlo".into(),
+        });
+        round_trip(EventKind::AttemptEnd {
+            run_id: "soak-e0[3]".into(),
+            attempt: 1,
+            ok: false,
+        });
+        round_trip(EventKind::Retry {
+            run_id: "soak-e0[3]".into(),
+            attempt: 1,
+            class: "transient".into(),
+            error: "duarouter failed: exit 1".into(),
+            backoff_ms: 250,
+        });
+        round_trip(EventKind::Degraded {
+            run_id: "soak-e0[3]".into(),
+            attempt: 1,
+            error: "runtime (PJRT) error: injected".into(),
+        });
+        round_trip(EventKind::WatchdogFire {
+            run_id: "soak-e0[3]".into(),
+            kind: "walltime".into(),
+            detail: "120s".into(),
+        });
+        round_trip(EventKind::LedgerTransition {
+            run_id: "soak-e0[3]".into(),
+            state: "completed".into(),
+        });
+        round_trip(EventKind::SlotBegin {
+            node: 0,
+            slot: 3,
+            run_id: "soak-e0[3]".into(),
+        });
+        round_trip(EventKind::SlotEnd {
+            node: 0,
+            slot: 3,
+            run_id: "soak-e0[3]".into(),
+            ok: true,
+        });
+        round_trip(EventKind::DispatchBegin {
+            kind: "rollout".into(),
+            bucket: 64,
+            k: 32,
+            batch: 2,
+        });
+        round_trip(EventKind::DispatchEnd {
+            kind: "rollout".into(),
+            bucket: 64,
+            k: 32,
+            batch: 2,
+            dur_us: 1730,
+        });
+        round_trip(EventKind::Coalesced {
+            kind: "step".into(),
+            bucket: 16,
+            k: 0,
+            batch: 4,
+        });
+        round_trip(EventKind::SerialFallback {
+            kind: "step".into(),
+            bucket: 16,
+            k: 0,
+            batch: 4,
+            error: "bad literal".into(),
+        });
+        round_trip(EventKind::PoolDelta {
+            run_id: "soak-e0[3]".into(),
+            hits: 120,
+            misses: 2,
+            compiled: 5,
+        });
+    }
+
+    #[test]
+    fn unknown_tag_and_missing_field_are_rejected() {
+        let j = Json::parse(r#"{"ev":"warp_core_breach","t_us":1}"#).unwrap();
+        assert!(Event::from_json(&j).is_err());
+        let j = Json::parse(r#"{"ev":"retry","t_us":1,"run_id":"x"}"#).unwrap();
+        assert!(Event::from_json(&j).is_err());
+        let j = Json::parse(r#"{"ev":"run_end","t_us":1,"run_id":"x","ok":1,"attempts":1,"degraded":false}"#)
+            .unwrap();
+        assert!(Event::from_json(&j).is_err(), "ok must be a real bool");
+    }
+}

@@ -1,0 +1,425 @@
+//! Lock-free metrics: counters, gauges, and log2 latency histograms
+//! behind a process-global, hierarchically named [`Registry`].
+//!
+//! Design constraints (ISSUE 7 / ROADMAP "deadline-aware engine
+//! scheduling"):
+//!
+//! * the hot path must be a handful of relaxed atomic ops — no locks,
+//!   no allocation.  Registration (`Registry::counter` etc.) takes a
+//!   mutex once and hands back an `Arc` handle; callers cache the
+//!   handle and never touch the registry again,
+//! * snapshots are cheap, mergeable across threads/processes, and
+//!   serialize through [`crate::util::Json`] so they ride the same
+//!   JSONL discipline as the campaign ledger,
+//! * histograms use fixed log2 buckets (bucket `i ≥ 1` covers
+//!   `[2^(i-1), 2^i - 1]`), so a 64-slot array covers the full `u64`
+//!   range with zero configuration — microseconds to hours.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use crate::util::Json;
+
+/// Number of log2 buckets — enough for the whole `u64` range.
+pub const HIST_BUCKETS: usize = 64;
+
+/// A monotonically increasing counter (relaxed atomics throughout).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-value-wins gauge (e.g. queue depth, lane occupancy).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A fixed-bucket log2 histogram.  `record` is 3 relaxed atomic adds;
+/// concurrent recorders never lose a sample (each add is independent,
+/// so a merged snapshot is exact even under contention).
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl Histogram {
+    /// log2 bucket index: 0 holds exactly 0, bucket `i ≥ 1` covers
+    /// `[2^(i-1), 2^i - 1]`.  Clamped so `u64::MAX` (65 would-be
+    /// buckets) still lands inside the array.
+    pub fn bucket_index(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+        }
+    }
+
+    /// Upper edge (inclusive) of bucket `i` — what `quantile` reports.
+    pub fn bucket_edge(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else if i >= HIST_BUCKETS - 1 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// An owned, mergeable point-in-time copy of a [`Histogram`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub buckets: [u64; HIST_BUCKETS],
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot {
+            count: 0,
+            sum: 0,
+            buckets: [0; HIST_BUCKETS],
+        }
+    }
+}
+
+impl HistSnapshot {
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        self.count += other.count;
+        self.sum += other.sum;
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile estimate: the inclusive upper edge of the bucket where
+    /// the cumulative count crosses `q * count` (conservative — never
+    /// under-reports a latency).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target {
+                return Histogram::bucket_edge(i);
+            }
+        }
+        Histogram::bucket_edge(HIST_BUCKETS - 1)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("sum", Json::num(self.sum as f64)),
+            ("mean", Json::num(self.mean())),
+            ("p50", Json::num(self.quantile(0.50) as f64)),
+            ("p90", Json::num(self.quantile(0.90) as f64)),
+            ("p99", Json::num(self.quantile(0.99) as f64)),
+        ])
+    }
+}
+
+/// Names instruments hierarchically (`engine.dispatch.step.latency_us`,
+/// `service.lane.batch_size`, `supervisor.retry.count`) and hands out
+/// shared handles.  One mutex per instrument *kind*, taken only at
+/// registration — never on the record path.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // a poisoned metrics map is still structurally sound (every write
+    // is a whole-entry insert); recover rather than cascade the panic
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl Registry {
+    /// The process-global registry every instrumented subsystem shares.
+    pub fn global() -> &'static Registry {
+        static GLOBAL: OnceLock<Registry> = OnceLock::new();
+        GLOBAL.get_or_init(Registry::default)
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        relock(&self.counters)
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        relock(&self.gauges)
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        relock(&self.histograms)
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        RegistrySnapshot {
+            counters: relock(&self.counters)
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            gauges: relock(&self.gauges)
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            histograms: relock(&self.histograms)
+                .iter()
+                .map(|(k, v)| (k.clone(), v.snapshot()))
+                .collect(),
+        }
+    }
+}
+
+/// Shorthand for `Registry::global().counter(name)`.
+pub fn counter(name: &str) -> Arc<Counter> {
+    Registry::global().counter(name)
+}
+
+/// Shorthand for `Registry::global().gauge(name)`.
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    Registry::global().gauge(name)
+}
+
+/// Shorthand for `Registry::global().histogram(name)`.
+pub fn histogram(name: &str) -> Arc<Histogram> {
+    Registry::global().histogram(name)
+}
+
+/// A mergeable point-in-time copy of a whole registry.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RegistrySnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub histograms: BTreeMap<String, HistSnapshot>,
+}
+
+impl RegistrySnapshot {
+    /// Fold `other` in: counters/histograms add, gauges last-wins.
+    pub fn merge(&mut self, other: &RegistrySnapshot) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, v) in &other.histograms {
+            self.histograms.entry(k.clone()).or_default().merge(v);
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "counters",
+                Json::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "gauges",
+                Json::Obj(
+                    self.gauges
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "histograms",
+                Json::Obj(
+                    self.histograms
+                        .iter()
+                        .map(|(k, v)| (k.clone(), v.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_covers_the_u64_range() {
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 1);
+        assert_eq!(Histogram::bucket_index(2), 2);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 3);
+        assert_eq!(Histogram::bucket_index(1023), 10);
+        assert_eq!(Histogram::bucket_index(1024), 11);
+        assert_eq!(Histogram::bucket_index(u64::MAX), HIST_BUCKETS - 1);
+        // every bucket's upper edge maps back into that bucket
+        for i in 0..HIST_BUCKETS {
+            assert_eq!(Histogram::bucket_index(Histogram::bucket_edge(i)), i);
+        }
+    }
+
+    #[test]
+    fn concurrent_recording_is_exact() {
+        // the ISSUE acceptance test: N threads × M increments, merged
+        // snapshot exact — relaxed atomics must not lose a sample
+        const THREADS: usize = 8;
+        const PER: u64 = 5000;
+        let reg = Registry::default();
+        let h = reg.histogram("t.lat_us");
+        let c = reg.counter("t.ops");
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let h = h.clone();
+                let c = c.clone();
+                s.spawn(move || {
+                    for i in 0..PER {
+                        h.record(t as u64 * 1000 + i % 100);
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), THREADS as u64 * PER);
+        let snap = h.snapshot();
+        assert_eq!(snap.count, THREADS as u64 * PER);
+        let expected_sum: u64 = (0..THREADS as u64)
+            .map(|t| (0..PER).map(|i| t * 1000 + i % 100).sum::<u64>())
+            .sum();
+        assert_eq!(snap.sum, expected_sum);
+        assert_eq!(snap.buckets.iter().sum::<u64>(), snap.count);
+    }
+
+    #[test]
+    fn quantiles_report_bucket_upper_edges() {
+        let h = Histogram::default();
+        for v in [1u64, 2, 3, 4, 100, 1000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 6);
+        assert_eq!(s.sum, 1110);
+        // p50 lands in the bucket holding 3 (bucket 2 → edge 3)
+        assert_eq!(s.quantile(0.5), 3);
+        // p99 lands in 1000's bucket (bucket 10 → edge 1023)
+        assert_eq!(s.quantile(0.99), 1023);
+        assert_eq!(HistSnapshot::default().quantile(0.5), 0);
+    }
+
+    #[test]
+    fn snapshots_merge_and_serialize() {
+        let a = Histogram::default();
+        let b = Histogram::default();
+        a.record(5);
+        a.record(7);
+        b.record(9);
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m.count, 3);
+        assert_eq!(m.sum, 21);
+        assert_eq!(m.mean(), 7.0);
+
+        let reg = Registry::default();
+        reg.counter("x.hits").add(3);
+        reg.gauge("x.depth").set(-2);
+        reg.histogram("x.lat").record(12);
+        let mut snap = reg.snapshot();
+        snap.merge(&reg.snapshot());
+        assert_eq!(snap.counters["x.hits"], 6);
+        assert_eq!(snap.gauges["x.depth"], -2);
+        assert_eq!(snap.histograms["x.lat"].count, 2);
+        let j = snap.to_json();
+        let line = j.to_compact_string();
+        assert_eq!(crate::util::Json::parse(&line).unwrap(), j);
+    }
+
+    #[test]
+    fn registry_handles_are_shared() {
+        let reg = Registry::default();
+        let a = reg.counter("same.name");
+        let b = reg.counter("same.name");
+        a.inc();
+        b.inc();
+        assert_eq!(reg.counter("same.name").get(), 2);
+        // the process-global registry returns stable handles too
+        let g1 = Registry::global().counter("telemetry.test.shared");
+        Registry::global().counter("telemetry.test.shared").inc();
+        assert!(g1.get() >= 1);
+    }
+}

@@ -1,0 +1,50 @@
+//! Always-on campaign observability (ISSUE 7).
+//!
+//! The paper's evidence is operational — a 100% completion rate over
+//! 12 hours of distributed runs (§5.1) and per-setup resource tables
+//! (§5.3) — but a ledger replay can only establish those facts after
+//! the fact.  This module records *how* a campaign got there while it
+//! runs, at a cost low enough to leave enabled everywhere:
+//!
+//! * [`metrics`] — lock-free counters/gauges/log2-histograms behind a
+//!   process-global hierarchical [`Registry`] (the per-lane latency
+//!   and occupancy series the deadline-scheduler ROADMAP item will be
+//!   judged on),
+//! * [`events`] + [`sink`] — the structured run-lifecycle event
+//!   stream (campaign → run → attempt → dispatch), emitted to a
+//!   buffered JSONL sink with the ledger's torn-tail discipline (the
+//!   stream the coordinator/worker fabric item will transport),
+//! * [`trace`] — event stream → Chrome/Perfetto trace-event JSON,
+//! * [`report`] — event stream → completion/retry/latency/occupancy
+//!   summary (`webots-hpc report`).
+//!
+//! Overhead discipline: nothing emits inside the per-step inner loop;
+//! instrumentation stops at engine-*dispatch* granularity, and a
+//! disabled `emit()` is one relaxed atomic load.
+
+pub mod events;
+pub mod metrics;
+pub mod report;
+pub mod sink;
+pub mod trace;
+
+pub use events::{Event, EventKind};
+pub use metrics::{
+    Counter, Gauge, HistSnapshot, Histogram, Registry, RegistrySnapshot, HIST_BUCKETS,
+};
+pub use report::{summarize, DispatchStats, LaneUsage, Report};
+pub use sink::{
+    emit, enabled, flush_all, install, read_events, uninstall, EventSink, JsonlSink, MemorySink,
+};
+pub use trace::{to_chrome_trace, ENGINE_PID};
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Microseconds since the process's telemetry epoch (the first call).
+/// Monotonic — safe to subtract — and shared by every event stamp so
+/// one campaign's streams are mutually ordered.
+pub fn now_us() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}

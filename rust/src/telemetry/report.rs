@@ -1,0 +1,377 @@
+//! `webots-hpc report` — aggregate an event stream back into the
+//! operational facts the paper reports (§5.1 completion rate, §5.3
+//! resource use): completion counts, retry taxonomy, per-family/per-K
+//! dispatch latency percentiles, and per-lane occupancy.
+//!
+//! The report is derived *only* from the event stream, so the e2e test
+//! can assert it reconstructs the ledger's completion set exactly —
+//! the property the future coordinator/worker fabric relies on
+//! (workers stream events; the coordinator must not need the ledger
+//! file to know campaign state).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::events::{Event, EventKind};
+
+/// Exact dispatch-latency aggregate for one `(kind, K)` family.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DispatchStats {
+    pub count: u64,
+    pub sum_us: u64,
+    /// Sorted on demand by [`summarize`] — percentiles are exact, not
+    /// bucketed (the stream carries every duration).
+    pub durs_us: Vec<u64>,
+    pub batched: u64,
+    pub serial_fallbacks: u64,
+}
+
+impl DispatchStats {
+    fn record(&mut self, dur_us: u64, batch: u64) {
+        self.count += 1;
+        self.sum_us += dur_us;
+        self.durs_us.push(dur_us);
+        if batch >= 2 {
+            self.batched += 1;
+        }
+    }
+
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.durs_us.is_empty() {
+            return 0;
+        }
+        let rank = ((p * self.durs_us.len() as f64).ceil() as usize).clamp(1, self.durs_us.len());
+        self.durs_us[rank - 1]
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+}
+
+/// One node/slot lane's busy time.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LaneUsage {
+    pub busy_us: u64,
+    pub runs: u64,
+}
+
+/// Everything `webots-hpc report` prints, as data.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Report {
+    pub campaign: Option<String>,
+    /// run_ids that reached a `running` ledger state (or RunBegin).
+    pub runs_seen: u64,
+    /// Unique run_ids whose latest ledger transition is `completed`.
+    pub completed: u64,
+    /// Unique run_ids whose latest ledger transition is `failed`.
+    pub failed: u64,
+    pub attempts: u64,
+    /// Retry taxonomy: error class → count.
+    pub retries: BTreeMap<String, u64>,
+    pub backoff_ms_total: u64,
+    pub degraded: u64,
+    /// Watchdog kind (`walltime` / `stall`) → fires.
+    pub watchdog: BTreeMap<String, u64>,
+    /// `(kind, K)` → exact latency stats (K = 0 for step dispatches).
+    pub dispatch: BTreeMap<(String, u64), DispatchStats>,
+    pub pool_hits: u64,
+    pub pool_misses: u64,
+    /// `(node, slot)` → lane usage over the campaign span.
+    pub lanes: BTreeMap<(u64, u64), LaneUsage>,
+    /// Last event timestamp minus first — the denominator for
+    /// occupancy.
+    pub span_us: u64,
+}
+
+impl Report {
+    /// The §5.1 headline: completed / runs_seen (1.0 for an idle
+    /// stream so a fresh campaign doesn't report failure).
+    pub fn completion_rate(&self) -> f64 {
+        if self.runs_seen == 0 {
+            1.0
+        } else {
+            self.completed as f64 / self.runs_seen as f64
+        }
+    }
+
+    /// Render the table the CLI prints.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let name = self.campaign.as_deref().unwrap_or("(unnamed)");
+        out.push_str(&format!(
+            "campaign {name}: {} runs | {} completed | {} failed | completion rate {:.1}%\n",
+            self.runs_seen,
+            self.completed,
+            self.failed,
+            self.completion_rate() * 100.0
+        ));
+        out.push_str(&format!(
+            "attempts {} | degraded {} | backoff slept {} ms\n",
+            self.attempts, self.degraded, self.backoff_ms_total
+        ));
+        if self.retries.is_empty() {
+            out.push_str("retries: none\n");
+        } else {
+            out.push_str("retries by class:\n");
+            for (class, n) in &self.retries {
+                out.push_str(&format!("  {class:<12} {n}\n"));
+            }
+        }
+        for (kind, n) in &self.watchdog {
+            out.push_str(&format!("watchdog {kind}: {n} fires\n"));
+        }
+        if self.pool_hits + self.pool_misses > 0 {
+            out.push_str(&format!(
+                "engine pool: {} hits / {} misses across runs\n",
+                self.pool_hits, self.pool_misses
+            ));
+        }
+        if !self.dispatch.is_empty() {
+            out.push_str("engine dispatch latency (exact, us):\n");
+            for ((kind, k), stats) in &self.dispatch {
+                let family = if *k > 0 {
+                    format!("{kind}/K={k}")
+                } else {
+                    kind.clone()
+                };
+                out.push_str(&format!(
+                    "  {family:<16} n={:<6} mean={:<8.1} p50={} p90={} p99={} batched={} fallbacks={}\n",
+                    stats.count,
+                    stats.mean_us(),
+                    stats.percentile(0.50),
+                    stats.percentile(0.90),
+                    stats.percentile(0.99),
+                    stats.batched,
+                    stats.serial_fallbacks
+                ));
+            }
+        }
+        if !self.lanes.is_empty() && self.span_us > 0 {
+            out.push_str("lane occupancy (busy / campaign span):\n");
+            for ((node, slot), lane) in &self.lanes {
+                out.push_str(&format!(
+                    "  node {node} slot {slot}: {} runs, {:.1}%\n",
+                    lane.runs,
+                    lane.busy_us as f64 / self.span_us as f64 * 100.0
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Fold an event stream into a [`Report`].
+pub fn summarize(events: &[Event]) -> Report {
+    let mut report = Report::default();
+    let mut latest_state: BTreeMap<String, String> = BTreeMap::new();
+    let mut begun: BTreeSet<String> = BTreeSet::new();
+    let mut run_open: BTreeMap<String, u64> = BTreeMap::new();
+    let mut lanes_of: BTreeMap<String, (u64, u64)> = BTreeMap::new();
+    let (mut t_min, mut t_max) = (u64::MAX, 0u64);
+
+    for ev in events {
+        t_min = t_min.min(ev.t_us);
+        t_max = t_max.max(ev.t_us);
+        match &ev.kind {
+            EventKind::CampaignBegin { name, .. } => {
+                report.campaign.get_or_insert_with(|| name.clone());
+            }
+            EventKind::RunBegin {
+                run_id, slot, node, ..
+            } => {
+                begun.insert(run_id.clone());
+                run_open.insert(run_id.clone(), ev.t_us);
+                lanes_of.insert(run_id.clone(), (*node, *slot));
+            }
+            EventKind::RunEnd { run_id, .. } => {
+                if let Some(t0) = run_open.remove(run_id) {
+                    let lane = lanes_of.get(run_id).copied().unwrap_or((0, 0));
+                    let usage = report.lanes.entry(lane).or_default();
+                    usage.busy_us += ev.t_us.saturating_sub(t0);
+                    usage.runs += 1;
+                }
+            }
+            EventKind::AttemptBegin { .. } => report.attempts += 1,
+            EventKind::Retry {
+                class, backoff_ms, ..
+            } => {
+                *report.retries.entry(class.clone()).or_insert(0) += 1;
+                report.backoff_ms_total += backoff_ms;
+            }
+            EventKind::Degraded { .. } => report.degraded += 1,
+            EventKind::WatchdogFire { kind, .. } => {
+                *report.watchdog.entry(kind.clone()).or_insert(0) += 1;
+            }
+            EventKind::LedgerTransition { run_id, state } => {
+                begun.insert(run_id.clone());
+                latest_state.insert(run_id.clone(), state.clone());
+            }
+            EventKind::DispatchEnd {
+                kind,
+                k,
+                batch,
+                dur_us,
+                ..
+            } => {
+                report
+                    .dispatch
+                    .entry((kind.clone(), *k))
+                    .or_default()
+                    .record(*dur_us, *batch);
+            }
+            EventKind::SerialFallback { kind, k, .. } => {
+                report
+                    .dispatch
+                    .entry((kind.clone(), *k))
+                    .or_default()
+                    .serial_fallbacks += 1;
+            }
+            EventKind::PoolDelta { hits, misses, .. } => {
+                report.pool_hits += hits;
+                report.pool_misses += misses;
+            }
+            _ => {}
+        }
+    }
+
+    report.runs_seen = begun.len() as u64;
+    report.completed = latest_state.values().filter(|s| *s == "completed").count() as u64;
+    report.failed = latest_state.values().filter(|s| *s == "failed").count() as u64;
+    report.span_us = if t_min == u64::MAX {
+        0
+    } else {
+        t_max - t_min
+    };
+    for stats in report.dispatch.values_mut() {
+        stats.durs_us.sort_unstable();
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Event;
+
+    fn ev(t_us: u64, kind: EventKind) -> Event {
+        Event { t_us, kind }
+    }
+
+    #[test]
+    fn report_reconstructs_completion_and_taxonomy() {
+        let events = vec![
+            ev(
+                0,
+                EventKind::CampaignBegin {
+                    name: "rep".into(),
+                    nodes: 1,
+                    slots_per_node: 2,
+                    epochs: 1,
+                    runs: 2,
+                },
+            ),
+            ev(
+                10,
+                EventKind::LedgerTransition {
+                    run_id: "rep-e0[0]".into(),
+                    state: "running".into(),
+                },
+            ),
+            ev(
+                12,
+                EventKind::RunBegin {
+                    run_id: "rep-e0[0]".into(),
+                    epoch: 0,
+                    slot: 0,
+                    node: 0,
+                },
+            ),
+            ev(
+                20,
+                EventKind::Retry {
+                    run_id: "rep-e0[0]".into(),
+                    attempt: 1,
+                    class: "transient".into(),
+                    error: "duarouter failed".into(),
+                    backoff_ms: 5,
+                },
+            ),
+            ev(
+                40,
+                EventKind::RunEnd {
+                    run_id: "rep-e0[0]".into(),
+                    ok: true,
+                    attempts: 2,
+                    degraded: false,
+                },
+            ),
+            ev(
+                41,
+                EventKind::LedgerTransition {
+                    run_id: "rep-e0[0]".into(),
+                    state: "completed".into(),
+                },
+            ),
+            ev(
+                50,
+                EventKind::LedgerTransition {
+                    run_id: "rep-e0[1]".into(),
+                    state: "running".into(),
+                },
+            ),
+            ev(
+                60,
+                EventKind::LedgerTransition {
+                    run_id: "rep-e0[1]".into(),
+                    state: "failed".into(),
+                },
+            ),
+        ];
+        let r = summarize(&events);
+        assert_eq!(r.campaign.as_deref(), Some("rep"));
+        assert_eq!(r.runs_seen, 2);
+        assert_eq!(r.completed, 1);
+        assert_eq!(r.failed, 1);
+        assert_eq!(r.completion_rate(), 0.5);
+        assert_eq!(r.retries["transient"], 1);
+        assert_eq!(r.backoff_ms_total, 5);
+        assert_eq!(r.span_us, 60);
+        let lane = &r.lanes[&(0, 0)];
+        assert_eq!(lane.runs, 1);
+        assert_eq!(lane.busy_us, 28);
+        let text = r.render();
+        assert!(text.contains("completion rate 50.0%"), "{text}");
+        assert!(text.contains("transient"), "{text}");
+    }
+
+    #[test]
+    fn dispatch_percentiles_are_exact() {
+        let mut events = Vec::new();
+        for dur in 1..=100u64 {
+            events.push(ev(
+                dur * 10,
+                EventKind::DispatchEnd {
+                    kind: "rollout".into(),
+                    bucket: 64,
+                    k: 32,
+                    batch: if dur % 2 == 0 { 2 } else { 1 },
+                    dur_us: dur,
+                },
+            ));
+        }
+        let r = summarize(&events);
+        let stats = &r.dispatch[&("rollout".to_string(), 32)];
+        assert_eq!(stats.count, 100);
+        assert_eq!(stats.percentile(0.50), 50);
+        assert_eq!(stats.percentile(0.90), 90);
+        assert_eq!(stats.percentile(0.99), 99);
+        assert_eq!(stats.batched, 50);
+        assert_eq!(stats.mean_us(), 50.5);
+        // empty report: rate defaults to 1.0, not 0/0
+        assert_eq!(Report::default().completion_rate(), 1.0);
+    }
+}

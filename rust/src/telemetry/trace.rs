@@ -1,0 +1,364 @@
+//! Event stream → Chrome / Perfetto trace-event JSON.
+//!
+//! Layout: one process row per node (`pid = node`), one thread lane
+//! per slot (`tid = slot`); run and attempt spans nest on the slot
+//! lane.  Engine dispatches render on a synthetic "engine" process
+//! (`pid = 99`) with one lane per rollout depth (`tid = K`, step = 0).
+//! Retries, watchdog kills, degradations and ledger transitions are
+//! instant markers on the lane of the run they belong to.
+//!
+//! Timestamps are already microseconds (the trace-event unit), so the
+//! conversion is arithmetic-free; `DispatchEnd` carries `dur_us`, so
+//! no Begin/End pairing is needed for engine spans and a truncated
+//! stream still converts.  Open the output at `chrome://tracing` or
+//! <https://ui.perfetto.dev>.
+
+use std::collections::BTreeMap;
+
+use super::events::{Event, EventKind};
+use crate::util::Json;
+
+/// The synthetic pid engine-dispatch lanes render under.
+pub const ENGINE_PID: u64 = 99;
+
+fn num(n: u64) -> Json {
+    Json::num(n as f64)
+}
+
+fn span(
+    name: &str,
+    cat: &str,
+    ts: u64,
+    dur: u64,
+    pid: u64,
+    tid: u64,
+    args: Vec<(&str, Json)>,
+) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("cat", Json::str(cat)),
+        ("ph", Json::str("X")),
+        ("ts", num(ts)),
+        ("dur", num(dur)),
+        ("pid", num(pid)),
+        ("tid", num(tid)),
+        ("args", Json::obj(args)),
+    ])
+}
+
+fn instant(name: &str, cat: &str, ts: u64, pid: u64, tid: u64, args: Vec<(&str, Json)>) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("cat", Json::str(cat)),
+        ("ph", Json::str("i")),
+        ("s", Json::str("t")),
+        ("ts", num(ts)),
+        ("pid", num(pid)),
+        ("tid", num(tid)),
+        ("args", Json::obj(args)),
+    ])
+}
+
+fn metadata(name: &str, pid: u64, tid: Option<u64>, label: String) -> Json {
+    let mut pairs = vec![
+        ("name", Json::str(name)),
+        ("ph", Json::str("M")),
+        ("pid", num(pid)),
+        ("args", Json::obj(vec![("name", Json::str(label))])),
+    ];
+    if let Some(tid) = tid {
+        pairs.push(("tid", num(tid)));
+    }
+    Json::obj(pairs)
+}
+
+/// Convert an event stream into a trace-event JSON document.
+///
+/// Unpaired `*Begin` events (a stream truncated mid-run) are dropped
+/// rather than invented; everything that did pair converts.
+pub fn to_chrome_trace(events: &[Event]) -> Json {
+    // run_id → (node, slot, begin timestamp)
+    let mut runs_open: BTreeMap<String, (u64, u64, u64)> = BTreeMap::new();
+    // run_id → (node, slot): lane lookup for instants after RunEnd too
+    let mut lanes: BTreeMap<String, (u64, u64)> = BTreeMap::new();
+    // (run_id, attempt) → begin timestamp + engine label
+    let mut attempts_open: BTreeMap<(String, u64), (u64, String)> = BTreeMap::new();
+
+    let mut out: Vec<Json> = Vec::new();
+    for ev in events {
+        match &ev.kind {
+            EventKind::RunBegin {
+                run_id,
+                slot,
+                node,
+                ..
+            } => {
+                runs_open.insert(run_id.clone(), (*node, *slot, ev.t_us));
+                lanes.insert(run_id.clone(), (*node, *slot));
+            }
+            EventKind::RunEnd {
+                run_id,
+                ok,
+                attempts,
+                degraded,
+            } => {
+                if let Some((node, slot, t0)) = runs_open.remove(run_id) {
+                    out.push(span(
+                        run_id,
+                        "run",
+                        t0,
+                        ev.t_us.saturating_sub(t0),
+                        node,
+                        slot,
+                        vec![
+                            ("ok", Json::Bool(*ok)),
+                            ("attempts", num(*attempts)),
+                            ("degraded", Json::Bool(*degraded)),
+                        ],
+                    ));
+                }
+            }
+            EventKind::AttemptBegin {
+                run_id,
+                attempt,
+                engine,
+            } => {
+                attempts_open.insert((run_id.clone(), *attempt), (ev.t_us, engine.clone()));
+            }
+            EventKind::AttemptEnd {
+                run_id,
+                attempt,
+                ok,
+            } => {
+                if let Some((t0, engine)) = attempts_open.remove(&(run_id.clone(), *attempt)) {
+                    let (node, slot) = lanes.get(run_id).copied().unwrap_or((0, 0));
+                    out.push(span(
+                        &format!("attempt {attempt}"),
+                        "attempt",
+                        t0,
+                        ev.t_us.saturating_sub(t0),
+                        node,
+                        slot,
+                        vec![("engine", Json::str(engine)), ("ok", Json::Bool(*ok))],
+                    ));
+                }
+            }
+            EventKind::DispatchEnd {
+                kind,
+                bucket,
+                k,
+                batch,
+                dur_us,
+            } => {
+                let name = if *k > 0 {
+                    format!("{kind} K={k} N={bucket}")
+                } else {
+                    format!("{kind} N={bucket}")
+                };
+                out.push(span(
+                    &name,
+                    "dispatch",
+                    ev.t_us.saturating_sub(*dur_us),
+                    *dur_us,
+                    ENGINE_PID,
+                    *k,
+                    vec![("batch", num(*batch))],
+                ));
+            }
+            EventKind::Retry {
+                run_id,
+                attempt,
+                class,
+                backoff_ms,
+                ..
+            } => {
+                let (node, slot) = lanes.get(run_id).copied().unwrap_or((0, 0));
+                out.push(instant(
+                    &format!("retry ({class})"),
+                    "retry",
+                    ev.t_us,
+                    node,
+                    slot,
+                    vec![
+                        ("run_id", Json::str(run_id.clone())),
+                        ("attempt", num(*attempt)),
+                        ("backoff_ms", num(*backoff_ms)),
+                    ],
+                ));
+            }
+            EventKind::WatchdogFire {
+                run_id,
+                kind,
+                detail,
+            } => {
+                let (node, slot) = lanes.get(run_id).copied().unwrap_or((0, 0));
+                out.push(instant(
+                    &format!("watchdog ({kind})"),
+                    "watchdog",
+                    ev.t_us,
+                    node,
+                    slot,
+                    vec![
+                        ("run_id", Json::str(run_id.clone())),
+                        ("detail", Json::str(detail.clone())),
+                    ],
+                ));
+            }
+            EventKind::Degraded { run_id, attempt, .. } => {
+                let (node, slot) = lanes.get(run_id).copied().unwrap_or((0, 0));
+                out.push(instant(
+                    "degraded to native",
+                    "degrade",
+                    ev.t_us,
+                    node,
+                    slot,
+                    vec![
+                        ("run_id", Json::str(run_id.clone())),
+                        ("attempt", num(*attempt)),
+                    ],
+                ));
+            }
+            EventKind::LedgerTransition { run_id, state } => {
+                let (node, slot) = lanes.get(run_id).copied().unwrap_or((0, 0));
+                out.push(instant(
+                    &format!("ledger: {state}"),
+                    "ledger",
+                    ev.t_us,
+                    node,
+                    slot,
+                    vec![("run_id", Json::str(run_id.clone()))],
+                ));
+            }
+            // campaign/slot bookkeeping, dispatch begins and batcher
+            // details don't need their own trace rows
+            _ => {}
+        }
+    }
+
+    // name the lanes: one process per node, the engine process, one
+    // thread per slot — sorted, so the document is deterministic
+    let mut meta: Vec<Json> = Vec::new();
+    let nodes: std::collections::BTreeSet<u64> = lanes.values().map(|(n, _)| *n).collect();
+    for node in &nodes {
+        meta.push(metadata("process_name", *node, None, format!("node {node}")));
+    }
+    let slots: std::collections::BTreeSet<(u64, u64)> = lanes.values().copied().collect();
+    for (node, slot) in &slots {
+        meta.push(metadata(
+            "thread_name",
+            *node,
+            Some(*slot),
+            format!("slot {slot}"),
+        ));
+    }
+    if events
+        .iter()
+        .any(|e| matches!(e.kind, EventKind::DispatchEnd { .. }))
+    {
+        meta.push(metadata("process_name", ENGINE_PID, None, "engine".into()));
+    }
+    meta.extend(out);
+
+    Json::obj(vec![
+        ("displayTimeUnit", Json::str("ms")),
+        ("traceEvents", Json::arr(meta)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t_us: u64, kind: EventKind) -> Event {
+        Event { t_us, kind }
+    }
+
+    #[test]
+    fn runs_nest_attempts_and_dispatches_get_the_engine_lane() {
+        let events = vec![
+            ev(
+                100,
+                EventKind::RunBegin {
+                    run_id: "c-e0[1]".into(),
+                    epoch: 0,
+                    slot: 1,
+                    node: 0,
+                },
+            ),
+            ev(
+                110,
+                EventKind::AttemptBegin {
+                    run_id: "c-e0[1]".into(),
+                    attempt: 0,
+                    engine: "hlo".into(),
+                },
+            ),
+            ev(
+                500,
+                EventKind::DispatchEnd {
+                    kind: "rollout".into(),
+                    bucket: 64,
+                    k: 32,
+                    batch: 1,
+                    dur_us: 50,
+                },
+            ),
+            ev(
+                900,
+                EventKind::AttemptEnd {
+                    run_id: "c-e0[1]".into(),
+                    attempt: 0,
+                    ok: true,
+                },
+            ),
+            ev(
+                1000,
+                EventKind::RunEnd {
+                    run_id: "c-e0[1]".into(),
+                    ok: true,
+                    attempts: 1,
+                    degraded: false,
+                },
+            ),
+        ];
+        let doc = to_chrome_trace(&events);
+        let rows = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 metadata (node, slot) + 1 engine metadata + 3 spans
+        assert_eq!(rows.len(), 6);
+        let run = rows
+            .iter()
+            .find(|r| r.get("cat").map(|c| c.as_str().unwrap_or("")) == Ok("run"))
+            .unwrap();
+        assert_eq!(run.get("ts").unwrap().as_usize().unwrap(), 100);
+        assert_eq!(run.get("dur").unwrap().as_usize().unwrap(), 900);
+        let dispatch = rows
+            .iter()
+            .find(|r| r.get("cat").map(|c| c.as_str().unwrap_or("")) == Ok("dispatch"))
+            .unwrap();
+        assert_eq!(
+            dispatch.get("pid").unwrap().as_usize().unwrap(),
+            ENGINE_PID as usize
+        );
+        assert_eq!(dispatch.get("ts").unwrap().as_usize().unwrap(), 450);
+        assert_eq!(dispatch.get("tid").unwrap().as_usize().unwrap(), 32);
+    }
+
+    #[test]
+    fn truncated_stream_drops_unpaired_begins() {
+        let events = vec![ev(
+            100,
+            EventKind::RunBegin {
+                run_id: "c-e0[0]".into(),
+                epoch: 0,
+                slot: 0,
+                node: 0,
+            },
+        )];
+        let doc = to_chrome_trace(&events);
+        let rows = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        // metadata rows only — no invented span
+        assert!(rows
+            .iter()
+            .all(|r| r.get("ph").unwrap().as_str().unwrap() == "M"));
+    }
+}

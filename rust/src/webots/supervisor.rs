@@ -12,6 +12,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::telemetry::{self, EventKind};
 use crate::{Error, Result};
 
 /// When to end a batch simulation run.
@@ -91,6 +92,13 @@ impl InstanceWatchdog {
     pub fn check_deadline(&self) -> Result<()> {
         if let Some(limit) = self.spec.walltime {
             if self.started.elapsed() > limit {
+                if telemetry::enabled() {
+                    telemetry::emit(EventKind::WatchdogFire {
+                        run_id: self.label.clone(),
+                        kind: "walltime".to_string(),
+                        detail: format!("elapsed {:?} > limit {limit:?}", self.started.elapsed()),
+                    });
+                }
                 return Err(Error::WalltimeExceeded(self.label.clone()));
             }
         }
@@ -103,6 +111,15 @@ impl InstanceWatchdog {
     pub fn check_burst(&self, steps: u64, burst_elapsed: Duration) -> Result<()> {
         if let Some(window) = self.spec.stall_window {
             if burst_elapsed > window {
+                if telemetry::enabled() {
+                    telemetry::emit(EventKind::WatchdogFire {
+                        run_id: self.label.clone(),
+                        kind: "stall".to_string(),
+                        detail: format!(
+                            "burst {burst_elapsed:?} > window {window:?} after {steps} steps"
+                        ),
+                    });
+                }
                 return Err(Error::Stalled(steps));
             }
         }

@@ -1,0 +1,323 @@
+//! Telemetry acceptance tests (ISSUE 7).
+//!
+//! Two properties anchor the observability layer:
+//!
+//! 1. **Golden trace export** — the Chrome/Perfetto conversion is
+//!    byte-stable: a fixed event stream must serialize to the exact
+//!    committed document (`tests/golden/chrome_trace.json`, generated
+//!    by the independent python mirror in
+//!    `scripts/verify_telemetry.py`).  Perfetto consumes this format
+//!    verbatim, so byte drift is format drift.
+//!
+//! 2. **Events ⊇ ledger** — a fault-injected supervised campaign's
+//!    event stream must reconstruct the ledger's completion facts
+//!    without reading the ledger file.  This is the contract the
+//!    planned coordinator/worker fabric relies on: workers stream
+//!    events, the coordinator must not need their ledger files.
+//!
+//! The event sink registry is process-global and `cargo test` runs
+//! tests concurrently, so every assertion filters the captured stream
+//! down to this test's own campaign/run ids before counting.
+
+use webots_hpc::pipeline::{
+    run_supervised_campaign, CampaignLedger, FaultPlan, PhysicsEngine, RetryPolicy,
+    SupervisedCampaignSpec, SupervisorSpec,
+};
+use webots_hpc::telemetry::{
+    self, read_events, summarize, to_chrome_trace, Event, EventKind, JsonlSink,
+};
+use webots_hpc::util::TempDir;
+
+fn ev(t_us: u64, kind: EventKind) -> Event {
+    Event { t_us, kind }
+}
+
+/// The fixed stream behind the golden trace: one run, a transient
+/// retry, a coalesced rollout dispatch, a ledger transition.
+fn golden_events() -> Vec<Event> {
+    let run = "golden-e0[0]".to_string();
+    vec![
+        ev(
+            100,
+            EventKind::RunBegin {
+                run_id: run.clone(),
+                epoch: 0,
+                slot: 0,
+                node: 0,
+            },
+        ),
+        ev(
+            110,
+            EventKind::AttemptBegin {
+                run_id: run.clone(),
+                attempt: 0,
+                engine: "hlo".into(),
+            },
+        ),
+        ev(
+            150,
+            EventKind::AttemptEnd {
+                run_id: run.clone(),
+                attempt: 0,
+                ok: false,
+            },
+        ),
+        ev(
+            160,
+            EventKind::Retry {
+                run_id: run.clone(),
+                attempt: 0,
+                class: "transient".into(),
+                error: "TraCI port 8873 already in use".into(),
+                backoff_ms: 5,
+            },
+        ),
+        ev(
+            170,
+            EventKind::AttemptBegin {
+                run_id: run.clone(),
+                attempt: 1,
+                engine: "hlo".into(),
+            },
+        ),
+        ev(
+            300,
+            EventKind::DispatchEnd {
+                kind: "rollout".into(),
+                bucket: 64,
+                k: 32,
+                batch: 2,
+                dur_us: 40,
+            },
+        ),
+        ev(
+            400,
+            EventKind::AttemptEnd {
+                run_id: run.clone(),
+                attempt: 1,
+                ok: true,
+            },
+        ),
+        ev(
+            410,
+            EventKind::LedgerTransition {
+                run_id: run.clone(),
+                state: "completed".into(),
+            },
+        ),
+        ev(
+            420,
+            EventKind::RunEnd {
+                run_id: run,
+                ok: true,
+                attempts: 2,
+                degraded: false,
+            },
+        ),
+    ]
+}
+
+#[test]
+fn chrome_trace_export_matches_golden() {
+    let doc = to_chrome_trace(&golden_events());
+    let golden = include_str!("golden/chrome_trace.json");
+    assert_eq!(
+        doc.to_compact_string(),
+        golden.trim_end(),
+        "trace-event export drifted from tests/golden/chrome_trace.json \
+         (regenerate with scripts/verify_telemetry.py --golden if the \
+         change is intentional)"
+    );
+    // and the document round-trips through the crate's own parser
+    let parsed = webots_hpc::util::Json::parse(golden.trim_end()).unwrap();
+    assert_eq!(parsed, doc);
+}
+
+#[test]
+fn golden_stream_report_is_consistent() {
+    let report = summarize(&golden_events());
+    assert_eq!(report.runs_seen, 1);
+    assert_eq!(report.completed, 1);
+    assert_eq!(report.completion_rate(), 1.0);
+    assert_eq!(report.attempts, 2);
+    assert_eq!(report.retries["transient"], 1);
+    assert_eq!(report.backoff_ms_total, 5);
+    let rollout = &report.dispatch[&("rollout".to_string(), 32)];
+    assert_eq!(rollout.count, 1);
+    assert_eq!(rollout.batched, 1);
+}
+
+/// Does this event belong to the given campaign?  The process-global
+/// sink sees every concurrently-running test's events; ownership is
+/// decided by the `run_id`/`name` the event itself carries.
+fn belongs_to(ev: &Event, campaign: &str) -> bool {
+    let j = ev.to_json();
+    for key in ["run_id", "name"] {
+        if let Ok(v) = j.get(key) {
+            if let Ok(s) = v.as_str() {
+                return s.starts_with(campaign);
+            }
+        }
+    }
+    false
+}
+
+#[test]
+fn supervised_campaign_events_reconstruct_the_ledger() {
+    let campaign = "telem-soak";
+    let runs: u32 = 6;
+    let dir = TempDir::new("telemetry-e2e").unwrap();
+    let events_path = dir.path().join("events.jsonl");
+
+    let sink: std::sync::Arc<dyn telemetry::EventSink> =
+        std::sync::Arc::new(JsonlSink::append(&events_path).unwrap());
+    telemetry::install(sink.clone());
+
+    let spec = SupervisedCampaignSpec {
+        name: campaign.into(),
+        nodes: 1,
+        slots_per_node: runs,
+        epochs: 1,
+        horizon_s: 2.0,
+        capacity: 64,
+        seed: 1000,
+        matrix: None,
+        supervisor: SupervisorSpec {
+            retry: RetryPolicy {
+                max_attempts: 10,
+                base_ms: 1,
+                cap_ms: 5,
+            },
+            watchdog: Default::default(),
+            degrade: false,
+            // the robustness soak's schedule: seeded, ≥10% per
+            // transient site per attempt — the retry machinery fires
+            fault_plan: Some(FaultPlan::transient_only(99, 0.12)),
+        },
+        ledger_dir: dir.path().to_path_buf(),
+        retry_failed: false,
+        stop_after_runs: None,
+    };
+    let outcome = run_supervised_campaign(&spec, &PhysicsEngine::Native);
+    telemetry::uninstall(&sink);
+    let outcome = outcome.unwrap();
+    let stats = outcome.result.robustness.unwrap();
+    assert_eq!(stats.completed, runs as u64, "soak converges");
+
+    // the stream on disk, scoped to THIS campaign's ids
+    let events: Vec<Event> = read_events(&events_path)
+        .unwrap()
+        .into_iter()
+        .filter(|e| belongs_to(e, campaign))
+        .collect();
+    assert!(!events.is_empty());
+
+    // events ⊇ ledger: every terminal ledger record has a matching
+    // LedgerTransition event for the same run_id and state
+    let ledger = CampaignLedger::open(dir.path().join("ledger.jsonl")).unwrap();
+    for (run_id, _) in ledger.completed() {
+        assert!(
+            events.iter().any(|e| matches!(
+                &e.kind,
+                EventKind::LedgerTransition { run_id: r, state } if *r == run_id && state == "completed"
+            )),
+            "no completed event for {run_id}"
+        );
+    }
+
+    // the report reproduces the §5.1 facts from the stream alone
+    let report = summarize(&events);
+    assert_eq!(report.campaign.as_deref(), Some(campaign));
+    assert_eq!(report.runs_seen, runs as u64);
+    assert_eq!(report.completed, ledger.completed().len() as u64);
+    assert_eq!(report.completion_rate(), 1.0);
+    // retry taxonomy agrees with the supervisor's own accounting
+    assert_eq!(
+        report.retries.values().sum::<u64>(),
+        stats.retries,
+        "event-stream retry count == RobustnessStats.retries"
+    );
+    assert_eq!(report.attempts, stats.attempts);
+    assert_eq!(report.backoff_ms_total, stats.backoff_ms_total);
+
+    // per-run attempt timeline: RunEnd attempts match the reports
+    for run_report in &outcome.reports {
+        let end = events.iter().find_map(|e| match &e.kind {
+            EventKind::RunEnd {
+                run_id, attempts, ..
+            } if *run_id == run_report.run_id => Some(*attempts),
+            _ => None,
+        });
+        assert_eq!(end, Some(run_report.attempts as u64), "{}", run_report.run_id);
+    }
+
+    // and the trace export covers every run with a span
+    let doc = to_chrome_trace(&events);
+    let rows = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let run_spans = rows
+        .iter()
+        .filter(|r| matches!(r.get("cat").and_then(|c| c.as_str()), Ok("run")))
+        .count();
+    assert_eq!(run_spans, runs as usize);
+}
+
+#[test]
+fn resumed_campaign_extends_the_same_stream() {
+    let campaign = "telem-resume";
+    let dir = TempDir::new("telemetry-resume").unwrap();
+    let events_path = dir.path().join("events.jsonl");
+    let spec = |stop: Option<u64>| SupervisedCampaignSpec {
+        name: campaign.into(),
+        nodes: 1,
+        slots_per_node: 4,
+        epochs: 1,
+        horizon_s: 2.0,
+        capacity: 64,
+        seed: 500,
+        matrix: None,
+        supervisor: SupervisorSpec::default(),
+        ledger_dir: dir.path().to_path_buf(),
+        retry_failed: false,
+        stop_after_runs: stop,
+    };
+
+    // session 1: killed after 2 launches
+    {
+        let sink: std::sync::Arc<dyn telemetry::EventSink> =
+            std::sync::Arc::new(JsonlSink::append(&events_path).unwrap());
+        telemetry::install(sink.clone());
+        let out = run_supervised_campaign(&spec(Some(2)), &PhysicsEngine::Native);
+        telemetry::uninstall(&sink);
+        assert!(out.unwrap().interrupted);
+    }
+    // session 2: resumes, appends to the same stream
+    {
+        let sink: std::sync::Arc<dyn telemetry::EventSink> =
+            std::sync::Arc::new(JsonlSink::append(&events_path).unwrap());
+        telemetry::install(sink.clone());
+        let out = run_supervised_campaign(&spec(None), &PhysicsEngine::Native);
+        telemetry::uninstall(&sink);
+        assert!(!out.unwrap().interrupted);
+    }
+
+    let events: Vec<Event> = read_events(&events_path)
+        .unwrap()
+        .into_iter()
+        .filter(|e| belongs_to(e, campaign))
+        .collect();
+    // both sessions opened the campaign; all 4 runs completed exactly
+    // once across the two sessions (resume skips, never re-runs)
+    let begins = events
+        .iter()
+        .filter(|e| matches!(&e.kind, EventKind::CampaignBegin { .. }))
+        .count();
+    assert_eq!(begins, 2, "one CampaignBegin per session");
+    let report = summarize(&events);
+    assert_eq!(report.completed, 4);
+    assert_eq!(report.completion_rate(), 1.0);
+    let run_begins = events
+        .iter()
+        .filter(|e| matches!(&e.kind, EventKind::RunBegin { .. }))
+        .count();
+    assert_eq!(run_begins, 4, "resume skipped settled runs");
+}

@@ -16,6 +16,22 @@ echo "== control-plane lint gate (no unwrap/expect in pipeline/) =="
 grep -q 'deny(clippy::unwrap_used, clippy::expect_used)' rust/src/pipeline/mod.rs \
   || { echo "FAIL: pipeline/mod.rs lost its unwrap/expect deny gate"; exit 1; }
 
+echo "== telemetry lint gate (no println!/eprintln! in library code) =="
+# library observability goes through telemetry::emit / the metrics
+# registry; stray prints vanish in batch campaigns.  Test modules are
+# exempt (everything after the first #[cfg(test)] in a file), and
+# main.rs is the CLI — printing is its job.
+print_gate_fail=0
+while IFS= read -r f; do
+  hits=$(awk '/#\[cfg\(test\)\]/{exit} /(println|eprintln)!/{print FILENAME ":" FNR ": " $0}' "$f")
+  if [ -n "$hits" ]; then
+    echo "$hits"
+    print_gate_fail=1
+  fi
+done < <(find rust/src/runtime rust/src/pipeline rust/src/telemetry -name '*.rs')
+[ "$print_gate_fail" -eq 0 ] \
+  || { echo "FAIL: library code prints to stdout/stderr — emit telemetry events instead"; exit 1; }
+
 echo "== cargo build --examples =="
 cargo build --examples
 

@@ -1,0 +1,502 @@
+#!/usr/bin/env python3
+"""Independent python mirror of the telemetry consumers (ISSUE 7).
+
+Re-implements, from the documented formats alone (no rust parsing):
+
+  * the Chrome/Perfetto trace-event conversion for the fixed golden
+    stream behind `rust/tests/golden/chrome_trace.json`
+  * the log2 histogram bucketing of `telemetry::metrics::Histogram`
+  * the report aggregation (`telemetry::summarize`) for the golden
+    stream
+
+Default mode verifies all three against the committed golden and the
+rust-side semantics; `--golden` rewrites the golden file instead (do
+that only when a trace-format change is intentional — the rust test
+`chrome_trace_export_matches_golden` byte-compares against it).
+
+`--append-bench` measures the python-mirror stand-in for the rust
+`hlo_rollout_telemetry_{off,on}` bench pair — the same jitted K=32
+rollout dispatch, with and without a mirrored per-dispatch telemetry
+cost (one histogram record + one event dict serialized to a JSONL
+buffer) — and appends the pair to `BENCH_runtime_hotpath.json`
+(EXPERIMENTS.md §Observability; re-measure with `cargo bench` on a
+machine with the rust toolchain).
+
+The byte-identity trick: `util::Json` serializes objects from a
+BTreeMap (alphabetical keys) with a compact one-line form, which is
+exactly `json.dumps(doc, sort_keys=True, separators=(",", ":"))` as
+long as every number is an integer below 1e15.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+GOLDEN = REPO / "rust" / "tests" / "golden" / "chrome_trace.json"
+
+ENGINE_PID = 99  # mirror of telemetry::trace::ENGINE_PID
+HIST_BUCKETS = 64
+
+# ---------------------------------------------------------------------------
+# The fixed stream behind the golden trace (mirror of golden_events()
+# in rust/tests/telemetry.rs): one run, a transient retry, a coalesced
+# rollout dispatch, a ledger transition.
+
+RUN = "golden-e0[0]"
+GOLDEN_EVENTS = [
+    {"ev": "run_begin", "t_us": 100, "run_id": RUN, "epoch": 0, "slot": 0, "node": 0},
+    {"ev": "attempt_begin", "t_us": 110, "run_id": RUN, "attempt": 0, "engine": "hlo"},
+    {"ev": "attempt_end", "t_us": 150, "run_id": RUN, "attempt": 0, "ok": False},
+    {
+        "ev": "retry",
+        "t_us": 160,
+        "run_id": RUN,
+        "attempt": 0,
+        "class": "transient",
+        "error": "TraCI port 8873 already in use",
+        "backoff_ms": 5,
+    },
+    {"ev": "attempt_begin", "t_us": 170, "run_id": RUN, "attempt": 1, "engine": "hlo"},
+    {
+        "ev": "dispatch_end",
+        "t_us": 300,
+        "kind": "rollout",
+        "bucket": 64,
+        "k": 32,
+        "batch": 2,
+        "dur_us": 40,
+    },
+    {"ev": "attempt_end", "t_us": 400, "run_id": RUN, "attempt": 1, "ok": True},
+    {"ev": "ledger_transition", "t_us": 410, "run_id": RUN, "state": "completed"},
+    {
+        "ev": "run_end",
+        "t_us": 420,
+        "run_id": RUN,
+        "ok": True,
+        "attempts": 2,
+        "degraded": False,
+    },
+]
+
+
+# ---------------------------------------------------------------------------
+# Mirror of telemetry::trace::to_chrome_trace
+
+
+def span(name, cat, ts, dur, pid, tid, args):
+    return {
+        "name": name,
+        "cat": cat,
+        "ph": "X",
+        "ts": ts,
+        "dur": dur,
+        "pid": pid,
+        "tid": tid,
+        "args": args,
+    }
+
+
+def instant(name, cat, ts, pid, tid, args):
+    return {
+        "name": name,
+        "cat": cat,
+        "ph": "i",
+        "s": "t",
+        "ts": ts,
+        "pid": pid,
+        "tid": tid,
+        "args": args,
+    }
+
+
+def metadata(name, pid, tid, label):
+    row = {"name": name, "ph": "M", "pid": pid, "args": {"name": label}}
+    if tid is not None:
+        row["tid"] = tid
+    return row
+
+
+def to_chrome_trace(events):
+    runs_open = {}  # run_id -> (node, slot, t0)
+    lanes = {}  # run_id -> (node, slot)
+    attempts_open = {}  # (run_id, attempt) -> (t0, engine)
+    out = []
+    for ev in events:
+        tag, t = ev["ev"], ev["t_us"]
+        if tag == "run_begin":
+            runs_open[ev["run_id"]] = (ev["node"], ev["slot"], t)
+            lanes[ev["run_id"]] = (ev["node"], ev["slot"])
+        elif tag == "run_end":
+            if ev["run_id"] in runs_open:
+                node, slot, t0 = runs_open.pop(ev["run_id"])
+                out.append(
+                    span(
+                        ev["run_id"],
+                        "run",
+                        t0,
+                        max(t - t0, 0),
+                        node,
+                        slot,
+                        {
+                            "ok": ev["ok"],
+                            "attempts": ev["attempts"],
+                            "degraded": ev["degraded"],
+                        },
+                    )
+                )
+        elif tag == "attempt_begin":
+            attempts_open[(ev["run_id"], ev["attempt"])] = (t, ev["engine"])
+        elif tag == "attempt_end":
+            key = (ev["run_id"], ev["attempt"])
+            if key in attempts_open:
+                t0, engine = attempts_open.pop(key)
+                node, slot = lanes.get(ev["run_id"], (0, 0))
+                out.append(
+                    span(
+                        f"attempt {ev['attempt']}",
+                        "attempt",
+                        t0,
+                        max(t - t0, 0),
+                        node,
+                        slot,
+                        {"engine": engine, "ok": ev["ok"]},
+                    )
+                )
+        elif tag == "dispatch_end":
+            name = (
+                f"{ev['kind']} K={ev['k']} N={ev['bucket']}"
+                if ev["k"] > 0
+                else f"{ev['kind']} N={ev['bucket']}"
+            )
+            out.append(
+                span(
+                    name,
+                    "dispatch",
+                    max(t - ev["dur_us"], 0),
+                    ev["dur_us"],
+                    ENGINE_PID,
+                    ev["k"],
+                    {"batch": ev["batch"]},
+                )
+            )
+        elif tag == "retry":
+            node, slot = lanes.get(ev["run_id"], (0, 0))
+            out.append(
+                instant(
+                    f"retry ({ev['class']})",
+                    "retry",
+                    t,
+                    node,
+                    slot,
+                    {
+                        "run_id": ev["run_id"],
+                        "attempt": ev["attempt"],
+                        "backoff_ms": ev["backoff_ms"],
+                    },
+                )
+            )
+        elif tag == "watchdog_fire":
+            node, slot = lanes.get(ev["run_id"], (0, 0))
+            out.append(
+                instant(
+                    f"watchdog ({ev['kind']})",
+                    "watchdog",
+                    t,
+                    node,
+                    slot,
+                    {"run_id": ev["run_id"], "detail": ev["detail"]},
+                )
+            )
+        elif tag == "degraded":
+            node, slot = lanes.get(ev["run_id"], (0, 0))
+            out.append(
+                instant(
+                    "degraded to native",
+                    "degrade",
+                    t,
+                    node,
+                    slot,
+                    {"run_id": ev["run_id"], "attempt": ev["attempt"]},
+                )
+            )
+        elif tag == "ledger_transition":
+            node, slot = lanes.get(ev["run_id"], (0, 0))
+            out.append(
+                instant(
+                    f"ledger: {ev['state']}",
+                    "ledger",
+                    t,
+                    node,
+                    slot,
+                    {"run_id": ev["run_id"]},
+                )
+            )
+        # campaign/slot bookkeeping, dispatch begins and batcher details
+        # don't need their own trace rows
+
+    meta = []
+    for node in sorted({n for n, _ in lanes.values()}):
+        meta.append(metadata("process_name", node, None, f"node {node}"))
+    for node, slot in sorted(set(lanes.values())):
+        meta.append(metadata("thread_name", node, slot, f"slot {slot}"))
+    if any(ev["ev"] == "dispatch_end" for ev in events):
+        meta.append(metadata("process_name", ENGINE_PID, None, "engine"))
+    return {"displayTimeUnit": "ms", "traceEvents": meta + out}
+
+
+def dumps(doc):
+    # byte-identical to util::Json::to_compact_string (BTreeMap order)
+    return json.dumps(doc, sort_keys=True, separators=(",", ":"))
+
+
+# ---------------------------------------------------------------------------
+# Mirror of telemetry::metrics::Histogram bucketing
+
+
+def bucket_index(v):
+    return 0 if v == 0 else min(v.bit_length(), HIST_BUCKETS - 1)
+
+
+def bucket_edge(i):
+    if i == 0:
+        return 0
+    if i >= HIST_BUCKETS - 1:
+        return 2**64 - 1
+    return (1 << i) - 1
+
+
+# ---------------------------------------------------------------------------
+# Mirror of telemetry::report::summarize for the golden stream
+
+
+def summarize(events):
+    begun, completed, failed = set(), set(), set()
+    latest = {}
+    attempts = retries_total = backoff = 0
+    retries = {}
+    dispatch = {}
+    for ev in events:
+        tag = ev["ev"]
+        if tag in ("run_begin", "ledger_transition"):
+            begun.add(ev["run_id"])
+        if tag == "ledger_transition":
+            latest[ev["run_id"]] = ev["state"]
+        elif tag == "attempt_begin":
+            attempts += 1
+        elif tag == "retry":
+            retries_total += 1
+            retries[ev["class"]] = retries.get(ev["class"], 0) + 1
+            backoff += ev["backoff_ms"]
+        elif tag == "dispatch_end":
+            key = (ev["kind"], ev["k"])
+            count, batched = dispatch.get(key, (0, 0))
+            dispatch[key] = (count + 1, batched + (1 if ev["batch"] > 1 else 0))
+    for run_id, state in latest.items():
+        (completed if state == "completed" else failed).add(run_id)
+    return {
+        "runs_seen": len(begun),
+        "completed": len(completed),
+        "failed": len(failed),
+        "attempts": attempts,
+        "retries": retries,
+        "retries_total": retries_total,
+        "backoff_ms_total": backoff,
+        "dispatch": dispatch,
+    }
+
+
+# ---------------------------------------------------------------------------
+
+
+def verify():
+    failures = []
+
+    # 1. golden byte-compare
+    want = dumps(to_chrome_trace(GOLDEN_EVENTS))
+    have = GOLDEN.read_text().rstrip("\n")
+    if want != have:
+        failures.append(
+            f"golden trace drifted: mirror produced {len(want)}B, "
+            f"{GOLDEN} holds {len(have)}B (run with --golden to accept)"
+        )
+    else:
+        print(f"OK golden trace byte-identical ({len(want)} bytes, {GOLDEN.name})")
+
+    # 2. histogram bucketing mirror (the metrics.rs unit-test vectors +
+    #    edge/index round-trip over every bucket)
+    vectors = [(0, 0), (1, 1), (2, 2), (3, 2), (4, 3), (1023, 10), (1024, 11), (2**64 - 1, 63)]
+    for v, idx in vectors:
+        if bucket_index(v) != idx:
+            failures.append(f"bucket_index({v}) = {bucket_index(v)}, want {idx}")
+    for i in range(HIST_BUCKETS):
+        if bucket_index(bucket_edge(i)) != i:
+            failures.append(f"bucket_edge({i}) does not map back to bucket {i}")
+    if not failures:
+        print(f"OK histogram bucketing ({len(vectors)} vectors, {HIST_BUCKETS} edges)")
+
+    # 3. report aggregation for the golden stream
+    rep = summarize(GOLDEN_EVENTS)
+    expect = {
+        "runs_seen": 1,
+        "completed": 1,
+        "failed": 0,
+        "attempts": 2,
+        "retries": {"transient": 1},
+        "retries_total": 1,
+        "backoff_ms_total": 5,
+        "dispatch": {("rollout", 32): (1, 1)},
+    }
+    if rep != expect:
+        failures.append(f"golden-stream report mismatch:\n  got  {rep}\n  want {expect}")
+    else:
+        print("OK golden-stream report aggregation")
+
+    for f in failures:
+        print(f"FAIL {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+# ---------------------------------------------------------------------------
+# Python-mirror overhead bench for the hlo_rollout_telemetry_{off,on}
+# rust pair (EXPERIMENTS.md §Observability)
+
+
+def bench_overhead(append):
+    import time
+
+    sys.path.insert(0, str(REPO / "scripts"))
+    sys.path.insert(0, str(REPO / "python"))
+    try:
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        import validate_sweep as vs
+        from compile import model
+    except ImportError as e:
+        print(f"overhead bench skipped (no jax here: {e})")
+        return 0
+
+    k, n = 32, 64
+    geometry = vs.FAMILY_GEOMETRIES["lane-drop-hi"]
+    rng = np.random.default_rng(123)
+    x, v, lane, act, params = vs.geometry_traffic(rng, n, geometry, True, exit_frac=0.25)
+    state = jnp.stack(
+        [jnp.asarray(x), jnp.asarray(v), jnp.asarray(lane), jnp.asarray(act.astype(vs.F))],
+        axis=1,
+    )
+    pj = jnp.asarray(params)
+    g = jnp.asarray(np.array(geometry, dtype=vs.F))
+    fn = jax.jit(lambda s, p, gg: model.rollout_geom(s, p, gg, k))
+    fn(state, pj, g)[0].block_until_ready()
+
+    # telemetry on mirrors what the rust engine pays per dispatch: one
+    # histogram record (bucket index + counter bump) and one guarded
+    # DispatchEnd emit (event dict -> compact JSON line into a memory
+    # buffer; the rust JsonlSink is buffered too).  The two variants
+    # run as interleaved blocks so drift hits both equally — the
+    # telemetry cost is microseconds against a multi-ms dispatch, so a
+    # sequential A-then-B measurement is pure run-order noise.
+    hist = [0] * HIST_BUCKETS
+    hist_count = hist_sum = 0
+    sink = []
+    enabled = True
+    block, blocks = 20, 10
+    reps = block * blocks
+    t_off = t_on = 0.0
+    for _ in range(blocks):
+        t0 = time.perf_counter()
+        for _ in range(block):
+            fn(state, pj, g)[0].block_until_ready()
+        t_off += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for _ in range(block):
+            d0 = time.perf_counter_ns()
+            fn(state, pj, g)[0].block_until_ready()
+            dur_us = (time.perf_counter_ns() - d0) // 1000
+            hist[bucket_index(dur_us)] += 1
+            hist_count += 1
+            hist_sum += dur_us
+            if enabled:
+                sink.append(
+                    dumps(
+                        {
+                            "ev": "dispatch_end",
+                            "t_us": dur_us,
+                            "kind": "rollout",
+                            "bucket": n,
+                            "k": k,
+                            "batch": 1,
+                            "dur_us": dur_us,
+                        }
+                    )
+                )
+        t_on += time.perf_counter() - t0
+    sec_off = t_off / reps
+    sec_on = t_on / reps
+    assert hist_count == reps and len(sink) == reps
+
+    overhead = (sec_on / sec_off - 1.0) * 100.0
+    print(
+        f"K={k} N={n}: off {sec_off * 1e3:.3f} ms/dispatch, "
+        f"on {sec_on * 1e3:.3f} ms/dispatch -> {overhead:+.2f}% (budget 2%)"
+    )
+    if not append:
+        return 0
+
+    path = REPO / "BENCH_runtime_hotpath.json"
+    doc = json.loads(path.read_text())
+    doc["runs"].append(
+        {
+            "label": (
+                "post-PR7-python-mirror (telemetry overhead on the fused K=32 "
+                "rollout dispatch: one mirrored histogram record + one "
+                "DispatchEnd event serialized to a buffered JSONL sink per "
+                "dispatch, vs the bare dispatch — the "
+                "hlo_rollout_telemetry_{off,on} rust pair)"
+            ),
+            "unix_time": int(time.time()),
+            "source": "scripts/verify_telemetry.py",
+            "results": [
+                {
+                    "name": f"mirror_hlo_rollout_telemetry_{tag}/K={k}/N={n}",
+                    "ns_per_iter": int(sec * 1e9),
+                    "iters": reps,
+                    "steps_per_s": round(k / sec, 1),
+                }
+                for tag, sec in (("off", sec_off), ("on", sec_on))
+            ],
+        }
+    )
+    path.write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"appended telemetry-overhead pair to {path}")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--golden",
+        action="store_true",
+        help=f"rewrite {GOLDEN} from the mirror instead of verifying",
+    )
+    ap.add_argument(
+        "--append-bench",
+        action="store_true",
+        help="measure the telemetry-overhead mirror pair and append it "
+        "to BENCH_runtime_hotpath.json",
+    )
+    args = ap.parse_args()
+    if args.golden:
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN.write_text(dumps(to_chrome_trace(GOLDEN_EVENTS)) + "\n")
+        print(f"wrote {GOLDEN}")
+        return 0
+    if args.append_bench:
+        return bench_overhead(append=True)
+    return verify()
+
+
+if __name__ == "__main__":
+    sys.exit(main())
