@@ -1,0 +1,714 @@
+//! The campaign coordinator: sole owner of the ledger, lessor of work.
+//!
+//! One coordinator process drives a whole distributed campaign:
+//!
+//! * it replays/extends the crash-safe [`CampaignLedger`] exactly like
+//!   the single-process driver (kill the coordinator, start a new one
+//!   on the same ledger dir, and the campaign resumes),
+//! * it hands out **leases** on `(epoch, slot)` coordinates — workers
+//!   materialize the runs themselves from the shared spec, so the wire
+//!   never carries scenario payloads,
+//! * its **reaper thread** enforces heartbeat deadlines from outside
+//!   every worker process: a worker that dies, wedges, or drops its
+//!   link loses the lease and the index is re-dispatched,
+//! * completions are settled through the ledger's duplicate guard, so
+//!   a zombie worker's late result for an already-settled run is
+//!   rejected idempotently — re-dispatch can never produce duplicate
+//!   run_ids in the aggregate,
+//! * the final dataset is assembled by the *same* ledger+disk walk the
+//!   single-process driver uses ([`assemble_aggregate`]), which is what
+//!   makes the distributed aggregate byte-identical to the local one.
+
+use std::collections::VecDeque;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use super::lease::LeaseTable;
+use super::protocol::{spec_hash, write_msg, LineRead, LineReader, Msg};
+use crate::output::CampaignDataset;
+use crate::pipeline::ledger::{CampaignLedger, LedgerState};
+use crate::pipeline::supervisor::{
+    assemble_aggregate, campaign_fingerprint, grid, plan_run, publish_run_csv, ErrorClass,
+    RobustnessStats, SupervisedCampaignSpec,
+};
+use crate::pipeline::CampaignResult;
+use crate::scenario::FamilyRegistry;
+use crate::telemetry::{self, EventKind, EventSink, JsonlSink};
+use crate::{Error, Result};
+
+/// Fabric-side knobs (the campaign itself comes from
+/// [`SupervisedCampaignSpec`]).
+#[derive(Debug, Clone)]
+pub struct FabricConfig {
+    /// TCP port to listen on (0 = OS-assigned; read it back with
+    /// [`Coordinator::port`]).
+    pub port: u16,
+    /// Heartbeat cadence workers are told to keep [ms].
+    pub heartbeat_ms: u64,
+    /// Lease TTL the reaper enforces [ms] — a lease silent this long is
+    /// revoked and its run re-dispatched.  Must comfortably exceed the
+    /// heartbeat interval.
+    pub lease_ttl_ms: u64,
+    /// Test seam: stop the coordinator (abandoning everything in
+    /// flight) after accepting this many completions this session —
+    /// simulates a mid-campaign coordinator kill.
+    pub stop_after_completions: Option<u64>,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig {
+            port: 0,
+            heartbeat_ms: 500,
+            lease_ttl_ms: 3000,
+            stop_after_completions: None,
+        }
+    }
+}
+
+/// Fabric-level accounting for one coordinator session.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FabricStats {
+    /// Worker handshakes accepted (a reconnect counts again).
+    pub workers_joined: u64,
+    /// Worker connections ended (drain, drop, kill, torn frame).
+    pub workers_left: u64,
+    /// Handshakes refused for a mismatched campaign shape.
+    pub workers_refused: u64,
+    /// Leases granted (re-dispatches included).
+    pub leases_granted: u64,
+    /// Leases revoked — by the reaper (missed heartbeats) or instantly
+    /// when the holder's connection dropped.
+    pub leases_expired: u64,
+    /// Completions accepted and settled into the ledger.
+    pub completions_accepted: u64,
+    /// Completions rejected by the duplicate guard (zombie or
+    /// retransmitted results for already-settled runs).
+    pub completions_rejected: u64,
+    /// Terminal failures reported by workers.
+    pub remote_failures: u64,
+}
+
+/// What one coordinator session produced.
+#[derive(Debug)]
+pub struct FabricOutcome {
+    pub result: CampaignResult,
+    /// Aggregate dataset from the shared ledger+disk walk — identical
+    /// to the single-process assembly for the same spec and seed.
+    pub dataset: CampaignDataset,
+    /// True when the session ended with unsettled work (coordinator
+    /// kill seam) — re-bind on the same ledger dir to resume.
+    pub interrupted: bool,
+    pub fabric: FabricStats,
+}
+
+/// Mutable campaign state every connection handler and the reaper
+/// share.  One mutex: dispatch decisions, ledger writes, and stats all
+/// serialize, which is exactly the consistency the ledger needs.
+struct Shared {
+    ledger: CampaignLedger,
+    /// Unsettled run indices awaiting dispatch.  Invariant: every
+    /// unsettled index is in the queue or covered by a live lease.
+    queue: VecDeque<u64>,
+    leases: LeaseTable,
+    stats: RobustnessStats,
+    fabric: FabricStats,
+    walltimes_s: Vec<f64>,
+    accepted_this_session: u64,
+    stopping: bool,
+    /// First unrecoverable handler error (ledger write failure).
+    fatal: Option<String>,
+}
+
+impl Shared {
+    fn settle_check(&mut self, stop_after: Option<u64>) {
+        if let Some(stop) = stop_after {
+            if self.accepted_this_session >= stop {
+                self.stopping = true;
+            }
+        }
+    }
+}
+
+fn lock(shared: &Mutex<Shared>) -> MutexGuard<'_, Shared> {
+    shared.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// A bound, resumable campaign coordinator.
+pub struct Coordinator {
+    spec: Arc<SupervisedCampaignSpec>,
+    cfg: FabricConfig,
+    listener: TcpListener,
+    port: u16,
+    runs_dir: PathBuf,
+    hash: String,
+    shared: Arc<Mutex<Shared>>,
+}
+
+impl Coordinator {
+    /// Open (or resume) the campaign ledger and bind the fabric port.
+    /// The dispatch queue is seeded with every run the ledger does not
+    /// already settle — the same resume predicate the single-process
+    /// driver applies.
+    pub fn bind(spec: SupervisedCampaignSpec, cfg: FabricConfig) -> Result<Coordinator> {
+        let mut ledger = CampaignLedger::open(spec.ledger_dir.join("ledger.jsonl"))?;
+        ledger.ensure_header(&campaign_fingerprint(&spec))?;
+        let runs_dir = spec.ledger_dir.join("runs");
+        std::fs::create_dir_all(&runs_dir)?;
+
+        let registry = FamilyRegistry::builtin();
+        let mut queue = VecDeque::new();
+        let mut stats = RobustnessStats::default();
+        for idx in 0..spec.total_runs() {
+            let plan = plan_run(&spec, &registry, idx)?;
+            let settled = match ledger.state(&plan.run_id).map(|e| &e.state) {
+                Some(LedgerState::Completed { .. }) => Some(true),
+                Some(LedgerState::Failed { class, .. })
+                    if class.as_str() == ErrorClass::Permanent.name() && !spec.retry_failed =>
+                {
+                    Some(false)
+                }
+                _ => None,
+            };
+            match settled {
+                Some(completed) => {
+                    stats.runs += 1;
+                    stats.resumed_skips += 1;
+                    if completed {
+                        stats.completed += 1;
+                    } else {
+                        stats.failed += 1;
+                    }
+                }
+                None => queue.push_back(idx),
+            }
+        }
+
+        let listener = TcpListener::bind(("127.0.0.1", cfg.port))?;
+        let port = listener.local_addr()?.port();
+        listener.set_nonblocking(true)?;
+
+        let hash = spec_hash(&spec);
+        let shared = Shared {
+            ledger,
+            queue,
+            leases: LeaseTable::new(Duration::from_millis(cfg.lease_ttl_ms)),
+            stats,
+            fabric: FabricStats::default(),
+            walltimes_s: Vec::new(),
+            accepted_this_session: 0,
+            stopping: false,
+            fatal: None,
+        };
+        Ok(Coordinator {
+            spec: Arc::new(spec),
+            cfg,
+            listener,
+            port,
+            runs_dir,
+            hash,
+            shared: Arc::new(Mutex::new(shared)),
+        })
+    }
+
+    /// The port workers dial.
+    pub fn port(&self) -> u16 {
+        self.port
+    }
+
+    /// Serve until the campaign settles (or the kill seam fires), then
+    /// assemble the aggregate from ledger + disk.
+    pub fn run(self) -> Result<FabricOutcome> {
+        let spec = self.spec;
+        let cfg = self.cfg;
+        let shared = self.shared;
+
+        if telemetry::enabled() {
+            telemetry::emit(EventKind::CampaignBegin {
+                name: spec.name.clone(),
+                nodes: spec.nodes as u64,
+                slots_per_node: spec.slots_per_node as u64,
+                epochs: spec.epochs,
+                runs: spec.total_runs(),
+            });
+        }
+
+        // the reaper: lease-deadline enforcement outside every worker
+        let reaper = {
+            let shared = Arc::clone(&shared);
+            let sweep = Duration::from_millis((cfg.lease_ttl_ms / 4).max(5));
+            std::thread::spawn(move || loop {
+                std::thread::sleep(sweep);
+                let mut g = lock(&shared);
+                if g.stopping {
+                    return;
+                }
+                for lease in g.leases.expired(Instant::now()) {
+                    if !g.ledger.is_completed(&lease.run_id) {
+                        g.queue.push_back(lease.idx);
+                    }
+                    g.fabric.leases_expired += 1;
+                    if telemetry::enabled() {
+                        telemetry::emit(EventKind::LeaseExpired {
+                            run_id: lease.run_id.clone(),
+                            worker: lease.worker.clone(),
+                            lease: lease.id,
+                        });
+                    }
+                }
+            })
+        };
+
+        let mut handlers = Vec::new();
+        let mut conn_seq = 0u64;
+        loop {
+            {
+                let mut g = lock(&shared);
+                if g.stopping {
+                    break;
+                }
+                if g.queue.is_empty() && g.leases.is_empty() {
+                    g.stopping = true;
+                    break;
+                }
+            }
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    conn_seq += 1;
+                    let ctx = ConnCtx {
+                        shared: Arc::clone(&shared),
+                        spec: Arc::clone(&spec),
+                        cfg: cfg.clone(),
+                        runs_dir: self.runs_dir.clone(),
+                        hash: self.hash.clone(),
+                        conn_seq,
+                    };
+                    handlers.push(std::thread::spawn(move || handle_conn(stream, ctx)));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => {
+                    lock(&shared).stopping = true;
+                    let _ = reaper.join();
+                    return Err(e.into());
+                }
+            }
+        }
+        lock(&shared).stopping = true;
+        drop(self.listener);
+        for h in handlers {
+            let _ = h.join();
+        }
+        let _ = reaper.join();
+
+        let shared = Arc::try_unwrap(shared)
+            .map_err(|_| Error::Protocol("fabric shared state still referenced".into()))?;
+        let shared = shared.into_inner().unwrap_or_else(|p| p.into_inner());
+        if let Some(msg) = shared.fatal {
+            return Err(Error::Config(format!("fabric coordinator: {msg}")));
+        }
+        let interrupted = !(shared.queue.is_empty() && shared.leases.is_empty());
+
+        if telemetry::enabled() {
+            telemetry::emit(EventKind::CampaignEnd {
+                name: spec.name.clone(),
+                completed: shared.stats.completed,
+                failed: shared.stats.failed,
+            });
+            telemetry::flush_all();
+        }
+
+        let registry = FamilyRegistry::builtin();
+        let dataset = assemble_aggregate(&spec, &registry, &shared.ledger, &self.runs_dir)?;
+        let result = crate::pipeline::campaign::supervised_result(
+            shared.stats,
+            &shared.walltimes_s,
+            &dataset,
+            spec.nodes,
+        );
+        Ok(FabricOutcome {
+            result,
+            dataset,
+            interrupted,
+            fabric: shared.fabric,
+        })
+    }
+}
+
+/// Everything one connection handler needs.
+struct ConnCtx {
+    shared: Arc<Mutex<Shared>>,
+    spec: Arc<SupervisedCampaignSpec>,
+    cfg: FabricConfig,
+    runs_dir: PathBuf,
+    hash: String,
+    conn_seq: u64,
+}
+
+/// Serve one worker connection.  A ledger/CSV write failure is fatal
+/// for the whole coordinator (the ledger is the source of truth); it
+/// is recorded in `Shared::fatal` and stops the session.
+fn handle_conn(mut stream: TcpStream, ctx: ConnCtx) {
+    if let Err(e) = serve_worker(&mut stream, &ctx) {
+        let mut g = lock(&ctx.shared);
+        if g.fatal.is_none() {
+            g.fatal = Some(e.to_string());
+        }
+        g.stopping = true;
+    }
+}
+
+fn serve_worker(stream: &mut TcpStream, ctx: &ConnCtx) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_millis(50)))
+        .ok();
+    stream
+        .set_write_timeout(Some(Duration::from_secs(2)))
+        .ok();
+    let mut reader = LineReader::new();
+
+    // handshake: the first frame must be Hello with the right shape
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let hello = loop {
+        match reader.read_line(stream) {
+            LineRead::Line(l) => break Msg::parse(&l),
+            LineRead::TimedOut => {
+                if lock(&ctx.shared).stopping || Instant::now() >= deadline {
+                    return Ok(());
+                }
+            }
+            LineRead::Eof { .. } => return Ok(()),
+        }
+    };
+    let worker = match hello {
+        Ok(Msg::Hello { worker, spec_hash }) => {
+            if spec_hash != ctx.hash {
+                lock(&ctx.shared).fabric.workers_refused += 1;
+                let _ = write_msg(
+                    stream,
+                    &Msg::Refuse {
+                        reason: format!(
+                            "worker '{worker}' built a different campaign shape \
+                             (spec hash {spec_hash}, coordinator has {})",
+                            ctx.hash
+                        ),
+                    },
+                );
+                return Ok(());
+            }
+            worker
+        }
+        _ => return Ok(()), // not a fabric worker; drop silently
+    };
+    // connection-unique key: a reconnect gets a fresh identity, so this
+    // handler can never revoke a newer connection's leases on exit
+    let key = format!("{worker}#{}", ctx.conn_seq);
+    {
+        let mut g = lock(&ctx.shared);
+        g.fabric.workers_joined += 1;
+        if telemetry::enabled() {
+            telemetry::emit(EventKind::WorkerJoin {
+                worker: key.clone(),
+            });
+        }
+    }
+    if write_msg(
+        stream,
+        &Msg::Welcome {
+            heartbeat_ms: ctx.cfg.heartbeat_ms,
+            lease_ttl_ms: ctx.cfg.lease_ttl_ms,
+        },
+    )
+    .is_err()
+    {
+        leave(ctx, &key, "handshake write failed");
+        return Ok(());
+    }
+
+    let registry = FamilyRegistry::builtin();
+    // forwarded telemetry lands in a per-connection shard next to the
+    // ledger; `webots-hpc report` merges shards back into one stream
+    let mut forward_sink: Option<JsonlSink> = None;
+
+    let reason: String = loop {
+        let msg = match reader.read_line(stream) {
+            LineRead::Line(l) => match Msg::parse(&l) {
+                Ok(m) => m,
+                Err(_) => break "protocol error".into(),
+            },
+            LineRead::TimedOut => {
+                if lock(&ctx.shared).stopping {
+                    break "coordinator stopping".into();
+                }
+                continue;
+            }
+            LineRead::Eof { torn } => {
+                break if torn {
+                    "torn frame".into()
+                } else {
+                    "connection closed".into()
+                };
+            }
+        };
+        match msg {
+            Msg::Request => {
+                let reply = next_assignment(ctx, &registry, &key)?;
+                if write_msg(stream, &reply).is_err() {
+                    break "reply write failed".into();
+                }
+            }
+            Msg::Heartbeat { lease } => {
+                // an unknown lease id means the reaper already revoked
+                // it; the worker finds out when it reports the result
+                lock(&ctx.shared).leases.heartbeat(lease, Instant::now());
+            }
+            Msg::Complete {
+                lease,
+                idx,
+                run_id,
+                attempts,
+                degraded,
+                csv,
+            } => {
+                settle_completion(ctx, &key, lease, idx, &run_id, attempts, degraded, &csv)?;
+            }
+            Msg::Failed {
+                lease,
+                idx,
+                run_id,
+                attempts,
+                class,
+                error,
+            } => {
+                settle_failure(ctx, &key, lease, idx, &run_id, attempts, &class, &error)?;
+            }
+            Msg::Event { event } => {
+                if forward_sink.is_none() {
+                    let name: String = key
+                        .chars()
+                        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+                        .collect();
+                    forward_sink =
+                        JsonlSink::append(ctx.spec.ledger_dir.join(format!("events-{name}.jsonl")))
+                            .ok();
+                }
+                if let Some(sink) = &forward_sink {
+                    // already stamped by the worker: append verbatim
+                    sink.emit(&event);
+                }
+            }
+            // frames only the coordinator sends — a confused peer
+            Msg::Hello { .. }
+            | Msg::Welcome { .. }
+            | Msg::Refuse { .. }
+            | Msg::Lease { .. }
+            | Msg::Wait { .. }
+            | Msg::Drain => break "protocol error".into(),
+        }
+    };
+
+    // instant revocation: a dead connection doesn't wait out the TTL.
+    // One critical section — revoke and re-queue must be atomic, or
+    // the accept loop could observe "no queue, no leases" in between
+    // and declare the campaign settled with this work in limbo.
+    let revoked = {
+        let mut g = lock(&ctx.shared);
+        let revoked = g.leases.revoke_worker(&key);
+        for lease in &revoked {
+            if !g.ledger.is_completed(&lease.run_id) {
+                g.queue.push_back(lease.idx);
+            }
+            g.fabric.leases_expired += 1;
+        }
+        revoked
+    };
+    if telemetry::enabled() {
+        for lease in &revoked {
+            telemetry::emit(EventKind::LeaseExpired {
+                run_id: lease.run_id.clone(),
+                worker: key.clone(),
+                lease: lease.id,
+            });
+        }
+    }
+    leave(ctx, &key, &reason);
+    Ok(())
+}
+
+fn leave(ctx: &ConnCtx, key: &str, reason: &str) {
+    lock(&ctx.shared).fabric.workers_left += 1;
+    if telemetry::enabled() {
+        telemetry::emit(EventKind::WorkerLeave {
+            worker: key.to_string(),
+            reason: reason.to_string(),
+        });
+    }
+}
+
+/// Pick the next frame to answer a work request with: a lease on the
+/// head of the queue, Wait while everything is out on other leases, or
+/// Drain when the campaign is settled / stopping.
+fn next_assignment(ctx: &ConnCtx, registry: &FamilyRegistry, key: &str) -> Result<Msg> {
+    let mut g = lock(&ctx.shared);
+    if g.stopping {
+        return Ok(Msg::Drain);
+    }
+    let Some(idx) = g.queue.pop_front() else {
+        return Ok(if g.leases.is_empty() {
+            Msg::Drain
+        } else {
+            Msg::Wait {
+                ms: ctx.cfg.heartbeat_ms,
+            }
+        });
+    };
+    match plan_run(&ctx.spec, registry, idx) {
+        Ok(plan) => {
+            let lease = g.leases.grant(idx, &plan.run_id, key, Instant::now());
+            g.ledger
+                .mark_running(&plan.run_id, plan.epoch, plan.slot, lease.attempt)?;
+            g.fabric.leases_granted += 1;
+            if telemetry::enabled() {
+                telemetry::emit(EventKind::RunBegin {
+                    run_id: plan.run_id.clone(),
+                    epoch: plan.epoch as u64,
+                    slot: plan.slot as u64,
+                    node: plan.node as u64,
+                });
+                telemetry::emit(EventKind::LeaseGrant {
+                    run_id: plan.run_id,
+                    worker: key.to_string(),
+                    lease: lease.id,
+                    attempt: lease.attempt as u64,
+                });
+            }
+            Ok(Msg::Lease {
+                lease: lease.id,
+                idx,
+                attempt: lease.attempt as u64,
+            })
+        }
+        Err(e) => {
+            // the spec itself cannot materialize this index: settle it
+            // as a permanent failure instead of bouncing it forever
+            let (epoch, slot, _) = grid(&ctx.spec, idx);
+            let run_id = format!("{}-e{epoch}[{slot}]", ctx.spec.name);
+            g.ledger.mark_failed(
+                &run_id,
+                epoch,
+                slot,
+                1,
+                ErrorClass::Permanent.name(),
+                &e.to_string(),
+            )?;
+            g.stats.runs += 1;
+            g.stats.failed += 1;
+            Ok(Msg::Wait { ms: 10 })
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn settle_completion(
+    ctx: &ConnCtx,
+    key: &str,
+    lease: u64,
+    idx: u64,
+    run_id: &str,
+    attempts: u64,
+    degraded: bool,
+    csv: &str,
+) -> Result<()> {
+    let mut g = lock(&ctx.shared);
+    let released = g.leases.release(lease);
+    // the ledger's duplicate guard: a zombie's late result for a run
+    // someone else already settled is rejected, idempotently
+    if g.ledger.is_completed(run_id) {
+        g.fabric.completions_rejected += 1;
+        if telemetry::enabled() {
+            telemetry::emit(EventKind::CompletionRejected {
+                run_id: run_id.to_string(),
+                worker: key.to_string(),
+            });
+        }
+        return Ok(());
+    }
+    let (epoch, slot, _) = grid(&ctx.spec, idx);
+    // CSV lands fully before the `completed` record — same crash
+    // discipline as the local driver
+    publish_run_csv(&ctx.runs_dir, epoch, slot, csv)?;
+    g.ledger
+        .mark_completed(run_id, epoch, slot, attempts as u32, degraded)?;
+    // the reaper may have re-queued this idx while the worker was
+    // silent; the accepted result settles it for good
+    g.queue.retain(|&i| i != idx);
+    g.stats.runs += 1;
+    g.stats.completed += 1;
+    g.stats.attempts += attempts;
+    g.stats.retries += attempts.saturating_sub(1);
+    if degraded {
+        g.stats.degraded += 1;
+    }
+    g.fabric.completions_accepted += 1;
+    if let Some(l) = &released {
+        g.walltimes_s.push(l.granted.elapsed().as_secs_f64());
+    }
+    g.accepted_this_session += 1;
+    g.settle_check(ctx.cfg.stop_after_completions);
+    if telemetry::enabled() {
+        telemetry::emit(EventKind::RunEnd {
+            run_id: run_id.to_string(),
+            ok: true,
+            attempts,
+            degraded,
+        });
+    }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn settle_failure(
+    ctx: &ConnCtx,
+    key: &str,
+    lease: u64,
+    idx: u64,
+    run_id: &str,
+    attempts: u64,
+    class: &str,
+    error: &str,
+) -> Result<()> {
+    let mut g = lock(&ctx.shared);
+    g.leases.release(lease);
+    if g.ledger.is_completed(run_id) {
+        g.fabric.completions_rejected += 1;
+        if telemetry::enabled() {
+            telemetry::emit(EventKind::CompletionRejected {
+                run_id: run_id.to_string(),
+                worker: key.to_string(),
+            });
+        }
+        return Ok(());
+    }
+    let (epoch, slot, _) = grid(&ctx.spec, idx);
+    g.ledger
+        .mark_failed(run_id, epoch, slot, attempts as u32, class, error)?;
+    g.queue.retain(|&i| i != idx);
+    g.stats.runs += 1;
+    g.stats.failed += 1;
+    g.stats.attempts += attempts;
+    g.stats.retries += attempts.saturating_sub(1);
+    g.fabric.remote_failures += 1;
+    if telemetry::enabled() {
+        telemetry::emit(EventKind::RunEnd {
+            run_id: run_id.to_string(),
+            ok: false,
+            attempts,
+            degraded: false,
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,199 @@
+//! Lease bookkeeping for the coordinator's out-of-process reaper.
+//!
+//! A lease binds one campaign run index to one worker connection for a
+//! bounded wall-clock window.  Heartbeats extend the window; a worker
+//! that stops beating — killed process, dropped link, wedged host —
+//! loses the lease when the reaper sweeps, and the run index goes back
+//! on the dispatch queue.  This is the fabric's analogue of the local
+//! supervisor's watchdogs: enforcement lives *outside* the process
+//! doing the work, so no failure mode of the worker can disable it.
+//!
+//! Every method that touches time takes an explicit `now: Instant` so
+//! the expiry logic is a pure function of its inputs and unit-testable
+//! without sleeping.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// One outstanding lease.
+#[derive(Debug, Clone)]
+pub struct Lease {
+    /// Monotonic lease id — never reused within one coordinator.
+    pub id: u64,
+    /// Campaign run index this lease covers.
+    pub idx: u64,
+    /// Run id (for the ledger and telemetry).
+    pub run_id: String,
+    /// Connection-unique worker key (`name#conn`): a reconnecting
+    /// worker gets a fresh key, so a stale handler can never revoke
+    /// the new connection's leases.
+    pub worker: String,
+    /// Fabric-level dispatch count for this idx (1-based; re-dispatch
+    /// after expiry increments it).
+    pub attempt: u32,
+    /// When the lease was granted (walltime accounting).
+    pub granted: Instant,
+    /// Expiry deadline; heartbeats push it forward.
+    pub deadline: Instant,
+}
+
+/// The coordinator's table of outstanding leases.
+pub struct LeaseTable {
+    ttl: Duration,
+    next_id: u64,
+    live: HashMap<u64, Lease>,
+    /// idx → dispatches so far (survives expiry: attempt numbers keep
+    /// rising across re-dispatches, matching the ledger's `attempt`).
+    dispatches: HashMap<u64, u32>,
+}
+
+impl LeaseTable {
+    pub fn new(ttl: Duration) -> LeaseTable {
+        LeaseTable {
+            ttl,
+            next_id: 0,
+            live: HashMap::new(),
+            dispatches: HashMap::new(),
+        }
+    }
+
+    /// Grant a lease on `idx` to `worker`, deadline `now + ttl`.
+    pub fn grant(&mut self, idx: u64, run_id: &str, worker: &str, now: Instant) -> Lease {
+        self.next_id += 1;
+        let attempt = {
+            let n = self.dispatches.entry(idx).or_insert(0);
+            *n += 1;
+            *n
+        };
+        let lease = Lease {
+            id: self.next_id,
+            idx,
+            run_id: run_id.to_string(),
+            worker: worker.to_string(),
+            attempt,
+            granted: now,
+            deadline: now + self.ttl,
+        };
+        self.live.insert(lease.id, lease.clone());
+        lease
+    }
+
+    /// Extend a lease's deadline.  Returns false for an unknown id —
+    /// the lease was already reaped (the worker is a zombie) or never
+    /// existed.
+    pub fn heartbeat(&mut self, id: u64, now: Instant) -> bool {
+        match self.live.get_mut(&id) {
+            Some(lease) => {
+                lease.deadline = now + self.ttl;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Remove and return a lease (completion or terminal failure).
+    pub fn release(&mut self, id: u64) -> Option<Lease> {
+        self.live.remove(&id)
+    }
+
+    /// Remove and return every lease past its deadline — the reaper's
+    /// sweep.  The caller re-queues the indices.
+    pub fn expired(&mut self, now: Instant) -> Vec<Lease> {
+        let ids: Vec<u64> = self
+            .live
+            .values()
+            .filter(|l| l.deadline <= now)
+            .map(|l| l.id)
+            .collect();
+        let mut out: Vec<Lease> = ids.iter().filter_map(|id| self.live.remove(id)).collect();
+        out.sort_by_key(|l| l.id);
+        out
+    }
+
+    /// Remove and return every lease held by `worker` — the instant
+    /// revocation path when a connection drops (faster than waiting
+    /// out the TTL).
+    pub fn revoke_worker(&mut self, worker: &str) -> Vec<Lease> {
+        let ids: Vec<u64> = self
+            .live
+            .values()
+            .filter(|l| l.worker == worker)
+            .map(|l| l.id)
+            .collect();
+        let mut out: Vec<Lease> = ids.iter().filter_map(|id| self.live.remove(id)).collect();
+        out.sort_by_key(|l| l.id);
+        out
+    }
+
+    /// Outstanding lease count.
+    pub fn len(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live.is_empty()
+    }
+
+    /// The lease currently covering `idx`, if any.
+    pub fn holding(&self, idx: u64) -> Option<&Lease> {
+        self.live.values().find(|l| l.idx == idx)
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn table() -> LeaseTable {
+        LeaseTable::new(Duration::from_millis(100))
+    }
+
+    #[test]
+    fn grant_heartbeat_release_lifecycle() {
+        let mut t = table();
+        let now = Instant::now();
+        let a = t.grant(0, "c-e0[0]", "w1#1", now);
+        let b = t.grant(1, "c-e0[1]", "w1#1", now);
+        assert_eq!((a.id, a.attempt), (1, 1));
+        assert_eq!((b.id, b.attempt), (2, 1));
+        assert_eq!(t.len(), 2);
+
+        // heartbeat at +80ms pushes the deadline past the +100ms sweep
+        assert!(t.heartbeat(a.id, now + Duration::from_millis(80)));
+        let reaped = t.expired(now + Duration::from_millis(120));
+        assert_eq!(reaped.len(), 1, "only the silent lease expires");
+        assert_eq!(reaped[0].idx, 1);
+
+        assert_eq!(t.release(a.id).unwrap().idx, 0);
+        assert!(t.is_empty());
+        assert!(!t.heartbeat(a.id, now), "released lease is unknown");
+    }
+
+    #[test]
+    fn redispatch_after_expiry_increments_the_attempt() {
+        let mut t = table();
+        let now = Instant::now();
+        let first = t.grant(3, "c-e0[3]", "w1#1", now);
+        assert_eq!(first.attempt, 1);
+        let reaped = t.expired(now + Duration::from_millis(200));
+        assert_eq!(reaped.len(), 1);
+        let second = t.grant(3, "c-e0[3]", "w2#1", now + Duration::from_millis(200));
+        assert_eq!(second.attempt, 2, "dispatch count survives expiry");
+        assert_ne!(second.id, first.id, "lease ids are never reused");
+    }
+
+    #[test]
+    fn revoke_worker_takes_only_that_connections_leases() {
+        let mut t = table();
+        let now = Instant::now();
+        t.grant(0, "c-e0[0]", "w1#1", now);
+        t.grant(1, "c-e0[1]", "w1#2", now); // same name, newer connection
+        t.grant(2, "c-e0[2]", "w2#1", now);
+        let revoked = t.revoke_worker("w1#1");
+        assert_eq!(revoked.len(), 1);
+        assert_eq!(revoked[0].idx, 0);
+        assert_eq!(t.len(), 2, "w1#2 and w2#1 keep their leases");
+        assert!(t.holding(1).is_some());
+    }
+}

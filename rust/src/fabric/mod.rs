@@ -1,0 +1,40 @@
+//! The distributed campaign fabric: coordinator/worker execution over
+//! TCP (ISSUE 8).
+//!
+//! The paper's pipeline runs one campaign across many PBS nodes; until
+//! now this repo could only *simulate* that topology inside one
+//! process.  This module makes the distribution real at the transport
+//! level while changing nothing about what a campaign *is*:
+//!
+//! * [`Coordinator`] owns the crash-safe campaign ledger and leases
+//!   out `(epoch, slot)` coordinates over newline-delimited JSON; the
+//!   wire never carries scenario payloads because any worker holding
+//!   the same spec materializes the identical run from its index
+//!   (`plan_run`'s pure sampler contract),
+//! * [`run_worker`] executes leases through the exact same local run
+//!   supervisor (containment, taxonomy, retry, watchdogs, degradation)
+//!   the single-process driver uses,
+//! * heartbeats + the coordinator's reaper thread enforce lease
+//!   deadlines from *outside* every worker process — a killed worker's
+//!   leases are revoked and re-dispatched, and a zombie's late result
+//!   lands in the ledger's idempotent duplicate guard,
+//! * the final aggregate is assembled by the same ledger+disk walk as
+//!   the local driver, so the distributed dataset is byte-identical to
+//!   the single-process one, including across a coordinator kill and
+//!   resume.
+//!
+//! Robustness discipline matches the rest of the pipeline: no
+//! `unwrap`/`expect` outside tests, torn frames and duplicate
+//! completions are first-class protocol citizens, and every fault the
+//! soak injects maps to a site in [`crate::pipeline::FaultPlan`].
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+pub mod coordinator;
+pub mod lease;
+pub mod protocol;
+pub mod worker;
+
+pub use coordinator::{Coordinator, FabricConfig, FabricOutcome, FabricStats};
+pub use lease::{Lease, LeaseTable};
+pub use protocol::{spec_hash, Msg};
+pub use worker::{run_worker, WorkerConfig, WorkerKill, WorkerOutcome};

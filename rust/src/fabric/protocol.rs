@@ -1,0 +1,459 @@
+//! The fabric wire protocol: newline-delimited compact JSON, one
+//! message per line — the same framing as the telemetry stream and the
+//! campaign ledger, so every layer of the system shares one torn-line
+//! discipline.
+//!
+//! The protocol carries *coordinates, not payloads*: a lease names a
+//! run index, and the worker materializes the full instance from the
+//! campaign spec it already holds (the pure `(space, seed, index) →
+//! point` sampler contract).  The only bulk transfer is the finished
+//! run's CSV riding home inside a `complete` frame — JSON string
+//! escaping keeps the newlines of the CSV out of the framing.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use crate::pipeline::SupervisedCampaignSpec;
+use crate::telemetry::Event;
+use crate::util::Json;
+use crate::{Error, Result};
+
+/// Every frame either side can send.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Worker → coordinator: handshake.  `spec_hash` binds the worker
+    /// to one campaign shape — the wire mirror of the ledger header.
+    Hello { worker: String, spec_hash: String },
+    /// Coordinator → worker: handshake accepted; heartbeat cadence and
+    /// the lease TTL the reaper enforces.
+    Welcome { heartbeat_ms: u64, lease_ttl_ms: u64 },
+    /// Coordinator → worker: handshake rejected (wrong campaign shape).
+    Refuse { reason: String },
+    /// Worker → coordinator: give me work.
+    Request,
+    /// Coordinator → worker: run campaign index `idx` under lease
+    /// `lease` (`attempt` counts fabric-level dispatches of this slot).
+    Lease { lease: u64, idx: u64, attempt: u64 },
+    /// Coordinator → worker: nothing leasable right now (everything is
+    /// out on other leases) — ask again in `ms`.
+    Wait { ms: u64 },
+    /// Coordinator → worker: the campaign is settled (or stopping) —
+    /// disconnect.
+    Drain,
+    /// Worker → coordinator: lease `lease` is still alive.
+    Heartbeat { lease: u64 },
+    /// Worker → coordinator: a forwarded telemetry event.
+    Event { event: Event },
+    /// Worker → coordinator: run finished; the CSV rides inline.
+    Complete {
+        lease: u64,
+        idx: u64,
+        run_id: String,
+        attempts: u64,
+        degraded: bool,
+        csv: String,
+    },
+    /// Worker → coordinator: run failed terminally on the worker
+    /// (local retry budget exhausted or a permanent error).
+    Failed {
+        lease: u64,
+        idx: u64,
+        run_id: String,
+        attempts: u64,
+        class: String,
+        error: String,
+    },
+}
+
+fn num(n: u64) -> Json {
+    Json::num(n as f64)
+}
+
+fn get_str(j: &Json, key: &str) -> Result<String> {
+    Ok(j.get(key)?.as_str()?.to_string())
+}
+
+fn get_u64(j: &Json, key: &str) -> Result<u64> {
+    Ok(j.get(key)?.as_f64()? as u64)
+}
+
+fn get_bool(j: &Json, key: &str) -> Result<bool> {
+    match j.get(key)? {
+        Json::Bool(b) => Ok(*b),
+        other => Err(Error::Protocol(format!(
+            "expected bool for '{key}', got {other:?}"
+        ))),
+    }
+}
+
+impl Msg {
+    /// The `"msg"` tag this frame serializes under.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "hello",
+            Msg::Welcome { .. } => "welcome",
+            Msg::Refuse { .. } => "refuse",
+            Msg::Request => "request",
+            Msg::Lease { .. } => "lease",
+            Msg::Wait { .. } => "wait",
+            Msg::Drain => "drain",
+            Msg::Heartbeat { .. } => "heartbeat",
+            Msg::Event { .. } => "event",
+            Msg::Complete { .. } => "complete",
+            Msg::Failed { .. } => "failed",
+        }
+    }
+
+    /// One compact JSON object: `{"msg": <tag>, ...fields}`.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![("msg", Json::str(self.tag()))];
+        match self {
+            Msg::Hello { worker, spec_hash } => {
+                pairs.push(("worker", Json::str(worker.clone())));
+                pairs.push(("spec_hash", Json::str(spec_hash.clone())));
+            }
+            Msg::Welcome {
+                heartbeat_ms,
+                lease_ttl_ms,
+            } => {
+                pairs.push(("heartbeat_ms", num(*heartbeat_ms)));
+                pairs.push(("lease_ttl_ms", num(*lease_ttl_ms)));
+            }
+            Msg::Refuse { reason } => {
+                pairs.push(("reason", Json::str(reason.clone())));
+            }
+            Msg::Request | Msg::Drain => {}
+            Msg::Lease { lease, idx, attempt } => {
+                pairs.push(("lease", num(*lease)));
+                pairs.push(("idx", num(*idx)));
+                pairs.push(("attempt", num(*attempt)));
+            }
+            Msg::Wait { ms } => {
+                pairs.push(("ms", num(*ms)));
+            }
+            Msg::Heartbeat { lease } => {
+                pairs.push(("lease", num(*lease)));
+            }
+            Msg::Event { event } => {
+                pairs.push(("event", event.to_json()));
+            }
+            Msg::Complete {
+                lease,
+                idx,
+                run_id,
+                attempts,
+                degraded,
+                csv,
+            } => {
+                pairs.push(("lease", num(*lease)));
+                pairs.push(("idx", num(*idx)));
+                pairs.push(("run_id", Json::str(run_id.clone())));
+                pairs.push(("attempts", num(*attempts)));
+                pairs.push(("degraded", Json::Bool(*degraded)));
+                pairs.push(("csv", Json::str(csv.clone())));
+            }
+            Msg::Failed {
+                lease,
+                idx,
+                run_id,
+                attempts,
+                class,
+                error,
+            } => {
+                pairs.push(("lease", num(*lease)));
+                pairs.push(("idx", num(*idx)));
+                pairs.push(("run_id", Json::str(run_id.clone())));
+                pairs.push(("attempts", num(*attempts)));
+                pairs.push(("class", Json::str(class.clone())));
+                pairs.push(("error", Json::str(error.clone())));
+            }
+        }
+        Json::obj(pairs)
+    }
+
+    /// Inverse of [`Msg::to_json`] — unknown tags and missing fields
+    /// are protocol errors (the sender is confused or the frame was
+    /// corrupted in a way the line framing didn't catch).
+    pub fn from_json(j: &Json) -> Result<Msg> {
+        let tag = j.get("msg")?.as_str()?.to_string();
+        Ok(match tag.as_str() {
+            "hello" => Msg::Hello {
+                worker: get_str(j, "worker")?,
+                spec_hash: get_str(j, "spec_hash")?,
+            },
+            "welcome" => Msg::Welcome {
+                heartbeat_ms: get_u64(j, "heartbeat_ms")?,
+                lease_ttl_ms: get_u64(j, "lease_ttl_ms")?,
+            },
+            "refuse" => Msg::Refuse {
+                reason: get_str(j, "reason")?,
+            },
+            "request" => Msg::Request,
+            "lease" => Msg::Lease {
+                lease: get_u64(j, "lease")?,
+                idx: get_u64(j, "idx")?,
+                attempt: get_u64(j, "attempt")?,
+            },
+            "wait" => Msg::Wait {
+                ms: get_u64(j, "ms")?,
+            },
+            "drain" => Msg::Drain,
+            "heartbeat" => Msg::Heartbeat {
+                lease: get_u64(j, "lease")?,
+            },
+            "event" => Msg::Event {
+                event: Event::from_json(j.get("event")?)?,
+            },
+            "complete" => Msg::Complete {
+                lease: get_u64(j, "lease")?,
+                idx: get_u64(j, "idx")?,
+                run_id: get_str(j, "run_id")?,
+                attempts: get_u64(j, "attempts")?,
+                degraded: get_bool(j, "degraded")?,
+                csv: get_str(j, "csv")?,
+            },
+            "failed" => Msg::Failed {
+                lease: get_u64(j, "lease")?,
+                idx: get_u64(j, "idx")?,
+                run_id: get_str(j, "run_id")?,
+                attempts: get_u64(j, "attempts")?,
+                class: get_str(j, "class")?,
+                error: get_str(j, "error")?,
+            },
+            other => {
+                return Err(Error::Protocol(format!("unknown fabric frame '{other}'")));
+            }
+        })
+    }
+
+    /// Parse one wire line.
+    pub fn parse(line: &str) -> Result<Msg> {
+        Msg::from_json(&Json::parse(line)?)
+    }
+}
+
+/// Write one framed message (line + flush).
+pub(crate) fn write_msg(w: &mut impl Write, msg: &Msg) -> std::io::Result<()> {
+    let mut line = msg.to_json().to_compact_string();
+    line.push('\n');
+    w.write_all(line.as_bytes())?;
+    w.flush()
+}
+
+/// Fault-injection seam: write only the front half of the frame and no
+/// newline — the half-written line a worker dying mid-send leaves on
+/// the coordinator's socket.
+pub(crate) fn write_torn(w: &mut impl Write, msg: &Msg) -> std::io::Result<()> {
+    let line = msg.to_json().to_compact_string();
+    w.write_all(&line.as_bytes()[..line.len() / 2])?;
+    w.flush()
+}
+
+/// What one read attempt produced.
+#[derive(Debug)]
+pub(crate) enum LineRead {
+    /// A complete frame line (newline stripped).
+    Line(String),
+    /// The read timeout expired with no complete line buffered — the
+    /// peer is quiet, not gone.
+    TimedOut,
+    /// The connection ended.  `torn` = bytes of a half-written frame
+    /// were left behind (the peer died mid-send).
+    Eof { torn: bool },
+}
+
+/// A newline framer that survives read timeouts: partial bytes stay
+/// buffered across [`LineRead::TimedOut`] returns, so a frame split
+/// across two reads (or interrupted by the socket timeout the
+/// coordinator uses to poll its stop flag) reassembles intact.
+#[derive(Default)]
+pub(crate) struct LineReader {
+    buf: Vec<u8>,
+}
+
+impl LineReader {
+    pub(crate) fn new() -> LineReader {
+        LineReader::default()
+    }
+
+    pub(crate) fn read_line(&mut self, stream: &mut TcpStream) -> LineRead {
+        loop {
+            if let Some(pos) = self.buf.iter().position(|&b| b == b'\n') {
+                let rest = self.buf.split_off(pos + 1);
+                let mut line = std::mem::replace(&mut self.buf, rest);
+                line.pop(); // the newline
+                return LineRead::Line(String::from_utf8_lossy(&line).into_owned());
+            }
+            let mut chunk = [0u8; 4096];
+            match stream.read(&mut chunk) {
+                Ok(0) => {
+                    return LineRead::Eof {
+                        torn: !self.buf.is_empty(),
+                    };
+                }
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return LineRead::TimedOut;
+                }
+                // reset/abort mid-frame: the peer is gone
+                Err(_) => return LineRead::Eof { torn: true },
+            }
+        }
+    }
+}
+
+/// FNV-1a over the campaign fingerprint's compact form — the shape
+/// token the handshake compares, derived from exactly the fields the
+/// ledger header binds.
+pub fn spec_hash(spec: &SupervisedCampaignSpec) -> String {
+    let s = crate::pipeline::supervisor::campaign_fingerprint(spec).to_compact_string();
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::telemetry::EventKind;
+
+    fn round_trip(msg: Msg) {
+        let line = msg.to_json().to_compact_string();
+        assert!(!line.contains('\n'), "one line per frame: {line}");
+        assert_eq!(Msg::parse(&line).unwrap(), msg);
+    }
+
+    #[test]
+    fn every_frame_round_trips() {
+        round_trip(Msg::Hello {
+            worker: "w1".into(),
+            spec_hash: "00ff".into(),
+        });
+        round_trip(Msg::Welcome {
+            heartbeat_ms: 25,
+            lease_ttl_ms: 150,
+        });
+        round_trip(Msg::Refuse {
+            reason: "different campaign shape".into(),
+        });
+        round_trip(Msg::Request);
+        round_trip(Msg::Lease {
+            lease: 9,
+            idx: 4,
+            attempt: 2,
+        });
+        round_trip(Msg::Wait { ms: 50 });
+        round_trip(Msg::Drain);
+        round_trip(Msg::Heartbeat { lease: 9 });
+        round_trip(Msg::Event {
+            event: Event {
+                t_us: 7,
+                kind: EventKind::LedgerTransition {
+                    run_id: "f-e0[0]".into(),
+                    state: "running".into(),
+                },
+            },
+        });
+        round_trip(Msg::Failed {
+            lease: 9,
+            idx: 4,
+            run_id: "f-e0[4]".into(),
+            attempts: 3,
+            class: "permanent".into(),
+            error: "bad config".into(),
+        });
+    }
+
+    #[test]
+    fn csv_payload_survives_json_framing() {
+        // the whole point of string escaping: a multi-line CSV rides
+        // one wire line and comes back byte-identical
+        let csv = "t,speed,flow\n0.0,27.5,1200\n0.1,27.4,1199\n";
+        let msg = Msg::Complete {
+            lease: 3,
+            idx: 1,
+            run_id: "f-e0[1]".into(),
+            attempts: 1,
+            degraded: false,
+            csv: csv.into(),
+        };
+        let line = msg.to_json().to_compact_string();
+        assert!(!line.contains('\n'));
+        match Msg::parse(&line).unwrap() {
+            Msg::Complete { csv: back, .. } => assert_eq!(back, csv),
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_tag_and_missing_field_are_protocol_errors() {
+        assert!(Msg::parse(r#"{"msg":"teleport"}"#).is_err());
+        assert!(Msg::parse(r#"{"msg":"lease","lease":1}"#).is_err());
+        assert!(Msg::parse("not json").is_err());
+    }
+
+    #[test]
+    fn line_reader_reassembles_split_frames_across_timeouts() {
+        use std::io::Write;
+        use std::net::TcpListener;
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut s = std::net::TcpStream::connect(addr).unwrap();
+            s.write_all(b"{\"msg\":\"req").unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(60));
+            s.write_all(b"uest\"}\n{\"msg\":\"drain\"}\n{\"half").unwrap();
+            s.flush().unwrap();
+            // dies here: the trailing bytes are a torn frame
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_millis(20)))
+            .unwrap();
+        let mut reader = LineReader::new();
+        let mut lines = Vec::new();
+        let mut timeouts = 0;
+        let torn = loop {
+            match reader.read_line(&mut stream) {
+                LineRead::Line(l) => lines.push(l),
+                LineRead::TimedOut => timeouts += 1,
+                LineRead::Eof { torn } => break torn,
+            }
+        };
+        writer.join().unwrap();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(Msg::parse(&lines[0]).unwrap(), Msg::Request);
+        assert_eq!(Msg::parse(&lines[1]).unwrap(), Msg::Drain);
+        assert!(timeouts >= 1, "the split frame must ride over a timeout");
+        assert!(torn, "trailing half-frame must be flagged torn");
+    }
+
+    #[test]
+    fn spec_hash_is_shape_sensitive() {
+        use crate::pipeline::{SupervisedCampaignSpec, SupervisorSpec};
+        let spec = |seed: u64| SupervisedCampaignSpec {
+            name: "h".into(),
+            nodes: 1,
+            slots_per_node: 2,
+            epochs: 1,
+            horizon_s: 2.0,
+            capacity: 64,
+            seed,
+            matrix: None,
+            supervisor: SupervisorSpec::default(),
+            ledger_dir: std::env::temp_dir(),
+            retry_failed: false,
+            stop_after_runs: None,
+        };
+        assert_eq!(spec_hash(&spec(1)), spec_hash(&spec(1)));
+        assert_ne!(spec_hash(&spec(1)), spec_hash(&spec(2)));
+    }
+}

@@ -1,0 +1,452 @@
+//! The fabric worker: dials a coordinator, runs leased instances
+//! through the local run supervisor, streams results home.
+//!
+//! A worker holds the same [`SupervisedCampaignSpec`] the coordinator
+//! does — the handshake proves it via the spec hash — so a lease only
+//! has to name a run *index*: [`plan_run`] materializes the identical
+//! scenario on any worker from `(spec, idx)` alone.  Inside a lease the
+//! worker is exactly the single-process driver: a [`PortLease`] for the
+//! TraCI server, [`supervise_instance`] for containment / retry /
+//! watchdogs / degradation, and the finished CSV rides back inline.
+//!
+//! A heartbeat thread keeps the lease alive *while the run executes*,
+//! so only true worker death — not slowness — trips the coordinator's
+//! reaper.  Test seams inject exactly those deaths: transport faults
+//! (dropped connections, torn frames, duplicated completions) and
+//! process kills ([`WorkerKill`]), including the zombie that stops
+//! beating, sleeps past the TTL, and reports late into the duplicate
+//! guard.
+
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::protocol::{spec_hash, write_msg, write_torn, LineRead, LineReader, Msg};
+use crate::container::{build_webots_hpc_image, BuildHost, ExecEnv};
+use crate::display::DisplayRegistry;
+use crate::pipeline::faults::{FaultPlan, FaultSite};
+use crate::pipeline::ports::PortLease;
+use crate::pipeline::supervisor::{
+    classify, instance_config, plan_run, supervise_instance, SupervisedCampaignSpec,
+};
+use crate::pipeline::PhysicsEngine;
+use crate::scenario::FamilyRegistry;
+use crate::telemetry::{self, Event, EventSink};
+use crate::Result;
+
+/// Process-kill seams for the soak tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerKill {
+    /// Run to drain.
+    Never,
+    /// Die abruptly (connection drops, nothing reported) when the
+    /// (n+1)-th lease arrives — after `n` successful completions.
+    DieAfter(u64),
+    /// Zombie mode: after `n` completions, finish the next run but stop
+    /// heartbeating, sleep past the lease TTL, and only then send the
+    /// (now unwelcome) completion — the reaper re-dispatches meanwhile,
+    /// and whichever result lands second hits the duplicate guard.
+    ZombieAfter(u64),
+}
+
+/// One worker's standing configuration.
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    /// Worker name (the coordinator suffixes a connection counter).
+    pub name: String,
+    /// Coordinator address, `host:port`.
+    pub addr: String,
+    /// The campaign — must hash-match the coordinator's or the
+    /// handshake is refused.
+    pub spec: SupervisedCampaignSpec,
+    /// Forward locally emitted telemetry events over the fabric into a
+    /// per-connection shard next to the coordinator's ledger.
+    pub forward_events: bool,
+    /// Re-dials after a failed connect or a dropped connection before
+    /// giving up (a stopped coordinator is a normal way to finish).
+    pub reconnect_attempts: u32,
+    pub reconnect_delay_ms: u64,
+    /// Transport-fault schedule (FabricDrop / FabricTorn /
+    /// FabricDuplicate sites; None in production).
+    pub transport_faults: Option<FaultPlan>,
+    pub kill: WorkerKill,
+}
+
+impl WorkerConfig {
+    /// Production defaults for a worker of `spec` at `addr`.
+    pub fn new(
+        name: impl Into<String>,
+        addr: impl Into<String>,
+        spec: SupervisedCampaignSpec,
+    ) -> WorkerConfig {
+        WorkerConfig {
+            name: name.into(),
+            addr: addr.into(),
+            spec,
+            forward_events: false,
+            reconnect_attempts: 8,
+            reconnect_delay_ms: 200,
+            transport_faults: None,
+            kill: WorkerKill::Never,
+        }
+    }
+}
+
+/// How a worker session ended.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct WorkerOutcome {
+    /// Completions successfully reported.
+    pub completions: u64,
+    /// Terminal failures reported.
+    pub failures: u64,
+    /// Coordinator said the campaign is settled.
+    pub drained: bool,
+    /// A [`WorkerKill`] seam fired.
+    pub died: bool,
+    /// Handshake refusal reason, if refused.
+    pub refused: Option<String>,
+}
+
+/// Why one connection session ended (worker-internal).
+enum SessionEnd {
+    Drained,
+    Refused(String),
+    Died,
+    /// Connection lost (coordinator gone, injected drop/tear, I/O
+    /// error) — re-dial if attempts remain.
+    Lost,
+}
+
+/// Uninstalls the forwarding sink even on early returns.
+struct SinkGuard(Arc<dyn EventSink>);
+
+impl Drop for SinkGuard {
+    fn drop(&mut self) {
+        telemetry::uninstall(&self.0);
+    }
+}
+
+/// Forwards every locally emitted event over the fabric connection.
+/// Shares the protocol write lock, so forwarded lines never interleave
+/// with heartbeats or result frames.
+struct ForwardSink {
+    writer: Arc<Mutex<TcpStream>>,
+}
+
+impl EventSink for ForwardSink {
+    fn emit(&self, ev: &Event) {
+        let mut w = self.writer.lock().unwrap_or_else(|p| p.into_inner());
+        // telemetry must never fail the run; a lost event is fine
+        let _ = write_msg(&mut *w, &Msg::Event { event: ev.clone() });
+    }
+
+    fn flush(&self) {}
+}
+
+/// Dial the coordinator and work until drained, killed, or out of
+/// re-dials.  Every error a *run* can produce is absorbed into the
+/// protocol (reported as a remote failure); an `Err` from here means
+/// the worker environment itself could not be built.
+pub fn run_worker(cfg: &WorkerConfig, physics: &PhysicsEngine) -> Result<WorkerOutcome> {
+    let displays = DisplayRegistry::new();
+    let sif = build_webots_hpc_image(BuildHost::PersonalComputer)?;
+    let env = ExecEnv::new(sif).bind("/tmp", "/tmp");
+    let registry = FamilyRegistry::builtin();
+    let hash = spec_hash(&cfg.spec);
+
+    let mut out = WorkerOutcome::default();
+    let mut redials = 0u32;
+    loop {
+        let stream = match TcpStream::connect(&cfg.addr) {
+            Ok(s) => s,
+            Err(_) => {
+                if redials >= cfg.reconnect_attempts {
+                    return Ok(out);
+                }
+                redials += 1;
+                std::thread::sleep(Duration::from_millis(cfg.reconnect_delay_ms));
+                continue;
+            }
+        };
+        let end = serve_session(stream, cfg, physics, &displays, &env, &registry, &hash, &mut out);
+        match end {
+            SessionEnd::Drained => {
+                out.drained = true;
+                return Ok(out);
+            }
+            SessionEnd::Refused(reason) => {
+                out.refused = Some(reason);
+                return Ok(out);
+            }
+            SessionEnd::Died => {
+                out.died = true;
+                return Ok(out);
+            }
+            SessionEnd::Lost => {
+                if redials >= cfg.reconnect_attempts {
+                    return Ok(out);
+                }
+                redials += 1;
+                std::thread::sleep(Duration::from_millis(cfg.reconnect_delay_ms));
+            }
+        }
+    }
+}
+
+/// Wait (bounded) for the next coordinator frame.
+fn read_reply(reader: &mut LineReader, stream: &mut TcpStream, deadline: Instant) -> Option<Msg> {
+    loop {
+        match reader.read_line(stream) {
+            LineRead::Line(l) => return Msg::parse(&l).ok(),
+            LineRead::TimedOut => {
+                if Instant::now() >= deadline {
+                    return None;
+                }
+            }
+            LineRead::Eof { .. } => return None,
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve_session(
+    stream: TcpStream,
+    cfg: &WorkerConfig,
+    physics: &PhysicsEngine,
+    displays: &DisplayRegistry,
+    env: &ExecEnv,
+    registry: &FamilyRegistry,
+    hash: &str,
+    out: &mut WorkerOutcome,
+) -> SessionEnd {
+    stream.set_nodelay(true).ok();
+    if stream
+        .set_read_timeout(Some(Duration::from_millis(50)))
+        .is_err()
+        || stream.set_write_timeout(Some(Duration::from_secs(2))).is_err()
+    {
+        return SessionEnd::Lost;
+    }
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return SessionEnd::Lost,
+    };
+    let mut read_stream = stream;
+    let mut reader = LineReader::new();
+
+    let send = |msg: &Msg| -> std::io::Result<()> {
+        let mut w = writer.lock().unwrap_or_else(|p| p.into_inner());
+        write_msg(&mut *w, msg)
+    };
+
+    if send(&Msg::Hello {
+        worker: cfg.name.clone(),
+        spec_hash: hash.to_string(),
+    })
+    .is_err()
+    {
+        return SessionEnd::Lost;
+    }
+    let (heartbeat_ms, lease_ttl_ms) = match read_reply(
+        &mut reader,
+        &mut read_stream,
+        Instant::now() + Duration::from_secs(5),
+    ) {
+        Some(Msg::Welcome {
+            heartbeat_ms,
+            lease_ttl_ms,
+        }) => (heartbeat_ms, lease_ttl_ms),
+        Some(Msg::Refuse { reason }) => return SessionEnd::Refused(reason),
+        _ => return SessionEnd::Lost,
+    };
+
+    // the heartbeat thread: beats for whichever lease is current, even
+    // while the main thread is deep inside a long supervised run
+    let current_lease: Arc<Mutex<Option<u64>>> = Arc::new(Mutex::new(None));
+    let hb_stop = Arc::new(AtomicBool::new(false));
+    let hb_handle = {
+        let writer = Arc::clone(&writer);
+        let current = Arc::clone(&current_lease);
+        let stop = Arc::clone(&hb_stop);
+        let interval = Duration::from_millis(heartbeat_ms.max(1));
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(interval);
+                let lease = *current.lock().unwrap_or_else(|p| p.into_inner());
+                if let Some(lease) = lease {
+                    let mut w = writer.lock().unwrap_or_else(|p| p.into_inner());
+                    let _ = write_msg(&mut *w, &Msg::Heartbeat { lease });
+                }
+            }
+        })
+    };
+    let _hb_guard = HeartbeatGuard {
+        stop: Arc::clone(&hb_stop),
+        handle: Some(hb_handle),
+    };
+
+    let _forward_guard = if cfg.forward_events {
+        let sink: Arc<dyn EventSink> = Arc::new(ForwardSink {
+            writer: Arc::clone(&writer),
+        });
+        telemetry::install(Arc::clone(&sink));
+        Some(SinkGuard(sink))
+    } else {
+        None
+    };
+
+    let set_current = |v: Option<u64>| {
+        *current_lease.lock().unwrap_or_else(|p| p.into_inner()) = v;
+    };
+
+    loop {
+        if send(&Msg::Request).is_err() {
+            return SessionEnd::Lost;
+        }
+        let reply = read_reply(
+            &mut reader,
+            &mut read_stream,
+            Instant::now() + Duration::from_secs(10),
+        );
+        let (lease, idx, attempt) = match reply {
+            Some(Msg::Lease { lease, idx, attempt }) => (lease, idx, attempt),
+            Some(Msg::Wait { ms }) => {
+                std::thread::sleep(Duration::from_millis(ms.min(1000)));
+                continue;
+            }
+            Some(Msg::Drain) => return SessionEnd::Drained,
+            _ => return SessionEnd::Lost,
+        };
+
+        // hard-kill seam: the process dies the instant the (n+1)-th
+        // lease lands — nothing is released, nothing is reported; the
+        // coordinator learns from the dropped connection / the reaper
+        if let WorkerKill::DieAfter(n) = cfg.kill {
+            if out.completions >= n {
+                return SessionEnd::Died;
+            }
+        }
+
+        let plan = match plan_run(&cfg.spec, registry, idx) {
+            Ok(p) => p,
+            Err(e) => {
+                let run_id = format!("{}-idx{idx}", cfg.spec.name);
+                let _ = send(&Msg::Failed {
+                    lease,
+                    idx,
+                    run_id,
+                    attempts: 1,
+                    class: "permanent".into(),
+                    error: e.to_string(),
+                });
+                out.failures += 1;
+                continue;
+            }
+        };
+        set_current(Some(lease));
+        let report = match PortLease::acquire() {
+            Ok(port_lease) => {
+                let icfg = instance_config(&cfg.spec, &plan, port_lease.port());
+                supervise_instance(&icfg, displays, env, physics, &cfg.spec.supervisor)
+            }
+            Err(e) => {
+                set_current(None);
+                let _ = send(&Msg::Failed {
+                    lease,
+                    idx,
+                    run_id: plan.run_id.clone(),
+                    attempts: 1,
+                    class: classify(&e).name().into(),
+                    error: e.to_string(),
+                });
+                out.failures += 1;
+                continue;
+            }
+        };
+
+        match report.outcome {
+            Ok(r) => {
+                let msg = Msg::Complete {
+                    lease,
+                    idx,
+                    run_id: plan.run_id.clone(),
+                    attempts: report.attempts as u64,
+                    degraded: report.degraded,
+                    csv: r.dataset.to_csv(),
+                };
+
+                // zombie seam: stop beating while still holding the
+                // lease, sleep past the TTL (the reaper revokes and
+                // re-dispatches meanwhile), then report late
+                if let WorkerKill::ZombieAfter(n) = cfg.kill {
+                    if out.completions >= n {
+                        set_current(None);
+                        std::thread::sleep(Duration::from_millis(lease_ttl_ms * 3));
+                        let _ = send(&msg);
+                        return SessionEnd::Died;
+                    }
+                }
+                set_current(None);
+
+                // transport-fault seams, redrawn per fabric dispatch:
+                // a retransmitted slot isn't doomed to the same fault
+                let fires = |site: FaultSite| {
+                    cfg.transport_faults
+                        .as_ref()
+                        .is_some_and(|p| p.fires(site, plan.seed, attempt as u32))
+                };
+                if fires(FaultSite::FabricDrop) {
+                    // vanish mid-report: the run finished locally but
+                    // the result never leaves this process
+                    return SessionEnd::Lost;
+                }
+                if fires(FaultSite::FabricTorn) {
+                    let mut w = writer.lock().unwrap_or_else(|p| p.into_inner());
+                    let _ = write_torn(&mut *w, &msg);
+                    drop(w);
+                    return SessionEnd::Lost;
+                }
+                if send(&msg).is_err() {
+                    return SessionEnd::Lost;
+                }
+                out.completions += 1;
+                if fires(FaultSite::FabricDuplicate) {
+                    // retransmission: the duplicate guard absorbs it
+                    let _ = send(&msg);
+                }
+            }
+            Err(e) => {
+                set_current(None);
+                if send(&Msg::Failed {
+                    lease,
+                    idx,
+                    run_id: plan.run_id.clone(),
+                    attempts: report.attempts as u64,
+                    class: classify(&e).name().into(),
+                    error: e.to_string(),
+                })
+                .is_err()
+                {
+                    return SessionEnd::Lost;
+                }
+                out.failures += 1;
+            }
+        }
+    }
+}
+
+/// Stops and joins the heartbeat thread on every exit path.
+struct HeartbeatGuard {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for HeartbeatGuard {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -45,6 +45,7 @@ pub mod cloud;
 pub mod cluster;
 pub mod container;
 pub mod display;
+pub mod fabric;
 pub mod harness;
 pub mod metrics;
 pub mod output;

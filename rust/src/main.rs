@@ -9,7 +9,9 @@
 //! webots-hpc submit <script.pbs> [--nodes 6]
 //! webots-hpc run-local [--instances 8] [--engine hlo|native] [--horizon 30] [--chunk auto|K]
 //! webots-hpc supervise [--nodes 2] [--slots 4] [--fault-rate 0.15] [--ledger DIR]
-//! webots-hpc report <events.jsonl>    # summarize a telemetry stream
+//! webots-hpc coordinate [--port 0] [--ledger DIR]   # lease out a campaign over TCP
+//! webots-hpc work --addr host:port [--name w1]      # execute leases for a coordinator
+//! webots-hpc report <events.jsonl> [more shards...] # summarize telemetry stream(s)
 //! ```
 //!
 //! Argument parsing is hand-rolled (the vendored offline crate set has
@@ -33,7 +35,7 @@ use webots_hpc::sumo::{FlowFile, MergeScenario};
 use webots_hpc::telemetry;
 use webots_hpc::webots::nodes::sample_merge_world;
 
-const USAGE: &str = "usage: webots-hpc <info|table|fig|dist|campaign|submit|run-local|supervise|report> [args]
+const USAGE: &str = "usage: webots-hpc <info|table|fig|dist|campaign|submit|run-local|supervise|coordinate|work|report> [args]
   info                         artifacts + PJRT platform
   table <5.1|5.2|5.3|4.1>      regenerate a paper table
   fig <5.1|5.2>                regenerate a paper figure
@@ -56,8 +58,20 @@ const USAGE: &str = "usage: webots-hpc <info|table|fig|dist|campaign|submit|run-
             permanent failures stay settled unless --retry-failed true).
             Telemetry always streams to <ledger>/events.jsonl;
             --trace-out additionally exports a Chrome/Perfetto trace
-  report <events.jsonl>        summarize a telemetry event stream:
-            completion, retry taxonomy, dispatch latency, lane occupancy";
+  coordinate [--port P] [--heartbeat-ms H] [--lease-ttl-ms T]
+            [campaign flags as for supervise]
+            own the campaign ledger and lease runs to TCP workers;
+            a killed coordinator resumes on the same --ledger dir.
+            Missed heartbeats revoke leases and re-dispatch the run
+  work --addr host:port [--name w1] [--forward-events true]
+            [campaign flags as for supervise — must match the
+            coordinator's, or the handshake is refused]
+            execute leases through the local run supervisor
+  report <events.jsonl> [shard2.jsonl ...]
+            summarize one or more telemetry event shards (merged
+            timestamp-ordered, duplicate- and torn-tail-tolerant):
+            completion, retry taxonomy, dispatch latency, lane
+            occupancy, fabric lease/worker accounting";
 
 /// Tiny flag parser: positional args + `--key value` pairs.
 struct Args {
@@ -129,6 +143,8 @@ fn main() -> Result<()> {
         "submit" => submit(&rest),
         "run-local" => run_local(&rest),
         "supervise" => supervise(&rest),
+        "coordinate" => coordinate(&rest),
+        "work" => work(&rest),
         "report" => report(&rest),
         "--help" | "-h" | "help" => {
             println!("{USAGE}");
@@ -351,10 +367,12 @@ fn submit(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn supervise(args: &Args) -> Result<()> {
-    use webots_hpc::pipeline::{
-        run_supervised_campaign, FaultPlan, RetryPolicy, SupervisedCampaignSpec, SupervisorSpec,
-    };
+/// Build the campaign spec + supervision policy shared by `supervise`,
+/// `coordinate`, and `work` — one construction so the coordinator and
+/// its workers hash-agree on the campaign shape when given the same
+/// flags/config file.
+fn build_supervised_spec(args: &Args) -> Result<webots_hpc::pipeline::SupervisedCampaignSpec> {
+    use webots_hpc::pipeline::{FaultPlan, RetryPolicy, SupervisedCampaignSpec, SupervisorSpec};
     use webots_hpc::webots::WatchdogSpec;
 
     // --config supplies name + supervision policy (retry/backoff/
@@ -393,7 +411,7 @@ fn supervise(args: &Args) -> Result<()> {
         supervisor.fault_plan = Some(FaultPlan::transient_only(fault_seed, fault_rate));
     }
 
-    let spec = SupervisedCampaignSpec {
+    Ok(SupervisedCampaignSpec {
         name,
         nodes: args.get("nodes", 2)?,
         slots_per_node: args.get("slots", 4)?,
@@ -406,13 +424,24 @@ fn supervise(args: &Args) -> Result<()> {
         ledger_dir: args.get_str("ledger", "supervised-ledger").into(),
         retry_failed: args.get("retry-failed", false)?,
         stop_after_runs: None,
-    };
+    })
+}
+
+fn parse_engine(args: &Args) -> Result<(String, PhysicsEngine)> {
     let engine = args.get_str("engine", "native");
     let physics = match engine.as_str() {
         "native" => PhysicsEngine::Native,
         "hlo" => PhysicsEngine::Hlo(EngineService::auto()?),
         other => bail!("unknown engine '{other}' (native|hlo)"),
     };
+    Ok((engine, physics))
+}
+
+fn supervise(args: &Args) -> Result<()> {
+    use webots_hpc::pipeline::run_supervised_campaign;
+
+    let spec = build_supervised_spec(args)?;
+    let (engine, physics) = parse_engine(args)?;
 
     // the event stream rides next to the ledger — same append-only,
     // torn-tail-tolerant discipline, so a resumed campaign extends it
@@ -495,17 +524,136 @@ fn supervise(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `webots-hpc report <events.jsonl>` — fold a telemetry event stream
-/// back into the §5.1/§5.3 operational facts.
+/// `webots-hpc coordinate` — own a campaign's ledger and lease its
+/// runs out to TCP workers until every run settles.  Reuse --ledger to
+/// resume a killed coordinator.
+fn coordinate(args: &Args) -> Result<()> {
+    use webots_hpc::fabric::{Coordinator, FabricConfig};
+
+    let spec = build_supervised_spec(args)?;
+    let fabric = FabricConfig {
+        port: args.get("port", 0)?,
+        heartbeat_ms: args.get("heartbeat-ms", 500)?,
+        lease_ttl_ms: args.get("lease-ttl-ms", 3000)?,
+        stop_after_completions: None,
+    };
+    if fabric.lease_ttl_ms < 2 * fabric.heartbeat_ms {
+        bail!(
+            "--lease-ttl-ms ({}) must be at least twice --heartbeat-ms ({}): \
+             a healthy worker would miss its own lease",
+            fabric.lease_ttl_ms,
+            fabric.heartbeat_ms
+        );
+    }
+
+    // coordinator telemetry rides next to the ledger; worker shards
+    // (events-*.jsonl) land in the same dir for `report` to merge
+    let events_path = spec.ledger_dir.join("events.jsonl");
+    let sink: std::sync::Arc<dyn telemetry::EventSink> =
+        std::sync::Arc::new(telemetry::JsonlSink::append(&events_path)?);
+    telemetry::install(sink.clone());
+
+    let total = spec.total_runs();
+    let name = spec.name.clone();
+    let ledger_dir = spec.ledger_dir.clone();
+    let coordinator = Coordinator::bind(spec, fabric)?;
+    println!(
+        "coordinating campaign '{name}': {total} runs, ledger {} (reuse to resume)",
+        ledger_dir.display()
+    );
+    println!(
+        "listening on 127.0.0.1:{} — start workers with:\n  webots-hpc work --addr 127.0.0.1:{} [same campaign flags]",
+        coordinator.port(),
+        coordinator.port()
+    );
+    let outcome = coordinator.run();
+    telemetry::uninstall(&sink);
+    let outcome = outcome?;
+
+    let f = &outcome.fabric;
+    println!(
+        "fabric: {} worker joins | {} leaves | {} refused | {} leases granted | {} expired",
+        f.workers_joined, f.workers_left, f.workers_refused, f.leases_granted, f.leases_expired
+    );
+    println!(
+        "results: {} accepted | {} rejected by duplicate guard | {} remote failures",
+        f.completions_accepted, f.completions_rejected, f.remote_failures
+    );
+    let stats = outcome
+        .result
+        .robustness
+        .ok_or_else(|| anyhow!("coordinator reported no robustness accounting"))?;
+    println!(
+        "runs {} | completed {} | failed {} | resumed skips {} | completion rate {:.1}%",
+        stats.runs,
+        stats.completed,
+        stats.failed,
+        stats.resumed_skips,
+        100.0 * stats.completion_rate()
+    );
+    println!(
+        "aggregate: {} runs, {} rows, run_ids unique: {}",
+        outcome.dataset.num_runs(),
+        outcome.dataset.total_rows(),
+        outcome.dataset.run_ids_unique()
+    );
+    if outcome.interrupted {
+        println!("campaign interrupted with unsettled runs — re-run coordinate on the same --ledger to resume");
+    }
+    println!("telemetry: {}", events_path.display());
+    Ok(())
+}
+
+/// `webots-hpc work` — dial a coordinator and execute leased runs
+/// through the local run supervisor until drained.
+fn work(args: &Args) -> Result<()> {
+    use webots_hpc::fabric::{run_worker, WorkerConfig};
+
+    let addr = args
+        .flags
+        .get("addr")
+        .ok_or_else(|| anyhow!("work needs --addr host:port (printed by coordinate)"))?
+        .clone();
+    let spec = build_supervised_spec(args)?;
+    let (engine, physics) = parse_engine(args)?;
+    let mut cfg = WorkerConfig::new(args.get_str("name", "worker"), addr, spec);
+    cfg.forward_events = args.get("forward-events", false)?;
+    cfg.reconnect_attempts = args.get("reconnect", 8)?;
+
+    println!(
+        "worker '{}' dialing {} (campaign '{}', engine={engine}, forward-events={})",
+        cfg.name, cfg.addr, cfg.spec.name, cfg.forward_events
+    );
+    let outcome = run_worker(&cfg, &physics)?;
+    if let Some(reason) = &outcome.refused {
+        bail!("coordinator refused handshake: {reason}");
+    }
+    println!(
+        "worker '{}' done: {} completions | {} failures | drained: {}",
+        cfg.name, outcome.completions, outcome.failures, outcome.drained
+    );
+    Ok(())
+}
+
+/// `webots-hpc report <shard.jsonl> [more...]` — fold one or more
+/// telemetry event shards back into the §5.1/§5.3 operational facts.
+/// Multiple shards (a coordinator's stream plus per-worker forwarded
+/// shards) merge timestamp-ordered with duplicates collapsed.
 fn report(args: &Args) -> Result<()> {
-    let path = args
-        .positional
-        .first()
-        .ok_or_else(|| anyhow!("report needs an events.jsonl path"))?;
-    let events = telemetry::read_events(path)?;
+    if args.positional.is_empty() {
+        bail!("report needs at least one events.jsonl path");
+    }
+    let events = telemetry::merge_event_shards(&args.positional)?;
     if events.is_empty() {
-        println!("{path}: no events");
+        println!("{}: no events", args.positional.join(", "));
         return Ok(());
+    }
+    if args.positional.len() > 1 {
+        println!(
+            "merged {} shards -> {} events",
+            args.positional.len(),
+            events.len()
+        );
     }
     print!("{}", telemetry::summarize(&events).render());
     Ok(())

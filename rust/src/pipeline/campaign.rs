@@ -144,6 +144,50 @@ impl CampaignResult {
     }
 }
 
+/// Fold supervision accounting + the assembled dataset into a
+/// [`CampaignResult`] — one construction shared by the in-process
+/// supervised driver and the fabric coordinator, so both report the
+/// same shape for the same campaign.
+pub(crate) fn supervised_result(
+    stats: super::RobustnessStats,
+    walltimes_s: &[f64],
+    dataset: &crate::output::CampaignDataset,
+    nodes: usize,
+) -> CampaignResult {
+    let mean = |v: &[f64]| {
+        if v.is_empty() {
+            0.0
+        } else {
+            v.iter().sum::<f64>() / v.len() as f64
+        }
+    };
+    CampaignResult {
+        samples: Vec::new(),
+        stats: SchedulerStats {
+            submitted: stats.runs,
+            completed: stats.completed,
+            killed_walltime: stats.killed_walltime,
+            failed: stats.failed,
+        },
+        usage: UsageSummary {
+            runs: walltimes_s.len(),
+            mean_walltime_s: mean(walltimes_s),
+            // the supervised drivers have no cgroup accounting; walltime
+            // is the honest stand-in (single-threaded instances)
+            mean_cpu_time_s: mean(walltimes_s),
+            mean_ram_gb: 0.0,
+            mean_cpu_percent: 100.0,
+        },
+        runs_per_node: dataset
+            .runs_per_node(nodes)
+            .into_iter()
+            .map(|c| c as u64)
+            .collect(),
+        peak_occupancy: vec![1; nodes],
+        robustness: Some(stats),
+    }
+}
+
 /// Run the epoch-locked cluster campaign.
 pub fn run_cluster_campaign(spec: &CampaignSpec) -> Result<CampaignResult> {
     let cluster = Cluster::uniform("campaign", spec.nodes, NodeSpec::dice_r740());

@@ -99,6 +99,11 @@ pub struct CampaignConfig {
     pub stall_window_ms: u64,
     /// Per-instance walltime deadline [s] (0 = disabled).
     pub instance_walltime_s: u64,
+    /// Fabric: heartbeat cadence workers keep per lease [ms].
+    pub heartbeat_ms: u64,
+    /// Fabric: lease TTL the coordinator's reaper enforces [ms]; a
+    /// lease silent this long is revoked and re-dispatched.
+    pub lease_ttl_ms: u64,
 }
 
 impl Default for CampaignConfig {
@@ -123,6 +128,8 @@ impl Default for CampaignConfig {
             backoff_cap_ms: 5000,
             stall_window_ms: 0,
             instance_walltime_s: 0,
+            heartbeat_ms: 500,
+            lease_ttl_ms: 3000,
         }
     }
 }
@@ -158,6 +165,13 @@ backoff_base_ms = 250
 backoff_cap_ms = 5000
 stall_window_ms = 0
 instance_walltime_s = 0
+
+# distributed fabric (webots-hpc coordinate / work): workers heartbeat
+# each held lease every heartbeat_ms; the coordinator's reaper revokes
+# and re-dispatches any lease silent for lease_ttl_ms (must be at least
+# twice the heartbeat, or a healthy worker would miss its own lease)
+heartbeat_ms = 500
+lease_ttl_ms = 3000
 
 # scenario-matrix mode — uncomment to sweep a scenario space across
 # the array instead of re-running one world (see EXPERIMENTS.md
@@ -211,6 +225,8 @@ instance_walltime_s = 0
                 "instance_walltime_s" => {
                     cfg.instance_walltime_s = v.parse().map_err(|e| bad(&e))?
                 }
+                "heartbeat_ms" => cfg.heartbeat_ms = v.parse().map_err(|e| bad(&e))?,
+                "lease_ttl_ms" => cfg.lease_ttl_ms = v.parse().map_err(|e| bad(&e))?,
                 "policy" => {
                     cfg.policy = match v {
                         "first-fit" => PackingPolicy::FirstFit,
@@ -233,6 +249,18 @@ instance_walltime_s = 0
             return Err(Error::Config(format!(
                 "{} slots x {} cpus oversubscribes a 40-core node",
                 self.slots_per_node, self.ncpus_per_slot
+            )));
+        }
+        if self.heartbeat_ms == 0 || self.lease_ttl_ms == 0 {
+            return Err(Error::Config(
+                "heartbeat_ms and lease_ttl_ms must be > 0".into(),
+            ));
+        }
+        if self.lease_ttl_ms < 2 * self.heartbeat_ms {
+            return Err(Error::Config(format!(
+                "lease_ttl_ms ({}) must be at least twice heartbeat_ms ({}): \
+                 a healthy worker would miss its own lease",
+                self.lease_ttl_ms, self.heartbeat_ms
             )));
         }
         if !self.scenarios.is_empty() {
@@ -290,6 +318,17 @@ instance_walltime_s = 0
             },
             degrade: true,
             fault_plan: None,
+        }
+    }
+
+    /// The fabric knobs these keys describe (port 0 = OS-assigned;
+    /// the kill seam is a test seam, never config-reachable).
+    pub fn to_fabric_config(&self) -> crate::fabric::FabricConfig {
+        crate::fabric::FabricConfig {
+            port: 0,
+            heartbeat_ms: self.heartbeat_ms,
+            lease_ttl_ms: self.lease_ttl_ms,
+            stop_after_completions: None,
         }
     }
 
@@ -481,6 +520,24 @@ mod tests {
         let spec = CampaignConfig::default().to_supervisor_spec();
         assert_eq!(spec.retry.max_attempts, 4);
         assert_eq!(spec.watchdog, crate::webots::WatchdogSpec::default());
+    }
+
+    #[test]
+    fn fabric_keys_roundtrip_and_validate() {
+        let cfg = CampaignConfig::parse("heartbeat_ms = 100\nlease_ttl_ms = 400\n").unwrap();
+        let fabric = cfg.to_fabric_config();
+        assert_eq!(fabric.heartbeat_ms, 100);
+        assert_eq!(fabric.lease_ttl_ms, 400);
+        assert_eq!(fabric.port, 0, "port is always OS-assigned from config");
+        assert!(fabric.stop_after_completions.is_none(), "kill seam never config-reachable");
+        // a TTL a healthy worker would trip is a config error
+        assert!(CampaignConfig::parse("heartbeat_ms = 500\nlease_ttl_ms = 600\n").is_err());
+        assert!(CampaignConfig::parse("heartbeat_ms = 0\n").is_err());
+        assert!(CampaignConfig::parse("lease_ttl_ms = 0\n").is_err());
+        // defaults satisfy their own validation
+        let d = CampaignConfig::default();
+        assert_eq!((d.heartbeat_ms, d.lease_ttl_ms), (500, 3000));
+        d.validate().unwrap();
     }
 
     #[test]

@@ -37,17 +37,31 @@ pub enum FaultSite {
     /// The back-end stepper wedges mid-run (a finite injected sleep) →
     /// the stall watchdog kills the run with [`crate::Error::Stalled`].
     Stall,
+    /// Fabric transport: the worker drops its coordinator connection
+    /// instead of reporting a finished run — the lease expires and the
+    /// slot is re-dispatched.
+    FabricDrop,
+    /// Fabric transport: the worker dies mid-frame, leaving a
+    /// half-written line on the coordinator's socket.
+    FabricTorn,
+    /// Fabric transport: the worker reports the same completion twice
+    /// (a retransmit after a lost ack) — the ledger's duplicate guard
+    /// must reject the second idempotently.
+    FabricDuplicate,
 }
 
 impl FaultSite {
     /// All sites, in schedule order (the index keys the rate table).
-    pub const ALL: [FaultSite; 6] = [
+    pub const ALL: [FaultSite; 9] = [
         FaultSite::Duarouter,
         FaultSite::Display,
         FaultSite::TraciAccept,
         FaultSite::PjrtDispatch,
         FaultSite::InRunPanic,
         FaultSite::Stall,
+        FaultSite::FabricDrop,
+        FaultSite::FabricTorn,
+        FaultSite::FabricDuplicate,
     ];
 
     fn index(self) -> usize {
@@ -58,6 +72,9 @@ impl FaultSite {
             FaultSite::PjrtDispatch => 3,
             FaultSite::InRunPanic => 4,
             FaultSite::Stall => 5,
+            FaultSite::FabricDrop => 6,
+            FaultSite::FabricTorn => 7,
+            FaultSite::FabricDuplicate => 8,
         }
     }
 }
@@ -69,7 +86,7 @@ pub struct FaultPlan {
     /// same scenario campaign can be soaked under different fault
     /// histories.
     pub seed: u64,
-    rates: [f64; 6],
+    rates: [f64; 9],
     /// Step at which an injected stall wedges the back-end.
     pub stall_at_step: u64,
     /// How long the injected stall sleeps [ms] — finite, so the burst
@@ -82,7 +99,7 @@ impl FaultPlan {
     pub fn none(seed: u64) -> FaultPlan {
         FaultPlan {
             seed,
-            rates: [0.0; 6],
+            rates: [0.0; 9],
             stall_at_step: 5,
             stall_ms: 100,
         }
@@ -98,6 +115,18 @@ impl FaultPlan {
             .with_rate(FaultSite::Display, rate)
             .with_rate(FaultSite::TraciAccept, rate)
             .with_rate(FaultSite::InRunPanic, rate)
+    }
+
+    /// Fabric transport faults only — connection drops, torn frames and
+    /// duplicate completions all at `rate` — the distributed-soak
+    /// schedule: every injected fault is survivable by the
+    /// lease/reaper/idempotent-completion machinery, so a correct
+    /// fabric converges to 100% completion.
+    pub fn transport_only(seed: u64, rate: f64) -> FaultPlan {
+        FaultPlan::none(seed)
+            .with_rate(FaultSite::FabricDrop, rate)
+            .with_rate(FaultSite::FabricTorn, rate)
+            .with_rate(FaultSite::FabricDuplicate, rate)
     }
 
     /// Set one site's fault probability (clamped to [0, 1]).
@@ -241,6 +270,20 @@ mod tests {
         assert_eq!(plan.rate(FaultSite::PjrtDispatch), 0.0);
         assert_eq!(plan.rate(FaultSite::Stall), 0.0);
         assert_eq!(plan.rate(FaultSite::Duarouter), 0.9);
+    }
+
+    #[test]
+    fn transport_only_touches_only_the_fabric_sites() {
+        let plan = FaultPlan::transport_only(5, 0.25);
+        assert_eq!(plan.rate(FaultSite::FabricDrop), 0.25);
+        assert_eq!(plan.rate(FaultSite::FabricTorn), 0.25);
+        assert_eq!(plan.rate(FaultSite::FabricDuplicate), 0.25);
+        assert_eq!(plan.rate(FaultSite::Duarouter), 0.0);
+        assert_eq!(plan.rate(FaultSite::Stall), 0.0);
+        // and the in-run schedule leaves the fabric quiet
+        let inrun = FaultPlan::transient_only(5, 0.25);
+        assert_eq!(inrun.rate(FaultSite::FabricDrop), 0.0);
+        assert_eq!(inrun.rate(FaultSite::FabricDuplicate), 0.0);
     }
 
     #[test]

@@ -213,7 +213,14 @@ pub fn launch_instance(
     if cfg.fault(FaultSite::TraciAccept) {
         return Err(Error::PortInUse(port));
     }
-    let server = TraciServer::spawn(port, sim)?;
+    // a live PortLease hands over its bound listener — the port was
+    // never released, so nothing could have stolen it; without a lease
+    // (direct callers, retries past the first attempt) fall back to a
+    // fresh bind, where a lost race is a transient PortInUse
+    let server = match crate::pipeline::ports::redeem(port) {
+        Some(listener) => TraciServer::spawn_on(listener, sim)?,
+        None => TraciServer::spawn(port, sim)?,
+    };
 
     // setup is done — a deadline blown during it surfaces here, before
     // the front-end opens (display + server drop guards clean up)

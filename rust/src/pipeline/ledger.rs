@@ -539,6 +539,46 @@ mod tests {
     }
 
     #[test]
+    fn interleaved_remote_completions_replay_cleanly() {
+        // the fabric coordinator interleaves transitions from many
+        // workers into ONE ledger: runs go running in dispatch order
+        // but settle in whatever order workers finish, with lease
+        // expiry re-marking a run running at a higher attempt before
+        // the re-dispatch settles it
+        let path = tmp("interleaved");
+        {
+            let mut l = CampaignLedger::open(&path).unwrap();
+            l.mark_running("f-e0[0]", 0, 0, 1).unwrap(); // leased to w1
+            l.mark_running("f-e0[1]", 0, 1, 1).unwrap(); // leased to w2
+            l.mark_completed("f-e0[1]", 0, 1, 1, false).unwrap(); // w2 first
+            l.mark_running("f-e0[0]", 0, 0, 2).unwrap(); // w1 reaped, re-dispatched
+            l.mark_running("f-e0[2]", 0, 2, 1).unwrap(); // w3 joins mid-flight
+            l.mark_completed("f-e0[0]", 0, 0, 1, false).unwrap(); // re-dispatch lands
+            l.mark_completed("f-e0[2]", 0, 2, 2, true).unwrap();
+        }
+        // a fresh coordinator replays the exact same terminal picture
+        let l = CampaignLedger::open(&path).unwrap();
+        assert!(l.is_completed("f-e0[0]"));
+        assert!(l.is_completed("f-e0[1]"));
+        assert!(l.is_completed("f-e0[2]"));
+        assert_eq!(l.completed().len(), 3);
+        let order: Vec<(u32, u32)> = l
+            .completed()
+            .iter()
+            .map(|(_, e)| (e.epoch, e.slot))
+            .collect();
+        assert_eq!(order, vec![(0, 0), (0, 1), (0, 2)], "grid order, not settle order");
+        assert_eq!(
+            l.state("f-e0[2]").unwrap().state,
+            LedgerState::Completed {
+                attempts: 2,
+                degraded: true
+            }
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
     fn completed_sorted_by_epoch_then_slot() {
         let path = tmp("sorted");
         let mut l = CampaignLedger::open(&path).unwrap();

@@ -51,7 +51,7 @@ pub use launcher::{
     launch_instance, launch_node_slots, InstanceConfig, InstanceResult, PhysicsEngine,
 };
 pub use ledger::{CampaignLedger, LedgerEntry, LedgerState};
-pub use ports::PortAllocator;
+pub use ports::{PortAllocator, PortLease};
 pub use supervisor::{
     classify, run_supervised_campaign, supervise_instance, AttemptRecord, ErrorClass, RetryPolicy,
     RobustnessStats, RunReport, SupervisedCampaignSpec, SupervisedOutcome, SupervisorSpec,

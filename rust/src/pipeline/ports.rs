@@ -5,9 +5,74 @@
 //! issues on this front."  Any positive step works (the ablation bench
 //! compares 1 vs 7 vs 0 — step 0 reproduces the crash); the allocator
 //! also guards the u16 range.
+//!
+//! [`PortLease`] is the race-free ephemeral allocator: it binds port 0
+//! and *holds the bound listener* until the TraCI server redeems it at
+//! spawn time — closing the probe-then-close TOCTOU window the old
+//! `free_port` helper documented as "absorbed by retry".
+
+use std::collections::HashMap;
+use std::net::TcpListener;
+use std::sync::{Mutex, OnceLock};
 
 use crate::traci::{DEFAULT_PORT, PORT_STEP};
 use crate::{Error, Result};
+
+/// Listeners held by live [`PortLease`]s, keyed by port.  The launcher
+/// redeems from here at the moment the TraCI server would otherwise
+/// rebind — same port, zero unbound window.
+fn registry() -> &'static Mutex<HashMap<u16, TcpListener>> {
+    static REGISTRY: OnceLock<Mutex<HashMap<u16, TcpListener>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn registry_lock() -> std::sync::MutexGuard<'static, HashMap<u16, TcpListener>> {
+    // a poisoned registry only means another thread panicked while
+    // holding the map; the map itself (port → listener) stays coherent
+    registry().lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// An ephemeral loopback port, leased by *binding* it.
+///
+/// The OS picks a free port at bind time and this lease keeps the
+/// listener alive, so no other process (or sibling slot) can take the
+/// port while the lease is held.  [`crate::traci::TraciServer`]
+/// redeems the bound listener itself via [`redeem`]; if the lease has
+/// already been consumed (a retry after the first launch attempt), the
+/// server falls back to a fresh bind — a loss there is a transient
+/// `PortInUse`, absorbed by the supervisor's retry.
+#[derive(Debug)]
+pub struct PortLease {
+    port: u16,
+}
+
+impl PortLease {
+    /// Bind an OS-assigned loopback port and hold it.
+    pub fn acquire() -> Result<PortLease> {
+        let listener = TcpListener::bind(("127.0.0.1", 0))?;
+        let port = listener.local_addr()?.port();
+        registry_lock().insert(port, listener);
+        Ok(PortLease { port })
+    }
+
+    /// The leased port number.
+    pub fn port(&self) -> u16 {
+        self.port
+    }
+}
+
+impl Drop for PortLease {
+    fn drop(&mut self) {
+        // the listener may already have been redeemed by the server —
+        // removing a missing entry is fine
+        registry_lock().remove(&self.port);
+    }
+}
+
+/// Take the held listener for `port`, if a live lease holds one.
+pub(crate) fn redeem(port: u16) -> Option<TcpListener> {
+    registry_lock().remove(&port)
+}
 
 /// Deterministic port plan: `port(i) = base + step * i`.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -82,5 +147,44 @@ mod tests {
         let a = PortAllocator::new(65000, 1000);
         assert!(a.port(1).is_err());
         assert!(a.plan(2).is_err());
+    }
+
+    #[test]
+    fn concurrent_lease_allocators_never_collide() {
+        // the TOCTOU regression: two allocators racing must never hand
+        // out the same port while both leases are live
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    (0..16)
+                        .map(|_| PortLease::acquire().unwrap())
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        let leases: Vec<PortLease> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        let mut ports: Vec<u16> = leases.iter().map(|l| l.port()).collect();
+        ports.sort_unstable();
+        ports.dedup();
+        assert_eq!(ports.len(), leases.len(), "leased ports must be unique");
+        // while held, the port cannot be re-bound by anyone else
+        let p = leases[0].port();
+        assert!(TcpListener::bind(("127.0.0.1", p)).is_err());
+    }
+
+    #[test]
+    fn redeem_hands_over_the_bound_listener_once() {
+        let lease = PortLease::acquire().unwrap();
+        let p = lease.port();
+        let listener = redeem(p).expect("live lease must redeem");
+        assert_eq!(listener.local_addr().unwrap().port(), p);
+        // consumed: a second redeem finds nothing
+        assert!(redeem(p).is_none());
+        // dropping the lease after redemption is a no-op
+        drop(lease);
+        drop(listener);
     }
 }

@@ -35,11 +35,10 @@ use std::time::{Duration, Instant};
 
 use crate::container::{build_webots_hpc_image, BuildHost, ExecEnv};
 use crate::display::DisplayRegistry;
-use crate::metrics::UsageSummary;
 use crate::output::{CampaignDataset, RunDataset};
-use crate::pbs::SchedulerStats;
 use crate::pipeline::faults::{FaultInjection, FaultPlan};
 use crate::pipeline::ledger::{CampaignLedger, LedgerState};
+use crate::pipeline::ports::PortLease;
 use crate::pipeline::{
     launch_instance, CampaignResult, InstanceConfig, InstanceResult, PhysicsEngine,
 };
@@ -436,7 +435,7 @@ pub struct SupervisedOutcome {
 }
 
 /// The coordinates of run `idx` in the campaign grid.
-fn grid(spec: &SupervisedCampaignSpec, idx: u64) -> (u32, u32, usize) {
+pub(crate) fn grid(spec: &SupervisedCampaignSpec, idx: u64) -> (u32, u32, usize) {
     let per_epoch = spec.nodes as u64 * spec.slots_per_node as u64;
     let epoch = (idx / per_epoch) as u32;
     let slot = (idx % per_epoch) as u32;
@@ -444,15 +443,142 @@ fn grid(spec: &SupervisedCampaignSpec, idx: u64) -> (u32, u32, usize) {
     (epoch, slot, node)
 }
 
-/// An ephemeral free TCP port for one run's TraCI server.
-///
-/// Known race: the listener is dropped before the TraCI server rebinds
-/// the port, so another process can grab it in between.  The loss is a
-/// `PortInUse`, classified transient — the retry redraws a fresh port,
-/// which is how the window is absorbed rather than eliminated.
-fn free_port() -> Result<u16> {
-    let listener = std::net::TcpListener::bind(("127.0.0.1", 0))?;
-    Ok(listener.local_addr()?.port())
+/// Everything the campaign grid determines about run `idx`: its
+/// coordinates, identity, seed, and (in matrix mode) the materialized
+/// scenario point.  Pure in `(spec, idx)` — any process that agrees on
+/// the spec computes the identical plan, which is the contract the
+/// distributed fabric leans on to ship coordinates instead of payloads.
+#[derive(Debug, Clone)]
+pub(crate) struct RunPlan {
+    pub epoch: u32,
+    pub slot: u32,
+    pub node: usize,
+    /// `{name}-e{epoch}[{slot}]` — the dataset/CSV identity.
+    pub base_id: String,
+    /// Ledger identity (`base_id` plus the scenario tag in matrix mode).
+    pub run_id: String,
+    pub planned: Option<crate::scenario::PlannedRun>,
+    pub seed: u64,
+}
+
+/// Materialize the plan for run `idx` of `spec`.
+pub(crate) fn plan_run(
+    spec: &SupervisedCampaignSpec,
+    registry: &FamilyRegistry,
+    idx: u64,
+) -> Result<RunPlan> {
+    let (epoch, slot, node) = grid(spec, idx);
+    let base_id = format!("{}-e{epoch}[{slot}]", spec.name);
+    let planned = match &spec.matrix {
+        Some(m) => Some(m.materialize(registry, idx)?),
+        None => None,
+    };
+    let run_id = match &planned {
+        Some(p) => {
+            let tag = &p.config.tag;
+            format!("{base_id}@{}#{}", tag.id, tag.sample_index)
+        }
+        None => base_id.clone(),
+    };
+    let seed = match &planned {
+        Some(p) => p.assignment.run_seed,
+        None => spec.seed + idx,
+    };
+    Ok(RunPlan {
+        epoch,
+        slot,
+        node,
+        base_id,
+        run_id,
+        planned,
+        seed,
+    })
+}
+
+/// Build the launchable instance config for a planned run, with its
+/// TraCI server on `port`.
+pub(crate) fn instance_config(
+    spec: &SupervisedCampaignSpec,
+    plan: &RunPlan,
+    port: u16,
+) -> InstanceConfig {
+    let world = sample_merge_world(port);
+    match &plan.planned {
+        Some(p) => {
+            let mut cfg = InstanceConfig::from_planned(&plan.base_id, plan.node, world, p);
+            cfg.horizon_s = cfg.horizon_s.min(spec.horizon_s);
+            cfg
+        }
+        None => {
+            let scenario = MergeScenario::default();
+            InstanceConfig {
+                run_id: plan.base_id.clone(),
+                node: plan.node,
+                world,
+                flows: FlowFile::merge_sample(1200.0, 300.0, spec.horizon_s),
+                scenario,
+                seed: plan.seed,
+                capacity: spec.capacity,
+                horizon_s: spec.horizon_s,
+                max_steps: steps_for(spec.horizon_s, scenario.dt_s) + 100,
+                scenario_run: None,
+                chunk_steps: crate::pipeline::ChunkSteps::Auto,
+                faults: None,
+                watchdog: WatchdogSpec::default(),
+            }
+        }
+    }
+}
+
+/// Atomically publish one run's CSV under `runs_dir`: the file lands
+/// fully (or not at all) *before* the caller appends the `completed`
+/// ledger record — a crash between the two re-runs the instance, never
+/// trusts a torn file.
+pub(crate) fn publish_run_csv(
+    runs_dir: &std::path::Path,
+    epoch: u32,
+    slot: u32,
+    csv: &str,
+) -> Result<()> {
+    let final_path = runs_dir.join(format!("e{epoch}_s{slot}.csv"));
+    let tmp_path = runs_dir.join(format!("e{epoch}_s{slot}.csv.tmp"));
+    std::fs::write(&tmp_path, csv)?;
+    std::fs::rename(&tmp_path, &final_path)?;
+    Ok(())
+}
+
+/// Assemble the aggregate dataset purely from ledger + disk, in grid
+/// order — the SAME construction whether one process ran every
+/// instance, a resumed session finished a killed campaign, or a
+/// coordinator collected shards from remote workers.  This shared path
+/// is what makes the distributed aggregate byte-identical to the
+/// single-process one.
+pub(crate) fn assemble_aggregate(
+    spec: &SupervisedCampaignSpec,
+    registry: &FamilyRegistry,
+    ledger: &CampaignLedger,
+    runs_dir: &std::path::Path,
+) -> Result<CampaignDataset> {
+    let mut dataset = CampaignDataset::new();
+    for idx in 0..spec.total_runs() {
+        let plan = plan_run(spec, registry, idx)?;
+        let Some(entry) = ledger.state(&plan.run_id) else {
+            continue;
+        };
+        let LedgerState::Completed { degraded, .. } = entry.state else {
+            continue;
+        };
+        let csv = std::fs::read_to_string(
+            runs_dir.join(format!("e{}_s{}.csv", plan.epoch, plan.slot)),
+        )?;
+        let mut ds = RunDataset::from_csv(&plan.base_id, plan.node, plan.seed, &csv)?;
+        if let Some(p) = &plan.planned {
+            ds = ds.with_scenario(ScenarioRun::from(&p.config).tag);
+        }
+        ds.degraded = degraded;
+        dataset.add(ds);
+    }
+    Ok(dataset)
 }
 
 /// FNV-1a over the matrix's debug form — a stable spelling of the
@@ -475,7 +601,7 @@ fn matrix_fingerprint(matrix: &Option<ScenarioMatrix>) -> String {
 /// field that determines run_ids, seeds, CSV paths, or run content.
 /// Resuming a ledger dir under a different shape is refused instead of
 /// silently mislabeling the rebuilt aggregate.
-fn campaign_fingerprint(spec: &SupervisedCampaignSpec) -> Json {
+pub(crate) fn campaign_fingerprint(spec: &SupervisedCampaignSpec) -> Json {
     Json::obj(vec![
         ("name", Json::str(&spec.name)),
         ("nodes", Json::num(spec.nodes as f64)),
@@ -522,19 +648,9 @@ pub fn run_supervised_campaign(
     let mut launched = 0u64;
 
     for idx in 0..total {
-        let (epoch, slot, node) = grid(spec, idx);
-        let base_id = format!("{}-e{epoch}[{slot}]", spec.name);
-        let planned = match &spec.matrix {
-            Some(m) => Some(m.materialize(&registry, idx)?),
-            None => None,
-        };
-        let run_id = match &planned {
-            Some(p) => {
-                let tag = &p.config.tag;
-                format!("{base_id}@{}#{}", tag.id, tag.sample_index)
-            }
-            None => base_id.clone(),
-        };
+        let plan = plan_run(spec, &registry, idx)?;
+        let (epoch, slot, node) = (plan.epoch, plan.slot, plan.node);
+        let run_id = plan.run_id.clone();
 
         // resume predicate: completed runs are settled; so are
         // permanent failures (unless retry_failed) — a config error
@@ -565,32 +681,10 @@ pub fn run_supervised_campaign(
             }
         }
 
-        let world = sample_merge_world(free_port()?);
-        let cfg = match &planned {
-            Some(p) => {
-                let mut cfg = InstanceConfig::from_planned(&base_id, node, world, p);
-                cfg.horizon_s = cfg.horizon_s.min(spec.horizon_s);
-                cfg
-            }
-            None => {
-                let scenario = MergeScenario::default();
-                InstanceConfig {
-                    run_id: base_id.clone(),
-                    node,
-                    world,
-                    flows: FlowFile::merge_sample(1200.0, 300.0, spec.horizon_s),
-                    scenario,
-                    seed: spec.seed + idx,
-                    capacity: spec.capacity,
-                    horizon_s: spec.horizon_s,
-                    max_steps: steps_for(spec.horizon_s, scenario.dt_s) + 100,
-                    scenario_run: None,
-                    chunk_steps: crate::pipeline::ChunkSteps::Auto,
-                    faults: None,
-                    watchdog: WatchdogSpec::default(),
-                }
-            }
-        };
+        // the lease holds its bound listener until the TraCI server
+        // redeems it inside the launcher — no probe-then-close window
+        let port_lease = PortLease::acquire()?;
+        let cfg = instance_config(spec, &plan, port_lease.port());
 
         ledger.mark_running(&run_id, epoch, slot, 0)?;
         if telemetry::enabled() {
@@ -637,13 +731,7 @@ pub fn run_supervised_campaign(
         stats.killed_stall += report.killed_stall as u64;
         match &report.outcome {
             Ok(r) => {
-                // atomic publish: CSV lands fully (or not at all) BEFORE
-                // the completed record — a crash between the two re-runs
-                // the instance, never trusts a torn file
-                let final_path = runs_dir.join(format!("e{epoch}_s{slot}.csv"));
-                let tmp_path = runs_dir.join(format!("e{epoch}_s{slot}.csv.tmp"));
-                std::fs::write(&tmp_path, r.dataset.to_csv())?;
-                std::fs::rename(&tmp_path, &final_path)?;
+                publish_run_csv(&runs_dir, epoch, slot, &r.dataset.to_csv())?;
                 ledger.mark_completed(&run_id, epoch, slot, report.attempts, report.degraded)?;
                 stats.completed += 1;
                 if report.degraded {
@@ -675,72 +763,13 @@ pub fn run_supervised_campaign(
         telemetry::flush_all();
     }
 
-    // assemble the aggregate purely from ledger + disk, in grid order —
-    // the SAME construction whether this session ran every instance or
-    // resumed a killed campaign, so the export is deterministic
-    let mut dataset = CampaignDataset::new();
-    for idx in 0..total {
-        let (epoch, slot, node) = grid(spec, idx);
-        let base_id = format!("{}-e{epoch}[{slot}]", spec.name);
-        let planned = match &spec.matrix {
-            Some(m) => Some(m.materialize(&registry, idx)?),
-            None => None,
-        };
-        let run_id = match &planned {
-            Some(p) => format!("{base_id}@{}#{}", p.config.tag.id, p.config.tag.sample_index),
-            None => base_id.clone(),
-        };
-        let Some(entry) = ledger.state(&run_id) else {
-            continue;
-        };
-        let LedgerState::Completed { degraded, .. } = entry.state else {
-            continue;
-        };
-        let seed = match &planned {
-            Some(p) => p.assignment.run_seed,
-            None => spec.seed + idx,
-        };
-        let csv = std::fs::read_to_string(runs_dir.join(format!("e{epoch}_s{slot}.csv")))?;
-        let mut ds = RunDataset::from_csv(&base_id, node, seed, &csv)?;
-        if let Some(p) = &planned {
-            ds = ds.with_scenario(ScenarioRun::from(&p.config).tag);
-        }
-        ds.degraded = degraded;
-        dataset.add(ds);
-    }
-
-    let mean = |v: &[f64]| {
-        if v.is_empty() {
-            0.0
-        } else {
-            v.iter().sum::<f64>() / v.len() as f64
-        }
-    };
-    let result = CampaignResult {
-        samples: Vec::new(),
-        stats: SchedulerStats {
-            submitted: stats.runs,
-            completed: stats.completed,
-            killed_walltime: stats.killed_walltime,
-            failed: stats.failed,
-        },
-        usage: UsageSummary {
-            runs: walltimes_s.len(),
-            mean_walltime_s: mean(&walltimes_s),
-            // the sequential driver has no cgroup accounting; walltime
-            // is the honest stand-in (single-threaded instances)
-            mean_cpu_time_s: mean(&walltimes_s),
-            mean_ram_gb: 0.0,
-            mean_cpu_percent: 100.0,
-        },
-        runs_per_node: dataset
-            .runs_per_node(spec.nodes)
-            .into_iter()
-            .map(|c| c as u64)
-            .collect(),
-        peak_occupancy: vec![1; spec.nodes],
-        robustness: Some(stats),
-    };
+    let dataset = assemble_aggregate(spec, &registry, &ledger, &runs_dir)?;
+    let result = crate::pipeline::campaign::supervised_result(
+        stats,
+        &walltimes_s,
+        &dataset,
+        spec.nodes,
+    );
 
     Ok(SupervisedOutcome {
         result,

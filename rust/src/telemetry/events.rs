@@ -125,6 +125,37 @@ pub enum EventKind {
         misses: u64,
         compiled: u64,
     },
+    /// A worker passed the fabric handshake and joined the pool.
+    WorkerJoin {
+        worker: String,
+    },
+    /// A worker's connection ended (graceful drain, crash, or torn
+    /// frame — `reason` says which).
+    WorkerLeave {
+        worker: String,
+        reason: String,
+    },
+    /// The coordinator leased `(epoch, slot)` to a worker.
+    LeaseGrant {
+        run_id: String,
+        worker: String,
+        lease: u64,
+        attempt: u64,
+    },
+    /// The reaper revoked a lease whose heartbeat deadline passed; the
+    /// slot goes back on the queue.
+    LeaseExpired {
+        run_id: String,
+        worker: String,
+        lease: u64,
+    },
+    /// A completion arrived for a run the ledger already settled (a
+    /// zombie worker's late report or a duplicated frame) — rejected
+    /// idempotently.
+    CompletionRejected {
+        run_id: String,
+        worker: String,
+    },
 }
 
 impl EventKind {
@@ -148,6 +179,11 @@ impl EventKind {
             EventKind::Coalesced { .. } => "coalesced",
             EventKind::SerialFallback { .. } => "serial_fallback",
             EventKind::PoolDelta { .. } => "pool_delta",
+            EventKind::WorkerJoin { .. } => "worker_join",
+            EventKind::WorkerLeave { .. } => "worker_leave",
+            EventKind::LeaseGrant { .. } => "lease_grant",
+            EventKind::LeaseExpired { .. } => "lease_expired",
+            EventKind::CompletionRejected { .. } => "completion_rejected",
         }
     }
 }
@@ -336,6 +372,37 @@ impl Event {
                 pairs.push(("misses", num(*misses)));
                 pairs.push(("compiled", num(*compiled)));
             }
+            EventKind::WorkerJoin { worker } => {
+                pairs.push(("worker", Json::str(worker.clone())));
+            }
+            EventKind::WorkerLeave { worker, reason } => {
+                pairs.push(("worker", Json::str(worker.clone())));
+                pairs.push(("reason", Json::str(reason.clone())));
+            }
+            EventKind::LeaseGrant {
+                run_id,
+                worker,
+                lease,
+                attempt,
+            } => {
+                pairs.push(("run_id", Json::str(run_id.clone())));
+                pairs.push(("worker", Json::str(worker.clone())));
+                pairs.push(("lease", num(*lease)));
+                pairs.push(("attempt", num(*attempt)));
+            }
+            EventKind::LeaseExpired {
+                run_id,
+                worker,
+                lease,
+            } => {
+                pairs.push(("run_id", Json::str(run_id.clone())));
+                pairs.push(("worker", Json::str(worker.clone())));
+                pairs.push(("lease", num(*lease)));
+            }
+            EventKind::CompletionRejected { run_id, worker } => {
+                pairs.push(("run_id", Json::str(run_id.clone())));
+                pairs.push(("worker", Json::str(worker.clone())));
+            }
         }
         Json::obj(pairs)
     }
@@ -444,6 +511,28 @@ impl Event {
                 hits: get_u64(j, "hits")?,
                 misses: get_u64(j, "misses")?,
                 compiled: get_u64(j, "compiled")?,
+            },
+            "worker_join" => EventKind::WorkerJoin {
+                worker: get_str(j, "worker")?,
+            },
+            "worker_leave" => EventKind::WorkerLeave {
+                worker: get_str(j, "worker")?,
+                reason: get_str(j, "reason")?,
+            },
+            "lease_grant" => EventKind::LeaseGrant {
+                run_id: get_str(j, "run_id")?,
+                worker: get_str(j, "worker")?,
+                lease: get_u64(j, "lease")?,
+                attempt: get_u64(j, "attempt")?,
+            },
+            "lease_expired" => EventKind::LeaseExpired {
+                run_id: get_str(j, "run_id")?,
+                worker: get_str(j, "worker")?,
+                lease: get_u64(j, "lease")?,
+            },
+            "completion_rejected" => EventKind::CompletionRejected {
+                run_id: get_str(j, "run_id")?,
+                worker: get_str(j, "worker")?,
             },
             other => {
                 return Err(Error::Config(format!("unknown telemetry event '{other}'")));
@@ -582,6 +671,28 @@ mod tests {
             hits: 120,
             misses: 2,
             compiled: 5,
+        });
+        round_trip(EventKind::WorkerJoin {
+            worker: "w1#3".into(),
+        });
+        round_trip(EventKind::WorkerLeave {
+            worker: "w1#3".into(),
+            reason: "connection lost".into(),
+        });
+        round_trip(EventKind::LeaseGrant {
+            run_id: "soak-e0[3]".into(),
+            worker: "w1#3".into(),
+            lease: 17,
+            attempt: 1,
+        });
+        round_trip(EventKind::LeaseExpired {
+            run_id: "soak-e0[3]".into(),
+            worker: "w1#3".into(),
+            lease: 17,
+        });
+        round_trip(EventKind::CompletionRejected {
+            run_id: "soak-e0[3]".into(),
+            worker: "w2#1".into(),
         });
     }
 

@@ -34,7 +34,8 @@ pub use metrics::{
 };
 pub use report::{summarize, DispatchStats, LaneUsage, Report};
 pub use sink::{
-    emit, enabled, flush_all, install, read_events, uninstall, EventSink, JsonlSink, MemorySink,
+    emit, enabled, flush_all, install, merge_event_shards, read_events, uninstall, EventSink,
+    JsonlSink, MemorySink,
 };
 pub use trace::{to_chrome_trace, ENGINE_PID};
 

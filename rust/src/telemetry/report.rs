@@ -85,6 +85,16 @@ pub struct Report {
     /// Last event timestamp minus first — the denominator for
     /// occupancy.
     pub span_us: u64,
+    /// Fabric worker joins (a reconnecting worker counts again).
+    pub workers_joined: u64,
+    /// Worker departures by reason (drain / connection lost / ...).
+    pub worker_leaves: BTreeMap<String, u64>,
+    /// Leases the coordinator granted.
+    pub leases_granted: u64,
+    /// Leases the reaper revoked on a missed heartbeat deadline.
+    pub leases_expired: u64,
+    /// Late/duplicate completions the ledger rejected idempotently.
+    pub completions_rejected: u64,
 }
 
 impl Report {
@@ -148,6 +158,20 @@ impl Report {
                     stats.batched,
                     stats.serial_fallbacks
                 ));
+            }
+        }
+        if self.workers_joined > 0 {
+            let leaves: u64 = self.worker_leaves.values().sum();
+            out.push_str(&format!(
+                "fabric: {} worker joins | {} leaves | {} leases granted | {} expired | {} completions rejected\n",
+                self.workers_joined,
+                leaves,
+                self.leases_granted,
+                self.leases_expired,
+                self.completions_rejected
+            ));
+            for (reason, n) in &self.worker_leaves {
+                out.push_str(&format!("  leave ({reason}): {n}\n"));
             }
         }
         if !self.lanes.is_empty() && self.span_us > 0 {
@@ -234,6 +258,13 @@ pub fn summarize(events: &[Event]) -> Report {
                 report.pool_hits += hits;
                 report.pool_misses += misses;
             }
+            EventKind::WorkerJoin { .. } => report.workers_joined += 1,
+            EventKind::WorkerLeave { reason, .. } => {
+                *report.worker_leaves.entry(reason.clone()).or_insert(0) += 1;
+            }
+            EventKind::LeaseGrant { .. } => report.leases_granted += 1,
+            EventKind::LeaseExpired { .. } => report.leases_expired += 1,
+            EventKind::CompletionRejected { .. } => report.completions_rejected += 1,
             _ => {}
         }
     }
@@ -346,6 +377,62 @@ mod tests {
         let text = r.render();
         assert!(text.contains("completion rate 50.0%"), "{text}");
         assert!(text.contains("transient"), "{text}");
+    }
+
+    #[test]
+    fn fabric_counters_fold_from_worker_and_lease_events() {
+        let events = vec![
+            ev(0, EventKind::WorkerJoin { worker: "a#1".into() }),
+            ev(1, EventKind::WorkerJoin { worker: "b#1".into() }),
+            ev(
+                2,
+                EventKind::LeaseGrant {
+                    run_id: "f-e0[0]".into(),
+                    worker: "a#1".into(),
+                    lease: 1,
+                    attempt: 0,
+                },
+            ),
+            ev(
+                3,
+                EventKind::LeaseExpired {
+                    run_id: "f-e0[0]".into(),
+                    worker: "a#1".into(),
+                    lease: 1,
+                },
+            ),
+            ev(
+                4,
+                EventKind::WorkerLeave {
+                    worker: "a#1".into(),
+                    reason: "connection lost".into(),
+                },
+            ),
+            ev(
+                5,
+                EventKind::CompletionRejected {
+                    run_id: "f-e0[0]".into(),
+                    worker: "a#1".into(),
+                },
+            ),
+            ev(
+                6,
+                EventKind::WorkerLeave {
+                    worker: "b#1".into(),
+                    reason: "drained".into(),
+                },
+            ),
+        ];
+        let r = summarize(&events);
+        assert_eq!(r.workers_joined, 2);
+        assert_eq!(r.leases_granted, 1);
+        assert_eq!(r.leases_expired, 1);
+        assert_eq!(r.completions_rejected, 1);
+        assert_eq!(r.worker_leaves["connection lost"], 1);
+        assert_eq!(r.worker_leaves["drained"], 1);
+        let text = r.render();
+        assert!(text.contains("2 worker joins"), "{text}");
+        assert!(text.contains("1 expired"), "{text}");
     }
 
     #[test]

@@ -196,6 +196,25 @@ pub fn read_events(path: impl AsRef<Path>) -> Result<Vec<Event>> {
     Ok(events)
 }
 
+/// Merge per-worker event shards into one timestamp-ordered stream.
+///
+/// A fabric campaign writes one `events-*.jsonl` per worker connection
+/// plus the coordinator's own stream; `webots-hpc report` hands them
+/// all here.  Each shard gets [`read_events`]' torn-tail forgiveness
+/// independently; the merge is ordered by `t_us` (ties keep shard
+/// order, stably) and exact duplicate records — a retransmitted frame
+/// landing in two shards — collapse to one.
+pub fn merge_event_shards(paths: &[impl AsRef<Path>]) -> Result<Vec<Event>> {
+    let mut merged: Vec<Event> = Vec::new();
+    for path in paths {
+        merged.extend(read_events(path)?);
+    }
+    merged.sort_by_key(|e| e.t_us);
+    let mut seen = std::collections::BTreeSet::new();
+    merged.retain(|e| seen.insert(e.to_json().to_compact_string()));
+    Ok(merged)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -262,6 +281,35 @@ mod tests {
         )
         .unwrap();
         assert!(read_events(&bad).is_err());
+    }
+
+    #[test]
+    fn shard_merge_orders_dedupes_and_forgives_torn_tails() {
+        let dir = TempDir::new("telemetry-merge").unwrap();
+        let a = dir.path().join("events-w1.jsonl");
+        let b = dir.path().join("events-w2.jsonl");
+        {
+            let sink = JsonlSink::append(&a).unwrap();
+            sink.emit(&ev(5, "x", "running"));
+            sink.emit(&ev(9, "x", "completed"));
+            // duplicate of a record shard b also carries
+            sink.emit(&ev(7, "y", "running"));
+        }
+        {
+            let sink = JsonlSink::append(&b).unwrap();
+            sink.emit(&ev(7, "y", "running"));
+            sink.emit(&ev(12, "y", "completed"));
+        }
+        // shard b gains a torn tail — forgiven per shard
+        {
+            use std::io::Write;
+            let mut f = OpenOptions::new().append(true).open(&b).unwrap();
+            f.write_all(b"{\"ev\":\"run_end\",\"t_us").unwrap();
+        }
+        let merged = merge_event_shards(&[&a, &b]).unwrap();
+        let ts: Vec<u64> = merged.iter().map(|e| e.t_us).collect();
+        assert_eq!(ts, vec![5, 7, 9, 12], "ordered, duplicate collapsed");
+        assert_eq!(merged[1], ev(7, "y", "running"));
     }
 
     #[test]

@@ -43,6 +43,19 @@ impl TraciServer {
         })
     }
 
+    /// Serve `sim` on an already-bound listener — the redemption path
+    /// for [`crate::pipeline::PortLease`], where the port was never
+    /// released between allocation and serving (no rebind, no TOCTOU
+    /// window).
+    pub fn spawn_on(listener: TcpListener, sim: SumoSim) -> Result<TraciServer> {
+        let port = listener.local_addr()?.port();
+        let handle = std::thread::spawn(move || serve(listener, sim));
+        Ok(TraciServer {
+            port,
+            handle: Some(handle),
+        })
+    }
+
     /// Wait for the serving thread to finish (client sent Close).
     pub fn join(mut self) -> Result<()> {
         match self.handle.take() {

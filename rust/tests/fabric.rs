@@ -1,0 +1,255 @@
+//! Distributed-fabric acceptance tests — the §5.1 completion claim
+//! taken across process boundaries.
+//!
+//! Workers here run as in-process threads, but nothing they share with
+//! the coordinator is in-memory: every exchange crosses a real loopback
+//! TCP socket as newline-delimited JSON, every worker builds its own
+//! container env / display registry / scenario registry, and the
+//! coordinator's only durable state is the crash-safe ledger.  The soak
+//! injects ≥ 10% transport faults per fabric site (dropped connections,
+//! torn frames, duplicate completions), one hard worker kill, one
+//! zombie worker, and one coordinator kill/resume — and still requires
+//! `completion_rate() == 1.0` with an aggregate byte-identical to the
+//! single-process driver's.
+
+use webots_hpc::fabric::{
+    run_worker, Coordinator, FabricConfig, WorkerConfig, WorkerKill, WorkerOutcome,
+};
+use webots_hpc::pipeline::{
+    run_supervised_campaign, FaultPlan, FaultSite, PhysicsEngine, RetryPolicy,
+    SupervisedCampaignSpec, SupervisorSpec,
+};
+use webots_hpc::util::TempDir;
+use webots_hpc::webots::WatchdogSpec;
+
+/// Same proven-converging schedule as the local soak: plan seed 99 over
+/// run seeds 1000.. settles within 10 attempts at a 12% per-site rate.
+const PLAN_SEED: u64 = 99;
+const BASE_SEED: u64 = 1000;
+
+/// 2 nodes × 3 slots × 2 epochs = 12 runs, soaked with the same in-run
+/// transient-fault schedule the single-process soak proves out.
+fn fabric_spec(name: &str, ledger_dir: std::path::PathBuf) -> SupervisedCampaignSpec {
+    SupervisedCampaignSpec {
+        name: name.into(),
+        nodes: 2,
+        slots_per_node: 3,
+        epochs: 2,
+        horizon_s: 2.0,
+        capacity: 64,
+        seed: BASE_SEED,
+        matrix: None,
+        supervisor: SupervisorSpec {
+            retry: RetryPolicy {
+                max_attempts: 10,
+                base_ms: 1,
+                cap_ms: 5,
+            },
+            watchdog: WatchdogSpec::default(),
+            degrade: false,
+            fault_plan: Some(FaultPlan::transient_only(PLAN_SEED, 0.12)),
+        },
+        ledger_dir,
+        retry_failed: false,
+        stop_after_runs: None,
+    }
+}
+
+/// Test-speed fabric timings: 25ms heartbeats under a 150ms TTL keep a
+/// healthy worker safe by 6× while the reaper notices a dead one fast.
+fn fabric_cfg() -> FabricConfig {
+    FabricConfig {
+        port: 0,
+        heartbeat_ms: 25,
+        lease_ttl_ms: 150,
+        stop_after_completions: None,
+    }
+}
+
+fn worker(name: &str, port: u16, spec: &SupervisedCampaignSpec) -> WorkerConfig {
+    WorkerConfig {
+        reconnect_attempts: 64,
+        reconnect_delay_ms: 10,
+        ..WorkerConfig::new(name, format!("127.0.0.1:{port}"), spec.clone())
+    }
+}
+
+fn spawn_worker(cfg: WorkerConfig) -> std::thread::JoinHandle<WorkerOutcome> {
+    std::thread::spawn(move || run_worker(&cfg, &PhysicsEngine::Native).unwrap())
+}
+
+/// The headline distributed claim: a campaign spread over three flaky
+/// workers — one injecting ≥ 10% transport faults per fabric site, one
+/// killed hard while holding a lease, one zombified mid-lease — and a
+/// coordinator killed after four accepted completions, still converges
+/// on resume to 100% completion with zero duplicate run_ids and an
+/// aggregate export byte-identical to the single-process driver's.
+#[test]
+fn distributed_soak_completes_100_percent_across_coordinator_kill() {
+    let dir = TempDir::new("webots-hpc-fabric-soak").unwrap();
+    let control_dir = TempDir::new("webots-hpc-fabric-control").unwrap();
+    let spec = fabric_spec("fabric", dir.path().to_path_buf());
+
+    // session 1: the coordinator's kill seam fires after 4 accepted
+    // completions, abandoning everything else in flight
+    let coord = Coordinator::bind(
+        spec.clone(),
+        FabricConfig {
+            stop_after_completions: Some(4),
+            ..fabric_cfg()
+        },
+    )
+    .unwrap();
+    let port = coord.port();
+    let transport = FaultPlan::transport_only(PLAN_SEED, 0.15)
+        .with_rate(FaultSite::FabricDuplicate, 0.25);
+    let flaky = spawn_worker(WorkerConfig {
+        transport_faults: Some(transport),
+        ..worker("flaky", port, &spec)
+    });
+    let doomed = spawn_worker(WorkerConfig {
+        kill: WorkerKill::DieAfter(0),
+        ..worker("doomed", port, &spec)
+    });
+    let zombie = spawn_worker(WorkerConfig {
+        kill: WorkerKill::ZombieAfter(0),
+        ..worker("zombie", port, &spec)
+    });
+    let killed = coord.run().unwrap();
+    assert!(doomed.join().unwrap().died, "the hard kill fired");
+    assert!(zombie.join().unwrap().died, "the zombie seam fired");
+    let _ = flaky.join().unwrap();
+
+    assert!(killed.interrupted, "4 < 12: work was abandoned in flight");
+    assert!(killed.fabric.completions_accepted >= 4);
+    assert!(
+        killed.fabric.leases_expired >= 1,
+        "the killed worker's lease was revoked: {:?}",
+        killed.fabric
+    );
+
+    // session 2: a fresh coordinator on the same ledger dir, clean
+    // workers — the campaign must settle completely
+    let coord = Coordinator::bind(spec.clone(), fabric_cfg()).unwrap();
+    let port = coord.port();
+    let workers: Vec<_> = (0..3)
+        .map(|i| spawn_worker(worker(&format!("w{i}"), port, &spec)))
+        .collect();
+    let outcome = coord.run().unwrap();
+    for w in workers {
+        let _ = w.join().unwrap();
+    }
+
+    assert!(!outcome.interrupted);
+    let stats = outcome.result.robustness.expect("supervised accounting");
+    assert_eq!(stats.runs, 12);
+    assert_eq!(stats.completed, 12);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(
+        stats.completion_rate(),
+        1.0,
+        "the distributed §5.1 claim: {stats:?}"
+    );
+    assert!(
+        stats.resumed_skips >= 4,
+        "session 1's completions were skipped, not re-run: {stats:?}"
+    );
+    assert_eq!(outcome.dataset.num_runs(), 12);
+    assert!(
+        outcome.dataset.run_ids_unique(),
+        "no duplicate run_ids survived re-dispatch + the zombie"
+    );
+    assert!(outcome.dataset.seeds_unique());
+
+    // control: the identical campaign, single-process, fresh ledger
+    let control_spec = fabric_spec("fabric", control_dir.path().to_path_buf());
+    let control = run_supervised_campaign(&control_spec, &PhysicsEngine::Native).unwrap();
+    assert_eq!(
+        outcome.dataset.to_ml_csv(),
+        control.dataset.to_ml_csv(),
+        "distributed aggregate must be byte-identical to the single-process driver's"
+    );
+}
+
+/// The check.sh smoke: two workers over loopback, one killed hard on
+/// its first lease, the other retransmitting every completion — the
+/// campaign still settles at 100% and every retransmission lands in the
+/// duplicate guard.
+#[test]
+fn fabric_smoke_two_workers_one_kill() {
+    let dir = TempDir::new("webots-hpc-fabric-smoke").unwrap();
+    let mut spec = fabric_spec("smoke", dir.path().to_path_buf());
+    spec.nodes = 1;
+    spec.slots_per_node = 4;
+    spec.epochs = 1;
+    spec.supervisor.fault_plan = None;
+
+    let coord = Coordinator::bind(spec.clone(), fabric_cfg()).unwrap();
+    let port = coord.port();
+    // rate 1.0: every completion is followed by a duplicate retransmit
+    let dup = FaultPlan::none(PLAN_SEED).with_rate(FaultSite::FabricDuplicate, 1.0);
+    let dup_worker = spawn_worker(WorkerConfig {
+        transport_faults: Some(dup),
+        ..worker("dup", port, &spec)
+    });
+    let doomed = spawn_worker(WorkerConfig {
+        kill: WorkerKill::DieAfter(0),
+        ..worker("doomed", port, &spec)
+    });
+
+    let outcome = coord.run().unwrap();
+    assert!(doomed.join().unwrap().died);
+    let dup_out = dup_worker.join().unwrap();
+    assert!(dup_out.completions >= 1);
+
+    assert!(!outcome.interrupted);
+    let stats = outcome.result.robustness.unwrap();
+    assert_eq!(stats.completed, 4);
+    assert_eq!(stats.completion_rate(), 1.0, "{stats:?}");
+    assert_eq!(outcome.fabric.completions_accepted, 4);
+    assert!(
+        outcome.fabric.completions_rejected >= 1,
+        "retransmits must hit the duplicate guard: {:?}",
+        outcome.fabric
+    );
+    assert!(
+        outcome.fabric.leases_expired >= 1,
+        "the dead worker's lease was revoked: {:?}",
+        outcome.fabric
+    );
+    assert!(outcome.dataset.run_ids_unique());
+}
+
+/// A worker whose spec drifted from the coordinator's (here: a
+/// different seed grid) must be refused at the handshake — before it
+/// can lease work and settle runs under the wrong scenario sampling.
+#[test]
+fn mismatched_spec_hash_is_refused_at_handshake() {
+    let dir = TempDir::new("webots-hpc-fabric-refuse").unwrap();
+    let mut spec = fabric_spec("refuse", dir.path().to_path_buf());
+    spec.nodes = 1;
+    spec.slots_per_node = 2;
+    spec.epochs = 1;
+    spec.supervisor.fault_plan = None;
+
+    let coord = Coordinator::bind(spec.clone(), fabric_cfg()).unwrap();
+    let port = coord.port();
+
+    let mut drifted = spec.clone();
+    drifted.seed += 1;
+    let refused = spawn_worker(worker("drift", port, &drifted));
+    let good = spawn_worker(worker("good", port, &spec));
+
+    let outcome = coord.run().unwrap();
+    let refused = refused.join().unwrap();
+    let reason = refused.refused.expect("handshake must be refused");
+    assert!(reason.contains("different campaign shape"), "{reason}");
+    assert_eq!(refused.completions, 0, "refused workers lease nothing");
+    let _ = good.join().unwrap();
+
+    assert!(outcome.fabric.workers_refused >= 1, "{:?}", outcome.fabric);
+    let stats = outcome.result.robustness.unwrap();
+    assert_eq!(stats.completed, 2);
+    assert_eq!(stats.completion_rate(), 1.0);
+    assert!(outcome.dataset.run_ids_unique());
+}

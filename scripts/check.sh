@@ -15,6 +15,8 @@ echo "== control-plane lint gate (no unwrap/expect in pipeline/) =="
 # removes it from the unattended-campaign control plane
 grep -q 'deny(clippy::unwrap_used, clippy::expect_used)' rust/src/pipeline/mod.rs \
   || { echo "FAIL: pipeline/mod.rs lost its unwrap/expect deny gate"; exit 1; }
+grep -q 'deny(clippy::unwrap_used, clippy::expect_used)' rust/src/fabric/mod.rs \
+  || { echo "FAIL: fabric/mod.rs lost its unwrap/expect deny gate"; exit 1; }
 
 echo "== telemetry lint gate (no println!/eprintln! in library code) =="
 # library observability goes through telemetry::emit / the metrics
@@ -28,7 +30,7 @@ while IFS= read -r f; do
     echo "$hits"
     print_gate_fail=1
   fi
-done < <(find rust/src/runtime rust/src/pipeline rust/src/telemetry -name '*.rs')
+done < <(find rust/src/runtime rust/src/pipeline rust/src/telemetry rust/src/fabric -name '*.rs')
 [ "$print_gate_fail" -eq 0 ] \
   || { echo "FAIL: library code prints to stdout/stderr — emit telemetry events instead"; exit 1; }
 
@@ -54,5 +56,10 @@ echo "== robustness: fault-injection soak (32 runs) =="
 # the §5.1 completion-rate claim under ≥10% injected transient faults;
 # the schedule is seeded, so this size is exactly reproducible
 WEBOTS_HPC_SOAK_RUNS=32 cargo test -q --release --test robustness
+
+echo "== fabric: loopback coordinator/worker smoke =="
+# distributed execution over real TCP: one hard worker kill, forced
+# duplicate completions, 100% completion (full soak runs under tier-1)
+cargo test -q --release --test fabric fabric_smoke
 
 echo "check.sh: all gates passed"
