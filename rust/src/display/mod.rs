@@ -8,6 +8,8 @@
 //! instance binds display :99 and the second one dies.  That collision
 //! and its fix are real code paths here.
 
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 mod x11;
 mod xvfb;
 

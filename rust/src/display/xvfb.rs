@@ -28,7 +28,7 @@ impl Drop for DisplayHandle {
         self.registry
             .taken
             .lock()
-            .expect("registry poisoned")
+            .unwrap_or_else(|e| e.into_inner())
             .remove(&self.number);
     }
 }
@@ -48,7 +48,7 @@ impl DisplayRegistry {
     /// Bind a specific display number. Fails when taken — the §3.1.5
     /// failure mode of running `xvfb-run` *without* `-a` twice.
     pub fn bind(&self, number: u32) -> Result<DisplayHandle> {
-        let mut taken = self.taken.lock().expect("registry poisoned");
+        let mut taken = self.taken.lock().unwrap_or_else(|e| e.into_inner());
         if !taken.insert(number) {
             return Err(Error::DisplayInUse(number));
         }
@@ -60,7 +60,7 @@ impl DisplayRegistry {
 
     /// Probe upward from `start` for a free number (`-a` behaviour).
     pub fn bind_auto(&self, start: u32) -> Result<DisplayHandle> {
-        let mut taken = self.taken.lock().expect("registry poisoned");
+        let mut taken = self.taken.lock().unwrap_or_else(|e| e.into_inner());
         let mut n = start;
         while taken.contains(&n) {
             n += 1;
@@ -73,7 +73,7 @@ impl DisplayRegistry {
     }
 
     pub fn in_use(&self) -> usize {
-        self.taken.lock().expect("registry poisoned").len()
+        self.taken.lock().unwrap_or_else(|e| e.into_inner()).len()
     }
 }
 
@@ -115,6 +115,7 @@ impl XvfbRun {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

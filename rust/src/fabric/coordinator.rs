@@ -18,8 +18,28 @@
 //! * the final dataset is assembled by the *same* ledger+disk walk the
 //!   single-process driver uses ([`assemble_aggregate`]), which is what
 //!   makes the distributed aggregate byte-identical to the local one.
+//!
+//! # Lock discipline (xtask lint: `lock-discipline`)
+//!
+//! Two mutexes, never nested:
+//!
+//! * the **dispatch mutex** ([`Shared`]) serializes lease grants,
+//!   queue movement, and stats.  Every worker connection and the
+//!   reaper contend on it, so nothing blocking may run under it — no
+//!   ledger fsync, no CSV publish, no socket write, no telemetry
+//!   emit.  `cargo run -p xtask -- lint` rejects this file otherwise.
+//! * the **ledger mutex** serializes the append-fsync file I/O alone.
+//!
+//! Settlement therefore runs in three phases: *claim* the run under
+//! the dispatch mutex (duplicate guard + `settling` marker), do the
+//! durable work under the ledger mutex only, then *finalize* the
+//! bookkeeping under the dispatch mutex again.  The `settling` set and
+//! the `dispatching` counter keep the accept loop from declaring the
+//! campaign settled while a claim's I/O is still in flight — the
+//! same in-limbo race PR 8 closed for revoke/requeue, held machine-
+//! checked instead of reviewer-checked.
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex, MutexGuard};
@@ -104,13 +124,14 @@ pub struct FabricOutcome {
     pub fabric: FabricStats,
 }
 
-/// Mutable campaign state every connection handler and the reaper
-/// share.  One mutex: dispatch decisions, ledger writes, and stats all
-/// serialize, which is exactly the consistency the ledger needs.
+/// Mutable dispatch state every connection handler and the reaper
+/// share.  This mutex serializes *decisions only* — the durable ledger
+/// lives behind its own mutex and is never touched while this one is
+/// held (see the module-level lock-discipline notes).
 struct Shared {
-    ledger: CampaignLedger,
     /// Unsettled run indices awaiting dispatch.  Invariant: every
-    /// unsettled index is in the queue or covered by a live lease.
+    /// unsettled index is in the queue, covered by a live lease, mid
+    /// dispatch (`dispatching`), or mid settlement (`settling`).
     queue: VecDeque<u64>,
     leases: LeaseTable,
     stats: RobustnessStats,
@@ -120,9 +141,44 @@ struct Shared {
     stopping: bool,
     /// First unrecoverable handler error (ledger write failure).
     fatal: Option<String>,
+    /// run_ids with a durable `completed` ledger record — the
+    /// in-memory side of the duplicate guard, so settlement decisions
+    /// never read the ledger file under this mutex.
+    completed: HashSet<String>,
+    /// run_ids claimed by an in-flight settlement whose ledger/CSV I/O
+    /// is running outside this mutex.  A second result for the same
+    /// run is a duplicate while its claim is open, and the accept loop
+    /// must not declare the campaign settled while any claim is open.
+    settling: HashSet<String>,
+    /// Indices popped from the queue whose lease grant has not landed
+    /// yet (the handler is materializing the plan outside this mutex).
+    dispatching: u32,
 }
 
 impl Shared {
+    /// True when no work is queued, leased, mid-dispatch, or mid
+    /// settlement — the accept loop's exit predicate.  Every phase of
+    /// the dispatch/settle protocols keeps its run covered by exactly
+    /// one of these four, so this can never report "settled" while a
+    /// claim's durable I/O is still in flight.
+    fn settled_idle(&self) -> bool {
+        self.queue.is_empty()
+            && self.leases.is_empty()
+            && self.settling.is_empty()
+            && self.dispatching == 0
+    }
+
+    /// Claim `run_id` for settlement.  Returns false when the run is
+    /// already settled or another settlement of it is in flight — the
+    /// duplicate-guard decision, made without touching the ledger.
+    fn begin_settlement(&mut self, run_id: &str) -> bool {
+        if self.completed.contains(run_id) || self.settling.contains(run_id) {
+            return false;
+        }
+        self.settling.insert(run_id.to_string());
+        true
+    }
+
     fn settle_check(&mut self, stop_after: Option<u64>) {
         if let Some(stop) = stop_after {
             if self.accepted_this_session >= stop {
@@ -136,6 +192,13 @@ fn lock(shared: &Mutex<Shared>) -> MutexGuard<'_, Shared> {
     shared.lock().unwrap_or_else(|p| p.into_inner())
 }
 
+/// The ledger's own mutex — serializes append-fsync I/O only.  Never
+/// call this while a [`lock`] guard is live (the xtask lint enforces
+/// the ordering).
+fn lock_ledger(ledger: &Mutex<CampaignLedger>) -> MutexGuard<'_, CampaignLedger> {
+    ledger.lock().unwrap_or_else(|p| p.into_inner())
+}
+
 /// A bound, resumable campaign coordinator.
 pub struct Coordinator {
     spec: Arc<SupervisedCampaignSpec>,
@@ -145,6 +208,7 @@ pub struct Coordinator {
     runs_dir: PathBuf,
     hash: String,
     shared: Arc<Mutex<Shared>>,
+    ledger: Arc<Mutex<CampaignLedger>>,
 }
 
 impl Coordinator {
@@ -161,6 +225,7 @@ impl Coordinator {
         let registry = FamilyRegistry::builtin();
         let mut queue = VecDeque::new();
         let mut stats = RobustnessStats::default();
+        let mut completed = HashSet::new();
         for idx in 0..spec.total_runs() {
             let plan = plan_run(&spec, &registry, idx)?;
             let settled = match ledger.state(&plan.run_id).map(|e| &e.state) {
@@ -173,11 +238,12 @@ impl Coordinator {
                 _ => None,
             };
             match settled {
-                Some(completed) => {
+                Some(completed_run) => {
                     stats.runs += 1;
                     stats.resumed_skips += 1;
-                    if completed {
+                    if completed_run {
                         stats.completed += 1;
+                        completed.insert(plan.run_id.clone());
                     } else {
                         stats.failed += 1;
                     }
@@ -192,7 +258,6 @@ impl Coordinator {
 
         let hash = spec_hash(&spec);
         let shared = Shared {
-            ledger,
             queue,
             leases: LeaseTable::new(Duration::from_millis(cfg.lease_ttl_ms)),
             stats,
@@ -201,6 +266,9 @@ impl Coordinator {
             accepted_this_session: 0,
             stopping: false,
             fatal: None,
+            completed,
+            settling: HashSet::new(),
+            dispatching: 0,
         };
         Ok(Coordinator {
             spec: Arc::new(spec),
@@ -210,6 +278,7 @@ impl Coordinator {
             runs_dir,
             hash,
             shared: Arc::new(Mutex::new(shared)),
+            ledger: Arc::new(Mutex::new(ledger)),
         })
     }
 
@@ -224,6 +293,7 @@ impl Coordinator {
         let spec = self.spec;
         let cfg = self.cfg;
         let shared = self.shared;
+        let ledger = self.ledger;
 
         if telemetry::enabled() {
             telemetry::emit(EventKind::CampaignBegin {
@@ -241,16 +311,27 @@ impl Coordinator {
             let sweep = Duration::from_millis((cfg.lease_ttl_ms / 4).max(5));
             std::thread::spawn(move || loop {
                 std::thread::sleep(sweep);
-                let mut g = lock(&shared);
-                if g.stopping {
-                    return;
-                }
-                for lease in g.leases.expired(Instant::now()) {
-                    if !g.ledger.is_completed(&lease.run_id) {
-                        g.queue.push_back(lease.idx);
+                // requeue decisions use the in-memory completed set, so
+                // the whole sweep is pure bookkeeping; events fire
+                // after the guard is gone
+                let expired = {
+                    let mut g = lock(&shared);
+                    if g.stopping {
+                        return;
                     }
-                    g.fabric.leases_expired += 1;
-                    if telemetry::enabled() {
+                    let expired = g.leases.expired(Instant::now());
+                    for lease in &expired {
+                        if !g.completed.contains(&lease.run_id)
+                            && !g.settling.contains(&lease.run_id)
+                        {
+                            g.queue.push_back(lease.idx);
+                        }
+                        g.fabric.leases_expired += 1;
+                    }
+                    expired
+                };
+                if telemetry::enabled() {
+                    for lease in &expired {
                         telemetry::emit(EventKind::LeaseExpired {
                             run_id: lease.run_id.clone(),
                             worker: lease.worker.clone(),
@@ -269,7 +350,7 @@ impl Coordinator {
                 if g.stopping {
                     break;
                 }
-                if g.queue.is_empty() && g.leases.is_empty() {
+                if g.settled_idle() {
                     g.stopping = true;
                     break;
                 }
@@ -279,6 +360,7 @@ impl Coordinator {
                     conn_seq += 1;
                     let ctx = ConnCtx {
                         shared: Arc::clone(&shared),
+                        ledger: Arc::clone(&ledger),
                         spec: Arc::clone(&spec),
                         cfg: cfg.clone(),
                         runs_dir: self.runs_dir.clone(),
@@ -307,10 +389,13 @@ impl Coordinator {
         let shared = Arc::try_unwrap(shared)
             .map_err(|_| Error::Protocol("fabric shared state still referenced".into()))?;
         let shared = shared.into_inner().unwrap_or_else(|p| p.into_inner());
+        let ledger = Arc::try_unwrap(ledger)
+            .map_err(|_| Error::Protocol("fabric ledger still referenced".into()))?;
+        let ledger = ledger.into_inner().unwrap_or_else(|p| p.into_inner());
         if let Some(msg) = shared.fatal {
             return Err(Error::Config(format!("fabric coordinator: {msg}")));
         }
-        let interrupted = !(shared.queue.is_empty() && shared.leases.is_empty());
+        let interrupted = !shared.settled_idle();
 
         if telemetry::enabled() {
             telemetry::emit(EventKind::CampaignEnd {
@@ -322,7 +407,7 @@ impl Coordinator {
         }
 
         let registry = FamilyRegistry::builtin();
-        let dataset = assemble_aggregate(&spec, &registry, &shared.ledger, &self.runs_dir)?;
+        let dataset = assemble_aggregate(&spec, &registry, &ledger, &self.runs_dir)?;
         let result = crate::pipeline::campaign::supervised_result(
             shared.stats,
             &shared.walltimes_s,
@@ -341,6 +426,7 @@ impl Coordinator {
 /// Everything one connection handler needs.
 struct ConnCtx {
     shared: Arc<Mutex<Shared>>,
+    ledger: Arc<Mutex<CampaignLedger>>,
     spec: Arc<SupervisedCampaignSpec>,
     cfg: FabricConfig,
     runs_dir: PathBuf,
@@ -407,14 +493,11 @@ fn serve_worker(stream: &mut TcpStream, ctx: &ConnCtx) -> Result<()> {
     // connection-unique key: a reconnect gets a fresh identity, so this
     // handler can never revoke a newer connection's leases on exit
     let key = format!("{worker}#{}", ctx.conn_seq);
-    {
-        let mut g = lock(&ctx.shared);
-        g.fabric.workers_joined += 1;
-        if telemetry::enabled() {
-            telemetry::emit(EventKind::WorkerJoin {
-                worker: key.clone(),
-            });
-        }
+    lock(&ctx.shared).fabric.workers_joined += 1;
+    if telemetry::enabled() {
+        telemetry::emit(EventKind::WorkerJoin {
+            worker: key.clone(),
+        });
     }
     if write_msg(
         stream,
@@ -519,7 +602,7 @@ fn serve_worker(stream: &mut TcpStream, ctx: &ConnCtx) -> Result<()> {
         let mut g = lock(&ctx.shared);
         let revoked = g.leases.revoke_worker(&key);
         for lease in &revoked {
-            if !g.ledger.is_completed(&lease.run_id) {
+            if !g.completed.contains(&lease.run_id) && !g.settling.contains(&lease.run_id) {
                 g.queue.push_back(lease.idx);
             }
             g.fabric.leases_expired += 1;
@@ -552,26 +635,58 @@ fn leave(ctx: &ConnCtx, key: &str, reason: &str) {
 /// Pick the next frame to answer a work request with: a lease on the
 /// head of the queue, Wait while everything is out on other leases, or
 /// Drain when the campaign is settled / stopping.
+///
+/// Dispatch protocol: pop the index and raise `dispatching` under the
+/// mutex, materialize the plan and write the durable `running` record
+/// with the mutex released, grant the lease (and lower `dispatching`)
+/// under the mutex again.  The counter keeps the popped index covered
+/// so the accept loop cannot exit mid-dispatch.
 fn next_assignment(ctx: &ConnCtx, registry: &FamilyRegistry, key: &str) -> Result<Msg> {
-    let mut g = lock(&ctx.shared);
-    if g.stopping {
-        return Ok(Msg::Drain);
-    }
-    let Some(idx) = g.queue.pop_front() else {
-        return Ok(if g.leases.is_empty() {
-            Msg::Drain
-        } else {
-            Msg::Wait {
-                ms: ctx.cfg.heartbeat_ms,
+    let idx = {
+        let mut g = lock(&ctx.shared);
+        if g.stopping {
+            return Ok(Msg::Drain);
+        }
+        match g.queue.pop_front() {
+            Some(idx) => {
+                g.dispatching += 1;
+                idx
             }
-        });
+            None => {
+                return Ok(if g.settled_idle() {
+                    Msg::Drain
+                } else {
+                    Msg::Wait {
+                        ms: ctx.cfg.heartbeat_ms,
+                    }
+                });
+            }
+        }
     };
+    // plan materialization is pure but not cheap — outside the mutex
     match plan_run(&ctx.spec, registry, idx) {
         Ok(plan) => {
-            let lease = g.leases.grant(idx, &plan.run_id, key, Instant::now());
-            g.ledger
-                .mark_running(&plan.run_id, plan.epoch, plan.slot, lease.attempt)?;
-            g.fabric.leases_granted += 1;
+            let lease = {
+                let mut g = lock(&ctx.shared);
+                g.dispatching -= 1;
+                if g.stopping {
+                    g.queue.push_front(idx);
+                    return Ok(Msg::Drain);
+                }
+                let lease = g.leases.grant(idx, &plan.run_id, key, Instant::now());
+                g.fabric.leases_granted += 1;
+                lease
+            };
+            // the durable `running` record: the lease covers the index
+            // while this fsync runs, so nothing is in limbo, and the
+            // worker cannot race its own record — it learns about the
+            // lease only from the reply frame written after this.
+            lock_ledger(&ctx.ledger).mark_running(
+                &plan.run_id,
+                plan.epoch,
+                plan.slot,
+                lease.attempt,
+            )?;
             if telemetry::enabled() {
                 telemetry::emit(EventKind::RunBegin {
                     run_id: plan.run_id.clone(),
@@ -597,7 +712,7 @@ fn next_assignment(ctx: &ConnCtx, registry: &FamilyRegistry, key: &str) -> Resul
             // as a permanent failure instead of bouncing it forever
             let (epoch, slot, _) = grid(&ctx.spec, idx);
             let run_id = format!("{}-e{epoch}[{slot}]", ctx.spec.name);
-            g.ledger.mark_failed(
+            lock_ledger(&ctx.ledger).mark_failed(
                 &run_id,
                 epoch,
                 slot,
@@ -605,6 +720,8 @@ fn next_assignment(ctx: &ConnCtx, registry: &FamilyRegistry, key: &str) -> Resul
                 ErrorClass::Permanent.name(),
                 &e.to_string(),
             )?;
+            let mut g = lock(&ctx.shared);
+            g.dispatching -= 1;
             g.stats.runs += 1;
             g.stats.failed += 1;
             Ok(Msg::Wait { ms: 10 })
@@ -623,42 +740,58 @@ fn settle_completion(
     degraded: bool,
     csv: &str,
 ) -> Result<()> {
-    let mut g = lock(&ctx.shared);
-    let released = g.leases.release(lease);
-    // the ledger's duplicate guard: a zombie's late result for a run
-    // someone else already settled is rejected, idempotently
-    if g.ledger.is_completed(run_id) {
-        g.fabric.completions_rejected += 1;
-        if telemetry::enabled() {
-            telemetry::emit(EventKind::CompletionRejected {
-                run_id: run_id.to_string(),
-                worker: key.to_string(),
-            });
+    // phase 1 — claim under the dispatch mutex: duplicate guard + the
+    // `settling` marker that keeps the run covered during the I/O
+    let walltime_s = {
+        let mut g = lock(&ctx.shared);
+        let released = g.leases.release(lease);
+        if !g.begin_settlement(run_id) {
+            g.fabric.completions_rejected += 1;
+            drop(g);
+            if telemetry::enabled() {
+                telemetry::emit(EventKind::CompletionRejected {
+                    run_id: run_id.to_string(),
+                    worker: key.to_string(),
+                });
+            }
+            return Ok(());
         }
-        return Ok(());
-    }
+        released.map(|l| l.granted.elapsed().as_secs_f64())
+    };
+
+    // phase 2 — durable work, dispatch mutex released: CSV lands fully
+    // before the `completed` record, same crash discipline as the
+    // local driver; both writes serialize on the ledger mutex alone
     let (epoch, slot, _) = grid(&ctx.spec, idx);
-    // CSV lands fully before the `completed` record — same crash
-    // discipline as the local driver
-    publish_run_csv(&ctx.runs_dir, epoch, slot, csv)?;
-    g.ledger
-        .mark_completed(run_id, epoch, slot, attempts as u32, degraded)?;
-    // the reaper may have re-queued this idx while the worker was
-    // silent; the accepted result settles it for good
-    g.queue.retain(|&i| i != idx);
-    g.stats.runs += 1;
-    g.stats.completed += 1;
-    g.stats.attempts += attempts;
-    g.stats.retries += attempts.saturating_sub(1);
-    if degraded {
-        g.stats.degraded += 1;
+    let durable = publish_run_csv(&ctx.runs_dir, epoch, slot, csv).and_then(|()| {
+        lock_ledger(&ctx.ledger).mark_completed(run_id, epoch, slot, attempts as u32, degraded)
+    });
+
+    // phase 3 — finalize under the dispatch mutex: the claim closes
+    // whether or not the I/O succeeded (an I/O error is fatal for the
+    // whole coordinator anyway)
+    {
+        let mut g = lock(&ctx.shared);
+        g.settling.remove(run_id);
+        durable?;
+        g.completed.insert(run_id.to_string());
+        // the reaper may have re-queued this idx while the worker was
+        // silent; the accepted result settles it for good
+        g.queue.retain(|&i| i != idx);
+        g.stats.runs += 1;
+        g.stats.completed += 1;
+        g.stats.attempts += attempts;
+        g.stats.retries += attempts.saturating_sub(1);
+        if degraded {
+            g.stats.degraded += 1;
+        }
+        g.fabric.completions_accepted += 1;
+        if let Some(w) = walltime_s {
+            g.walltimes_s.push(w);
+        }
+        g.accepted_this_session += 1;
+        g.settle_check(ctx.cfg.stop_after_completions);
     }
-    g.fabric.completions_accepted += 1;
-    if let Some(l) = &released {
-        g.walltimes_s.push(l.granted.elapsed().as_secs_f64());
-    }
-    g.accepted_this_session += 1;
-    g.settle_check(ctx.cfg.stop_after_completions);
     if telemetry::enabled() {
         telemetry::emit(EventKind::RunEnd {
             run_id: run_id.to_string(),
@@ -681,27 +814,38 @@ fn settle_failure(
     class: &str,
     error: &str,
 ) -> Result<()> {
-    let mut g = lock(&ctx.shared);
-    g.leases.release(lease);
-    if g.ledger.is_completed(run_id) {
-        g.fabric.completions_rejected += 1;
-        if telemetry::enabled() {
-            telemetry::emit(EventKind::CompletionRejected {
-                run_id: run_id.to_string(),
-                worker: key.to_string(),
-            });
+    // same three-phase protocol as settle_completion
+    {
+        let mut g = lock(&ctx.shared);
+        g.leases.release(lease);
+        if !g.begin_settlement(run_id) {
+            g.fabric.completions_rejected += 1;
+            drop(g);
+            if telemetry::enabled() {
+                telemetry::emit(EventKind::CompletionRejected {
+                    run_id: run_id.to_string(),
+                    worker: key.to_string(),
+                });
+            }
+            return Ok(());
         }
-        return Ok(());
     }
+
     let (epoch, slot, _) = grid(&ctx.spec, idx);
-    g.ledger
-        .mark_failed(run_id, epoch, slot, attempts as u32, class, error)?;
-    g.queue.retain(|&i| i != idx);
-    g.stats.runs += 1;
-    g.stats.failed += 1;
-    g.stats.attempts += attempts;
-    g.stats.retries += attempts.saturating_sub(1);
-    g.fabric.remote_failures += 1;
+    let durable =
+        lock_ledger(&ctx.ledger).mark_failed(run_id, epoch, slot, attempts as u32, class, error);
+
+    {
+        let mut g = lock(&ctx.shared);
+        g.settling.remove(run_id);
+        durable?;
+        g.queue.retain(|&i| i != idx);
+        g.stats.runs += 1;
+        g.stats.failed += 1;
+        g.stats.attempts += attempts;
+        g.stats.retries += attempts.saturating_sub(1);
+        g.fabric.remote_failures += 1;
+    }
     if telemetry::enabled() {
         telemetry::emit(EventKind::RunEnd {
             run_id: run_id.to_string(),
@@ -711,4 +855,90 @@ fn settle_failure(
         });
     }
     Ok(())
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn shared() -> Shared {
+        Shared {
+            queue: VecDeque::new(),
+            leases: LeaseTable::new(Duration::from_millis(100)),
+            stats: RobustnessStats::default(),
+            fabric: FabricStats::default(),
+            walltimes_s: Vec::new(),
+            accepted_this_session: 0,
+            stopping: false,
+            fatal: None,
+            completed: HashSet::new(),
+            settling: HashSet::new(),
+            dispatching: 0,
+        }
+    }
+
+    /// The duplicate guard must reject a second result for a run while
+    /// the first settlement's ledger I/O is still in flight — the
+    /// window the three-phase protocol opened by moving that I/O
+    /// outside the dispatch mutex.
+    #[test]
+    fn settlement_claim_is_exclusive() {
+        let mut g = shared();
+        assert!(g.begin_settlement("demo-e0[0]"), "first claim wins");
+        assert!(
+            !g.begin_settlement("demo-e0[0]"),
+            "concurrent duplicate must be rejected while the claim is open"
+        );
+        // finalize: claim closes, run becomes durably completed
+        g.settling.remove("demo-e0[0]");
+        g.completed.insert("demo-e0[0]".to_string());
+        assert!(
+            !g.begin_settlement("demo-e0[0]"),
+            "zombie result after settlement must be rejected"
+        );
+        // an unrelated run is unaffected
+        assert!(g.begin_settlement("demo-e0[1]"));
+    }
+
+    /// The accept loop's exit predicate must treat in-flight
+    /// settlements and mid-dispatch pops as live work: with the ledger
+    /// fsync outside the dispatch mutex, `queue.is_empty() &&
+    /// leases.is_empty()` alone would declare the campaign settled
+    /// while a result is mid-write (the PR 8 limbo race, reborn).
+    #[test]
+    fn open_claims_keep_the_session_unsettled() {
+        let mut g = shared();
+        assert!(g.settled_idle(), "empty state is settled");
+
+        g.queue.push_back(3);
+        assert!(!g.settled_idle(), "queued work");
+        let idx = g.queue.pop_front().unwrap();
+        g.dispatching += 1;
+        assert!(!g.settled_idle(), "popped but not yet granted");
+        g.dispatching -= 1;
+        let lease = g.leases.grant(idx, "demo-e0[3]", "w#1", Instant::now());
+        assert!(!g.settled_idle(), "leased work");
+
+        g.leases.release(lease.id);
+        assert!(g.begin_settlement("demo-e0[3]"));
+        assert!(!g.settled_idle(), "claim open: ledger write in flight");
+        g.settling.remove("demo-e0[3]");
+        g.completed.insert("demo-e0[3]".to_string());
+        assert!(g.settled_idle(), "claim closed: campaign settled");
+    }
+
+    /// The reaper must not re-queue an index whose run is mid
+    /// settlement — the accepted result settles it for good.
+    #[test]
+    fn reaper_skips_runs_mid_settlement() {
+        let mut g = shared();
+        let lease = g.leases.grant(7, "demo-e1[3]", "w#1", Instant::now());
+        // worker reports the result: lease released, claim opened
+        g.leases.release(lease.id);
+        assert!(g.begin_settlement("demo-e1[3]"));
+        // the reaper's requeue predicate (mirrors the sweep in run())
+        let requeue = !g.completed.contains("demo-e1[3]") && !g.settling.contains("demo-e1[3]");
+        assert!(!requeue, "mid-settlement run must not be re-dispatched");
+    }
 }

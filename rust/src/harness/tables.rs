@@ -42,7 +42,11 @@ pub fn table_5_1() -> Result<Table51> {
         .zip(&pc.samples)
         .map(|(c, p)| (c.minutes, p.completed, c.completed))
         .collect::<Vec<_>>();
-    let last = rows.last().expect("samples non-empty");
+    let Some(last) = rows.last() else {
+        return Err(crate::Error::Config(
+            "table 5.1: campaign produced no throughput samples".into(),
+        ));
+    };
     Ok(Table51 {
         speedup: last.2 as f64 / last.1.max(1) as f64,
         rows,

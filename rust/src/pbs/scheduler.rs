@@ -221,24 +221,33 @@ impl Scheduler {
                     pick
                 }
             };
-            let p = self.pending.remove(i).expect("index in range");
+            let Some(p) = self.pending.remove(i) else {
+                break; // unreachable: `i < len` is the loop guard
+            };
             self.start(p, node);
             // restart the scan: resources changed
             i = 0;
         }
     }
 
+    /// Start `p` on `node` (a candidate that fits).  The impossible
+    /// paths — candidate refuses the allocation, workload vanished —
+    /// settle the subjob as Failed instead of panicking: a scheduler
+    /// that aborts mid-simulation loses the whole virtual campaign.
     fn start(&mut self, p: Pending, node: usize) {
-        let alloc = self
-            .cluster
-            .allocate_on(node, p.demand)
-            .expect("candidate node must fit");
+        let Ok(alloc) = self.cluster.allocate_on(node, p.demand) else {
+            self.states.insert(p.sub, JobState::Failed);
+            self.stats.failed += 1;
+            return;
+        };
         let node_spec: NodeSpec = self.cluster.node(node).spec.clone();
-        let usage = self
-            .workloads
-            .get_mut(&p.sub.job)
-            .expect("workload registered at submit")
-            .usage(p.sub, &node_spec, &p.demand);
+        let Some(workload) = self.workloads.get_mut(&p.sub.job) else {
+            let _ = self.cluster.release_on(node, alloc);
+            self.states.insert(p.sub, JobState::Failed);
+            self.stats.failed += 1;
+            return;
+        };
+        let usage = workload.usage(p.sub, &node_spec, &p.demand);
         let now = self.clock.now();
         let finish_at = now + usage.walltime;
         let kill_at = now + p.walltime;
@@ -270,7 +279,9 @@ impl Scheduler {
             if t > until {
                 break;
             }
-            let ev = self.events.pop().expect("peeked");
+            let Some(ev) = self.events.pop() else {
+                break; // unreachable: peek_time just saw an event
+            };
             self.clock.advance_to(ev.at);
             match ev.payload {
                 SchedEvent::Finish(sub) => self.finish(sub, JobState::Completed),
@@ -284,7 +295,9 @@ impl Scheduler {
     /// Run until every submitted subjob reached a terminal state.
     pub fn run_to_completion(&mut self) {
         while let Some(t) = self.events.peek_time() {
-            let ev = self.events.pop().expect("peeked");
+            let Some(ev) = self.events.pop() else {
+                break; // unreachable: peek_time just saw an event
+            };
             self.clock.advance_to(t);
             match ev.payload {
                 SchedEvent::Finish(sub) => self.finish(sub, JobState::Completed),
@@ -299,9 +312,9 @@ impl Scheduler {
             Some(r) => r,
             None => return, // stale event (already finished)
         };
-        self.cluster
-            .release_on(r.node, r.alloc)
-            .expect("allocation tracked");
+        // a release can only fail for an untracked allocation; leaking
+        // the (virtual) resources beats aborting the simulation
+        let _ = self.cluster.release_on(r.node, r.alloc);
         self.states.insert(sub, state);
         match state {
             JobState::Completed => self.stats.completed += 1,

@@ -216,8 +216,8 @@ pub fn run_cluster_campaign(spec: &CampaignSpec) -> Result<CampaignResult> {
             .with_array(ArrayRange::new(1, spec.instances_per_epoch())?);
         let workload = SimWorkload::new(spec.cost, spec.seed.wrapping_add(epoch));
         sched.submit(job, Box::new(workload))?;
-        for (i, &o) in sched.occupancy().iter().enumerate() {
-            peak_occupancy[i] = peak_occupancy[i].max(o);
+        for (peak, &o) in peak_occupancy.iter_mut().zip(sched.occupancy().iter()) {
+            *peak = (*peak).max(o);
         }
     }
     let end = SimInstant::ZERO + spec.duration;
@@ -234,8 +234,11 @@ pub fn run_cluster_campaign(spec: &CampaignSpec) -> Result<CampaignResult> {
 
     let mut runs_per_node = vec![0u64; spec.nodes];
     for c in sched.completions() {
-        if c.state == crate::pbs::JobState::Completed {
-            runs_per_node[c.node] += 1;
+        if c.state != crate::pbs::JobState::Completed {
+            continue;
+        }
+        if let Some(n) = runs_per_node.get_mut(c.node) {
+            *n += 1;
         }
     }
 

@@ -218,6 +218,12 @@ impl CampaignLedger {
     }
 
     /// Record `run_id` entering attempt `attempt`.
+    ///
+    /// `Completed` is terminal: once a run has a durable completion
+    /// record, a late `running` write (a re-dispatch decided before
+    /// the completion settled, landing after it) is silently dropped —
+    /// otherwise replay would regress the run to `Running` and the
+    /// aggregate walk would drop its row.
     pub fn mark_running(
         &mut self,
         run_id: &str,
@@ -225,6 +231,9 @@ impl CampaignLedger {
         slot: u32,
         attempt: u32,
     ) -> Result<()> {
+        if self.is_completed(run_id) {
+            return Ok(());
+        }
         let record = base_record(run_id, epoch, slot, "running")
             .with("attempt", Json::num(attempt as f64));
         self.append(
@@ -262,6 +271,9 @@ impl CampaignLedger {
     }
 
     /// Record terminal failure with its error class and message.
+    ///
+    /// Like [`mark_running`](Self::mark_running), this never regresses
+    /// a `Completed` run: completion is terminal.
     pub fn mark_failed(
         &mut self,
         run_id: &str,
@@ -271,6 +283,9 @@ impl CampaignLedger {
         class: &str,
         error: &str,
     ) -> Result<()> {
+        if self.is_completed(run_id) {
+            return Ok(());
+        }
         let record = base_record(run_id, epoch, slot, "failed")
             .with("attempts", Json::num(attempts as f64))
             .with("class", Json::str(class))
@@ -384,6 +399,39 @@ mod tests {
         let path = dir.join(format!("{name}_{}.jsonl", std::process::id()));
         let _ = std::fs::remove_file(&path);
         path
+    }
+
+    /// Completed is terminal: late `running`/`failed` writes for a run
+    /// that already settled (a fabric re-dispatch whose original result
+    /// landed first) must not regress the replayed state — in memory or
+    /// across reopen.
+    #[test]
+    fn completed_is_terminal() {
+        let path = tmp("terminal");
+        {
+            let mut l = CampaignLedger::open(&path).unwrap();
+            l.mark_running("a-e0[0]", 0, 0, 1).unwrap();
+            l.mark_completed("a-e0[0]", 0, 0, 1, false).unwrap();
+            l.mark_running("a-e0[0]", 0, 0, 2).unwrap();
+            l.mark_failed("a-e0[0]", 0, 0, 2, "transient", "zombie").unwrap();
+            assert!(l.is_completed("a-e0[0]"));
+            // a plain failed run can still be retried (resume contract)
+            l.mark_running("a-e0[1]", 0, 1, 1).unwrap();
+            l.mark_failed("a-e0[1]", 0, 1, 1, "transient", "boom").unwrap();
+            l.mark_running("a-e0[1]", 0, 1, 2).unwrap();
+            assert_eq!(
+                l.state("a-e0[1]").unwrap().state,
+                LedgerState::Running { attempt: 2 }
+            );
+        }
+        let l = CampaignLedger::open(&path).unwrap();
+        assert_eq!(
+            l.state("a-e0[0]").unwrap().state,
+            LedgerState::Completed {
+                attempts: 1,
+                degraded: false
+            }
+        );
     }
 
     #[test]

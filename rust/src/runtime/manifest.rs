@@ -367,6 +367,7 @@ impl Manifest {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::runtime::find_artifacts_dir;

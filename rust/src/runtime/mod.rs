@@ -11,6 +11,8 @@
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
 //! text parser reassigns ids (see `python/compile/aot.py`).
 
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 mod engine;
 mod manifest;
 mod pool;

@@ -12,11 +12,11 @@
 //! `format!` per call), the cache is behind a read-mostly `RwLock`, and
 //! the hit/miss counters are relaxed atomics instead of mutexes.
 
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 
 use crate::telemetry::metrics::{counter, Counter};
+use crate::util::SharedCache;
 use crate::Result;
 
 /// Cache key: artifact kernel name + vehicle-count bucket + fused-step
@@ -25,9 +25,11 @@ use crate::Result;
 /// per-dispatch lookup path.
 pub type PoolKey = (&'static str, usize, usize);
 
-/// Key → compiled executable cache.
+/// Key → compiled executable cache.  The probe/build/insert protocol
+/// lives in [`SharedCache`] (util/cache.rs), where the loom model in
+/// `rust/tests/loom_models.rs` checks it exhaustively.
 pub struct ExecutablePool {
-    cache: RwLock<HashMap<PoolKey, Arc<xla::PjRtLoadedExecutable>>>,
+    cache: SharedCache<PoolKey, xla::PjRtLoadedExecutable>,
     hits: AtomicU64,
     misses: AtomicU64,
     // the same counts folded into the process-global telemetry registry
@@ -48,7 +50,7 @@ impl Default for ExecutablePool {
 impl ExecutablePool {
     pub fn new() -> Self {
         ExecutablePool {
-            cache: RwLock::new(HashMap::new()),
+            cache: SharedCache::new(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             global_hits: counter("engine.pool.hits"),
@@ -69,18 +71,14 @@ impl ExecutablePool {
     where
         F: FnOnce() -> Result<xla::PjRtLoadedExecutable>,
     {
-        if let Some(exe) = self.cache.read().expect("pool poisoned").get(&key) {
+        let (exe, hit) = self.cache.get_or_try_insert(key, compile)?;
+        if hit {
             self.hits.fetch_add(1, Ordering::Relaxed);
             self.global_hits.inc();
-            return Ok(exe.clone());
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            self.global_misses.inc();
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        self.global_misses.inc();
-        let exe = Arc::new(compile()?);
-        self.cache
-            .write()
-            .expect("pool poisoned")
-            .insert(key, exe.clone());
         Ok(exe)
     }
 
@@ -93,7 +91,7 @@ impl ExecutablePool {
     }
 
     pub fn len(&self) -> usize {
-        self.cache.read().expect("pool poisoned").len()
+        self.cache.len()
     }
 
     pub fn is_empty(&self) -> bool {

@@ -159,7 +159,10 @@ impl FamilyRegistry {
     /// fail the run loudly and keep the dataset trustworthy.
     pub fn rebucket(&self, config: &mut ScenarioConfig) -> Result<()> {
         let expected = config.flows.total_expected_vehicles();
-        let largest = *self.buckets.last().expect("ladder never empty");
+        let largest = match self.buckets.last() {
+            Some(&b) => b,
+            None => return Err(Error::Config("registry bucket ladder is empty".into())),
+        };
         if bucket_need(expected) > largest as f32 {
             return Err(Error::Config(format!(
                 "scenario '{}' #{} expects ~{expected:.0} vehicles (needs \

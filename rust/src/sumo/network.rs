@@ -42,6 +42,9 @@ impl Network {
         if edge_ids.is_empty() {
             return Err(Error::Config("empty route".into()));
         }
+        for id in edge_ids {
+            self.edge(id)?;
+        }
         for pair in edge_ids.windows(2) {
             let a = self.edge(&pair[0])?;
             let b = self.edge(&pair[1])?;
@@ -52,7 +55,6 @@ impl Network {
                 )));
             }
         }
-        self.edge(edge_ids.last().expect("non-empty"))?;
         Ok(())
     }
 }

@@ -560,6 +560,7 @@ fn get_bool(j: &Json, key: &str) -> Result<bool> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

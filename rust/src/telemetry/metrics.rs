@@ -16,17 +16,32 @@
 //!   range with zero configuration — microseconds to hours.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+#[cfg(not(loom))]
+use std::sync::OnceLock;
 
+// primitives come from the facade so the loom models in
+// rust/tests/loom_models.rs exhaustively check this exact code
+use crate::util::sync::{Arc, AtomicI64, AtomicU64, Mutex, MutexGuard, Ordering};
 use crate::util::Json;
 
 /// Number of log2 buckets — enough for the whole `u64` range.
 pub const HIST_BUCKETS: usize = 64;
 
 /// A monotonically increasing counter (relaxed atomics throughout).
-#[derive(Debug, Default)]
+// Default/Debug are manual: loom's atomics don't promise std's derives.
 pub struct Counter(AtomicU64);
+
+impl Default for Counter {
+    fn default() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+}
+
+impl std::fmt::Debug for Counter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_tuple("Counter").field(&self.get()).finish()
+    }
+}
 
 impl Counter {
     pub fn inc(&self) {
@@ -43,8 +58,19 @@ impl Counter {
 }
 
 /// A last-value-wins gauge (e.g. queue depth, lane occupancy).
-#[derive(Debug, Default)]
 pub struct Gauge(AtomicI64);
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge(AtomicI64::new(0))
+    }
+}
+
+impl std::fmt::Debug for Gauge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_tuple("Gauge").field(&self.get()).finish()
+    }
+}
 
 impl Gauge {
     pub fn set(&self, v: i64) {
@@ -186,11 +212,20 @@ impl HistSnapshot {
 /// `service.lane.batch_size`, `supervisor.retry.count`) and hands out
 /// shared handles.  One mutex per instrument *kind*, taken only at
 /// registration — never on the record path.
-#[derive(Default)]
 pub struct Registry {
     counters: Mutex<BTreeMap<String, Arc<Counter>>>,
     gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
     histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry {
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            histograms: Mutex::new(BTreeMap::new()),
+        }
+    }
 }
 
 fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
@@ -201,29 +236,34 @@ fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 
 impl Registry {
     /// The process-global registry every instrumented subsystem shares.
+    /// (Not under loom: loom models need per-iteration state, and loom
+    /// has no `OnceLock` — models construct `Registry::default()`.)
+    #[cfg(not(loom))]
     pub fn global() -> &'static Registry {
         static GLOBAL: OnceLock<Registry> = OnceLock::new();
         GLOBAL.get_or_init(Registry::default)
     }
 
+    // explicit Arc::new over `or_default()`: loom's Arc doesn't
+    // promise a `Default` impl, and these build under both cfgs
     pub fn counter(&self, name: &str) -> Arc<Counter> {
         relock(&self.counters)
             .entry(name.to_string())
-            .or_default()
+            .or_insert_with(|| Arc::new(Counter::default()))
             .clone()
     }
 
     pub fn gauge(&self, name: &str) -> Arc<Gauge> {
         relock(&self.gauges)
             .entry(name.to_string())
-            .or_default()
+            .or_insert_with(|| Arc::new(Gauge::default()))
             .clone()
     }
 
     pub fn histogram(&self, name: &str) -> Arc<Histogram> {
         relock(&self.histograms)
             .entry(name.to_string())
-            .or_default()
+            .or_insert_with(|| Arc::new(Histogram::default()))
             .clone()
     }
 
@@ -246,16 +286,19 @@ impl Registry {
 }
 
 /// Shorthand for `Registry::global().counter(name)`.
+#[cfg(not(loom))]
 pub fn counter(name: &str) -> Arc<Counter> {
     Registry::global().counter(name)
 }
 
 /// Shorthand for `Registry::global().gauge(name)`.
+#[cfg(not(loom))]
 pub fn gauge(name: &str) -> Arc<Gauge> {
     Registry::global().gauge(name)
 }
 
 /// Shorthand for `Registry::global().histogram(name)`.
+#[cfg(not(loom))]
 pub fn histogram(name: &str) -> Arc<Histogram> {
     Registry::global().histogram(name)
 }
@@ -316,6 +359,7 @@ impl RegistrySnapshot {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

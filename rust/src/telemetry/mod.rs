@@ -22,29 +22,44 @@
 //! instrumentation stops at engine-*dispatch* granularity, and a
 //! disabled `emit()` is one relaxed atomic load.
 
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+// Only the metrics registry compiles under `--cfg loom` — the
+// histogram-exactness model in rust/tests/loom_models.rs checks it.
+#[cfg(not(loom))]
 pub mod events;
 pub mod metrics;
+#[cfg(not(loom))]
 pub mod report;
+#[cfg(not(loom))]
 pub mod sink;
+#[cfg(not(loom))]
 pub mod trace;
 
+#[cfg(not(loom))]
 pub use events::{Event, EventKind};
 pub use metrics::{
     Counter, Gauge, HistSnapshot, Histogram, Registry, RegistrySnapshot, HIST_BUCKETS,
 };
+#[cfg(not(loom))]
 pub use report::{summarize, DispatchStats, LaneUsage, Report};
+#[cfg(not(loom))]
 pub use sink::{
     emit, enabled, flush_all, install, merge_event_shards, read_events, uninstall, EventSink,
     JsonlSink, MemorySink,
 };
+#[cfg(not(loom))]
 pub use trace::{to_chrome_trace, ENGINE_PID};
 
+#[cfg(not(loom))]
 use std::sync::OnceLock;
+#[cfg(not(loom))]
 use std::time::Instant;
 
 /// Microseconds since the process's telemetry epoch (the first call).
 /// Monotonic — safe to subtract — and shared by every event stamp so
 /// one campaign's streams are mutually ordered.
+#[cfg(not(loom))]
 pub fn now_us() -> u64 {
     static EPOCH: OnceLock<Instant> = OnceLock::new();
     EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64

@@ -284,6 +284,7 @@ pub fn summarize(events: &[Event]) -> Report {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::telemetry::Event;

@@ -216,6 +216,7 @@ pub fn merge_event_shards(paths: &[impl AsRef<Path>]) -> Result<Vec<Event>> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::util::TempDir;

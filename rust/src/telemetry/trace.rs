@@ -266,6 +266,7 @@ pub fn to_chrome_trace(events: &[Event]) -> Json {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -11,6 +11,8 @@
 //! * [`server`] — the SUMO-side listener (one per simulation instance),
 //! * [`client`] — the Webots-side connector.
 
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
 pub mod client;
 pub mod protocol;
 pub mod server;

@@ -89,7 +89,7 @@ impl Command {
                     )));
                 }
                 Command::SimStepN {
-                    n: u32::from_le_bytes(rest[0..4].try_into().expect("len checked")),
+                    n: le_u32(rest, 0)?,
                 }
             }
             0x10 => Command::GetVehicleCount,
@@ -102,8 +102,8 @@ impl Command {
                     )));
                 }
                 Command::SetSpeed {
-                    slot: u32::from_le_bytes(rest[0..4].try_into().expect("len checked")),
-                    speed: f32::from_le_bytes(rest[4..8].try_into().expect("len checked")),
+                    slot: le_u32(rest, 0)?,
+                    speed: le_f32(rest, 4)?,
                 }
             }
             0x12 => Command::GetTotals,
@@ -227,70 +227,86 @@ impl Response {
             0x80 => {
                 need(8)?;
                 Response::Version {
-                    major: u32::from_le_bytes(r[0..4].try_into().expect("len checked")),
-                    minor: u32::from_le_bytes(r[4..8].try_into().expect("len checked")),
+                    major: le_u32(r, 0)?,
+                    minor: le_u32(r, 4)?,
                 }
             }
             0x82 => {
                 need(OBS_STRIDE * 4)?;
-                let f = |o: usize| f32::from_le_bytes(r[o..o + 4].try_into().expect("len checked"));
                 Response::Stepped {
-                    n_active: f(0),
-                    mean_speed: f(4),
-                    flow: f(8),
-                    n_merged: f(12),
-                    n_exited: f(16),
+                    n_active: le_f32(r, 0)?,
+                    mean_speed: le_f32(r, 4)?,
+                    flow: le_f32(r, 8)?,
+                    n_merged: le_f32(r, 12)?,
+                    n_exited: le_f32(r, 16)?,
                 }
             }
             0x83 => {
                 need(4)?;
-                let n = u32::from_le_bytes(r[0..4].try_into().expect("len checked")) as usize;
+                let n = le_u32(r, 0)? as usize;
                 need(4 + n * OBS_STRIDE * 4)?;
                 let obs = (0..n * OBS_STRIDE)
-                    .map(|i| {
-                        f32::from_le_bytes(
-                            r[4 + i * 4..8 + i * 4].try_into().expect("len checked"),
-                        )
-                    })
-                    .collect();
+                    .map(|i| le_f32(r, 4 + i * 4))
+                    .collect::<Result<_>>()?;
                 Response::SteppedN(obs)
             }
             0x90 => {
                 need(4)?;
-                Response::VehicleCount(u32::from_le_bytes(r[0..4].try_into().expect("len checked")))
+                Response::VehicleCount(le_u32(r, 0)?)
             }
             0x91 => {
                 need(4)?;
-                let n = u32::from_le_bytes(r[0..4].try_into().expect("len checked")) as usize;
+                let n = le_u32(r, 0)? as usize;
                 need(4 + n * 4)?;
                 let rows = (0..n)
-                    .map(|i| {
-                        f32::from_le_bytes(
-                            r[4 + i * 4..8 + i * 4].try_into().expect("len checked"),
-                        )
-                    })
-                    .collect();
+                    .map(|i| le_f32(r, 4 + i * 4))
+                    .collect::<Result<_>>()?;
                 Response::State(rows)
             }
             0xa0 => Response::Ok,
             0x92 => {
                 need(20)?;
                 Response::Totals {
-                    flow: f32::from_le_bytes(r[0..4].try_into().expect("len checked")),
-                    merged: f32::from_le_bytes(r[4..8].try_into().expect("len checked")),
-                    exited: f32::from_le_bytes(r[8..12].try_into().expect("len checked")),
-                    spawned: u64::from_le_bytes(r[12..20].try_into().expect("len checked")),
+                    flow: le_f32(r, 0)?,
+                    merged: le_f32(r, 4)?,
+                    exited: le_f32(r, 8)?,
+                    spawned: le_u64(r, 12)?,
                 }
             }
             0xff => Response::Closing,
             0xee => {
                 need(4)?;
-                let n = u32::from_le_bytes(r[0..4].try_into().expect("len checked")) as usize;
+                let n = le_u32(r, 0)? as usize;
                 need(4 + n)?;
                 Response::Err(String::from_utf8_lossy(&r[4..4 + n]).into_owned())
             }
             other => return Err(Error::Protocol(format!("unknown response opcode {other:#x}"))),
         })
+    }
+}
+
+/// Fallible little-endian field readers: these frames arrive off the
+/// wire, so a short slice is a protocol error, never a panic — even
+/// after a `need()` length check (the lint denies the panic path, and
+/// the check and the read can drift apart under maintenance).
+fn le_u32(buf: &[u8], at: usize) -> Result<u32> {
+    match buf.get(at..at + 4).and_then(|b| b.try_into().ok()) {
+        Some(b) => Ok(u32::from_le_bytes(b)),
+        None => Err(Error::Protocol(format!("short frame: no u32 at {at}"))),
+    }
+}
+
+fn le_u64(buf: &[u8], at: usize) -> Result<u64> {
+    match buf.get(at..at + 8).and_then(|b| b.try_into().ok()) {
+        Some(b) => Ok(u64::from_le_bytes(b)),
+        None => Err(Error::Protocol(format!("short frame: no u64 at {at}"))),
+    }
+}
+
+fn le_f32(buf: &[u8], at: usize) -> Result<f32> {
+    match buf.get(at..at + 4).and_then(|b| b.try_into().ok()) {
+        Some(b) => Ok(f32::from_le_bytes(b)),
+        None => Err(Error::Protocol(format!("short frame: no f32 at {at}"))),
     }
 }
 
@@ -316,6 +332,7 @@ pub fn read_frame<R: std::io::Read>(r: &mut R) -> Result<Vec<u8>> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -171,6 +171,7 @@ fn handle_client(mut stream: TcpStream, sim: &mut SumoSim) -> Result<()> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::sumo::{duarouter, FlowFile, MergeScenario, NativeIdmStepper, SumoSim};

@@ -1,0 +1,101 @@
+//! A read-mostly get-or-insert cache — the concurrency core of
+//! [`crate::runtime::ExecutablePool`], extracted so the loom model in
+//! `rust/tests/loom_models.rs` checks the code the hot path runs.
+//!
+//! Protocol (and why it's safe):
+//!
+//! 1. **read-lock probe** — the steady state; many readers, no
+//!    contention with other probes,
+//! 2. **build outside any lock** — construction (an HLO compile) is
+//!    slow, and other keys must not stall behind it,
+//! 3. **write-lock insert** — a racing double-build of the same key is
+//!    benign: last writer wins, both values are valid and both callers
+//!    keep the `Arc` they built, so nothing is ever torn or lost.
+//!
+//! Poisoned locks are recovered (`into_inner`): every write is a
+//! single whole-entry insert, so a panicked builder thread leaves the
+//! map structurally sound.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+use crate::util::sync::{Arc, RwLock};
+
+/// Key → `Arc<V>` cache with the probe/build/insert protocol above.
+pub struct SharedCache<K, V> {
+    map: RwLock<HashMap<K, Arc<V>>>,
+}
+
+impl<K: Eq + Hash, V> Default for SharedCache<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K: Eq + Hash, V> SharedCache<K, V> {
+    pub fn new() -> Self {
+        SharedCache {
+            map: RwLock::new(HashMap::new()),
+        }
+    }
+
+    /// The cached value for `key`, if present.
+    pub fn get(&self, key: &K) -> Option<Arc<V>> {
+        self.map
+            .read()
+            .unwrap_or_else(|e| e.into_inner())
+            .get(key)
+            .cloned()
+    }
+
+    /// Fetch `key`, building with `make` on miss.  Returns the value
+    /// plus whether it was a hit.  `make` runs outside any lock; on
+    /// `Err` nothing is inserted and the cache is unchanged.
+    pub fn get_or_try_insert<E, F>(&self, key: K, make: F) -> Result<(Arc<V>, bool), E>
+    where
+        F: FnOnce() -> Result<V, E>,
+    {
+        if let Some(v) = self.get(&key) {
+            return Ok((v, true));
+        }
+        let v = Arc::new(make()?);
+        self.map
+            .write()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(key, v.clone());
+        Ok((v, false))
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_miss_and_error_paths() {
+        let c: SharedCache<&str, u64> = SharedCache::new();
+        assert!(c.is_empty());
+        assert!(c.get(&"a").is_none());
+
+        let (v, hit) = c.get_or_try_insert::<(), _>("a", || Ok(7)).unwrap();
+        assert_eq!((*v, hit), (7, false));
+        let (v, hit) = c.get_or_try_insert::<(), _>("a", || Ok(999)).unwrap();
+        assert_eq!((*v, hit), (7, true), "hit returns the cached value");
+
+        // a failed build inserts nothing and doesn't wedge the key
+        assert!(c.get_or_try_insert::<&str, _>("b", || Err("boom")).is_err());
+        assert!(c.get(&"b").is_none());
+        let (v, hit) = c.get_or_try_insert::<(), _>("b", || Ok(8)).unwrap();
+        assert_eq!((*v, hit), (8, false));
+        assert_eq!(c.len(), 2);
+    }
+}

@@ -246,7 +246,7 @@ impl<'a> Parser<'a> {
             .ok_or_else(|| Error::Config("unexpected end of JSON".into()))
     }
 
-    fn expect(&mut self, b: u8) -> Result<()> {
+    fn expect_byte(&mut self, b: u8) -> Result<()> {
         if self.peek()? != b {
             return Err(Error::Config(format!(
                 "expected '{}' at byte {}, found '{}'",
@@ -280,7 +280,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek()? == b'}' {
@@ -291,7 +291,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             let v = self.value()?;
             m.insert(key, v);
             self.skip_ws();
@@ -312,7 +312,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut a = Vec::new();
         self.skip_ws();
         if self.peek()? == b']' {
@@ -339,7 +339,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut s = String::new();
         loop {
             let c = self.peek()?;

@@ -1,15 +1,19 @@
 //! Dependency-free utilities: a deterministic PRNG, a minimal JSON
-//! parser, and a test tempdir helper.
+//! parser, a test tempdir helper, the loom-checkable sync facade
+//! ([`sync`]) and the shared get-or-insert cache ([`cache`]).
 //!
 //! This repo builds fully offline against a vendored crate set that has
 //! no `rand`/`serde_json`/`tempfile`; these small, tested replacements
 //! cover the three needs (seeded randomization for duarouter/workloads,
 //! the artifact manifest, and filesystem tests).
 
+pub mod cache;
 pub mod json;
 pub mod rng;
+pub mod sync;
 pub mod tmp;
 
+pub use cache::SharedCache;
 pub use json::Json;
 pub use rng::Rng64;
 pub use tmp::TempDir;

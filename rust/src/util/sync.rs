@@ -1,0 +1,24 @@
+//! Sync-primitive facade: `std::sync` normally, `loom::sync` under
+//! `--cfg loom`.
+//!
+//! The control plane's concurrency-relevant types ([`crate::telemetry`]
+//! metrics, [`crate::util::cache`]) import their primitives from here
+//! instead of `std::sync`, so the loom models in
+//! `rust/tests/loom_models.rs` exhaustively model the *real* code, not
+//! a transliteration.  Normal builds see a pure re-export of std —
+//! zero cost, zero behavior change; `--cfg loom` builds swap in loom's
+//! instrumented twins (same API surface, including lock poisoning).
+//!
+//! Modules that stay std-only (everything gated `#[cfg(not(loom))]` in
+//! lib.rs) keep importing `std::sync` directly — the facade is for
+//! code that a loom model actually exercises.
+
+#[cfg(loom)]
+pub use loom::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+#[cfg(loom)]
+pub use loom::sync::{Arc, Mutex, MutexGuard, RwLock};
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Mutex, MutexGuard, RwLock};

@@ -141,9 +141,9 @@ impl World {
 
     /// Parse `.wbt` text.
     pub fn parse(text: &str) -> Result<World> {
-        let mut lines = text.lines().peekable();
-        let header = match lines.peek() {
-            Some(l) if l.starts_with("#VRML_SIM") => lines.next().expect("peeked").to_string(),
+        let mut lines = text.lines();
+        let header = match lines.next() {
+            Some(l) if l.starts_with("#VRML_SIM") => l.to_string(),
             _ => return Err(Error::World("missing #VRML_SIM header".into())),
         };
         let mut tokens: Vec<String> = Vec::new();

@@ -1,0 +1,235 @@
+//! Concurrency models for the control plane's three shared-state
+//! protocols (ISSUE 9):
+//!
+//! 1. **LeaseTable expire-vs-complete** — the coordinator's reaper and
+//!    a completing connection race for the same lease; exactly one
+//!    side may settle it (double-settlement is the bug class the
+//!    settlement-claim protocol in `fabric/coordinator.rs` exists to
+//!    stop at the layer above).
+//! 2. **Registry histogram/counter exactness** — concurrent `record`s
+//!    and racing handle registration must lose no sample (the §5
+//!    tables are integrals over these histograms; a lost sample is a
+//!    silently wrong table).
+//! 3. **SharedCache get-or-insert** — the executable pool's
+//!    probe/build/insert protocol: a racing double-build collapses to
+//!    one live entry and every caller gets a valid value.
+//!
+//! Two lanes, same invariants:
+//!
+//! * `RUSTFLAGS="--cfg loom" cargo test --release --test loom_models`
+//!   runs them as **loom models** — every interleaving, exhaustively
+//!   (check.sh's loom lane; needs the `loom` crate).
+//! * plain `cargo test` runs them as **real-thread stress tests** —
+//!   tier-1-visible, no extra dependencies.
+//!
+//! The lib compiles a reduced module set under loom (see lib.rs), and
+//! `util::sync` swaps std primitives for loom's — so the models check
+//! the exact code the campaign runs, not a transliteration.
+
+#[cfg(loom)]
+mod models {
+    use loom::sync::{Arc, Mutex};
+    use loom::thread;
+    use std::time::{Duration, Instant};
+
+    use webots_hpc::fabric::LeaseTable;
+    use webots_hpc::telemetry::metrics::Registry;
+    use webots_hpc::util::SharedCache;
+
+    #[test]
+    fn lease_expire_vs_complete_settles_exactly_once() {
+        loom::model(|| {
+            let base = Instant::now();
+            let ttl = Duration::from_millis(10);
+            let table = Arc::new(Mutex::new(LeaseTable::new(ttl)));
+            let id = table.lock().unwrap().grant(7, "c-e0[7]", "w1#1", base).id;
+
+            let reaper = {
+                let table = Arc::clone(&table);
+                thread::spawn(move || table.lock().unwrap().expired(base + ttl).len())
+            };
+            let completer = {
+                let table = Arc::clone(&table);
+                thread::spawn(move || usize::from(table.lock().unwrap().release(id).is_some()))
+            };
+            let reaped = reaper.join().unwrap();
+            let completed = completer.join().unwrap();
+
+            assert_eq!(reaped + completed, 1, "exactly one side settles the lease");
+            let mut t = table.lock().unwrap();
+            assert!(t.is_empty(), "no zombie lease survives the race");
+            // requeue after expiry: the attempt counter keeps rising, so
+            // the ledger's per-run attempt numbers stay monotonic
+            assert_eq!(t.grant(7, "c-e0[7]", "w2#1", base + ttl).attempt, 2);
+        });
+    }
+
+    #[test]
+    fn histogram_and_counter_recording_is_exact() {
+        loom::model(|| {
+            let reg = Arc::new(Registry::default());
+            let other = {
+                let reg = Arc::clone(&reg);
+                thread::spawn(move || {
+                    // handle registration itself races with the main
+                    // thread's — both must get the same instrument
+                    reg.histogram("m.lat").record(3);
+                    reg.counter("m.ops").inc();
+                })
+            };
+            reg.histogram("m.lat").record(1000);
+            reg.counter("m.ops").inc();
+            other.join().unwrap();
+
+            let snap = reg.snapshot();
+            let h = &snap.histograms["m.lat"];
+            assert_eq!(h.count, 2);
+            assert_eq!(h.sum, 1003);
+            assert_eq!(h.buckets.iter().sum::<u64>(), h.count);
+            assert_eq!(snap.counters["m.ops"], 2);
+        });
+    }
+
+    #[test]
+    fn cache_double_build_collapses_to_one_entry() {
+        loom::model(|| {
+            let cache: Arc<SharedCache<u64, u64>> = Arc::new(SharedCache::new());
+            let other = {
+                let cache = Arc::clone(&cache);
+                thread::spawn(move || *cache.get_or_try_insert::<(), _>(7, || Ok(70)).unwrap().0)
+            };
+            let mine = *cache.get_or_try_insert::<(), _>(7, || Ok(70)).unwrap().0;
+            let theirs = other.join().unwrap();
+
+            assert_eq!((mine, theirs), (70, 70), "every caller gets a valid value");
+            assert_eq!(cache.len(), 1, "a racing double-build leaves one entry");
+            let (v, hit) = cache.get_or_try_insert::<(), _>(7, || Ok(999)).unwrap();
+            assert!(hit, "after the race the key is always a hit");
+            assert_eq!(*v, 70);
+        });
+    }
+}
+
+#[cfg(not(loom))]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod stress {
+    use std::collections::HashSet;
+    use std::sync::{Arc, Mutex};
+    use std::time::{Duration, Instant};
+
+    use webots_hpc::fabric::LeaseTable;
+    use webots_hpc::telemetry::metrics::Registry;
+    use webots_hpc::util::SharedCache;
+
+    const THREADS: usize = 8;
+
+    #[test]
+    fn lease_expire_vs_complete_settles_exactly_once() {
+        // all leases are already past deadline; completer threads race
+        // the sweeping reaper for them — each lease settles once
+        const LEASES: u64 = 64;
+        let base = Instant::now();
+        let table = Arc::new(Mutex::new(LeaseTable::new(Duration::ZERO)));
+        let ids: Vec<u64> = (0..LEASES)
+            .map(|i| {
+                table
+                    .lock()
+                    .unwrap()
+                    .grant(i, &format!("c-e0[{i}]"), "w1#1", base)
+                    .id
+            })
+            .collect();
+
+        let reaper = {
+            let table = Arc::clone(&table);
+            std::thread::spawn(move || {
+                let mut reaped = Vec::new();
+                loop {
+                    let swept = table.lock().unwrap().expired(base + Duration::from_secs(1));
+                    let empty = swept.is_empty();
+                    reaped.extend(swept.into_iter().map(|l| l.id));
+                    if empty && table.lock().unwrap().is_empty() {
+                        return reaped;
+                    }
+                    std::thread::yield_now();
+                }
+            })
+        };
+        let completers: Vec<_> = ids
+            .chunks(ids.len() / THREADS)
+            .map(|chunk| {
+                let table = Arc::clone(&table);
+                let chunk = chunk.to_vec();
+                std::thread::spawn(move || {
+                    chunk
+                        .into_iter()
+                        .filter(|id| table.lock().unwrap().release(*id).is_some())
+                        .collect::<Vec<u64>>()
+                })
+            })
+            .collect();
+
+        let mut settled = HashSet::new();
+        for id in reaper.join().unwrap() {
+            assert!(settled.insert(id), "lease {id} reaped twice");
+        }
+        for t in completers {
+            for id in t.join().unwrap() {
+                assert!(settled.insert(id), "lease {id} settled twice");
+            }
+        }
+        assert_eq!(settled.len() as u64, LEASES, "every lease settles exactly once");
+        assert!(table.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn histogram_and_counter_recording_is_exact() {
+        // racing handle registration + recording: nothing may be lost
+        const PER: u64 = 2000;
+        let reg = Arc::new(Registry::default());
+        std::thread::scope(|s| {
+            for t in 0..THREADS as u64 {
+                let reg = Arc::clone(&reg);
+                s.spawn(move || {
+                    for i in 0..PER {
+                        // re-fetch handles every iteration so the
+                        // registry's get-or-insert path stays contended
+                        reg.histogram("stress.lat").record(t * 1000 + i % 100);
+                        reg.counter("stress.ops").inc();
+                    }
+                });
+            }
+        });
+        let snap = reg.snapshot();
+        let h = &snap.histograms["stress.lat"];
+        assert_eq!(h.count, THREADS as u64 * PER);
+        let expected: u64 = (0..THREADS as u64)
+            .map(|t| (0..PER).map(|i| t * 1000 + i % 100).sum::<u64>())
+            .sum();
+        assert_eq!(h.sum, expected);
+        assert_eq!(h.buckets.iter().sum::<u64>(), h.count);
+        assert_eq!(snap.counters["stress.ops"], THREADS as u64 * PER);
+    }
+
+    #[test]
+    fn cache_double_build_collapses_to_one_entry_per_key() {
+        const KEYS: u64 = 4;
+        let cache: Arc<SharedCache<u64, u64>> = Arc::new(SharedCache::new());
+        std::thread::scope(|s| {
+            for _ in 0..THREADS {
+                let cache = Arc::clone(&cache);
+                s.spawn(move || {
+                    for k in 0..KEYS {
+                        let (v, _hit) =
+                            cache.get_or_try_insert::<(), _>(k, || Ok(k * 10)).unwrap();
+                        assert_eq!(*v, k * 10, "every caller gets the key's value");
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.len() as u64, KEYS, "races collapse to one entry per key");
+        for k in 0..KEYS {
+            assert_eq!(*cache.get(&k).unwrap(), k * 10);
+        }
+    }
+}

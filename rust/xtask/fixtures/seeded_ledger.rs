@@ -1,0 +1,21 @@
+//! Seeded ledger-before-event fixture.  Linted by the self-tests under
+//! the pretend path `telemetry/seeded.rs`.  NOT compiled into any
+//! crate.  Expected hits: exactly the un-fsynced emit — the post-fsync
+//! emit and the plain constructor use in a match are legal.
+
+pub fn event_without_fsync(registry: &Registry) {
+    registry.emit(Event::Ledger(LedgerTransition::RunCompleted)); // seeded: no fsync in this fn
+}
+
+pub fn event_after_fsync(registry: &Registry, file: &File) -> io::Result<()> {
+    file.sync_data()?;
+    registry.emit(Event::Ledger(LedgerTransition::RunCompleted)); // fine: durable first
+    Ok(())
+}
+
+pub fn constructor_in_match(kind: u8) -> Option<LedgerTransition> {
+    match kind {
+        0 => Some(LedgerTransition::RunBegin),
+        _ => None,
+    }
+}

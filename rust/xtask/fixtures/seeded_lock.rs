@@ -1,0 +1,51 @@
+//! Seeded lock-discipline fixture.  Linted by the self-tests under the
+//! pretend path `fabric/coordinator.rs`.  NOT compiled into any crate.
+//! Expected hits: fsync under a named guard, emit on a statement
+//! temporary, socket write inside a `match lock(..)` block, and the
+//! ledger mutex nested under the dispatch mutex.  The drop-then-emit
+//! and scoped-release shapes below are the sanctioned patterns and
+//! must stay clean.
+
+pub fn named_guard_fsync(shared: &Mutex<Shared>, file: &File) {
+    let g = lock(shared);
+    let _ = file.sync_data(); // seeded: fsync while `g` is live
+    drop(g);
+}
+
+pub fn temporary_guard_emit(shared: &Mutex<Shared>) {
+    lock(shared).registry.emit(Event::WorkerJoin); // seeded: emit on a live temporary
+}
+
+pub fn block_temporary_write(shared: &Mutex<Shared>, sock: &mut TcpStream) {
+    match lock(shared).queue.pop_front() {
+        Some(idx) => {
+            let _ = sock.write_all(b"lease"); // seeded: socket write, temporary lives for the match
+            let _ = idx;
+        }
+        None => {}
+    }
+}
+
+pub fn nested_ledger_lock(shared: &Mutex<Shared>, ledger: &Mutex<CampaignLedger>) {
+    let g = lock(shared);
+    let mut led = lock_ledger(ledger); // seeded: ledger mutex nested under dispatch mutex
+    led.touch();
+    drop(led);
+    drop(g);
+}
+
+pub fn drop_then_emit(shared: &Mutex<Shared>, registry: &Registry) {
+    let g = lock(shared);
+    let n = g.stats.completed;
+    drop(g);
+    registry.emit(Event::RunEnd(n)); // fine: guard released first
+}
+
+pub fn scoped_release(shared: &Mutex<Shared>, file: &File) {
+    let n = {
+        let g = lock(shared);
+        g.stats.completed
+    };
+    let _ = file.sync_data(); // fine: guard died with the inner scope
+    let _ = n;
+}

@@ -1,0 +1,26 @@
+//! Seeded panic-freedom fixture.  Linted by the self-tests under the
+//! pretend path `pipeline/seeded.rs` (a control-plane dir, so indexing
+//! is denied too).  NOT compiled into any crate.  Expected hits: one
+//! `.unwrap()`, one `.expect(`, one index expression — and nothing
+//! from the test mod, the comment, or the string literal.
+
+pub fn unchecked(v: &[u32]) -> u32 {
+    let first = v.first().unwrap(); // seeded: .unwrap()
+    let second = v.get(1).expect("fixture"); // seeded: .expect()
+    *first + *second + v[2] // seeded: indexing in a control-plane dir
+}
+
+pub fn fine(v: &[u32]) -> u32 {
+    // mentions in comments and strings are invisible: .unwrap() v[0]
+    let s = ".expect(";
+    v.first().copied().unwrap_or(0) + s.len() as u32
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn decoy() {
+        let v = vec![1u32, 2];
+        assert_eq!(*v.first().unwrap(), v[0]); // exempt: cfg(test)
+    }
+}

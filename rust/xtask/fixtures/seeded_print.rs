@@ -1,0 +1,27 @@
+//! Seeded print-freedom fixture.  Linted by the self-tests under the
+//! pretend path `telemetry/seeded.rs`.  NOT compiled into any crate.
+//! Expected hits: the library `println!`, the `dbg!`, and the
+//! post-test-mod `eprintln!` — the last one is the exact hole the old
+//! awk gate had (it exempted everything after the first `#[cfg(test)]`
+//! in a file).
+
+pub fn chatty(n: u64) {
+    println!("progress: {n}"); // seeded: library println!
+    let _ = dbg!(n); // seeded: dbg!
+}
+
+pub fn quiet() -> &'static str {
+    "println!(\"this is a string, not a call\")"
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn decoy() {
+        println!("test output is fine"); // exempt: cfg(test)
+    }
+}
+
+pub fn trailing(n: u64) {
+    eprintln!("late: {n}"); // seeded: post-test-mod library print
+}

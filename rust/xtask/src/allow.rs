@@ -1,0 +1,85 @@
+//! The allowlist: explicit, justified exemptions (rust/xtask/lint.allow).
+//!
+//! Format: `rule path-suffix line-substring` per line, `#` comments.
+//! An entry matches a violation when the rule name is equal, the file
+//! path ends with the suffix, and the flagged source line contains the
+//! substring.  Every entry must match at least one violation — stale
+//! entries fail the lint, so a fixed call site cannot leave a silent
+//! hole behind.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::rules::Violation;
+
+#[derive(Debug)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub suffix: String,
+    pub substr: String,
+    pub line_no: usize,
+    pub used: bool,
+}
+
+pub fn load(path: &Path) -> Result<Vec<AllowEntry>, String> {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return Ok(Vec::new()); // no allowlist = no exemptions
+    };
+    let mut entries = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        fn field(s: &str) -> (&str, &str) {
+            let s = s.trim_start();
+            match s.find(char::is_whitespace) {
+                Some(i) => (&s[..i], &s[i..]),
+                None => (s, ""),
+            }
+        }
+        let (rule, rest) = field(line);
+        let (suffix, rest) = field(rest);
+        let substr = rest.trim_start();
+        if rule.is_empty() || suffix.is_empty() || substr.is_empty() {
+            return Err(format!(
+                "{}:{}: need `rule path-suffix line-substring`",
+                path.display(),
+                ln + 1
+            ));
+        }
+        entries.push(AllowEntry {
+            rule: rule.to_string(),
+            suffix: suffix.to_string(),
+            substr: substr.to_string(),
+            line_no: ln + 1,
+            used: false,
+        });
+    }
+    Ok(entries)
+}
+
+/// Drop allowlisted violations; marks used entries.  `src_lines` maps a
+/// rel path to its source lines (for the substring match).
+pub fn apply(
+    violations: Vec<Violation>,
+    entries: &mut [AllowEntry],
+    src_lines: &HashMap<String, Vec<String>>,
+) -> Vec<Violation> {
+    let mut kept = Vec::new();
+    for v in violations {
+        let line_text = src_lines
+            .get(&v.path)
+            .and_then(|lines| lines.get(v.line.saturating_sub(1)))
+            .map(String::as_str)
+            .unwrap_or("");
+        let hit = entries.iter_mut().find(|e| {
+            e.rule == v.rule && v.path.ends_with(&e.suffix) && line_text.contains(&e.substr)
+        });
+        match hit {
+            Some(e) => e.used = true,
+            None => kept.push(v),
+        }
+    }
+    kept
+}

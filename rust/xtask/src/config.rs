@@ -1,0 +1,71 @@
+//! Rule configuration — which files each rule covers and which calls it
+//! tracks.  scripts/lint_mirror.py mirrors these tables verbatim so a
+//! toolchain-less machine can run the same lint; keep them in sync.
+
+/// panic-freedom: deny `.unwrap()`/`.expect()` in every library module.
+/// main.rs is the CLI binary (aborting with a message is its job); test
+/// items are exempt at item-tree level, not by filename.
+pub const PANIC_SKIP_FILES: &[&str] = &["main.rs"];
+
+/// indexing-panics are denied only in the concurrency-heavy control
+/// plane, where a panic aborts an unattended campaign; numeric hot-path
+/// modules (sumo/, runtime/ kernels) index slices pervasively and are
+/// covered by bounds-checked accessors + tests instead.
+pub const INDEXING_DIRS: &[&str] = &["fabric/", "pipeline/", "telemetry/"];
+
+/// print-freedom: library observability goes through telemetry; stray
+/// prints vanish in batch campaigns.  main.rs is the CLI; harness/ and
+/// metrics/ are operator-facing table writers.
+pub const PRINT_SKIP_FILES: &[&str] = &["main.rs"];
+pub const PRINT_SKIP_DIRS: &[&str] = &["harness/", "metrics/"];
+pub const PRINT_MACROS: &[&str] = &["println", "eprintln", "print", "eprint", "dbg"];
+
+/// lock-discipline: while a guard from one of GUARD_CALLS is live, none
+/// of DENY_UNDER_GUARD may be reached — blocking I/O, fsync, sleeps,
+/// nested locks, telemetry flushes: anything that can stall the
+/// dispatch mutex every worker connection and the reaper serialize on.
+/// fabric/worker.rs is deliberately NOT covered: its writer mutex
+/// exists to make frame writes atomic, so writing under it is the
+/// design (EXPERIMENTS.md §Static analysis).
+pub const LOCK_FILES: &[&str] = &["fabric/coordinator.rs"];
+pub const GUARD_CALLS: &[&str] = &["lock"];
+pub const DENY_UNDER_GUARD: &[&str] = &[
+    "sleep",
+    "sync_all",
+    "sync_data",
+    "flush",
+    "flush_all",
+    "write_all",
+    "write_msg",
+    "supervise_instance",
+    "publish_run_csv",
+    "mark_running",
+    "mark_completed",
+    "mark_failed",
+    "emit",
+    "read_line",
+    "assemble_aggregate",
+    "plan_run",
+    "lock_ledger",
+];
+
+/// ledger-before-event: every telemetry emit of a LedgerTransition must
+/// be dominated (same fn body, earlier token) by the durability fsync.
+/// Only `emit(...)` argument positions count — LedgerTransition in
+/// match arms, parsers, and constructors elsewhere is fine.
+pub const LEDGER_EVENT: &str = "LedgerTransition";
+pub const LEDGER_EMIT_CALLS: &[&str] = &["emit"];
+pub const LEDGER_SYNC_CALLS: &[&str] = &["sync_data", "sync_all"];
+
+/// deny-attribute presence: these module roots must keep the clippy
+/// gate (the AST lint and clippy double-cover unwrap/expect; clippy
+/// additionally understands type-level dataflow the lexer cannot).
+pub const DENY_ATTR_FILES: &[&str] = &[
+    "fabric/mod.rs",
+    "pipeline/mod.rs",
+    "telemetry/mod.rs",
+    "runtime/mod.rs",
+    "traci/mod.rs",
+    "display/mod.rs",
+];
+pub const DENY_ATTR: &str = "deny(clippy::unwrap_used, clippy::expect_used)";

@@ -1,0 +1,210 @@
+//! Test-item marking: which tokens live inside `#[cfg(test)]`-gated
+//! items (at any nesting depth, anywhere in the file)?
+//!
+//! This is the precision the old awk gate lacked — it exempted
+//! everything after the FIRST `#[cfg(test)]` in a file, so library
+//! code *after* a test module escaped the print gate entirely.  Here
+//! an attribute attaches to the next item, the item's extent runs to
+//! its matching close brace (or `;` for bodyless items), and the cfg
+//! predicate is actually evaluated: `#[cfg(test)]`, `#[cfg(any(test,
+//! feature = "x"))]` etc. gate an item out of library builds only when
+//! the predicate is false with `test` off — unknown predicates
+//! (features, target_os, loom) conservatively count as compiled-in.
+
+use crate::lexer::Tok;
+
+/// Index one past the closing `]` of the attribute starting at `i`
+/// (`toks[i]` must be `#`).
+fn attr_end(toks: &[Tok], i: usize) -> Result<usize, String> {
+    let mut j = i + 1;
+    if j < toks.len() && toks[j].text == "!" {
+        j += 1;
+    }
+    if j >= toks.len() || toks[j].text != "[" {
+        return Err(format!("line {}: attribute must open with [", toks[i].line));
+    }
+    let mut depth = 0usize;
+    while j < toks.len() {
+        if toks[j].text == "[" {
+            depth += 1;
+        } else if toks[j].text == "]" {
+            depth -= 1;
+            if depth == 0 {
+                return Ok(j + 1);
+            }
+        }
+        j += 1;
+    }
+    Err(format!("line {}: unterminated attribute", toks[i].line))
+}
+
+/// Does the attribute in `toks[i..end)` contain a `cfg(...)` whose
+/// predicate evaluates FALSE when `test` is false — i.e. gate its item
+/// to test builds only?
+fn cfg_requires_test(toks: &[Tok], i: usize, end: usize) -> bool {
+    let texts: Vec<&str> = toks[i..end].iter().map(|t| t.text.as_str()).collect();
+    let Some(k) = texts.iter().position(|t| *t == "cfg") else {
+        return false;
+    };
+    if texts.get(k + 1) != Some(&"(") {
+        return false;
+    }
+
+    // recursive-descent evaluation with test=false; unknown leaves
+    // (features, target_os, loom, miri) evaluate true
+    fn parse(texts: &[&str], pos: usize) -> (bool, usize) {
+        let name = texts.get(pos).copied().unwrap_or(")");
+        if name == "test" {
+            return (false, pos + 1);
+        }
+        if matches!(name, "any" | "all" | "not") && texts.get(pos + 1) == Some(&"(") {
+            let mut vals = Vec::new();
+            let mut p = pos + 2;
+            while p < texts.len() && texts[p] != ")" {
+                if texts[p] == "," {
+                    p += 1;
+                    continue;
+                }
+                let (v, np) = parse(texts, p);
+                vals.push(v);
+                p = np;
+            }
+            p += 1;
+            let v = match name {
+                "any" => vals.iter().any(|v| *v),
+                "all" => vals.iter().all(|v| *v),
+                _ => !vals.first().copied().unwrap_or(false),
+            };
+            return (v, p);
+        }
+        // feature = "...", target_os = "...", miri, loom → unknown
+        let mut p = pos + 1;
+        while p < texts.len() && texts[p] != "," && texts[p] != ")" {
+            p += 1;
+        }
+        (true, p)
+    }
+
+    let (val, _) = parse(&texts, k + 2);
+    !val
+}
+
+/// One bool per token: is it inside a test-gated item?
+pub fn mark_test_tokens(toks: &[Tok]) -> Result<Vec<bool>, String> {
+    let n = toks.len();
+    let mut in_test = vec![false; n];
+    let mut i = 0usize;
+    let mut pending_test = false;
+    let mut depth = 0usize;
+    let mut test_depths: Vec<usize> = Vec::new();
+
+    while i < n {
+        let t = &toks[i];
+        if t.text == "#"
+            && t.kind == crate::lexer::Kind::Punct
+            && i + 1 < n
+            && (toks[i + 1].text == "[" || toks[i + 1].text == "!")
+        {
+            let end = attr_end(toks, i)?;
+            let is_test = cfg_requires_test(toks, i, end);
+            let inner = toks[i + 1].text == "!";
+            if !test_depths.is_empty() {
+                for k in in_test.iter_mut().take(end).skip(i) {
+                    *k = true;
+                }
+            }
+            if is_test && !inner {
+                pending_test = true;
+                // the attribute tokens themselves are test-only too
+                for k in in_test.iter_mut().take(end).skip(i) {
+                    *k = true;
+                }
+            }
+            i = end;
+            continue;
+        }
+        if !test_depths.is_empty() {
+            in_test[i] = true;
+        }
+        if t.text == "{" {
+            depth += 1;
+            if pending_test {
+                test_depths.push(depth);
+                in_test[i] = true;
+                pending_test = false;
+            }
+        } else if t.text == "}" {
+            if test_depths.last() == Some(&depth) {
+                test_depths.pop();
+                in_test[i] = true;
+            }
+            depth = depth.saturating_sub(1);
+        } else if t.text == ";"
+            && pending_test
+            && depth == test_depths.last().copied().unwrap_or(0)
+        {
+            // `#[cfg(test)] use foo;` — extent ended without a body
+            pending_test = false;
+            in_test[i] = true;
+        }
+        i += 1;
+    }
+    Ok(in_test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::tokenize;
+
+    fn test_idents(src: &str) -> Vec<(String, bool)> {
+        let toks = tokenize(src, "t.rs").unwrap();
+        let marks = mark_test_tokens(&toks).unwrap();
+        toks.iter()
+            .zip(&marks)
+            .filter(|(t, _)| t.kind == crate::lexer::Kind::Ident)
+            .map(|(t, m)| (t.text.clone(), *m))
+            .collect()
+    }
+
+    #[test]
+    fn library_code_after_a_test_mod_is_not_exempt() {
+        // the exact hole in the old awk gate
+        let src = "#[cfg(test)]\nmod tests { fn a() {} }\nfn lib() { b(); }";
+        let ids = test_idents(src);
+        assert!(ids.iter().any(|(t, m)| t == "a" && *m));
+        assert!(ids.iter().any(|(t, m)| t == "lib" && !*m));
+        assert!(ids.iter().any(|(t, m)| t == "b" && !*m));
+    }
+
+    #[test]
+    fn cfg_predicates_evaluate() {
+        // any(test, loom): loom is unknown → compiled-in → NOT test-only
+        let ids = test_idents("#[cfg(any(test, loom))]\nfn f() { g(); }");
+        assert!(ids.iter().any(|(t, m)| t == "g" && !*m));
+        // all(test, unix): test=false makes all() false → test-only
+        let ids = test_idents("#[cfg(all(test, unix))]\nfn f() { g(); }");
+        assert!(ids.iter().any(|(t, m)| t == "g" && *m));
+        // not(test) → compiled-in
+        let ids = test_idents("#[cfg(not(test))]\nfn f() { g(); }");
+        assert!(ids.iter().any(|(t, m)| t == "g" && !*m));
+    }
+
+    #[test]
+    fn test_attr_marks_the_next_item_only() {
+        let src = "#[test]\nfn t() { x(); }\nfn lib() { y(); }";
+        // #[test] is not cfg(test); only #[cfg(test)] gates compilation.
+        // The lint treats #[test] fns via their enclosing cfg(test) mod,
+        // so a bare #[test] at top level stays covered (conservative).
+        let ids = test_idents(src);
+        assert!(ids.iter().any(|(t, m)| t == "x" && !*m));
+        assert!(ids.iter().any(|(t, m)| t == "y" && !*m));
+    }
+
+    #[test]
+    fn bodyless_cfg_test_items() {
+        let ids = test_idents("#[cfg(test)]\nuse foo::bar;\nfn lib() { baz(); }");
+        assert!(ids.iter().any(|(t, m)| t == "bar" && *m));
+        assert!(ids.iter().any(|(t, m)| t == "baz" && !*m));
+    }
+}

@@ -1,0 +1,263 @@
+//! A small Rust lexer — just enough structure for the lint rules.
+//!
+//! Produces idents, single-char puncts, and literals (strings, raw
+//! strings, byte strings, chars, numbers), with line numbers; comments
+//! (line, nested block) and whitespace are dropped.  Lifetimes lex as
+//! punct so `'a` never masquerades as a char literal.  This is NOT a
+//! full lexer — no float-suffix pedantry, no shebang handling — but it
+//! is exact on the constructs the rules inspect, and the fixture tests
+//! pin the tricky cases (nested comments, `r#".."#`, `'a'` vs `'a`).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Punct,
+    Lit,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: usize,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+pub fn tokenize(src: &str, path: &str) -> Result<Vec<Tok>, String> {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+
+    let starts = |i: usize, pat: &str| -> bool {
+        b[i..].iter().zip(pat.chars()).filter(|(a, c)| **a == *c).count() == pat.chars().count()
+            && i + pat.chars().count() <= n
+    };
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        if starts(i, "//") {
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            continue;
+        }
+        if starts(i, "/*") {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if starts(i, "/*") {
+                    depth += 1;
+                    i += 2;
+                } else if starts(i, "*/") {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw strings: r"..." / r#"..."# / br#"..."#
+        if c == 'r' || (c == 'b' && i + 1 < n && b[i + 1] == 'r') {
+            let pfx = if c == 'b' { 2 } else { 1 };
+            let mut j = i + pfx;
+            let mut hashes = 0usize;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                j += 1;
+                let start_line = line;
+                loop {
+                    if j >= n {
+                        return Err(format!("{path}:{start_line}: unterminated raw string"));
+                    }
+                    if b[j] == '\n' {
+                        line += 1;
+                    }
+                    if b[j] == '"' && b[j + 1..].iter().take(hashes).filter(|c| **c == '#').count() == hashes
+                        && j + 1 + hashes <= n
+                    {
+                        j += 1 + hashes;
+                        break;
+                    }
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: Kind::Lit,
+                    text: b[i..j].iter().collect(),
+                    line: start_line,
+                });
+                i = j;
+                continue;
+            }
+            // not a raw string: fall through to ident lexing below
+        }
+        if c == '"' || (c == 'b' && i + 1 < n && b[i + 1] == '"') {
+            let mut j = i + if c == 'b' { 2 } else { 1 };
+            let start_line = line;
+            loop {
+                if j >= n {
+                    return Err(format!("{path}:{start_line}: unterminated string"));
+                }
+                if b[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if b[j] == '\n' {
+                    line += 1;
+                }
+                if b[j] == '"' {
+                    break;
+                }
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: Kind::Lit,
+                text: b[i..=j].iter().collect(),
+                line: start_line,
+            });
+            i = j + 1;
+            continue;
+        }
+        if c == '\'' {
+            // char literal vs lifetime: 'x' / '\n' are chars, 'a is a
+            // lifetime.  A char closes with ' within a few chars; a
+            // lifetime is ' + ident with no closing quote.
+            if i + 2 < n && b[i + 1] == '\\' {
+                let mut j = i + 3; // past the escaped char
+                while j < n && b[j] != '\'' {
+                    j += 1;
+                }
+                if j < n {
+                    toks.push(Tok {
+                        kind: Kind::Lit,
+                        text: b[i..=j].iter().collect(),
+                        line,
+                    });
+                    i = j + 1;
+                    continue;
+                }
+                return Err(format!("{path}:{line}: unterminated char"));
+            }
+            if i + 2 < n && b[i + 2] == '\'' {
+                toks.push(Tok {
+                    kind: Kind::Lit,
+                    text: b[i..i + 3].iter().collect(),
+                    line,
+                });
+                i += 3;
+                continue;
+            }
+            if i + 1 < n && is_ident_start(b[i + 1]) {
+                let mut j = i + 2;
+                while j < n && is_ident_cont(b[j]) {
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: Kind::Punct,
+                    text: b[i..j].iter().collect(),
+                    line,
+                });
+                i = j;
+                continue;
+            }
+            return Err(format!("{path}:{line}: stray quote"));
+        }
+        if is_ident_start(c) {
+            let mut j = i + 1;
+            while j < n && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: Kind::Ident,
+                text: b[i..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n && (is_ident_cont(b[j]) || b[j] == '.') {
+                // `0..10` range: stop the number before `..`
+                if b[j] == '.' && j + 1 < n && b[j + 1] == '.' {
+                    break;
+                }
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: Kind::Lit,
+                text: b[i..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        toks.push(Tok {
+            kind: Kind::Punct,
+            text: c.to_string(),
+            line,
+        });
+        i += 1;
+    }
+    Ok(toks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        tokenize(src, "t.rs").unwrap().into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn comments_strings_and_lifetimes() {
+        assert_eq!(texts("a /* x /* y */ z */ b"), ["a", "b"]);
+        assert_eq!(texts("let s = \"un//wrap\";"), ["let", "s", "=", "\"un//wrap\"", ";"]);
+        assert_eq!(
+            texts("r#\"quote \" inside\"# x"),
+            ["r#\"quote \" inside\"#", "x"]
+        );
+        assert_eq!(texts("fn f<'a>(x: &'a str) {}").iter().filter(|t| *t == "'a").count(), 2);
+        assert_eq!(texts("let c = 'x';"), ["let", "c", "=", "'x'", ";"]);
+        assert_eq!(texts("let c = '\\n';"), ["let", "c", "=", "'\\n'", ";"]);
+    }
+
+    #[test]
+    fn ranges_and_line_numbers() {
+        assert_eq!(texts("for i in 0..10 {}"), ["for", "i", "in", "0", ".", ".", "10", "{", "}"]);
+        let toks = tokenize("a\n\nb", "t.rs").unwrap();
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].line, 3);
+    }
+
+    #[test]
+    fn unwrap_in_comment_or_string_is_invisible() {
+        let toks = tokenize("// .unwrap()\nlet x = \".expect(\";", "t.rs").unwrap();
+        assert!(toks.iter().all(|t| t.kind != Kind::Ident || (t.text != "unwrap" && t.text != "expect")));
+    }
+}

@@ -1,0 +1,297 @@
+//! webots-hpc-lint — the project's AST-accurate static-analysis gate.
+//!
+//! ```text
+//! cargo run -p xtask -- lint            # lint rust/src against lint.allow
+//! cargo run -p xtask -- lint <src-dir>  # lint another tree (fixtures, CI)
+//! ```
+//!
+//! Four rules over a hand-rolled lexer + item tree (no syn, no deps —
+//! see Cargo.toml for why):
+//!
+//! 1. **lock-discipline** — in `fabric/coordinator.rs`, no blocking
+//!    call (fsync, socket write, sleep, ledger op, telemetry emit,
+//!    nested lock) while a guard from `lock()` is live.  This is the
+//!    machine-checked form of the settlement race PR 8's review caught
+//!    by hand.
+//! 2. **panic-freedom** — `.unwrap()`/`.expect()` denied in every
+//!    library module; indexing additionally denied in the control
+//!    plane (fabric/, pipeline/, telemetry/).  Exemptions live in
+//!    `lint.allow` with a written justification; stale entries fail.
+//! 3. **print-freedom** — `println!`-family and `dbg!` denied in
+//!    library code, honoring `#[cfg(test)]` items anywhere in a file
+//!    (the old awk gate exempted everything after the first match).
+//! 4. **ledger-before-event** — a `LedgerTransition` may only be
+//!    passed to `emit(...)` in a fn that fsyncs first: telemetry is a
+//!    superset of the ledger, never ahead of it.
+//!
+//! Plus a presence check that the six gated module roots keep their
+//! `#![deny(clippy::unwrap_used, clippy::expect_used)]` attribute.
+//!
+//! Exit codes: 0 clean · 1 violations/stale-allowlist · 2 usage or
+//! internal error.  scripts/lint_mirror.py is a line-for-line python
+//! mirror for machines without a rust toolchain.
+
+mod allow;
+mod config;
+mod items;
+mod lexer;
+mod rules;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => match run_lint(args.get(1).map(String::as_str)) {
+            Ok(true) => ExitCode::SUCCESS,
+            Ok(false) => ExitCode::from(1),
+            Err(e) => {
+                eprintln!("xtask lint: {e}");
+                ExitCode::from(2)
+            }
+        },
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- lint [src-root]");
+            ExitCode::from(2)
+        }
+    }
+}
+
+/// Lint `root` (default: the repo's rust/src, resolved relative to this
+/// crate so the command works from any cwd).  Returns Ok(true) when
+/// clean.
+fn run_lint(root_arg: Option<&str>) -> Result<bool, String> {
+    let manifest_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let root = match root_arg {
+        Some(p) => PathBuf::from(p),
+        None => manifest_dir
+            .parent()
+            .ok_or("xtask crate has no parent directory")?
+            .join("src"),
+    };
+    if !root.is_dir() {
+        return Err(format!("src root {} is not a directory", root.display()));
+    }
+    let allow_path = manifest_dir.join("lint.allow");
+
+    let (violations, stale) = lint_tree(&root, &allow_path)?;
+    for v in &violations {
+        println!("{v}");
+    }
+    for e in &stale {
+        eprintln!(
+            "lint.allow:{}: stale allowlist entry ({} {} {:?}) matched nothing",
+            e.line_no, e.rule, e.suffix, e.substr
+        );
+    }
+    if violations.is_empty() && stale.is_empty() {
+        println!("xtask lint: clean");
+        Ok(true)
+    } else {
+        eprintln!(
+            "\nxtask lint: {} violation(s), {} stale allowlist entr(ies)",
+            violations.len(),
+            stale.len()
+        );
+        Ok(false)
+    }
+}
+
+/// Walk every `.rs` file under `root`, run the rules, apply the
+/// allowlist.  Returns (surviving violations, stale allow entries).
+fn lint_tree(
+    root: &Path,
+    allow_path: &Path,
+) -> Result<(Vec<rules::Violation>, Vec<allow::AllowEntry>), String> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files).map_err(|e| e.to_string())?;
+    files.sort();
+
+    let mut violations = Vec::new();
+    let mut src_lines: HashMap<String, Vec<String>> = HashMap::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .map_err(|e| e.to_string())?
+            .to_string_lossy()
+            .replace(std::path::MAIN_SEPARATOR, "/");
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        violations.extend(rules::lint_source(&rel, &src)?);
+        src_lines.insert(rel, src.lines().map(str::to_string).collect());
+    }
+    rules::deny_attr(root, &mut violations);
+
+    let mut entries = allow::load(allow_path)?;
+    let violations = allow::apply(violations, &mut entries, &src_lines);
+    let stale = entries.into_iter().filter(|e| !e.used).collect();
+    Ok((violations, stale))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------------
+// self-tests: each rule must catch its seeded fixture violation, and the
+// real tree must lint clean — a silently-broken analyzer fails the gate.
+// ------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(name: &str) -> String {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("fixtures")
+            .join(name);
+        std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("{}: {e}", p.display()))
+    }
+
+    fn rules_of(rel: &str, src: &str) -> Vec<rules::Violation> {
+        rules::lint_source(rel, src).expect("fixture must tokenize")
+    }
+
+    #[test]
+    fn panic_fixture_is_caught() {
+        let v = rules_of("pipeline/seeded.rs", &fixture("seeded_panic.rs"));
+        let panics: Vec<_> = v.iter().filter(|v| v.rule == "panic-freedom").collect();
+        // exactly the seeded sites: one .unwrap(), one .expect(), one
+        // index — and NOT the test-mod or allow-pattern decoys
+        assert_eq!(panics.len(), 3, "{panics:?}");
+        assert!(panics.iter().any(|v| v.msg.contains(".unwrap()")));
+        assert!(panics.iter().any(|v| v.msg.contains(".expect()")));
+        assert!(panics.iter().any(|v| v.msg.contains("indexing")));
+    }
+
+    #[test]
+    fn indexing_only_flagged_in_control_plane() {
+        let src = "fn f(v: &[u32]) -> u32 { v[0] }";
+        assert_eq!(rules_of("pipeline/x.rs", src).len(), 1);
+        assert_eq!(rules_of("sumo/x.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn print_fixture_is_caught() {
+        let v = rules_of("telemetry/seeded.rs", &fixture("seeded_print.rs"));
+        let prints: Vec<_> = v.iter().filter(|v| v.rule == "print-freedom").collect();
+        // the library println! and the dbg! — not the #[cfg(test)] one,
+        // not the string literal, not the trailing-library-fn hole
+        assert_eq!(prints.len(), 3, "{prints:?}");
+        assert!(prints.iter().any(|v| v.msg.starts_with("println!")));
+        assert!(prints.iter().any(|v| v.msg.starts_with("dbg!")));
+        assert!(prints.iter().any(|v| v.line > 20), "post-test-mod library code must stay covered");
+    }
+
+    #[test]
+    fn lock_fixture_is_caught() {
+        let v = rules_of("fabric/coordinator.rs", &fixture("seeded_lock.rs"));
+        let locks: Vec<_> = v.iter().filter(|v| v.rule == "lock-discipline").collect();
+        // named-guard fsync, temporary-guard emit, block-temporary
+        // write_all, nested lock_ledger — the drop()-then-emit and
+        // scoped-release patterns must NOT be flagged
+        assert_eq!(locks.len(), 4, "{locks:?}");
+        assert!(locks.iter().any(|v| v.msg.contains("sync_data")));
+        assert!(locks.iter().any(|v| v.msg.contains("emit")));
+        assert!(locks.iter().any(|v| v.msg.contains("write_all")));
+        assert!(locks.iter().any(|v| v.msg.contains("lock_ledger")));
+    }
+
+    #[test]
+    fn lock_rule_only_covers_configured_files() {
+        let src = "fn f() { let g = lock(&s); g.ledger.sync_data(); }";
+        assert_eq!(rules_of("fabric/coordinator.rs", src).len(), 1);
+        // worker.rs writes frames under its writer mutex by design
+        assert_eq!(rules_of("fabric/worker.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn ledger_fixture_is_caught() {
+        let v = rules_of("telemetry/seeded.rs", &fixture("seeded_ledger.rs"));
+        let leds: Vec<_> = v.iter().filter(|v| v.rule == "ledger-before-event").collect();
+        // the unsynced emit only — not the post-fsync emit, not the
+        // match-arm constructor use
+        assert_eq!(leds.len(), 1, "{leds:?}");
+    }
+
+    #[test]
+    fn deny_attr_checks_module_roots() {
+        let dir = std::env::temp_dir().join(format!("xtask_deny_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        for rel in config::DENY_ATTR_FILES {
+            let p = dir.join(rel);
+            std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+            std::fs::write(&p, format!("#![{}]\n", config::DENY_ATTR)).unwrap();
+        }
+        let mut v = Vec::new();
+        rules::deny_attr(&dir, &mut v);
+        assert!(v.is_empty(), "{v:?}");
+        // strip one gate → one violation
+        std::fs::write(dir.join("fabric/mod.rs"), "pub mod lease;\n").unwrap();
+        let mut v = Vec::new();
+        rules::deny_attr(&dir, &mut v);
+        assert_eq!(v.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn allowlist_suppresses_and_reports_stale() {
+        let dir = std::env::temp_dir().join(format!("xtask_allow_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(dir.join("pipeline")).unwrap();
+        std::fs::write(
+            dir.join("pipeline/a.rs"),
+            "fn f(v: &[u32]) -> u32 { v[justified_index()] }\n",
+        )
+        .unwrap();
+        for rel in config::DENY_ATTR_FILES {
+            let p = dir.join(rel);
+            std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+            std::fs::write(&p, format!("#![{}]\n", config::DENY_ATTR)).unwrap();
+        }
+        let allow = dir.join("lint.allow");
+        std::fs::write(
+            &allow,
+            "panic-freedom pipeline/a.rs justified_index\n\
+             panic-freedom pipeline/a.rs this_site_was_fixed\n",
+        )
+        .unwrap();
+        let (violations, stale) = lint_tree(&dir, &allow).unwrap();
+        assert!(violations.is_empty(), "{violations:?}");
+        assert_eq!(stale.len(), 1, "the fixed site's entry must go stale");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The gate's own regression test: the real tree must be clean.
+    /// In particular `fabric/coordinator.rs` — the PR 9 refactor moved
+    /// every ledger fsync, CSV publish, socket write, and telemetry
+    /// emit outside the dispatch mutex, and this pins it that way.
+    #[test]
+    fn real_tree_is_clean() {
+        let manifest_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        let root = manifest_dir.parent().unwrap().join("src");
+        let allow = manifest_dir.join("lint.allow");
+        let (violations, stale) = lint_tree(&root, &allow).unwrap();
+        assert!(
+            violations.is_empty(),
+            "rust/src must lint clean:\n{}",
+            violations
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+        assert!(stale.is_empty(), "stale allowlist entries: {stale:?}");
+    }
+}

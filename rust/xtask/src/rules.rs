@@ -1,0 +1,364 @@
+//! The four analysis rules.  Each takes the token stream + test-item
+//! marking for one file and appends [`Violation`]s.  Rule semantics
+//! are pinned by the fixture tests below AND mirrored in
+//! scripts/lint_mirror.py for toolchain-less machines — change both.
+
+use crate::config::*;
+use crate::items::mark_test_tokens;
+use crate::lexer::{tokenize, Kind, Tok};
+
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// Run every per-file rule over one source file (`rel` is the path
+/// relative to the src root, with forward slashes).
+pub fn lint_source(rel: &str, src: &str) -> Result<Vec<Violation>, String> {
+    let toks = tokenize(src, rel)?;
+    let in_test = mark_test_tokens(&toks)?;
+    let mut out = Vec::new();
+    panic_freedom(rel, &toks, &in_test, &mut out);
+    print_freedom(rel, &toks, &in_test, &mut out);
+    lock_discipline(rel, &toks, &in_test, &mut out);
+    ledger_order(rel, &toks, &in_test, &mut out);
+    Ok(out)
+}
+
+fn base_name(rel: &str) -> &str {
+    rel.rsplit('/').next().unwrap_or(rel)
+}
+
+// ---------------------------------------------------------------- rule 2
+
+pub fn panic_freedom(rel: &str, toks: &[Tok], in_test: &[bool], out: &mut Vec<Violation>) {
+    if PANIC_SKIP_FILES.contains(&base_name(rel)) {
+        return;
+    }
+    let n = toks.len();
+    for (i, t) in toks.iter().enumerate() {
+        if in_test[i] {
+            continue;
+        }
+        if t.kind == Kind::Ident && (t.text == "unwrap" || t.text == "expect") {
+            let method = i > 0 && toks[i - 1].text == ".";
+            let called = i + 1 < n && toks[i + 1].text == "(";
+            if method && called {
+                out.push(Violation {
+                    rule: "panic-freedom",
+                    path: rel.to_string(),
+                    line: t.line,
+                    msg: format!(
+                        ".{}() can panic in library code — return Result, \
+                         recover (unwrap_or_else), or allowlist with a justification",
+                        t.text
+                    ),
+                });
+            }
+        }
+    }
+    if !INDEXING_DIRS.iter().any(|d| rel.starts_with(d)) {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if in_test[i] || t.text != "[" || i == 0 {
+            continue;
+        }
+        let prev = &toks[i - 1];
+        // an index expression follows a value: ident, `)`, `]` or a
+        // literal... except that `#[attr]`, array literals `= [`,
+        // `vec![`, and types `[u8; 4]` follow punctuation or a macro
+        // bang instead.
+        if prev.text == "!" || (prev.kind == Kind::Punct && prev.text != ")" && prev.text != "]") {
+            continue;
+        }
+        if prev.kind == Kind::Lit {
+            continue;
+        }
+        if prev.kind == Kind::Ident
+            && matches!(prev.text.as_str(), "return" | "in" | "break" | "mut" | "else" | "match" | "vec")
+        {
+            continue;
+        }
+        out.push(Violation {
+            rule: "panic-freedom",
+            path: rel.to_string(),
+            line: t.line,
+            msg: "indexing can panic in control-plane code — use .get()/.get_mut() \
+                  or allowlist with a bounds argument"
+                .to_string(),
+        });
+    }
+}
+
+// ---------------------------------------------------------------- rule 3
+
+pub fn print_freedom(rel: &str, toks: &[Tok], in_test: &[bool], out: &mut Vec<Violation>) {
+    if PRINT_SKIP_FILES.contains(&base_name(rel)) || PRINT_SKIP_DIRS.iter().any(|d| rel.starts_with(d))
+    {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if in_test[i] {
+            continue;
+        }
+        if t.kind == Kind::Ident
+            && PRINT_MACROS.contains(&t.text.as_str())
+            && i + 1 < toks.len()
+            && toks[i + 1].text == "!"
+        {
+            out.push(Violation {
+                rule: "print-freedom",
+                path: rel.to_string(),
+                line: t.line,
+                msg: format!(
+                    "{}! in library code — emit a telemetry event or metric \
+                     instead (stdout vanishes in batch campaigns)",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------- rule 1
+
+/// If `toks[i]` opens a call `name(`, return the name.
+fn call_name(toks: &[Tok], i: usize) -> Option<&str> {
+    let t = toks.get(i)?;
+    if t.kind != Kind::Ident {
+        return None;
+    }
+    if toks.get(i + 1)?.text == "(" {
+        Some(&t.text)
+    } else {
+        None
+    }
+}
+
+pub fn lock_discipline(rel: &str, toks: &[Tok], in_test: &[bool], out: &mut Vec<Violation>) {
+    if !LOCK_FILES.iter().any(|f| rel.ends_with(f)) {
+        return;
+    }
+    let n = toks.len();
+
+    // statement-level scan with a scope stack of live guards:
+    //   let g = lock(&x);            — named guard, lives to drop/scope end
+    //   lock(&x).field += 1;         — temporary, lives to end of statement
+    //   match lock(&x) { ... }       — temporary, lives for the block
+    let mut guards: Vec<(String, usize)> = Vec::new(); // (name, depth)
+    let mut pending_temp: Vec<usize> = Vec::new(); // block-scoped temporaries (depth)
+    let mut depth = 0usize;
+    let mut stmt_has_let = false;
+    let mut let_name: Option<String> = None;
+    let mut stmt_acquired: Option<usize> = None; // line of in-statement acquisition
+    let mut i = 0usize;
+
+    macro_rules! deny_check {
+        ($idx:expr) => {
+            if let Some(name) = call_name(toks, $idx) {
+                if DENY_UNDER_GUARD.contains(&name)
+                    && (!guards.is_empty() || !pending_temp.is_empty() || stmt_acquired.is_some())
+                {
+                    let hold = guards
+                        .last()
+                        .map(|g| g.0.clone())
+                        .unwrap_or_else(|| "<temporary>".to_string());
+                    out.push(Violation {
+                        rule: "lock-discipline",
+                        path: rel.to_string(),
+                        line: toks[$idx].line,
+                        msg: format!(
+                            "`{name}(...)` while guard `{hold}` from lock() is live — \
+                             release the dispatch mutex before blocking work"
+                        ),
+                    });
+                }
+            }
+        };
+    }
+
+    while i < n {
+        let t = &toks[i];
+        if in_test[i] {
+            i += 1;
+            continue;
+        }
+        if t.text == "{" {
+            depth += 1;
+            if stmt_acquired.take().is_some() {
+                // `match lock(&x) { ... }` / `if let ... = lock(&x) {`:
+                // the temporary lives for the attached block
+                pending_temp.push(depth);
+            }
+            stmt_has_let = false;
+            let_name = None;
+            i += 1;
+            continue;
+        }
+        if t.text == "}" {
+            guards.retain(|g| g.1 < depth);
+            pending_temp.retain(|d| *d < depth);
+            // a tail-expression temporary (`fn f() { x.lock() }`) dies
+            // with its block
+            stmt_acquired = None;
+            depth = depth.saturating_sub(1);
+            i += 1;
+            continue;
+        }
+        if t.text == ";" {
+            if stmt_acquired.take().is_some() && stmt_has_let {
+                if let Some(name) = let_name.take() {
+                    if name != "_" {
+                        guards.push((name, depth));
+                    }
+                }
+            }
+            stmt_has_let = false;
+            let_name = None;
+            stmt_acquired = None;
+            i += 1;
+            continue;
+        }
+        if t.kind == Kind::Ident && t.text == "let" {
+            stmt_has_let = true;
+            // pattern: let [mut] NAME =
+            let mut j = i + 1;
+            if j < n && toks[j].text == "mut" {
+                j += 1;
+            }
+            if j < n && toks[j].kind == Kind::Ident {
+                let_name = Some(toks[j].text.clone());
+            }
+            i += 1;
+            continue;
+        }
+        if t.kind == Kind::Ident && t.text == "drop" && i + 1 < n && toks[i + 1].text == "(" {
+            if i + 2 < n && toks[i + 2].kind == Kind::Ident {
+                let victim = toks[i + 2].text.clone();
+                guards.retain(|g| g.0 != victim);
+            }
+            i += 1;
+            continue;
+        }
+        if let Some(name) = call_name(toks, i) {
+            if GUARD_CALLS.contains(&name) {
+                let prev_dot = i > 0 && toks[i - 1].text == ".";
+                if name == "lock" || prev_dot {
+                    deny_check!(i); // nested acquisition under a live guard
+                    stmt_acquired = Some(t.line);
+                    i += 1;
+                    continue;
+                }
+            }
+        }
+        deny_check!(i);
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------- rule 4
+
+pub fn ledger_order(rel: &str, toks: &[Tok], in_test: &[bool], out: &mut Vec<Violation>) {
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        if toks[i].kind == Kind::Ident && toks[i].text == "fn" && !in_test[i] {
+            // find the body's open brace (skip bodyless decls)
+            let mut j = i + 1;
+            while j < n && toks[j].text != "{" && toks[j].text != ";" {
+                j += 1;
+            }
+            if j >= n || toks[j].text == ";" {
+                i = j + 1;
+                continue;
+            }
+            let mut depth = 1usize;
+            let mut k = j + 1;
+            let mut synced = false;
+            while k < n && depth > 0 {
+                let tk = &toks[k];
+                if tk.text == "{" {
+                    depth += 1;
+                } else if tk.text == "}" {
+                    depth -= 1;
+                } else if tk.kind == Kind::Ident && LEDGER_SYNC_CALLS.contains(&tk.text.as_str()) {
+                    synced = true;
+                } else if tk.kind == Kind::Ident
+                    && LEDGER_EMIT_CALLS.contains(&tk.text.as_str())
+                    && k + 1 < n
+                    && toks[k + 1].text == "("
+                {
+                    // scan the emit(...) argument list for the event kind
+                    let mut pdepth = 1usize;
+                    let mut m = k + 2;
+                    let mut hit: Option<usize> = None;
+                    while m < n && pdepth > 0 {
+                        if toks[m].text == "(" {
+                            pdepth += 1;
+                        } else if toks[m].text == ")" {
+                            pdepth -= 1;
+                        } else if toks[m].kind == Kind::Ident && toks[m].text == LEDGER_EVENT {
+                            hit = Some(toks[m].line);
+                        }
+                        m += 1;
+                    }
+                    if let Some(line) = hit {
+                        if !synced {
+                            out.push(Violation {
+                                rule: "ledger-before-event",
+                                path: rel.to_string(),
+                                line,
+                                msg: "LedgerTransition emitted with no preceding fsync \
+                                      in this fn — events must never lead the durable \
+                                      ledger (events ⊇ ledger contract)"
+                                    .to_string(),
+                            });
+                        }
+                    }
+                    k = m - 1;
+                }
+                k += 1;
+            }
+            i = k;
+            continue;
+        }
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------- rule 5
+
+/// The module roots that must keep the clippy unwrap/expect gate.
+pub fn deny_attr(root: &std::path::Path, out: &mut Vec<Violation>) {
+    for rel in DENY_ATTR_FILES {
+        let p = root.join(rel);
+        match std::fs::read_to_string(&p) {
+            Err(_) => out.push(Violation {
+                rule: "deny-attr",
+                path: rel.to_string(),
+                line: 0,
+                msg: "module root missing".to_string(),
+            }),
+            Ok(src) => {
+                if !src.contains(DENY_ATTR) {
+                    out.push(Violation {
+                        rule: "deny-attr",
+                        path: rel.to_string(),
+                        line: 1,
+                        msg: format!("module root lost its `#![{DENY_ATTR}]` gate"),
+                    });
+                }
+            }
+        }
+    }
+}

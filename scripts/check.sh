@@ -10,29 +10,26 @@ cargo fmt --all -- --check
 echo "== cargo clippy -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
-echo "== control-plane lint gate (no unwrap/expect in pipeline/) =="
-# the deny attribute is what clippy enforces; make sure nobody quietly
-# removes it from the unattended-campaign control plane
-grep -q 'deny(clippy::unwrap_used, clippy::expect_used)' rust/src/pipeline/mod.rs \
-  || { echo "FAIL: pipeline/mod.rs lost its unwrap/expect deny gate"; exit 1; }
-grep -q 'deny(clippy::unwrap_used, clippy::expect_used)' rust/src/fabric/mod.rs \
-  || { echo "FAIL: fabric/mod.rs lost its unwrap/expect deny gate"; exit 1; }
+echo "== xtask lint (AST-accurate project rules) =="
+# rust/xtask replaces the old grep deny-attr gate and the awk print
+# gate: panic-freedom (unwrap/expect/indexing + lint.allow), lock
+# discipline in fabric/coordinator.rs, print-freedom with real
+# #[cfg(test)] extents, ledger-before-event ordering, and deny-attr
+# presence — all at token level, not line-regex level.
+if cargo run -q -p xtask -- lint 2>/dev/null; then
+  :
+else
+  # xtask is its own workspace root; fall back to an explicit manifest
+  # path when the outer workspace doesn't list it as a member
+  cargo run -q --manifest-path rust/xtask/Cargo.toml -- lint
+fi
 
-echo "== telemetry lint gate (no println!/eprintln! in library code) =="
-# library observability goes through telemetry::emit / the metrics
-# registry; stray prints vanish in batch campaigns.  Test modules are
-# exempt (everything after the first #[cfg(test)] in a file), and
-# main.rs is the CLI — printing is its job.
-print_gate_fail=0
-while IFS= read -r f; do
-  hits=$(awk '/#\[cfg\(test\)\]/{exit} /(println|eprintln)!/{print FILENAME ":" FNR ": " $0}' "$f")
-  if [ -n "$hits" ]; then
-    echo "$hits"
-    print_gate_fail=1
-  fi
-done < <(find rust/src/runtime rust/src/pipeline rust/src/telemetry rust/src/fabric -name '*.rs')
-[ "$print_gate_fail" -eq 0 ] \
-  || { echo "FAIL: library code prints to stdout/stderr — emit telemetry events instead"; exit 1; }
+echo "== xtask self-tests (each rule catches its seeded fixture) =="
+cargo test -q --manifest-path rust/xtask/Cargo.toml
+if command -v python3 >/dev/null 2>&1; then
+  # the python mirror must agree with the analyzer on the fixtures
+  python3 scripts/lint_mirror.py --self-test
+fi
 
 echo "== cargo build --examples =="
 cargo build --examples
@@ -61,5 +58,37 @@ echo "== fabric: loopback coordinator/worker smoke =="
 # distributed execution over real TCP: one hard worker kill, forced
 # duplicate completions, 100% completion (full soak runs under tier-1)
 cargo test -q --release --test fabric fabric_smoke
+
+echo "== loom: exhaustive interleaving models (lease/registry/cache) =="
+# needs the loom crate; without it the same invariants still ran above
+# as real-thread stress tests inside tier-1 (tests/loom_models.rs)
+if cargo metadata --format-version 1 2>/dev/null | grep -q '"name":"loom"'; then
+  RUSTFLAGS="--cfg loom" cargo test -q --release --test loom_models
+else
+  echo "WARNING: loom crate not in the dependency graph — loom lane SKIPPED" \
+       "(stress-test fallback already ran in tier-1)"
+fi
+
+echo "== sanitizers (opt-in: WEBOTS_HPC_TSAN=1 / WEBOTS_HPC_MIRI=1) =="
+# ThreadSanitizer over the concurrency-heavy test targets.  Needs a
+# nightly toolchain with rust-src; opt-in because a TSan run is ~10x
+# slower than the plain suite.
+if [ "${WEBOTS_HPC_TSAN:-0}" = "1" ]; then
+  if rustup toolchain list 2>/dev/null | grep -q nightly; then
+    RUSTFLAGS="-Zsanitizer=thread" RUSTDOCFLAGS="-Zsanitizer=thread" \
+      cargo +nightly test -q -Zbuild-std --target x86_64-unknown-linux-gnu \
+        --test loom_models --test telemetry --test fabric
+  else
+    echo "WARNING: WEBOTS_HPC_TSAN=1 but no nightly toolchain — TSan lane SKIPPED"
+  fi
+fi
+# Miri over the lock-free metrics unit tests (UB + weak-memory checks).
+if [ "${WEBOTS_HPC_MIRI:-0}" = "1" ]; then
+  if command -v cargo-miri >/dev/null 2>&1 || rustup component list --toolchain nightly 2>/dev/null | grep -q 'miri.*(installed)'; then
+    cargo +nightly miri test -q --lib telemetry::metrics
+  else
+    echo "WARNING: WEBOTS_HPC_MIRI=1 but miri not installed — miri lane SKIPPED"
+  fi
+fi
 
 echo "check.sh: all gates passed"
