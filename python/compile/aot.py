@@ -60,6 +60,25 @@ BUCKETS = (16, 64, 256, 1024)
 #: `scripts/check_manifest.py`.
 ROLLOUT_STEPS = (1, 8, 32)
 
+#: the whole-run total-steps ladder lowered per bucket (schema 5).  A
+#: `run{T}_{N}` entry executes T physics steps with in-kernel demand
+#: insertion (`model.run_geom`) — ONE dispatch per run.  Rungs are exact
+#: step counts, not upper bounds (a rung never over-steps the horizon),
+#: chosen to match the step counts real runs ask for: 1200 and 1800 are
+#: the scenario families' horizons (120 s and ring-shockwave's 180 s at
+#: DT=0.1, `rust/src/scenario/family.rs`), 200 the short validation
+#: horizon the launcher e2e tests use (20 s).  Runs at other horizons
+#: fall back to PR 5 chunking.  Pinned against
+#: `rust/src/runtime/manifest.rs RUN_LADDER` by `scripts/check_manifest.py`.
+RUN_STEPS = (200, 1200, 1800)
+
+#: departure-table row capacity per run entry (schema 5).  Schedules
+#: with more due departures than this fall back to host-side chunking;
+#: 256 covers every builtin scenario family with >2x headroom (worst
+#: case ~150 departures: ring-shockwave at jam density, lane-drop at
+#: 3000 vph over 120 s).  Padding rows carry model.DEP_PAD_EPOCH.
+DEPARTURE_ROWS = 256
+
 
 def to_hlo_text(lowered) -> str:
     """stablehlo → XlaComputation → HLO text (see module docstring)."""
@@ -131,6 +150,35 @@ def lower_rollout_batched(b: int, n: int, k: int) -> str:
     return to_hlo_text(jax.jit(fn).lower(state, params, geom))
 
 
+def lower_run(n: int, t: int, d: int = DEPARTURE_ROWS) -> str:
+    """The whole-run entry: T physics steps AND the demand schedule in
+    one executable (schema 5).  The departure table f32[D, DEP_COLS] is
+    a runtime operand, so one lowered entry per (bucket, T) serves every
+    scenario's schedule; insertion happens in-kernel (model.run_geom),
+    bit-exact with the host scheduler.  Returns (final_state,
+    final_params, obs_trace f32[T, OBS], inserted f32[D])."""
+    state = jax.ShapeDtypeStruct((n, 4), jnp.float32)
+    params = jax.ShapeDtypeStruct((n, PARAMS), jnp.float32)
+    geom = jax.ShapeDtypeStruct((GEOM,), jnp.float32)
+    deps = jax.ShapeDtypeStruct((d, len(model.DEP_COLUMNS)), jnp.float32)
+    fn = lambda s, p, g, dep: model.run_geom(s, p, g, dep, t)
+    return to_hlo_text(jax.jit(fn).lower(state, params, geom, deps))
+
+
+def lower_run_batched(b: int, n: int, t: int, d: int = DEPARTURE_ROWS) -> str:
+    """vmap(run_geom) over a leading instance axis: one dispatch executes
+    `b` co-located WHOLE runs — each lane carries its own geometry row
+    and departure table, so the engine service's run lane coalesces
+    campaign instances from different scenario points into a single
+    PJRT call."""
+    state = jax.ShapeDtypeStruct((b, n, 4), jnp.float32)
+    params = jax.ShapeDtypeStruct((b, n, PARAMS), jnp.float32)
+    geom = jax.ShapeDtypeStruct((b, GEOM), jnp.float32)
+    deps = jax.ShapeDtypeStruct((b, d, len(model.DEP_COLUMNS)), jnp.float32)
+    fn = jax.vmap(lambda s, p, g, dep: model.run_geom(s, p, g, dep, t))
+    return to_hlo_text(jax.jit(fn).lower(state, params, geom, deps))
+
+
 def lower_idm(n: int) -> str:
     state = jax.ShapeDtypeStruct((n, 4), jnp.float32)
     params = jax.ShapeDtypeStruct((n, PARAMS), jnp.float32)
@@ -158,10 +206,15 @@ def main() -> None:
         # schema 4: everything schema 3 had (geometry operand,
         # destination-aware params row, n_exited observable) PLUS the
         # fused K-step rollout entry points (`rollout{K}_{N}` /
-        # `rolloutb{K}_{N}`, K in ROLLOUT_STEPS).  The rust runtime
+        # `rolloutb{K}_{N}`, K in ROLLOUT_STEPS).  Schema 5 adds the
+        # whole-run entries (`run{T}_{N}` / `runb{T}_{N}`, T in
+        # RUN_STEPS): demand arrives as a departure-table operand
+        # (departure_columns × departure_rows) and insertion happens
+        # in-kernel, so an entire run is ONE dispatch.  The rust runtime
         # still executes the single-step entries of schema-3 artifacts;
-        # rollouts are gated on schema >= 4 (runtime/manifest.rs).
-        "schema": 4,
+        # rollouts gate on schema >= 4, runs on schema >= 5
+        # (runtime/manifest.rs).
+        "schema": 5,
         "state_columns": ["x", "v", "lane", "active"],
         "param_columns": list(model.PARAM_COLUMNS),
         "obs_columns": list(model.OBS_COLUMNS),
@@ -183,7 +236,23 @@ def main() -> None:
     # name stems the runtime resolves `{stem}{K}_{N}` keys against
     manifest["rollout_steps"] = list(ROLLOUT_STEPS)
     manifest["rollout_entry_points"] = ["rollout", "rolloutb"]
-    operands = {"step": 3, "stepb": 3, "rollout": 3, "rolloutb": 3, "idm": 2, "radar": 1}
+    # the whole-run contract (schema 5): the total-steps ladder, the
+    # departure-table operand layout, and the entry stems the runtime
+    # resolves `{stem}{T}_{N}` keys against
+    manifest["run_steps"] = list(RUN_STEPS)
+    manifest["run_entry_points"] = ["run", "runb"]
+    manifest["departure_columns"] = list(model.DEP_COLUMNS)
+    manifest["departure_rows"] = DEPARTURE_ROWS
+    operands = {
+        "step": 3,
+        "stepb": 3,
+        "rollout": 3,
+        "rolloutb": 3,
+        "run": 4,
+        "runb": 4,
+        "idm": 2,
+        "radar": 1,
+    }
     for n in sorted(args.buckets):
         for name, lower in (("step", lower_step), ("idm", lower_idm), ("radar", lower_radar)):
             path = out / f"{name}_{n}.hlo.txt"
@@ -225,6 +294,24 @@ def main() -> None:
                     "operands": operands[stem],
                 }
                 print(f"wrote {path} ({len(text)} chars, k={k})")
+        # the whole-run entries (solo + micro-batched), one pair per
+        # total-steps rung: demand compiled into the kernel, one PJRT
+        # dispatch per run
+        for t in RUN_STEPS:
+            for stem, text in (
+                ("run", lower_run(n, t)),
+                ("runb", lower_run_batched(BATCH, n, t)),
+            ):
+                path = out / f"{stem}{t}_{n}.hlo.txt"
+                path.write_text(text)
+                manifest["entries"][f"{stem}{t}_{n}"] = {
+                    "file": path.name,
+                    "n": n,
+                    "k_total": t,
+                    "outputs": 4,
+                    "operands": operands[stem],
+                }
+                print(f"wrote {path} ({len(text)} chars, k_total={t})")
 
     (out / "manifest.json").write_text(json.dumps(manifest, indent=2))
     print(f"wrote {out / 'manifest.json'}")

@@ -97,6 +97,26 @@ PARAM_COLUMNS = ["v0", "T", "a_max", "b", "s0", "length", "exit_pos", "exit_flag
 #: road-end flow so off-ramp completions are visible in aggregates.
 OBS_COLUMNS = ["n_active", "mean_speed", "flow", "n_merged", "n_exited"]
 
+#: schema-5 departure-table row layout — keep in sync with
+#: `rust/src/sumo/simulation.rs` (DEP_COLS/DEP_*) and
+#: `artifacts/manifest.json` "departure_columns".  One row per scheduled
+#: departure: the epoch step index at which it becomes due (derived
+#: host-side from the same f32 `t += dt` accumulation the sequential
+#: scheduler uses) plus the full spawn payload — the state row
+#: `[x, v, lane]` and the eight params columns.  Compiling demand into
+#: an operand is what lets a whole run execute as ONE dispatch: the
+#: host-side insertion queue becomes in-kernel params-driven events.
+DEP_COLUMNS = [
+    "step", "x", "v", "lane",
+    "v0", "T", "a_max", "b", "s0", "length", "exit_pos", "exit_flag",
+]
+D_STEP, D_X, D_V, D_LANE = range(4)
+D_PARAMS = 4  #: params payload starts here (8 columns, PARAM_COLUMNS order)
+
+#: epoch sentinel for table padding rows: never due within any run
+#: (2^30 steps ≈ 3.4 sim-years at DT=0.1; exactly representable in f32).
+DEP_PAD_EPOCH = float(2**30)
+
 
 def default_geometry() -> jnp.ndarray:
     """The classic ch. 5 merge geometry as an operand row (f32[5])."""
@@ -314,3 +334,98 @@ def rollout_geom(state: jnp.ndarray, params: jnp.ndarray, geom: jnp.ndarray, k: 
 
     final_state, obs_trace = jax.lax.scan(body, state, None, length=k)
     return final_state, obs_trace
+
+
+def run_geom(
+    state: jnp.ndarray,
+    params: jnp.ndarray,
+    geom: jnp.ndarray,
+    departures: jnp.ndarray,
+    k_total: int,
+):
+    """A WHOLE run as one executable: demand compiled into the kernel.
+
+    ``rollout_geom`` still breaks at every departure because insertion
+    lives host-side; ``run_geom`` moves it in-kernel.  The departure
+    schedule arrives as an operand table ``departures f32[D, DEP_COLS]``
+    (rows sorted by epoch; padding rows carry ``DEP_PAD_EPOCH``), and the
+    ``lax.scan`` carry grows a spawn cursor + per-row insertion mask so
+    each step replays the sequential scheduler's insertion phase exactly:
+
+      * a row is *pending* when its epoch step has been reached and it
+        has not yet inserted — exactly the union of the host's insertion
+        queue (earlier-blocked rows) and its newly-due departures, in
+        the same order, because rows are scanned by ascending index;
+      * insertion refuses when any active vehicle sits on the row's lane
+        within ``s0 + length`` of the spawn point (the host's
+        ``try_insert`` clearance), or when no slot is free — the row
+        stays pending and retries next step, i.e. the insertion queue;
+      * a successful insertion writes the state row ``[x, v, lane, 1]``
+        and the 8-column params row into the FIRST inactive slot (the
+        host's ``Traffic::spawn`` order), so slot assignment — and hence
+        every subsequent pairwise interaction — is bit-identical.
+
+    The physics after the insertion phase is untouched ``step_geom``, so
+    the whole run is bit-exact with chunked/sequential stepping; the
+    carry also threads ``params`` (insertions mutate it on-device).
+
+    Inputs : state f32[N,4], params f32[N,PARAMS], geom f32[GEOM],
+             departures f32[D, DEP_COLS], k_total >= 1 (static)
+    Outputs: (final_state f32[N,4], final_params f32[N,PARAMS],
+              obs_trace f32[k_total, OBS_COLS], inserted f32[D])
+             ``inserted`` is the end-of-run insertion mask: the host
+             reconstructs its departure cursor + insertion queue from it
+             when a chunked tail (or a later horizon extension) follows.
+    """
+    d_rows = departures.shape[0]
+    epochs = departures[:, D_STEP]
+    row_idx = jnp.arange(d_rows, dtype=jnp.int32)
+
+    def body(carry, step_idx):
+        state, params, inserted, cursor = carry
+        step_f = step_idx.astype(jnp.float32)
+
+        def try_insert(j, c):
+            state, params, inserted = c
+            row = departures[j]
+            pending = (row[D_STEP] <= step_f) & (inserted[j] < 0.5)
+            occupied = state[:, ACTIVE] > 0.5
+            same_lane = jnp.abs(state[:, LANE] - row[D_LANE]) < 0.5
+            clearance = row[D_PARAMS + S0] + row[D_PARAMS + LENGTH]
+            near = jnp.abs(state[:, X] - row[D_X]) < clearance
+            blocked = jnp.any(occupied & same_lane & near)
+            slot = jnp.argmin(state[:, ACTIVE])  # first inactive slot
+            free = state[slot, ACTIVE] < 0.5
+            do = pending & ~blocked & free
+            spawn_state = jnp.stack(
+                [row[D_X], row[D_V], row[D_LANE], jnp.float32(1.0)]
+            )
+            state = state.at[slot].set(
+                jnp.where(do, spawn_state, state[slot])
+            )
+            params = params.at[slot].set(
+                jnp.where(do, row[D_PARAMS:], params[slot])
+            )
+            inserted = inserted.at[j].set(jnp.where(do, 1.0, inserted[j]))
+            return state, params, inserted
+
+        # the pending window: [cursor, hi) — cursor is the spawn cursor
+        # (everything before it inserted), hi the count of due rows
+        # (epochs ascending, so rows past hi are not yet due)
+        hi = jnp.sum(epochs <= step_f).astype(jnp.int32)
+        state, params, inserted = jax.lax.fori_loop(
+            cursor, hi, try_insert, (state, params, inserted)
+        )
+        open_rows = (row_idx >= cursor) & (inserted < 0.5)
+        cursor = jnp.where(
+            jnp.any(open_rows), jnp.argmax(open_rows), d_rows
+        ).astype(jnp.int32)
+        new_state, _accel, _radar, obs = step_geom(state, params, geom)
+        return (new_state, params, inserted, cursor), obs
+
+    inserted0 = jnp.zeros((d_rows,), dtype=jnp.float32)
+    carry0 = (state, params, inserted0, jnp.int32(0))
+    (final_state, final_params, inserted, _cursor), obs_trace = jax.lax.scan(
+        body, carry0, jnp.arange(k_total, dtype=jnp.int32)
+    )
+    return final_state, final_params, obs_trace, inserted

@@ -46,7 +46,7 @@ def test_step_is_pure_hlo_no_custom_calls():
 def test_manifest_consistent_with_artifacts():
     manifest = json.loads((ART / "manifest.json").read_text())
     assert manifest["format"] == "hlo-text"
-    assert manifest["schema"] == 4
+    assert manifest["schema"] == 5
     assert manifest["geometry_columns"] == model.GEOM_COLUMNS
     assert manifest["param_columns"] == model.PARAM_COLUMNS
     assert manifest["obs_columns"] == model.OBS_COLUMNS
@@ -54,6 +54,10 @@ def test_manifest_consistent_with_artifacts():
     assert manifest["merge_end"] == model.MERGE_END
     assert manifest["rollout_steps"] == list(aot.ROLLOUT_STEPS)
     assert manifest["rollout_entry_points"] == ["rollout", "rolloutb"]
+    assert manifest["run_steps"] == list(aot.RUN_STEPS)
+    assert manifest["run_entry_points"] == ["run", "runb"]
+    assert manifest["departure_columns"] == model.DEP_COLUMNS
+    assert manifest["departure_rows"] == aot.DEPARTURE_ROWS
     for key, entry in manifest["entries"].items():
         path = ART / entry["file"]
         assert path.exists(), f"missing artifact {path}"
@@ -66,6 +70,15 @@ def test_manifest_consistent_with_artifacts():
             assert entry["k"] == int(name[len(stem):])
             assert entry["outputs"] == 2
             assert entry["operands"] == 3
+        elif name.startswith("run"):
+            stem = "runb" if name.startswith("runb") else "run"
+            t = int(name[len(stem):])
+            assert t in aot.RUN_STEPS
+            assert entry["k_total"] == t
+            # (final_state, final_params, obs_trace, inserted mask)
+            assert entry["outputs"] == 4
+            # state, params, geom, departures
+            assert entry["operands"] == 4
 
 
 def test_lower_step_batched_shapes():
@@ -133,6 +146,33 @@ def test_lower_rollout_batched_shapes():
     assert f"f32[{b},{n},4]" in text
     assert f"f32[{b},{aot.GEOM}]" in text
     assert f"f32[{b},{k},{len(model.OBS_COLUMNS)}]" in text
+    assert "custom-call" not in text.lower()
+
+
+def test_lower_run_shapes():
+    """The whole-run entry carries the departure table operand and
+    returns (final_state, final_params, obs_trace, inserted mask)."""
+    t, n, d = 200, 16, aot.DEPARTURE_ROWS
+    text = aot.lower_run(n, t)
+    assert "HloModule" in text
+    assert f"f32[{n},4]" in text
+    assert f"f32[{n},8]" in text
+    assert f"f32[{aot.GEOM}]" in text
+    # the departure table operand and its insertion mask output
+    assert f"f32[{d},{len(model.DEP_COLUMNS)}]" in text
+    assert f"f32[{d}]" in text
+    # the stacked whole-run observables
+    assert f"f32[{t},{len(model.OBS_COLUMNS)}]" in text
+    assert "custom-call" not in text.lower()
+
+
+def test_lower_run_batched_shapes():
+    t, n, b, d = 200, 16, aot.BATCH, aot.DEPARTURE_ROWS
+    text = aot.lower_run_batched(b, n, t)
+    assert f"f32[{b},{n},4]" in text
+    assert f"f32[{b},{aot.GEOM}]" in text
+    assert f"f32[{b},{d},{len(model.DEP_COLUMNS)}]" in text
+    assert f"f32[{b},{t},{len(model.OBS_COLUMNS)}]" in text
     assert "custom-call" not in text.lower()
 
 

@@ -24,6 +24,11 @@
 //!   * `hlo_rollout/K=1/N=*` vs `hlo_rollout/K={8,32}/N=*` — fused
 //!     K-step rollout executables (PR 5 tentpole): one PJRT dispatch
 //!     amortized over K physics steps instead of one dispatch per step.
+//!   * `hlo_run/T=*/N=*` vs `hlo_rollout/K=32/N=*` — device-resident
+//!     whole-run executables (PR 10 tentpole): the ENTIRE horizon in
+//!     one dispatch with demand compiled in as the departure-table
+//!     operand, vs the K=32 chunk-scheduler ceiling (acceptance: ≥2x
+//!     steps/s at N≤64).
 
 mod common;
 
@@ -167,6 +172,47 @@ fn main() {
         }
     } else {
         println!("note: artifacts predate schema 4 — rollout benches skipped");
+    }
+
+    // device-resident whole runs (PR 10): the entire horizon as ONE
+    // PJRT dispatch, demand compiled in via the departure-table
+    // operand.  The table here is all padding rows (epoch DEP_PAD_EPOCH)
+    // so the in-kernel insertion scan runs but never fires — the
+    // physics work matches the rollout benches above and the pairing
+    // hlo_run/T=* vs hlo_rollout/K=32 isolates the dispatch/ferrying
+    // amortization (acceptance: ≥2x steps/s at N≤64).
+    if service.manifest().runs_available() {
+        let ladder = service.manifest().run_steps.clone();
+        let d = service.manifest().departure_rows;
+        for &bucket in &service.manifest().buckets.clone() {
+            if bucket > 64 {
+                println!("note: whole-run bench capped at N=64 (skipping N={bucket})");
+                continue;
+            }
+            let t = traffic(bucket, 0.7, 0xD15 + bucket as u64);
+            let mut table = vec![0.0f32; d * webots_hpc::sumo::DEP_COLS];
+            for row in table.chunks_exact_mut(webots_hpc::sumo::DEP_COLS) {
+                row[0] = webots_hpc::sumo::DEP_PAD_EPOCH;
+            }
+            let mut sess = service.session(bucket).unwrap();
+            for &t_steps in &ladder {
+                let iters = (2000 / t_steps as u32).clamp(3, 10);
+                let s = rec.bench(
+                    &format!("hlo_run/T={t_steps}/N={bucket}"),
+                    iters,
+                    t_steps as f64,
+                    || {
+                        let _ = sess.run(&t.state, &t.params, &table, t_steps).unwrap();
+                    },
+                );
+                println!(
+                    "    -> {:.0} resident steps/s at T={t_steps}",
+                    common::throughput(&s, t_steps as f64)
+                );
+            }
+        }
+    } else {
+        println!("note: artifacts predate schema 5 — whole-run benches skipped");
     }
 
     // telemetry overhead on the fused-rollout hot path (ISSUE 7

@@ -50,6 +50,12 @@ pub struct RunDataset {
     /// native-stepper fallback after its HLO engine failed (graceful
     /// degradation) — ML consumers can filter or stratify on it.
     pub degraded: bool,
+    /// Execution-path provenance: steps that ran as device-resident
+    /// whole-run dispatches (schema 5).  0 = the host chunk scheduler
+    /// (or the native stepper) produced every step; equality with
+    /// `rows.len()` means the entire horizon was one fused run.  Like
+    /// `degraded`, ML consumers can stratify on it.
+    pub resident_steps: u64,
     pub rows: Vec<ObsRow>,
     /// Totals for quick aggregation.
     pub total_flow: f32,
@@ -68,6 +74,7 @@ impl RunDataset {
             seed,
             scenario: None,
             degraded: false,
+            resident_steps: 0,
             rows: Vec::new(),
             total_flow: 0.0,
             total_merged: 0.0,

@@ -256,6 +256,10 @@ pub fn launch_instance(
     // authoritative totals from the back-end before shutdown
     let (_, _, _, spawned) = webots.totals()?;
     dataset.total_spawned = spawned;
+    // execution-path provenance: which steps rode the device-resident
+    // whole-run dispatch path (0 = host chunk scheduler / native)
+    let (_, resident_steps) = webots.run_stats()?;
+    dataset.resident_steps = resident_steps;
     let controller_cmds = webots.controller_cmds();
     let display_no = display.display_number();
     webots.close()?;
@@ -563,6 +567,89 @@ mod tests {
         let a = launch_instance(&mk(ChunkSteps::Auto, 7), &displays, &env, &physics).unwrap();
         let b = launch_instance(&mk(ChunkSteps::Fixed(1), 7), &displays, &env, &physics).unwrap();
         assert_eq!(a.dataset.rows, b.dataset.rows, "chunking changed the physics");
+        service.shutdown();
+    }
+
+    /// The PR 10 acceptance path: with a sampling period spanning the
+    /// horizon (one TraCI burst = the whole run) and a demand schedule
+    /// that fits the compiled departure table, the run executes as ONE
+    /// device-resident dispatch — and the dataset records it.  With the
+    /// default sampling period the bursts are 2 steps, the fast path
+    /// cannot engage, and the provenance stamp stays 0 (host chunking)
+    /// while the physics stays identical.
+    #[test]
+    fn whole_run_fast_path_engages_and_stamps_provenance() {
+        use crate::runtime::EngineService;
+        let service = match EngineService::auto() {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("skipping whole-run launch test: {e}");
+                return;
+            }
+        };
+        if !service.manifest().runs_available() {
+            eprintln!("skipping whole-run launch test: artifacts predate schema 5");
+            return;
+        }
+        let displays = DisplayRegistry::new();
+        let env = ExecEnv::new(
+            crate::container::build_webots_hpc_image(BuildHost::PersonalComputer).unwrap(),
+        );
+        let physics = PhysicsEngine::Hlo(service.clone());
+        // horizon = the smallest run-ladder rung (200 steps = 20 s)
+        let rung = service.manifest().run_steps[0] as u64;
+        let mk = |sampling_ms: u32, seed: u64| {
+            let mut world = sample_merge_world(free_base_port());
+            world
+                .find_mut("SumoInterface")
+                .unwrap()
+                .set_field("samplingPeriod", sampling_ms.to_string());
+            let mut cfg = config("resident", world, seed);
+            cfg.horizon_s = rung as f32 * 0.1;
+            cfg.max_steps = rung;
+            cfg
+        };
+        // sampling period spans the horizon → the first burst is the
+        // whole run → the resident fast path takes it in one dispatch
+        let span_ms = rung as u32 * 100;
+        let fused = launch_instance(&mk(span_ms, 7), &displays, &env, &physics).unwrap();
+        assert_eq!(fused.steps, rung);
+        assert_eq!(
+            fused.dataset.resident_steps, rung,
+            "whole horizon should be one device-resident dispatch"
+        );
+        // a chunk cap below the run rung gates the fast path out →
+        // fallback to the PR 5 chunk scheduler, stamped as such.  Same
+        // sampling period, so controller actuation boundaries agree.
+        let k = *service.manifest().rollout_steps.last().unwrap() as u64;
+        assert!(k < rung, "test premise: rollout rung below the run rung");
+        let chunked = launch_instance(
+            &mk(span_ms, 7).with_chunk_steps(ChunkSteps::Fixed(k as u32)),
+            &displays,
+            &env,
+            &physics,
+        )
+        .unwrap();
+        assert_eq!(
+            chunked.dataset.resident_steps, 0,
+            "host-chunked runs must stamp 0 resident steps"
+        );
+        // same seed → the two paths must produce the identical dataset
+        assert_eq!(fused.dataset.rows, chunked.dataset.rows, "paths diverged");
+        assert_eq!(fused.dataset.total_spawned, chunked.dataset.total_spawned);
+        // the default 200 ms sampling period (2-step bursts) also gates
+        // the fast path out on its own
+        let bursty = launch_instance(&mk(200, 7), &displays, &env, &physics).unwrap();
+        assert_eq!(bursty.dataset.resident_steps, 0);
+        // native runs always stamp 0
+        let native = launch_instance(
+            &mk(rung as u32 * 100, 7),
+            &displays,
+            &env,
+            &PhysicsEngine::Native,
+        )
+        .unwrap();
+        assert_eq!(native.dataset.resident_steps, 0);
         service.shutdown();
     }
 

@@ -19,6 +19,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::sumo::state::{GeometryVec, GEOM_COLS, OBS_COLS, PARAM_COLS, STATE_COLS};
+use crate::sumo::DEP_COLS;
 use crate::telemetry::{self, metrics, metrics::Histogram, EventKind};
 use crate::{Error, Result};
 
@@ -66,6 +67,40 @@ impl RolloutOutputs {
     }
 }
 
+/// The outputs of one whole-run execution (schema 5): a T-step run as
+/// ONE dispatch, demand compiled in as the departure-table operand.
+/// Spawns happen in-kernel, so the params rows are an output too (a
+/// spawn writes its driver-params row), and the inserted mask tells the
+/// host which table rows made it in — everything it needs to
+/// reconstruct its insertion queue for a chunked tail.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct RunOutputs {
+    /// f32[N*4] — state rows after the T-th step.
+    pub state: Vec<f32>,
+    /// f32[N*8] — params rows after the T-th step (in-kernel spawns
+    /// write them).
+    pub params: Vec<f32>,
+    /// f32[T*OBS_COLS] — the whole per-step observable trace,
+    /// bit-identical to T sequential insert-due-then-step iterations.
+    pub obs: Vec<f32>,
+    /// f32[D] — 1.0 per departure-table row the kernel inserted.
+    pub inserted: Vec<f32>,
+}
+
+impl RunOutputs {
+    /// Step i's observable row.
+    #[inline]
+    pub fn obs_row(&self, i: usize) -> &[f32] {
+        &self.obs[i * OBS_COLS..(i + 1) * OBS_COLS]
+    }
+
+    /// How many steps this run covered.
+    #[inline]
+    pub fn steps(&self) -> usize {
+        self.obs.len() / OBS_COLS
+    }
+}
+
 /// Clear-and-refill `dst` from `src` — no reallocation once `dst` has
 /// grown to the bucket's size.
 #[inline]
@@ -83,6 +118,9 @@ fn fill(dst: &mut Vec<f32>, src: &[f32]) {
 struct DispatchMetrics {
     step_latency_us: Arc<Histogram>,
     rollout_latency_us: RefCell<HashMap<usize, Arc<Histogram>>>,
+    /// Per-T whole-run series (`engine.dispatch.run_t{T}.latency_us`) —
+    /// the schema-5 run kind of the dispatch stream.
+    run_latency_us: RefCell<HashMap<usize, Arc<Histogram>>>,
 }
 
 impl DispatchMetrics {
@@ -90,6 +128,7 @@ impl DispatchMetrics {
         DispatchMetrics {
             step_latency_us: metrics::histogram("engine.dispatch.step.latency_us"),
             rollout_latency_us: RefCell::new(HashMap::new()),
+            run_latency_us: RefCell::new(HashMap::new()),
         }
     }
 
@@ -99,6 +138,16 @@ impl DispatchMetrics {
             .entry(k)
             .or_insert_with(|| {
                 metrics::histogram(&format!("engine.dispatch.rollout_k{k}.latency_us"))
+            })
+            .clone()
+    }
+
+    fn run(&self, t: usize) -> Arc<Histogram> {
+        self.run_latency_us
+            .borrow_mut()
+            .entry(t)
+            .or_insert_with(|| {
+                metrics::histogram(&format!("engine.dispatch.run_t{t}.latency_us"))
             })
             .clone()
     }
@@ -168,6 +217,10 @@ impl Engine {
         // schema 4: fused-rollout entry points, validated when present
         // (schema-3 artifacts still load — single steps only)
         manifest.validate_rollout_layout()?;
+        // schema 5: whole-run entry points + the departure-table
+        // operand, validated when present (older artifacts still load —
+        // the device-resident run path is simply unavailable)
+        manifest.validate_departure_layout()?;
         let client = xla::PjRtClient::cpu().map_err(Error::runtime)?;
         Ok(Engine {
             client: Rc::new(client),
@@ -237,6 +290,29 @@ impl Engine {
                 )));
             }
             let entry = self.manifest.rollout_entry(stem, k, bucket)?;
+            self.compile_entry_file(entry)
+        })
+    }
+
+    /// Compile (or fetch) the whole-run artifact `{stem}{t}_{bucket}`
+    /// (schema 5).  The run kind rides the pool key's name slot and the
+    /// total-steps rung its K slot, so runs never collide with rollouts
+    /// of the same bucket.
+    fn run_executable(
+        &self,
+        stem: &'static str,
+        bucket: usize,
+        t: usize,
+    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        self.pool.get_or_compile((stem, bucket, t), || {
+            if !self.manifest.runs_available() {
+                return Err(Error::Artifact(format!(
+                    "artifacts are schema {} with no whole-run entry points; \
+                     device-resident runs need schema 5 — re-run `make artifacts`",
+                    self.manifest.schema
+                )));
+            }
+            let entry = self.manifest.run_entry(stem, t, bucket)?;
             self.compile_entry_file(entry)
         })
     }
@@ -554,6 +630,180 @@ impl Engine {
         Ok(())
     }
 
+    /// Execute a WHOLE T-step run at `bucket` capacity as one dispatch
+    /// (schema 5): demand rides in as the `departures` table operand
+    /// (flattened `f32[D, DEP_COLS]`, `D` = the manifest's
+    /// `departure_rows`) and insertion happens in-kernel, so the host
+    /// never touches the loop — bit-identical to T sequential
+    /// insert-due-then-step iterations.  `t` must be a rung of the
+    /// manifest's run ladder.
+    pub fn run(
+        &self,
+        bucket: usize,
+        t: usize,
+        state: &[f32],
+        params: &[f32],
+        geom: &GeometryVec,
+        departures: &[f32],
+    ) -> Result<RunOutputs> {
+        let mut out = RunOutputs::default();
+        self.run_into(bucket, t, state, params, geom, departures, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Engine::run`] into a caller-owned [`RunOutputs`] — the
+    /// whole-run hot path (same FFI-boundary caveat as
+    /// [`Engine::step_into`]: the four result vectors are swapped in).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_into(
+        &self,
+        bucket: usize,
+        t: usize,
+        state: &[f32],
+        params: &[f32],
+        geom: &GeometryVec,
+        departures: &[f32],
+        out: &mut RunOutputs,
+    ) -> Result<()> {
+        let d = self.manifest.departure_rows;
+        if state.len() != bucket * STATE_COLS
+            || params.len() != bucket * PARAM_COLS
+            || departures.len() != d * DEP_COLS
+        {
+            return Err(Error::Runtime(format!(
+                "shape mismatch: state {} params {} departures {} for bucket {bucket} (D={d})",
+                state.len(),
+                params.len(),
+                departures.len()
+            )));
+        }
+        let hist = self.dispatch.run(t);
+        timed(&hist, "run", bucket, t, 1, || {
+            self.run_dispatch(bucket, t, state, params, geom, departures, out)
+        })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_dispatch(
+        &self,
+        bucket: usize,
+        t: usize,
+        state: &[f32],
+        params: &[f32],
+        geom: &GeometryVec,
+        departures: &[f32],
+        out: &mut RunOutputs,
+    ) -> Result<()> {
+        let d = self.manifest.departure_rows;
+        let exe = self.run_executable("run", bucket, t)?;
+        let s = Self::literal_2d(state, bucket, STATE_COLS)?;
+        let p = Self::literal_2d(params, bucket, PARAM_COLS)?;
+        let g = xla::Literal::vec1(geom.as_slice());
+        let dep = Self::literal_2d(departures, d, DEP_COLS)?;
+        let result = exe.execute::<xla::Literal>(&[s, p, g, dep]).map_err(Error::runtime)?[0][0]
+            .to_literal_sync()
+            .map_err(Error::runtime)?;
+        let (st, pr, ob, ins) = result.to_tuple4().map_err(Error::runtime)?;
+        out.state = st.to_vec::<f32>().map_err(Error::runtime)?;
+        out.params = pr.to_vec::<f32>().map_err(Error::runtime)?;
+        out.obs = ob.to_vec::<f32>().map_err(Error::runtime)?;
+        out.inserted = ins.to_vec::<f32>().map_err(Error::runtime)?;
+        debug_assert_eq!(out.obs.len(), t * OBS_COLS);
+        debug_assert_eq!(out.inserted.len(), d);
+        Ok(())
+    }
+
+    /// Batched whole-run: one PJRT dispatch executes `batch` co-located
+    /// T-step runs via the vmapped `runb{t}` artifact — the run lane of
+    /// the engine-service micro-batcher.  Inputs are concatenations over
+    /// the full batch width (pad unused lanes with zeros = inactive
+    /// worlds and all-padding departure tables); `outs` lanes are
+    /// refilled in place like [`Engine::rollout_batched_into`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_batched_into(
+        &self,
+        bucket: usize,
+        t: usize,
+        states: &[f32],
+        params: &[f32],
+        geoms: &[f32],
+        departures: &[f32],
+        outs: &mut Vec<RunOutputs>,
+    ) -> Result<()> {
+        let b = self.manifest.batch;
+        let d = self.manifest.departure_rows;
+        if b < 2 {
+            return Err(Error::Artifact(
+                "manifest has no batched run artifact; re-run `make artifacts`".into(),
+            ));
+        }
+        if states.len() != b * bucket * STATE_COLS
+            || params.len() != b * bucket * PARAM_COLS
+            || geoms.len() != b * GEOM_COLS
+            || departures.len() != b * d * DEP_COLS
+        {
+            return Err(Error::Runtime(format!(
+                "batched shape mismatch: states {} params {} geoms {} departures {} \
+                 for batch {b} x bucket {bucket} (D={d})",
+                states.len(),
+                params.len(),
+                geoms.len(),
+                departures.len()
+            )));
+        }
+        let hist = self.dispatch.run(t);
+        timed(&hist, "run", bucket, t, b, || {
+            self.run_batched_dispatch(bucket, t, states, params, geoms, departures, outs)
+        })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_batched_dispatch(
+        &self,
+        bucket: usize,
+        t: usize,
+        states: &[f32],
+        params: &[f32],
+        geoms: &[f32],
+        departures: &[f32],
+        outs: &mut Vec<RunOutputs>,
+    ) -> Result<()> {
+        let b = self.manifest.batch;
+        let d = self.manifest.departure_rows;
+        let exe = self.run_executable("runb", bucket, t)?;
+        let s = xla::Literal::vec1(states)
+            .reshape(&[b as i64, bucket as i64, STATE_COLS as i64])
+            .map_err(Error::runtime)?;
+        let p = xla::Literal::vec1(params)
+            .reshape(&[b as i64, bucket as i64, PARAM_COLS as i64])
+            .map_err(Error::runtime)?;
+        let g = xla::Literal::vec1(geoms)
+            .reshape(&[b as i64, GEOM_COLS as i64])
+            .map_err(Error::runtime)?;
+        let dep = xla::Literal::vec1(departures)
+            .reshape(&[b as i64, d as i64, DEP_COLS as i64])
+            .map_err(Error::runtime)?;
+        let result = exe
+            .execute::<xla::Literal>(&[s, p, g, dep])
+            .map_err(Error::runtime)?[0][0]
+            .to_literal_sync()
+            .map_err(Error::runtime)?;
+        let (st, pr, ob, ins) = result.to_tuple4().map_err(Error::runtime)?;
+        let st = st.to_vec::<f32>().map_err(Error::runtime)?;
+        let pr = pr.to_vec::<f32>().map_err(Error::runtime)?;
+        let ob = ob.to_vec::<f32>().map_err(Error::runtime)?;
+        let ins = ins.to_vec::<f32>().map_err(Error::runtime)?;
+        debug_assert_eq!(ob.len(), b * t * OBS_COLS);
+        outs.resize_with(b, RunOutputs::default);
+        for (i, o) in outs.iter_mut().enumerate() {
+            fill(&mut o.state, &st[i * bucket * STATE_COLS..(i + 1) * bucket * STATE_COLS]);
+            fill(&mut o.params, &pr[i * bucket * PARAM_COLS..(i + 1) * bucket * PARAM_COLS]);
+            fill(&mut o.obs, &ob[i * t * OBS_COLS..(i + 1) * t * OBS_COLS]);
+            fill(&mut o.inserted, &ins[i * d..(i + 1) * d]);
+        }
+        Ok(())
+    }
+
     /// Execute the bare IDM kernel (microbench + cross-validation).
     pub fn idm(&self, bucket: usize, state: &[f32], params: &[f32]) -> Result<Vec<f32>> {
         let exe = self.executable("idm", bucket)?;
@@ -821,6 +1071,170 @@ mod tests {
         // lane buffers are reused across dispatches
         let ptrs: Vec<*const f32> = outs.iter().map(|o| o.state.as_ptr()).collect();
         e.rollout_batched_into(bucket, k, &states, &params, &geoms, &mut outs).unwrap();
+        for (o, p) in outs.iter().zip(ptrs) {
+            assert_eq!(o.state.as_ptr(), p, "lane buffer reallocated");
+        }
+    }
+
+    /// An all-padding departure table: no row ever comes due.
+    fn empty_table(d: usize) -> Vec<f32> {
+        let mut rows = vec![0.0f32; d * DEP_COLS];
+        for i in 0..d {
+            rows[i * DEP_COLS] = crate::sumo::DEP_PAD_EPOCH;
+        }
+        rows
+    }
+
+    /// The schema-5 ABI guarantee with no demand: one whole-run dispatch
+    /// == T sequential step dispatches, bit for bit — final state and
+    /// the whole obs trace — and the untouched params rows round-trip.
+    #[test]
+    fn run_with_empty_table_matches_sequential_steps() {
+        let Some(e) = engine() else { return };
+        if !e.manifest().runs_available() {
+            eprintln!("skipping: artifacts predate schema 5");
+            return;
+        }
+        let bucket = e.manifest().buckets[0];
+        let t_steps = e.manifest().run_steps[0];
+        let d = e.manifest().departure_rows;
+        let g = default_geom();
+        let mut t = Traffic::new(bucket);
+        t.spawn(100.0, 20.0, 1.0, DriverParams::default());
+        t.spawn(160.0, 25.0, 2.0, DriverParams::cav());
+        let mut seq_state = t.state.clone();
+        let mut seq_obs = Vec::new();
+        let mut step_out = StepOutputs::default();
+        for _ in 0..t_steps {
+            e.step_into(bucket, &seq_state, &t.params, &g, &mut step_out).unwrap();
+            seq_state.copy_from_slice(&step_out.state);
+            seq_obs.extend_from_slice(&step_out.obs);
+        }
+        let out = e.run(bucket, t_steps, &t.state, &t.params, &g, &empty_table(d)).unwrap();
+        assert_eq!(out.steps(), t_steps);
+        assert_eq!(out.state, seq_state, "T={t_steps}: final state diverged");
+        assert_eq!(out.obs, seq_obs, "T={t_steps}: obs trace diverged");
+        assert_eq!(out.params, t.params, "no spawn: params must round-trip");
+        assert!(out.inserted.iter().all(|&m| m == 0.0));
+        // a T that was never lowered is a loud artifact error
+        assert!(e.run(bucket, 7, &t.state, &t.params, &g, &empty_table(d)).is_err());
+    }
+
+    /// In-kernel insertion: a table row comes due mid-run, spawns into
+    /// the first inactive slot exactly like the host scheduler would,
+    /// and the whole run stays bit-exact with a sequential mirror that
+    /// performs the same insert host-side.
+    #[test]
+    fn run_inserts_departures_in_kernel() {
+        let Some(e) = engine() else { return };
+        if !e.manifest().runs_available() {
+            return;
+        }
+        let bucket = e.manifest().buckets[0];
+        let t_steps = e.manifest().run_steps[0];
+        let d = e.manifest().departure_rows;
+        let g = default_geom();
+        let mut t = Traffic::new(bucket);
+        t.spawn(100.0, 20.0, 1.0, DriverParams::default());
+        t.spawn(160.0, 25.0, 2.0, DriverParams::cav());
+        // the spawn payload, via a scratch world so the test never
+        // hand-writes the params layout
+        let mut scratch = Traffic::new(4);
+        // exit ~150 m ahead: reached well inside the shortest (200-step
+        // = 20 s) rung, so the retirement is observable in the trace
+        scratch.spawn(10.0, 20.0, 1.0, DriverParams::default().with_exit(150.0));
+        let spawn_state = &scratch.state[0..STATE_COLS];
+        let spawn_params = &scratch.params[0..PARAM_COLS];
+        let epoch = 5usize;
+        let mut table = empty_table(d);
+        table[0] = epoch as f32;
+        table[1..4].copy_from_slice(&spawn_state[0..3]);
+        table[4..DEP_COLS].copy_from_slice(spawn_params);
+        let mut seq_state = t.state.clone();
+        let mut seq_params = t.params.clone();
+        let mut seq_obs = Vec::new();
+        let mut step_out = StepOutputs::default();
+        for s in 0..t_steps {
+            if s == epoch {
+                let slot = (0..bucket)
+                    .find(|&i| seq_state[i * STATE_COLS + 3] < 0.5)
+                    .unwrap();
+                seq_state[slot * STATE_COLS..(slot + 1) * STATE_COLS]
+                    .copy_from_slice(spawn_state);
+                seq_params[slot * PARAM_COLS..(slot + 1) * PARAM_COLS]
+                    .copy_from_slice(spawn_params);
+            }
+            e.step_into(bucket, &seq_state, &seq_params, &g, &mut step_out).unwrap();
+            seq_state.copy_from_slice(&step_out.state);
+            seq_obs.extend_from_slice(&step_out.obs);
+        }
+        let out = e.run(bucket, t_steps, &t.state, &t.params, &g, &table).unwrap();
+        assert_eq!(out.inserted[0], 1.0, "the due row must insert");
+        assert!(out.inserted[1..].iter().all(|&m| m == 0.0));
+        assert_eq!(out.state, seq_state, "final state diverged");
+        assert_eq!(out.obs, seq_obs, "obs trace diverged");
+        assert_eq!(out.params, seq_params, "spawned params row missing");
+        // the spawn was exit-flagged at 450 m: it must retire inside the
+        // run (n_exited ticks once, so insertion really happened at the
+        // epoch, not at step 0)
+        let exits: f32 = (0..t_steps).map(|i| out.obs_row(i)[4]).sum();
+        assert_eq!(exits, 1.0, "in-kernel spawn must run and exit");
+        assert_eq!(out.obs_row(epoch)[0], 3.0, "n_active ticks at the epoch");
+        assert_eq!(out.obs_row(epoch - 1)[0], 2.0, "not before it");
+    }
+
+    /// Batched whole-run lanes match solo runs (tolerance-checked, same
+    /// discipline as the batched rollout test — bit-exactness is claimed
+    /// fused-vs-sequential, not batched-vs-solo).
+    #[test]
+    fn run_batched_lanes_match_solo_runs() {
+        let Some(e) = engine() else { return };
+        if !e.manifest().runs_available() {
+            return;
+        }
+        let b = e.manifest().batch;
+        if b < 2 {
+            eprintln!("no batched run artifact; skipping");
+            return;
+        }
+        let bucket = e.manifest().buckets[0];
+        let t_steps = e.manifest().run_steps[0];
+        let d = e.manifest().departure_rows;
+        let g = default_geom();
+        let worlds: Vec<Traffic> = (0..b)
+            .map(|i| {
+                let mut t = Traffic::new(bucket);
+                t.spawn(30.0 + 40.0 * i as f32, 8.0 + 2.0 * i as f32, 1.0, DriverParams::default());
+                t
+            })
+            .collect();
+        let mut states = Vec::new();
+        let mut params = Vec::new();
+        let mut geoms = Vec::new();
+        let mut departures = Vec::new();
+        for _ in &worlds {
+            departures.extend_from_slice(&empty_table(d));
+        }
+        for w in &worlds {
+            states.extend_from_slice(&w.state);
+            params.extend_from_slice(&w.params);
+            geoms.extend_from_slice(g.as_slice());
+        }
+        let mut outs = Vec::new();
+        e.run_batched_into(bucket, t_steps, &states, &params, &geoms, &departures, &mut outs)
+            .unwrap();
+        assert_eq!(outs.len(), b);
+        let close = |a: &[f32], b: &[f32]| {
+            a.len() == b.len() && a.iter().zip(b).all(|(x, y)| (x - y).abs() <= 1e-4)
+        };
+        for (i, (w, lane)) in worlds.iter().zip(&outs).enumerate() {
+            let solo = e.run(bucket, t_steps, &w.state, &w.params, &g, &empty_table(d)).unwrap();
+            assert!(close(&lane.state, &solo.state), "lane {i} state diverged");
+            assert!(close(&lane.obs, &solo.obs), "lane {i} obs diverged");
+        }
+        let ptrs: Vec<*const f32> = outs.iter().map(|o| o.state.as_ptr()).collect();
+        e.run_batched_into(bucket, t_steps, &states, &params, &geoms, &departures, &mut outs)
+            .unwrap();
         for (o, p) in outs.iter().zip(ptrs) {
             assert_eq!(o.state.as_ptr(), p, "lane buffer reallocated");
         }

@@ -39,6 +39,27 @@ pub const ROLLOUT_LADDER: [usize; 3] = [1, 8, 32];
 /// (solo) and `rolloutb{K}_{N}` (micro-batched).
 pub const ROLLOUT_ENTRY_POINTS: [&str; 2] = ["rollout", "rolloutb"];
 
+/// The schema-5 departure-table row layout (`model.py DEP_COLUMNS`; see
+/// `sumo::simulation::DEP_*`): the epoch step index at which a departure
+/// becomes due, then the full spawn payload — state row `[x, v, lane]`
+/// plus the eight [`PARAM_COLUMNS`].  Demand compiled into an operand is
+/// what makes a whole run one dispatch.
+pub const DEPARTURE_COLUMNS: [&str; crate::sumo::DEP_COLS] = [
+    "step", "x", "v", "lane", "v0", "T", "a_max", "b", "s0", "length", "exit_pos", "exit_flag",
+];
+
+/// The whole-run total-steps ladder the compile path lowers per bucket
+/// (`aot.py RUN_STEPS`) — exact step counts, not upper bounds: 1200 and
+/// 1800 are the scenario families' horizons at DT=0.1, 200 the short
+/// validation horizon.  Like [`ROLLOUT_LADDER`], the runtime is
+/// data-driven ([`Manifest::run_steps`]); this constant documents and
+/// gates the shipped ladder (`scripts/check_manifest.py`).
+pub const RUN_LADDER: [usize; 3] = [200, 1200, 1800];
+
+/// Entry-name stems of the schema-5 whole-run artifacts: `run{T}_{N}`
+/// (solo) and `runb{T}_{N}` (micro-batched).
+pub const RUN_ENTRY_POINTS: [&str; 2] = ["run", "runb"];
+
 /// One lowered artifact.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactEntry {
@@ -52,6 +73,9 @@ pub struct ArtifactEntry {
     /// Fused steps per dispatch (rollout entries, schema 4); 0 for
     /// single-step artifacts.
     pub k: usize,
+    /// Total physics steps of a whole-run entry (schema 5); 0 for
+    /// everything else.
+    pub k_total: usize,
 }
 
 /// The whole manifest (see `python/compile/aot.py`).
@@ -62,10 +86,13 @@ pub struct Manifest {
     /// 2 = geometry-generic (step/stepb take the f32[GEOM_COLS] operand),
     /// 3 = destination-aware (params carry the `[exit_pos, exit_flag]`
     /// columns, obs gains `n_exited`), 4 = fused rollouts (adds the
-    /// `rollout{K}_{N}`/`rolloutb{K}_{N}` entry points over a K ladder).
+    /// `rollout{K}_{N}`/`rolloutb{K}_{N}` entry points over a K ladder),
+    /// 5 = whole-run entries (`run{T}_{N}`/`runb{T}_{N}` over a
+    /// total-steps ladder, demand as a departure-table operand).
     /// The runtime executes single-step entries on schema >= 3; the
     /// rollout fast path is gated on schema >= 4
-    /// ([`Manifest::rollouts_available`]).
+    /// ([`Manifest::rollouts_available`]), the whole-run fast path on
+    /// schema >= 5 ([`Manifest::runs_available`]).
     pub schema: u32,
     pub state_columns: Vec<String>,
     pub param_columns: Vec<String>,
@@ -86,6 +113,19 @@ pub struct Manifest {
     /// Entry-name stems of the rollout artifacts (schema 4; normally
     /// [`ROLLOUT_ENTRY_POINTS`]).
     pub rollout_entry_points: Vec<String>,
+    /// The whole-run total-steps ladder (schema 5; empty = no run
+    /// entries lowered).  Sorted ascending, mirrored from
+    /// `aot.py RUN_STEPS` — exact step counts, not upper bounds.
+    pub run_steps: Vec<usize>,
+    /// Entry-name stems of the whole-run artifacts (schema 5; normally
+    /// [`RUN_ENTRY_POINTS`]).
+    pub run_entry_points: Vec<String>,
+    /// Departure-table operand layout (schema 5; normally
+    /// [`DEPARTURE_COLUMNS`]).
+    pub departure_columns: Vec<String>,
+    /// Departure-table row capacity per run entry (schema 5; 0 = none
+    /// lowered).  Schedules with more due rows fall back to chunking.
+    pub departure_rows: usize,
     pub entries: BTreeMap<String, ArtifactEntry>,
 }
 
@@ -120,6 +160,7 @@ impl Manifest {
                     outputs: e.get("outputs")?.as_usize()?,
                     operands: e.get("operands").and_then(|v| v.as_usize()).unwrap_or(0),
                     k: e.get("k").and_then(|v| v.as_usize()).unwrap_or(0),
+                    k_total: e.get("k_total").and_then(|v| v.as_usize()).unwrap_or(0),
                 },
             );
         }
@@ -151,6 +192,23 @@ impl Manifest {
                 Ok(v) => str_vec(v)?,
                 Err(_) => Vec::new(),
             },
+            run_steps: match j.get("run_steps") {
+                Ok(v) => v
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_usize())
+                    .collect::<Result<_>>()?,
+                Err(_) => Vec::new(),
+            },
+            run_entry_points: match j.get("run_entry_points") {
+                Ok(v) => str_vec(v)?,
+                Err(_) => Vec::new(),
+            },
+            departure_columns: match j.get("departure_columns") {
+                Ok(v) => str_vec(v)?,
+                Err(_) => Vec::new(),
+            },
+            departure_rows: j.get("departure_rows").and_then(|v| v.as_usize()).unwrap_or(0),
             buckets: j
                 .get("buckets")?
                 .as_arr()?
@@ -191,6 +249,15 @@ impl Manifest {
             .ok_or_else(|| Error::Artifact(format!("no artifact entry '{key}'")))
     }
 
+    /// The whole-run entry `{stem}{t}_{bucket}` (schema 5), e.g.
+    /// `run1200_64` or `runb200_16`.
+    pub fn run_entry(&self, stem: &str, t: usize, bucket: usize) -> Result<&ArtifactEntry> {
+        let key = format!("{stem}{t}_{bucket}");
+        self.entries
+            .get(&key)
+            .ok_or_else(|| Error::Artifact(format!("no artifact entry '{key}'")))
+    }
+
     /// The scenario constants the artifact was lowered with — must agree
     /// with the rust-side [`MergeScenario`].
     pub fn scenario(&self) -> MergeScenario {
@@ -220,6 +287,14 @@ impl Manifest {
     /// back to a `[1]` ladder).
     pub fn rollouts_available(&self) -> bool {
         self.schema >= 4 && !self.rollout_steps.is_empty()
+    }
+
+    /// Do the artifacts ship whole-run entry points (demand as a
+    /// departure-table operand)?  Schema <= 4 artifacts still serve
+    /// steps and rollouts; the device-resident run fast path simply
+    /// stays off and `SumoSim` keeps its PR 5 chunk scheduler.
+    pub fn runs_available(&self) -> bool {
+        self.schema >= 5 && !self.run_steps.is_empty() && self.departure_rows > 0
     }
 
     /// Assert the compile-path constants match the rust defaults; a
@@ -343,6 +418,68 @@ impl Manifest {
         Ok(())
     }
 
+    /// Operand/shape contract of the schema-5 whole-run entry points:
+    /// the total-steps ladder must be sorted strictly ascending, the
+    /// departure-table layout must match [`DEPARTURE_COLUMNS`] (a
+    /// drifted column scrambles every compiled-in spawn), and every
+    /// (stem, T, bucket) triple must be lowered with the four-operand
+    /// (state, params, geom, departures), four-output (state, params,
+    /// obs trace, inserted mask) signature and a matching per-entry
+    /// `k_total`.  A no-op for schema <= 4 manifests.
+    pub fn validate_departure_layout(&self) -> Result<()> {
+        if !self.runs_available() {
+            return Ok(());
+        }
+        let mut sorted = self.run_steps.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted != self.run_steps {
+            return Err(Error::Artifact(format!(
+                "run total-steps ladder {:?} must be strictly ascending; \
+                 re-run `make artifacts`",
+                self.run_steps
+            )));
+        }
+        if self.departure_columns != DEPARTURE_COLUMNS {
+            return Err(Error::Artifact(format!(
+                "departure-table layout {:?} != expected {:?}; re-run `make artifacts`",
+                self.departure_columns, DEPARTURE_COLUMNS
+            )));
+        }
+        if !self.run_entry_points.iter().any(|s| s == "run") {
+            return Err(Error::Artifact(format!(
+                "schema-5 manifest lists no 'run' entry point \
+                 (run_entry_points = {:?}); re-run `make artifacts`",
+                self.run_entry_points
+            )));
+        }
+        for stem in &self.run_entry_points {
+            if !RUN_ENTRY_POINTS.contains(&stem.as_str()) {
+                return Err(Error::Artifact(format!(
+                    "unknown run entry point '{stem}' (expected {RUN_ENTRY_POINTS:?})"
+                )));
+            }
+            // the batched stem is only a contract when batching is on
+            if *stem == "runb" && self.batch < 2 {
+                continue;
+            }
+            for &t in &self.run_steps {
+                for &b in &self.buckets {
+                    let e = self.run_entry(stem, t, b)?;
+                    if e.operands != 4 || e.outputs != 4 || e.k_total != t || e.n != b {
+                        return Err(Error::Artifact(format!(
+                            "run entry '{stem}{t}_{b}' records operands={} \
+                             outputs={} k_total={} n={}, expected 4/4/{t}/{b}; \
+                             re-run `make artifacts`",
+                            e.operands, e.outputs, e.k_total, e.n
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Per-column validation of the schema-3 params/obs layouts: the
     /// manifest must record exactly [`PARAM_COLUMNS`] and
     /// [`OBS_COLUMNS`] — a drifted or reordered column silently
@@ -386,11 +523,36 @@ mod tests {
         m.validate_geometry_layout().unwrap();
         m.validate_param_layout().unwrap();
         m.validate_rollout_layout().unwrap();
+        m.validate_departure_layout().unwrap();
         assert!(m.geometry_generic());
         assert!(m.destination_aware());
         assert!(m.rollouts_available());
+        assert!(m.runs_available());
         assert_eq!(m.rollout_steps, ROLLOUT_LADDER);
+        assert_eq!(m.run_steps, RUN_LADDER);
+        assert_eq!(m.departure_columns, DEPARTURE_COLUMNS);
+        assert!(m.departure_rows > 0);
         assert!(!m.buckets.is_empty());
+    }
+
+    #[test]
+    fn run_entries_exist_for_every_ladder_rung() {
+        let Some(m) = manifest() else { return };
+        if !m.runs_available() {
+            eprintln!("skipping: artifacts predate schema 5");
+            return;
+        }
+        for &b in &m.buckets {
+            for &t in &m.run_steps {
+                let e = m.run_entry("run", t, b).unwrap();
+                assert_eq!((e.n, e.k_total, e.outputs, e.operands), (b, t, 4, 4));
+                if m.batch >= 2 {
+                    let eb = m.run_entry("runb", t, b).unwrap();
+                    assert_eq!((eb.n, eb.k_total), (b, t));
+                }
+            }
+        }
+        assert!(m.run_entry("run", 7, m.buckets[0]).is_err());
     }
 
     #[test]
@@ -495,6 +657,27 @@ mod tests {
         assert!(m.rollout_entry("rollout", 8, 16).is_err());
     }
 
+    /// A minimal valid schema-5 manifest: schema 4 plus a single-rung
+    /// run ladder with a compiled-in departure table (solo entries only;
+    /// batch 1 keeps `runb` optional).
+    fn synthetic_schema5() -> String {
+        synthetic_schema4()
+            .replace(r#""schema": 4"#, r#""schema": 5"#)
+            .replace(
+                r#""rollout_entry_points": ["rollout"],"#,
+                r#""rollout_entry_points": ["rollout"],
+          "run_steps": [200],
+          "run_entry_points": ["run"],
+          "departure_columns": ["step", "x", "v", "lane", "v0", "T", "a_max", "b", "s0", "length", "exit_pos", "exit_flag"],
+          "departure_rows": 8,"#,
+            )
+            .replace(
+                r#""rollout8_16": {"file": "rollout8_16.hlo.txt", "n": 16, "k": 8, "outputs": 2, "operands": 3}"#,
+                r#""rollout8_16": {"file": "rollout8_16.hlo.txt", "n": 16, "k": 8, "outputs": 2, "operands": 3},
+            "run200_16": {"file": "run200_16.hlo.txt", "n": 16, "k_total": 200, "outputs": 4, "operands": 4}"#,
+            )
+    }
+
     #[test]
     fn parse_synthetic_schema4_manifest() {
         let m = Manifest::parse(&synthetic_schema4()).unwrap();
@@ -539,6 +722,69 @@ mod tests {
         );
         let m = Manifest::parse(&text).unwrap();
         assert!(m.validate_rollout_layout().is_err());
+    }
+
+    #[test]
+    fn schema4_loads_without_runs() {
+        // schema-4 artifacts still serve steps and rollouts; the
+        // whole-run fast path is simply unavailable
+        let m = Manifest::parse(&synthetic_schema4()).unwrap();
+        assert!(!m.runs_available());
+        m.validate_departure_layout().unwrap();
+        assert!(m.run_entry("run", 200, 16).is_err());
+    }
+
+    #[test]
+    fn parse_synthetic_schema5_manifest() {
+        let m = Manifest::parse(&synthetic_schema5()).unwrap();
+        m.validate_rollout_layout().unwrap();
+        m.validate_departure_layout().unwrap();
+        assert!(m.runs_available());
+        assert_eq!(m.run_steps, [200]);
+        assert_eq!(m.departure_rows, 8);
+        assert_eq!(m.departure_columns, DEPARTURE_COLUMNS);
+        let e = m.run_entry("run", 200, 16).unwrap();
+        assert_eq!((e.k_total, e.outputs, e.operands), (200, 4, 4));
+    }
+
+    #[test]
+    fn malformed_departure_layouts_rejected() {
+        // a drifted departure column scrambles every spawn payload
+        let text = synthetic_schema5().replace(
+            r#""step", "x", "v", "lane""#,
+            r#""step", "v", "x", "lane""#,
+        );
+        let m = Manifest::parse(&text).unwrap();
+        let err = m.validate_departure_layout().unwrap_err().to_string();
+        assert!(err.contains("departure"), "{err}");
+        // a missing run entry for a declared ladder rung
+        let text = synthetic_schema5().replace(
+            r#""run_steps": [200]"#,
+            r#""run_steps": [200, 1200]"#,
+        );
+        let m = Manifest::parse(&text).unwrap();
+        assert!(m.validate_departure_layout().is_err());
+        // a run entry whose compiled-in step count disagrees with its rung
+        let text = synthetic_schema5().replace(
+            r#""k_total": 200, "outputs": 4, "operands": 4"#,
+            r#""k_total": 100, "outputs": 4, "operands": 4"#,
+        );
+        let m = Manifest::parse(&text).unwrap();
+        assert!(m.validate_departure_layout().is_err());
+        // a run entry missing the departure-table operand
+        let text = synthetic_schema5().replace(
+            r#""k_total": 200, "outputs": 4, "operands": 4"#,
+            r#""k_total": 200, "outputs": 4, "operands": 3"#,
+        );
+        let m = Manifest::parse(&text).unwrap();
+        assert!(m.validate_departure_layout().is_err());
+        // a schema-5 manifest that forgot the "run" stem
+        let text = synthetic_schema5().replace(
+            r#""run_entry_points": ["run"]"#,
+            r#""run_entry_points": []"#,
+        );
+        let m = Manifest::parse(&text).unwrap();
+        assert!(m.validate_departure_layout().is_err());
     }
 
     #[test]

@@ -18,7 +18,7 @@ mod manifest;
 mod pool;
 mod service;
 
-pub use engine::{Engine, RolloutOutputs, StepOutputs};
+pub use engine::{Engine, RolloutOutputs, RunOutputs, StepOutputs};
 pub use manifest::{ArtifactEntry, Manifest};
 pub use pool::{ExecutablePool, PoolKey};
 pub use service::{EngineService, EngineSession, HloStepper};

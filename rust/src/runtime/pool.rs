@@ -21,8 +21,11 @@ use crate::Result;
 
 /// Cache key: artifact kernel name + vehicle-count bucket + fused-step
 /// count (0 for the single-step entries; the K-ladder rung for schema-4
-/// rollout executables).  Still fully static — no `format!` on the
-/// per-dispatch lookup path.
+/// rollout executables; the total-steps rung for schema-5 whole-run
+/// executables).  The run kind rides the name slot (`"run"`/`"runb"` vs
+/// `"rollout"`/`"rolloutb"`), so a run and a rollout of the same bucket
+/// and step count never collide.  Still fully static — no `format!` on
+/// the per-dispatch lookup path.
 pub type PoolKey = (&'static str, usize, usize);
 
 /// Key → compiled executable cache.  The probe/build/insert protocol

@@ -42,8 +42,10 @@ use crate::sumo::{MergeScenario, StepObs, Stepper};
 use crate::telemetry::{self, metrics, EventKind};
 use crate::{Error, Result};
 
-use super::engine::{Engine, RolloutOutputs, StepOutputs};
+use super::engine::{Engine, RolloutOutputs, RunOutputs, StepOutputs};
 use super::manifest::Manifest;
+
+use crate::sumo::{DepartureTable, DEP_COLS, DEP_PAD_EPOCH, D_STEP};
 
 /// Where a step reply goes: a per-call channel (one-shot API) or a
 /// session's persistent channel (buffers travel back with the reply).
@@ -94,6 +96,28 @@ struct RolloutReq {
     enqueued: Instant,
 }
 
+/// One whole-run request (schema 5): a T-step run as one dispatch, the
+/// demand schedule riding along as the flattened departure-table
+/// operand.  Same-`(bucket, t)` runs coalesce into one `runb{t}`
+/// dispatch — the whole-run micro-batcher lane.  Replies are per-call
+/// channels on both the one-shot and session paths: a run amortizes its
+/// buffers over T steps, so the per-step zero-allocation discipline of
+/// [`StepReq`] buys nothing here.
+struct RunReq {
+    bucket: usize,
+    /// Total steps — must be a manifest run-ladder rung.
+    t: usize,
+    state: Vec<f32>,
+    params: Vec<f32>,
+    geom: GeometryVec,
+    /// Flattened `f32[D, DEP_COLS]` departure table.
+    departures: Vec<f32>,
+    out: RunOutputs,
+    reply: Sender<Result<RunOutputs>>,
+    /// See [`StepReq::enqueued`].
+    enqueued: Instant,
+}
+
 /// What a session reply carries back besides the input buffers: the
 /// single-step outputs or a fused chunk's outputs, depending on which
 /// request the session issued.
@@ -114,6 +138,7 @@ struct SessionReply {
 enum Request {
     Step(StepReq),
     Rollout(RolloutReq),
+    Run(RunReq),
     Idm {
         bucket: usize,
         state: Vec<f32>,
@@ -215,11 +240,17 @@ impl LaneMetrics {
 struct BatchScratch {
     batch: Vec<StepReq>,
     rollouts: Vec<RolloutReq>,
+    runs: Vec<RunReq>,
     states: Vec<f32>,
     params: Vec<f32>,
     geoms: Vec<f32>,
+    /// Departure-table staging for the whole-run lane (padding lanes get
+    /// all-[`DEP_PAD_EPOCH`] tables so no phantom spawn lands in a dead
+    /// world).
+    deps: Vec<f32>,
     outs: Vec<StepOutputs>,
     routs: Vec<RolloutOutputs>,
+    runouts: Vec<RunOutputs>,
 }
 
 /// Send the finished request back to its caller, routing buffers to the
@@ -526,6 +557,159 @@ fn serve_rollout(
     }
 }
 
+/// Serve one whole-run request, dynamically micro-batching with any
+/// other waiting run of the SAME `(bucket, t)` into one `runb{t}`
+/// dispatch — the whole-run lane of the micro-batcher: up to
+/// `manifest.batch` co-located instances × a WHOLE T-step run each ride
+/// a single PJRT dispatch.  The launcher starts co-located instances
+/// together and the run ladder pins them to the same T, so same-rung
+/// batches are the common case.  Artifact errors on the batched path
+/// fall back to per-request solo runs, exactly like the other lanes.
+fn serve_run(
+    engine: &Engine,
+    rx: &Receiver<Request>,
+    backlog: &mut VecDeque<Request>,
+    scratch: &mut BatchScratch,
+    lane: &LaneMetrics,
+    first: RunReq,
+) {
+    let (bucket, t) = (first.bucket, first.t);
+    let bmax = engine.manifest().batch;
+    let d = engine.manifest().departure_rows;
+    let scols = STATE_COLS;
+    let pcols = PARAM_COLS;
+    let well_formed = first.state.len() == bucket * scols
+        && first.params.len() == bucket * pcols
+        && first.departures.len() == d * DEP_COLS;
+    scratch.runs.clear();
+    scratch.runs.push(first);
+
+    if bmax >= 2 && well_formed {
+        let mut waited = false;
+        while scratch.runs.len() < bmax {
+            match rx.try_recv() {
+                Ok(Request::Run(r))
+                    if r.bucket == bucket
+                        && r.t == t
+                        && r.state.len() == bucket * scols
+                        && r.params.len() == bucket * pcols
+                        && r.departures.len() == d * DEP_COLS =>
+                {
+                    scratch.runs.push(r)
+                }
+                Ok(other) => {
+                    backlog.push_back(other);
+                    if backlog.len() > 64 {
+                        break;
+                    }
+                }
+                Err(_) => {
+                    // a run dispatch is worth a longer straggler wait
+                    // than a step (it amortizes over T steps), but peers
+                    // launching together are already mid-send — the same
+                    // short window keeps the solo path latency-free
+                    if waited || scratch.runs.len() < 2 {
+                        break;
+                    }
+                    waited = true;
+                    match rx.recv_timeout(Duration::from_micros(60)) {
+                        Ok(Request::Run(r))
+                            if r.bucket == bucket
+                                && r.t == t
+                                && r.state.len() == bucket * scols
+                                && r.params.len() == bucket * pcols
+                                && r.departures.len() == d * DEP_COLS =>
+                        {
+                            scratch.runs.push(r)
+                        }
+                        Ok(other) => backlog.push_back(other),
+                        Err(_) => break,
+                    }
+                }
+            }
+        }
+    }
+
+    lane.dispatch_formed("run", bucket, t, scratch.runs.iter().map(|r| r.enqueued));
+
+    if scratch.runs.len() < 2 {
+        let Some(mut req) = scratch.runs.pop() else {
+            return; // drained by a racing flush; nothing to dispatch
+        };
+        let result = engine.run_into(
+            bucket,
+            t,
+            &req.state,
+            &req.params,
+            &req.geom,
+            &req.departures,
+            &mut req.out,
+        );
+        let _ = req.reply.send(result.map(|()| req.out));
+        return;
+    }
+
+    // pad to the artifact's batch width: zeroed (inactive) worlds with
+    // all-padding departure tables, so no row ever comes due in a dead
+    // lane — same shared staging scratch as the other lanes
+    let n_live = scratch.runs.len();
+    scratch.states.clear();
+    scratch.states.resize(bmax * bucket * scols, 0.0);
+    scratch.params.clear();
+    scratch.params.resize(bmax * bucket * pcols, 0.0);
+    scratch.geoms.clear();
+    scratch.geoms.resize(bmax * GEOM_COLS, 0.0);
+    scratch.deps.clear();
+    scratch.deps.resize(bmax * d * DEP_COLS, 0.0);
+    for row in n_live * d..bmax * d {
+        scratch.deps[row * DEP_COLS + D_STEP] = DEP_PAD_EPOCH;
+    }
+    for (i, r) in scratch.runs.iter().enumerate() {
+        scratch.states[i * bucket * scols..(i + 1) * bucket * scols].copy_from_slice(&r.state);
+        scratch.params[i * bucket * pcols..(i + 1) * bucket * pcols].copy_from_slice(&r.params);
+        scratch.geoms[i * GEOM_COLS..(i + 1) * GEOM_COLS].copy_from_slice(r.geom.as_slice());
+        scratch.deps[i * d * DEP_COLS..(i + 1) * d * DEP_COLS].copy_from_slice(&r.departures);
+    }
+    match engine.run_batched_into(
+        bucket,
+        t,
+        &scratch.states,
+        &scratch.params,
+        &scratch.geoms,
+        &scratch.deps,
+        &mut scratch.runouts,
+    ) {
+        Ok(()) => {
+            debug_assert_eq!(scratch.runouts.len(), bmax);
+            debug_assert!(scratch.runouts.len() >= n_live);
+            for (i, mut req) in scratch.runs.drain(..).enumerate() {
+                std::mem::swap(&mut req.out, &mut scratch.runouts[i]);
+                let _ = req.reply.send(Ok(req.out));
+            }
+        }
+        Err(e) => {
+            // batched run unavailable (e.g. solo-only artifacts): serve
+            // each caller with its own solo run
+            let msg = e.to_string();
+            lane.fallback("run", bucket, t, n_live, &msg);
+            for mut req in scratch.runs.drain(..) {
+                let result = engine
+                    .run_into(
+                        bucket,
+                        t,
+                        &req.state,
+                        &req.params,
+                        &req.geom,
+                        &req.departures,
+                        &mut req.out,
+                    )
+                    .map_err(|e2| Error::Runtime(format!("{msg}; serial fallback: {e2}")));
+                let _ = req.reply.send(result.map(|()| req.out));
+            }
+        }
+    }
+}
+
 /// A cloneable, `Send` handle to the engine thread.
 #[derive(Debug, Clone)]
 pub struct EngineService {
@@ -569,6 +753,9 @@ impl EngineService {
                     }
                     Request::Rollout(r) => {
                         serve_rollout(&engine, &rx, &mut backlog, &mut scratch, &lane, r);
+                    }
+                    Request::Run(r) => {
+                        serve_run(&engine, &rx, &mut backlog, &mut scratch, &lane, r);
                     }
                     Request::Idm {
                         bucket,
@@ -654,6 +841,7 @@ impl EngineService {
             params_buf: Vec::with_capacity(bucket * PARAM_COLS),
             out: StepOutputs::default(),
             rollout_out: RolloutOutputs::default(),
+            run_out: RunOutputs::default(),
         })
     }
 
@@ -711,6 +899,37 @@ impl EngineService {
                 geom,
                 out: RolloutOutputs::default(),
                 reply: RolloutReply::Oneshot(reply),
+                enqueued: Instant::now(),
+            }))
+            .map_err(|_| Error::Runtime("engine thread gone".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("engine thread dropped reply".into()))?
+    }
+
+    /// One-shot whole-run execution under an explicit scenario geometry
+    /// (schema 5): a T-step run as ONE dispatch, demand riding along as
+    /// the flattened `f32[D, DEP_COLS]` departure table.  `t` must be a
+    /// rung of the manifest's run ladder ([`Manifest::run_steps`]).
+    pub fn run_geom(
+        &self,
+        bucket: usize,
+        t: usize,
+        state: &[f32],
+        params: &[f32],
+        geom: GeometryVec,
+        departures: &[f32],
+    ) -> Result<RunOutputs> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Run(RunReq {
+                bucket,
+                t,
+                state: state.to_vec(),
+                params: params.to_vec(),
+                geom,
+                departures: departures.to_vec(),
+                out: RunOutputs::default(),
+                reply,
                 enqueued: Instant::now(),
             }))
             .map_err(|_| Error::Runtime("engine thread gone".into()))?;
@@ -827,6 +1046,8 @@ pub struct EngineSession {
     /// Pooled fused-chunk outputs (round-trips through
     /// [`EngineSession::step_many`] like `out` does through `step`).
     rollout_out: RolloutOutputs,
+    /// Pooled whole-run outputs ([`EngineSession::run`]).
+    run_out: RunOutputs,
 }
 
 impl EngineSession {
@@ -924,6 +1145,42 @@ impl EngineSession {
         Ok(&self.rollout_out)
     }
 
+    /// Execute a WHOLE T-step run as one dispatch (schema 5): demand
+    /// rides in as the flattened departure table, insertion happens
+    /// in-kernel, and the reply carries final state + params, the whole
+    /// per-step obs trace, and the inserted mask.  Unlike
+    /// `step`/`step_many`, inputs are plain copies and the reply channel
+    /// is per-call — a run amortizes them over T steps, so the per-step
+    /// zero-allocation discipline buys nothing.  The returned reference
+    /// is valid until the next `run` call.  `t` must be a rung of the
+    /// manifest's run ladder.
+    pub fn run(
+        &mut self,
+        state: &[f32],
+        params: &[f32],
+        departures: &[f32],
+        t: usize,
+    ) -> Result<&RunOutputs> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Run(RunReq {
+                bucket: self.bucket,
+                t,
+                state: state.to_vec(),
+                params: params.to_vec(),
+                geom: self.geom,
+                departures: departures.to_vec(),
+                out: std::mem::take(&mut self.run_out),
+                reply,
+                enqueued: Instant::now(),
+            }))
+            .map_err(|_| Error::Runtime("engine thread gone".into()))?;
+        self.run_out = rx
+            .recv()
+            .map_err(|_| Error::Runtime("engine thread dropped reply".into()))??;
+        Ok(&self.run_out)
+    }
+
     /// The outputs of the most recent successful [`EngineSession::step`].
     pub fn last(&self) -> &StepOutputs {
         &self.out
@@ -946,6 +1203,12 @@ pub struct HloStepper {
     /// chunk CAP is not stored here: `SumoSim::chunk_limit` is the
     /// single enforcement point for `chunk_steps`/live-GUI limits.
     ladder: Vec<usize>,
+    /// Whole-run total-steps ladder, ascending — the manifest's run
+    /// ladder (empty for schema <= 4 artifacts: the device-resident run
+    /// path is simply unavailable and `SumoSim` stays on chunking).
+    run_ladder: Vec<usize>,
+    /// Departure-table row capacity of the run entries (0 = none).
+    table_rows: usize,
     pub last_obs: StepObs,
 }
 
@@ -980,9 +1243,19 @@ impl HloStepper {
         if ladder.last() != Some(&1) {
             ladder.push(1);
         }
+        let (run_ladder, table_rows) = if service.manifest().runs_available() {
+            (
+                service.manifest().run_steps.clone(),
+                service.manifest().departure_rows,
+            )
+        } else {
+            (Vec::new(), 0)
+        };
         Ok(HloStepper {
             session: service.session_for(bucket, scenario.geometry_vec())?,
             ladder,
+            run_ladder,
+            table_rows,
             last_obs: StepObs::default(),
         })
     }
@@ -1046,6 +1319,53 @@ impl Stepper for HloStepper {
         if let Some(last) = out.last() {
             self.last_obs = *last;
         }
+    }
+
+    fn run_ladder(&self) -> &[usize] {
+        &self.run_ladder
+    }
+
+    fn run_table_rows(&self) -> usize {
+        self.table_rows
+    }
+
+    // Unlike step()/step_many(), a failed whole-run dispatch is NOT a
+    // panic: `SumoSim::try_run_resident` treats any error as "path
+    // unavailable" and falls back to the chunk scheduler, so the error
+    // is surfaced, not fatal.
+    fn run_resident(
+        &mut self,
+        traffic: &mut Traffic,
+        table: &DepartureTable,
+        t_steps: usize,
+        out: &mut Vec<StepObs>,
+    ) -> Result<Vec<bool>> {
+        let run = self
+            .session
+            .run(&traffic.state, &traffic.params, &table.rows, t_steps)?;
+        if run.steps() != t_steps {
+            return Err(Error::Runtime(format!(
+                "run entry returned {} obs rows, expected {t_steps}",
+                run.steps()
+            )));
+        }
+        traffic.state.copy_from_slice(&run.state);
+        // in-kernel spawns wrote their driver-params rows
+        traffic.params.copy_from_slice(&run.params);
+        for i in 0..t_steps {
+            let row = run.obs_row(i);
+            out.push(StepObs {
+                n_active: row[0],
+                mean_speed: row[1],
+                flow: row[2],
+                n_merged: row[3],
+                n_exited: row[4],
+            });
+        }
+        if let Some(last) = out.last() {
+            self.last_obs = *last;
+        }
+        Ok(run.inserted[..table.count].iter().map(|&m| m > 0.5).collect())
     }
 
     fn name(&self) -> &'static str {
@@ -1474,5 +1794,147 @@ mod tests {
                 });
             }
         });
+    }
+
+    /// A small schema-5 departure table: two spawns due at steps 5 and
+    /// 40 onto the main lane, padding rows beyond.
+    fn run_test_table(s: &EngineService, t_steps: u64) -> DepartureTable {
+        use crate::sumo::duarouter::Departure;
+        use crate::sumo::VehicleType;
+        let dep = |time_s: f32, pos_m: f32, speed: f32| Departure {
+            id: String::new(),
+            time_s,
+            route: Vec::new(),
+            lane: 1,
+            pos_m,
+            speed,
+            params: DriverParams::default(),
+            vtype: VehicleType::Human,
+        };
+        DepartureTable::build(
+            &[dep(0.5, 5.0, 15.0), dep(4.0, 2.0, 12.0)],
+            0.1,
+            t_steps,
+            s.manifest().departure_rows,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn session_run_matches_oneshot_and_recovers_from_errors() {
+        let Some(s) = service() else { return };
+        if !s.manifest().runs_available() {
+            eprintln!("skipping: artifacts predate schema 5");
+            return;
+        }
+        let bucket = s.manifest().buckets[0];
+        let t_steps = s.manifest().run_steps[0];
+        let table = run_test_table(&s, t_steps as u64);
+        let mut t = Traffic::new(bucket);
+        t.spawn(100.0, 20.0, 1.0, DriverParams::default());
+        let expect = s
+            .run_geom(
+                bucket,
+                t_steps,
+                &t.state,
+                &t.params,
+                GeometryVec::default(),
+                &table.rows,
+            )
+            .unwrap();
+        assert_eq!(expect.steps(), t_steps);
+        assert_eq!(
+            expect.inserted.iter().filter(|&&m| m > 0.5).count(),
+            table.count,
+            "both table spawns must land in an idle world"
+        );
+        let mut sess = s.session(bucket).unwrap();
+        // repeats reproduce bit-for-bit on the round-tripped buffers
+        for _ in 0..3 {
+            let out = sess.run(&t.state, &t.params, &table.rows, t_steps).unwrap();
+            assert_eq!(*out, expect);
+        }
+        // an unlowered T and a malformed table error but leave the
+        // session usable
+        assert!(sess.run(&t.state, &t.params, &table.rows, 7).is_err());
+        assert!(sess.run(&t.state, &t.params, &table.rows[1..], t_steps).is_err());
+        let out = sess.run(&t.state, &t.params, &table.rows, t_steps).unwrap();
+        assert_eq!(*out, expect);
+        s.shutdown();
+    }
+
+    /// Concurrent same-T runs may coalesce into `runb` dispatches;
+    /// every caller must still get its own world's result.  Tolerance
+    /// mirrors `mixed_k_rollouts_coalesce_without_contamination`: the
+    /// vmapped lowering may round differently from the solo entry, but
+    /// cross-world contamination is off by whole vehicle positions.
+    #[test]
+    fn runs_coalesce_without_contamination() {
+        let Some(s) = service() else { return };
+        if !s.manifest().runs_available() {
+            return;
+        }
+        let bucket = s.manifest().buckets[0];
+        let t_steps = s.manifest().run_steps[0];
+        let table = run_test_table(&s, t_steps as u64);
+        let worlds: Vec<Traffic> = (0..4)
+            .map(|i| {
+                let mut t = Traffic::new(bucket);
+                t.spawn(60.0 + 40.0 * i as f32, 8.0 + 2.0 * i as f32, 1.0, DriverParams::default());
+                t
+            })
+            .collect();
+        let refs: Vec<RunOutputs> = worlds
+            .iter()
+            .map(|w| {
+                s.run_geom(
+                    bucket,
+                    t_steps,
+                    &w.state,
+                    &w.params,
+                    GeometryVec::default(),
+                    &table.rows,
+                )
+                .unwrap()
+            })
+            .collect();
+        fn close(a: &[f32], b: &[f32]) -> bool {
+            a.len() == b.len() && a.iter().zip(b).all(|(x, y)| (x - y).abs() <= 1e-3)
+        }
+        std::thread::scope(|scope| {
+            for (w, expect) in worlds.iter().zip(refs.iter()) {
+                let svc = s.clone();
+                let table = &table;
+                scope.spawn(move || {
+                    let mut sess = svc.session(bucket).unwrap();
+                    for _ in 0..2 {
+                        let out = sess.run(&w.state, &w.params, &table.rows, t_steps).unwrap();
+                        assert!(close(&out.state, &expect.state), "wrong world state");
+                        assert!(close(&out.obs, &expect.obs), "wrong world obs");
+                        assert_eq!(out.inserted, expect.inserted, "wrong inserted mask");
+                    }
+                });
+            }
+        });
+        s.shutdown();
+    }
+
+    #[test]
+    fn hlo_stepper_advertises_run_entry_points() {
+        let Some(s) = service() else { return };
+        let (run_steps, rows, available) = (
+            s.manifest().run_steps.clone(),
+            s.manifest().departure_rows,
+            s.manifest().runs_available(),
+        );
+        let bucket = s.manifest().buckets[0];
+        let stepper = HloStepper::new(s, bucket).unwrap();
+        if available {
+            assert_eq!(stepper.run_ladder(), &run_steps[..]);
+            assert_eq!(stepper.run_table_rows(), rows);
+        } else {
+            assert!(stepper.run_ladder().is_empty());
+            assert_eq!(stepper.run_table_rows(), 0);
+        }
     }
 }

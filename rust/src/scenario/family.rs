@@ -30,7 +30,10 @@
 //! `[exit_pos, exit_flag]` columns.
 
 use crate::sumo::state::DriverParams;
-use crate::sumo::{Edge, FlowDef, FlowFile, MergeScenario, Network, VehicleType};
+use crate::sumo::{
+    duarouter, steps_for, DepartureTable, Edge, FlowDef, FlowFile, MergeScenario, Network,
+    VehicleType,
+};
 use crate::{Error, Result};
 
 use super::sampler::Sampler;
@@ -62,6 +65,39 @@ pub struct ScenarioConfig {
     pub capacity: usize,
     /// Suggested simulated horizon [s].
     pub horizon_s: f32,
+}
+
+impl ScenarioConfig {
+    /// Total steps of the configured horizon — the run-ladder rung a
+    /// whole-run dispatch needs to cover this config end to end (the
+    /// same `steps_for` derivation the launcher's walltime guard uses).
+    pub fn horizon_steps(&self) -> u64 {
+        steps_for(self.horizon_s, self.geometry.dt_s)
+    }
+
+    /// Emit the schema-5 departure table at plan time: route this
+    /// config's demand with `seed` (the identical `duarouter` call the
+    /// launcher makes) and compile it into the flattened `f32[D, 12]`
+    /// table the whole-run entry points take as an operand.  Epoch
+    /// indices derive from the same f32 time-accumulation chain as the
+    /// host scheduler's `insert_due` clock (`departure_epochs`), so
+    /// in-kernel insertion steps agree bit-exactly with host stepping.
+    /// Returns `Ok(None)` when the demand due within `t_steps`
+    /// overflows `table_rows` — the run then stays on host chunking.
+    pub fn departure_table(
+        &self,
+        seed: u64,
+        t_steps: u64,
+        table_rows: usize,
+    ) -> Result<Option<DepartureTable>> {
+        let routes = duarouter(&self.network, &self.flows, seed)?;
+        Ok(DepartureTable::build(
+            &routes.departures,
+            self.geometry.dt_s,
+            t_steps,
+            table_rows,
+        ))
+    }
 }
 
 /// What the launcher threads through an instance beyond the classic
@@ -1001,6 +1037,34 @@ mod tests {
         );
         assert_eq!(lone.len(), 1);
         assert_eq!(lone[0].vtype, VehicleType::Human);
+    }
+
+    #[test]
+    fn plan_time_departure_tables_for_all_families() {
+        use crate::sumo::{departure_epochs, DEP_COLS, DEP_PAD_EPOCH, D_STEP};
+        let r = FamilyRegistry::builtin();
+        for id in r.ids() {
+            let (_, cfg) = r.materialize(&id, &UniformSampler, 3, 1).unwrap();
+            let t_steps = cfg.horizon_steps();
+            let table = cfg
+                .departure_table(42, t_steps, 1024)
+                .unwrap()
+                .unwrap_or_else(|| panic!("{id}: demand overflowed 1024 rows"));
+            assert!(table.count > 0, "{id}: no demand tabled");
+            // plan-time epochs come from the identical routing + f32
+            // accumulation chain the host scheduler uses
+            let routes = duarouter(&cfg.network, &cfg.flows, 42).unwrap();
+            let epochs = departure_epochs(&routes.departures, cfg.geometry.dt_s, t_steps);
+            for (i, &e) in epochs.iter().take(table.count).enumerate() {
+                assert_eq!(table.rows[i * DEP_COLS + D_STEP], e as f32, "{id} row {i}");
+            }
+            for i in table.count..table.capacity {
+                assert_eq!(table.rows[i * DEP_COLS + D_STEP], DEP_PAD_EPOCH, "{id}");
+            }
+            // a capacity too small for the due demand refuses rather
+            // than truncating the schedule
+            assert!(cfg.departure_table(42, t_steps, 1).unwrap().is_none(), "{id}");
+        }
     }
 
     #[test]

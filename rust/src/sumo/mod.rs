@@ -23,7 +23,10 @@
 //!   observables; serves TraCI queries.  Chunk-scheduled: departure-free
 //!   runs of steps are handed to the stepper as ONE fused chunk
 //!   (`Stepper::step_many`), which the HLO stepper executes as a single
-//!   PJRT rollout dispatch.
+//!   PJRT rollout dispatch.  Schema-5 artifacts go further: when the
+//!   demand schedule fits the compiled departure table, a WHOLE run is
+//!   one device-resident dispatch (`Stepper::run_resident`) and the
+//!   host chunk scheduler is skipped entirely.
 
 pub mod duarouter;
 pub mod flow;
@@ -40,7 +43,10 @@ pub use flow::{FlowDef, FlowFile, VehicleType};
 pub use idm::{NativeIdmStepper, ReferenceIdmStepper};
 pub use sweep::LaneIndex;
 pub use network::{Edge, MergeScenario, Network};
-pub use simulation::{steps_for, StepObs, Stepper, SumoSim};
+pub use simulation::{
+    departure_epochs, steps_for, DepartureTable, StepObs, Stepper, SumoSim, DEP_COLS,
+    DEP_PAD_EPOCH, D_LANE, D_PARAMS, D_STEP, D_V, D_X,
+};
 pub use state::{
     DriverParams, GeometryVec, Traffic, ACTIVE, GEOM_COLS, LANE, PARAM_COLS, STATE_COLS, V, X,
 };

@@ -3,9 +3,112 @@
 
 use crate::Result;
 
-use super::duarouter::RouteFile;
+use super::duarouter::{Departure, RouteFile};
 use super::network::MergeScenario;
 use super::state::{DriverParams, Traffic};
+
+/// Departure-table row width of the schema-5 whole-run artifacts
+/// (`model.py DEP_COLUMNS`): the epoch step index, the spawn state
+/// `[x, v, lane]`, then the eight driver-params columns.
+pub const DEP_COLS: usize = 12;
+/// Epoch step index at which the row becomes due (compared `<=` against
+/// the in-kernel step counter, exactly like `insert_due`'s clock test).
+pub const D_STEP: usize = 0;
+pub const D_X: usize = 1;
+pub const D_V: usize = 2;
+pub const D_LANE: usize = 3;
+/// First of the eight params columns (`v0..exit_flag`, state-layout
+/// order).
+pub const D_PARAMS: usize = 4;
+/// Epoch stamped on padding rows: 2^30 is exactly representable in f32
+/// and beyond any real step count, so padded rows never come due.
+pub const DEP_PAD_EPOCH: f32 = (1u32 << 30) as f32;
+
+/// The step index at which each departure becomes due — THE epoch
+/// derivation, shared by the compiled departure table and the host
+/// scheduler's bit-exactness tests.  A departure is due at the start of
+/// step `s` iff `dep.time_s <= t_s`, where `t_0 = 0` and the clock
+/// advances by the same f32 `t += dt` accumulation [`SumoSim::account`]
+/// performs — NOT `(time_s / dt).ceil()`, which disagrees with the
+/// accumulated clock on representation error and would desynchronize
+/// in-kernel insertion from host [`SumoSim::insert_due`] replay.
+/// Departures not due within `max_steps` map to `u64::MAX`.  Expects
+/// `departures` sorted by `time_s` (what `duarouter` emits).
+pub fn departure_epochs(departures: &[Departure], dt_s: f32, max_steps: u64) -> Vec<u64> {
+    let mut epochs = vec![u64::MAX; departures.len()];
+    let mut next = 0;
+    let mut t = 0.0f32;
+    for s in 0..max_steps {
+        while next < departures.len() && departures[next].time_s <= t {
+            epochs[next] = s;
+            next += 1;
+        }
+        if next == departures.len() {
+            break;
+        }
+        t += dt_s;
+    }
+    epochs
+}
+
+/// A compiled-in demand schedule: the `f32[D, DEP_COLS]` operand of the
+/// schema-5 whole-run artifacts.  Rows are real departures (epoch
+/// ascending, table order = departure order) up to `count`; the rest is
+/// padding with [`DEP_PAD_EPOCH`] epochs that never come due.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DepartureTable {
+    /// Flattened row-major `capacity x DEP_COLS`.
+    pub rows: Vec<f32>,
+    /// Real (non-padding) rows.
+    pub count: usize,
+    /// Table capacity `D` (the artifact's lowered row count).
+    pub capacity: usize,
+}
+
+impl DepartureTable {
+    /// Build the table for a `t_steps`-step run: every departure due
+    /// within the run (epoch `<= t_steps - 1`) becomes a row; later
+    /// departures stay host-side for the chunked tail.  `None` when the
+    /// due rows exceed `capacity` — the caller falls back to chunking.
+    pub fn build(
+        departures: &[Departure],
+        dt_s: f32,
+        t_steps: u64,
+        capacity: usize,
+    ) -> Option<DepartureTable> {
+        let epochs = departure_epochs(departures, dt_s, t_steps);
+        let count = epochs.iter().take_while(|&&e| e != u64::MAX).count();
+        if count > capacity {
+            return None;
+        }
+        let mut rows = vec![0.0f32; capacity * DEP_COLS];
+        for (i, (d, &epoch)) in departures.iter().zip(&epochs).take(count).enumerate() {
+            let row = &mut rows[i * DEP_COLS..(i + 1) * DEP_COLS];
+            row[D_STEP] = epoch as f32;
+            row[D_X] = d.pos_m;
+            row[D_V] = d.speed;
+            row[D_LANE] = d.lane as f32;
+            row[D_PARAMS..].copy_from_slice(&[
+                d.params.v0,
+                d.params.t_headway,
+                d.params.a_max,
+                d.params.b_comf,
+                d.params.s0,
+                d.params.length,
+                d.params.exit_pos,
+                d.params.exit_flag,
+            ]);
+        }
+        for i in count..capacity {
+            rows[i * DEP_COLS + D_STEP] = DEP_PAD_EPOCH;
+        }
+        Some(DepartureTable {
+            rows,
+            count,
+            capacity,
+        })
+    }
+}
 
 /// Per-step observables — mirrors the `obs` output of the AOT step
 /// (`[n_active, mean_speed, flow, n_merged, n_exited]`).  `flow` counts
@@ -57,6 +160,38 @@ pub trait Stepper: Send {
         }
     }
 
+    /// The whole-run total-steps ladder this stepper can execute as ONE
+    /// device-resident dispatch (ascending, schema-5 artifacts; empty =
+    /// no whole-run path and [`Self::run_resident`] is never called).
+    fn run_ladder(&self) -> &[usize] {
+        &[]
+    }
+
+    /// Departure-table row capacity of the whole-run entries (0 = no
+    /// whole-run path).  Schedules with more due rows fall back to the
+    /// chunk scheduler.
+    fn run_table_rows(&self) -> usize {
+        0
+    }
+
+    /// Execute a whole `t_steps`-step run as one dispatch — demand
+    /// compiled in from `table`, insertion happening in-kernel —
+    /// appending `t_steps` per-step observables and returning the
+    /// per-real-row inserted mask (so the host can reconstruct its
+    /// insertion queue for the tail).  Required to be bit-identical to
+    /// `t_steps` iterations of insert-due-then-step.
+    fn run_resident(
+        &mut self,
+        _traffic: &mut Traffic,
+        _table: &DepartureTable,
+        _t_steps: usize,
+        _out: &mut Vec<StepObs>,
+    ) -> Result<Vec<bool>> {
+        Err(crate::Error::Runtime(
+            "stepper has no whole-run entry points".into(),
+        ))
+    }
+
     /// Engine label for logs/benches.
     fn name(&self) -> &'static str {
         "stepper"
@@ -86,6 +221,9 @@ pub struct SumoSim {
     /// own `exit_pos`) — throughput invisible to `total_flow`.
     pub total_exited: f32,
     pub total_spawned: u64,
+    /// Steps executed on the device-resident whole-run path (provenance:
+    /// 0 = every step went through the host chunk scheduler).
+    resident_steps: u64,
 }
 
 impl SumoSim {
@@ -109,6 +247,7 @@ impl SumoSim {
             total_merged: 0.0,
             total_exited: 0.0,
             total_spawned: 0,
+            resident_steps: 0,
         }
     }
 
@@ -118,6 +257,13 @@ impl SumoSim {
 
     pub fn step_count(&self) -> u64 {
         self.step_count
+    }
+
+    /// Steps executed as device-resident whole-run dispatches — dataset
+    /// provenance, surfaced over TraCI so the launcher can record which
+    /// path produced a run (0 = chunk scheduler / native throughout).
+    pub fn resident_steps(&self) -> u64 {
+        self.resident_steps
     }
 
     fn try_insert(&mut self, dep_idx: usize) -> bool {
@@ -241,6 +387,7 @@ impl SumoSim {
     /// step — the last per-step host synchronization on the hot loop.
     pub fn step_many(&mut self, n: u64, out: &mut Vec<StepObs>) {
         let mut remaining = n;
+        remaining -= self.try_run_resident(remaining, out);
         while remaining > 0 {
             self.insert_due();
             let cap = self
@@ -267,6 +414,74 @@ impl SumoSim {
             }
             remaining -= produced as u64;
         }
+    }
+
+    /// The device-resident fast path: when this sim is at its pristine
+    /// start and the stepper lowers whole-run entries, execute the
+    /// largest run-ladder rung `T <= min(n, chunk_limit)` whose due
+    /// departures fit the compiled table as ONE dispatch — skipping the
+    /// host chunk scheduler (and its per-chunk state ferrying) for those
+    /// `T` steps entirely.  Returns the steps consumed (0 = path not
+    /// taken; the caller falls through to PR-5 chunking for everything
+    /// not consumed, including the `n - T` tail of longer bursts).
+    ///
+    /// Insertion happens in-kernel from the same f32 epoch chain
+    /// [`Self::insert_due`] replays ([`departure_epochs`]), and the
+    /// returned inserted mask reconstructs the host scheduler's exact
+    /// post-run demand state: `next_departure` advances past every due
+    /// row, un-inserted due rows re-queue in departure order (the order
+    /// the host queue preserves).  Any dispatch error falls back to
+    /// chunking with the sim state untouched.
+    fn try_run_resident(&mut self, n: u64, out: &mut Vec<StepObs>) -> u64 {
+        let fresh = self.step_count == 0 && self.next_departure == 0
+            && self.insertion_queue.is_empty();
+        let table_rows = self.stepper.run_table_rows();
+        if !fresh || table_rows == 0 {
+            return 0;
+        }
+        let cap = self.chunk_limit.min(usize::try_from(n).unwrap_or(usize::MAX));
+        let ladder: Vec<usize> = self.stepper.run_ladder().to_vec();
+        for &t_steps in ladder.iter().rev() {
+            if t_steps > cap || t_steps == 0 {
+                continue;
+            }
+            let Some(table) = DepartureTable::build(
+                &self.routes.departures,
+                self.scenario.dt_s,
+                t_steps as u64,
+                table_rows,
+            ) else {
+                continue; // too much due demand for the lowered table
+            };
+            let start = out.len();
+            let inserted = match self.stepper.run_resident(
+                &mut self.traffic,
+                &table,
+                t_steps,
+                out,
+            ) {
+                Ok(mask) => mask,
+                Err(_) => {
+                    out.truncate(start);
+                    return 0; // dispatch failed: chunk scheduler takes over
+                }
+            };
+            self.next_departure = table.count;
+            self.insertion_queue.extend(
+                inserted
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &ok)| !ok)
+                    .map(|(i, _)| i),
+            );
+            self.total_spawned += inserted.iter().filter(|&&ok| ok).count() as u64;
+            for i in start..out.len() {
+                self.account(out[i]);
+            }
+            self.resident_steps += t_steps as u64;
+            return t_steps as u64;
+        }
+        0
     }
 
     /// Run until `horizon_s` sim-seconds, collecting per-step
@@ -488,6 +703,294 @@ mod tests {
         let b = unlimited.run(100.0).unwrap();
         assert_eq!(a, b);
         assert_eq!(s.traffic, unlimited.traffic);
+    }
+
+    /// THE satellite-1 guard: the compiled departure table's epochs and
+    /// the host scheduler's due-step decisions derive from the identical
+    /// f32 accumulation chain.  Sweeps demand rates and horizons,
+    /// replays a sequential host run recording the step at which each
+    /// departure index actually left `next_departure`, and asserts the
+    /// two schedules index-identical.  Any rounding divergence (e.g.
+    /// `ceil(time/dt)` instead of the accumulated clock) breaks this on
+    /// the first departure whose time sits on a representation boundary.
+    #[test]
+    fn departure_epochs_match_host_schedule() {
+        let cases = [
+            (1200.0, 300.0, 30.0),
+            (1200.0, 300.0, 120.0),
+            (3600.0, 900.0, 60.0),
+            (600.0, 60.0, 120.0),
+            (7200.0, 0.0, 45.0),
+        ];
+        for (seed, &(main_vph, ramp_vph, horizon)) in cases.iter().enumerate() {
+            let scenario = MergeScenario::default();
+            let net = scenario.network();
+            let flows = FlowFile::merge_sample(main_vph, ramp_vph, horizon);
+            let routes = duarouter(&net, &flows, seed as u64 + 1).unwrap();
+            // run past the horizon so every departure comes due
+            let max_steps = steps_for(horizon + 30.0, scenario.dt_s);
+            let epochs = departure_epochs(&routes.departures, scenario.dt_s, max_steps);
+            let mut s =
+                SumoSim::new(scenario, 64, routes, Box::new(NativeIdmStepper::default()));
+            let mut host = vec![u64::MAX; s.routes.departures.len()];
+            for step in 0..max_steps {
+                let before = s.next_departure;
+                s.step();
+                for h in &mut host[before..s.next_departure] {
+                    *h = step;
+                }
+            }
+            assert_eq!(
+                epochs, host,
+                "rates {main_vph}/{ramp_vph} horizon {horizon}: table and host schedules diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn departure_table_rows_and_padding() {
+        let scenario = MergeScenario::default();
+        let net = scenario.network();
+        let flows = FlowFile::merge_sample(1200.0, 300.0, 60.0);
+        let routes = duarouter(&net, &flows, 7).unwrap();
+        let t_steps = steps_for(120.0, scenario.dt_s);
+        let table =
+            DepartureTable::build(&routes.departures, scenario.dt_s, t_steps, 256).unwrap();
+        assert_eq!(table.capacity, 256);
+        assert_eq!(table.count, routes.departures.len(), "all demand due within 120 s");
+        assert_eq!(table.rows.len(), 256 * DEP_COLS);
+        let epochs = departure_epochs(&routes.departures, scenario.dt_s, t_steps);
+        for (i, d) in routes.departures.iter().enumerate() {
+            let row = &table.rows[i * DEP_COLS..(i + 1) * DEP_COLS];
+            assert_eq!(row[D_STEP], epochs[i] as f32);
+            assert_eq!(row[D_X], d.pos_m);
+            assert_eq!(row[D_V], d.speed);
+            assert_eq!(row[D_LANE], d.lane as f32);
+            assert_eq!(row[D_PARAMS + 4], d.params.s0);
+            assert_eq!(row[D_PARAMS + 7], d.params.exit_flag);
+        }
+        // padding rows never come due
+        for i in table.count..table.capacity {
+            assert_eq!(table.rows[i * DEP_COLS + D_STEP], DEP_PAD_EPOCH);
+        }
+        // a table too small for the due demand refuses to build
+        assert!(DepartureTable::build(&routes.departures, scenario.dt_s, t_steps, 2).is_none());
+        // a short run only tables the rows due within it
+        let short = DepartureTable::build(&routes.departures, scenario.dt_s, 50, 256).unwrap();
+        assert!(short.count < table.count);
+        assert!(short.count > 0);
+    }
+
+    /// A native stepper that ALSO implements the whole-run contract by
+    /// mirroring the in-kernel insertion semantics (due-row window in
+    /// table order, clearance + free-slot checks, retry via the
+    /// uninserted mask) over the sequential native physics — the exact
+    /// behavior `Stepper::run_resident` demands of the HLO artifact.
+    /// Driving `SumoSim` through it exercises the resident fast path,
+    /// its queue/next-departure reconstruction, the chunked tail, and
+    /// the dispatch-error fallback with no artifacts needed.
+    struct ResidentNative {
+        inner: NativeIdmStepper,
+        run_ladder: Vec<usize>,
+        table_rows: usize,
+        fail_dispatch: bool,
+    }
+
+    impl Stepper for ResidentNative {
+        fn step(&mut self, traffic: &mut Traffic) -> StepObs {
+            self.inner.step(traffic)
+        }
+
+        fn run_ladder(&self) -> &[usize] {
+            &self.run_ladder
+        }
+
+        fn run_table_rows(&self) -> usize {
+            self.table_rows
+        }
+
+        fn run_resident(
+            &mut self,
+            traffic: &mut Traffic,
+            table: &DepartureTable,
+            t_steps: usize,
+            out: &mut Vec<StepObs>,
+        ) -> Result<Vec<bool>> {
+            if self.fail_dispatch {
+                return Err(crate::Error::Runtime("injected dispatch failure".into()));
+            }
+            let mut inserted = vec![false; table.count];
+            let mut cursor = 0;
+            for step in 0..t_steps {
+                let step_f = step as f32;
+                for j in cursor..table.count {
+                    let row = &table.rows[j * DEP_COLS..(j + 1) * DEP_COLS];
+                    if row[D_STEP] > step_f || inserted[j] {
+                        continue;
+                    }
+                    let clearance = row[D_PARAMS + 4] + row[D_PARAMS + 5];
+                    let blocked = (0..traffic.capacity()).any(|i| {
+                        traffic.is_active(i)
+                            && (traffic.lane(i) - row[D_LANE]).abs() < 0.5
+                            && (traffic.x(i) - row[D_X]).abs() < clearance
+                    });
+                    if blocked {
+                        continue;
+                    }
+                    let p = DriverParams {
+                        v0: row[D_PARAMS],
+                        t_headway: row[D_PARAMS + 1],
+                        a_max: row[D_PARAMS + 2],
+                        b_comf: row[D_PARAMS + 3],
+                        s0: row[D_PARAMS + 4],
+                        length: row[D_PARAMS + 5],
+                        exit_pos: row[D_PARAMS + 6],
+                        exit_flag: row[D_PARAMS + 7],
+                    };
+                    if traffic.spawn(row[D_X], row[D_V], row[D_LANE], p).is_some() {
+                        inserted[j] = true;
+                    }
+                }
+                while cursor < table.count && inserted[cursor] {
+                    cursor += 1;
+                }
+                out.push(self.inner.step(traffic));
+            }
+            Ok(inserted)
+        }
+
+        fn name(&self) -> &'static str {
+            "resident-native"
+        }
+    }
+
+    fn resident_sim(
+        horizon: f32,
+        seed: u64,
+        run_ladder: Vec<usize>,
+        table_rows: usize,
+        fail_dispatch: bool,
+    ) -> SumoSim {
+        let scenario = MergeScenario::default();
+        let net = scenario.network();
+        let flows = FlowFile::merge_sample(1200.0, 300.0, horizon);
+        let routes = duarouter(&net, &flows, seed).unwrap();
+        SumoSim::new(
+            scenario,
+            64,
+            routes,
+            Box::new(ResidentNative {
+                inner: NativeIdmStepper::default(),
+                run_ladder,
+                table_rows,
+                fail_dispatch,
+            }),
+        )
+    }
+
+    /// THE whole-run guarantee at scheduler level: a run served by one
+    /// resident dispatch (plus a chunked tail past the rung) produces
+    /// the bit-identical history, totals, clock and final state as
+    /// step-by-step execution — mid-run departures, queued insertions
+    /// and retirements included.
+    #[test]
+    fn resident_run_equals_stepwise() {
+        for seed in [3u64, 9, 27] {
+            // 200-s run = 2000 steps: rung 1200 resident + 800 chunked tail
+            let mut resident = resident_sim(120.0, seed, vec![200, 1200], 256, false);
+            let mut stepwise = resident_sim(120.0, seed, vec![], 0, false);
+            let h_resident = resident.run(200.0).unwrap();
+            let mut h_stepwise = Vec::new();
+            for _ in 0..steps_for(200.0, 0.1) {
+                h_stepwise.push(stepwise.step());
+            }
+            assert_eq!(resident.resident_steps(), 1200, "seed {seed}: largest fitting rung");
+            assert_eq!(stepwise.resident_steps(), 0);
+            assert_eq!(h_resident, h_stepwise, "seed {seed}: histories diverged");
+            assert_eq!(resident.traffic, stepwise.traffic, "seed {seed}");
+            assert_eq!(resident.total_flow, stepwise.total_flow);
+            assert_eq!(resident.total_merged, stepwise.total_merged);
+            assert_eq!(resident.total_exited, stepwise.total_exited);
+            assert_eq!(resident.total_spawned, stepwise.total_spawned);
+            assert_eq!(resident.step_count(), stepwise.step_count());
+            assert_eq!(resident.time_s().to_bits(), stepwise.time_s().to_bits());
+        }
+    }
+
+    /// Saturated demand: due rows that found no slot must come back as
+    /// the host insertion queue (in departure order) so the chunked tail
+    /// retries them exactly like sequential stepping would.
+    #[test]
+    fn resident_run_reconstructs_insertion_queue() {
+        let scenario = MergeScenario::default();
+        let net = scenario.network();
+        let flows = FlowFile::merge_sample(36000.0, 0.0, 10.0);
+        let mk = |ladder: Vec<usize>, rows: usize| {
+            SumoSim::new(
+                scenario,
+                256,
+                duarouter(&net, &flows, 5).unwrap(),
+                Box::new(ResidentNative {
+                    inner: NativeIdmStepper::default(),
+                    run_ladder: ladder,
+                    table_rows: rows,
+                    fail_dispatch: false,
+                }),
+            )
+        };
+        let mut resident = mk(vec![100], 256);
+        let mut stepwise = mk(vec![], 0);
+        let mut h_resident = Vec::new();
+        resident.step_many(150, &mut h_resident);
+        let h_stepwise: Vec<StepObs> = (0..150).map(|_| stepwise.step()).collect();
+        assert_eq!(resident.resident_steps(), 100);
+        assert_eq!(h_resident, h_stepwise);
+        assert_eq!(resident.insertion_queue, stepwise.insertion_queue);
+        assert_eq!(resident.next_departure, stepwise.next_departure);
+        assert_eq!(resident.traffic, stepwise.traffic);
+        assert_eq!(resident.total_spawned, stepwise.total_spawned);
+    }
+
+    /// A failed resident dispatch must leave no trace: the run falls
+    /// back to the chunk scheduler and still matches stepwise exactly.
+    #[test]
+    fn resident_dispatch_failure_falls_back_to_chunking() {
+        let mut failing = resident_sim(60.0, 4, vec![200, 1200], 256, true);
+        let mut stepwise = resident_sim(60.0, 4, vec![], 0, false);
+        let a = failing.run(100.0).unwrap();
+        let b = stepwise.run(100.0).unwrap();
+        assert_eq!(failing.resident_steps(), 0, "failed dispatch recorded no resident steps");
+        assert_eq!(a, b);
+        assert_eq!(failing.traffic, stepwise.traffic);
+    }
+
+    /// The fast path only engages from the pristine start, never
+    /// mid-run, and an over-full table or a chunk limit below every
+    /// rung disables it.
+    #[test]
+    fn resident_fast_path_gating() {
+        // chunk_limit below the smallest rung: no resident dispatch
+        let mut limited = resident_sim(60.0, 4, vec![200], 256, false);
+        limited.set_chunk_limit(32);
+        limited.run(100.0).unwrap();
+        assert_eq!(limited.resident_steps(), 0);
+        // a table too small for the due demand: no resident dispatch
+        let mut tiny = resident_sim(60.0, 4, vec![200], 1, false);
+        tiny.run(100.0).unwrap();
+        assert_eq!(tiny.resident_steps(), 0);
+        // not fresh: a stepped sim never re-enters the resident path
+        let mut stepped = resident_sim(60.0, 4, vec![200], 256, false);
+        stepped.step();
+        let mut out = Vec::new();
+        stepped.step_many(400, &mut out);
+        assert_eq!(stepped.resident_steps(), 0);
+        // ...and both gated runs still match stepwise exactly
+        let mut stepwise = resident_sim(60.0, 4, vec![], 0, false);
+        stepwise.step();
+        let mut sw = Vec::new();
+        stepwise.step_many(400, &mut sw);
+        assert_eq!(out, sw);
+        assert_eq!(stepped.traffic, stepwise.traffic);
     }
 
     #[test]

@@ -32,14 +32,27 @@ pub trait EventSink: Send + Sync {
 
 static ACTIVE: AtomicBool = AtomicBool::new(false);
 
-fn sinks() -> &'static RwLock<Vec<Arc<dyn EventSink>>> {
-    static SINKS: OnceLock<RwLock<Vec<Arc<dyn EventSink>>>> = OnceLock::new();
-    SINKS.get_or_init(|| RwLock::new(Vec::new()))
+/// The registry holds an `Arc` snapshot of the sink list so readers
+/// can clone it out and fan events out with the lock RELEASED: a slow
+/// sink flush must never stall `install`/`uninstall` or other emitters
+/// on the registry lock (lock-discipline lint, `telemetry/sink.rs`).
+fn sinks() -> &'static RwLock<Arc<Vec<Arc<dyn EventSink>>>> {
+    static SINKS: OnceLock<RwLock<Arc<Vec<Arc<dyn EventSink>>>>> = OnceLock::new();
+    SINKS.get_or_init(|| RwLock::new(Arc::new(Vec::new())))
+}
+
+/// Snapshot the installed sinks — one Arc bump, no allocation; the
+/// caller iterates with no registry guard live.
+fn installed() -> Arc<Vec<Arc<dyn EventSink>>> {
+    sinks().read().unwrap_or_else(|e| e.into_inner()).clone()
 }
 
 fn with_sinks<R>(f: impl FnOnce(&mut Vec<Arc<dyn EventSink>>) -> R) -> R {
     let mut guard = sinks().write().unwrap_or_else(|e| e.into_inner());
-    f(&mut guard)
+    let mut v = (**guard).clone();
+    let r = f(&mut v);
+    *guard = Arc::new(v);
+    r
 }
 
 /// Install a sink; `emit` fans out to every installed sink.
@@ -75,16 +88,14 @@ pub fn emit(kind: EventKind) {
         t_us: now_us(),
         kind,
     };
-    let guard = sinks().read().unwrap_or_else(|e| e.into_inner());
-    for s in guard.iter() {
+    for s in installed().iter() {
         s.emit(&ev);
     }
 }
 
 /// Flush every installed sink (campaign end, CLI exit).
 pub fn flush_all() {
-    let guard = sinks().read().unwrap_or_else(|e| e.into_inner());
-    for s in guard.iter() {
+    for s in installed().iter() {
         s.flush();
     }
 }

@@ -119,6 +119,18 @@ impl TraciClient {
         }
     }
 
+    /// `(steps, resident_steps)` — execution-path provenance: how many
+    /// of the run's steps were device-resident whole-run dispatches.
+    pub fn get_run_stats(&mut self) -> Result<(u64, u64)> {
+        match self.call(Command::GetRunStats)? {
+            Response::RunStats {
+                steps,
+                resident_steps,
+            } => Ok((steps, resident_steps)),
+            other => Err(unexpected("RunStats", &other)),
+        }
+    }
+
     pub fn close(&mut self) -> Result<()> {
         match self.call(Command::Close)? {
             Response::Closing => Ok(()),

@@ -21,9 +21,12 @@ pub const OBS_STRIDE: usize = 5;
 /// schema-3 wire widening (5-f32 obs stride in `Stepped`/`SteppedN`,
 /// `exited` in `Totals`): a version-skewed peer would *misparse* those
 /// payloads rather than error, so [`super::TraciClient::check_version`]
-/// fails the handshake loudly instead.
+/// fails the handshake loudly instead.  Minor 2 adds
+/// `GetRunStats`/`RunStats` (device-resident whole-run provenance) — a
+/// 1.1 server would answer it with an unknown-opcode error mid-run, so
+/// the skew is still refused at the handshake.
 pub const PROTOCOL_MAJOR: u32 = 1;
-pub const PROTOCOL_MINOR: u32 = 1;
+pub const PROTOCOL_MINOR: u32 = 2;
 
 /// Client → server commands.
 #[derive(Debug, Clone, PartialEq)]
@@ -43,6 +46,9 @@ pub enum Command {
     SetSpeed { slot: u32, speed: f32 },
     /// Cumulative totals (flow, merged, spawned).
     GetTotals,
+    /// Execution-path provenance: how many steps ran, and how many of
+    /// them rode the device-resident whole-run dispatch path.
+    GetRunStats,
     /// Orderly shutdown.
     Close,
 }
@@ -57,6 +63,7 @@ impl Command {
             Command::GetState => 0x11,
             Command::SetSpeed { .. } => 0x31,
             Command::GetTotals => 0x12,
+            Command::GetRunStats => 0x13,
             Command::Close => 0x7f,
         }
     }
@@ -107,6 +114,7 @@ impl Command {
                 }
             }
             0x12 => Command::GetTotals,
+            0x13 => Command::GetRunStats,
             0x7f => Command::Close,
             other => return Err(Error::Protocol(format!("unknown opcode {other:#x}"))),
         })
@@ -138,6 +146,9 @@ pub enum Response {
         exited: f32,
         spawned: u64,
     },
+    /// Execution-path provenance (`steps` total, of which
+    /// `resident_steps` were device-resident whole-run dispatches).
+    RunStats { steps: u64, resident_steps: u64 },
     Closing,
     Err(String),
 }
@@ -152,6 +163,7 @@ impl Response {
             Response::State(_) => 0x91,
             Response::Ok => 0xa0,
             Response::Totals { .. } => 0x92,
+            Response::RunStats { .. } => 0x93,
             Response::Closing => 0xff,
             Response::Err(_) => 0xee,
         }
@@ -199,6 +211,13 @@ impl Response {
                 p.extend_from_slice(&merged.to_le_bytes());
                 p.extend_from_slice(&exited.to_le_bytes());
                 p.extend_from_slice(&spawned.to_le_bytes());
+            }
+            Response::RunStats {
+                steps,
+                resident_steps,
+            } => {
+                p.extend_from_slice(&steps.to_le_bytes());
+                p.extend_from_slice(&resident_steps.to_le_bytes());
             }
             Response::Err(msg) => {
                 let b = msg.as_bytes();
@@ -271,6 +290,13 @@ impl Response {
                     merged: le_f32(r, 4)?,
                     exited: le_f32(r, 8)?,
                     spawned: le_u64(r, 12)?,
+                }
+            }
+            0x93 => {
+                need(16)?;
+                Response::RunStats {
+                    steps: le_u64(r, 0)?,
+                    resident_steps: le_u64(r, 8)?,
                 }
             }
             0xff => Response::Closing,
@@ -353,6 +379,7 @@ mod tests {
         roundtrip_cmd(Command::GetState);
         roundtrip_cmd(Command::SetSpeed { slot: 7, speed: 13.5 });
         roundtrip_cmd(Command::GetTotals);
+        roundtrip_cmd(Command::GetRunStats);
         roundtrip_cmd(Command::Close);
     }
 
@@ -380,6 +407,10 @@ mod tests {
             merged: 8.0,
             exited: 5.0,
             spawned: 52,
+        });
+        roundtrip_resp(Response::RunStats {
+            steps: 1800,
+            resident_steps: 1200,
         });
         roundtrip_resp(Response::Closing);
         roundtrip_resp(Response::Err("boom".into()));

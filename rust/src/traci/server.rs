@@ -161,6 +161,10 @@ fn handle_client(mut stream: TcpStream, sim: &mut SumoSim) -> Result<()> {
                 exited: sim.total_exited,
                 spawned: sim.total_spawned,
             },
+            Command::GetRunStats => Response::RunStats {
+                steps: sim.step_count(),
+                resident_steps: sim.resident_steps(),
+            },
             Command::Close => {
                 stream.write_all(&Response::Closing.encode())?;
                 return Ok(());

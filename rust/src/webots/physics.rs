@@ -245,6 +245,13 @@ impl WebotsSim {
         self.traci.get_totals()
     }
 
+    /// Back-end `(steps, resident_steps)`: execution-path provenance
+    /// for the dataset (how many steps rode the device-resident
+    /// whole-run path vs the host chunk scheduler).
+    pub fn run_stats(&mut self) -> Result<(u64, u64)> {
+        self.traci.get_run_stats()
+    }
+
     /// Full state snapshot from the back-end (supervisor access).
     pub fn state_snapshot(&mut self) -> Result<Vec<f32>> {
         self.traci.get_state()

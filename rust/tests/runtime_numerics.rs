@@ -362,3 +362,88 @@ fn chunked_hlo_sim_equals_stepwise_hlo_sim() {
     assert_eq!(chunked.total_exited, stepwise.total_exited);
     assert_eq!(chunked.total_spawned, stepwise.total_spawned);
 }
+
+/// The PR 10 acceptance contract: a device-resident whole-run dispatch
+/// (departure table compiled in, insertion in-kernel) is BIT-EXACT with
+/// PR-5 chunk-scheduled execution of the same demand — per-step history,
+/// final traffic, and totals — over all four scenario families, with
+/// departures coming due inside the fused window and exit-flagged
+/// vehicles retiring mid-run.  The comparator gates the resident path
+/// via `chunk_limit` (every run rung exceeds the rollout ladder), which
+/// `chunked_hlo_sim_equals_stepwise_hlo_sim` has already proven equal
+/// to step-by-step execution.
+#[test]
+fn whole_run_resident_bit_exact_with_chunked_all_families() {
+    use webots_hpc::runtime::HloStepper;
+    use webots_hpc::scenario::{FamilyRegistry, UniformSampler};
+    use webots_hpc::sumo::{duarouter, RouteFile, SumoSim};
+
+    let Some(s) = service() else { return };
+    if !s.manifest().runs_available() {
+        eprintln!("skipping: artifacts predate schema 5 (no run entries)");
+        return;
+    }
+    // gating cap: admits every rollout rung, no run rung
+    let chunk_cap = *s.manifest().rollout_steps.iter().max().unwrap_or(&1);
+    assert!(
+        s.manifest().run_steps.iter().all(|&t| t > chunk_cap),
+        "run ladder must sit above the rollout ladder for this gate"
+    );
+    let registry = FamilyRegistry::builtin().with_buckets(&s.manifest().buckets);
+    for (fi, family) in ["highway-merge", "lane-drop", "ramp-weave", "ring-shockwave"]
+        .iter()
+        .enumerate()
+    {
+        let (_, cfg) = registry
+            .materialize(family, &UniformSampler, 2, 0xF00D + fi as u64)
+            .expect("builtin family compiles");
+        let bucket = cfg.capacity;
+        if !s.manifest().buckets.contains(&bucket) {
+            eprintln!("note: {family} capacity {bucket} not lowered; skipping");
+            continue;
+        }
+        let mut routes = duarouter(&cfg.network, &cfg.flows, 77 + fi as u64).unwrap();
+        // flag a slice of the demand for a gore early enough that exits
+        // retire inside the 60 s window (ramp-weave also brings its own
+        // exit-flagged off-flows)
+        let gore = (cfg.geometry.road_end_m * 0.3).clamp(60.0, 250.0);
+        let mut rng = Rng64::seed_from_u64(0x2021 + fi as u64);
+        for d in &mut routes.departures {
+            if rng.gen_f64() < 0.3 {
+                d.params = d.params.with_exit(gore);
+            }
+        }
+        let mk = |routes: &RouteFile, chunk_limit: usize| {
+            let stepper = HloStepper::for_scenario(s.clone(), bucket, &cfg.geometry).unwrap();
+            let mut sim = SumoSim::new(cfg.geometry, bucket, routes.clone(), Box::new(stepper));
+            sim.set_chunk_limit(chunk_limit);
+            sim
+        };
+        let mut fused = mk(&routes, usize::MAX);
+        let mut chunked = mk(&routes, chunk_cap);
+        let h_fused = fused.run(60.0).unwrap();
+        let h_chunked = chunked.run(60.0).unwrap();
+        // premise guards: the fast path engaged exactly once for fused,
+        // never for the gated comparator, and the window really saw
+        // departures and exits
+        assert!(
+            fused.resident_steps() > 0,
+            "{family}: whole-run fast path did not engage"
+        );
+        assert_eq!(
+            chunked.resident_steps(),
+            0,
+            "{family}: comparator must stay on the chunk scheduler"
+        );
+        assert!(fused.total_spawned > 1, "{family}: no mid-run departures");
+        assert!(
+            fused.total_exited > 0.0,
+            "{family}: no exits inside the window"
+        );
+        assert_eq!(h_fused, h_chunked, "{family}: history diverged");
+        assert_eq!(fused.traffic, chunked.traffic, "{family}: traffic diverged");
+        assert_eq!(fused.total_flow, chunked.total_flow, "{family}: flow");
+        assert_eq!(fused.total_exited, chunked.total_exited, "{family}: exited");
+        assert_eq!(fused.total_spawned, chunked.total_spawned, "{family}: spawned");
+    }
+}

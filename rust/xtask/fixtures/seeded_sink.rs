@@ -1,0 +1,38 @@
+//! Seeded lock-discipline fixture for the sink-registry RwLock.
+//! Linted by the self-tests under the pretend path `telemetry/sink.rs`.
+//! NOT compiled into any crate.  Expected hits: a sink flush under a
+//! named read guard, an emit on a read temporary, and a write-lock
+//! acquisition nested under a live read guard (the RwLock upgrade
+//! deadlock).  The snapshot-then-fan-out shape below is the sanctioned
+//! pattern and must stay clean.
+
+pub fn flush_under_read_guard(registry: &RwLock<Vec<Sink>>) {
+    let g = registry.read();
+    for s in g.iter() {
+        s.flush(); // seeded: flush while the registry read guard is live
+    }
+    drop(g);
+}
+
+pub fn emit_on_read_temporary(registry: &RwLock<Vec<Sink>>, ev: &Event) {
+    registry.read().fanout.emit(ev); // seeded: emit on a live temporary
+}
+
+pub fn upgrade_deadlock(registry: &RwLock<Vec<Sink>>) {
+    let g = registry.read();
+    let mut w = registry.write(); // seeded: read→write upgrade deadlocks
+    w.clear();
+    drop(w);
+    drop(g);
+}
+
+pub fn snapshot_then_fanout(registry: &RwLock<Arc<Vec<Sink>>>, ev: &Event) {
+    let snap = {
+        let g = registry.read();
+        g.clone()
+    };
+    for s in snap.iter() {
+        s.emit(ev); // fine: the guard died with the inner scope
+        s.flush(); // fine: fan-out runs on the snapshot, lock released
+    }
+}

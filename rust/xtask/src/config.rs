@@ -24,11 +24,14 @@ pub const PRINT_MACROS: &[&str] = &["println", "eprintln", "print", "eprint", "d
 /// of DENY_UNDER_GUARD may be reached — blocking I/O, fsync, sleeps,
 /// nested locks, telemetry flushes: anything that can stall the
 /// dispatch mutex every worker connection and the reaper serialize on.
-/// fabric/worker.rs is deliberately NOT covered: its writer mutex
-/// exists to make frame writes atomic, so writing under it is the
-/// design (EXPERIMENTS.md §Static analysis).
-pub const LOCK_FILES: &[&str] = &["fabric/coordinator.rs"];
-pub const GUARD_CALLS: &[&str] = &["lock"];
+/// `telemetry/sink.rs` is covered for its sink-registry RwLock (no sink
+/// emit/flush under it — fan-out runs on an Arc snapshot); `read`/
+/// `write` as guard calls also make the classic RwLock read→write
+/// upgrade deadlock a lint error.  fabric/worker.rs is deliberately NOT
+/// covered: its writer mutex exists to make frame writes atomic, so
+/// writing under it is the design (EXPERIMENTS.md §Static analysis).
+pub const LOCK_FILES: &[&str] = &["fabric/coordinator.rs", "telemetry/sink.rs"];
+pub const GUARD_CALLS: &[&str] = &["lock", "read", "write"];
 pub const DENY_UNDER_GUARD: &[&str] = &[
     "sleep",
     "sync_all",
@@ -43,7 +46,9 @@ pub const DENY_UNDER_GUARD: &[&str] = &[
     "mark_completed",
     "mark_failed",
     "emit",
+    "read",
     "read_line",
+    "write",
     "assemble_aggregate",
     "plan_run",
     "lock_ledger",

@@ -8,11 +8,12 @@
 //! Four rules over a hand-rolled lexer + item tree (no syn, no deps —
 //! see Cargo.toml for why):
 //!
-//! 1. **lock-discipline** — in `fabric/coordinator.rs`, no blocking
-//!    call (fsync, socket write, sleep, ledger op, telemetry emit,
-//!    nested lock) while a guard from `lock()` is live.  This is the
-//!    machine-checked form of the settlement race PR 8's review caught
-//!    by hand.
+//! 1. **lock-discipline** — in `fabric/coordinator.rs` and
+//!    `telemetry/sink.rs`, no blocking call (fsync, socket write,
+//!    sleep, ledger op, telemetry emit/flush, nested lock) while a
+//!    guard from `lock()`/`.read()`/`.write()` is live — including the
+//!    RwLock read→write upgrade deadlock.  This is the machine-checked
+//!    form of the settlement race PR 8's review caught by hand.
 //! 2. **panic-freedom** — `.unwrap()`/`.expect()` denied in every
 //!    library module; indexing additionally denied in the control
 //!    plane (fabric/, pipeline/, telemetry/).  Exemptions live in
@@ -206,6 +207,19 @@ mod tests {
         assert!(locks.iter().any(|v| v.msg.contains("emit")));
         assert!(locks.iter().any(|v| v.msg.contains("write_all")));
         assert!(locks.iter().any(|v| v.msg.contains("lock_ledger")));
+    }
+
+    #[test]
+    fn sink_fixture_is_caught() {
+        let v = rules_of("telemetry/sink.rs", &fixture("seeded_sink.rs"));
+        let locks: Vec<_> = v.iter().filter(|v| v.rule == "lock-discipline").collect();
+        // flush under a named read guard, emit on a read temporary, and
+        // the read→write upgrade deadlock — the snapshot-then-fan-out
+        // shape must NOT be flagged
+        assert_eq!(locks.len(), 3, "{locks:?}");
+        assert!(locks.iter().any(|v| v.msg.contains("flush")));
+        assert!(locks.iter().any(|v| v.msg.contains("emit")));
+        assert!(locks.iter().any(|v| v.msg.contains("`write`") || v.msg.contains("write(")));
     }
 
     #[test]

@@ -15,11 +15,17 @@ The contract lives in three places that can silently drift apart:
 Schema 3 adds the per-vehicle destination columns (``exit_pos``,
 ``exit_flag``) and the ``n_exited`` observable; schema 4 adds the fused
 K-step rollout entry points (``rollout{K}_{N}`` / ``rolloutb{K}_{N}``
-over the ``ROLLOUT_STEPS`` K ladder).  The gate pins the per-column
-layout on all three sides, the bucket ladder (``aot.py BUCKETS`` vs
-``family.rs DEFAULT_BUCKET_LADDER``), and the rollout K ladder
-(``aot.py ROLLOUT_STEPS`` vs ``manifest.rs ROLLOUT_LADDER`` vs the
-lowered artifacts), and fails loudly on any mismatch.  With no ``artifacts/`` directory it still
+over the ``ROLLOUT_STEPS`` K ladder); schema 5 adds the device-resident
+whole-run entry points (``run{T}_{N}`` / ``runb{T}_{N}`` over the
+``RUN_STEPS`` total-steps ladder) whose demand arrives as a compiled-in
+departure-table operand (``departure_columns`` × ``departure_rows``).
+The gate pins the per-column layout on all three sides, the bucket
+ladder (``aot.py BUCKETS`` vs ``family.rs DEFAULT_BUCKET_LADDER``), the
+rollout K ladder (``aot.py ROLLOUT_STEPS`` vs ``manifest.rs
+ROLLOUT_LADDER`` vs the lowered artifacts), and the run T ladder +
+departure-row layout (``aot.py RUN_STEPS``/``model.py DEP_COLUMNS`` vs
+``manifest.rs RUN_LADDER``/``DEPARTURE_COLUMNS`` vs the artifacts), and
+fails loudly on any mismatch.  With no ``artifacts/`` directory it still
 checks the source-side layouts (so the gate is meaningful on build
 machines that haven't lowered artifacts).  Run from anywhere inside the
 repo; wired into ``scripts/check.sh``.
@@ -37,7 +43,7 @@ import sys
 EXPECTED_GEOMETRY_COLUMNS = ["road_end", "merge_start", "merge_end", "num_main_lanes", "dt"]
 EXPECTED_PARAM_COLUMNS = ["v0", "T", "a_max", "b", "s0", "length", "exit_pos", "exit_flag"]
 EXPECTED_OBS_COLUMNS = ["n_active", "mean_speed", "flow", "n_merged", "n_exited"]
-EXPECTED_SCHEMA = 4
+EXPECTED_SCHEMA = 5
 #: the lowered bucket ladder (aot.py BUCKETS) — family.rs suggests
 #: capacities from the same ladder so no point falls back to native.
 EXPECTED_BUCKETS = [16, 64, 256, 1024]
@@ -45,9 +51,23 @@ EXPECTED_BUCKETS = [16, 64, 256, 1024]
 #: ROLLOUT_LADDER) and the entry-name stems the runtime resolves.
 EXPECTED_ROLLOUT_STEPS = [1, 8, 32]
 EXPECTED_ROLLOUT_ENTRY_POINTS = ["rollout", "rolloutb"]
+#: the whole-run T ladder (aot.py RUN_STEPS == manifest.rs RUN_LADDER),
+#: its entry stems, and the departure-table operand layout (model.py
+#: DEP_COLUMNS == manifest.rs DEPARTURE_COLUMNS; rows = aot.py
+#: DEPARTURE_ROWS) — schema 5.
+EXPECTED_RUN_STEPS = [200, 1200, 1800]
+EXPECTED_RUN_ENTRY_POINTS = ["run", "runb"]
+EXPECTED_DEPARTURE_COLUMNS = [
+    "step", "x", "v", "lane",
+    "v0", "T", "a_max", "b", "s0", "length", "exit_pos", "exit_flag",
+]
+EXPECTED_DEPARTURE_ROWS = 256
 #: operand counts per artifact kind (step/stepb/rollout* carry the
-#: geometry operand).
-EXPECTED_OPERANDS = {"step": 3, "stepb": 3, "rollout": 3, "rolloutb": 3, "idm": 2, "radar": 1}
+#: geometry operand; run* additionally carry the departure table).
+EXPECTED_OPERANDS = {
+    "step": 3, "stepb": 3, "rollout": 3, "rolloutb": 3,
+    "run": 4, "runb": 4, "idm": 2, "radar": 1,
+}
 
 REPO = pathlib.Path(__file__).resolve().parents[1]
 
@@ -73,10 +93,17 @@ def check_model_py() -> None:
         ("GEOM_COLUMNS", EXPECTED_GEOMETRY_COLUMNS),
         ("PARAM_COLUMNS", EXPECTED_PARAM_COLUMNS),
         ("OBS_COLUMNS", EXPECTED_OBS_COLUMNS),
+        ("DEP_COLUMNS", EXPECTED_DEPARTURE_COLUMNS),
     ):
         cols = pinned_list(text, name, "python/compile/model.py")
         if cols != want:
             fail(f"model.py {name} {cols} != {want}")
+    # the table's spawn/param columns must be the state tail + the full
+    # schema-3 params row, in order — the kernel copies them verbatim
+    if EXPECTED_DEPARTURE_COLUMNS[1:4] != ["x", "v", "lane"]:
+        fail("DEP_COLUMNS spawn columns must be [x, v, lane]")
+    if EXPECTED_DEPARTURE_COLUMNS[4:] != EXPECTED_PARAM_COLUMNS:
+        fail("DEP_COLUMNS param tail must equal PARAM_COLUMNS")
 
 
 def check_aot_py() -> None:
@@ -95,6 +122,17 @@ def check_aot_py() -> None:
     steps = [int(v) for v in re.findall(r"\d+", m.group(1))]
     if steps != EXPECTED_ROLLOUT_STEPS:
         fail(f"aot.py ROLLOUT_STEPS {steps} != {EXPECTED_ROLLOUT_STEPS}")
+    m = re.search(r"^RUN_STEPS\s*=\s*\(([^)]*)\)", text, re.M)
+    if not m:
+        fail("python/compile/aot.py defines no RUN_STEPS")
+    steps = [int(v) for v in re.findall(r"\d+", m.group(1))]
+    if steps != EXPECTED_RUN_STEPS:
+        fail(f"aot.py RUN_STEPS {steps} != {EXPECTED_RUN_STEPS}")
+    m = re.search(r"^DEPARTURE_ROWS\s*=\s*(\d+)", text, re.M)
+    if not m:
+        fail("python/compile/aot.py defines no DEPARTURE_ROWS")
+    if int(m.group(1)) != EXPECTED_DEPARTURE_ROWS:
+        fail(f"aot.py DEPARTURE_ROWS {m.group(1)} != {EXPECTED_DEPARTURE_ROWS}")
 
 
 def check_family_rs() -> None:
@@ -114,6 +152,8 @@ def check_manifest_rs() -> None:
         ("PARAM_COLUMNS", EXPECTED_PARAM_COLUMNS),
         ("OBS_COLUMNS", EXPECTED_OBS_COLUMNS),
         ("ROLLOUT_ENTRY_POINTS", EXPECTED_ROLLOUT_ENTRY_POINTS),
+        ("DEPARTURE_COLUMNS", EXPECTED_DEPARTURE_COLUMNS),
+        ("RUN_ENTRY_POINTS", EXPECTED_RUN_ENTRY_POINTS),
     ):
         cols = pinned_list(text, name, "rust/src/runtime/manifest.rs")
         if cols != want:
@@ -124,6 +164,12 @@ def check_manifest_rs() -> None:
     ladder = [int(v) for v in re.findall(r"\d+", m.group(1))]
     if ladder != EXPECTED_ROLLOUT_STEPS:
         fail(f"manifest.rs ROLLOUT_LADDER {ladder} != {EXPECTED_ROLLOUT_STEPS}")
+    m = re.search(r"\bRUN_LADDER[^=]*=\s*\[([^\]]*)\]", text)
+    if not m:
+        fail("rust/src/runtime/manifest.rs defines no RUN_LADDER")
+    ladder = [int(v) for v in re.findall(r"\d+", m.group(1))]
+    if ladder != EXPECTED_RUN_STEPS:
+        fail(f"manifest.rs RUN_LADDER {ladder} != {EXPECTED_RUN_STEPS}")
 
 
 def check_artifacts() -> bool:
@@ -171,19 +217,48 @@ def check_artifacts() -> bool:
             f"manifest rollout_entry_points {manifest.get('rollout_entry_points')} "
             f"!= {EXPECTED_ROLLOUT_ENTRY_POINTS}"
         )
+    if manifest.get("run_steps") != EXPECTED_RUN_STEPS:
+        fail(
+            f"manifest run_steps {manifest.get('run_steps')} "
+            f"!= {EXPECTED_RUN_STEPS}; re-run `make artifacts`"
+        )
+    if manifest.get("run_entry_points") != EXPECTED_RUN_ENTRY_POINTS:
+        fail(
+            f"manifest run_entry_points {manifest.get('run_entry_points')} "
+            f"!= {EXPECTED_RUN_ENTRY_POINTS}"
+        )
+    if manifest.get("departure_columns") != EXPECTED_DEPARTURE_COLUMNS:
+        fail(
+            f"manifest departure_columns {manifest.get('departure_columns')} "
+            f"!= {EXPECTED_DEPARTURE_COLUMNS} (schema-5 table layout)"
+        )
+    if manifest.get("departure_rows") != EXPECTED_DEPARTURE_ROWS:
+        fail(
+            f"manifest departure_rows {manifest.get('departure_rows')} "
+            f"!= {EXPECTED_DEPARTURE_ROWS}"
+        )
     buckets = set(manifest.get("buckets", []))
     seen_ns = set()
     seen_rollouts = set()
+    seen_runs = set()
     for key, entry in manifest.get("entries", {}).items():
         kind, _, n = key.rpartition("_")
         k = None
+        t = None
         # longest stem first so 'rolloutb8' doesn't parse as 'rollout'+'b8'
+        # (and 'runb200' not as 'run'+'b200')
         if kind.startswith("rolloutb"):
             stem, k = "rolloutb", int(kind[len("rolloutb"):])
             kind = "rolloutb"
         elif kind.startswith("rollout"):
             stem, k = "rollout", int(kind[len("rollout"):])
             kind = "rollout"
+        elif kind.startswith("runb"):
+            stem, t = "runb", int(kind[len("runb"):])
+            kind = "runb"
+        elif kind.startswith("run"):
+            stem, t = "run", int(kind[len("run"):])
+            kind = "run"
         if kind not in EXPECTED_OPERANDS:
             continue
         if entry.get("operands") != EXPECTED_OPERANDS[kind]:
@@ -201,6 +276,17 @@ def check_artifacts() -> bool:
             if entry.get("outputs") != 2:
                 fail(f"rollout entry '{key}' must have 2 outputs (state, obs trace)")
             seen_rollouts.add((stem, k, entry["n"]))
+        if t is not None:
+            if t not in EXPECTED_RUN_STEPS:
+                fail(f"entry '{key}' uses T={t} outside the ladder {EXPECTED_RUN_STEPS}")
+            if entry.get("k_total") != t:
+                fail(f"entry '{key}' k_total field {entry.get('k_total')} != key T {t}")
+            if entry.get("outputs") != 4:
+                fail(
+                    f"run entry '{key}' must have 4 outputs "
+                    "(state, params, obs trace, inserted mask)"
+                )
+            seen_runs.add((stem, t, entry["n"]))
         seen_ns.add(entry["n"])
         if not (REPO / "artifacts" / entry["file"]).exists():
             fail(f"entry '{key}' points at missing file {entry['file']}")
@@ -215,6 +301,15 @@ def check_artifacts() -> bool:
     if seen_rollouts != want_rollouts:
         missing = sorted(want_rollouts - seen_rollouts)
         fail(f"rollout entries missing for {missing}; re-run `make artifacts`")
+    want_runs = {
+        (stem, t, n)
+        for stem in EXPECTED_RUN_ENTRY_POINTS
+        for t in EXPECTED_RUN_STEPS
+        for n in EXPECTED_BUCKETS
+    }
+    if seen_runs != want_runs:
+        missing = sorted(want_runs - seen_runs)
+        fail(f"run entries missing for {missing}; re-run `make artifacts`")
     return True
 
 

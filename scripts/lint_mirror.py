@@ -49,13 +49,17 @@ PRINT_MACROS = {"println", "eprintln", "print", "eprint", "dbg"}
 # of DENY_CALLS may be reached (blocking I/O, fsync, sleeps, nested
 # locks, telemetry flushes — anything that can stall the dispatch
 # mutex every worker connection and the reaper serialize on).
-LOCK_FILES = ("fabric/coordinator.rs",)
-GUARD_CALLS = {"lock"}          # `lock(&shared)` helper and `.lock()`
+# telemetry/sink.rs is covered for its sink-registry RwLock (fan-out
+# runs on an Arc snapshot, never under the lock); read/write as guard
+# calls also lint the RwLock read→write upgrade deadlock.
+LOCK_FILES = ("fabric/coordinator.rs", "telemetry/sink.rs")
+GUARD_CALLS = {"lock", "read", "write"}   # `lock(&s)` helper, `.lock()`, `.read()`, `.write()`
 DENY_UNDER_GUARD = {
     "sleep", "sync_all", "sync_data", "flush", "flush_all",
     "write_all", "write_msg", "supervise_instance", "publish_run_csv",
     "mark_running", "mark_completed", "mark_failed", "emit",
-    "read_line", "assemble_aggregate", "plan_run", "lock_ledger",
+    "read", "read_line", "write", "assemble_aggregate", "plan_run",
+    "lock_ledger",
 }
 
 # ledger-before-event: every telemetry emit of a LedgerTransition must
@@ -609,6 +613,7 @@ def self_test():
         ("seeded_panic.rs", "pipeline/seeded.rs", "panic-freedom", 3),
         ("seeded_print.rs", "telemetry/seeded.rs", "print-freedom", 3),
         ("seeded_lock.rs", "fabric/coordinator.rs", "lock-discipline", 4),
+        ("seeded_sink.rs", "telemetry/sink.rs", "lock-discipline", 3),
         ("seeded_ledger.rs", "telemetry/seeded.rs", "ledger-before-event", 1),
     ]
     failures = 0

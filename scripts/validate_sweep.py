@@ -42,16 +42,35 @@ across every family geometry at its extremes.  This is the pre-flight
 for ``rust/tests/runtime_numerics.rs::
 rollout_bit_exact_with_sequential_all_families``.
 
-Both timing sections estimate the speedups recorded in
-``BENCH_runtime_hotpath.json`` (clearly labelled as python-mirror
-estimates there; re-measure with ``cargo bench --bench runtime_hotpath``
-on a machine with the rust toolchain).  ``--append-bench`` appends the
-PR 5 rollout-mirror measurements (one jitted dispatch per step at K=1
-vs one fused dispatch per K steps — the paired ``hlo_rollout/K=*``
-rust bench cases) to that file; ``--append-bench-pr4`` re-appends the
-older PR 4 step-kernel measurements.
+PR 10 section — device-resident whole runs.  ``model.run_geom``
+compiles the departure schedule into the kernel as an operand table
+``f32[D, DEP_COLS]``, so an entire run (insertion + physics + exits) is
+ONE dispatch.  The oracle replays every family extreme two ways — the
+fused ``run_geom`` executable vs sequential jitted ``step_geom`` steps
+with a host-side insertion mirror between them (the pre-PR10 execution
+model: due rows insert into the first inactive slot unless clearance-
+blocked, blocked rows queue and retry) — and requires **bit**-equality
+on the final state, the final params (insertions mutate them), the
+whole obs trace, and the end-of-run insertion mask.  Forced co-located
+same-epoch spawn pairs guarantee the clearance-blocked retry path is
+exercised in-kernel.  This is the pre-flight for
+``rust/tests/runtime_numerics.rs::
+whole_run_resident_bit_exact_with_chunked_all_families``.
 
-Run: ``python3 scripts/validate_sweep.py [--append-bench]``
+All timing sections estimate the speedups recorded in
+``BENCH_runtime_hotpath.json`` (clearly labelled as python-mirror
+estimates there; the container this grows in has NO rust toolchain, so
+re-measure with ``cargo bench --bench runtime_hotpath`` on a machine
+that does).  ``--append-bench`` appends the PR 5 rollout-mirror
+measurements (one jitted dispatch per step at K=1 vs one fused dispatch
+per K steps — the paired ``hlo_rollout/K=*`` rust bench cases) to that
+file; ``--append-bench-pr4`` re-appends the older PR 4 step-kernel
+measurements; ``--append-bench-pr10`` appends the PR 10 whole-run
+measurements (PR-5 chunk scheduler breaking at every departure boundary
+vs one ``run_geom`` dispatch — the paired ``hlo_run/T=*`` rust bench
+cases), which must clear the >= 2x steps/s acceptance bar at N <= 64.
+
+Run: ``python3 scripts/validate_sweep.py [--append-bench-pr10]``
 """
 
 import argparse
@@ -719,6 +738,306 @@ def rollout_section(do_append):
         append_bench_pr5(results)
 
 
+# =====================================================================
+# PR 10: device-resident whole runs — departure insertion compiled into
+# the kernel.  Bit-exactness oracle + dispatch-amortization mirror for
+# the `hlo_run/T=*` rust bench cases
+# =====================================================================
+
+#: the lowered whole-run ladder and table height (aot.py RUN_STEPS /
+#: DEPARTURE_ROWS; pinned by scripts/check_manifest.py).
+RUN_LADDER = (200, 1200, 1800)
+DEPARTURE_ROWS = 256
+DEP_COLS = 12  # ["step", "x", "v", "lane"] + the 8 params columns
+DEP_PAD_EPOCH = F(2.0**30)
+
+
+def host_insert_mirror(state, params, table, inserted, cursor, step_idx,
+                       insert_step=None):
+    """One step of the HOST-side departure scheduler — the numpy mirror
+    of both the rust sequential scheduler and ``run_geom``'s in-kernel
+    insertion phase.  Scans rows ``[cursor, hi)`` in ascending order
+    (``hi`` = count of due rows; epochs ascend), inserts each unblocked
+    pending row into the FIRST inactive slot, leaves clearance-blocked
+    rows pending (the insertion queue), and returns the new cursor (the
+    first uninserted row).  Mutates state/params/inserted in place."""
+    step_f = F(step_idx)
+    d = table.shape[0]
+    hi = int(np.sum(table[:, 0] <= step_f))
+    for j in range(cursor, hi):
+        row = table[j]
+        if row[0] > step_f or inserted[j] >= 0.5:
+            continue
+        occupied = state[:, 3] > 0.5
+        same_lane = np.abs(state[:, 2] - row[3]) < 0.5
+        clearance = F(row[8] + row[9])  # s0 + length
+        near = np.abs(state[:, 0] - row[1]) < clearance
+        if bool(np.any(occupied & same_lane & near)):
+            continue  # blocked: stays pending, retries next step
+        slot = int(np.argmin(state[:, 3]))
+        if state[slot, 3] >= 0.5:
+            continue  # no free slot
+        state[slot] = (row[1], row[2], row[3], F(1.0))
+        params[slot] = row[4:]
+        inserted[j] = F(1.0)
+        if insert_step is not None:
+            insert_step[j] = step_idx
+    open_rows = np.flatnonzero((np.arange(d) >= cursor) & (inserted < 0.5))
+    return int(open_rows[0]) if open_rows.size else d
+
+
+def make_run_case(rng, geometry, t_total, n=64, d_rows=64, n_spawns=24):
+    """Initial traffic (thinned so slots are free for insertions) plus a
+    sorted schema-5 departure table: ``n_spawns`` upstream spawns spread
+    over the first 80% of the run, padding rows at ``DEP_PAD_EPOCH``.
+    Two spawn pairs share an epoch, a lane and (nearly) a position, so
+    the second of each pair is clearance-blocked by the first insertion
+    and must retry from the queue on later steps."""
+    road_end, _, merge_end, n_lanes, _ = geometry
+    with_ramp = merge_end > 0.0
+    x, v, lane, act, params = geometry_traffic(
+        rng, n, geometry, with_ramp, exit_frac=0.4, near_gore=True
+    )
+    act &= rng.uniform(0.0, 1.0, n) < 0.6
+    gore = merge_end if merge_end > 0.0 else road_end * 0.6
+    table = np.zeros((d_rows, DEP_COLS), dtype=F)
+    table[:, 0] = DEP_PAD_EPOCH
+    epochs = np.sort(rng.integers(0, max(int(t_total * 0.8), 1), n_spawns))
+    for i, epoch in enumerate(epochs):
+        flagged = rng.uniform() < 0.25
+        table[i] = [
+            F(epoch), F(rng.uniform(0.0, 30.0)), F(rng.uniform(8.0, 20.0)),
+            F(float(rng.integers(1, int(n_lanes) + 1))),
+            F(rng.uniform(20.0, 38.0)), F(rng.uniform(0.9, 2.2)),
+            F(rng.uniform(1.0, 2.5)), F(rng.uniform(1.5, 3.5)),
+            F(rng.uniform(1.5, 3.0)), F(rng.uniform(4.0, 9.0)),
+            F(gore) if flagged else F(0.0), F(1.0) if flagged else F(0.0),
+        ]
+    for i in (4, 12):
+        if i + 1 < n_spawns:
+            table[i + 1, 0] = table[i, 0]
+            table[i + 1, 3] = table[i, 3]
+            table[i + 1, 1] = F(table[i, 1] + F(1.0))
+    return x, v, lane, act, params, table
+
+
+def check_run_bit_exact(jax, jnp, model, name, geometry, seed, t_total=200):
+    """Fused ``run_geom`` (one dispatch, demand as an operand) vs the
+    pre-PR10 execution model (host insertion mirror between ``t_total``
+    sequential jitted ``step_geom`` dispatches), required to agree
+    BIT-exactly: final state, final params, obs trace, insertion mask.
+    Returns (insertions, queue-delayed insertions, exits)."""
+    rng = np.random.default_rng(seed)
+    x, v, lane, act, params, table = make_run_case(rng, geometry, t_total)
+    state = np.stack([x, v, lane, act.astype(F)], axis=1)
+    g = jnp.asarray(np.array(geometry, dtype=F))
+    run_jit = jax.jit(model.run_geom, static_argnums=4)
+    step_jit = jax.jit(model.step_geom)
+
+    fin_s, fin_p, trace, inserted = run_jit(
+        jnp.asarray(state), jnp.asarray(params), g, jnp.asarray(table), t_total
+    )
+
+    s_np, p_np = state.copy(), params.copy()
+    ins_np = np.zeros(table.shape[0], dtype=F)
+    insert_step = np.full(table.shape[0], -1, dtype=np.int64)
+    cursor = 0
+    seq_obs = []
+    for step in range(t_total):
+        cursor = host_insert_mirror(
+            s_np, p_np, table, ins_np, cursor, step, insert_step
+        )
+        out = step_jit(jnp.asarray(s_np), jnp.asarray(p_np), g)
+        s_np = np.array(out[0])  # writable copy: insertion mutates it
+        seq_obs.append(np.asarray(out[3]))
+    seq_obs = np.stack(seq_obs)
+
+    assert np.array_equal(np.asarray(fin_s), s_np), (
+        f"{name}: fused whole run final state != sequential+host insertion"
+    )
+    assert np.array_equal(np.asarray(fin_p), p_np), (
+        f"{name}: final params diverged (insertion payloads)"
+    )
+    assert np.array_equal(np.asarray(trace), seq_obs), (
+        f"{name}: whole-run obs trace != sequential"
+    )
+    assert np.array_equal(np.asarray(inserted), ins_np), (
+        f"{name}: insertion mask diverged"
+    )
+    done = ins_np > 0.5
+    queued = int(np.sum(insert_step[done] > table[done, 0]))
+    return int(ins_np.sum()), queued, int(seq_obs[:, 4].sum())
+
+
+def bench_run_kernel(jax, jnp, model):
+    """Time a whole run both ways on the lane-drop-hi geometry: the
+    PR-5 chunk scheduler mirror (fused ladder chunks, but the host must
+    break at every departure boundary — and single-step while a blocked
+    row is queued — to run its insertion phase) vs ONE ``run_geom``
+    dispatch.  Demand is constant-rate (a spawn every ~7 steps, the
+    regime the 256-row table is sized for), so chunking stays dispatch-
+    bound exactly as the rust `hlo_run/T=*` vs `hlo_rollout/K=32` bench
+    pairing does.  Asserts the acceptance bar: the whole-run path must
+    clear >= 2x steps/s at every N <= 64 rung.
+    Returns {bench_name: (sec_per_run, iters, steps_per_s)}."""
+    results = {}
+    geometry = FAMILY_GEOMETRIES["lane-drop-hi"]
+    g = jnp.asarray(np.array(geometry, dtype=F))
+    roll_fns = {
+        k: jax.jit(lambda s, p, gg, kk=k: model.rollout_geom(s, p, gg, kk))
+        for k in ROLLOUT_STEPS
+    }
+    run_jit = jax.jit(model.run_geom, static_argnums=4)
+    for n in (16, 64):
+        for t_total in RUN_LADDER:
+            rng = np.random.default_rng(31337 + n + t_total)
+            n_spawns = min(DEPARTURE_ROWS - 32, max(16, t_total // 7))
+            x, v, lane, act, params, table = make_run_case(
+                rng, geometry, t_total, n=n, d_rows=DEPARTURE_ROWS,
+                n_spawns=n_spawns,
+            )
+            state = np.stack([x, v, lane, act.astype(F)], axis=1)
+            epochs = table[:, 0]
+
+            def chunked_once():
+                s_np, p_np = state.copy(), params.copy()
+                ins = np.zeros(table.shape[0], dtype=F)
+                cursor, step_idx, dispatches = 0, 0, 0
+                while step_idx < t_total:
+                    cursor = host_insert_mirror(
+                        s_np, p_np, table, ins, cursor, step_idx
+                    )
+                    if np.any((epochs <= F(step_idx)) & (ins < 0.5)):
+                        boundary = step_idx + 1  # queued row retries next step
+                    else:
+                        future = epochs[(ins < 0.5) & (epochs < DEP_PAD_EPOCH * F(0.5))]
+                        boundary = int(future.min()) if future.size else t_total
+                    boundary = min(max(boundary, step_idx + 1), t_total)
+                    rem = boundary - step_idx
+                    k = 32 if rem >= 32 else (8 if rem >= 8 else 1)
+                    out, _ = roll_fns[k](jnp.asarray(s_np), jnp.asarray(p_np), g)
+                    s_np = np.array(out)  # writable copy: insertion mutates it
+                    dispatches += 1
+                    step_idx += k
+                return dispatches
+
+            dispatches = chunked_once()  # warm the ladder compiles
+            reps = 3 if t_total > 400 else 6
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                chunked_once()
+            t_pre = (time.perf_counter() - t0) / reps
+
+            sj, pj, tj = jnp.asarray(state), jnp.asarray(params), jnp.asarray(table)
+            run_jit(sj, pj, g, tj, t_total)[0].block_until_ready()
+            post_reps = reps * 4
+            t0 = time.perf_counter()
+            for _ in range(post_reps):
+                run_jit(sj, pj, g, tj, t_total)[0].block_until_ready()
+            t_post = (time.perf_counter() - t0) / post_reps
+
+            pre_sps, post_sps = t_total / t_pre, t_total / t_post
+            results[f"mirror_chunked_run/T={t_total}/N={n}"] = (t_pre, reps, pre_sps)
+            results[f"mirror_hlo_run/T={t_total}/N={n}"] = (t_post, post_reps, post_sps)
+            print(
+                f"  N={n:4d} T={t_total:4d}: chunked {dispatches:3d} dispatches "
+                f"{pre_sps:8.0f} steps/s, whole-run 1 dispatch "
+                f"{post_sps:8.0f} steps/s  ->  {post_sps / pre_sps:5.2f}x"
+            )
+            assert post_sps >= 2.0 * pre_sps, (
+                f"whole-run acceptance failed at N={n} T={t_total}: "
+                f"{post_sps:.0f} vs {pre_sps:.0f} steps/s (< 2x)"
+            )
+    return results
+
+
+def append_bench_pr10(results):
+    """Append the PR 10 whole-run mirror runs to
+    BENCH_runtime_hotpath.json (never deleting existing runs): pre = the
+    PR-5 chunk scheduler breaking at every departure boundary, post =
+    one ``run_geom`` dispatch per run."""
+    path = pathlib.Path(__file__).resolve().parents[1] / "BENCH_runtime_hotpath.json"
+    doc = json.loads(path.read_text())
+    pre = {k: v for k, v in results.items() if k.startswith("mirror_chunked_run")}
+    post = {k: v for k, v in results.items() if k.startswith("mirror_hlo_run")}
+    for label, rows in (
+        (
+            "pre-PR10-python-mirror (PR-5 chunk scheduler: fused ladder chunks "
+            "broken at every departure boundary for host-side insertion, "
+            "constant-rate demand, lane-drop geometry — NO rust toolchain in "
+            "this container, re-measure with `cargo bench --bench "
+            "runtime_hotpath`)",
+            pre,
+        ),
+        (
+            "post-PR10-python-mirror (whole run as ONE run_geom dispatch, "
+            "departure table compiled in as an operand; bit-exact with the "
+            "chunked path, >= 2x steps/s at N <= 64 asserted by "
+            "scripts/validate_sweep.py)",
+            post,
+        ),
+    ):
+        doc["runs"].append(
+            {
+                "label": label,
+                "unix_time": int(time.time()),
+                "source": "scripts/validate_sweep.py",
+                "results": [
+                    {
+                        "name": name,
+                        "ns_per_iter": int(sec * 1e9),
+                        "iters": iters,
+                        "steps_per_s": round(sps, 1),
+                    }
+                    for name, (sec, iters, sps) in sorted(rows.items())
+                ],
+            }
+        )
+    path.write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"appended pre/post-PR10 python-mirror runs to {path}")
+
+
+def run_section(do_append):
+    try:
+        import sys
+
+        sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "python"))
+        import jax
+        import jax.numpy as jnp
+
+        from compile import model
+    except ImportError as e:
+        print(f"whole-run section skipped (no jax here: {e})")
+        return
+    total_ins, total_queued, total_exits = 0, 0, 0
+    for i, (name, geometry) in enumerate(FAMILY_GEOMETRIES.items()):
+        ins, queued, exits = check_run_bit_exact(
+            jax, jnp, model, name, geometry, seed=9000 + i
+        )
+        total_ins += ins
+        total_queued += queued
+        total_exits += exits
+    # every extreme schedules 24 spawns; most must land, several must be
+    # clearance-blocked first (the forced pairs), and the exit dynamics
+    # must fire inside the fused window — otherwise the oracle never
+    # exercised the in-kernel queue or the scan-carry retirement
+    assert total_ins >= 80, f"whole-run sweeps inserted too few: {total_ins}"
+    assert total_queued >= 4, (
+        f"no clearance-blocked retries exercised in-kernel: {total_queued}"
+    )
+    assert total_exits >= 8, f"whole-run sweeps produced too few exits: {total_exits}"
+    print(
+        f"whole-run bit-exactness: OK ({len(FAMILY_GEOMETRIES)} family extremes, "
+        f"T=200 fused vs 200 sequential jitted steps + host insertion; "
+        f"{total_ins} insertions, {total_queued} queue-delayed, "
+        f"{total_exits} exits in-kernel)"
+    )
+    print("whole-run dispatch amortization (python mirror, indicative only):")
+    results = bench_run_kernel(jax, jnp, model)
+    if do_append:
+        append_bench_pr10(results)
+
+
 def append_bench(results):
     """Append the PR 4 python-mirror measurements to
     BENCH_runtime_hotpath.json (never deleting existing runs)."""
@@ -808,6 +1127,11 @@ def main():
         action="store_true",
         help="re-append the PR 4 step-kernel measurements (older mode)",
     )
+    ap.add_argument(
+        "--append-bench-pr10",
+        action="store_true",
+        help="append the PR 10 whole-run mirror runs to BENCH_runtime_hotpath.json",
+    )
     args = ap.parse_args()
 
     cases = 0
@@ -824,6 +1148,7 @@ def main():
     bench(256, 0.7, 8)
     geometry_section(args.append_bench_pr4)
     rollout_section(args.append_bench)
+    run_section(args.append_bench_pr10)
 
 
 if __name__ == "__main__":
